@@ -1,0 +1,88 @@
+//! **End-to-end driver**: tensor-parallel inference served through the
+//! full three-layer stack, with the paper's allgather on the hot path.
+//!
+//! Layer 1/2 (build time): `make artifacts` lowered the TP-MLP halves —
+//! `gelu(x @ W1_i)` as a tiled Pallas kernel and the post-gather projection
+//! — to HLO text. Layer 3 (this binary): worker threads load the artifacts
+//! via PJRT, and every batched request runs
+//!
+//! ```text
+//! bcast(x) → PJRT partial_fwd → ALLGATHER(h_i) → PJRT final_fwd
+//! ```
+//!
+//! Outputs are verified against an in-Rust reference forward pass, and the
+//! same workload is served once per allgather algorithm so the serving-
+//! level effect of the paper's contribution is visible as latency.
+//!
+//! Run with: `cargo run --release --example distributed_inference`
+//! (requires `make artifacts` first).
+
+use locag::collectives::Algorithm;
+use locag::coordinator::{serve, ServeConfig};
+use locag::runtime::Manifest;
+use locag::util::fmt::seconds;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            eprintln!("hint: run `make artifacts` first");
+            std::process::exit(2);
+        }
+    };
+    let dims = manifest.model;
+    println!(
+        "TP-MLP: batch={} d_model={} d_hidden={} d_out={} tp={} ({} params)\n",
+        dims.batch, dims.d_model, dims.d_hidden, dims.d_out, dims.tp, dims.params
+    );
+
+    println!(
+        "{:<18} {:>10} {:>10} {:>10} {:>12} {:>9}",
+        "allgather", "p50", "p99", "ag p50", "batches/s", "verified"
+    );
+    let mut rows = Vec::new();
+    for algo in [
+        Algorithm::Bruck,
+        Algorithm::Ring,
+        Algorithm::Hierarchical,
+        Algorithm::Multilane,
+        Algorithm::LocalityBruck,
+    ] {
+        let cfg = ServeConfig {
+            artifact_dir: dir.clone(),
+            algo,
+            regions: 2,
+            requests: 24,
+            warmup: 3,
+            check: true,
+            fused: false,
+        };
+        let rep = serve(&cfg).expect("serve");
+        assert!(
+            rep.verified,
+            "{algo}: served outputs diverged from reference (max err {})",
+            rep.max_err
+        );
+        let lat = rep.metrics.latency().expect("latency");
+        let ag = rep.metrics.allgather().expect("allgather");
+        println!(
+            "{:<18} {:>10} {:>10} {:>10} {:>12.1} {:>9}",
+            algo.name(),
+            seconds(lat.p50),
+            seconds(lat.p99),
+            seconds(ag.p50),
+            rep.metrics.throughput,
+            rep.verified
+        );
+        rows.push((algo, rep));
+    }
+
+    println!("\nAll outputs matched the in-Rust reference forward pass —");
+    println!("the Pallas kernel, the JAX lowering, the PJRT runtime and the");
+    println!("allgather implementations compose end to end.");
+    println!("\n(Latency differences across algorithms are small here: all");
+    println!("workers share one machine, so real locality deltas do not");
+    println!("apply — see `locag figure 9/10` for the modeled topology runs.)");
+}

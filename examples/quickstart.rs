@@ -1,0 +1,53 @@
+//! Quickstart: the paper's Example 2.1, straight from the public API.
+//!
+//! 16 processes in 4 regions of 4 each hold one value; after the allgather
+//! every process holds all 16. We run the standard Bruck (Algorithm 1) and
+//! the locality-aware Bruck (Algorithm 2), print the traffic each rank
+//! generated, and check the paper's §3 claims:
+//!
+//! * standard Bruck: 4 non-local messages, 15 values non-local per rank;
+//! * locality-aware: 1 non-local message, 4 values non-local per rank.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use locag::prelude::*;
+
+fn main() {
+    let topo = Topology::regions(4, 4);
+    let machine = MachineParams::lassen();
+
+    println!("=== Example 2.1: 16 ranks, 4 regions, 1 u32 value each ===\n");
+    for algo in [Algorithm::Bruck, Algorithm::LocalityBruck] {
+        let report = locag::sim::run_allgather(algo, &topo, &machine, 1);
+        assert!(report.verified, "{algo} must verify: {:?}", report.errors);
+        println!(
+            "{}: modeled {:.2} us, max non-local msgs {}, max non-local bytes {}",
+            algo,
+            report.vtime * 1e6,
+            report.trace.max_nonlocal_msgs(),
+            report.trace.max_nonlocal_bytes()
+        );
+        print!("{}", report.trace.table());
+        println!();
+    }
+
+    // The paper's §3 claims, asserted:
+    let std = locag::sim::run_allgather(Algorithm::Bruck, &topo, &machine, 1);
+    let loc = locag::sim::run_allgather(Algorithm::LocalityBruck, &topo, &machine, 1);
+    assert_eq!(std.trace.max_nonlocal_msgs(), 4);
+    assert_eq!(std.trace.max_nonlocal_bytes(), 15 * 4); // 15 u32 values
+    assert_eq!(loc.trace.max_nonlocal_msgs(), 1);
+    assert_eq!(loc.trace.max_nonlocal_bytes(), 4 * 4); // 4 u32 values
+    assert!(loc.vtime < std.vtime);
+    println!(
+        "speedup (modeled, Lassen parameters): {:.2}x",
+        std.vtime / loc.vtime
+    );
+
+    // Extended case (paper Fig. 6): 64 ranks, 16 regions -> 2 non-local steps.
+    let topo64 = Topology::regions(16, 4);
+    let loc64 = locag::sim::run_allgather(Algorithm::LocalityBruck, &topo64, &machine, 1);
+    assert!(loc64.verified);
+    assert_eq!(loc64.trace.max_nonlocal_msgs(), 2);
+    println!("\n64 ranks / 16 regions: loc-bruck max non-local msgs = 2  (paper Fig. 6) ✓");
+}

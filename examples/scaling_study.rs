@@ -1,0 +1,60 @@
+//! Scaling study: every allgather algorithm across region counts and
+//! ranks-per-region — the shape of the paper's Figures 9/10 as a table.
+//!
+//! Modeled (virtual-clock) times come from executing the *real* message
+//! schedules under the Quartz machine parameters; correctness is verified
+//! on every data point.
+//!
+//! Run with: `cargo run --release --example scaling_study [max_ranks]`
+
+use locag::collectives::Algorithm;
+use locag::model::MachineParams;
+use locag::sim;
+use locag::topology::Topology;
+use locag::util::fmt::seconds;
+
+fn main() {
+    let max_p: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let machine = MachineParams::quartz();
+    let algos = [
+        Algorithm::SystemDefault,
+        Algorithm::Bruck,
+        Algorithm::Ring,
+        Algorithm::Hierarchical,
+        Algorithm::Multilane,
+        Algorithm::LocalityBruck,
+    ];
+
+    for ppn in [4usize, 8, 16] {
+        println!("\n=== {ppn} ranks per region (PPN={ppn}), 2 u32 values per rank ===");
+        print!("{:>8}", "regions");
+        for a in algos {
+            print!(" {:>16}", a.name());
+        }
+        println!();
+        let mut regions = 2usize;
+        while regions * ppn <= max_p {
+            print!("{regions:>8}");
+            let topo = Topology::regions(regions, ppn);
+            let mut best = (f64::MAX, "");
+            for a in algos {
+                let rep = sim::run_allgather(a, &topo, &machine, 2);
+                assert!(rep.verified, "{a} failed at {regions}x{ppn}: {:?}", rep.errors);
+                if rep.vtime < best.0 {
+                    best = (rep.vtime, a.name());
+                }
+                print!(" {:>16}", seconds(rep.vtime));
+            }
+            println!("   <- best: {}", best.1);
+            regions *= 2;
+        }
+    }
+
+    println!(
+        "\nExpected shape (paper Figs. 9/10): loc-bruck wins for small data as\n\
+         regions grow, and the gap widens with PPN."
+    );
+}

@@ -1,0 +1,164 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) → HLO **text** → Rust.
+
+Interchange format is HLO text, *not* a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+* ``partial_fwd.hlo.txt`` — ``tp_partial_forward(x, w1_shard)``;
+* ``final_fwd.hlo.txt``   — ``tp_final_forward(h_full, w2)``;
+* ``rotate.hlo.txt``      — ``rotate_blocks(buf, shift)`` (Bruck pack step);
+* ``manifest.json``       — shapes/dtypes per artifact + model config, read
+  by ``rust/src/runtime/artifact.rs``.
+
+Every computation is lowered with ``return_tuple=True`` and unwrapped with
+``to_tuple1()`` on the Rust side.
+
+Usage: ``python -m compile.aot [--out-dir DIR] [--tp N]``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower a jittable function to HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_entry(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_artifacts(cfg: model.ModelConfig):
+    """Return {name: (hlo_text, manifest_entry)} for every artifact."""
+    b, d, hs, h, o = (
+        cfg.batch,
+        cfg.d_model,
+        cfg.hidden_shard,
+        cfg.d_hidden,
+        cfg.d_out,
+    )
+    arts = {}
+
+    # L2 partial forward (contains the L1 matmul_gelu Pallas kernel).
+    arts["partial_fwd"] = (
+        to_hlo_text(
+            lambda x, w: (model.tp_partial_forward(x, w),),
+            spec((b, d)),
+            spec((d, hs)),
+        ),
+        {
+            "inputs": [shape_entry((b, d)), shape_entry((d, hs))],
+            "output": shape_entry((b, hs)),
+            "doc": "gelu(x @ w1_shard) — fused Pallas kernel",
+        },
+    )
+
+    # L2 final forward (dense projection after the allgather).
+    arts["final_fwd"] = (
+        to_hlo_text(
+            lambda hh, w2: (model.tp_final_forward(hh, w2),),
+            spec((b, h)),
+            spec((h, o)),
+        ),
+        {
+            "inputs": [shape_entry((b, h)), shape_entry((h, o))],
+            "output": shape_entry((b, o)),
+            "doc": "h_full @ w2 after the allgather",
+        },
+    )
+
+    # L1 fused post-allgather projection (no h_full assembly pass).
+    p = cfg.tp
+    arts["fused_final"] = (
+        to_hlo_text(
+            lambda gg, w2: (model.fused_final_forward(gg, w2, tp=p, batch=b),),
+            spec((p * b * hs,)),
+            spec((h, o)),
+        ),
+        {
+            "inputs": [shape_entry((p * b * hs,)), shape_entry((h, o))],
+            "output": shape_entry((b, o)),
+            "doc": "fused gathered-activations @ w2 (Pallas kernel)",
+        },
+    )
+
+    # L1 Bruck rotation kernel over the coordinator's flat u32-as-f32
+    # buffer: p = tp blocks of (batch * hidden_shard) elements.
+    n_flat = p * b * hs
+    arts["rotate"] = (
+        to_hlo_text(
+            lambda buf, s: (model.rotate_blocks(buf, s, p=p),),
+            spec((n_flat,)),
+            spec((), jnp.int32),
+        ),
+        {
+            "inputs": [shape_entry((n_flat,)), shape_entry((), "s32")],
+            "output": shape_entry((n_flat,)),
+            "doc": f"Bruck rotate-down over {p} blocks (Pallas kernel)",
+        },
+    )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tp", type=int, default=model.DEFAULT_CONFIG.tp)
+    ap.add_argument("--batch", type=int, default=model.DEFAULT_CONFIG.batch)
+    args = ap.parse_args()
+
+    cfg = model.ModelConfig(
+        batch=args.batch,
+        d_model=model.DEFAULT_CONFIG.d_model,
+        d_hidden=model.DEFAULT_CONFIG.d_hidden,
+        d_out=model.DEFAULT_CONFIG.d_out,
+        tp=args.tp,
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "model": {
+            "batch": cfg.batch,
+            "d_model": cfg.d_model,
+            "d_hidden": cfg.d_hidden,
+            "d_out": cfg.d_out,
+            "tp": cfg.tp,
+            "params": cfg.param_count(),
+        },
+        "artifacts": {},
+    }
+    for name, (text, entry) in build_artifacts(cfg).items():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = fname
+        manifest["artifacts"][name] = entry
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

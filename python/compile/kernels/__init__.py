@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels and their pure-jnp references.
+
+* ``matmul_gelu`` -- fused tiled matmul + GeLU (the TP-MLP partial forward);
+* ``bruck_pack`` -- the Bruck allgather's final rotation as a kernel;
+* ``gathered_matmul`` -- fused post-allgather projection;
+* ``ref`` -- oracles both are tested against.
+"""
+
+from . import bruck_pack, gathered_matmul, matmul_gelu, ref  # noqa: F401

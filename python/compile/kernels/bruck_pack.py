@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: the Bruck algorithm's data-movement hot spot.
+
+Algorithm 1 ends with ``rotate data down by id positions``: the working
+buffer holds rank ``(id + j) mod p``'s block at position ``j`` and must be
+rotated so block ``r`` lands at position ``r``. On the Rust side this is
+``collectives::bruck::rotate_down``; here the same movement is expressed as
+a Pallas kernel so the packing can run fused inside the XLA computation
+that consumes the gathered data.
+
+The rotation amount is a *runtime* input (each rank rotates by its own id),
+so it cannot live in a ``BlockSpec`` index map (those are resolved at
+compile time). Instead the kernel reads the shift from a scalar ref and
+performs a dynamically-indexed row copy per grid step — on TPU this is a
+VMEM-to-VMEM row gather; under ``interpret=True`` it is executed by the
+CPU backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(shift_ref, d_ref, o_ref, *, p: int):
+    """Grid step k writes output row k from input row (k - shift) mod p."""
+    k = pl.program_id(0)
+    src = jax.lax.rem(k - shift_ref[0] + p, p)
+    o_ref[...] = d_ref[pl.dslice(src, 1), :]
+
+
+def bruck_rotate(data, shift):
+    """Rotate ``data`` (shape ``(p, n)``) down by ``shift`` positions along
+    axis 0: ``out[k] = data[(k - shift) mod p]``.
+
+    ``shift`` is a scalar int32 array (each rank passes its own id).
+    """
+    p, n = data.shape
+    shift_arr = jnp.asarray(shift, dtype=jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        functools.partial(_kernel, p=p),
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda k: (0,)),  # the scalar shift
+            pl.BlockSpec((p, n), lambda k: (0, 0)),  # full buffer
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, n), data.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(shift_arr, data)
+
+
+def bruck_rotate_flat(data_flat, shift, *, p: int):
+    """Flat-buffer convenience used by the AOT artifact: rotates a
+    ``(p*n,)`` buffer of ``p`` equal blocks. Mirrors the layout the Rust
+    coordinator holds after the Bruck exchange steps."""
+    n = data_flat.shape[0] // p
+    return bruck_rotate(data_flat.reshape((p, n)), shift).reshape((-1,))

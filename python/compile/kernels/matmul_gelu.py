@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernel: fused tiled ``gelu(x @ w)``.
+
+This is the compute hot-spot of the tensor-parallel MLP whose activations
+the locality-aware allgather transports (see DESIGN.md). The kernel is
+tiled for the TPU MXU: ``(block_m × block_k) @ (block_k × block_n)`` tiles
+accumulated over a K-grid axis, with the GeLU epilogue fused into the final
+K step — one pass over HBM for the output.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+
+* tiles default to 128×128×128 — the MXU systolic-array shape;
+* the accumulator lives in the output block (revisited across the K axis),
+  the standard Pallas pattern that keeps VMEM footprint to
+  ``bm·bk + bk·bn + bm·bn`` elements (≈192 KiB at f32 defaults);
+* ``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+  custom-calls, so lowering must stay in plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-shaped default tiles.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid cell: accumulate a tile product; epilogue on the
+    last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = ref.gelu(o_ref[...])
+
+
+def matmul_gelu_strict(x, w, *, block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N,
+                       block_k=DEFAULT_BLOCK_K):
+    """Tiled fused matmul+GeLU; all dimensions must divide the block sizes.
+
+    ``x: (M, K)``, ``w: (K, N)`` → ``(M, N)`` in float32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % block_m == 0, f"M={m} not divisible by block_m={block_m}"
+    assert n % block_n == 0, f"N={n} not divisible by block_n={block_n}"
+    assert k % block_k == 0, f"K={k} not divisible by block_k={block_k}"
+    nk = k // block_k
+    grid = (m // block_m, n // block_n, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def _pad_to(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+def matmul_gelu(x, w, *, block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N,
+                block_k=DEFAULT_BLOCK_K):
+    """Shape-general wrapper: zero-pads to tile multiples and slices back.
+
+    Zero padding is exact here: padded K contributes 0 to the dot product
+    and padded M/N rows/columns are sliced away after the epilogue.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(block_m, _pad_to(m, 8))
+    bn = min(block_n, _pad_to(n, 8))
+    bk = min(block_k, _pad_to(k, 8))
+    mp, np_, kp = _pad_to(m, bm), _pad_to(n, bn), _pad_to(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    out = matmul_gelu_strict(xp, wp, block_m=bm, block_n=bn, block_k=bk)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(block_m=DEFAULT_BLOCK_M, block_n=DEFAULT_BLOCK_N,
+                         block_k=DEFAULT_BLOCK_K, dtype_bytes=4) -> int:
+    """Static VMEM estimate per grid cell (x-tile + w-tile + out-tile).
+
+    Used by DESIGN.md §Perf-estimates; at the 128³ f32 defaults this is
+    196 608 B ≈ 192 KiB, leaving room for 2-stage double buffering within
+    the 16 MiB/core VMEM budget.
+    """
+    return dtype_bytes * (block_m * block_k + block_k * block_n + block_m * block_n)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer 1 correctness contract).
+
+Every kernel in this package must match its reference here to float
+tolerance (checked by ``python/tests/``); the references are also what the
+L2 model uses in its own unit tests.
+"""
+
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximated GeLU — the exact formula the kernel implements.
+
+    Matches ``jax.nn.gelu(x, approximate=True)``.
+    """
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def matmul_gelu_ref(x, w):
+    """Reference for ``matmul_gelu``: ``gelu(x @ w)`` in float32 accumulation."""
+    acc = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    return gelu(acc).astype(x.dtype)
+
+
+def bruck_rotate_ref(data, shift):
+    """Reference for ``bruck_rotate``: Algorithm 1's final ``rotate data
+    down by id positions`` — ``out[k] = data[(k - shift) mod p]`` over the
+    leading axis, i.e. ``jnp.roll`` by ``shift``.
+    """
+    return jnp.roll(data, shift, axis=0)

@@ -1,0 +1,118 @@
+"""Layer-2 JAX model: the tensor-parallel MLP around the allgather.
+
+The end-to-end workload (DESIGN.md) is Megatron-style tensor parallelism,
+which is exactly the setting where an allgather sits on the inference hot
+path: with ``W1`` column-sharded over ``tp`` workers, each worker computes
+a partial activation ``h_i = gelu(x @ W1_i)`` (the Pallas kernel), the
+**Rust coordinator allgathers** the ``h_i`` across workers using the
+paper's locality-aware Bruck, and every worker finishes with the dense
+projection ``y = h @ W2``.
+
+Python never runs at serving time: the two halves of the forward pass are
+AOT-lowered by :mod:`compile.aot` into ``artifacts/*.hlo.txt`` and executed
+from Rust via PJRT. This module is the single source of truth for the
+computation and the shard math; its reference forward is what the Rust
+integration test validates against.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels import bruck_pack, gathered_matmul, matmul_gelu, ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Shapes of the TP-MLP and the tensor-parallel degree."""
+
+    batch: int = 8
+    d_model: int = 256
+    d_hidden: int = 1024
+    d_out: int = 256
+    tp: int = 4  # tensor-parallel workers == allgather participants
+
+    @property
+    def hidden_shard(self) -> int:
+        assert self.d_hidden % self.tp == 0, "d_hidden must divide by tp"
+        return self.d_hidden // self.tp
+
+    def param_count(self) -> int:
+        return self.d_model * self.d_hidden + self.d_hidden * self.d_out
+
+
+# The configuration baked into the default artifacts.
+DEFAULT_CONFIG = ModelConfig()
+
+
+def shard_w1(w1, i: int, tp: int):
+    """Column shard ``i`` of ``W1`` (the piece worker ``i`` owns)."""
+    d_hidden = w1.shape[1]
+    assert d_hidden % tp == 0
+    s = d_hidden // tp
+    return w1[:, i * s : (i + 1) * s]
+
+
+def tp_partial_forward(x, w1_shard):
+    """Worker-local half of the forward pass: ``gelu(x @ W1_i)``.
+
+    Calls the Layer-1 Pallas kernel so the fused tile loop lowers into the
+    same HLO module. Output shape ``(batch, hidden_shard)``.
+    """
+    return matmul_gelu.matmul_gelu(x, w1_shard)
+
+
+def tp_final_forward(h_full, w2):
+    """Post-allgather half: dense projection of the full activation.
+
+    ``h_full`` is the rank-order concatenation the allgather produced,
+    shape ``(batch, d_hidden)``; output ``(batch, d_out)``.
+    """
+    return jnp.matmul(h_full, w2)
+
+
+def fused_final_forward(gathered_flat, w2, *, tp: int, batch: int):
+    """Post-allgather projection consuming the rank-order gathered buffer
+    directly (Layer-1 ``gathered_matmul`` kernel) -- no h_full assembly."""
+    return gathered_matmul.gathered_matmul(gathered_flat, w2, tp=tp, batch=batch)
+
+
+def rotate_blocks(data_flat, shift, *, p: int):
+    """The Bruck final rotation as an XLA computation (Layer-1 kernel),
+    exported so the Rust side can offload the pack step of Algorithm 1."""
+    return bruck_pack.bruck_rotate_flat(data_flat, shift, p=p)
+
+
+def reference_forward(x, w1, w2):
+    """Unsharded oracle for the whole model: what the TP pipeline must
+    reproduce bit-for-bit up to float tolerance."""
+    return jnp.matmul(ref.matmul_gelu_ref(x, w1), w2)
+
+
+def tp_forward_reference(x, w1, w2, tp: int):
+    """Pure-jnp simulation of the full TP pipeline, allgather included
+    (``jnp.concatenate`` plays the collective). Used by tests to show the
+    shard math composes before anything touches Rust."""
+    parts = [ref.matmul_gelu_ref(x, shard_w1(w1, i, tp)) for i in range(tp)]
+    h_full = jnp.concatenate(parts, axis=1)
+    return tp_final_forward(h_full, w2)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic, well-conditioned parameters (no RNG dependency in the
+    build path): low-amplitude trigonometric lattices."""
+    d, h, o = cfg.d_model, cfg.d_hidden, cfg.d_out
+    ii = jnp.arange(d, dtype=jnp.float32)[:, None]
+    jj = jnp.arange(h, dtype=jnp.float32)[None, :]
+    w1 = 0.05 * jnp.sin(0.7 * ii + 1.3 * jj + seed) / jnp.sqrt(d)
+    kk = jnp.arange(h, dtype=jnp.float32)[:, None]
+    ll = jnp.arange(o, dtype=jnp.float32)[None, :]
+    w2 = 0.05 * jnp.cos(0.9 * kk - 0.4 * ll + seed) / jnp.sqrt(h)
+    return w1.astype(jnp.float32), w2.astype(jnp.float32)
+
+
+def example_batch(cfg: ModelConfig, seed: int = 1):
+    """Deterministic input batch with the artifact shapes."""
+    bb = jnp.arange(cfg.batch, dtype=jnp.float32)[:, None]
+    dd = jnp.arange(cfg.d_model, dtype=jnp.float32)[None, :]
+    return (jnp.sin(0.3 * bb + 0.11 * dd + seed)).astype(jnp.float32)

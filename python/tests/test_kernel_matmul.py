@@ -1,0 +1,98 @@
+"""L1 correctness: the fused matmul+GeLU Pallas kernel vs the jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-multiple ones through the
+padding wrapper) and dtypes; this is the CORE correctness signal for the
+compute kernel that the AOT artifacts embed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_gelu, ref
+
+
+def _mk(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def test_exact_tile_shape():
+    x = _mk((128, 128), 0)
+    w = _mk((128, 128), 1)
+    got = matmul_gelu.matmul_gelu_strict(x, w)
+    want = ref.matmul_gelu_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_multi_tile_grid():
+    x = _mk((256, 384), 2)
+    w = _mk((384, 256), 3)
+    got = matmul_gelu.matmul_gelu_strict(x, w)
+    want = ref.matmul_gelu_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_strict_rejects_ragged():
+    x = _mk((100, 128), 4)
+    w = _mk((128, 128), 5)
+    with pytest.raises(AssertionError):
+        matmul_gelu.matmul_gelu_strict(x, w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_padding_wrapper_matches_ref(m, k, n, seed):
+    x = _mk((m, k), seed)
+    w = _mk((k, n), seed + 1)
+    got = matmul_gelu.matmul_gelu(x, w)
+    want = ref.matmul_gelu_ref(x, w)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+)
+def test_block_shape_invariance(bm, bn, bk):
+    """The tiling schedule must not change the numerics."""
+    x = _mk((64, 64), 7)
+    w = _mk((64, 64), 8)
+    got = matmul_gelu.matmul_gelu_strict(x, w, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.matmul_gelu_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_inputs_upcast():
+    x = _mk((32, 32), 9).astype(jnp.bfloat16)
+    w = _mk((32, 32), 10).astype(jnp.bfloat16)
+    got = matmul_gelu.matmul_gelu(x, w)
+    want = ref.matmul_gelu_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_gelu_matches_jax_nn():
+    import jax
+
+    x = _mk((64,), 11)
+    np.testing.assert_allclose(
+        ref.gelu(x), jax.nn.gelu(x, approximate=True), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_vmem_footprint_default_under_budget():
+    # 192 KiB at the 128^3 f32 defaults — far below 16 MiB/core.
+    fp = matmul_gelu.vmem_footprint_bytes()
+    assert fp == 4 * (128 * 128 * 3)
+    assert fp < 16 * 1024 * 1024

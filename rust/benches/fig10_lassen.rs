@@ -1,0 +1,48 @@
+//! Bench: regenerate paper **Figure 10** — measured allgather cost on
+//! Lassen (socket regions, one socket per node used): all algorithms vs
+//! the system-MPI baseline.
+//!
+//! Same virtual-time methodology as Figure 9, under the Lassen machine
+//! model whose inter-node/intra-socket gap is wider — the paper's setting
+//! where locality-awareness pays the most.
+//!
+//! Run: `cargo bench --bench fig10_lassen` (env `LOCAG_MAX_P` to extend)
+
+use locag::bench_harness::figures;
+use locag::collectives::Algorithm;
+use locag::model::MachineParams;
+use locag::sim;
+use locag::topology::Topology;
+
+fn main() {
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let max_p = std::env::var("LOCAG_MAX_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let fig = figures::fig10("results/fig10.csv", max_p).expect("fig10");
+    println!("{}", fig.plot());
+    println!("CSV: results/fig10.csv");
+
+    // Speedup of loc-bruck over the system default at the largest scale
+    // per ppn — the number the paper's conclusion cites.
+    println!("\nloc-bruck speedup over system-default (largest region count per ppn):");
+    for ppn in [4usize, 16] {
+        let regions = {
+            let mut r = 2usize;
+            while r * 2 * ppn <= max_p {
+                r *= 2;
+            }
+            r
+        };
+        let topo = Topology::regions(regions, ppn);
+        let m = MachineParams::lassen();
+        let sys = sim::run_allgather(Algorithm::SystemDefault, &topo, &m, 2);
+        let loc = sim::run_allgather(Algorithm::LocalityBruck, &topo, &m, 2);
+        assert!(sys.verified && loc.verified);
+        println!(
+            "  ppn={ppn:<3} regions={regions:<5} speedup {:.2}x",
+            sys.vtime / loc.vtime
+        );
+    }
+}

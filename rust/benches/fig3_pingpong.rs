@@ -1,0 +1,42 @@
+//! Bench: regenerate paper **Figure 3** — ping-pong cost by locality class.
+//!
+//! Prints the modeled (machine-preset) series that parameterize every
+//! other experiment, and additionally wall-clock-measures a real 2-rank
+//! mailbox ping-pong at each size so the transport's own overhead is on
+//! record (EXPERIMENTS.md §Fig3).
+//!
+//! Run: `cargo bench --bench fig3_pingpong`
+
+use locag::bench_harness::{figures, measure_budget};
+use locag::comm::{CommWorld, Timing};
+use locag::topology::Topology;
+
+fn main() {
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let fig = figures::fig3("results/fig3.csv").expect("fig3");
+    println!("{}", fig.plot());
+    println!("CSV: results/fig3.csv\n");
+
+    // Wall-clock transport ping-pong (single machine — one series).
+    println!("transport wall-clock ping-pong (shared-memory mailboxes, 8 round trips/iter):");
+    let topo = Topology::regions(1, 2);
+    for size in [4usize, 64, 1024, 16 * 1024, 256 * 1024, 1024 * 1024] {
+        let payload = vec![0u8; size];
+        let m = measure_budget(&format!("pingpong/{size}B"), 3, 0.2, 10, || {
+            let p = payload.clone();
+            let run = CommWorld::run(&topo, Timing::Wallclock, move |c| {
+                for tag in 0..8u64 {
+                    if c.rank() == 0 {
+                        c.send(&p, 1, tag).unwrap();
+                        c.recv::<u8>(1, tag).unwrap();
+                    } else {
+                        let got: Vec<u8> = c.recv(0, tag).unwrap();
+                        c.send(&got, 0, tag).unwrap();
+                    }
+                }
+            });
+            std::hint::black_box(run.vtimes.len());
+        });
+        println!("{}", m.report_line());
+    }
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate paper **Figure 7** — modeled standard vs
+//! locality-aware Bruck across node counts for PPN ∈ {4, 8, 16, 32},
+//! with the per-series speedup table the paper's discussion quotes.
+//!
+//! Run: `cargo bench --bench fig7_model`
+
+use locag::bench_harness::figures;
+use locag::model::closed_form::ModelConfig;
+
+fn main() {
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let fig = figures::fig7("results/fig7.csv").expect("fig7");
+    println!("{}", fig.plot());
+    println!("CSV: results/fig7.csv\n");
+
+    // The paper's headline discussion: improvement amplifies with PPN.
+    let cfg = ModelConfig::lassen();
+    println!("modeled speedup (bruck / loc-bruck), m/p = 4 bytes:");
+    println!("{:>8} {:>8} {:>8} {:>8} {:>8}", "nodes", "ppn=4", "ppn=8", "ppn=16", "ppn=32");
+    let mut nodes = 4usize;
+    while nodes <= 1 << 14 {
+        print!("{nodes:>8}");
+        for ppn in [4usize, 8, 16, 32] {
+            let p = nodes * ppn;
+            let s = cfg.bruck(p, 4) / cfg.loc_bruck(p, ppn, 4);
+            print!(" {s:>8.2}");
+        }
+        println!();
+        nodes *= 4;
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate paper **Figure 8** — modeled cost vs per-process
+//! data size on 1024 regions × 16 ppn.
+//!
+//! The paper's observation: "The size of data has no notable modeled
+//! effect on the improvements" — printed as the ratio column.
+//!
+//! Run: `cargo bench --bench fig8_datasize`
+
+use locag::bench_harness::figures;
+use locag::model::closed_form::ModelConfig;
+use locag::util::fmt::bytes;
+
+fn main() {
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let fig = figures::fig8("results/fig8.csv").expect("fig8");
+    println!("{}", fig.plot());
+    println!("CSV: results/fig8.csv\n");
+
+    let cfg = ModelConfig::lassen();
+    let (regions, ppn) = (1024usize, 16usize);
+    let p = regions * ppn;
+    println!("{:>12} {:>12} {:>12} {:>8}", "bytes/proc", "bruck", "loc-bruck", "ratio");
+    let mut n = 4usize;
+    while n <= 64 * 1024 {
+        let a = cfg.bruck(p, n);
+        let b = cfg.loc_bruck(p, ppn, n);
+        println!(
+            "{:>12} {:>12} {:>12} {:>8.2}",
+            bytes(n),
+            format!("{a:.3e}"),
+            format!("{b:.3e}"),
+            a / b
+        );
+        n *= 4;
+    }
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate paper **Figure 9** — measured allgather cost on
+//! Quartz (node regions): MVAPICH2-default vs Bruck vs hierarchical vs
+//! multi-lane vs locality-aware, PPN ∈ {4, 16}, two 4-byte ints/proc.
+//!
+//! "Measured" here = virtual-time execution of the real `Isend/Irecv`
+//! implementations under the Quartz machine model (the off-testbed
+//! substitution; DESIGN.md §Hardware-Adaptation). Every data point is
+//! correctness-verified before its time is reported.
+//!
+//! Run: `cargo bench --bench fig9_quartz` (env `LOCAG_MAX_P` to extend)
+
+use locag::bench_harness::figures;
+
+fn main() {
+    std::fs::create_dir_all("results").expect("mkdir results");
+    let max_p = std::env::var("LOCAG_MAX_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024);
+    let fig = figures::fig9("results/fig9.csv", max_p).expect("fig9");
+    println!("{}", fig.plot());
+    println!("CSV: results/fig9.csv");
+
+    // Winner table per (ppn, regions): the paper's qualitative claim is
+    // that loc-bruck wins at scale and the margin grows with ppn.
+    println!("\nfastest algorithm per configuration:");
+    for (label, pts) in &fig.series {
+        let last = pts.last().map(|&(x, y)| format!("{y:.2e}s @ {x} regions")).unwrap_or_default();
+        println!("  {label:<28} {last}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Micro-bench: wall-clock cost of each allgather implementation on the
+//! in-process transport — the Layer-3 perf-pass scoreboard
+//! (EXPERIMENTS.md §Perf). Virtual-time figures live in fig9/fig10; this
+//! bench measures what the *implementations themselves* cost.
+//!
+//! Run: `cargo bench --bench micro_collectives`
+
+use locag::bench_harness::measure_budget;
+use locag::collectives::{self, Algorithm};
+use locag::comm::{CommWorld, Timing};
+use locag::topology::Topology;
+
+fn main() {
+    let shapes = [(8usize, 4usize, 2usize), (8, 4, 1024), (16, 8, 2)];
+    for (regions, ppr, n) in shapes {
+        let topo = Topology::regions(regions, ppr);
+        println!(
+            "== {} ranks ({regions} regions x {ppr}), {n} u64/rank ==",
+            topo.size()
+        );
+        for algo in [
+            Algorithm::Bruck,
+            Algorithm::Ring,
+            Algorithm::Dissemination,
+            Algorithm::Hierarchical,
+            Algorithm::Multilane,
+            Algorithm::LocalityBruck,
+        ] {
+            let m = measure_budget(
+                &format!("{}/{}x{}x{}", algo.name(), regions, ppr, n),
+                1,
+                0.3,
+                5,
+                || {
+                    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                        let mine = collectives::canonical_contribution(c.rank(), n);
+                        collectives::allgather(algo, c, &mine).unwrap().len()
+                    });
+                    std::hint::black_box(run.results[0]);
+                },
+            );
+            println!("{}", m.report_line());
+        }
+        println!();
+    }
+
+    // The rotation hot spot on its own (the L1 kernel's Rust twin).
+    for (p, n) in [(64usize, 1024usize), (1024, 64)] {
+        let data: Vec<u64> = (0..(p * n) as u64).collect();
+        let m = measure_budget(&format!("rotate_down/{p}x{n}"), 10, 0.25, 50, || {
+            let out = collectives::bruck::rotate_down(&data, n, p / 3);
+            std::hint::black_box(out.len());
+        });
+        println!("{}", m.report_line());
+    }
+}

@@ -1,0 +1,79 @@
+//! Micro-bench: the mini-MPI transport hot paths — the perf-pass targets
+//! for Layer 3 (EXPERIMENTS.md §Perf).
+//!
+//! * mailbox send→recv round trip (matching + wakeup cost)
+//! * typed byte conversion (Pod fast path)
+//! * world spawn/join overhead per rank
+//! * sub-communicator construction
+//!
+//! Run: `cargo bench --bench micro_comm`
+
+use locag::bench_harness::{measure_budget, Measurement};
+use locag::comm::{from_bytes, to_bytes, CommWorld, Timing};
+use locag::topology::Topology;
+
+fn report(m: &Measurement) {
+    println!("{}", m.report_line());
+}
+
+fn main() {
+    // 1. byte conversion throughput
+    for elems in [16usize, 1024, 65536] {
+        let xs: Vec<u64> = (0..elems as u64).collect();
+        let m = measure_budget(&format!("pod/to_bytes+from/{elems}x8B"), 10, 0.25, 50, || {
+            let b = to_bytes(&xs);
+            let back: Vec<u64> = from_bytes(&b).unwrap();
+            std::hint::black_box(back.len());
+        });
+        report(&m);
+    }
+
+    // 2. send/recv round trips inside a live world (pair of ranks),
+    //    measured from inside the closure to exclude spawn cost.
+    for size in [8usize, 4096, 262144] {
+        let topo = Topology::regions(1, 2);
+        let payload = vec![1u8; size];
+        let m = measure_budget(&format!("mailbox/roundtrip/{size}B"), 2, 0.3, 10, || {
+            let p = payload.clone();
+            let run = CommWorld::run(&topo, Timing::Wallclock, move |c| {
+                let mut acc = 0usize;
+                for tag in 0..64u64 {
+                    if c.rank() == 0 {
+                        c.send(&p, 1, tag).unwrap();
+                        acc += c.recv::<u8>(1, tag).unwrap().len();
+                    } else {
+                        let got: Vec<u8> = c.recv(0, tag).unwrap();
+                        c.send(&got, 0, tag).unwrap();
+                    }
+                }
+                acc
+            });
+            std::hint::black_box(run.results[0]);
+        });
+        // 64 round trips per iteration
+        println!("{}   (/64 = per round trip)", m.report_line());
+    }
+
+    // 3. world spawn/join overhead
+    for ranks in [4usize, 64, 256] {
+        let topo = Topology::regions(1, ranks);
+        let m = measure_budget(&format!("world/spawn_join/{ranks}r"), 1, 0.4, 5, || {
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| c.rank());
+            std::hint::black_box(run.results.len());
+        });
+        report(&m);
+    }
+
+    // 4. sub-communicator construction inside a 64-rank world
+    let topo = Topology::regions(8, 8);
+    let m = measure_budget("comm/split_regions/64r", 1, 0.4, 5, || {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            for _ in 0..16 {
+                let local = c.split_regions().unwrap();
+                std::hint::black_box(local.size());
+            }
+        });
+        std::hint::black_box(run.results.len());
+    });
+    println!("{}   (/16 = per split)", m.report_line());
+}

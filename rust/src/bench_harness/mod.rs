@@ -1,0 +1,98 @@
+//! Benchmark support: a small wall-clock measurement kit (offline stand-in
+//! for criterion) and the figure generators that regenerate every plot of
+//! the paper's evaluation ([`figures`]).
+
+pub mod figures;
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration seconds.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// Summary statistics of the samples.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples).expect("measurement has samples")
+    }
+
+    /// Render one line like criterion's output.
+    pub fn report_line(&self) -> String {
+        use crate::util::fmt::seconds;
+        let s = self.summary();
+        format!(
+            "{:<44} median {:>10}  p10 {:>10}  p90 {:>10}  (n={})",
+            self.name,
+            seconds(s.p50),
+            seconds(s.p10),
+            seconds(s.p90),
+            s.n
+        )
+    }
+}
+
+/// Measure `f` after `warmup` unmeasured runs; `iters` measured runs.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Measurement { name: name.to_string(), samples }
+}
+
+/// Measure with a time budget: run until `budget_secs` elapses (at least
+/// `min_iters`), so fast and slow cases both get stable medians.
+pub fn measure_budget<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    budget_secs: f64,
+    min_iters: usize,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < budget_secs {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    Measurement { name: name.to_string(), samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_collects_samples() {
+        let m = measure("noop", 2, 10, || {});
+        assert_eq!(m.samples.len(), 10);
+        assert!(m.report_line().contains("noop"));
+        assert!(m.summary().p50 >= 0.0);
+    }
+
+    #[test]
+    fn measure_budget_hits_min_iters() {
+        let m = measure_budget("spin", 0, 0.0, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.samples.len() >= 5);
+    }
+}

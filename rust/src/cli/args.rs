@@ -1,0 +1,93 @@
+//! Tiny `--key value` argument parser.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: positionals + `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name). A `--flag` followed by
+    /// another option or end-of-args is treated as boolean `"true"`.
+    pub fn parse(argv: Vec<String>) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv.get(i + 1);
+                match val {
+                    Some(v) if !v.starts_with("--") => {
+                        out.options.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        out.options.insert(key.to_string(), "true".to_string());
+                        i += 1;
+                    }
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required/parseable usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Precondition(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()).collect())
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["figure", "9", "--out", "x.csv", "--max-p", "64"]);
+        assert_eq!(a.positional, vec!["figure", "9"]);
+        assert_eq!(a.get_str("out", ""), "x.csv");
+        assert_eq!(a.get_usize("max-p", 0).unwrap(), 64);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["e2e", "--check", "--algo", "bruck"]);
+        assert!(a.get_bool("check"));
+        assert_eq!(a.get_str("algo", ""), "bruck");
+        assert!(!a.get_bool("missing"));
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_usize("other", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,269 @@
+//! CLI command implementations.
+
+use crate::bench_harness::figures;
+use crate::cli::Args;
+use crate::collectives::Algorithm;
+use crate::coordinator::{serve, ServeConfig};
+use crate::error::{Error, Result};
+use crate::model::MachineParams;
+use crate::sim;
+use crate::topology::{Locality, Topology};
+use crate::util::fmt::seconds;
+
+fn machine_by_name(name: &str) -> Result<MachineParams> {
+    match name {
+        "lassen" => Ok(MachineParams::lassen()),
+        "quartz" => Ok(MachineParams::quartz()),
+        other => Err(Error::Precondition(format!(
+            "unknown machine '{other}' (expected lassen|quartz)"
+        ))),
+    }
+}
+
+fn algo_by_name(name: &str) -> Result<Algorithm> {
+    Algorithm::parse(name)
+        .ok_or_else(|| Error::Precondition(format!("unknown algorithm '{name}'")))
+}
+
+/// `locag quickstart` — the paper's Example 2.1 walkthrough.
+pub fn quickstart(_args: &Args) -> Result<i32> {
+    println!("Example 2.1: 16 processes, 4 per region; 1 u32 value each.\n");
+    let topo = Topology::regions(4, 4);
+    let m = MachineParams::lassen();
+    println!(
+        "{:<18} {:>11} {:>14} {:>13} {:>12}",
+        "algorithm", "max NL msgs", "max NL bytes", "modeled time", "verified"
+    );
+    for algo in [
+        Algorithm::Bruck,
+        Algorithm::Ring,
+        Algorithm::Hierarchical,
+        Algorithm::Multilane,
+        Algorithm::LocalityBruck,
+    ] {
+        let rep = sim::run_allgather(algo, &topo, &m, 1);
+        println!(
+            "{:<18} {:>11} {:>14} {:>13} {:>12}",
+            algo.name(),
+            rep.trace.max_nonlocal_msgs(),
+            rep.trace.max_nonlocal_bytes(),
+            seconds(rep.vtime),
+            rep.verified
+        );
+    }
+    println!(
+        "\nPaper §3: standard Bruck sends 4 non-local messages (15 values) per\n\
+         rank; the locality-aware Bruck sends 1 non-local message (4 values).\n"
+    );
+    println!("Extended to 64 processes / 16 regions (paper Fig. 6):");
+    let topo64 = Topology::regions(16, 4);
+    for algo in [Algorithm::Bruck, Algorithm::LocalityBruck] {
+        let rep = sim::run_allgather(algo, &topo64, &m, 1);
+        println!(
+            "  {:<12} max non-local msgs {} modeled {}",
+            algo.name(),
+            rep.trace.max_nonlocal_msgs(),
+            seconds(rep.vtime)
+        );
+    }
+    Ok(0)
+}
+
+/// `locag allgather` — one configured run.
+pub fn allgather(args: &Args) -> Result<i32> {
+    let algo = algo_by_name(&args.get_str("algo", "loc-bruck"))?;
+    let regions = args.get_usize("regions", 16)?;
+    let ppr = args.get_usize("ppr", 8)?;
+    let n = args.get_usize("values", 2)?;
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    let topo = Topology::regions(regions, ppr);
+    let rep = sim::run_allgather(algo, &topo, &m, n);
+    println!(
+        "{} on {} ranks ({regions} regions x {ppr}), {n} u32 values/rank [{}]",
+        algo.name(),
+        topo.size(),
+        m.name
+    );
+    println!("modeled time: {}", seconds(rep.vtime));
+    println!("verified:     {}", rep.verified);
+    print!("{}", rep.trace.table());
+    if !rep.verified {
+        for e in &rep.errors {
+            eprintln!("error: {e}");
+        }
+        return Ok(1);
+    }
+    Ok(0)
+}
+
+/// `locag figure <id>` — regenerate one paper figure.
+pub fn figure(args: &Args) -> Result<i32> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::Precondition("figure needs an id: 3|7|8|9|10".into()))?
+        .clone();
+    let default_out = format!("results/fig{id}.csv");
+    let out = args.get_str("out", &default_out);
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let max_p = args.get_usize("max-p", 1024)?;
+    let fig = match id.as_str() {
+        "3" => figures::fig3(&out)?,
+        "7" => figures::fig7(&out)?,
+        "8" => figures::fig8(&out)?,
+        "9" => figures::fig9(&out, max_p)?,
+        "10" => figures::fig10(&out, max_p)?,
+        other => {
+            return Err(Error::Precondition(format!(
+                "unknown figure '{other}' (expected 3|7|8|9|10)"
+            )))
+        }
+    };
+    println!("{}", fig.plot());
+    println!("CSV written to {out}");
+    Ok(0)
+}
+
+/// `locag pingpong` — print the per-class postal series.
+pub fn pingpong(args: &Args) -> Result<i32> {
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    println!("{:<10} {:>14} {:>14} {:>14}", "bytes", "intra-socket", "inter-socket", "inter-node");
+    let mut sz = 1usize;
+    while sz <= 1 << 20 {
+        print!("{sz:<10}");
+        for class in Locality::ALL {
+            print!(" {:>14}", seconds(m.cost(class, sz)));
+        }
+        println!();
+        sz *= 4;
+    }
+    Ok(0)
+}
+
+/// `locag e2e` — the serving pipeline (needs `make artifacts`).
+pub fn e2e(args: &Args) -> Result<i32> {
+    let cfg = ServeConfig {
+        artifact_dir: args.get_str("artifacts", "artifacts").into(),
+        algo: algo_by_name(&args.get_str("algo", "loc-bruck"))?,
+        regions: args.get_usize("regions", 2)?,
+        requests: args.get_usize("requests", 16)?,
+        warmup: args.get_usize("warmup", 2)?,
+        check: !args.get_bool("no-check"),
+        fused: args.get_bool("fused"),
+    };
+    println!(
+        "serving via PJRT: allgather={}, {} regions, {} requests{}",
+        cfg.algo,
+        cfg.regions,
+        cfg.requests,
+        if cfg.fused { ", fused final" } else { "" }
+    );
+    let rep = serve(&cfg)?;
+    println!(
+        "model: tp={} params={} | verified={} (max err {:.2e})",
+        rep.tp, rep.params, rep.verified, rep.max_err
+    );
+    print!("{}", rep.metrics.table());
+    print!("{}", rep.trace.table());
+    println!("output sample: {:?}", rep.output_sample);
+    Ok(if rep.verified { 0 } else { 1 })
+}
+
+/// `locag pattern` — print the step-by-step communication pattern of an
+/// algorithm (the paper's Figures 1 and 4 as text).
+pub fn pattern(args: &Args) -> Result<i32> {
+    use crate::collectives;
+    use crate::comm::{CommWorld, Timing};
+    let algo = algo_by_name(&args.get_str("algo", "loc-bruck"))?;
+    let regions = args.get_usize("regions", 4)?;
+    let ppr = args.get_usize("ppr", 4)?;
+    let n = args.get_usize("values", 1)?;
+    let topo = Topology::regions(regions, ppr);
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    println!(
+        "{} on {} ranks ({regions} regions x {ppr}), {n} u32 value(s)/rank:\n",
+        algo.name(),
+        topo.size()
+    );
+    let run = CommWorld::run_traced(&topo, Timing::Virtual(m), |c| {
+        let mine: Vec<u32> = (0..n).map(|j| (c.rank() * n + j) as u32).collect();
+        collectives::allgather(algo, c, &mine).map(|v| v.len())
+    });
+    for (rank, r) in run.results.iter().enumerate() {
+        if let Err(e) = r {
+            eprintln!("rank {rank}: {e}");
+            return Ok(1);
+        }
+    }
+    print!("{}", crate::trace::render_steps(&run.events));
+    println!();
+    print!("{}", run.trace.table());
+    Ok(0)
+}
+
+/// `locag validate` — self-check across algorithms and shapes.
+pub fn validate(args: &Args) -> Result<i32> {
+    let max_p = args.get_usize("max-p", 256)?;
+    let m = MachineParams::lassen();
+    let mut failures = 0usize;
+    let shapes: Vec<(usize, usize)> = vec![
+        (1, 4),
+        (2, 2),
+        (4, 4),
+        (6, 4),
+        (8, 2),
+        (16, 4),
+        (5, 8),
+        (32, 8),
+    ];
+    for (regions, ppr) in shapes {
+        if regions * ppr > max_p {
+            continue;
+        }
+        let topo = Topology::regions(regions, ppr);
+        for algo in Algorithm::ALL {
+            if algo == Algorithm::RecursiveDoubling && !topo.size().is_power_of_two() {
+                continue; // documented precondition
+            }
+            let rep = sim::run_allgather(algo, &topo, &m, 2);
+            let ok = rep.verified;
+            // paper bounds on the contribution
+            let bound_ok = match algo {
+                Algorithm::LocalityBruck => {
+                    let expect = crate::util::ilog_ceil(ppr.max(2), regions) as u64;
+                    rep.trace.max_nonlocal_msgs() <= expect.max(1)
+                }
+                Algorithm::Bruck => {
+                    rep.trace.max_nonlocal_msgs()
+                        <= crate::util::ilog2_ceil(topo.size()) as u64
+                }
+                _ => true,
+            };
+            if !ok || !bound_ok {
+                failures += 1;
+                println!(
+                    "FAIL {algo} @ {regions}x{ppr}: verified={ok} bound_ok={bound_ok} {:?}",
+                    rep.errors
+                );
+            } else {
+                println!(
+                    "ok   {:<18} @ {:>4} ranks ({regions} regions x {ppr}): {} | maxNL {}",
+                    algo.name(),
+                    topo.size(),
+                    seconds(rep.vtime),
+                    rep.trace.max_nonlocal_msgs()
+                );
+            }
+        }
+    }
+    if failures > 0 {
+        println!("{failures} failures");
+        return Ok(1);
+    }
+    println!("all algorithms validated");
+    Ok(0)
+}

@@ -1,0 +1,84 @@
+//! Hand-rolled CLI (the offline registry has no `clap`).
+//!
+//! ```text
+//! locag quickstart                      # paper Example 2.1 walkthrough
+//! locag allgather --algo loc-bruck --regions 16 --ppr 8 [--machine lassen]
+//! locag figure 9 [--out results/fig9.csv] [--max-p 1024]
+//! locag pingpong [--machine quartz]
+//! locag e2e [--algo loc-bruck] [--regions 2] [--requests 16] [--artifacts DIR]
+//! locag validate [--max-p 256]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use crate::error::Result;
+
+/// Entry point called by `main`.
+pub fn run(argv: Vec<String>) -> Result<i32> {
+    let mut args = Args::parse(argv);
+    let cmd = match args.positional.first().cloned() {
+        Some(c) => c,
+        None => {
+            print!("{}", usage());
+            return Ok(2);
+        }
+    };
+    args.positional.remove(0);
+    match cmd.as_str() {
+        "quickstart" => commands::quickstart(&args),
+        "allgather" => commands::allgather(&args),
+        "figure" => commands::figure(&args),
+        "pingpong" => commands::pingpong(&args),
+        "pattern" => commands::pattern(&args),
+        "e2e" => commands::e2e(&args),
+        "validate" => commands::validate(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{}", usage());
+            Ok(2)
+        }
+    }
+}
+
+/// The top-level help text.
+pub fn usage() -> String {
+    "\
+locag — locality-aware Bruck allgather (EuroMPI/USA'22 reproduction)
+
+USAGE: locag <command> [options]
+
+COMMANDS
+  quickstart   Walk through paper Example 2.1 (16 ranks, 4 regions):
+               per-algorithm traffic tables and modeled times.
+  allgather    Run one allgather and report time/traffic.
+               --algo NAME       (default loc-bruck; see below)
+               --regions N       (default 16)
+               --ppr N           ranks per region (default 8)
+               --values N        u32 values per rank (default 2)
+               --machine NAME    lassen | quartz (default lassen)
+  figure       Regenerate a paper figure: 3 | 7 | 8 | 9 | 10.
+               --out FILE        CSV path (default results/figN.csv)
+               --max-p N         world-size cap for figs 9/10 (default 1024)
+  pingpong     Print the locality-class ping-pong series (Fig. 3 shape).
+               --machine NAME
+  pattern      Print the step-by-step communication pattern (paper Figs.
+               1 and 4 as text). --algo NAME --regions N --ppr N
+  e2e          Tensor-parallel serving with the allgather on the hot path.
+               --algo NAME --regions N --requests N --artifacts DIR
+               --fused (use the fused gathered-matmul artifact)
+  validate     Cross-check every algorithm against the expected gather and
+               the paper's message-count bounds. --max-p N (default 256)
+
+ALGORITHMS
+  system-default bruck ring recursive-doubling dissemination hierarchical
+  multilane loc-bruck loc-bruck-v loc-bruck-2level
+"
+    .to_string()
+}

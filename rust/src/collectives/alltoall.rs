@@ -1,0 +1,348 @@
+//! All-to-all exchanges — the §6 extension, and the operation the original
+//! Bruck et al. '97 paper [7] was designed for.
+//!
+//! `alltoall` contract: rank `i` holds `p` blocks of `n` elements, block
+//! `j` destined for rank `j`; afterwards rank `i` holds block `i` of every
+//! rank, in rank order (`MPI_Alltoall` semantics).
+//!
+//! Three implementations:
+//!
+//! * [`pairwise`] — `p−1` rounds of `sendrecv` with XOR/shift partners:
+//!   the large-message baseline (one message per peer, no forwarding);
+//! * [`bruck`] — the classic log-step algorithm: `⌈log2(p)⌉` rounds where
+//!   round `k` forwards every block whose destination distance has bit
+//!   `k` set. Minimal message count, `O(b·log p)` forwarded bytes;
+//! * [`loc_aware`] — the paper's §6 direction applied to alltoall:
+//!   aggregate per destination *region* locally (each local rank `ℓ`
+//!   collects the blocks of all local peers headed for the region group it
+//!   owns), exchange region-to-region in `r−1`-free fashion (one non-local
+//!   message per owned region), then scatter locally. Non-local messages
+//!   per rank drop from `⌈log2 p⌉` (Bruck, mostly non-local) to
+//!   `⌈(r−1)/pℓ⌉`-ish aggregated transfers; non-local *duplicate* bytes
+//!   disappear because payloads are aggregated once per region pair.
+
+use super::grouping::{group_ranks, require_uniform, GroupBy};
+use crate::comm::{Comm, Pod};
+use crate::error::{Error, Result};
+
+/// Check the send buffer length and return the block size `n`.
+fn block_len<T>(comm: &Comm, send: &[T]) -> Result<usize> {
+    let p = comm.size();
+    if send.len() % p != 0 {
+        return Err(Error::SizeMismatch { expected: (send.len() / p.max(1)) * p, got: send.len() });
+    }
+    Ok(send.len() / p)
+}
+
+/// Pairwise-exchange alltoall: `p − 1` rounds; round `k` trades with
+/// `rank XOR k` (power-of-two p) or `(rank ± k) mod p` otherwise.
+pub fn pairwise<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    let p = comm.size();
+    let id = comm.rank();
+    let n = block_len(comm, send)?;
+    let tag = comm.next_coll_tag();
+    let mut out = vec![T::default(); n * p];
+    out[id * n..(id + 1) * n].copy_from_slice(&send[id * n..(id + 1) * n]);
+    for k in 1..p {
+        let (dst, src) = if p.is_power_of_two() {
+            (id ^ k, id ^ k)
+        } else {
+            ((id + k) % p, (id + p - k) % p)
+        };
+        let _rq = comm.isend(&send[dst * n..(dst + 1) * n], dst, tag + k as u64)?;
+        comm.recv_into(src, tag + k as u64, &mut out[src * n..(src + 1) * n])?;
+    }
+    Ok(out)
+}
+
+/// Bruck alltoall: `⌈log2 p⌉` rounds. Blocks are kept in "distance" order
+/// (slot `d` holds the block currently destined `d` ranks ahead); round
+/// `k` ships every slot with bit `k` set to rank `id + 2^k`, prefixed by
+/// the slot index so the receiver can merge.
+pub fn bruck<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    let p = comm.size();
+    let id = comm.rank();
+    let n = block_len(comm, send)?;
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let tag = comm.next_coll_tag();
+
+    // slots[d] = block destined for rank (id + d) mod p
+    let mut slots: Vec<Vec<T>> = (0..p)
+        .map(|d| {
+            let dst = (id + d) % p;
+            send[dst * n..(dst + 1) * n].to_vec()
+        })
+        .collect();
+
+    let mut k = 0u32;
+    while (1usize << k) < p {
+        let bit = 1usize << k;
+        let to = (id + bit) % p;
+        let from = (id + p - bit) % p;
+        // pack slot indices (u64) + payloads
+        let moving: Vec<usize> = (0..p).filter(|d| d & bit != 0).collect();
+        let mut payload: Vec<u8> = Vec::with_capacity(moving.len() * (8 + n * 8));
+        for &d in &moving {
+            payload.extend_from_slice(&(d as u64).to_le_bytes());
+            payload.extend_from_slice(&crate::comm::to_bytes(&slots[d]));
+        }
+        let _rq = comm.isend(&payload, to, tag + k as u64)?;
+        let got: Vec<u8> = comm.irecv(from, tag + k as u64).wait(comm)?;
+        let rec = 8 + n * std::mem::size_of::<T>();
+        if got.len() % rec != 0 {
+            return Err(Error::DatatypeMismatch { bytes: got.len(), elem_size: rec });
+        }
+        for chunk in got.chunks_exact(rec) {
+            let d = u64::from_le_bytes(chunk[0..8].try_into().expect("header")) as usize;
+            if d >= p {
+                return Err(Error::Precondition(format!("bruck alltoall: bad slot {d}")));
+            }
+            let body = crate::comm::from_bytes::<T>(&chunk[8..])
+                .ok_or(Error::DatatypeMismatch { bytes: chunk.len() - 8, elem_size: std::mem::size_of::<T>() })?;
+            // receiver is `bit` closer to the destination: same slot index
+            slots[d] = body;
+        }
+        k += 1;
+    }
+
+    // slot d now holds the block that travelled to its destination… in
+    // Bruck alltoall, after all rounds slot d holds the block *from* rank
+    // (id - d) mod p destined for us. Unpack into rank order.
+    let mut out = vec![T::default(); n * p];
+    for d in 0..p {
+        let src = (id + p - d) % p;
+        out[src * n..(src + 1) * n].copy_from_slice(&slots[d]);
+    }
+    Ok(out)
+}
+
+/// Locality-aware alltoall (§6 direction): local gather per destination
+/// region → one aggregated non-local exchange per (region, owner) pair →
+/// local scatter.
+///
+/// Local rank `ℓ` owns destination regions `{ℓ, ℓ+pℓ, ℓ+2pℓ, …}`; for each
+/// owned region it receives the local peers' blocks (local gather),
+/// exchanges one aggregated message with its counterpart in that region,
+/// and finally the region scatters received aggregates locally. Non-local
+/// messages per rank: `⌈(r−1)/pℓ⌉`·1, each `pℓ²·n` elements — no duplicate
+/// values cross regions.
+pub fn loc_aware<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    let p = comm.size();
+    let id = comm.rank();
+    let n = block_len(comm, send)?;
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let groups = group_ranks(comm, GroupBy::Region)?;
+    let ppr = require_uniform(&groups, "locality-aware alltoall")?;
+    let r_n = groups.count();
+    if ppr == 1 || r_n == 1 {
+        return pairwise(comm, send);
+    }
+    let g = groups.mine;
+    let l = groups.my_local;
+    let local_comm = comm.sub(&groups.members[g])?;
+    let tag = comm.next_coll_tag();
+
+    let mut out = vec![T::default(); n * p];
+    // Local blocks for our own region move directly.
+    for (j, &rank) in groups.members[g].iter().enumerate() {
+        let _ = j;
+        if rank == id {
+            out[id * n..(id + 1) * n].copy_from_slice(&send[id * n..(id + 1) * n]);
+        } else {
+            let ltag = tag; // one tag; distinct (src,dst) pairs
+            let _rq = comm.isend(&send[rank * n..(rank + 1) * n], rank, ltag)?;
+        }
+    }
+    for &rank in groups.members[g].iter() {
+        if rank != id {
+            comm.recv_into(rank, tag, &mut out[rank * n..(rank + 1) * n])?;
+        }
+    }
+
+    // For every remote region rg (owned by local rank rg % ppr):
+    //   1. local gather to the owner: each local rank sends its ppr blocks
+    //      destined for rg's members;
+    //   2. owner exchanges the aggregate with rg's owner of OUR region;
+    //   3. owner scatters the received aggregate locally.
+    let tag_gather = comm.next_coll_tag();
+    let tag_xchg = comm.next_coll_tag();
+    let tag_scatter = comm.next_coll_tag();
+    // step 1: send my blocks for each remote region to its local owner
+    for rg in 0..r_n {
+        if rg == g {
+            continue;
+        }
+        let owner = groups.members[g][rg % ppr];
+        let mut blocks: Vec<T> = Vec::with_capacity(ppr * n);
+        for &dst in &groups.members[rg] {
+            blocks.extend_from_slice(&send[dst * n..(dst + 1) * n]);
+        }
+        let _rq = comm.isend(&blocks, owner, tag_gather + rg as u64)?;
+    }
+    // step 1b/2/3 for the regions I own
+    let owned: Vec<usize> = (0..r_n).filter(|&rg| rg != g && rg % ppr == l).collect();
+    let mut aggregates: Vec<(usize, Vec<T>)> = Vec::with_capacity(owned.len());
+    for &rg in &owned {
+        // gather ppr * ppr * n elements: [local src][dst in rg]
+        let mut agg = vec![T::default(); ppr * ppr * n];
+        for (j, &src) in groups.members[g].iter().enumerate() {
+            comm.recv_into(
+                src,
+                tag_gather + rg as u64,
+                &mut agg[j * ppr * n..(j + 1) * ppr * n],
+            )?;
+        }
+        // exchange with rg's owner of region g
+        let peer = groups.members[rg][g % ppr];
+        let _rq = comm.isend(&agg, peer, tag_xchg + (g * r_n + rg) as u64)?;
+        aggregates.push((rg, agg));
+    }
+    // receive the aggregates headed to our region from the regions we own
+    for &rg in &owned {
+        let peer = groups.members[rg][g % ppr];
+        let got: Vec<T> = comm.irecv(peer, tag_xchg + (rg * r_n + g) as u64).wait(comm)?;
+        if got.len() != ppr * ppr * n {
+            return Err(Error::SizeMismatch { expected: ppr * ppr * n, got: got.len() });
+        }
+        // got layout: [src j in rg][dst k in g]; scatter row k to member k
+        for (k, &dst) in groups.members[g].iter().enumerate() {
+            let mut per_dst: Vec<T> = Vec::with_capacity(ppr * n);
+            for j in 0..ppr {
+                let base = j * ppr * n + k * n;
+                per_dst.extend_from_slice(&got[base..base + n]);
+            }
+            if dst == id {
+                for (j, &src) in groups.members[rg].iter().enumerate() {
+                    out[src * n..(src + 1) * n]
+                        .copy_from_slice(&per_dst[j * n..(j + 1) * n]);
+                }
+            } else {
+                let _rq = comm.isend(&per_dst, dst, tag_scatter + rg as u64)?;
+            }
+        }
+    }
+    // receive scattered rows for regions owned by other local ranks
+    for rg in 0..r_n {
+        if rg == g || rg % ppr == l {
+            continue;
+        }
+        let owner = groups.members[g][rg % ppr];
+        let per_dst: Vec<T> = comm.irecv(owner, tag_scatter + rg as u64).wait(comm)?;
+        if per_dst.len() != ppr * n {
+            return Err(Error::SizeMismatch { expected: ppr * n, got: per_dst.len() });
+        }
+        for (j, &src) in groups.members[rg].iter().enumerate() {
+            out[src * n..(src + 1) * n].copy_from_slice(&per_dst[j * n..(j + 1) * n]);
+        }
+    }
+    let _ = local_comm;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    /// send buffer for rank i: block j = [i*10_000 + j*100 + e]
+    fn send_buf(i: usize, p: usize, n: usize) -> Vec<u64> {
+        (0..p * n)
+            .map(|x| {
+                let (j, e) = (x / n, x % n);
+                (i * 10_000 + j * 100 + e) as u64
+            })
+            .collect()
+    }
+
+    /// expected recv buffer for rank i
+    fn want_buf(i: usize, p: usize, n: usize) -> Vec<u64> {
+        (0..p * n)
+            .map(|x| {
+                let (j, e) = (x / n, x % n);
+                (j * 10_000 + i * 100 + e) as u64
+            })
+            .collect()
+    }
+
+    fn check<F>(f: F, regions: usize, ppr: usize, n: usize)
+    where
+        F: Fn(&Comm, &[u64]) -> Result<Vec<u64>> + Sync,
+    {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            f(c, &send_buf(c.rank(), p, n)).unwrap()
+        });
+        for (rank, got) in run.results.iter().enumerate() {
+            assert_eq!(got, &want_buf(rank, p, n), "rank {rank} ({regions}x{ppr})");
+        }
+    }
+
+    #[test]
+    fn pairwise_correct() {
+        for (r, ppr, n) in [(1usize, 4usize, 2usize), (4, 4, 1), (3, 2, 3), (2, 8, 2)] {
+            check(pairwise, r, ppr, n);
+        }
+    }
+
+    #[test]
+    fn bruck_correct() {
+        for (r, ppr, n) in [(1usize, 4usize, 2usize), (4, 4, 1), (3, 2, 3), (2, 8, 2), (5, 2, 1)] {
+            check(bruck, r, ppr, n);
+        }
+    }
+
+    #[test]
+    fn loc_aware_correct() {
+        for (r, ppr, n) in [(4usize, 4usize, 2usize), (2, 4, 1), (8, 4, 1), (3, 4, 2), (6, 2, 2)] {
+            check(loc_aware, r, ppr, n);
+        }
+    }
+
+    #[test]
+    fn loc_aware_fewer_nonlocal_messages_than_bruck() {
+        let topo = Topology::regions(4, 4);
+        let p = topo.size();
+        let b = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            bruck(c, &send_buf(c.rank(), p, 1)).unwrap();
+        });
+        let l = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            loc_aware(c, &send_buf(c.rank(), p, 1)).unwrap();
+        });
+        assert!(
+            l.trace.max_nonlocal_msgs() <= b.trace.max_nonlocal_msgs(),
+            "loc {} vs bruck {}",
+            l.trace.max_nonlocal_msgs(),
+            b.trace.max_nonlocal_msgs()
+        );
+        // and strictly fewer total non-local bytes (no duplicate forwarding)
+        assert!(l.trace.total_nonlocal_bytes() < b.trace.total_nonlocal_bytes());
+    }
+
+    #[test]
+    fn bruck_equals_pairwise() {
+        let topo = Topology::regions(2, 4);
+        let p = topo.size();
+        let a = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            bruck(c, &send_buf(c.rank(), p, 2)).unwrap()
+        });
+        let b = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            pairwise(c, &send_buf(c.rank(), p, 2)).unwrap()
+        });
+        assert_eq!(a.results, b.results);
+    }
+
+    #[test]
+    fn ragged_buffer_rejected() {
+        let topo = Topology::regions(1, 3);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            pairwise(c, &[1u64, 2]).is_err()
+        });
+        assert!(run.results.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,93 @@
+//! The standard Bruck allgather — paper Algorithm 1.
+//!
+//! `⌈log2(p)⌉` steps. Before step `i` each rank holds `min(2^i, p)` blocks,
+//! beginning with its own, in “rotated” order: block `j` is the
+//! contribution of rank `(id + j) mod p`. Step `i` sends the first
+//! `min(2^i, p − 2^i)` blocks to rank `id − 2^i (mod p)` and receives the
+//! same amount from rank `id + 2^i (mod p)`, appended after the held
+//! blocks. A final rotation (“rotate data down by id positions”) restores
+//! global rank order.
+//!
+//! The final rotation is the data-movement hot spot mirrored by the Pallas
+//! kernel `python/compile/kernels/bruck_pack.py` (see DESIGN.md).
+
+use crate::comm::{Comm, Pod};
+use crate::error::Result;
+
+/// Bruck allgather of `local` (length `n`) over `comm`; returns `n·p`
+/// elements in rank order.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let p = comm.size();
+    let id = comm.rank();
+    let n = local.len();
+    let tag = comm.next_coll_tag();
+
+    // Working buffer in rotated order; grows to n*p.
+    let mut data: Vec<T> = Vec::with_capacity(n * p);
+    data.extend_from_slice(local);
+
+    let mut dist = 1usize;
+    let mut step = 0u64;
+    while dist < p {
+        // number of blocks exchanged this step (partial final step for
+        // non-power-of-two p)
+        let blocks = dist.min(p - dist);
+        let send_to = (id + p - dist) % p;
+        let recv_from = (id + dist) % p;
+        let _send = comm.isend(&data[0..blocks * n], send_to, tag + step)?;
+        // receive straight into the working buffer's tail (perf pass:
+        // avoids the intermediate Vec the generic recv path allocates)
+        let old = data.len();
+        data.resize(old + blocks * n, T::default());
+        let req = comm.irecv(recv_from, tag + step);
+        req.wait_into(comm, &mut data[old..])?;
+        dist <<= 1;
+        step += 1;
+    }
+    debug_assert_eq!(data.len(), n * p);
+
+    Ok(rotate_down(&data, n, id))
+}
+
+/// The final reorder of Algorithm 1: the rotated buffer holds rank
+/// `(id + j) mod p`'s block at position `j`; rotating *down* by `id` blocks
+/// puts block of rank `r` at position `r`.
+pub fn rotate_down<T: Pod>(data: &[T], n: usize, id: usize) -> Vec<T> {
+    assert!(n > 0, "block size must be positive");
+    assert_eq!(data.len() % n, 0);
+    let p = data.len() / n;
+    let mut out = Vec::with_capacity(data.len());
+    // out[(id + j) % p] = data[j]  ⇔  out[k] = data[(k - id) mod p]
+    for k in 0..p {
+        let j = (k + p - id % p) % p;
+        out.extend_from_slice(&data[j * n..(j + 1) * n]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotate_down_identity_for_rank0() {
+        let data: Vec<u64> = (0..12).collect();
+        assert_eq!(rotate_down(&data, 3, 0), data);
+    }
+
+    #[test]
+    fn rotate_down_moves_blocks() {
+        // 3 blocks of 2, rank 1: rotated order is [b1, b2, b0]; rotating
+        // down by 1 restores [b0, b1, b2].
+        let rotated: Vec<u64> = vec![10, 11, 20, 21, 0, 1];
+        let out = rotate_down(&rotated, 2, 1);
+        assert_eq!(out, vec![0, 1, 10, 11, 20, 21]);
+    }
+
+    #[test]
+    fn rotate_down_wraps_modulo_p() {
+        let data: Vec<u64> = (0..8).collect(); // 4 blocks of 2
+        assert_eq!(rotate_down(&data, 2, 4), data); // id == p → identity
+        assert_eq!(rotate_down(&data, 2, 5), rotate_down(&data, 2, 1));
+    }
+}

@@ -1,0 +1,75 @@
+//! The "system MPI" baseline: size/shape-based algorithm selection.
+//!
+//! Reimplements the selection logic of MPICH/MVAPICH2 (Thakur et al. [19]),
+//! which is what the paper's black dotted "MPI" lines measure:
+//!
+//! * total gathered size < 80 KiB and power-of-two ranks → recursive doubling;
+//! * total gathered size < 80 KiB and non-power-of-two → Bruck;
+//! * otherwise → ring.
+
+use super::{bruck, recursive_doubling, ring};
+use crate::comm::{Comm, Pod};
+use crate::error::Result;
+
+/// MPICH's `MPIR_CVAR_ALLGATHER_LONG_MSG_SIZE` default (bytes).
+pub const LONG_MSG_SIZE: usize = 81920;
+
+/// Which algorithm the dispatcher would choose for `p` ranks of `n`
+/// elements of `elem_size` bytes.
+pub fn select(p: usize, n: usize, elem_size: usize) -> super::Algorithm {
+    let total = p * n * elem_size;
+    if total < LONG_MSG_SIZE {
+        if p.is_power_of_two() {
+            super::Algorithm::RecursiveDoubling
+        } else {
+            super::Algorithm::Bruck
+        }
+    } else {
+        super::Algorithm::Ring
+    }
+}
+
+/// System-default allgather: select and run.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    match select(comm.size(), local.len(), std::mem::size_of::<T>()) {
+        super::Algorithm::RecursiveDoubling => recursive_doubling::allgather(comm, local),
+        super::Algorithm::Bruck => bruck::allgather(comm, local),
+        _ => ring::allgather(comm, local),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Algorithm;
+
+    #[test]
+    fn selection_matches_mpich_rules() {
+        // small, power of two
+        assert_eq!(select(16, 2, 4), Algorithm::RecursiveDoubling);
+        // small, non power of two
+        assert_eq!(select(12, 2, 4), Algorithm::Bruck);
+        // large
+        assert_eq!(select(16, 4096, 8), Algorithm::Ring);
+        // boundary: exactly LONG_MSG_SIZE is "large"
+        assert_eq!(select(10, 1024, 8), Algorithm::Ring);
+    }
+
+    #[test]
+    fn dispatch_runs_selected_algorithm() {
+        use crate::collectives::{canonical_contribution, expected_result};
+        use crate::comm::{CommWorld, Timing};
+        use crate::topology::Topology;
+        // small power-of-two and non-power-of-two both produce correct output
+        for (regions, ppr) in [(2usize, 2usize), (3, 2)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                allgather(c, &canonical_contribution(c.rank(), 2)).unwrap()
+            });
+            for r in &run.results {
+                assert_eq!(r, &expected_result(p, 2));
+            }
+        }
+    }
+}

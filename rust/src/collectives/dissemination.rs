@@ -1,0 +1,117 @@
+//! Dissemination allgather (§2, ref. [1]).
+//!
+//! `⌈log2(p)⌉` steps for *any* `p`: at step `i` rank `id` sends everything
+//! it currently holds to `id + 2^i (mod p)` and receives from
+//! `id − 2^i (mod p)`. Like Bruck it needs no power-of-two size; unlike
+//! Bruck the received data is merged by absolute block index (each block
+//! tagged by origin), so duplicate coverage near the end of non-power
+//! cases is handled by overwriting with identical data.
+//!
+//! This implementation transmits `(origin, block)` pairs encoded in the
+//! element stream, which costs one `u64` header per block — the classic
+//! trade-off that makes Bruck (which needs no headers, only a final
+//! rotation) the preferred log-step algorithm (§2).
+
+use crate::comm::{to_bytes, Comm, Pod};
+use crate::error::{Error, Result};
+
+/// Dissemination allgather of `local` (length `n`); returns `n·p` elements
+/// in rank order.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let p = comm.size();
+    let id = comm.rank();
+    let n = local.len();
+    let tag = comm.next_coll_tag();
+
+    let mut out = vec![T::default(); n * p];
+    out[id * n..(id + 1) * n].copy_from_slice(local);
+    let mut have: Vec<bool> = (0..p).map(|r| r == id).collect();
+
+    let mut dist = 1usize;
+    let mut step = 0u64;
+    while dist < p {
+        let dst = (id + dist) % p;
+        let src = (id + p - dist) % p;
+        let payload = pack_blocks(&out, &have, n);
+        // Raw byte send: payload is already a byte vector.
+        let _req = comm.isend(&payload, dst, tag + step)?;
+        let bytes: Vec<u8> = comm.irecv(src, tag + step).wait(comm)?;
+        unpack_blocks(&bytes, &mut out, &mut have, n)?;
+        dist <<= 1;
+        step += 1;
+    }
+    Ok(out)
+}
+
+/// Encode all held blocks as `[origin: u64 | block bytes]*`.
+fn pack_blocks<T: Pod>(out: &[T], have: &[bool], n: usize) -> Vec<u8> {
+    let esz = std::mem::size_of::<T>();
+    let count = have.iter().filter(|&&h| h).count();
+    let mut buf = Vec::with_capacity(count * (8 + n * esz));
+    for (r, &h) in have.iter().enumerate() {
+        if !h {
+            continue;
+        }
+        buf.extend_from_slice(&(r as u64).to_le_bytes());
+        buf.extend_from_slice(&to_bytes(&out[r * n..(r + 1) * n]));
+    }
+    buf
+}
+
+/// Decode `[origin | block]*` into the output array, marking coverage.
+fn unpack_blocks<T: Pod>(
+    bytes: &[u8],
+    out: &mut [T],
+    have: &mut [bool],
+    n: usize,
+) -> Result<()> {
+    let esz = std::mem::size_of::<T>();
+    let rec = 8 + n * esz;
+    if rec == 8 || bytes.len() % rec != 0 {
+        return Err(Error::DatatypeMismatch { bytes: bytes.len(), elem_size: rec.max(1) });
+    }
+    for chunk in bytes.chunks_exact(rec) {
+        let origin = u64::from_le_bytes(chunk[0..8].try_into().expect("8-byte header")) as usize;
+        if origin >= have.len() {
+            return Err(Error::Precondition(format!(
+                "dissemination header references rank {origin} outside communicator"
+            )));
+        }
+        let dst = &mut out[origin * n..(origin + 1) * n];
+        if !crate::comm::copy_into(&chunk[8..], dst) {
+            return Err(Error::SizeMismatch { expected: n * esz, got: chunk.len() - 8 });
+        }
+        have[origin] = true;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let n = 2;
+        let out: Vec<u64> = vec![1, 2, 0, 0, 5, 6];
+        let have = vec![true, false, true];
+        let bytes = pack_blocks(&out, &have, n);
+        let mut out2 = vec![0u64; 6];
+        let mut have2 = vec![false; 3];
+        unpack_blocks(&bytes, &mut out2, &mut have2, n).unwrap();
+        assert_eq!(out2, vec![1, 2, 0, 0, 5, 6]);
+        assert_eq!(have2, vec![true, false, true]);
+    }
+
+    #[test]
+    fn unpack_rejects_garbage() {
+        let mut out = vec![0u64; 4];
+        let mut have = vec![false; 2];
+        assert!(unpack_blocks(&[1, 2, 3], &mut out, &mut have, 2).is_err());
+        // valid record shape but origin out of range
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&9u64.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 16]);
+        assert!(unpack_blocks(&bad, &mut out, &mut have, 2).is_err());
+    }
+}

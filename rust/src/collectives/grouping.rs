@@ -1,0 +1,148 @@
+//! Grouping of communicator ranks by topology attributes.
+//!
+//! The locality-aware algorithms operate on *groups* of communicator ranks
+//! (regions, nodes, sockets). Groups are computed from the globally-known
+//! topology — no communication — and are therefore identical on every
+//! member, mirroring what `MPI_Comm_split` would produce.
+
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+
+/// The attribute to group by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupBy {
+    /// The topology's configured region (node on Quartz, socket on Lassen).
+    Region,
+    /// Physical node (outer level of the multilevel algorithm).
+    Node,
+    /// Physical socket (inner level of the multilevel algorithm).
+    Socket,
+}
+
+/// Result of grouping a communicator's ranks.
+#[derive(Debug, Clone)]
+pub struct Groups {
+    /// Each group's member list, in communicator ranks, each sorted
+    /// ascending; groups ordered by their smallest member.
+    pub members: Vec<Vec<usize>>,
+    /// Group index of the calling rank.
+    pub mine: usize,
+    /// The caller's position within its group.
+    pub my_local: usize,
+}
+
+impl Groups {
+    /// Group size if uniform across groups.
+    pub fn uniform_size(&self) -> Option<usize> {
+        let first = self.members.first()?.len();
+        self.members
+            .iter()
+            .all(|g| g.len() == first)
+            .then_some(first)
+    }
+
+    /// Number of groups.
+    pub fn count(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Group the ranks of `comm` by the chosen attribute.
+pub fn group_ranks(comm: &Comm, by: GroupBy) -> Result<Groups> {
+    let topo = comm.topology();
+    let key = |world: usize| -> usize {
+        match by {
+            GroupBy::Region => topo.region_of(world),
+            GroupBy::Node => topo.coord(world).node,
+            GroupBy::Socket => {
+                let c = topo.coord(world);
+                c.node * topo.sockets_per_node() + c.socket
+            }
+        }
+    };
+    // collect (key, comm_rank), group by key
+    let mut buckets: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for r in 0..comm.size() {
+        buckets.entry(key(comm.world_rank_of(r))).or_default().push(r);
+    }
+    // order groups by smallest member for stability under any placement
+    let mut members: Vec<Vec<usize>> = buckets.into_values().collect();
+    members.sort_by_key(|g| g[0]);
+    let me = comm.rank();
+    let mine = members
+        .iter()
+        .position(|g| g.contains(&me))
+        .ok_or_else(|| Error::Precondition("caller not in any group".into()))?;
+    let my_local = members[mine]
+        .iter()
+        .position(|&r| r == me)
+        .expect("member list contains caller");
+    Ok(Groups { members, mine, my_local })
+}
+
+/// Require a uniform group size, erroring with a descriptive message.
+pub fn require_uniform(groups: &Groups, algo: &str) -> Result<usize> {
+    groups.uniform_size().ok_or_else(|| {
+        Error::Precondition(format!(
+            "{algo} requires equal-size groups; got sizes {:?}",
+            groups.members.iter().map(|g| g.len()).collect::<Vec<_>>()
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::{Placement, RegionKind, Topology};
+
+    #[test]
+    fn groups_by_region_block_placement() {
+        let topo = Topology::regions(3, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let g = group_ranks(c, GroupBy::Region).unwrap();
+            (g.count(), g.mine, g.my_local, g.uniform_size())
+        });
+        assert_eq!(run.results[0], (3, 0, 0, Some(2)));
+        assert_eq!(run.results[3], (3, 1, 1, Some(2)));
+        assert_eq!(run.results[4], (3, 2, 0, Some(2)));
+    }
+
+    #[test]
+    fn groups_by_socket_vs_node() {
+        let topo =
+            Topology::machine(2, 2, 2, RegionKind::Node, Placement::Block).unwrap();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let n = group_ranks(c, GroupBy::Node).unwrap().count();
+            let s = group_ranks(c, GroupBy::Socket).unwrap().count();
+            (n, s)
+        });
+        assert!(run.results.iter().all(|&x| x == (2, 4)));
+    }
+
+    #[test]
+    fn grouping_consistent_under_random_placement() {
+        let topo = Topology::machine(
+            2,
+            1,
+            4,
+            RegionKind::Node,
+            Placement::Random { seed: 3 },
+        )
+        .unwrap();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            group_ranks(c, GroupBy::Region).unwrap().members
+        });
+        // every rank computes the identical group structure
+        for r in &run.results {
+            assert_eq!(r, &run.results[0]);
+        }
+        // and each group holds 4 ranks of one region
+        let topo2 = topo.clone();
+        for g in &run.results[0] {
+            assert_eq!(g.len(), 4);
+            let region = topo2.region_of(g[0]);
+            assert!(g.iter().all(|&x| topo2.region_of(x) == region));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Hierarchical allgather (related work, Träff '06 [20]).
+//!
+//! Three phases: (1) gather all region data to a per-region *master*
+//! process; (2) Bruck allgather among the masters; (3) broadcast the full
+//! array from each master to its region. Avoids injection-bandwidth
+//! bottlenecks but leaves most ranks idle and still sends `log2(r)`
+//! non-local messages of up to `b` bytes from every master (§2.2).
+
+use super::grouping::{group_ranks, require_uniform, GroupBy, Groups};
+use super::{bruck, primitives};
+use crate::comm::{Comm, Pod};
+use crate::error::Result;
+
+/// Hierarchical allgather of `local` (length `n`); returns `n·p` elements
+/// in communicator rank order.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let groups = group_ranks(comm, GroupBy::Region)?;
+    require_uniform(&groups, "hierarchical allgather")?;
+    allgather_grouped(comm, local, &groups)
+}
+
+/// Hierarchical allgather over explicit groups (exposed for tests and the
+/// multilevel composition).
+pub fn allgather_grouped<T: Pod>(comm: &Comm, local: &[T], groups: &Groups) -> Result<Vec<T>> {
+    let n = local.len();
+    let p = comm.size();
+    let local_comm = comm.sub(&groups.members[groups.mine])?;
+
+    // Phase 1: gather region data on the master (local rank 0).
+    let gathered = primitives::gather(&local_comm, local, 0)?;
+
+    // Phase 2: Bruck among masters. Masters are local rank 0 of each group.
+    let master_ranks: Vec<usize> = groups.members.iter().map(|g| g[0]).collect();
+    let is_master = groups.my_local == 0;
+    let mut full_grouped: Option<Vec<T>> = None;
+    if is_master {
+        let masters = comm.sub(&master_ranks)?;
+        let mine = gathered.expect("master holds gathered data");
+        full_grouped = Some(bruck::allgather(&masters, &mine)?);
+    }
+
+    // Phase 3: broadcast the group-ordered array inside each region.
+    let full_grouped = primitives::bcast(&local_comm, full_grouped, 0)?;
+    debug_assert_eq!(full_grouped.len(), n * p);
+
+    // The master-Bruck produced data ordered by (group, local rank); put it
+    // back into communicator rank order.
+    let mut out = vec![T::default(); n * p];
+    let mut pos = 0usize;
+    for g in &groups.members {
+        for &r in g {
+            out[r * n..(r + 1) * n].copy_from_slice(&full_grouped[pos..pos + n]);
+            pos += n;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{canonical_contribution, expected_result};
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::{Placement, RegionKind, Topology};
+
+    #[test]
+    fn correct_on_example_2_1() {
+        let topo = Topology::regions(4, 4);
+        let expect = expected_result(16, 1);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), 1)).unwrap()
+        });
+        for r in run.results {
+            assert_eq!(r, expect);
+        }
+    }
+
+    #[test]
+    fn correct_under_random_placement() {
+        let topo = Topology::machine(
+            4,
+            1,
+            4,
+            RegionKind::Node,
+            Placement::Random { seed: 17 },
+        )
+        .unwrap();
+        let expect = expected_result(16, 3);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), 3)).unwrap()
+        });
+        for r in run.results {
+            assert_eq!(r, expect);
+        }
+    }
+
+    #[test]
+    fn only_masters_send_nonlocal() {
+        let topo = Topology::regions(4, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &[c.rank() as u64]).unwrap();
+        });
+        for (rank, t) in run.trace.per_rank.iter().enumerate() {
+            if rank % 4 == 0 {
+                // master: log2(4) = 2 non-local sends in the masters' bruck
+                assert_eq!(t.nonlocal_msgs, 2, "master {rank}");
+            } else {
+                assert_eq!(t.nonlocal_msgs, 0, "worker {rank}");
+            }
+        }
+    }
+}

@@ -1,0 +1,453 @@
+//! **The locality-aware Bruck allgather — paper Algorithm 2.**
+//!
+//! Phases:
+//!
+//! 1. *Local allgather*: every region gathers its own data with a Bruck
+//!    allgather on the region communicator.
+//! 2. `⌈log_pℓ(r)⌉` *non-local steps*: before step `i` every rank holds the
+//!    data of a contiguous group of `w = pℓ^i` regions starting at its own
+//!    region `g` (`[g, g+w) mod r`). At step `i`, local rank `ℓ ≥ 1` sends
+//!    the whole held group to the rank with the same local index in region
+//!    `g − ℓ·w` and receives the group `[g + ℓ·w, g + (ℓ+1)·w)` from region
+//!    `g + ℓ·w`; **local rank 0 stays idle**, preserving power-of-pℓ
+//!    exchanges (§3). Each step ends with a local allgather of the received
+//!    groups, growing the held window to `w·pℓ` regions.
+//!
+//! Every rank therefore sends at most `⌈log_pℓ(r)⌉` non-local messages and
+//! `≈ b/pℓ` non-local bytes — the paper's headline improvement over the
+//! `log2(p)` messages / `≈ b` bytes of standard Bruck.
+//!
+//! **Non-power region counts** (paper §3, Fig. 6): when `r` is not a power
+//! of `pℓ`, local ranks with `ℓ·w ≥ r` idle through the step and contribute
+//! nothing to the following local gather, which becomes an *allgatherv*;
+//! the final received group may wrap past region `r − 1` and re-cover
+//! already-held regions (the paper's “regions 13 through 15 as well as
+//! region 0”), which the absolute-indexed assembly absorbs.
+//!
+//! **Multilevel hierarchy** (§3): [`allgather_multilevel`] groups by *node*
+//! at the outer level and replaces the inner Bruck calls with a
+//! socket-aware locality-aware Bruck, exactly as the paper prescribes.
+//!
+//! **Placement independence** (§3): all group structure is derived from
+//! the topology, not from rank numbering, so non-local message counts are
+//! identical under block, round-robin or random placement — asserted in
+//! `rust/tests/locality_counts.rs`.
+
+use super::grouping::{group_ranks, require_uniform, GroupBy, Groups};
+use super::{bruck, primitives};
+use crate::comm::{Comm, Pod};
+use crate::error::{Error, Result};
+
+/// Which allgather runs inside regions.
+#[derive(Debug, Clone, Copy)]
+enum Inner {
+    /// Plain Bruck (single-level Algorithm 2).
+    Bruck,
+    /// Socket-aware locality-aware Bruck (two-level Algorithm 2).
+    SocketAware,
+}
+
+/// How local rank 0's redundant contribution is handled in the post-step
+/// local gathers (paper §3 gives both options).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rank0 {
+    /// "this process will contribute the original data for simplicity" —
+    /// uniform counts, plain Bruck local gathers (the paper's default).
+    Contributes,
+    /// "Alternatively, an MPI_Allgatherv operation could be utilized with
+    /// the first local process contributing no data" — saves `w·pℓ·n`
+    /// local bytes per step at the cost of allgatherv bookkeeping.
+    GathervSkips,
+}
+
+/// Locality-aware Bruck allgather of `local` (length `n`); returns `n·p`
+/// elements in communicator rank order. Regions are the topology's
+/// configured region kind.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let groups = group_ranks(comm, GroupBy::Region)?;
+    loc_allgather(comm, local, &groups, Inner::Bruck, Rank0::Contributes)
+}
+
+/// The allgatherv variant (paper §3's alternative; see [`Rank0`]).
+pub fn allgather_v<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let groups = group_ranks(comm, GroupBy::Region)?;
+    loc_allgather(comm, local, &groups, Inner::Bruck, Rank0::GathervSkips)
+}
+
+/// Two-level locality-aware Bruck: node-aware outer algorithm whose local
+/// gathers are themselves socket-aware locality-aware Brucks.
+pub fn allgather_multilevel<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let groups = group_ranks(comm, GroupBy::Node)?;
+    loc_allgather(comm, local, &groups, Inner::SocketAware, Rank0::Contributes)
+}
+
+/// Run the configured inner allgather on a (local) communicator.
+fn inner_allgather<T: Pod>(comm: &Comm, local: &[T], inner: Inner) -> Result<Vec<T>> {
+    match inner {
+        Inner::Bruck => bruck::allgather(comm, local),
+        Inner::SocketAware => {
+            let groups = group_ranks(comm, GroupBy::Socket)?;
+            if groups.count() == 1 {
+                // single socket: plain Bruck is the whole story
+                bruck::allgather(comm, local)
+            } else {
+                loc_allgather(comm, local, &groups, Inner::Bruck, Rank0::Contributes)
+            }
+        }
+    }
+}
+
+/// The generic Algorithm 2 over explicit groups.
+fn loc_allgather<T: Pod>(
+    comm: &Comm,
+    local: &[T],
+    groups: &Groups,
+    inner: Inner,
+    rank0: Rank0,
+) -> Result<Vec<T>> {
+    let n = local.len();
+    let p = comm.size();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let r_n = groups.count();
+    let ppr = require_uniform(groups, "locality-aware bruck")?;
+    if ppr == 1 {
+        // One rank per region: no locality to exploit; Algorithm 2's
+        // non-local phase would make no progress (only local rank 0 exists
+        // and it idles). Degrade to the standard Bruck.
+        return bruck::allgather(comm, local);
+    }
+    let g = groups.mine;
+    let l = groups.my_local;
+    let local_comm = comm.sub(&groups.members[g])?;
+    let region_elems = ppr * n;
+
+    // Region-major working buffer: region ri's data (in local-rank order)
+    // lives at buf[ri*region_elems..]. Assembly is by absolute region
+    // index, which makes wrap-around duplicates benign.
+    let mut buf = vec![T::default(); r_n * region_elems];
+
+    // Phase 1: local allgather of the initial blocks.
+    let mine_region = inner_allgather(&local_comm, local, inner)?;
+    debug_assert_eq!(mine_region.len(), region_elems);
+    buf[g * region_elems..(g + 1) * region_elems].copy_from_slice(&mine_region);
+
+    // Non-local phase. Invariant: every rank of group `gi` holds exactly
+    // the regions [gi, gi+width) mod r_n.
+    let mut width = 1usize;
+    while width < r_n {
+        let tag = comm.next_coll_tag(); // bumped by ALL ranks to stay aligned
+        let active = |j: usize| j > 0 && j * width < r_n;
+
+        // -- exchange --------------------------------------------------
+        // The received group is NOT scattered into `buf` here: it flows to
+        // every local rank (including us) through the local gather below,
+        // which writes it once — avoiding a second full copy (perf pass).
+        let mut received: Vec<T> = Vec::new();
+        if active(l) {
+            let dist = (l * width) % r_n;
+            let dst_group = (g + r_n - dist) % r_n;
+            let src_group = (g + dist) % r_n;
+            let dst = groups.members[dst_group][l];
+            let src = groups.members[src_group][l];
+            let payload = collect_ring(&buf, g, width, r_n, region_elems);
+            let _req = comm.isend(&payload, dst, tag)?;
+            received = comm.irecv(src, tag).wait(comm)?;
+            if received.len() != width * region_elems {
+                return Err(Error::SizeMismatch {
+                    expected: width * region_elems,
+                    got: received.len(),
+                });
+            }
+        }
+
+        // -- local allgather of the received groups ---------------------
+        // Contribution convention: local rank j contributes the group
+        // starting at region (g + j*width) — rank 0 re-contributes the
+        // currently-held group (the paper's "contribute the original data
+        // for simplicity"); inactive ranks contribute nothing.
+        let rank0_contributes = rank0 == Rank0::Contributes;
+        let counts: Vec<usize> = (0..ppr)
+            .map(|j| {
+                if (j == 0 && rank0_contributes) || active(j) {
+                    width * region_elems
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let my_contrib: Vec<T> = if l == 0 {
+            if rank0_contributes {
+                collect_ring(&buf, g, width, r_n, region_elems)
+            } else {
+                Vec::new()
+            }
+        } else {
+            received // moved, not cloned (perf pass)
+        };
+
+        let uniform = counts.iter().all(|&c| c == counts[0]);
+        let gathered: Vec<T> = if uniform {
+            // power-of-pℓ step: equal counts — use the configured inner
+            // allgather (paper: "replacing all calls to bruck")
+            inner_allgather(&local_comm, &my_contrib, inner)?
+        } else {
+            // non-power step: some ranks idle → allgatherv (§3)
+            primitives::allgatherv(&local_comm, &my_contrib, &counts)?
+        };
+
+        // Scatter the gathered groups by absolute region index.
+        let mut off = 0usize;
+        for (j, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let start = (g + j * width) % r_n;
+            scatter_ring(&mut buf, start, width, r_n, region_elems, &gathered[off..off + c]);
+            off += c;
+        }
+        debug_assert_eq!(off, gathered.len());
+
+        width = width.saturating_mul(ppr);
+    }
+
+    // Permute the region-major buffer into communicator rank order.
+    let mut out = vec![T::default(); p * n];
+    for (gi, members) in groups.members.iter().enumerate() {
+        for (j, &rank) in members.iter().enumerate() {
+            let src = gi * region_elems + j * n;
+            out[rank * n..(rank + 1) * n].copy_from_slice(&buf[src..src + n]);
+        }
+    }
+    Ok(out)
+}
+
+/// Copy regions `[start, start+width) mod r_n` out of the region-major
+/// buffer, in ring order.
+fn collect_ring<T: Pod>(
+    buf: &[T],
+    start: usize,
+    width: usize,
+    r_n: usize,
+    region_elems: usize,
+) -> Vec<T> {
+    let mut out = Vec::with_capacity(width * region_elems);
+    for k in 0..width {
+        let ri = (start + k) % r_n;
+        out.extend_from_slice(&buf[ri * region_elems..(ri + 1) * region_elems]);
+    }
+    out
+}
+
+/// Inverse of [`collect_ring`]: write `data` into regions
+/// `[start, start+width) mod r_n`. Overlapping (wrap-duplicate) regions
+/// receive identical data by construction.
+fn scatter_ring<T: Pod>(
+    buf: &mut [T],
+    start: usize,
+    width: usize,
+    r_n: usize,
+    region_elems: usize,
+    data: &[T],
+) {
+    debug_assert_eq!(data.len(), width * region_elems);
+    for k in 0..width {
+        let ri = (start + k) % r_n;
+        buf[ri * region_elems..(ri + 1) * region_elems]
+            .copy_from_slice(&data[k * region_elems..(k + 1) * region_elems]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{canonical_contribution, expected_result};
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::{Placement, RegionKind, Topology};
+
+    fn check(topo: &Topology, n: usize) {
+        let expect = expected_result(topo.size(), n);
+        let run = CommWorld::run(topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), n)).unwrap()
+        });
+        for (rank, r) in run.results.iter().enumerate() {
+            assert_eq!(r, &expect, "rank {rank} mismatch");
+        }
+    }
+
+    #[test]
+    fn example_2_1_correct_and_single_nonlocal_message() {
+        let topo = Topology::regions(4, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &[c.rank() as u64, 1000 + c.rank() as u64]).unwrap()
+        });
+        let expect = {
+            let mut e = Vec::new();
+            for r in 0..16u64 {
+                e.push(r);
+                e.push(1000 + r);
+            }
+            e
+        };
+        for r in &run.results {
+            assert_eq!(r, &expect);
+        }
+        // Paper: each process communicates only a single non-local message
+        // (vs 4 for standard Bruck) ...
+        assert_eq!(run.trace.max_nonlocal_msgs(), 1);
+        // ... and only 4 values (8 bytes here: 2 u64 × 4 regions... the
+        // paper's count is 4 values of the 16; with 2 u64 per rank the
+        // non-local payload is one region group = 4 ranks × 2 u64 = 64 B.
+        assert_eq!(run.trace.max_nonlocal_bytes(), 4 * 2 * 8);
+    }
+
+    #[test]
+    fn fig6_64_procs_16_regions_two_nonlocal_steps() {
+        let topo = Topology::regions(16, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), 1)).unwrap()
+        });
+        let expect = expected_result(64, 1);
+        for r in &run.results {
+            assert_eq!(r, &expect);
+        }
+        assert_eq!(run.trace.max_nonlocal_msgs(), 2); // ⌈log_4(16)⌉
+    }
+
+    #[test]
+    fn correct_across_shapes() {
+        check(&Topology::regions(2, 2), 1);
+        check(&Topology::regions(4, 2), 3);
+        check(&Topology::regions(8, 8), 2);
+        check(&Topology::regions(16, 4), 1);
+    }
+
+    #[test]
+    fn correct_non_power_region_counts() {
+        // r not a power of ppr: 6 regions of 4, 5 regions of 2, 3 of 8.
+        check(&Topology::regions(6, 4), 2);
+        check(&Topology::regions(5, 2), 1);
+        check(&Topology::regions(3, 8), 2);
+        check(&Topology::regions(7, 4), 1);
+    }
+
+    #[test]
+    fn single_region_degenerates_to_local_bruck() {
+        let topo = Topology::regions(1, 8);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), 2)).unwrap()
+        });
+        for r in &run.results {
+            assert_eq!(r, &expected_result(8, 2));
+        }
+        assert_eq!(run.trace.max_nonlocal_msgs(), 0);
+    }
+
+    #[test]
+    fn one_rank_per_region_falls_back_to_bruck() {
+        let topo = Topology::regions(8, 1);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), 1)).unwrap()
+        });
+        for r in &run.results {
+            assert_eq!(r, &expected_result(8, 1));
+        }
+    }
+
+    #[test]
+    fn empty_contribution_is_empty() {
+        let topo = Topology::regions(2, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather::<u64>(c, &[]).unwrap()
+        });
+        for r in &run.results {
+            assert!(r.is_empty());
+        }
+    }
+
+    #[test]
+    fn multilevel_correct_on_two_socket_nodes() {
+        let topo =
+            Topology::machine(4, 2, 2, RegionKind::Node, Placement::Block).unwrap();
+        let expect = expected_result(16, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather_multilevel(c, &canonical_contribution(c.rank(), 2)).unwrap()
+        });
+        for r in &run.results {
+            assert_eq!(r, &expect);
+        }
+    }
+
+    #[test]
+    fn multilevel_single_socket_equals_single_level() {
+        let topo = Topology::regions(4, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather_multilevel(c, &canonical_contribution(c.rank(), 1)).unwrap()
+        });
+        for r in &run.results {
+            assert_eq!(r, &expected_result(16, 1));
+        }
+    }
+
+    #[test]
+    fn rank0_of_each_region_sends_nothing_nonlocal() {
+        let topo = Topology::regions(8, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &[c.rank() as u64]).unwrap();
+        });
+        for (rank, t) in run.trace.per_rank.iter().enumerate() {
+            if rank % 4 == 0 {
+                assert_eq!(t.nonlocal_msgs, 0, "local rank 0 must idle (rank {rank})");
+            }
+        }
+    }
+
+    #[test]
+    fn correct_under_random_placement() {
+        let topo = Topology::machine(
+            4,
+            1,
+            4,
+            RegionKind::Node,
+            Placement::Random { seed: 23 },
+        )
+        .unwrap();
+        check(&topo, 2);
+    }
+
+    #[test]
+    fn allgatherv_variant_correct_across_shapes() {
+        for (regions, ppr) in [(4usize, 4usize), (16, 4), (6, 4), (5, 2), (1, 8), (8, 1)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                allgather_v(c, &canonical_contribution(c.rank(), 2)).unwrap()
+            });
+            for (rank, r) in run.results.iter().enumerate() {
+                assert_eq!(r, &expected_result(p, 2), "{regions}x{ppr} rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn allgatherv_variant_moves_fewer_local_bytes() {
+        // The §3 alternative saves exactly rank 0's duplicate contribution
+        // in every post-step local gather.
+        let topo = Topology::regions(16, 4);
+        let std = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &[c.rank() as u64]).unwrap();
+        });
+        let v = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather_v(c, &[c.rank() as u64]).unwrap();
+        });
+        let std_local: u64 = std.trace.per_rank.iter().map(|t| t.local_bytes).sum();
+        let v_local: u64 = v.trace.per_rank.iter().map(|t| t.local_bytes).sum();
+        assert!(v_local < std_local, "v {v_local} >= std {std_local}");
+        // non-local traffic identical
+        assert_eq!(
+            std.trace.total_nonlocal_bytes(),
+            v.trace.total_nonlocal_bytes()
+        );
+    }
+}

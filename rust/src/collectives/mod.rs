@@ -1,0 +1,189 @@
+//! Allgather algorithms — the paper's contribution and every baseline it
+//! compares against.
+//!
+//! All algorithms are written against [`crate::comm::Comm`] using the same
+//! `Isend`/`Irecv` structure as the paper's hand-written MPI implementations
+//! (§5). Every function has the same contract:
+//!
+//! * input: this rank's `n`-element contribution;
+//! * output: a `Vec<T>` of length `n · p` holding every rank's contribution
+//!   **in communicator rank order** (`out[r*n..(r+1)*n]` is rank `r`'s data).
+//!
+//! Implemented algorithms:
+//!
+//! | module | algorithm | paper role |
+//! |---|---|---|
+//! | [`bruck`] | Bruck allgather (Alg. 1) | standard small-message baseline |
+//! | [`ring`] | ring allgather | large-message baseline (§2) |
+//! | [`recursive_doubling`] | recursive doubling | background §2 |
+//! | [`dissemination`] | dissemination allgather | background §2 |
+//! | [`hierarchical`] | master-per-region gather + Bruck + bcast (Träff '06) | related-work baseline |
+//! | [`multilane`] | per-lane inter-region Bruck + local allgather (Träff & Hunold '20) | related-work baseline |
+//! | [`loc_bruck`] | **locality-aware Bruck (Alg. 2)**, incl. multilevel and non-power region counts | the contribution |
+//! | [`dispatch`] | size/shape-based selection (Thakur et al.) | "system MPI" baseline |
+//! | [`primitives`] | gather / bcast / allgatherv building blocks | substrate |
+//! | [`allreduce`] | locality-aware allreduce | §6 future-work extension |
+
+pub mod allreduce;
+pub mod alltoall;
+pub mod bruck;
+pub mod dispatch;
+pub mod dissemination;
+pub mod grouping;
+pub mod hierarchical;
+pub mod loc_bruck;
+pub mod multilane;
+pub mod primitives;
+pub mod recursive_doubling;
+pub mod ring;
+
+use crate::comm::{Comm, Pod};
+use crate::error::Result;
+
+/// Which allgather implementation to run (CLI / harness selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Standard Bruck (paper Algorithm 1).
+    Bruck,
+    /// Ring allgather.
+    Ring,
+    /// Recursive doubling (power-of-two sizes).
+    RecursiveDoubling,
+    /// Dissemination allgather.
+    Dissemination,
+    /// Hierarchical: gather → master Bruck → broadcast.
+    Hierarchical,
+    /// Multi-lane: per-lane inter-region Bruck, then local allgather.
+    Multilane,
+    /// Locality-aware Bruck (paper Algorithm 2).
+    LocalityBruck,
+    /// Algorithm 2 with the paper's allgatherv alternative (local rank 0
+    /// contributes nothing to the post-step local gathers).
+    LocalityBruckV,
+    /// Two-level locality-aware Bruck (node-aware outer, socket-aware inner).
+    LocalityBruckMultilevel,
+    /// System-MPI style auto-selection.
+    SystemDefault,
+}
+
+impl Algorithm {
+    /// All algorithms, in the order the figures report them.
+    pub const ALL: [Algorithm; 10] = [
+        Algorithm::SystemDefault,
+        Algorithm::Bruck,
+        Algorithm::Ring,
+        Algorithm::RecursiveDoubling,
+        Algorithm::Dissemination,
+        Algorithm::Hierarchical,
+        Algorithm::Multilane,
+        Algorithm::LocalityBruck,
+        Algorithm::LocalityBruckV,
+        Algorithm::LocalityBruckMultilevel,
+    ];
+
+    /// CLI / CSV name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Bruck => "bruck",
+            Algorithm::Ring => "ring",
+            Algorithm::RecursiveDoubling => "recursive-doubling",
+            Algorithm::Dissemination => "dissemination",
+            Algorithm::Hierarchical => "hierarchical",
+            Algorithm::Multilane => "multilane",
+            Algorithm::LocalityBruck => "loc-bruck",
+            Algorithm::LocalityBruckV => "loc-bruck-v",
+            Algorithm::LocalityBruckMultilevel => "loc-bruck-2level",
+            Algorithm::SystemDefault => "system-default",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Algorithm::ALL.iter().copied().find(|a| a.name() == s)
+    }
+
+    /// True if the algorithm exploits region locality.
+    pub fn is_locality_aware(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::Hierarchical
+                | Algorithm::Multilane
+                | Algorithm::LocalityBruck
+                | Algorithm::LocalityBruckV
+                | Algorithm::LocalityBruckMultilevel
+        )
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Run the selected allgather on `comm`.
+///
+/// This is the library's front door: `examples/`, the sweep engine and the
+/// coordinator all go through it.
+pub fn allgather<T: Pod>(algo: Algorithm, comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    match algo {
+        Algorithm::Bruck => bruck::allgather(comm, local),
+        Algorithm::Ring => ring::allgather(comm, local),
+        Algorithm::RecursiveDoubling => recursive_doubling::allgather(comm, local),
+        Algorithm::Dissemination => dissemination::allgather(comm, local),
+        Algorithm::Hierarchical => hierarchical::allgather(comm, local),
+        Algorithm::Multilane => multilane::allgather(comm, local),
+        Algorithm::LocalityBruck => loc_bruck::allgather(comm, local),
+        Algorithm::LocalityBruckV => loc_bruck::allgather_v(comm, local),
+        Algorithm::LocalityBruckMultilevel => loc_bruck::allgather_multilevel(comm, local),
+        Algorithm::SystemDefault => dispatch::allgather(comm, local),
+    }
+}
+
+/// The expected allgather result for verification: every rank's canonical
+/// contribution concatenated in rank order. Used with
+/// [`canonical_contribution`] by tests and the sweep engine.
+pub fn expected_result(p: usize, n: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(p * n);
+    for r in 0..p {
+        out.extend(canonical_contribution(r, n));
+    }
+    out
+}
+
+/// A canonical per-rank contribution that makes misplaced blocks visible:
+/// element `j` of rank `r` is `r * 1_000_003 + j`.
+pub fn canonical_contribution(rank: usize, n: usize) -> Vec<u64> {
+    (0..n).map(|j| (rank * 1_000_003 + j) as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn locality_awareness_flags() {
+        assert!(Algorithm::LocalityBruck.is_locality_aware());
+        assert!(Algorithm::Hierarchical.is_locality_aware());
+        assert!(!Algorithm::Bruck.is_locality_aware());
+        assert!(!Algorithm::Ring.is_locality_aware());
+    }
+
+    #[test]
+    fn canonical_data_is_unique_across_ranks() {
+        let a = canonical_contribution(0, 4);
+        let b = canonical_contribution(1, 4);
+        assert!(a.iter().all(|x| !b.contains(x)));
+        let e = expected_result(3, 2);
+        assert_eq!(e.len(), 6);
+        assert_eq!(&e[2..4], &canonical_contribution(1, 2)[..]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Multi-lane allgather (related work, Träff & Hunold '20 [21]).
+//!
+//! Every rank participates in non-local communication: local rank `j`
+//! (lane `j`) of each region runs an inter-region Bruck allgather over its
+//! own `n` elements, so each lane carries `1/p_ℓ` of the region's data.
+//! All inter-region steps finish before a final intra-region allgather of
+//! the `r·n`-element lane results. Reduces non-local *bytes* per rank to
+//! `≈ b/p_ℓ` like the locality-aware Bruck, but still needs `log2(r)`
+//! non-local *messages* per rank (§2.2).
+
+use super::grouping::{group_ranks, require_uniform, GroupBy};
+use super::bruck;
+use crate::comm::{Comm, Pod};
+use crate::error::Result;
+
+/// The communicator ranks of lane `j`, sorted ascending (as `sub`
+/// requires), each paired with the group it represents.
+fn lane_order(groups: &super::grouping::Groups, j: usize) -> Vec<(usize, usize)> {
+    let mut pairs: Vec<(usize, usize)> = groups
+        .members
+        .iter()
+        .enumerate()
+        .map(|(gi, g)| (g[j], gi))
+        .collect();
+    pairs.sort_unstable();
+    pairs
+}
+
+/// Multi-lane allgather of `local` (length `n`); returns `n·p` elements in
+/// communicator rank order.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let groups = group_ranks(comm, GroupBy::Region)?;
+    let ppr = require_uniform(&groups, "multi-lane allgather")?;
+    let n = local.len();
+    let p = comm.size();
+    let r_n = groups.count();
+
+    // Phase 1 (non-local): Bruck over this rank's lane. Under arbitrary
+    // placement the lane's comm ranks need not be ascending by group, so
+    // sort for `sub` and remember which group each lane position carries.
+    let my_lane = lane_order(&groups, groups.my_local);
+    let lane_ranks: Vec<usize> = my_lane.iter().map(|&(r, _)| r).collect();
+    let lane = comm.sub(&lane_ranks)?;
+    let lane_result = bruck::allgather(&lane, local)?; // r_n blocks in lane order
+
+    // Phase 2 (local): allgather lane results within the region.
+    let local_comm = comm.sub(&groups.members[groups.mine])?;
+    let all_lanes = if ppr > 1 {
+        bruck::allgather(&local_comm, &lane_result)?
+    } else {
+        lane_result
+    };
+    debug_assert_eq!(all_lanes.len(), p * n);
+
+    // all_lanes layout: [local rank j][lane-j position k] -> contribution
+    // of the rank at lane_order(j)[k]. Scatter into communicator rank
+    // order using each lane's own ordering (global knowledge).
+    let mut out = vec![T::default(); p * n];
+    for j in 0..ppr {
+        let order = lane_order(&groups, j);
+        for (k, &(rank, _gi)) in order.iter().enumerate() {
+            let src = (j * r_n + k) * n;
+            let dst = rank * n;
+            out[dst..dst + n].copy_from_slice(&all_lanes[src..src + n]);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{canonical_contribution, expected_result};
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::{Placement, RegionKind, Topology};
+
+    #[test]
+    fn correct_on_example_2_1() {
+        let topo = Topology::regions(4, 4);
+        let expect = expected_result(16, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), 2)).unwrap()
+        });
+        for r in run.results {
+            assert_eq!(r, expect);
+        }
+    }
+
+    #[test]
+    fn every_rank_sends_log2_regions_nonlocal() {
+        let topo = Topology::regions(8, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &[c.rank() as u64]).unwrap();
+        });
+        for t in &run.trace.per_rank {
+            // log2(8 regions) = 3 non-local messages per rank
+            assert_eq!(t.nonlocal_msgs, 3);
+        }
+    }
+
+    #[test]
+    fn nonlocal_bytes_are_one_lane_share() {
+        let topo = Topology::regions(4, 4);
+        let n_bytes = 8u64; // one u64 per rank
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &[c.rank() as u64]).unwrap();
+        });
+        // bruck over 4 regions sends blocks of 1 then 2 elements = 3 * 8 B
+        for t in &run.trace.per_rank {
+            assert_eq!(t.nonlocal_bytes, 3 * n_bytes);
+        }
+    }
+
+    #[test]
+    fn correct_under_round_robin_placement() {
+        let topo =
+            Topology::machine(4, 1, 4, RegionKind::Node, Placement::RoundRobin).unwrap();
+        let expect = expected_result(16, 1);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &canonical_contribution(c.rank(), 1)).unwrap()
+        });
+        for r in run.results {
+            assert_eq!(r, expect);
+        }
+    }
+
+    #[test]
+    fn correct_under_random_placement() {
+        for seed in [5u64, 17, 99] {
+            let topo = Topology::machine(
+                4,
+                1,
+                4,
+                RegionKind::Node,
+                Placement::Random { seed },
+            )
+            .unwrap();
+            let expect = expected_result(16, 2);
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                allgather(c, &canonical_contribution(c.rank(), 2)).unwrap()
+            });
+            for r in run.results {
+                assert_eq!(r, expect, "seed {seed}");
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Collective building blocks: gather, broadcast and allgatherv.
+//!
+//! These are the substrates the related-work baselines are built from
+//! (hierarchical = gather + Bruck + bcast) and that the non-power region
+//! extension of the locality-aware Bruck needs (allgatherv for steps where
+//! some local ranks hold no new data — paper §3).
+
+use crate::comm::{Comm, Pod};
+use crate::error::{Error, Result};
+
+/// Flat gather of equal-size contributions to `root`. Returns the
+/// concatenated data (rank order) on the root, `None` elsewhere.
+///
+/// A flat (non-tree) gather is used deliberately: it matches the
+/// master-serialization behaviour the paper ascribes to hierarchical
+/// approaches ("the majority of processes per node sit idle", §2.2).
+pub fn gather<T: Pod>(comm: &Comm, local: &[T], root: usize) -> Result<Option<Vec<T>>> {
+    let p = comm.size();
+    let id = comm.rank();
+    let n = local.len();
+    let tag = comm.next_coll_tag();
+    if id == root {
+        let mut out = vec![T::default(); n * p];
+        out[root * n..(root + 1) * n].copy_from_slice(local);
+        for r in (0..p).filter(|&r| r != root) {
+            comm.recv_into(r, tag, &mut out[r * n..(r + 1) * n])?;
+        }
+        Ok(Some(out))
+    } else {
+        comm.send(local, root, tag)?;
+        Ok(None)
+    }
+}
+
+/// Binomial-tree broadcast from `root`; every rank returns the data.
+pub fn bcast<T: Pod>(comm: &Comm, data: Option<Vec<T>>, root: usize) -> Result<Vec<T>> {
+    let p = comm.size();
+    let id = comm.rank();
+    let tag = comm.next_coll_tag();
+    // Standard MPICH binomial tree in root-relative coordinates: receive
+    // once from the parent (the set bit found scanning up), then forward to
+    // children on every lower bit.
+    let vid = (id + p - root) % p;
+    let mut buf: Option<Vec<T>> = if vid == 0 {
+        Some(data.ok_or_else(|| Error::Precondition("bcast root has no data".into()))?)
+    } else {
+        None
+    };
+    let mut mask = 1usize;
+    while mask < p {
+        if vid & mask != 0 {
+            let parent = ((vid ^ mask) + root) % p;
+            buf = Some(comm.recv(parent, tag)?);
+            break;
+        }
+        mask <<= 1;
+    }
+    mask >>= 1;
+    while mask > 0 {
+        if vid + mask < p {
+            let dst = (vid + mask + root) % p;
+            comm.send(buf.as_ref().expect("holder has data"), dst, tag)?;
+        }
+        mask >>= 1;
+    }
+    buf.ok_or_else(|| Error::Precondition("bcast finished without data".into()))
+}
+
+/// Allgatherv via the Bruck structure: rank `r` contributes `counts[r]`
+/// elements; the result concatenates contributions in rank order. All
+/// ranks must pass identical `counts`.
+///
+/// Needed by the locality-aware Bruck when the region count is not a power
+/// of the region size: at the final non-local step a fraction of local
+/// ranks receive nothing and contribute empty blocks to the following
+/// local gather (paper §3).
+pub fn allgatherv<T: Pod>(comm: &Comm, local: &[T], counts: &[usize]) -> Result<Vec<T>> {
+    let p = comm.size();
+    let id = comm.rank();
+    if counts.len() != p {
+        return Err(Error::SizeMismatch { expected: p, got: counts.len() });
+    }
+    if counts[id] != local.len() {
+        return Err(Error::SizeMismatch { expected: counts[id], got: local.len() });
+    }
+    let tag = comm.next_coll_tag();
+
+    // Rotated working set: entry j is the contribution of rank (id+j)%p.
+    // Bruck steps exchange *prefixes of blocks*; with per-rank counts the
+    // byte sizes differ per rank but the schedule is identical.
+    let mut blocks: Vec<Vec<T>> = Vec::with_capacity(p);
+    blocks.push(local.to_vec());
+
+    let mut dist = 1usize;
+    let mut step = 0u64;
+    while dist < p {
+        let nblocks = dist.min(p - dist);
+        let send_to = (id + p - dist) % p;
+        let recv_from = (id + dist) % p;
+        // flatten the first nblocks blocks
+        let payload: Vec<T> = blocks[..nblocks].concat();
+        let _req = comm.isend(&payload, send_to, tag + step)?;
+        let got: Vec<T> = comm.irecv(recv_from, tag + step).wait(comm)?;
+        // split according to the counts of the origin ranks
+        let mut off = 0usize;
+        for j in 0..nblocks {
+            let origin = (recv_from + j) % p;
+            let c = counts[origin];
+            if off + c > got.len() {
+                return Err(Error::SizeMismatch { expected: off + c, got: got.len() });
+            }
+            blocks.push(got[off..off + c].to_vec());
+            off += c;
+        }
+        if off != got.len() {
+            return Err(Error::SizeMismatch { expected: off, got: got.len() });
+        }
+        dist <<= 1;
+        step += 1;
+    }
+    debug_assert_eq!(blocks.len(), p);
+
+    // Un-rotate: blocks[j] belongs to rank (id + j) % p.
+    let total: usize = counts.iter().sum();
+    let mut out = vec![T::default(); total];
+    let offsets: Vec<usize> = counts
+        .iter()
+        .scan(0usize, |acc, &c| {
+            let o = *acc;
+            *acc += c;
+            Some(o)
+        })
+        .collect();
+    for (j, block) in blocks.iter().enumerate() {
+        let r = (id + j) % p;
+        out[offsets[r]..offsets[r] + counts[r]].copy_from_slice(block);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    #[test]
+    fn gather_collects_in_rank_order() {
+        let topo = Topology::regions(1, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            gather(c, &[c.rank() as u64 * 10, c.rank() as u64 * 10 + 1], 2).unwrap()
+        });
+        assert!(run.results[0].is_none());
+        assert_eq!(
+            run.results[2].as_ref().unwrap(),
+            &vec![0, 1, 10, 11, 20, 21, 30, 31]
+        );
+    }
+
+    #[test]
+    fn bcast_from_every_root() {
+        for root in 0..5 {
+            let topo = Topology::regions(1, 5);
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                let data = (c.rank() == root).then(|| vec![99u64, root as u64]);
+                bcast(c, data, root).unwrap()
+            });
+            for r in run.results {
+                assert_eq!(r, vec![99, root as u64]);
+            }
+        }
+    }
+
+    #[test]
+    fn allgatherv_uneven_counts() {
+        let topo = Topology::regions(1, 4);
+        let counts = [3usize, 0, 2, 1];
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let id = c.rank();
+            let mine: Vec<u64> = (0..counts[id]).map(|j| (id * 100 + j) as u64).collect();
+            allgatherv(c, &mine, &counts).unwrap()
+        });
+        let expect: Vec<u64> = vec![0, 1, 2, 200, 201, 300];
+        for r in run.results {
+            assert_eq!(r, expect);
+        }
+    }
+
+    #[test]
+    fn allgatherv_equal_counts_matches_allgather_layout() {
+        let topo = Topology::regions(1, 3);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let id = c.rank() as u64;
+            allgatherv(c, &[id, id + 100], &[2, 2, 2]).unwrap()
+        });
+        for r in run.results {
+            assert_eq!(r, vec![0, 100, 1, 101, 2, 102]);
+        }
+    }
+
+    #[test]
+    fn allgatherv_validates_counts() {
+        let topo = Topology::regions(1, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let bad_len = allgatherv(c, &[1u64], &[1]).is_err(); // counts.len() != p
+            let bad_count = allgatherv(c, &[1u64], &[2, 1]).is_err(); // mine != counts[me]
+            bad_len && bad_count
+        });
+        assert!(run.results.iter().all(|&b| b));
+    }
+}

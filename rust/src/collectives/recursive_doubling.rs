@@ -1,0 +1,60 @@
+//! Recursive-doubling allgather (§2, ref. [1]).
+//!
+//! `log2(p)` steps for power-of-two `p`: at step `i` rank `id` exchanges
+//! its currently-held `2^i·n` elements with rank `id XOR 2^i`. Unlike
+//! Bruck, blocks stay in aligned order, so no final rotation is needed —
+//! but `p` must be a power of two (MPICH falls back to Bruck otherwise;
+//! see [`crate::collectives::dispatch`]).
+
+use crate::comm::{Comm, Pod};
+use crate::error::{Error, Result};
+
+/// Recursive-doubling allgather of `local` (length `n`); returns `n·p`
+/// elements in rank order. Errors on non-power-of-two communicators.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    let p = comm.size();
+    if !p.is_power_of_two() {
+        return Err(Error::Precondition(format!(
+            "recursive doubling requires power-of-two size, got {p}"
+        )));
+    }
+    let id = comm.rank();
+    let n = local.len();
+    let tag = comm.next_coll_tag();
+
+    let mut out = vec![T::default(); n * p];
+    out[id * n..(id + 1) * n].copy_from_slice(local);
+
+    let mut dist = 1usize;
+    let mut step = 0u64;
+    while dist < p {
+        let peer = id ^ dist;
+        // The aligned window of 'dist' blocks this rank currently owns.
+        let base = (id / dist) * dist;
+        let send = out[base * n..(base + dist) * n].to_vec();
+        let _req = comm.isend(&send, peer, tag + step)?;
+        let got: Vec<T> = comm.irecv(peer, tag + step).wait(comm)?;
+        debug_assert_eq!(got.len(), dist * n);
+        let peer_base = (peer / dist) * dist;
+        out[peer_base * n..(peer_base + dist) * n].copy_from_slice(&got);
+        dist <<= 1;
+        step += 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        let topo = Topology::regions(3, 1);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allgather(c, &[c.rank() as u64]).is_err()
+        });
+        assert!(run.results.iter().all(|&e| e));
+    }
+}

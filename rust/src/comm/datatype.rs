@@ -1,0 +1,121 @@
+//! Plain-old-data element types and byte conversion — the crate's analogue
+//! of MPI datatypes.
+//!
+//! The wire format of the mini-MPI is a byte vector; collectives are generic
+//! over any [`Pod`] element type. Conversion uses raw-pointer copies (the
+//! hot path of every collective), which is sound because `Pod` types have no
+//! padding, no invalid bit patterns and no drop glue.
+
+/// Marker for types that can be transmuted to/from bytes.
+///
+/// # Safety
+/// Implementors must be `Copy`, have no padding bytes, and accept any bit
+/// pattern as a valid value (all primitive integer/float types qualify).
+pub unsafe trait Pod: Copy + Send + Sync + Default + PartialEq + std::fmt::Debug + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for i16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+unsafe impl Pod for usize {}
+
+/// Serialize a slice of `Pod` elements into a fresh byte vector.
+pub fn to_bytes<T: Pod>(xs: &[T]) -> Vec<u8> {
+    let n = std::mem::size_of_val(xs);
+    let mut out = Vec::with_capacity(n);
+    // SAFETY: `T: Pod` has no padding; reading `n` bytes from the slice's
+    // base pointer is reading fully-initialized memory.
+    unsafe {
+        std::ptr::copy_nonoverlapping(xs.as_ptr() as *const u8, out.as_mut_ptr(), n);
+        out.set_len(n);
+    }
+    out
+}
+
+/// Deserialize bytes into a vector of `Pod` elements.
+///
+/// Returns `None` if `bytes.len()` is not a multiple of `size_of::<T>()`.
+pub fn from_bytes<T: Pod>(bytes: &[u8]) -> Option<Vec<T>> {
+    let esz = std::mem::size_of::<T>();
+    if esz == 0 || bytes.len() % esz != 0 {
+        return None;
+    }
+    let n = bytes.len() / esz;
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    // SAFETY: any bit pattern is a valid `T` (Pod contract); the source has
+    // exactly `n * esz` initialized bytes.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, n * esz);
+        out.set_len(n);
+    }
+    Some(out)
+}
+
+/// Copy bytes into an existing element slice (zero-allocation receive path).
+///
+/// Returns `false` (and copies nothing) on length mismatch.
+pub fn copy_into<T: Pod>(bytes: &[u8], dst: &mut [T]) -> bool {
+    if bytes.len() != std::mem::size_of_val(dst) {
+        return false;
+    }
+    // SAFETY: same as `from_bytes`, but into caller-provided storage.
+    unsafe {
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), dst.as_mut_ptr() as *mut u8, bytes.len());
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_u32() {
+        let xs: Vec<u32> = vec![0, 1, 0xDEAD_BEEF, u32::MAX];
+        let b = to_bytes(&xs);
+        assert_eq!(b.len(), 16);
+        let back: Vec<u32> = from_bytes(&b).unwrap();
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        let xs = vec![0.0f64, -1.5, f64::MAX, f64::MIN_POSITIVE];
+        let back: Vec<f64> = from_bytes(&to_bytes(&xs)).unwrap();
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let xs: Vec<u64> = vec![];
+        let b = to_bytes(&xs);
+        assert!(b.is_empty());
+        assert_eq!(from_bytes::<u64>(&b).unwrap(), xs);
+    }
+
+    #[test]
+    fn misaligned_length_rejected() {
+        let b = vec![1u8, 2, 3];
+        assert!(from_bytes::<u32>(&b).is_none());
+        assert!(from_bytes::<u16>(&b).is_none());
+        assert!(from_bytes::<u8>(&b).is_some());
+    }
+
+    #[test]
+    fn copy_into_checks_length() {
+        let xs: Vec<u32> = vec![7, 8, 9];
+        let b = to_bytes(&xs);
+        let mut dst = [0u32; 3];
+        assert!(copy_into(&b, &mut dst));
+        assert_eq!(dst, [7, 8, 9]);
+        let mut wrong = [0u32; 2];
+        assert!(!copy_into(&b, &mut wrong));
+        assert_eq!(wrong, [0, 0]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Tagged mailboxes — the matching engine of the mini-MPI.
+//!
+//! Every world rank owns one [`Mailbox`]. A send deposits a [`Message`]
+//! into the destination's mailbox; a receive blocks until a message
+//! matching `(context, source, tag)` is present and removes it. Messages
+//! between the same (source, context, tag) triple are matched in FIFO
+//! order, mirroring MPI's non-overtaking guarantee.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// One in-flight message.
+#[derive(Debug)]
+pub struct Message {
+    /// Sender's world rank.
+    pub src: usize,
+    /// Communicator context id (distinguishes split communicators).
+    pub ctx: u64,
+    /// User/collective tag.
+    pub tag: u64,
+    /// Payload.
+    pub bytes: Vec<u8>,
+    /// Virtual arrival time (0.0 under wall-clock timing).
+    pub stamp: f64,
+}
+
+/// Match selector for receives.
+#[derive(Debug, Clone, Copy)]
+pub struct Pattern {
+    pub src: Option<usize>,
+    pub ctx: u64,
+    pub tag: u64,
+}
+
+impl Pattern {
+    fn matches(&self, m: &Message) -> bool {
+        m.ctx == self.ctx && m.tag == self.tag && self.src.map_or(true, |s| s == m.src)
+    }
+}
+
+/// How long a blocking receive waits before declaring the peer lost.
+pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// A rank's inbound queue with condition-variable wakeups.
+#[derive(Debug, Default)]
+pub struct Mailbox {
+    inner: Mutex<VecDeque<Message>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    pub fn new() -> Mailbox {
+        Mailbox::default()
+    }
+
+    /// Deposit a message and wake any waiting receiver.
+    pub fn push(&self, msg: Message) {
+        let mut q = self.inner.lock().expect("mailbox poisoned");
+        q.push_back(msg);
+        // Receivers match on (ctx, src, tag); any of them might want this.
+        self.cv.notify_all();
+    }
+
+    /// Take the first message matching `pat`, if one is queued.
+    pub fn try_take(&self, pat: Pattern) -> Option<Message> {
+        let mut q = self.inner.lock().expect("mailbox poisoned");
+        Self::take_locked(&mut q, pat)
+    }
+
+    fn take_locked(q: &mut VecDeque<Message>, pat: Pattern) -> Option<Message> {
+        let idx = q.iter().position(|m| pat.matches(m))?;
+        q.remove(idx)
+    }
+
+    /// Block until a matching message arrives, then remove and return it.
+    ///
+    /// Returns `None` only on timeout ([`RECV_TIMEOUT`]), which the comm
+    /// layer reports as a peer-disconnect error rather than hanging the
+    /// whole test suite on a deadlocked algorithm.
+    pub fn take_blocking(&self, pat: Pattern) -> Option<Message> {
+        let mut q = self.inner.lock().expect("mailbox poisoned");
+        loop {
+            if let Some(m) = Self::take_locked(&mut q, pat) {
+                return Some(m);
+            }
+            let (guard, res) = self
+                .cv
+                .wait_timeout(q, RECV_TIMEOUT)
+                .expect("mailbox poisoned");
+            q = guard;
+            if res.timed_out() && !q.iter().any(|m| pat.matches(m)) {
+                return None;
+            }
+        }
+    }
+
+    /// Number of queued messages (for tests/diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("mailbox poisoned").len()
+    }
+
+    /// True if no messages are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn msg(src: usize, ctx: u64, tag: u64, byte: u8) -> Message {
+        Message { src, ctx, tag, bytes: vec![byte], stamp: 0.0 }
+    }
+
+    #[test]
+    fn fifo_within_matching_triple() {
+        let mb = Mailbox::new();
+        mb.push(msg(1, 0, 7, 10));
+        mb.push(msg(1, 0, 7, 20));
+        let pat = Pattern { src: Some(1), ctx: 0, tag: 7 };
+        assert_eq!(mb.try_take(pat).unwrap().bytes, vec![10]);
+        assert_eq!(mb.try_take(pat).unwrap().bytes, vec![20]);
+        assert!(mb.try_take(pat).is_none());
+    }
+
+    #[test]
+    fn matching_respects_ctx_src_tag() {
+        let mb = Mailbox::new();
+        mb.push(msg(1, 0, 7, 1));
+        mb.push(msg(2, 0, 7, 2));
+        mb.push(msg(1, 9, 7, 3));
+        mb.push(msg(1, 0, 8, 4));
+        // wrong tag / ctx / src never match
+        assert!(mb.try_take(Pattern { src: Some(3), ctx: 0, tag: 7 }).is_none());
+        assert!(mb.try_take(Pattern { src: Some(1), ctx: 1, tag: 7 }).is_none());
+        // exact matches pull the right messages out of order
+        assert_eq!(
+            mb.try_take(Pattern { src: Some(1), ctx: 9, tag: 7 }).unwrap().bytes,
+            vec![3]
+        );
+        assert_eq!(
+            mb.try_take(Pattern { src: Some(2), ctx: 0, tag: 7 }).unwrap().bytes,
+            vec![2]
+        );
+        assert_eq!(mb.len(), 2);
+    }
+
+    #[test]
+    fn wildcard_source_matches_first() {
+        let mb = Mailbox::new();
+        mb.push(msg(5, 0, 1, 50));
+        mb.push(msg(6, 0, 1, 60));
+        let m = mb.try_take(Pattern { src: None, ctx: 0, tag: 1 }).unwrap();
+        assert_eq!(m.src, 5);
+    }
+
+    #[test]
+    fn blocking_take_wakes_on_push() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        let h = std::thread::spawn(move || {
+            mb2.take_blocking(Pattern { src: Some(0), ctx: 0, tag: 42 })
+                .map(|m| m.bytes[0])
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        mb.push(msg(0, 0, 42, 99));
+        assert_eq!(h.join().unwrap(), Some(99));
+    }
+}

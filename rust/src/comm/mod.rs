@@ -1,0 +1,756 @@
+//! The mini-MPI substrate: communicators over thread mailboxes with a
+//! locality-aware virtual-clock transport.
+//!
+//! The paper's algorithms are MPI programs built from `MPI_Isend`,
+//! `MPI_Irecv`, `MPI_Waitall` and `MPI_Comm_split`. This module provides
+//! those semantics inside one process: each *world rank* is an OS thread
+//! owning a tagged [`mailbox::Mailbox`]; a [`Comm`] handle exposes rank,
+//! size, point-to-point operations and sub-communicator construction.
+//!
+//! ## Timing modes
+//!
+//! * [`Timing::Virtual`] — every charged send advances the sender's
+//!   **virtual clock** by `α_c + β_c·bytes` for the locality class `c` of
+//!   the (src, dst) pair (paper Eq. 2) and stamps the message with the
+//!   post-charge time; a receive advances the receiver's clock to
+//!   `max(own, stamp)`. Per-rank clocks after a collective reproduce the
+//!   paper's per-process postal costs over the *real* message schedule —
+//!   deterministically, with no wall-clock noise.
+//! * [`Timing::Wallclock`] — clocks are untouched; callers measure real
+//!   elapsed time around collective calls (used by the perf pass).
+//!
+//! Communicator construction ([`Comm::sub`], [`Comm::split_regions`]) is
+//! deterministic from globally-known topology, so it needs no exchange and
+//! is never charged — matching the paper's setup, where communicators are
+//! created once outside the timed region.
+
+pub mod datatype;
+pub mod mailbox;
+
+pub use datatype::{copy_into, from_bytes, to_bytes, Pod};
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::model::MachineParams;
+use crate::topology::Topology;
+use crate::trace::{RankTrace, TraceSummary};
+use mailbox::{Mailbox, Message, Pattern};
+
+/// First tag reserved for internal collective traffic; user tags must be
+/// below this value.
+pub const COLL_TAG_BASE: u64 = 1 << 32;
+
+/// Transport timing mode.
+#[derive(Debug, Clone)]
+pub enum Timing {
+    /// Locality-aware postal model (paper Eq. 2) on a virtual clock.
+    Virtual(MachineParams),
+    /// No modeled time; callers take wall-clock measurements themselves.
+    Wallclock,
+}
+
+/// Per-rank mutable state (clock + trace). The clock is an `AtomicU64`
+/// holding `f64` bits: only the owning thread writes it during a run, other
+/// threads read it only at quiescent points (barriers / after join).
+struct RankState {
+    clock: AtomicU64,
+    trace: Mutex<RankTrace>,
+}
+
+impl RankState {
+    fn new() -> RankState {
+        RankState {
+            clock: AtomicU64::new(0f64.to_bits()),
+            trace: Mutex::new(RankTrace::default()),
+        }
+    }
+
+    fn clock(&self) -> f64 {
+        f64::from_bits(self.clock.load(Ordering::Relaxed))
+    }
+
+    fn set_clock(&self, t: f64) {
+        self.clock.store(t.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// State shared by all ranks of a world.
+struct WorldShared {
+    topo: Topology,
+    timing: Timing,
+    mailboxes: Vec<Mailbox>,
+    states: Vec<RankState>,
+    /// Opt-in per-message event log (`run_traced`); drives `locag pattern`.
+    events: Option<Mutex<Vec<crate::trace::MsgEvent>>>,
+}
+
+/// A communicator handle owned by one rank thread.
+///
+/// Not `Sync`: a `Comm` lives on the thread that owns its rank, exactly
+/// like an MPI communicator is used from one process.
+pub struct Comm {
+    /// World rank of the owning thread.
+    world_rank: usize,
+    /// Rank within this communicator.
+    rank: usize,
+    /// Communicator rank -> world rank.
+    ranks: Arc<Vec<usize>>,
+    /// Context id for message matching.
+    ctx: u64,
+    /// Per-communicator operation sequence (collective tags, sub-comm ids).
+    seq: Cell<u64>,
+    world: Arc<WorldShared>,
+}
+
+/// Result of running a world: per-rank closure results, final virtual
+/// clocks and the aggregated send trace.
+#[derive(Debug)]
+pub struct WorldRun<R> {
+    pub results: Vec<R>,
+    pub vtimes: Vec<f64>,
+    pub trace: TraceSummary,
+    /// Per-message events (only populated by [`CommWorld::run_traced`]).
+    pub events: Vec<crate::trace::MsgEvent>,
+}
+
+impl<R> WorldRun<R> {
+    /// Max final virtual clock over ranks — the modeled completion time.
+    pub fn max_vtime(&self) -> f64 {
+        self.vtimes.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Namespace for world construction (re-exported in the prelude).
+pub struct CommWorld;
+
+impl CommWorld {
+    /// Spawn one thread per rank of `topo`, hand each a world [`Comm`], run
+    /// `f`, join, and collect results + clocks + traces.
+    ///
+    /// Panics in `f` are propagated after all threads are joined.
+    pub fn run<R, F>(topo: &Topology, timing: Timing, f: F) -> WorldRun<R>
+    where
+        R: Send,
+        F: Fn(&mut Comm) -> R + Sync,
+    {
+        Self::run_inner(topo, timing, false, f)
+    }
+
+    /// Like [`CommWorld::run`] but additionally records every charged
+    /// message as a [`crate::trace::MsgEvent`] (the paper's step-by-step
+    /// communication-pattern figures).
+    pub fn run_traced<R, F>(topo: &Topology, timing: Timing, f: F) -> WorldRun<R>
+    where
+        R: Send,
+        F: Fn(&mut Comm) -> R + Sync,
+    {
+        Self::run_inner(topo, timing, true, f)
+    }
+
+    fn run_inner<R, F>(topo: &Topology, timing: Timing, traced: bool, f: F) -> WorldRun<R>
+    where
+        R: Send,
+        F: Fn(&mut Comm) -> R + Sync,
+    {
+        let size = topo.size();
+        let shared = Arc::new(WorldShared {
+            topo: topo.clone(),
+            timing,
+            mailboxes: (0..size).map(|_| Mailbox::new()).collect(),
+            states: (0..size).map(|_| RankState::new()).collect(),
+            events: traced.then(|| Mutex::new(Vec::new())),
+        });
+        let ranks: Arc<Vec<usize>> = Arc::new((0..size).collect());
+        let mut results: Vec<Option<R>> = (0..size).map(|_| None).collect();
+
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = results
+                .iter_mut()
+                .enumerate()
+                .map(|(r, slot)| {
+                    let shared = shared.clone();
+                    let ranks = ranks.clone();
+                    let f = &f;
+                    scope.spawn(move || {
+                        let mut comm = Comm {
+                            world_rank: r,
+                            rank: r,
+                            ranks,
+                            ctx: 0,
+                            seq: Cell::new(0),
+                            world: shared,
+                        };
+                        *slot = Some(f(&mut comm));
+                    })
+                })
+                .collect();
+            for h in handles {
+                if let Err(e) = h.join() {
+                    std::panic::resume_unwind(e);
+                }
+            }
+        });
+
+        let vtimes = shared.states.iter().map(|s| s.clock()).collect();
+        let trace = TraceSummary::new(
+            shared
+                .states
+                .iter()
+                .map(|s| s.trace.lock().expect("trace poisoned").clone())
+                .collect(),
+        );
+        let events = shared
+            .events
+            .as_ref()
+            .map(|m| m.lock().expect("events poisoned").clone())
+            .unwrap_or_default();
+        WorldRun {
+            results: results.into_iter().map(|r| r.expect("rank produced no result")).collect(),
+            vtimes,
+            trace,
+            events,
+        }
+    }
+}
+
+impl Comm {
+    /// Rank within this communicator.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in this communicator.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// World rank of the calling thread.
+    pub fn world_rank(&self) -> usize {
+        self.world_rank
+    }
+
+    /// World rank of communicator rank `r`.
+    pub fn world_rank_of(&self, r: usize) -> usize {
+        self.ranks[r]
+    }
+
+    /// The world topology.
+    pub fn topology(&self) -> &Topology {
+        &self.world.topo
+    }
+
+    /// Machine parameters when running under virtual timing.
+    pub fn machine(&self) -> Option<&MachineParams> {
+        match &self.world.timing {
+            Timing::Virtual(m) => Some(m),
+            Timing::Wallclock => None,
+        }
+    }
+
+    /// Current virtual clock of this rank (seconds).
+    pub fn clock(&self) -> f64 {
+        self.state().clock()
+    }
+
+    /// Overwrite this rank's virtual clock.
+    pub fn set_clock(&self, t: f64) {
+        self.state().set_clock(t);
+    }
+
+    fn state(&self) -> &RankState {
+        &self.world.states[self.world_rank]
+    }
+
+    /// Snapshot of this rank's send trace.
+    pub fn trace_snapshot(&self) -> RankTrace {
+        self.state().trace.lock().expect("trace poisoned").clone()
+    }
+
+    fn check_rank(&self, r: usize, during: &'static str) -> Result<()> {
+        if r >= self.size() {
+            return Err(Error::RankOutOfRange { rank: r, size: self.size() });
+        }
+        let _ = during;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // point-to-point
+    // ------------------------------------------------------------------
+
+    fn post(&self, dst: usize, tag: u64, bytes: Vec<u8>, charge: bool) -> Result<()> {
+        self.check_rank(dst, "send")?;
+        let src_w = self.world_rank;
+        let dst_w = self.ranks[dst];
+        let mut stamp = 0.0;
+        // Self-sends are a local memcpy in any real MPI: never charged.
+        let charge = charge && src_w != dst_w;
+        if charge {
+            let topo = &self.world.topo;
+            let class = topo.classify(src_w, dst_w);
+            let is_local = topo.is_local(src_w, dst_w);
+            if let Timing::Virtual(m) = &self.world.timing {
+                let cost = m.cost(class, bytes.len());
+                let t = self.state().clock() + cost;
+                self.state().set_clock(t);
+                stamp = t;
+            }
+            self.state()
+                .trace
+                .lock()
+                .expect("trace poisoned")
+                .record(class, is_local, bytes.len());
+            if let Some(events) = &self.world.events {
+                events.lock().expect("events poisoned").push(crate::trace::MsgEvent {
+                    src: src_w,
+                    dst: dst_w,
+                    tag,
+                    bytes: bytes.len(),
+                    class,
+                    region_local: is_local,
+                    vtime: stamp,
+                });
+            }
+        } else if let Timing::Virtual(_) = &self.world.timing {
+            // Uncharged control message still carries the clock so barriers
+            // can propagate maxima.
+            stamp = self.state().clock();
+        }
+        self.world.mailboxes[dst_w].push(Message {
+            src: src_w,
+            ctx: self.ctx,
+            tag,
+            bytes,
+            stamp,
+        });
+        Ok(())
+    }
+
+    fn take(&self, src: Option<usize>, tag: u64, sync_clock: bool) -> Result<Message> {
+        if let Some(s) = src {
+            self.check_rank(s, "recv")?;
+        }
+        let pat = Pattern {
+            src: src.map(|s| self.ranks[s]),
+            ctx: self.ctx,
+            tag,
+        };
+        let msg = self.world.mailboxes[self.world_rank]
+            .take_blocking(pat)
+            .ok_or(Error::Disconnected {
+                rank: src.unwrap_or(usize::MAX),
+                during: "recv",
+            })?;
+        if sync_clock {
+            if let Timing::Virtual(_) = &self.world.timing {
+                let t = self.state().clock().max(msg.stamp);
+                self.state().set_clock(t);
+            }
+        }
+        Ok(msg)
+    }
+
+    /// Blocking (buffered) send of a typed slice to communicator rank `dst`.
+    pub fn send<T: Pod>(&self, buf: &[T], dst: usize, tag: u64) -> Result<()> {
+        self.post(dst, tag, to_bytes(buf), true)
+    }
+
+    /// Blocking receive from communicator rank `src`; returns the payload.
+    pub fn recv<T: Pod>(&self, src: usize, tag: u64) -> Result<Vec<T>> {
+        let msg = self.take(Some(src), tag, true)?;
+        from_bytes(&msg.bytes).ok_or(Error::DatatypeMismatch {
+            bytes: msg.bytes.len(),
+            elem_size: std::mem::size_of::<T>(),
+        })
+    }
+
+    /// Blocking receive into a caller-provided buffer (must match exactly).
+    pub fn recv_into<T: Pod>(&self, src: usize, tag: u64, dst: &mut [T]) -> Result<()> {
+        let msg = self.take(Some(src), tag, true)?;
+        if !copy_into(&msg.bytes, dst) {
+            return Err(Error::SizeMismatch {
+                expected: std::mem::size_of_val(dst),
+                got: msg.bytes.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Non-blocking send. The mini-MPI buffers eagerly, so the request is
+    /// complete on return; the call still exists so algorithm code reads
+    /// like its MPI original.
+    pub fn isend<T: Pod>(&self, buf: &[T], dst: usize, tag: u64) -> Result<SendReq> {
+        self.send(buf, dst, tag)?;
+        Ok(SendReq { _completed: true })
+    }
+
+    /// Non-blocking receive: returns a request to [`RecvReq::wait`] on.
+    pub fn irecv(&self, src: usize, tag: u64) -> RecvReq {
+        RecvReq { src, tag }
+    }
+
+    /// Combined send+receive (deadlock-free thanks to buffered sends).
+    pub fn sendrecv<T: Pod>(
+        &self,
+        sendbuf: &[T],
+        dst: usize,
+        src: usize,
+        tag: u64,
+    ) -> Result<Vec<T>> {
+        self.send(sendbuf, dst, tag)?;
+        self.recv(src, tag)
+    }
+
+    /// Allocate a fresh internal tag for one collective operation. All
+    /// ranks of a communicator call collectives in the same order, so the
+    /// per-comm sequence agrees across ranks.
+    pub fn next_coll_tag(&self) -> u64 {
+        let s = self.seq.get();
+        self.seq.set(s + 1);
+        COLL_TAG_BASE + s
+    }
+
+    // ------------------------------------------------------------------
+    // communicator construction
+    // ------------------------------------------------------------------
+
+    /// Build a sub-communicator from communicator ranks `members` (must be
+    /// sorted, unique and include the caller; every member must pass the
+    /// identical list). Deterministic — no communication, no time charged.
+    pub fn sub(&self, members: &[usize]) -> Result<Comm> {
+        if !members.windows(2).all(|w| w[0] < w[1]) {
+            return Err(Error::Precondition(
+                "sub(): member list must be sorted and unique".into(),
+            ));
+        }
+        let my = members
+            .iter()
+            .position(|&r| r == self.rank)
+            .ok_or_else(|| Error::Precondition("sub(): caller not in member list".into()))?;
+        for &m in members {
+            self.check_rank(m, "sub")?;
+        }
+        let world_ranks: Vec<usize> = members.iter().map(|&r| self.ranks[r]).collect();
+        // Deterministic child context from (parent ctx, member set) ONLY.
+        // Crucially this consumes no parent sequence number: `sub` may be
+        // called by a subset of ranks (e.g. only the masters in the
+        // hierarchical allgather), and consuming a tag would desynchronize
+        // the parent's collective-tag counter across ranks. Re-deriving the
+        // same sub-communicator later therefore reuses its context id —
+        // safe because matching is FIFO per (src, ctx, tag) and each rank
+        // issues its collectives in program order, exactly like reusing an
+        // MPI communicator.
+        let mut h = splitmix(self.ctx ^ 0xA5A5_5A5A_DEAD_BEEF);
+        for &w in &world_ranks {
+            h = splitmix(h ^ (w as u64).wrapping_add(0x1234_5678));
+        }
+        Ok(Comm {
+            world_rank: self.world_rank,
+            rank: my,
+            ranks: Arc::new(world_ranks),
+            ctx: h | 1, // never collide with the world ctx 0
+            seq: Cell::new(0),
+            world: self.world.clone(),
+        })
+    }
+
+    /// Split this communicator by topology region: returns the caller's
+    /// *local* communicator (all comm ranks in the same region, in rank
+    /// order). Mirrors `MPI_Comm_split(comm, region, rank, &local)`.
+    pub fn split_regions(&self) -> Result<Comm> {
+        let topo = &self.world.topo;
+        let my_region = topo.region_of(self.world_rank);
+        let members: Vec<usize> = (0..self.size())
+            .filter(|&r| topo.region_of(self.ranks[r]) == my_region)
+            .collect();
+        self.sub(&members)
+    }
+
+    /// Barrier that also propagates the virtual-clock maximum (used to
+    /// separate timed phases; charges no message costs).
+    pub fn barrier(&self) -> Result<()> {
+        let p = self.size();
+        if p <= 1 {
+            return Ok(());
+        }
+        let tag = self.next_coll_tag();
+        let mut dist = 1usize;
+        while dist < p {
+            let dst = (self.rank + dist) % p;
+            let src = (self.rank + p - dist) % p;
+            // One tag for the whole barrier is safe: every round receives
+            // from a distinct source (dist < p are pairwise distinct).
+            self.post(dst, tag, Vec::new(), false)?;
+            let msg = self.take(Some(src), tag, false)?;
+            if let Timing::Virtual(_) = &self.world.timing {
+                let t = self.state().clock().max(msg.stamp);
+                self.state().set_clock(t);
+            }
+            dist <<= 1;
+        }
+        Ok(())
+    }
+
+    /// Collectively reset clocks and traces (rank 0 clears between two
+    /// barriers). Use between timed phases of a benchmark.
+    pub fn reset_stats(&self) -> Result<()> {
+        self.barrier()?;
+        if self.rank == 0 {
+            for s in &self.world.states {
+                s.set_clock(0.0);
+                s.trace.lock().expect("trace poisoned").clear();
+            }
+        }
+        self.barrier()?;
+        // barrier propagated a stale max; force-zero our clock again
+        self.set_clock(0.0);
+        Ok(())
+    }
+}
+
+/// Completed-send request (buffered sends complete immediately).
+#[derive(Debug)]
+pub struct SendReq {
+    _completed: bool,
+}
+
+impl SendReq {
+    /// No-op: buffered sends are complete at creation.
+    pub fn wait(self) {}
+}
+
+/// Pending-receive request.
+#[derive(Debug)]
+pub struct RecvReq {
+    src: usize,
+    tag: u64,
+}
+
+impl RecvReq {
+    /// Block until the message arrives; decode as `T`.
+    pub fn wait<T: Pod>(self, comm: &Comm) -> Result<Vec<T>> {
+        comm.recv(self.src, self.tag)
+    }
+
+    /// Block until the message arrives; copy into `dst`.
+    pub fn wait_into<T: Pod>(self, comm: &Comm, dst: &mut [T]) -> Result<()> {
+        comm.recv_into(self.src, self.tag, dst)
+    }
+}
+
+/// Wait on many receive requests, in order.
+pub fn waitall<T: Pod>(comm: &Comm, reqs: Vec<RecvReq>) -> Result<Vec<Vec<T>>> {
+    reqs.into_iter().map(|r| r.wait(comm)).collect()
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    fn world() -> Topology {
+        Topology::regions(2, 2)
+    }
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            if c.rank() == 0 {
+                c.send(&[1u32, 2, 3], 1, 5).unwrap();
+                c.recv::<u32>(1, 6).unwrap()
+            } else if c.rank() == 1 {
+                let v = c.recv::<u32>(0, 5).unwrap();
+                c.send(&v.iter().map(|x| x * 2).collect::<Vec<_>>(), 0, 6).unwrap();
+                v
+            } else {
+                vec![]
+            }
+        });
+        assert_eq!(run.results[0], vec![2, 4, 6]);
+        assert_eq!(run.results[1], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn virtual_clock_charges_send_and_syncs_recv() {
+        let m = MachineParams::uniform(1.0, 0.0); // α=1s, β=0
+        let run = CommWorld::run(&world(), Timing::Virtual(m), |c| {
+            if c.rank() == 0 {
+                c.send(&[0u8; 4], 1, 1).unwrap();
+            } else if c.rank() == 1 {
+                c.recv::<u8>(0, 1).unwrap();
+            }
+            c.clock()
+        });
+        assert_eq!(run.results[0], 1.0); // charged α
+        assert_eq!(run.results[1], 1.0); // synced to arrival
+        assert_eq!(run.results[2], 0.0); // untouched
+        assert_eq!(run.max_vtime(), 1.0);
+    }
+
+    #[test]
+    fn chained_sends_accumulate_postal_cost() {
+        // 0 -> 1 -> 2 -> 3, each hop α=1: final clock at rank 3 is 3.0.
+        let m = MachineParams::uniform(1.0, 0.0);
+        let run = CommWorld::run(&world(), Timing::Virtual(m), |c| {
+            let r = c.rank();
+            if r > 0 {
+                c.recv::<u8>(r - 1, 9).unwrap();
+            }
+            if r < 3 {
+                c.send(&[0u8], r + 1, 9).unwrap();
+            }
+            c.clock()
+        });
+        assert_eq!(run.results[3], 3.0);
+    }
+
+    #[test]
+    fn trace_classifies_locality() {
+        // regions(2,2): ranks {0,1} region 0, {2,3} region 1.
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            if c.rank() == 0 {
+                c.send(&[1u8], 1, 1).unwrap(); // local
+                c.send(&[1u8, 2], 2, 2).unwrap(); // non-local
+            } else if c.rank() == 1 {
+                c.recv::<u8>(0, 1).unwrap();
+            } else if c.rank() == 2 {
+                c.recv::<u8>(0, 2).unwrap();
+            }
+        });
+        let t0 = &run.trace.per_rank[0];
+        assert_eq!(t0.local_msgs, 1);
+        assert_eq!(t0.nonlocal_msgs, 1);
+        assert_eq!(t0.nonlocal_bytes, 2);
+        assert_eq!(run.trace.max_nonlocal_msgs(), 1);
+    }
+
+    #[test]
+    fn sub_communicator_ranks_and_isolation() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            let local = c.split_regions().unwrap();
+            assert_eq!(local.size(), 2);
+            // exchange within the region using local ranks
+            let peer = 1 - local.rank();
+            let got = local
+                .sendrecv(&[c.world_rank() as u32], peer, peer, 3)
+                .unwrap();
+            got[0] as usize
+        });
+        // each rank got its region partner's world rank
+        assert_eq!(run.results, vec![1, 0, 3, 2]);
+    }
+
+    #[test]
+    fn sub_comm_messages_do_not_leak_across_contexts() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            let local = c.split_regions().unwrap();
+            if c.rank() == 0 {
+                // send on world ctx and on local ctx with the same tag
+                c.send(&[7u8], 1, 4).unwrap();
+                local.send(&[9u8], 1, 4).unwrap();
+                0
+            } else if c.rank() == 1 {
+                // local recv must get the local message, not the world one
+                let l: Vec<u8> = local.recv(0, 4).unwrap();
+                let w: Vec<u8> = c.recv(0, 4).unwrap();
+                (l[0] as usize) * 10 + w[0] as usize
+            } else {
+                0
+            }
+        });
+        assert_eq!(run.results[1], 97);
+    }
+
+    #[test]
+    fn irecv_waitall_order() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            if c.rank() == 0 {
+                let r1 = c.irecv(1, 11);
+                let r2 = c.irecv(2, 12);
+                let got = waitall::<u32>(c, vec![r1, r2]).unwrap();
+                got.concat()
+            } else if c.rank() <= 2 {
+                c.send(&[c.rank() as u32 * 100], 0, 10 + c.rank() as u64).unwrap();
+                vec![]
+            } else {
+                vec![]
+            }
+        });
+        assert_eq!(run.results[0], vec![100, 200]);
+    }
+
+    #[test]
+    fn barrier_syncs_clocks_without_charging() {
+        let m = MachineParams::uniform(1.0, 0.0);
+        let run = CommWorld::run(&world(), Timing::Virtual(m), |c| {
+            if c.rank() == 0 {
+                c.send(&[0u8], 1, 1).unwrap(); // clock 1.0
+            } else if c.rank() == 1 {
+                c.recv::<u8>(0, 1).unwrap();
+                c.send(&[0u8], 0, 2).unwrap(); // clock 2.0
+            }
+            if c.rank() == 0 {
+                c.recv::<u8>(1, 2).unwrap();
+            }
+            c.barrier().unwrap();
+            c.clock()
+        });
+        // everyone at least at the max (2.0), and no extra message charges
+        for (r, &t) in run.results.iter().enumerate() {
+            assert!(t >= 2.0, "rank {r} clock {t}");
+        }
+        let total_msgs: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+        assert_eq!(total_msgs, 2); // only the two charged sends
+    }
+
+    #[test]
+    fn reset_stats_zeroes_clock_and_trace() {
+        let m = MachineParams::uniform(1.0, 0.0);
+        let run = CommWorld::run(&world(), Timing::Virtual(m), |c| {
+            if c.rank() == 0 {
+                c.send(&[0u8], 1, 1).unwrap();
+            } else if c.rank() == 1 {
+                c.recv::<u8>(0, 1).unwrap();
+            }
+            c.reset_stats().unwrap();
+            (c.clock(), c.trace_snapshot().total_msgs())
+        });
+        for &(t, m) in &run.results {
+            assert_eq!(t, 0.0);
+            assert_eq!(m, 0);
+        }
+    }
+
+    #[test]
+    fn datatype_mismatch_detected() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            if c.rank() == 0 {
+                c.send(&[1u8, 2, 3], 1, 1).unwrap();
+                true
+            } else if c.rank() == 1 {
+                c.recv::<u32>(0, 1).is_err()
+            } else {
+                true
+            }
+        });
+        assert!(run.results[1]);
+    }
+
+    #[test]
+    fn rank_out_of_range_errors() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            c.send(&[0u8], 99, 0).is_err()
+        });
+        assert!(run.results.iter().all(|&x| x));
+    }
+}

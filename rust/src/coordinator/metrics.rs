@@ -1,0 +1,112 @@
+//! Serving metrics: latency distribution, phase breakdown, throughput.
+
+use crate::util::stats::Summary;
+
+/// Per-request phase timings (seconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestTiming {
+    /// PJRT partial forward (compute).
+    pub partial: f64,
+    /// The allgather (communication — the paper's subject).
+    pub allgather: f64,
+    /// Activation assembly + PJRT final forward.
+    pub final_: f64,
+    /// End-to-end leader-observed latency.
+    pub total: f64,
+}
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone)]
+pub struct ServeMetrics {
+    pub timings: Vec<RequestTiming>,
+    /// Requests (batches) per second over the measured window.
+    pub throughput: f64,
+}
+
+impl ServeMetrics {
+    /// Build from per-request timings and the window wall time.
+    pub fn new(timings: Vec<RequestTiming>, window_secs: f64) -> ServeMetrics {
+        let n = timings.len();
+        ServeMetrics {
+            timings,
+            throughput: if window_secs > 0.0 { n as f64 / window_secs } else { 0.0 },
+        }
+    }
+
+    fn series(&self, f: impl Fn(&RequestTiming) -> f64) -> Vec<f64> {
+        self.timings.iter().map(f).collect()
+    }
+
+    /// Latency summary of end-to-end request times.
+    pub fn latency(&self) -> Option<Summary> {
+        Summary::of(&self.series(|t| t.total))
+    }
+
+    /// Summary of time spent in the allgather.
+    pub fn allgather(&self) -> Option<Summary> {
+        Summary::of(&self.series(|t| t.allgather))
+    }
+
+    /// Fraction of total time spent communicating (mean over requests).
+    pub fn comm_fraction(&self) -> f64 {
+        let tot: f64 = self.series(|t| t.total).iter().sum();
+        let ag: f64 = self.series(|t| t.allgather).iter().sum();
+        if tot > 0.0 {
+            ag / tot
+        } else {
+            0.0
+        }
+    }
+
+    /// Human-readable report block.
+    pub fn table(&self) -> String {
+        use crate::util::fmt::seconds;
+        let mut out = String::new();
+        if let Some(l) = self.latency() {
+            out.push_str(&format!(
+                "latency  p50 {}  p90 {}  p99 {}  max {}\n",
+                seconds(l.p50),
+                seconds(l.p90),
+                seconds(l.p99),
+                seconds(l.max)
+            ));
+        }
+        if let Some(a) = self.allgather() {
+            out.push_str(&format!(
+                "allgather p50 {}  p90 {}  (comm fraction {:.1}%)\n",
+                seconds(a.p50),
+                seconds(a.p90),
+                100.0 * self.comm_fraction()
+            ));
+        }
+        out.push_str(&format!("throughput {:.1} batches/s\n", self.throughput));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(total: f64, ag: f64) -> RequestTiming {
+        RequestTiming { partial: 0.0, allgather: ag, final_: 0.0, total }
+    }
+
+    #[test]
+    fn throughput_and_fractions() {
+        let m = ServeMetrics::new(vec![t(0.1, 0.05), t(0.1, 0.05)], 2.0);
+        assert_eq!(m.throughput, 1.0);
+        assert!((m.comm_fraction() - 0.5).abs() < 1e-12);
+        let l = m.latency().unwrap();
+        assert!((l.p50 - 0.1).abs() < 1e-12);
+        assert!(m.table().contains("throughput"));
+    }
+
+    #[test]
+    fn empty_metrics_dont_panic() {
+        let m = ServeMetrics::new(vec![], 0.0);
+        assert!(m.latency().is_none());
+        assert_eq!(m.comm_fraction(), 0.0);
+        let _ = m.table();
+    }
+}

@@ -1,0 +1,29 @@
+//! The Layer-3 serving coordinator: tensor-parallel inference with the
+//! paper's allgather on the request hot path.
+//!
+//! Topology-placed worker threads each own one shard of the TP-MLP
+//! (`W1` column shard + replicated `W2`) and a **private PJRT engine**
+//! (the `xla` crate's client is `!Send`, so engines are constructed inside
+//! each worker thread). Per batched request:
+//!
+//! 1. the leader broadcasts the input batch to all workers;
+//! 2. every worker runs `partial_fwd` (the AOT artifact embedding the
+//!    Pallas matmul+GeLU kernel) on its shard via PJRT;
+//! 3. the workers **allgather** the partial activations with the selected
+//!    algorithm — this is where the locality-aware Bruck earns its keep;
+//! 4. every worker assembles `h_full` and runs `final_fwd`; worker 0
+//!    returns the output.
+//!
+//! Python never runs here: the artifacts were compiled by `make artifacts`.
+//!
+//! [`params`] recreates the Python side's deterministic parameters so the
+//! whole pipeline is verified against an in-Rust reference forward pass —
+//! the end-to-end correctness proof that all three layers compose.
+
+pub mod metrics;
+pub mod params;
+pub mod server;
+
+pub use metrics::ServeMetrics;
+pub use params::ModelParams;
+pub use server::{serve, ServeConfig, ServeReport};

@@ -1,0 +1,203 @@
+//! Deterministic model parameters + in-Rust reference forward pass.
+//!
+//! Mirrors `python/compile/model.py` exactly: the parameters are
+//! trigonometric lattices (no RNG in the build path), so Rust can generate
+//! bit-comparable inputs and validate the PJRT pipeline end-to-end without
+//! shipping weights through files.
+
+use crate::runtime::ModelDims;
+
+/// The TP-MLP parameters, generated to match `model.init_params`.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub dims: ModelDims,
+    /// `W1`: (d_model, d_hidden), row-major.
+    pub w1: Vec<f32>,
+    /// `W2`: (d_hidden, d_out), row-major.
+    pub w2: Vec<f32>,
+}
+
+impl ModelParams {
+    /// Generate parameters for `dims` with the given seed (must match the
+    /// Python default seed 0 for artifact-aligned runs).
+    pub fn generate(dims: ModelDims, seed: f32) -> ModelParams {
+        let (d, h, o) = (dims.d_model, dims.d_hidden, dims.d_out);
+        let mut w1 = vec![0f32; d * h];
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        for i in 0..d {
+            for j in 0..h {
+                w1[i * h + j] =
+                    0.05 * (0.7 * i as f32 + 1.3 * j as f32 + seed).sin() * inv_sqrt_d;
+            }
+        }
+        let mut w2 = vec![0f32; h * o];
+        let inv_sqrt_h = 1.0 / (h as f32).sqrt();
+        for k in 0..h {
+            for l in 0..o {
+                w2[k * o + l] =
+                    0.05 * (0.9 * k as f32 - 0.4 * l as f32 + seed).cos() * inv_sqrt_h;
+            }
+        }
+        ModelParams { dims, w1, w2 }
+    }
+
+    /// Column shard `i` of `W1`: (d_model, hidden_shard), row-major.
+    pub fn w1_shard(&self, i: usize) -> Vec<f32> {
+        let (d, h) = (self.dims.d_model, self.dims.d_hidden);
+        let hs = self.dims.hidden_shard();
+        assert!(i < self.dims.tp);
+        let mut out = Vec::with_capacity(d * hs);
+        for row in 0..d {
+            let base = row * h + i * hs;
+            out.extend_from_slice(&self.w1[base..base + hs]);
+        }
+        out
+    }
+
+    /// The deterministic example batch (matches `model.example_batch`).
+    pub fn example_batch(&self, seed: f32) -> Vec<f32> {
+        let (b, d) = (self.dims.batch, self.dims.d_model);
+        let mut x = vec![0f32; b * d];
+        for bb in 0..b {
+            for dd in 0..d {
+                x[bb * d + dd] = (0.3 * bb as f32 + 0.11 * dd as f32 + seed).sin();
+            }
+        }
+        x
+    }
+
+    /// Reference forward pass: `gelu(x @ W1) @ W2` in plain Rust f32.
+    pub fn reference_forward(&self, x: &[f32]) -> Vec<f32> {
+        let (b, d, h, o) = (
+            self.dims.batch,
+            self.dims.d_model,
+            self.dims.d_hidden,
+            self.dims.d_out,
+        );
+        assert_eq!(x.len(), b * d);
+        let mut hbuf = vec![0f32; b * h];
+        matmul(x, &self.w1, &mut hbuf, b, d, h);
+        for v in hbuf.iter_mut() {
+            *v = gelu(*v);
+        }
+        let mut y = vec![0f32; b * o];
+        matmul(&hbuf, &self.w2, &mut y, b, h, o);
+        y
+    }
+}
+
+/// tanh-approximated GeLU, matching `kernels/ref.py`.
+pub fn gelu(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Row-major `C[b,n] = A[b,m] @ B[m,n]`.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], bb: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), bb * m);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), bb * n);
+    for i in 0..bb {
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0.0);
+        for k in 0..m {
+            let aik = a[i * m + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * n..(k + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// Max |a-b| over two buffers (for end-to-end tolerance checks).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims { batch: 2, d_model: 8, d_hidden: 16, d_out: 4, tp: 4, params: 0 }
+    }
+
+    #[test]
+    fn shards_tile_w1() {
+        let p = ModelParams::generate(dims(), 0.0);
+        let hs = p.dims.hidden_shard();
+        // reassemble from shards and compare
+        let mut back = vec![0f32; p.dims.d_model * p.dims.d_hidden];
+        for i in 0..p.dims.tp {
+            let sh = p.w1_shard(i);
+            for row in 0..p.dims.d_model {
+                let dst = row * p.dims.d_hidden + i * hs;
+                back[dst..dst + hs].copy_from_slice(&sh[row * hs..(row + 1) * hs]);
+            }
+        }
+        assert_eq!(back, p.w1);
+    }
+
+    #[test]
+    fn reference_forward_shapes_and_determinism() {
+        let p = ModelParams::generate(dims(), 0.0);
+        let x = p.example_batch(1.0);
+        let y1 = p.reference_forward(&x);
+        let y2 = p.reference_forward(&x);
+        assert_eq!(y1.len(), 2 * 4);
+        assert_eq!(y1, y2);
+        assert!(y1.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(3.0) - 3.0).abs() < 0.01); // ≈ identity for large x
+        assert!(gelu(-3.0).abs() < 0.01); // ≈ 0 for very negative x
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = [1., 2., 3., 4.];
+        let b = [5., 6., 7., 8.];
+        let mut c = [0f32; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn sharded_forward_equals_reference() {
+        // simulate the TP pipeline in pure rust: partial per shard, concat
+        // along hidden, final matmul
+        let p = ModelParams::generate(dims(), 0.0);
+        let x = p.example_batch(1.0);
+        let (b, d, h, o) = (2usize, 8usize, 16usize, 4usize);
+        let hs = h / p.dims.tp;
+        let mut h_full = vec![0f32; b * h];
+        for i in 0..p.dims.tp {
+            let sh = p.w1_shard(i);
+            let mut part = vec![0f32; b * hs];
+            matmul(&x, &sh, &mut part, b, d, hs);
+            for v in part.iter_mut() {
+                *v = gelu(*v);
+            }
+            for row in 0..b {
+                let dst = row * h + i * hs;
+                h_full[dst..dst + hs].copy_from_slice(&part[row * hs..(row + 1) * hs]);
+            }
+        }
+        let mut y = vec![0f32; b * o];
+        matmul(&h_full, &p.w2, &mut y, b, h, o);
+        let want = p.reference_forward(&x);
+        assert!(max_abs_diff(&y, &want) < 1e-5);
+    }
+}

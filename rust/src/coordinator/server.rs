@@ -1,0 +1,219 @@
+//! The serving loop: batched tensor-parallel inference over the mini-MPI
+//! with PJRT compute and a selectable allgather algorithm.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::collectives::{self, Algorithm};
+use crate::comm::{Comm, CommWorld, Timing};
+use crate::coordinator::metrics::{RequestTiming, ServeMetrics};
+use crate::coordinator::params::{max_abs_diff, ModelParams};
+use crate::error::{Error, Result};
+use crate::runtime::{Engine, Manifest};
+use crate::topology::Topology;
+use crate::trace::TraceSummary;
+
+/// Configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt` (from `make artifacts`).
+    pub artifact_dir: PathBuf,
+    /// Allgather algorithm on the activation path.
+    pub algo: Algorithm,
+    /// Number of locality regions the TP workers span (must divide tp).
+    pub regions: usize,
+    /// Measured batched requests.
+    pub requests: usize,
+    /// Unmeasured warmup requests.
+    pub warmup: usize,
+    /// Verify outputs against the in-Rust reference forward.
+    pub check: bool,
+    /// Use the fused `gathered_matmul` artifact: the final projection
+    /// consumes the allgather's rank-order buffer directly, skipping the
+    /// `h_full` assembly pass (perf pass, L2/L1 fusion).
+    pub fused: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifact_dir: Manifest::default_dir(),
+            algo: Algorithm::LocalityBruck,
+            regions: 2,
+            requests: 16,
+            warmup: 2,
+            check: true,
+            fused: false,
+        }
+    }
+}
+
+/// Outcome of a serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub metrics: ServeMetrics,
+    /// True if every checked output matched the reference within tolerance.
+    pub verified: bool,
+    /// Max |err| observed against the reference.
+    pub max_err: f32,
+    /// Traffic accounting over the whole run.
+    pub trace: TraceSummary,
+    /// First few values of the last response (for quickstart printing).
+    pub output_sample: Vec<f32>,
+    /// Model dimensions served.
+    pub tp: usize,
+    pub params: usize,
+}
+
+/// Run the TP serving loop. One thread per TP worker; worker 0 doubles as
+/// the leader (generates/broadcasts batches, records metrics).
+pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
+    // Validate artifacts & dims on the main thread for clean errors.
+    let manifest = Manifest::load(&cfg.artifact_dir)?;
+    let dims = manifest.model;
+    let tp = dims.tp;
+    if cfg.regions == 0 || tp % cfg.regions != 0 {
+        return Err(Error::Coordinator(format!(
+            "regions={} must divide tp={tp}",
+            cfg.regions
+        )));
+    }
+    let topo = Topology::regions(cfg.regions, tp / cfg.regions);
+    let total_reqs = cfg.warmup + cfg.requests;
+    let algo = cfg.algo;
+    let check = cfg.check;
+    let dir = cfg.artifact_dir.clone();
+
+    let start = Instant::now();
+    let fused = cfg.fused;
+    let run = CommWorld::run(&topo, Timing::Wallclock, move |c| -> Result<WorkerOut> {
+        worker_loop(c, &dir, algo, total_reqs, cfg.warmup, check, fused)
+    });
+    let window = start.elapsed().as_secs_f64();
+
+    // Worker 0 carries the report; surface any worker's error.
+    let mut out0 = None;
+    for (rank, res) in run.results.into_iter().enumerate() {
+        match res {
+            Ok(o) => {
+                if rank == 0 {
+                    out0 = Some(o);
+                }
+            }
+            Err(e) => {
+                return Err(Error::Coordinator(format!("worker {rank}: {e}")));
+            }
+        }
+    }
+    let out0 = out0.expect("worker 0 always present");
+    Ok(ServeReport {
+        metrics: ServeMetrics::new(out0.timings, window),
+        verified: out0.verified,
+        max_err: out0.max_err,
+        trace: run.trace,
+        output_sample: out0.sample,
+        tp,
+        params: dims.params,
+    })
+}
+
+struct WorkerOut {
+    timings: Vec<RequestTiming>,
+    verified: bool,
+    max_err: f32,
+    sample: Vec<f32>,
+}
+
+fn worker_loop(
+    c: &mut Comm,
+    artifact_dir: &std::path::Path,
+    algo: Algorithm,
+    total_reqs: usize,
+    warmup: usize,
+    check: bool,
+    fused: bool,
+) -> Result<WorkerOut> {
+    // Each worker owns a private PJRT engine (the client is !Send).
+    let engine = Engine::load(artifact_dir)?;
+    let dims = engine.manifest.model;
+    let (b, hs, h) = (dims.batch, dims.hidden_shard(), dims.d_hidden);
+    let params = ModelParams::generate(dims, 0.0);
+    let w1s = params.w1_shard(c.rank());
+    let partial = engine.executable("partial_fwd")?;
+    let final_ = engine.executable("final_fwd")?;
+    let fused_final = if fused {
+        Some(engine.executable("fused_final")?)
+    } else {
+        None
+    };
+
+    let mut timings = Vec::with_capacity(total_reqs.saturating_sub(warmup));
+    let mut verified = true;
+    let mut max_err = 0f32;
+    let mut sample = Vec::new();
+
+    for req in 0..total_reqs {
+        let t_start = Instant::now();
+        // Leader generates the batch and broadcasts it (request ingress).
+        let x = if c.rank() == 0 {
+            Some(params.example_batch(req as f32 + 1.0))
+        } else {
+            None
+        };
+        let x = collectives::primitives::bcast(c, x, 0)?;
+
+        // Phase 1: PJRT partial forward (Pallas kernel inside).
+        let t0 = Instant::now();
+        let h_part = partial.run_f32(&[&x, &w1s])?;
+        let t_partial = t0.elapsed().as_secs_f64();
+
+        // Phase 2: the allgather under study.
+        let t1 = Instant::now();
+        let gathered = collectives::allgather(algo, c, &h_part)?;
+        let t_allgather = t1.elapsed().as_secs_f64();
+
+        // Phase 3: the final projection. Fused path: the gathered buffer
+        // feeds the gathered_matmul kernel directly; unfused path:
+        // assemble (batch, d_hidden) row-major first.
+        let t2 = Instant::now();
+        let y = if let Some(ff) = fused_final {
+            ff.run_f32(&[&gathered, &params.w2])?
+        } else {
+            let mut h_full = vec![0f32; b * h];
+            for i in 0..c.size() {
+                let blk = &gathered[i * b * hs..(i + 1) * b * hs];
+                for row in 0..b {
+                    let dst = row * h + i * hs;
+                    h_full[dst..dst + hs].copy_from_slice(&blk[row * hs..(row + 1) * hs]);
+                }
+            }
+            final_.run_f32(&[&h_full, &params.w2])?
+        };
+        let t_final = t2.elapsed().as_secs_f64();
+
+        if c.rank() == 0 {
+            if req >= warmup {
+                timings.push(RequestTiming {
+                    partial: t_partial,
+                    allgather: t_allgather,
+                    final_: t_final,
+                    total: t_start.elapsed().as_secs_f64(),
+                });
+            }
+            if check {
+                let want = params.reference_forward(&x);
+                let err = max_abs_diff(&y, &want);
+                max_err = max_err.max(err);
+                if err > 1e-3 {
+                    verified = false;
+                }
+            }
+            if req + 1 == total_reqs {
+                sample = y.iter().take(8).copied().collect();
+            }
+        }
+    }
+    Ok(WorkerOut { timings, verified, max_err, sample })
+}
+
+// Integration coverage (requires artifacts): rust/tests/coordinator_integration.rs

@@ -1,0 +1,74 @@
+//! Crate-wide error type.
+//!
+//! The message-passing substrate and the collectives report failures through
+//! [`Error`]; higher layers (CLI, coordinator) wrap it in `anyhow` for
+//! context-rich reporting.
+
+use thiserror::Error;
+
+/// Errors produced by the locag library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// A rank index was outside the communicator size.
+    #[error("rank {rank} out of range for communicator of size {size}")]
+    RankOutOfRange { rank: usize, size: usize },
+
+    /// A collective was invoked with inconsistent buffer sizes across ranks.
+    #[error("buffer size mismatch in collective: expected {expected}, got {got}")]
+    SizeMismatch { expected: usize, got: usize },
+
+    /// The peer rank terminated (its mailbox was dropped / poisoned).
+    #[error("peer rank {rank} disconnected during {during}")]
+    Disconnected { rank: usize, during: &'static str },
+
+    /// A receive saw a payload whose byte length is not a multiple of the
+    /// element size of the expected datatype.
+    #[error("datatype mismatch: payload of {bytes} bytes is not a whole number of {elem_size}-byte elements")]
+    DatatypeMismatch { bytes: usize, elem_size: usize },
+
+    /// Topology construction was given inconsistent parameters.
+    #[error("invalid topology: {0}")]
+    InvalidTopology(String),
+
+    /// An algorithm precondition was violated (e.g. non-power-of-two size for
+    /// an algorithm that requires it).
+    #[error("algorithm precondition violated: {0}")]
+    Precondition(String),
+
+    /// PJRT runtime failures (artifact missing, compile error, shape error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// The coordinator rejected or failed a request.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// I/O failures from the figure harness / artifact loading.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_messages_render() {
+        let e = Error::RankOutOfRange { rank: 9, size: 4 };
+        assert!(e.to_string().contains("rank 9"));
+        let e = Error::SizeMismatch { expected: 8, got: 4 };
+        assert!(e.to_string().contains("expected 8"));
+        let e = Error::Disconnected { rank: 3, during: "recv" };
+        assert!(e.to_string().contains("recv"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

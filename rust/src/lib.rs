@@ -1,0 +1,76 @@
+//! # locag — locality-aware collective algorithms
+//!
+//! A reproduction of *“A Locality-Aware Bruck Allgather”* (Bienz, Gautam,
+//! Kharel — EuroMPI/USA'22) as a production-shaped Rust + JAX + Pallas stack.
+//!
+//! The crate contains every subsystem the paper depends on:
+//!
+//! * [`comm`] — a thread-based message-passing runtime (“mini-MPI”) with
+//!   communicators, tagged matching, non-blocking requests and communicator
+//!   splitting, plus a **virtual-clock transport** implementing the paper's
+//!   locality-aware postal model (Eq. 2) over real message schedules.
+//! * [`topology`] — machine descriptions (nodes / sockets / regions), rank
+//!   placement strategies and locality classification.
+//! * [`model`] — the postal performance models of §4: Eq. 1 (classic), Eq. 2
+//!   (locality-aware), and the closed forms Eq. 3 (Bruck) / Eq. 4
+//!   (locality-aware Bruck), with eager/rendezvous protocol switching and
+//!   machine presets shaped after the paper's reference [6].
+//! * [`collectives`] — the standard Bruck, ring, recursive-doubling,
+//!   dissemination, hierarchical (Träff '06), multi-lane (Träff & Hunold '20)
+//!   and **locality-aware Bruck** allgathers (incl. multilevel hierarchy and
+//!   non-power region counts), a system-MPI dispatch baseline, allgatherv,
+//!   and a locality-aware allreduce extension.
+//! * [`sim`] — the sweep/measurement engine that runs any algorithm at a
+//!   given (p, ppn, data size) and reports virtual time, wall time and a
+//!   locality-classified message trace.
+//! * [`trace`] — per-rank message/byte accounting split by locality class.
+//! * [`runtime`] — PJRT loading/execution of the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text; see DESIGN.md).
+//! * [`coordinator`] — a tensor-parallel serving coordinator whose hot path
+//!   is `PJRT partial forward → allgather(activations) → PJRT final forward`.
+//! * [`bench_harness`] — figure regeneration (paper Figs. 3, 7, 8, 9, 10) and
+//!   a small wall-clock measurement kit used by `cargo bench`.
+//! * [`testkit`] — in-tree property-testing support (offline substitute for
+//!   `proptest`; see DESIGN.md §Hardware-Adaptation).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use locag::prelude::*;
+//!
+//! // Example 2.1 of the paper: 16 ranks, 4 ranks per region.
+//! let topo = Topology::regions(4, 4);
+//! let report = locag::sim::run_allgather(
+//!     Algorithm::LocalityBruck,
+//!     &topo,
+//!     &MachineParams::lassen(),
+//!     2, // two u32 values per rank, as in the paper's §5
+//! );
+//! assert!(report.verified);
+//! // The paper's headline: one non-local message per rank (vs 4 for Bruck).
+//! assert_eq!(report.trace.max_nonlocal_msgs(), 1);
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod collectives;
+pub mod comm;
+pub mod coordinator;
+pub mod error;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod topology;
+pub mod trace;
+pub mod util;
+
+/// Convenient re-exports of the types most programs need.
+pub mod prelude {
+    pub use crate::collectives::Algorithm;
+    pub use crate::comm::{Comm, CommWorld, Timing};
+    pub use crate::model::{MachineParams, Protocol};
+    pub use crate::sim::{run_allgather, AllgatherReport};
+    pub use crate::topology::{Locality, Placement, Topology};
+    pub use crate::trace::TraceSummary;
+}

@@ -1,0 +1,14 @@
+//! `locag` binary: the Layer-3 entry point.
+//!
+//! See `locag help` (or [`locag::cli::usage`]) for the command set.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match locag::cli::run(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

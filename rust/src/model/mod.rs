@@ -1,0 +1,19 @@
+//! Performance models (paper §4).
+//!
+//! * [`params`] — per-locality-class postal parameters (α latency, β
+//!   inverse bandwidth) with eager/rendezvous protocol switching and the
+//!   Lassen/Quartz presets used throughout the evaluation.
+//! * [`closed_form`] — the paper's closed-form costs: Eq. 3 (standard
+//!   Bruck), Eq. 4 (locality-aware Bruck), plus the analogous forms for the
+//!   baselines (ring, recursive doubling, hierarchical, multi-lane) needed
+//!   to regenerate Figures 7 and 8.
+//!
+//! The same [`MachineParams`] also parameterize the virtual-clock transport
+//! in [`crate::comm::vtime`], so modeled closed forms and "measured"
+//! virtual-time executions share one source of truth (and are asserted to
+//! agree on power-of-two cases in `rust/tests/model_vs_sim.rs`).
+
+pub mod closed_form;
+pub mod params;
+
+pub use params::{ClassParams, MachineParams, Postal, Protocol};

@@ -1,0 +1,212 @@
+//! Artifact manifest: what `python -m compile.aot` produced and how to
+//! call it.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor as recorded in the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Runtime("manifest entry missing shape".into()))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| Error::Runtime("bad shape".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// Model dimensions baked into the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub batch: usize,
+    pub d_model: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    pub tp: usize,
+    pub params: usize,
+}
+
+impl ModelDims {
+    /// Hidden width owned by each tensor-parallel worker.
+    pub fn hidden_shard(&self) -> usize {
+        self.d_hidden / self.tp
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {}/manifest.json (run `make artifacts` first): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = Json::parse(&text).map_err(|e| Error::Runtime(format!("manifest: {e}")))?;
+        let m = j
+            .get("model")
+            .ok_or_else(|| Error::Runtime("manifest missing 'model'".into()))?;
+        let dim = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Runtime(format!("manifest model missing '{k}'")))
+        };
+        let model = ModelDims {
+            batch: dim("batch")?,
+            d_model: dim("d_model")?,
+            d_hidden: dim("d_hidden")?,
+            d_out: dim("d_out")?,
+            tp: dim("tp")?,
+            params: dim("params")?,
+        };
+        let mut artifacts = Vec::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Runtime("manifest missing 'artifacts'".into()))?;
+        for (name, a) in arts {
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime(format!("artifact {name} missing file")))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(Error::Runtime(format!(
+                    "artifact file {} missing",
+                    path.display()
+                )));
+            }
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Runtime(format!("artifact {name} missing inputs")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let output = TensorSpec::from_json(
+                a.get("output")
+                    .ok_or_else(|| Error::Runtime(format!("artifact {name} missing output")))?,
+            )?;
+            artifacts.push(ArtifactSpec { name: name.clone(), path, inputs, output });
+        }
+        Ok(Manifest { dir, model, artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' not in manifest")))
+    }
+
+    /// The default artifact directory: `$LOCAG_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("LOCAG_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("locag_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const GOOD: &str = r#"{
+      "model": {"batch": 8, "d_model": 256, "d_hidden": 1024, "d_out": 256, "tp": 4, "params": 524288},
+      "artifacts": {
+        "partial_fwd": {"file": "partial_fwd.hlo.txt",
+          "inputs": [{"shape": [8,256], "dtype": "f32"}, {"shape": [256,256], "dtype": "f32"}],
+          "output": {"shape": [8,256], "dtype": "f32"}}
+      }
+    }"#;
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(&d, GOOD);
+        std::fs::write(d.join("partial_fwd.hlo.txt"), "HloModule x").unwrap();
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.model.tp, 4);
+        assert_eq!(m.model.hidden_shard(), 256);
+        let a = m.artifact("partial_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.output.elems(), 8 * 256);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_reported() {
+        let d = tmpdir("missing");
+        write_manifest(&d, GOOD); // hlo file not written
+        let err = Manifest::load(&d).unwrap_err();
+        assert!(err.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let d = tmpdir("nomanifest");
+        let err = Manifest::load(&d).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_json_is_reported() {
+        let d = tmpdir("badjson");
+        write_manifest(&d, "{not json");
+        assert!(Manifest::load(&d).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT artifacts from the hot path.
+//!
+//! The build path (`make artifacts`) runs `python -m compile.aot` once,
+//! producing HLO-text files plus `manifest.json`. At serving time this
+//! module loads them through the `xla` crate:
+//!
+//! ```text
+//! PjRtClient::cpu() → HloModuleProto::from_text_file → client.compile → execute
+//! ```
+//!
+//! Python is never on the request path — after `make artifacts`, the Rust
+//! binary is self-contained.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, ModelDims};
+pub use client::{Engine, Executable};

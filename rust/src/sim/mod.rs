@@ -1,0 +1,214 @@
+//! The sweep/measurement engine: run any allgather at a given topology and
+//! machine model, and report modeled time, wall time, correctness and the
+//! locality-classified traffic trace.
+//!
+//! This is what the figure harness, the examples and the integration tests
+//! drive. One call = one data point of a paper figure.
+
+use std::time::Instant;
+
+use crate::collectives::{self, Algorithm};
+use crate::comm::{CommWorld, Timing};
+use crate::error::Error;
+use crate::model::MachineParams;
+use crate::topology::Topology;
+use crate::trace::TraceSummary;
+
+/// Result of one allgather execution over a world.
+#[derive(Debug, Clone)]
+pub struct AllgatherReport {
+    pub algorithm: Algorithm,
+    /// Ranks in the world.
+    pub p: usize,
+    /// Elements contributed per rank (u32 values, as in the paper's §5).
+    pub n: usize,
+    /// Modeled completion time (max final virtual clock), seconds.
+    pub vtime: f64,
+    /// Wall-clock time of the in-process execution, seconds.
+    pub wall: f64,
+    /// True if every rank produced the expected gathered array.
+    pub verified: bool,
+    /// Send-side traffic accounting.
+    pub trace: TraceSummary,
+    /// Per-rank error strings, if the algorithm failed anywhere.
+    pub errors: Vec<String>,
+}
+
+/// Run `algo` once over `topo` with `n` `u32` values per rank under the
+/// virtual-clock transport parameterized by `machine`.
+///
+/// The paper's measurements use two 4-byte integers per process (§5);
+/// `n = 2` reproduces that.
+pub fn run_allgather(
+    algo: Algorithm,
+    topo: &Topology,
+    machine: &MachineParams,
+    n: usize,
+) -> AllgatherReport {
+    run_allgather_timed(algo, topo, Timing::Virtual(machine.clone()), n)
+}
+
+/// Run `algo` once with an explicit [`Timing`] mode (wall-clock mode is
+/// used by the perf benches).
+pub fn run_allgather_timed(
+    algo: Algorithm,
+    topo: &Topology,
+    timing: Timing,
+    n: usize,
+) -> AllgatherReport {
+    let p = topo.size();
+    let expected: Vec<u32> = (0..p)
+        .flat_map(|r| contribution(r, n))
+        .collect();
+    let start = Instant::now();
+    let run = CommWorld::run(topo, timing, |c| {
+        let mine = contribution(c.rank(), n);
+        collectives::allgather(algo, c, &mine).map(|out| out == expected)
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let mut verified = true;
+    let mut errors = Vec::new();
+    for (rank, res) in run.results.iter().enumerate() {
+        match res {
+            Ok(true) => {}
+            Ok(false) => {
+                verified = false;
+                errors.push(format!("rank {rank}: wrong gathered data"));
+            }
+            Err(e) => {
+                verified = false;
+                errors.push(format!("rank {rank}: {e}"));
+            }
+        }
+    }
+    AllgatherReport {
+        algorithm: algo,
+        p,
+        n,
+        vtime: run.max_vtime(),
+        wall,
+        verified,
+        trace: run.trace,
+        errors,
+    }
+}
+
+/// The canonical `u32` contribution used by the sweep engine.
+fn contribution(rank: usize, n: usize) -> Vec<u32> {
+    (0..n).map(|j| (rank * 131_071 + j) as u32).collect()
+}
+
+/// One row of a sweep: a (topology, algorithm) config and its report.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub regions: usize,
+    pub ppr: usize,
+    pub report: AllgatherReport,
+}
+
+/// Sweep `algo` over region counts at fixed ppr — one series of the
+/// paper's Figs. 9/10.
+pub fn sweep_regions(
+    algo: Algorithm,
+    region_counts: &[usize],
+    ppr: usize,
+    machine: &MachineParams,
+    n: usize,
+) -> Vec<SweepPoint> {
+    region_counts
+        .iter()
+        .map(|&r| {
+            let topo = Topology::regions(r, ppr);
+            SweepPoint {
+                regions: r,
+                ppr,
+                report: run_allgather(algo, &topo, machine, n),
+            }
+        })
+        .collect()
+}
+
+/// Convenience: ensure a report verified, returning a crate error listing
+/// the per-rank failures otherwise.
+pub fn ensure_verified(report: &AllgatherReport) -> crate::error::Result<()> {
+    if report.verified {
+        Ok(())
+    } else {
+        Err(Error::Precondition(format!(
+            "{} failed verification: {}",
+            report.algorithm,
+            report.errors.join("; ")
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bruck_report_on_example_2_1() {
+        let topo = Topology::regions(4, 4);
+        let r = run_allgather(Algorithm::Bruck, &topo, &MachineParams::lassen(), 1);
+        assert!(r.verified, "{:?}", r.errors);
+        assert!(r.vtime > 0.0);
+        // paper: 4 non-local messages from region-0 ranks
+        assert_eq!(r.trace.max_nonlocal_msgs(), 4);
+        ensure_verified(&r).unwrap();
+    }
+
+    #[test]
+    fn loc_bruck_report_on_example_2_1() {
+        let topo = Topology::regions(4, 4);
+        let r = run_allgather(Algorithm::LocalityBruck, &topo, &MachineParams::lassen(), 1);
+        assert!(r.verified, "{:?}", r.errors);
+        assert_eq!(r.trace.max_nonlocal_msgs(), 1);
+        // paper: 4 non-local values (u32) = 16 bytes vs bruck's 15 values
+        assert_eq!(r.trace.max_nonlocal_bytes(), 16);
+    }
+
+    #[test]
+    fn loc_bruck_models_faster_than_bruck() {
+        let topo = Topology::regions(16, 16);
+        let m = MachineParams::lassen();
+        let std = run_allgather(Algorithm::Bruck, &topo, &m, 2);
+        let loc = run_allgather(Algorithm::LocalityBruck, &topo, &m, 2);
+        assert!(std.verified && loc.verified);
+        assert!(
+            loc.vtime < std.vtime,
+            "loc {} vs std {}",
+            loc.vtime,
+            std.vtime
+        );
+    }
+
+    #[test]
+    fn sweep_produces_points() {
+        let pts = sweep_regions(
+            Algorithm::LocalityBruck,
+            &[2, 4, 8],
+            4,
+            &MachineParams::quartz(),
+            2,
+        );
+        assert_eq!(pts.len(), 3);
+        assert!(pts.iter().all(|p| p.report.verified));
+        // modeled time grows with region count
+        assert!(pts[2].report.vtime > pts[0].report.vtime);
+    }
+
+    #[test]
+    fn failed_algorithms_are_reported_not_panicked() {
+        // recursive doubling on non-power-of-two size fails cleanly
+        let topo = Topology::regions(3, 1);
+        let r = run_allgather(
+            Algorithm::RecursiveDoubling,
+            &topo,
+            &MachineParams::quartz(),
+            1,
+        );
+        assert!(!r.verified);
+        assert!(!r.errors.is_empty());
+        assert!(ensure_verified(&r).is_err());
+    }
+}

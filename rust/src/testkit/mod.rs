@@ -1,0 +1,215 @@
+//! In-tree property-testing kit (offline substitute for `proptest`).
+//!
+//! The offline crate registry has no `proptest`, so this module provides
+//! the subset the test suite needs: seeded case generation with a
+//! deterministic RNG, a configurable case count, failure reporting that
+//! prints the reproducing seed, and size-aware generators for the domain's
+//! shapes (process counts, region splits, payload sizes).
+//!
+//! ```
+//! use locag::testkit::{check, Config};
+//! check(Config::default().cases(64).named("bounds"), |g| {
+//!     let x = g.usize_in(1, 100);
+//!     assert!(x >= 1 && x <= 100);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Property-check configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Base seed; case `i` derives its own seed from it.
+    pub seed: u64,
+    /// Name printed on failure.
+    pub name: &'static str,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // LOCAG_PROPTEST_CASES / LOCAG_PROPTEST_SEED widen runs or replay
+        // failures printed by the failure guard.
+        let cases = std::env::var("LOCAG_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(48);
+        let seed = std::env::var("LOCAG_PROPTEST_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases, seed, name: "property" }
+    }
+}
+
+impl Config {
+    /// Override the case count.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Override the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Name the property for failure messages.
+    pub fn named(mut self, n: &'static str) -> Self {
+        self.name = n;
+        self
+    }
+}
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    /// The seed reproducing this exact case (pass as LOCAG_PROPTEST_SEED
+    /// with LOCAG_PROPTEST_CASES=1).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    /// Construct directly from a case seed (replay path).
+    pub fn from_seed(case_seed: u64) -> Gen {
+        Gen { rng: Rng::new(case_seed), case_seed }
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range_inclusive(lo, hi)
+    }
+
+    /// Uniform choice from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// Biased boolean.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Random u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// A power of two in `[1, max]`.
+    pub fn pow2_upto(&mut self, max: usize) -> usize {
+        assert!(max >= 1);
+        let top = crate::util::ilog2_floor(max);
+        1usize << self.usize_in(0, top as usize)
+    }
+
+    /// A (regions, ranks-per-region) pair with `regions·ppr ≤ max_p` and
+    /// ppr a power of two (the paper's measurement constraint, §5).
+    pub fn region_shape(&mut self, max_p: usize) -> (usize, usize) {
+        let ppr = self.pow2_upto(max_p.min(16));
+        let regions = self.usize_in(1, (max_p / ppr).max(1));
+        (regions, ppr)
+    }
+
+    /// Payload length (elements), log-uniform-ish up to `max`.
+    pub fn payload_len(&mut self, max: usize) -> usize {
+        let cap = self.pow2_upto(max.max(1));
+        self.usize_in(1, cap)
+    }
+}
+
+/// Prints the reproducing seed if the property panics.
+struct FailureGuard {
+    name: &'static str,
+    case: usize,
+    case_seed: u64,
+}
+
+impl Drop for FailureGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!(
+                "property '{}' failed on case {} — reproduce with \
+                 LOCAG_PROPTEST_SEED={} LOCAG_PROPTEST_CASES=1 (direct case seed {:#x})",
+                self.name, self.case, self.case_seed, self.case_seed
+            );
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated cases. On panic the failing case's
+/// seed is printed before the panic propagates.
+pub fn check<F: FnMut(&mut Gen)>(cfg: Config, mut prop: F) {
+    for i in 0..cfg.cases {
+        // With CASES=1 the base seed IS the case seed, enabling replay.
+        let case_seed = if cfg.cases == 1 { cfg.seed } else { cfg.seed ^ splitmix(i as u64) };
+        let guard = FailureGuard { name: cfg.name, case: i, case_seed };
+        let mut g = Gen::from_seed(case_seed);
+        prop(&mut g);
+        std::mem::forget(guard);
+    }
+}
+
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(Config::default().cases(16).named("tautology"), |g| {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn failing_property_panics_through() {
+        check(Config::default().cases(4).named("demo"), |_g| {
+            panic!("always fails");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check(Config::default().cases(64), |g| {
+            let p2 = g.pow2_upto(64);
+            assert!(p2.is_power_of_two() && p2 <= 64);
+            let (r, ppr) = g.region_shape(64);
+            assert!(r * ppr <= 64);
+            assert!(ppr.is_power_of_two());
+            let len = g.payload_len(128);
+            assert!((1..=128).contains(&len));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Vec::new();
+        check(Config::default().seed(7).cases(8), |g| a.push(g.u64()));
+        let mut b = Vec::new();
+        check(Config::default().seed(7).cases(8), |g| b.push(g.u64()));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn single_case_uses_base_seed_directly() {
+        let mut direct = Gen::from_seed(0xABCD);
+        let want = direct.u64();
+        let mut got = None;
+        check(Config::default().seed(0xABCD).cases(1), |g| {
+            assert_eq!(g.case_seed, 0xABCD);
+            got = Some(g.u64());
+        });
+        assert_eq!(got, Some(want));
+    }
+}

@@ -1,0 +1,308 @@
+//! Machine topology, rank placement and locality classification.
+//!
+//! The paper defines a *region* as “a group of cores within which
+//! communication is inexpensive” (§2.1): a node on Quartz, a socket on
+//! Lassen. A [`Topology`] maps every rank to a physical coordinate
+//! (node, socket) under a [`Placement`] strategy and derives
+//!
+//! * the region of each rank (at the configured [`RegionKind`]),
+//! * the *local id* of each rank inside its region (its position in the
+//!   region's sorted rank list — what `MPI_Comm_split` would assign), and
+//! * the [`Locality`] class of any (src, dst) pair, used by the cost model
+//!   and the message traces.
+
+pub mod placement;
+
+pub use placement::Placement;
+
+use crate::error::{Error, Result};
+
+/// Relative location of two communicating ranks, ordered cheap → expensive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Locality {
+    /// Same node, same socket (through cache).
+    IntraSocket,
+    /// Same node, different socket (through main memory).
+    InterSocket,
+    /// Different nodes (through the network).
+    InterNode,
+}
+
+impl Locality {
+    /// All classes, cheap → expensive.
+    pub const ALL: [Locality; 3] = [
+        Locality::IntraSocket,
+        Locality::InterSocket,
+        Locality::InterNode,
+    ];
+
+    /// Short label used in CSV output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Locality::IntraSocket => "intra-socket",
+            Locality::InterSocket => "inter-socket",
+            Locality::InterNode => "inter-node",
+        }
+    }
+}
+
+/// What granularity counts as a *region* (the unit of "local").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegionKind {
+    /// Whole node is local (paper's Quartz configuration).
+    Node,
+    /// Single socket is local (paper's Lassen configuration).
+    Socket,
+}
+
+/// Physical coordinate of one rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub node: usize,
+    pub socket: usize,
+}
+
+/// A machine topology: rank → coordinate map plus region bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    coords: Vec<Coord>,
+    region_kind: RegionKind,
+    /// Region index of each rank (dense, 0-based).
+    region_of: Vec<usize>,
+    /// Local id of each rank inside its region.
+    local_id: Vec<usize>,
+    /// Ranks of each region, sorted ascending.
+    region_ranks: Vec<Vec<usize>>,
+    sockets_per_node: usize,
+}
+
+impl Topology {
+    /// The simplest topology: `regions` regions of `ppr` ranks each, one
+    /// socket per node, block placement. This matches the paper's examples
+    /// (“groups of 4 processes are grouped into a region of locality”).
+    pub fn regions(regions: usize, ppr: usize) -> Topology {
+        Topology::machine(regions, 1, ppr, RegionKind::Node, Placement::Block)
+            .expect("regions() arguments are always consistent")
+    }
+
+    /// Full machine constructor.
+    ///
+    /// * `nodes` — number of nodes;
+    /// * `sockets_per_node` — sockets per node;
+    /// * `cores_per_socket` — ranks per socket (every core runs one rank);
+    /// * `region` — what counts as local;
+    /// * `placement` — how MPI ranks are laid out over cores.
+    pub fn machine(
+        nodes: usize,
+        sockets_per_node: usize,
+        cores_per_socket: usize,
+        region: RegionKind,
+        placement: Placement,
+    ) -> Result<Topology> {
+        if nodes == 0 || sockets_per_node == 0 || cores_per_socket == 0 {
+            return Err(Error::InvalidTopology(format!(
+                "all dimensions must be positive (nodes={nodes}, sockets={sockets_per_node}, cores={cores_per_socket})"
+            )));
+        }
+        let size = nodes * sockets_per_node * cores_per_socket;
+        let slots = placement.layout(nodes, sockets_per_node, cores_per_socket);
+        debug_assert_eq!(slots.len(), size);
+        let coords: Vec<Coord> = slots;
+
+        let nregions_per_node = match region {
+            RegionKind::Node => 1,
+            RegionKind::Socket => sockets_per_node,
+        };
+        let region_index = |c: &Coord| match region {
+            RegionKind::Node => c.node,
+            RegionKind::Socket => c.node * nregions_per_node + c.socket,
+        };
+        let nregions = nodes * nregions_per_node;
+        let region_of: Vec<usize> = coords.iter().map(region_index).collect();
+        let mut region_ranks: Vec<Vec<usize>> = vec![Vec::new(); nregions];
+        for (rank, &r) in region_of.iter().enumerate() {
+            region_ranks[r].push(rank);
+        }
+        // ranks were pushed in ascending order already
+        let mut local_id = vec![0usize; size];
+        for ranks in &region_ranks {
+            for (i, &rank) in ranks.iter().enumerate() {
+                local_id[rank] = i;
+            }
+        }
+        Ok(Topology {
+            coords,
+            region_kind: region,
+            region_of,
+            local_id,
+            region_ranks,
+            sockets_per_node,
+        })
+    }
+
+    /// Total number of ranks.
+    pub fn size(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Number of regions.
+    pub fn num_regions(&self) -> usize {
+        self.region_ranks.len()
+    }
+
+    /// Ranks per region, if uniform across regions.
+    pub fn procs_per_region(&self) -> Option<usize> {
+        let first = self.region_ranks.first()?.len();
+        self.region_ranks
+            .iter()
+            .all(|r| r.len() == first)
+            .then_some(first)
+    }
+
+    /// Region index of `rank`.
+    pub fn region_of(&self, rank: usize) -> usize {
+        self.region_of[rank]
+    }
+
+    /// Position of `rank` within its region (0-based).
+    pub fn local_id(&self, rank: usize) -> usize {
+        self.local_id[rank]
+    }
+
+    /// All ranks in region `r`, ascending.
+    pub fn ranks_in_region(&self, r: usize) -> &[usize] {
+        &self.region_ranks[r]
+    }
+
+    /// Physical coordinate of a rank.
+    pub fn coord(&self, rank: usize) -> Coord {
+        self.coords[rank]
+    }
+
+    /// The configured region granularity.
+    pub fn region_kind(&self) -> RegionKind {
+        self.region_kind
+    }
+
+    /// Sockets per node of the underlying machine.
+    pub fn sockets_per_node(&self) -> usize {
+        self.sockets_per_node
+    }
+
+    /// Locality class of a message from `a` to `b`.
+    pub fn classify(&self, a: usize, b: usize) -> Locality {
+        let ca = self.coords[a];
+        let cb = self.coords[b];
+        if ca.node != cb.node {
+            Locality::InterNode
+        } else if ca.socket != cb.socket {
+            Locality::InterSocket
+        } else {
+            Locality::IntraSocket
+        }
+    }
+
+    /// True if `a` and `b` are in the same region (local communication).
+    pub fn is_local(&self, a: usize, b: usize) -> bool {
+        self.region_of[a] == self.region_of[b]
+    }
+
+    /// The permutation mapping *logical* rank order (region-major, i.e.
+    /// sorted by (region, local id)) to actual ranks. The locality-aware
+    /// algorithms run in logical space, making their non-local traffic
+    /// independent of placement (paper §3, last paragraph).
+    pub fn logical_order(&self) -> Vec<usize> {
+        let mut order = Vec::with_capacity(self.size());
+        for ranks in &self.region_ranks {
+            order.extend_from_slice(ranks);
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_2_1_topology() {
+        // 16 processes, groups of 4 per region.
+        let t = Topology::regions(4, 4);
+        assert_eq!(t.size(), 16);
+        assert_eq!(t.num_regions(), 4);
+        assert_eq!(t.procs_per_region(), Some(4));
+        assert_eq!(t.region_of(0), 0);
+        assert_eq!(t.region_of(5), 1);
+        assert_eq!(t.region_of(15), 3);
+        assert_eq!(t.local_id(5), 1);
+        assert_eq!(t.ranks_in_region(2), &[8, 9, 10, 11]);
+        assert!(t.is_local(4, 7));
+        assert!(!t.is_local(3, 4));
+    }
+
+    #[test]
+    fn socket_regions_on_two_socket_node() {
+        let t = Topology::machine(2, 2, 4, RegionKind::Socket, Placement::Block).unwrap();
+        assert_eq!(t.size(), 16);
+        assert_eq!(t.num_regions(), 4);
+        // ranks 0..4 socket 0 node 0; 4..8 socket 1 node 0
+        assert_eq!(t.classify(0, 1), Locality::IntraSocket);
+        assert_eq!(t.classify(0, 5), Locality::InterSocket);
+        assert_eq!(t.classify(0, 9), Locality::InterNode);
+        assert!(t.is_local(0, 3));
+        assert!(!t.is_local(0, 4)); // same node, different socket region
+    }
+
+    #[test]
+    fn node_regions_span_sockets() {
+        let t = Topology::machine(2, 2, 4, RegionKind::Node, Placement::Block).unwrap();
+        assert_eq!(t.num_regions(), 2);
+        assert!(t.is_local(0, 7)); // whole node local
+        assert!(!t.is_local(0, 8));
+    }
+
+    #[test]
+    fn round_robin_placement_classifies_differently() {
+        let block = Topology::machine(2, 1, 4, RegionKind::Node, Placement::Block).unwrap();
+        let rr = Topology::machine(2, 1, 4, RegionKind::Node, Placement::RoundRobin).unwrap();
+        // Under block placement rank 0 and 1 share a node; under round-robin
+        // they land on different nodes.
+        assert_eq!(block.classify(0, 1), Locality::IntraSocket);
+        assert_eq!(rr.classify(0, 1), Locality::InterNode);
+        // Region sizes stay uniform either way.
+        assert_eq!(rr.procs_per_region(), Some(4));
+    }
+
+    #[test]
+    fn logical_order_is_permutation() {
+        let t = Topology::machine(3, 1, 4, RegionKind::Node, Placement::Random { seed: 9 })
+            .unwrap();
+        let mut order = t.logical_order();
+        // region-major: consecutive logical ids share regions
+        for w in order.chunks(4) {
+            let r = t.region_of(w[0]);
+            assert!(w.iter().all(|&x| t.region_of(x) == r));
+        }
+        order.sort_unstable();
+        assert_eq!(order, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_dims_rejected() {
+        assert!(Topology::machine(0, 1, 1, RegionKind::Node, Placement::Block).is_err());
+        assert!(Topology::machine(1, 0, 1, RegionKind::Node, Placement::Block).is_err());
+        assert!(Topology::machine(1, 1, 0, RegionKind::Node, Placement::Block).is_err());
+    }
+
+    #[test]
+    fn local_ids_dense_and_consistent() {
+        let t = Topology::machine(4, 2, 2, RegionKind::Socket, Placement::Random { seed: 1 })
+            .unwrap();
+        for r in 0..t.num_regions() {
+            for (i, &rank) in t.ranks_in_region(r).iter().enumerate() {
+                assert_eq!(t.local_id(rank), i);
+                assert_eq!(t.region_of(rank), r);
+            }
+        }
+    }
+}

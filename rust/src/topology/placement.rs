@@ -1,0 +1,129 @@
+//! Rank placement strategies.
+//!
+//! Placement decides which physical core each MPI rank occupies. The paper
+//! (§3, final paragraph) observes that the *standard* Bruck algorithm's
+//! non-local traffic depends on placement while the locality-aware variant
+//! does not; `examples/placement_study.rs` demonstrates exactly that using
+//! these strategies.
+
+use super::Coord;
+use crate::util::rng::Rng;
+
+/// How ranks are assigned to (node, socket) slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Consecutive ranks fill a socket, then the next socket, then the next
+    /// node — the common `--map-by core` default.
+    Block,
+    /// Ranks are dealt across nodes like cards (`--map-by node`): rank i on
+    /// node `i % nodes`.
+    RoundRobin,
+    /// A random permutation of the block layout, seeded for reproducibility.
+    Random { seed: u64 },
+}
+
+impl Placement {
+    /// Produce the coordinate of every rank, in rank order.
+    pub fn layout(
+        &self,
+        nodes: usize,
+        sockets_per_node: usize,
+        cores_per_socket: usize,
+    ) -> Vec<Coord> {
+        let size = nodes * sockets_per_node * cores_per_socket;
+        // Enumerate physical slots in block order.
+        let mut slots = Vec::with_capacity(size);
+        for node in 0..nodes {
+            for socket in 0..sockets_per_node {
+                for _core in 0..cores_per_socket {
+                    slots.push(Coord { node, socket });
+                }
+            }
+        }
+        match self {
+            Placement::Block => slots,
+            Placement::RoundRobin => {
+                // rank i -> node i % nodes, filling that node's slots in order.
+                let per_node = sockets_per_node * cores_per_socket;
+                let mut next_slot = vec![0usize; nodes];
+                let mut out = Vec::with_capacity(size);
+                let mut node = 0usize;
+                for _rank in 0..size {
+                    // find next node with a free slot, starting at `node`
+                    while next_slot[node] == per_node {
+                        node = (node + 1) % nodes;
+                    }
+                    let slot = next_slot[node];
+                    next_slot[node] += 1;
+                    let socket = slot / cores_per_socket;
+                    out.push(Coord { node, socket });
+                    node = (node + 1) % nodes;
+                }
+                out
+            }
+            Placement::Random { seed } => {
+                let mut rng = Rng::new(*seed);
+                rng.shuffle(&mut slots);
+                slots
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_per_node(coords: &[Coord], nodes: usize) -> Vec<usize> {
+        let mut c = vec![0usize; nodes];
+        for x in coords {
+            c[x.node] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn block_layout_is_contiguous() {
+        let l = Placement::Block.layout(2, 2, 2);
+        assert_eq!(l.len(), 8);
+        assert_eq!(l[0], Coord { node: 0, socket: 0 });
+        assert_eq!(l[1], Coord { node: 0, socket: 0 });
+        assert_eq!(l[2], Coord { node: 0, socket: 1 });
+        assert_eq!(l[4], Coord { node: 1, socket: 0 });
+    }
+
+    #[test]
+    fn round_robin_alternates_nodes() {
+        let l = Placement::RoundRobin.layout(2, 1, 3);
+        let nodes: Vec<usize> = l.iter().map(|c| c.node).collect();
+        assert_eq!(nodes, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn all_layouts_fill_every_slot_exactly_once() {
+        for p in [
+            Placement::Block,
+            Placement::RoundRobin,
+            Placement::Random { seed: 5 },
+        ] {
+            let l = p.layout(3, 2, 4);
+            assert_eq!(l.len(), 24);
+            assert_eq!(count_per_node(&l, 3), vec![8, 8, 8]);
+            // per (node, socket) exactly cores_per_socket ranks
+            let mut per = std::collections::HashMap::new();
+            for c in &l {
+                *per.entry((c.node, c.socket)).or_insert(0usize) += 1;
+            }
+            assert!(per.values().all(|&v| v == 4));
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let a = Placement::Random { seed: 1 }.layout(2, 1, 8);
+        let b = Placement::Random { seed: 1 }.layout(2, 1, 8);
+        let c = Placement::Random { seed: 2 }.layout(2, 1, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,289 @@
+//! Communication tracing: per-rank message/byte accounting split by
+//! locality class and by local/non-local region membership.
+//!
+//! The paper's analysis (§2.1, §4) is phrased in terms of the **maximum
+//! number of non-local messages and bytes communicated by any process** —
+//! e.g. standard Bruck sends `log2(p)` non-local messages of `m−1` total
+//! values from the worst rank, while the locality-aware variant sends
+//! `⌈log_pℓ(r)⌉` non-local messages of `≈ b/pℓ` bytes. The trace recorder
+//! captures exactly those quantities from real executions so tests can
+//! assert them and the quickstart can print the paper's Example 2.1 table.
+
+use crate::topology::Locality;
+
+/// One recorded message (event tracing is opt-in; see
+/// [`crate::comm::CommWorld::run_traced`]). Used by `locag pattern` to
+/// reproduce the paper's step-by-step communication figures (Figs. 1, 4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MsgEvent {
+    /// Sender world rank.
+    pub src: usize,
+    /// Destination world rank.
+    pub dst: usize,
+    /// Message tag (collectives use `base + step`, so sorting by tag
+    /// groups events into algorithm steps).
+    pub tag: u64,
+    /// Payload bytes.
+    pub bytes: usize,
+    /// Locality class of the (src, dst) pair.
+    pub class: Locality,
+    /// True if src and dst share a region.
+    pub region_local: bool,
+    /// Virtual send time (0 under wall-clock timing).
+    pub vtime: f64,
+}
+
+/// Render events grouped into steps, paper-Fig.-1 style. A "step" is a
+/// tag group; groups are ordered by their earliest virtual send time so
+/// the phases of multi-phase algorithms (local gather → non-local
+/// exchange → local gather) appear in execution order.
+pub fn render_steps(events: &[MsgEvent]) -> String {
+    use std::collections::BTreeMap;
+    // (tag) -> (min vtime, events)
+    let mut groups: BTreeMap<u64, (f64, Vec<&MsgEvent>)> = BTreeMap::new();
+    for e in events {
+        let g = groups.entry(e.tag).or_insert((f64::MAX, Vec::new()));
+        g.0 = g.0.min(e.vtime);
+        g.1.push(e);
+    }
+    let mut ordered: Vec<(f64, u64, Vec<&MsgEvent>)> =
+        groups.into_iter().map(|(t, (v, es))| (v, t, es)).collect();
+    ordered.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut out = String::new();
+    for (step, (_, _, mut es)) in ordered.into_iter().enumerate() {
+        es.sort_by_key(|e| e.src);
+        out.push_str(&format!("step {}:\n", step + 1));
+        for e in es {
+            out.push_str(&format!(
+                "  P{:<3} -> P{:<3} {:>6} B  [{}{}]\n",
+                e.src,
+                e.dst,
+                e.bytes,
+                e.class.label(),
+                if e.region_local { "" } else { ", NON-LOCAL" }
+            ));
+        }
+    }
+    out
+}
+
+/// Per-rank send-side accounting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankTrace {
+    /// Messages sent, by locality class.
+    pub msgs: [u64; 3],
+    /// Bytes sent, by locality class.
+    pub bytes: [u64; 3],
+    /// Messages sent within the sender's region.
+    pub local_msgs: u64,
+    /// Bytes sent within the sender's region.
+    pub local_bytes: u64,
+    /// Messages sent across regions.
+    pub nonlocal_msgs: u64,
+    /// Bytes sent across regions.
+    pub nonlocal_bytes: u64,
+}
+
+impl RankTrace {
+    /// Record one sent message.
+    pub fn record(&mut self, class: Locality, is_region_local: bool, bytes: usize) {
+        let c = class as usize;
+        self.msgs[c] += 1;
+        self.bytes[c] += bytes as u64;
+        if is_region_local {
+            self.local_msgs += 1;
+            self.local_bytes += bytes as u64;
+        } else {
+            self.nonlocal_msgs += 1;
+            self.nonlocal_bytes += bytes as u64;
+        }
+    }
+
+    /// Total messages sent.
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs.iter().sum()
+    }
+
+    /// Total bytes sent.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Merge another trace into this one.
+    pub fn merge(&mut self, other: &RankTrace) {
+        for i in 0..3 {
+            self.msgs[i] += other.msgs[i];
+            self.bytes[i] += other.bytes[i];
+        }
+        self.local_msgs += other.local_msgs;
+        self.local_bytes += other.local_bytes;
+        self.nonlocal_msgs += other.nonlocal_msgs;
+        self.nonlocal_bytes += other.nonlocal_bytes;
+    }
+
+    /// Reset all counters to zero.
+    pub fn clear(&mut self) {
+        *self = RankTrace::default();
+    }
+}
+
+/// Aggregated view over all ranks of a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSummary {
+    pub per_rank: Vec<RankTrace>,
+}
+
+impl TraceSummary {
+    /// Build from per-rank traces.
+    pub fn new(per_rank: Vec<RankTrace>) -> TraceSummary {
+        TraceSummary { per_rank }
+    }
+
+    /// The paper's headline quantity: max non-local messages sent by any rank.
+    pub fn max_nonlocal_msgs(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.nonlocal_msgs).max().unwrap_or(0)
+    }
+
+    /// Max non-local bytes sent by any rank.
+    pub fn max_nonlocal_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.nonlocal_bytes).max().unwrap_or(0)
+    }
+
+    /// Max local messages sent by any rank.
+    pub fn max_local_msgs(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.local_msgs).max().unwrap_or(0)
+    }
+
+    /// Max total messages sent by any rank.
+    pub fn max_total_msgs(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.total_msgs()).max().unwrap_or(0)
+    }
+
+    /// Sum of non-local messages over all ranks (network injection load).
+    pub fn total_nonlocal_msgs(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.nonlocal_msgs).sum()
+    }
+
+    /// Sum of non-local bytes over all ranks.
+    pub fn total_nonlocal_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.nonlocal_bytes).sum()
+    }
+
+    /// Sum of bytes over all ranks and classes.
+    pub fn total_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.total_bytes()).sum()
+    }
+
+    /// Totals by locality class: (msgs, bytes).
+    pub fn by_class(&self, class: Locality) -> (u64, u64) {
+        let c = class as usize;
+        let msgs = self.per_rank.iter().map(|t| t.msgs[c]).sum();
+        let bytes = self.per_rank.iter().map(|t| t.bytes[c]).sum();
+        (msgs, bytes)
+    }
+
+    /// Render a compact human-readable table.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("class          msgs        bytes\n");
+        for class in Locality::ALL {
+            let (m, b) = self.by_class(class);
+            out.push_str(&format!("{:<13} {:>6} {:>12}\n", class.label(), m, b));
+        }
+        out.push_str(&format!(
+            "max/rank: {} non-local msgs, {} non-local bytes, {} total msgs\n",
+            self.max_nonlocal_msgs(),
+            self.max_nonlocal_bytes(),
+            self.max_total_msgs()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(src: usize, dst: usize, tag: u64, vtime: f64, local: bool) -> MsgEvent {
+        MsgEvent {
+            src,
+            dst,
+            tag,
+            bytes: 8,
+            class: if local { Locality::IntraSocket } else { Locality::InterNode },
+            region_local: local,
+            vtime,
+        }
+    }
+
+    #[test]
+    fn render_steps_orders_by_time_then_groups_by_tag() {
+        let events = vec![
+            ev(1, 0, 100, 2.0, false), // later step
+            ev(0, 1, 50, 1.0, true),   // earlier step
+            ev(2, 3, 50, 1.5, true),
+        ];
+        let s = render_steps(&events);
+        let step1 = s.find("step 1:").unwrap();
+        let step2 = s.find("step 2:").unwrap();
+        assert!(step1 < step2);
+        // tag 50 (earlier vtime) renders as step 1 and contains both sends
+        let first_block = &s[step1..step2];
+        assert!(first_block.contains("P0   -> P1"));
+        assert!(first_block.contains("P2   -> P3"));
+        // non-local marked
+        assert!(s.contains("NON-LOCAL"));
+    }
+
+    #[test]
+    fn render_steps_empty() {
+        assert_eq!(render_steps(&[]), "");
+    }
+
+    #[test]
+    fn record_and_totals() {
+        let mut t = RankTrace::default();
+        t.record(Locality::IntraSocket, true, 100);
+        t.record(Locality::InterNode, false, 50);
+        t.record(Locality::InterNode, false, 25);
+        assert_eq!(t.total_msgs(), 3);
+        assert_eq!(t.total_bytes(), 175);
+        assert_eq!(t.local_msgs, 1);
+        assert_eq!(t.nonlocal_msgs, 2);
+        assert_eq!(t.nonlocal_bytes, 75);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = RankTrace::default();
+        a.record(Locality::IntraSocket, true, 10);
+        let mut b = RankTrace::default();
+        b.record(Locality::InterNode, false, 20);
+        a.merge(&b);
+        assert_eq!(a.total_msgs(), 2);
+        assert_eq!(a.nonlocal_bytes, 20);
+    }
+
+    #[test]
+    fn summary_maxima() {
+        let mut a = RankTrace::default();
+        a.record(Locality::InterNode, false, 10);
+        a.record(Locality::InterNode, false, 10);
+        let mut b = RankTrace::default();
+        b.record(Locality::IntraSocket, true, 99);
+        let s = TraceSummary::new(vec![a, b]);
+        assert_eq!(s.max_nonlocal_msgs(), 2);
+        assert_eq!(s.max_nonlocal_bytes(), 20);
+        assert_eq!(s.max_local_msgs(), 1);
+        assert_eq!(s.total_nonlocal_msgs(), 2);
+        assert_eq!(s.by_class(Locality::IntraSocket), (1, 99));
+        assert!(s.table().contains("inter-node"));
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = TraceSummary::default();
+        assert_eq!(s.max_nonlocal_msgs(), 0);
+        assert_eq!(s.total_bytes(), 0);
+    }
+}

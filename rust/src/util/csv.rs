@@ -1,0 +1,125 @@
+//! Minimal CSV writer for the figure harness (no serde in the offline
+//! environment; the schemas are simple and fixed).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::Result;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create a CSV file and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<CsvWriter> {
+        let f = File::create(path)?;
+        let mut w = CsvWriter {
+            out: Box::new(BufWriter::new(f)),
+            cols: header.len(),
+        };
+        w.write_raw_row(header)?;
+        Ok(w)
+    }
+
+    /// CSV to an arbitrary sink (used by tests and `--out -`).
+    pub fn to_writer(out: Box<dyn Write>, header: &[&str]) -> Result<CsvWriter> {
+        let mut w = CsvWriter {
+            out,
+            cols: header.len(),
+        };
+        w.write_raw_row(header)?;
+        Ok(w)
+    }
+
+    fn write_raw_row(&mut self, fields: &[&str]) -> Result<()> {
+        assert_eq!(
+            fields.len(),
+            self.cols,
+            "CSV row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        let mut first = true;
+        for f in fields {
+            if !first {
+                self.out.write_all(b",")?;
+            }
+            first = false;
+            self.out.write_all(escape(f).as_bytes())?;
+        }
+        self.out.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Write one data row.
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        let refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
+        self.write_raw_row(&refs)
+    }
+
+    /// Flush buffered output.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Quote a field if needed (commas, quotes, newlines).
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Convenience macro to build a row of stringified fields.
+#[macro_export]
+macro_rules! csv_row {
+    ($($x:expr),* $(,)?) => {
+        vec![$(format!("{}", $x)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let buf: Vec<u8> = Vec::new();
+        let cell = std::sync::Arc::new(std::sync::Mutex::new(buf));
+        struct Sink(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+        impl Write for Sink {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w =
+            CsvWriter::to_writer(Box::new(Sink(cell.clone())), &["a", "b"]).unwrap();
+        w.row(&csv_row![1, 2.5]).unwrap();
+        w.row(&csv_row!["x,y", "q\"q"]).unwrap();
+        w.flush().unwrap();
+        let s = String::from_utf8(cell.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,2.5");
+        assert_eq!(lines[2], "\"x,y\",\"q\"\"q\"");
+    }
+
+    #[test]
+    #[should_panic(expected = "fields")]
+    fn wrong_arity_panics() {
+        let sink = Box::new(std::io::sink());
+        let mut w = CsvWriter::to_writer(sink, &["a", "b"]).unwrap();
+        w.row(&csv_row![1]).unwrap();
+    }
+}

@@ -1,0 +1,133 @@
+//! Human-readable formatting helpers and a tiny ASCII line-plotter used by
+//! the figure harness to preview series in the terminal.
+
+/// Format a byte count: `512 B`, `8.0 KiB`, `2.5 MiB`.
+pub fn bytes(n: usize) -> String {
+    const KIB: f64 = 1024.0;
+    let x = n as f64;
+    if x < KIB {
+        format!("{} B", n)
+    } else if x < KIB * KIB {
+        format!("{:.1} KiB", x / KIB)
+    } else if x < KIB * KIB * KIB {
+        format!("{:.1} MiB", x / (KIB * KIB))
+    } else {
+        format!("{:.2} GiB", x / (KIB * KIB * KIB))
+    }
+}
+
+/// Format a duration in seconds: `1.23 us`, `45.6 ms`, `2.34 s`.
+pub fn seconds(t: f64) -> String {
+    if t < 1e-6 {
+        format!("{:.1} ns", t * 1e9)
+    } else if t < 1e-3 {
+        format!("{:.2} us", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.2} ms", t * 1e3)
+    } else {
+        format!("{:.2} s", t)
+    }
+}
+
+/// One labelled series for [`ascii_plot`].
+pub struct Series<'a> {
+    pub label: &'a str,
+    /// (x, y) points; x and y must be positive for log-log plotting.
+    pub points: &'a [(f64, f64)],
+}
+
+/// Render series as a log-log ASCII scatter chart (the paper's figures are
+/// all log-log). Width/height are the inner plot dimensions.
+pub fn ascii_plot(title: &str, series: &[Series<'_>], width: usize, height: usize) -> String {
+    const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let all: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|&(x, y)| x > 0.0 && y > 0.0)
+        .collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &all {
+        x0 = x0.min(x.ln());
+        x1 = x1.max(x.ln());
+        y0 = y0.min(y.ln());
+        y1 = y1.max(y.ln());
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in s.points {
+            if x <= 0.0 || y <= 0.0 {
+                continue;
+            }
+            let cx = (((x.ln() - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y.ln() - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    out.push_str(&format!("y: {} .. {} (log scale)\n", seconds(y0.exp()), seconds(y1.exp())));
+    for row in &grid {
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push('+');
+    out.extend(std::iter::repeat('-').take(width));
+    out.push('\n');
+    out.push_str(&format!(" x: {:.3e} .. {:.3e} (log scale)\n", x0.exp(), x1.exp()));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.label));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(12), "12 B");
+        assert_eq!(bytes(2048), "2.0 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn seconds_units() {
+        assert_eq!(seconds(5e-10), "0.5 ns");
+        assert_eq!(seconds(2.5e-6), "2.50 us");
+        assert_eq!(seconds(0.012), "12.00 ms");
+        assert_eq!(seconds(3.0), "3.00 s");
+    }
+
+    #[test]
+    fn plot_contains_marks_and_labels() {
+        let pts = [(1.0, 1.0), (10.0, 10.0), (100.0, 100.0)];
+        let s = ascii_plot(
+            "demo",
+            &[Series { label: "diag", points: &pts }],
+            40,
+            10,
+        );
+        assert!(s.contains("demo"));
+        assert!(s.contains('*'));
+        assert!(s.contains("diag"));
+    }
+
+    #[test]
+    fn plot_handles_empty() {
+        let s = ascii_plot("empty", &[], 10, 5);
+        assert!(s.contains("no data"));
+    }
+}

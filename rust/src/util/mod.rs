@@ -1,0 +1,116 @@
+//! Small shared utilities: deterministic RNG, statistics, CSV output and
+//! human-readable formatting.
+
+pub mod csv;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Integer log base 2, rounded down. `ilog2_floor(1) == 0`.
+///
+/// # Panics
+/// Panics if `x == 0`.
+pub fn ilog2_floor(x: usize) -> u32 {
+    assert!(x > 0, "ilog2_floor(0)");
+    usize::BITS - 1 - x.leading_zeros()
+}
+
+/// Integer log base 2, rounded up. `ilog2_ceil(1) == 0`.
+///
+/// # Panics
+/// Panics if `x == 0`.
+pub fn ilog2_ceil(x: usize) -> u32 {
+    let f = ilog2_floor(x);
+    if x.is_power_of_two() {
+        f
+    } else {
+        f + 1
+    }
+}
+
+/// Integer log base `b`, rounded up: the smallest `k` with `b^k >= x`.
+///
+/// This is the number of non-local steps of the locality-aware Bruck
+/// algorithm for `x` regions with `b` processes per region.
+///
+/// # Panics
+/// Panics if `b < 2` or `x == 0`.
+pub fn ilog_ceil(b: usize, x: usize) -> u32 {
+    assert!(b >= 2, "ilog_ceil base must be >= 2");
+    assert!(x > 0, "ilog_ceil(.., 0)");
+    let mut k = 0u32;
+    let mut pow = 1usize;
+    while pow < x {
+        pow = pow.saturating_mul(b);
+        k += 1;
+    }
+    k
+}
+
+/// `b^e` with saturation (used for step distances in loc-bruck).
+pub fn ipow(b: usize, e: u32) -> usize {
+    let mut out = 1usize;
+    for _ in 0..e {
+        out = out.saturating_mul(b);
+    }
+    out
+}
+
+/// True if `x` is a whole power of `b` (`b >= 2`). `is_power_of(1, b)` is true.
+pub fn is_power_of(x: usize, b: usize) -> bool {
+    assert!(b >= 2);
+    if x == 0 {
+        return false;
+    }
+    let mut v = x;
+    while v % b == 0 {
+        v /= b;
+    }
+    v == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_floor_and_ceil() {
+        assert_eq!(ilog2_floor(1), 0);
+        assert_eq!(ilog2_floor(2), 1);
+        assert_eq!(ilog2_floor(3), 1);
+        assert_eq!(ilog2_floor(4), 2);
+        assert_eq!(ilog2_ceil(1), 0);
+        assert_eq!(ilog2_ceil(2), 1);
+        assert_eq!(ilog2_ceil(3), 2);
+        assert_eq!(ilog2_ceil(1024), 10);
+        assert_eq!(ilog2_ceil(1025), 11);
+    }
+
+    #[test]
+    fn logb_ceil() {
+        // 4 regions, 4 ppn -> one non-local step (paper Example 2.1).
+        assert_eq!(ilog_ceil(4, 4), 1);
+        // 16 regions, 4 ppn -> two steps (paper Fig. 6).
+        assert_eq!(ilog_ceil(4, 16), 2);
+        assert_eq!(ilog_ceil(4, 17), 3);
+        assert_eq!(ilog_ceil(2, 1), 0);
+        assert_eq!(ilog_ceil(16, 1024), 3);
+    }
+
+    #[test]
+    fn ipow_saturates() {
+        assert_eq!(ipow(4, 0), 1);
+        assert_eq!(ipow(4, 3), 64);
+        assert_eq!(ipow(usize::MAX, 2), usize::MAX);
+    }
+
+    #[test]
+    fn power_of() {
+        assert!(is_power_of(1, 4));
+        assert!(is_power_of(16, 4));
+        assert!(!is_power_of(8, 4));
+        assert!(!is_power_of(0, 4));
+        assert!(is_power_of(27, 3));
+    }
+}

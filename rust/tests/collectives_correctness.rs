@@ -1,0 +1,179 @@
+//! Integration: every allgather algorithm produces the exact expected
+//! gathered array on every rank, across topology shapes, payload sizes and
+//! element types.
+
+use locag::collectives::{self, Algorithm};
+use locag::comm::{CommWorld, Timing};
+use locag::topology::{Placement, RegionKind, Topology};
+
+/// Run one algorithm over a topology with u64 canonical payloads and
+/// assert exact results on every rank.
+fn check_algo(algo: Algorithm, topo: &Topology, n: usize) {
+    let p = topo.size();
+    let expect = collectives::expected_result(p, n);
+    let run = CommWorld::run(topo, Timing::Wallclock, |c| {
+        let mine = collectives::canonical_contribution(c.rank(), n);
+        collectives::allgather(algo, c, &mine)
+    });
+    for (rank, res) in run.results.iter().enumerate() {
+        let got = res.as_ref().unwrap_or_else(|e| panic!("{algo} rank {rank}: {e}"));
+        assert_eq!(got, &expect, "{algo} rank {rank} wrong result (p={p}, n={n})");
+    }
+}
+
+fn all_shapes() -> Vec<Topology> {
+    vec![
+        Topology::regions(1, 1),
+        Topology::regions(1, 8),
+        Topology::regions(2, 2),
+        Topology::regions(4, 4),
+        Topology::regions(8, 4),
+        Topology::regions(3, 4), // non-power region count
+        Topology::regions(6, 4),
+        Topology::regions(5, 2),
+        Topology::regions(16, 2),
+        Topology::regions(2, 16),
+    ]
+}
+
+#[test]
+fn bruck_all_shapes() {
+    for topo in all_shapes() {
+        check_algo(Algorithm::Bruck, &topo, 3);
+    }
+}
+
+#[test]
+fn ring_all_shapes() {
+    for topo in all_shapes() {
+        check_algo(Algorithm::Ring, &topo, 2);
+    }
+}
+
+#[test]
+fn dissemination_all_shapes() {
+    for topo in all_shapes() {
+        check_algo(Algorithm::Dissemination, &topo, 2);
+    }
+}
+
+#[test]
+fn recursive_doubling_power_of_two_shapes() {
+    for topo in all_shapes() {
+        if topo.size().is_power_of_two() {
+            check_algo(Algorithm::RecursiveDoubling, &topo, 2);
+        }
+    }
+}
+
+#[test]
+fn hierarchical_all_shapes() {
+    for topo in all_shapes() {
+        check_algo(Algorithm::Hierarchical, &topo, 2);
+    }
+}
+
+#[test]
+fn multilane_all_shapes() {
+    for topo in all_shapes() {
+        check_algo(Algorithm::Multilane, &topo, 2);
+    }
+}
+
+#[test]
+fn loc_bruck_all_shapes() {
+    for topo in all_shapes() {
+        check_algo(Algorithm::LocalityBruck, &topo, 2);
+    }
+}
+
+#[test]
+fn system_default_all_shapes() {
+    for topo in all_shapes() {
+        check_algo(Algorithm::SystemDefault, &topo, 2);
+    }
+}
+
+#[test]
+fn loc_bruck_multilevel_on_multisocket_machines() {
+    for (nodes, sockets, cores) in [(2usize, 2usize, 2usize), (4, 2, 4), (2, 4, 2), (3, 2, 2)] {
+        let topo =
+            Topology::machine(nodes, sockets, cores, RegionKind::Node, Placement::Block)
+                .unwrap();
+        check_algo(Algorithm::LocalityBruckMultilevel, &topo, 2);
+    }
+}
+
+#[test]
+fn all_algorithms_under_random_placement() {
+    let topo = Topology::machine(4, 1, 4, RegionKind::Node, Placement::Random { seed: 5 })
+        .unwrap();
+    for algo in Algorithm::ALL {
+        check_algo(algo, &topo, 2);
+    }
+}
+
+#[test]
+fn large_payloads_cross_rendezvous_threshold() {
+    // 2048 u64 = 16 KiB per rank — above the 8 KiB eager cutoff.
+    let topo = Topology::regions(4, 4);
+    for algo in [Algorithm::Bruck, Algorithm::LocalityBruck, Algorithm::Ring] {
+        check_algo(algo, &topo, 2048);
+    }
+}
+
+#[test]
+fn single_element_payloads() {
+    let topo = Topology::regions(4, 4);
+    for algo in Algorithm::ALL {
+        check_algo(algo, &topo, 1);
+    }
+}
+
+#[test]
+fn f32_payloads_roundtrip_exactly() {
+    let topo = Topology::regions(2, 4);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mine: Vec<f32> = (0..3).map(|j| c.rank() as f32 + j as f32 * 0.25).collect();
+        collectives::allgather(Algorithm::LocalityBruck, c, &mine).unwrap()
+    });
+    for res in &run.results {
+        for r in 0..8 {
+            for j in 0..3 {
+                assert_eq!(res[r * 3 + j], r as f32 + j as f32 * 0.25);
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_collectives_on_same_comm_do_not_interfere() {
+    // tags must advance so back-to-back collectives stay isolated
+    let topo = Topology::regions(4, 2);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let a = collectives::allgather(
+            Algorithm::LocalityBruck,
+            c,
+            &[c.rank() as u64],
+        )
+        .unwrap();
+        let b = collectives::allgather(
+            Algorithm::Bruck,
+            c,
+            &[c.rank() as u64 + 100],
+        )
+        .unwrap();
+        let d = collectives::allgather(
+            Algorithm::LocalityBruck,
+            c,
+            &[c.rank() as u64 + 200],
+        )
+        .unwrap();
+        (a, b, d)
+    });
+    for (a, b, d) in &run.results {
+        assert_eq!(a, &(0..8u64).collect::<Vec<_>>());
+        assert_eq!(b, &(100..108u64).collect::<Vec<_>>());
+        assert_eq!(d, &(200..208u64).collect::<Vec<_>>());
+    }
+}

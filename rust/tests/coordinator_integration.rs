@@ -1,0 +1,133 @@
+//! Integration: the full serving pipeline (leader + TP workers + PJRT +
+//! allgather) end to end, for several allgather algorithms and region
+//! splits. Requires `make artifacts`; skips loudly otherwise.
+
+use locag::collectives::Algorithm;
+use locag::coordinator::{serve, ServeConfig};
+use locag::runtime::Manifest;
+
+fn have_artifacts() -> bool {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("SKIP coordinator_integration: {e}");
+            false
+        }
+    }
+}
+
+fn cfg(algo: Algorithm, regions: usize, requests: usize) -> ServeConfig {
+    ServeConfig {
+        artifact_dir: Manifest::default_dir(),
+        algo,
+        regions,
+        requests,
+        warmup: 1,
+        check: true,
+        fused: false,
+    }
+}
+
+#[test]
+fn serve_verifies_with_loc_bruck() {
+    if !have_artifacts() {
+        return;
+    }
+    let rep = serve(&cfg(Algorithm::LocalityBruck, 2, 4)).expect("serve");
+    assert!(rep.verified, "max err {}", rep.max_err);
+    assert!(rep.max_err < 1e-3);
+    assert_eq!(rep.metrics.timings.len(), 4);
+    assert!(rep.metrics.throughput > 0.0);
+    assert!(!rep.output_sample.is_empty());
+}
+
+#[test]
+fn serve_verifies_with_standard_bruck_and_ring() {
+    if !have_artifacts() {
+        return;
+    }
+    for algo in [Algorithm::Bruck, Algorithm::Ring] {
+        let rep = serve(&cfg(algo, 2, 3)).expect("serve");
+        assert!(rep.verified, "{algo}: max err {}", rep.max_err);
+    }
+}
+
+#[test]
+fn serve_single_region_topology() {
+    if !have_artifacts() {
+        return;
+    }
+    // all workers in one region: loc-bruck degenerates to a local bruck
+    let rep = serve(&cfg(Algorithm::LocalityBruck, 1, 3)).expect("serve");
+    assert!(rep.verified);
+    assert_eq!(rep.trace.max_nonlocal_msgs(), 0);
+}
+
+#[test]
+fn serve_rejects_bad_region_split() {
+    if !have_artifacts() {
+        return;
+    }
+    // tp=4 workers cannot split into 3 regions
+    let err = serve(&cfg(Algorithm::LocalityBruck, 3, 2)).unwrap_err();
+    assert!(err.to_string().contains("divide"));
+}
+
+#[test]
+fn serve_traffic_depends_on_algorithm() {
+    if !have_artifacts() {
+        return;
+    }
+    let std = serve(&cfg(Algorithm::Bruck, 2, 3)).expect("serve");
+    let loc = serve(&cfg(Algorithm::LocalityBruck, 2, 3)).expect("serve");
+    assert!(std.verified && loc.verified);
+    // loc-bruck must send strictly fewer non-local bytes per rank
+    assert!(
+        loc.trace.max_nonlocal_bytes() < std.trace.max_nonlocal_bytes(),
+        "loc {} vs std {}",
+        loc.trace.max_nonlocal_bytes(),
+        std.trace.max_nonlocal_bytes()
+    );
+}
+
+#[test]
+fn fused_path_matches_reference_and_unfused() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut fused_cfg = cfg(Algorithm::LocalityBruck, 2, 3);
+    fused_cfg.fused = true;
+    let fused = match serve(&fused_cfg) {
+        Ok(r) => r,
+        Err(e) if e.to_string().contains("fused_final") => {
+            eprintln!("SKIP fused test: artifacts predate fused_final ({e})");
+            return;
+        }
+        Err(e) => panic!("{e}"),
+    };
+    assert!(fused.verified, "fused max err {}", fused.max_err);
+    let unfused = serve(&cfg(Algorithm::LocalityBruck, 2, 3)).expect("serve");
+    // both pipelines answer the same final request
+    let diff: f32 = fused
+        .output_sample
+        .iter()
+        .zip(&unfused.output_sample)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff < 1e-4, "fused vs unfused sample diff {diff}");
+}
+
+#[test]
+fn serve_missing_artifacts_is_clean_error() {
+    let cfg = ServeConfig {
+        artifact_dir: "/nonexistent/locag_artifacts".into(),
+        algo: Algorithm::LocalityBruck,
+        regions: 2,
+        requests: 1,
+        warmup: 0,
+        check: false,
+        fused: false,
+    };
+    let err = serve(&cfg).unwrap_err();
+    assert!(err.to_string().contains("manifest"));
+}

@@ -1,0 +1,184 @@
+//! Integration: the paper's message/byte accounting claims, asserted from
+//! real execution traces (§2–§4).
+
+use locag::collectives::Algorithm;
+use locag::model::MachineParams;
+use locag::sim;
+use locag::topology::{Placement, RegionKind, Topology};
+use locag::util::{ilog2_ceil, ilog_ceil};
+
+fn run(algo: Algorithm, regions: usize, ppr: usize, n: usize) -> sim::AllgatherReport {
+    let topo = Topology::regions(regions, ppr);
+    sim::run_allgather(algo, &topo, &MachineParams::lassen(), n)
+}
+
+#[test]
+fn bruck_sends_log2_p_messages_total() {
+    for (regions, ppr) in [(4usize, 4usize), (8, 4), (16, 2), (8, 8)] {
+        let p = regions * ppr;
+        let rep = run(Algorithm::Bruck, regions, ppr, 2);
+        assert!(rep.verified);
+        // every rank sends exactly ⌈log2 p⌉ messages, all counted
+        assert_eq!(rep.trace.max_total_msgs(), ilog2_ceil(p) as u64);
+        for t in &rep.trace.per_rank {
+            assert_eq!(t.total_msgs(), ilog2_ceil(p) as u64);
+        }
+    }
+}
+
+#[test]
+fn bruck_worst_rank_sends_m_minus_1_values_nonlocal() {
+    // Example 2.1: p=16, 1 value per rank: worst rank sends 15 values and
+    // no local messages (paper §4).
+    let rep = run(Algorithm::Bruck, 4, 4, 1);
+    assert_eq!(rep.trace.max_nonlocal_bytes(), 15 * 4);
+    let worst = rep
+        .trace
+        .per_rank
+        .iter()
+        .max_by_key(|t| t.nonlocal_bytes)
+        .unwrap();
+    assert_eq!(worst.local_msgs, 0, "paper: the worst rank communicates nothing locally");
+}
+
+#[test]
+fn loc_bruck_nonlocal_messages_bounded_by_log_ppr_regions() {
+    for (regions, ppr) in [
+        (4usize, 4usize),
+        (16, 4),
+        (64, 4),
+        (8, 8),
+        (64, 8),
+        (6, 4),
+        (10, 4),
+        (3, 8),
+    ] {
+        let rep = run(Algorithm::LocalityBruck, regions, ppr, 2);
+        assert!(rep.verified, "{regions}x{ppr}");
+        let bound = ilog_ceil(ppr.max(2), regions) as u64;
+        assert!(
+            rep.trace.max_nonlocal_msgs() <= bound,
+            "{regions}x{ppr}: {} > {bound}",
+            rep.trace.max_nonlocal_msgs()
+        );
+    }
+}
+
+#[test]
+fn loc_bruck_power_cases_hit_bound_exactly() {
+    for (regions, ppr, expect) in [(4usize, 4usize, 1u64), (16, 4, 2), (64, 4, 3), (8, 8, 1)] {
+        let rep = run(Algorithm::LocalityBruck, regions, ppr, 2);
+        assert_eq!(rep.trace.max_nonlocal_msgs(), expect, "{regions}x{ppr}");
+    }
+}
+
+#[test]
+fn loc_bruck_nonlocal_bytes_are_a_ppr_fraction() {
+    // paper §4: non-local bytes ≈ b/pℓ vs bruck's ≈ b. Exact on aligned
+    // configs (r a power of pℓ); non-aligned shapes pay ceiling slack for
+    // the wrap-around groups, so we assert on r = pℓ².
+    let (regions, ppr, n) = (64usize, 8usize, 2usize);
+    let std = run(Algorithm::Bruck, regions, ppr, n);
+    let loc = run(Algorithm::LocalityBruck, regions, ppr, n);
+    let ratio =
+        std.trace.max_nonlocal_bytes() as f64 / loc.trace.max_nonlocal_bytes() as f64;
+    // expect roughly pℓ (8); allow slack for the wrap/group effects
+    assert!(ratio > ppr as f64 * 0.5, "ratio {ratio} too small");
+}
+
+#[test]
+fn loc_bruck_local_rank_zero_idles_nonlocally() {
+    let rep = run(Algorithm::LocalityBruck, 8, 4, 2);
+    for (rank, t) in rep.trace.per_rank.iter().enumerate() {
+        if rank % 4 == 0 {
+            assert_eq!(t.nonlocal_msgs, 0, "rank {rank}");
+        }
+    }
+}
+
+#[test]
+fn hierarchical_leaves_workers_idle() {
+    // paper §2.2: "the majority of processes per node sit idle" during
+    // non-local communication.
+    let rep = run(Algorithm::Hierarchical, 8, 8, 2);
+    let idle = rep
+        .trace
+        .per_rank
+        .iter()
+        .filter(|t| t.nonlocal_msgs == 0)
+        .count();
+    assert_eq!(idle, 8 * 8 - 8); // all but the 8 masters
+}
+
+#[test]
+fn multilane_all_ranks_inject() {
+    // paper §2.2: multi-lane utilizes all processes per node.
+    let rep = run(Algorithm::Multilane, 8, 4, 2);
+    for t in &rep.trace.per_rank {
+        assert!(t.nonlocal_msgs > 0);
+    }
+    // but still log2(r) messages per rank — no reduction vs hierarchical
+    assert_eq!(rep.trace.max_nonlocal_msgs(), 3);
+}
+
+#[test]
+fn placement_invariance_of_loc_bruck() {
+    let mk = |pl| {
+        Topology::machine(8, 1, 8, RegionKind::Node, pl).unwrap()
+    };
+    let m = MachineParams::quartz();
+    let base = sim::run_allgather(Algorithm::LocalityBruck, &mk(Placement::Block), &m, 2);
+    for pl in [Placement::RoundRobin, Placement::Random { seed: 1 }, Placement::Random { seed: 2 }] {
+        let rep = sim::run_allgather(Algorithm::LocalityBruck, &mk(pl), &m, 2);
+        assert!(rep.verified);
+        assert_eq!(
+            rep.trace.max_nonlocal_msgs(),
+            base.trace.max_nonlocal_msgs()
+        );
+        assert_eq!(
+            rep.trace.max_nonlocal_bytes(),
+            base.trace.max_nonlocal_bytes()
+        );
+        assert_eq!(rep.trace.total_nonlocal_bytes(), base.trace.total_nonlocal_bytes());
+        // modeled time identical too (same schedule in logical space)
+        assert!((rep.vtime - base.vtime).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn standard_bruck_is_placement_sensitive() {
+    // The contrast claim: bruck's non-local traffic *does* change when
+    // ranks are scattered.
+    let m = MachineParams::quartz();
+    let block = sim::run_allgather(
+        Algorithm::Bruck,
+        &Topology::machine(8, 1, 8, RegionKind::Node, Placement::Block).unwrap(),
+        &m,
+        2,
+    );
+    let rr = sim::run_allgather(
+        Algorithm::Bruck,
+        &Topology::machine(8, 1, 8, RegionKind::Node, Placement::RoundRobin).unwrap(),
+        &m,
+        2,
+    );
+    assert_ne!(
+        block.trace.total_nonlocal_bytes(),
+        rr.trace.total_nonlocal_bytes()
+    );
+}
+
+#[test]
+fn improvement_grows_with_ppr_in_measured_runs() {
+    // paper Figs. 9/10: "performance improvements are increased with the
+    // number of processes per region" — aligned configs, fixed regions.
+    let mut prev = 0.0;
+    for ppr in [4usize, 8, 64] {
+        let std = run(Algorithm::Bruck, 64, ppr, 2);
+        let loc = run(Algorithm::LocalityBruck, 64, ppr, 2);
+        let ratio = std.vtime / loc.vtime;
+        assert!(ratio > prev, "ppr={ppr}: {ratio} <= {prev}");
+        prev = ratio;
+    }
+    assert!(prev > 1.0);
+}

@@ -1,0 +1,153 @@
+//! Integration: the closed-form models (§4, Eq. 3/4) agree with the
+//! virtual-time execution of the real implementations on power-of-two
+//! configurations — the two views of "cost" in the paper must be one.
+
+use locag::collectives::Algorithm;
+use locag::model::closed_form::ModelConfig;
+use locag::model::MachineParams;
+use locag::sim;
+use locag::topology::Topology;
+
+fn vtime(algo: Algorithm, regions: usize, ppr: usize, n_vals: usize) -> f64 {
+    let topo = Topology::regions(regions, ppr);
+    let rep = sim::run_allgather(algo, &topo, &MachineParams::lassen(), n_vals);
+    assert!(rep.verified, "{algo} {regions}x{ppr}: {:?}", rep.errors);
+    rep.vtime
+}
+
+fn model() -> ModelConfig {
+    ModelConfig::lassen()
+}
+
+const TOL: f64 = 1e-9; // seconds; both sides are exact f64 sums
+
+#[test]
+fn bruck_matches_eq3_exactly() {
+    for (regions, ppr, n_vals) in [
+        (4usize, 4usize, 1usize),
+        (4, 4, 2),
+        (16, 4, 2),
+        (8, 8, 4),
+        (2, 2, 1),
+    ] {
+        let p = regions * ppr;
+        let m = model().bruck(p, n_vals * 4);
+        let v = vtime(Algorithm::Bruck, regions, ppr, n_vals);
+        assert!(
+            (m - v).abs() < TOL,
+            "bruck p={p}: model {m:.3e} vs sim {v:.3e}"
+        );
+    }
+}
+
+#[test]
+fn loc_bruck_matches_eq4_exactly_on_power_cases() {
+    for (regions, ppr, n_vals) in [
+        (4usize, 4usize, 1usize),
+        (16, 4, 2),
+        (64, 4, 1),
+        (8, 8, 2),
+        (64, 8, 2),
+    ] {
+        let p = regions * ppr;
+        let m = model().loc_bruck(p, ppr, n_vals * 4);
+        let v = vtime(Algorithm::LocalityBruck, regions, ppr, n_vals);
+        assert!(
+            (m - v).abs() < TOL,
+            "loc-bruck {regions}x{ppr}: model {m:.3e} vs sim {v:.3e}"
+        );
+    }
+}
+
+#[test]
+fn ring_matches_model() {
+    for (regions, ppr) in [(4usize, 4usize), (8, 2)] {
+        let p = regions * ppr;
+        let m = model().ring(p, 8);
+        let v = vtime(Algorithm::Ring, regions, ppr, 2);
+        // ring model charges every step at non-local cost; the execution's
+        // critical path crosses region boundaries on every step with block
+        // placement, so these agree exactly too
+        assert!(
+            (m - v).abs() < TOL,
+            "ring p={p}: model {m:.3e} vs sim {v:.3e}"
+        );
+    }
+}
+
+#[test]
+fn recursive_doubling_matches_model() {
+    for (regions, ppr) in [(4usize, 4usize), (8, 4), (4, 8)] {
+        let p = regions * ppr;
+        let m = model().recursive_doubling(p, ppr, 8);
+        let v = vtime(Algorithm::RecursiveDoubling, regions, ppr, 2);
+        assert!(
+            (m - v).abs() < TOL,
+            "rd p={p}: model {m:.3e} vs sim {v:.3e}"
+        );
+    }
+}
+
+#[test]
+fn multilane_matches_model() {
+    for (regions, ppr) in [(4usize, 4usize), (8, 4)] {
+        let p = regions * ppr;
+        let m = model().multilane(p, ppr, 8);
+        let v = vtime(Algorithm::Multilane, regions, ppr, 2);
+        assert!(
+            (m - v).abs() < TOL,
+            "multilane p={p}: model {m:.3e} vs sim {v:.3e}"
+        );
+    }
+}
+
+#[test]
+fn hierarchical_model_tracks_sim_within_slack() {
+    // The closed form charges the gather serially at the master; the
+    // execution's arrival-time max can be slightly cheaper. Tolerate 30%.
+    for (regions, ppr) in [(4usize, 4usize), (8, 8)] {
+        let p = regions * ppr;
+        let m = model().hierarchical(p, ppr, 8);
+        let v = vtime(Algorithm::Hierarchical, regions, ppr, 2);
+        let rel = (m - v).abs() / m.max(v);
+        assert!(
+            rel < 0.3,
+            "hierarchical p={p}: model {m:.3e} vs sim {v:.3e} (rel {rel:.2})"
+        );
+    }
+}
+
+#[test]
+fn eager_rendezvous_transition_visible_in_both() {
+    // Crossing the 8 KiB threshold must bend both curves the same way.
+    let cfg = model();
+    let small = cfg.bruck(16, 1024); // blocks < 8 KiB
+    let large = cfg.bruck(16, 4096); // later blocks > 8 KiB
+    assert!(large > small);
+    let v_small = vtime(Algorithm::Bruck, 4, 4, 256); // 1 KiB per rank
+    let v_large = vtime(Algorithm::Bruck, 4, 4, 1024); // 4 KiB per rank
+    assert!(
+        (v_small - cfg.bruck(16, 1024)).abs() < TOL,
+        "{v_small} vs {}",
+        cfg.bruck(16, 1024)
+    );
+    assert!((v_large - cfg.bruck(16, 4096)).abs() < TOL);
+}
+
+#[test]
+fn uniform_machine_collapses_locality_gap() {
+    // On a machine with no locality (Eq. 2 == Eq. 1) the locality-aware
+    // algorithm must NOT beat bruck — its benefit comes only from the
+    // class split.
+    let m = MachineParams::uniform(1e-6, 1e-9);
+    let topo = Topology::regions(16, 4);
+    let std = sim::run_allgather(Algorithm::Bruck, &topo, &m, 2);
+    let loc = sim::run_allgather(Algorithm::LocalityBruck, &topo, &m, 2);
+    assert!(std.verified && loc.verified);
+    assert!(
+        loc.vtime >= std.vtime * 0.99,
+        "no-locality machine: loc {} must not beat bruck {}",
+        loc.vtime,
+        std.vtime
+    );
+}

@@ -1,0 +1,246 @@
+//! Property tests (in-tree testkit, see DESIGN.md): allgather invariants
+//! over randomly generated topologies, payload sizes and placements.
+
+use locag::collectives::{self, Algorithm};
+use locag::comm::{CommWorld, Timing};
+use locag::model::MachineParams;
+use locag::sim;
+use locag::testkit::{check, Config};
+use locag::topology::{Placement, RegionKind, Topology};
+use locag::util::{ilog2_ceil, ilog_ceil};
+
+/// Every algorithm returns the exact expected array on every rank for any
+/// (regions, ppr, n) the algorithm supports.
+#[test]
+fn prop_allgather_correct_on_random_shapes() {
+    check(
+        Config::default().cases(24).named("allgather-correct"),
+        |g| {
+            let (regions, ppr) = g.region_shape(64);
+            let n = g.payload_len(64);
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let algo = *g.choose(&Algorithm::ALL);
+            if algo == Algorithm::RecursiveDoubling && !p.is_power_of_two() {
+                return; // documented precondition
+            }
+            let expect = collectives::expected_result(p, n);
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                let mine = collectives::canonical_contribution(c.rank(), n);
+                collectives::allgather(algo, c, &mine)
+            });
+            for (rank, res) in run.results.iter().enumerate() {
+                let got = res
+                    .as_ref()
+                    .unwrap_or_else(|e| panic!("{algo} {regions}x{ppr} n={n} rank {rank}: {e}"));
+                assert_eq!(
+                    got, &expect,
+                    "{algo} {regions}x{ppr} n={n} rank {rank}"
+                );
+            }
+        },
+    );
+}
+
+/// Paper §4 message-count invariants hold on every random shape.
+#[test]
+fn prop_message_count_invariants() {
+    check(Config::default().cases(24).named("msg-counts"), |g| {
+        let (regions, ppr) = g.region_shape(64);
+        let n = g.payload_len(8);
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let m = MachineParams::lassen();
+
+        let std = sim::run_allgather(Algorithm::Bruck, &topo, &m, n);
+        assert!(std.verified);
+        assert_eq!(std.trace.max_total_msgs(), ilog2_ceil(p) as u64);
+        // all bruck traffic from the worst region-0 rank is bounded by the
+        // total data size
+        assert!(std.trace.max_nonlocal_bytes() <= (p * n * 4) as u64);
+
+        let loc = sim::run_allgather(Algorithm::LocalityBruck, &topo, &m, n);
+        assert!(loc.verified);
+        let bound = if regions > 1 && ppr > 1 {
+            ilog_ceil(ppr, regions) as u64
+        } else if ppr == 1 {
+            ilog2_ceil(p) as u64 // bruck fallback
+        } else {
+            0
+        };
+        assert!(
+            loc.trace.max_nonlocal_msgs() <= bound,
+            "{regions}x{ppr}: {} > {bound}",
+            loc.trace.max_nonlocal_msgs()
+        );
+    });
+}
+
+/// The virtual clock is monotone in data size: more bytes never model
+/// faster, for every algorithm.
+#[test]
+fn prop_vtime_monotone_in_size() {
+    check(Config::default().cases(12).named("vtime-monotone"), |g| {
+        let (regions, ppr) = g.region_shape(32);
+        let topo = Topology::regions(regions, ppr);
+        let m = MachineParams::quartz();
+        let algo = *g.choose(&[
+            Algorithm::Bruck,
+            Algorithm::LocalityBruck,
+            Algorithm::Ring,
+            Algorithm::Multilane,
+        ]);
+        let n1 = g.payload_len(32);
+        let n2 = n1 * 2;
+        let t1 = sim::run_allgather(algo, &topo, &m, n1);
+        let t2 = sim::run_allgather(algo, &topo, &m, n2);
+        assert!(t1.verified && t2.verified);
+        assert!(
+            t2.vtime >= t1.vtime - 1e-12,
+            "{algo} {regions}x{ppr}: n={n1}→{} but n={n2}→{}",
+            t1.vtime,
+            t2.vtime
+        );
+    });
+}
+
+/// Placement never changes loc-bruck's non-local traffic (paper §3).
+#[test]
+fn prop_loc_bruck_placement_invariance() {
+    check(Config::default().cases(10).named("placement-invariance"), |g| {
+        let nodes = *g.choose(&[2usize, 4, 8]);
+        let cores = *g.choose(&[2usize, 4, 8]);
+        let seed_a = g.u64();
+        let seed_b = g.u64();
+        let m = MachineParams::quartz();
+        let mk = |pl| Topology::machine(nodes, 1, cores, RegionKind::Node, pl).unwrap();
+        let a = sim::run_allgather(
+            Algorithm::LocalityBruck,
+            &mk(Placement::Random { seed: seed_a }),
+            &m,
+            2,
+        );
+        let b = sim::run_allgather(
+            Algorithm::LocalityBruck,
+            &mk(Placement::Random { seed: seed_b }),
+            &m,
+            2,
+        );
+        assert!(a.verified && b.verified);
+        assert_eq!(a.trace.max_nonlocal_msgs(), b.trace.max_nonlocal_msgs());
+        assert_eq!(a.trace.total_nonlocal_bytes(), b.trace.total_nonlocal_bytes());
+        assert!((a.vtime - b.vtime).abs() < 1e-12);
+    });
+}
+
+/// Total bytes gathered is conserved: every algorithm moves at least the
+/// information-theoretic minimum (each rank must receive (p-1)·n elements
+/// worth of data from somewhere).
+#[test]
+fn prop_total_traffic_lower_bound() {
+    check(Config::default().cases(12).named("traffic-bound"), |g| {
+        let (regions, ppr) = g.region_shape(32);
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        if p == 1 {
+            return;
+        }
+        let n = g.payload_len(8);
+        let algo = *g.choose(&[
+            Algorithm::Bruck,
+            Algorithm::LocalityBruck,
+            Algorithm::Ring,
+            Algorithm::Hierarchical,
+            Algorithm::Multilane,
+        ]);
+        let rep = sim::run_allgather(algo, &topo, &MachineParams::lassen(), n);
+        assert!(rep.verified);
+        let min_total = (p * (p - 1) * n * 4) as u64; // bytes received overall
+        assert!(
+            rep.trace.total_bytes() >= min_total,
+            "{algo} {regions}x{ppr} n={n}: moved {} < floor {min_total}",
+            rep.trace.total_bytes()
+        );
+    });
+}
+
+/// Alltoall invariants: all three implementations agree with each other
+/// on random shapes, and the locality-aware variant never moves more
+/// non-local bytes than Bruck alltoall.
+#[test]
+fn prop_alltoall_agreement() {
+    use locag::collectives::alltoall;
+    check(Config::default().cases(12).named("alltoall-agree"), |g| {
+        let (regions, ppr) = g.region_shape(24);
+        let n = g.payload_len(6);
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let send = |rank: usize| -> Vec<u64> {
+            (0..p * n)
+                .map(|x| (rank * 10_000 + (x / n) * 100 + x % n) as u64)
+                .collect()
+        };
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let s = send(c.rank());
+            let a = alltoall::pairwise(c, &s).unwrap();
+            let b = alltoall::bruck(c, &s).unwrap();
+            let l = alltoall::loc_aware(c, &s).unwrap();
+            (a == b, b == l)
+        });
+        for (rank, &(ab, bl)) in run.results.iter().enumerate() {
+            assert!(ab && bl, "{regions}x{ppr} n={n} rank {rank}: mismatch");
+        }
+    });
+}
+
+/// The locality-aware Bruck and its allgatherv variant always produce the
+/// same result with identical non-local traffic.
+#[test]
+fn prop_loc_bruck_variants_agree() {
+    check(Config::default().cases(12).named("variant-agree"), |g| {
+        let (regions, ppr) = g.region_shape(48);
+        let n = g.payload_len(16);
+        let topo = Topology::regions(regions, ppr);
+        let m = MachineParams::lassen();
+        let a = sim::run_allgather(Algorithm::LocalityBruck, &topo, &m, n);
+        let b = sim::run_allgather(Algorithm::LocalityBruckV, &topo, &m, n);
+        assert!(a.verified && b.verified, "{regions}x{ppr} n={n}");
+        assert_eq!(
+            a.trace.total_nonlocal_bytes(),
+            b.trace.total_nonlocal_bytes(),
+            "{regions}x{ppr}"
+        );
+        assert_eq!(a.trace.max_nonlocal_msgs(), b.trace.max_nonlocal_msgs());
+        // variant never moves MORE local bytes
+        let la: u64 = a.trace.per_rank.iter().map(|t| t.local_bytes).sum();
+        let lb: u64 = b.trace.per_rank.iter().map(|t| t.local_bytes).sum();
+        assert!(lb <= la, "{regions}x{ppr}: variant {lb} > default {la}");
+    });
+}
+
+/// The locality-aware allreduce equals recursive doubling on every
+/// supported random shape.
+#[test]
+fn prop_allreduce_agreement() {
+    use locag::collectives::allreduce;
+    check(Config::default().cases(12).named("allreduce-agree"), |g| {
+        let ppr = g.pow2_upto(8);
+        let regions = g.usize_in(1, 8);
+        let p = regions * ppr;
+        if !p.is_power_of_two() && !allreduce::locality_rounds_align(regions, ppr) {
+            return; // fallback path requires power-of-two p
+        }
+        let n = g.payload_len(8);
+        let topo = Topology::regions(regions, ppr);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mine: Vec<u64> = (0..n).map(|j| (c.rank() * 7 + j) as u64).collect();
+            allreduce::allreduce_locality_aware(c, &mine)
+        });
+        let expect: Vec<u64> = (0..n)
+            .map(|j| (0..p).map(|r| (r * 7 + j) as u64).sum())
+            .collect();
+        for res in &run.results {
+            assert_eq!(res.as_ref().unwrap(), &expect, "{regions}x{ppr} n={n}");
+        }
+    });
+}

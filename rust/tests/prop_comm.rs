@@ -1,0 +1,179 @@
+//! Property tests for the mini-MPI substrate itself: matching, ordering,
+//! datatype round-trips, sub-communicator isolation and clock semantics.
+
+use locag::comm::{self, CommWorld, Timing};
+use locag::model::MachineParams;
+use locag::testkit::{check, Config};
+use locag::topology::Topology;
+
+/// Random many-to-many tagged exchanges deliver exactly the sent payloads
+/// (no loss, no duplication, no cross-matching).
+#[test]
+fn prop_random_exchange_delivers_exactly() {
+    check(Config::default().cases(16).named("exchange"), |g| {
+        let p = g.usize_in(2, 12);
+        let rounds = g.usize_in(1, 5);
+        let topo = Topology::regions(1, p);
+        // Precompute a random communication plan: per round, a permutation.
+        let mut plans: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..rounds {
+            let mut perm: Vec<usize> = (0..p).collect();
+            // Fisher-Yates with the testkit generator
+            for i in (1..p).rev() {
+                let j = g.usize_in(0, i);
+                perm.swap(i, j);
+            }
+            plans.push(perm);
+        }
+        let plans = &plans;
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let me = c.rank();
+            let mut got = Vec::new();
+            for (round, perm) in plans.iter().enumerate() {
+                // send to perm[me]; receive from the inverse
+                let dst = perm[me];
+                let src = perm.iter().position(|&x| x == me).unwrap();
+                let payload = vec![(me * 1000 + round) as u64];
+                c.send(&payload, dst, round as u64).unwrap();
+                let r: Vec<u64> = c.recv(src, round as u64).unwrap();
+                got.push((src, r[0]));
+            }
+            got
+        });
+        for (me, rounds_got) in run.results.iter().enumerate() {
+            for (round, &(src, val)) in rounds_got.iter().enumerate() {
+                assert_eq!(val, (src * 1000 + round) as u64, "rank {me} round {round}");
+            }
+        }
+    });
+}
+
+/// FIFO: messages between one (src, dst, tag) stream arrive in send order.
+#[test]
+fn prop_fifo_per_stream() {
+    check(Config::default().cases(10).named("fifo"), |g| {
+        let burst = g.usize_in(1, 50);
+        let topo = Topology::regions(1, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            if c.rank() == 0 {
+                for i in 0..burst {
+                    c.send(&[i as u64], 1, 7).unwrap();
+                }
+                Vec::new()
+            } else {
+                (0..burst)
+                    .map(|_| c.recv::<u64>(0, 7).unwrap()[0])
+                    .collect::<Vec<u64>>()
+            }
+        });
+        assert_eq!(run.results[1], (0..burst as u64).collect::<Vec<_>>());
+    });
+}
+
+/// Sub-communicators never leak messages across contexts even with
+/// identical tags and overlapping memberships.
+#[test]
+fn prop_subcomm_isolation() {
+    check(Config::default().cases(10).named("subcomm-isolation"), |g| {
+        let half = g.usize_in(1, 4) * 2;
+        let p = half * 2;
+        let topo = Topology::regions(2, half);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let local = c.split_regions().unwrap();
+            let ls = local.size();
+            // same tag 3 on both comms: world ring at distance `half`,
+            // local ring at distance 1
+            let world_peer = (c.rank() + half) % p;
+            c.send(&[c.rank() as u64], world_peer, 3).unwrap();
+            local
+                .send(&[1000 + c.world_rank() as u64], (local.rank() + 1) % ls, 3)
+                .unwrap();
+            let w: Vec<u64> = c.recv((c.rank() + p - half) % p, 3).unwrap();
+            let local_src = (local.rank() + ls - 1) % ls;
+            let l: Vec<u64> = local.recv(local_src, 3).unwrap();
+            let expected_local = 1000 + local.world_rank_of(local_src) as u64;
+            (w[0], l[0], expected_local)
+        });
+        for (rank, &(w, l, want_l)) in run.results.iter().enumerate() {
+            assert_eq!(w as usize, (rank + p - half) % p, "world leak at {rank}");
+            assert_eq!(l, want_l, "local leak at {rank}");
+        }
+    });
+}
+
+/// Clock semantics: a send chain of k hops on an α-only machine advances
+/// the final clock by exactly k·α; barrier then equalizes everyone at max.
+#[test]
+fn prop_clock_chain_and_barrier() {
+    check(Config::default().cases(10).named("clock-chain"), |g| {
+        let p = g.usize_in(2, 10);
+        let alpha = 1.0 + g.usize_in(0, 5) as f64;
+        let topo = Topology::regions(1, p);
+        let m = MachineParams::uniform(alpha, 0.0);
+        let run = CommWorld::run(&topo, Timing::Virtual(m), |c| {
+            let r = c.rank();
+            if r > 0 {
+                c.recv::<u8>(r - 1, 1).unwrap();
+            }
+            if r < p - 1 {
+                c.send(&[0u8], r + 1, 1).unwrap();
+            }
+            c.barrier().unwrap();
+            c.clock()
+        });
+        let expect = (p - 1) as f64 * alpha;
+        for (r, &t) in run.results.iter().enumerate() {
+            assert!(
+                (t - expect).abs() < 1e-9,
+                "rank {r}: clock {t} vs expected {expect}"
+            );
+        }
+    });
+}
+
+/// Datatype round-trips: arbitrary u64 payloads survive the byte layer for
+/// every Pod width.
+#[test]
+fn prop_datatype_roundtrip() {
+    check(Config::default().cases(20).named("datatypes"), |g| {
+        let len = g.usize_in(0, 200);
+        let xs: Vec<u64> = (0..len).map(|_| g.u64()).collect();
+        let bytes = comm::to_bytes(&xs);
+        assert_eq!(comm::from_bytes::<u64>(&bytes).unwrap(), xs);
+        // reinterpret as u8 and back preserves content
+        let as_u8: Vec<u8> = comm::from_bytes::<u8>(&bytes).unwrap();
+        assert_eq!(comm::to_bytes(&as_u8), bytes);
+        // f64 bit patterns survive (NaN-safe: compare bits)
+        let fs: Vec<f64> = xs.iter().map(|&x| f64::from_bits(x)).collect();
+        let back: Vec<f64> = comm::from_bytes(&comm::to_bytes(&fs)).unwrap();
+        assert_eq!(
+            back.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            xs
+        );
+    });
+}
+
+/// reset_stats always yields a clean slate regardless of prior traffic.
+#[test]
+fn prop_reset_stats_clean() {
+    check(Config::default().cases(8).named("reset"), |g| {
+        let p = g.usize_in(2, 8);
+        let msgs = g.usize_in(0, 10);
+        let topo = Topology::regions(1, p);
+        let m = MachineParams::uniform(1.0, 1e-9);
+        let run = CommWorld::run(&topo, Timing::Virtual(m), |c| {
+            for i in 0..msgs {
+                let dst = (c.rank() + 1) % p;
+                let src = (c.rank() + p - 1) % p;
+                c.send(&[i as u64], dst, i as u64).unwrap();
+                c.recv::<u64>(src, i as u64).unwrap();
+            }
+            c.reset_stats().unwrap();
+            (c.clock(), c.trace_snapshot().total_msgs())
+        });
+        for &(t, n) in &run.results {
+            assert_eq!(t, 0.0);
+            assert_eq!(n, 0);
+        }
+    });
+}

@@ -1,0 +1,101 @@
+//! Integration: the PJRT runtime loads and executes the AOT artifacts
+//! produced by `make artifacts`, and the numerics match the in-Rust
+//! reference (which in turn matches the pytest-validated jnp oracle).
+//!
+//! Skipped gracefully (with a loud message) if artifacts are missing, so
+//! `cargo test` works before the first `make artifacts`; `make test`
+//! always builds artifacts first.
+
+use locag::coordinator::params::{max_abs_diff, ModelParams};
+use locag::runtime::{Engine, Manifest};
+
+fn artifacts_or_skip() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_artifacts: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_three_artifacts() {
+    let Some(m) = artifacts_or_skip() else { return };
+    for name in ["partial_fwd", "final_fwd", "rotate"] {
+        assert!(m.artifact(name).is_ok(), "missing {name}");
+    }
+    assert!(m.model.tp >= 1);
+    assert_eq!(m.model.d_hidden % m.model.tp, 0);
+}
+
+#[test]
+fn partial_forward_matches_reference() {
+    let Some(_) = artifacts_or_skip() else { return };
+    let engine = Engine::load(Manifest::default_dir()).expect("engine");
+    let dims = engine.manifest.model;
+    let params = ModelParams::generate(dims, 0.0);
+    let x = params.example_batch(1.0);
+    let shard = params.w1_shard(0);
+    let exe = engine.executable("partial_fwd").unwrap();
+    let got = exe.run_f32(&[&x, &shard]).expect("execute");
+
+    // rust reference: gelu(x @ w1_shard)
+    let (b, d, hs) = (dims.batch, dims.d_model, dims.hidden_shard());
+    let mut want = vec![0f32; b * hs];
+    locag::coordinator::params::matmul(&x, &shard, &mut want, b, d, hs);
+    for v in want.iter_mut() {
+        *v = locag::coordinator::params::gelu(*v);
+    }
+    let err = max_abs_diff(&got, &want);
+    assert!(err < 1e-4, "partial_fwd err {err}");
+}
+
+#[test]
+fn final_forward_matches_reference() {
+    let Some(_) = artifacts_or_skip() else { return };
+    let engine = Engine::load(Manifest::default_dir()).expect("engine");
+    let dims = engine.manifest.model;
+    let params = ModelParams::generate(dims, 0.0);
+    let (b, h, o) = (dims.batch, dims.d_hidden, dims.d_out);
+    let hbuf: Vec<f32> = (0..b * h).map(|i| ((i % 37) as f32 - 18.0) * 0.05).collect();
+    let exe = engine.executable("final_fwd").unwrap();
+    let got = exe.run_f32(&[&hbuf, &params.w2]).expect("execute");
+    let mut want = vec![0f32; b * o];
+    locag::coordinator::params::matmul(&hbuf, &params.w2, &mut want, b, h, o);
+    let err = max_abs_diff(&got, &want);
+    assert!(err < 1e-4, "final_fwd err {err}");
+}
+
+#[test]
+fn rotate_artifact_is_bruck_rotation() {
+    let Some(_) = artifacts_or_skip() else { return };
+    let engine = Engine::load(Manifest::default_dir()).expect("engine");
+    let dims = engine.manifest.model;
+    let exe = engine.executable("rotate").unwrap();
+    let n_flat = exe.spec.inputs[0].elems();
+    let p = dims.tp;
+    let blk = n_flat / p;
+    let buf: Vec<f32> = (0..n_flat).map(|i| i as f32).collect();
+    for shift in 0..p {
+        let got = exe.run_rotate(&buf, shift as i32).expect("rotate");
+        // expected: out[k] = block[(k - shift) mod p] — same as
+        // collectives::bruck::rotate_down on f32 blocks
+        let want = locag::collectives::bruck::rotate_down(&buf, blk, shift);
+        assert_eq!(got, want, "shift {shift}");
+    }
+}
+
+#[test]
+fn shape_validation_errors_cleanly() {
+    let Some(_) = artifacts_or_skip() else { return };
+    let engine = Engine::load(Manifest::default_dir()).expect("engine");
+    let exe = engine.executable("partial_fwd").unwrap();
+    // wrong arity
+    assert!(exe.run_f32(&[&[0.0]]).is_err());
+    // wrong shape
+    let dims = engine.manifest.model;
+    let x = vec![0f32; dims.batch * dims.d_model];
+    assert!(exe.run_f32(&[&x, &[0.0]]).is_err());
+}
