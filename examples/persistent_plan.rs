@@ -1,0 +1,80 @@
+//! Persistent plans: the serving-loop shape of the collective API.
+//!
+//! A tensor-parallel server issues the *same* allgather — same
+//! communicator, same shape — for every request. The one-shot API pays
+//! group derivation, sub-communicator construction, schedule computation
+//! and output allocation on every call; a persistent `AllgatherPlan` pays
+//! them once. This example measures both forms over the identical
+//! workload and shows the registry route for name-based planning.
+//!
+//! Run with: `cargo run --release --example persistent_plan`
+
+use std::time::Instant;
+
+use locag::prelude::*;
+
+fn main() {
+    let topo = Topology::regions(8, 4); // 32 ranks, 8 regions
+    let p = topo.size();
+    let n = 256usize; // u64 elements per rank
+    let iters = 2000u32;
+
+    println!("{p} ranks ({} regions x 4), {n} u64/rank, {iters} operations\n", 8);
+
+    for algo in [Algorithm::Bruck, Algorithm::LocalityBruck] {
+        // --- one-shot: plan + allocate every call ------------------------
+        let t = Instant::now();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mine = vec![c.rank() as u64; n];
+            let mut last = 0u64;
+            for _ in 0..iters {
+                let out = locag::collectives::allgather(algo, c, &mine).expect("allgather");
+                last = out[out.len() - 1];
+            }
+            last
+        });
+        let one_shot = t.elapsed().as_secs_f64();
+        assert!(run.results.iter().all(|&x| x == (p - 1) as u64));
+
+        // --- persistent: plan once, execute per iteration ----------------
+        let subs_before = locag::comm::sub_comms_built();
+        let t = Instant::now();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = locag::collectives::plan_allgather::<u64>(algo, c, Shape::elems(n))
+                .expect("plan");
+            let mut out = vec![0u64; n * p];
+            let mine = vec![c.rank() as u64; n];
+            for _ in 0..iters {
+                plan.execute(&mine, &mut out).expect("execute");
+            }
+            out[n * p - 1]
+        });
+        let planned = t.elapsed().as_secs_f64();
+        assert!(run.results.iter().all(|&x| x == (p - 1) as u64));
+        let subs_built = locag::comm::sub_comms_built() - subs_before;
+
+        println!(
+            "{:<12} one-shot {:>8.1} ms   planned {:>8.1} ms   ({:.2}x)   sub-comms built: {}",
+            algo.name(),
+            one_shot * 1e3,
+            planned * 1e3,
+            one_shot / planned,
+            subs_built,
+        );
+    }
+
+    // --- the registry route: plan by name, extensible without dispatch ---
+    println!("\nregistry names: {}", Registry::<u64>::standard().names().join(", "));
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let registry = Registry::<u64>::standard();
+        // names are case-insensitive
+        let mut plan = registry.plan("LOC-BRUCK", c, Shape::elems(4)).expect("plan by name");
+        let mut out = vec![0u64; 4 * p];
+        plan.execute(&[9, 9, 9, c.rank() as u64], &mut out).expect("execute");
+        out[4 * c.rank() + 3]
+    });
+    for (rank, &v) in run.results.iter().enumerate() {
+        assert_eq!(v, rank as u64);
+    }
+    println!("planned by registry name \"LOC-BRUCK\" (case-insensitive) ✓");
+}

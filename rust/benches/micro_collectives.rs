@@ -6,7 +6,7 @@
 //! Run: `cargo bench --bench micro_collectives`
 
 use locag::bench_harness::measure_budget;
-use locag::collectives::{self, Algorithm};
+use locag::collectives::{self, Algorithm, Shape};
 use locag::comm::{CommWorld, Timing};
 use locag::topology::Topology;
 
@@ -35,6 +35,61 @@ fn main() {
                     let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
                         let mine = collectives::canonical_contribution(c.rank(), n);
                         collectives::allgather(algo, c, &mine).unwrap().len()
+                    });
+                    std::hint::black_box(run.results[0]);
+                },
+            );
+            println!("{}", m.report_line());
+        }
+        println!();
+    }
+
+    // Planned vs one-shot: the amortization the persistent API buys. Each
+    // iteration runs EXECS operations inside a live world; the planned
+    // variant plans once outside the measured loop shape (per world), the
+    // one-shot variant re-plans and re-allocates per operation.
+    const EXECS: usize = 64;
+    for (regions, ppr, n) in [(8usize, 4usize, 2usize), (8, 4, 1024)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        for algo in [Algorithm::Bruck, Algorithm::LocalityBruck] {
+            let m = measure_budget(
+                &format!("one-shot/{}/{}x{}x{}x{}ops", algo.name(), regions, ppr, n, EXECS),
+                1,
+                0.3,
+                5,
+                || {
+                    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                        let mine = collectives::canonical_contribution(c.rank(), n);
+                        let mut acc = 0usize;
+                        for _ in 0..EXECS {
+                            acc += collectives::allgather(algo, c, &mine).unwrap().len();
+                        }
+                        acc
+                    });
+                    std::hint::black_box(run.results[0]);
+                },
+            );
+            println!("{}", m.report_line());
+            let m = measure_budget(
+                &format!("planned /{}/{}x{}x{}x{}ops", algo.name(), regions, ppr, n, EXECS),
+                1,
+                0.3,
+                5,
+                || {
+                    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                        let mine = collectives::canonical_contribution(c.rank(), n);
+                        let mut plan = collectives::plan_allgather::<u64>(
+                            algo,
+                            c,
+                            Shape::elems(n),
+                        )
+                        .unwrap();
+                        let mut out = vec![0u64; n * p];
+                        for _ in 0..EXECS {
+                            plan.execute(&mine, &mut out).unwrap();
+                        }
+                        out.len()
                     });
                     std::hint::black_box(run.results[0]);
                 },

@@ -21,8 +21,23 @@ fn machine_by_name(name: &str) -> Result<MachineParams> {
 }
 
 fn algo_by_name(name: &str) -> Result<Algorithm> {
-    Algorithm::parse(name)
-        .ok_or_else(|| Error::Precondition(format!("unknown algorithm '{name}'")))
+    // Case-insensitive; unknown names list every valid name.
+    Algorithm::parse_or_err(name)
+}
+
+/// `locag algos` — list the algorithm registry.
+pub fn algos(_args: &Args) -> Result<i32> {
+    use crate::collectives::Registry;
+    println!("registered allgather algorithms (names are case-insensitive):\n");
+    for (name, summary) in Registry::<u32>::standard().catalog() {
+        println!("  {name:<20} {summary}");
+    }
+    println!(
+        "\nEach algorithm supports one-shot use (`collectives::allgather`) and\n\
+         persistent plans (`collectives::plan_allgather` / `Registry::plan`):\n\
+         plan once, execute many times with zero setup or allocation."
+    );
+    Ok(0)
 }
 
 /// `locag quickstart` — the paper's Example 2.1 walkthrough.

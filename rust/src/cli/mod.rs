@@ -29,6 +29,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     args.positional.remove(0);
     match cmd.as_str() {
         "quickstart" => commands::quickstart(&args),
+        "algos" => commands::algos(&args),
         "allgather" => commands::allgather(&args),
         "figure" => commands::figure(&args),
         "pingpong" => commands::pingpong(&args),
@@ -57,6 +58,7 @@ USAGE: locag <command> [options]
 COMMANDS
   quickstart   Walk through paper Example 2.1 (16 ranks, 4 regions):
                per-algorithm traffic tables and modeled times.
+  algos        List the algorithm registry (name + one-line summary).
   allgather    Run one allgather and report time/traffic.
                --algo NAME       (default loc-bruck; see below)
                --regions N       (default 16)
@@ -76,7 +78,7 @@ COMMANDS
   validate     Cross-check every algorithm against the expected gather and
                the paper's message-count bounds. --max-p N (default 256)
 
-ALGORITHMS
+ALGORITHMS (case-insensitive; see `locag algos`)
   system-default bruck ring recursive-doubling dissemination hierarchical
   multilane loc-bruck loc-bruck-v loc-bruck-2level
 "

@@ -10,58 +10,146 @@
 //!
 //! The final rotation is the data-movement hot spot mirrored by the Pallas
 //! kernel `python/compile/kernels/bruck_pack.py` (see DESIGN.md).
+//!
+//! [`BruckPlan`] is the persistent form: the step schedule and tag block
+//! are computed once, the rotated working buffer is allocated once, and
+//! every [`BruckPlan::execute`] reuses them. It doubles as the inner
+//! engine of the hierarchical, multi-lane and locality-aware plans.
 
+use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
-/// Bruck allgather of `local` (length `n`) over `comm`; returns `n·p`
-/// elements in rank order.
-pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    let n = local.len();
-    let tag = comm.next_coll_tag();
+/// The standard Bruck algorithm (registry entry).
+pub struct Bruck;
 
-    // Working buffer in rotated order; grows to n*p.
-    let mut data: Vec<T> = Vec::with_capacity(n * p);
-    data.extend_from_slice(local);
-
-    let mut dist = 1usize;
-    let mut step = 0u64;
-    while dist < p {
-        // number of blocks exchanged this step (partial final step for
-        // non-power-of-two p)
-        let blocks = dist.min(p - dist);
-        let send_to = (id + p - dist) % p;
-        let recv_from = (id + dist) % p;
-        let _send = comm.isend(&data[0..blocks * n], send_to, tag + step)?;
-        // receive straight into the working buffer's tail (perf pass:
-        // avoids the intermediate Vec the generic recv path allocates)
-        let old = data.len();
-        data.resize(old + blocks * n, T::default());
-        let req = comm.irecv(recv_from, tag + step);
-        req.wait_into(comm, &mut data[old..])?;
-        dist <<= 1;
-        step += 1;
+impl<T: Pod> CollectiveAlgorithm<T> for Bruck {
+    fn name(&self) -> &'static str {
+        "bruck"
     }
-    debug_assert_eq!(data.len(), n * p);
 
-    Ok(rotate_down(&data, n, id))
+    fn summary(&self) -> &'static str {
+        "standard Bruck allgather (paper Alg. 1): log2(p) steps, final rotation"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("bruck", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(BruckPlan::<T>::new(comm, shape.n)))
+    }
 }
 
-/// The final reorder of Algorithm 1: the rotated buffer holds rank
-/// `(id + j) mod p`'s block at position `j`; rotating *down* by `id` blocks
-/// puts block of rank `r` at position `r`.
-pub fn rotate_down<T: Pod>(data: &[T], n: usize, id: usize) -> Vec<T> {
+/// One exchange of the Bruck schedule.
+struct Step {
+    send_to: usize,
+    recv_from: usize,
+    blocks: usize,
+}
+
+/// Persistent Bruck plan: schedule + tag block + rotated working buffer.
+pub struct BruckPlan<T: Pod> {
+    comm: Comm,
+    n: usize,
+    p: usize,
+    id: usize,
+    tag_base: u64,
+    steps: Vec<Step>,
+    /// Working buffer in rotated order, length `n·p`.
+    data: Vec<T>,
+}
+
+impl<T: Pod> BruckPlan<T> {
+    /// Collectively plan a Bruck allgather of `n` elements per rank.
+    /// Reserves one collective tag per step on `comm`.
+    pub fn new(comm: &Comm, n: usize) -> BruckPlan<T> {
+        let p = comm.size();
+        let id = comm.rank();
+        let mut steps = Vec::new();
+        let mut dist = 1usize;
+        while dist < p {
+            steps.push(Step {
+                send_to: (id + p - dist) % p,
+                recv_from: (id + dist) % p,
+                // partial final step for non-power-of-two p
+                blocks: dist.min(p - dist),
+            });
+            dist <<= 1;
+        }
+        let tag_base = comm.reserve_coll_tags(steps.len() as u64);
+        BruckPlan {
+            comm: comm.retain(),
+            n,
+            p,
+            id,
+            tag_base,
+            steps,
+            data: vec![T::default(); n * p],
+        }
+    }
+}
+
+impl<T: Pod> AllgatherPlan<T> for BruckPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "bruck"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.n, self.p, input, output)?;
+        if self.n == 0 {
+            return Ok(());
+        }
+        let n = self.n;
+        self.data[..n].copy_from_slice(input);
+        let mut filled = n;
+        for (i, s) in self.steps.iter().enumerate() {
+            let tag = self.tag_base + i as u64;
+            let _send = self.comm.isend(&self.data[..s.blocks * n], s.send_to, tag)?;
+            // receive straight into the working buffer's tail (no
+            // intermediate Vec)
+            let req = self.comm.irecv(s.recv_from, tag);
+            req.wait_into(&self.comm, &mut self.data[filled..filled + s.blocks * n])?;
+            filled += s.blocks * n;
+        }
+        debug_assert_eq!(filled, n * self.p);
+        rotate_down_into(&self.data, n, self.id, output);
+        Ok(())
+    }
+}
+
+/// One-shot convenience wrapper: plan + single execute.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&Bruck, comm, local)
+}
+
+/// The final reorder of Algorithm 1, into a caller-provided buffer: the
+/// rotated input holds rank `(id + j) mod p`'s block at position `j`;
+/// rotating *down* by `id` blocks puts the block of rank `r` at position
+/// `r`.
+pub fn rotate_down_into<T: Pod>(data: &[T], n: usize, id: usize, out: &mut [T]) {
     assert!(n > 0, "block size must be positive");
     assert_eq!(data.len() % n, 0);
+    assert_eq!(out.len(), data.len());
     let p = data.len() / n;
-    let mut out = Vec::with_capacity(data.len());
     // out[(id + j) % p] = data[j]  ⇔  out[k] = data[(k - id) mod p]
     for k in 0..p {
         let j = (k + p - id % p) % p;
-        out.extend_from_slice(&data[j * n..(j + 1) * n]);
+        out[k * n..(k + 1) * n].copy_from_slice(&data[j * n..(j + 1) * n]);
     }
+}
+
+/// Allocating form of [`rotate_down_into`] (micro-bench / kernel-twin API).
+pub fn rotate_down<T: Pod>(data: &[T], n: usize, id: usize) -> Vec<T> {
+    let mut out = vec![T::default(); data.len()];
+    rotate_down_into(data, n, id, &mut out);
     out
 }
 
@@ -89,5 +177,26 @@ mod tests {
         let data: Vec<u64> = (0..8).collect(); // 4 blocks of 2
         assert_eq!(rotate_down(&data, 2, 4), data); // id == p → identity
         assert_eq!(rotate_down(&data, 2, 5), rotate_down(&data, 2, 1));
+    }
+
+    #[test]
+    fn plan_reuse_matches_one_shot() {
+        use crate::comm::{CommWorld, Timing};
+        use crate::topology::Topology;
+        let topo = Topology::regions(2, 3);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = BruckPlan::<u64>::new(c, 2);
+            let mut out = vec![0u64; 12];
+            for round in 0..3u64 {
+                let mine = [c.rank() as u64 + 100 * round, c.rank() as u64 + 100 * round + 50];
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..6u64)
+                    .flat_map(|r| [r + 100 * round, r + 100 * round + 50])
+                    .collect();
+                assert_eq!(out, expect, "round {round}");
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&b| b));
     }
 }

@@ -6,8 +6,15 @@
 //! * total gathered size < 80 KiB and power-of-two ranks → recursive doubling;
 //! * total gathered size < 80 KiB and non-power-of-two → Bruck;
 //! * otherwise → ring.
+//!
+//! Selection inputs (`p`, `n`, element size) are all known at plan time, so
+//! the persistent plan *is* the selected algorithm's plan, reported under
+//! the `system-default` name.
 
-use super::{bruck, recursive_doubling, ring};
+use super::bruck::BruckPlan;
+use super::plan::{trivial_plan, AllgatherPlan, CollectiveAlgorithm, SelectedPlan, Shape};
+use super::recursive_doubling::RecursiveDoublingPlan;
+use super::ring::RingPlan;
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
@@ -29,13 +36,37 @@ pub fn select(p: usize, n: usize, elem_size: usize) -> super::Algorithm {
     }
 }
 
-/// System-default allgather: select and run.
-pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    match select(comm.size(), local.len(), std::mem::size_of::<T>()) {
-        super::Algorithm::RecursiveDoubling => recursive_doubling::allgather(comm, local),
-        super::Algorithm::Bruck => bruck::allgather(comm, local),
-        _ => ring::allgather(comm, local),
+/// The system-default selector (registry entry).
+pub struct SystemDefault;
+
+impl<T: Pod> CollectiveAlgorithm<T> for SystemDefault {
+    fn name(&self) -> &'static str {
+        "system-default"
     }
+
+    fn summary(&self) -> &'static str {
+        "MPICH-style auto-selection: recursive doubling / Bruck small, ring large"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("system-default", comm, shape) {
+            return Ok(p);
+        }
+        let inner: Box<dyn AllgatherPlan<T>> =
+            match select(comm.size(), shape.n, std::mem::size_of::<T>()) {
+                super::Algorithm::RecursiveDoubling => {
+                    Box::new(RecursiveDoublingPlan::<T>::new(comm, shape.n)?)
+                }
+                super::Algorithm::Bruck => Box::new(BruckPlan::<T>::new(comm, shape.n)),
+                _ => Box::new(RingPlan::<T>::new(comm, shape.n)),
+            };
+        Ok(Box::new(SelectedPlan { name: "system-default", inner }))
+    }
+}
+
+/// One-shot convenience wrapper: select, plan, execute once.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&SystemDefault, comm, local)
 }
 
 #[cfg(test)]
@@ -71,5 +102,22 @@ mod tests {
                 assert_eq!(r, &expected_result(p, 2));
             }
         }
+    }
+
+    #[test]
+    fn plan_reports_dispatcher_name() {
+        use crate::comm::{CommWorld, Timing};
+        use crate::topology::Topology;
+        let topo = Topology::regions(2, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let plan = <SystemDefault as CollectiveAlgorithm<u32>>::plan(
+                &SystemDefault,
+                c,
+                Shape::elems(2),
+            )
+            .unwrap();
+            plan.algorithm() == "system-default"
+        });
+        assert!(run.results.iter().all(|&b| b));
     }
 }

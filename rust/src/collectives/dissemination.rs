@@ -11,60 +11,149 @@
 //! element stream, which costs one `u64` header per block — the classic
 //! trade-off that makes Bruck (which needs no headers, only a final
 //! rotation) the preferred log-step algorithm (§2).
+//!
+//! The persistent [`DisseminationPlan`] exploits that the held-block count
+//! before step `i` is exactly `2^i`, so both pack and receive buffers have
+//! statically known per-step sizes and are allocated once at plan time.
 
-use crate::comm::{to_bytes, Comm, Pod};
+use std::marker::PhantomData;
+
+use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use crate::comm::{write_bytes, Comm, Pod};
 use crate::error::{Error, Result};
 
-/// Dissemination allgather of `local` (length `n`); returns `n·p` elements
-/// in rank order.
-pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    let n = local.len();
-    let tag = comm.next_coll_tag();
+/// The dissemination algorithm (registry entry).
+pub struct Dissemination;
 
-    let mut out = vec![T::default(); n * p];
-    out[id * n..(id + 1) * n].copy_from_slice(local);
-    let mut have: Vec<bool> = (0..p).map(|r| r == id).collect();
-
-    let mut dist = 1usize;
-    let mut step = 0u64;
-    while dist < p {
-        let dst = (id + dist) % p;
-        let src = (id + p - dist) % p;
-        let payload = pack_blocks(&out, &have, n);
-        // Raw byte send: payload is already a byte vector.
-        let _req = comm.isend(&payload, dst, tag + step)?;
-        let bytes: Vec<u8> = comm.irecv(src, tag + step).wait(comm)?;
-        unpack_blocks(&bytes, &mut out, &mut have, n)?;
-        dist <<= 1;
-        step += 1;
+impl<T: Pod> CollectiveAlgorithm<T> for Dissemination {
+    fn name(&self) -> &'static str {
+        "dissemination"
     }
-    Ok(out)
+
+    fn summary(&self) -> &'static str {
+        "dissemination allgather: log2(p) steps with per-block origin headers"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("dissemination", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(DisseminationPlan::<T>::new(comm, shape.n)))
+    }
 }
 
-/// Encode all held blocks as `[origin: u64 | block bytes]*`.
-fn pack_blocks<T: Pod>(out: &[T], have: &[bool], n: usize) -> Vec<u8> {
+/// One step of the schedule.
+struct Step {
+    dst: usize,
+    src: usize,
+    /// `(origin, block)` records exchanged: the held count `2^i`.
+    records: usize,
+}
+
+/// Persistent dissemination plan with preallocated pack/unpack buffers.
+pub struct DisseminationPlan<T: Pod> {
+    comm: Comm,
+    n: usize,
+    p: usize,
+    id: usize,
+    tag_base: u64,
+    steps: Vec<Step>,
+    send_buf: Vec<u8>,
+    recv_buf: Vec<u8>,
+    have: Vec<bool>,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Pod> DisseminationPlan<T> {
+    /// Collectively plan a dissemination allgather of `n` elements per
+    /// rank. Reserves one collective tag per step on `comm`.
+    pub fn new(comm: &Comm, n: usize) -> DisseminationPlan<T> {
+        let p = comm.size();
+        let id = comm.rank();
+        let mut steps = Vec::new();
+        let mut dist = 1usize;
+        while dist < p {
+            steps.push(Step { dst: (id + dist) % p, src: (id + p - dist) % p, records: dist });
+            dist <<= 1;
+        }
+        let tag_base = comm.reserve_coll_tags(steps.len() as u64);
+        let rec = 8 + n * std::mem::size_of::<T>();
+        let max_records = steps.last().map(|s| s.records).unwrap_or(0);
+        DisseminationPlan {
+            comm: comm.retain(),
+            n,
+            p,
+            id,
+            tag_base,
+            steps,
+            send_buf: vec![0u8; max_records * rec],
+            recv_buf: vec![0u8; max_records * rec],
+            have: vec![false; p],
+            _elem: PhantomData,
+        }
+    }
+}
+
+impl<T: Pod> AllgatherPlan<T> for DisseminationPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "dissemination"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.n, self.p, input, output)?;
+        if self.n == 0 {
+            return Ok(());
+        }
+        let n = self.n;
+        let rec = 8 + n * std::mem::size_of::<T>();
+        output[self.id * n..(self.id + 1) * n].copy_from_slice(input);
+        self.have.fill(false);
+        self.have[self.id] = true;
+        for (i, s) in self.steps.iter().enumerate() {
+            let tag = self.tag_base + i as u64;
+            let len = s.records * rec;
+            pack_blocks(output, &self.have, n, &mut self.send_buf[..len]);
+            let _send = self.comm.isend(&self.send_buf[..len], s.dst, tag)?;
+            self.comm.recv_into(s.src, tag, &mut self.recv_buf[..len])?;
+            unpack_blocks(&self.recv_buf[..len], output, &mut self.have, n)?;
+        }
+        Ok(())
+    }
+}
+
+/// One-shot convenience wrapper: plan + single execute.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&Dissemination, comm, local)
+}
+
+/// Encode all held blocks as `[origin: u64 | block bytes]*` into `buf`,
+/// which must be sized for exactly the held count.
+fn pack_blocks<T: Pod>(out: &[T], have: &[bool], n: usize, buf: &mut [u8]) {
     let esz = std::mem::size_of::<T>();
-    let count = have.iter().filter(|&&h| h).count();
-    let mut buf = Vec::with_capacity(count * (8 + n * esz));
+    let rec = 8 + n * esz;
+    let mut off = 0usize;
     for (r, &h) in have.iter().enumerate() {
         if !h {
             continue;
         }
-        buf.extend_from_slice(&(r as u64).to_le_bytes());
-        buf.extend_from_slice(&to_bytes(&out[r * n..(r + 1) * n]));
+        buf[off..off + 8].copy_from_slice(&(r as u64).to_le_bytes());
+        let ok = write_bytes(&out[r * n..(r + 1) * n], &mut buf[off + 8..off + rec]);
+        debug_assert!(ok);
+        off += rec;
     }
-    buf
+    debug_assert_eq!(off, buf.len(), "held-block count must match the schedule");
 }
 
 /// Decode `[origin | block]*` into the output array, marking coverage.
-fn unpack_blocks<T: Pod>(
-    bytes: &[u8],
-    out: &mut [T],
-    have: &mut [bool],
-    n: usize,
-) -> Result<()> {
+fn unpack_blocks<T: Pod>(bytes: &[u8], out: &mut [T], have: &mut [bool], n: usize) -> Result<()> {
     let esz = std::mem::size_of::<T>();
     let rec = 8 + n * esz;
     if rec == 8 || bytes.len() % rec != 0 {
@@ -95,7 +184,8 @@ mod tests {
         let n = 2;
         let out: Vec<u64> = vec![1, 2, 0, 0, 5, 6];
         let have = vec![true, false, true];
-        let bytes = pack_blocks(&out, &have, n);
+        let mut bytes = vec![0u8; 2 * (8 + 2 * 8)];
+        pack_blocks(&out, &have, n, &mut bytes);
         let mut out2 = vec![0u64; 6];
         let mut have2 = vec![false; 3];
         unpack_blocks(&bytes, &mut out2, &mut have2, n).unwrap();

@@ -5,55 +5,156 @@
 //! array from each master to its region. Avoids injection-bandwidth
 //! bottlenecks but leaves most ranks idle and still sends `log2(r)`
 //! non-local messages of up to `b` bytes from every master (§2.2).
+//!
+//! The persistent [`HierarchicalPlan`] retains the region communicator and
+//! (on masters) the masters sub-communicator plus an inner Bruck plan; the
+//! flat gather, the binomial broadcast tree and the final group→rank
+//! permutation are all precomputed.
 
-use super::grouping::{group_ranks, require_uniform, GroupBy, Groups};
-use super::{bruck, primitives};
+use super::grouping::{group_ranks, require_uniform, GroupBy};
+use super::bruck::BruckPlan;
+use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use super::primitives::bcast_tree;
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
-/// Hierarchical allgather of `local` (length `n`); returns `n·p` elements
-/// in communicator rank order.
-pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let groups = group_ranks(comm, GroupBy::Region)?;
-    require_uniform(&groups, "hierarchical allgather")?;
-    allgather_grouped(comm, local, &groups)
+/// The hierarchical algorithm (registry entry).
+pub struct Hierarchical;
+
+impl<T: Pod> CollectiveAlgorithm<T> for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn summary(&self) -> &'static str {
+        "gather to region master, Bruck among masters, local broadcast (Träff '06)"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("hierarchical", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(HierarchicalPlan::<T>::new(comm, shape.n)?))
+    }
 }
 
-/// Hierarchical allgather over explicit groups (exposed for tests and the
-/// multilevel composition).
-pub fn allgather_grouped<T: Pod>(comm: &Comm, local: &[T], groups: &Groups) -> Result<Vec<T>> {
-    let n = local.len();
-    let p = comm.size();
-    let local_comm = comm.sub(&groups.members[groups.mine])?;
+/// Master-only state: the masters' communicator plan plus the gathered
+/// region buffer.
+struct MasterState<T: Pod> {
+    plan: BruckPlan<T>,
+    /// Gather target, length `ppr · n`.
+    region: Vec<T>,
+}
 
-    // Phase 1: gather region data on the master (local rank 0).
-    let gathered = primitives::gather(&local_comm, local, 0)?;
+/// Persistent hierarchical plan.
+pub struct HierarchicalPlan<T: Pod> {
+    local_comm: Comm,
+    n: usize,
+    p: usize,
+    ppr: usize,
+    tag_gather: u64,
+    tag_bcast: u64,
+    masters: Option<MasterState<T>>,
+    /// Broadcast-tree parent of this rank within its region (local ranks).
+    parent: Option<usize>,
+    /// Broadcast-tree children, in send order.
+    children: Vec<usize>,
+    /// The group-ordered full array, length `n · p`.
+    full: Vec<T>,
+    /// Block position in group order → communicator rank.
+    perm: Vec<usize>,
+}
 
-    // Phase 2: Bruck among masters. Masters are local rank 0 of each group.
-    let master_ranks: Vec<usize> = groups.members.iter().map(|g| g[0]).collect();
-    let is_master = groups.my_local == 0;
-    let mut full_grouped: Option<Vec<T>> = None;
-    if is_master {
-        let masters = comm.sub(&master_ranks)?;
-        let mine = gathered.expect("master holds gathered data");
-        full_grouped = Some(bruck::allgather(&masters, &mine)?);
+impl<T: Pod> HierarchicalPlan<T> {
+    /// Collectively plan a hierarchical allgather of `n` elements per rank.
+    pub fn new(comm: &Comm, n: usize) -> Result<HierarchicalPlan<T>> {
+        let groups = group_ranks(comm, GroupBy::Region)?;
+        let ppr = require_uniform(&groups, "hierarchical allgather")?;
+        let p = comm.size();
+        let local_comm = comm.sub(&groups.members[groups.mine])?;
+        let tag_gather = local_comm.reserve_coll_tags(1);
+        let tag_bcast = local_comm.reserve_coll_tags(1);
+        // Masters are local rank 0 of each group; only they construct the
+        // masters' communicator (the member-subset `sub` consumes no parent
+        // state, so non-masters stay consistent).
+        let masters = if groups.my_local == 0 {
+            let master_ranks: Vec<usize> = groups.members.iter().map(|g| g[0]).collect();
+            let mcomm = comm.sub(&master_ranks)?;
+            Some(MasterState {
+                plan: BruckPlan::<T>::new(&mcomm, ppr * n),
+                region: vec![T::default(); ppr * n],
+            })
+        } else {
+            None
+        };
+        let (parent, children) = bcast_tree(ppr, groups.my_local, 0);
+        let perm: Vec<usize> =
+            groups.members.iter().flat_map(|g| g.iter().copied()).collect();
+        Ok(HierarchicalPlan {
+            local_comm,
+            n,
+            p,
+            ppr,
+            tag_gather,
+            tag_bcast,
+            masters,
+            parent,
+            children,
+            full: vec![T::default(); n * p],
+            perm,
+        })
+    }
+}
+
+impl<T: Pod> AllgatherPlan<T> for HierarchicalPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "hierarchical"
     }
 
-    // Phase 3: broadcast the group-ordered array inside each region.
-    let full_grouped = primitives::bcast(&local_comm, full_grouped, 0)?;
-    debug_assert_eq!(full_grouped.len(), n * p);
+    fn shape(&self) -> Shape {
+        Shape { n: self.n }
+    }
 
-    // The master-Bruck produced data ordered by (group, local rank); put it
-    // back into communicator rank order.
-    let mut out = vec![T::default(); n * p];
-    let mut pos = 0usize;
-    for g in &groups.members {
-        for &r in g {
-            out[r * n..(r + 1) * n].copy_from_slice(&full_grouped[pos..pos + n]);
-            pos += n;
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.n, self.p, input, output)?;
+        if self.n == 0 {
+            return Ok(());
         }
+        let n = self.n;
+        // Phase 1 + 2: flat gather on the master, then Bruck among masters
+        // into the group-ordered full buffer.
+        if let Some(ms) = &mut self.masters {
+            ms.region[..n].copy_from_slice(input);
+            for r in 1..self.ppr {
+                self.local_comm.recv_into(r, self.tag_gather, &mut ms.region[r * n..(r + 1) * n])?;
+            }
+            ms.plan.execute(&ms.region, &mut self.full)?;
+        } else {
+            self.local_comm.send(input, 0, self.tag_gather)?;
+        }
+        // Phase 3: binomial broadcast of the full array inside the region.
+        if let Some(parent) = self.parent {
+            self.local_comm.recv_into(parent, self.tag_bcast, &mut self.full)?;
+        }
+        for &child in &self.children {
+            self.local_comm.send(&self.full, child, self.tag_bcast)?;
+        }
+        // The master-Bruck produced data ordered by (group, local rank);
+        // put it back into communicator rank order.
+        for (pos, &rank) in self.perm.iter().enumerate() {
+            output[rank * n..(rank + 1) * n].copy_from_slice(&self.full[pos * n..(pos + 1) * n]);
+        }
+        Ok(())
     }
-    Ok(out)
+}
+
+/// One-shot convenience wrapper: plan + single execute.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&Hierarchical, comm, local)
 }
 
 #[cfg(test)]
@@ -108,5 +209,23 @@ mod tests {
                 assert_eq!(t.nonlocal_msgs, 0, "worker {rank}");
             }
         }
+    }
+
+    #[test]
+    fn plan_reuse_stays_correct() {
+        let topo = Topology::regions(2, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = HierarchicalPlan::<u64>::new(c, 2).unwrap();
+            let mut out = vec![0u64; 16];
+            for round in 0..4u64 {
+                let mine = [c.rank() as u64 + round, c.rank() as u64 + round + 30];
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> =
+                    (0..8u64).flat_map(|r| [r + round, r + round + 30]).collect();
+                assert_eq!(out, expect, "round {round}");
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&b| b));
     }
 }

@@ -11,7 +11,7 @@
 //!    `g − ℓ·w` and receives the group `[g + ℓ·w, g + (ℓ+1)·w)` from region
 //!    `g + ℓ·w`; **local rank 0 stays idle**, preserving power-of-pℓ
 //!    exchanges (§3). Each step ends with a local allgather of the received
-//!    groups, growing the held window to `w·pℓ` regions.
+//!    groups, growing the held window to `w·pℓ`.
 //!
 //! Every rank therefore sends at most `⌈log_pℓ(r)⌉` non-local messages and
 //! `≈ b/pℓ` non-local bytes — the paper's headline improvement over the
@@ -24,19 +24,30 @@
 //! already-held regions (the paper's “regions 13 through 15 as well as
 //! region 0”), which the absolute-indexed assembly absorbs.
 //!
-//! **Multilevel hierarchy** (§3): [`allgather_multilevel`] groups by *node*
-//! at the outer level and replaces the inner Bruck calls with a
-//! socket-aware locality-aware Bruck, exactly as the paper prescribes.
+//! **Multilevel hierarchy** (§3): [`LocalityBruckMultilevel`] groups by
+//! *node* at the outer level and replaces the inner Bruck plans with a
+//! socket-aware locality-aware plan, exactly as the paper prescribes.
 //!
 //! **Placement independence** (§3): all group structure is derived from
 //! the topology, not from rank numbering, so non-local message counts are
 //! identical under block, round-robin or random placement — asserted in
 //! `rust/tests/locality_counts.rs`.
+//!
+//! **Persistence**: [`LocBruckPlan`] derives groups, builds the region
+//! communicator, reserves the non-local tag of every step, nests inner
+//! local-gather plans (Bruck or allgatherv, per step) and allocates all
+//! exchange/gather scratch **once**. `execute` then runs pure
+//! communication: the paper's "communicators created once outside the
+//! timed region" setup, kept alive across any number of operations.
 
+use super::bruck::BruckPlan;
 use super::grouping::{group_ranks, require_uniform, GroupBy, Groups};
-use super::{bruck, primitives};
+use super::plan::{
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, SelectedPlan, Shape,
+};
+use super::primitives::AllgathervPlan;
 use crate::comm::{Comm, Pod};
-use crate::error::{Error, Result};
+use crate::error::Result;
 
 /// Which allgather runs inside regions.
 #[derive(Debug, Clone, Copy)]
@@ -60,184 +71,387 @@ pub enum Rank0 {
     GathervSkips,
 }
 
-/// Locality-aware Bruck allgather of `local` (length `n`); returns `n·p`
-/// elements in communicator rank order. Regions are the topology's
-/// configured region kind.
-pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let groups = group_ranks(comm, GroupBy::Region)?;
-    loc_allgather(comm, local, &groups, Inner::Bruck, Rank0::Contributes)
-}
+/// Algorithm 2, single level (registry entry).
+pub struct LocalityBruck;
 
-/// The allgatherv variant (paper §3's alternative; see [`Rank0`]).
-pub fn allgather_v<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let groups = group_ranks(comm, GroupBy::Region)?;
-    loc_allgather(comm, local, &groups, Inner::Bruck, Rank0::GathervSkips)
-}
+impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruck {
+    fn name(&self) -> &'static str {
+        "loc-bruck"
+    }
 
-/// Two-level locality-aware Bruck: node-aware outer algorithm whose local
-/// gathers are themselves socket-aware locality-aware Brucks.
-pub fn allgather_multilevel<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let groups = group_ranks(comm, GroupBy::Node)?;
-    loc_allgather(comm, local, &groups, Inner::SocketAware, Rank0::Contributes)
-}
+    fn summary(&self) -> &'static str {
+        "locality-aware Bruck (paper Alg. 2): log_ppr(r) non-local steps"
+    }
 
-/// Run the configured inner allgather on a (local) communicator.
-fn inner_allgather<T: Pod>(comm: &Comm, local: &[T], inner: Inner) -> Result<Vec<T>> {
-    match inner {
-        Inner::Bruck => bruck::allgather(comm, local),
-        Inner::SocketAware => {
-            let groups = group_ranks(comm, GroupBy::Socket)?;
-            if groups.count() == 1 {
-                // single socket: plain Bruck is the whole story
-                bruck::allgather(comm, local)
-            } else {
-                loc_allgather(comm, local, &groups, Inner::Bruck, Rank0::Contributes)
-            }
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("loc-bruck", comm, shape) {
+            return Ok(p);
         }
+        let groups = group_ranks(comm, GroupBy::Region)?;
+        plan_grouped(comm, shape.n, &groups, Inner::Bruck, Rank0::Contributes, "loc-bruck")
     }
 }
 
-/// The generic Algorithm 2 over explicit groups.
-fn loc_allgather<T: Pod>(
+/// Algorithm 2 with the paper's allgatherv alternative (registry entry).
+pub struct LocalityBruckV;
+
+impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckV {
+    fn name(&self) -> &'static str {
+        "loc-bruck-v"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Alg. 2 with allgatherv local gathers (rank 0 contributes nothing)"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("loc-bruck-v", comm, shape) {
+            return Ok(p);
+        }
+        let groups = group_ranks(comm, GroupBy::Region)?;
+        plan_grouped(comm, shape.n, &groups, Inner::Bruck, Rank0::GathervSkips, "loc-bruck-v")
+    }
+}
+
+/// Two-level Algorithm 2: node-aware outer, socket-aware inner (registry
+/// entry).
+pub struct LocalityBruckMultilevel;
+
+impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckMultilevel {
+    fn name(&self) -> &'static str {
+        "loc-bruck-2level"
+    }
+
+    fn summary(&self) -> &'static str {
+        "two-level Alg. 2: node-aware outer, socket-aware local gathers"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("loc-bruck-2level", comm, shape) {
+            return Ok(p);
+        }
+        let groups = group_ranks(comm, GroupBy::Node)?;
+        plan_grouped(
+            comm,
+            shape.n,
+            &groups,
+            Inner::SocketAware,
+            Rank0::Contributes,
+            "loc-bruck-2level",
+        )
+    }
+}
+
+/// Build the generic Algorithm 2 plan over explicit groups, degrading to
+/// plain Bruck when there is no locality to exploit.
+fn plan_grouped<T: Pod>(
     comm: &Comm,
-    local: &[T],
+    n: usize,
     groups: &Groups,
     inner: Inner,
     rank0: Rank0,
-) -> Result<Vec<T>> {
-    let n = local.len();
-    let p = comm.size();
-    if n == 0 {
-        return Ok(Vec::new());
-    }
-    let r_n = groups.count();
+    name: &'static str,
+) -> Result<Box<dyn AllgatherPlan<T>>> {
     let ppr = require_uniform(groups, "locality-aware bruck")?;
     if ppr == 1 {
         // One rank per region: no locality to exploit; Algorithm 2's
         // non-local phase would make no progress (only local rank 0 exists
         // and it idles). Degrade to the standard Bruck.
-        return bruck::allgather(comm, local);
+        return Ok(Box::new(SelectedPlan {
+            name,
+            inner: Box::new(BruckPlan::<T>::new(comm, n)),
+        }));
     }
-    let g = groups.mine;
-    let l = groups.my_local;
-    let local_comm = comm.sub(&groups.members[g])?;
-    let region_elems = ppr * n;
+    Ok(Box::new(LocBruckPlan::<T>::new(comm, n, groups, inner, rank0, name)?))
+}
 
-    // Region-major working buffer: region ri's data (in local-rank order)
-    // lives at buf[ri*region_elems..]. Assembly is by absolute region
-    // index, which makes wrap-around duplicates benign.
-    let mut buf = vec![T::default(); r_n * region_elems];
-
-    // Phase 1: local allgather of the initial blocks.
-    let mine_region = inner_allgather(&local_comm, local, inner)?;
-    debug_assert_eq!(mine_region.len(), region_elems);
-    buf[g * region_elems..(g + 1) * region_elems].copy_from_slice(&mine_region);
-
-    // Non-local phase. Invariant: every rank of group `gi` holds exactly
-    // the regions [gi, gi+width) mod r_n.
-    let mut width = 1usize;
-    while width < r_n {
-        let tag = comm.next_coll_tag(); // bumped by ALL ranks to stay aligned
-        let active = |j: usize| j > 0 && j * width < r_n;
-
-        // -- exchange --------------------------------------------------
-        // The received group is NOT scattered into `buf` here: it flows to
-        // every local rank (including us) through the local gather below,
-        // which writes it once — avoiding a second full copy (perf pass).
-        let mut received: Vec<T> = Vec::new();
-        if active(l) {
-            let dist = (l * width) % r_n;
-            let dst_group = (g + r_n - dist) % r_n;
-            let src_group = (g + dist) % r_n;
-            let dst = groups.members[dst_group][l];
-            let src = groups.members[src_group][l];
-            let payload = collect_ring(&buf, g, width, r_n, region_elems);
-            let _req = comm.isend(&payload, dst, tag)?;
-            received = comm.irecv(src, tag).wait(comm)?;
-            if received.len() != width * region_elems {
-                return Err(Error::SizeMismatch {
-                    expected: width * region_elems,
-                    got: received.len(),
-                });
-            }
-        }
-
-        // -- local allgather of the received groups ---------------------
-        // Contribution convention: local rank j contributes the group
-        // starting at region (g + j*width) — rank 0 re-contributes the
-        // currently-held group (the paper's "contribute the original data
-        // for simplicity"); inactive ranks contribute nothing.
-        let rank0_contributes = rank0 == Rank0::Contributes;
-        let counts: Vec<usize> = (0..ppr)
-            .map(|j| {
-                if (j == 0 && rank0_contributes) || active(j) {
-                    width * region_elems
-                } else {
-                    0
-                }
-            })
-            .collect();
-        let my_contrib: Vec<T> = if l == 0 {
-            if rank0_contributes {
-                collect_ring(&buf, g, width, r_n, region_elems)
+/// Plan the configured inner (local) allgather over a region communicator.
+fn inner_plan<T: Pod>(
+    local_comm: &Comm,
+    block: usize,
+    inner: Inner,
+) -> Result<Box<dyn AllgatherPlan<T>>> {
+    match inner {
+        Inner::Bruck => Ok(Box::new(BruckPlan::<T>::new(local_comm, block))),
+        Inner::SocketAware => {
+            let groups = group_ranks(local_comm, GroupBy::Socket)?;
+            if groups.count() == 1 {
+                // single socket: plain Bruck is the whole story
+                Ok(Box::new(BruckPlan::<T>::new(local_comm, block)))
             } else {
-                Vec::new()
+                plan_grouped(
+                    local_comm,
+                    block,
+                    &groups,
+                    Inner::Bruck,
+                    Rank0::Contributes,
+                    "loc-bruck",
+                )
             }
-        } else {
-            received // moved, not cloned (perf pass)
-        };
-
-        let uniform = counts.iter().all(|&c| c == counts[0]);
-        let gathered: Vec<T> = if uniform {
-            // power-of-pℓ step: equal counts — use the configured inner
-            // allgather (paper: "replacing all calls to bruck")
-            inner_allgather(&local_comm, &my_contrib, inner)?
-        } else {
-            // non-power step: some ranks idle → allgatherv (§3)
-            primitives::allgatherv(&local_comm, &my_contrib, &counts)?
-        };
-
-        // Scatter the gathered groups by absolute region index.
-        let mut off = 0usize;
-        for (j, &c) in counts.iter().enumerate() {
-            if c == 0 {
-                continue;
-            }
-            let start = (g + j * width) % r_n;
-            scatter_ring(&mut buf, start, width, r_n, region_elems, &gathered[off..off + c]);
-            off += c;
-        }
-        debug_assert_eq!(off, gathered.len());
-
-        width = width.saturating_mul(ppr);
-    }
-
-    // Permute the region-major buffer into communicator rank order.
-    let mut out = vec![T::default(); p * n];
-    for (gi, members) in groups.members.iter().enumerate() {
-        for (j, &rank) in members.iter().enumerate() {
-            let src = gi * region_elems + j * n;
-            out[rank * n..(rank + 1) * n].copy_from_slice(&buf[src..src + n]);
         }
     }
-    Ok(out)
+}
+
+/// The local gather closing one non-local step.
+enum StepGather<T: Pod> {
+    /// Power-of-pℓ step: equal counts — the configured inner allgather
+    /// (paper: "replacing all calls to bruck").
+    Uniform(Box<dyn AllgatherPlan<T>>),
+    /// Non-power step: some ranks idle → allgatherv (§3).
+    Varying(AllgathervPlan<T>),
+}
+
+/// One precomputed non-local step.
+struct LocStep<T: Pod> {
+    /// Held-group width in regions before this step.
+    width: usize,
+    /// Whether this rank exchanges non-locally (local rank ℓ ≥ 1 with
+    /// ℓ·width < r).
+    active: bool,
+    /// Exchange peers in parent-communicator ranks (valid when `active`).
+    dst: usize,
+    src: usize,
+    /// Pre-reserved parent-communicator tag for the exchange.
+    tag: u64,
+    /// Per-local-rank contribution lengths of the closing local gather.
+    counts: Vec<usize>,
+    gather: StepGather<T>,
+    /// `(start region, offset into gathered)` of every non-empty
+    /// contribution, for the absolute-indexed scatter.
+    scatter: Vec<(usize, usize)>,
+    /// Contiguous copy of the held group (send payload; doubles as local
+    /// rank 0's re-contribution). Length `width · region_elems` when
+    /// needed, else empty.
+    send_buf: Vec<T>,
+    /// Received group. Length `width · region_elems` when active.
+    recv_buf: Vec<T>,
+    /// Local-gather output, length `sum(counts)`.
+    gathered: Vec<T>,
+}
+
+/// Persistent locality-aware Bruck plan (see module docs).
+pub struct LocBruckPlan<T: Pod> {
+    name: &'static str,
+    comm: Comm,
+    n: usize,
+    p: usize,
+    r_n: usize,
+    region_elems: usize,
+    g: usize,
+    l: usize,
+    /// Phase 1: local allgather of the initial blocks, writing directly
+    /// into this rank's region slot of `buf`.
+    phase1: Box<dyn AllgatherPlan<T>>,
+    steps: Vec<LocStep<T>>,
+    /// Region-major working buffer: region `ri`'s data (in local-rank
+    /// order) lives at `buf[ri·region_elems ..]`. Assembly is by absolute
+    /// region index, which makes wrap-around duplicates benign.
+    buf: Vec<T>,
+    /// `(buf element offset, communicator rank)` of every block, for the
+    /// final region-major → rank-order permutation.
+    perm: Vec<(usize, usize)>,
+}
+
+impl<T: Pod> LocBruckPlan<T> {
+    fn new(
+        comm: &Comm,
+        n: usize,
+        groups: &Groups,
+        inner: Inner,
+        rank0: Rank0,
+        name: &'static str,
+    ) -> Result<LocBruckPlan<T>> {
+        let p = comm.size();
+        let r_n = groups.count();
+        let ppr = groups.uniform_size().expect("plan_grouped checked uniformity");
+        let g = groups.mine;
+        let l = groups.my_local;
+        let region_elems = ppr * n;
+        let local_comm = comm.sub(&groups.members[g])?;
+        let phase1 = inner_plan(&local_comm, n, inner)?;
+        let rank0_contributes = rank0 == Rank0::Contributes;
+
+        let mut steps = Vec::new();
+        let mut width = 1usize;
+        while width < r_n {
+            // reserved by ALL ranks so the parent tag sequence stays aligned
+            let tag = comm.reserve_coll_tags(1);
+            let active_j = |j: usize| j > 0 && j * width < r_n;
+            let active = active_j(l);
+            let (dst, src) = if active {
+                let dist = (l * width) % r_n;
+                (
+                    groups.members[(g + r_n - dist) % r_n][l],
+                    groups.members[(g + dist) % r_n][l],
+                )
+            } else {
+                (0, 0)
+            };
+            // Contribution convention: local rank j contributes the group
+            // starting at region (g + j·width) — rank 0 re-contributes the
+            // currently-held group (the paper's "contribute the original
+            // data for simplicity"); inactive ranks contribute nothing.
+            let counts: Vec<usize> = (0..ppr)
+                .map(|j| {
+                    if (j == 0 && rank0_contributes) || active_j(j) {
+                        width * region_elems
+                    } else {
+                        0
+                    }
+                })
+                .collect();
+            let uniform = counts.iter().all(|&c| c == counts[0]);
+            let gather = if uniform {
+                StepGather::Uniform(inner_plan(&local_comm, width * region_elems, inner)?)
+            } else {
+                StepGather::Varying(AllgathervPlan::<T>::new(&local_comm, &counts)?)
+            };
+            let mut scatter = Vec::new();
+            let mut off = 0usize;
+            for (j, &c) in counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                scatter.push(((g + j * width) % r_n, off));
+                off += c;
+            }
+            let need_send = active || (l == 0 && rank0_contributes);
+            steps.push(LocStep {
+                width,
+                active,
+                dst,
+                src,
+                tag,
+                gather,
+                scatter,
+                send_buf: if need_send { vec![T::default(); width * region_elems] } else { Vec::new() },
+                recv_buf: if active { vec![T::default(); width * region_elems] } else { Vec::new() },
+                gathered: vec![T::default(); off],
+                counts,
+            });
+            width = width.saturating_mul(ppr);
+        }
+
+        let mut perm = Vec::with_capacity(p);
+        for (gi, members) in groups.members.iter().enumerate() {
+            for (j, &rank) in members.iter().enumerate() {
+                perm.push((gi * region_elems + j * n, rank));
+            }
+        }
+        Ok(LocBruckPlan {
+            name,
+            comm: comm.retain(),
+            n,
+            p,
+            r_n,
+            region_elems,
+            g,
+            l,
+            phase1,
+            steps,
+            buf: vec![T::default(); r_n * region_elems],
+            perm,
+        })
+    }
+}
+
+impl<T: Pod> AllgatherPlan<T> for LocBruckPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        self.name
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.n, self.p, input, output)?;
+        let (n, re, r_n, g, l) = (self.n, self.region_elems, self.r_n, self.g, self.l);
+
+        // Phase 1: local allgather of the initial blocks, straight into
+        // this rank's region slot.
+        self.phase1.execute(input, &mut self.buf[g * re..(g + 1) * re])?;
+
+        // Non-local phase. Invariant: every rank of group `gi` holds
+        // exactly the regions [gi, gi+width) mod r_n.
+        let Self { comm, buf, steps, .. } = self;
+        for step in steps.iter_mut() {
+            let w = step.width;
+            // -- exchange ------------------------------------------------
+            if step.active {
+                collect_ring(buf, g, w, r_n, re, &mut step.send_buf);
+                let _send = comm.isend(&step.send_buf, step.dst, step.tag)?;
+                let req = comm.irecv(step.src, step.tag);
+                req.wait_into(comm, &mut step.recv_buf)?;
+            } else if l == 0 && !step.send_buf.is_empty() {
+                // rank 0 re-contributes the currently-held group
+                collect_ring(buf, g, w, r_n, re, &mut step.send_buf);
+            }
+            // -- local allgather of the received groups ------------------
+            let contrib: &[T] = if l == 0 {
+                &step.send_buf
+            } else if step.active {
+                &step.recv_buf
+            } else {
+                &[]
+            };
+            debug_assert_eq!(contrib.len(), step.counts[l]);
+            match &mut step.gather {
+                StepGather::Uniform(plan) => plan.execute(contrib, &mut step.gathered)?,
+                StepGather::Varying(plan) => plan.execute(contrib, &mut step.gathered)?,
+            }
+            // Scatter the gathered groups by absolute region index.
+            for &(start, off) in &step.scatter {
+                scatter_ring(buf, start, w, r_n, re, &step.gathered[off..off + w * re]);
+            }
+        }
+
+        // Permute the region-major buffer into communicator rank order.
+        for &(src_off, rank) in &self.perm {
+            output[rank * n..(rank + 1) * n].copy_from_slice(&self.buf[src_off..src_off + n]);
+        }
+        Ok(())
+    }
+}
+
+/// Locality-aware Bruck allgather of `local` (length `n`); returns `n·p`
+/// elements in communicator rank order. Regions are the topology's
+/// configured region kind. One-shot wrapper over [`LocBruckPlan`].
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&LocalityBruck, comm, local)
+}
+
+/// The allgatherv variant (paper §3's alternative; see [`Rank0`]).
+pub fn allgather_v<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&LocalityBruckV, comm, local)
+}
+
+/// Two-level locality-aware Bruck: node-aware outer algorithm whose local
+/// gathers are themselves socket-aware locality-aware Brucks.
+pub fn allgather_multilevel<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&LocalityBruckMultilevel, comm, local)
 }
 
 /// Copy regions `[start, start+width) mod r_n` out of the region-major
-/// buffer, in ring order.
+/// buffer, in ring order, into the preallocated `out`.
 fn collect_ring<T: Pod>(
     buf: &[T],
     start: usize,
     width: usize,
     r_n: usize,
     region_elems: usize,
-) -> Vec<T> {
-    let mut out = Vec::with_capacity(width * region_elems);
+    out: &mut [T],
+) {
+    debug_assert_eq!(out.len(), width * region_elems);
     for k in 0..width {
         let ri = (start + k) % r_n;
-        out.extend_from_slice(&buf[ri * region_elems..(ri + 1) * region_elems]);
+        out[k * region_elems..(k + 1) * region_elems]
+            .copy_from_slice(&buf[ri * region_elems..(ri + 1) * region_elems]);
     }
-    out
 }
 
 /// Inverse of [`collect_ring`]: write `data` into regions
@@ -449,5 +663,27 @@ mod tests {
             std.trace.total_nonlocal_bytes(),
             v.trace.total_nonlocal_bytes()
         );
+    }
+
+    #[test]
+    fn plan_reuse_on_shifting_inputs() {
+        let topo = Topology::regions(4, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let groups = group_ranks(c, GroupBy::Region).unwrap();
+            let mut plan =
+                plan_grouped::<u64>(c, 2, &groups, Inner::Bruck, Rank0::Contributes, "loc-bruck")
+                    .unwrap();
+            let mut out = vec![0u64; 32];
+            for round in 0..6u64 {
+                let mine = [c.rank() as u64 + 777 * round, c.rank() as u64 + 777 * round + 13];
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..16u64)
+                    .flat_map(|r| [r + 777 * round, r + 777 * round + 13])
+                    .collect();
+                assert_eq!(out, expect, "round {round}");
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&b| b));
     }
 }

@@ -1,28 +1,55 @@
 //! Allgather algorithms — the paper's contribution and every baseline it
-//! compares against.
+//! compares against — behind a **persistent planned-collective API**.
 //!
 //! All algorithms are written against [`crate::comm::Comm`] using the same
 //! `Isend`/`Irecv` structure as the paper's hand-written MPI implementations
-//! (§5). Every function has the same contract:
+//! (§5). Every implementation satisfies the same contract:
 //!
 //! * input: this rank's `n`-element contribution;
-//! * output: a `Vec<T>` of length `n · p` holding every rank's contribution
-//!   **in communicator rank order** (`out[r*n..(r+1)*n]` is rank `r`'s data).
+//! * output: `n · p` elements holding every rank's contribution **in
+//!   communicator rank order** (`out[r*n..(r+1)*n]` is rank `r`'s data);
+//! * `n == 0` is a uniform no-op: no messages, empty output.
 //!
-//! Implemented algorithms:
+//! ## One-shot vs. persistent
 //!
-//! | module | algorithm | paper role |
-//! |---|---|---|
-//! | [`bruck`] | Bruck allgather (Alg. 1) | standard small-message baseline |
-//! | [`ring`] | ring allgather | large-message baseline (§2) |
-//! | [`recursive_doubling`] | recursive doubling | background §2 |
-//! | [`dissemination`] | dissemination allgather | background §2 |
-//! | [`hierarchical`] | master-per-region gather + Bruck + bcast (Träff '06) | related-work baseline |
-//! | [`multilane`] | per-lane inter-region Bruck + local allgather (Träff & Hunold '20) | related-work baseline |
-//! | [`loc_bruck`] | **locality-aware Bruck (Alg. 2)**, incl. multilevel and non-power region counts | the contribution |
-//! | [`dispatch`] | size/shape-based selection (Thakur et al.) | "system MPI" baseline |
-//! | [`primitives`] | gather / bcast / allgatherv building blocks | substrate |
-//! | [`allreduce`] | locality-aware allreduce | §6 future-work extension |
+//! There are two ways to run an allgather:
+//!
+//! * **One-shot** — [`allgather`]`(algo, comm, local)`: plan + execute +
+//!   allocate the output, every call. Use it for scripts, examples and
+//!   single measurements where setup cost is irrelevant.
+//! * **Persistent** — [`plan_allgather`] (or [`Registry::plan`]) returns an
+//!   [`AllgatherPlan`] that amortizes *all* setup: group derivation,
+//!   sub-communicator construction, step/rotation schedules, collective
+//!   tag reservation and scratch allocation happen once at plan time, and
+//!   [`AllgatherPlan::execute`] into caller-owned buffers does pure
+//!   communication. This is the MPI-4 `MPI_Allgather_init` shape the paper
+//!   implicitly measures ("communicators are created once outside the
+//!   timed region", §5), and what a serving loop issuing millions of
+//!   identical-shape collectives should use — see
+//!   [`crate::coordinator::server`] and `examples/persistent_plan.rs`.
+//!
+//! Plan construction and every execution are collective: all ranks must
+//! make the same calls in the same order (the usual MPI ordering rule).
+//!
+//! ## Implemented algorithms
+//!
+//! | module | registry name | algorithm | paper role |
+//! |---|---|---|---|
+//! | [`bruck`] | `bruck` | Bruck allgather (Alg. 1) | standard small-message baseline |
+//! | [`ring`] | `ring` | ring allgather | large-message baseline (§2) |
+//! | [`recursive_doubling`] | `recursive-doubling` | recursive doubling | background §2 |
+//! | [`dissemination`] | `dissemination` | dissemination allgather | background §2 |
+//! | [`hierarchical`] | `hierarchical` | master-per-region gather + Bruck + bcast (Träff '06) | related-work baseline |
+//! | [`multilane`] | `multilane` | per-lane inter-region Bruck + local allgather (Träff & Hunold '20) | related-work baseline |
+//! | [`loc_bruck`] | `loc-bruck`, `loc-bruck-v`, `loc-bruck-2level` | **locality-aware Bruck (Alg. 2)**, incl. multilevel and non-power region counts | the contribution |
+//! | [`dispatch`] | `system-default` | size/shape-based selection (Thakur et al.) | "system MPI" baseline |
+//! | [`plan`] | — | `AllgatherPlan` / `CollectiveAlgorithm` traits, [`Registry`] | persistent API substrate |
+//! | [`primitives`] | — | gather / bcast / allgatherv (+ [`primitives::AllgathervPlan`]) | substrate |
+//! | [`allreduce`] | — | locality-aware allreduce | §6 future-work extension |
+//!
+//! New algorithms (or backend-specific overrides) implement
+//! [`CollectiveAlgorithm`] and [`Registry::register`] themselves — no
+//! dispatch `match` to touch.
 
 pub mod allreduce;
 pub mod alltoall;
@@ -33,14 +60,22 @@ pub mod grouping;
 pub mod hierarchical;
 pub mod loc_bruck;
 pub mod multilane;
+pub mod plan;
 pub mod primitives;
 pub mod recursive_doubling;
 pub mod ring;
 
+pub use plan::{AllgatherPlan, CollectiveAlgorithm, Registry, Shape};
+
 use crate::comm::{Comm, Pod};
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 /// Which allgather implementation to run (CLI / harness selector).
+///
+/// The enum enumerates the *built-in* algorithms for typed call sites
+/// (figures, sweeps, CLI defaults); dispatch itself goes through the
+/// [`Registry`], so registered extensions are reachable by name even
+/// without an enum variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Standard Bruck (paper Algorithm 1).
@@ -81,7 +116,7 @@ impl Algorithm {
         Algorithm::LocalityBruckMultilevel,
     ];
 
-    /// CLI / CSV name.
+    /// CLI / CSV / registry name.
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Bruck => "bruck",
@@ -97,9 +132,24 @@ impl Algorithm {
         }
     }
 
-    /// Parse a CLI name.
+    /// Parse a CLI name, case-insensitively.
     pub fn parse(s: &str) -> Option<Algorithm> {
-        Algorithm::ALL.iter().copied().find(|a| a.name() == s)
+        Algorithm::ALL.iter().copied().find(|a| a.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Parse a CLI name; unknown names error with the full list of valid
+    /// names (CLI ergonomics).
+    pub fn parse_or_err(s: &str) -> Result<Algorithm> {
+        Algorithm::parse(s).ok_or_else(|| {
+            Error::Precondition(format!(
+                "unknown algorithm '{s}' (valid: {})",
+                Algorithm::ALL
+                    .iter()
+                    .map(|a| a.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
     }
 
     /// True if the algorithm exploits region locality.
@@ -121,23 +171,30 @@ impl std::fmt::Display for Algorithm {
     }
 }
 
-/// Run the selected allgather on `comm`.
+/// Collectively build a persistent plan for `algo` over `comm`.
 ///
-/// This is the library's front door: `examples/`, the sweep engine and the
-/// coordinator all go through it.
+/// The front door of the persistent API: resolves `algo` through the
+/// standard [`Registry`] and returns a reusable [`AllgatherPlan`]. All
+/// ranks must call this collectively with identical arguments.
+pub fn plan_allgather<T: Pod>(
+    algo: Algorithm,
+    comm: &Comm,
+    shape: Shape,
+) -> Result<Box<dyn AllgatherPlan<T>>> {
+    Registry::standard().plan(algo.name(), comm, shape)
+}
+
+/// One-shot allgather: plan, allocate the output, execute once.
+///
+/// Thin convenience wrapper over the registry — `examples/`, the sweep
+/// engine and the CLI go through it. It rebuilds the (cheap, ten-entry)
+/// standard registry per call; hot loops should plan once via
+/// [`plan_allgather`] and call [`AllgatherPlan::execute`] per iteration
+/// instead, which is the entire point of the persistent API.
 pub fn allgather<T: Pod>(algo: Algorithm, comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    match algo {
-        Algorithm::Bruck => bruck::allgather(comm, local),
-        Algorithm::Ring => ring::allgather(comm, local),
-        Algorithm::RecursiveDoubling => recursive_doubling::allgather(comm, local),
-        Algorithm::Dissemination => dissemination::allgather(comm, local),
-        Algorithm::Hierarchical => hierarchical::allgather(comm, local),
-        Algorithm::Multilane => multilane::allgather(comm, local),
-        Algorithm::LocalityBruck => loc_bruck::allgather(comm, local),
-        Algorithm::LocalityBruckV => loc_bruck::allgather_v(comm, local),
-        Algorithm::LocalityBruckMultilevel => loc_bruck::allgather_multilevel(comm, local),
-        Algorithm::SystemDefault => dispatch::allgather(comm, local),
-    }
+    let registry = Registry::<T>::standard();
+    let a = registry.get(algo.name()).expect("every built-in algorithm is registered");
+    plan::one_shot(a, comm, local)
 }
 
 /// The expected allgather result for verification: every rank's canonical
@@ -170,6 +227,35 @@ mod tests {
     }
 
     #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(Algorithm::parse("BRUCK"), Some(Algorithm::Bruck));
+        assert_eq!(Algorithm::parse("Loc-Bruck"), Some(Algorithm::LocalityBruck));
+        assert_eq!(
+            Algorithm::parse("LOC-BRUCK-2LEVEL"),
+            Some(Algorithm::LocalityBruckMultilevel)
+        );
+    }
+
+    #[test]
+    fn parse_error_lists_valid_names() {
+        let err = Algorithm::parse_or_err("warp-drive").unwrap_err().to_string();
+        assert!(err.contains("warp-drive"));
+        for a in Algorithm::ALL {
+            assert!(err.contains(a.name()), "error must list {}", a.name());
+        }
+        assert_eq!(Algorithm::parse_or_err("RING").unwrap(), Algorithm::Ring);
+    }
+
+    #[test]
+    fn enum_names_match_registry_names() {
+        let names = Registry::<u64>::standard().names();
+        for a in Algorithm::ALL {
+            assert!(names.contains(&a.name()), "{} not in registry", a.name());
+        }
+        assert_eq!(names.len(), Algorithm::ALL.len());
+    }
+
+    #[test]
     fn locality_awareness_flags() {
         assert!(Algorithm::LocalityBruck.is_locality_aware());
         assert!(Algorithm::Hierarchical.is_locality_aware());
@@ -185,5 +271,24 @@ mod tests {
         let e = expected_result(3, 2);
         assert_eq!(e.len(), 6);
         assert_eq!(&e[2..4], &canonical_contribution(1, 2)[..]);
+    }
+
+    #[test]
+    fn one_shot_zero_length_is_uniform_across_algorithms() {
+        use crate::comm::{CommWorld, Timing};
+        use crate::topology::Topology;
+        // 4x4 supports every algorithm incl. recursive doubling
+        let topo = Topology::regions(4, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            for algo in Algorithm::ALL {
+                let out = allgather::<u32>(algo, c, &[]).unwrap();
+                assert!(out.is_empty(), "{algo} returned non-empty for n=0");
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&b| b));
+        // and no messages at all were sent
+        let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+        assert_eq!(total, 0);
     }
 }

@@ -7,11 +7,36 @@
 //! the `r·n`-element lane results. Reduces non-local *bytes* per rank to
 //! `≈ b/p_ℓ` like the locality-aware Bruck, but still needs `log2(r)`
 //! non-local *messages* per rank (§2.2).
+//!
+//! The persistent [`MultilanePlan`] retains the lane and region
+//! communicators inside two nested Bruck plans and precomputes the final
+//! lane-order → rank-order permutation.
 
+use super::bruck::BruckPlan;
 use super::grouping::{group_ranks, require_uniform, GroupBy};
-use super::bruck;
+use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
+
+/// The multi-lane algorithm (registry entry).
+pub struct Multilane;
+
+impl<T: Pod> CollectiveAlgorithm<T> for Multilane {
+    fn name(&self) -> &'static str {
+        "multilane"
+    }
+
+    fn summary(&self) -> &'static str {
+        "per-lane inter-region Bruck then local allgather (Träff & Hunold '20)"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("multilane", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(MultilanePlan::<T>::new(comm, shape.n)?))
+    }
+}
 
 /// The communicator ranks of lane `j`, sorted ascending (as `sub`
 /// requires), each paired with the group it represents.
@@ -26,45 +51,105 @@ fn lane_order(groups: &super::grouping::Groups, j: usize) -> Vec<(usize, usize)>
     pairs
 }
 
-/// Multi-lane allgather of `local` (length `n`); returns `n·p` elements in
-/// communicator rank order.
-pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let groups = group_ranks(comm, GroupBy::Region)?;
-    let ppr = require_uniform(&groups, "multi-lane allgather")?;
-    let n = local.len();
-    let p = comm.size();
-    let r_n = groups.count();
+/// Persistent multi-lane plan.
+pub struct MultilanePlan<T: Pod> {
+    n: usize,
+    p: usize,
+    r_n: usize,
+    /// Phase 1: Bruck over this rank's lane communicator.
+    lane_plan: BruckPlan<T>,
+    /// Lane result scratch, length `r_n · n`.
+    lane_result: Vec<T>,
+    /// Phase 2: Bruck over the region communicator (absent when `ppr == 1`).
+    local_plan: Option<BruckPlan<T>>,
+    /// All-lane scratch, length `p · n` (only used with `local_plan`).
+    all_lanes: Vec<T>,
+    /// Lane-major position → communicator rank.
+    perm: Vec<usize>,
+}
 
-    // Phase 1 (non-local): Bruck over this rank's lane. Under arbitrary
-    // placement the lane's comm ranks need not be ascending by group, so
-    // sort for `sub` and remember which group each lane position carries.
-    let my_lane = lane_order(&groups, groups.my_local);
-    let lane_ranks: Vec<usize> = my_lane.iter().map(|&(r, _)| r).collect();
-    let lane = comm.sub(&lane_ranks)?;
-    let lane_result = bruck::allgather(&lane, local)?; // r_n blocks in lane order
+impl<T: Pod> MultilanePlan<T> {
+    /// Collectively plan a multi-lane allgather of `n` elements per rank.
+    pub fn new(comm: &Comm, n: usize) -> Result<MultilanePlan<T>> {
+        let groups = group_ranks(comm, GroupBy::Region)?;
+        let ppr = require_uniform(&groups, "multi-lane allgather")?;
+        let p = comm.size();
+        let r_n = groups.count();
 
-    // Phase 2 (local): allgather lane results within the region.
-    let local_comm = comm.sub(&groups.members[groups.mine])?;
-    let all_lanes = if ppr > 1 {
-        bruck::allgather(&local_comm, &lane_result)?
-    } else {
-        lane_result
-    };
-    debug_assert_eq!(all_lanes.len(), p * n);
+        // Phase 1 communicator: this rank's lane. Under arbitrary placement
+        // the lane's comm ranks need not be ascending by group, so sort for
+        // `sub`; the permutation below remembers which rank each lane
+        // position carries.
+        let my_lane = lane_order(&groups, groups.my_local);
+        let lane_ranks: Vec<usize> = my_lane.iter().map(|&(r, _)| r).collect();
+        let lane = comm.sub(&lane_ranks)?;
+        let lane_plan = BruckPlan::<T>::new(&lane, n);
 
-    // all_lanes layout: [local rank j][lane-j position k] -> contribution
-    // of the rank at lane_order(j)[k]. Scatter into communicator rank
-    // order using each lane's own ordering (global knowledge).
-    let mut out = vec![T::default(); p * n];
-    for j in 0..ppr {
-        let order = lane_order(&groups, j);
-        for (k, &(rank, _gi)) in order.iter().enumerate() {
-            let src = (j * r_n + k) * n;
-            let dst = rank * n;
-            out[dst..dst + n].copy_from_slice(&all_lanes[src..src + n]);
+        let local_plan = if ppr > 1 {
+            let local_comm = comm.sub(&groups.members[groups.mine])?;
+            Some(BruckPlan::<T>::new(&local_comm, r_n * n))
+        } else {
+            None
+        };
+
+        // all_lanes layout: [local rank j][lane-j position k] -> the
+        // contribution of the rank at lane_order(j)[k].
+        let mut perm = Vec::with_capacity(p);
+        for j in 0..ppr {
+            for (rank, _gi) in lane_order(&groups, j) {
+                perm.push(rank);
+            }
         }
+        Ok(MultilanePlan {
+            n,
+            p,
+            r_n,
+            lane_plan,
+            lane_result: vec![T::default(); r_n * n],
+            local_plan,
+            all_lanes: if ppr > 1 { vec![T::default(); p * n] } else { Vec::new() },
+            perm,
+        })
     }
-    Ok(out)
+}
+
+impl<T: Pod> AllgatherPlan<T> for MultilanePlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "multilane"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.n, self.p, input, output)?;
+        if self.n == 0 {
+            return Ok(());
+        }
+        let n = self.n;
+        debug_assert_eq!(self.lane_result.len(), self.r_n * n);
+        self.lane_plan.execute(input, &mut self.lane_result)?;
+        let src: &[T] = if let Some(lp) = &mut self.local_plan {
+            lp.execute(&self.lane_result, &mut self.all_lanes)?;
+            &self.all_lanes
+        } else {
+            &self.lane_result
+        };
+        for (pos, &rank) in self.perm.iter().enumerate() {
+            output[rank * n..(rank + 1) * n].copy_from_slice(&src[pos * n..(pos + 1) * n]);
+        }
+        Ok(())
+    }
+}
+
+/// One-shot convenience wrapper: plan + single execute.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&Multilane, comm, local)
 }
 
 #[cfg(test)]
@@ -143,5 +228,21 @@ mod tests {
                 assert_eq!(r, expect, "seed {seed}");
             }
         }
+    }
+
+    #[test]
+    fn plan_reuse_stays_correct() {
+        let topo = Topology::regions(4, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = MultilanePlan::<u64>::new(c, 1).unwrap();
+            let mut out = vec![0u64; 8];
+            for round in 0..5u64 {
+                plan.execute(&[c.rank() as u64 + 10 * round], &mut out).unwrap();
+                let expect: Vec<u64> = (0..8u64).map(|r| r + 10 * round).collect();
+                assert_eq!(out, expect, "round {round}");
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&b| b));
     }
 }

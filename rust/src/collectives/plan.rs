@@ -1,0 +1,370 @@
+//! Persistent planned collectives — the crate's analogue of MPI-4
+//! `MPI_Allgather_init`.
+//!
+//! A [`CollectiveAlgorithm`] is a stateless algorithm description that can
+//! *plan* an allgather for a concrete `(communicator, shape)` pair. The
+//! resulting [`AllgatherPlan`] owns everything the hot path needs —
+//! retained (sub-)communicator handles, rotation/step schedules,
+//! pre-reserved collective tag blocks and scratch buffers — so that
+//! [`AllgatherPlan::execute`] performs **zero setup work and zero
+//! output/scratch allocation**: no group derivation, no sub-communicator
+//! construction, no tag allocation, no `Vec` growth.
+//!
+//! ## Contract
+//!
+//! * Planning is collective: every rank of the communicator must call
+//!   `plan` with the same algorithm and [`Shape`], in the same program
+//!   order relative to other collectives (exactly like
+//!   `MPI_Allgather_init`).
+//! * `execute(input, output)` requires `input.len() == shape.n` and
+//!   `output.len() == shape.n * p`; on success `output[r*n..(r+1)*n]`
+//!   holds rank `r`'s contribution for every `r` (communicator rank
+//!   order). Both buffers are caller-owned.
+//! * Executions are collective and must be issued in the same order on
+//!   every rank. Interleaving executions of *different* plans is safe as
+//!   long as that global order holds (tag blocks are disjoint per plan;
+//!   matching is FIFO per `(src, ctx, tag)`).
+//! * **Zero-length contributions** (`shape.n == 0`) are uniform across all
+//!   algorithms: planning yields a no-op plan whose `execute` sends no
+//!   messages and succeeds with an empty output.
+//! * A plan never consumes communicator state after planning: the parent's
+//!   [`crate::comm::Comm::next_coll_tag`] sequence is unaffected by any
+//!   number of executions.
+//!
+//! ## Registry
+//!
+//! [`Registry`] maps case-insensitive names to algorithm factories. New
+//! algorithms (or alternative backends) register without touching any
+//! dispatch `match`; the last registration of a name wins, so a backend
+//! can override a built-in.
+
+use crate::comm::{Comm, Pod};
+use crate::error::{Error, Result};
+
+use super::{bruck, dispatch, dissemination, hierarchical, loc_bruck, multilane};
+use super::{recursive_doubling, ring};
+
+/// Shape of one allgather: the per-rank contribution length in elements.
+/// (The rank count comes from the communicator at plan time.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    /// Elements contributed by every rank.
+    pub n: usize,
+}
+
+impl Shape {
+    /// Shape for `n` elements per rank.
+    pub fn elems(n: usize) -> Shape {
+        Shape { n }
+    }
+}
+
+/// A prepared allgather: setup amortized at plan time, executed many times.
+///
+/// See the [module docs](self) for the full contract (collectivity,
+/// buffer lengths, zero-length handling).
+pub trait AllgatherPlan<T: Pod> {
+    /// Registry name of the algorithm that produced this plan.
+    fn algorithm(&self) -> &'static str;
+
+    /// The planned per-rank contribution shape.
+    fn shape(&self) -> Shape;
+
+    /// Rank count of the planned communicator.
+    fn comm_size(&self) -> usize;
+
+    /// Run the communication: gather `input` (length `shape().n`) from
+    /// every rank into `output` (length `shape().n * comm_size()`), in
+    /// communicator rank order. No allocation, no sub-communicator
+    /// construction, no tag consumption.
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+}
+
+/// An allgather algorithm that can produce persistent plans.
+pub trait CollectiveAlgorithm<T: Pod>: Send + Sync {
+    /// Registry / CLI / CSV name.
+    fn name(&self) -> &'static str;
+
+    /// One-line human description (shown by `locag algos`).
+    fn summary(&self) -> &'static str {
+        ""
+    }
+
+    /// Collectively build a plan for `shape` over `comm`.
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>>;
+}
+
+/// Validate the execute-time buffer contract.
+pub(crate) fn check_io<T: Pod>(n: usize, p: usize, input: &[T], output: &[T]) -> Result<()> {
+    if input.len() != n {
+        return Err(Error::SizeMismatch { expected: n, got: input.len() });
+    }
+    if output.len() != n * p {
+        return Err(Error::SizeMismatch { expected: n * p, got: output.len() });
+    }
+    Ok(())
+}
+
+/// The uniform `n == 0` plan: no communication, empty output.
+pub(crate) struct EmptyPlan {
+    pub name: &'static str,
+    pub p: usize,
+}
+
+impl<T: Pod> AllgatherPlan<T> for EmptyPlan {
+    fn algorithm(&self) -> &'static str {
+        self.name
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: 0 }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(0, self.p, input, output)
+    }
+}
+
+/// Factory helper: the shared zero-length short-circuit. Every algorithm's
+/// `plan` starts with this so the `n == 0` contract is uniform.
+pub(crate) fn trivial_plan<T: Pod>(
+    name: &'static str,
+    comm: &Comm,
+    shape: Shape,
+) -> Option<Box<dyn AllgatherPlan<T>>> {
+    if shape.n == 0 {
+        Some(Box::new(EmptyPlan { name, p: comm.size() }))
+    } else {
+        None
+    }
+}
+
+/// Shared body of every one-shot wrapper: plan once, allocate the output,
+/// execute once. The `n == 0` no-op contract is inherited from the
+/// algorithm's factory (every factory starts with [`trivial_plan`]).
+pub(crate) fn one_shot<T: Pod>(
+    algo: &dyn CollectiveAlgorithm<T>,
+    comm: &Comm,
+    local: &[T],
+) -> Result<Vec<T>> {
+    let mut plan = algo.plan(comm, Shape::elems(local.len()))?;
+    let mut out = vec![T::default(); local.len() * plan.comm_size()];
+    plan.execute(local, &mut out)?;
+    Ok(out)
+}
+
+/// A plan delegating to another plan under a different reported name
+/// (dispatch selection, degenerate-topology fallbacks).
+pub(crate) struct SelectedPlan<T: Pod> {
+    pub name: &'static str,
+    pub inner: Box<dyn AllgatherPlan<T>>,
+}
+
+impl<T: Pod> AllgatherPlan<T> for SelectedPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        self.name
+    }
+
+    fn shape(&self) -> Shape {
+        self.inner.shape()
+    }
+
+    fn comm_size(&self) -> usize {
+        self.inner.comm_size()
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        self.inner.execute(input, output)
+    }
+}
+
+/// Name → algorithm-factory registry.
+///
+/// Lookup is case-insensitive; the *last* registration of a name wins so
+/// callers can override built-ins (e.g. swap in a backend-specific
+/// implementation) without touching dispatch code.
+pub struct Registry<T: Pod> {
+    entries: Vec<Box<dyn CollectiveAlgorithm<T>>>,
+}
+
+impl<T: Pod> Registry<T> {
+    /// An empty registry.
+    pub fn empty() -> Registry<T> {
+        Registry { entries: Vec::new() }
+    }
+
+    /// The ten built-in algorithms, in the order the figures report them.
+    pub fn standard() -> Registry<T> {
+        let mut r = Registry::empty();
+        r.register(Box::new(dispatch::SystemDefault));
+        r.register(Box::new(bruck::Bruck));
+        r.register(Box::new(ring::Ring));
+        r.register(Box::new(recursive_doubling::RecursiveDoubling));
+        r.register(Box::new(dissemination::Dissemination));
+        r.register(Box::new(hierarchical::Hierarchical));
+        r.register(Box::new(multilane::Multilane));
+        r.register(Box::new(loc_bruck::LocalityBruck));
+        r.register(Box::new(loc_bruck::LocalityBruckV));
+        r.register(Box::new(loc_bruck::LocalityBruckMultilevel));
+        r
+    }
+
+    /// Add (or override) an algorithm.
+    pub fn register(&mut self, algo: Box<dyn CollectiveAlgorithm<T>>) {
+        self.entries.push(algo);
+    }
+
+    /// Registered names, registration order, overrides collapsed.
+    pub fn names(&self) -> Vec<&'static str> {
+        let mut seen: Vec<&'static str> = Vec::new();
+        for e in &self.entries {
+            if !seen.iter().any(|n| n.eq_ignore_ascii_case(e.name())) {
+                seen.push(e.name());
+            }
+        }
+        seen
+    }
+
+    /// Look up an algorithm by case-insensitive name (latest wins).
+    pub fn get(&self, name: &str) -> Option<&dyn CollectiveAlgorithm<T>> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|a| a.name().eq_ignore_ascii_case(name))
+            .map(|b| b.as_ref())
+    }
+
+    /// `(name, summary)` pairs for listings.
+    pub fn catalog(&self) -> Vec<(&'static str, &'static str)> {
+        self.names()
+            .into_iter()
+            .map(|n| (n, self.get(n).expect("name came from names()").summary()))
+            .collect()
+    }
+
+    /// Plan by name. Unknown names report the full list of valid names.
+    pub fn plan(&self, name: &str, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        match self.get(name) {
+            Some(a) => a.plan(comm, shape),
+            None => Err(Error::Precondition(format!(
+                "unknown algorithm '{name}' (valid: {})",
+                self.names().join(", ")
+            ))),
+        }
+    }
+}
+
+impl<T: Pod> Default for Registry<T> {
+    fn default() -> Self {
+        Registry::standard()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{canonical_contribution, expected_result, Algorithm};
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    #[test]
+    fn standard_registry_lists_all_ten() {
+        let r = Registry::<u64>::standard();
+        let names = r.names();
+        assert_eq!(names.len(), Algorithm::ALL.len());
+        for a in Algorithm::ALL {
+            assert!(names.contains(&a.name()), "missing {}", a.name());
+        }
+        for (name, summary) in r.catalog() {
+            assert!(!name.is_empty());
+            assert!(!summary.is_empty(), "{name} has no summary");
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        let r = Registry::<u32>::standard();
+        assert!(r.get("LOC-BRUCK").is_some());
+        assert!(r.get("Bruck").is_some());
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn unknown_name_error_lists_valid_names() {
+        let topo = Topology::regions(1, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = Registry::<u32>::standard();
+            match r.plan("warp-drive", c, Shape::elems(1)) {
+                Err(e) => e.to_string(),
+                Ok(_) => String::new(),
+            }
+        });
+        for msg in &run.results {
+            assert!(msg.contains("warp-drive"), "{msg}");
+            assert!(msg.contains("loc-bruck"), "{msg}");
+            assert!(msg.contains("ring"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn every_builtin_plans_and_executes_by_name() {
+        let topo = Topology::regions(4, 4);
+        let p = topo.size();
+        let n = 2usize;
+        let expect = expected_result(p, n);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = Registry::<u64>::standard();
+            let mine = canonical_contribution(c.rank(), n);
+            let mut out = vec![0u64; n * p];
+            for name in r.names() {
+                let mut plan = r.plan(name, c, Shape::elems(n)).unwrap();
+                assert_eq!(plan.algorithm(), name);
+                assert_eq!(plan.shape(), Shape::elems(n));
+                assert_eq!(plan.comm_size(), p);
+                out.fill(0);
+                plan.execute(&mine, &mut out).unwrap();
+                assert_eq!(out, expect, "{name}");
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok));
+    }
+
+    #[test]
+    fn late_registration_overrides_builtin() {
+        struct Fake;
+        impl CollectiveAlgorithm<u32> for Fake {
+            fn name(&self) -> &'static str {
+                "ring"
+            }
+            fn summary(&self) -> &'static str {
+                "fake ring"
+            }
+            fn plan(&self, comm: &Comm, _shape: Shape) -> Result<Box<dyn AllgatherPlan<u32>>> {
+                Ok(Box::new(EmptyPlan { name: "ring", p: comm.size() }))
+            }
+        }
+        let mut r = Registry::<u32>::standard();
+        r.register(Box::new(Fake));
+        assert_eq!(r.get("ring").unwrap().summary(), "fake ring");
+        // names() still lists ring once
+        assert_eq!(r.names().iter().filter(|n| **n == "ring").count(), 1);
+    }
+
+    #[test]
+    fn execute_validates_buffer_lengths() {
+        let topo = Topology::regions(2, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = Registry::<u32>::standard();
+            let mut plan = r.plan("bruck", c, Shape::elems(3)).unwrap();
+            let bad_in = plan.execute(&[1u32; 2], &mut [0u32; 12]).is_err();
+            let bad_out = plan.execute(&[1u32; 3], &mut [0u32; 11]).is_err();
+            bad_in && bad_out
+        });
+        assert!(run.results.iter().all(|&b| b));
+    }
+}

@@ -4,6 +4,11 @@
 //! (hierarchical = gather + Bruck + bcast) and that the non-power region
 //! extension of the locality-aware Bruck needs (allgatherv for steps where
 //! some local ranks hold no new data — paper §3).
+//!
+//! [`AllgathervPlan`] is the persistent form used inside
+//! [`crate::collectives::loc_bruck`]'s plans: per-rank counts are fixed at
+//! plan time, so the Bruck-structured exchange runs over one flat rotated
+//! scratch buffer with precomputed offsets — no per-step `Vec`s.
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -66,75 +71,158 @@ pub fn bcast<T: Pod>(comm: &Comm, data: Option<Vec<T>>, root: usize) -> Result<V
     buf.ok_or_else(|| Error::Precondition("bcast finished without data".into()))
 }
 
-/// Allgatherv via the Bruck structure: rank `r` contributes `counts[r]`
-/// elements; the result concatenates contributions in rank order. All
-/// ranks must pass identical `counts`.
+/// The binomial-tree coordinates of [`bcast`] for one rank, precomputed:
+/// `(parent, children)` in communicator ranks, children in send order.
+/// Used by persistent plans to run the identical tree without re-deriving
+/// it per execution.
+pub(crate) fn bcast_tree(p: usize, id: usize, root: usize) -> (Option<usize>, Vec<usize>) {
+    let vid = (id + p - root) % p;
+    let mut parent = None;
+    let mut mask = 1usize;
+    while mask < p {
+        if vid & mask != 0 {
+            parent = Some(((vid ^ mask) + root) % p);
+            break;
+        }
+        mask <<= 1;
+    }
+    mask >>= 1;
+    let mut children = Vec::new();
+    while mask > 0 {
+        if vid + mask < p {
+            children.push((vid + mask + root) % p);
+        }
+        mask >>= 1;
+    }
+    (parent, children)
+}
+
+/// One step of the allgatherv schedule (element offsets into the flat
+/// rotated scratch buffer).
+struct VStep {
+    send_to: usize,
+    recv_from: usize,
+    send_len: usize,
+    recv_off: usize,
+    recv_len: usize,
+}
+
+/// Persistent Bruck-structured allgatherv: rank `r` contributes
+/// `counts[r]` elements; the result concatenates contributions in rank
+/// order. All ranks must pass identical `counts` at plan time.
 ///
 /// Needed by the locality-aware Bruck when the region count is not a power
 /// of the region size: at the final non-local step a fraction of local
 /// ranks receive nothing and contribute empty blocks to the following
 /// local gather (paper §3).
-pub fn allgatherv<T: Pod>(comm: &Comm, local: &[T], counts: &[usize]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    if counts.len() != p {
-        return Err(Error::SizeMismatch { expected: p, got: counts.len() });
-    }
-    if counts[id] != local.len() {
-        return Err(Error::SizeMismatch { expected: counts[id], got: local.len() });
-    }
-    let tag = comm.next_coll_tag();
+pub struct AllgathervPlan<T: Pod> {
+    comm: Comm,
+    p: usize,
+    id: usize,
+    counts: Vec<usize>,
+    /// Prefix sums of counts in rotated order (`rot_off[j]` = offset of the
+    /// block of rank `(id + j) % p`), length `p + 1`.
+    rot_off: Vec<usize>,
+    /// Canonical output offset of each rank's block.
+    out_off: Vec<usize>,
+    steps: Vec<VStep>,
+    tag_base: u64,
+    total: usize,
+    /// Flat working buffer in rotated order, length `total`.
+    scratch: Vec<T>,
+}
 
-    // Rotated working set: entry j is the contribution of rank (id+j)%p.
-    // Bruck steps exchange *prefixes of blocks*; with per-rank counts the
-    // byte sizes differ per rank but the schedule is identical.
-    let mut blocks: Vec<Vec<T>> = Vec::with_capacity(p);
-    blocks.push(local.to_vec());
-
-    let mut dist = 1usize;
-    let mut step = 0u64;
-    while dist < p {
-        let nblocks = dist.min(p - dist);
-        let send_to = (id + p - dist) % p;
-        let recv_from = (id + dist) % p;
-        // flatten the first nblocks blocks
-        let payload: Vec<T> = blocks[..nblocks].concat();
-        let _req = comm.isend(&payload, send_to, tag + step)?;
-        let got: Vec<T> = comm.irecv(recv_from, tag + step).wait(comm)?;
-        // split according to the counts of the origin ranks
-        let mut off = 0usize;
-        for j in 0..nblocks {
-            let origin = (recv_from + j) % p;
-            let c = counts[origin];
-            if off + c > got.len() {
-                return Err(Error::SizeMismatch { expected: off + c, got: got.len() });
-            }
-            blocks.push(got[off..off + c].to_vec());
-            off += c;
+impl<T: Pod> AllgathervPlan<T> {
+    /// Collectively plan an allgatherv for fixed per-rank `counts`.
+    /// Reserves one collective tag per step on `comm`.
+    pub fn new(comm: &Comm, counts: &[usize]) -> Result<AllgathervPlan<T>> {
+        let p = comm.size();
+        if counts.len() != p {
+            return Err(Error::SizeMismatch { expected: p, got: counts.len() });
         }
-        if off != got.len() {
-            return Err(Error::SizeMismatch { expected: off, got: got.len() });
+        let id = comm.rank();
+        let mut rot_off = vec![0usize; p + 1];
+        for j in 0..p {
+            rot_off[j + 1] = rot_off[j] + counts[(id + j) % p];
         }
-        dist <<= 1;
-        step += 1;
-    }
-    debug_assert_eq!(blocks.len(), p);
-
-    // Un-rotate: blocks[j] belongs to rank (id + j) % p.
-    let total: usize = counts.iter().sum();
-    let mut out = vec![T::default(); total];
-    let offsets: Vec<usize> = counts
-        .iter()
-        .scan(0usize, |acc, &c| {
-            let o = *acc;
-            *acc += c;
-            Some(o)
+        let total = rot_off[p];
+        let mut out_off = vec![0usize; p];
+        let mut acc = 0usize;
+        for (r, &c) in counts.iter().enumerate() {
+            out_off[r] = acc;
+            acc += c;
+        }
+        // Bruck schedule over *blocks*; with per-rank counts the byte sizes
+        // differ per rank but the schedule is identical. The blocks received
+        // at distance `dist` are exactly rotated indices [dist, dist+k), so
+        // they land contiguously in the flat buffer.
+        let mut steps = Vec::new();
+        let mut dist = 1usize;
+        while dist < p {
+            let nblocks = dist.min(p - dist);
+            steps.push(VStep {
+                send_to: (id + p - dist) % p,
+                recv_from: (id + dist) % p,
+                send_len: rot_off[nblocks],
+                recv_off: rot_off[dist],
+                recv_len: rot_off[dist + nblocks] - rot_off[dist],
+            });
+            dist <<= 1;
+        }
+        let tag_base = comm.reserve_coll_tags(steps.len() as u64);
+        Ok(AllgathervPlan {
+            comm: comm.retain(),
+            p,
+            id,
+            counts: counts.to_vec(),
+            rot_off,
+            out_off,
+            steps,
+            tag_base,
+            total,
+            scratch: vec![T::default(); total],
         })
-        .collect();
-    for (j, block) in blocks.iter().enumerate() {
-        let r = (id + j) % p;
-        out[offsets[r]..offsets[r] + counts[r]].copy_from_slice(block);
     }
+
+    /// Total gathered length (`sum(counts)`).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Run the exchange: `local.len()` must equal this rank's planned
+    /// count; `output.len()` must equal [`AllgathervPlan::total`].
+    pub fn execute(&mut self, local: &[T], output: &mut [T]) -> Result<()> {
+        if local.len() != self.counts[self.id] {
+            return Err(Error::SizeMismatch { expected: self.counts[self.id], got: local.len() });
+        }
+        if output.len() != self.total {
+            return Err(Error::SizeMismatch { expected: self.total, got: output.len() });
+        }
+        self.scratch[..local.len()].copy_from_slice(local);
+        for (i, s) in self.steps.iter().enumerate() {
+            let tag = self.tag_base + i as u64;
+            let _send = self.comm.isend(&self.scratch[..s.send_len], s.send_to, tag)?;
+            let req = self.comm.irecv(s.recv_from, tag);
+            req.wait_into(&self.comm, &mut self.scratch[s.recv_off..s.recv_off + s.recv_len])?;
+        }
+        // Un-rotate: rotated block j belongs to rank (id + j) % p.
+        for j in 0..self.p {
+            let r = (self.id + j) % self.p;
+            let c = self.counts[r];
+            output[self.out_off[r]..self.out_off[r] + c]
+                .copy_from_slice(&self.scratch[self.rot_off[j]..self.rot_off[j] + c]);
+        }
+        Ok(())
+    }
+}
+
+/// One-shot allgatherv: plan + single execute. Rank `r` contributes
+/// `counts[r]` elements; the result concatenates contributions in rank
+/// order. All ranks must pass identical `counts`.
+pub fn allgatherv<T: Pod>(comm: &Comm, local: &[T], counts: &[usize]) -> Result<Vec<T>> {
+    let mut plan = AllgathervPlan::<T>::new(comm, counts)?;
+    let mut out = vec![T::default(); plan.total()];
+    plan.execute(local, &mut out)?;
     Ok(out)
 }
 
@@ -172,6 +260,39 @@ mod tests {
     }
 
     #[test]
+    fn bcast_tree_matches_bcast_message_flow() {
+        // Every child's parent must list it; the root has no parent; all
+        // ranks are reachable from the root.
+        for p in [1usize, 2, 3, 5, 8, 13] {
+            for root in [0usize, p / 2] {
+                let mut reached = vec![false; p];
+                reached[root] = true;
+                // breadth-first over the precomputed tree
+                let mut frontier = vec![root];
+                while let Some(r) = frontier.pop() {
+                    let (_, children) = bcast_tree(p, r, root);
+                    for c in children {
+                        assert!(!reached[c], "p={p} root={root}: {c} reached twice");
+                        reached[c] = true;
+                        frontier.push(c);
+                    }
+                }
+                assert!(reached.iter().all(|&x| x), "p={p} root={root}");
+                for r in 0..p {
+                    let (parent, _) = bcast_tree(p, r, root);
+                    if r == root {
+                        assert!(parent.is_none());
+                    } else {
+                        let pr = parent.unwrap();
+                        let (_, pc) = bcast_tree(p, pr, root);
+                        assert!(pc.contains(&r), "p={p} root={root} rank={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn allgatherv_uneven_counts() {
         let topo = Topology::regions(1, 4);
         let counts = [3usize, 0, 2, 1];
@@ -203,8 +324,32 @@ mod tests {
         let topo = Topology::regions(1, 2);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let bad_len = allgatherv(c, &[1u64], &[1]).is_err(); // counts.len() != p
-            let bad_count = allgatherv(c, &[1u64], &[2, 1]).is_err(); // mine != counts[me]
+            // mine != counts[me], symmetric on both ranks so no rank blocks
+            let bad_count = allgatherv(c, &[1u64], &[2, 2]).is_err();
             bad_len && bad_count
+        });
+        assert!(run.results.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn allgatherv_plan_reuse() {
+        let topo = Topology::regions(1, 4);
+        let counts = [2usize, 0, 1, 3];
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let id = c.rank();
+            let mut plan = AllgathervPlan::<u64>::new(c, &counts).unwrap();
+            let mut out = vec![0u64; plan.total()];
+            for round in 0..5u64 {
+                let mine: Vec<u64> =
+                    (0..counts[id]).map(|j| (id * 100 + j) as u64 + 1000 * round).collect();
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..4usize)
+                    .flat_map(|r| (0..counts[r]).map(move |j| (r * 100 + j) as u64))
+                    .map(|v| v + 1000 * round)
+                    .collect();
+                assert_eq!(out, expect, "round {round}");
+            }
+            true
         });
         assert!(run.results.iter().all(|&b| b));
     }

@@ -5,42 +5,136 @@
 //! Bruck, blocks stay in aligned order, so no final rotation is needed —
 //! but `p` must be a power of two (MPICH falls back to Bruck otherwise;
 //! see [`crate::collectives::dispatch`]).
+//!
+//! The persistent [`RecursiveDoublingPlan`] exchanges directly through the
+//! caller's output buffer (sends are buffered eagerly by the transport, so
+//! the aligned send window needs no copy).
 
+use std::marker::PhantomData;
+
+use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
 
-/// Recursive-doubling allgather of `local` (length `n`); returns `n·p`
-/// elements in rank order. Errors on non-power-of-two communicators.
+/// The recursive-doubling algorithm (registry entry).
+pub struct RecursiveDoubling;
+
+impl<T: Pod> CollectiveAlgorithm<T> for RecursiveDoubling {
+    fn name(&self) -> &'static str {
+        "recursive-doubling"
+    }
+
+    fn summary(&self) -> &'static str {
+        "recursive doubling: log2(p) aligned exchanges, power-of-two sizes only"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("recursive-doubling", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(RecursiveDoublingPlan::<T>::new(comm, shape.n)?))
+    }
+}
+
+/// One XOR exchange of the schedule.
+struct Step {
+    peer: usize,
+    /// First block of the aligned window this rank currently owns.
+    base: usize,
+    /// First block of the peer's aligned window.
+    peer_base: usize,
+    /// Window width in blocks.
+    dist: usize,
+}
+
+/// Persistent recursive-doubling plan.
+pub struct RecursiveDoublingPlan<T: Pod> {
+    comm: Comm,
+    n: usize,
+    p: usize,
+    id: usize,
+    tag_base: u64,
+    steps: Vec<Step>,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Pod> RecursiveDoublingPlan<T> {
+    /// Collectively plan the exchange schedule. Errors at plan time on
+    /// non-power-of-two communicators.
+    pub fn new(comm: &Comm, n: usize) -> Result<RecursiveDoublingPlan<T>> {
+        let p = comm.size();
+        if !p.is_power_of_two() {
+            return Err(Error::Precondition(format!(
+                "recursive doubling requires power-of-two size, got {p}"
+            )));
+        }
+        let id = comm.rank();
+        let mut steps = Vec::new();
+        let mut dist = 1usize;
+        while dist < p {
+            let peer = id ^ dist;
+            steps.push(Step {
+                peer,
+                base: (id / dist) * dist,
+                peer_base: (peer / dist) * dist,
+                dist,
+            });
+            dist <<= 1;
+        }
+        let tag_base = comm.reserve_coll_tags(steps.len() as u64);
+        Ok(RecursiveDoublingPlan {
+            comm: comm.retain(),
+            n,
+            p,
+            id,
+            tag_base,
+            steps,
+            _elem: PhantomData,
+        })
+    }
+}
+
+impl<T: Pod> AllgatherPlan<T> for RecursiveDoublingPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "recursive-doubling"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.n, self.p, input, output)?;
+        if self.n == 0 {
+            return Ok(());
+        }
+        let n = self.n;
+        output[self.id * n..(self.id + 1) * n].copy_from_slice(input);
+        for (i, s) in self.steps.iter().enumerate() {
+            let tag = self.tag_base + i as u64;
+            // The windows are disjoint (peer differs in the `dist` bit), so
+            // we can send from and receive into the output buffer directly.
+            let _send =
+                self.comm.isend(&output[s.base * n..(s.base + s.dist) * n], s.peer, tag)?;
+            let req = self.comm.irecv(s.peer, tag);
+            req.wait_into(
+                &self.comm,
+                &mut output[s.peer_base * n..(s.peer_base + s.dist) * n],
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// One-shot convenience wrapper: plan + single execute. Errors on
+/// non-power-of-two communicators (unless `local` is empty — the uniform
+/// zero-length no-op applies before the precondition).
 pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    if !p.is_power_of_two() {
-        return Err(Error::Precondition(format!(
-            "recursive doubling requires power-of-two size, got {p}"
-        )));
-    }
-    let id = comm.rank();
-    let n = local.len();
-    let tag = comm.next_coll_tag();
-
-    let mut out = vec![T::default(); n * p];
-    out[id * n..(id + 1) * n].copy_from_slice(local);
-
-    let mut dist = 1usize;
-    let mut step = 0u64;
-    while dist < p {
-        let peer = id ^ dist;
-        // The aligned window of 'dist' blocks this rank currently owns.
-        let base = (id / dist) * dist;
-        let send = out[base * n..(base + dist) * n].to_vec();
-        let _req = comm.isend(&send, peer, tag + step)?;
-        let got: Vec<T> = comm.irecv(peer, tag + step).wait(comm)?;
-        debug_assert_eq!(got.len(), dist * n);
-        let peer_base = (peer / dist) * dist;
-        out[peer_base * n..(peer_base + dist) * n].copy_from_slice(&got);
-        dist <<= 1;
-        step += 1;
-    }
-    Ok(out)
+    super::plan::one_shot(&RecursiveDoubling, comm, local)
 }
 
 #[cfg(test)]
@@ -54,6 +148,15 @@ mod tests {
         let topo = Topology::regions(3, 1);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             allgather(c, &[c.rank() as u64]).is_err()
+        });
+        assert!(run.results.iter().all(|&e| e));
+    }
+
+    #[test]
+    fn plan_rejects_non_power_of_two_at_plan_time() {
+        let topo = Topology::regions(3, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            RecursiveDoublingPlan::<u32>::new(c, 4).is_err()
         });
         assert!(run.results.iter().all(|&e| e));
     }

@@ -5,34 +5,105 @@
 //! receives a new block from `id + 1 (mod p)`. Minimizes bandwidth cost
 //! per link and keeps every message between neighbours, which is why MPI
 //! implementations select it for large messages (§2).
+//!
+//! The persistent [`RingPlan`] needs no scratch at all: blocks stream
+//! directly through the caller's output buffer.
 
+use std::marker::PhantomData;
+
+use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
-/// Ring allgather of `local` (length `n`); returns `n·p` elements in rank
-/// order.
-pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    let n = local.len();
-    let tag = comm.next_coll_tag();
+/// The ring algorithm (registry entry).
+pub struct Ring;
 
-    let mut out = vec![T::default(); n * p];
-    out[id * n..(id + 1) * n].copy_from_slice(local);
-
-    let left = (id + p - 1) % p;
-    let right = (id + 1) % p;
-    // Block travelling through this rank: at step s we hold the block of
-    // rank (id + s) mod p and forward it left.
-    for s in 0..p.saturating_sub(1) {
-        let have = (id + s) % p;
-        let _req = comm.isend(&out[have * n..(have + 1) * n], left, tag + s as u64)?;
-        // receive straight into the destination block (perf pass)
-        let recv_block = (id + s + 1) % p;
-        let req = comm.irecv(right, tag + s as u64);
-        req.wait_into(comm, &mut out[recv_block * n..(recv_block + 1) * n])?;
+impl<T: Pod> CollectiveAlgorithm<T> for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
     }
-    Ok(out)
+
+    fn summary(&self) -> &'static str {
+        "ring allgather: p-1 neighbour steps, bandwidth-optimal large-message baseline"
+    }
+
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("ring", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(RingPlan::<T>::new(comm, shape.n)))
+    }
+}
+
+/// Persistent ring plan: neighbours + tag block, zero scratch.
+pub struct RingPlan<T: Pod> {
+    comm: Comm,
+    n: usize,
+    p: usize,
+    id: usize,
+    left: usize,
+    right: usize,
+    tag_base: u64,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Pod> RingPlan<T> {
+    /// Collectively plan a ring allgather of `n` elements per rank.
+    /// Reserves one collective tag per step on `comm`.
+    pub fn new(comm: &Comm, n: usize) -> RingPlan<T> {
+        let p = comm.size();
+        let id = comm.rank();
+        let tag_base = comm.reserve_coll_tags(p.saturating_sub(1) as u64);
+        RingPlan {
+            comm: comm.retain(),
+            n,
+            p,
+            id,
+            left: (id + p - 1) % p,
+            right: (id + 1) % p,
+            tag_base,
+            _elem: PhantomData,
+        }
+    }
+}
+
+impl<T: Pod> AllgatherPlan<T> for RingPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "ring"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.p
+    }
+
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.n, self.p, input, output)?;
+        if self.n == 0 {
+            return Ok(());
+        }
+        let (n, p, id) = (self.n, self.p, self.id);
+        output[id * n..(id + 1) * n].copy_from_slice(input);
+        // Block travelling through this rank: at step s we hold the block
+        // of rank (id + s) mod p and forward it left.
+        for s in 0..p.saturating_sub(1) {
+            let tag = self.tag_base + s as u64;
+            let have = (id + s) % p;
+            let _send = self.comm.isend(&output[have * n..(have + 1) * n], self.left, tag)?;
+            let recv_block = (id + s + 1) % p;
+            let req = self.comm.irecv(self.right, tag);
+            req.wait_into(&self.comm, &mut output[recv_block * n..(recv_block + 1) * n])?;
+        }
+        Ok(())
+    }
+}
+
+/// One-shot convenience wrapper: plan + single execute.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&Ring, comm, local)
 }
 
 #[cfg(test)]

@@ -57,6 +57,22 @@ pub fn from_bytes<T: Pod>(bytes: &[u8]) -> Option<Vec<T>> {
     Some(out)
 }
 
+/// Serialize a slice of `Pod` elements into an existing byte buffer
+/// (zero-allocation send-side packing, the inverse of [`copy_into`]).
+///
+/// Returns `false` (and copies nothing) on length mismatch.
+pub fn write_bytes<T: Pod>(xs: &[T], dst: &mut [u8]) -> bool {
+    let n = std::mem::size_of_val(xs);
+    if dst.len() != n {
+        return false;
+    }
+    // SAFETY: same as `to_bytes`, but into caller-provided storage.
+    unsafe {
+        std::ptr::copy_nonoverlapping(xs.as_ptr() as *const u8, dst.as_mut_ptr(), n);
+    }
+    true
+}
+
 /// Copy bytes into an existing element slice (zero-allocation receive path).
 ///
 /// Returns `false` (and copies nothing) on length mismatch.
@@ -105,6 +121,16 @@ mod tests {
         assert!(from_bytes::<u32>(&b).is_none());
         assert!(from_bytes::<u16>(&b).is_none());
         assert!(from_bytes::<u8>(&b).is_some());
+    }
+
+    #[test]
+    fn write_bytes_roundtrips_and_checks_length() {
+        let xs: Vec<u32> = vec![7, 8, 9];
+        let mut buf = vec![0u8; 12];
+        assert!(write_bytes(&xs, &mut buf));
+        assert_eq!(from_bytes::<u32>(&buf).unwrap(), xs);
+        let mut wrong = vec![0u8; 11];
+        assert!(!write_bytes(&xs, &mut wrong));
     }
 
     #[test]

@@ -27,7 +27,7 @@
 pub mod datatype;
 pub mod mailbox;
 
-pub use datatype::{copy_into, from_bytes, to_bytes, Pod};
+pub use datatype::{copy_into, from_bytes, to_bytes, write_bytes, Pod};
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -42,6 +42,18 @@ use mailbox::{Mailbox, Message, Pattern};
 /// First tag reserved for internal collective traffic; user tags must be
 /// below this value.
 pub const COLL_TAG_BASE: u64 = 1 << 32;
+
+/// Global count of sub-communicator constructions ([`Comm::sub`]).
+///
+/// Pure diagnostics: the persistent-plan tests assert that repeated
+/// [`crate::collectives::AllgatherPlan::execute`] calls build **zero** new
+/// sub-communicators (all groups are derived once at plan time).
+static SUB_COMMS_BUILT: AtomicU64 = AtomicU64::new(0);
+
+/// Number of sub-communicators constructed process-wide since start.
+pub fn sub_comms_built() -> u64 {
+    SUB_COMMS_BUILT.load(Ordering::Relaxed)
+}
 
 /// Transport timing mode.
 #[derive(Debug, Clone)]
@@ -408,9 +420,41 @@ impl Comm {
     /// ranks of a communicator call collectives in the same order, so the
     /// per-comm sequence agrees across ranks.
     pub fn next_coll_tag(&self) -> u64 {
+        self.reserve_coll_tags(1)
+    }
+
+    /// Reserve a block of `count` consecutive collective tags and return
+    /// the first. This is how persistent plans pre-allocate their whole tag
+    /// schedule at plan time, so that `execute` consumes **no** tags.
+    ///
+    /// Collective in the MPI sense: every rank of the communicator must
+    /// reserve the same counts in the same order (plan construction is a
+    /// collective call, exactly like `MPI_Allgather_init`).
+    pub fn reserve_coll_tags(&self, count: u64) -> u64 {
         let s = self.seq.get();
-        self.seq.set(s + 1);
+        self.seq.set(s + count);
         COLL_TAG_BASE + s
+    }
+
+    /// Duplicate this communicator handle for retention inside a persistent
+    /// collective plan.
+    ///
+    /// The clone shares the context id, so messages sent through it match
+    /// receives posted on the original (and vice versa) — like holding a
+    /// second reference to an MPI communicator rather than `MPI_Comm_dup`.
+    /// A retained handle must only be used with tags reserved via
+    /// [`Comm::reserve_coll_tags`] on the originating handle; calling
+    /// [`Comm::next_coll_tag`] on the clone would desynchronize the two
+    /// sequence counters.
+    pub fn retain(&self) -> Comm {
+        Comm {
+            world_rank: self.world_rank,
+            rank: self.rank,
+            ranks: self.ranks.clone(),
+            ctx: self.ctx,
+            seq: Cell::new(self.seq.get()),
+            world: self.world.clone(),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -447,6 +491,7 @@ impl Comm {
         for &w in &world_ranks {
             h = splitmix(h ^ (w as u64).wrapping_add(0x1234_5678));
         }
+        SUB_COMMS_BUILT.fetch_add(1, Ordering::Relaxed);
         Ok(Comm {
             world_rank: self.world_rank,
             rank: my,
@@ -744,6 +789,53 @@ mod tests {
             }
         });
         assert!(run.results[1]);
+    }
+
+    #[test]
+    fn reserved_tag_blocks_are_disjoint_and_ordered() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            let a = c.reserve_coll_tags(4);
+            let b = c.next_coll_tag();
+            let d = c.reserve_coll_tags(2);
+            (a, b, d)
+        });
+        for &(a, b, d) in &run.results {
+            assert_eq!(a, COLL_TAG_BASE);
+            assert_eq!(b, a + 4);
+            assert_eq!(d, b + 1);
+        }
+    }
+
+    #[test]
+    fn retained_handle_interoperates_with_original() {
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            let tag = c.reserve_coll_tags(1);
+            let held = c.retain();
+            if c.rank() == 0 {
+                // send through the retained handle, receive on the original
+                held.send(&[5u8], 1, tag).unwrap();
+                0
+            } else if c.rank() == 1 {
+                c.recv::<u8>(0, tag).unwrap()[0] as usize
+            } else {
+                0
+            }
+        });
+        assert_eq!(run.results[1], 5);
+    }
+
+    #[test]
+    fn sub_counter_increments_per_construction() {
+        let before = sub_comms_built();
+        let run = CommWorld::run(&world(), Timing::Wallclock, |c| {
+            let local = c.split_regions().unwrap();
+            // retaining is NOT a construction
+            let _held = local.retain();
+            local.size()
+        });
+        assert!(run.results.iter().all(|&s| s == 2));
+        // 4 ranks each built exactly one sub-communicator
+        assert!(sub_comms_built() >= before + 4);
     }
 
     #[test]

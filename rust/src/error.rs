@@ -1,51 +1,84 @@
 //! Crate-wide error type.
 //!
 //! The message-passing substrate and the collectives report failures through
-//! [`Error`]; higher layers (CLI, coordinator) wrap it in `anyhow` for
-//! context-rich reporting.
+//! [`Error`]. The offline build environment has no crates.io access, so the
+//! `Display`/`Error` impls are written by hand instead of derived via
+//! `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the locag library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// A rank index was outside the communicator size.
-    #[error("rank {rank} out of range for communicator of size {size}")]
     RankOutOfRange { rank: usize, size: usize },
 
     /// A collective was invoked with inconsistent buffer sizes across ranks.
-    #[error("buffer size mismatch in collective: expected {expected}, got {got}")]
     SizeMismatch { expected: usize, got: usize },
 
     /// The peer rank terminated (its mailbox was dropped / poisoned).
-    #[error("peer rank {rank} disconnected during {during}")]
     Disconnected { rank: usize, during: &'static str },
 
     /// A receive saw a payload whose byte length is not a multiple of the
     /// element size of the expected datatype.
-    #[error("datatype mismatch: payload of {bytes} bytes is not a whole number of {elem_size}-byte elements")]
     DatatypeMismatch { bytes: usize, elem_size: usize },
 
     /// Topology construction was given inconsistent parameters.
-    #[error("invalid topology: {0}")]
     InvalidTopology(String),
 
     /// An algorithm precondition was violated (e.g. non-power-of-two size for
     /// an algorithm that requires it).
-    #[error("algorithm precondition violated: {0}")]
     Precondition(String),
 
     /// PJRT runtime failures (artifact missing, compile error, shape error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// The coordinator rejected or failed a request.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// I/O failures from the figure harness / artifact loading.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::RankOutOfRange { rank, size } => {
+                write!(f, "rank {rank} out of range for communicator of size {size}")
+            }
+            Error::SizeMismatch { expected, got } => {
+                write!(f, "buffer size mismatch in collective: expected {expected}, got {got}")
+            }
+            Error::Disconnected { rank, during } => {
+                write!(f, "peer rank {rank} disconnected during {during}")
+            }
+            Error::DatatypeMismatch { bytes, elem_size } => write!(
+                f,
+                "datatype mismatch: payload of {bytes} bytes is not a whole number of \
+                 {elem_size}-byte elements"
+            ),
+            Error::InvalidTopology(s) => write!(f, "invalid topology: {s}"),
+            Error::Precondition(s) => write!(f, "algorithm precondition violated: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
+            Error::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -70,5 +103,6 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -19,7 +19,11 @@
 //!   dissemination, hierarchical (Träff '06), multi-lane (Träff & Hunold '20)
 //!   and **locality-aware Bruck** allgathers (incl. multilevel hierarchy and
 //!   non-power region counts), a system-MPI dispatch baseline, allgatherv,
-//!   and a locality-aware allreduce extension.
+//!   and a locality-aware allreduce extension — all behind a **persistent
+//!   planned-collective API** (`MPI_Allgather_init`-style): plan once per
+//!   (communicator, shape), execute many times with zero setup and zero
+//!   allocation, dispatched through a pluggable name → algorithm
+//!   [`collectives::Registry`].
 //! * [`sim`] — the sweep/measurement engine that runs any algorithm at a
 //!   given (p, ppn, data size) and reports virtual time, wall time and a
 //!   locality-classified message trace.
@@ -50,6 +54,31 @@
 //! // The paper's headline: one non-local message per rank (vs 4 for Bruck).
 //! assert_eq!(report.trace.max_nonlocal_msgs(), 1);
 //! ```
+//!
+//! ## Persistent plans
+//!
+//! Hot loops (benchmark figures, the serving coordinator) plan once and
+//! execute many times:
+//!
+//! ```
+//! use locag::prelude::*;
+//!
+//! let topo = Topology::regions(4, 4);
+//! let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+//!     // setup — groups, sub-communicators, schedules, tags, scratch —
+//!     // happens exactly once here:
+//!     let mut plan =
+//!         locag::collectives::plan_allgather::<u64>(Algorithm::LocalityBruck, c, Shape::elems(1))
+//!             .unwrap();
+//!     let mut out = vec![0u64; 16];
+//!     for round in 0..100u64 {
+//!         // ... and the hot path is pure communication:
+//!         plan.execute(&[c.rank() as u64 + round], &mut out).unwrap();
+//!     }
+//!     out[15]
+//! });
+//! assert_eq!(run.results[0], 15 + 99);
+//! ```
 
 pub mod bench_harness;
 pub mod cli;
@@ -67,7 +96,7 @@ pub mod util;
 
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
-    pub use crate::collectives::Algorithm;
+    pub use crate::collectives::{Algorithm, AllgatherPlan, CollectiveAlgorithm, Registry, Shape};
     pub use crate::comm::{Comm, CommWorld, Timing};
     pub use crate::model::{MachineParams, Protocol};
     pub use crate::sim::{run_allgather, AllgatherReport};

@@ -1,141 +1,211 @@
 //! PJRT client wrapper: compile HLO text once, execute many times.
 //!
-//! Adapts the pattern of `/opt/xla-example/src/bin/load_hlo.rs`. All
-//! computations were lowered with `return_tuple=True`, so results are
-//! unwrapped with `to_tuple1()`.
+//! Two builds of this module exist:
 //!
-//! Thread-safety: the PJRT CPU client is internally synchronized, but the
-//! `xla` crate's handles are `!Sync`, so the [`Engine`] is used behind a
-//! mutex by the coordinator's workers (compilation happens once at startup;
-//! execution contention is measured in the perf pass).
+//! * `--features pjrt` — the real implementation over the `xla` crate
+//!   (adapts the pattern of `/opt/xla-example/src/bin/load_hlo.rs`; all
+//!   computations were lowered with `return_tuple=True`, so results are
+//!   unwrapped with `to_tuple1()`). Requires the `xla` crate to be vendored
+//!   into the build tree.
+//! * default — a stub with the identical surface whose `Engine::load`
+//!   reports that PJRT support is unavailable. The offline build
+//!   environment has no crates.io access, so the default build must not
+//!   reference `xla`; every consumer (coordinator, e2e CLI, integration
+//!   tests) already degrades gracefully when the engine cannot load.
+//!
+//! Thread-safety (pjrt build): the PJRT CPU client is internally
+//! synchronized, but the `xla` crate's handles are `!Sync`, so the
+//! [`Engine`] is used behind a mutex by the coordinator's workers
+//! (compilation happens once at startup; execution contention is measured
+//! in the perf pass).
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use crate::error::{Error, Result};
+    use crate::error::{Error, Result};
+    use crate::runtime::artifact::{ArtifactSpec, Manifest};
 
-use super::artifact::{ArtifactSpec, Manifest};
+    /// One compiled computation.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        /// Expected input element counts (f32 inputs; the rotate artifact's
+        /// scalar s32 input is handled explicitly).
+        pub spec: ArtifactSpec,
+    }
 
-/// One compiled computation.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    /// Expected input element counts (f32 inputs; the rotate artifact's
-    /// scalar s32 input is handled explicitly).
-    pub spec: ArtifactSpec,
-}
-
-impl Executable {
-    /// Execute on f32 buffers shaped per the manifest entry.
-    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(Error::Runtime(format!(
-                "{}: expected {} inputs, got {}",
-                self.spec.name,
-                self.spec.inputs.len(),
-                inputs.len()
-            )));
-        }
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (buf, ts) in inputs.iter().zip(&self.spec.inputs) {
-            if buf.len() != ts.elems() {
+    impl Executable {
+        /// Execute on f32 buffers shaped per the manifest entry.
+        pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            if inputs.len() != self.spec.inputs.len() {
                 return Err(Error::Runtime(format!(
-                    "{}: input expected {} elems, got {}",
+                    "{}: expected {} inputs, got {}",
                     self.spec.name,
-                    ts.elems(),
+                    self.spec.inputs.len(),
+                    inputs.len()
+                )));
+            }
+            let mut lits = Vec::with_capacity(inputs.len());
+            for (buf, ts) in inputs.iter().zip(&self.spec.inputs) {
+                if buf.len() != ts.elems() {
+                    return Err(Error::Runtime(format!(
+                        "{}: input expected {} elems, got {}",
+                        self.spec.name,
+                        ts.elems(),
+                        buf.len()
+                    )));
+                }
+                let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+                lits.push(lit);
+            }
+            self.execute(lits)
+        }
+
+        /// Execute the rotate artifact: a flat f32 buffer plus an s32 scalar.
+        pub fn run_rotate(&self, buf: &[f32], shift: i32) -> Result<Vec<f32>> {
+            if self.spec.inputs.len() != 2 {
+                return Err(Error::Runtime("rotate artifact expects 2 inputs".into()));
+            }
+            if buf.len() != self.spec.inputs[0].elems() {
+                return Err(Error::Runtime(format!(
+                    "rotate: buffer expected {} elems, got {}",
+                    self.spec.inputs[0].elems(),
                     buf.len()
                 )));
             }
-            let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(buf)
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
-            lits.push(lit);
+            let b = xla::Literal::vec1(buf);
+            let s = xla::Literal::from(shift);
+            self.execute(vec![b, s])
         }
-        self.execute(lits)
+
+        fn execute(&self, lits: Vec<xla::Literal>) -> Result<Vec<f32>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| Error::Runtime(format!("{}: execute: {e}", self.spec.name)))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("{}: to_literal: {e}", self.spec.name)))?;
+            // lowered with return_tuple=True → 1-tuple
+            let out = lit
+                .to_tuple1()
+                .map_err(|e| Error::Runtime(format!("{}: tuple unwrap: {e}", self.spec.name)))?;
+            out.to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("{}: to_vec: {e}", self.spec.name)))
+        }
     }
 
-    /// Execute the rotate artifact: a flat f32 buffer plus an s32 scalar.
-    pub fn run_rotate(&self, buf: &[f32], shift: i32) -> Result<Vec<f32>> {
-        if self.spec.inputs.len() != 2 {
-            return Err(Error::Runtime("rotate artifact expects 2 inputs".into()));
-        }
-        if buf.len() != self.spec.inputs[0].elems() {
-            return Err(Error::Runtime(format!(
-                "rotate: buffer expected {} elems, got {}",
-                self.spec.inputs[0].elems(),
-                buf.len()
-            )));
-        }
-        let b = xla::Literal::vec1(buf);
-        let s = xla::Literal::from(shift);
-        self.execute(vec![b, s])
+    /// The PJRT engine: one CPU client plus all compiled artifacts.
+    pub struct Engine {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        executables: HashMap<String, Executable>,
+        pub manifest: Manifest,
     }
 
-    fn execute(&self, lits: Vec<xla::Literal>) -> Result<Vec<f32>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| Error::Runtime(format!("{}: execute: {e}", self.spec.name)))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("{}: to_literal: {e}", self.spec.name)))?;
-        // lowered with return_tuple=True → 1-tuple
-        let out = lit
-            .to_tuple1()
-            .map_err(|e| Error::Runtime(format!("{}: tuple unwrap: {e}", self.spec.name)))?;
-        out.to_vec::<f32>()
-            .map_err(|e| Error::Runtime(format!("{}: to_vec: {e}", self.spec.name)))
+    impl Engine {
+        /// Create a CPU client and compile every artifact in the manifest.
+        pub fn load<P: AsRef<Path>>(artifact_dir: P) -> Result<Engine> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+            let mut executables = HashMap::new();
+            for spec in &manifest.artifacts {
+                let proto = xla::HloModuleProto::from_text_file(
+                    spec.path
+                        .to_str()
+                        .ok_or_else(|| Error::Runtime("non-UTF8 artifact path".into()))?,
+                )
+                .map_err(|e| Error::Runtime(format!("{}: parse HLO: {e}", spec.name)))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| Error::Runtime(format!("{}: compile: {e}", spec.name)))?;
+                executables.insert(spec.name.clone(), Executable { exe, spec: spec.clone() });
+            }
+            Ok(Engine { client, executables, manifest })
+        }
+
+        /// Look up a compiled artifact.
+        pub fn executable(&self, name: &str) -> Result<&Executable> {
+            self.executables
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("no compiled artifact '{name}'")))
+        }
+
+        /// Names of all compiled artifacts.
+        pub fn names(&self) -> Vec<&str> {
+            let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+            v.sort_unstable();
+            v
+        }
     }
 }
 
-/// The PJRT engine: one CPU client plus all compiled artifacts.
-pub struct Engine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    executables: HashMap<String, Executable>,
-    pub manifest: Manifest,
-}
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
 
-impl Engine {
-    /// Create a CPU client and compile every artifact in the manifest.
-    pub fn load<P: AsRef<Path>>(artifact_dir: P) -> Result<Engine> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
-        let mut executables = HashMap::new();
-        for spec in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.path
-                    .to_str()
-                    .ok_or_else(|| Error::Runtime("non-UTF8 artifact path".into()))?,
-            )
-            .map_err(|e| Error::Runtime(format!("{}: parse HLO: {e}", spec.name)))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| Error::Runtime(format!("{}: compile: {e}", spec.name)))?;
-            executables.insert(
-                spec.name.clone(),
-                Executable { exe, spec: spec.clone() },
-            );
+    use crate::error::{Error, Result};
+    use crate::runtime::artifact::{ArtifactSpec, Manifest};
+
+    fn no_pjrt() -> Error {
+        Error::Runtime(
+            "PJRT runtime unavailable: locag was built without the `pjrt` feature \
+             (rebuild with `--features pjrt` and the vendored xla crate)"
+            .into(),
+        )
+    }
+
+    /// Stub of the compiled-computation handle (never constructed).
+    pub struct Executable {
+        /// Mirror of the real field so call sites type-check either way.
+        pub spec: ArtifactSpec,
+    }
+
+    impl Executable {
+        /// Always errors: PJRT support is not compiled in.
+        pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            Err(no_pjrt())
         }
-        Ok(Engine { client, executables, manifest })
+
+        /// Always errors: PJRT support is not compiled in.
+        pub fn run_rotate(&self, _buf: &[f32], _shift: i32) -> Result<Vec<f32>> {
+            Err(no_pjrt())
+        }
     }
 
-    /// Look up a compiled artifact.
-    pub fn executable(&self, name: &str) -> Result<&Executable> {
-        self.executables
-            .get(name)
-            .ok_or_else(|| Error::Runtime(format!("no compiled artifact '{name}'")))
+    /// Stub engine. `load` validates the manifest (so missing-artifact
+    /// diagnostics stay useful) and then reports the missing feature.
+    pub struct Engine {
+        pub manifest: Manifest,
     }
 
-    /// Names of all compiled artifacts.
-    pub fn names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
-        v.sort_unstable();
-        v
+    impl Engine {
+        /// Validate the manifest, then report that PJRT is unavailable.
+        pub fn load<P: AsRef<Path>>(artifact_dir: P) -> Result<Engine> {
+            let _manifest = Manifest::load(artifact_dir)?;
+            Err(no_pjrt())
+        }
+
+        /// Always errors (an `Engine` can never be constructed).
+        pub fn executable(&self, _name: &str) -> Result<&Executable> {
+            Err(no_pjrt())
+        }
+
+        /// No compiled artifacts in the stub build.
+        pub fn names(&self) -> Vec<&str> {
+            Vec::new()
+        }
     }
 }
+
+pub use imp::{Engine, Executable};
 
 // Integration coverage for this module lives in
-// `rust/tests/runtime_artifacts.rs` (needs `make artifacts` to have run).
+// `rust/tests/runtime_artifacts.rs` (needs `make artifacts` + the `pjrt`
+// feature to have run; it skips loudly otherwise).

@@ -3,16 +3,21 @@
 //! locality-classified traffic trace.
 //!
 //! This is what the figure harness, the examples and the integration tests
-//! drive. One call = one data point of a paper figure.
+//! drive. One [`run_allgather`] call = one data point of a paper figure.
+//! [`run_allgather_repeated`] is the benchmark-shaped variant: every rank
+//! **plans once** and executes `warmup + iters` times, with a clock-syncing
+//! barrier between iterations — the paper's timed loop with communicators
+//! created once outside the timed region.
 
 use std::time::Instant;
 
-use crate::collectives::{self, Algorithm};
-use crate::comm::{CommWorld, Timing};
+use crate::collectives::{self, Algorithm, Shape};
+use crate::comm::{Comm, CommWorld, Timing};
 use crate::error::Error;
 use crate::model::MachineParams;
 use crate::topology::Topology;
 use crate::trace::TraceSummary;
+use crate::util::stats;
 
 /// Result of one allgather execution over a world.
 #[derive(Debug, Clone)]
@@ -49,7 +54,8 @@ pub fn run_allgather(
 }
 
 /// Run `algo` once with an explicit [`Timing`] mode (wall-clock mode is
-/// used by the perf benches).
+/// used by the perf benches). Internally plan + execute, like every other
+/// call site of the collective layer.
 pub fn run_allgather_timed(
     algo: Algorithm,
     topo: &Topology,
@@ -57,13 +63,14 @@ pub fn run_allgather_timed(
     n: usize,
 ) -> AllgatherReport {
     let p = topo.size();
-    let expected: Vec<u32> = (0..p)
-        .flat_map(|r| contribution(r, n))
-        .collect();
+    let expected: Vec<u32> = (0..p).flat_map(|r| contribution(r, n)).collect();
     let start = Instant::now();
-    let run = CommWorld::run(topo, timing, |c| {
+    let run = CommWorld::run(topo, timing, |c| -> crate::error::Result<bool> {
         let mine = contribution(c.rank(), n);
-        collectives::allgather(algo, c, &mine).map(|out| out == expected)
+        let mut plan = collectives::plan_allgather::<u32>(algo, c, Shape::elems(n))?;
+        let mut out = vec![0u32; n * p];
+        plan.execute(&mine, &mut out)?;
+        Ok(out == expected)
     });
     let wall = start.elapsed().as_secs_f64();
     let mut verified = true;
@@ -91,6 +98,127 @@ pub fn run_allgather_timed(
         trace: run.trace,
         errors,
     }
+}
+
+/// Result of a plan-once/execute-many run.
+#[derive(Debug, Clone)]
+pub struct RepeatedReport {
+    pub algorithm: Algorithm,
+    pub p: usize,
+    pub n: usize,
+    /// Unmeasured and measured execution counts.
+    pub warmup: usize,
+    pub iters: usize,
+    /// Modeled completion time of each measured execution (barrier-to-end
+    /// max clock delta), seconds.
+    pub per_iter_vtime: Vec<f64>,
+    /// Median of [`RepeatedReport::per_iter_vtime`] — the figure value.
+    pub median_vtime: f64,
+    /// Wall-clock time of the whole in-process run, seconds.
+    pub wall: f64,
+    /// True if every execution on every rank produced the expected array.
+    pub verified: bool,
+    /// Per-execution traffic (total counters divided by `warmup + iters`;
+    /// exact because every execution sends the identical schedule).
+    pub trace: TraceSummary,
+    pub errors: Vec<String>,
+}
+
+/// Plan once per rank, execute `warmup + iters` times under virtual
+/// timing, measuring each iteration's modeled completion separately.
+///
+/// A clock-propagating barrier (charging no message costs) separates the
+/// iterations, so every measured delta equals the single-shot modeled
+/// latency — the paper's timed-loop methodology.
+pub fn run_allgather_repeated(
+    algo: Algorithm,
+    topo: &Topology,
+    machine: &MachineParams,
+    n: usize,
+    warmup: usize,
+    iters: usize,
+) -> RepeatedReport {
+    assert!(iters > 0, "need at least one measured iteration");
+    let p = topo.size();
+    let total = warmup + iters;
+    let expected: Vec<u32> = (0..p).flat_map(|r| contribution(r, n)).collect();
+    let start = Instant::now();
+    let run = CommWorld::run(topo, Timing::Virtual(machine.clone()), |c: &mut Comm| {
+        repeated_worker(c, algo, n, total, &expected)
+    });
+    let wall = start.elapsed().as_secs_f64();
+    let (verified, errors) = collect_errors(&run.results);
+    // Iteration i's modeled completion: all ranks start at the same
+    // barrier-synced clock; the span is the max end over ranks minus that
+    // shared start.
+    let mut per_iter_vtime = Vec::with_capacity(iters);
+    if verified {
+        for i in warmup..total {
+            let start_i = run.results[0].as_ref().expect("verified")[i].0;
+            let end_i = run
+                .results
+                .iter()
+                .map(|r| r.as_ref().expect("verified")[i].1)
+                .fold(0.0f64, f64::max);
+            per_iter_vtime.push(end_i - start_i);
+        }
+    }
+    let median_vtime = stats::median(&per_iter_vtime);
+    // Only a fully-verified run is guaranteed to have executed the
+    // identical schedule `total` times; a mid-loop failure leaves raw
+    // (non-divisible) counters.
+    let trace = if verified { run.trace.per_op(total as u64) } else { run.trace };
+    RepeatedReport {
+        algorithm: algo,
+        p,
+        n,
+        warmup,
+        iters,
+        median_vtime,
+        per_iter_vtime,
+        wall,
+        verified,
+        trace,
+        errors,
+    }
+}
+
+/// Per-rank body of [`run_allgather_repeated`]: plan once, then
+/// barrier-separated executions recording `(start, end)` clock spans.
+fn repeated_worker(
+    c: &Comm,
+    algo: Algorithm,
+    n: usize,
+    total: usize,
+    expected: &[u32],
+) -> crate::error::Result<Vec<(f64, f64)>> {
+    let p = c.size();
+    let mine = contribution(c.rank(), n);
+    let mut plan = collectives::plan_allgather::<u32>(algo, c, Shape::elems(n))?;
+    let mut out = vec![0u32; n * p];
+    let mut spans = Vec::with_capacity(total);
+    for _ in 0..total {
+        c.barrier()?; // sync clocks; charges no messages
+        let t0 = c.clock();
+        plan.execute(&mine, &mut out)?;
+        if out != expected {
+            return Err(Error::Precondition("wrong gathered data".into()));
+        }
+        spans.push((t0, c.clock()));
+    }
+    Ok(spans)
+}
+
+fn collect_errors<R>(results: &[crate::error::Result<R>]) -> (bool, Vec<String>) {
+    let mut verified = true;
+    let mut errors = Vec::new();
+    for (rank, res) in results.iter().enumerate() {
+        if let Err(e) = res {
+            verified = false;
+            errors.push(format!("rank {rank}: {e}"));
+        }
+    }
+    (verified, errors)
 }
 
 /// The canonical `u32` contribution used by the sweep engine.
@@ -210,5 +338,29 @@ mod tests {
         assert!(!r.verified);
         assert!(!r.errors.is_empty());
         assert!(ensure_verified(&r).is_err());
+    }
+
+    #[test]
+    fn repeated_run_matches_single_shot_vtime() {
+        // The barrier-separated repeated loop must reproduce the single
+        // execution's modeled latency on every iteration.
+        let m = MachineParams::lassen();
+        for algo in [Algorithm::Bruck, Algorithm::LocalityBruck, Algorithm::Ring] {
+            let topo = Topology::regions(4, 4);
+            let single = run_allgather(algo, &topo, &m, 2);
+            let rep = run_allgather_repeated(algo, &topo, &m, 2, 2, 5);
+            assert!(single.verified && rep.verified, "{algo}: {:?}", rep.errors);
+            assert_eq!(rep.per_iter_vtime.len(), 5);
+            for (i, &dt) in rep.per_iter_vtime.iter().enumerate() {
+                assert!(
+                    (dt - single.vtime).abs() < 1e-12,
+                    "{algo} iter {i}: {dt} vs single {}",
+                    single.vtime
+                );
+            }
+            // per-op trace matches the single-shot trace
+            assert_eq!(rep.trace.max_nonlocal_msgs(), single.trace.max_nonlocal_msgs());
+            assert_eq!(rep.trace.total_bytes(), single.trace.total_bytes());
+        }
     }
 }

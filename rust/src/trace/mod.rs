@@ -182,6 +182,33 @@ impl TraceSummary {
         (msgs, bytes)
     }
 
+    /// Per-operation view of a trace accumulated over `ops` identical
+    /// collective executions (plan-once/execute-many benchmark loops):
+    /// every counter divided by `ops`. Panics in debug builds if any
+    /// counter is not an exact multiple (i.e. the executions were not
+    /// identical).
+    pub fn per_op(&self, ops: u64) -> TraceSummary {
+        assert!(ops > 0, "per_op(0)");
+        let div = |x: u64| {
+            debug_assert_eq!(x % ops, 0, "trace counter {x} not a multiple of {ops} ops");
+            x / ops
+        };
+        TraceSummary {
+            per_rank: self
+                .per_rank
+                .iter()
+                .map(|t| RankTrace {
+                    msgs: [div(t.msgs[0]), div(t.msgs[1]), div(t.msgs[2])],
+                    bytes: [div(t.bytes[0]), div(t.bytes[1]), div(t.bytes[2])],
+                    local_msgs: div(t.local_msgs),
+                    local_bytes: div(t.local_bytes),
+                    nonlocal_msgs: div(t.nonlocal_msgs),
+                    nonlocal_bytes: div(t.nonlocal_bytes),
+                })
+                .collect(),
+        }
+    }
+
     /// Render a compact human-readable table.
     pub fn table(&self) -> String {
         let mut out = String::new();
@@ -278,6 +305,21 @@ mod tests {
         assert_eq!(s.total_nonlocal_msgs(), 2);
         assert_eq!(s.by_class(Locality::IntraSocket), (1, 99));
         assert!(s.table().contains("inter-node"));
+    }
+
+    #[test]
+    fn per_op_divides_all_counters() {
+        let mut a = RankTrace::default();
+        for _ in 0..3 {
+            a.record(Locality::InterNode, false, 10);
+            a.record(Locality::IntraSocket, true, 4);
+        }
+        let s = TraceSummary::new(vec![a]).per_op(3);
+        assert_eq!(s.per_rank[0].nonlocal_msgs, 1);
+        assert_eq!(s.per_rank[0].nonlocal_bytes, 10);
+        assert_eq!(s.per_rank[0].local_msgs, 1);
+        assert_eq!(s.per_rank[0].local_bytes, 4);
+        assert_eq!(s.max_total_msgs(), 2);
     }
 
     #[test]

@@ -7,6 +7,10 @@ use locag::coordinator::{serve, ServeConfig};
 use locag::runtime::Manifest;
 
 fn have_artifacts() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP coordinator_integration: built without the `pjrt` feature");
+        return false;
+    }
     match Manifest::load(Manifest::default_dir()) {
         Ok(_) => true,
         Err(e) => {

@@ -1,0 +1,235 @@
+//! Integration: persistent-plan reuse semantics.
+//!
+//! * Executing one plan 100× on shifting canonical inputs yields the
+//!   correct result every time.
+//! * Executions leak no collective tags: the parent communicator's
+//!   `next_coll_tag` sequence is unaffected between executions.
+//! * Executions build no sub-communicators (all groups derived at plan
+//!   time) — asserted via `comm::sub_comms_built`.
+//! * Under `Timing::Virtual`, every execution advances the clocks by the
+//!   identical modeled delta (the schedule is deterministic).
+//! * Repeated planned executes allocate strictly less than repeated
+//!   one-shot calls — measured with a counting global allocator.
+//!
+//! The tests in this file share process-wide counters (allocator bytes,
+//! sub-communicator count), so every test takes `SERIAL` to keep the
+//! measurements attributable.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use locag::collectives::{self, Algorithm, Shape};
+use locag::comm::{self, CommWorld, Timing};
+use locag::model::MachineParams;
+use locag::topology::Topology;
+
+/// Counts cumulative allocated bytes (never decremented).
+struct CountingAlloc;
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Serializes the tests of this binary so the process-wide counters stay
+/// attributable to exactly one test at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn shifted_contribution(rank: usize, n: usize, round: u64) -> Vec<u64> {
+    (0..n).map(|j| (rank * 1_000_003 + j) as u64 + round * 7_777_777).collect()
+}
+
+fn shifted_expected(p: usize, n: usize, round: u64) -> Vec<u64> {
+    (0..p).flat_map(|r| shifted_contribution(r, n, round)).collect()
+}
+
+/// The headline reuse property, for every built-in algorithm: 100
+/// executions of one plan, shifting inputs, exact results, no tag leaks.
+#[test]
+fn hundred_executions_correct_and_leak_free() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let n = 3usize;
+    for algo in Algorithm::ALL {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = collectives::plan_allgather::<u64>(algo, c, Shape::elems(n)).unwrap();
+            // Tag sequence probe: consuming one tag here tells us where the
+            // counter stands after planning.
+            let tag_after_plan = c.next_coll_tag();
+            let mut out = vec![0u64; n * p];
+            for round in 0..100u64 {
+                let mine = shifted_contribution(c.rank(), n, round);
+                plan.execute(&mine, &mut out).unwrap();
+                assert_eq!(out, shifted_expected(p, n, round), "{algo} round {round}");
+            }
+            // No execution consumed a tag: the next tag is exactly one past
+            // the probe.
+            let tag_after_100 = c.next_coll_tag();
+            assert_eq!(
+                tag_after_100,
+                tag_after_plan + 1,
+                "{algo} leaked collective tags across executions"
+            );
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "{algo}");
+    }
+}
+
+/// Executions construct zero sub-communicators — the groups, region
+/// communicators and (for hierarchical) the masters' communicator all
+/// exist from plan time.
+#[test]
+fn executions_build_no_sub_communicators() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    for algo in [
+        Algorithm::LocalityBruck,
+        Algorithm::LocalityBruckV,
+        Algorithm::Hierarchical,
+        Algorithm::Multilane,
+    ] {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = collectives::plan_allgather::<u64>(algo, c, Shape::elems(2)).unwrap();
+            c.barrier().unwrap(); // every rank finished planning
+            let built_before = comm::sub_comms_built();
+            let mut out = vec![0u64; 2 * 16];
+            for round in 0..50u64 {
+                let mine = shifted_contribution(c.rank(), 2, round);
+                plan.execute(&mine, &mut out).unwrap();
+            }
+            c.barrier().unwrap(); // every rank finished executing
+            comm::sub_comms_built() - built_before
+        });
+        for &delta in &run.results {
+            assert_eq!(delta, 0, "{algo}: execute constructed sub-communicators");
+        }
+    }
+}
+
+/// Virtual clocks advance by the identical delta on every barrier-
+/// separated execution: the plan replays the exact same schedule.
+#[test]
+fn virtual_clock_deltas_identical_per_execution() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let machine = MachineParams::lassen();
+    for algo in [Algorithm::LocalityBruck, Algorithm::Bruck, Algorithm::Hierarchical] {
+        let run = CommWorld::run(&topo, Timing::Virtual(machine.clone()), |c| {
+            let mut plan = collectives::plan_allgather::<u32>(algo, c, Shape::elems(2)).unwrap();
+            let mut out = vec![0u32; 2 * 16];
+            let mine: Vec<u32> = (0..2).map(|j| (c.rank() * 5 + j) as u32).collect();
+            let mut deltas = Vec::new();
+            for _ in 0..20 {
+                c.barrier().unwrap();
+                let t0 = c.clock();
+                plan.execute(&mine, &mut out).unwrap();
+                deltas.push(c.clock() - t0);
+            }
+            deltas
+        });
+        for (rank, deltas) in run.results.iter().enumerate() {
+            for (i, &d) in deltas.iter().enumerate() {
+                assert!(
+                    (d - deltas[0]).abs() < 1e-15,
+                    "{algo} rank {rank} execution {i}: delta {d} vs first {}",
+                    deltas[0]
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance micro-proof: repeated planned executes allocate strictly
+/// less than repeated one-shot calls on the identical workload, because
+/// the one-shot path re-derives groups, re-builds sub-communicators,
+/// re-allocates schedules, scratch and the output on every call while the
+/// plan reuses all of it. (Transport-level message buffers are identical
+/// on both sides.)
+#[test]
+fn planned_executes_allocate_less_than_one_shot() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let n = 128usize;
+    let iters = 100u64;
+
+    // Planned: plan once per rank, execute `iters` times.
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan =
+            collectives::plan_allgather::<u64>(Algorithm::LocalityBruck, c, Shape::elems(n))
+                .unwrap();
+        let mut out = vec![0u64; n * p];
+        let mine = shifted_contribution(c.rank(), n, 0);
+        for _ in 0..iters {
+            plan.execute(&mine, &mut out).unwrap();
+        }
+        out[0]
+    });
+    std::hint::black_box(&run.results);
+    let planned_total = ALLOCATED.load(Ordering::Relaxed) - before;
+
+    // One-shot: plan + allocate on every call.
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mine = shifted_contribution(c.rank(), n, 0);
+        let mut last = 0u64;
+        for _ in 0..iters {
+            let out = collectives::allgather::<u64>(Algorithm::LocalityBruck, c, &mine).unwrap();
+            last = out[0];
+        }
+        last
+    });
+    std::hint::black_box(&run.results);
+    let one_shot_total = ALLOCATED.load(Ordering::Relaxed) - before;
+
+    assert!(
+        planned_total < one_shot_total,
+        "planned {planned_total} B must allocate less than one-shot {one_shot_total} B \
+         over {iters} executions"
+    );
+}
+
+/// The uniform `n == 0` contract, via plans: every algorithm yields a
+/// no-op plan that executes successfully into an empty output.
+#[test]
+fn zero_length_plans_are_uniform_no_ops() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        for algo in Algorithm::ALL {
+            let mut plan = collectives::plan_allgather::<f32>(algo, c, Shape::elems(0)).unwrap();
+            assert_eq!(plan.shape(), Shape::elems(0), "{algo}");
+            let mut out: Vec<f32> = Vec::new();
+            plan.execute(&[], &mut out).unwrap();
+            assert!(out.is_empty());
+        }
+        true
+    });
+    assert!(run.results.iter().all(|&ok| ok));
+    let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+    assert_eq!(total, 0, "zero-length plans must send no messages");
+}

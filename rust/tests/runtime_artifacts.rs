@@ -10,6 +10,10 @@ use locag::coordinator::params::{max_abs_diff, ModelParams};
 use locag::runtime::{Engine, Manifest};
 
 fn artifacts_or_skip() -> Option<Manifest> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP runtime_artifacts: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Manifest::default_dir();
     match Manifest::load(&dir) {
         Ok(m) => Some(m),
