@@ -58,6 +58,7 @@ fn main() {
             warmup: 3,
             check: true,
             fused: false,
+            consensus: true,
         };
         let rep = serve(&cfg).expect("serve");
         assert!(

@@ -99,6 +99,86 @@ fn main() {
         println!();
     }
 
+    // The other planned operations: one-shot vs planned for allreduce and
+    // alltoall (the PR-2 op-generic framework on the same scoreboard).
+    for (regions, ppr, n) in [(8usize, 4usize, 2usize), (8, 4, 1024)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        for (op, algo) in [("allreduce", "loc-aware"), ("alltoall", "loc-aware")] {
+            let m = measure_budget(
+                &format!("one-shot/{op}-{algo}/{regions}x{ppr}x{n}x{EXECS}ops"),
+                1,
+                0.3,
+                5,
+                || {
+                    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                        let mut acc = 0usize;
+                        if op == "allreduce" {
+                            let mine = vec![c.rank() as u64; n];
+                            for _ in 0..EXECS {
+                                acc += locag::collectives::allreduce::allreduce_locality_aware(
+                                    c, &mine,
+                                )
+                                .unwrap()
+                                .len();
+                            }
+                        } else {
+                            let mine = vec![c.rank() as u64; n * p];
+                            for _ in 0..EXECS {
+                                acc += locag::collectives::alltoall::loc_aware(c, &mine)
+                                    .unwrap()
+                                    .len();
+                            }
+                        }
+                        acc
+                    });
+                    std::hint::black_box(run.results[0]);
+                },
+            );
+            println!("{}", m.report_line());
+            let m = measure_budget(
+                &format!("planned /{op}-{algo}/{regions}x{ppr}x{n}x{EXECS}ops"),
+                1,
+                0.3,
+                5,
+                || {
+                    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                        if op == "allreduce" {
+                            let mut plan = locag::collectives::plan_allreduce::<u64>(
+                                algo,
+                                c,
+                                Shape::elems(n),
+                            )
+                            .unwrap();
+                            let mine = vec![c.rank() as u64; n];
+                            let mut out = vec![0u64; n];
+                            for _ in 0..EXECS {
+                                plan.execute(&mine, &mut out).unwrap();
+                            }
+                            out.len()
+                        } else {
+                            let mut plan = locag::collectives::plan_alltoall::<u64>(
+                                algo,
+                                c,
+                                Shape::elems(n),
+                            )
+                            .unwrap();
+                            let mine = vec![c.rank() as u64; n * p];
+                            let mut out = vec![0u64; n * p];
+                            for _ in 0..EXECS {
+                                plan.execute(&mine, &mut out).unwrap();
+                            }
+                            out.len()
+                        }
+                    });
+                    std::hint::black_box(run.results[0]);
+                },
+            );
+            println!("{}", m.report_line());
+        }
+        println!();
+    }
+
     // The rotation hot spot on its own (the L1 kernel's Rust twin).
     for (p, n) in [(64usize, 1024usize), (1024, 64)] {
         let data: Vec<u64> = (0..(p * n) as u64).collect();

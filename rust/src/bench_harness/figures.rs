@@ -14,7 +14,7 @@
 //! the off-testbed stand-in for the LLNL machines (DESIGN.md
 //! §Hardware-Adaptation).
 
-use crate::collectives::Algorithm;
+use crate::collectives::{Algorithm, OpKind};
 use crate::csv_row;
 use crate::error::Result;
 use crate::model::closed_form::ModelConfig;
@@ -154,35 +154,87 @@ pub fn measured_figure(
     max_p: usize,
     out_csv: &str,
 ) -> Result<Figure> {
-    let n_vals = 2usize; // two 4-byte integers per process (paper §5)
+    let fig = measured_op_figure(OpKind::Allgather, machine, ppns, max_p, out_csv)?;
+    Ok(Figure { title: title.into(), series: fig.series })
+}
+
+/// Shared sweep engine for every operation: each algorithm of the op
+/// (the figure set for allgather, the full registry for allreduce and
+/// alltoall), plan-once/execute-`WARMUP + ITERS`, over doubling region
+/// counts. Figures 9/10 and the §6 extension sweeps all ride on it.
+pub fn measured_op_figure(
+    op: OpKind,
+    machine: &MachineParams,
+    ppns: &[usize],
+    max_p: usize,
+    out_csv: &str,
+) -> Result<Figure> {
+    let n_vals = 2usize;
+    let algos: Vec<&'static str> = match op {
+        OpKind::Allgather => MEASURED_ALGOS.iter().map(|a| a.name()).collect(),
+        OpKind::Allreduce => crate::collectives::AllreduceRegistry::<u64>::standard().names(),
+        OpKind::Alltoall => crate::collectives::AlltoallRegistry::<u64>::standard().names(),
+    };
     let mut w = CsvWriter::create(
         out_csv,
         &["regions", "ppn", "algorithm", "seconds", "max_nonlocal_msgs", "verified"],
     )?;
     let mut series = Vec::new();
     for &ppn in ppns {
-        for algo in MEASURED_ALGOS {
+        for algo in &algos {
             let mut pts = Vec::new();
             let mut regions = 2usize;
             while regions * ppn <= max_p {
                 let topo = Topology::regions(regions, ppn);
-                let rep = sim::run_allgather_repeated(algo, &topo, machine, n_vals, WARMUP, ITERS);
+                let (seconds, nl, verified) = match op {
+                    OpKind::Allgather => {
+                        let a = Algorithm::parse(algo).expect("registry name");
+                        let rep =
+                            sim::run_allgather_repeated(a, &topo, machine, n_vals, WARMUP, ITERS);
+                        (rep.median_vtime, rep.trace.max_nonlocal_msgs(), rep.verified)
+                    }
+                    OpKind::Allreduce => {
+                        let rep = sim::run_allreduce_repeated(
+                            algo, &topo, machine, n_vals, WARMUP, ITERS,
+                        );
+                        (rep.median_vtime, rep.trace.max_nonlocal_msgs(), rep.verified)
+                    }
+                    OpKind::Alltoall => {
+                        let rep = sim::run_alltoall_repeated(
+                            algo, &topo, machine, n_vals, WARMUP, ITERS,
+                        );
+                        (rep.median_vtime, rep.trace.max_nonlocal_msgs(), rep.verified)
+                    }
+                };
                 w.row(&csv_row![
                     regions,
                     ppn,
-                    algo.name(),
-                    format!("{:.3e}", rep.median_vtime),
-                    rep.trace.max_nonlocal_msgs(),
-                    rep.verified
+                    *algo,
+                    format!("{seconds:.3e}"),
+                    nl,
+                    verified
                 ])?;
-                pts.push((regions as f64, rep.median_vtime));
+                pts.push((regions as f64, seconds));
                 regions *= 2;
             }
-            series.push((format!("{} ppn={ppn}", algo.name()), pts));
+            series.push((format!("{algo} ppn={ppn}"), pts));
         }
     }
     w.flush()?;
-    Ok(Figure { title: title.into(), series })
+    Ok(Figure {
+        title: format!("{op} cost on the Lassen model (plan-once, median of {ITERS})"),
+        series,
+    })
+}
+
+/// The §6 allreduce sweep: recursive doubling vs locality-aware regional.
+pub fn fig_allreduce(out_csv: &str, max_p: usize) -> Result<Figure> {
+    measured_op_figure(OpKind::Allreduce, &MachineParams::lassen(), &[4, 16], max_p, out_csv)
+}
+
+/// The §6 alltoall sweep: dispatch, pairwise, Bruck, locality-aware.
+pub fn fig_alltoall(out_csv: &str, max_p: usize) -> Result<Figure> {
+    measured_op_figure(OpKind::Alltoall, &MachineParams::lassen(), &[4, 16], max_p, out_csv)
 }
 
 /// Figure 9: Quartz (node regions).
@@ -250,6 +302,24 @@ mod tests {
         let r_first = std_s[0].1 / loc_s[0].1;
         let r_last = std_s.last().unwrap().1 / loc_s.last().unwrap().1;
         assert!(r_first > 1.0 && r_last > 1.0);
+    }
+
+    #[test]
+    fn op_figures_small_sweeps_produce_series() {
+        for op in [OpKind::Allreduce, OpKind::Alltoall] {
+            let f = measured_op_figure(
+                op,
+                &MachineParams::lassen(),
+                &[4],
+                32,
+                &tmp(op.name()),
+            )
+            .unwrap();
+            assert!(!f.series.is_empty(), "{op}");
+            for (label, pts) in &f.series {
+                assert!(!pts.is_empty(), "{op} {label}");
+            }
+        }
     }
 
     #[test]

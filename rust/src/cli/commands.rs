@@ -2,7 +2,7 @@
 
 use crate::bench_harness::figures;
 use crate::cli::Args;
-use crate::collectives::Algorithm;
+use crate::collectives::{Algorithm, OpKind};
 use crate::coordinator::{serve, ServeConfig};
 use crate::error::{Error, Result};
 use crate::model::MachineParams;
@@ -25,18 +25,70 @@ fn algo_by_name(name: &str) -> Result<Algorithm> {
     Algorithm::parse_or_err(name)
 }
 
-/// `locag algos` — list the algorithm registry.
+/// `locag algos` — list the algorithm registries of all three operations.
 pub fn algos(_args: &Args) -> Result<i32> {
-    use crate::collectives::Registry;
-    println!("registered allgather algorithms (names are case-insensitive):\n");
-    for (name, summary) in Registry::<u32>::standard().catalog() {
-        println!("  {name:<20} {summary}");
+    use crate::collectives::{AllreduceRegistry, AlltoallRegistry, Registry};
+    println!("registered collective algorithms (names are case-insensitive):");
+    let sections: Vec<(OpKind, Vec<(&'static str, &'static str)>)> = vec![
+        (OpKind::Allgather, Registry::<u32>::standard().catalog()),
+        (OpKind::Allreduce, AllreduceRegistry::<u32>::standard().catalog()),
+        (OpKind::Alltoall, AlltoallRegistry::<u32>::standard().catalog()),
+    ];
+    for (op, catalog) in sections {
+        println!("\n{op}:");
+        for (name, summary) in catalog {
+            println!("  {name:<20} {summary}");
+        }
     }
     println!(
-        "\nEach algorithm supports one-shot use (`collectives::allgather`) and\n\
-         persistent plans (`collectives::plan_allgather` / `Registry::plan`):\n\
-         plan once, execute many times with zero setup or allocation."
+        "\nEach algorithm supports one-shot use and persistent plans (plan once\n\
+         via the per-op registry, execute many times with zero setup or\n\
+         allocation). Run any pair with `locag run --op OP --algo NAME`."
     );
+    Ok(0)
+}
+
+/// `locag run` — one configured run of any operation.
+pub fn run_op(args: &Args) -> Result<i32> {
+    let op = OpKind::parse_or_err(&args.get_str("op", "allgather"))?;
+    let regions = args.get_usize("regions", 16)?;
+    let ppr = args.get_usize("ppr", 8)?;
+    let n = args.get_usize("values", 2)?;
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    let topo = Topology::regions(regions, ppr);
+    let default_algo = match op {
+        OpKind::Allgather => "loc-bruck",
+        OpKind::Allreduce | OpKind::Alltoall => "loc-aware",
+    };
+    let algo = args.get_str("algo", default_algo);
+    let (algo_name, vtime, verified, trace, errors) = match op {
+        OpKind::Allgather => {
+            let rep = sim::run_allgather(algo_by_name(&algo)?, &topo, &m, n);
+            (rep.algorithm.name().to_string(), rep.vtime, rep.verified, rep.trace, rep.errors)
+        }
+        OpKind::Allreduce => {
+            let rep = sim::run_allreduce(&algo, &topo, &m, n);
+            (rep.algorithm, rep.vtime, rep.verified, rep.trace, rep.errors)
+        }
+        OpKind::Alltoall => {
+            let rep = sim::run_alltoall(&algo, &topo, &m, n);
+            (rep.algorithm, rep.vtime, rep.verified, rep.trace, rep.errors)
+        }
+    };
+    println!(
+        "{op} / {algo_name} on {} ranks ({regions} regions x {ppr}), {n} values/rank [{}]",
+        topo.size(),
+        m.name
+    );
+    println!("modeled time: {}", seconds(vtime));
+    println!("verified:     {verified}");
+    print!("{}", trace.table());
+    if !verified {
+        for e in &errors {
+            eprintln!("error: {e}");
+        }
+        return Ok(1);
+    }
     Ok(0)
 }
 
@@ -79,6 +131,31 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
             algo.name(),
             rep.trace.max_nonlocal_msgs(),
             seconds(rep.vtime)
+        );
+    }
+    println!(
+        "\n§6 extensions — the same plan-once registry covers allreduce and\n\
+         alltoall (`locag algos`, `locag run --op ...`); on the 16-rank example:"
+    );
+    let topo = Topology::regions(4, 4);
+    for (op, baseline, aware) in [
+        (crate::collectives::OpKind::Allreduce, "recursive-doubling", "loc-aware"),
+        (crate::collectives::OpKind::Alltoall, "bruck", "loc-aware"),
+    ] {
+        let (b, a) = match op {
+            crate::collectives::OpKind::Allreduce => (
+                sim::run_allreduce(baseline, &topo, &m, 2),
+                sim::run_allreduce(aware, &topo, &m, 2),
+            ),
+            _ => (
+                sim::run_alltoall(baseline, &topo, &m, 2),
+                sim::run_alltoall(aware, &topo, &m, 2),
+            ),
+        };
+        println!(
+            "  {op:<10} {baseline:<20} max NL msgs {:>2}   {aware:<10} max NL msgs {:>2}",
+            b.trace.max_nonlocal_msgs(),
+            a.trace.max_nonlocal_msgs()
         );
     }
     Ok(0)
@@ -132,9 +209,11 @@ pub fn figure(args: &Args) -> Result<i32> {
         "8" => figures::fig8(&out)?,
         "9" => figures::fig9(&out, max_p)?,
         "10" => figures::fig10(&out, max_p)?,
+        "allreduce" => figures::fig_allreduce(&out, max_p)?,
+        "alltoall" => figures::fig_alltoall(&out, max_p)?,
         other => {
             return Err(Error::Precondition(format!(
-                "unknown figure '{other}' (expected 3|7|8|9|10)"
+                "unknown figure '{other}' (expected 3|7|8|9|10|allreduce|alltoall)"
             )))
         }
     };
@@ -169,6 +248,7 @@ pub fn e2e(args: &Args) -> Result<i32> {
         warmup: args.get_usize("warmup", 2)?,
         check: !args.get_bool("no-check"),
         fused: args.get_bool("fused"),
+        consensus: !args.get_bool("no-consensus"),
     };
     println!(
         "serving via PJRT: allgather={}, {} regions, {} requests{}",

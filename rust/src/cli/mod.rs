@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! locag quickstart                      # paper Example 2.1 walkthrough
+//! locag run --op alltoall --algo loc-aware --regions 16 --ppr 8
 //! locag allgather --algo loc-bruck --regions 16 --ppr 8 [--machine lassen]
 //! locag figure 9 [--out results/fig9.csv] [--max-p 1024]
 //! locag pingpong [--machine quartz]
@@ -30,6 +31,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
     match cmd.as_str() {
         "quickstart" => commands::quickstart(&args),
         "algos" => commands::algos(&args),
+        "run" => commands::run_op(&args),
         "allgather" => commands::allgather(&args),
         "figure" => commands::figure(&args),
         "pingpong" => commands::pingpong(&args),
@@ -58,16 +60,20 @@ USAGE: locag <command> [options]
 COMMANDS
   quickstart   Walk through paper Example 2.1 (16 ranks, 4 regions):
                per-algorithm traffic tables and modeled times.
-  algos        List the algorithm registry (name + one-line summary).
-  allgather    Run one allgather and report time/traffic.
-               --algo NAME       (default loc-bruck; see below)
+  algos        List the algorithm registries of all three operations
+               (allgather, allreduce, alltoall; name + one-line summary).
+  run          Run any planned collective and report time/traffic.
+               --op OP           allgather | allreduce | alltoall
+               --algo NAME       (defaults: loc-bruck / loc-aware)
                --regions N       (default 16)
                --ppr N           ranks per region (default 8)
-               --values N        u32 values per rank (default 2)
+               --values N        values per rank (default 2)
                --machine NAME    lassen | quartz (default lassen)
-  figure       Regenerate a paper figure: 3 | 7 | 8 | 9 | 10.
+  allgather    Shorthand for `run --op allgather` (paper compatibility).
+               Same options as run, u32 payloads.
+  figure       Regenerate a figure: 3 | 7 | 8 | 9 | 10 | allreduce | alltoall.
                --out FILE        CSV path (default results/figN.csv)
-               --max-p N         world-size cap for figs 9/10 (default 1024)
+               --max-p N         world-size cap for the sweeps (default 1024)
   pingpong     Print the locality-class ping-pong series (Fig. 3 shape).
                --machine NAME
   pattern      Print the step-by-step communication pattern (paper Figs.
@@ -79,8 +85,10 @@ COMMANDS
                the paper's message-count bounds. --max-p N (default 256)
 
 ALGORITHMS (case-insensitive; see `locag algos`)
-  system-default bruck ring recursive-doubling dissemination hierarchical
-  multilane loc-bruck loc-bruck-v loc-bruck-2level
+  allgather: system-default bruck ring recursive-doubling dissemination
+             hierarchical multilane loc-bruck loc-bruck-v loc-bruck-2level
+  allreduce: recursive-doubling loc-aware
+  alltoall:  system-default pairwise bruck loc-aware
 "
     .to_string()
 }

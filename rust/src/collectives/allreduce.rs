@@ -1,30 +1,39 @@
-//! Locality-aware allreduce — the paper's §6 future-work extension.
+//! Locality-aware allreduce — the paper's §6 future-work extension, as
+//! persistent plans.
 //!
 //! “Locality-awareness can be extended to other collectives, removing
 //! duplicate non-local messages for small data sizes …” We implement the
 //! natural transfer of Algorithm 2's structure to a sum-allreduce and
 //! compare it against standard recursive-doubling allreduce:
 //!
-//! * **standard**: recursive-doubling allreduce — `log2(p)` exchanges of
-//!   the full vector, most of them non-local;
-//! * **locality-aware**: reduce within each region (local allreduce), one
-//!   exchange-and-reduce round among regions in which local rank `ℓ`
-//!   pairs with region `g ± ℓ·pℓ^i` (local rank 0 idles), then a final
-//!   local combine — `⌈log_pℓ(r)⌉` non-local messages per rank.
+//! * **`recursive-doubling`**: `log2(p)` exchanges of the full vector,
+//!   most of them non-local (requires power-of-two `p`, checked at plan
+//!   time);
+//! * **`loc-aware`**: reduce within each region (local allreduce), then
+//!   `⌈log_pℓ(r)⌉` exchange-and-reduce rounds among regions in which local
+//!   rank `ℓ` pairs with region `g ± ℓ·pℓ^i` (local rank 0 idles), each
+//!   closed by a local allgatherv + combine — `⌈log_pℓ(r)⌉` non-local
+//!   messages per rank.
+//!
+//! Both are [`AllreducePlan`] factories registered in
+//! [`super::plan::AllreduceRegistry`]: groups, sub-communicators, round
+//! schedules, tag blocks and scratch are built once at plan time;
+//! `execute` is pure communication + summation with zero allocation and no
+//! tag consumption. Shape preconditions (power-of-two sizes, uniform
+//! groups) surface at `plan()` time; `n == 0` plans are uniform no-ops.
 
 use super::grouping::{group_ranks, require_uniform, GroupBy};
-use crate::comm::{Comm, Pod};
+use super::plan::{
+    check_reduce_io, trivial_reduce_plan, AllreduceAlgorithm, AllreducePlan, CollectivePlan,
+    NamedAlgorithm, PlanCore, SelectedPlan, Shape,
+};
+use super::primitives::AllgathervPlan;
+use crate::comm::Comm;
 use crate::error::Result;
 
-/// Element types that can be summed (the reduction used by the paper's
-/// allreduce reference [4]).
-pub trait Summable: Pod + std::ops::Add<Output = Self> {}
-impl Summable for u32 {}
-impl Summable for u64 {}
-impl Summable for i32 {}
-impl Summable for i64 {}
-impl Summable for f32 {}
-impl Summable for f64 {}
+/// Element types that can be summed (re-exported from the plan framework;
+/// the reduction used by the paper's allreduce reference [4]).
+pub use super::plan::Summable;
 
 fn add_into<T: Summable>(acc: &mut [T], x: &[T]) {
     debug_assert_eq!(acc.len(), x.len());
@@ -33,28 +42,93 @@ fn add_into<T: Summable>(acc: &mut [T], x: &[T]) {
     }
 }
 
-/// Standard recursive-doubling allreduce (requires power-of-two size).
-pub fn allreduce_recursive_doubling<T: Summable>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    if !p.is_power_of_two() {
-        return Err(crate::error::Error::Precondition(format!(
-            "recursive-doubling allreduce requires power-of-two size, got {p}"
-        )));
+/// Standard recursive-doubling allreduce (registry entry).
+pub struct RecursiveDoublingAllreduce;
+
+impl NamedAlgorithm for RecursiveDoublingAllreduce {
+    fn name(&self) -> &'static str {
+        "recursive-doubling"
     }
-    let tag = comm.next_coll_tag();
-    let mut acc = local.to_vec();
-    let mut dist = 1usize;
-    let mut step = 0u64;
-    while dist < p {
-        let peer = id ^ dist;
-        let _req = comm.isend(&acc, peer, tag + step)?;
-        let got: Vec<T> = comm.irecv(peer, tag + step).wait(comm)?;
-        add_into(&mut acc, &got);
-        dist <<= 1;
-        step += 1;
+
+    fn summary(&self) -> &'static str {
+        "recursive-doubling allreduce: log2(p) full-vector exchanges, power-of-two p only"
     }
-    Ok(acc)
+}
+
+impl<T: Summable> AllreduceAlgorithm<T> for RecursiveDoublingAllreduce {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("recursive-doubling", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(RecursiveDoublingAllreducePlan::<T>::new(comm, shape.n)?))
+    }
+}
+
+/// Persistent recursive-doubling allreduce plan: XOR peer schedule, one
+/// tag per step, one `n`-element receive scratch.
+pub struct RecursiveDoublingAllreducePlan<T: Summable> {
+    core: PlanCore,
+    /// XOR exchange peers, one per step.
+    peers: Vec<usize>,
+    /// Receive scratch, length `n`.
+    recv: Vec<T>,
+}
+
+impl<T: Summable> RecursiveDoublingAllreducePlan<T> {
+    /// Collectively plan the exchange schedule. Errors at plan time on
+    /// non-power-of-two communicators.
+    pub fn new(comm: &Comm, n: usize) -> Result<RecursiveDoublingAllreducePlan<T>> {
+        let p = comm.size();
+        if !p.is_power_of_two() {
+            return Err(crate::error::Error::Precondition(format!(
+                "recursive-doubling allreduce requires power-of-two size, got {p}"
+            )));
+        }
+        let id = comm.rank();
+        let mut peers = Vec::new();
+        let mut dist = 1usize;
+        while dist < p {
+            peers.push(id ^ dist);
+            dist <<= 1;
+        }
+        Ok(RecursiveDoublingAllreducePlan {
+            core: PlanCore::new(comm, n, peers.len() as u64),
+            peers,
+            recv: vec![T::default(); n],
+        })
+    }
+}
+
+impl<T: Summable> CollectivePlan for RecursiveDoublingAllreducePlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "recursive-doubling"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.core.p
+    }
+}
+
+impl<T: Summable> AllreducePlan<T> for RecursiveDoublingAllreducePlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        let core = &self.core;
+        check_reduce_io(core.n, input, output)?;
+        if core.n == 0 {
+            return Ok(());
+        }
+        output.copy_from_slice(input);
+        for (i, &peer) in self.peers.iter().enumerate() {
+            let tag = core.tag(i as u64);
+            let _req = core.comm.isend(output, peer, tag)?;
+            core.comm.recv_into(peer, tag, &mut self.recv)?;
+            add_into(output, &self.recv);
+        }
+        Ok(())
+    }
 }
 
 /// True if Algorithm 2's round structure sums every region exactly once
@@ -75,66 +149,182 @@ pub fn locality_rounds_align(r_n: usize, ppr: usize) -> bool {
     true
 }
 
-/// Locality-aware allreduce: local allreduce, `⌈log_pℓ(r)⌉` sparse
-/// non-local exchange rounds (local rank 0 idles), each followed by a
-/// local combine of the received partial sums.
+/// The locality-aware regional allreduce (registry entry).
+pub struct LocalityAwareAllreduce;
+
+impl NamedAlgorithm for LocalityAwareAllreduce {
+    fn name(&self) -> &'static str {
+        "loc-aware"
+    }
+
+    fn summary(&self) -> &'static str {
+        "regional allreduce (§6): local reduce, log_ppr(r) sparse non-local rounds"
+    }
+}
+
+impl<T: Summable> AllreduceAlgorithm<T> for LocalityAwareAllreduce {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("loc-aware", comm, shape) {
+            return Ok(p);
+        }
+        LocalityAwareAllreducePlan::<T>::plan_boxed(comm, shape.n)
+    }
+}
+
+/// One non-local exchange-and-combine round of the locality-aware plan.
+struct Round<T: Summable> {
+    /// Whether this rank exchanges non-locally this round.
+    active: bool,
+    /// Exchange peers in parent-communicator ranks (valid when `active`).
+    dst: usize,
+    src: usize,
+    /// Local allgatherv of the received partial sums (counts fixed at
+    /// plan time: `n` for each active local rank, 0 otherwise).
+    vplan: AllgathervPlan<T>,
+    /// Non-local receive scratch, length `n` when active.
+    recv: Vec<T>,
+    /// Local-gather output, one `n`-chunk per active local rank.
+    gathered: Vec<T>,
+}
+
+/// Persistent locality-aware allreduce plan (see module docs).
 ///
-/// Unlike the allgather — where wrap-around duplicate coverage is benign —
-/// summation is not idempotent, so the non-local rounds require aligned
-/// groups ([`locality_rounds_align`]); other shapes fall back to standard
-/// recursive doubling.
+/// Summation is not idempotent, so the non-local rounds require aligned
+/// groups ([`locality_rounds_align`]); single-region, single-rank-per-
+/// region and unaligned shapes fall back to a recursive-doubling plan
+/// (whose power-of-two precondition then also surfaces at plan time).
+pub struct LocalityAwareAllreducePlan<T: Summable> {
+    /// Parent communicator + one exchange tag per round.
+    core: PlanCore,
+    /// Phase 1: allreduce within the region (over the retained sub-comm).
+    phase1: RecursiveDoublingAllreducePlan<T>,
+    rounds: Vec<Round<T>>,
+}
+
+impl<T: Summable> LocalityAwareAllreducePlan<T> {
+    /// Collectively plan over `comm`, falling back to recursive doubling
+    /// when the topology offers no exploitable (aligned) locality.
+    pub fn plan_boxed(comm: &Comm, n: usize) -> Result<Box<dyn AllreducePlan<T>>> {
+        let groups = group_ranks(comm, GroupBy::Region)?;
+        let ppr = require_uniform(&groups, "locality-aware allreduce")?;
+        let r_n = groups.count();
+        if r_n == 1 || ppr == 1 || !locality_rounds_align(r_n, ppr) {
+            return Ok(Box::new(SelectedPlan {
+                name: "loc-aware",
+                inner: Box::new(RecursiveDoublingAllreducePlan::<T>::new(comm, n)?)
+                    as Box<dyn AllreducePlan<T>>,
+            }));
+        }
+        let g = groups.mine;
+        let l = groups.my_local;
+        let local_comm = comm.sub(&groups.members[g])?;
+        // Phase 1 plans on the local communicator (its own tag space);
+        // plan-time error if ppr is not a power of two.
+        let phase1 = RecursiveDoublingAllreducePlan::<T>::new(&local_comm, n)?;
+
+        // Count the rounds first so the parent tag block is one reservation.
+        let mut n_rounds = 0u64;
+        let mut width = 1usize;
+        while width < r_n {
+            n_rounds += 1;
+            width = width.saturating_mul(ppr);
+        }
+        let core = PlanCore::new(comm, n, n_rounds);
+
+        // Invariant per round: every rank of region g holds the exact sum
+        // over regions [g, g+width) mod r_n. Local rank j ≥ 1 fetches the
+        // disjoint group [g + j·width, g + (j+1)·width); alignment
+        // (checked above) guarantees no group wraps into held regions.
+        let mut rounds = Vec::new();
+        let mut width = 1usize;
+        while width < r_n {
+            let blocks = (r_n / width).min(ppr); // groups reachable this round
+            let active_j = |j: usize| j > 0 && j < blocks;
+            let active = active_j(l);
+            let (dst, src) = if active {
+                let dist = (l * width) % r_n;
+                (
+                    groups.members[(g + r_n - dist) % r_n][l],
+                    groups.members[(g + dist) % r_n][l],
+                )
+            } else {
+                (0, 0)
+            };
+            let counts: Vec<usize> =
+                (0..ppr).map(|j| if active_j(j) { n } else { 0 }).collect();
+            let total: usize = counts.iter().sum();
+            let vplan = AllgathervPlan::<T>::new(&local_comm, &counts)?;
+            rounds.push(Round {
+                active,
+                dst,
+                src,
+                vplan,
+                recv: vec![T::default(); if active { n } else { 0 }],
+                gathered: vec![T::default(); total],
+            });
+            width = width.saturating_mul(ppr);
+        }
+        Ok(Box::new(LocalityAwareAllreducePlan { core, phase1, rounds }))
+    }
+}
+
+impl<T: Summable> CollectivePlan for LocalityAwareAllreducePlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "loc-aware"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.core.p
+    }
+}
+
+impl<T: Summable> AllreducePlan<T> for LocalityAwareAllreducePlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        let core = &self.core;
+        check_reduce_io(core.n, input, output)?;
+        let n = core.n;
+        if n == 0 {
+            return Ok(());
+        }
+        // Phase 1: local allreduce → every rank holds its region's sum.
+        self.phase1.execute(input, output)?;
+        // Phase 2: sparse non-local rounds, each closed by a local
+        // allgatherv of the received partials + combine.
+        for (i, round) in self.rounds.iter_mut().enumerate() {
+            if round.active {
+                let tag = core.tag(i as u64);
+                let _req = core.comm.isend(output, round.dst, tag)?;
+                core.comm.recv_into(round.src, tag, &mut round.recv)?;
+            }
+            round.vplan.execute(&round.recv, &mut round.gathered)?;
+            for part in round.gathered.chunks_exact(n) {
+                add_into(output, part);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One-shot standard recursive-doubling allreduce: plan + single execute
+/// (requires power-of-two size, surfaced before any communication).
+pub fn allreduce_recursive_doubling<T: Summable>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_reduce(&RecursiveDoublingAllreduce, comm, local)
+}
+
+/// One-shot locality-aware allreduce: plan + single execute. Unaligned or
+/// locality-free shapes fall back to recursive doubling.
 pub fn allreduce_locality_aware<T: Summable>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
-    let groups = group_ranks(comm, GroupBy::Region)?;
-    let ppr = require_uniform(&groups, "locality-aware allreduce")?;
-    let r_n = groups.count();
-    if r_n == 1 {
-        let lc = comm.sub(&groups.members[groups.mine])?;
-        return allreduce_recursive_doubling(&lc, local);
-    }
-    if ppr == 1 || !locality_rounds_align(r_n, ppr) {
-        return allreduce_recursive_doubling(comm, local);
-    }
-    let g = groups.mine;
-    let l = groups.my_local;
-    let local_comm = comm.sub(&groups.members[g])?;
-
-    // Phase 1: local allreduce → every rank holds its region's sum.
-    let mut acc = allreduce_recursive_doubling(&local_comm, local)?;
-
-    // Phase 2: non-local rounds. Invariant: every rank of region g holds
-    // the exact sum over regions [g, g+width) mod r_n. Local rank j ≥ 1
-    // fetches the disjoint group [g + j·width, g + (j+1)·width); alignment
-    // (checked above) guarantees no group wraps into already-held regions.
-    let mut width = 1usize;
-    while width < r_n {
-        let tag = comm.next_coll_tag();
-        let blocks = (r_n / width).min(ppr); // groups reachable this round
-        let active = |j: usize| j > 0 && j < blocks;
-        let mut mine: Vec<T> = Vec::new();
-        if active(l) {
-            let dist = (l * width) % r_n;
-            let dst = groups.members[(g + r_n - dist) % r_n][l];
-            let src = groups.members[(g + dist) % r_n][l];
-            let _req = comm.isend(&acc, dst, tag)?;
-            mine = comm.irecv(src, tag).wait(comm)?;
-        }
-        // Local combine: gather the partials every active rank received and
-        // sum them all — each covers a distinct aligned group of regions.
-        let counts: Vec<usize> = (0..ppr)
-            .map(|j| if active(j) { acc.len() } else { 0 })
-            .collect();
-        let gathered = super::primitives::allgatherv(&local_comm, &mine, &counts)?;
-        for part in gathered.chunks_exact(acc.len().max(1)) {
-            add_into(&mut acc, part);
-        }
-        width = width.saturating_mul(ppr);
-    }
-    Ok(acc)
+    super::plan::one_shot_reduce(&LocalityAwareAllreduce, comm, local)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::plan::AllreduceRegistry;
     use crate::comm::{CommWorld, Timing};
     use crate::topology::Topology;
 
@@ -203,21 +393,42 @@ mod tests {
     }
 
     #[test]
+    fn preconditions_surface_at_plan_time() {
+        // Non-power-of-two p rejects when PLANNING, before any message.
+        let topo = Topology::regions(3, 1);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = AllreduceRegistry::<u64>::standard();
+            let err = r.plan("recursive-doubling", c, Shape::elems(2)).unwrap_err();
+            err.to_string()
+        });
+        for msg in &run.results {
+            assert!(msg.contains("power-of-two"), "{msg}");
+        }
+        let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+        assert_eq!(total, 0, "plan-time rejection must send no messages");
+        // ... but the zero-length plan bypasses the precondition uniformly.
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = AllreduceRegistry::<u64>::standard();
+            let mut plan = r.plan("recursive-doubling", c, Shape::elems(0)).unwrap();
+            let mut out: Vec<u64> = Vec::new();
+            plan.execute(&[], &mut out).unwrap();
+            out.is_empty()
+        });
+        assert!(run.results.iter().all(|&ok| ok));
+    }
+
+    #[test]
     fn unaligned_shapes_fall_back_and_stay_correct() {
-        // 6 regions × 4 ppr is unaligned -> recursive-doubling fallback
-        // still sums correctly (p = 24 is not a power of two... use 8x4).
-        let topo = Topology::regions(8, 4); // aligned, but exercise p=32
+        // 8 regions x 4 ppr is aligned; exercises p = 32.
+        let topo = Topology::regions(8, 4);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             allreduce_locality_aware(c, &contribution(c.rank(), 3)).unwrap()
         });
         for r in &run.results {
             assert_eq!(r, &expected_sum(32, 3));
         }
-        // genuinely unaligned: 2 regions of 16 with... 6 regions needs
-        // power-of-two total for the fallback: 16 regions of 2, width run
-        // 1,2,4,8 all divide 16 -> aligned; use (8,2): aligned too. For a
-        // true fallback case take ppr=4, r=8? aligned. r=6,ppr=4 -> p=24
-        // not power of two, fallback errors; assert that surfaces cleanly.
+        // 6 regions x 4 ppr is unaligned → recursive-doubling fallback,
+        // and p = 24 is not a power of two: surfaced cleanly at plan time.
         let topo = Topology::regions(6, 4);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             allreduce_locality_aware(c, &contribution(c.rank(), 1)).is_err()
@@ -234,5 +445,32 @@ mod tests {
         for r in &run.results {
             assert_eq!(r, &expected_sum(4, 2));
         }
+    }
+
+    #[test]
+    fn plan_reuse_with_shifting_inputs() {
+        let topo = Topology::regions(4, 4);
+        let p = topo.size();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = AllreduceRegistry::<u64>::standard();
+            for name in r.names() {
+                let mut plan = r.plan(name, c, Shape::elems(3)).unwrap();
+                assert_eq!(plan.algorithm(), name);
+                assert_eq!(plan.comm_size(), p);
+                let mut out = vec![0u64; 3];
+                for round in 0..5u64 {
+                    let mine: Vec<u64> =
+                        contribution(c.rank(), 3).iter().map(|v| v + round).collect();
+                    plan.execute(&mine, &mut out).unwrap();
+                    let expect: Vec<u64> = expected_sum(p, 3)
+                        .iter()
+                        .map(|v| v + round * p as u64)
+                        .collect();
+                    assert_eq!(out, expect, "{name} round {round}");
+                }
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok));
     }
 }

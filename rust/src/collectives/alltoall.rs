@@ -1,124 +1,282 @@
 //! All-to-all exchanges — the §6 extension, and the operation the original
-//! Bruck et al. '97 paper [7] was designed for.
+//! Bruck et al. '97 paper [7] was designed for — as persistent plans.
 //!
 //! `alltoall` contract: rank `i` holds `p` blocks of `n` elements, block
 //! `j` destined for rank `j`; afterwards rank `i` holds block `i` of every
 //! rank, in rank order (`MPI_Alltoall` semantics).
 //!
-//! Three implementations:
+//! Three implementations, all [`AlltoallPlan`] factories registered in
+//! [`super::plan::AlltoallRegistry`] (plus the MPICH-style dispatcher in
+//! [`super::dispatch::SystemDefaultAlltoall`]):
 //!
-//! * [`pairwise`] — `p−1` rounds of `sendrecv` with XOR/shift partners:
+//! * **`pairwise`** — `p−1` rounds of `sendrecv` with XOR/shift partners:
 //!   the large-message baseline (one message per peer, no forwarding);
-//! * [`bruck`] — the classic log-step algorithm: `⌈log2(p)⌉` rounds where
+//! * **`bruck`** — the classic log-step algorithm: `⌈log2(p)⌉` rounds where
 //!   round `k` forwards every block whose destination distance has bit
-//!   `k` set. Minimal message count, `O(b·log p)` forwarded bytes;
-//! * [`loc_aware`] — the paper's §6 direction applied to alltoall:
+//!   `k` set. Minimal message count, `O(b·log p)` forwarded bytes. The
+//!   moving slot set of each round depends only on `(p, k)`, so the plan
+//!   precomputes it and the wire format needs no per-block headers;
+//! * **`loc-aware`** — the paper's §6 direction applied to alltoall:
 //!   aggregate per destination *region* locally (each local rank `ℓ`
 //!   collects the blocks of all local peers headed for the region group it
-//!   owns), exchange region-to-region in `r−1`-free fashion (one non-local
-//!   message per owned region), then scatter locally. Non-local messages
-//!   per rank drop from `⌈log2 p⌉` (Bruck, mostly non-local) to
-//!   `⌈(r−1)/pℓ⌉`-ish aggregated transfers; non-local *duplicate* bytes
-//!   disappear because payloads are aggregated once per region pair.
+//!   owns), exchange region-to-region (one aggregated non-local message
+//!   per owned region), then scatter locally. Non-local messages per rank
+//!   drop from `⌈log2 p⌉` (Bruck, mostly non-local) to `⌈(r−1)/pℓ⌉`
+//!   aggregated transfers; non-local *duplicate* bytes disappear because
+//!   payloads are aggregated once per region pair.
+//!
+//! Plans own their schedules, tag blocks and scratch: `execute` is pure
+//! communication with zero allocation and no tag consumption. Shape
+//! preconditions (uniform groups) surface at `plan()` time; `n == 0`
+//! plans are uniform no-ops.
 
 use super::grouping::{group_ranks, require_uniform, GroupBy};
+use super::plan::{
+    check_a2a_io, trivial_a2a_plan, AlltoallAlgorithm, AlltoallPlan, CollectivePlan,
+    NamedAlgorithm, PlanCore, SelectedPlan, Shape,
+};
 use crate::comm::{Comm, Pod};
-use crate::error::{Error, Result};
+use crate::error::Result;
 
-/// Check the send buffer length and return the block size `n`.
-fn block_len<T>(comm: &Comm, send: &[T]) -> Result<usize> {
-    let p = comm.size();
-    if send.len() % p != 0 {
-        return Err(Error::SizeMismatch { expected: (send.len() / p.max(1)) * p, got: send.len() });
+/// Pairwise-exchange alltoall (registry entry).
+pub struct PairwiseAlltoall;
+
+impl NamedAlgorithm for PairwiseAlltoall {
+    fn name(&self) -> &'static str {
+        "pairwise"
     }
-    Ok(send.len() / p)
+
+    fn summary(&self) -> &'static str {
+        "pairwise exchange: p-1 direct rounds, large-message baseline"
+    }
 }
 
-/// Pairwise-exchange alltoall: `p − 1` rounds; round `k` trades with
-/// `rank XOR k` (power-of-two p) or `(rank ± k) mod p` otherwise.
-pub fn pairwise<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    let n = block_len(comm, send)?;
-    let tag = comm.next_coll_tag();
-    let mut out = vec![T::default(); n * p];
-    out[id * n..(id + 1) * n].copy_from_slice(&send[id * n..(id + 1) * n]);
-    for k in 1..p {
-        let (dst, src) = if p.is_power_of_two() {
-            (id ^ k, id ^ k)
-        } else {
-            ((id + k) % p, (id + p - k) % p)
-        };
-        let _rq = comm.isend(&send[dst * n..(dst + 1) * n], dst, tag + k as u64)?;
-        comm.recv_into(src, tag + k as u64, &mut out[src * n..(src + 1) * n])?;
+impl<T: Pod> AlltoallAlgorithm<T> for PairwiseAlltoall {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("pairwise", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(PairwiseAlltoallPlan::<T>::new(comm, shape.n)))
     }
-    Ok(out)
 }
 
-/// Bruck alltoall: `⌈log2 p⌉` rounds. Blocks are kept in "distance" order
+/// One pairwise round: whom to send to and receive from.
+struct Pair {
+    dst: usize,
+    src: usize,
+}
+
+/// Persistent pairwise alltoall plan: partner schedule + tag block, zero
+/// scratch (blocks move straight between the caller's buffers).
+pub struct PairwiseAlltoallPlan<T: Pod> {
+    core: PlanCore,
+    rounds: Vec<Pair>,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: Pod> PairwiseAlltoallPlan<T> {
+    /// Collectively plan a pairwise alltoall of `n`-element blocks.
+    /// Round `k` trades with `rank XOR k` (power-of-two `p`) or
+    /// `(rank ± k) mod p` otherwise.
+    pub fn new(comm: &Comm, n: usize) -> PairwiseAlltoallPlan<T> {
+        let p = comm.size();
+        let id = comm.rank();
+        let rounds: Vec<Pair> = (1..p)
+            .map(|k| {
+                if p.is_power_of_two() {
+                    Pair { dst: id ^ k, src: id ^ k }
+                } else {
+                    Pair { dst: (id + k) % p, src: (id + p - k) % p }
+                }
+            })
+            .collect();
+        PairwiseAlltoallPlan {
+            core: PlanCore::new(comm, n, rounds.len() as u64),
+            rounds,
+            _elem: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<T: Pod> CollectivePlan for PairwiseAlltoallPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "pairwise"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.core.p
+    }
+}
+
+impl<T: Pod> AlltoallPlan<T> for PairwiseAlltoallPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        let core = &self.core;
+        check_a2a_io(core.n, core.p, input, output)?;
+        if core.n == 0 {
+            return Ok(());
+        }
+        let (n, id) = (core.n, core.id);
+        output[id * n..(id + 1) * n].copy_from_slice(&input[id * n..(id + 1) * n]);
+        for (k, pair) in self.rounds.iter().enumerate() {
+            let tag = core.tag(k as u64);
+            let _rq = core.comm.isend(&input[pair.dst * n..(pair.dst + 1) * n], pair.dst, tag)?;
+            core.comm.recv_into(pair.src, tag, &mut output[pair.src * n..(pair.src + 1) * n])?;
+        }
+        Ok(())
+    }
+}
+
+/// Bruck alltoall (registry entry).
+pub struct BruckAlltoall;
+
+impl NamedAlgorithm for BruckAlltoall {
+    fn name(&self) -> &'static str {
+        "bruck"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Bruck alltoall: log2(p) forwarding rounds, minimal message count"
+    }
+}
+
+impl<T: Pod> AlltoallAlgorithm<T> for BruckAlltoall {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("bruck", comm, shape) {
+            return Ok(p);
+        }
+        Ok(Box::new(BruckAlltoallPlan::<T>::new(comm, shape.n)))
+    }
+}
+
+/// One Bruck round: peers plus the (rank-independent) moving slot set.
+struct A2aStep {
+    to: usize,
+    from: usize,
+    /// Slot indices with round-bit set, ascending. The set depends only on
+    /// `(p, k)`, so sender and receiver agree without headers.
+    moving: Vec<usize>,
+}
+
+/// Persistent Bruck alltoall plan. Blocks are kept in "distance" order
 /// (slot `d` holds the block currently destined `d` ranks ahead); round
-/// `k` ships every slot with bit `k` set to rank `id + 2^k`, prefixed by
-/// the slot index so the receiver can merge.
-pub fn bruck<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    let n = block_len(comm, send)?;
-    if n == 0 {
-        return Ok(Vec::new());
-    }
-    let tag = comm.next_coll_tag();
-
-    // slots[d] = block destined for rank (id + d) mod p
-    let mut slots: Vec<Vec<T>> = (0..p)
-        .map(|d| {
-            let dst = (id + d) % p;
-            send[dst * n..(dst + 1) * n].to_vec()
-        })
-        .collect();
-
-    let mut k = 0u32;
-    while (1usize << k) < p {
-        let bit = 1usize << k;
-        let to = (id + bit) % p;
-        let from = (id + p - bit) % p;
-        // pack slot indices (u64) + payloads
-        let moving: Vec<usize> = (0..p).filter(|d| d & bit != 0).collect();
-        let mut payload: Vec<u8> = Vec::with_capacity(moving.len() * (8 + n * 8));
-        for &d in &moving {
-            payload.extend_from_slice(&(d as u64).to_le_bytes());
-            payload.extend_from_slice(&crate::comm::to_bytes(&slots[d]));
-        }
-        let _rq = comm.isend(&payload, to, tag + k as u64)?;
-        let got: Vec<u8> = comm.irecv(from, tag + k as u64).wait(comm)?;
-        let rec = 8 + n * std::mem::size_of::<T>();
-        if got.len() % rec != 0 {
-            return Err(Error::DatatypeMismatch { bytes: got.len(), elem_size: rec });
-        }
-        for chunk in got.chunks_exact(rec) {
-            let d = u64::from_le_bytes(chunk[0..8].try_into().expect("header")) as usize;
-            if d >= p {
-                return Err(Error::Precondition(format!("bruck alltoall: bad slot {d}")));
-            }
-            let body = crate::comm::from_bytes::<T>(&chunk[8..])
-                .ok_or(Error::DatatypeMismatch { bytes: chunk.len() - 8, elem_size: std::mem::size_of::<T>() })?;
-            // receiver is `bit` closer to the destination: same slot index
-            slots[d] = body;
-        }
-        k += 1;
-    }
-
-    // slot d now holds the block that travelled to its destination… in
-    // Bruck alltoall, after all rounds slot d holds the block *from* rank
-    // (id - d) mod p destined for us. Unpack into rank order.
-    let mut out = vec![T::default(); n * p];
-    for d in 0..p {
-        let src = (id + p - d) % p;
-        out[src * n..(src + 1) * n].copy_from_slice(&slots[d]);
-    }
-    Ok(out)
+/// `k` ships every slot with bit `k` set to rank `id + 2^k`, headerless
+/// (the slot schedule is precomputed on both sides).
+pub struct BruckAlltoallPlan<T: Pod> {
+    core: PlanCore,
+    steps: Vec<A2aStep>,
+    /// slots[d·n..] = block destined for rank (id + d) mod p.
+    slots: Vec<T>,
+    /// Packed send payload scratch (largest round).
+    pack: Vec<T>,
+    /// Receive scratch (largest round).
+    unpack: Vec<T>,
 }
 
-/// Locality-aware alltoall (§6 direction): local gather per destination
+impl<T: Pod> BruckAlltoallPlan<T> {
+    /// Collectively plan a Bruck alltoall of `n`-element blocks.
+    pub fn new(comm: &Comm, n: usize) -> BruckAlltoallPlan<T> {
+        let p = comm.size();
+        let id = comm.rank();
+        let mut steps = Vec::new();
+        let mut k = 0u32;
+        while (1usize << k) < p {
+            let bit = 1usize << k;
+            steps.push(A2aStep {
+                to: (id + bit) % p,
+                from: (id + p - bit) % p,
+                moving: (0..p).filter(|d| d & bit != 0).collect(),
+            });
+            k += 1;
+        }
+        let max_moving = steps.iter().map(|s| s.moving.len()).max().unwrap_or(0);
+        BruckAlltoallPlan {
+            core: PlanCore::new(comm, n, steps.len() as u64),
+            steps,
+            slots: vec![T::default(); p * n],
+            pack: vec![T::default(); max_moving * n],
+            unpack: vec![T::default(); max_moving * n],
+        }
+    }
+}
+
+impl<T: Pod> CollectivePlan for BruckAlltoallPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "bruck"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.core.p
+    }
+}
+
+impl<T: Pod> AlltoallPlan<T> for BruckAlltoallPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        let core = &self.core;
+        check_a2a_io(core.n, core.p, input, output)?;
+        if core.n == 0 {
+            return Ok(());
+        }
+        let (n, p, id) = (core.n, core.p, core.id);
+        // Rotate into distance order: slot d = block for rank (id + d).
+        for d in 0..p {
+            let dst = (id + d) % p;
+            self.slots[d * n..(d + 1) * n].copy_from_slice(&input[dst * n..(dst + 1) * n]);
+        }
+        for (k, s) in self.steps.iter().enumerate() {
+            let tag = core.tag(k as u64);
+            let len = s.moving.len() * n;
+            for (i, &d) in s.moving.iter().enumerate() {
+                self.pack[i * n..(i + 1) * n].copy_from_slice(&self.slots[d * n..(d + 1) * n]);
+            }
+            let _rq = core.comm.isend(&self.pack[..len], s.to, tag)?;
+            core.comm.recv_into(s.from, tag, &mut self.unpack[..len])?;
+            // The receiver is `bit` closer to each destination: same slot
+            // indices, same order — no headers needed.
+            for (i, &d) in s.moving.iter().enumerate() {
+                self.slots[d * n..(d + 1) * n].copy_from_slice(&self.unpack[i * n..(i + 1) * n]);
+            }
+        }
+        // After all rounds slot d holds the block *from* rank (id - d)
+        // mod p destined for us. Unpack into rank order.
+        for d in 0..p {
+            let src = (id + p - d) % p;
+            output[src * n..(src + 1) * n].copy_from_slice(&self.slots[d * n..(d + 1) * n]);
+        }
+        Ok(())
+    }
+}
+
+/// Locality-aware alltoall (registry entry).
+pub struct LocAwareAlltoall;
+
+impl NamedAlgorithm for LocAwareAlltoall {
+    fn name(&self) -> &'static str {
+        "loc-aware"
+    }
+
+    fn summary(&self) -> &'static str {
+        "region-aggregated alltoall (§6): one non-local message per owned region"
+    }
+}
+
+impl<T: Pod> AlltoallAlgorithm<T> for LocAwareAlltoall {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("loc-aware", comm, shape) {
+            return Ok(p);
+        }
+        LocAwareAlltoallPlan::<T>::plan_boxed(comm, shape.n)
+    }
+}
+
+/// Persistent locality-aware alltoall plan: local gather per destination
 /// region → one aggregated non-local exchange per (region, owner) pair →
 /// local scatter.
 ///
@@ -126,126 +284,192 @@ pub fn bruck<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
 /// owned region it receives the local peers' blocks (local gather),
 /// exchanges one aggregated message with its counterpart in that region,
 /// and finally the region scatters received aggregates locally. Non-local
-/// messages per rank: `⌈(r−1)/pℓ⌉`·1, each `pℓ²·n` elements — no duplicate
+/// messages per rank: `⌈(r−1)/pℓ⌉`, each `pℓ²·n` elements — no duplicate
 /// values cross regions.
-pub fn loc_aware<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
-    let p = comm.size();
-    let id = comm.rank();
-    let n = block_len(comm, send)?;
-    if n == 0 {
-        return Ok(Vec::new());
-    }
-    let groups = group_ranks(comm, GroupBy::Region)?;
-    let ppr = require_uniform(&groups, "locality-aware alltoall")?;
-    let r_n = groups.count();
-    if ppr == 1 || r_n == 1 {
-        return pairwise(comm, send);
-    }
-    let g = groups.mine;
-    let l = groups.my_local;
-    let local_comm = comm.sub(&groups.members[g])?;
-    let tag = comm.next_coll_tag();
+pub struct LocAwareAlltoallPlan<T: Pod> {
+    core: PlanCore,
+    /// Group member lists in communicator ranks (regions by smallest rank).
+    members: Vec<Vec<usize>>,
+    g: usize,
+    l: usize,
+    ppr: usize,
+    r_n: usize,
+    /// Remote regions this rank owns (`rg != g && rg % ppr == l`).
+    owned: Vec<usize>,
+    /// Step-1 per-region aggregate of this rank's blocks, `ppr·n`.
+    sendagg: Vec<T>,
+    /// Gathered aggregate for one owned region, `ppr·ppr·n`
+    /// (layout `[local src][dst in rg]`).
+    agg: Vec<T>,
+    /// Received aggregate from one owned region's peer, `ppr·ppr·n`.
+    got: Vec<T>,
+    /// One destination row of a received aggregate, `ppr·n`.
+    per_dst: Vec<T>,
+}
 
-    let mut out = vec![T::default(); n * p];
-    // Local blocks for our own region move directly.
-    for (j, &rank) in groups.members[g].iter().enumerate() {
-        let _ = j;
-        if rank == id {
-            out[id * n..(id + 1) * n].copy_from_slice(&send[id * n..(id + 1) * n]);
-        } else {
-            let ltag = tag; // one tag; distinct (src,dst) pairs
-            let _rq = comm.isend(&send[rank * n..(rank + 1) * n], rank, ltag)?;
+impl<T: Pod> LocAwareAlltoallPlan<T> {
+    /// Collectively plan over `comm`, degrading to pairwise exchange when
+    /// there is no locality to exploit (one region, or one rank/region).
+    pub fn plan_boxed(comm: &Comm, n: usize) -> Result<Box<dyn AlltoallPlan<T>>> {
+        let groups = group_ranks(comm, GroupBy::Region)?;
+        let ppr = require_uniform(&groups, "locality-aware alltoall")?;
+        let r_n = groups.count();
+        if ppr == 1 || r_n == 1 {
+            return Ok(Box::new(SelectedPlan {
+                name: "loc-aware",
+                inner: Box::new(PairwiseAlltoallPlan::<T>::new(comm, n))
+                    as Box<dyn AlltoallPlan<T>>,
+            }));
         }
+        let g = groups.mine;
+        let l = groups.my_local;
+        let owned: Vec<usize> = (0..r_n).filter(|&rg| rg != g && rg % ppr == l).collect();
+        // Tag layout: [0] local direct | [1, 1+r_n) gather by region |
+        // [1+r_n, 1+r_n+r_n²) exchange by (from-region, to-region) |
+        // [1+r_n+r_n², ...+r_n) scatter by region.
+        let tags = 1 + r_n as u64 + (r_n * r_n) as u64 + r_n as u64;
+        Ok(Box::new(LocAwareAlltoallPlan {
+            core: PlanCore::new(comm, n, tags),
+            members: groups.members,
+            g,
+            l,
+            ppr,
+            r_n,
+            owned,
+            sendagg: vec![T::default(); ppr * n],
+            agg: vec![T::default(); ppr * ppr * n],
+            got: vec![T::default(); ppr * ppr * n],
+            per_dst: vec![T::default(); ppr * n],
+        }))
     }
-    for &rank in groups.members[g].iter() {
-        if rank != id {
-            comm.recv_into(rank, tag, &mut out[rank * n..(rank + 1) * n])?;
-        }
+}
+
+impl<T: Pod> CollectivePlan for LocAwareAlltoallPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "loc-aware"
     }
 
-    // For every remote region rg (owned by local rank rg % ppr):
-    //   1. local gather to the owner: each local rank sends its ppr blocks
-    //      destined for rg's members;
-    //   2. owner exchanges the aggregate with rg's owner of OUR region;
-    //   3. owner scatters the received aggregate locally.
-    let tag_gather = comm.next_coll_tag();
-    let tag_xchg = comm.next_coll_tag();
-    let tag_scatter = comm.next_coll_tag();
-    // step 1: send my blocks for each remote region to its local owner
-    for rg in 0..r_n {
-        if rg == g {
-            continue;
-        }
-        let owner = groups.members[g][rg % ppr];
-        let mut blocks: Vec<T> = Vec::with_capacity(ppr * n);
-        for &dst in &groups.members[rg] {
-            blocks.extend_from_slice(&send[dst * n..(dst + 1) * n]);
-        }
-        let _rq = comm.isend(&blocks, owner, tag_gather + rg as u64)?;
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
     }
-    // step 1b/2/3 for the regions I own
-    let owned: Vec<usize> = (0..r_n).filter(|&rg| rg != g && rg % ppr == l).collect();
-    let mut aggregates: Vec<(usize, Vec<T>)> = Vec::with_capacity(owned.len());
-    for &rg in &owned {
-        // gather ppr * ppr * n elements: [local src][dst in rg]
-        let mut agg = vec![T::default(); ppr * ppr * n];
-        for (j, &src) in groups.members[g].iter().enumerate() {
-            comm.recv_into(
-                src,
-                tag_gather + rg as u64,
-                &mut agg[j * ppr * n..(j + 1) * ppr * n],
-            )?;
-        }
-        // exchange with rg's owner of region g
-        let peer = groups.members[rg][g % ppr];
-        let _rq = comm.isend(&agg, peer, tag_xchg + (g * r_n + rg) as u64)?;
-        aggregates.push((rg, agg));
+
+    fn comm_size(&self) -> usize {
+        self.core.p
     }
-    // receive the aggregates headed to our region from the regions we own
-    for &rg in &owned {
-        let peer = groups.members[rg][g % ppr];
-        let got: Vec<T> = comm.irecv(peer, tag_xchg + (rg * r_n + g) as u64).wait(comm)?;
-        if got.len() != ppr * ppr * n {
-            return Err(Error::SizeMismatch { expected: ppr * ppr * n, got: got.len() });
+}
+
+impl<T: Pod> AlltoallPlan<T> for LocAwareAlltoallPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_a2a_io(self.core.n, self.core.p, input, output)?;
+        let Self { core, members, g, l, ppr, r_n, owned, sendagg, agg, got, per_dst } = self;
+        let (n, id, g, l, ppr, r_n) = (core.n, core.id, *g, *l, *ppr, *r_n);
+        if n == 0 {
+            return Ok(());
         }
-        // got layout: [src j in rg][dst k in g]; scatter row k to member k
-        for (k, &dst) in groups.members[g].iter().enumerate() {
-            let mut per_dst: Vec<T> = Vec::with_capacity(ppr * n);
-            for j in 0..ppr {
-                let base = j * ppr * n + k * n;
-                per_dst.extend_from_slice(&got[base..base + n]);
-            }
-            if dst == id {
-                for (j, &src) in groups.members[rg].iter().enumerate() {
-                    out[src * n..(src + 1) * n]
-                        .copy_from_slice(&per_dst[j * n..(j + 1) * n]);
-                }
+        let comm = &core.comm;
+        // Tag layout (see plan_boxed): local | gather | exchange | scatter.
+        let tag_local = core.tag(0);
+        let tag_gather = |rg: usize| core.tag(1 + rg as u64);
+        let tag_xchg = |from_g: usize, to_g: usize| {
+            core.tag(1 + r_n as u64 + (from_g * r_n + to_g) as u64)
+        };
+        let tag_scatter = |rg: usize| core.tag(1 + r_n as u64 + (r_n * r_n) as u64 + rg as u64);
+
+        // Blocks for our own region move directly (one tag; distinct
+        // (src, dst) pairs disambiguate).
+        for &rank in members[g].iter() {
+            if rank == id {
+                output[id * n..(id + 1) * n].copy_from_slice(&input[id * n..(id + 1) * n]);
             } else {
-                let _rq = comm.isend(&per_dst, dst, tag_scatter + rg as u64)?;
+                let _rq = comm.isend(&input[rank * n..(rank + 1) * n], rank, tag_local)?;
             }
         }
+        for &rank in members[g].iter() {
+            if rank != id {
+                comm.recv_into(rank, tag_local, &mut output[rank * n..(rank + 1) * n])?;
+            }
+        }
+
+        // Step 1: send my blocks for each remote region to its local owner.
+        for rg in 0..r_n {
+            if rg == g {
+                continue;
+            }
+            let owner = members[g][rg % ppr];
+            for (i, &dst) in members[rg].iter().enumerate() {
+                sendagg[i * n..(i + 1) * n].copy_from_slice(&input[dst * n..(dst + 1) * n]);
+            }
+            let _rq = comm.isend(sendagg, owner, tag_gather(rg))?;
+        }
+        // Steps 1b/2 for the regions I own: gather the region aggregate,
+        // exchange it with rg's owner of OUR region.
+        for &rg in owned.iter() {
+            for (j, &src) in members[g].iter().enumerate() {
+                comm.recv_into(
+                    src,
+                    tag_gather(rg),
+                    &mut agg[j * ppr * n..(j + 1) * ppr * n],
+                )?;
+            }
+            let peer = members[rg][g % ppr];
+            let _rq = comm.isend(agg, peer, tag_xchg(g, rg))?;
+        }
+        // Step 3: receive the aggregates headed to our region from the
+        // regions we own, and scatter rows to the local destinations.
+        for &rg in owned.iter() {
+            let peer = members[rg][g % ppr];
+            comm.recv_into(peer, tag_xchg(rg, g), &mut got[..])?;
+            // got layout: [src j in rg][dst k in g]; row k goes to member k.
+            for (k, &dst) in members[g].iter().enumerate() {
+                for j in 0..ppr {
+                    let base = j * ppr * n + k * n;
+                    per_dst[j * n..(j + 1) * n].copy_from_slice(&got[base..base + n]);
+                }
+                if dst == id {
+                    for (j, &src) in members[rg].iter().enumerate() {
+                        output[src * n..(src + 1) * n]
+                            .copy_from_slice(&per_dst[j * n..(j + 1) * n]);
+                    }
+                } else {
+                    let _rq = comm.isend(per_dst, dst, tag_scatter(rg))?;
+                }
+            }
+        }
+        // Receive scattered rows for regions owned by other local ranks.
+        for rg in 0..r_n {
+            if rg == g || rg % ppr == l {
+                continue;
+            }
+            let owner = members[g][rg % ppr];
+            comm.recv_into(owner, tag_scatter(rg), &mut per_dst[..])?;
+            for (j, &src) in members[rg].iter().enumerate() {
+                output[src * n..(src + 1) * n].copy_from_slice(&per_dst[j * n..(j + 1) * n]);
+            }
+        }
+        Ok(())
     }
-    // receive scattered rows for regions owned by other local ranks
-    for rg in 0..r_n {
-        if rg == g || rg % ppr == l {
-            continue;
-        }
-        let owner = groups.members[g][rg % ppr];
-        let per_dst: Vec<T> = comm.irecv(owner, tag_scatter + rg as u64).wait(comm)?;
-        if per_dst.len() != ppr * n {
-            return Err(Error::SizeMismatch { expected: ppr * n, got: per_dst.len() });
-        }
-        for (j, &src) in groups.members[rg].iter().enumerate() {
-            out[src * n..(src + 1) * n].copy_from_slice(&per_dst[j * n..(j + 1) * n]);
-        }
-    }
-    let _ = local_comm;
-    Ok(out)
+}
+
+/// One-shot pairwise-exchange alltoall: plan + single execute.
+/// `send.len()` must be a multiple of the communicator size.
+pub fn pairwise<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_a2a(&PairwiseAlltoall, comm, send)
+}
+
+/// One-shot Bruck alltoall: plan + single execute.
+pub fn bruck<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_a2a(&BruckAlltoall, comm, send)
+}
+
+/// One-shot locality-aware alltoall: plan + single execute.
+pub fn loc_aware<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_a2a(&LocAwareAlltoall, comm, send)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::plan::AlltoallRegistry;
     use crate::comm::{CommWorld, Timing};
     use crate::topology::Topology;
 
@@ -344,5 +568,31 @@ mod tests {
             pairwise(c, &[1u64, 2]).is_err()
         });
         assert!(run.results.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn plan_reuse_with_shifting_inputs() {
+        let topo = Topology::regions(4, 2);
+        let p = topo.size();
+        let n = 2usize;
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = AlltoallRegistry::<u64>::standard();
+            for name in r.names() {
+                let mut plan = r.plan(name, c, Shape::elems(n)).unwrap();
+                assert_eq!(plan.algorithm(), name);
+                assert_eq!(plan.comm_size(), p);
+                let mut out = vec![0u64; n * p];
+                for round in 0..5u64 {
+                    let mine: Vec<u64> =
+                        send_buf(c.rank(), p, n).iter().map(|v| v + round).collect();
+                    plan.execute(&mine, &mut out).unwrap();
+                    let expect: Vec<u64> =
+                        want_buf(c.rank(), p, n).iter().map(|v| v + round).collect();
+                    assert_eq!(out, expect, "{name} round {round}");
+                }
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok));
     }
 }

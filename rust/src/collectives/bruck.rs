@@ -16,14 +16,17 @@
 //! every [`BruckPlan::execute`] reuses them. It doubles as the inner
 //! engine of the hierarchical, multi-lane and locality-aware plans.
 
-use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use super::plan::{
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
+    PlanCore, Shape,
+};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
 /// The standard Bruck algorithm (registry entry).
 pub struct Bruck;
 
-impl<T: Pod> CollectiveAlgorithm<T> for Bruck {
+impl NamedAlgorithm for Bruck {
     fn name(&self) -> &'static str {
         "bruck"
     }
@@ -31,7 +34,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for Bruck {
     fn summary(&self) -> &'static str {
         "standard Bruck allgather (paper Alg. 1): log2(p) steps, final rotation"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for Bruck {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("bruck", comm, shape) {
             return Ok(p);
@@ -49,11 +54,7 @@ struct Step {
 
 /// Persistent Bruck plan: schedule + tag block + rotated working buffer.
 pub struct BruckPlan<T: Pod> {
-    comm: Comm,
-    n: usize,
-    p: usize,
-    id: usize,
-    tag_base: u64,
+    core: PlanCore,
     steps: Vec<Step>,
     /// Working buffer in rotated order, length `n·p`.
     data: Vec<T>,
@@ -76,51 +77,49 @@ impl<T: Pod> BruckPlan<T> {
             });
             dist <<= 1;
         }
-        let tag_base = comm.reserve_coll_tags(steps.len() as u64);
         BruckPlan {
-            comm: comm.retain(),
-            n,
-            p,
-            id,
-            tag_base,
+            core: PlanCore::new(comm, n, steps.len() as u64),
             steps,
             data: vec![T::default(); n * p],
         }
     }
 }
 
-impl<T: Pod> AllgatherPlan<T> for BruckPlan<T> {
+impl<T: Pod> CollectivePlan for BruckPlan<T> {
     fn algorithm(&self) -> &'static str {
         "bruck"
     }
 
     fn shape(&self) -> Shape {
-        Shape { n: self.n }
+        Shape { n: self.core.n }
     }
 
     fn comm_size(&self) -> usize {
-        self.p
+        self.core.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for BruckPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_io(self.n, self.p, input, output)?;
-        if self.n == 0 {
+        let core = &self.core;
+        check_io(core.n, core.p, input, output)?;
+        if core.n == 0 {
             return Ok(());
         }
-        let n = self.n;
+        let n = core.n;
         self.data[..n].copy_from_slice(input);
         let mut filled = n;
         for (i, s) in self.steps.iter().enumerate() {
-            let tag = self.tag_base + i as u64;
-            let _send = self.comm.isend(&self.data[..s.blocks * n], s.send_to, tag)?;
+            let tag = core.tag(i as u64);
+            let _send = core.comm.isend(&self.data[..s.blocks * n], s.send_to, tag)?;
             // receive straight into the working buffer's tail (no
             // intermediate Vec)
-            let req = self.comm.irecv(s.recv_from, tag);
-            req.wait_into(&self.comm, &mut self.data[filled..filled + s.blocks * n])?;
+            let req = core.comm.irecv(s.recv_from, tag);
+            req.wait_into(&core.comm, &mut self.data[filled..filled + s.blocks * n])?;
             filled += s.blocks * n;
         }
-        debug_assert_eq!(filled, n * self.p);
-        rotate_down_into(&self.data, n, self.id, output);
+        debug_assert_eq!(filled, n * core.p);
+        rotate_down_into(&self.data, n, core.id, output);
         Ok(())
     }
 }

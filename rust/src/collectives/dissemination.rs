@@ -18,14 +18,17 @@
 
 use std::marker::PhantomData;
 
-use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use super::plan::{
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
+    Shape,
+};
 use crate::comm::{write_bytes, Comm, Pod};
 use crate::error::{Error, Result};
 
 /// The dissemination algorithm (registry entry).
 pub struct Dissemination;
 
-impl<T: Pod> CollectiveAlgorithm<T> for Dissemination {
+impl NamedAlgorithm for Dissemination {
     fn name(&self) -> &'static str {
         "dissemination"
     }
@@ -33,7 +36,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for Dissemination {
     fn summary(&self) -> &'static str {
         "dissemination allgather: log2(p) steps with per-block origin headers"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for Dissemination {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("dissemination", comm, shape) {
             return Ok(p);
@@ -94,7 +99,7 @@ impl<T: Pod> DisseminationPlan<T> {
     }
 }
 
-impl<T: Pod> AllgatherPlan<T> for DisseminationPlan<T> {
+impl<T: Pod> CollectivePlan for DisseminationPlan<T> {
     fn algorithm(&self) -> &'static str {
         "dissemination"
     }
@@ -106,7 +111,9 @@ impl<T: Pod> AllgatherPlan<T> for DisseminationPlan<T> {
     fn comm_size(&self) -> usize {
         self.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for DisseminationPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_io(self.n, self.p, input, output)?;
         if self.n == 0 {

@@ -13,7 +13,10 @@
 
 use super::grouping::{group_ranks, require_uniform, GroupBy};
 use super::bruck::BruckPlan;
-use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use super::plan::{
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
+    Shape,
+};
 use super::primitives::bcast_tree;
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
@@ -21,7 +24,7 @@ use crate::error::Result;
 /// The hierarchical algorithm (registry entry).
 pub struct Hierarchical;
 
-impl<T: Pod> CollectiveAlgorithm<T> for Hierarchical {
+impl NamedAlgorithm for Hierarchical {
     fn name(&self) -> &'static str {
         "hierarchical"
     }
@@ -29,7 +32,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for Hierarchical {
     fn summary(&self) -> &'static str {
         "gather to region master, Bruck among masters, local broadcast (Träff '06)"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for Hierarchical {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("hierarchical", comm, shape) {
             return Ok(p);
@@ -106,7 +111,7 @@ impl<T: Pod> HierarchicalPlan<T> {
     }
 }
 
-impl<T: Pod> AllgatherPlan<T> for HierarchicalPlan<T> {
+impl<T: Pod> CollectivePlan for HierarchicalPlan<T> {
     fn algorithm(&self) -> &'static str {
         "hierarchical"
     }
@@ -118,7 +123,9 @@ impl<T: Pod> AllgatherPlan<T> for HierarchicalPlan<T> {
     fn comm_size(&self) -> usize {
         self.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for HierarchicalPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_io(self.n, self.p, input, output)?;
         if self.n == 0 {

@@ -43,7 +43,8 @@
 use super::bruck::BruckPlan;
 use super::grouping::{group_ranks, require_uniform, GroupBy, Groups};
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, SelectedPlan, Shape,
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
+    SelectedPlan, Shape,
 };
 use super::primitives::AllgathervPlan;
 use crate::comm::{Comm, Pod};
@@ -74,7 +75,7 @@ pub enum Rank0 {
 /// Algorithm 2, single level (registry entry).
 pub struct LocalityBruck;
 
-impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruck {
+impl NamedAlgorithm for LocalityBruck {
     fn name(&self) -> &'static str {
         "loc-bruck"
     }
@@ -82,7 +83,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruck {
     fn summary(&self) -> &'static str {
         "locality-aware Bruck (paper Alg. 2): log_ppr(r) non-local steps"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruck {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("loc-bruck", comm, shape) {
             return Ok(p);
@@ -95,7 +98,7 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruck {
 /// Algorithm 2 with the paper's allgatherv alternative (registry entry).
 pub struct LocalityBruckV;
 
-impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckV {
+impl NamedAlgorithm for LocalityBruckV {
     fn name(&self) -> &'static str {
         "loc-bruck-v"
     }
@@ -103,7 +106,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckV {
     fn summary(&self) -> &'static str {
         "Alg. 2 with allgatherv local gathers (rank 0 contributes nothing)"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckV {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("loc-bruck-v", comm, shape) {
             return Ok(p);
@@ -117,7 +122,7 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckV {
 /// entry).
 pub struct LocalityBruckMultilevel;
 
-impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckMultilevel {
+impl NamedAlgorithm for LocalityBruckMultilevel {
     fn name(&self) -> &'static str {
         "loc-bruck-2level"
     }
@@ -125,7 +130,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckMultilevel {
     fn summary(&self) -> &'static str {
         "two-level Alg. 2: node-aware outer, socket-aware local gathers"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckMultilevel {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("loc-bruck-2level", comm, shape) {
             return Ok(p);
@@ -159,7 +166,7 @@ fn plan_grouped<T: Pod>(
         // and it idles). Degrade to the standard Bruck.
         return Ok(Box::new(SelectedPlan {
             name,
-            inner: Box::new(BruckPlan::<T>::new(comm, n)),
+            inner: Box::new(BruckPlan::<T>::new(comm, n)) as Box<dyn AllgatherPlan<T>>,
         }));
     }
     Ok(Box::new(LocBruckPlan::<T>::new(comm, n, groups, inner, rank0, name)?))
@@ -355,7 +362,7 @@ impl<T: Pod> LocBruckPlan<T> {
     }
 }
 
-impl<T: Pod> AllgatherPlan<T> for LocBruckPlan<T> {
+impl<T: Pod> CollectivePlan for LocBruckPlan<T> {
     fn algorithm(&self) -> &'static str {
         self.name
     }
@@ -367,7 +374,9 @@ impl<T: Pod> AllgatherPlan<T> for LocBruckPlan<T> {
     fn comm_size(&self) -> usize {
         self.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for LocBruckPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_io(self.n, self.p, input, output)?;
         let (n, re, r_n, g, l) = (self.n, self.region_elems, self.r_n, self.g, self.l);

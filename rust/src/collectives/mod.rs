@@ -42,14 +42,26 @@
 //! | [`hierarchical`] | `hierarchical` | master-per-region gather + Bruck + bcast (Träff '06) | related-work baseline |
 //! | [`multilane`] | `multilane` | per-lane inter-region Bruck + local allgather (Träff & Hunold '20) | related-work baseline |
 //! | [`loc_bruck`] | `loc-bruck`, `loc-bruck-v`, `loc-bruck-2level` | **locality-aware Bruck (Alg. 2)**, incl. multilevel and non-power region counts | the contribution |
-//! | [`dispatch`] | `system-default` | size/shape-based selection (Thakur et al.) | "system MPI" baseline |
-//! | [`plan`] | — | `AllgatherPlan` / `CollectiveAlgorithm` traits, [`Registry`] | persistent API substrate |
+//! | [`dispatch`] | `system-default` (allgather + alltoall) | size/shape-based selection (Thakur et al.) | "system MPI" baseline |
+//! | [`plan`] | — | op-generic plan framework: [`CollectivePlan`], per-op traits, [`OpRegistry`] | persistent API substrate |
 //! | [`primitives`] | — | gather / bcast / allgatherv (+ [`primitives::AllgathervPlan`]) | substrate |
-//! | [`allreduce`] | — | locality-aware allreduce | §6 future-work extension |
+//! | [`allreduce`] | `recursive-doubling`, `loc-aware` | planned allreduce (sum) | §6 extension |
+//! | [`alltoall`] | `system-default`, `pairwise`, `bruck`, `loc-aware` | planned alltoall | §6 extension |
+//!
+//! ## The other operations
+//!
+//! The same plan-once/execute-many framework covers the §6 extensions:
+//! [`AllreduceRegistry`] plans [`AllreducePlan`]s (elementwise sum) and
+//! [`AlltoallRegistry`] plans [`AlltoallPlan`]s (personalized exchange).
+//! All three registries share the [`OpRegistry`] machinery and every plan
+//! implements the [`CollectivePlan`] base trait; `locag algos` lists all
+//! of them and `locag run --op <op>` executes any (op, algorithm) pair.
 //!
 //! New algorithms (or backend-specific overrides) implement
-//! [`CollectiveAlgorithm`] and [`Registry::register`] themselves — no
-//! dispatch `match` to touch.
+//! [`NamedAlgorithm`] plus the per-op factory trait
+//! ([`CollectiveAlgorithm`], [`AllreduceAlgorithm`] or
+//! [`AlltoallAlgorithm`]) and register themselves — no dispatch `match`
+//! to touch.
 
 pub mod allreduce;
 pub mod alltoall;
@@ -65,7 +77,11 @@ pub mod primitives;
 pub mod recursive_doubling;
 pub mod ring;
 
-pub use plan::{AllgatherPlan, CollectiveAlgorithm, Registry, Shape};
+pub use plan::{
+    AllgatherPlan, AllreduceAlgorithm, AllreducePlan, AllreduceRegistry, AlltoallAlgorithm,
+    AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm, OpKind,
+    OpRegistry, Registry, Shape, Summable,
+};
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -195,6 +211,26 @@ pub fn allgather<T: Pod>(algo: Algorithm, comm: &Comm, local: &[T]) -> Result<Ve
     let registry = Registry::<T>::standard();
     let a = registry.get(algo.name()).expect("every built-in algorithm is registered");
     plan::one_shot(a, comm, local)
+}
+
+/// Collectively build a persistent allreduce plan by registry name
+/// (case-insensitive; see [`AllreduceRegistry::standard`] for the names).
+pub fn plan_allreduce<T: Summable>(
+    name: &str,
+    comm: &Comm,
+    shape: Shape,
+) -> Result<Box<dyn AllreducePlan<T>>> {
+    AllreduceRegistry::standard().plan(name, comm, shape)
+}
+
+/// Collectively build a persistent alltoall plan by registry name
+/// (case-insensitive; see [`AlltoallRegistry::standard`] for the names).
+pub fn plan_alltoall<T: Pod>(
+    name: &str,
+    comm: &Comm,
+    shape: Shape,
+) -> Result<Box<dyn AlltoallPlan<T>>> {
+    AlltoallRegistry::standard().plan(name, comm, shape)
 }
 
 /// The expected allgather result for verification: every rank's canonical

@@ -14,14 +14,17 @@
 
 use super::bruck::BruckPlan;
 use super::grouping::{group_ranks, require_uniform, GroupBy};
-use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use super::plan::{
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
+    Shape,
+};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
 /// The multi-lane algorithm (registry entry).
 pub struct Multilane;
 
-impl<T: Pod> CollectiveAlgorithm<T> for Multilane {
+impl NamedAlgorithm for Multilane {
     fn name(&self) -> &'static str {
         "multilane"
     }
@@ -29,7 +32,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for Multilane {
     fn summary(&self) -> &'static str {
         "per-lane inter-region Bruck then local allgather (Träff & Hunold '20)"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for Multilane {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("multilane", comm, shape) {
             return Ok(p);
@@ -113,7 +118,7 @@ impl<T: Pod> MultilanePlan<T> {
     }
 }
 
-impl<T: Pod> AllgatherPlan<T> for MultilanePlan<T> {
+impl<T: Pod> CollectivePlan for MultilanePlan<T> {
     fn algorithm(&self) -> &'static str {
         "multilane"
     }
@@ -125,7 +130,9 @@ impl<T: Pod> AllgatherPlan<T> for MultilanePlan<T> {
     fn comm_size(&self) -> usize {
         self.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for MultilanePlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_io(self.n, self.p, input, output)?;
         if self.n == 0 {

@@ -1,54 +1,133 @@
-//! Persistent planned collectives — the crate's analogue of MPI-4
-//! `MPI_Allgather_init`.
+//! Persistent planned collectives — the crate's analogue of the MPI-4
+//! `MPI_*_init` persistent-collective family, generalized over operations.
 //!
-//! A [`CollectiveAlgorithm`] is a stateless algorithm description that can
-//! *plan* an allgather for a concrete `(communicator, shape)` pair. The
-//! resulting [`AllgatherPlan`] owns everything the hot path needs —
-//! retained (sub-)communicator handles, rotation/step schedules,
-//! pre-reserved collective tag blocks and scratch buffers — so that
-//! [`AllgatherPlan::execute`] performs **zero setup work and zero
-//! output/scratch allocation**: no group derivation, no sub-communicator
-//! construction, no tag allocation, no `Vec` growth.
+//! The framework has three layers:
 //!
-//! ## Contract
+//! 1. **A shared core.** [`CollectivePlan`] is the operation-independent
+//!    face of every plan (algorithm name, communicator size, planned
+//!    shape); [`PlanCore`] is the state every concrete plan embeds —
+//!    a retained communicator handle, the planned shape, and a
+//!    pre-reserved block of collective tags. Shape validation
+//!    ([`check_io`] and friends), the uniform zero-length short-circuit
+//!    ([`EmptyPlan`]) and name-delegation ([`SelectedPlan`]) are shared.
+//! 2. **Per-operation traits.** [`AllgatherPlan`], [`AllreducePlan`] and
+//!    [`AlltoallPlan`] extend [`CollectivePlan`] with the operation's
+//!    `execute` contract; [`CollectiveAlgorithm`], [`AllreduceAlgorithm`]
+//!    and [`AlltoallAlgorithm`] are the matching algorithm factories, all
+//!    sharing [`NamedAlgorithm`] for registry identity.
+//! 3. **Per-operation registries.** [`OpRegistry`] maps case-insensitive
+//!    names to factories for one operation; [`Registry`] (allgather),
+//!    [`AllreduceRegistry`] and [`AlltoallRegistry`] are its concrete
+//!    instantiations, each with a `standard()` catalog and a `plan()`
+//!    front door.
+//!
+//! A plan owns everything the hot path needs — retained (sub-)communicator
+//! handles, rotation/step schedules, pre-reserved collective tag blocks
+//! and scratch buffers — so that `execute` performs **zero setup work and
+//! zero output/scratch allocation**: no group derivation, no
+//! sub-communicator construction, no tag allocation, no `Vec` growth.
+//!
+//! ## Contract (all operations)
 //!
 //! * Planning is collective: every rank of the communicator must call
 //!   `plan` with the same algorithm and [`Shape`], in the same program
-//!   order relative to other collectives (exactly like
-//!   `MPI_Allgather_init`).
-//! * `execute(input, output)` requires `input.len() == shape.n` and
-//!   `output.len() == shape.n * p`; on success `output[r*n..(r+1)*n]`
-//!   holds rank `r`'s contribution for every `r` (communicator rank
-//!   order). Both buffers are caller-owned.
+//!   order relative to other collectives (exactly like `MPI_*_init`).
+//! * Shape preconditions (power-of-two sizes, uniform groups, …) are
+//!   checked **at plan time** — a successfully built plan never fails an
+//!   execute for a shape reason. Buffer-length mismatches are still
+//!   reported per execute.
 //! * Executions are collective and must be issued in the same order on
 //!   every rank. Interleaving executions of *different* plans is safe as
 //!   long as that global order holds (tag blocks are disjoint per plan;
 //!   matching is FIFO per `(src, ctx, tag)`).
-//! * **Zero-length contributions** (`shape.n == 0`) are uniform across all
-//!   algorithms: planning yields a no-op plan whose `execute` sends no
-//!   messages and succeeds with an empty output.
+//! * **Zero-length shapes** (`shape.n == 0`) are uniform across all
+//!   operations and algorithms: planning yields a no-op plan (bypassing
+//!   even shape preconditions) whose `execute` sends no messages and
+//!   succeeds with an empty output.
 //! * A plan never consumes communicator state after planning: the parent's
 //!   [`crate::comm::Comm::next_coll_tag`] sequence is unaffected by any
 //!   number of executions.
 //!
-//! ## Registry
+//! ## Per-operation buffer contracts
 //!
-//! [`Registry`] maps case-insensitive names to algorithm factories. New
-//! algorithms (or alternative backends) register without touching any
-//! dispatch `match`; the last registration of a name wins, so a backend
-//! can override a built-in.
+//! With `p = comm_size()` and `n = shape().n`:
+//!
+//! | operation | input | output |
+//! |---|---|---|
+//! | allgather | this rank's `n` elements | `n·p`; block `r` is rank `r`'s data |
+//! | allreduce | this rank's `n` elements | `n`; elementwise sum over ranks |
+//! | alltoall | `n·p`; block `j` goes to rank `j` | `n·p`; block `r` came from rank `r` |
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
 
-use super::{bruck, dispatch, dissemination, hierarchical, loc_bruck, multilane};
-use super::{recursive_doubling, ring};
+use super::{allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
+use super::{loc_bruck, multilane, recursive_doubling, ring};
 
-/// Shape of one allgather: the per-rank contribution length in elements.
-/// (The rank count comes from the communicator at plan time.)
+/// Element types that can be summed — the reduction of the allreduce
+/// operation (the paper's allreduce reference [4] reduces with `MPI_SUM`).
+pub trait Summable: Pod + std::ops::Add<Output = Self> {}
+impl Summable for u32 {}
+impl Summable for u64 {}
+impl Summable for i32 {}
+impl Summable for i64 {}
+impl Summable for f32 {}
+impl Summable for f64 {}
+
+/// The collective operations the planned framework covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Gather every rank's contribution everywhere (the paper's subject).
+    Allgather,
+    /// Elementwise sum across ranks, result everywhere (§6 extension).
+    Allreduce,
+    /// Personalized exchange: block `j` of rank `i` moves to rank `j`
+    /// (§6 extension; the op Bruck '97 was designed for).
+    Alltoall,
+}
+
+impl OpKind {
+    /// All operations, in presentation order.
+    pub const ALL: [OpKind; 3] = [OpKind::Allgather, OpKind::Allreduce, OpKind::Alltoall];
+
+    /// CLI / CSV name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Allgather => "allgather",
+            OpKind::Allreduce => "allreduce",
+            OpKind::Alltoall => "alltoall",
+        }
+    }
+
+    /// Parse a CLI name, case-insensitively.
+    pub fn parse(s: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|o| o.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Parse a CLI name; unknown names error with the valid list.
+    pub fn parse_or_err(s: &str) -> Result<OpKind> {
+        OpKind::parse(s).ok_or_else(|| {
+            Error::Precondition(format!(
+                "unknown operation '{s}' (valid: {})",
+                OpKind::ALL.iter().map(|o| o.name()).collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+}
+
+impl std::fmt::Display for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Shape of one planned collective: the per-rank element count `n` (see
+/// the module docs for what `n` means per operation — contribution length
+/// for allgather/allreduce, per-destination block length for alltoall).
+/// The rank count comes from the communicator at plan time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Shape {
-    /// Elements contributed by every rank.
+    /// Elements per rank (per destination block, for alltoall).
     pub n: usize,
 }
 
@@ -59,29 +138,9 @@ impl Shape {
     }
 }
 
-/// A prepared allgather: setup amortized at plan time, executed many times.
-///
-/// See the [module docs](self) for the full contract (collectivity,
-/// buffer lengths, zero-length handling).
-pub trait AllgatherPlan<T: Pod> {
-    /// Registry name of the algorithm that produced this plan.
-    fn algorithm(&self) -> &'static str;
-
-    /// The planned per-rank contribution shape.
-    fn shape(&self) -> Shape;
-
-    /// Rank count of the planned communicator.
-    fn comm_size(&self) -> usize;
-
-    /// Run the communication: gather `input` (length `shape().n`) from
-    /// every rank into `output` (length `shape().n * comm_size()`), in
-    /// communicator rank order. No allocation, no sub-communicator
-    /// construction, no tag consumption.
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
-}
-
-/// An allgather algorithm that can produce persistent plans.
-pub trait CollectiveAlgorithm<T: Pod>: Send + Sync {
+/// Registry identity shared by every algorithm factory, whatever the
+/// operation: the case-insensitive lookup name and a one-line summary.
+pub trait NamedAlgorithm: Send + Sync {
     /// Registry / CLI / CSV name.
     fn name(&self) -> &'static str;
 
@@ -89,12 +148,107 @@ pub trait CollectiveAlgorithm<T: Pod>: Send + Sync {
     fn summary(&self) -> &'static str {
         ""
     }
+}
 
+/// The operation-independent face of a prepared collective: identity and
+/// planned geometry. Per-operation `execute` methods live on the
+/// sub-traits ([`AllgatherPlan`], [`AllreducePlan`], [`AlltoallPlan`]).
+pub trait CollectivePlan {
+    /// Registry name of the algorithm that produced this plan.
+    fn algorithm(&self) -> &'static str;
+
+    /// The planned per-rank shape.
+    fn shape(&self) -> Shape;
+
+    /// Rank count of the planned communicator.
+    fn comm_size(&self) -> usize;
+}
+
+/// A prepared allgather: gather `input` (length `shape().n`) from every
+/// rank into `output` (length `shape().n * comm_size()`), in communicator
+/// rank order. `shape().n == 0` plans are no-ops (empty output, no
+/// messages). See the [module docs](self) for the full contract.
+pub trait AllgatherPlan<T: Pod>: CollectivePlan {
+    /// Run the communication. No allocation, no sub-communicator
+    /// construction, no tag consumption.
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+}
+
+/// A prepared allreduce: elementwise-sum `input` (length `shape().n`)
+/// across all ranks into `output` (length `shape().n`) on every rank.
+/// `shape().n == 0` plans are no-ops (empty output, no messages). See the
+/// [module docs](self) for the full contract.
+pub trait AllreducePlan<T: Summable>: CollectivePlan {
+    /// Run the communication + reduction. No allocation, no
+    /// sub-communicator construction, no tag consumption.
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+}
+
+/// A prepared alltoall: `input` holds `comm_size()` blocks of `shape().n`
+/// elements, block `j` destined for rank `j`; on success `output` block
+/// `r` holds the block rank `r` sent here (`MPI_Alltoall` semantics).
+/// `shape().n == 0` plans are no-ops (empty output, no messages). See the
+/// [module docs](self) for the full contract.
+pub trait AlltoallPlan<T: Pod>: CollectivePlan {
+    /// Run the exchange. No allocation, no sub-communicator construction,
+    /// no tag consumption.
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+}
+
+/// An allgather algorithm that can produce persistent plans.
+pub trait CollectiveAlgorithm<T: Pod>: NamedAlgorithm {
     /// Collectively build a plan for `shape` over `comm`.
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>>;
 }
 
-/// Validate the execute-time buffer contract.
+/// An allreduce (sum) algorithm that can produce persistent plans.
+pub trait AllreduceAlgorithm<T: Summable>: NamedAlgorithm {
+    /// Collectively build a plan for `shape` over `comm`.
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>>;
+}
+
+/// An alltoall algorithm that can produce persistent plans.
+pub trait AlltoallAlgorithm<T: Pod>: NamedAlgorithm {
+    /// Collectively build a plan for `shape` over `comm`.
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>>;
+}
+
+/// The state every concrete plan embeds: a retained communicator handle,
+/// the planned geometry and a pre-reserved collective tag block. Building
+/// a `PlanCore` is collective (all ranks must reserve the same `tags`
+/// count at the same point, like all plan construction).
+pub(crate) struct PlanCore {
+    /// Retained handle; valid for the pre-reserved tags only.
+    pub comm: Comm,
+    /// Planned per-rank element count.
+    pub n: usize,
+    /// Communicator size at plan time.
+    pub p: usize,
+    /// This rank within the planned communicator.
+    pub id: usize,
+    tag_base: u64,
+}
+
+impl PlanCore {
+    /// Retain `comm` and reserve a block of `tags` collective tags.
+    pub fn new(comm: &Comm, n: usize, tags: u64) -> PlanCore {
+        PlanCore {
+            tag_base: comm.reserve_coll_tags(tags),
+            comm: comm.retain(),
+            n,
+            p: comm.size(),
+            id: comm.rank(),
+        }
+    }
+
+    /// The `i`-th tag of the reserved block.
+    pub fn tag(&self, i: u64) -> u64 {
+        self.tag_base + i
+    }
+}
+
+/// Validate the allgather execute-time buffer contract
+/// (`input: n`, `output: n·p`).
 pub(crate) fn check_io<T: Pod>(n: usize, p: usize, input: &[T], output: &[T]) -> Result<()> {
     if input.len() != n {
         return Err(Error::SizeMismatch { expected: n, got: input.len() });
@@ -105,13 +259,38 @@ pub(crate) fn check_io<T: Pod>(n: usize, p: usize, input: &[T], output: &[T]) ->
     Ok(())
 }
 
-/// The uniform `n == 0` plan: no communication, empty output.
+/// Validate the allreduce execute-time buffer contract
+/// (`input: n`, `output: n`).
+pub(crate) fn check_reduce_io<T: Pod>(n: usize, input: &[T], output: &[T]) -> Result<()> {
+    if input.len() != n {
+        return Err(Error::SizeMismatch { expected: n, got: input.len() });
+    }
+    if output.len() != n {
+        return Err(Error::SizeMismatch { expected: n, got: output.len() });
+    }
+    Ok(())
+}
+
+/// Validate the alltoall execute-time buffer contract
+/// (`input: n·p`, `output: n·p`).
+pub(crate) fn check_a2a_io<T: Pod>(n: usize, p: usize, input: &[T], output: &[T]) -> Result<()> {
+    if input.len() != n * p {
+        return Err(Error::SizeMismatch { expected: n * p, got: input.len() });
+    }
+    if output.len() != n * p {
+        return Err(Error::SizeMismatch { expected: n * p, got: output.len() });
+    }
+    Ok(())
+}
+
+/// The uniform `n == 0` plan for every operation: no communication, empty
+/// output. One struct serves all three ops (all buffers are empty).
 pub(crate) struct EmptyPlan {
     pub name: &'static str,
     pub p: usize,
 }
 
-impl<T: Pod> AllgatherPlan<T> for EmptyPlan {
+impl CollectivePlan for EmptyPlan {
     fn algorithm(&self) -> &'static str {
         self.name
     }
@@ -123,14 +302,29 @@ impl<T: Pod> AllgatherPlan<T> for EmptyPlan {
     fn comm_size(&self) -> usize {
         self.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for EmptyPlan {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_io(0, self.p, input, output)
     }
 }
 
-/// Factory helper: the shared zero-length short-circuit. Every algorithm's
-/// `plan` starts with this so the `n == 0` contract is uniform.
+impl<T: Summable> AllreducePlan<T> for EmptyPlan {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_reduce_io(0, input, output)
+    }
+}
+
+impl<T: Pod> AlltoallPlan<T> for EmptyPlan {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_a2a_io(0, self.p, input, output)
+    }
+}
+
+/// Factory helper: the shared zero-length short-circuit for allgather
+/// factories. Every algorithm's `plan` starts with this so the `n == 0`
+/// contract is uniform.
 pub(crate) fn trivial_plan<T: Pod>(
     name: &'static str,
     comm: &Comm,
@@ -143,9 +337,35 @@ pub(crate) fn trivial_plan<T: Pod>(
     }
 }
 
-/// Shared body of every one-shot wrapper: plan once, allocate the output,
-/// execute once. The `n == 0` no-op contract is inherited from the
-/// algorithm's factory (every factory starts with [`trivial_plan`]).
+/// Zero-length short-circuit for allreduce factories.
+pub(crate) fn trivial_reduce_plan<T: Summable>(
+    name: &'static str,
+    comm: &Comm,
+    shape: Shape,
+) -> Option<Box<dyn AllreducePlan<T>>> {
+    if shape.n == 0 {
+        Some(Box::new(EmptyPlan { name, p: comm.size() }))
+    } else {
+        None
+    }
+}
+
+/// Zero-length short-circuit for alltoall factories.
+pub(crate) fn trivial_a2a_plan<T: Pod>(
+    name: &'static str,
+    comm: &Comm,
+    shape: Shape,
+) -> Option<Box<dyn AlltoallPlan<T>>> {
+    if shape.n == 0 {
+        Some(Box::new(EmptyPlan { name, p: comm.size() }))
+    } else {
+        None
+    }
+}
+
+/// Shared body of every allgather one-shot wrapper: plan once, allocate
+/// the output, execute once. The `n == 0` no-op contract is inherited from
+/// the algorithm's factory (every factory starts with [`trivial_plan`]).
 pub(crate) fn one_shot<T: Pod>(
     algo: &dyn CollectiveAlgorithm<T>,
     comm: &Comm,
@@ -157,14 +377,47 @@ pub(crate) fn one_shot<T: Pod>(
     Ok(out)
 }
 
-/// A plan delegating to another plan under a different reported name
-/// (dispatch selection, degenerate-topology fallbacks).
-pub(crate) struct SelectedPlan<T: Pod> {
-    pub name: &'static str,
-    pub inner: Box<dyn AllgatherPlan<T>>,
+/// Shared body of every allreduce one-shot wrapper.
+pub(crate) fn one_shot_reduce<T: Summable>(
+    algo: &dyn AllreduceAlgorithm<T>,
+    comm: &Comm,
+    local: &[T],
+) -> Result<Vec<T>> {
+    let mut plan = algo.plan(comm, Shape::elems(local.len()))?;
+    let mut out = vec![T::default(); local.len()];
+    plan.execute(local, &mut out)?;
+    Ok(out)
 }
 
-impl<T: Pod> AllgatherPlan<T> for SelectedPlan<T> {
+/// Shared body of every alltoall one-shot wrapper: `send.len()` must be a
+/// multiple of the communicator size (block length inferred).
+pub(crate) fn one_shot_a2a<T: Pod>(
+    algo: &dyn AlltoallAlgorithm<T>,
+    comm: &Comm,
+    send: &[T],
+) -> Result<Vec<T>> {
+    let p = comm.size();
+    if send.len() % p != 0 {
+        return Err(Error::SizeMismatch {
+            expected: (send.len() / p.max(1)) * p,
+            got: send.len(),
+        });
+    }
+    let mut plan = algo.plan(comm, Shape::elems(send.len() / p))?;
+    let mut out = vec![T::default(); send.len()];
+    plan.execute(send, &mut out)?;
+    Ok(out)
+}
+
+/// A plan delegating to another plan under a different reported name
+/// (dispatch selection, degenerate-topology fallbacks). Generic over the
+/// per-operation plan trait object.
+pub(crate) struct SelectedPlan<P: ?Sized> {
+    pub name: &'static str,
+    pub inner: Box<P>,
+}
+
+impl<P: ?Sized + CollectivePlan> CollectivePlan for SelectedPlan<P> {
     fn algorithm(&self) -> &'static str {
         self.name
     }
@@ -176,45 +429,51 @@ impl<T: Pod> AllgatherPlan<T> for SelectedPlan<T> {
     fn comm_size(&self) -> usize {
         self.inner.comm_size()
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for SelectedPlan<dyn AllgatherPlan<T>> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         self.inner.execute(input, output)
     }
 }
 
-/// Name → algorithm-factory registry.
+impl<T: Summable> AllreducePlan<T> for SelectedPlan<dyn AllreducePlan<T>> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        self.inner.execute(input, output)
+    }
+}
+
+impl<T: Pod> AlltoallPlan<T> for SelectedPlan<dyn AlltoallPlan<T>> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        self.inner.execute(input, output)
+    }
+}
+
+/// Name → algorithm-factory registry for one operation.
 ///
 /// Lookup is case-insensitive; the *last* registration of a name wins so
 /// callers can override built-ins (e.g. swap in a backend-specific
-/// implementation) without touching dispatch code.
-pub struct Registry<T: Pod> {
-    entries: Vec<Box<dyn CollectiveAlgorithm<T>>>,
+/// implementation) without touching dispatch code. [`Registry`],
+/// [`AllreduceRegistry`] and [`AlltoallRegistry`] are the concrete
+/// per-operation instantiations.
+pub struct OpRegistry<A: ?Sized + NamedAlgorithm> {
+    op: OpKind,
+    entries: Vec<Box<A>>,
 }
 
-impl<T: Pod> Registry<T> {
-    /// An empty registry.
-    pub fn empty() -> Registry<T> {
-        Registry { entries: Vec::new() }
+impl<A: ?Sized + NamedAlgorithm> OpRegistry<A> {
+    /// An empty registry for `op`.
+    pub fn new(op: OpKind) -> OpRegistry<A> {
+        OpRegistry { op, entries: Vec::new() }
     }
 
-    /// The ten built-in algorithms, in the order the figures report them.
-    pub fn standard() -> Registry<T> {
-        let mut r = Registry::empty();
-        r.register(Box::new(dispatch::SystemDefault));
-        r.register(Box::new(bruck::Bruck));
-        r.register(Box::new(ring::Ring));
-        r.register(Box::new(recursive_doubling::RecursiveDoubling));
-        r.register(Box::new(dissemination::Dissemination));
-        r.register(Box::new(hierarchical::Hierarchical));
-        r.register(Box::new(multilane::Multilane));
-        r.register(Box::new(loc_bruck::LocalityBruck));
-        r.register(Box::new(loc_bruck::LocalityBruckV));
-        r.register(Box::new(loc_bruck::LocalityBruckMultilevel));
-        r
+    /// The operation this registry plans.
+    pub fn op(&self) -> OpKind {
+        self.op
     }
 
     /// Add (or override) an algorithm.
-    pub fn register(&mut self, algo: Box<dyn CollectiveAlgorithm<T>>) {
+    pub fn register(&mut self, algo: Box<A>) {
         self.entries.push(algo);
     }
 
@@ -230,7 +489,7 @@ impl<T: Pod> Registry<T> {
     }
 
     /// Look up an algorithm by case-insensitive name (latest wins).
-    pub fn get(&self, name: &str) -> Option<&dyn CollectiveAlgorithm<T>> {
+    pub fn get(&self, name: &str) -> Option<&A> {
         self.entries
             .iter()
             .rev()
@@ -246,14 +505,103 @@ impl<T: Pod> Registry<T> {
             .collect()
     }
 
+    /// The unknown-name error, listing every valid name for this op.
+    fn unknown(&self, name: &str) -> Error {
+        Error::Precondition(format!(
+            "unknown {} algorithm '{name}' (valid: {})",
+            self.op,
+            self.names().join(", ")
+        ))
+    }
+}
+
+/// The allgather registry (kept under its PR-1 name: the allgather is the
+/// paper's subject and the crate's original registry).
+pub type Registry<T> = OpRegistry<dyn CollectiveAlgorithm<T>>;
+
+/// The allreduce registry.
+pub type AllreduceRegistry<T> = OpRegistry<dyn AllreduceAlgorithm<T>>;
+
+/// The alltoall registry.
+pub type AlltoallRegistry<T> = OpRegistry<dyn AlltoallAlgorithm<T>>;
+
+impl<T: Pod> Registry<T> {
+    /// An empty allgather registry.
+    pub fn empty() -> Registry<T> {
+        OpRegistry::new(OpKind::Allgather)
+    }
+
+    /// The ten built-in allgathers, in the order the figures report them.
+    pub fn standard() -> Registry<T> {
+        let mut r = Registry::empty();
+        r.register(Box::new(dispatch::SystemDefault));
+        r.register(Box::new(bruck::Bruck));
+        r.register(Box::new(ring::Ring));
+        r.register(Box::new(recursive_doubling::RecursiveDoubling));
+        r.register(Box::new(dissemination::Dissemination));
+        r.register(Box::new(hierarchical::Hierarchical));
+        r.register(Box::new(multilane::Multilane));
+        r.register(Box::new(loc_bruck::LocalityBruck));
+        r.register(Box::new(loc_bruck::LocalityBruckV));
+        r.register(Box::new(loc_bruck::LocalityBruckMultilevel));
+        r
+    }
+
     /// Plan by name. Unknown names report the full list of valid names.
     pub fn plan(&self, name: &str, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         match self.get(name) {
             Some(a) => a.plan(comm, shape),
-            None => Err(Error::Precondition(format!(
-                "unknown algorithm '{name}' (valid: {})",
-                self.names().join(", ")
-            ))),
+            None => Err(self.unknown(name)),
+        }
+    }
+}
+
+impl<T: Summable> AllreduceRegistry<T> {
+    /// An empty allreduce registry.
+    pub fn empty() -> AllreduceRegistry<T> {
+        OpRegistry::new(OpKind::Allreduce)
+    }
+
+    /// The built-in allreduces: recursive doubling and the §6
+    /// locality-aware regional variant.
+    pub fn standard() -> AllreduceRegistry<T> {
+        let mut r = AllreduceRegistry::empty();
+        r.register(Box::new(allreduce::RecursiveDoublingAllreduce));
+        r.register(Box::new(allreduce::LocalityAwareAllreduce));
+        r
+    }
+
+    /// Plan by name. Unknown names report the full list of valid names.
+    pub fn plan(&self, name: &str, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
+        match self.get(name) {
+            Some(a) => a.plan(comm, shape),
+            None => Err(self.unknown(name)),
+        }
+    }
+}
+
+impl<T: Pod> AlltoallRegistry<T> {
+    /// An empty alltoall registry.
+    pub fn empty() -> AlltoallRegistry<T> {
+        OpRegistry::new(OpKind::Alltoall)
+    }
+
+    /// The built-in alltoalls: MPICH-style dispatch, pairwise, Bruck and
+    /// the §6 locality-aware aggregation variant.
+    pub fn standard() -> AlltoallRegistry<T> {
+        let mut r = AlltoallRegistry::empty();
+        r.register(Box::new(dispatch::SystemDefaultAlltoall));
+        r.register(Box::new(alltoall::PairwiseAlltoall));
+        r.register(Box::new(alltoall::BruckAlltoall));
+        r.register(Box::new(alltoall::LocAwareAlltoall));
+        r
+    }
+
+    /// Plan by name. Unknown names report the full list of valid names.
+    pub fn plan(&self, name: &str, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
+        match self.get(name) {
+            Some(a) => a.plan(comm, shape),
+            None => Err(self.unknown(name)),
         }
     }
 }
@@ -261,6 +609,18 @@ impl<T: Pod> Registry<T> {
 impl<T: Pod> Default for Registry<T> {
     fn default() -> Self {
         Registry::standard()
+    }
+}
+
+impl<T: Summable> Default for AllreduceRegistry<T> {
+    fn default() -> Self {
+        AllreduceRegistry::standard()
+    }
+}
+
+impl<T: Pod> Default for AlltoallRegistry<T> {
+    fn default() -> Self {
+        AlltoallRegistry::standard()
     }
 }
 
@@ -286,11 +646,40 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_and_alltoall_registries_have_catalogs() {
+        let r = AllreduceRegistry::<u64>::standard();
+        assert_eq!(r.op(), OpKind::Allreduce);
+        assert_eq!(r.names(), vec!["recursive-doubling", "loc-aware"]);
+        for (name, summary) in r.catalog() {
+            assert!(!summary.is_empty(), "{name} has no summary");
+        }
+        let r = AlltoallRegistry::<u64>::standard();
+        assert_eq!(r.op(), OpKind::Alltoall);
+        assert_eq!(r.names(), vec!["system-default", "pairwise", "bruck", "loc-aware"]);
+        for (name, summary) in r.catalog() {
+            assert!(!summary.is_empty(), "{name} has no summary");
+        }
+    }
+
+    #[test]
+    fn op_kind_names_roundtrip() {
+        for op in OpKind::ALL {
+            assert_eq!(OpKind::parse(op.name()), Some(op));
+            assert_eq!(OpKind::parse(&op.name().to_uppercase()), Some(op));
+        }
+        assert_eq!(OpKind::parse("nope"), None);
+        let err = OpKind::parse_or_err("warp").unwrap_err().to_string();
+        assert!(err.contains("allgather") && err.contains("alltoall"), "{err}");
+    }
+
+    #[test]
     fn lookup_is_case_insensitive() {
         let r = Registry::<u32>::standard();
         assert!(r.get("LOC-BRUCK").is_some());
         assert!(r.get("Bruck").is_some());
         assert!(r.get("nope").is_none());
+        let r = AlltoallRegistry::<u32>::standard();
+        assert!(r.get("PAIRWISE").is_some());
     }
 
     #[test]
@@ -298,15 +687,24 @@ mod tests {
         let topo = Topology::regions(1, 2);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = Registry::<u32>::standard();
-            match r.plan("warp-drive", c, Shape::elems(1)) {
+            let ag = match r.plan("warp-drive", c, Shape::elems(1)) {
                 Err(e) => e.to_string(),
                 Ok(_) => String::new(),
-            }
+            };
+            let r = AllreduceRegistry::<u32>::standard();
+            let ar = match r.plan("warp-drive", c, Shape::elems(1)) {
+                Err(e) => e.to_string(),
+                Ok(_) => String::new(),
+            };
+            (ag, ar)
         });
-        for msg in &run.results {
-            assert!(msg.contains("warp-drive"), "{msg}");
-            assert!(msg.contains("loc-bruck"), "{msg}");
-            assert!(msg.contains("ring"), "{msg}");
+        for (ag, ar) in &run.results {
+            assert!(ag.contains("warp-drive"), "{ag}");
+            assert!(ag.contains("allgather"), "{ag}");
+            assert!(ag.contains("loc-bruck"), "{ag}");
+            assert!(ag.contains("ring"), "{ag}");
+            assert!(ar.contains("allreduce"), "{ar}");
+            assert!(ar.contains("recursive-doubling"), "{ar}");
         }
     }
 
@@ -337,13 +735,15 @@ mod tests {
     #[test]
     fn late_registration_overrides_builtin() {
         struct Fake;
-        impl CollectiveAlgorithm<u32> for Fake {
+        impl NamedAlgorithm for Fake {
             fn name(&self) -> &'static str {
                 "ring"
             }
             fn summary(&self) -> &'static str {
                 "fake ring"
             }
+        }
+        impl CollectiveAlgorithm<u32> for Fake {
             fn plan(&self, comm: &Comm, _shape: Shape) -> Result<Box<dyn AllgatherPlan<u32>>> {
                 Ok(Box::new(EmptyPlan { name: "ring", p: comm.size() }))
             }

@@ -12,14 +12,17 @@
 
 use std::marker::PhantomData;
 
-use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use super::plan::{
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
+    PlanCore, Shape,
+};
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
 
 /// The recursive-doubling algorithm (registry entry).
 pub struct RecursiveDoubling;
 
-impl<T: Pod> CollectiveAlgorithm<T> for RecursiveDoubling {
+impl NamedAlgorithm for RecursiveDoubling {
     fn name(&self) -> &'static str {
         "recursive-doubling"
     }
@@ -27,7 +30,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for RecursiveDoubling {
     fn summary(&self) -> &'static str {
         "recursive doubling: log2(p) aligned exchanges, power-of-two sizes only"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for RecursiveDoubling {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("recursive-doubling", comm, shape) {
             return Ok(p);
@@ -49,11 +54,7 @@ struct Step {
 
 /// Persistent recursive-doubling plan.
 pub struct RecursiveDoublingPlan<T: Pod> {
-    comm: Comm,
-    n: usize,
-    p: usize,
-    id: usize,
-    tag_base: u64,
+    core: PlanCore,
     steps: Vec<Step>,
     _elem: PhantomData<T>,
 }
@@ -81,48 +82,46 @@ impl<T: Pod> RecursiveDoublingPlan<T> {
             });
             dist <<= 1;
         }
-        let tag_base = comm.reserve_coll_tags(steps.len() as u64);
         Ok(RecursiveDoublingPlan {
-            comm: comm.retain(),
-            n,
-            p,
-            id,
-            tag_base,
+            core: PlanCore::new(comm, n, steps.len() as u64),
             steps,
             _elem: PhantomData,
         })
     }
 }
 
-impl<T: Pod> AllgatherPlan<T> for RecursiveDoublingPlan<T> {
+impl<T: Pod> CollectivePlan for RecursiveDoublingPlan<T> {
     fn algorithm(&self) -> &'static str {
         "recursive-doubling"
     }
 
     fn shape(&self) -> Shape {
-        Shape { n: self.n }
+        Shape { n: self.core.n }
     }
 
     fn comm_size(&self) -> usize {
-        self.p
+        self.core.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for RecursiveDoublingPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_io(self.n, self.p, input, output)?;
-        if self.n == 0 {
+        let core = &self.core;
+        check_io(core.n, core.p, input, output)?;
+        if core.n == 0 {
             return Ok(());
         }
-        let n = self.n;
-        output[self.id * n..(self.id + 1) * n].copy_from_slice(input);
+        let n = core.n;
+        output[core.id * n..(core.id + 1) * n].copy_from_slice(input);
         for (i, s) in self.steps.iter().enumerate() {
-            let tag = self.tag_base + i as u64;
+            let tag = core.tag(i as u64);
             // The windows are disjoint (peer differs in the `dist` bit), so
             // we can send from and receive into the output buffer directly.
             let _send =
-                self.comm.isend(&output[s.base * n..(s.base + s.dist) * n], s.peer, tag)?;
-            let req = self.comm.irecv(s.peer, tag);
+                core.comm.isend(&output[s.base * n..(s.base + s.dist) * n], s.peer, tag)?;
+            let req = core.comm.irecv(s.peer, tag);
             req.wait_into(
-                &self.comm,
+                &core.comm,
                 &mut output[s.peer_base * n..(s.peer_base + s.dist) * n],
             )?;
         }

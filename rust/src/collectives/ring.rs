@@ -11,14 +11,17 @@
 
 use std::marker::PhantomData;
 
-use super::plan::{check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, Shape};
+use super::plan::{
+    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
+    PlanCore, Shape,
+};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
 /// The ring algorithm (registry entry).
 pub struct Ring;
 
-impl<T: Pod> CollectiveAlgorithm<T> for Ring {
+impl NamedAlgorithm for Ring {
     fn name(&self) -> &'static str {
         "ring"
     }
@@ -26,7 +29,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for Ring {
     fn summary(&self) -> &'static str {
         "ring allgather: p-1 neighbour steps, bandwidth-optimal large-message baseline"
     }
+}
 
+impl<T: Pod> CollectiveAlgorithm<T> for Ring {
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
         if let Some(p) = trivial_plan("ring", comm, shape) {
             return Ok(p);
@@ -37,13 +42,9 @@ impl<T: Pod> CollectiveAlgorithm<T> for Ring {
 
 /// Persistent ring plan: neighbours + tag block, zero scratch.
 pub struct RingPlan<T: Pod> {
-    comm: Comm,
-    n: usize,
-    p: usize,
-    id: usize,
+    core: PlanCore,
     left: usize,
     right: usize,
-    tag_base: u64,
     _elem: PhantomData<T>,
 }
 
@@ -53,49 +54,47 @@ impl<T: Pod> RingPlan<T> {
     pub fn new(comm: &Comm, n: usize) -> RingPlan<T> {
         let p = comm.size();
         let id = comm.rank();
-        let tag_base = comm.reserve_coll_tags(p.saturating_sub(1) as u64);
         RingPlan {
-            comm: comm.retain(),
-            n,
-            p,
-            id,
+            core: PlanCore::new(comm, n, p.saturating_sub(1) as u64),
             left: (id + p - 1) % p,
             right: (id + 1) % p,
-            tag_base,
             _elem: PhantomData,
         }
     }
 }
 
-impl<T: Pod> AllgatherPlan<T> for RingPlan<T> {
+impl<T: Pod> CollectivePlan for RingPlan<T> {
     fn algorithm(&self) -> &'static str {
         "ring"
     }
 
     fn shape(&self) -> Shape {
-        Shape { n: self.n }
+        Shape { n: self.core.n }
     }
 
     fn comm_size(&self) -> usize {
-        self.p
+        self.core.p
     }
+}
 
+impl<T: Pod> AllgatherPlan<T> for RingPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_io(self.n, self.p, input, output)?;
-        if self.n == 0 {
+        let core = &self.core;
+        check_io(core.n, core.p, input, output)?;
+        if core.n == 0 {
             return Ok(());
         }
-        let (n, p, id) = (self.n, self.p, self.id);
+        let (n, p, id) = (core.n, core.p, core.id);
         output[id * n..(id + 1) * n].copy_from_slice(input);
         // Block travelling through this rank: at step s we hold the block
         // of rank (id + s) mod p and forward it left.
         for s in 0..p.saturating_sub(1) {
-            let tag = self.tag_base + s as u64;
+            let tag = core.tag(s as u64);
             let have = (id + s) % p;
-            let _send = self.comm.isend(&output[have * n..(have + 1) * n], self.left, tag)?;
+            let _send = core.comm.isend(&output[have * n..(have + 1) * n], self.left, tag)?;
             let recv_block = (id + s + 1) % p;
-            let req = self.comm.irecv(self.right, tag);
-            req.wait_into(&self.comm, &mut output[recv_block * n..(recv_block + 1) * n])?;
+            let req = core.comm.irecv(self.right, tag);
+            req.wait_into(&core.comm, &mut output[recv_block * n..(recv_block + 1) * n])?;
         }
         Ok(())
     }

@@ -32,6 +32,12 @@ pub struct ServeConfig {
     /// consumes the allgather's rank-order buffer directly, skipping the
     /// `h_full` assembly pass (perf pass, L2/L1 fusion).
     pub fused: bool,
+    /// Cross-worker output consensus: a persistent planned allreduce (two
+    /// f32 probes per request) sums an output fingerprint across workers;
+    /// any worker whose projection diverged breaks the `p·x` identity and
+    /// fails verification. Skipped when the topology admits no allreduce
+    /// plan (non-power-of-two, unaligned worker counts).
+    pub consensus: bool,
 }
 
 impl Default for ServeConfig {
@@ -44,6 +50,7 @@ impl Default for ServeConfig {
             warmup: 2,
             check: true,
             fused: false,
+            consensus: true,
         }
     }
 }
@@ -86,8 +93,9 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
 
     let start = Instant::now();
     let fused = cfg.fused;
+    let consensus = cfg.consensus;
     let run = CommWorld::run(&topo, Timing::Wallclock, move |c| -> Result<WorkerOut> {
-        worker_loop(c, &dir, algo, total_reqs, cfg.warmup, check, fused)
+        worker_loop(c, &dir, algo, total_reqs, cfg.warmup, check, fused, consensus)
     });
     let window = start.elapsed().as_secs_f64();
 
@@ -108,7 +116,7 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let out0 = out0.expect("worker 0 always present");
     Ok(ServeReport {
         metrics: ServeMetrics::new(out0.timings, window),
-        verified: out0.verified,
+        verified: out0.verified && out0.consensus_ok,
         max_err: out0.max_err,
         trace: run.trace,
         output_sample: out0.sample,
@@ -120,10 +128,13 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
 struct WorkerOut {
     timings: Vec<RequestTiming>,
     verified: bool,
+    /// True unless the consensus allreduce caught divergent outputs.
+    consensus_ok: bool,
     max_err: f32,
     sample: Vec<f32>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     c: &mut Comm,
     artifact_dir: &std::path::Path,
@@ -132,6 +143,7 @@ fn worker_loop(
     warmup: usize,
     check: bool,
     fused: bool,
+    consensus: bool,
 ) -> Result<WorkerOut> {
     // Each worker owns a private PJRT engine (the client is !Send).
     let engine = Engine::load(artifact_dir)?;
@@ -155,8 +167,20 @@ fn worker_loop(
     let mut ag_plan = collectives::plan_allgather::<f32>(algo, c, Shape::elems(b * hs))?;
     let mut gathered = vec![0f32; b * hs * c.size()];
 
+    // The consensus allreduce is also planned ONCE: two f32 probes per
+    // request. Topologies without a valid allreduce plan (non-power-of-two
+    // unaligned worker counts) skip consensus rather than fail serving —
+    // every worker sees the same topology, so the skip is collective.
+    let mut sum_plan = if consensus {
+        collectives::plan_allreduce::<f32>("loc-aware", c, Shape::elems(2)).ok()
+    } else {
+        None
+    };
+    let mut probe_sum = [0f32; 2];
+
     let mut timings = Vec::with_capacity(total_reqs.saturating_sub(warmup));
     let mut verified = true;
+    let mut consensus_ok = true;
     let mut max_err = 0f32;
     let mut sample = Vec::new();
 
@@ -199,6 +223,20 @@ fn worker_loop(
         };
         let t_final = t2.elapsed().as_secs_f64();
 
+        // Cross-worker consensus: every worker computed the full `y`, so
+        // the summed fingerprint must equal p × our own (within float
+        // reassociation slack). Collective — all workers execute it.
+        if let Some(sp) = sum_plan.as_mut() {
+            let probe = [y[0], y[y.len() - 1]];
+            sp.execute(&probe, &mut probe_sum)?;
+            let pf = c.size() as f32;
+            for (got, mine) in probe_sum.iter().zip(probe) {
+                if (got - pf * mine).abs() > 1e-3 * (1.0 + (pf * mine).abs()) {
+                    consensus_ok = false;
+                }
+            }
+        }
+
         if c.rank() == 0 {
             if req >= warmup {
                 timings.push(RequestTiming {
@@ -221,7 +259,7 @@ fn worker_loop(
             }
         }
     }
-    Ok(WorkerOut { timings, verified, max_err, sample })
+    Ok(WorkerOut { timings, verified, consensus_ok, max_err, sample })
 }
 
 // Integration coverage (requires artifacts): rust/tests/coordinator_integration.rs

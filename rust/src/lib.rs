@@ -15,15 +15,19 @@
 //!   (locality-aware), and the closed forms Eq. 3 (Bruck) / Eq. 4
 //!   (locality-aware Bruck), with eager/rendezvous protocol switching and
 //!   machine presets shaped after the paper's reference [6].
-//! * [`collectives`] — the standard Bruck, ring, recursive-doubling,
-//!   dissemination, hierarchical (Träff '06), multi-lane (Träff & Hunold '20)
-//!   and **locality-aware Bruck** allgathers (incl. multilevel hierarchy and
-//!   non-power region counts), a system-MPI dispatch baseline, allgatherv,
-//!   and a locality-aware allreduce extension — all behind a **persistent
-//!   planned-collective API** (`MPI_Allgather_init`-style): plan once per
-//!   (communicator, shape), execute many times with zero setup and zero
-//!   allocation, dispatched through a pluggable name → algorithm
-//!   [`collectives::Registry`].
+//! * [`collectives`] — an **operation-generic persistent planned-collective
+//!   framework** (`MPI_*_init`-style) covering three operations: the
+//!   standard Bruck, ring, recursive-doubling, dissemination, hierarchical
+//!   (Träff '06), multi-lane (Träff & Hunold '20) and **locality-aware
+//!   Bruck** allgathers (incl. multilevel hierarchy and non-power region
+//!   counts) plus a system-MPI dispatch baseline; recursive-doubling and
+//!   locality-aware regional **allreduce**; and pairwise, Bruck and
+//!   locality-aware **alltoall** (§6 extensions). Every algorithm plans
+//!   once per (communicator, shape) and executes many times with zero
+//!   setup and zero allocation, dispatched through pluggable name →
+//!   algorithm registries ([`collectives::Registry`],
+//!   [`collectives::AllreduceRegistry`], [`collectives::AlltoallRegistry`])
+//!   sharing one [`collectives::CollectivePlan`] substrate.
 //! * [`sim`] — the sweep/measurement engine that runs any algorithm at a
 //!   given (p, ppn, data size) and reports virtual time, wall time and a
 //!   locality-classified message trace.
@@ -79,6 +83,24 @@
 //! });
 //! assert_eq!(run.results[0], 15 + 99);
 //! ```
+//!
+//! The same shape covers the other operations — allreduce and alltoall
+//! plans come from their registries by case-insensitive name:
+//!
+//! ```
+//! use locag::prelude::*;
+//!
+//! let topo = Topology::regions(4, 4);
+//! let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+//!     let mut sum = locag::collectives::plan_allreduce::<u64>("loc-aware", c, Shape::elems(2))
+//!         .unwrap();
+//!     let mut out = vec![0u64; 2];
+//!     sum.execute(&[c.rank() as u64, 1], &mut out).unwrap();
+//!     out
+//! });
+//! // elementwise sum over the 16 ranks: [0+1+..+15, 16]
+//! assert!(run.results.iter().all(|r| r == &vec![120, 16]));
+//! ```
 
 pub mod bench_harness;
 pub mod cli;
@@ -96,10 +118,14 @@ pub mod util;
 
 /// Convenient re-exports of the types most programs need.
 pub mod prelude {
-    pub use crate::collectives::{Algorithm, AllgatherPlan, CollectiveAlgorithm, Registry, Shape};
+    pub use crate::collectives::{
+        Algorithm, AllgatherPlan, AllreducePlan, AllreduceRegistry, AlltoallPlan,
+        AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm, OpKind, Registry,
+        Shape,
+    };
     pub use crate::comm::{Comm, CommWorld, Timing};
     pub use crate::model::{MachineParams, Protocol};
-    pub use crate::sim::{run_allgather, AllgatherReport};
+    pub use crate::sim::{run_allgather, run_allreduce, run_alltoall, AllgatherReport, OpReport};
     pub use crate::topology::{Locality, Placement, Topology};
     pub use crate::trace::TraceSummary;
 }

@@ -1,0 +1,284 @@
+//! Conformance: every registered (operation, algorithm) pair, executed
+//! against a naive reference over a grid of world shapes and payload
+//! sizes.
+//!
+//! The grid covers `n = 0` (the uniform no-op contract), `n = 1`, a
+//! multi-element payload, power-of-two and non-power-of-two rank counts,
+//! single-rank and single-region degenerate topologies. Algorithms that
+//! legitimately reject a shape (recursive doubling and its allreduce /
+//! fallback twins on non-power-of-two sizes) must reject **at plan time**,
+//! uniformly on every rank, with a precondition error naming the
+//! power-of-two requirement — and must still plan the `n = 0` no-op.
+//!
+//! The suite fails if any registered pair was never successfully executed
+//! (100% registry coverage), so registering a new algorithm without
+//! conformance coverage is impossible.
+
+use std::collections::BTreeSet;
+
+use locag::collectives::{
+    canonical_contribution, expected_result, AllreduceRegistry, AlltoallRegistry, Registry, Shape,
+};
+use locag::comm::{CommWorld, Timing};
+use locag::topology::Topology;
+
+/// (regions, ranks-per-region): powers of two, non-powers, degenerate.
+const SHAPES: &[(usize, usize)] = &[
+    (1, 1),
+    (1, 4),
+    (2, 2),
+    (4, 4),
+    (3, 2),
+    (5, 2),
+    (2, 3),
+    (3, 3),
+    (8, 4),
+];
+
+/// Payload sizes, including the zero-length contract and a single element.
+const NS: &[usize] = &[0, 1, 3];
+
+fn ar_contribution(rank: usize, n: usize) -> Vec<u64> {
+    (0..n).map(|j| (rank * 131_071 + j) as u64).collect()
+}
+
+fn ar_expected(p: usize, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|j| (0..p).map(|r| (r * 131_071 + j) as u64).sum())
+        .collect()
+}
+
+fn a2a_send(rank: usize, p: usize, n: usize) -> Vec<u64> {
+    (0..p * n)
+        .map(|x| (rank * 1_000_003 + (x / n.max(1)) * 1_009 + x % n.max(1)) as u64)
+        .collect()
+}
+
+fn a2a_expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
+    (0..p * n)
+        .map(|x| ((x / n.max(1)) * 1_000_003 + rank * 1_009 + x % n.max(1)) as u64)
+        .collect()
+}
+
+/// Outcome of one (op, algorithm) attempt on one rank: registry key plus
+/// the plan-time rejection message, if any.
+type Outcome = (String, Option<String>);
+
+/// Run every registered pair of every op over one world; execution
+/// results are asserted in-world against the naive references.
+fn run_grid_point(regions: usize, ppr: usize, n: usize) -> Vec<Vec<Outcome>> {
+    let topo = Topology::regions(regions, ppr);
+    let p = topo.size();
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| -> Vec<Outcome> {
+        let mut outcomes = Vec::new();
+
+        let reg = Registry::<u64>::standard();
+        for name in reg.names() {
+            let err = match reg.plan(name, c, Shape::elems(n)) {
+                Err(e) => Some(e.to_string()),
+                Ok(mut plan) => {
+                    assert_eq!(plan.algorithm(), name);
+                    assert_eq!(plan.shape(), Shape::elems(n));
+                    assert_eq!(plan.comm_size(), p);
+                    let mine = canonical_contribution(c.rank(), n);
+                    let mut out = vec![0u64; n * p];
+                    plan.execute(&mine, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        expected_result(p, n),
+                        "allgather/{name} {regions}x{ppr} n={n} rank {}",
+                        c.rank()
+                    );
+                    None
+                }
+            };
+            outcomes.push((format!("allgather/{name}"), err));
+        }
+
+        let reg = AllreduceRegistry::<u64>::standard();
+        for name in reg.names() {
+            let err = match reg.plan(name, c, Shape::elems(n)) {
+                Err(e) => Some(e.to_string()),
+                Ok(mut plan) => {
+                    assert_eq!(plan.algorithm(), name);
+                    assert_eq!(plan.comm_size(), p);
+                    let mine = ar_contribution(c.rank(), n);
+                    let mut out = vec![0u64; n];
+                    plan.execute(&mine, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        ar_expected(p, n),
+                        "allreduce/{name} {regions}x{ppr} n={n} rank {}",
+                        c.rank()
+                    );
+                    None
+                }
+            };
+            outcomes.push((format!("allreduce/{name}"), err));
+        }
+
+        let reg = AlltoallRegistry::<u64>::standard();
+        for name in reg.names() {
+            let err = match reg.plan(name, c, Shape::elems(n)) {
+                Err(e) => Some(e.to_string()),
+                Ok(mut plan) => {
+                    assert_eq!(plan.algorithm(), name);
+                    assert_eq!(plan.comm_size(), p);
+                    let mine = a2a_send(c.rank(), p, n);
+                    let mut out = vec![0u64; n * p];
+                    plan.execute(&mine, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        a2a_expected(c.rank(), p, n),
+                        "alltoall/{name} {regions}x{ppr} n={n} rank {}",
+                        c.rank()
+                    );
+                    None
+                }
+            };
+            outcomes.push((format!("alltoall/{name}"), err));
+        }
+        outcomes
+    });
+    run.results
+}
+
+/// Every registry name, keyed `op/name` — the 100%-coverage target.
+fn all_registered_pairs() -> BTreeSet<String> {
+    let mut want = BTreeSet::new();
+    for name in Registry::<u64>::standard().names() {
+        want.insert(format!("allgather/{name}"));
+    }
+    for name in AllreduceRegistry::<u64>::standard().names() {
+        want.insert(format!("allreduce/{name}"));
+    }
+    for name in AlltoallRegistry::<u64>::standard().names() {
+        want.insert(format!("alltoall/{name}"));
+    }
+    want
+}
+
+#[test]
+fn every_registered_pair_conforms_over_the_grid() {
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    for &(regions, ppr) in SHAPES {
+        let p = regions * ppr;
+        for &n in NS {
+            let results = run_grid_point(regions, ppr, n);
+            // Plan outcomes (including error text) are identical on every
+            // rank: planning is collective and deterministic.
+            for (rank, r) in results.iter().enumerate() {
+                assert_eq!(
+                    r, &results[0],
+                    "rank {rank} diverged at {regions}x{ppr} n={n}"
+                );
+            }
+            for (key, err) in &results[0] {
+                match err {
+                    None => {
+                        covered.insert(key.clone());
+                    }
+                    Some(msg) => {
+                        // A legitimate rejection: explicit, plan-time, and
+                        // only for the documented precondition.
+                        assert!(n > 0, "{key} rejected the n=0 no-op: {msg}");
+                        assert!(
+                            msg.contains("power-of-two"),
+                            "{key} @ {regions}x{ppr} n={n}: unexpected rejection: {msg}"
+                        );
+                        assert!(
+                            !p.is_power_of_two(),
+                            "{key} @ {regions}x{ppr} (p={p} IS a power of two) n={n}: {msg}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // 100% of registered (op, algorithm) pairs executed successfully on
+    // at least one grid shape.
+    let want = all_registered_pairs();
+    let missing: Vec<&String> = want.difference(&covered).collect();
+    assert!(missing.is_empty(), "pairs never successfully executed: {missing:?}");
+}
+
+#[test]
+fn rejections_send_no_messages() {
+    // Plan-time rejection is communication-free: nothing is half-sent.
+    let topo = Topology::regions(3, 2); // p = 6, non-power-of-two
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let ag = Registry::<u64>::standard()
+            .plan("recursive-doubling", c, Shape::elems(2))
+            .is_err();
+        let ar = AllreduceRegistry::<u64>::standard()
+            .plan("recursive-doubling", c, Shape::elems(2))
+            .is_err();
+        ag && ar
+    });
+    assert!(run.results.iter().all(|&b| b));
+    let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+    assert_eq!(total, 0);
+}
+
+#[test]
+fn non_uniform_payload_shapes_are_rejected() {
+    let topo = Topology::regions(2, 2);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let p = c.size();
+        let mut bad = 0usize;
+        // Wrong-length buffers at execute time, per op.
+        let mut plan = Registry::<u64>::standard().plan("bruck", c, Shape::elems(3)).unwrap();
+        bad += plan.execute(&[1u64; 2], &mut vec![0u64; 3 * p]).is_err() as usize;
+        bad += plan.execute(&[1u64; 3], &mut vec![0u64; 3 * p - 1]).is_err() as usize;
+        let mut plan = AllreduceRegistry::<u64>::standard()
+            .plan("recursive-doubling", c, Shape::elems(3))
+            .unwrap();
+        bad += plan.execute(&[1u64; 4], &mut vec![0u64; 3]).is_err() as usize;
+        bad += plan.execute(&[1u64; 3], &mut vec![0u64; 2]).is_err() as usize;
+        let mut plan = AlltoallRegistry::<u64>::standard()
+            .plan("pairwise", c, Shape::elems(3))
+            .unwrap();
+        bad += plan.execute(&vec![1u64; 3 * p - 1], &mut vec![0u64; 3 * p]).is_err() as usize;
+        bad += plan.execute(&vec![1u64; 3 * p], &mut vec![0u64; 3 * p + 1]).is_err() as usize;
+        // Ragged one-shot alltoall (send not a multiple of p).
+        bad += locag::collectives::alltoall::bruck(c, &[1u64; 7]).is_err() as usize;
+        bad
+    });
+    assert!(run.results.iter().all(|&b| b == 7));
+    // and none of the rejected calls leaked a message
+    let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+    assert_eq!(total, 0);
+}
+
+#[test]
+fn zero_length_plans_are_uniform_across_ops_and_algorithms() {
+    // 3x3 (p = 9, non-power-of-two): even shape-rejecting algorithms must
+    // produce the n = 0 no-op plan.
+    let topo = Topology::regions(3, 3);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        for name in Registry::<u64>::standard().names() {
+            let mut plan = Registry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+            let mut out: Vec<u64> = Vec::new();
+            plan.execute(&[], &mut out).unwrap();
+            assert!(out.is_empty(), "allgather/{name}");
+        }
+        for name in AllreduceRegistry::<u64>::standard().names() {
+            let mut plan =
+                AllreduceRegistry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+            let mut out: Vec<u64> = Vec::new();
+            plan.execute(&[], &mut out).unwrap();
+            assert!(out.is_empty(), "allreduce/{name}");
+        }
+        for name in AlltoallRegistry::<u64>::standard().names() {
+            let mut plan =
+                AlltoallRegistry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+            let mut out: Vec<u64> = Vec::new();
+            plan.execute(&[], &mut out).unwrap();
+            assert!(out.is_empty(), "alltoall/{name}");
+        }
+        true
+    });
+    assert!(run.results.iter().all(|&ok| ok));
+    let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+    assert_eq!(total, 0, "zero-length plans must send no messages");
+}

@@ -29,6 +29,7 @@ fn cfg(algo: Algorithm, regions: usize, requests: usize) -> ServeConfig {
         warmup: 1,
         check: true,
         fused: false,
+        consensus: true,
     }
 }
 
@@ -131,6 +132,7 @@ fn serve_missing_artifacts_is_clean_error() {
         warmup: 0,
         check: false,
         fused: false,
+        consensus: true,
     };
     let err = serve(&cfg).unwrap_err();
     assert!(err.to_string().contains("manifest"));

@@ -169,6 +169,104 @@ fn standard_bruck_is_placement_sensitive() {
 }
 
 #[test]
+fn loc_allreduce_nonlocal_messages_bounded_by_log_ppr_regions() {
+    // Documented bound: ⌈log_pℓ(r)⌉ non-local messages per rank, one per
+    // exchange round (local rank 0 idles throughout).
+    for (regions, ppr) in [(4usize, 4usize), (8, 4), (16, 4), (8, 8), (16, 2)] {
+        let topo = Topology::regions(regions, ppr);
+        let rep = sim::run_allreduce("loc-aware", &topo, &MachineParams::lassen(), 2);
+        assert!(rep.verified, "{regions}x{ppr}: {:?}", rep.errors);
+        let bound = ilog_ceil(ppr.max(2), regions) as u64;
+        assert!(
+            rep.trace.max_nonlocal_msgs() <= bound,
+            "{regions}x{ppr}: {} > {bound}",
+            rep.trace.max_nonlocal_msgs()
+        );
+        // local rank 0 of every region sends nothing non-locally
+        for (rank, t) in rep.trace.per_rank.iter().enumerate() {
+            if rank % ppr == 0 {
+                assert_eq!(t.nonlocal_msgs, 0, "rank {rank} @ {regions}x{ppr}");
+            }
+        }
+    }
+}
+
+#[test]
+fn loc_allreduce_strictly_beats_recursive_doubling_on_tracer() {
+    // With pℓ ≥ 4, ⌈log_pℓ(r)⌉ < the non-local share of log2(p) exchanges.
+    for (regions, ppr) in [(4usize, 4usize), (16, 4), (8, 4), (8, 8)] {
+        let topo = Topology::regions(regions, ppr);
+        let m = MachineParams::lassen();
+        let std = sim::run_allreduce("recursive-doubling", &topo, &m, 2);
+        let loc = sim::run_allreduce("loc-aware", &topo, &m, 2);
+        assert!(std.verified && loc.verified, "{regions}x{ppr}");
+        assert!(
+            loc.trace.max_nonlocal_msgs() < std.trace.max_nonlocal_msgs(),
+            "{regions}x{ppr}: loc {} !< std {}",
+            loc.trace.max_nonlocal_msgs(),
+            std.trace.max_nonlocal_msgs()
+        );
+        assert!(
+            loc.trace.total_nonlocal_bytes() < std.trace.total_nonlocal_bytes(),
+            "{regions}x{ppr}: loc {} !< std {}",
+            loc.trace.total_nonlocal_bytes(),
+            std.trace.total_nonlocal_bytes()
+        );
+    }
+}
+
+#[test]
+fn loc_alltoall_nonlocal_messages_bounded_by_owned_regions() {
+    // Documented bound: each rank sends one aggregated non-local message
+    // per owned remote region — at most ⌈r/pℓ⌉ — of exactly pℓ²·n
+    // elements each.
+    for (regions, ppr) in [(4usize, 4usize), (8, 4), (16, 4), (6, 2), (3, 4)] {
+        let topo = Topology::regions(regions, ppr);
+        let n = 2usize;
+        let rep = sim::run_alltoall("loc-aware", &topo, &MachineParams::lassen(), n);
+        assert!(rep.verified, "{regions}x{ppr}: {:?}", rep.errors);
+        let owned_bound = regions.div_ceil(ppr) as u64;
+        assert!(
+            rep.trace.max_nonlocal_msgs() <= owned_bound,
+            "{regions}x{ppr}: {} > {owned_bound}",
+            rep.trace.max_nonlocal_msgs()
+        );
+        // aggregated transfers: pℓ²·n u64 values per non-local message
+        let per_msg_bytes = (ppr * ppr * n * 8) as u64;
+        assert!(
+            rep.trace.max_nonlocal_bytes() <= owned_bound * per_msg_bytes,
+            "{regions}x{ppr}: {} > {}",
+            rep.trace.max_nonlocal_bytes(),
+            owned_bound * per_msg_bytes
+        );
+    }
+}
+
+#[test]
+fn loc_alltoall_strictly_beats_bruck_on_tracer() {
+    for (regions, ppr) in [(8usize, 4usize), (16, 4), (8, 8)] {
+        let topo = Topology::regions(regions, ppr);
+        let m = MachineParams::lassen();
+        let std = sim::run_alltoall("bruck", &topo, &m, 2);
+        let loc = sim::run_alltoall("loc-aware", &topo, &m, 2);
+        assert!(std.verified && loc.verified, "{regions}x{ppr}");
+        assert!(
+            loc.trace.max_nonlocal_msgs() < std.trace.max_nonlocal_msgs(),
+            "{regions}x{ppr}: loc {} !< bruck {}",
+            loc.trace.max_nonlocal_msgs(),
+            std.trace.max_nonlocal_msgs()
+        );
+        // no duplicate forwarding: strictly fewer total non-local bytes
+        assert!(
+            loc.trace.total_nonlocal_bytes() < std.trace.total_nonlocal_bytes(),
+            "{regions}x{ppr}: loc {} !< bruck {}",
+            loc.trace.total_nonlocal_bytes(),
+            std.trace.total_nonlocal_bytes()
+        );
+    }
+}
+
+#[test]
 fn improvement_grows_with_ppr_in_measured_runs() {
     // paper Figs. 9/10: "performance improvements are increased with the
     // number of processes per region" — aligned configs, fixed regions.

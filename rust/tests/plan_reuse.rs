@@ -213,6 +213,169 @@ fn planned_executes_allocate_less_than_one_shot() {
     );
 }
 
+/// The headline reuse property for the PR-2 operations: 100 executions of
+/// one allreduce / alltoall plan, shifting inputs, exact results, no tag
+/// leaks — mirroring `hundred_executions_correct_and_leak_free`.
+#[test]
+fn allreduce_and_alltoall_hundred_executions_correct_and_leak_free() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let n = 3usize;
+    // allreduce: every registered algorithm (4x4 is aligned + power of two)
+    for algo in locag::collectives::AllreduceRegistry::<u64>::standard().names() {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = collectives::plan_allreduce::<u64>(algo, c, Shape::elems(n)).unwrap();
+            let tag_after_plan = c.next_coll_tag();
+            let mut out = vec![0u64; n];
+            for round in 0..100u64 {
+                let mine = shifted_contribution(c.rank(), n, round);
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..n)
+                    .map(|j| {
+                        (0..p)
+                            .map(|r| (r * 1_000_003 + j) as u64 + round * 7_777_777)
+                            .sum()
+                    })
+                    .collect();
+                assert_eq!(out, expect, "allreduce/{algo} round {round}");
+            }
+            let tag_after_100 = c.next_coll_tag();
+            assert_eq!(
+                tag_after_100,
+                tag_after_plan + 1,
+                "allreduce/{algo} leaked collective tags across executions"
+            );
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "allreduce/{algo}");
+    }
+    // alltoall: every registered algorithm
+    for algo in locag::collectives::AlltoallRegistry::<u64>::standard().names() {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = collectives::plan_alltoall::<u64>(algo, c, Shape::elems(n)).unwrap();
+            let tag_after_plan = c.next_coll_tag();
+            let mut out = vec![0u64; n * p];
+            for round in 0..100u64 {
+                let mine: Vec<u64> = (0..p * n)
+                    .map(|x| (c.rank() * 1_000_003 + (x / n) * 1_009 + x % n) as u64 + round)
+                    .collect();
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..p * n)
+                    .map(|x| ((x / n) * 1_000_003 + c.rank() * 1_009 + x % n) as u64 + round)
+                    .collect();
+                assert_eq!(out, expect, "alltoall/{algo} round {round}");
+            }
+            let tag_after_100 = c.next_coll_tag();
+            assert_eq!(
+                tag_after_100,
+                tag_after_plan + 1,
+                "alltoall/{algo} leaked collective tags across executions"
+            );
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "alltoall/{algo}");
+    }
+}
+
+/// The PR-2 operations also construct zero sub-communicators per execute:
+/// groups and region communicators exist from plan time.
+#[test]
+fn new_op_executions_build_no_sub_communicators() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut ar = collectives::plan_allreduce::<u64>("loc-aware", c, Shape::elems(2)).unwrap();
+        let mut a2a = collectives::plan_alltoall::<u64>("loc-aware", c, Shape::elems(2)).unwrap();
+        c.barrier().unwrap(); // every rank finished planning
+        let built_before = comm::sub_comms_built();
+        let mut sum = vec![0u64; 2];
+        let mut exchanged = vec![0u64; 2 * p];
+        for round in 0..50u64 {
+            let mine = shifted_contribution(c.rank(), 2, round);
+            ar.execute(&mine, &mut sum).unwrap();
+            let send = vec![c.rank() as u64 + round; 2 * p];
+            a2a.execute(&send, &mut exchanged).unwrap();
+        }
+        c.barrier().unwrap(); // every rank finished executing
+        comm::sub_comms_built() - built_before
+    });
+    for &delta in &run.results {
+        assert_eq!(delta, 0, "execute constructed sub-communicators");
+    }
+}
+
+/// Allocation accounting for the PR-2 operations: repeated planned
+/// executes allocate strictly less than repeated one-shot calls on the
+/// identical workload.
+#[test]
+fn planned_allreduce_and_alltoall_allocate_less_than_one_shot() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let n = 128usize;
+    let iters = 100u64;
+
+    // --- allreduce ----------------------------------------------------
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan = collectives::plan_allreduce::<u64>("loc-aware", c, Shape::elems(n)).unwrap();
+        let mut out = vec![0u64; n];
+        let mine = shifted_contribution(c.rank(), n, 0);
+        for _ in 0..iters {
+            plan.execute(&mine, &mut out).unwrap();
+        }
+        out[0]
+    });
+    std::hint::black_box(&run.results);
+    let planned = ALLOCATED.load(Ordering::Relaxed) - before;
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mine = shifted_contribution(c.rank(), n, 0);
+        let mut last = 0u64;
+        for _ in 0..iters {
+            last = collectives::allreduce::allreduce_locality_aware(c, &mine).unwrap()[0];
+        }
+        last
+    });
+    std::hint::black_box(&run.results);
+    let one_shot = ALLOCATED.load(Ordering::Relaxed) - before;
+    assert!(
+        planned < one_shot,
+        "allreduce: planned {planned} B must allocate less than one-shot {one_shot} B"
+    );
+
+    // --- alltoall -----------------------------------------------------
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan = collectives::plan_alltoall::<u64>("loc-aware", c, Shape::elems(n)).unwrap();
+        let mut out = vec![0u64; n * p];
+        let send = vec![c.rank() as u64; n * p];
+        for _ in 0..iters {
+            plan.execute(&send, &mut out).unwrap();
+        }
+        out[0]
+    });
+    std::hint::black_box(&run.results);
+    let planned = ALLOCATED.load(Ordering::Relaxed) - before;
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let send = vec![c.rank() as u64; n * p];
+        let mut last = 0u64;
+        for _ in 0..iters {
+            last = collectives::alltoall::loc_aware(c, &send).unwrap()[0];
+        }
+        last
+    });
+    std::hint::black_box(&run.results);
+    let one_shot = ALLOCATED.load(Ordering::Relaxed) - before;
+    assert!(
+        planned < one_shot,
+        "alltoall: planned {planned} B must allocate less than one-shot {one_shot} B"
+    );
+}
+
 /// The uniform `n == 0` contract, via plans: every algorithm yields a
 /// no-op plan that executes successfully into an empty output.
 #[test]
