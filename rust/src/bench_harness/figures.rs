@@ -177,33 +177,45 @@ pub fn measured_op_figure(
     };
     let mut w = CsvWriter::create(
         out_csv,
-        &["regions", "ppn", "algorithm", "seconds", "max_nonlocal_msgs", "verified"],
+        &[
+            "regions",
+            "ppn",
+            "algorithm",
+            "seconds",
+            "predicted_seconds",
+            "max_nonlocal_msgs",
+            "verified",
+        ],
     )?;
     let mut series = Vec::new();
     for &ppn in ppns {
         for algo in &algos {
             let mut pts = Vec::new();
+            let mut pred_pts = Vec::new();
             let mut regions = 2usize;
             while regions * ppn <= max_p {
                 let topo = Topology::regions(regions, ppn);
-                let (seconds, nl, verified) = match op {
+                let (seconds, predicted, nl, verified) = match op {
                     OpKind::Allgather => {
                         let a = Algorithm::parse(algo).expect("registry name");
                         let rep =
                             sim::run_allgather_repeated(a, &topo, machine, n_vals, WARMUP, ITERS);
-                        (rep.median_vtime, rep.trace.max_nonlocal_msgs(), rep.verified)
+                        let nl = rep.trace.max_nonlocal_msgs();
+                        (rep.median_vtime, rep.predicted, nl, rep.verified)
                     }
                     OpKind::Allreduce => {
                         let rep = sim::run_allreduce_repeated(
                             algo, &topo, machine, n_vals, WARMUP, ITERS,
                         );
-                        (rep.median_vtime, rep.trace.max_nonlocal_msgs(), rep.verified)
+                        let nl = rep.trace.max_nonlocal_msgs();
+                        (rep.median_vtime, rep.predicted, nl, rep.verified)
                     }
                     OpKind::Alltoall => {
                         let rep = sim::run_alltoall_repeated(
                             algo, &topo, machine, n_vals, WARMUP, ITERS,
                         );
-                        (rep.median_vtime, rep.trace.max_nonlocal_msgs(), rep.verified)
+                        let nl = rep.trace.max_nonlocal_msgs();
+                        (rep.median_vtime, rep.predicted, nl, rep.verified)
                     }
                 };
                 w.row(&csv_row![
@@ -211,13 +223,18 @@ pub fn measured_op_figure(
                     ppn,
                     *algo,
                     format!("{seconds:.3e}"),
+                    format!("{predicted:.3e}"),
                     nl,
                     verified
                 ])?;
                 pts.push((regions as f64, seconds));
+                pred_pts.push((regions as f64, predicted));
                 regions *= 2;
             }
             series.push((format!("{algo} ppn={ppn}"), pts));
+            // The predicted-vs-measured overlay: the IR cost model's curve
+            // next to the virtual-time measurement it predicts.
+            series.push((format!("{algo} ppn={ppn} (model)"), pred_pts));
         }
     }
     w.flush()?;
@@ -332,9 +349,30 @@ mod tests {
             &tmp("f9s"),
         )
         .unwrap();
-        assert_eq!(f.series.len(), MEASURED_ALGOS.len());
+        // one measured + one predicted-overlay series per algorithm
+        assert_eq!(f.series.len(), 2 * MEASURED_ALGOS.len());
         for (_, pts) in &f.series {
             assert!(!pts.is_empty());
+        }
+    }
+
+    #[test]
+    fn predicted_overlay_matches_measured_exactly() {
+        // The overlay is the IR cost model's prediction; on the virtual
+        // transport it equals the measurement.
+        let f = measured_figure("t", &MachineParams::lassen(), &[4], 32, &tmp("ovl")).unwrap();
+        for pair in f.series.chunks(2) {
+            let (measured, predicted) = (&pair[0], &pair[1]);
+            assert!(predicted.0.ends_with("(model)"), "{}", predicted.0);
+            for (m, p) in measured.1.iter().zip(&predicted.1) {
+                assert!(
+                    (m.1 - p.1).abs() < 1e-12,
+                    "{}: measured {:.3e} vs predicted {:.3e}",
+                    measured.0,
+                    m.1,
+                    p.1
+                );
+            }
         }
     }
 }

@@ -61,18 +61,25 @@ pub fn run_op(args: &Args) -> Result<i32> {
         OpKind::Allreduce | OpKind::Alltoall => "loc-aware",
     };
     let algo = args.get_str("algo", default_algo);
-    let (algo_name, vtime, verified, trace, errors) = match op {
+    let (algo_name, vtime, predicted, verified, trace, errors) = match op {
         OpKind::Allgather => {
             let rep = sim::run_allgather(algo_by_name(&algo)?, &topo, &m, n);
-            (rep.algorithm.name().to_string(), rep.vtime, rep.verified, rep.trace, rep.errors)
+            (
+                rep.algorithm.name().to_string(),
+                rep.vtime,
+                rep.predicted,
+                rep.verified,
+                rep.trace,
+                rep.errors,
+            )
         }
         OpKind::Allreduce => {
             let rep = sim::run_allreduce(&algo, &topo, &m, n);
-            (rep.algorithm, rep.vtime, rep.verified, rep.trace, rep.errors)
+            (rep.algorithm, rep.vtime, rep.predicted, rep.verified, rep.trace, rep.errors)
         }
         OpKind::Alltoall => {
             let rep = sim::run_alltoall(&algo, &topo, &m, n);
-            (rep.algorithm, rep.vtime, rep.verified, rep.trace, rep.errors)
+            (rep.algorithm, rep.vtime, rep.predicted, rep.verified, rep.trace, rep.errors)
         }
     };
     println!(
@@ -81,6 +88,7 @@ pub fn run_op(args: &Args) -> Result<i32> {
         m.name
     );
     println!("modeled time: {}", seconds(vtime));
+    println!("predicted:    {} (from the schedule IR)", seconds(predicted));
     println!("verified:     {verified}");
     print!("{}", trace.table());
     if !verified {
@@ -158,6 +166,21 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
             a.trace.max_nonlocal_msgs()
         );
     }
+    println!(
+        "\nEvery algorithm is a communication-schedule (IR) builder executed\n\
+         by one generic interpreter. Inspect any schedule and its modeled\n\
+         cost with `locag explain --algo loc-bruck --regions 4 --ppr 4`,\n\
+         and let the cost model pick the algorithm with\n\
+         `locag run --algo model-tuned` (scores every candidate schedule\n\
+         against the machine's postal parameters, plans the cheapest):"
+    );
+    let rep = sim::run_allgather(Algorithm::ModelTuned, &topo, &m, 1);
+    println!(
+        "  model-tuned @ 4x4: modeled {} | predicted {} | max NL msgs {}",
+        seconds(rep.vtime),
+        seconds(rep.predicted),
+        rep.trace.max_nonlocal_msgs()
+    );
     Ok(0)
 }
 
@@ -222,6 +245,203 @@ pub fn figure(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `locag explain` — print an algorithm's communication schedule and its
+/// IR-derived cost breakdown: the schedule table of one rank, per-class
+/// traffic, and the predicted completion time next to every candidate's.
+pub fn explain(args: &Args) -> Result<i32> {
+    use crate::collectives::schedule::{Schedule, Slice, Step, WorldView};
+    use crate::collectives::{model_tuned, schedule, OpKind};
+    use crate::model::cost;
+
+    let op = OpKind::parse_or_err(&args.get_str("op", "allgather"))?;
+    let default_algo = match op {
+        OpKind::Allgather => "loc-bruck",
+        OpKind::Allreduce | OpKind::Alltoall => "loc-aware",
+    };
+    let algo = args.get_str("algo", default_algo);
+    let regions = args.get_usize("regions", 4)?;
+    let ppr = args.get_usize("ppr", 4)?;
+    let n = args.get_usize("values", 2)?;
+    let rank = args.get_usize("rank", 0)?;
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    let topo = Topology::regions(regions, ppr);
+    let p = topo.size();
+    if rank >= p {
+        return Err(Error::Precondition(format!("--rank {rank} outside 0..{p}")));
+    }
+    let view = WorldView::world(&topo);
+    // Element sizes mirror the sweep engine's payloads (u32 allgather,
+    // u64 allreduce/alltoall).
+    let esz = match op {
+        OpKind::Allgather => 4usize,
+        OpKind::Allreduce | OpKind::Alltoall => 8,
+    };
+    let build_one = |name: &str, r: usize| -> Result<Schedule> {
+        match op {
+            OpKind::Allgather => {
+                schedule::build_allgather(Algorithm::parse_or_err(name)?, &view, r, n, esz)
+            }
+            OpKind::Allreduce => schedule::build_allreduce(name, &view, r, n, esz),
+            OpKind::Alltoall => schedule::build_alltoall(name, &view, r, n, esz),
+        }
+    };
+    let scheds: Vec<Schedule> = if algo.eq_ignore_ascii_case("model-tuned") {
+        let (winner, scheds) = match op {
+            OpKind::Allgather => model_tuned::pick_allgather(&view, &m, n, esz)?,
+            OpKind::Allreduce => model_tuned::pick_allreduce(&view, &m, n, esz)?,
+            OpKind::Alltoall => model_tuned::pick_alltoall(&view, &m, n, esz)?,
+        };
+        println!("model-tuned selection: {winner}");
+        scheds
+    } else {
+        (0..p).map(|r| build_one(&algo, r)).collect::<Result<_>>()?
+    };
+
+    let sched = &scheds[rank];
+    println!(
+        "{op} / {} on {p} ranks ({regions} regions x {ppr}), {n} values/rank [{}]",
+        sched.label, m.name
+    );
+    println!(
+        "schedule of rank {rank}: {} rounds, {} steps, {} tags, {} scratch buffers\n",
+        sched.rounds.len(),
+        sched.num_steps(),
+        sched.tags,
+        sched.scratch.len()
+    );
+    let slice = |s: &Slice| -> String {
+        let buf = match s.buf {
+            crate::collectives::schedule::BufId::Input => "in".to_string(),
+            crate::collectives::schedule::BufId::Output => "out".to_string(),
+            crate::collectives::schedule::BufId::Scratch(i) => format!("s{i}"),
+        };
+        format!("{buf}[{}..{}]", s.off, s.off + s.len)
+    };
+    let peer_class = |r: usize| topo.classify(rank, r).label();
+    for (ri, round) in sched.rounds.iter().enumerate() {
+        println!("round {ri}: {}", round.label);
+        for step in &round.steps {
+            match step {
+                Step::Send { to, src, tag, pad } => println!(
+                    "  send     -> P{to:<4} {:>8} B  tag {tag}  {} [{}]",
+                    sched.wire_bytes(src.len, *pad),
+                    slice(src),
+                    peer_class(*to),
+                ),
+                Step::Recv { from, dst, tag, pad } => println!(
+                    "  recv     <- P{from:<4} {:>8} B  tag {tag}  {} [{}]",
+                    sched.wire_bytes(dst.len, *pad),
+                    slice(dst),
+                    peer_class(*from),
+                ),
+                Step::SendRecv { to, src, from, dst, tag, pad } => println!(
+                    "  sendrecv -> P{to} / <- P{from}  {:>8} B  tag {tag}  {} -> {} [{}]",
+                    sched.wire_bytes(src.len, *pad),
+                    slice(src),
+                    slice(dst),
+                    peer_class(*to),
+                ),
+                Step::CopyLocal { src, dst } => {
+                    println!("  copy     {} -> {}", slice(src), slice(dst))
+                }
+                Step::Reduce { src, dst } => {
+                    println!("  reduce   {} += into {}", slice(src), slice(dst))
+                }
+                Step::Rotate { src, dst, block, shift } => println!(
+                    "  rotate   {} -> {} (block {block}, shift {shift})",
+                    slice(src),
+                    slice(dst)
+                ),
+            }
+        }
+    }
+    let world: Vec<usize> = (0..p).collect();
+    let rep = cost::evaluate(&scheds, &topo, &world, &m)?;
+    let mine = &rep.per_rank[rank];
+    println!("\ncost breakdown (IR-derived, machine '{}'):", m.name);
+    println!(
+        "  rank {rank}:  {} local msgs / {} B   {} non-local msgs / {} B",
+        mine.local_msgs, mine.local_bytes, mine.nonlocal_msgs, mine.nonlocal_bytes
+    );
+    println!(
+        "  worst rank: {} non-local msgs, {} non-local B",
+        rep.max_nonlocal_msgs(),
+        rep.max_nonlocal_bytes()
+    );
+    println!("  predicted completion: {}", seconds(rep.predicted));
+    Ok(0)
+}
+
+/// `locag bench` — micro-bench a set of (shape, algorithm) points and emit
+/// a `BENCH_*.json` perf-trajectory artifact for regression tracking.
+pub fn bench(args: &Args) -> Result<i32> {
+    let path = args.get_str("json", "results/BENCH_collectives.json");
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    let algos = [
+        Algorithm::SystemDefault,
+        Algorithm::Bruck,
+        Algorithm::Ring,
+        Algorithm::LocalityBruck,
+        Algorithm::ModelTuned,
+    ];
+    let shapes = [(2usize, 2usize), (4, 4), (8, 4), (4, 8)];
+    let ns = [2usize, 256];
+    let mut rows = Vec::new();
+    println!(
+        "{:<16} {:>5} {:>5} {:>5} {:>13} {:>13} {:>9}",
+        "algorithm", "p", "n", "ok", "vtime", "predicted", "wall"
+    );
+    for (regions, ppr) in shapes {
+        let topo = Topology::regions(regions, ppr);
+        for n in ns {
+            for algo in algos {
+                let rep = sim::run_allgather(algo, &topo, &m, n);
+                println!(
+                    "{:<16} {:>5} {:>5} {:>5} {:>13} {:>13} {:>8.1}ms",
+                    algo.name(),
+                    rep.p,
+                    rep.n,
+                    rep.verified,
+                    seconds(rep.vtime),
+                    seconds(rep.predicted),
+                    rep.wall * 1e3
+                );
+                rows.push(format!(
+                    concat!(
+                        "    {{\"op\": \"allgather\", \"algo\": \"{}\", \"regions\": {}, ",
+                        "\"ppr\": {}, \"p\": {}, \"n\": {}, \"vtime\": {:e}, ",
+                        "\"predicted\": {:e}, \"wall\": {:e}, \"verified\": {}}}"
+                    ),
+                    algo.name(),
+                    regions,
+                    ppr,
+                    rep.p,
+                    rep.n,
+                    rep.vtime,
+                    rep.predicted,
+                    rep.wall,
+                    rep.verified
+                ));
+            }
+        }
+    }
+    let mut doc = String::new();
+    doc.push_str("{\n  \"schema\": \"locag-bench-v1\",\n");
+    doc.push_str(&format!("  \"machine\": \"{}\",\n", m.name));
+    doc.push_str(&format!("  \"rows\": [\n{}\n  ]\n}}\n", rows.join(",\n")));
+    std::fs::write(&path, &doc)?;
+    // self-check: the artifact must parse with the in-tree JSON parser
+    crate::util::json::Json::parse(&doc)
+        .map_err(|e| Error::Precondition(format!("generated bench JSON invalid: {e}")))?;
+    println!("\nwrote {path} ({} rows)", rows.len());
+    Ok(0)
+}
+
 /// `locag pingpong` — print the per-class postal series.
 pub fn pingpong(args: &Args) -> Result<i32> {
     let m = machine_by_name(&args.get_str("machine", "lassen"))?;
@@ -242,7 +462,7 @@ pub fn pingpong(args: &Args) -> Result<i32> {
 pub fn e2e(args: &Args) -> Result<i32> {
     let cfg = ServeConfig {
         artifact_dir: args.get_str("artifacts", "artifacts").into(),
-        algo: algo_by_name(&args.get_str("algo", "loc-bruck"))?,
+        algo: algo_by_name(&args.get_str("algo", "model-tuned"))?,
         regions: args.get_usize("regions", 2)?,
         requests: args.get_usize("requests", 16)?,
         warmup: args.get_usize("warmup", 2)?,

@@ -3,10 +3,13 @@
 //! ```text
 //! locag quickstart                      # paper Example 2.1 walkthrough
 //! locag run --op alltoall --algo loc-aware --regions 16 --ppr 8
+//! locag run --algo model-tuned          # cost-model-selected allgather
+//! locag explain --algo loc-bruck --regions 4 --ppr 4   # schedule + costs
+//! locag bench --json results/BENCH_collectives.json    # perf trajectory
 //! locag allgather --algo loc-bruck --regions 16 --ppr 8 [--machine lassen]
 //! locag figure 9 [--out results/fig9.csv] [--max-p 1024]
 //! locag pingpong [--machine quartz]
-//! locag e2e [--algo loc-bruck] [--regions 2] [--requests 16] [--artifacts DIR]
+//! locag e2e [--algo model-tuned] [--regions 2] [--requests 16] [--artifacts DIR]
 //! locag validate [--max-p 256]
 //! ```
 
@@ -33,6 +36,8 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "algos" => commands::algos(&args),
         "run" => commands::run_op(&args),
         "allgather" => commands::allgather(&args),
+        "explain" => commands::explain(&args),
+        "bench" => commands::bench(&args),
         "figure" => commands::figure(&args),
         "pingpong" => commands::pingpong(&args),
         "pattern" => commands::pattern(&args),
@@ -71,14 +76,27 @@ COMMANDS
                --machine NAME    lassen | quartz (default lassen)
   allgather    Shorthand for `run --op allgather` (paper compatibility).
                Same options as run, u32 payloads.
+  explain      Print an algorithm's communication schedule (the IR the
+               executor runs) and its cost breakdown: per-class traffic
+               and the model-predicted completion time.
+               --op OP --algo NAME --regions N --ppr N --values N
+               --rank N (whose schedule to print; default 0) --machine NAME
+  bench        Micro-bench a fixed (shape, algorithm) grid and emit a
+               BENCH_*.json perf-trajectory artifact (p, n, algo, vtime,
+               predicted, wall) for cross-PR regression tracking.
+               --json FILE (default results/BENCH_collectives.json)
+               --machine NAME
   figure       Regenerate a figure: 3 | 7 | 8 | 9 | 10 | allreduce | alltoall.
+               Measured figures include the predicted-vs-measured overlay
+               (one "(model)" series per algorithm, from the schedule IR).
                --out FILE        CSV path (default results/figN.csv)
                --max-p N         world-size cap for the sweeps (default 1024)
   pingpong     Print the locality-class ping-pong series (Fig. 3 shape).
                --machine NAME
   pattern      Print the step-by-step communication pattern (paper Figs.
                1 and 4 as text). --algo NAME --regions N --ppr N
-  e2e          Tensor-parallel serving with the allgather on the hot path.
+  e2e          Tensor-parallel serving with the allgather on the hot path
+               (default algorithm: model-tuned).
                --algo NAME --regions N --requests N --artifacts DIR
                --fused (use the fused gathered-matmul artifact)
   validate     Cross-check every algorithm against the expected gather and
@@ -87,8 +105,13 @@ COMMANDS
 ALGORITHMS (case-insensitive; see `locag algos`)
   allgather: system-default bruck ring recursive-doubling dissemination
              hierarchical multilane loc-bruck loc-bruck-v loc-bruck-2level
-  allreduce: recursive-doubling loc-aware
-  alltoall:  system-default pairwise bruck loc-aware
+             model-tuned
+  allreduce: recursive-doubling loc-aware model-tuned
+  alltoall:  system-default pairwise bruck loc-aware model-tuned
+
+  `model-tuned` plans every candidate's schedule, scores each against the
+  machine's locality-split postal model (the IR-derived cost model), and
+  executes the cheapest — the adaptive counterpart to `system-default`.
 "
     .to_string()
 }

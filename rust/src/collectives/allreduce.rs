@@ -1,5 +1,5 @@
-//! Locality-aware allreduce — the paper's §6 future-work extension, as
-//! persistent plans.
+//! Locality-aware allreduce — the paper's §6 future-work extension — as
+//! schedule builders.
 //!
 //! “Locality-awareness can be extended to other collectives, removing
 //! duplicate non-local messages for small data sizes …” We implement the
@@ -15,32 +15,28 @@
 //!   closed by a local allgatherv + combine — `⌈log_pℓ(r)⌉` non-local
 //!   messages per rank.
 //!
-//! Both are [`AllreducePlan`] factories registered in
-//! [`super::plan::AllreduceRegistry`]: groups, sub-communicators, round
-//! schedules, tag blocks and scratch are built once at plan time;
-//! `execute` is pure communication + summation with zero allocation and no
-//! tag consumption. Shape preconditions (power-of-two sizes, uniform
-//! groups) surface at `plan()` time; `n == 0` plans are uniform no-ops.
+//! Both build [`Schedule`]s whose reductions are explicit
+//! [`Step::Reduce`](super::schedule::Step) steps, executed by the one
+//! generic interpreter with the [`Summable`] reducer — groups, round
+//! schedules, tag blocks and scratch are all schedule data; `execute` is
+//! pure communication + summation with zero allocation and no tag
+//! consumption. Shape preconditions (power-of-two sizes, uniform groups)
+//! surface at `plan()` time; `n == 0` plans are uniform no-ops.
 
-use super::grouping::{group_ranks, require_uniform, GroupBy};
+use super::grouping::GroupBy;
 use super::plan::{
-    check_reduce_io, trivial_reduce_plan, AllreduceAlgorithm, AllreducePlan, CollectivePlan,
-    NamedAlgorithm, PlanCore, SelectedPlan, Shape,
+    trivial_reduce_plan, AllreduceAlgorithm, AllreducePlan, NamedAlgorithm, OpKind, Shape,
 };
-use super::primitives::AllgathervPlan;
+use super::schedule::{
+    emit_group_allgatherv, emit_group_rd_allreduce, locate, uniform_size, SchedPlan, Schedule,
+    ScheduleBuilder, Slice, WorldView,
+};
 use crate::comm::Comm;
 use crate::error::Result;
 
 /// Element types that can be summed (re-exported from the plan framework;
 /// the reduction used by the paper's allreduce reference [4]).
 pub use super::plan::Summable;
-
-fn add_into<T: Summable>(acc: &mut [T], x: &[T]) {
-    debug_assert_eq!(acc.len(), x.len());
-    for (a, b) in acc.iter_mut().zip(x) {
-        *a = *a + *b;
-    }
-}
 
 /// Standard recursive-doubling allreduce (registry entry).
 pub struct RecursiveDoublingAllreduce;
@@ -60,75 +56,25 @@ impl<T: Summable> AllreduceAlgorithm<T> for RecursiveDoublingAllreduce {
         if let Some(p) = trivial_reduce_plan("recursive-doubling", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(RecursiveDoublingAllreducePlan::<T>::new(comm, shape.n)?))
+        let sched =
+            build_rd_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "recursive-doubling", sched)?)
     }
 }
 
-/// Persistent recursive-doubling allreduce plan: XOR peer schedule, one
-/// tag per step, one `n`-element receive scratch.
-pub struct RecursiveDoublingAllreducePlan<T: Summable> {
-    core: PlanCore,
-    /// XOR exchange peers, one per step.
-    peers: Vec<usize>,
-    /// Receive scratch, length `n`.
-    recv: Vec<T>,
-}
-
-impl<T: Summable> RecursiveDoublingAllreducePlan<T> {
-    /// Collectively plan the exchange schedule. Errors at plan time on
-    /// non-power-of-two communicators.
-    pub fn new(comm: &Comm, n: usize) -> Result<RecursiveDoublingAllreducePlan<T>> {
-        let p = comm.size();
-        if !p.is_power_of_two() {
-            return Err(crate::error::Error::Precondition(format!(
-                "recursive-doubling allreduce requires power-of-two size, got {p}"
-            )));
-        }
-        let id = comm.rank();
-        let mut peers = Vec::new();
-        let mut dist = 1usize;
-        while dist < p {
-            peers.push(id ^ dist);
-            dist <<= 1;
-        }
-        Ok(RecursiveDoublingAllreducePlan {
-            core: PlanCore::new(comm, n, peers.len() as u64),
-            peers,
-            recv: vec![T::default(); n],
-        })
-    }
-}
-
-impl<T: Summable> CollectivePlan for RecursiveDoublingAllreducePlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "recursive-doubling"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Summable> AllreducePlan<T> for RecursiveDoublingAllreducePlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        let core = &self.core;
-        check_reduce_io(core.n, input, output)?;
-        if core.n == 0 {
-            return Ok(());
-        }
-        output.copy_from_slice(input);
-        for (i, &peer) in self.peers.iter().enumerate() {
-            let tag = core.tag(i as u64);
-            let _req = core.comm.isend(output, peer, tag)?;
-            core.comm.recv_into(peer, tag, &mut self.recv)?;
-            add_into(output, &self.recv);
-        }
-        Ok(())
-    }
+/// Build the recursive-doubling allreduce schedule for one rank (pure;
+/// SPMD). Errors on non-power-of-two communicators.
+pub fn build_rd_schedule(
+    p: usize,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    let mut sb = ScheduleBuilder::new("recursive doubling");
+    sb.copy(Slice::input(0, n), Slice::output(0, n));
+    let members: Vec<usize> = (0..p).collect();
+    emit_group_rd_allreduce(&mut sb, &members, rank, n)?;
+    Ok(sb.finish(OpKind::Allreduce, p, n, elem_bytes, "recursive-doubling"))
 }
 
 /// True if Algorithm 2's round structure sums every region exactly once
@@ -167,146 +113,83 @@ impl<T: Summable> AllreduceAlgorithm<T> for LocalityAwareAllreduce {
         if let Some(p) = trivial_reduce_plan("loc-aware", comm, shape) {
             return Ok(p);
         }
-        LocalityAwareAllreducePlan::<T>::plan_boxed(comm, shape.n)
+        let view = WorldView::from_comm(comm);
+        let sched = build_loc_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
     }
 }
 
-/// One non-local exchange-and-combine round of the locality-aware plan.
-struct Round<T: Summable> {
-    /// Whether this rank exchanges non-locally this round.
-    active: bool,
-    /// Exchange peers in parent-communicator ranks (valid when `active`).
-    dst: usize,
-    src: usize,
-    /// Local allgatherv of the received partial sums (counts fixed at
-    /// plan time: `n` for each active local rank, 0 otherwise).
-    vplan: AllgathervPlan<T>,
-    /// Non-local receive scratch, length `n` when active.
-    recv: Vec<T>,
-    /// Local-gather output, one `n`-chunk per active local rank.
-    gathered: Vec<T>,
-}
-
-/// Persistent locality-aware allreduce plan (see module docs).
+/// Build the locality-aware allreduce schedule for one rank (pure; SPMD).
 ///
 /// Summation is not idempotent, so the non-local rounds require aligned
 /// groups ([`locality_rounds_align`]); single-region, single-rank-per-
-/// region and unaligned shapes fall back to a recursive-doubling plan
+/// region and unaligned shapes fall back to a recursive-doubling schedule
 /// (whose power-of-two precondition then also surfaces at plan time).
-pub struct LocalityAwareAllreducePlan<T: Summable> {
-    /// Parent communicator + one exchange tag per round.
-    core: PlanCore,
-    /// Phase 1: allreduce within the region (over the retained sub-comm).
-    phase1: RecursiveDoublingAllreducePlan<T>,
-    rounds: Vec<Round<T>>,
-}
-
-impl<T: Summable> LocalityAwareAllreducePlan<T> {
-    /// Collectively plan over `comm`, falling back to recursive doubling
-    /// when the topology offers no exploitable (aligned) locality.
-    pub fn plan_boxed(comm: &Comm, n: usize) -> Result<Box<dyn AllreducePlan<T>>> {
-        let groups = group_ranks(comm, GroupBy::Region)?;
-        let ppr = require_uniform(&groups, "locality-aware allreduce")?;
-        let r_n = groups.count();
-        if r_n == 1 || ppr == 1 || !locality_rounds_align(r_n, ppr) {
-            return Ok(Box::new(SelectedPlan {
-                name: "loc-aware",
-                inner: Box::new(RecursiveDoublingAllreducePlan::<T>::new(comm, n)?)
-                    as Box<dyn AllreducePlan<T>>,
-            }));
-        }
-        let g = groups.mine;
-        let l = groups.my_local;
-        let local_comm = comm.sub(&groups.members[g])?;
-        // Phase 1 plans on the local communicator (its own tag space);
-        // plan-time error if ppr is not a power of two.
-        let phase1 = RecursiveDoublingAllreducePlan::<T>::new(&local_comm, n)?;
-
-        // Count the rounds first so the parent tag block is one reservation.
-        let mut n_rounds = 0u64;
-        let mut width = 1usize;
-        while width < r_n {
-            n_rounds += 1;
-            width = width.saturating_mul(ppr);
-        }
-        let core = PlanCore::new(comm, n, n_rounds);
-
-        // Invariant per round: every rank of region g holds the exact sum
-        // over regions [g, g+width) mod r_n. Local rank j ≥ 1 fetches the
-        // disjoint group [g + j·width, g + (j+1)·width); alignment
-        // (checked above) guarantees no group wraps into held regions.
-        let mut rounds = Vec::new();
-        let mut width = 1usize;
-        while width < r_n {
-            let blocks = (r_n / width).min(ppr); // groups reachable this round
-            let active_j = |j: usize| j > 0 && j < blocks;
-            let active = active_j(l);
-            let (dst, src) = if active {
-                let dist = (l * width) % r_n;
-                (
-                    groups.members[(g + r_n - dist) % r_n][l],
-                    groups.members[(g + dist) % r_n][l],
-                )
-            } else {
-                (0, 0)
-            };
-            let counts: Vec<usize> =
-                (0..ppr).map(|j| if active_j(j) { n } else { 0 }).collect();
-            let total: usize = counts.iter().sum();
-            let vplan = AllgathervPlan::<T>::new(&local_comm, &counts)?;
-            rounds.push(Round {
-                active,
-                dst,
-                src,
-                vplan,
-                recv: vec![T::default(); if active { n } else { 0 }],
-                gathered: vec![T::default(); total],
-            });
-            width = width.saturating_mul(ppr);
-        }
-        Ok(Box::new(LocalityAwareAllreducePlan { core, phase1, rounds }))
+pub fn build_loc_schedule(
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    let all: Vec<usize> = (0..view.p).collect();
+    let groups = view.split(&all, GroupBy::Region);
+    let ppr = uniform_size(&groups, "locality-aware allreduce")?;
+    let r_n = groups.len();
+    if r_n == 1 || ppr == 1 || !locality_rounds_align(r_n, ppr) {
+        let mut sched = build_rd_schedule(view.p, rank, n, elem_bytes)?;
+        sched.label = "loc-aware[recursive-doubling]".to_string();
+        return Ok(sched);
     }
-}
+    let (g, l) = locate(&groups, rank)?;
 
-impl<T: Summable> CollectivePlan for LocalityAwareAllreducePlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "loc-aware"
-    }
+    let mut sb = ScheduleBuilder::new("local allreduce");
+    // Phase 1: allreduce within the region → every rank holds its region's
+    // sum (plan-time error if ppr is not a power of two).
+    sb.copy(Slice::input(0, n), Slice::output(0, n));
+    emit_group_rd_allreduce(&mut sb, &groups[g], rank, n)?;
 
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Summable> AllreducePlan<T> for LocalityAwareAllreducePlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        let core = &self.core;
-        check_reduce_io(core.n, input, output)?;
-        let n = core.n;
-        if n == 0 {
-            return Ok(());
+    // Invariant per round: every rank of region g holds the exact sum over
+    // regions [g, g+width) mod r_n. Local rank j ≥ 1 fetches the disjoint
+    // group [g + j·width, g + (j+1)·width); alignment (checked above)
+    // guarantees no group wraps into held regions.
+    let mut width = 1usize;
+    let mut round_no = 1usize;
+    while width < r_n {
+        sb.round(format!("non-local round {round_no}"));
+        let tag = sb.tag();
+        let blocks = (r_n / width).min(ppr); // groups reachable this round
+        let active_j = |j: usize| j > 0 && j < blocks;
+        let active = active_j(l);
+        let recv = if active { Some(sb.scratch(n)) } else { None };
+        if let Some(rbuf) = recv {
+            let dist = (l * width) % r_n;
+            let to = groups[(g + r_n - dist) % r_n][l];
+            let from = groups[(g + dist) % r_n][l];
+            sb.sendrecv(to, Slice::output(0, n), from, Slice::at(rbuf, 0, n), tag, 0);
         }
-        // Phase 1: local allreduce → every rank holds its region's sum.
-        self.phase1.execute(input, output)?;
-        // Phase 2: sparse non-local rounds, each closed by a local
-        // allgatherv of the received partials + combine.
-        for (i, round) in self.rounds.iter_mut().enumerate() {
-            if round.active {
-                let tag = core.tag(i as u64);
-                let _req = core.comm.isend(output, round.dst, tag)?;
-                core.comm.recv_into(round.src, tag, &mut round.recv)?;
-            }
-            round.vplan.execute(&round.recv, &mut round.gathered)?;
-            for part in round.gathered.chunks_exact(n) {
-                add_into(output, part);
-            }
+        // Local allgatherv of the received partials, then combine.
+        let counts: Vec<usize> = (0..ppr).map(|j| if active_j(j) { n } else { 0 }).collect();
+        let total: usize = counts.iter().sum();
+        let gathered = sb.scratch(total);
+        let contrib = match recv {
+            Some(rbuf) => Slice::at(rbuf, 0, n),
+            None => Slice::input(0, 0),
+        };
+        emit_group_allgatherv(
+            &mut sb,
+            &groups[g],
+            rank,
+            &counts,
+            contrib,
+            Slice::at(gathered, 0, total),
+        );
+        for c in 0..total / n {
+            sb.reduce(Slice::at(gathered, c * n, n), Slice::output(0, n));
         }
-        Ok(())
+        width = width.saturating_mul(ppr);
+        round_no += 1;
     }
+    Ok(sb.finish(OpKind::Allreduce, view.p, n, elem_bytes, "loc-aware"))
 }
 
 /// One-shot standard recursive-doubling allreduce: plan + single execute

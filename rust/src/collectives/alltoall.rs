@@ -1,21 +1,23 @@
 //! All-to-all exchanges — the §6 extension, and the operation the original
-//! Bruck et al. '97 paper [7] was designed for — as persistent plans.
+//! Bruck et al. '97 paper [7] was designed for — as schedule builders.
 //!
 //! `alltoall` contract: rank `i` holds `p` blocks of `n` elements, block
 //! `j` destined for rank `j`; afterwards rank `i` holds block `i` of every
 //! rank, in rank order (`MPI_Alltoall` semantics).
 //!
-//! Three implementations, all [`AlltoallPlan`] factories registered in
-//! [`super::plan::AlltoallRegistry`] (plus the MPICH-style dispatcher in
-//! [`super::dispatch::SystemDefaultAlltoall`]):
+//! Three builders, all registered in [`super::plan::AlltoallRegistry`]
+//! (plus the MPICH-style dispatcher in
+//! [`super::dispatch::SystemDefaultAlltoall`] and the cost-model-driven
+//! [`super::model_tuned::ModelTunedAlltoall`]):
 //!
-//! * **`pairwise`** — `p−1` rounds of `sendrecv` with XOR/shift partners:
+//! * **`pairwise`** — `p−1` rounds of `SendRecv` with XOR/shift partners:
 //!   the large-message baseline (one message per peer, no forwarding);
 //! * **`bruck`** — the classic log-step algorithm: `⌈log2(p)⌉` rounds where
 //!   round `k` forwards every block whose destination distance has bit
 //!   `k` set. Minimal message count, `O(b·log p)` forwarded bytes. The
-//!   moving slot set of each round depends only on `(p, k)`, so the plan
-//!   precomputes it and the wire format needs no per-block headers;
+//!   moving slot set of each round depends only on `(p, k)`, so the
+//!   schedule precomputes it and the wire format needs no per-block
+//!   headers;
 //! * **`loc-aware`** — the paper's §6 direction applied to alltoall:
 //!   aggregate per destination *region* locally (each local rank `ℓ`
 //!   collects the blocks of all local peers headed for the region group it
@@ -25,15 +27,18 @@
 //!   aggregated transfers; non-local *duplicate* bytes disappear because
 //!   payloads are aggregated once per region pair.
 //!
-//! Plans own their schedules, tag blocks and scratch: `execute` is pure
-//! communication with zero allocation and no tag consumption. Shape
-//! preconditions (uniform groups) surface at `plan()` time; `n == 0`
-//! plans are uniform no-ops.
+//! All three are pure schedule builders executed by the generic
+//! [`SchedPlan`] interpreter: schedules own their tag layouts and scratch,
+//! `execute` is pure communication with zero allocation and no tag
+//! consumption. Shape preconditions (uniform groups) surface at `plan()`
+//! time; `n == 0` plans are uniform no-ops.
 
-use super::grouping::{group_ranks, require_uniform, GroupBy};
+use super::grouping::GroupBy;
 use super::plan::{
-    check_a2a_io, trivial_a2a_plan, AlltoallAlgorithm, AlltoallPlan, CollectivePlan,
-    NamedAlgorithm, PlanCore, SelectedPlan, Shape,
+    trivial_a2a_plan, AlltoallAlgorithm, AlltoallPlan, NamedAlgorithm, OpKind, Shape,
+};
+use super::schedule::{
+    locate, uniform_size, SchedPlan, Schedule, ScheduleBuilder, Slice, WorldView,
 };
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
@@ -56,78 +61,40 @@ impl<T: Pod> AlltoallAlgorithm<T> for PairwiseAlltoall {
         if let Some(p) = trivial_a2a_plan("pairwise", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(PairwiseAlltoallPlan::<T>::new(comm, shape.n)))
+        let sched =
+            build_pairwise_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        Ok(SchedPlan::<T>::boxed(comm, "pairwise", sched)?)
     }
 }
 
-/// One pairwise round: whom to send to and receive from.
-struct Pair {
-    dst: usize,
-    src: usize,
-}
-
-/// Persistent pairwise alltoall plan: partner schedule + tag block, zero
-/// scratch (blocks move straight between the caller's buffers).
-pub struct PairwiseAlltoallPlan<T: Pod> {
-    core: PlanCore,
-    rounds: Vec<Pair>,
-    _elem: std::marker::PhantomData<T>,
-}
-
-impl<T: Pod> PairwiseAlltoallPlan<T> {
-    /// Collectively plan a pairwise alltoall of `n`-element blocks.
-    /// Round `k` trades with `rank XOR k` (power-of-two `p`) or
-    /// `(rank ± k) mod p` otherwise.
-    pub fn new(comm: &Comm, n: usize) -> PairwiseAlltoallPlan<T> {
-        let p = comm.size();
-        let id = comm.rank();
-        let rounds: Vec<Pair> = (1..p)
-            .map(|k| {
-                if p.is_power_of_two() {
-                    Pair { dst: id ^ k, src: id ^ k }
-                } else {
-                    Pair { dst: (id + k) % p, src: (id + p - k) % p }
-                }
-            })
-            .collect();
-        PairwiseAlltoallPlan {
-            core: PlanCore::new(comm, n, rounds.len() as u64),
-            rounds,
-            _elem: std::marker::PhantomData,
-        }
+/// Build the pairwise-exchange schedule for one rank (pure; SPMD). Round
+/// `k` trades with `rank XOR k` (power-of-two `p`) or `(rank ± k) mod p`
+/// otherwise; blocks move straight between the caller's buffers.
+pub fn build_pairwise_schedule(
+    p: usize,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Schedule {
+    let mut sb = ScheduleBuilder::new("pairwise");
+    sb.copy(Slice::input(rank * n, n), Slice::output(rank * n, n));
+    for k in 1..p {
+        let tag = sb.tag();
+        let (dst, src) = if p.is_power_of_two() {
+            (rank ^ k, rank ^ k)
+        } else {
+            ((rank + k) % p, (rank + p - k) % p)
+        };
+        sb.sendrecv(
+            dst,
+            Slice::input(dst * n, n),
+            src,
+            Slice::output(src * n, n),
+            tag,
+            0,
+        );
     }
-}
-
-impl<T: Pod> CollectivePlan for PairwiseAlltoallPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "pairwise"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Pod> AlltoallPlan<T> for PairwiseAlltoallPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        let core = &self.core;
-        check_a2a_io(core.n, core.p, input, output)?;
-        if core.n == 0 {
-            return Ok(());
-        }
-        let (n, id) = (core.n, core.id);
-        output[id * n..(id + 1) * n].copy_from_slice(&input[id * n..(id + 1) * n]);
-        for (k, pair) in self.rounds.iter().enumerate() {
-            let tag = core.tag(k as u64);
-            let _rq = core.comm.isend(&input[pair.dst * n..(pair.dst + 1) * n], pair.dst, tag)?;
-            core.comm.recv_into(pair.src, tag, &mut output[pair.src * n..(pair.src + 1) * n])?;
-        }
-        Ok(())
-    }
+    sb.finish(OpKind::Alltoall, p, n, elem_bytes, "pairwise")
 }
 
 /// Bruck alltoall (registry entry).
@@ -148,110 +115,70 @@ impl<T: Pod> AlltoallAlgorithm<T> for BruckAlltoall {
         if let Some(p) = trivial_a2a_plan("bruck", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(BruckAlltoallPlan::<T>::new(comm, shape.n)))
+        let sched =
+            build_bruck_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        Ok(SchedPlan::<T>::boxed(comm, "bruck", sched)?)
     }
 }
 
-/// One Bruck round: peers plus the (rank-independent) moving slot set.
-struct A2aStep {
-    to: usize,
-    from: usize,
-    /// Slot indices with round-bit set, ascending. The set depends only on
-    /// `(p, k)`, so sender and receiver agree without headers.
-    moving: Vec<usize>,
-}
-
-/// Persistent Bruck alltoall plan. Blocks are kept in "distance" order
-/// (slot `d` holds the block currently destined `d` ranks ahead); round
-/// `k` ships every slot with bit `k` set to rank `id + 2^k`, headerless
-/// (the slot schedule is precomputed on both sides).
-pub struct BruckAlltoallPlan<T: Pod> {
-    core: PlanCore,
-    steps: Vec<A2aStep>,
-    /// slots[d·n..] = block destined for rank (id + d) mod p.
-    slots: Vec<T>,
-    /// Packed send payload scratch (largest round).
-    pack: Vec<T>,
-    /// Receive scratch (largest round).
-    unpack: Vec<T>,
-}
-
-impl<T: Pod> BruckAlltoallPlan<T> {
-    /// Collectively plan a Bruck alltoall of `n`-element blocks.
-    pub fn new(comm: &Comm, n: usize) -> BruckAlltoallPlan<T> {
-        let p = comm.size();
-        let id = comm.rank();
-        let mut steps = Vec::new();
+/// Build the Bruck alltoall schedule for one rank (pure; SPMD). Blocks are
+/// kept in "distance" order (slot `d` holds the block currently destined
+/// `d` ranks ahead); round `k` ships every slot with bit `k` set to rank
+/// `id + 2^k`, headerless (the slot schedule is identical on both sides).
+pub fn build_bruck_schedule(
+    p: usize,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Schedule {
+    let mut sb = ScheduleBuilder::new("rotate to distance order");
+    let slots = sb.scratch(p * n);
+    // slots[d] = input block (rank + d) mod p ⇔ dst slot (j + p - rank) % p
+    // for input block j — a pure rotation.
+    sb.rotate(
+        Slice::input(0, p * n),
+        Slice::at(slots, 0, p * n),
+        n,
+        (p - rank % p) % p,
+    );
+    let mut moving_max = 0usize;
+    let mut k = 0u32;
+    while (1usize << k) < p {
+        moving_max = moving_max.max((0..p).filter(|d| d & (1usize << k) != 0).count());
+        k += 1;
+    }
+    if moving_max > 0 {
+        let pack = sb.scratch(moving_max * n);
+        let unpack = sb.scratch(moving_max * n);
         let mut k = 0u32;
         while (1usize << k) < p {
             let bit = 1usize << k;
-            steps.push(A2aStep {
-                to: (id + bit) % p,
-                from: (id + p - bit) % p,
-                moving: (0..p).filter(|d| d & bit != 0).collect(),
-            });
-            k += 1;
-        }
-        let max_moving = steps.iter().map(|s| s.moving.len()).max().unwrap_or(0);
-        BruckAlltoallPlan {
-            core: PlanCore::new(comm, n, steps.len() as u64),
-            steps,
-            slots: vec![T::default(); p * n],
-            pack: vec![T::default(); max_moving * n],
-            unpack: vec![T::default(); max_moving * n],
-        }
-    }
-}
-
-impl<T: Pod> CollectivePlan for BruckAlltoallPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "bruck"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Pod> AlltoallPlan<T> for BruckAlltoallPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        let core = &self.core;
-        check_a2a_io(core.n, core.p, input, output)?;
-        if core.n == 0 {
-            return Ok(());
-        }
-        let (n, p, id) = (core.n, core.p, core.id);
-        // Rotate into distance order: slot d = block for rank (id + d).
-        for d in 0..p {
-            let dst = (id + d) % p;
-            self.slots[d * n..(d + 1) * n].copy_from_slice(&input[dst * n..(dst + 1) * n]);
-        }
-        for (k, s) in self.steps.iter().enumerate() {
-            let tag = core.tag(k as u64);
-            let len = s.moving.len() * n;
-            for (i, &d) in s.moving.iter().enumerate() {
-                self.pack[i * n..(i + 1) * n].copy_from_slice(&self.slots[d * n..(d + 1) * n]);
+            sb.round(format!("round {k}"));
+            let tag = sb.tag();
+            let to = (rank + bit) % p;
+            let from = (rank + p - bit) % p;
+            let moving: Vec<usize> = (0..p).filter(|d| d & bit != 0).collect();
+            for (i, &d) in moving.iter().enumerate() {
+                sb.copy(Slice::at(slots, d * n, n), Slice::at(pack, i * n, n));
             }
-            let _rq = core.comm.isend(&self.pack[..len], s.to, tag)?;
-            core.comm.recv_into(s.from, tag, &mut self.unpack[..len])?;
+            let len = moving.len() * n;
+            sb.sendrecv(to, Slice::at(pack, 0, len), from, Slice::at(unpack, 0, len), tag, 0);
             // The receiver is `bit` closer to each destination: same slot
             // indices, same order — no headers needed.
-            for (i, &d) in s.moving.iter().enumerate() {
-                self.slots[d * n..(d + 1) * n].copy_from_slice(&self.unpack[i * n..(i + 1) * n]);
+            for (i, &d) in moving.iter().enumerate() {
+                sb.copy(Slice::at(unpack, i * n, n), Slice::at(slots, d * n, n));
             }
+            k += 1;
         }
-        // After all rounds slot d holds the block *from* rank (id - d)
-        // mod p destined for us. Unpack into rank order.
-        for d in 0..p {
-            let src = (id + p - d) % p;
-            output[src * n..(src + 1) * n].copy_from_slice(&self.slots[d * n..(d + 1) * n]);
-        }
-        Ok(())
     }
+    // After all rounds slot d holds the block *from* rank (rank - d) mod p
+    // destined for us. Unpack into rank order.
+    sb.round("unrotate");
+    for d in 0..p {
+        let src = (rank + p - d) % p;
+        sb.copy(Slice::at(slots, d * n, n), Slice::output(src * n, n));
+    }
+    sb.finish(OpKind::Alltoall, p, n, elem_bytes, "bruck")
 }
 
 /// Locality-aware alltoall (registry entry).
@@ -272,13 +199,16 @@ impl<T: Pod> AlltoallAlgorithm<T> for LocAwareAlltoall {
         if let Some(p) = trivial_a2a_plan("loc-aware", comm, shape) {
             return Ok(p);
         }
-        LocAwareAlltoallPlan::<T>::plan_boxed(comm, shape.n)
+        let view = WorldView::from_comm(comm);
+        let sched = build_loc_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
     }
 }
 
-/// Persistent locality-aware alltoall plan: local gather per destination
-/// region → one aggregated non-local exchange per (region, owner) pair →
-/// local scatter.
+/// Build the locality-aware alltoall schedule for one rank (pure; SPMD):
+/// local gather per destination region → one aggregated non-local exchange
+/// per (region, owner) pair → local scatter. Degrades to pairwise exchange
+/// when there is no locality to exploit (one region, or one rank/region).
 ///
 /// Local rank `ℓ` owns destination regions `{ℓ, ℓ+pℓ, ℓ+2pℓ, …}`; for each
 /// owned region it receives the local peers' blocks (local gather),
@@ -286,168 +216,113 @@ impl<T: Pod> AlltoallAlgorithm<T> for LocAwareAlltoall {
 /// and finally the region scatters received aggregates locally. Non-local
 /// messages per rank: `⌈(r−1)/pℓ⌉`, each `pℓ²·n` elements — no duplicate
 /// values cross regions.
-pub struct LocAwareAlltoallPlan<T: Pod> {
-    core: PlanCore,
-    /// Group member lists in communicator ranks (regions by smallest rank).
-    members: Vec<Vec<usize>>,
-    g: usize,
-    l: usize,
-    ppr: usize,
-    r_n: usize,
-    /// Remote regions this rank owns (`rg != g && rg % ppr == l`).
-    owned: Vec<usize>,
-    /// Step-1 per-region aggregate of this rank's blocks, `ppr·n`.
-    sendagg: Vec<T>,
-    /// Gathered aggregate for one owned region, `ppr·ppr·n`
-    /// (layout `[local src][dst in rg]`).
-    agg: Vec<T>,
-    /// Received aggregate from one owned region's peer, `ppr·ppr·n`.
-    got: Vec<T>,
-    /// One destination row of a received aggregate, `ppr·n`.
-    per_dst: Vec<T>,
-}
+pub fn build_loc_schedule(
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    let all: Vec<usize> = (0..view.p).collect();
+    let groups = view.split(&all, GroupBy::Region);
+    let ppr = uniform_size(&groups, "locality-aware alltoall")?;
+    let r_n = groups.len();
+    if ppr == 1 || r_n == 1 {
+        let mut sched = build_pairwise_schedule(view.p, rank, n, elem_bytes);
+        sched.label = "loc-aware[pairwise]".to_string();
+        return Ok(sched);
+    }
+    let (g, l) = locate(&groups, rank)?;
+    let r_n64 = r_n as u64;
 
-impl<T: Pod> LocAwareAlltoallPlan<T> {
-    /// Collectively plan over `comm`, degrading to pairwise exchange when
-    /// there is no locality to exploit (one region, or one rank/region).
-    pub fn plan_boxed(comm: &Comm, n: usize) -> Result<Box<dyn AlltoallPlan<T>>> {
-        let groups = group_ranks(comm, GroupBy::Region)?;
-        let ppr = require_uniform(&groups, "locality-aware alltoall")?;
-        let r_n = groups.count();
-        if ppr == 1 || r_n == 1 {
-            return Ok(Box::new(SelectedPlan {
-                name: "loc-aware",
-                inner: Box::new(PairwiseAlltoallPlan::<T>::new(comm, n))
-                    as Box<dyn AlltoallPlan<T>>,
-            }));
+    let mut sb = ScheduleBuilder::new("local direct exchange");
+    // Tag layout: [0] local direct | [1, 1+r_n) gather by region |
+    // [1+r_n, 1+r_n+r_n²) exchange by (from-region, to-region) |
+    // [1+r_n+r_n², ...+r_n) scatter by region.
+    let t0 = sb.tag_block(1 + r_n64 + r_n64 * r_n64 + r_n64);
+    let tag_local = t0;
+    let tag_gather = |rg: usize| t0 + 1 + rg as u64;
+    let tag_xchg = |from_g: usize, to_g: usize| t0 + 1 + r_n64 + (from_g * r_n + to_g) as u64;
+    let tag_scatter = |rg: usize| t0 + 1 + r_n64 + r_n64 * r_n64 + rg as u64;
+
+    // Blocks for our own region move directly (one tag; distinct
+    // (src, dst) pairs disambiguate).
+    for &r in &groups[g] {
+        if r == rank {
+            sb.copy(Slice::input(rank * n, n), Slice::output(rank * n, n));
+        } else {
+            sb.send(r, Slice::input(r * n, n), tag_local, 0);
         }
-        let g = groups.mine;
-        let l = groups.my_local;
-        let owned: Vec<usize> = (0..r_n).filter(|&rg| rg != g && rg % ppr == l).collect();
-        // Tag layout: [0] local direct | [1, 1+r_n) gather by region |
-        // [1+r_n, 1+r_n+r_n²) exchange by (from-region, to-region) |
-        // [1+r_n+r_n², ...+r_n) scatter by region.
-        let tags = 1 + r_n as u64 + (r_n * r_n) as u64 + r_n as u64;
-        Ok(Box::new(LocAwareAlltoallPlan {
-            core: PlanCore::new(comm, n, tags),
-            members: groups.members,
-            g,
-            l,
-            ppr,
-            r_n,
-            owned,
-            sendagg: vec![T::default(); ppr * n],
-            agg: vec![T::default(); ppr * ppr * n],
-            got: vec![T::default(); ppr * ppr * n],
-            per_dst: vec![T::default(); ppr * n],
-        }))
     }
-}
-
-impl<T: Pod> CollectivePlan for LocAwareAlltoallPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "loc-aware"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Pod> AlltoallPlan<T> for LocAwareAlltoallPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_a2a_io(self.core.n, self.core.p, input, output)?;
-        let Self { core, members, g, l, ppr, r_n, owned, sendagg, agg, got, per_dst } = self;
-        let (n, id, g, l, ppr, r_n) = (core.n, core.id, *g, *l, *ppr, *r_n);
-        if n == 0 {
-            return Ok(());
+    for &r in &groups[g] {
+        if r != rank {
+            sb.recv(r, Slice::output(r * n, n), tag_local, 0);
         }
-        let comm = &core.comm;
-        // Tag layout (see plan_boxed): local | gather | exchange | scatter.
-        let tag_local = core.tag(0);
-        let tag_gather = |rg: usize| core.tag(1 + rg as u64);
-        let tag_xchg = |from_g: usize, to_g: usize| {
-            core.tag(1 + r_n as u64 + (from_g * r_n + to_g) as u64)
-        };
-        let tag_scatter = |rg: usize| core.tag(1 + r_n as u64 + (r_n * r_n) as u64 + rg as u64);
+    }
 
-        // Blocks for our own region move directly (one tag; distinct
-        // (src, dst) pairs disambiguate).
-        for &rank in members[g].iter() {
-            if rank == id {
-                output[id * n..(id + 1) * n].copy_from_slice(&input[id * n..(id + 1) * n]);
+    // Step 1: send my blocks for each remote region to its local owner.
+    sb.round("aggregate per destination region");
+    let sendagg = sb.scratch(ppr * n);
+    for (rg, members) in groups.iter().enumerate() {
+        if rg == g {
+            continue;
+        }
+        let owner = groups[g][rg % ppr];
+        for (i, &dst) in members.iter().enumerate() {
+            sb.copy(Slice::input(dst * n, n), Slice::at(sendagg, i * n, n));
+        }
+        sb.send(owner, Slice::at(sendagg, 0, ppr * n), tag_gather(rg), 0);
+    }
+
+    // Steps 1b/2 for the regions I own: gather the region aggregate,
+    // exchange it with rg's owner of OUR region.
+    sb.round("aggregated exchange");
+    let owned: Vec<usize> = (0..r_n).filter(|&rg| rg != g && rg % ppr == l).collect();
+    let agg = sb.scratch(ppr * ppr * n);
+    for &rg in &owned {
+        for (j, &src) in groups[g].iter().enumerate() {
+            sb.recv(src, Slice::at(agg, j * ppr * n, ppr * n), tag_gather(rg), 0);
+        }
+        let peer = groups[rg][g % ppr];
+        sb.send(peer, Slice::at(agg, 0, ppr * ppr * n), tag_xchg(g, rg), 0);
+    }
+
+    // Step 3: receive the aggregates headed to our region from the regions
+    // we own, and scatter rows to the local destinations.
+    sb.round("scatter received aggregates");
+    let got = sb.scratch(ppr * ppr * n);
+    let per_dst = sb.scratch(ppr * n);
+    for &rg in &owned {
+        let peer = groups[rg][g % ppr];
+        sb.recv(peer, Slice::at(got, 0, ppr * ppr * n), tag_xchg(rg, g), 0);
+        // got layout: [src j in rg][dst k in g]; row k goes to member k.
+        for (k, &dstr) in groups[g].iter().enumerate() {
+            for j in 0..ppr {
+                sb.copy(
+                    Slice::at(got, j * ppr * n + k * n, n),
+                    Slice::at(per_dst, j * n, n),
+                );
+            }
+            if dstr == rank {
+                for (j, &src) in groups[rg].iter().enumerate() {
+                    sb.copy(Slice::at(per_dst, j * n, n), Slice::output(src * n, n));
+                }
             } else {
-                let _rq = comm.isend(&input[rank * n..(rank + 1) * n], rank, tag_local)?;
+                sb.send(dstr, Slice::at(per_dst, 0, ppr * n), tag_scatter(rg), 0);
             }
         }
-        for &rank in members[g].iter() {
-            if rank != id {
-                comm.recv_into(rank, tag_local, &mut output[rank * n..(rank + 1) * n])?;
-            }
-        }
-
-        // Step 1: send my blocks for each remote region to its local owner.
-        for rg in 0..r_n {
-            if rg == g {
-                continue;
-            }
-            let owner = members[g][rg % ppr];
-            for (i, &dst) in members[rg].iter().enumerate() {
-                sendagg[i * n..(i + 1) * n].copy_from_slice(&input[dst * n..(dst + 1) * n]);
-            }
-            let _rq = comm.isend(sendagg, owner, tag_gather(rg))?;
-        }
-        // Steps 1b/2 for the regions I own: gather the region aggregate,
-        // exchange it with rg's owner of OUR region.
-        for &rg in owned.iter() {
-            for (j, &src) in members[g].iter().enumerate() {
-                comm.recv_into(
-                    src,
-                    tag_gather(rg),
-                    &mut agg[j * ppr * n..(j + 1) * ppr * n],
-                )?;
-            }
-            let peer = members[rg][g % ppr];
-            let _rq = comm.isend(agg, peer, tag_xchg(g, rg))?;
-        }
-        // Step 3: receive the aggregates headed to our region from the
-        // regions we own, and scatter rows to the local destinations.
-        for &rg in owned.iter() {
-            let peer = members[rg][g % ppr];
-            comm.recv_into(peer, tag_xchg(rg, g), &mut got[..])?;
-            // got layout: [src j in rg][dst k in g]; row k goes to member k.
-            for (k, &dst) in members[g].iter().enumerate() {
-                for j in 0..ppr {
-                    let base = j * ppr * n + k * n;
-                    per_dst[j * n..(j + 1) * n].copy_from_slice(&got[base..base + n]);
-                }
-                if dst == id {
-                    for (j, &src) in members[rg].iter().enumerate() {
-                        output[src * n..(src + 1) * n]
-                            .copy_from_slice(&per_dst[j * n..(j + 1) * n]);
-                    }
-                } else {
-                    let _rq = comm.isend(per_dst, dst, tag_scatter(rg))?;
-                }
-            }
-        }
-        // Receive scattered rows for regions owned by other local ranks.
-        for rg in 0..r_n {
-            if rg == g || rg % ppr == l {
-                continue;
-            }
-            let owner = members[g][rg % ppr];
-            comm.recv_into(owner, tag_scatter(rg), &mut per_dst[..])?;
-            for (j, &src) in members[rg].iter().enumerate() {
-                output[src * n..(src + 1) * n].copy_from_slice(&per_dst[j * n..(j + 1) * n]);
-            }
-        }
-        Ok(())
     }
+    // Receive scattered rows for regions owned by other local ranks.
+    for (rg, members) in groups.iter().enumerate() {
+        if rg == g || rg % ppr == l {
+            continue;
+        }
+        let owner = groups[g][rg % ppr];
+        sb.recv(owner, Slice::at(per_dst, 0, ppr * n), tag_scatter(rg), 0);
+        for (j, &src) in members.iter().enumerate() {
+            sb.copy(Slice::at(per_dst, j * n, n), Slice::output(src * n, n));
+        }
+    }
+    Ok(sb.finish(OpKind::Alltoall, view.p, n, elem_bytes, "loc-aware"))
 }
 
 /// One-shot pairwise-exchange alltoall: plan + single execute.

@@ -1,4 +1,5 @@
-//! The standard Bruck allgather — paper Algorithm 1.
+//! The standard Bruck allgather — paper Algorithm 1 — as a schedule
+//! builder.
 //!
 //! `⌈log2(p)⌉` steps. Before step `i` each rank holds `min(2^i, p)` blocks,
 //! beginning with its own, in “rotated” order: block `j` is the
@@ -9,17 +10,21 @@
 //! global rank order.
 //!
 //! The final rotation is the data-movement hot spot mirrored by the Pallas
-//! kernel `python/compile/kernels/bruck_pack.py` (see DESIGN.md).
+//! kernel `python/compile/kernels/bruck_pack.py` (see DESIGN.md); in the
+//! schedule IR it is the one [`Step::Rotate`](super::schedule::Step) of
+//! the schedule, whose rounds of `SendRecv` steps are Eq. 3's `⌈log2 p⌉`
+//! postal terms, evaluated mechanically by [`crate::model::cost`].
 //!
-//! [`BruckPlan`] is the persistent form: the step schedule and tag block
-//! are computed once, the rotated working buffer is allocated once, and
-//! every [`BruckPlan::execute`] reuses them. It doubles as the inner
-//! engine of the hierarchical, multi-lane and locality-aware plans.
+//! [`build_schedule`] is the whole algorithm: a pure function from
+//! `(p, rank, n)` to a [`Schedule`]; planning wraps it in the generic
+//! [`SchedPlan`] executor and it doubles as the inner engine of the
+//! hierarchical, multi-lane and locality-aware builders (via
+//! [`super::schedule::emit_group_bruck`]).
 
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
-    PlanCore, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
 };
+use super::schedule::{emit_group_bruck, SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
@@ -41,87 +46,23 @@ impl<T: Pod> CollectiveAlgorithm<T> for Bruck {
         if let Some(p) = trivial_plan("bruck", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(BruckPlan::<T>::new(comm, shape.n)))
+        let sched = build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        Ok(SchedPlan::<T>::boxed(comm, "bruck", sched)?)
     }
 }
 
-/// One exchange of the Bruck schedule.
-struct Step {
-    send_to: usize,
-    recv_from: usize,
-    blocks: usize,
-}
-
-/// Persistent Bruck plan: schedule + tag block + rotated working buffer.
-pub struct BruckPlan<T: Pod> {
-    core: PlanCore,
-    steps: Vec<Step>,
-    /// Working buffer in rotated order, length `n·p`.
-    data: Vec<T>,
-}
-
-impl<T: Pod> BruckPlan<T> {
-    /// Collectively plan a Bruck allgather of `n` elements per rank.
-    /// Reserves one collective tag per step on `comm`.
-    pub fn new(comm: &Comm, n: usize) -> BruckPlan<T> {
-        let p = comm.size();
-        let id = comm.rank();
-        let mut steps = Vec::new();
-        let mut dist = 1usize;
-        while dist < p {
-            steps.push(Step {
-                send_to: (id + p - dist) % p,
-                recv_from: (id + dist) % p,
-                // partial final step for non-power-of-two p
-                blocks: dist.min(p - dist),
-            });
-            dist <<= 1;
-        }
-        BruckPlan {
-            core: PlanCore::new(comm, n, steps.len() as u64),
-            steps,
-            data: vec![T::default(); n * p],
-        }
-    }
-}
-
-impl<T: Pod> CollectivePlan for BruckPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "bruck"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for BruckPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        let core = &self.core;
-        check_io(core.n, core.p, input, output)?;
-        if core.n == 0 {
-            return Ok(());
-        }
-        let n = core.n;
-        self.data[..n].copy_from_slice(input);
-        let mut filled = n;
-        for (i, s) in self.steps.iter().enumerate() {
-            let tag = core.tag(i as u64);
-            let _send = core.comm.isend(&self.data[..s.blocks * n], s.send_to, tag)?;
-            // receive straight into the working buffer's tail (no
-            // intermediate Vec)
-            let req = core.comm.irecv(s.recv_from, tag);
-            req.wait_into(&core.comm, &mut self.data[filled..filled + s.blocks * n])?;
-            filled += s.blocks * n;
-        }
-        debug_assert_eq!(filled, n * core.p);
-        rotate_down_into(&self.data, n, core.id, output);
-        Ok(())
-    }
+/// Build the Bruck allgather schedule for one rank (pure; SPMD).
+pub fn build_schedule(p: usize, rank: usize, n: usize, elem_bytes: usize) -> Schedule {
+    let mut sb = ScheduleBuilder::new("bruck");
+    emit_group_bruck(
+        &mut sb,
+        &(0..p).collect::<Vec<_>>(),
+        rank,
+        n,
+        Slice::input(0, n),
+        Slice::output(0, n * p),
+    );
+    sb.finish(OpKind::Allgather, p, n, elem_bytes, "bruck")
 }
 
 /// One-shot convenience wrapper: plan + single execute.
@@ -132,7 +73,7 @@ pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
 /// The final reorder of Algorithm 1, into a caller-provided buffer: the
 /// rotated input holds rank `(id + j) mod p`'s block at position `j`;
 /// rotating *down* by `id` blocks puts the block of rank `r` at position
-/// `r`.
+/// `r`. Also the interpreter of [`Step::Rotate`](super::schedule::Step).
 pub fn rotate_down_into<T: Pod>(data: &[T], n: usize, id: usize, out: &mut [T]) {
     assert!(n > 0, "block size must be positive");
     assert_eq!(data.len() % n, 0);
@@ -155,6 +96,7 @@ pub fn rotate_down<T: Pod>(data: &[T], n: usize, id: usize) -> Vec<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::plan::Registry;
 
     #[test]
     fn rotate_down_identity_for_rank0() {
@@ -179,12 +121,31 @@ mod tests {
     }
 
     #[test]
+    fn schedule_has_log2p_exchanges_and_one_rotation() {
+        use crate::collectives::schedule::Step;
+        let sched = build_schedule(6, 1, 2, 8);
+        let mut exchanges = 0;
+        let mut rotations = 0;
+        for s in sched.steps() {
+            match s {
+                Step::SendRecv { .. } => exchanges += 1,
+                Step::Rotate { .. } => rotations += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(exchanges, 3); // ceil(log2 6)
+        assert_eq!(rotations, 1);
+        assert_eq!(sched.tags, 3);
+        sched.validate().unwrap();
+    }
+
+    #[test]
     fn plan_reuse_matches_one_shot() {
         use crate::comm::{CommWorld, Timing};
         use crate::topology::Topology;
         let topo = Topology::regions(2, 3);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let mut plan = BruckPlan::<u64>::new(c, 2);
+            let mut plan = Registry::<u64>::standard().plan("bruck", c, Shape::elems(2)).unwrap();
             let mut out = vec![0u64; 12];
             for round in 0..3u64 {
                 let mine = [c.rank() as u64 + 100 * round, c.rank() as u64 + 100 * round + 50];

@@ -4,35 +4,44 @@
 //! which is what the paper's black dotted "MPI" lines measure. For the
 //! allgather:
 //!
-//! * total gathered size < 80 KiB and power-of-two ranks → recursive doubling;
-//! * total gathered size < 80 KiB and non-power-of-two → Bruck;
-//! * otherwise → ring.
+//! * total gathered size < [`LONG_MSG_SIZE`] (80 KiB) and power-of-two
+//!   ranks → recursive doubling;
+//! * total gathered size < [`LONG_MSG_SIZE`] and non-power-of-two → Bruck;
+//! * total gathered size ≥ [`LONG_MSG_SIZE`] (the boundary itself is
+//!   "large") → ring.
 //!
 //! For the alltoall (MPICH `MPIR_Alltoall_intra`):
 //!
-//! * per-destination block ≤ 256 bytes → Bruck (log-step, forwarding);
+//! * per-destination block ≤ [`A2A_SHORT_MSG_SIZE`] (256 B, inclusive) →
+//!   Bruck (log-step, forwarding);
 //! * otherwise → pairwise exchange (one direct message per peer).
 //!
-//! Selection inputs (`p`, `n`, element size) are all known at plan time, so
-//! the persistent plan *is* the selected algorithm's plan, reported under
-//! the `system-default` name.
+//! The exact boundary behavior is pinned by unit tests against the
+//! constants (`boundary_*` below), so these doc comments and `select`
+//! cannot drift apart. Selection inputs (`p`, `n`, element size) are all
+//! known at plan time, so the planned schedule *is* the selected
+//! algorithm's schedule, reported under the `system-default` name (the
+//! schedule label records the choice, e.g. `system-default[ring]`).
+//!
+//! The adaptive counterpart — scoring candidate schedules with the
+//! IR-derived cost model instead of fixed thresholds — is
+//! [`super::model_tuned`].
 
-use super::alltoall::{BruckAlltoallPlan, PairwiseAlltoallPlan};
-use super::bruck::BruckPlan;
 use super::plan::{
     trivial_a2a_plan, trivial_plan, AllgatherPlan, AlltoallAlgorithm, AlltoallPlan,
-    CollectiveAlgorithm, NamedAlgorithm, SelectedPlan, Shape,
+    CollectiveAlgorithm, NamedAlgorithm, Shape,
 };
-use super::recursive_doubling::RecursiveDoublingPlan;
-use super::ring::RingPlan;
+use super::schedule::{build_allgather, build_alltoall, SchedPlan, WorldView};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
-/// MPICH's `MPIR_CVAR_ALLGATHER_LONG_MSG_SIZE` default (bytes).
+/// MPICH's `MPIR_CVAR_ALLGATHER_LONG_MSG_SIZE` default (bytes). Totals of
+/// **at least** this size select the ring algorithm.
 pub const LONG_MSG_SIZE: usize = 81920;
 
-/// MPICH's `MPIR_CVAR_ALLTOALL_SHORT_MSG_SIZE` default (bytes): blocks up
-/// to this size go through Bruck, larger through pairwise exchange.
+/// MPICH's `MPIR_CVAR_ALLTOALL_SHORT_MSG_SIZE` default (bytes): blocks
+/// **up to and including** this size go through Bruck, larger through
+/// pairwise exchange.
 pub const A2A_SHORT_MSG_SIZE: usize = 256;
 
 /// Which algorithm the dispatcher would choose for `p` ranks of `n`
@@ -68,15 +77,15 @@ impl<T: Pod> CollectiveAlgorithm<T> for SystemDefault {
         if let Some(p) = trivial_plan("system-default", comm, shape) {
             return Ok(p);
         }
-        let inner: Box<dyn AllgatherPlan<T>> =
-            match select(comm.size(), shape.n, std::mem::size_of::<T>()) {
-                super::Algorithm::RecursiveDoubling => {
-                    Box::new(RecursiveDoublingPlan::<T>::new(comm, shape.n)?)
-                }
-                super::Algorithm::Bruck => Box::new(BruckPlan::<T>::new(comm, shape.n)),
-                _ => Box::new(RingPlan::<T>::new(comm, shape.n)),
-            };
-        Ok(Box::new(SelectedPlan { name: "system-default", inner }))
+        let view = WorldView::from_comm(comm);
+        let sched = build_allgather(
+            super::Algorithm::SystemDefault,
+            &view,
+            comm.rank(),
+            shape.n,
+            std::mem::size_of::<T>(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "system-default", sched)?)
     }
 }
 
@@ -86,7 +95,7 @@ pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
 }
 
 /// True if the alltoall dispatcher would pick Bruck for blocks of `n`
-/// elements of `elem_size` bytes (MPICH short-message rule).
+/// elements of `elem_size` bytes (MPICH short-message rule, inclusive).
 pub fn select_alltoall_bruck(n: usize, elem_size: usize) -> bool {
     n * elem_size <= A2A_SHORT_MSG_SIZE
 }
@@ -109,13 +118,15 @@ impl<T: Pod> AlltoallAlgorithm<T> for SystemDefaultAlltoall {
         if let Some(p) = trivial_a2a_plan("system-default", comm, shape) {
             return Ok(p);
         }
-        let inner: Box<dyn AlltoallPlan<T>> =
-            if select_alltoall_bruck(shape.n, std::mem::size_of::<T>()) {
-                Box::new(BruckAlltoallPlan::<T>::new(comm, shape.n))
-            } else {
-                Box::new(PairwiseAlltoallPlan::<T>::new(comm, shape.n))
-            };
-        Ok(Box::new(SelectedPlan { name: "system-default", inner }))
+        let view = WorldView::from_comm(comm);
+        let sched = build_alltoall(
+            "system-default",
+            &view,
+            comm.rank(),
+            shape.n,
+            std::mem::size_of::<T>(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "system-default", sched)?)
     }
 }
 
@@ -137,6 +148,53 @@ mod tests {
     }
 
     #[test]
+    fn boundary_allgather_exactly_80kib_is_large() {
+        // The constant itself is the first "large" total: doc comments and
+        // select() are pinned together here.
+        assert_eq!(LONG_MSG_SIZE, 80 * 1024);
+        assert_eq!(select(1, LONG_MSG_SIZE, 1), Algorithm::Ring);
+        assert_eq!(select(1, LONG_MSG_SIZE - 1, 1), Algorithm::RecursiveDoubling);
+        // non-power-of-two rank count: one byte under the boundary → Bruck
+        assert_eq!(select(5, (LONG_MSG_SIZE - 5) / 5, 1), Algorithm::Bruck);
+        assert_eq!(select(5, LONG_MSG_SIZE / 5, 1), Algorithm::Ring);
+        // and in element terms: 4-byte elements at exactly the boundary
+        assert_eq!(select(16, LONG_MSG_SIZE / (16 * 4), 4), Algorithm::Ring);
+        assert_eq!(
+            select(16, LONG_MSG_SIZE / (16 * 4) - 1, 4),
+            Algorithm::RecursiveDoubling
+        );
+    }
+
+    #[test]
+    fn boundary_alltoall_exactly_256b_is_short() {
+        // 256 B inclusive → Bruck; 257 B → pairwise.
+        assert_eq!(A2A_SHORT_MSG_SIZE, 256);
+        assert!(select_alltoall_bruck(A2A_SHORT_MSG_SIZE, 1));
+        assert!(!select_alltoall_bruck(A2A_SHORT_MSG_SIZE + 1, 1));
+        assert!(select_alltoall_bruck(A2A_SHORT_MSG_SIZE / 4, 4));
+        assert!(!select_alltoall_bruck(A2A_SHORT_MSG_SIZE / 4 + 1, 4));
+        assert!(select_alltoall_bruck(A2A_SHORT_MSG_SIZE / 8, 8));
+    }
+
+    #[test]
+    fn boundary_selection_is_visible_in_the_planned_schedule() {
+        use crate::collectives::schedule::{build_allgather, build_alltoall, WorldView};
+        use crate::topology::Topology;
+        let topo = Topology::regions(2, 2);
+        let view = WorldView::world(&topo);
+        // u32 totals: 4 ranks × n × 4 B; boundary n = 5120.
+        let at = build_allgather(Algorithm::SystemDefault, &view, 0, 5120, 4).unwrap();
+        assert_eq!(at.label, "system-default[ring]");
+        let under = build_allgather(Algorithm::SystemDefault, &view, 0, 5119, 4).unwrap();
+        assert_eq!(under.label, "system-default[recursive-doubling]");
+        // alltoall: 64 × 4 B = 256 B block → bruck; 65 → pairwise.
+        let short = build_alltoall("system-default", &view, 0, 64, 4).unwrap();
+        assert_eq!(short.label, "system-default[bruck]");
+        let long = build_alltoall("system-default", &view, 0, 65, 4).unwrap();
+        assert_eq!(long.label, "system-default[pairwise]");
+    }
+
+    #[test]
     fn dispatch_runs_selected_algorithm() {
         use crate::collectives::{canonical_contribution, expected_result};
         use crate::comm::{CommWorld, Timing};
@@ -152,13 +210,6 @@ mod tests {
                 assert_eq!(r, &expected_result(p, 2));
             }
         }
-    }
-
-    #[test]
-    fn alltoall_selection_matches_mpich_rule() {
-        assert!(select_alltoall_bruck(2, 4)); // 8 B block → bruck
-        assert!(select_alltoall_bruck(64, 4)); // 256 B boundary is short
-        assert!(!select_alltoall_bruck(65, 4)); // 260 B → pairwise
     }
 
     #[test]

@@ -1,29 +1,27 @@
-//! Dissemination allgather (§2, ref. [1]).
+//! Dissemination allgather (§2, ref. [1]) as a schedule builder.
 //!
 //! `⌈log2(p)⌉` steps for *any* `p`: at step `i` rank `id` sends everything
 //! it currently holds to `id + 2^i (mod p)` and receives from
 //! `id − 2^i (mod p)`. Like Bruck it needs no power-of-two size; unlike
-//! Bruck the received data is merged by absolute block index (each block
-//! tagged by origin), so duplicate coverage near the end of non-power
-//! cases is handled by overwriting with identical data.
+//! Bruck the transmitted blocks are identified by absolute origin, which
+//! classically costs one `u64` header per block — the trade-off that makes
+//! Bruck (headerless, one final rotation) the preferred log-step
+//! algorithm (§2).
 //!
-//! This implementation transmits `(origin, block)` pairs encoded in the
-//! element stream, which costs one `u64` header per block — the classic
-//! trade-off that makes Bruck (which needs no headers, only a final
-//! rotation) the preferred log-step algorithm (§2).
-//!
-//! The persistent [`DisseminationPlan`] exploits that the held-block count
-//! before step `i` is exactly `2^i`, so both pack and receive buffers have
-//! statically known per-step sizes and are allocated once at plan time.
-
-use std::marker::PhantomData;
+//! In the schedule IR the held-block set before step `i` is statically
+//! known (`{id − j mod p : j < 2^i}`), so the pack/unpack become
+//! `CopyLocal` steps and the per-block headers become wire *padding* on
+//! the exchange ([`Step::SendRecv`](super::schedule::Step)'s `pad`):
+//! the message carries exactly the classic `2^i · (8 + n·elem)` bytes, so
+//! traced byte counts and modeled costs are unchanged — the protocol
+//! overhead is preserved as data, not re-derived at run time.
 
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
-    Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
 };
-use crate::comm::{write_bytes, Comm, Pod};
-use crate::error::{Error, Result};
+use super::schedule::{SchedPlan, Schedule, ScheduleBuilder, Slice};
+use crate::comm::{Comm, Pod};
+use crate::error::Result;
 
 /// The dissemination algorithm (registry entry).
 pub struct Dissemination;
@@ -43,97 +41,62 @@ impl<T: Pod> CollectiveAlgorithm<T> for Dissemination {
         if let Some(p) = trivial_plan("dissemination", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(DisseminationPlan::<T>::new(comm, shape.n)))
+        let sched = build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        Ok(SchedPlan::<T>::boxed(comm, "dissemination", sched)?)
     }
 }
 
-/// One step of the schedule.
-struct Step {
-    dst: usize,
-    src: usize,
-    /// `(origin, block)` records exchanged: the held count `2^i`.
-    records: usize,
-}
+/// Wire overhead per transmitted block (the classic origin header).
+pub(crate) const HEADER_BYTES: usize = 8;
 
-/// Persistent dissemination plan with preallocated pack/unpack buffers.
-pub struct DisseminationPlan<T: Pod> {
-    comm: Comm,
-    n: usize,
-    p: usize,
-    id: usize,
-    tag_base: u64,
-    steps: Vec<Step>,
-    send_buf: Vec<u8>,
-    recv_buf: Vec<u8>,
-    have: Vec<bool>,
-    _elem: PhantomData<T>,
-}
-
-impl<T: Pod> DisseminationPlan<T> {
-    /// Collectively plan a dissemination allgather of `n` elements per
-    /// rank. Reserves one collective tag per step on `comm`.
-    pub fn new(comm: &Comm, n: usize) -> DisseminationPlan<T> {
-        let p = comm.size();
-        let id = comm.rank();
-        let mut steps = Vec::new();
+/// Build the dissemination schedule for one rank (pure; SPMD).
+pub fn build_schedule(p: usize, rank: usize, n: usize, elem_bytes: usize) -> Schedule {
+    let mut sb = ScheduleBuilder::new("dissemination");
+    sb.copy(Slice::input(0, n), Slice::output(rank * n, n));
+    let max_records = {
+        let mut last = 0usize;
         let mut dist = 1usize;
         while dist < p {
-            steps.push(Step { dst: (id + dist) % p, src: (id + p - dist) % p, records: dist });
+            last = dist;
             dist <<= 1;
         }
-        let tag_base = comm.reserve_coll_tags(steps.len() as u64);
-        let rec = 8 + n * std::mem::size_of::<T>();
-        let max_records = steps.last().map(|s| s.records).unwrap_or(0);
-        DisseminationPlan {
-            comm: comm.retain(),
-            n,
-            p,
-            id,
-            tag_base,
-            steps,
-            send_buf: vec![0u8; max_records * rec],
-            recv_buf: vec![0u8; max_records * rec],
-            have: vec![false; p],
-            _elem: PhantomData,
+        last
+    };
+    if max_records > 0 {
+        let pack = sb.scratch(max_records * n);
+        let unpack = sb.scratch(max_records * n);
+        let mut dist = 1usize;
+        let mut step_no = 1usize;
+        while dist < p {
+            sb.round(format!("step {step_no}"));
+            let tag = sb.tag();
+            let dst = (rank + dist) % p;
+            let src = (rank + p - dist) % p;
+            // Held set before this step: blocks of ranks (rank − j) mod p
+            // for j < dist; pack in that deterministic order.
+            for j in 0..dist {
+                let block = (rank + p - j) % p;
+                sb.copy(Slice::output(block * n, n), Slice::at(pack, j * n, n));
+            }
+            sb.sendrecv(
+                dst,
+                Slice::at(pack, 0, dist * n),
+                src,
+                Slice::at(unpack, 0, dist * n),
+                tag,
+                dist * HEADER_BYTES,
+            );
+            // The sender's held set, shifted by dist: blocks
+            // (rank − dist − j) mod p in the same order.
+            for j in 0..dist {
+                let block = (rank + 2 * p - (dist + j) % p) % p;
+                sb.copy(Slice::at(unpack, j * n, n), Slice::output(block * n, n));
+            }
+            dist <<= 1;
+            step_no += 1;
         }
     }
-}
-
-impl<T: Pod> CollectivePlan for DisseminationPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "dissemination"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.p
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for DisseminationPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_io(self.n, self.p, input, output)?;
-        if self.n == 0 {
-            return Ok(());
-        }
-        let n = self.n;
-        let rec = 8 + n * std::mem::size_of::<T>();
-        output[self.id * n..(self.id + 1) * n].copy_from_slice(input);
-        self.have.fill(false);
-        self.have[self.id] = true;
-        for (i, s) in self.steps.iter().enumerate() {
-            let tag = self.tag_base + i as u64;
-            let len = s.records * rec;
-            pack_blocks(output, &self.have, n, &mut self.send_buf[..len]);
-            let _send = self.comm.isend(&self.send_buf[..len], s.dst, tag)?;
-            self.comm.recv_into(s.src, tag, &mut self.recv_buf[..len])?;
-            unpack_blocks(&self.recv_buf[..len], output, &mut self.have, n)?;
-        }
-        Ok(())
-    }
+    sb.finish(OpKind::Allgather, p, n, elem_bytes, "dissemination")
 }
 
 /// One-shot convenience wrapper: plan + single execute.
@@ -141,74 +104,45 @@ pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
     super::plan::one_shot(&Dissemination, comm, local)
 }
 
-/// Encode all held blocks as `[origin: u64 | block bytes]*` into `buf`,
-/// which must be sized for exactly the held count.
-fn pack_blocks<T: Pod>(out: &[T], have: &[bool], n: usize, buf: &mut [u8]) {
-    let esz = std::mem::size_of::<T>();
-    let rec = 8 + n * esz;
-    let mut off = 0usize;
-    for (r, &h) in have.iter().enumerate() {
-        if !h {
-            continue;
-        }
-        buf[off..off + 8].copy_from_slice(&(r as u64).to_le_bytes());
-        let ok = write_bytes(&out[r * n..(r + 1) * n], &mut buf[off + 8..off + rec]);
-        debug_assert!(ok);
-        off += rec;
-    }
-    debug_assert_eq!(off, buf.len(), "held-block count must match the schedule");
-}
-
-/// Decode `[origin | block]*` into the output array, marking coverage.
-fn unpack_blocks<T: Pod>(bytes: &[u8], out: &mut [T], have: &mut [bool], n: usize) -> Result<()> {
-    let esz = std::mem::size_of::<T>();
-    let rec = 8 + n * esz;
-    if rec == 8 || bytes.len() % rec != 0 {
-        return Err(Error::DatatypeMismatch { bytes: bytes.len(), elem_size: rec.max(1) });
-    }
-    for chunk in bytes.chunks_exact(rec) {
-        let origin = u64::from_le_bytes(chunk[0..8].try_into().expect("8-byte header")) as usize;
-        if origin >= have.len() {
-            return Err(Error::Precondition(format!(
-                "dissemination header references rank {origin} outside communicator"
-            )));
-        }
-        let dst = &mut out[origin * n..(origin + 1) * n];
-        if !crate::comm::copy_into(&chunk[8..], dst) {
-            return Err(Error::SizeMismatch { expected: n * esz, got: chunk.len() - 8 });
-        }
-        have[origin] = true;
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::schedule::Step;
 
     #[test]
-    fn pack_unpack_roundtrip() {
-        let n = 2;
-        let out: Vec<u64> = vec![1, 2, 0, 0, 5, 6];
-        let have = vec![true, false, true];
-        let mut bytes = vec![0u8; 2 * (8 + 2 * 8)];
-        pack_blocks(&out, &have, n, &mut bytes);
-        let mut out2 = vec![0u64; 6];
-        let mut have2 = vec![false; 3];
-        unpack_blocks(&bytes, &mut out2, &mut have2, n).unwrap();
-        assert_eq!(out2, vec![1, 2, 0, 0, 5, 6]);
-        assert_eq!(have2, vec![true, false, true]);
+    fn wire_sizes_match_classic_header_format() {
+        // p = 8, n = 2, u64: step i ships 2^i records of (8 + 16) bytes.
+        let sched = build_schedule(8, 3, 2, 8);
+        let mut wire: Vec<usize> = Vec::new();
+        for s in sched.steps() {
+            if let Step::SendRecv { src, pad, .. } = s {
+                wire.push(sched.wire_bytes(src.len, *pad));
+            }
+        }
+        assert_eq!(wire, vec![24, 48, 96]);
+        sched.validate().unwrap();
     }
 
     #[test]
-    fn unpack_rejects_garbage() {
-        let mut out = vec![0u64; 4];
-        let mut have = vec![false; 2];
-        assert!(unpack_blocks(&[1, 2, 3], &mut out, &mut have, 2).is_err());
-        // valid record shape but origin out of range
-        let mut bad = Vec::new();
-        bad.extend_from_slice(&9u64.to_le_bytes());
-        bad.extend_from_slice(&[0u8; 16]);
-        assert!(unpack_blocks(&bad, &mut out, &mut have, 2).is_err());
+    fn held_set_covers_all_blocks() {
+        // Simulate coverage: after step i the held set doubles.
+        for p in [2usize, 3, 5, 8, 13] {
+            for rank in 0..p {
+                let sched = build_schedule(p, rank, 1, 8);
+                let mut have = vec![false; p];
+                have[rank] = true;
+                for s in sched.steps() {
+                    if let Step::CopyLocal { src, dst } = s {
+                        // unpack copies write to the output buffer
+                        if dst.buf == crate::collectives::schedule::BufId::Output
+                            && src.buf != crate::collectives::schedule::BufId::Input
+                        {
+                            have[dst.off] = true;
+                        }
+                    }
+                }
+                assert!(have.iter().all(|&h| h), "p={p} rank={rank}");
+            }
+        }
     }
 }

@@ -47,9 +47,19 @@ impl Groups {
     }
 }
 
-/// Group the ranks of `comm` by the chosen attribute.
-pub fn group_ranks(comm: &Comm, by: GroupBy) -> Result<Groups> {
-    let topo = comm.topology();
+/// Group an arbitrary set of communicator ranks by a topology attribute.
+///
+/// `world_of` maps communicator rank → world rank; `ranks` is the subset
+/// to group (ascending). Groups are ordered by smallest member, members
+/// ascending — identical on every caller, like `MPI_Comm_split`. This is
+/// the comm-free core used by schedule builders (which must be able to
+/// derive any rank's groups, not just the caller's).
+pub fn split_members(
+    topo: &crate::topology::Topology,
+    world_of: &[usize],
+    ranks: &[usize],
+    by: GroupBy,
+) -> Vec<Vec<usize>> {
     let key = |world: usize| -> usize {
         match by {
             GroupBy::Region => topo.region_of(world),
@@ -60,14 +70,20 @@ pub fn group_ranks(comm: &Comm, by: GroupBy) -> Result<Groups> {
             }
         }
     };
-    // collect (key, comm_rank), group by key
     let mut buckets: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
-    for r in 0..comm.size() {
-        buckets.entry(key(comm.world_rank_of(r))).or_default().push(r);
+    for &r in ranks {
+        buckets.entry(key(world_of[r])).or_default().push(r);
     }
-    // order groups by smallest member for stability under any placement
     let mut members: Vec<Vec<usize>> = buckets.into_values().collect();
     members.sort_by_key(|g| g[0]);
+    members
+}
+
+/// Group the ranks of `comm` by the chosen attribute.
+pub fn group_ranks(comm: &Comm, by: GroupBy) -> Result<Groups> {
+    let world_of: Vec<usize> = (0..comm.size()).map(|r| comm.world_rank_of(r)).collect();
+    let all: Vec<usize> = (0..comm.size()).collect();
+    let members = split_members(comm.topology(), &world_of, &all, by);
     let me = comm.rank();
     let mine = members
         .iter()

@@ -1,4 +1,5 @@
-//! Hierarchical allgather (related work, Träff '06 [20]).
+//! Hierarchical allgather (related work, Träff '06 [20]) as a schedule
+//! builder.
 //!
 //! Three phases: (1) gather all region data to a per-region *master*
 //! process; (2) Bruck allgather among the masters; (3) broadcast the full
@@ -6,18 +7,20 @@
 //! bottlenecks but leaves most ranks idle and still sends `log2(r)`
 //! non-local messages of up to `b` bytes from every master (§2.2).
 //!
-//! The persistent [`HierarchicalPlan`] retains the region communicator and
-//! (on masters) the masters sub-communicator plus an inner Bruck plan; the
-//! flat gather, the binomial broadcast tree and the final group→rank
-//! permutation are all precomputed.
+//! The whole structure — the flat gather's `Send`/`Recv` pairs, the
+//! masters' Bruck (inlined onto the parent communicator by
+//! [`super::schedule::emit_group_bruck`]), the binomial broadcast tree and
+//! the final group→rank permutation — is one flat [`Schedule`]; no
+//! sub-communicators are built at all.
 
-use super::grouping::{group_ranks, require_uniform, GroupBy};
-use super::bruck::BruckPlan;
+use super::grouping::GroupBy;
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
-    Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
 };
 use super::primitives::bcast_tree;
+use super::schedule::{
+    emit_group_bruck, locate, uniform_size, SchedPlan, Schedule, ScheduleBuilder, Slice, WorldView,
+};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
@@ -39,124 +42,72 @@ impl<T: Pod> CollectiveAlgorithm<T> for Hierarchical {
         if let Some(p) = trivial_plan("hierarchical", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(HierarchicalPlan::<T>::new(comm, shape.n)?))
+        let view = WorldView::from_comm(comm);
+        let sched = build_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "hierarchical", sched)?)
     }
 }
 
-/// Master-only state: the masters' communicator plan plus the gathered
-/// region buffer.
-struct MasterState<T: Pod> {
-    plan: BruckPlan<T>,
-    /// Gather target, length `ppr · n`.
-    region: Vec<T>,
-}
-
-/// Persistent hierarchical plan.
-pub struct HierarchicalPlan<T: Pod> {
-    local_comm: Comm,
+/// Build the hierarchical allgather schedule for one rank (pure; SPMD).
+pub fn build_schedule(
+    view: &WorldView,
+    rank: usize,
     n: usize,
-    p: usize,
-    ppr: usize,
-    tag_gather: u64,
-    tag_bcast: u64,
-    masters: Option<MasterState<T>>,
-    /// Broadcast-tree parent of this rank within its region (local ranks).
-    parent: Option<usize>,
-    /// Broadcast-tree children, in send order.
-    children: Vec<usize>,
-    /// The group-ordered full array, length `n · p`.
-    full: Vec<T>,
-    /// Block position in group order → communicator rank.
-    perm: Vec<usize>,
-}
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    let groups = view.split(&(0..view.p).collect::<Vec<_>>(), GroupBy::Region);
+    let ppr = uniform_size(&groups, "hierarchical allgather")?;
+    let (g, l) = locate(&groups, rank)?;
+    let p = view.p;
 
-impl<T: Pod> HierarchicalPlan<T> {
-    /// Collectively plan a hierarchical allgather of `n` elements per rank.
-    pub fn new(comm: &Comm, n: usize) -> Result<HierarchicalPlan<T>> {
-        let groups = group_ranks(comm, GroupBy::Region)?;
-        let ppr = require_uniform(&groups, "hierarchical allgather")?;
-        let p = comm.size();
-        let local_comm = comm.sub(&groups.members[groups.mine])?;
-        let tag_gather = local_comm.reserve_coll_tags(1);
-        let tag_bcast = local_comm.reserve_coll_tags(1);
-        // Masters are local rank 0 of each group; only they construct the
-        // masters' communicator (the member-subset `sub` consumes no parent
-        // state, so non-masters stay consistent).
-        let masters = if groups.my_local == 0 {
-            let master_ranks: Vec<usize> = groups.members.iter().map(|g| g[0]).collect();
-            let mcomm = comm.sub(&master_ranks)?;
-            Some(MasterState {
-                plan: BruckPlan::<T>::new(&mcomm, ppr * n),
-                region: vec![T::default(); ppr * n],
-            })
-        } else {
-            None
-        };
-        let (parent, children) = bcast_tree(ppr, groups.my_local, 0);
-        let perm: Vec<usize> =
-            groups.members.iter().flat_map(|g| g.iter().copied()).collect();
-        Ok(HierarchicalPlan {
-            local_comm,
-            n,
-            p,
-            ppr,
-            tag_gather,
-            tag_bcast,
-            masters,
-            parent,
-            children,
-            full: vec![T::default(); n * p],
-            perm,
-        })
+    let mut sb = ScheduleBuilder::new("gather to master");
+    let tag_gather = sb.tag();
+    let tag_bcast = sb.tag();
+    let full = sb.scratch(n * p);
+
+    // Phase 1: flat gather at the master (local rank 0).
+    let region = if l == 0 {
+        let region = sb.scratch(ppr * n);
+        sb.copy(Slice::input(0, n), Slice::at(region, 0, n));
+        for r in 1..ppr {
+            sb.recv(groups[g][r], Slice::at(region, r * n, n), tag_gather, 0);
+        }
+        Some(region)
+    } else {
+        sb.send(groups[g][0], Slice::input(0, n), tag_gather, 0);
+        None
+    };
+
+    // Phase 2: Bruck among the masters (non-masters only account tags).
+    sb.round("master bruck");
+    let masters: Vec<usize> = groups.iter().map(|m| m[0]).collect();
+    let contrib = match region {
+        Some(rb) => Slice::at(rb, 0, ppr * n),
+        None => Slice::input(0, 0),
+    };
+    emit_group_bruck(&mut sb, &masters, rank, ppr * n, contrib, Slice::at(full, 0, n * p));
+
+    // Phase 3: binomial broadcast of the full array inside the region.
+    sb.round("broadcast");
+    let (parent, children) = bcast_tree(ppr, l, 0);
+    if let Some(par) = parent {
+        sb.recv(groups[g][par], Slice::at(full, 0, n * p), tag_bcast, 0);
     }
-}
-
-impl<T: Pod> CollectivePlan for HierarchicalPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "hierarchical"
+    for child in children {
+        sb.send(groups[g][child], Slice::at(full, 0, n * p), tag_bcast, 0);
     }
 
-    fn shape(&self) -> Shape {
-        Shape { n: self.n }
+    // The master Bruck produced data ordered by (group, local rank); put
+    // it back into communicator rank order.
+    sb.round("reorder");
+    let mut pos = 0usize;
+    for members in &groups {
+        for &r in members {
+            sb.copy(Slice::at(full, pos * n, n), Slice::output(r * n, n));
+            pos += 1;
+        }
     }
-
-    fn comm_size(&self) -> usize {
-        self.p
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for HierarchicalPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_io(self.n, self.p, input, output)?;
-        if self.n == 0 {
-            return Ok(());
-        }
-        let n = self.n;
-        // Phase 1 + 2: flat gather on the master, then Bruck among masters
-        // into the group-ordered full buffer.
-        if let Some(ms) = &mut self.masters {
-            ms.region[..n].copy_from_slice(input);
-            for r in 1..self.ppr {
-                self.local_comm.recv_into(r, self.tag_gather, &mut ms.region[r * n..(r + 1) * n])?;
-            }
-            ms.plan.execute(&ms.region, &mut self.full)?;
-        } else {
-            self.local_comm.send(input, 0, self.tag_gather)?;
-        }
-        // Phase 3: binomial broadcast of the full array inside the region.
-        if let Some(parent) = self.parent {
-            self.local_comm.recv_into(parent, self.tag_bcast, &mut self.full)?;
-        }
-        for &child in &self.children {
-            self.local_comm.send(&self.full, child, self.tag_bcast)?;
-        }
-        // The master-Bruck produced data ordered by (group, local rank);
-        // put it back into communicator rank order.
-        for (pos, &rank) in self.perm.iter().enumerate() {
-            output[rank * n..(rank + 1) * n].copy_from_slice(&self.full[pos * n..(pos + 1) * n]);
-        }
-        Ok(())
-    }
+    Ok(sb.finish(OpKind::Allgather, p, n, elem_bytes, "hierarchical"))
 }
 
 /// One-shot convenience wrapper: plan + single execute.
@@ -220,9 +171,11 @@ mod tests {
 
     #[test]
     fn plan_reuse_stays_correct() {
+        use crate::collectives::plan::Registry;
         let topo = Topology::regions(2, 4);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let mut plan = HierarchicalPlan::<u64>::new(c, 2).unwrap();
+            let mut plan =
+                Registry::<u64>::standard().plan("hierarchical", c, Shape::elems(2)).unwrap();
             let mut out = vec![0u64; 16];
             for round in 0..4u64 {
                 let mine = [c.rank() as u64 + round, c.rank() as u64 + round + 30];

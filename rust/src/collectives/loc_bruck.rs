@@ -1,9 +1,10 @@
-//! **The locality-aware Bruck allgather — paper Algorithm 2.**
+//! **The locality-aware Bruck allgather — paper Algorithm 2 — as a
+//! schedule builder.**
 //!
 //! Phases:
 //!
 //! 1. *Local allgather*: every region gathers its own data with a Bruck
-//!    allgather on the region communicator.
+//!    allgather on the region's ranks.
 //! 2. `⌈log_pℓ(r)⌉` *non-local steps*: before step `i` every rank holds the
 //!    data of a contiguous group of `w = pℓ^i` regions starting at its own
 //!    region `g` (`[g, g+w) mod r`). At step `i`, local rank `ℓ ≥ 1` sends
@@ -15,38 +16,38 @@
 //!
 //! Every rank therefore sends at most `⌈log_pℓ(r)⌉` non-local messages and
 //! `≈ b/pℓ` non-local bytes — the paper's headline improvement over the
-//! `log2(p)` messages / `≈ b` bytes of standard Bruck.
+//! `log2(p)` messages / `≈ b` bytes of standard Bruck. In the IR those are
+//! literally the schedule's non-local `SendRecv` steps, which is how
+//! [`crate::model::cost`] recovers Eq. 4 mechanically.
 //!
 //! **Non-power region counts** (paper §3, Fig. 6): when `r` is not a power
 //! of `pℓ`, local ranks with `ℓ·w ≥ r` idle through the step and contribute
-//! nothing to the following local gather, which becomes an *allgatherv*;
-//! the final received group may wrap past region `r − 1` and re-cover
-//! already-held regions (the paper's “regions 13 through 15 as well as
-//! region 0”), which the absolute-indexed assembly absorbs.
+//! nothing to the following local gather, which becomes an *allgatherv*
+//! ([`super::schedule::emit_group_allgatherv`]); the final received group
+//! may wrap past region `r − 1` and re-cover already-held regions, which
+//! the absolute-indexed scatter absorbs.
 //!
 //! **Multilevel hierarchy** (§3): [`LocalityBruckMultilevel`] groups by
-//! *node* at the outer level and replaces the inner Bruck plans with a
-//! socket-aware locality-aware plan, exactly as the paper prescribes.
+//! *node* at the outer level and emits socket-aware locality-aware inner
+//! gathers — the emitter recurses, exactly as the paper prescribes.
 //!
 //! **Placement independence** (§3): all group structure is derived from
 //! the topology, not from rank numbering, so non-local message counts are
 //! identical under block, round-robin or random placement — asserted in
 //! `rust/tests/locality_counts.rs`.
 //!
-//! **Persistence**: [`LocBruckPlan`] derives groups, builds the region
-//! communicator, reserves the non-local tag of every step, nests inner
-//! local-gather plans (Bruck or allgatherv, per step) and allocates all
-//! exchange/gather scratch **once**. `execute` then runs pure
-//! communication: the paper's "communicators created once outside the
-//! timed region" setup, kept alive across any number of operations.
+//! The whole algorithm — nested local gathers included — flattens into one
+//! [`Schedule`] over the parent communicator: no sub-communicators are
+//! constructed, and the generic [`SchedPlan`] interpreter executes it.
 
-use super::bruck::BruckPlan;
-use super::grouping::{group_ranks, require_uniform, GroupBy, Groups};
+use super::grouping::GroupBy;
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
-    SelectedPlan, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
 };
-use super::primitives::AllgathervPlan;
+use super::schedule::{
+    emit_group_allgatherv, emit_group_bruck, locate, uniform_size, SchedPlan, Schedule,
+    ScheduleBuilder, Slice, WorldView,
+};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
@@ -90,8 +91,17 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruck {
         if let Some(p) = trivial_plan("loc-bruck", comm, shape) {
             return Ok(p);
         }
-        let groups = group_ranks(comm, GroupBy::Region)?;
-        plan_grouped(comm, shape.n, &groups, Inner::Bruck, Rank0::Contributes, "loc-bruck")
+        let view = WorldView::from_comm(comm);
+        let sched = build_schedule(
+            &view,
+            comm.rank(),
+            shape.n,
+            std::mem::size_of::<T>(),
+            GroupBy::Region,
+            Rank0::Contributes,
+            "loc-bruck",
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-bruck", sched)?)
     }
 }
 
@@ -113,8 +123,17 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckV {
         if let Some(p) = trivial_plan("loc-bruck-v", comm, shape) {
             return Ok(p);
         }
-        let groups = group_ranks(comm, GroupBy::Region)?;
-        plan_grouped(comm, shape.n, &groups, Inner::Bruck, Rank0::GathervSkips, "loc-bruck-v")
+        let view = WorldView::from_comm(comm);
+        let sched = build_schedule(
+            &view,
+            comm.rank(),
+            shape.n,
+            std::mem::size_of::<T>(),
+            GroupBy::Region,
+            Rank0::GathervSkips,
+            "loc-bruck-v",
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-bruck-v", sched)?)
     }
 }
 
@@ -137,299 +156,263 @@ impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckMultilevel {
         if let Some(p) = trivial_plan("loc-bruck-2level", comm, shape) {
             return Ok(p);
         }
-        let groups = group_ranks(comm, GroupBy::Node)?;
-        plan_grouped(
-            comm,
-            shape.n,
-            &groups,
-            Inner::SocketAware,
-            Rank0::Contributes,
-            "loc-bruck-2level",
-        )
+        let view = WorldView::from_comm(comm);
+        let sched =
+            build_schedule_multilevel(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-bruck-2level", sched)?)
     }
 }
 
-/// Build the generic Algorithm 2 plan over explicit groups, degrading to
-/// plain Bruck when there is no locality to exploit.
-fn plan_grouped<T: Pod>(
-    comm: &Comm,
+/// Build the single-level Algorithm 2 schedule for one rank (pure; SPMD).
+pub fn build_schedule(
+    view: &WorldView,
+    rank: usize,
     n: usize,
-    groups: &Groups,
+    elem_bytes: usize,
+    by: GroupBy,
+    rank0: Rank0,
+    label: &str,
+) -> Result<Schedule> {
+    build_with_inner(view, rank, n, elem_bytes, by, Inner::Bruck, rank0, label)
+}
+
+/// Build the two-level (node outer, socket inner) schedule for one rank.
+pub fn build_schedule_multilevel(
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    build_with_inner(
+        view,
+        rank,
+        n,
+        elem_bytes,
+        GroupBy::Node,
+        Inner::SocketAware,
+        Rank0::Contributes,
+        "loc-bruck-2level",
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_with_inner(
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+    by: GroupBy,
     inner: Inner,
     rank0: Rank0,
-    name: &'static str,
-) -> Result<Box<dyn AllgatherPlan<T>>> {
-    let ppr = require_uniform(groups, "locality-aware bruck")?;
-    if ppr == 1 {
-        // One rank per region: no locality to exploit; Algorithm 2's
-        // non-local phase would make no progress (only local rank 0 exists
-        // and it idles). Degrade to the standard Bruck.
-        return Ok(Box::new(SelectedPlan {
-            name,
-            inner: Box::new(BruckPlan::<T>::new(comm, n)) as Box<dyn AllgatherPlan<T>>,
-        }));
-    }
-    Ok(Box::new(LocBruckPlan::<T>::new(comm, n, groups, inner, rank0, name)?))
+    label: &str,
+) -> Result<Schedule> {
+    let all: Vec<usize> = (0..view.p).collect();
+    let groups = view.split(&all, by);
+    uniform_size(&groups, "locality-aware bruck")?;
+    let mut sb = ScheduleBuilder::new("local allgather");
+    emit_loc_bruck(
+        &mut sb,
+        view,
+        &groups,
+        rank,
+        n,
+        Slice::input(0, n),
+        Slice::output(0, n * view.p),
+        inner,
+        rank0,
+    )?;
+    Ok(sb.finish(OpKind::Allgather, view.p, n, elem_bytes, label))
 }
 
-/// Plan the configured inner (local) allgather over a region communicator.
-fn inner_plan<T: Pod>(
-    local_comm: &Comm,
-    block: usize,
+/// Emit the configured inner (within-region) allgather: plain Bruck, or a
+/// recursive socket-aware Algorithm 2 for the multilevel variant.
+fn emit_inner(
+    sb: &mut ScheduleBuilder,
+    view: &WorldView,
+    region: &[usize],
+    me: usize,
+    b: usize,
+    contrib: Slice,
+    dst: Slice,
     inner: Inner,
-) -> Result<Box<dyn AllgatherPlan<T>>> {
+) -> Result<()> {
     match inner {
-        Inner::Bruck => Ok(Box::new(BruckPlan::<T>::new(local_comm, block))),
+        Inner::Bruck => {
+            emit_group_bruck(sb, region, me, b, contrib, dst);
+            Ok(())
+        }
         Inner::SocketAware => {
-            let groups = group_ranks(local_comm, GroupBy::Socket)?;
-            if groups.count() == 1 {
+            let socks = view.split(region, GroupBy::Socket);
+            if socks.len() == 1 {
                 // single socket: plain Bruck is the whole story
-                Ok(Box::new(BruckPlan::<T>::new(local_comm, block)))
+                emit_group_bruck(sb, region, me, b, contrib, dst);
+                Ok(())
             } else {
-                plan_grouped(
-                    local_comm,
-                    block,
-                    &groups,
+                emit_loc_bruck(
+                    sb,
+                    view,
+                    &socks,
+                    me,
+                    b,
+                    contrib,
+                    dst,
                     Inner::Bruck,
                     Rank0::Contributes,
-                    "loc-bruck",
                 )
             }
         }
     }
 }
 
-/// The local gather closing one non-local step.
-enum StepGather<T: Pod> {
-    /// Power-of-pℓ step: equal counts — the configured inner allgather
-    /// (paper: "replacing all calls to bruck").
-    Uniform(Box<dyn AllgatherPlan<T>>),
-    /// Non-power step: some ranks idle → allgatherv (§3).
-    Varying(AllgathervPlan<T>),
-}
+/// Emit Algorithm 2 over explicit `groups` of ranks, each contributing `b`
+/// elements, gathering into `dst` ordered by ascending member rank.
+/// Degrades to a plain group Bruck when there is one rank per group (no
+/// locality to exploit). Ranks outside `groups` are not supported — every
+/// caller passes a partition of the ranks it emits for.
+#[allow(clippy::too_many_arguments)]
+fn emit_loc_bruck(
+    sb: &mut ScheduleBuilder,
+    view: &WorldView,
+    groups: &[Vec<usize>],
+    me: usize,
+    b: usize,
+    contrib: Slice,
+    dst: Slice,
+    inner: Inner,
+    rank0: Rank0,
+) -> Result<()> {
+    let r_n = groups.len();
+    let ppr = uniform_size(groups, "locality-aware bruck")?;
+    let mut sorted: Vec<usize> = groups.iter().flatten().copied().collect();
+    sorted.sort_unstable();
+    if ppr == 1 {
+        // One rank per region: Algorithm 2's non-local phase would make no
+        // progress (only local rank 0 exists and it idles). Degrade to the
+        // standard Bruck over the member set.
+        emit_group_bruck(sb, &sorted, me, b, contrib, dst);
+        return Ok(());
+    }
+    let (g, l) = locate(groups, me)?;
+    let re = ppr * b; // elements held per region
+    let contributes = rank0 == Rank0::Contributes;
 
-/// One precomputed non-local step.
-struct LocStep<T: Pod> {
-    /// Held-group width in regions before this step.
-    width: usize,
-    /// Whether this rank exchanges non-locally (local rank ℓ ≥ 1 with
-    /// ℓ·width < r).
-    active: bool,
-    /// Exchange peers in parent-communicator ranks (valid when `active`).
-    dst: usize,
-    src: usize,
-    /// Pre-reserved parent-communicator tag for the exchange.
-    tag: u64,
-    /// Per-local-rank contribution lengths of the closing local gather.
-    counts: Vec<usize>,
-    gather: StepGather<T>,
-    /// `(start region, offset into gathered)` of every non-empty
-    /// contribution, for the absolute-indexed scatter.
-    scatter: Vec<(usize, usize)>,
-    /// Contiguous copy of the held group (send payload; doubles as local
-    /// rank 0's re-contribution). Length `width · region_elems` when
-    /// needed, else empty.
-    send_buf: Vec<T>,
-    /// Received group. Length `width · region_elems` when active.
-    recv_buf: Vec<T>,
-    /// Local-gather output, length `sum(counts)`.
-    gathered: Vec<T>,
-}
+    // Region-major working buffer: region ri's data (in local-rank order)
+    // lives at buf[ri·re ..]. Assembly is by absolute region index, which
+    // makes wrap-around duplicates benign.
+    let buf = sb.scratch(r_n * re);
 
-/// Persistent locality-aware Bruck plan (see module docs).
-pub struct LocBruckPlan<T: Pod> {
-    name: &'static str,
-    comm: Comm,
-    n: usize,
-    p: usize,
-    r_n: usize,
-    region_elems: usize,
-    g: usize,
-    l: usize,
-    /// Phase 1: local allgather of the initial blocks, writing directly
-    /// into this rank's region slot of `buf`.
-    phase1: Box<dyn AllgatherPlan<T>>,
-    steps: Vec<LocStep<T>>,
-    /// Region-major working buffer: region `ri`'s data (in local-rank
-    /// order) lives at `buf[ri·region_elems ..]`. Assembly is by absolute
-    /// region index, which makes wrap-around duplicates benign.
-    buf: Vec<T>,
-    /// `(buf element offset, communicator rank)` of every block, for the
-    /// final region-major → rank-order permutation.
-    perm: Vec<(usize, usize)>,
-}
+    // Phase 1: local allgather of the initial blocks, straight into this
+    // rank's region slot.
+    emit_inner(sb, view, &groups[g], me, b, contrib, Slice::at(buf, g * re, re), inner)?;
 
-impl<T: Pod> LocBruckPlan<T> {
-    fn new(
-        comm: &Comm,
-        n: usize,
-        groups: &Groups,
-        inner: Inner,
-        rank0: Rank0,
-        name: &'static str,
-    ) -> Result<LocBruckPlan<T>> {
-        let p = comm.size();
-        let r_n = groups.count();
-        let ppr = groups.uniform_size().expect("plan_grouped checked uniformity");
-        let g = groups.mine;
-        let l = groups.my_local;
-        let region_elems = ppr * n;
-        let local_comm = comm.sub(&groups.members[g])?;
-        let phase1 = inner_plan(&local_comm, n, inner)?;
-        let rank0_contributes = rank0 == Rank0::Contributes;
-
-        let mut steps = Vec::new();
-        let mut width = 1usize;
-        while width < r_n {
-            // reserved by ALL ranks so the parent tag sequence stays aligned
-            let tag = comm.reserve_coll_tags(1);
-            let active_j = |j: usize| j > 0 && j * width < r_n;
-            let active = active_j(l);
-            let (dst, src) = if active {
-                let dist = (l * width) % r_n;
-                (
-                    groups.members[(g + r_n - dist) % r_n][l],
-                    groups.members[(g + dist) % r_n][l],
-                )
-            } else {
-                (0, 0)
-            };
-            // Contribution convention: local rank j contributes the group
-            // starting at region (g + j·width) — rank 0 re-contributes the
-            // currently-held group (the paper's "contribute the original
-            // data for simplicity"); inactive ranks contribute nothing.
-            let counts: Vec<usize> = (0..ppr)
-                .map(|j| {
-                    if (j == 0 && rank0_contributes) || active_j(j) {
-                        width * region_elems
-                    } else {
-                        0
-                    }
-                })
-                .collect();
-            let uniform = counts.iter().all(|&c| c == counts[0]);
-            let gather = if uniform {
-                StepGather::Uniform(inner_plan(&local_comm, width * region_elems, inner)?)
-            } else {
-                StepGather::Varying(AllgathervPlan::<T>::new(&local_comm, &counts)?)
-            };
-            let mut scatter = Vec::new();
-            let mut off = 0usize;
-            for (j, &c) in counts.iter().enumerate() {
-                if c == 0 {
-                    continue;
-                }
-                scatter.push(((g + j * width) % r_n, off));
-                off += c;
+    // Non-local phase. Invariant: every rank of group gi holds exactly the
+    // regions [gi, gi+width) mod r_n.
+    let mut width = 1usize;
+    let mut step_no = 1usize;
+    while width < r_n {
+        sb.round(format!("non-local step {step_no}"));
+        let tag = sb.tag();
+        let active_j = |j: usize| j > 0 && j * width < r_n;
+        let active = active_j(l);
+        // Contribution convention: local rank j contributes the group
+        // starting at region (g + j·width) — rank 0 re-contributes the
+        // currently-held group (the paper's "contribute the original data
+        // for simplicity"); inactive ranks contribute nothing.
+        let counts: Vec<usize> = (0..ppr)
+            .map(|j| if (j == 0 && contributes) || active_j(j) { width * re } else { 0 })
+            .collect();
+        let need_send = active || (l == 0 && contributes);
+        let send_buf = if need_send { Some(sb.scratch(width * re)) } else { None };
+        let recv_buf = if active { Some(sb.scratch(width * re)) } else { None };
+        if let Some(sbuf) = send_buf {
+            // collect the held ring [g, g+width) into a contiguous payload
+            for k in 0..width {
+                let ri = (g + k) % r_n;
+                sb.copy(Slice::at(buf, ri * re, re), Slice::at(sbuf, k * re, re));
             }
-            let need_send = active || (l == 0 && rank0_contributes);
-            steps.push(LocStep {
-                width,
-                active,
-                dst,
-                src,
+        }
+        if let (true, Some(rbuf)) = (active, recv_buf) {
+            let dist = (l * width) % r_n;
+            let to = groups[(g + r_n - dist) % r_n][l];
+            let from = groups[(g + dist) % r_n][l];
+            sb.sendrecv(
+                to,
+                Slice::at(send_buf.expect("active ranks have a send buffer"), 0, width * re),
+                from,
+                Slice::at(rbuf, 0, width * re),
                 tag,
-                gather,
-                scatter,
-                send_buf: if need_send { vec![T::default(); width * region_elems] } else { Vec::new() },
-                recv_buf: if active { vec![T::default(); width * region_elems] } else { Vec::new() },
-                gathered: vec![T::default(); off],
-                counts,
-            });
-            width = width.saturating_mul(ppr);
+                0,
+            );
         }
-
-        let mut perm = Vec::with_capacity(p);
-        for (gi, members) in groups.members.iter().enumerate() {
-            for (j, &rank) in members.iter().enumerate() {
-                perm.push((gi * region_elems + j * n, rank));
+        // Local allgather of the received groups.
+        let total: usize = counts.iter().sum();
+        let gathered = sb.scratch(total);
+        let my_contrib = if l == 0 {
+            match send_buf {
+                Some(sbuf) if contributes => Slice::at(sbuf, 0, width * re),
+                _ => Slice::input(0, 0),
             }
+        } else if active {
+            Slice::at(recv_buf.expect("active"), 0, width * re)
+        } else {
+            Slice::input(0, 0)
+        };
+        let uniform = counts.iter().all(|&c| c == counts[0]);
+        if uniform {
+            emit_inner(
+                sb,
+                view,
+                &groups[g],
+                me,
+                counts[0],
+                my_contrib,
+                Slice::at(gathered, 0, total),
+                inner,
+            )?;
+        } else {
+            emit_group_allgatherv(
+                sb,
+                &groups[g],
+                me,
+                &counts,
+                my_contrib,
+                Slice::at(gathered, 0, total),
+            );
         }
-        Ok(LocBruckPlan {
-            name,
-            comm: comm.retain(),
-            n,
-            p,
-            r_n,
-            region_elems,
-            g,
-            l,
-            phase1,
-            steps,
-            buf: vec![T::default(); r_n * region_elems],
-            perm,
-        })
-    }
-}
-
-impl<T: Pod> CollectivePlan for LocBruckPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        self.name
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.p
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for LocBruckPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_io(self.n, self.p, input, output)?;
-        let (n, re, r_n, g, l) = (self.n, self.region_elems, self.r_n, self.g, self.l);
-
-        // Phase 1: local allgather of the initial blocks, straight into
-        // this rank's region slot.
-        self.phase1.execute(input, &mut self.buf[g * re..(g + 1) * re])?;
-
-        // Non-local phase. Invariant: every rank of group `gi` holds
-        // exactly the regions [gi, gi+width) mod r_n.
-        let Self { comm, buf, steps, .. } = self;
-        for step in steps.iter_mut() {
-            let w = step.width;
-            // -- exchange ------------------------------------------------
-            if step.active {
-                collect_ring(buf, g, w, r_n, re, &mut step.send_buf);
-                let _send = comm.isend(&step.send_buf, step.dst, step.tag)?;
-                let req = comm.irecv(step.src, step.tag);
-                req.wait_into(comm, &mut step.recv_buf)?;
-            } else if l == 0 && !step.send_buf.is_empty() {
-                // rank 0 re-contributes the currently-held group
-                collect_ring(buf, g, w, r_n, re, &mut step.send_buf);
+        // Scatter the gathered groups by absolute region index.
+        let mut off = 0usize;
+        for (j, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
             }
-            // -- local allgather of the received groups ------------------
-            let contrib: &[T] = if l == 0 {
-                &step.send_buf
-            } else if step.active {
-                &step.recv_buf
-            } else {
-                &[]
-            };
-            debug_assert_eq!(contrib.len(), step.counts[l]);
-            match &mut step.gather {
-                StepGather::Uniform(plan) => plan.execute(contrib, &mut step.gathered)?,
-                StepGather::Varying(plan) => plan.execute(contrib, &mut step.gathered)?,
+            let start = (g + j * width) % r_n;
+            for k in 0..width {
+                let ri = (start + k) % r_n;
+                sb.copy(Slice::at(gathered, off + k * re, re), Slice::at(buf, ri * re, re));
             }
-            // Scatter the gathered groups by absolute region index.
-            for &(start, off) in &step.scatter {
-                scatter_ring(buf, start, w, r_n, re, &step.gathered[off..off + w * re]);
-            }
+            off += c;
         }
-
-        // Permute the region-major buffer into communicator rank order.
-        for &(src_off, rank) in &self.perm {
-            output[rank * n..(rank + 1) * n].copy_from_slice(&self.buf[src_off..src_off + n]);
-        }
-        Ok(())
+        width = width.saturating_mul(ppr);
+        step_no += 1;
     }
+
+    // Permute the region-major buffer into ascending-member order in dst.
+    sb.round("reorder");
+    for (gi, members) in groups.iter().enumerate() {
+        for (j, &r) in members.iter().enumerate() {
+            let pos = sorted.binary_search(&r).expect("member in sorted list");
+            sb.copy(
+                Slice::at(buf, gi * re + j * b, b),
+                Slice::at(dst.buf, dst.off + pos * b, b),
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Locality-aware Bruck allgather of `local` (length `n`); returns `n·p`
 /// elements in communicator rank order. Regions are the topology's
-/// configured region kind. One-shot wrapper over [`LocBruckPlan`].
+/// configured region kind. One-shot wrapper over the planned form.
 pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
     super::plan::one_shot(&LocalityBruck, comm, local)
 }
@@ -443,43 +426,6 @@ pub fn allgather_v<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
 /// gathers are themselves socket-aware locality-aware Brucks.
 pub fn allgather_multilevel<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
     super::plan::one_shot(&LocalityBruckMultilevel, comm, local)
-}
-
-/// Copy regions `[start, start+width) mod r_n` out of the region-major
-/// buffer, in ring order, into the preallocated `out`.
-fn collect_ring<T: Pod>(
-    buf: &[T],
-    start: usize,
-    width: usize,
-    r_n: usize,
-    region_elems: usize,
-    out: &mut [T],
-) {
-    debug_assert_eq!(out.len(), width * region_elems);
-    for k in 0..width {
-        let ri = (start + k) % r_n;
-        out[k * region_elems..(k + 1) * region_elems]
-            .copy_from_slice(&buf[ri * region_elems..(ri + 1) * region_elems]);
-    }
-}
-
-/// Inverse of [`collect_ring`]: write `data` into regions
-/// `[start, start+width) mod r_n`. Overlapping (wrap-duplicate) regions
-/// receive identical data by construction.
-fn scatter_ring<T: Pod>(
-    buf: &mut [T],
-    start: usize,
-    width: usize,
-    r_n: usize,
-    region_elems: usize,
-    data: &[T],
-) {
-    debug_assert_eq!(data.len(), width * region_elems);
-    for k in 0..width {
-        let ri = (start + k) % r_n;
-        buf[ri * region_elems..(ri + 1) * region_elems]
-            .copy_from_slice(&data[k * region_elems..(k + 1) * region_elems]);
-    }
 }
 
 #[cfg(test)]
@@ -519,9 +465,7 @@ mod tests {
         // Paper: each process communicates only a single non-local message
         // (vs 4 for standard Bruck) ...
         assert_eq!(run.trace.max_nonlocal_msgs(), 1);
-        // ... and only 4 values (8 bytes here: 2 u64 × 4 regions... the
-        // paper's count is 4 values of the 16; with 2 u64 per rank the
-        // non-local payload is one region group = 4 ranks × 2 u64 = 64 B.
+        // ... of one region group = 4 ranks × 2 u64 = 64 B.
         assert_eq!(run.trace.max_nonlocal_bytes(), 4 * 2 * 8);
     }
 
@@ -676,12 +620,11 @@ mod tests {
 
     #[test]
     fn plan_reuse_on_shifting_inputs() {
+        use crate::collectives::plan::Registry;
         let topo = Topology::regions(4, 4);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let groups = group_ranks(c, GroupBy::Region).unwrap();
             let mut plan =
-                plan_grouped::<u64>(c, 2, &groups, Inner::Bruck, Rank0::Contributes, "loc-bruck")
-                    .unwrap();
+                Registry::<u64>::standard().plan("loc-bruck", c, Shape::elems(2)).unwrap();
             let mut out = vec![0u64; 32];
             for round in 0..6u64 {
                 let mine = [c.rank() as u64 + 777 * round, c.rank() as u64 + 777 * round + 13];

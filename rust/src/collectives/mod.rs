@@ -43,10 +43,18 @@
 //! | [`multilane`] | `multilane` | per-lane inter-region Bruck + local allgather (Träff & Hunold '20) | related-work baseline |
 //! | [`loc_bruck`] | `loc-bruck`, `loc-bruck-v`, `loc-bruck-2level` | **locality-aware Bruck (Alg. 2)**, incl. multilevel and non-power region counts | the contribution |
 //! | [`dispatch`] | `system-default` (allgather + alltoall) | size/shape-based selection (Thakur et al.) | "system MPI" baseline |
+//! | [`model_tuned`] | `model-tuned` (all three ops) | cost-model-scored schedule selection | adaptive dispatcher |
+//! | [`schedule`] | — | the communication-schedule IR + the one generic executor ([`SchedPlan`]) | execution substrate |
 //! | [`plan`] | — | op-generic plan framework: [`CollectivePlan`], per-op traits, [`OpRegistry`] | persistent API substrate |
 //! | [`primitives`] | — | gather / bcast / allgatherv (+ [`primitives::AllgathervPlan`]) | substrate |
 //! | [`allreduce`] | `recursive-doubling`, `loc-aware` | planned allreduce (sum) | §6 extension |
 //! | [`alltoall`] | `system-default`, `pairwise`, `bruck`, `loc-aware` | planned alltoall | §6 extension |
+//!
+//! Every algorithm *plans* by building a [`Schedule`] — pure data — and
+//! *executes* through the single interpreter in [`SchedPlan`]; the same
+//! schedule drives the cost model ([`crate::model::cost`]), the tracer
+//! conformance suite and `locag explain`. No per-algorithm execute loops
+//! exist.
 //!
 //! ## The other operations
 //!
@@ -71,17 +79,20 @@ pub mod dissemination;
 pub mod grouping;
 pub mod hierarchical;
 pub mod loc_bruck;
+pub mod model_tuned;
 pub mod multilane;
 pub mod plan;
 pub mod primitives;
 pub mod recursive_doubling;
 pub mod ring;
+pub mod schedule;
 
 pub use plan::{
     AllgatherPlan, AllreduceAlgorithm, AllreducePlan, AllreduceRegistry, AlltoallAlgorithm,
     AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm, OpKind,
     OpRegistry, Registry, Shape, Summable,
 };
+pub use schedule::{BufId, Round, SchedPlan, Schedule, Slice, Step};
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -115,11 +126,15 @@ pub enum Algorithm {
     LocalityBruckMultilevel,
     /// System-MPI style auto-selection.
     SystemDefault,
+    /// Cost-model-driven auto-selection: scores every candidate's schedule
+    /// under the machine's postal parameters, plans the cheapest (see
+    /// [`model_tuned`]).
+    ModelTuned,
 }
 
 impl Algorithm {
     /// All algorithms, in the order the figures report them.
-    pub const ALL: [Algorithm; 10] = [
+    pub const ALL: [Algorithm; 11] = [
         Algorithm::SystemDefault,
         Algorithm::Bruck,
         Algorithm::Ring,
@@ -130,6 +145,7 @@ impl Algorithm {
         Algorithm::LocalityBruck,
         Algorithm::LocalityBruckV,
         Algorithm::LocalityBruckMultilevel,
+        Algorithm::ModelTuned,
     ];
 
     /// CLI / CSV / registry name.
@@ -145,6 +161,7 @@ impl Algorithm {
             Algorithm::LocalityBruckV => "loc-bruck-v",
             Algorithm::LocalityBruckMultilevel => "loc-bruck-2level",
             Algorithm::SystemDefault => "system-default",
+            Algorithm::ModelTuned => "model-tuned",
         }
     }
 

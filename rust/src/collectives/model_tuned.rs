@@ -1,0 +1,418 @@
+//! The model-tuned dispatcher: plan candidate schedules, score them with
+//! the IR-derived cost model, select the cheapest.
+//!
+//! The adaptive counterpart to the MPICH-style static thresholds of
+//! [`super::dispatch`]: where `system-default` mimics fixed byte cutoffs
+//! (Thakur et al.), `model-tuned` builds the *actual* communication
+//! schedule of every candidate algorithm for every rank, evaluates each
+//! whole-world schedule set against the machine's locality-split postal
+//! parameters ([`crate::model::cost::predict`], paper Eq. 2), and plans
+//! the one with the lowest predicted completion time. Because prediction
+//! replays exactly the clock algebra of the virtual transport, the
+//! selection is provably the virtual-time-fastest candidate on the
+//! modeled machine — the paper's "the winner flips with topology and
+//! message size" argument turned into a dispatcher.
+//!
+//! Selection is deterministic and identical on every rank (schedules are
+//! pure functions of topology + shape; candidates are scored in a fixed
+//! order with strict comparison), so planning stays collective without
+//! any communication. Under [`Timing::Wallclock`](crate::comm::Timing)
+//! no machine parameters are attached to the communicator; the dispatcher
+//! then scores against the Lassen preset (documented default).
+//!
+//! Planning cost: `O(candidates · p · steps)` per rank — fine for the
+//! shapes the test-suite and figures use; plan once and reuse (the whole
+//! point of the persistent API) when `p` grows large.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::plan::{
+    trivial_a2a_plan, trivial_plan, trivial_reduce_plan, AllgatherPlan, AllreduceAlgorithm,
+    AllreducePlan, AlltoallAlgorithm, AlltoallPlan, CollectiveAlgorithm, NamedAlgorithm, Shape,
+    Summable,
+};
+use super::schedule::{build_allreduce, build_alltoall, SchedPlan, Schedule, WorldView};
+use super::{Algorithm, OpKind};
+use crate::comm::{Comm, Pod};
+use crate::error::{Error, Result};
+use crate::model::{cost, MachineParams};
+
+/// Process-wide memo of dispatcher selections, keyed by the full decision
+/// input (operation, shape, element size, topology+placement, machine).
+/// Selection is a pure function of the key, and all ranks of a world plan
+/// concurrently with identical keys — the winner is computed **while
+/// holding the lock** ([`cached_winner`]), so concurrent ranks block on
+/// the first scorer and reuse its result: `p` identical whole-world
+/// scoring passes become one (plus `p` cheap winner rebuilds).
+static SELECTION_CACHE: Mutex<Option<HashMap<String, String>>> = Mutex::new(None);
+
+fn selection_key(
+    op: OpKind,
+    view: &WorldView,
+    machine: &MachineParams,
+    n: usize,
+    elem_bytes: usize,
+) -> String {
+    format!(
+        "{op:?}|{}|{n}|{elem_bytes}|{:?}|{machine:?}|{:?}",
+        view.p, view.world_of, view.topo
+    )
+}
+
+/// Entries kept before the memo is cleared: the cache is a perf
+/// optimization for the SPMD planning burst (all ranks of one world share
+/// one key), not a long-lived index — a sweep over many shapes must not
+/// accumulate unbounded key strings.
+const SELECTION_CACHE_CAP: usize = 32;
+
+/// Look up the winner for `key`, computing (and memoizing) it with
+/// `score` on a miss. The lock is held across `score` deliberately:
+/// scoring is a pure function of the key, and the common contention is
+/// the `p` ranks of one world planning the *same* key concurrently — they
+/// should wait for the first result instead of repeating the whole-world
+/// scoring pass. (Planners with a different key also wait; planning is
+/// rare and bounded, and correctness never depends on the cache.)
+fn cached_winner(key: String, score: impl FnOnce() -> Result<String>) -> Result<String> {
+    let mut guard = SELECTION_CACHE.lock().unwrap_or_else(|e| e.into_inner());
+    let map = guard.get_or_insert_with(HashMap::new);
+    if let Some(w) = map.get(&key) {
+        return Ok(w.clone());
+    }
+    let winner = score()?;
+    if map.len() >= SELECTION_CACHE_CAP {
+        map.clear();
+    }
+    map.insert(key, winner.clone());
+    Ok(winner)
+}
+
+/// The candidate pool of the allgather dispatcher: every concrete
+/// algorithm (dispatchers excluded), in scoring order (ties keep the
+/// earlier entry).
+pub const ALLGATHER_CANDIDATES: [Algorithm; 9] = [
+    Algorithm::Bruck,
+    Algorithm::Ring,
+    Algorithm::RecursiveDoubling,
+    Algorithm::Dissemination,
+    Algorithm::Hierarchical,
+    Algorithm::Multilane,
+    Algorithm::LocalityBruck,
+    Algorithm::LocalityBruckV,
+    Algorithm::LocalityBruckMultilevel,
+];
+
+/// The candidate pool of the allreduce dispatcher.
+pub const ALLREDUCE_CANDIDATES: [&str; 2] = ["recursive-doubling", "loc-aware"];
+
+/// The candidate pool of the alltoall dispatcher.
+pub const ALLTOALL_CANDIDATES: [&str; 3] = ["pairwise", "bruck", "loc-aware"];
+
+/// The machine the dispatcher scores against: the communicator's virtual
+/// machine when present, otherwise the Lassen preset.
+fn scoring_machine(comm: &Comm) -> MachineParams {
+    comm.machine().cloned().unwrap_or_else(MachineParams::lassen)
+}
+
+/// Score candidate schedule sets and return the winner:
+/// `(winning label, per-rank schedules)`. Candidates that fail to build
+/// (shape preconditions) are skipped; if none builds, the last error is
+/// returned.
+fn pick<L: Clone, B>(
+    labels: &[L],
+    name_of: impl Fn(&L) -> String,
+    build_all: B,
+    view: &WorldView,
+    machine: &MachineParams,
+) -> Result<(String, Vec<Schedule>)>
+where
+    B: Fn(&L) -> Result<Vec<Schedule>>,
+{
+    let mut best: Option<(f64, String, Vec<Schedule>)> = None;
+    let mut last_err: Option<Error> = None;
+    for label in labels {
+        match build_all(label) {
+            Err(e) => last_err = Some(e),
+            Ok(scheds) => {
+                let t = cost::predict(&scheds, &view.topo, &view.world_of, machine)?;
+                if best.as_ref().map_or(true, |(bt, _, _)| t < *bt) {
+                    best = Some((t, name_of(label), scheds));
+                }
+            }
+        }
+    }
+    match best {
+        Some((_, name, scheds)) => Ok((name, scheds)),
+        None => Err(last_err.unwrap_or_else(|| {
+            Error::Precondition("model-tuned: no candidate algorithm admits this shape".into())
+        })),
+    }
+}
+
+/// Pick the cheapest allgather candidate for this world/shape: returns the
+/// winning algorithm's name and all ranks' schedules (full scoring pass;
+/// `locag explain` and tests use this — `plan()` goes through the cached
+/// single-rank variant).
+pub fn pick_allgather(
+    view: &WorldView,
+    machine: &MachineParams,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<(String, Vec<Schedule>)> {
+    pick(
+        &ALLGATHER_CANDIDATES,
+        |a| a.name().to_string(),
+        |a| {
+            (0..view.p)
+                .map(|r| super::schedule::build_allgather(*a, view, r, n, elem_bytes))
+                .collect()
+        },
+        view,
+        machine,
+    )
+}
+
+/// Pick the cheapest allreduce candidate (see [`pick_allgather`]).
+pub fn pick_allreduce(
+    view: &WorldView,
+    machine: &MachineParams,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<(String, Vec<Schedule>)> {
+    pick(
+        &ALLREDUCE_CANDIDATES,
+        |s| s.to_string(),
+        |s| (0..view.p).map(|r| build_allreduce(s, view, r, n, elem_bytes)).collect(),
+        view,
+        machine,
+    )
+}
+
+/// Pick the cheapest alltoall candidate (see [`pick_allgather`]).
+pub fn pick_alltoall(
+    view: &WorldView,
+    machine: &MachineParams,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<(String, Vec<Schedule>)> {
+    pick(
+        &ALLTOALL_CANDIDATES,
+        |s| s.to_string(),
+        |s| (0..view.p).map(|r| build_alltoall(s, view, r, n, elem_bytes)).collect(),
+        view,
+        machine,
+    )
+}
+
+/// Cached selection + single-rank schedule build: what `plan()` uses so
+/// that only the first rank of a world pays the whole-world scoring pass.
+fn select_for_rank(
+    op: OpKind,
+    view: &WorldView,
+    machine: &MachineParams,
+    n: usize,
+    elem_bytes: usize,
+    rank: usize,
+) -> Result<Schedule> {
+    let key = selection_key(op, view, machine, n, elem_bytes);
+    let winner = cached_winner(key, || {
+        let (w, _) = match op {
+            OpKind::Allgather => pick_allgather(view, machine, n, elem_bytes)?,
+            OpKind::Allreduce => pick_allreduce(view, machine, n, elem_bytes)?,
+            OpKind::Alltoall => pick_alltoall(view, machine, n, elem_bytes)?,
+        };
+        Ok(w)
+    })?;
+    let mut sched = match op {
+        OpKind::Allgather => super::schedule::build_allgather(
+            Algorithm::parse(&winner).expect("cached winner is a candidate name"),
+            view,
+            rank,
+            n,
+            elem_bytes,
+        )?,
+        OpKind::Allreduce => build_allreduce(&winner, view, rank, n, elem_bytes)?,
+        OpKind::Alltoall => build_alltoall(&winner, view, rank, n, elem_bytes)?,
+    };
+    sched.label = format!("model-tuned[{winner}]");
+    Ok(sched)
+}
+
+/// The model-tuned allgather dispatcher (registry entry).
+pub struct ModelTuned;
+
+impl NamedAlgorithm for ModelTuned {
+    fn name(&self) -> &'static str {
+        "model-tuned"
+    }
+
+    fn summary(&self) -> &'static str {
+        "cost-model dispatch: scores every candidate schedule, plans the cheapest"
+    }
+}
+
+impl<T: Pod> CollectiveAlgorithm<T> for ModelTuned {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("model-tuned", comm, shape) {
+            return Ok(p);
+        }
+        let view = WorldView::from_comm(comm);
+        let machine = scoring_machine(comm);
+        let sched = select_for_rank(
+            OpKind::Allgather,
+            &view,
+            &machine,
+            shape.n,
+            std::mem::size_of::<T>(),
+            comm.rank(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "model-tuned", sched)?)
+    }
+}
+
+/// The model-tuned allreduce dispatcher (registry entry).
+pub struct ModelTunedAllreduce;
+
+impl NamedAlgorithm for ModelTunedAllreduce {
+    fn name(&self) -> &'static str {
+        "model-tuned"
+    }
+
+    fn summary(&self) -> &'static str {
+        "cost-model dispatch over the allreduce candidates"
+    }
+}
+
+impl<T: Summable> AllreduceAlgorithm<T> for ModelTunedAllreduce {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("model-tuned", comm, shape) {
+            return Ok(p);
+        }
+        let view = WorldView::from_comm(comm);
+        let machine = scoring_machine(comm);
+        let sched = select_for_rank(
+            OpKind::Allreduce,
+            &view,
+            &machine,
+            shape.n,
+            std::mem::size_of::<T>(),
+            comm.rank(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "model-tuned", sched)?)
+    }
+}
+
+/// The model-tuned alltoall dispatcher (registry entry).
+pub struct ModelTunedAlltoall;
+
+impl NamedAlgorithm for ModelTunedAlltoall {
+    fn name(&self) -> &'static str {
+        "model-tuned"
+    }
+
+    fn summary(&self) -> &'static str {
+        "cost-model dispatch over the alltoall candidates"
+    }
+}
+
+impl<T: Pod> AlltoallAlgorithm<T> for ModelTunedAlltoall {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("model-tuned", comm, shape) {
+            return Ok(p);
+        }
+        let view = WorldView::from_comm(comm);
+        let machine = scoring_machine(comm);
+        let sched = select_for_rank(
+            OpKind::Alltoall,
+            &view,
+            &machine,
+            shape.n,
+            std::mem::size_of::<T>(),
+            comm.rank(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "model-tuned", sched)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn selection_is_deterministic_and_names_a_candidate() {
+        let topo = Topology::regions(4, 4);
+        let view = WorldView::world(&topo);
+        let m = MachineParams::lassen();
+        let (a, scheds) = pick_allgather(&view, &m, 2, 4).unwrap();
+        let (b, _) = pick_allgather(&view, &m, 2, 4).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(scheds.len(), 16);
+        assert!(ALLGATHER_CANDIDATES.iter().any(|c| c.name() == a), "{a}");
+    }
+
+    #[test]
+    fn picks_locality_aware_small_and_bandwidth_friendly_large() {
+        // On a strongly locality-skewed machine the small-message winner
+        // must exploit locality; at large sizes the winner must not be a
+        // log-step duplicating algorithm.
+        let topo = Topology::regions(8, 8);
+        let view = WorldView::world(&topo);
+        let m = MachineParams::lassen();
+        let (small, _) = pick_allgather(&view, &m, 2, 4).unwrap();
+        assert!(
+            small.starts_with("loc-bruck") || small == "multilane" || small == "hierarchical",
+            "small-message winner should be locality-aware, got {small}"
+        );
+        let (large, _) = pick_allgather(&view, &m, 1 << 15, 4).unwrap();
+        assert_ne!(large, "bruck", "large messages must avoid duplicate forwarding");
+        assert_ne!(large, "dissemination");
+    }
+
+    #[test]
+    fn picks_the_predicted_fastest_candidate() {
+        // Exhaustive cross-check on a small grid: the dispatcher's pick
+        // must achieve the minimum predicted time over all candidates.
+        let m = MachineParams::lassen();
+        for (regions, ppr, n) in [(2usize, 2usize, 2usize), (4, 4, 2), (4, 2, 64), (2, 8, 2)] {
+            let topo = Topology::regions(regions, ppr);
+            let view = WorldView::world(&topo);
+            let (winner, scheds) = pick_allgather(&view, &m, n, 4).unwrap();
+            let t_win =
+                crate::model::cost::predict(&scheds, &topo, &view.world_of, &m).unwrap();
+            for cand in ALLGATHER_CANDIDATES {
+                let Ok(cs) = crate::model::cost::allgather_schedules(cand, &topo, n, 4) else {
+                    continue;
+                };
+                let t = crate::model::cost::predict(&cs, &topo, &view.world_of, &m).unwrap();
+                assert!(
+                    t_win <= t + 1e-15,
+                    "{regions}x{ppr} n={n}: picked {winner} ({t_win:.3e}) but {} is {t:.3e}",
+                    cand.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_and_allreduce_dispatchers_pick_valid_candidates() {
+        let topo = Topology::regions(4, 4);
+        let view = WorldView::world(&topo);
+        let m = MachineParams::lassen();
+        let (a2a, _) = pick_alltoall(&view, &m, 2, 8).unwrap();
+        assert!(ALLTOALL_CANDIDATES.contains(&a2a.as_str()), "{a2a}");
+        let (ar, _) = pick_allreduce(&view, &m, 2, 8).unwrap();
+        assert!(ALLREDUCE_CANDIDATES.contains(&ar.as_str()), "{ar}");
+    }
+
+    #[test]
+    fn allreduce_dispatcher_propagates_power_of_two_rejection() {
+        // p = 6: both allreduce candidates need power-of-two structure.
+        let topo = Topology::regions(3, 2);
+        let view = WorldView::world(&topo);
+        let err = pick_allreduce(&view, &MachineParams::lassen(), 2, 8)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("power-of-two"), "{err}");
+    }
+}

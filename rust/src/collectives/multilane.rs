@@ -1,4 +1,5 @@
-//! Multi-lane allgather (related work, Träff & Hunold '20 [21]).
+//! Multi-lane allgather (related work, Träff & Hunold '20 [21]) as a
+//! schedule builder.
 //!
 //! Every rank participates in non-local communication: local rank `j`
 //! (lane `j`) of each region runs an inter-region Bruck allgather over its
@@ -8,15 +9,16 @@
 //! `≈ b/p_ℓ` like the locality-aware Bruck, but still needs `log2(r)`
 //! non-local *messages* per rank (§2.2).
 //!
-//! The persistent [`MultilanePlan`] retains the lane and region
-//! communicators inside two nested Bruck plans and precomputes the final
-//! lane-order → rank-order permutation.
+//! Both Bruck phases are inlined onto the parent communicator by
+//! [`super::schedule::emit_group_bruck`]; the final lane-order →
+//! rank-order permutation is a run of `CopyLocal` steps.
 
-use super::bruck::BruckPlan;
-use super::grouping::{group_ranks, require_uniform, GroupBy};
+use super::grouping::GroupBy;
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
-    Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+};
+use super::schedule::{
+    emit_group_bruck, locate, uniform_size, SchedPlan, Schedule, ScheduleBuilder, Slice, WorldView,
 };
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
@@ -39,119 +41,74 @@ impl<T: Pod> CollectiveAlgorithm<T> for Multilane {
         if let Some(p) = trivial_plan("multilane", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(MultilanePlan::<T>::new(comm, shape.n)?))
+        let view = WorldView::from_comm(comm);
+        let sched = build_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "multilane", sched)?)
     }
 }
 
-/// The communicator ranks of lane `j`, sorted ascending (as `sub`
-/// requires), each paired with the group it represents.
-fn lane_order(groups: &super::grouping::Groups, j: usize) -> Vec<(usize, usize)> {
-    let mut pairs: Vec<(usize, usize)> = groups
-        .members
-        .iter()
-        .enumerate()
-        .map(|(gi, g)| (g[j], gi))
-        .collect();
+/// The communicator ranks of lane `j`, sorted ascending (stable under any
+/// placement), each paired with the group it represents.
+fn lane_order(groups: &[Vec<usize>], j: usize) -> Vec<(usize, usize)> {
+    let mut pairs: Vec<(usize, usize)> =
+        groups.iter().enumerate().map(|(gi, g)| (g[j], gi)).collect();
     pairs.sort_unstable();
     pairs
 }
 
-/// Persistent multi-lane plan.
-pub struct MultilanePlan<T: Pod> {
+/// Build the multi-lane allgather schedule for one rank (pure; SPMD).
+pub fn build_schedule(
+    view: &WorldView,
+    rank: usize,
     n: usize,
-    p: usize,
-    r_n: usize,
-    /// Phase 1: Bruck over this rank's lane communicator.
-    lane_plan: BruckPlan<T>,
-    /// Lane result scratch, length `r_n · n`.
-    lane_result: Vec<T>,
-    /// Phase 2: Bruck over the region communicator (absent when `ppr == 1`).
-    local_plan: Option<BruckPlan<T>>,
-    /// All-lane scratch, length `p · n` (only used with `local_plan`).
-    all_lanes: Vec<T>,
-    /// Lane-major position → communicator rank.
-    perm: Vec<usize>,
-}
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    let groups = view.split(&(0..view.p).collect::<Vec<_>>(), GroupBy::Region);
+    let ppr = uniform_size(&groups, "multi-lane allgather")?;
+    let (g, l) = locate(&groups, rank)?;
+    let p = view.p;
+    let r_n = groups.len();
 
-impl<T: Pod> MultilanePlan<T> {
-    /// Collectively plan a multi-lane allgather of `n` elements per rank.
-    pub fn new(comm: &Comm, n: usize) -> Result<MultilanePlan<T>> {
-        let groups = group_ranks(comm, GroupBy::Region)?;
-        let ppr = require_uniform(&groups, "multi-lane allgather")?;
-        let p = comm.size();
-        let r_n = groups.count();
+    let mut sb = ScheduleBuilder::new("lane bruck");
+    // Phase 1: Bruck over this rank's lane (one rank per region).
+    let lane_ranks: Vec<usize> = lane_order(&groups, l).into_iter().map(|(r, _)| r).collect();
+    let lane_result = sb.scratch(r_n * n);
+    emit_group_bruck(
+        &mut sb,
+        &lane_ranks,
+        rank,
+        n,
+        Slice::input(0, n),
+        Slice::at(lane_result, 0, r_n * n),
+    );
 
-        // Phase 1 communicator: this rank's lane. Under arbitrary placement
-        // the lane's comm ranks need not be ascending by group, so sort for
-        // `sub`; the permutation below remembers which rank each lane
-        // position carries.
-        let my_lane = lane_order(&groups, groups.my_local);
-        let lane_ranks: Vec<usize> = my_lane.iter().map(|&(r, _)| r).collect();
-        let lane = comm.sub(&lane_ranks)?;
-        let lane_plan = BruckPlan::<T>::new(&lane, n);
+    // Phase 2: local allgather of the lane results (absent when ppr == 1).
+    let src = if ppr > 1 {
+        sb.round("local allgather");
+        let all_lanes = sb.scratch(p * n);
+        emit_group_bruck(
+            &mut sb,
+            &groups[g],
+            rank,
+            r_n * n,
+            Slice::at(lane_result, 0, r_n * n),
+            Slice::at(all_lanes, 0, p * n),
+        );
+        all_lanes
+    } else {
+        lane_result
+    };
 
-        let local_plan = if ppr > 1 {
-            let local_comm = comm.sub(&groups.members[groups.mine])?;
-            Some(BruckPlan::<T>::new(&local_comm, r_n * n))
-        } else {
-            None
-        };
-
-        // all_lanes layout: [local rank j][lane-j position k] -> the
-        // contribution of the rank at lane_order(j)[k].
-        let mut perm = Vec::with_capacity(p);
-        for j in 0..ppr {
-            for (rank, _gi) in lane_order(&groups, j) {
-                perm.push(rank);
-            }
+    // Lane-major → communicator rank order.
+    sb.round("reorder");
+    let mut pos = 0usize;
+    for j in 0..ppr {
+        for (r, _gi) in lane_order(&groups, j) {
+            sb.copy(Slice::at(src, pos * n, n), Slice::output(r * n, n));
+            pos += 1;
         }
-        Ok(MultilanePlan {
-            n,
-            p,
-            r_n,
-            lane_plan,
-            lane_result: vec![T::default(); r_n * n],
-            local_plan,
-            all_lanes: if ppr > 1 { vec![T::default(); p * n] } else { Vec::new() },
-            perm,
-        })
     }
-}
-
-impl<T: Pod> CollectivePlan for MultilanePlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "multilane"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.p
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for MultilanePlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        check_io(self.n, self.p, input, output)?;
-        if self.n == 0 {
-            return Ok(());
-        }
-        let n = self.n;
-        debug_assert_eq!(self.lane_result.len(), self.r_n * n);
-        self.lane_plan.execute(input, &mut self.lane_result)?;
-        let src: &[T] = if let Some(lp) = &mut self.local_plan {
-            lp.execute(&self.lane_result, &mut self.all_lanes)?;
-            &self.all_lanes
-        } else {
-            &self.lane_result
-        };
-        for (pos, &rank) in self.perm.iter().enumerate() {
-            output[rank * n..(rank + 1) * n].copy_from_slice(&src[pos * n..(pos + 1) * n]);
-        }
-        Ok(())
-    }
+    Ok(sb.finish(OpKind::Allgather, p, n, elem_bytes, "multilane"))
 }
 
 /// One-shot convenience wrapper: plan + single execute.
@@ -239,9 +196,11 @@ mod tests {
 
     #[test]
     fn plan_reuse_stays_correct() {
+        use crate::collectives::plan::Registry;
         let topo = Topology::regions(4, 2);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let mut plan = MultilanePlan::<u64>::new(c, 1).unwrap();
+            let mut plan =
+                Registry::<u64>::standard().plan("multilane", c, Shape::elems(1)).unwrap();
             let mut out = vec![0u64; 8];
             for round in 0..5u64 {
                 plan.execute(&[c.rank() as u64 + 10 * round], &mut out).unwrap();

@@ -4,12 +4,13 @@
 //! The framework has three layers:
 //!
 //! 1. **A shared core.** [`CollectivePlan`] is the operation-independent
-//!    face of every plan (algorithm name, communicator size, planned
-//!    shape); [`PlanCore`] is the state every concrete plan embeds —
-//!    a retained communicator handle, the planned shape, and a
-//!    pre-reserved block of collective tags. Shape validation
-//!    ([`check_io`] and friends), the uniform zero-length short-circuit
-//!    ([`EmptyPlan`]) and name-delegation ([`SelectedPlan`]) are shared.
+//!    face of every plan (algorithm name, communicator size, planned shape,
+//!    and the [`Schedule`](super::schedule::Schedule) it executes);
+//!    `PlanCore` is the state the generic
+//!    [`SchedPlan`](super::schedule::SchedPlan) embeds — a retained
+//!    communicator handle, the planned shape, and a pre-reserved block of
+//!    collective tags. Shape validation (`check_io` and friends) and the
+//!    uniform zero-length short-circuit (`EmptyPlan`) are shared.
 //! 2. **Per-operation traits.** [`AllgatherPlan`], [`AllreducePlan`] and
 //!    [`AlltoallPlan`] extend [`CollectivePlan`] with the operation's
 //!    `execute` contract; [`CollectiveAlgorithm`], [`AllreduceAlgorithm`]
@@ -62,7 +63,7 @@ use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
 
 use super::{allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
-use super::{loc_bruck, multilane, recursive_doubling, ring};
+use super::{loc_bruck, model_tuned, multilane, recursive_doubling, ring};
 
 /// Element types that can be summed — the reduction of the allreduce
 /// operation (the paper's allreduce reference [4] reduces with `MPI_SUM`).
@@ -162,6 +163,14 @@ pub trait CollectivePlan {
 
     /// Rank count of the planned communicator.
     fn comm_size(&self) -> usize;
+
+    /// The communication-schedule IR this plan executes, if any (`None`
+    /// only for the zero-length no-op plan). One source of truth for
+    /// execution, tracing and cost prediction — see
+    /// [`super::schedule`] and [`crate::model::cost`].
+    fn schedule(&self) -> Option<&super::schedule::Schedule> {
+        None
+    }
 }
 
 /// A prepared allgather: gather `input` (length `shape().n`) from every
@@ -409,46 +418,6 @@ pub(crate) fn one_shot_a2a<T: Pod>(
     Ok(out)
 }
 
-/// A plan delegating to another plan under a different reported name
-/// (dispatch selection, degenerate-topology fallbacks). Generic over the
-/// per-operation plan trait object.
-pub(crate) struct SelectedPlan<P: ?Sized> {
-    pub name: &'static str,
-    pub inner: Box<P>,
-}
-
-impl<P: ?Sized + CollectivePlan> CollectivePlan for SelectedPlan<P> {
-    fn algorithm(&self) -> &'static str {
-        self.name
-    }
-
-    fn shape(&self) -> Shape {
-        self.inner.shape()
-    }
-
-    fn comm_size(&self) -> usize {
-        self.inner.comm_size()
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for SelectedPlan<dyn AllgatherPlan<T>> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        self.inner.execute(input, output)
-    }
-}
-
-impl<T: Summable> AllreducePlan<T> for SelectedPlan<dyn AllreducePlan<T>> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        self.inner.execute(input, output)
-    }
-}
-
-impl<T: Pod> AlltoallPlan<T> for SelectedPlan<dyn AlltoallPlan<T>> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        self.inner.execute(input, output)
-    }
-}
-
 /// Name → algorithm-factory registry for one operation.
 ///
 /// Lookup is case-insensitive; the *last* registration of a name wins so
@@ -531,7 +500,8 @@ impl<T: Pod> Registry<T> {
         OpRegistry::new(OpKind::Allgather)
     }
 
-    /// The ten built-in allgathers, in the order the figures report them.
+    /// The built-in allgathers, in the order the figures report them
+    /// (the ten classic algorithms plus the model-tuned dispatcher).
     pub fn standard() -> Registry<T> {
         let mut r = Registry::empty();
         r.register(Box::new(dispatch::SystemDefault));
@@ -544,6 +514,7 @@ impl<T: Pod> Registry<T> {
         r.register(Box::new(loc_bruck::LocalityBruck));
         r.register(Box::new(loc_bruck::LocalityBruckV));
         r.register(Box::new(loc_bruck::LocalityBruckMultilevel));
+        r.register(Box::new(model_tuned::ModelTuned));
         r
     }
 
@@ -562,12 +533,13 @@ impl<T: Summable> AllreduceRegistry<T> {
         OpRegistry::new(OpKind::Allreduce)
     }
 
-    /// The built-in allreduces: recursive doubling and the §6
-    /// locality-aware regional variant.
+    /// The built-in allreduces: recursive doubling, the §6 locality-aware
+    /// regional variant and the model-tuned dispatcher.
     pub fn standard() -> AllreduceRegistry<T> {
         let mut r = AllreduceRegistry::empty();
         r.register(Box::new(allreduce::RecursiveDoublingAllreduce));
         r.register(Box::new(allreduce::LocalityAwareAllreduce));
+        r.register(Box::new(model_tuned::ModelTunedAllreduce));
         r
     }
 
@@ -586,14 +558,16 @@ impl<T: Pod> AlltoallRegistry<T> {
         OpRegistry::new(OpKind::Alltoall)
     }
 
-    /// The built-in alltoalls: MPICH-style dispatch, pairwise, Bruck and
-    /// the §6 locality-aware aggregation variant.
+    /// The built-in alltoalls: MPICH-style dispatch, pairwise, Bruck, the
+    /// §6 locality-aware aggregation variant and the model-tuned
+    /// dispatcher.
     pub fn standard() -> AlltoallRegistry<T> {
         let mut r = AlltoallRegistry::empty();
         r.register(Box::new(dispatch::SystemDefaultAlltoall));
         r.register(Box::new(alltoall::PairwiseAlltoall));
         r.register(Box::new(alltoall::BruckAlltoall));
         r.register(Box::new(alltoall::LocAwareAlltoall));
+        r.register(Box::new(model_tuned::ModelTunedAlltoall));
         r
     }
 
@@ -632,7 +606,7 @@ mod tests {
     use crate::topology::Topology;
 
     #[test]
-    fn standard_registry_lists_all_ten() {
+    fn standard_registry_matches_algorithm_enum() {
         let r = Registry::<u64>::standard();
         let names = r.names();
         assert_eq!(names.len(), Algorithm::ALL.len());
@@ -649,13 +623,16 @@ mod tests {
     fn allreduce_and_alltoall_registries_have_catalogs() {
         let r = AllreduceRegistry::<u64>::standard();
         assert_eq!(r.op(), OpKind::Allreduce);
-        assert_eq!(r.names(), vec!["recursive-doubling", "loc-aware"]);
+        assert_eq!(r.names(), vec!["recursive-doubling", "loc-aware", "model-tuned"]);
         for (name, summary) in r.catalog() {
             assert!(!summary.is_empty(), "{name} has no summary");
         }
         let r = AlltoallRegistry::<u64>::standard();
         assert_eq!(r.op(), OpKind::Alltoall);
-        assert_eq!(r.names(), vec!["system-default", "pairwise", "bruck", "loc-aware"]);
+        assert_eq!(
+            r.names(),
+            vec!["system-default", "pairwise", "bruck", "loc-aware", "model-tuned"]
+        );
         for (name, summary) in r.catalog() {
             assert!(!summary.is_empty(), "{name} has no summary");
         }

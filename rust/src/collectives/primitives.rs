@@ -5,10 +5,12 @@
 //! extension of the locality-aware Bruck needs (allgatherv for steps where
 //! some local ranks hold no new data — paper §3).
 //!
-//! [`AllgathervPlan`] is the persistent form used inside
-//! [`crate::collectives::loc_bruck`]'s plans: per-rank counts are fixed at
-//! plan time, so the Bruck-structured exchange runs over one flat rotated
-//! scratch buffer with precomputed offsets — no per-step `Vec`s.
+//! [`AllgathervPlan`] is the standalone persistent allgatherv; the planned
+//! collectives themselves now emit the equivalent structure as schedule
+//! steps ([`crate::collectives::schedule::emit_group_allgatherv`]) — this
+//! module remains the one-shot/utility API (gather, bcast, allgatherv)
+//! and the home of [`bcast_tree`], which the hierarchical schedule builder
+//! reuses.
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -75,7 +77,7 @@ pub fn bcast<T: Pod>(comm: &Comm, data: Option<Vec<T>>, root: usize) -> Result<V
 /// `(parent, children)` in communicator ranks, children in send order.
 /// Used by persistent plans to run the identical tree without re-deriving
 /// it per execution.
-pub(crate) fn bcast_tree(p: usize, id: usize, root: usize) -> (Option<usize>, Vec<usize>) {
+pub fn bcast_tree(p: usize, id: usize, root: usize) -> (Option<usize>, Vec<usize>) {
     let vid = (id + p - root) % p;
     let mut parent = None;
     let mut mask = 1usize;

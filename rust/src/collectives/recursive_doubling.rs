@@ -1,4 +1,4 @@
-//! Recursive-doubling allgather (§2, ref. [1]).
+//! Recursive-doubling allgather (§2, ref. [1]) as a schedule builder.
 //!
 //! `log2(p)` steps for power-of-two `p`: at step `i` rank `id` exchanges
 //! its currently-held `2^i·n` elements with rank `id XOR 2^i`. Unlike
@@ -6,16 +6,13 @@
 //! but `p` must be a power of two (MPICH falls back to Bruck otherwise;
 //! see [`crate::collectives::dispatch`]).
 //!
-//! The persistent [`RecursiveDoublingPlan`] exchanges directly through the
-//! caller's output buffer (sends are buffered eagerly by the transport, so
-//! the aligned send window needs no copy).
-
-use std::marker::PhantomData;
+//! The schedule exchanges directly through the caller's output buffer
+//! (the XOR windows are disjoint, and sends are buffered eagerly).
 
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
-    PlanCore, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
 };
+use super::schedule::{SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
 
@@ -37,96 +34,46 @@ impl<T: Pod> CollectiveAlgorithm<T> for RecursiveDoubling {
         if let Some(p) = trivial_plan("recursive-doubling", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(RecursiveDoublingPlan::<T>::new(comm, shape.n)?))
+        let sched =
+            build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "recursive-doubling", sched)?)
     }
 }
 
-/// One XOR exchange of the schedule.
-struct Step {
-    peer: usize,
-    /// First block of the aligned window this rank currently owns.
-    base: usize,
-    /// First block of the peer's aligned window.
-    peer_base: usize,
-    /// Window width in blocks.
-    dist: usize,
-}
-
-/// Persistent recursive-doubling plan.
-pub struct RecursiveDoublingPlan<T: Pod> {
-    core: PlanCore,
-    steps: Vec<Step>,
-    _elem: PhantomData<T>,
-}
-
-impl<T: Pod> RecursiveDoublingPlan<T> {
-    /// Collectively plan the exchange schedule. Errors at plan time on
-    /// non-power-of-two communicators.
-    pub fn new(comm: &Comm, n: usize) -> Result<RecursiveDoublingPlan<T>> {
-        let p = comm.size();
-        if !p.is_power_of_two() {
-            return Err(Error::Precondition(format!(
-                "recursive doubling requires power-of-two size, got {p}"
-            )));
-        }
-        let id = comm.rank();
-        let mut steps = Vec::new();
-        let mut dist = 1usize;
-        while dist < p {
-            let peer = id ^ dist;
-            steps.push(Step {
-                peer,
-                base: (id / dist) * dist,
-                peer_base: (peer / dist) * dist,
-                dist,
-            });
-            dist <<= 1;
-        }
-        Ok(RecursiveDoublingPlan {
-            core: PlanCore::new(comm, n, steps.len() as u64),
-            steps,
-            _elem: PhantomData,
-        })
+/// Build the recursive-doubling schedule for one rank (pure; SPMD).
+/// Errors on non-power-of-two communicators — the plan-time precondition.
+pub fn build_schedule(
+    p: usize,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    if !p.is_power_of_two() {
+        return Err(Error::Precondition(format!(
+            "recursive doubling requires power-of-two size, got {p}"
+        )));
     }
-}
-
-impl<T: Pod> CollectivePlan for RecursiveDoublingPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "recursive-doubling"
+    let mut sb = ScheduleBuilder::new("recursive doubling");
+    sb.copy(Slice::input(0, n), Slice::output(rank * n, n));
+    let mut dist = 1usize;
+    while dist < p {
+        let tag = sb.tag();
+        let peer = rank ^ dist;
+        let base = (rank / dist) * dist;
+        let peer_base = (peer / dist) * dist;
+        // The windows are disjoint (peer differs in the `dist` bit), so the
+        // exchange runs through the output buffer directly.
+        sb.sendrecv(
+            peer,
+            Slice::output(base * n, dist * n),
+            peer,
+            Slice::output(peer_base * n, dist * n),
+            tag,
+            0,
+        );
+        dist <<= 1;
     }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for RecursiveDoublingPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        let core = &self.core;
-        check_io(core.n, core.p, input, output)?;
-        if core.n == 0 {
-            return Ok(());
-        }
-        let n = core.n;
-        output[core.id * n..(core.id + 1) * n].copy_from_slice(input);
-        for (i, s) in self.steps.iter().enumerate() {
-            let tag = core.tag(i as u64);
-            // The windows are disjoint (peer differs in the `dist` bit), so
-            // we can send from and receive into the output buffer directly.
-            let _send =
-                core.comm.isend(&output[s.base * n..(s.base + s.dist) * n], s.peer, tag)?;
-            let req = core.comm.irecv(s.peer, tag);
-            req.wait_into(
-                &core.comm,
-                &mut output[s.peer_base * n..(s.peer_base + s.dist) * n],
-            )?;
-        }
-        Ok(())
-    }
+    Ok(sb.finish(OpKind::Allgather, p, n, elem_bytes, "recursive-doubling"))
 }
 
 /// One-shot convenience wrapper: plan + single execute. Errors on
@@ -152,11 +99,16 @@ mod tests {
     }
 
     #[test]
-    fn plan_rejects_non_power_of_two_at_plan_time() {
-        let topo = Topology::regions(3, 2);
-        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            RecursiveDoublingPlan::<u32>::new(c, 4).is_err()
-        });
-        assert!(run.results.iter().all(|&e| e));
+    fn schedule_rejects_non_power_of_two_at_build_time() {
+        let err = build_schedule(6, 0, 4, 8).unwrap_err().to_string();
+        assert!(err.contains("power-of-two"), "{err}");
+    }
+
+    #[test]
+    fn schedule_is_scratch_free_with_aligned_windows() {
+        let sched = build_schedule(8, 3, 2, 4).unwrap();
+        assert!(sched.scratch.is_empty());
+        assert_eq!(sched.tags, 3);
+        sched.validate().unwrap();
     }
 }

@@ -1,4 +1,4 @@
-//! Ring allgather (§2, ref. [8]).
+//! Ring allgather (§2, ref. [8]) as a schedule builder.
 //!
 //! `p − 1` steps; at step `i` each rank forwards the block it received in
 //! step `i − 1` (initially its own block) to rank `id − 1 (mod p)` and
@@ -6,15 +6,14 @@
 //! per link and keeps every message between neighbours, which is why MPI
 //! implementations select it for large messages (§2).
 //!
-//! The persistent [`RingPlan`] needs no scratch at all: blocks stream
-//! directly through the caller's output buffer.
-
-use std::marker::PhantomData;
+//! The schedule needs no scratch at all: every
+//! [`Step::SendRecv`](super::schedule::Step) streams blocks directly
+//! through the caller's output buffer.
 
 use super::plan::{
-    check_io, trivial_plan, AllgatherPlan, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm,
-    PlanCore, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
 };
+use super::schedule::{SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
 use crate::error::Result;
 
@@ -36,68 +35,33 @@ impl<T: Pod> CollectiveAlgorithm<T> for Ring {
         if let Some(p) = trivial_plan("ring", comm, shape) {
             return Ok(p);
         }
-        Ok(Box::new(RingPlan::<T>::new(comm, shape.n)))
+        let sched = build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        Ok(SchedPlan::<T>::boxed(comm, "ring", sched)?)
     }
 }
 
-/// Persistent ring plan: neighbours + tag block, zero scratch.
-pub struct RingPlan<T: Pod> {
-    core: PlanCore,
-    left: usize,
-    right: usize,
-    _elem: PhantomData<T>,
-}
-
-impl<T: Pod> RingPlan<T> {
-    /// Collectively plan a ring allgather of `n` elements per rank.
-    /// Reserves one collective tag per step on `comm`.
-    pub fn new(comm: &Comm, n: usize) -> RingPlan<T> {
-        let p = comm.size();
-        let id = comm.rank();
-        RingPlan {
-            core: PlanCore::new(comm, n, p.saturating_sub(1) as u64),
-            left: (id + p - 1) % p,
-            right: (id + 1) % p,
-            _elem: PhantomData,
-        }
+/// Build the ring allgather schedule for one rank (pure; SPMD).
+pub fn build_schedule(p: usize, rank: usize, n: usize, elem_bytes: usize) -> Schedule {
+    let mut sb = ScheduleBuilder::new("ring");
+    let left = (rank + p - 1) % p;
+    let right = (rank + 1) % p;
+    sb.copy(Slice::input(0, n), Slice::output(rank * n, n));
+    // Block travelling through this rank: at step s we hold the block of
+    // rank (rank + s) mod p and forward it left.
+    for s in 0..p.saturating_sub(1) {
+        let tag = sb.tag();
+        let have = (rank + s) % p;
+        let recv_block = (rank + s + 1) % p;
+        sb.sendrecv(
+            left,
+            Slice::output(have * n, n),
+            right,
+            Slice::output(recv_block * n, n),
+            tag,
+            0,
+        );
     }
-}
-
-impl<T: Pod> CollectivePlan for RingPlan<T> {
-    fn algorithm(&self) -> &'static str {
-        "ring"
-    }
-
-    fn shape(&self) -> Shape {
-        Shape { n: self.core.n }
-    }
-
-    fn comm_size(&self) -> usize {
-        self.core.p
-    }
-}
-
-impl<T: Pod> AllgatherPlan<T> for RingPlan<T> {
-    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
-        let core = &self.core;
-        check_io(core.n, core.p, input, output)?;
-        if core.n == 0 {
-            return Ok(());
-        }
-        let (n, p, id) = (core.n, core.p, core.id);
-        output[id * n..(id + 1) * n].copy_from_slice(input);
-        // Block travelling through this rank: at step s we hold the block
-        // of rank (id + s) mod p and forward it left.
-        for s in 0..p.saturating_sub(1) {
-            let tag = core.tag(s as u64);
-            let have = (id + s) % p;
-            let _send = core.comm.isend(&output[have * n..(have + 1) * n], self.left, tag)?;
-            let recv_block = (id + s + 1) % p;
-            let req = core.comm.irecv(self.right, tag);
-            req.wait_into(&core.comm, &mut output[recv_block * n..(recv_block + 1) * n])?;
-        }
-        Ok(())
-    }
+    sb.finish(OpKind::Allgather, p, n, elem_bytes, "ring")
 }
 
 /// One-shot convenience wrapper: plan + single execute.
@@ -121,5 +85,13 @@ mod tests {
             allgather(c, &[42u64, 7]).unwrap()
         });
         assert_eq!(run.results[0], vec![42, 7]);
+    }
+
+    #[test]
+    fn schedule_uses_no_scratch() {
+        let sched = build_schedule(5, 2, 3, 8);
+        assert!(sched.scratch.is_empty());
+        assert_eq!(sched.tags, 4);
+        sched.validate().unwrap();
     }
 }

@@ -1,0 +1,1135 @@
+//! The communication-schedule IR: every collective as **data**, executed
+//! by one generic interpreter.
+//!
+//! A [`Schedule`] is an ordered list of [`Round`]s of [`Step`]s with
+//! byte-exact buffer slices. Every registered (operation, algorithm) pair
+//! *plans* by building a schedule — a pure function of `(topology, rank,
+//! shape)` — and *executes* through the single interpreter in
+//! [`SchedPlan`]. Nothing about an algorithm lives in imperative execute
+//! loops anymore: locality counts, cost prediction
+//! ([`crate::model::cost`]), tracing (`locag explain`) and execution all
+//! read the same schedule.
+//!
+//! ## IR ↔ paper mapping (§4)
+//!
+//! The paper's cost formulas are sums of per-message postal terms
+//! `α_c + β_c·s` over the steps of an algorithm (Eq. 2–4). The IR makes
+//! that sum mechanical:
+//!
+//! * a [`Step::Send`]/[`Step::SendRecv`] of `s` bytes to a peer in
+//!   locality class `c` contributes exactly one `α_c + β_c·s` term —
+//!   Eq. 3's `⌈log₂ p⌉` terms are standard Bruck's `⌈log₂ p⌉` `SendRecv`
+//!   steps, Eq. 4's `⌈log_pℓ(r)⌉` non-local terms are the locality-aware
+//!   Bruck's non-local `SendRecv` steps;
+//! * [`Step::CopyLocal`] / [`Step::Rotate`] are the un-charged data
+//!   movement the paper folds into its constants (the final rotation of
+//!   Algorithm 1, pack/unpack, reorders);
+//! * [`Step::Recv`] synchronizes the receiver's clock to the sender's
+//!   post-charge stamp, which is how per-process postal costs compose
+//!   into a completion time ([`crate::model::cost::predict`]).
+//!
+//! ## SPMD construction
+//!
+//! Schedules are built rank-by-rank (SPMD, like the MPI programs they
+//! model): each rank's builder runs the same control flow and therefore
+//! reserves the same number of collective tags, but emits only its own
+//! steps. Building the schedule of *another* rank is the same function
+//! with a different `rank` argument — which is what lets the model-tuned
+//! dispatcher ([`super::model_tuned`]) and [`crate::model::cost`] evaluate
+//! whole-world schedules without executing them.
+
+use crate::comm::{copy_into, write_bytes, Comm, Pod};
+use crate::error::{Error, Result};
+use crate::topology::Topology;
+
+use super::grouping::{split_members, GroupBy};
+use super::plan::{
+    check_a2a_io, check_io, check_reduce_io, CollectivePlan, OpKind, PlanCore, Shape, Summable,
+};
+
+/// Identifies one of the buffers a schedule operates on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufId {
+    /// The caller's read-only input buffer.
+    Input,
+    /// The caller's output buffer.
+    Output,
+    /// The `i`-th plan-owned scratch buffer (lengths in
+    /// [`Schedule::scratch`]).
+    Scratch(usize),
+}
+
+/// An element range within one buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slice {
+    pub buf: BufId,
+    /// Element offset.
+    pub off: usize,
+    /// Element count.
+    pub len: usize,
+}
+
+impl Slice {
+    /// A slice of an arbitrary buffer.
+    pub fn at(buf: BufId, off: usize, len: usize) -> Slice {
+        Slice { buf, off, len }
+    }
+
+    /// A slice of the input buffer.
+    pub fn input(off: usize, len: usize) -> Slice {
+        Slice { buf: BufId::Input, off, len }
+    }
+
+    /// A slice of the output buffer.
+    pub fn output(off: usize, len: usize) -> Slice {
+        Slice { buf: BufId::Output, off, len }
+    }
+
+    fn range(&self) -> std::ops::Range<usize> {
+        self.off..self.off + self.len
+    }
+}
+
+/// One operation of a schedule. Peers are communicator ranks; tags are
+/// indices into the plan's reserved tag block; `pad` is extra wire bytes
+/// charged on the message (protocol headers, e.g. the dissemination
+/// allgather's per-block origin headers).
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// Post a (buffered, eager) send of `src` to rank `to`.
+    Send { to: usize, src: Slice, tag: u64, pad: usize },
+    /// Blocking receive from rank `from` into `dst`.
+    Recv { from: usize, dst: Slice, tag: u64, pad: usize },
+    /// Post the send, then block on the receive (the `Isend`/`Recv` pair
+    /// every exchange-structured algorithm is written as).
+    SendRecv { to: usize, src: Slice, from: usize, dst: Slice, tag: u64, pad: usize },
+    /// Local copy between two distinct buffers.
+    CopyLocal { src: Slice, dst: Slice },
+    /// Elementwise reduction `dst ⊕= src` (requires a reducing executor).
+    Reduce { src: Slice, dst: Slice },
+    /// Block rotation: writing block `j` of `src` to block
+    /// `(j + shift) mod w` of `dst`, with `w = len / block` blocks — the
+    /// final reorder of Bruck-structured algorithms.
+    Rotate { src: Slice, dst: Slice, block: usize, shift: usize },
+}
+
+impl Step {
+    /// The send half of this step, if any: `(to, payload elems, pad)`.
+    pub fn send_part(&self) -> Option<(usize, usize, usize)> {
+        match self {
+            Step::Send { to, src, pad, .. } | Step::SendRecv { to, src, pad, .. } => {
+                Some((*to, src.len, *pad))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A group of consecutive steps under one label (phase / algorithm step);
+/// purely descriptive — execution and cost evaluation are per-step.
+#[derive(Debug, Clone, Default)]
+pub struct Round {
+    pub label: String,
+    pub steps: Vec<Step>,
+}
+
+/// One rank's complete communication schedule for one planned collective.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// The operation this schedule implements.
+    pub op: OpKind,
+    /// Communicator size.
+    pub p: usize,
+    /// Per-rank element count (the plan [`Shape`]).
+    pub n: usize,
+    /// Element size in bytes (fixed at plan time; wire sizes are
+    /// `len · elem_bytes + pad`).
+    pub elem_bytes: usize,
+    /// Which builder produced this schedule (e.g. `"bruck"`, or
+    /// `"model-tuned[ring]"` after dispatcher selection).
+    pub label: String,
+    pub rounds: Vec<Round>,
+    /// Scratch buffer lengths, in elements.
+    pub scratch: Vec<usize>,
+    /// Number of collective tags the schedule needs (identical on every
+    /// rank of the communicator — tag allocation is part of the SPMD
+    /// builder contract).
+    pub tags: u64,
+}
+
+impl Schedule {
+    /// Total number of steps across all rounds.
+    pub fn num_steps(&self) -> usize {
+        self.rounds.iter().map(|r| r.steps.len()).sum()
+    }
+
+    /// Iterate over every step in execution order.
+    pub fn steps(&self) -> impl Iterator<Item = &Step> + '_ {
+        self.rounds.iter().flat_map(|r| r.steps.iter())
+    }
+
+    /// Wire bytes of a payload of `len` elements plus `pad` header bytes.
+    pub fn wire_bytes(&self, len: usize, pad: usize) -> usize {
+        len * self.elem_bytes + pad
+    }
+
+    /// Largest padded message (bytes); sizes the reusable wire buffer.
+    /// A `SendRecv` counts both halves — they may differ in length.
+    fn max_padded_wire(&self) -> usize {
+        let mut max = 0usize;
+        for s in self.steps() {
+            let (len, pad) = match s {
+                Step::Send { src, pad, .. } => (src.len, *pad),
+                Step::Recv { dst, pad, .. } => (dst.len, *pad),
+                Step::SendRecv { src, dst, pad, .. } => (src.len.max(dst.len), *pad),
+                _ => continue,
+            };
+            if pad > 0 {
+                max = max.max(self.wire_bytes(len, pad));
+            }
+        }
+        max
+    }
+
+    /// Expected input/output lengths for this schedule's operation.
+    pub fn io_lens(&self) -> (usize, usize) {
+        match self.op {
+            OpKind::Allgather => (self.n, self.n * self.p),
+            OpKind::Allreduce => (self.n, self.n),
+            OpKind::Alltoall => (self.n * self.p, self.n * self.p),
+        }
+    }
+
+    /// Structural validation: slice bounds, peer ranks, tag indices,
+    /// distinct buffers for local steps. Run once at plan time so the
+    /// interpreter can index without re-checking.
+    pub fn validate(&self) -> Result<()> {
+        let (in_len, out_len) = self.io_lens();
+        let buf_len = |b: BufId| -> Result<usize> {
+            match b {
+                BufId::Input => Ok(in_len),
+                BufId::Output => Ok(out_len),
+                BufId::Scratch(i) => self.scratch.get(i).copied().ok_or_else(|| {
+                    Error::Precondition(format!("schedule references scratch {i} of {}",
+                        self.scratch.len()))
+                }),
+            }
+        };
+        let check_slice = |s: &Slice| -> Result<()> {
+            let len = buf_len(s.buf)?;
+            if s.off + s.len > len {
+                return Err(Error::Precondition(format!(
+                    "schedule slice {:?} out of bounds (buffer len {len})",
+                    s
+                )));
+            }
+            Ok(())
+        };
+        let check_peer = |r: usize| -> Result<()> {
+            if r >= self.p {
+                return Err(Error::RankOutOfRange { rank: r, size: self.p });
+            }
+            Ok(())
+        };
+        let check_tag = |t: u64| -> Result<()> {
+            if t >= self.tags {
+                return Err(Error::Precondition(format!(
+                    "schedule tag {t} outside reserved block of {}",
+                    self.tags
+                )));
+            }
+            Ok(())
+        };
+        let check_local = |src: &Slice, dst: &Slice| -> Result<()> {
+            if src.buf == dst.buf {
+                return Err(Error::Precondition(
+                    "local schedule step must use distinct buffers".into(),
+                ));
+            }
+            if dst.buf == BufId::Input {
+                return Err(Error::Precondition("schedule writes to the input buffer".into()));
+            }
+            Ok(())
+        };
+        for s in self.steps() {
+            match s {
+                Step::Send { to, src, tag, .. } => {
+                    check_peer(*to)?;
+                    check_slice(src)?;
+                    check_tag(*tag)?;
+                }
+                Step::Recv { from, dst, tag, .. } => {
+                    check_peer(*from)?;
+                    check_slice(dst)?;
+                    check_tag(*tag)?;
+                    if dst.buf == BufId::Input {
+                        return Err(Error::Precondition(
+                            "schedule receives into the input buffer".into(),
+                        ));
+                    }
+                }
+                Step::SendRecv { to, src, from, dst, tag, .. } => {
+                    check_peer(*to)?;
+                    check_peer(*from)?;
+                    check_slice(src)?;
+                    check_slice(dst)?;
+                    check_tag(*tag)?;
+                    if dst.buf == BufId::Input {
+                        return Err(Error::Precondition(
+                            "schedule receives into the input buffer".into(),
+                        ));
+                    }
+                }
+                Step::CopyLocal { src, dst } | Step::Reduce { src, dst } => {
+                    check_slice(src)?;
+                    check_slice(dst)?;
+                    check_local(src, dst)?;
+                    if src.len != dst.len {
+                        return Err(Error::SizeMismatch { expected: src.len, got: dst.len });
+                    }
+                }
+                Step::Rotate { src, dst, block, .. } => {
+                    check_slice(src)?;
+                    check_slice(dst)?;
+                    check_local(src, dst)?;
+                    if src.len != dst.len {
+                        return Err(Error::SizeMismatch { expected: src.len, got: dst.len });
+                    }
+                    if *block == 0 || src.len % block != 0 {
+                        return Err(Error::Precondition(format!(
+                            "rotate block {block} does not divide slice length {}",
+                            src.len
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental [`Schedule`] construction (used by every algorithm's
+/// builder). Tag and scratch allocation go through the builder so the
+/// SPMD tag-uniformity contract has a single enforcement point: helpers
+/// that *may* emit nothing (non-member ranks) still allocate their tags.
+pub struct ScheduleBuilder {
+    rounds: Vec<Round>,
+    cur_label: String,
+    cur: Vec<Step>,
+    scratch: Vec<usize>,
+    tags: u64,
+}
+
+impl ScheduleBuilder {
+    /// Start a schedule; `label` names the first round.
+    pub fn new(label: &str) -> ScheduleBuilder {
+        ScheduleBuilder {
+            rounds: Vec::new(),
+            cur_label: label.to_string(),
+            cur: Vec::new(),
+            scratch: Vec::new(),
+            tags: 0,
+        }
+    }
+
+    /// Close the current round (if non-empty) and start a new one.
+    pub fn round(&mut self, label: impl Into<String>) {
+        let label = label.into();
+        if !self.cur.is_empty() {
+            let steps = std::mem::take(&mut self.cur);
+            self.rounds.push(Round { label: std::mem::replace(&mut self.cur_label, label), steps });
+        } else {
+            self.cur_label = label;
+        }
+    }
+
+    /// Register a scratch buffer of `len` elements.
+    pub fn scratch(&mut self, len: usize) -> BufId {
+        self.scratch.push(len);
+        BufId::Scratch(self.scratch.len() - 1)
+    }
+
+    /// Allocate one tag index.
+    pub fn tag(&mut self) -> u64 {
+        self.tag_block(1)
+    }
+
+    /// Allocate a block of `count` consecutive tag indices; returns the
+    /// first. Must be called identically on every rank.
+    pub fn tag_block(&mut self, count: u64) -> u64 {
+        let t = self.tags;
+        self.tags += count;
+        t
+    }
+
+    /// Append a raw step.
+    pub fn push(&mut self, step: Step) {
+        self.cur.push(step);
+    }
+
+    /// Append a [`Step::CopyLocal`].
+    pub fn copy(&mut self, src: Slice, dst: Slice) {
+        self.push(Step::CopyLocal { src, dst });
+    }
+
+    /// Append a [`Step::Reduce`].
+    pub fn reduce(&mut self, src: Slice, dst: Slice) {
+        self.push(Step::Reduce { src, dst });
+    }
+
+    /// Append a [`Step::Rotate`].
+    pub fn rotate(&mut self, src: Slice, dst: Slice, block: usize, shift: usize) {
+        self.push(Step::Rotate { src, dst, block, shift });
+    }
+
+    /// Append a [`Step::Send`].
+    pub fn send(&mut self, to: usize, src: Slice, tag: u64, pad: usize) {
+        self.push(Step::Send { to, src, tag, pad });
+    }
+
+    /// Append a [`Step::Recv`].
+    pub fn recv(&mut self, from: usize, dst: Slice, tag: u64, pad: usize) {
+        self.push(Step::Recv { from, dst, tag, pad });
+    }
+
+    /// Append a [`Step::SendRecv`].
+    pub fn sendrecv(
+        &mut self,
+        to: usize,
+        src: Slice,
+        from: usize,
+        dst: Slice,
+        tag: u64,
+        pad: usize,
+    ) {
+        self.push(Step::SendRecv { to, src, from, dst, tag, pad });
+    }
+
+    /// Seal the schedule.
+    pub fn finish(
+        mut self,
+        op: OpKind,
+        p: usize,
+        n: usize,
+        elem_bytes: usize,
+        label: impl Into<String>,
+    ) -> Schedule {
+        if !self.cur.is_empty() {
+            let steps = std::mem::take(&mut self.cur);
+            self.rounds.push(Round { label: self.cur_label.clone(), steps });
+        }
+        Schedule {
+            op,
+            p,
+            n,
+            elem_bytes,
+            label: label.into(),
+            rounds: self.rounds,
+            scratch: self.scratch,
+            tags: self.tags,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// world view: everything a builder needs to construct ANY rank's schedule
+// ---------------------------------------------------------------------------
+
+/// Topology-derived context for schedule builders: communicator size, the
+/// comm-rank → world-rank map and the topology. Pure data — building a
+/// schedule for any rank requires no communicator handle, which is what
+/// lets the model-tuned dispatcher and the cost model enumerate
+/// whole-world schedules at plan time.
+#[derive(Debug, Clone)]
+pub struct WorldView {
+    pub p: usize,
+    /// Communicator rank → world rank.
+    pub world_of: Vec<usize>,
+    pub topo: Topology,
+}
+
+impl WorldView {
+    /// The view of a live communicator.
+    pub fn from_comm(comm: &Comm) -> WorldView {
+        WorldView {
+            p: comm.size(),
+            world_of: (0..comm.size()).map(|r| comm.world_rank_of(r)).collect(),
+            topo: comm.topology().clone(),
+        }
+    }
+
+    /// The view of a whole world (comm rank == world rank) — what the CLI
+    /// and cost evaluation use.
+    pub fn world(topo: &Topology) -> WorldView {
+        WorldView {
+            p: topo.size(),
+            world_of: (0..topo.size()).collect(),
+            topo: topo.clone(),
+        }
+    }
+
+    /// Group a set of communicator ranks by a topology attribute; groups
+    /// sorted by smallest member, members ascending.
+    pub fn split(&self, ranks: &[usize], by: GroupBy) -> Vec<Vec<usize>> {
+        split_members(&self.topo, &self.world_of, ranks, by)
+    }
+
+    /// Region groups of the full communicator.
+    pub fn regions(&self) -> Vec<Vec<usize>> {
+        let all: Vec<usize> = (0..self.p).collect();
+        self.split(&all, GroupBy::Region)
+    }
+}
+
+/// Locate `rank` within `groups`: `(group index, index within group)`.
+pub fn locate(groups: &[Vec<usize>], rank: usize) -> Result<(usize, usize)> {
+    for (gi, members) in groups.iter().enumerate() {
+        if let Some(j) = members.iter().position(|&r| r == rank) {
+            return Ok((gi, j));
+        }
+    }
+    Err(Error::Precondition(format!("rank {rank} not in any group")))
+}
+
+/// Uniform group size, or a descriptive error.
+pub fn uniform_size(groups: &[Vec<usize>], algo: &str) -> Result<usize> {
+    let first = groups.first().map_or(0, |g| g.len());
+    if first == 0 || groups.iter().any(|g| g.len() != first) {
+        return Err(Error::Precondition(format!(
+            "{algo} requires equal-size groups; got sizes {:?}",
+            groups.iter().map(|g| g.len()).collect::<Vec<_>>()
+        )));
+    }
+    Ok(first)
+}
+
+// ---------------------------------------------------------------------------
+// shared sub-schedule emitters
+// ---------------------------------------------------------------------------
+
+/// Tag-block size of a Bruck-structured exchange over `q` members
+/// (`⌈log₂ q⌉`, and 0 for the degenerate single-member group).
+fn ceil_log2_u64(q: usize) -> u64 {
+    if q <= 1 {
+        0
+    } else {
+        crate::util::ilog2_ceil(q) as u64
+    }
+}
+
+/// Emit a Bruck allgather among `members` (each contributing `b` elements)
+/// into `dst` (length `b · members.len()`, member-major). Ranks outside
+/// `members` allocate the tag block and emit nothing (the SPMD contract).
+pub fn emit_group_bruck(
+    sb: &mut ScheduleBuilder,
+    members: &[usize],
+    me: usize,
+    b: usize,
+    contrib: Slice,
+    dst: Slice,
+) {
+    let q = members.len();
+    let tag0 = sb.tag_block(ceil_log2_u64(q));
+    let Some(k) = members.iter().position(|&r| r == me) else {
+        return;
+    };
+    if q == 1 {
+        sb.copy(contrib, dst);
+        return;
+    }
+    let rot = sb.scratch(b * q);
+    sb.copy(contrib, Slice::at(rot, 0, b));
+    let mut filled = b;
+    let mut dist = 1usize;
+    let mut ti = 0u64;
+    while dist < q {
+        let blocks = dist.min(q - dist);
+        let to = members[(k + q - dist) % q];
+        let from = members[(k + dist) % q];
+        sb.sendrecv(
+            to,
+            Slice::at(rot, 0, blocks * b),
+            from,
+            Slice::at(rot, filled, blocks * b),
+            tag0 + ti,
+            0,
+        );
+        filled += blocks * b;
+        dist <<= 1;
+        ti += 1;
+    }
+    // rotated block j holds member (k + j) mod q → rotate down by k.
+    sb.rotate(Slice::at(rot, 0, b * q), dst, b, k);
+}
+
+/// Emit a Bruck-structured allgatherv among `members` with fixed per-member
+/// `counts` into `dst` (length `Σ counts`, member-major). Mirrors the
+/// classic plan: zero-length exchange messages are still sent (and
+/// charged), exactly like the imperative implementation it replaces.
+pub fn emit_group_allgatherv(
+    sb: &mut ScheduleBuilder,
+    members: &[usize],
+    me: usize,
+    counts: &[usize],
+    contrib: Slice,
+    dst: Slice,
+) {
+    let q = members.len();
+    debug_assert_eq!(counts.len(), q);
+    let tag0 = sb.tag_block(ceil_log2_u64(q));
+    let Some(k) = members.iter().position(|&r| r == me) else {
+        return;
+    };
+    if q == 1 {
+        if counts[0] > 0 {
+            sb.copy(contrib, dst);
+        }
+        return;
+    }
+    // Rotated offsets: rot_off[j] = offset of member (k + j) mod q's block.
+    let mut rot_off = vec![0usize; q + 1];
+    for j in 0..q {
+        rot_off[j + 1] = rot_off[j] + counts[(k + j) % q];
+    }
+    let total = rot_off[q];
+    let mut out_off = vec![0usize; q];
+    let mut acc = 0usize;
+    for (r, &c) in counts.iter().enumerate() {
+        out_off[r] = acc;
+        acc += c;
+    }
+    let rot = sb.scratch(total);
+    if counts[k] > 0 {
+        sb.copy(contrib, Slice::at(rot, 0, counts[k]));
+    }
+    let mut dist = 1usize;
+    let mut ti = 0u64;
+    while dist < q {
+        let nblocks = dist.min(q - dist);
+        let send_len = rot_off[nblocks];
+        let recv_off = rot_off[dist];
+        let recv_len = rot_off[dist + nblocks] - recv_off;
+        sb.sendrecv(
+            members[(k + q - dist) % q],
+            Slice::at(rot, 0, send_len),
+            members[(k + dist) % q],
+            Slice::at(rot, recv_off, recv_len),
+            tag0 + ti,
+            0,
+        );
+        dist <<= 1;
+        ti += 1;
+    }
+    for j in 0..q {
+        let r = (k + j) % q;
+        let c = counts[r];
+        if c > 0 {
+            sb.copy(Slice::at(rot, rot_off[j], c), Slice::at(dst.buf, dst.off + out_off[r], c));
+        }
+    }
+}
+
+/// Emit a recursive-doubling sum-allreduce among `members`, operating
+/// in-place on `Output[0..n]` with a private receive scratch. Errors at
+/// build time unless the group size is a power of two.
+pub fn emit_group_rd_allreduce(
+    sb: &mut ScheduleBuilder,
+    members: &[usize],
+    me: usize,
+    n: usize,
+) -> Result<()> {
+    let q = members.len();
+    if !q.is_power_of_two() {
+        return Err(Error::Precondition(format!(
+            "recursive-doubling allreduce requires power-of-two size, got {q}"
+        )));
+    }
+    let tag0 = sb.tag_block(ceil_log2_u64(q));
+    let Some(k) = members.iter().position(|&r| r == me) else {
+        return Ok(());
+    };
+    if q == 1 {
+        return Ok(());
+    }
+    let recv = sb.scratch(n);
+    let mut dist = 1usize;
+    let mut ti = 0u64;
+    while dist < q {
+        let peer = members[k ^ dist];
+        sb.sendrecv(peer, Slice::output(0, n), peer, Slice::at(recv, 0, n), tag0 + ti, 0);
+        sb.reduce(Slice::at(recv, 0, n), Slice::output(0, n));
+        dist <<= 1;
+        ti += 1;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the generic interpreter
+// ---------------------------------------------------------------------------
+
+/// Elementwise `acc[i] = acc[i] + x[i]` — the reducer handed to the
+/// interpreter by reducing operations.
+pub(crate) fn add_assign<T: Summable>(acc: &mut [T], x: &[T]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a = *a + *b;
+    }
+}
+
+/// Resolve a local two-buffer step into `(read, write)` slices and apply
+/// `f`. Buffers must be distinct ([`Schedule::validate`] enforces it).
+fn with_pair<T: Pod>(
+    input: &[T],
+    output: &mut [T],
+    scratch: &mut [Vec<T>],
+    src: &Slice,
+    dst: &Slice,
+    f: impl FnOnce(&[T], &mut [T]),
+) -> Result<()> {
+    match (src.buf, dst.buf) {
+        (BufId::Input, BufId::Output) => f(&input[src.range()], &mut output[dst.range()]),
+        (BufId::Input, BufId::Scratch(j)) => f(&input[src.range()], &mut scratch[j][dst.range()]),
+        (BufId::Output, BufId::Scratch(j)) => f(&output[src.range()], &mut scratch[j][dst.range()]),
+        (BufId::Scratch(i), BufId::Output) => f(&scratch[i][src.range()], &mut output[dst.range()]),
+        (BufId::Scratch(i), BufId::Scratch(j)) if i < j => {
+            let (lo, hi) = scratch.split_at_mut(j);
+            f(&lo[i][src.range()], &mut hi[0][dst.range()]);
+        }
+        (BufId::Scratch(i), BufId::Scratch(j)) if i > j => {
+            let (lo, hi) = scratch.split_at_mut(i);
+            f(&hi[0][src.range()], &mut lo[j][dst.range()]);
+        }
+        _ => {
+            return Err(Error::Precondition(
+                "local schedule step must use distinct buffers with a writable destination".into(),
+            ))
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn send_slice<T: Pod>(
+    core: &PlanCore,
+    input: &[T],
+    output: &[T],
+    scratch: &[Vec<T>],
+    wire: &mut [u8],
+    to: usize,
+    src: &Slice,
+    tag: u64,
+    pad: usize,
+) -> Result<()> {
+    let buf: &[T] = match src.buf {
+        BufId::Input => &input[src.range()],
+        BufId::Output => &output[src.range()],
+        BufId::Scratch(i) => &scratch[i][src.range()],
+    };
+    let t = core.tag(tag);
+    if pad == 0 {
+        let _req = core.comm.isend(buf, to, t)?;
+    } else {
+        let total = pad + std::mem::size_of_val(buf);
+        let w = &mut wire[..total];
+        w[..pad].fill(0);
+        let ok = write_bytes(buf, &mut w[pad..]);
+        debug_assert!(ok);
+        let _req = core.comm.isend(&w[..total], to, t)?;
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recv_slice<T: Pod>(
+    core: &PlanCore,
+    output: &mut [T],
+    scratch: &mut [Vec<T>],
+    wire: &mut [u8],
+    from: usize,
+    dst: &Slice,
+    tag: u64,
+    pad: usize,
+) -> Result<()> {
+    let t = core.tag(tag);
+    let buf: &mut [T] = match dst.buf {
+        BufId::Output => &mut output[dst.range()],
+        BufId::Scratch(i) => &mut scratch[i][dst.range()],
+        BufId::Input => {
+            return Err(Error::Precondition("schedule receives into the input buffer".into()))
+        }
+    };
+    if pad == 0 {
+        core.comm.recv_into(from, t, buf)
+    } else {
+        let total = pad + std::mem::size_of_val(&*buf);
+        core.comm.recv_into(from, t, &mut wire[..total])?;
+        if !copy_into(&wire[pad..total], buf) {
+            return Err(Error::SizeMismatch {
+                expected: std::mem::size_of_val(&*buf),
+                got: total - pad,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The one generic executor: interpret `sched` over the plan's retained
+/// communicator. `reduce` is `Some` only for reducing operations; a
+/// schedule containing [`Step::Reduce`] fails cleanly without one.
+fn execute_schedule<T: Pod>(
+    core: &PlanCore,
+    sched: &Schedule,
+    input: &[T],
+    output: &mut [T],
+    scratch: &mut [Vec<T>],
+    wire: &mut [u8],
+    reduce: Option<fn(&mut [T], &[T])>,
+) -> Result<()> {
+    for round in &sched.rounds {
+        for step in &round.steps {
+            match step {
+                Step::Send { to, src, tag, pad } => {
+                    send_slice(core, input, output, scratch, wire, *to, src, *tag, *pad)?;
+                }
+                Step::Recv { from, dst, tag, pad } => {
+                    recv_slice(core, output, scratch, wire, *from, dst, *tag, *pad)?;
+                }
+                Step::SendRecv { to, src, from, dst, tag, pad } => {
+                    send_slice(core, input, output, scratch, wire, *to, src, *tag, *pad)?;
+                    recv_slice(core, output, scratch, wire, *from, dst, *tag, *pad)?;
+                }
+                Step::CopyLocal { src, dst } => {
+                    with_pair(input, output, scratch, src, dst, |s, d| d.copy_from_slice(s))?;
+                }
+                Step::Reduce { src, dst } => {
+                    let f = reduce.ok_or_else(|| {
+                        Error::Precondition(
+                            "schedule contains Reduce but the operation is not a reduction".into(),
+                        )
+                    })?;
+                    with_pair(input, output, scratch, src, dst, |s, d| f(d, s))?;
+                }
+                Step::Rotate { src, dst, block, shift } => {
+                    with_pair(input, output, scratch, src, dst, |s, d| {
+                        super::bruck::rotate_down_into(s, *block, *shift, d)
+                    })?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the generic plan
+// ---------------------------------------------------------------------------
+
+/// The universal persistent plan: a [`Schedule`] plus the retained
+/// communicator, reserved tag block and plan-owned scratch. Every
+/// registered (operation, algorithm) pair executes through this one type —
+/// there are no per-algorithm execute loops.
+pub struct SchedPlan<T: Pod> {
+    core: PlanCore,
+    name: &'static str,
+    sched: Schedule,
+    scratch: Vec<Vec<T>>,
+    /// Reusable buffer for padded (header-carrying) wire messages.
+    wire: Vec<u8>,
+}
+
+impl<T: Pod> SchedPlan<T> {
+    /// Validate `sched`, reserve its tag block on `comm` and allocate its
+    /// scratch. Collective (every rank builds its own rank's schedule with
+    /// the same tag/scratch shape).
+    pub(crate) fn new(comm: &Comm, name: &'static str, sched: Schedule) -> Result<SchedPlan<T>> {
+        debug_assert_eq!(sched.p, comm.size());
+        debug_assert_eq!(sched.elem_bytes, std::mem::size_of::<T>());
+        sched.validate()?;
+        let core = PlanCore::new(comm, sched.n, sched.tags);
+        let scratch = sched.scratch.iter().map(|&len| vec![T::default(); len]).collect();
+        let wire = vec![0u8; sched.max_padded_wire()];
+        Ok(SchedPlan { core, name, sched, scratch, wire })
+    }
+
+    /// Boxing helper for factory `plan()` implementations.
+    pub(crate) fn boxed(
+        comm: &Comm,
+        name: &'static str,
+        sched: Schedule,
+    ) -> Result<Box<SchedPlan<T>>> {
+        Ok(Box::new(SchedPlan::new(comm, name, sched)?))
+    }
+
+    fn run(
+        &mut self,
+        input: &[T],
+        output: &mut [T],
+        reduce: Option<fn(&mut [T], &[T])>,
+    ) -> Result<()> {
+        let SchedPlan { core, sched, scratch, wire, .. } = self;
+        execute_schedule(core, sched, input, output, scratch, wire, reduce)
+    }
+}
+
+impl<T: Pod> CollectivePlan for SchedPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        self.name
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.core.p
+    }
+
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
+    }
+}
+
+impl<T: Pod> super::plan::AllgatherPlan<T> for SchedPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_io(self.core.n, self.core.p, input, output)?;
+        self.run(input, output, None)
+    }
+}
+
+impl<T: Summable> super::plan::AllreducePlan<T> for SchedPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_reduce_io(self.core.n, input, output)?;
+        self.run(input, output, Some(add_assign::<T>))
+    }
+}
+
+impl<T: Pod> super::plan::AlltoallPlan<T> for SchedPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_a2a_io(self.core.n, self.core.p, input, output)?;
+        self.run(input, output, None)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// by-name builders (shared by the registries, the model-tuned dispatcher,
+// the cost model and `locag explain`)
+// ---------------------------------------------------------------------------
+
+/// Build the schedule of one allgather algorithm for `rank`. `SystemDefault`
+/// resolves its size-based selection first; `ModelTuned` is *not* handled
+/// here (it needs machine parameters — see
+/// [`super::model_tuned::pick_allgather`]).
+pub fn build_allgather(
+    algo: super::Algorithm,
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    use super::Algorithm as A;
+    match algo {
+        A::Bruck => Ok(super::bruck::build_schedule(view.p, rank, n, elem_bytes)),
+        A::Ring => Ok(super::ring::build_schedule(view.p, rank, n, elem_bytes)),
+        A::RecursiveDoubling => {
+            super::recursive_doubling::build_schedule(view.p, rank, n, elem_bytes)
+        }
+        A::Dissemination => Ok(super::dissemination::build_schedule(view.p, rank, n, elem_bytes)),
+        A::Hierarchical => super::hierarchical::build_schedule(view, rank, n, elem_bytes),
+        A::Multilane => super::multilane::build_schedule(view, rank, n, elem_bytes),
+        A::LocalityBruck => super::loc_bruck::build_schedule(
+            view,
+            rank,
+            n,
+            elem_bytes,
+            GroupBy::Region,
+            super::loc_bruck::Rank0::Contributes,
+            "loc-bruck",
+        ),
+        A::LocalityBruckV => super::loc_bruck::build_schedule(
+            view,
+            rank,
+            n,
+            elem_bytes,
+            GroupBy::Region,
+            super::loc_bruck::Rank0::GathervSkips,
+            "loc-bruck-v",
+        ),
+        A::LocalityBruckMultilevel => super::loc_bruck::build_schedule_multilevel(
+            view,
+            rank,
+            n,
+            elem_bytes,
+        ),
+        A::SystemDefault => {
+            let sel = super::dispatch::select(view.p, n, elem_bytes);
+            let mut sched = build_allgather(sel, view, rank, n, elem_bytes)?;
+            sched.label = format!("system-default[{}]", sel.name());
+            Ok(sched)
+        }
+        A::ModelTuned => Err(Error::Precondition(
+            "model-tuned schedules are chosen by the dispatcher, not built directly".into(),
+        )),
+    }
+}
+
+/// Build the schedule of one allreduce algorithm (by registry name) for
+/// `rank`. `model-tuned` is handled by the dispatcher.
+pub fn build_allreduce(
+    name: &str,
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    if name.eq_ignore_ascii_case("recursive-doubling") {
+        super::allreduce::build_rd_schedule(view.p, rank, n, elem_bytes)
+    } else if name.eq_ignore_ascii_case("loc-aware") {
+        super::allreduce::build_loc_schedule(view, rank, n, elem_bytes)
+    } else {
+        Err(Error::Precondition(format!("no allreduce schedule builder for '{name}'")))
+    }
+}
+
+/// Build the schedule of one alltoall algorithm (by registry name) for
+/// `rank`. `model-tuned` is handled by the dispatcher.
+pub fn build_alltoall(
+    name: &str,
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    if name.eq_ignore_ascii_case("pairwise") {
+        Ok(super::alltoall::build_pairwise_schedule(view.p, rank, n, elem_bytes))
+    } else if name.eq_ignore_ascii_case("bruck") {
+        Ok(super::alltoall::build_bruck_schedule(view.p, rank, n, elem_bytes))
+    } else if name.eq_ignore_ascii_case("loc-aware") {
+        super::alltoall::build_loc_schedule(view, rank, n, elem_bytes)
+    } else if name.eq_ignore_ascii_case("system-default") {
+        let mut sched = if super::dispatch::select_alltoall_bruck(n, elem_bytes) {
+            super::alltoall::build_bruck_schedule(view.p, rank, n, elem_bytes)
+        } else {
+            super::alltoall::build_pairwise_schedule(view.p, rank, n, elem_bytes)
+        };
+        sched.label = format!("system-default[{}]", sched.label);
+        Ok(sched)
+    } else {
+        Err(Error::Precondition(format!("no alltoall schedule builder for '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommWorld, Timing};
+
+    #[test]
+    fn builder_rounds_tags_and_scratch() {
+        let mut sb = ScheduleBuilder::new("a");
+        let s0 = sb.scratch(4);
+        assert_eq!(s0, BufId::Scratch(0));
+        assert_eq!(sb.tag(), 0);
+        assert_eq!(sb.tag_block(3), 1);
+        assert_eq!(sb.tag(), 4);
+        sb.copy(Slice::input(0, 2), Slice::at(s0, 0, 2));
+        sb.round("b");
+        sb.copy(Slice::at(s0, 0, 2), Slice::output(0, 2));
+        let sched = sb.finish(OpKind::Allgather, 1, 2, 8, "t");
+        assert_eq!(sched.rounds.len(), 2);
+        assert_eq!(sched.rounds[0].label, "a");
+        assert_eq!(sched.rounds[1].label, "b");
+        assert_eq!(sched.tags, 5);
+        assert_eq!(sched.num_steps(), 2);
+        sched.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_slices_and_buffers() {
+        let mut sb = ScheduleBuilder::new("x");
+        sb.copy(Slice::input(0, 3), Slice::output(0, 3));
+        // input len for allgather with n=2 is 2 → slice 0..3 out of bounds
+        let sched = sb.finish(OpKind::Allgather, 2, 2, 4, "t");
+        assert!(sched.validate().is_err());
+
+        let mut sb = ScheduleBuilder::new("x");
+        sb.copy(Slice::output(0, 1), Slice::output(1, 1));
+        let sched = sb.finish(OpKind::Allgather, 2, 2, 4, "t");
+        assert!(sched.validate().is_err(), "same-buffer copy must be rejected");
+
+        let mut sb = ScheduleBuilder::new("x");
+        sb.send(5, Slice::input(0, 1), 0, 0);
+        let sched = sb.finish(OpKind::Allgather, 2, 1, 4, "t");
+        assert!(sched.validate().is_err(), "peer out of range");
+    }
+
+    #[test]
+    fn wire_bytes_accounts_for_padding() {
+        let mut sb = ScheduleBuilder::new("x");
+        let t = sb.tag();
+        sb.send(0, Slice::input(0, 2), t, 16);
+        let sched = sb.finish(OpKind::Allgather, 1, 2, 8, "t");
+        assert_eq!(sched.wire_bytes(2, 16), 32);
+        assert_eq!(sched.max_padded_wire(), 32);
+    }
+
+    #[test]
+    fn reduce_step_sums_through_reducing_entry_point() {
+        let topo = Topology::regions(1, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut sb = ScheduleBuilder::new("x");
+            let s = sb.scratch(1);
+            sb.copy(Slice::input(0, 1), Slice::output(0, 1));
+            sb.copy(Slice::input(0, 1), Slice::at(s, 0, 1));
+            sb.reduce(Slice::at(s, 0, 1), Slice::output(0, 1));
+            let sched = sb.finish(OpKind::Allreduce, 2, 1, 8, "t");
+            let mut plan = SchedPlan::<u64>::new(c, "t", sched).unwrap();
+            let mut out = [0u64; 1];
+            <SchedPlan<u64> as super::super::plan::AllreducePlan<u64>>::execute(
+                &mut plan,
+                &[5u64],
+                &mut out,
+            )
+            .unwrap();
+            out[0]
+        });
+        // schedule doubles the local value (no communication involved)
+        assert!(run.results.iter().all(|&v| v == 10));
+    }
+
+    #[test]
+    fn locate_and_uniform_size() {
+        let groups = vec![vec![0usize, 1], vec![2, 3]];
+        assert_eq!(locate(&groups, 2).unwrap(), (1, 0));
+        assert!(locate(&groups, 9).is_err());
+        assert_eq!(uniform_size(&groups, "x").unwrap(), 2);
+        let ragged = vec![vec![0usize], vec![1, 2]];
+        assert!(uniform_size(&ragged, "x").is_err());
+    }
+
+    #[test]
+    fn group_bruck_emitter_gathers_members() {
+        let topo = Topology::regions(2, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let members: Vec<usize> = (0..4).collect();
+            let mut sb = ScheduleBuilder::new("gather");
+            emit_group_bruck(
+                &mut sb,
+                &members,
+                c.rank(),
+                1,
+                Slice::input(0, 1),
+                Slice::output(0, 4),
+            );
+            let sched = sb.finish(OpKind::Allgather, 4, 1, 8, "t");
+            let mut plan = SchedPlan::<u64>::new(c, "t", sched).unwrap();
+            let mut out = vec![0u64; 4];
+            use super::super::plan::AllgatherPlan;
+            plan.execute(&[10 + c.rank() as u64], &mut out).unwrap();
+            out
+        });
+        for r in &run.results {
+            assert_eq!(r, &vec![10, 11, 12, 13]);
+        }
+    }
+}

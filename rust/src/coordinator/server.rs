@@ -44,7 +44,9 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             artifact_dir: Manifest::default_dir(),
-            algo: Algorithm::LocalityBruck,
+            // The model-tuned dispatcher plans whatever the cost model says
+            // is cheapest for the worker topology and activation shape.
+            algo: Algorithm::ModelTuned,
             regions: 2,
             requests: 16,
             warmup: 2,

@@ -1,0 +1,292 @@
+//! IR-derived cost models: evaluate any communication [`Schedule`] against
+//! [`MachineParams`] **without executing it**.
+//!
+//! The paper's §4 analysis has two ingredients, and both fall out of the
+//! schedule IR mechanically:
+//!
+//! 1. **Static traffic counts** ([`counts`]): walking one rank's schedule
+//!    and classifying every send by the locality of its (src, dst) pair
+//!    reproduces the paper's per-process message/byte accounting — e.g.
+//!    standard Bruck's `⌈log₂ p⌉` non-local messages of `m−1` total values
+//!    vs the locality-aware variant's `⌈log_pℓ(r)⌉` messages of `≈ b/pℓ`
+//!    bytes (§2.1, §4). These are the *same* quantities the runtime tracer
+//!    measures, and `tests/collective_conformance.rs` asserts schedule ⇔
+//!    execution can never drift.
+//! 2. **Predicted completion time** ([`predict`]): replaying the postal
+//!    clock algebra of the virtual transport (paper Eq. 2: a send charges
+//!    `α_c + β_c·s` on the sender; a receive synchronizes the receiver to
+//!    the sender's post-charge stamp) over all ranks' schedules yields the
+//!    max final clock — the locality-split α-β composition of Bienz et
+//!    al.'s node-aware models, evaluated on the *real* message schedule
+//!    rather than a closed form. For schedules produced by the builders in
+//!    [`crate::collectives`], `predict` equals the virtual-time execution
+//!    exactly (asserted in `tests/model_vs_sim.rs`).
+//!
+//! The model-tuned dispatcher ([`crate::collectives::model_tuned`]) is the
+//! consumer that closes the loop: it builds candidate schedules, scores
+//! them here, and plans the cheapest.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::collectives::schedule::{Schedule, Step};
+use crate::error::{Error, Result};
+use crate::model::MachineParams;
+use crate::topology::Topology;
+use crate::trace::RankTrace;
+
+/// Whole-schedule-set evaluation: predicted completion plus per-rank
+/// traffic, the static twin of a measured
+/// [`crate::trace::TraceSummary`].
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    /// Modeled completion time (max final virtual clock), seconds.
+    pub predicted: f64,
+    /// Per-rank send-side accounting derived from the schedules.
+    pub per_rank: Vec<RankTrace>,
+}
+
+impl CostReport {
+    /// Max non-local messages sent by any rank (the paper's headline).
+    pub fn max_nonlocal_msgs(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.nonlocal_msgs).max().unwrap_or(0)
+    }
+
+    /// Max non-local bytes sent by any rank.
+    pub fn max_nonlocal_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|t| t.nonlocal_bytes).max().unwrap_or(0)
+    }
+}
+
+/// Static per-rank traffic of one schedule: every send (including the send
+/// half of a `SendRecv`) classified by the locality of its rank pair.
+/// Self-sends are local memcpys and are not counted — exactly like the
+/// runtime tracer.
+pub fn counts(sched: &Schedule, rank: usize, topo: &Topology, world_of: &[usize]) -> RankTrace {
+    let mut t = RankTrace::default();
+    for step in sched.steps() {
+        if let Some((to, len, pad)) = step.send_part() {
+            if to == rank {
+                continue;
+            }
+            let (a, b) = (world_of[rank], world_of[to]);
+            t.record(topo.classify(a, b), topo.is_local(a, b), sched.wire_bytes(len, pad));
+        }
+    }
+    t
+}
+
+/// Predicted completion time of a whole world of schedules (one per rank,
+/// indexed by rank) under the locality-split postal model.
+///
+/// This replays the virtual-clock transport symbolically: a discrete-event
+/// pass in which each rank advances through its schedule, sends charge
+/// `α_c + β_c·bytes` and stamp the message with the post-charge clock,
+/// and receives block until the matching stamp is available, then take the
+/// max. Local steps (copy/reduce/rotate) are free, matching the
+/// transport. Errors if the schedules deadlock (a receive whose matching
+/// send never happens) — which a correct builder never produces.
+pub fn predict(
+    scheds: &[Schedule],
+    topo: &Topology,
+    world_of: &[usize],
+    machine: &MachineParams,
+) -> Result<f64> {
+    let p = scheds.len();
+    let steps: Vec<Vec<&Step>> = scheds.iter().map(|s| s.steps().collect()).collect();
+    let mut cursor = vec![0usize; p];
+    // true while a SendRecv's send half is done but its receive is pending
+    let mut half_done = vec![false; p];
+    let mut clock = vec![0.0f64; p];
+    // (src, dst, tag) → FIFO of send stamps, mirroring mailbox matching.
+    let mut queues: HashMap<(usize, usize, u64), VecDeque<f64>> = HashMap::new();
+
+    let charge = |clock: &mut [f64], r: usize, to: usize, bytes: usize| -> f64 {
+        if world_of[r] == world_of[to] {
+            // self-sends are local memcpys: never charged
+            clock[r]
+        } else {
+            let c = machine.cost(topo.classify(world_of[r], world_of[to]), bytes);
+            clock[r] += c;
+            clock[r]
+        }
+    };
+
+    loop {
+        let mut progress = false;
+        let mut done = 0usize;
+        for r in 0..p {
+            loop {
+                let Some(step) = steps[r].get(cursor[r]) else {
+                    break;
+                };
+                match step {
+                    Step::CopyLocal { .. } | Step::Reduce { .. } | Step::Rotate { .. } => {
+                        cursor[r] += 1;
+                        progress = true;
+                    }
+                    Step::Send { to, src, tag, pad } => {
+                        let stamp = charge(&mut clock, r, *to, scheds[r].wire_bytes(src.len, *pad));
+                        queues.entry((r, *to, *tag)).or_default().push_back(stamp);
+                        cursor[r] += 1;
+                        progress = true;
+                    }
+                    Step::Recv { from, tag, .. } => {
+                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
+                            Some(stamp) => {
+                                clock[r] = clock[r].max(stamp);
+                                cursor[r] += 1;
+                                progress = true;
+                            }
+                            None => break,
+                        }
+                    }
+                    Step::SendRecv { to, src, from, tag, pad, .. } => {
+                        if !half_done[r] {
+                            let stamp =
+                                charge(&mut clock, r, *to, scheds[r].wire_bytes(src.len, *pad));
+                            queues.entry((r, *to, *tag)).or_default().push_back(stamp);
+                            half_done[r] = true;
+                            progress = true;
+                        }
+                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
+                            Some(stamp) => {
+                                clock[r] = clock[r].max(stamp);
+                                half_done[r] = false;
+                                cursor[r] += 1;
+                                progress = true;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+            if cursor[r] == steps[r].len() {
+                done += 1;
+            }
+        }
+        if done == p {
+            break;
+        }
+        if !progress {
+            return Err(Error::Precondition(
+                "schedule set deadlocks: a receive has no matching send".into(),
+            ));
+        }
+    }
+    Ok(clock.iter().copied().fold(0.0, f64::max))
+}
+
+/// [`counts`] for every rank plus [`predict`]: the full static evaluation
+/// of a schedule set.
+pub fn evaluate(
+    scheds: &[Schedule],
+    topo: &Topology,
+    world_of: &[usize],
+    machine: &MachineParams,
+) -> Result<CostReport> {
+    let per_rank = (0..scheds.len())
+        .map(|r| counts(&scheds[r], r, topo, world_of))
+        .collect();
+    Ok(CostReport { predicted: predict(scheds, topo, world_of, machine)?, per_rank })
+}
+
+/// Build every rank's schedule for one allgather algorithm — the
+/// whole-world view the dispatcher and `locag explain` score.
+pub fn allgather_schedules(
+    algo: crate::collectives::Algorithm,
+    topo: &Topology,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Vec<Schedule>> {
+    let view = crate::collectives::schedule::WorldView::world(topo);
+    (0..topo.size())
+        .map(|r| crate::collectives::schedule::build_allgather(algo, &view, r, n, elem_bytes))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::Algorithm;
+    use crate::model::closed_form::ModelConfig;
+
+    #[test]
+    fn bruck_prediction_matches_eq3() {
+        // predict() over the Bruck schedules must equal the closed form on
+        // block placement (every Bruck exchange is non-local at 4x4).
+        let topo = Topology::regions(4, 4);
+        let m = MachineParams::lassen();
+        let scheds = allgather_schedules(Algorithm::Bruck, &topo, 2, 4).unwrap();
+        let world: Vec<usize> = (0..16).collect();
+        let t = predict(&scheds, &topo, &world, &m).unwrap();
+        let cf = ModelConfig::lassen().bruck(16, 8);
+        assert!((t - cf).abs() < 1e-12, "predict {t:.3e} vs closed form {cf:.3e}");
+    }
+
+    #[test]
+    fn counts_match_paper_example_2_1() {
+        let topo = Topology::regions(4, 4);
+        let world: Vec<usize> = (0..16).collect();
+        let scheds = allgather_schedules(Algorithm::LocalityBruck, &topo, 1, 4).unwrap();
+        for (r, s) in scheds.iter().enumerate() {
+            let t = counts(s, r, &topo, &world);
+            if r % 4 == 0 {
+                assert_eq!(t.nonlocal_msgs, 0, "local rank 0 idles (rank {r})");
+            } else {
+                assert_eq!(t.nonlocal_msgs, 1, "rank {r}");
+                assert_eq!(t.nonlocal_bytes, 16, "rank {r}: 4 u32 values");
+            }
+        }
+    }
+
+    #[test]
+    fn loc_bruck_predicts_cheaper_than_bruck() {
+        let topo = Topology::regions(16, 16);
+        let m = MachineParams::lassen();
+        let world: Vec<usize> = (0..topo.size()).collect();
+        let std =
+            predict(&allgather_schedules(Algorithm::Bruck, &topo, 2, 4).unwrap(), &topo, &world, &m)
+                .unwrap();
+        let loc = predict(
+            &allgather_schedules(Algorithm::LocalityBruck, &topo, 2, 4).unwrap(),
+            &topo,
+            &world,
+            &m,
+        )
+        .unwrap();
+        assert!(loc < std, "loc {loc:.3e} !< std {std:.3e}");
+    }
+
+    #[test]
+    fn deadlocked_schedule_reports_error() {
+        use crate::collectives::schedule::{ScheduleBuilder, Slice};
+        use crate::collectives::OpKind;
+        let topo = Topology::regions(1, 2);
+        let world = vec![0usize, 1];
+        let mut sb = ScheduleBuilder::new("bad");
+        let tag = sb.tag();
+        sb.recv(1, Slice::output(0, 1), tag, 0);
+        let bad = sb.finish(OpKind::Allgather, 2, 1, 8, "bad");
+        let mut sb = ScheduleBuilder::new("idle");
+        sb.tag();
+        let idle = sb.finish(OpKind::Allgather, 2, 1, 8, "idle");
+        let err = predict(&[bad, idle], &topo, &world, &MachineParams::lassen());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn evaluate_bundles_counts_and_prediction() {
+        let topo = Topology::regions(2, 2);
+        let world: Vec<usize> = (0..4).collect();
+        let scheds = allgather_schedules(Algorithm::Ring, &topo, 2, 4).unwrap();
+        let rep = evaluate(&scheds, &topo, &world, &MachineParams::quartz()).unwrap();
+        assert_eq!(rep.per_rank.len(), 4);
+        assert!(rep.predicted > 0.0);
+        // ring: every rank sends p-1 = 3 messages
+        for t in &rep.per_rank {
+            assert_eq!(t.total_msgs(), 3);
+        }
+        assert!(rep.max_nonlocal_msgs() > 0);
+        assert!(rep.max_nonlocal_bytes() > 0);
+    }
+}

@@ -7,13 +7,19 @@
 //!   Bruck), Eq. 4 (locality-aware Bruck), plus the analogous forms for the
 //!   baselines (ring, recursive doubling, hierarchical, multi-lane) needed
 //!   to regenerate Figures 7 and 8.
+//! * [`cost`] — **IR-derived models**: evaluate any communication
+//!   [`crate::collectives::Schedule`] against [`MachineParams`] to get a
+//!   predicted completion time and per-class traffic counts without
+//!   executing — the engine behind the `model-tuned` dispatcher and the
+//!   `predicted` column of the figures.
 //!
 //! The same [`MachineParams`] also parameterize the virtual-clock transport
-//! in [`crate::comm::vtime`], so modeled closed forms and "measured"
-//! virtual-time executions share one source of truth (and are asserted to
-//! agree on power-of-two cases in `rust/tests/model_vs_sim.rs`).
+//! in [`crate::comm`], so closed forms, schedule-derived predictions and
+//! "measured" virtual-time executions share one source of truth (asserted
+//! to agree in `rust/tests/model_vs_sim.rs`).
 
 pub mod closed_form;
+pub mod cost;
 pub mod params;
 
 pub use params::{ClassParams, MachineParams, Postal, Protocol};

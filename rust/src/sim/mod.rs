@@ -12,13 +12,31 @@
 
 use std::time::Instant;
 
-use crate::collectives::{self, Algorithm, OpKind, Shape};
+use crate::collectives::{self, Algorithm, OpKind, Schedule, Shape};
 use crate::comm::{Comm, CommWorld, Timing};
 use crate::error::Error;
-use crate::model::MachineParams;
+use crate::model::{cost, MachineParams};
 use crate::topology::Topology;
 use crate::trace::TraceSummary;
 use crate::util::stats;
+
+/// Predicted completion time from the per-rank schedules the workers
+/// returned, or 0.0 when prediction does not apply (wall-clock timing, a
+/// failed run, or the zero-length no-op plan).
+fn predicted_from(
+    scheds: Vec<Option<Schedule>>,
+    topo: &Topology,
+    machine: Option<&MachineParams>,
+) -> f64 {
+    let Some(machine) = machine else { return 0.0 };
+    let scheds: Option<Vec<Schedule>> = scheds.into_iter().collect();
+    let Some(scheds) = scheds else { return 0.0 };
+    if scheds.len() != topo.size() {
+        return 0.0;
+    }
+    let world: Vec<usize> = (0..topo.size()).collect();
+    cost::predict(&scheds, topo, &world, machine).unwrap_or(0.0)
+}
 
 /// Result of one allgather execution over a world.
 #[derive(Debug, Clone)]
@@ -30,6 +48,10 @@ pub struct AllgatherReport {
     pub n: usize,
     /// Modeled completion time (max final virtual clock), seconds.
     pub vtime: f64,
+    /// Schedule-derived predicted completion time
+    /// ([`crate::model::cost::predict`]), seconds; 0.0 under wall-clock
+    /// timing or when no schedule is available.
+    pub predicted: f64,
     /// Wall-clock time of the in-process execution, seconds.
     pub wall: f64,
     /// True if every rank produced the expected gathered array.
@@ -64,36 +86,48 @@ pub fn run_allgather_timed(
     n: usize,
 ) -> AllgatherReport {
     let p = topo.size();
+    let machine = match &timing {
+        Timing::Virtual(m) => Some(m.clone()),
+        Timing::Wallclock => None,
+    };
     let expected: Vec<u32> = (0..p).flat_map(|r| contribution(r, n)).collect();
     let start = Instant::now();
-    let run = CommWorld::run(topo, timing, |c| -> crate::error::Result<bool> {
-        let mine = contribution(c.rank(), n);
-        let mut plan = collectives::plan_allgather::<u32>(algo, c, Shape::elems(n))?;
-        let mut out = vec![0u32; n * p];
-        plan.execute(&mine, &mut out)?;
-        Ok(out == expected)
-    });
+    let run =
+        CommWorld::run(topo, timing, |c| -> crate::error::Result<(bool, Option<Schedule>)> {
+            let mine = contribution(c.rank(), n);
+            let mut plan = collectives::plan_allgather::<u32>(algo, c, Shape::elems(n))?;
+            let sched = plan.schedule().cloned();
+            let mut out = vec![0u32; n * p];
+            plan.execute(&mine, &mut out)?;
+            Ok((out == expected, sched))
+        });
     let wall = start.elapsed().as_secs_f64();
     let mut verified = true;
     let mut errors = Vec::new();
-    for (rank, res) in run.results.iter().enumerate() {
+    let mut scheds: Vec<Option<Schedule>> = Vec::with_capacity(p);
+    for (rank, res) in run.results.into_iter().enumerate() {
         match res {
-            Ok(true) => {}
-            Ok(false) => {
+            Ok((true, s)) => scheds.push(s),
+            Ok((false, s)) => {
                 verified = false;
                 errors.push(format!("rank {rank}: wrong gathered data"));
+                scheds.push(s);
             }
             Err(e) => {
                 verified = false;
                 errors.push(format!("rank {rank}: {e}"));
+                scheds.push(None);
             }
         }
     }
+    let predicted =
+        if verified { predicted_from(scheds, topo, machine.as_ref()) } else { 0.0 };
     AllgatherReport {
         algorithm: algo,
         p,
         n,
-        vtime: run.max_vtime(),
+        vtime: run.vtimes.iter().copied().fold(0.0, f64::max),
+        predicted,
         wall,
         verified,
         trace: run.trace,
@@ -115,6 +149,9 @@ pub struct RepeatedReport {
     pub per_iter_vtime: Vec<f64>,
     /// Median of [`RepeatedReport::per_iter_vtime`] — the figure value.
     pub median_vtime: f64,
+    /// Schedule-derived predicted completion time per execution
+    /// ([`crate::model::cost::predict`]); the figures' model overlay.
+    pub predicted: f64,
     /// Wall-clock time of the whole in-process run, seconds.
     pub wall: f64,
     /// True if every execution on every rank produced the expected array.
@@ -154,6 +191,16 @@ pub fn run_allgather_repeated(
     // shared start.
     let per_iter_vtime = per_iter_vtimes(&run.results, warmup, total, verified);
     let median_vtime = stats::median(&per_iter_vtime);
+    let predicted = if verified {
+        let scheds: Vec<Option<Schedule>> = run
+            .results
+            .iter()
+            .map(|r| r.as_ref().ok().and_then(|(_, s)| s.clone()))
+            .collect();
+        predicted_from(scheds, topo, Some(machine))
+    } else {
+        0.0
+    };
     // Only a fully-verified run is guaranteed to have executed the
     // identical schedule `total` times; a mid-loop failure leaves raw
     // (non-divisible) counters.
@@ -165,6 +212,7 @@ pub fn run_allgather_repeated(
         warmup,
         iters,
         median_vtime,
+        predicted,
         per_iter_vtime,
         wall,
         verified,
@@ -172,6 +220,10 @@ pub fn run_allgather_repeated(
         errors,
     }
 }
+
+/// What every repeated worker returns: the per-iteration `(start, end)`
+/// clock spans plus the plan's schedule (for cost prediction).
+type Spans = (Vec<(f64, f64)>, Option<Schedule>);
 
 /// Per-rank body of [`run_allgather_repeated`]: plan once, then
 /// barrier-separated executions recording `(start, end)` clock spans.
@@ -181,10 +233,11 @@ fn repeated_worker(
     n: usize,
     total: usize,
     expected: &[u32],
-) -> crate::error::Result<Vec<(f64, f64)>> {
+) -> crate::error::Result<Spans> {
     let p = c.size();
     let mine = contribution(c.rank(), n);
     let mut plan = collectives::plan_allgather::<u32>(algo, c, Shape::elems(n))?;
+    let sched = plan.schedule().cloned();
     let mut out = vec![0u32; n * p];
     let mut spans = Vec::with_capacity(total);
     for _ in 0..total {
@@ -196,7 +249,7 @@ fn repeated_worker(
         }
         spans.push((t0, c.clock()));
     }
-    Ok(spans)
+    Ok((spans, sched))
 }
 
 fn collect_errors<R>(results: &[crate::error::Result<R>]) -> (bool, Vec<String>) {
@@ -229,6 +282,8 @@ pub struct OpReport {
     pub n: usize,
     /// Modeled completion time (max final virtual clock), seconds.
     pub vtime: f64,
+    /// Schedule-derived predicted completion time, seconds.
+    pub predicted: f64,
     /// Wall-clock time of the in-process execution, seconds.
     pub wall: f64,
     /// True if every rank produced the expected result.
@@ -248,6 +303,8 @@ pub struct RepeatedOpReport {
     pub iters: usize,
     pub per_iter_vtime: Vec<f64>,
     pub median_vtime: f64,
+    /// Schedule-derived predicted completion time per execution.
+    pub predicted: f64,
     pub wall: f64,
     pub verified: bool,
     /// Per-execution traffic (see [`RepeatedReport::trace`]).
@@ -288,8 +345,9 @@ fn repeated_spans<E>(
     c: &Comm,
     total: usize,
     expected: &[u64],
+    sched: Option<Schedule>,
     mut exec: E,
-) -> crate::error::Result<Vec<(f64, f64)>>
+) -> crate::error::Result<Spans>
 where
     E: FnMut(&Comm, &mut Vec<u64>) -> crate::error::Result<()>,
 {
@@ -304,13 +362,13 @@ where
         }
         spans.push((t0, c.clock()));
     }
-    Ok(spans)
+    Ok((spans, sched))
 }
 
 /// Extract per-iteration modeled latencies from the recorded spans (only
 /// meaningful when every rank verified).
 fn per_iter_vtimes(
-    results: &[crate::error::Result<Vec<(f64, f64)>>],
+    results: &[crate::error::Result<Spans>],
     warmup: usize,
     total: usize,
     verified: bool,
@@ -318,10 +376,10 @@ fn per_iter_vtimes(
     let mut per_iter = Vec::with_capacity(total - warmup);
     if verified {
         for i in warmup..total {
-            let start_i = results[0].as_ref().expect("verified")[i].0;
+            let start_i = results[0].as_ref().expect("verified").0[i].0;
             let end_i = results
                 .iter()
-                .map(|r| r.as_ref().expect("verified")[i].1)
+                .map(|r| r.as_ref().expect("verified").0[i].1)
                 .fold(0.0f64, f64::max);
             per_iter.push(end_i - start_i);
         }
@@ -358,6 +416,7 @@ fn repeated_to_single(rep: RepeatedOpReport) -> OpReport {
         p: rep.p,
         n: rep.n,
         vtime: rep.median_vtime,
+        predicted: rep.predicted,
         wall: rep.wall,
         verified: rep.verified,
         trace: rep.trace,
@@ -379,7 +438,7 @@ fn run_op_repeated<F>(
     worker: F,
 ) -> RepeatedOpReport
 where
-    F: Fn(&Comm, usize) -> crate::error::Result<Vec<(f64, f64)>> + Sync,
+    F: Fn(&Comm, usize) -> crate::error::Result<Spans> + Sync,
 {
     assert!(iters > 0, "need at least one measured iteration");
     let p = topo.size();
@@ -391,6 +450,16 @@ where
     let (verified, errors) = collect_errors(&run.results);
     let per_iter_vtime = per_iter_vtimes(&run.results, warmup, total, verified);
     let median_vtime = stats::median(&per_iter_vtime);
+    let predicted = if verified {
+        let scheds: Vec<Option<Schedule>> = run
+            .results
+            .iter()
+            .map(|r| r.as_ref().ok().and_then(|(_, s)| s.clone()))
+            .collect();
+        predicted_from(scheds, topo, Some(machine))
+    } else {
+        0.0
+    };
     let trace = if verified { run.trace.per_op(total as u64) } else { run.trace };
     RepeatedOpReport {
         op,
@@ -401,6 +470,7 @@ where
         iters,
         per_iter_vtime,
         median_vtime,
+        predicted,
         wall,
         verified,
         trace,
@@ -421,8 +491,9 @@ pub fn run_allreduce_repeated(
     let expected = reduce_expected(topo.size(), n);
     run_op_repeated(OpKind::Allreduce, algo, topo, machine, n, warmup, iters, |c, total| {
         let mut plan = collectives::plan_allreduce::<u64>(algo, c, Shape::elems(n))?;
+        let sched = plan.schedule().cloned();
         let mine = reduce_contribution(c.rank(), n);
-        repeated_spans(c, total, &expected, |_, out| plan.execute(&mine, out))
+        repeated_spans(c, total, &expected, sched, |_, out| plan.execute(&mine, out))
     })
 }
 
@@ -439,9 +510,10 @@ pub fn run_alltoall_repeated(
     let p = topo.size();
     run_op_repeated(OpKind::Alltoall, algo, topo, machine, n, warmup, iters, |c, total| {
         let mut plan = collectives::plan_alltoall::<u64>(algo, c, Shape::elems(n))?;
+        let sched = plan.schedule().cloned();
         let mine = a2a_send(c.rank(), p, n);
         let expected = a2a_expected(c.rank(), p, n);
-        repeated_spans(c, total, &expected, |_, out| plan.execute(&mine, out))
+        repeated_spans(c, total, &expected, sched, |_, out| plan.execute(&mine, out))
     })
 }
 
@@ -502,6 +574,64 @@ mod tests {
         // paper: 4 non-local messages from region-0 ranks
         assert_eq!(r.trace.max_nonlocal_msgs(), 4);
         ensure_verified(&r).unwrap();
+    }
+
+    #[test]
+    fn schedule_prediction_equals_measured_vtime() {
+        // The IR cost model replays the transport's clock algebra, so the
+        // predicted time must equal the virtual-time execution exactly.
+        let m = MachineParams::lassen();
+        let topo = Topology::regions(4, 4);
+        for algo in [
+            Algorithm::Bruck,
+            Algorithm::Ring,
+            Algorithm::RecursiveDoubling,
+            Algorithm::Dissemination,
+            Algorithm::Hierarchical,
+            Algorithm::Multilane,
+            Algorithm::LocalityBruck,
+            Algorithm::ModelTuned,
+        ] {
+            let r = run_allgather(algo, &topo, &m, 2);
+            assert!(r.verified, "{algo}: {:?}", r.errors);
+            assert!(
+                (r.predicted - r.vtime).abs() < 1e-12,
+                "{algo}: predicted {:.6e} vs vtime {:.6e}",
+                r.predicted,
+                r.vtime
+            );
+        }
+        // the §6 ops predict exactly too
+        let ar = run_allreduce("loc-aware", &topo, &m, 2);
+        assert!((ar.predicted - ar.vtime).abs() < 1e-12, "allreduce");
+        let a2a = run_alltoall("loc-aware", &topo, &m, 2);
+        assert!((a2a.predicted - a2a.vtime).abs() < 1e-12, "alltoall");
+    }
+
+    #[test]
+    fn model_tuned_is_never_slower_than_system_default() {
+        // The acceptance property on a small fig7-shaped grid: the
+        // model-tuned dispatcher picks the measured-fastest candidate at
+        // least as often as the MPICH-style static dispatch does — here,
+        // strictly: its measured vtime is ≤ system-default's on every
+        // configuration (prediction == virtual measurement).
+        let m = MachineParams::lassen();
+        for ppn in [4usize, 8] {
+            for nodes in [2usize, 4, 8] {
+                for n in [2usize, 512] {
+                    let topo = Topology::regions(nodes, ppn);
+                    let tuned = run_allgather(Algorithm::ModelTuned, &topo, &m, n);
+                    let sysd = run_allgather(Algorithm::SystemDefault, &topo, &m, n);
+                    assert!(tuned.verified && sysd.verified, "{nodes}x{ppn} n={n}");
+                    assert!(
+                        tuned.vtime <= sysd.vtime + 1e-15,
+                        "{nodes}x{ppn} n={n}: model-tuned {:.3e} > system-default {:.3e}",
+                        tuned.vtime,
+                        sysd.vtime
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,10 +17,13 @@
 use std::collections::BTreeSet;
 
 use locag::collectives::{
-    canonical_contribution, expected_result, AllreduceRegistry, AlltoallRegistry, Registry, Shape,
+    canonical_contribution, expected_result, AllreduceRegistry, AlltoallRegistry, OpKind,
+    Registry, Schedule, Shape,
 };
 use locag::comm::{CommWorld, Timing};
+use locag::model::cost;
 use locag::topology::Topology;
+use locag::trace::RankTrace;
 
 /// (regions, ranks-per-region): powers of two, non-powers, degenerate.
 const SHAPES: &[(usize, usize)] = &[
@@ -200,6 +203,88 @@ fn every_registered_pair_conforms_over_the_grid() {
     let want = all_registered_pairs();
     let missing: Vec<&String> = want.difference(&covered).collect();
     assert!(missing.is_empty(), "pairs never successfully executed: {missing:?}");
+}
+
+/// Execute one planned (op, algorithm) pair once in a fresh world and
+/// return, per rank, the plan's schedule next to nothing else — the
+/// world's trace is the measured side of the comparison.
+fn run_one_pair(
+    topo: &Topology,
+    op: OpKind,
+    name: &str,
+    n: usize,
+) -> Option<(Vec<Schedule>, Vec<RankTrace>)> {
+    let p = topo.size();
+    let run = CommWorld::run(topo, Timing::Wallclock, |c| -> Option<Schedule> {
+        match op {
+            OpKind::Allgather => {
+                let reg = Registry::<u64>::standard();
+                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
+                let mine = canonical_contribution(c.rank(), n);
+                let mut out = vec![0u64; n * p];
+                plan.execute(&mine, &mut out).unwrap();
+                Some(sched)
+            }
+            OpKind::Allreduce => {
+                let reg = AllreduceRegistry::<u64>::standard();
+                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
+                let mine = ar_contribution(c.rank(), n);
+                let mut out = vec![0u64; n];
+                plan.execute(&mine, &mut out).unwrap();
+                Some(sched)
+            }
+            OpKind::Alltoall => {
+                let reg = AlltoallRegistry::<u64>::standard();
+                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
+                let mine = a2a_send(c.rank(), p, n);
+                let mut out = vec![0u64; n * p];
+                plan.execute(&mine, &mut out).unwrap();
+                Some(sched)
+            }
+        }
+    });
+    let scheds: Option<Vec<Schedule>> = run.results.into_iter().collect();
+    scheds.map(|s| (s, run.trace.per_rank))
+}
+
+/// The tentpole invariant: for every registered (op, algorithm) pair, the
+/// **static** message/byte counts derived from the schedule IR equal the
+/// tracer's **measured** counts, per rank and per locality class — the
+/// schedule and the execution can never drift, because the execution *is*
+/// the schedule.
+#[test]
+fn schedule_counts_match_traced_execution() {
+    let ops = [OpKind::Allgather, OpKind::Allreduce, OpKind::Alltoall];
+    for &(regions, ppr) in SHAPES {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let world: Vec<usize> = (0..p).collect();
+        for &n in &[1usize, 3] {
+            for op in ops {
+                let names: Vec<&'static str> = match op {
+                    OpKind::Allgather => Registry::<u64>::standard().names(),
+                    OpKind::Allreduce => AllreduceRegistry::<u64>::standard().names(),
+                    OpKind::Alltoall => AlltoallRegistry::<u64>::standard().names(),
+                };
+                for name in names {
+                    let Some((scheds, traced)) = run_one_pair(&topo, op, name, n) else {
+                        continue; // legitimate plan-time rejection, covered above
+                    };
+                    for rank in 0..p {
+                        let derived = cost::counts(&scheds[rank], rank, &topo, &world);
+                        assert_eq!(
+                            derived, traced[rank],
+                            "{op}/{name} @ {regions}x{ppr} n={n} rank {rank}: \
+                             IR-derived counts diverge from traced execution"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]

@@ -151,3 +151,28 @@ fn uniform_machine_collapses_locality_gap() {
         std.vtime
     );
 }
+
+#[test]
+fn schedule_ir_prediction_equals_virtual_time() {
+    // The third view of "cost": the IR cost model (model::cost::predict)
+    // replays the transport's postal clock algebra over the planned
+    // schedules, so its prediction must equal the virtual-time execution
+    // exactly — for every algorithm, not just the closed-form cases.
+    let m = MachineParams::lassen();
+    for (regions, ppr) in [(4usize, 4usize), (8, 4), (6, 4), (3, 2)] {
+        let topo = Topology::regions(regions, ppr);
+        for algo in Algorithm::ALL {
+            if algo == Algorithm::RecursiveDoubling && !topo.size().is_power_of_two() {
+                continue; // documented precondition
+            }
+            let rep = sim::run_allgather(algo, &topo, &m, 2);
+            assert!(rep.verified, "{algo} {regions}x{ppr}: {:?}", rep.errors);
+            assert!(
+                (rep.predicted - rep.vtime).abs() < TOL,
+                "{algo} {regions}x{ppr}: predicted {:.6e} vs vtime {:.6e}",
+                rep.predicted,
+                rep.vtime
+            );
+        }
+    }
+}
