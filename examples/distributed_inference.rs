@@ -59,6 +59,7 @@ fn main() {
             check: true,
             fused: false,
             consensus: true,
+            fuse_batch: 1,
         };
         let rep = serve(&cfg).expect("serve");
         assert!(

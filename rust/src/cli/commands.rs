@@ -181,6 +181,26 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
         seconds(rep.predicted),
         rep.trace.max_nonlocal_msgs()
     );
+    println!(
+        "\nConcurrent collectives fuse into ONE schedule (`locag fuse`,\n\
+         `locag explain --fused`, `locag e2e --fuse-batch K`): rounds are\n\
+         merged across plans and same-destination sends coalesce into one\n\
+         wire message — the paper's aggregation idea lifted across whole\n\
+         collectives. The serving loop's allgather ⊕ consensus allreduce\n\
+         on the 4x4 example:"
+    );
+    let specs = vec![
+        crate::collectives::FuseSpec::new(OpKind::Allgather, "loc-bruck", 1),
+        crate::collectives::FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+    ];
+    let fr = sim::run_fused(&specs, &topo, &m);
+    println!(
+        "  fused:      max NL msgs {} modeled {}\n  sequential: max NL msgs {} modeled {}",
+        fr.fused_trace.max_nonlocal_msgs(),
+        seconds(fr.fused_vtime),
+        fr.seq_trace.max_nonlocal_msgs(),
+        seconds(fr.seq_vtime)
+    );
     Ok(0)
 }
 
@@ -245,13 +265,246 @@ pub fn figure(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Render one rank's schedule table (shared by `explain` and `fuse`).
+fn print_schedule(sched: &crate::collectives::Schedule, rank: usize, topo: &Topology) {
+    use crate::collectives::schedule::BufId;
+    use crate::collectives::{Slice, Step};
+    println!(
+        "schedule of rank {rank}: {} rounds, {} steps, {} tags, {} scratch buffers\n",
+        sched.rounds.len(),
+        sched.num_steps(),
+        sched.tags,
+        sched.scratch.len()
+    );
+    let slice = |s: &Slice| -> String {
+        let buf = match s.buf {
+            BufId::Input => "in".to_string(),
+            BufId::Output => "out".to_string(),
+            BufId::Scratch(i) => format!("s{i}"),
+        };
+        format!("{buf}[{}..{}]", s.off, s.off + s.len)
+    };
+    let peer_class = |r: usize| topo.classify(rank, r).label();
+    for (ri, round) in sched.rounds.iter().enumerate() {
+        println!("round {ri}: {}", round.label);
+        for step in &round.steps {
+            match step {
+                Step::Send { to, src, tag, pad } => println!(
+                    "  send     -> P{to:<4} {:>8} B  tag {tag}  {} [{}]",
+                    sched.wire_bytes(src.len, *pad),
+                    slice(src),
+                    peer_class(*to),
+                ),
+                Step::Recv { from, dst, tag, pad } => println!(
+                    "  recv     <- P{from:<4} {:>8} B  tag {tag}  {} [{}]",
+                    sched.wire_bytes(dst.len, *pad),
+                    slice(dst),
+                    peer_class(*from),
+                ),
+                Step::SendRecv { to, src, from, dst, tag, pad } => println!(
+                    "  sendrecv -> P{to} / <- P{from}  {:>8} B  tag {tag}  {} -> {} [{}]",
+                    sched.wire_bytes(src.len, *pad),
+                    slice(src),
+                    slice(dst),
+                    peer_class(*to),
+                ),
+                Step::CopyLocal { src, dst } => {
+                    println!("  copy     {} -> {}", slice(src), slice(dst))
+                }
+                Step::Reduce { src, dst } => {
+                    println!("  reduce   {} += into {}", slice(src), slice(dst))
+                }
+                Step::Rotate { src, dst, block, shift } => println!(
+                    "  rotate   {} -> {} (block {block}, shift {shift})",
+                    slice(src),
+                    slice(dst)
+                ),
+            }
+        }
+    }
+}
+
+/// The serving-loop fusion specs shared by `locag fuse` and
+/// `locag explain --fused`: `batch` allgathers plus (when
+/// `consensus_n > 0`) one consensus allreduce.
+fn serving_specs(
+    algo: &str,
+    n: usize,
+    batch: usize,
+    consensus_n: usize,
+) -> Vec<crate::collectives::FuseSpec> {
+    use crate::collectives::FuseSpec;
+    let mut specs: Vec<FuseSpec> =
+        (0..batch).map(|_| FuseSpec::new(OpKind::Allgather, algo, n)).collect();
+    if consensus_n > 0 {
+        specs.push(FuseSpec::new(OpKind::Allreduce, "loc-aware", consensus_n));
+    }
+    specs
+}
+
+/// `locag explain --fused` — the serving-loop fusion (K allgathers ⊕ the
+/// consensus allreduce) as one schedule: one rank's fused schedule table,
+/// the coalescing summary, and fused-vs-sequential traffic and predicted
+/// completion, with the measured virtual time shown against the IR
+/// prediction (they are equal — the single-plan invariant extends to
+/// fused schedules).
+fn explain_fused(args: &Args) -> Result<i32> {
+    use crate::collectives::fuse;
+    use crate::collectives::schedule::WorldView;
+    use crate::model::cost;
+
+    let algo = args.get_str("algo", "loc-bruck");
+    let regions = args.get_usize("regions", 2)?;
+    let ppr = args.get_usize("ppr", 8)?;
+    let n = args.get_usize("values", 2)?;
+    let batch = args.get_usize("batch", 1)?.max(1);
+    // Mirror the serving loop: two consensus probes per batched request.
+    let consensus_n = args.get_usize("consensus-values", 2 * batch)?;
+    let rank = args.get_usize("rank", 0)?;
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    let topo = Topology::regions(regions, ppr);
+    let p = topo.size();
+    if rank >= p {
+        return Err(Error::Precondition(format!("--rank {rank} outside 0..{p}")));
+    }
+    let view = WorldView::world(&topo);
+    let specs = serving_specs(&algo, n, batch, consensus_n);
+    // u64 payloads (8 B), like the sweep engine.
+    let (fused, stats) = fuse::fuse_world(&specs, &view, 8, &m)?;
+    println!("fused plan on {p} ranks ({regions} regions x {ppr}) [{}]:", m.name);
+    for (i, s) in specs.iter().enumerate() {
+        println!("  constituent {i}: {}", s.label());
+    }
+    println!();
+    print_schedule(&fused[rank], rank, &topo);
+
+    let merged = stats.iter().flat_map(|s| &s.merged).filter(|mm| mm.send).count();
+    let before: usize = stats.iter().map(|s| s.sends_before).sum();
+    let after: usize = stats.iter().map(|s| s.sends_after).sum();
+    println!(
+        "\ncoalescing: {before} wire messages -> {after} ({merged} merged sends; \
+         `locag fuse` prints the full table)"
+    );
+
+    let mut worlds = Vec::new();
+    for s in specs.iter().filter(|s| s.n > 0) {
+        worlds.push(fuse::build_world(s, &view, 8, &m)?);
+    }
+    let rep = cost::evaluate_fusion(&fused, &worlds, &topo, &view.world_of, &m)?;
+    println!("\nfused vs sequential (IR-derived, machine '{}'):", m.name);
+    println!(
+        "  non-local msgs (worst rank): fused {} vs sequential {}",
+        rep.fused.max_nonlocal_msgs(),
+        rep.sequential.max_nonlocal_msgs()
+    );
+    println!("  non-local msgs saved (all ranks): {}", rep.nonlocal_msgs_saved());
+    println!(
+        "  predicted completion: fused {} vs sequential {} (saving {})",
+        seconds(rep.fused.predicted),
+        seconds(rep.sequential.predicted),
+        seconds(rep.predicted_saving())
+    );
+
+    let run = sim::run_fused(&specs, &topo, &m);
+    if !run.verified {
+        for e in &run.errors {
+            eprintln!("error: {e}");
+        }
+        return Ok(1);
+    }
+    println!(
+        "\nmeasured (virtual transport): fused {} (predicted {}), sequential {}",
+        seconds(run.fused_vtime),
+        seconds(run.fused_predicted),
+        seconds(run.seq_vtime)
+    );
+    Ok(0)
+}
+
+/// `locag fuse` — print the full coalescing table of the serving-loop
+/// fusion: every merged wire message (round, peer, direction, payload,
+/// constituents) plus the fused-vs-sequential totals.
+pub fn fuse_cmd(args: &Args) -> Result<i32> {
+    use crate::collectives::fuse;
+    use crate::collectives::schedule::WorldView;
+    use crate::model::cost;
+
+    let algo = args.get_str("algo", "loc-bruck");
+    let regions = args.get_usize("regions", 2)?;
+    let ppr = args.get_usize("ppr", 8)?;
+    let n = args.get_usize("values", 2)?;
+    let batch = args.get_usize("batch", 1)?.max(1);
+    // Mirror the serving loop: two consensus probes per batched request.
+    let consensus_n = args.get_usize("consensus-values", 2 * batch)?;
+    let m = machine_by_name(&args.get_str("machine", "lassen"))?;
+    let topo = Topology::regions(regions, ppr);
+    let view = WorldView::world(&topo);
+    let specs = serving_specs(&algo, n, batch, consensus_n);
+    let (fused, stats) = fuse::fuse_world(&specs, &view, 8, &m)?;
+    println!(
+        "fusing {} collectives on {} ranks ({regions} regions x {ppr}) [{}]:",
+        specs.len(),
+        topo.size(),
+        m.name
+    );
+    for (i, s) in specs.iter().enumerate() {
+        println!("  constituent {i}: {}", s.label());
+    }
+    println!(
+        "\n{:<5} {:>5} {:>5} {:<4} {:>10} {:>7} {:>5}  constituents",
+        "rank", "round", "peer", "dir", "payload", "pad", "tag"
+    );
+    let mut any = false;
+    for (r, st) in stats.iter().enumerate() {
+        for mm in &st.merged {
+            any = true;
+            println!(
+                "{:<5} {:>5} {:>5} {:<4} {:>8} B {:>5} B {:>5}  {:?}",
+                r,
+                mm.round,
+                mm.peer,
+                if mm.send { "send" } else { "recv" },
+                mm.elems * 8,
+                mm.pad,
+                mm.tag,
+                mm.parts
+            );
+        }
+    }
+    if !any {
+        println!("(no messages were coalesced on this configuration)");
+    }
+    let before: usize = stats.iter().map(|s| s.sends_before).sum();
+    let after: usize = stats.iter().map(|s| s.sends_after).sum();
+    println!("\nwire messages (all ranks): {before} sequential -> {after} fused");
+
+    let mut worlds = Vec::new();
+    for s in specs.iter().filter(|s| s.n > 0) {
+        worlds.push(fuse::build_world(s, &view, 8, &m)?);
+    }
+    let rep = cost::evaluate_fusion(&fused, &worlds, &topo, &view.world_of, &m)?;
+    println!(
+        "non-local msgs (worst rank): fused {} vs sequential {} | predicted saving {}",
+        rep.fused.max_nonlocal_msgs(),
+        rep.sequential.max_nonlocal_msgs(),
+        seconds(rep.predicted_saving())
+    );
+    Ok(0)
+}
+
 /// `locag explain` — print an algorithm's communication schedule and its
 /// IR-derived cost breakdown: the schedule table of one rank, per-class
 /// traffic, and the predicted completion time next to every candidate's.
+/// With `--fused`, explain the serving-loop fusion instead
+/// ([`explain_fused`]).
 pub fn explain(args: &Args) -> Result<i32> {
-    use crate::collectives::schedule::{Schedule, Slice, Step, WorldView};
+    use crate::collectives::schedule::{Schedule, WorldView};
     use crate::collectives::{model_tuned, schedule, OpKind};
     use crate::model::cost;
+
+    if args.get_bool("fused") {
+        return explain_fused(args);
+    }
 
     let op = OpKind::parse_or_err(&args.get_str("op", "allgather"))?;
     let default_algo = match op {
@@ -302,59 +555,7 @@ pub fn explain(args: &Args) -> Result<i32> {
         "{op} / {} on {p} ranks ({regions} regions x {ppr}), {n} values/rank [{}]",
         sched.label, m.name
     );
-    println!(
-        "schedule of rank {rank}: {} rounds, {} steps, {} tags, {} scratch buffers\n",
-        sched.rounds.len(),
-        sched.num_steps(),
-        sched.tags,
-        sched.scratch.len()
-    );
-    let slice = |s: &Slice| -> String {
-        let buf = match s.buf {
-            crate::collectives::schedule::BufId::Input => "in".to_string(),
-            crate::collectives::schedule::BufId::Output => "out".to_string(),
-            crate::collectives::schedule::BufId::Scratch(i) => format!("s{i}"),
-        };
-        format!("{buf}[{}..{}]", s.off, s.off + s.len)
-    };
-    let peer_class = |r: usize| topo.classify(rank, r).label();
-    for (ri, round) in sched.rounds.iter().enumerate() {
-        println!("round {ri}: {}", round.label);
-        for step in &round.steps {
-            match step {
-                Step::Send { to, src, tag, pad } => println!(
-                    "  send     -> P{to:<4} {:>8} B  tag {tag}  {} [{}]",
-                    sched.wire_bytes(src.len, *pad),
-                    slice(src),
-                    peer_class(*to),
-                ),
-                Step::Recv { from, dst, tag, pad } => println!(
-                    "  recv     <- P{from:<4} {:>8} B  tag {tag}  {} [{}]",
-                    sched.wire_bytes(dst.len, *pad),
-                    slice(dst),
-                    peer_class(*from),
-                ),
-                Step::SendRecv { to, src, from, dst, tag, pad } => println!(
-                    "  sendrecv -> P{to} / <- P{from}  {:>8} B  tag {tag}  {} -> {} [{}]",
-                    sched.wire_bytes(src.len, *pad),
-                    slice(src),
-                    slice(dst),
-                    peer_class(*to),
-                ),
-                Step::CopyLocal { src, dst } => {
-                    println!("  copy     {} -> {}", slice(src), slice(dst))
-                }
-                Step::Reduce { src, dst } => {
-                    println!("  reduce   {} += into {}", slice(src), slice(dst))
-                }
-                Step::Rotate { src, dst, block, shift } => println!(
-                    "  rotate   {} -> {} (block {block}, shift {shift})",
-                    slice(src),
-                    slice(dst)
-                ),
-            }
-        }
-    }
+    print_schedule(sched, rank, &topo);
     let world: Vec<usize> = (0..p).collect();
     let rep = cost::evaluate(&scheds, &topo, &world, &m)?;
     let mine = &rep.per_rank[rank];
@@ -469,12 +670,14 @@ pub fn e2e(args: &Args) -> Result<i32> {
         check: !args.get_bool("no-check"),
         fused: args.get_bool("fused"),
         consensus: !args.get_bool("no-consensus"),
+        fuse_batch: args.get_usize("fuse-batch", 1)?.max(1),
     };
     println!(
-        "serving via PJRT: allgather={}, {} regions, {} requests{}",
+        "serving via PJRT: allgather={}, {} regions, {} requests, fuse-batch {}{}",
         cfg.algo,
         cfg.regions,
         cfg.requests,
+        cfg.fuse_batch,
         if cfg.fused { ", fused final" } else { "" }
     );
     let rep = serve(&cfg)?;

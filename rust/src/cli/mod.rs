@@ -5,6 +5,8 @@
 //! locag run --op alltoall --algo loc-aware --regions 16 --ppr 8
 //! locag run --algo model-tuned          # cost-model-selected allgather
 //! locag explain --algo loc-bruck --regions 4 --ppr 4   # schedule + costs
+//! locag explain --fused --regions 2 --ppr 8            # fused serving plan
+//! locag fuse --batch 4 --regions 2 --ppr 8             # coalescing table
 //! locag bench --json results/BENCH_collectives.json    # perf trajectory
 //! locag allgather --algo loc-bruck --regions 16 --ppr 8 [--machine lassen]
 //! locag figure 9 [--out results/fig9.csv] [--max-p 1024]
@@ -37,6 +39,7 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "run" => commands::run_op(&args),
         "allgather" => commands::allgather(&args),
         "explain" => commands::explain(&args),
+        "fuse" => commands::fuse_cmd(&args),
         "bench" => commands::bench(&args),
         "figure" => commands::figure(&args),
         "pingpong" => commands::pingpong(&args),
@@ -81,6 +84,16 @@ COMMANDS
                and the model-predicted completion time.
                --op OP --algo NAME --regions N --ppr N --values N
                --rank N (whose schedule to print; default 0) --machine NAME
+               --fused: explain the serving-loop fusion instead (K
+               allgathers ⊕ consensus allreduce as ONE round-merged,
+               message-coalesced schedule) with fused-vs-sequential
+               non-local traffic and predicted/measured completion.
+               Extra options: --batch K --consensus-values N
+  fuse         Print the full coalescing table of the serving-loop fusion:
+               every merged wire message (rank, round, peer, payload,
+               constituents) and the fused-vs-sequential totals.
+               --algo NAME --regions N --ppr N --values N --batch K
+               --consensus-values N --machine NAME
   bench        Micro-bench a fixed (shape, algorithm) grid and emit a
                BENCH_*.json perf-trajectory artifact (p, n, algo, vtime,
                predicted, wall) for cross-PR regression tracking.
@@ -95,9 +108,12 @@ COMMANDS
                --machine NAME
   pattern      Print the step-by-step communication pattern (paper Figs.
                1 and 4 as text). --algo NAME --regions N --ppr N
-  e2e          Tensor-parallel serving with the allgather on the hot path
+  e2e          Tensor-parallel serving with a FUSED collective hot path:
+               each chunk of --fuse-batch requests executes its allgathers
+               and the consensus allreduce as one coalesced schedule
                (default algorithm: model-tuned).
                --algo NAME --regions N --requests N --artifacts DIR
+               --fuse-batch K (request micro-batch; default 1)
                --fused (use the fused gathered-matmul artifact)
   validate     Cross-check every algorithm against the expected gather and
                the paper's message-count bounds. --max-p N (default 256)

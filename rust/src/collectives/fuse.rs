@@ -1,0 +1,695 @@
+//! Schedule fusion: run several concurrent collectives as **one**
+//! round-merged, message-coalesced [`Schedule`].
+//!
+//! The paper's core lever is reducing the *number and size of non-local
+//! messages*: the locality-aware Bruck aggregates what standard Bruck
+//! would send as many small inter-region messages into one message per
+//! exchange partner (§3, §4 — each non-local step pays a single
+//! `α_c + β_c·s` postal term instead of many `α_c` terms). Fusion lifts
+//! exactly that aggregation idea from *within one collective* to *across
+//! concurrent collectives*: when a serving loop issues an allgather and a
+//! consensus allreduce (or `K` micro-batched allgathers) back to back,
+//! their schedules usually address the same peers in the same rounds —
+//! so their same-destination wire messages can be coalesced into one,
+//! paying one `α_c` where sequential execution pays `N`.
+//!
+//! [`fuse`] is a pure per-rank function with three phases:
+//!
+//! 1. **Namespacing.** Each constituent's `Input`/`Output`/`Scratch`
+//!    buffers are windowed into a composite buffer space
+//!    ([`Schedule::io`] carries the composite lengths) and its tag block
+//!    is offset into a composite tag space, so constituents can never
+//!    alias each other.
+//! 2. **Round alignment.** Every constituent is split into *micro-rounds*
+//!    — at most one communication step each, preceded by its local steps
+//!    — and the constituents' micro-round streams are zip-merged
+//!    (shorter plans simply stop participating). Splitting at
+//!    communication granularity is what makes the merge safe: a fused
+//!    round never reorders two dependent communication steps of the same
+//!    constituent.
+//! 3. **Coalescing.** Within a fused round, send halves addressed to the
+//!    same peer become one wire message (payloads gathered into a
+//!    coalescing scratch buffer, pad bytes summed, the smallest member
+//!    tag reused); receive halves from the same peer become one receive
+//!    plus scatter copies. Every fused round posts all of its sends
+//!    before blocking on its first receive.
+//!
+//! Whether both endpoints of a message group the same members is a
+//! *global* property, so [`fuse_world`] builds every rank's fused
+//! schedule and replays the mailbox matching ([`verify_world`]) before
+//! committing; if the peers disagree (structurally dissimilar
+//! constituents), it falls back to uncoalesced fusion — still one
+//! schedule, still round-merged, just without message merging.
+//!
+//! The cost model needs no extension: a fused schedule is a schedule, so
+//! [`crate::model::cost::predict`] prices it exactly and
+//! [`crate::model::cost::evaluate_fusion`] reports the savings against
+//! sequential execution.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::error::{Error, Result};
+use crate::model::MachineParams;
+
+use super::model_tuned;
+use super::plan::OpKind;
+use super::schedule::{BufId, Round, Schedule, Slice, Step, WorldView};
+
+/// One constituent of a fused plan: which operation, by which algorithm
+/// (a registry name; dispatchers like `model-tuned` are resolved at build
+/// time), at what per-rank shape.
+#[derive(Debug, Clone)]
+pub struct FuseSpec {
+    /// The constituent's operation.
+    pub op: OpKind,
+    /// Registry name of the algorithm (case-insensitive).
+    pub algo: String,
+    /// Per-rank element count (the constituent's [`super::plan::Shape`]).
+    pub n: usize,
+}
+
+impl FuseSpec {
+    /// A constituent spec.
+    pub fn new(op: OpKind, algo: &str, n: usize) -> FuseSpec {
+        FuseSpec { op, algo: algo.to_string(), n }
+    }
+
+    /// Display label, `op/algo@n`.
+    pub fn label(&self) -> String {
+        format!("{}/{}@{}", self.op, self.algo, self.n)
+    }
+}
+
+/// One coalesced wire message of a fused schedule.
+#[derive(Debug, Clone)]
+pub struct MergedMsg {
+    /// Fused round index.
+    pub round: usize,
+    /// Peer communicator rank.
+    pub peer: usize,
+    /// True for the send side, false for the receive side.
+    pub send: bool,
+    /// Constituent indices whose messages were merged.
+    pub parts: Vec<usize>,
+    /// Total payload elements of the merged message.
+    pub elems: usize,
+    /// Total pad (protocol header) bytes.
+    pub pad: usize,
+    /// The tag the merged message travels under (smallest member tag).
+    pub tag: u64,
+}
+
+/// What fusion did to one rank's schedules: wire-message counts before and
+/// after coalescing, plus every merged message.
+#[derive(Debug, Clone, Default)]
+pub struct FuseStats {
+    /// Send-side wire messages across all constituents before fusion.
+    pub sends_before: usize,
+    /// Send-side wire messages in the fused schedule.
+    pub sends_after: usize,
+    /// Every coalesced message (groups of one are not listed).
+    pub merged: Vec<MergedMsg>,
+}
+
+/// Buffer/tag offsets of one constituent in the composite space.
+struct PartMap {
+    in_off: usize,
+    out_off: usize,
+    scratch_base: usize,
+    tag_base: u64,
+}
+
+fn remap_slice(s: &Slice, m: &PartMap) -> Slice {
+    match s.buf {
+        BufId::Input => Slice::at(BufId::Input, s.off + m.in_off, s.len),
+        BufId::Output => Slice::at(BufId::Output, s.off + m.out_off, s.len),
+        BufId::Scratch(i) => Slice::at(BufId::Scratch(m.scratch_base + i), s.off, s.len),
+    }
+}
+
+fn remap_local(step: &Step, m: &PartMap) -> Step {
+    match step {
+        Step::CopyLocal { src, dst } => {
+            Step::CopyLocal { src: remap_slice(src, m), dst: remap_slice(dst, m) }
+        }
+        Step::Reduce { src, dst } => {
+            Step::Reduce { src: remap_slice(src, m), dst: remap_slice(dst, m) }
+        }
+        Step::Rotate { src, dst, block, shift } => Step::Rotate {
+            src: remap_slice(src, m),
+            dst: remap_slice(dst, m),
+            block: *block,
+            shift: *shift,
+        },
+        _ => unreachable!("communication steps are remapped by the coalescer"),
+    }
+}
+
+/// One alignment slot of a constituent: the local steps that precede its
+/// communication step, plus at most one communication step. Trailing
+/// local steps (final rotations, combines) form a comm-free tail slot.
+struct MicroRound<'a> {
+    label: &'a str,
+    locals: Vec<&'a Step>,
+    comm: Option<&'a Step>,
+}
+
+fn micro_rounds(sched: &Schedule) -> Vec<MicroRound<'_>> {
+    let mut out = Vec::new();
+    let mut locals: Vec<&Step> = Vec::new();
+    let mut last_label = "";
+    for round in &sched.rounds {
+        last_label = round.label.as_str();
+        for step in &round.steps {
+            match step {
+                Step::Send { .. } | Step::Recv { .. } | Step::SendRecv { .. } => {
+                    out.push(MicroRound {
+                        label: round.label.as_str(),
+                        locals: std::mem::take(&mut locals),
+                        comm: Some(step),
+                    });
+                }
+                _ => locals.push(step),
+            }
+        }
+    }
+    if !locals.is_empty() {
+        out.push(MicroRound { label: last_label, locals, comm: None });
+    }
+    out
+}
+
+/// Half of a communication step, namespaced into the composite space.
+struct Half {
+    part: usize,
+    peer: usize,
+    slice: Slice,
+    tag: u64,
+    pad: usize,
+}
+
+/// Group halves by peer in first-occurrence order (every half its own
+/// group when coalescing is off).
+fn group_by_peer(halves: Vec<Half>, coalesce: bool) -> Vec<Vec<Half>> {
+    if !coalesce {
+        return halves.into_iter().map(|h| vec![h]).collect();
+    }
+    let mut order: Vec<usize> = Vec::new();
+    let mut groups: HashMap<usize, Vec<Half>> = HashMap::new();
+    for h in halves {
+        if !groups.contains_key(&h.peer) {
+            order.push(h.peer);
+        }
+        groups.entry(h.peer).or_default().push(h);
+    }
+    order.into_iter().map(|p| groups.remove(&p).expect("peer came from order")).collect()
+}
+
+/// Fuse constituent schedules of one rank into a single composite
+/// schedule, with peer coalescing. See the [module docs](self).
+pub fn fuse(parts: &[Schedule]) -> Result<Schedule> {
+    Ok(fuse_with_stats(parts, true)?.0)
+}
+
+/// [`fuse`] with explicit coalescing control, also returning the
+/// [`FuseStats`] coalescing report of this rank.
+pub fn fuse_with_stats(parts: &[Schedule], coalesce: bool) -> Result<(Schedule, FuseStats)> {
+    let Some(first) = parts.first() else {
+        return Err(Error::Precondition("fuse() needs at least one schedule".into()));
+    };
+    let p = first.p;
+    let elem_bytes = first.elem_bytes;
+    for s in parts {
+        if s.p != p || s.elem_bytes != elem_bytes {
+            return Err(Error::Precondition(format!(
+                "fused schedules must agree on communicator and element size \
+                 (got p {} vs {}, elem_bytes {} vs {})",
+                s.p, p, s.elem_bytes, elem_bytes
+            )));
+        }
+    }
+
+    // Composite buffer and tag spaces (namespacing).
+    let mut maps = Vec::with_capacity(parts.len());
+    let (mut in_len, mut out_len) = (0usize, 0usize);
+    let mut tags = 0u64;
+    let mut scratch: Vec<usize> = Vec::new();
+    for s in parts {
+        let (il, ol) = s.io_lens();
+        maps.push(PartMap {
+            in_off: in_len,
+            out_off: out_len,
+            scratch_base: scratch.len(),
+            tag_base: tags,
+        });
+        in_len += il;
+        out_len += ol;
+        tags += s.tags;
+        scratch.extend_from_slice(&s.scratch);
+    }
+
+    let micro: Vec<Vec<MicroRound>> = parts.iter().map(micro_rounds).collect();
+    let nrounds = micro.iter().map(|m| m.len()).max().unwrap_or(0);
+
+    let mut stats = FuseStats::default();
+    let mut rounds = Vec::with_capacity(nrounds);
+    for k in 0..nrounds {
+        let mut steps: Vec<Step> = Vec::new();
+        let mut labels: Vec<&str> = Vec::new();
+        let mut sends: Vec<Half> = Vec::new();
+        let mut recvs: Vec<Half> = Vec::new();
+        for (pi, mrs) in micro.iter().enumerate() {
+            let Some(mr) = mrs.get(k) else { continue };
+            if !labels.contains(&mr.label) {
+                labels.push(mr.label);
+            }
+            let m = &maps[pi];
+            for &st in &mr.locals {
+                steps.push(remap_local(st, m));
+            }
+            match mr.comm {
+                Some(Step::Send { to, src, tag, pad }) => sends.push(Half {
+                    part: pi,
+                    peer: *to,
+                    slice: remap_slice(src, m),
+                    tag: m.tag_base + tag,
+                    pad: *pad,
+                }),
+                Some(Step::Recv { from, dst, tag, pad }) => recvs.push(Half {
+                    part: pi,
+                    peer: *from,
+                    slice: remap_slice(dst, m),
+                    tag: m.tag_base + tag,
+                    pad: *pad,
+                }),
+                Some(Step::SendRecv { to, src, from, dst, tag, pad }) => {
+                    sends.push(Half {
+                        part: pi,
+                        peer: *to,
+                        slice: remap_slice(src, m),
+                        tag: m.tag_base + tag,
+                        pad: *pad,
+                    });
+                    recvs.push(Half {
+                        part: pi,
+                        peer: *from,
+                        slice: remap_slice(dst, m),
+                        tag: m.tag_base + tag,
+                        pad: *pad,
+                    });
+                }
+                _ => {}
+            }
+        }
+        stats.sends_before += sends.len();
+
+        // All sends of the round are posted before its first (blocking)
+        // receive — the classic safe ordering for merged SPMD programs.
+        for group in group_by_peer(sends, coalesce) {
+            stats.sends_after += 1;
+            if group.len() == 1 {
+                let h = &group[0];
+                steps.push(Step::Send { to: h.peer, src: h.slice, tag: h.tag, pad: h.pad });
+            } else {
+                let total: usize = group.iter().map(|h| h.slice.len).sum();
+                let pad: usize = group.iter().map(|h| h.pad).sum();
+                let tag = group.iter().map(|h| h.tag).min().expect("non-empty group");
+                let peer = group[0].peer;
+                let buf = BufId::Scratch(scratch.len());
+                scratch.push(total);
+                let mut off = 0usize;
+                for h in &group {
+                    steps.push(Step::CopyLocal {
+                        src: h.slice,
+                        dst: Slice::at(buf, off, h.slice.len),
+                    });
+                    off += h.slice.len;
+                }
+                steps.push(Step::Send { to: peer, src: Slice::at(buf, 0, total), tag, pad });
+                stats.merged.push(MergedMsg {
+                    round: k,
+                    peer,
+                    send: true,
+                    parts: group.iter().map(|h| h.part).collect(),
+                    elems: total,
+                    pad,
+                    tag,
+                });
+            }
+        }
+        let mut scatters: Vec<Step> = Vec::new();
+        for group in group_by_peer(recvs, coalesce) {
+            if group.len() == 1 {
+                let h = &group[0];
+                steps.push(Step::Recv { from: h.peer, dst: h.slice, tag: h.tag, pad: h.pad });
+            } else {
+                let total: usize = group.iter().map(|h| h.slice.len).sum();
+                let pad: usize = group.iter().map(|h| h.pad).sum();
+                let tag = group.iter().map(|h| h.tag).min().expect("non-empty group");
+                let peer = group[0].peer;
+                let buf = BufId::Scratch(scratch.len());
+                scratch.push(total);
+                steps.push(Step::Recv { from: peer, dst: Slice::at(buf, 0, total), tag, pad });
+                let mut off = 0usize;
+                for h in &group {
+                    scatters.push(Step::CopyLocal {
+                        src: Slice::at(buf, off, h.slice.len),
+                        dst: h.slice,
+                    });
+                    off += h.slice.len;
+                }
+                stats.merged.push(MergedMsg {
+                    round: k,
+                    peer,
+                    send: false,
+                    parts: group.iter().map(|h| h.part).collect(),
+                    elems: total,
+                    pad,
+                    tag,
+                });
+            }
+        }
+        steps.extend(scatters);
+        rounds.push(Round { label: labels.join(" ⊕ "), steps });
+    }
+
+    let label = format!(
+        "fused[{}]",
+        parts.iter().map(|s| s.label.as_str()).collect::<Vec<_>>().join(" ⊕ ")
+    );
+    let sched = Schedule {
+        op: first.op,
+        p,
+        n: in_len,
+        elem_bytes,
+        label,
+        rounds,
+        scratch,
+        tags,
+        io: Some((in_len, out_len)),
+    };
+    Ok((sched, stats))
+}
+
+/// Replay the mailbox matching of a whole world of schedules (FIFO per
+/// `(src, dst, tag)`, like the transport) and verify that every receive
+/// matches a send of exactly the same wire size, that no receive
+/// deadlocks, and that no sent message is left unconsumed. Pure — this is
+/// how [`fuse_world`] decides whether peer-grouped coalescing agreed on
+/// both endpoints of every wire message.
+pub fn verify_world(scheds: &[Schedule]) -> Result<()> {
+    let p = scheds.len();
+    let steps: Vec<Vec<&Step>> = scheds.iter().map(|s| s.steps().collect()).collect();
+    let mut cursor = vec![0usize; p];
+    let mut half_done = vec![false; p];
+    let mut queues: HashMap<(usize, usize, u64), VecDeque<usize>> = HashMap::new();
+    let framing_err = |r: usize, from: usize, tag: u64, want: usize, got: usize| {
+        Error::Precondition(format!(
+            "fused schedules disagree on message framing: rank {r} expects {want} wire \
+             bytes from rank {from} (tag {tag}) but the sender posted {got}"
+        ))
+    };
+    loop {
+        let mut progress = false;
+        let mut done = 0usize;
+        for r in 0..p {
+            loop {
+                let Some(step) = steps[r].get(cursor[r]) else {
+                    break;
+                };
+                match step {
+                    Step::CopyLocal { .. } | Step::Reduce { .. } | Step::Rotate { .. } => {
+                        cursor[r] += 1;
+                        progress = true;
+                    }
+                    Step::Send { to, src, tag, pad } => {
+                        let bytes = scheds[r].wire_bytes(src.len, *pad);
+                        queues.entry((r, *to, *tag)).or_default().push_back(bytes);
+                        cursor[r] += 1;
+                        progress = true;
+                    }
+                    Step::Recv { from, dst, tag, pad } => {
+                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
+                            Some(got) => {
+                                let want = scheds[r].wire_bytes(dst.len, *pad);
+                                if got != want {
+                                    return Err(framing_err(r, *from, *tag, want, got));
+                                }
+                                cursor[r] += 1;
+                                progress = true;
+                            }
+                            None => break,
+                        }
+                    }
+                    Step::SendRecv { to, src, from, dst, tag, pad } => {
+                        if !half_done[r] {
+                            let bytes = scheds[r].wire_bytes(src.len, *pad);
+                            queues.entry((r, *to, *tag)).or_default().push_back(bytes);
+                            half_done[r] = true;
+                            progress = true;
+                        }
+                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
+                            Some(got) => {
+                                let want = scheds[r].wire_bytes(dst.len, *pad);
+                                if got != want {
+                                    return Err(framing_err(r, *from, *tag, want, got));
+                                }
+                                half_done[r] = false;
+                                cursor[r] += 1;
+                                progress = true;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+            if cursor[r] == steps[r].len() {
+                done += 1;
+            }
+        }
+        if done == p {
+            break;
+        }
+        if !progress {
+            return Err(Error::Precondition(
+                "fused schedule set deadlocks: a receive has no matching send".into(),
+            ));
+        }
+    }
+    if queues.values().any(|q| !q.is_empty()) {
+        return Err(Error::Precondition(
+            "fused schedule set leaks messages: a send has no matching receive".into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Build every rank's schedule for one constituent spec (dispatchers
+/// resolved: `model-tuned` scores candidates against `machine` exactly as
+/// its registry entry does).
+pub fn build_world(
+    spec: &FuseSpec,
+    view: &WorldView,
+    elem_bytes: usize,
+    machine: &MachineParams,
+) -> Result<Vec<Schedule>> {
+    if spec.algo.eq_ignore_ascii_case("model-tuned") {
+        let (_, scheds) = match spec.op {
+            OpKind::Allgather => model_tuned::pick_allgather(view, machine, spec.n, elem_bytes)?,
+            OpKind::Allreduce => model_tuned::pick_allreduce(view, machine, spec.n, elem_bytes)?,
+            OpKind::Alltoall => model_tuned::pick_alltoall(view, machine, spec.n, elem_bytes)?,
+        };
+        return Ok(scheds);
+    }
+    (0..view.p)
+        .map(|r| match spec.op {
+            OpKind::Allgather => {
+                let algo = super::Algorithm::parse_or_err(&spec.algo)?;
+                super::schedule::build_allgather(algo, view, r, spec.n, elem_bytes)
+            }
+            OpKind::Allreduce => {
+                super::schedule::build_allreduce(&spec.algo, view, r, spec.n, elem_bytes)
+            }
+            OpKind::Alltoall => {
+                super::schedule::build_alltoall(&spec.algo, view, r, spec.n, elem_bytes)
+            }
+        })
+        .collect()
+}
+
+/// The trivial composite schedule of a world with nothing to communicate.
+fn empty_fused(p: usize, elem_bytes: usize) -> Schedule {
+    Schedule {
+        op: OpKind::Allgather,
+        p,
+        n: 0,
+        elem_bytes,
+        label: "fused[]".to_string(),
+        rounds: Vec::new(),
+        scratch: Vec::new(),
+        tags: 0,
+        io: Some((0, 0)),
+    }
+}
+
+/// Fuse a whole world: build every rank's constituent schedules for the
+/// `n > 0` specs, fuse each rank with peer coalescing, and verify with
+/// [`verify_world`] that every coalesced message is framed identically on
+/// both endpoints; fall back to uncoalesced fusion when it is not.
+///
+/// Returns each rank's fused schedule plus each rank's [`FuseStats`]
+/// (constituent indices in the stats refer to the `n > 0` specs, in
+/// order). Deterministic — every rank of an SPMD world computes the same
+/// result, which is what keeps fused planning collective without
+/// communication.
+pub fn fuse_world(
+    specs: &[FuseSpec],
+    view: &WorldView,
+    elem_bytes: usize,
+    machine: &MachineParams,
+) -> Result<(Vec<Schedule>, Vec<FuseStats>)> {
+    let live: Vec<FuseSpec> = specs.iter().filter(|s| s.n > 0).cloned().collect();
+    if live.is_empty() {
+        let empty = empty_fused(view.p, elem_bytes);
+        return Ok((vec![empty; view.p], vec![FuseStats::default(); view.p]));
+    }
+    let mut worlds = Vec::with_capacity(live.len());
+    for spec in &live {
+        worlds.push(build_world(spec, view, elem_bytes, machine)?);
+    }
+    let mut fallback_err = None;
+    for coalesce in [true, false] {
+        let mut fused = Vec::with_capacity(view.p);
+        let mut stats = Vec::with_capacity(view.p);
+        for r in 0..view.p {
+            let parts: Vec<Schedule> = worlds.iter().map(|w| w[r].clone()).collect();
+            let (f, st) = fuse_with_stats(&parts, coalesce)?;
+            fused.push(f);
+            stats.push(st);
+        }
+        match verify_world(&fused) {
+            Ok(()) => return Ok((fused, stats)),
+            Err(e) => fallback_err = Some(e),
+        }
+    }
+    Err(fallback_err.unwrap_or_else(|| {
+        Error::Precondition("fused schedules could not be made consistent".into())
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::schedule::ScheduleBuilder;
+
+    /// A two-rank toy schedule: each rank sends one `n`-element message to
+    /// the other and receives one back (one exchange slot).
+    fn toy(rank: usize, n: usize) -> Schedule {
+        let mut sb = ScheduleBuilder::new("toy");
+        let tag = sb.tag();
+        let s = sb.scratch(n);
+        sb.sendrecv(1 - rank, Slice::input(0, n), 1 - rank, Slice::at(s, 0, n), tag, 0);
+        sb.copy(Slice::at(s, 0, n), Slice::output(0, n));
+        sb.finish(OpKind::Allreduce, 2, n, 8, "toy")
+    }
+
+    #[test]
+    fn fuse_namespaces_tags_scratch_and_io() {
+        let parts = vec![toy(0, 2), toy(0, 3)];
+        let (f, st) = fuse_with_stats(&parts, true).unwrap();
+        assert_eq!(f.tags, 2);
+        assert_eq!(f.io, Some((5, 5)));
+        assert_eq!(f.io_lens(), (5, 5));
+        // 2 original scratches + 1 coalesced send + 1 coalesced recv
+        assert_eq!(f.scratch.len(), 4);
+        f.validate().unwrap();
+        // both sends merged into one wire message to rank 1
+        assert_eq!(st.sends_before, 2);
+        assert_eq!(st.sends_after, 1);
+        assert_eq!(st.merged.len(), 2); // one send-side, one recv-side
+        assert!(st.merged.iter().any(|m| m.send && m.peer == 1 && m.elems == 5));
+    }
+
+    #[test]
+    fn fused_world_of_toys_verifies_and_uncoalesced_too() {
+        for coalesce in [true, false] {
+            let fused: Vec<Schedule> = (0..2)
+                .map(|r| {
+                    let parts = vec![toy(r, 2), toy(r, 3)];
+                    fuse_with_stats(&parts, coalesce).unwrap().0
+                })
+                .collect();
+            verify_world(&fused).unwrap();
+        }
+    }
+
+    #[test]
+    fn verify_world_rejects_mismatched_framing() {
+        // rank 0 fused (coalesced), rank 1 unfused: the merged 5-element
+        // message from rank 0 never matches rank 1's two receives.
+        let f0 = fuse_with_stats(&[toy(0, 2), toy(0, 3)], true).unwrap().0;
+        let f1 = fuse_with_stats(&[toy(1, 2), toy(1, 3)], false).unwrap().0;
+        let err = verify_world(&[f0, f1]).unwrap_err().to_string();
+        assert!(
+            err.contains("framing") || err.contains("deadlock") || err.contains("leak"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn shorter_plans_pad_out() {
+        // one-slot toy ⊕ comm-free local plan: fused has the toy's slots.
+        let mut sb = ScheduleBuilder::new("local");
+        sb.copy(Slice::input(0, 1), Slice::output(0, 1));
+        let local = sb.finish(OpKind::Allreduce, 2, 1, 8, "local");
+        let (f, st) = fuse_with_stats(&[toy(0, 2), local], true).unwrap();
+        assert_eq!(st.sends_before, 1);
+        assert_eq!(st.sends_after, 1);
+        assert!(st.merged.is_empty());
+        f.validate().unwrap();
+        assert_eq!(f.io_lens(), (3, 3));
+    }
+
+    #[test]
+    fn mismatched_worlds_are_rejected() {
+        let a = toy(0, 2); // p = 2
+        let mut sb = ScheduleBuilder::new("x");
+        sb.copy(Slice::input(0, 1), Slice::output(0, 1));
+        let b = sb.finish(OpKind::Allreduce, 3, 1, 8, "x"); // p = 3
+        assert!(fuse(&[a, b]).is_err());
+        assert!(fuse(&[]).is_err());
+    }
+
+    #[test]
+    fn fuse_world_handles_all_zero_specs() {
+        let topo = crate::topology::Topology::regions(2, 2);
+        let view = WorldView::world(&topo);
+        let specs = vec![FuseSpec::new(OpKind::Allgather, "bruck", 0)];
+        let (fused, stats) = fuse_world(&specs, &view, 8, &MachineParams::lassen()).unwrap();
+        assert_eq!(fused.len(), 4);
+        assert_eq!(stats.len(), 4);
+        assert_eq!(fused[0].num_steps(), 0);
+        assert_eq!(fused[0].io_lens(), (0, 0));
+    }
+
+    #[test]
+    fn serving_fusion_coalesces_nonlocal_exchanges() {
+        // The acceptance shape: loc-bruck allgather ⊕ loc-aware allreduce
+        // on the serving topology. Their non-local exchange slots align
+        // with identical peers, so coalescing must merge them: the fused
+        // world carries strictly fewer wire messages than its parts.
+        let topo = crate::topology::Topology::regions(2, 8);
+        let view = WorldView::world(&topo);
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "loc-bruck", 4),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+        ];
+        let m = MachineParams::lassen();
+        let (fused, stats) = fuse_world(&specs, &view, 8, &m).unwrap();
+        verify_world(&fused).unwrap();
+        let before: usize = stats.iter().map(|s| s.sends_before).sum();
+        let after: usize = stats.iter().map(|s| s.sends_after).sum();
+        assert!(after < before, "no coalescing happened: {after} !< {before}");
+        assert!(stats.iter().any(|s| !s.merged.is_empty()));
+    }
+}

@@ -45,6 +45,7 @@
 //! | [`dispatch`] | `system-default` (allgather + alltoall) | size/shape-based selection (Thakur et al.) | "system MPI" baseline |
 //! | [`model_tuned`] | `model-tuned` (all three ops) | cost-model-scored schedule selection | adaptive dispatcher |
 //! | [`schedule`] | — | the communication-schedule IR + the one generic executor ([`SchedPlan`]) | execution substrate |
+//! | [`fuse`] | — | schedule fusion: round-merged, message-coalesced multi-plan execution ([`FusedPlan`], [`plan_fused`]) | the paper's aggregation idea, lifted across collectives |
 //! | [`plan`] | — | op-generic plan framework: [`CollectivePlan`], per-op traits, [`OpRegistry`] | persistent API substrate |
 //! | [`primitives`] | — | gather / bcast / allgatherv (+ [`primitives::AllgathervPlan`]) | substrate |
 //! | [`allreduce`] | `recursive-doubling`, `loc-aware` | planned allreduce (sum) | §6 extension |
@@ -76,6 +77,7 @@ pub mod alltoall;
 pub mod bruck;
 pub mod dispatch;
 pub mod dissemination;
+pub mod fuse;
 pub mod grouping;
 pub mod hierarchical;
 pub mod loc_bruck;
@@ -87,10 +89,11 @@ pub mod recursive_doubling;
 pub mod ring;
 pub mod schedule;
 
+pub use fuse::FuseSpec;
 pub use plan::{
     AllgatherPlan, AllreduceAlgorithm, AllreducePlan, AllreduceRegistry, AlltoallAlgorithm,
-    AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm, OpKind,
-    OpRegistry, Registry, Shape, Summable,
+    AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, FusedPlan,
+    NamedAlgorithm, OpKind, OpRegistry, Registry, Shape, Summable,
 };
 pub use schedule::{BufId, Round, SchedPlan, Schedule, Slice, Step};
 
@@ -248,6 +251,14 @@ pub fn plan_alltoall<T: Pod>(
     shape: Shape,
 ) -> Result<Box<dyn AlltoallPlan<T>>> {
     AlltoallRegistry::standard().plan(name, comm, shape)
+}
+
+/// Collectively build a [`FusedPlan`] executing all `specs` — possibly of
+/// different operations and algorithms — as one round-merged,
+/// message-coalesced schedule (see [`fuse`]). All ranks must call this
+/// with identical specs; constituent shape preconditions surface here.
+pub fn plan_fused<T: Summable>(comm: &Comm, specs: &[FuseSpec]) -> Result<FusedPlan<T>> {
+    FusedPlan::plan(comm, specs)
 }
 
 /// The expected allgather result for verification: every rank's canonical

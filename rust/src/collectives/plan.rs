@@ -61,7 +61,10 @@
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
+use crate::model::MachineParams;
 
+use super::fuse::{fuse_world, FuseSpec};
+use super::schedule::{add_assign, execute_schedule, Schedule, WorldView};
 use super::{allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
 use super::{loc_bruck, model_tuned, multilane, recursive_doubling, ring};
 
@@ -595,6 +598,142 @@ impl<T: Summable> Default for AllreduceRegistry<T> {
 impl<T: Pod> Default for AlltoallRegistry<T> {
     fn default() -> Self {
         AlltoallRegistry::standard()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fused multi-plan execution
+// ---------------------------------------------------------------------------
+
+/// IO geometry of one constituent inside a [`FusedPlan`].
+struct FusedPart {
+    in_off: usize,
+    in_len: usize,
+    out_off: usize,
+    out_len: usize,
+}
+
+/// A persistent plan that executes **several** collectives — possibly of
+/// different operations and algorithms — as **one** round-merged,
+/// message-coalesced [`Schedule`] through the same generic interpreter
+/// that runs every single-op plan ([`super::schedule::SchedPlan`]'s
+/// executor).
+///
+/// Built collectively by [`FusedPlan::plan`] (or the front door
+/// [`super::plan_fused`]) from [`FuseSpec`]s; the fusion itself is
+/// [`super::fuse::fuse_world`]. Like every plan, everything is owned up
+/// front: retained communicator, one composite tag block, composite
+/// input/output staging and scratch — `execute` does pure communication
+/// plus the staging copies, with zero allocation and no tag consumption.
+///
+/// Constituents with `n == 0` take part with empty buffers and no
+/// communication (the uniform zero-length contract). `T` must be
+/// [`Summable`] because a fused schedule may contain the reduction steps
+/// of an allreduce constituent.
+pub struct FusedPlan<T: Summable> {
+    core: PlanCore,
+    sched: Schedule,
+    parts: Vec<FusedPart>,
+    /// Composite staging buffers (constituent windows, in spec order).
+    input: Vec<T>,
+    output: Vec<T>,
+    scratch: Vec<Vec<T>>,
+    wire: Vec<u8>,
+}
+
+impl<T: Summable> FusedPlan<T> {
+    /// Collectively build a fused plan for `specs` over `comm`. All ranks
+    /// must call this with identical specs, like all plan construction.
+    /// Constituent shape preconditions surface here, not at execute.
+    pub fn plan(comm: &Comm, specs: &[FuseSpec]) -> Result<FusedPlan<T>> {
+        let elem_bytes = std::mem::size_of::<T>();
+        let view = WorldView::from_comm(comm);
+        let machine = comm.machine().cloned().unwrap_or_else(MachineParams::lassen);
+        let (mut fused, _) = fuse_world(specs, &view, elem_bytes, &machine)?;
+        let sched = fused.swap_remove(comm.rank());
+        sched.validate()?;
+        let p = comm.size();
+        let mut parts = Vec::with_capacity(specs.len());
+        let (mut in_off, mut out_off) = (0usize, 0usize);
+        for s in specs {
+            let (il, ol) = match s.op {
+                OpKind::Allgather => (s.n, s.n * p),
+                OpKind::Allreduce => (s.n, s.n),
+                OpKind::Alltoall => (s.n * p, s.n * p),
+            };
+            parts.push(FusedPart { in_off, in_len: il, out_off, out_len: ol });
+            in_off += il;
+            out_off += ol;
+        }
+        debug_assert_eq!(sched.io_lens(), (in_off, out_off));
+        let core = PlanCore::new(comm, sched.n, sched.tags);
+        let scratch = sched.scratch.iter().map(|&len| vec![T::default(); len]).collect();
+        let wire = vec![0u8; sched.max_padded_wire()];
+        Ok(FusedPlan {
+            core,
+            sched,
+            parts,
+            input: vec![T::default(); in_off],
+            output: vec![T::default(); out_off],
+            scratch,
+            wire,
+        })
+    }
+
+    /// Number of constituent collectives (including `n == 0` no-ops).
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Execute every constituent as one fused schedule. `inputs[i]` /
+    /// `outputs[i]` follow constituent `i`'s per-op buffer contract
+    /// (see the [module docs](self)); both slices must be given for every
+    /// constituent, in spec order.
+    pub fn execute(&mut self, inputs: &[&[T]], outputs: &mut [&mut [T]]) -> Result<()> {
+        if inputs.len() != self.parts.len() {
+            return Err(Error::SizeMismatch { expected: self.parts.len(), got: inputs.len() });
+        }
+        if outputs.len() != self.parts.len() {
+            return Err(Error::SizeMismatch { expected: self.parts.len(), got: outputs.len() });
+        }
+        for (i, part) in self.parts.iter().enumerate() {
+            if inputs[i].len() != part.in_len {
+                return Err(Error::SizeMismatch { expected: part.in_len, got: inputs[i].len() });
+            }
+            if outputs[i].len() != part.out_len {
+                return Err(Error::SizeMismatch {
+                    expected: part.out_len,
+                    got: outputs[i].len(),
+                });
+            }
+            self.input[part.in_off..part.in_off + part.in_len].copy_from_slice(inputs[i]);
+        }
+        {
+            let FusedPlan { core, sched, input, output, scratch, wire, .. } = self;
+            execute_schedule(core, sched, input, output, scratch, wire, Some(add_assign::<T>))?;
+        }
+        for (i, part) in self.parts.iter().enumerate() {
+            outputs[i].copy_from_slice(&self.output[part.out_off..part.out_off + part.out_len]);
+        }
+        Ok(())
+    }
+}
+
+impl<T: Summable> CollectivePlan for FusedPlan<T> {
+    fn algorithm(&self) -> &'static str {
+        "fused"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.core.p
+    }
+
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
     }
 }
 

@@ -155,6 +155,12 @@ pub struct Schedule {
     /// rank of the communicator — tag allocation is part of the SPMD
     /// builder contract).
     pub tags: u64,
+    /// Explicit `(input, output)` element lengths, overriding the
+    /// single-operation shapes derived from `op`/`n`. `None` for every
+    /// builder-produced schedule; `Some` for composite schedules whose
+    /// buffers concatenate several constituents' (see
+    /// [`super::fuse::fuse`]).
+    pub io: Option<(usize, usize)>,
 }
 
 impl Schedule {
@@ -175,7 +181,7 @@ impl Schedule {
 
     /// Largest padded message (bytes); sizes the reusable wire buffer.
     /// A `SendRecv` counts both halves — they may differ in length.
-    fn max_padded_wire(&self) -> usize {
+    pub(crate) fn max_padded_wire(&self) -> usize {
         let mut max = 0usize;
         for s in self.steps() {
             let (len, pad) = match s {
@@ -191,8 +197,12 @@ impl Schedule {
         max
     }
 
-    /// Expected input/output lengths for this schedule's operation.
+    /// Expected input/output lengths: the [`Schedule::io`] override when
+    /// present (composite schedules), else this schedule's operation shape.
     pub fn io_lens(&self) -> (usize, usize) {
+        if let Some(io) = self.io {
+            return io;
+        }
         match self.op {
             OpKind::Allgather => (self.n, self.n * self.p),
             OpKind::Allreduce => (self.n, self.n),
@@ -427,6 +437,7 @@ impl ScheduleBuilder {
             rounds: self.rounds,
             scratch: self.scratch,
             tags: self.tags,
+            io: None,
         }
     }
 }
@@ -777,7 +788,9 @@ fn recv_slice<T: Pod>(
 /// The one generic executor: interpret `sched` over the plan's retained
 /// communicator. `reduce` is `Some` only for reducing operations; a
 /// schedule containing [`Step::Reduce`] fails cleanly without one.
-fn execute_schedule<T: Pod>(
+/// Shared by [`SchedPlan`] and the fused executor
+/// ([`super::plan::FusedPlan`]).
+pub(crate) fn execute_schedule<T: Pod>(
     core: &PlanCore,
     sched: &Schedule,
     input: &[T],

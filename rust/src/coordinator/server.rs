@@ -1,10 +1,19 @@
 //! The serving loop: batched tensor-parallel inference over the mini-MPI
-//! with PJRT compute and a selectable allgather algorithm.
+//! with PJRT compute and a **fused** collective hot path.
+//!
+//! Every chunk of `fuse_batch` requests executes ONE fused schedule
+//! ([`crate::collectives::FusedPlan`]): the chunk's allgathers are
+//! round-merged and message-coalesced with each other and with the
+//! consensus allreduce, so the coordinator pays one wire message where
+//! sequential execution pays one per collective. The consensus probes are
+//! pipelined one chunk behind (a probe depends on the projected output,
+//! which depends on the same request's allgather), with a drain allreduce
+//! after the final chunk so every request is still verified.
 
 use std::path::PathBuf;
 use std::time::Instant;
 
-use crate::collectives::{self, Algorithm, Shape};
+use crate::collectives::{self, Algorithm, FuseSpec, OpKind, Shape};
 use crate::comm::{Comm, CommWorld, Timing};
 use crate::coordinator::metrics::{RequestTiming, ServeMetrics};
 use crate::coordinator::params::{max_abs_diff, ModelParams};
@@ -32,12 +41,18 @@ pub struct ServeConfig {
     /// consumes the allgather's rank-order buffer directly, skipping the
     /// `h_full` assembly pass (perf pass, L2/L1 fusion).
     pub fused: bool,
-    /// Cross-worker output consensus: a persistent planned allreduce (two
-    /// f32 probes per request) sums an output fingerprint across workers;
-    /// any worker whose projection diverged breaks the `p·x` identity and
-    /// fails verification. Skipped when the topology admits no allreduce
-    /// plan (non-power-of-two, unaligned worker counts).
+    /// Cross-worker output consensus: a planned allreduce (two f32 probes
+    /// per request, riding the fused schedule one chunk behind) sums an
+    /// output fingerprint across workers; any worker whose projection
+    /// diverged breaks the `p·x` identity and fails verification. Skipped
+    /// when the topology admits no allreduce plan (unsupported shape /
+    /// topology preconditions); genuine plan failures propagate.
     pub consensus: bool,
+    /// Request micro-batch size `K`: the serving loop processes requests
+    /// in chunks of `K`, executing the chunk's `K` allgathers (plus the
+    /// consensus allreduce) as one fused, coalesced schedule. `1` fuses
+    /// only the allgather with the consensus allreduce.
+    pub fuse_batch: usize,
 }
 
 impl Default for ServeConfig {
@@ -53,6 +68,7 @@ impl Default for ServeConfig {
             check: true,
             fused: false,
             consensus: true,
+            fuse_batch: 1,
         }
     }
 }
@@ -96,8 +112,11 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let start = Instant::now();
     let fused = cfg.fused;
     let consensus = cfg.consensus;
+    let fuse_batch = cfg.fuse_batch.max(1);
     let run = CommWorld::run(&topo, Timing::Wallclock, move |c| -> Result<WorkerOut> {
-        worker_loop(c, &dir, algo, total_reqs, cfg.warmup, check, fused, consensus)
+        worker_loop(
+            c, &dir, algo, total_reqs, cfg.warmup, check, fused, consensus, fuse_batch,
+        )
     });
     let window = start.elapsed().as_secs_f64();
 
@@ -136,6 +155,63 @@ struct WorkerOut {
     sample: Vec<f32>,
 }
 
+/// Compare a summed fingerprint against `p × mine` (float reassociation
+/// slack allowed); clears `ok` on divergence.
+fn check_probes(sum: &[f32], mine: &[f32], pf: f32, ok: &mut bool) {
+    for (got, m) in sum.iter().zip(mine) {
+        if (got - pf * m).abs() > 1e-3 * (1.0 + (pf * m).abs()) {
+            *ok = false;
+        }
+    }
+}
+
+/// Plan the chunk's fused schedule: `k` allgathers (one per request of the
+/// chunk) plus, when consensus is requested and the topology admits it,
+/// one `2k`-probe consensus allreduce. Returns the plan and whether the
+/// consensus constituent is on board.
+///
+/// Only failures of the consensus constituent *itself* (its schedule
+/// builder rejecting the shape / topology) downgrade to a consensus-free
+/// plan — genuine plan failures propagate. (The old serving loop
+/// swallowed every consensus planning error with `.ok()`.)
+fn plan_serving_fused(
+    c: &Comm,
+    algo: Algorithm,
+    n_gather: usize,
+    k: usize,
+    consensus: bool,
+) -> Result<(collectives::FusedPlan<f32>, bool)> {
+    let mut specs: Vec<FuseSpec> =
+        (0..k).map(|_| FuseSpec::new(OpKind::Allgather, algo.name(), n_gather)).collect();
+    if consensus {
+        specs.push(FuseSpec::new(OpKind::Allreduce, "loc-aware", 2 * k));
+        match collectives::plan_fused::<f32>(c, &specs) {
+            Ok(p) => return Ok((p, true)),
+            Err(e) => {
+                specs.pop();
+                // Downgrade to consensus-free serving ONLY when the
+                // consensus constituent itself rejects this topology /
+                // shape (its builder fails, e.g. non-power-of-two worker
+                // groups). Every other failure — an allgather problem, a
+                // fusion-consistency failure — propagates. (The old loop
+                // swallowed all of these with `.ok()`.)
+                let view = collectives::schedule::WorldView::from_comm(c);
+                let probe = collectives::schedule::build_allreduce(
+                    "loc-aware",
+                    &view,
+                    c.rank(),
+                    2 * k,
+                    std::mem::size_of::<f32>(),
+                );
+                if probe.is_ok() {
+                    return Err(e);
+                }
+            }
+        }
+    }
+    Ok((collectives::plan_fused::<f32>(c, &specs)?, false))
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     c: &mut Comm,
@@ -146,6 +222,7 @@ fn worker_loop(
     check: bool,
     fused: bool,
     consensus: bool,
+    fuse_batch: usize,
 ) -> Result<WorkerOut> {
     // Each worker owns a private PJRT engine (the client is !Send).
     let engine = Engine::load(artifact_dir)?;
@@ -161,106 +238,150 @@ fn worker_loop(
         None
     };
 
-    // The allgather is planned ONCE per worker: every request moves the
+    // The fused plan is built ONCE per worker: every request moves the
     // same (batch, hidden_shard) activation shape, so the serving loop is
-    // the persistent-plan use case — setup (groups, sub-communicators,
-    // schedules, tags, scratch) amortizes across all requests and the hot
-    // path executes into a reused caller-owned buffer.
-    let mut ag_plan = collectives::plan_allgather::<f32>(algo, c, Shape::elems(b * hs))?;
-    let mut gathered = vec![0f32; b * hs * c.size()];
+    // the persistent-plan use case — all setup (schedule fusion, message
+    // coalescing, tags, scratch) amortizes across all requests and the
+    // hot path executes one coalesced schedule per chunk into reused
+    // caller-owned buffers.
+    let k = fuse_batch.max(1);
+    let (mut fplan, with_consensus) = plan_serving_fused(c, algo, b * hs, k, consensus)?;
 
-    // The consensus allreduce is also planned ONCE: two f32 probes per
-    // request. Topologies without a valid allreduce plan (non-power-of-two
-    // unaligned worker counts) skip consensus rather than fail serving —
-    // every worker sees the same topology, so the skip is collective.
-    let mut sum_plan = if consensus {
-        collectives::plan_allreduce::<f32>("loc-aware", c, Shape::elems(2)).ok()
+    // The drain allreduce verifies the FINAL chunk's probes after the
+    // loop (the fused consensus runs one chunk behind).
+    let mut drain_plan = if with_consensus {
+        Some(collectives::plan_allreduce::<f32>("loc-aware", c, Shape::elems(2 * k))?)
     } else {
         None
     };
-    let mut probe_sum = [0f32; 2];
+
+    let mut gathered: Vec<Vec<f32>> = (0..k).map(|_| vec![0f32; b * hs * c.size()]).collect();
+    let mut probe_sum = vec![0f32; 2 * k];
+    // This worker's own probes of the previous chunk (what the in-flight
+    // consensus sum is verified against).
+    let mut probes_prev: Option<Vec<f32>> = None;
 
     let mut timings = Vec::with_capacity(total_reqs.saturating_sub(warmup));
     let mut verified = true;
     let mut consensus_ok = true;
     let mut max_err = 0f32;
     let mut sample = Vec::new();
+    let pf = c.size() as f32;
 
-    for req in 0..total_reqs {
-        let t_start = Instant::now();
-        // Leader generates the batch and broadcasts it (request ingress).
-        let x = if c.rank() == 0 {
-            Some(params.example_batch(req as f32 + 1.0))
-        } else {
-            None
-        };
-        let x = collectives::primitives::bcast(c, x, 0)?;
+    // Chunked request loop. The final chunk is padded with zero batches so
+    // every fused execution is a full collective; padded requests are
+    // computed but never recorded or checked.
+    let chunks = total_reqs.div_ceil(k);
+    for chunk in 0..chunks {
+        let t_chunk = Instant::now();
+        let mut h_parts: Vec<Vec<f32>> = Vec::with_capacity(k);
+        let mut t_partials = vec![0f64; k];
+        for (j, t_partial) in t_partials.iter_mut().enumerate() {
+            let req = chunk * k + j;
+            // Leader generates the batch and broadcasts it (request ingress).
+            let x = if c.rank() == 0 {
+                let seed = if req < total_reqs { req as f32 + 1.0 } else { 0.0 };
+                Some(params.example_batch(seed))
+            } else {
+                None
+            };
+            let x = collectives::primitives::bcast(c, x, 0)?;
 
-        // Phase 1: PJRT partial forward (Pallas kernel inside).
-        let t0 = Instant::now();
-        let h_part = partial.run_f32(&[&x, &w1s])?;
-        let t_partial = t0.elapsed().as_secs_f64();
+            // Phase 1: PJRT partial forward (Pallas kernel inside).
+            let t0 = Instant::now();
+            let h_part = partial.run_f32(&[&x, &w1s])?;
+            *t_partial = t0.elapsed().as_secs_f64();
+            h_parts.push(h_part);
+        }
 
-        // Phase 2: the allgather under study — persistent plan, zero setup.
+        // Phase 2: ONE fused execution — the chunk's k allgathers plus the
+        // previous chunk's consensus sum, coalesced into shared wire
+        // messages. The first chunk sums zero probes (nothing to verify).
+        let probes_in: Vec<f32> = probes_prev.clone().unwrap_or_else(|| vec![0f32; 2 * k]);
         let t1 = Instant::now();
-        ag_plan.execute(&h_part, &mut gathered)?;
+        {
+            let mut in_refs: Vec<&[f32]> = h_parts.iter().map(|v| v.as_slice()).collect();
+            let mut out_refs: Vec<&mut [f32]> =
+                gathered.iter_mut().map(|v| v.as_mut_slice()).collect();
+            if with_consensus {
+                in_refs.push(&probes_in);
+                out_refs.push(&mut probe_sum);
+            }
+            fplan.execute(&in_refs, &mut out_refs)?;
+        }
         let t_allgather = t1.elapsed().as_secs_f64();
 
-        // Phase 3: the final projection. Fused path: the gathered buffer
-        // feeds the gathered_matmul kernel directly; unfused path:
-        // assemble (batch, d_hidden) row-major first.
-        let t2 = Instant::now();
-        let y = if let Some(ff) = fused_final {
-            ff.run_f32(&[&gathered, &params.w2])?
-        } else {
-            let mut h_full = vec![0f32; b * h];
-            for i in 0..c.size() {
-                let blk = &gathered[i * b * hs..(i + 1) * b * hs];
-                for row in 0..b {
-                    let dst = row * h + i * hs;
-                    h_full[dst..dst + hs].copy_from_slice(&blk[row * hs..(row + 1) * hs]);
-                }
+        // Verify the in-flight consensus sum against last chunk's probes.
+        if with_consensus {
+            if let Some(prev) = probes_prev.take() {
+                check_probes(&probe_sum, &prev, pf, &mut consensus_ok);
             }
-            final_.run_f32(&[&h_full, &params.w2])?
-        };
-        let t_final = t2.elapsed().as_secs_f64();
+        }
 
-        // Cross-worker consensus: every worker computed the full `y`, so
-        // the summed fingerprint must equal p × our own (within float
-        // reassociation slack). Collective — all workers execute it.
-        if let Some(sp) = sum_plan.as_mut() {
-            let probe = [y[0], y[y.len() - 1]];
-            sp.execute(&probe, &mut probe_sum)?;
-            let pf = c.size() as f32;
-            for (got, mine) in probe_sum.iter().zip(probe) {
-                if (got - pf * mine).abs() > 1e-3 * (1.0 + (pf * mine).abs()) {
-                    consensus_ok = false;
+        // Phase 3: final projections, one per request of the chunk.
+        let mut probes_now = vec![0f32; 2 * k];
+        let mut t_finals = vec![0f64; k];
+        for j in 0..k {
+            let req = chunk * k + j;
+            let t2 = Instant::now();
+            let y = if let Some(ff) = &fused_final {
+                ff.run_f32(&[&gathered[j], &params.w2])?
+            } else {
+                let mut h_full = vec![0f32; b * h];
+                for i in 0..c.size() {
+                    let blk = &gathered[j][i * b * hs..(i + 1) * b * hs];
+                    for row in 0..b {
+                        let dst = row * h + i * hs;
+                        h_full[dst..dst + hs].copy_from_slice(&blk[row * hs..(row + 1) * hs]);
+                    }
+                }
+                final_.run_f32(&[&h_full, &params.w2])?
+            };
+            t_finals[j] = t2.elapsed().as_secs_f64();
+            probes_now[2 * j] = y[0];
+            probes_now[2 * j + 1] = y[y.len() - 1];
+
+            if c.rank() == 0 && req < total_reqs {
+                if check {
+                    let xr = params.example_batch(req as f32 + 1.0);
+                    let want = params.reference_forward(&xr);
+                    let err = max_abs_diff(&y, &want);
+                    max_err = max_err.max(err);
+                    if err > 1e-3 {
+                        verified = false;
+                    }
+                }
+                if req + 1 == total_reqs {
+                    sample = y.iter().take(8).copied().collect();
                 }
             }
+        }
+        if with_consensus {
+            probes_prev = Some(probes_now);
         }
 
         if c.rank() == 0 {
-            if req >= warmup {
-                timings.push(RequestTiming {
-                    partial: t_partial,
-                    allgather: t_allgather,
-                    final_: t_final,
-                    total: t_start.elapsed().as_secs_f64(),
-                });
-            }
-            if check {
-                let want = params.reference_forward(&x);
-                let err = max_abs_diff(&y, &want);
-                max_err = max_err.max(err);
-                if err > 1e-3 {
-                    verified = false;
+            let chunk_total = t_chunk.elapsed().as_secs_f64();
+            for j in 0..k {
+                let req = chunk * k + j;
+                if req >= warmup && req < total_reqs {
+                    timings.push(RequestTiming {
+                        partial: t_partials[j],
+                        allgather: t_allgather / k as f64,
+                        final_: t_finals[j],
+                        total: chunk_total / k as f64,
+                    });
                 }
-            }
-            if req + 1 == total_reqs {
-                sample = y.iter().take(8).copied().collect();
             }
         }
     }
+
+    // Drain: the final chunk's probes have not been summed yet.
+    if let (Some(dp), Some(prev)) = (drain_plan.as_mut(), probes_prev.take()) {
+        dp.execute(&prev, &mut probe_sum)?;
+        check_probes(&probe_sum, &prev, pf, &mut consensus_ok);
+    }
+
     Ok(WorkerOut { timings, verified, consensus_ok, max_err, sample })
 }
 

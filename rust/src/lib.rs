@@ -27,7 +27,9 @@
 //!   setup and zero allocation, dispatched through pluggable name →
 //!   algorithm registries ([`collectives::Registry`],
 //!   [`collectives::AllreduceRegistry`], [`collectives::AlltoallRegistry`])
-//!   sharing one [`collectives::CollectivePlan`] substrate.
+//!   sharing one [`collectives::CollectivePlan`] substrate — and
+//!   concurrent plans fuse into one round-merged, message-coalesced
+//!   schedule ([`collectives::fuse`], [`collectives::FusedPlan`]).
 //! * [`sim`] — the sweep/measurement engine that runs any algorithm at a
 //!   given (p, ppn, data size) and reports virtual time, wall time and a
 //!   locality-classified message trace.
@@ -101,6 +103,39 @@
 //! // elementwise sum over the 16 ranks: [0+1+..+15, 16]
 //! assert!(run.results.iter().all(|r| r == &vec![120, 16]));
 //! ```
+//!
+//! ## Fused multi-plan execution
+//!
+//! Concurrent collectives — the serving loop's allgather and consensus
+//! allreduce, or `K` micro-batched allgathers — fuse into **one**
+//! round-merged, message-coalesced schedule
+//! ([`collectives::plan_fused`], [`collectives::fuse`]): same-round sends
+//! to the same peer share a single wire message, paying one postal `α`
+//! where sequential execution pays several.
+//!
+//! ```
+//! use locag::collectives::{FuseSpec, OpKind};
+//! use locag::prelude::*;
+//!
+//! let topo = Topology::regions(4, 4);
+//! let specs = vec![
+//!     FuseSpec::new(OpKind::Allgather, "loc-bruck", 1),
+//!     FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+//! ];
+//! let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+//!     let mut plan = locag::collectives::plan_fused::<u64>(c, &specs).unwrap();
+//!     let mut gathered = vec![0u64; 16];
+//!     let mut sum = vec![0u64; 2];
+//!     plan.execute(
+//!         &[&[c.rank() as u64], &[1, c.rank() as u64]],
+//!         &mut [&mut gathered, &mut sum],
+//!     )
+//!     .unwrap();
+//!     (gathered[15], sum[0])
+//! });
+//! // both collectives completed through the one fused schedule
+//! assert!(run.results.iter().all(|&(g, s)| g == 15 && s == 16));
+//! ```
 
 pub mod bench_harness;
 pub mod cli;
@@ -120,12 +155,15 @@ pub mod util;
 pub mod prelude {
     pub use crate::collectives::{
         Algorithm, AllgatherPlan, AllreducePlan, AllreduceRegistry, AlltoallPlan,
-        AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, NamedAlgorithm, OpKind, Registry,
-        Shape,
+        AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, FuseSpec, FusedPlan,
+        NamedAlgorithm, OpKind, Registry, Shape,
     };
     pub use crate::comm::{Comm, CommWorld, Timing};
     pub use crate::model::{MachineParams, Protocol};
-    pub use crate::sim::{run_allgather, run_allreduce, run_alltoall, AllgatherReport, OpReport};
+    pub use crate::sim::{
+        run_allgather, run_allreduce, run_alltoall, run_fused, AllgatherReport, FusedReport,
+        OpReport,
+    };
     pub use crate::topology::{Locality, Placement, Topology};
     pub use crate::trace::TraceSummary;
 }

@@ -190,6 +190,57 @@ pub fn evaluate(
     Ok(CostReport { predicted: predict(scheds, topo, world_of, machine)?, per_rank })
 }
 
+/// Fused-vs-sequential evaluation of one fusion: the fused world's cost
+/// next to the cost of executing the constituent plans back to back.
+/// Sequential cost follows the barrier-separated methodology of the
+/// repeated runners: predicted completions add, per-rank traffic merges.
+#[derive(Debug, Clone)]
+pub struct FusionReport {
+    /// Evaluation of the fused schedules.
+    pub fused: CostReport,
+    /// Evaluation of the constituents executed sequentially.
+    pub sequential: CostReport,
+}
+
+impl FusionReport {
+    /// Predicted completion-time saving of fusion, seconds (negative if
+    /// fusion is predicted slower).
+    pub fn predicted_saving(&self) -> f64 {
+        self.sequential.predicted - self.fused.predicted
+    }
+
+    /// Non-local wire messages removed by coalescing, summed over ranks.
+    pub fn nonlocal_msgs_saved(&self) -> i64 {
+        let seq: u64 = self.sequential.per_rank.iter().map(|t| t.nonlocal_msgs).sum();
+        let fus: u64 = self.fused.per_rank.iter().map(|t| t.nonlocal_msgs).sum();
+        seq as i64 - fus as i64
+    }
+}
+
+/// Evaluate fused schedules against their constituents executed
+/// sequentially. `constituent_worlds[k]` holds all ranks' schedules of
+/// constituent `k` (what [`crate::collectives::fuse::build_world`]
+/// returns).
+pub fn evaluate_fusion(
+    fused: &[Schedule],
+    constituent_worlds: &[Vec<Schedule>],
+    topo: &Topology,
+    world_of: &[usize],
+    machine: &MachineParams,
+) -> Result<FusionReport> {
+    let fused_rep = evaluate(fused, topo, world_of, machine)?;
+    let mut per_rank = vec![RankTrace::default(); fused.len()];
+    let mut predicted = 0.0;
+    for world in constituent_worlds {
+        let rep = evaluate(world, topo, world_of, machine)?;
+        predicted += rep.predicted;
+        for (acc, t) in per_rank.iter_mut().zip(&rep.per_rank) {
+            acc.merge(t);
+        }
+    }
+    Ok(FusionReport { fused: fused_rep, sequential: CostReport { predicted, per_rank } })
+}
+
 /// Build every rank's schedule for one allgather algorithm — the
 /// whole-world view the dispatcher and `locag explain` score.
 pub fn allgather_schedules(
@@ -272,6 +323,29 @@ mod tests {
         let idle = sb.finish(OpKind::Allgather, 2, 1, 8, "idle");
         let err = predict(&[bad, idle], &topo, &world, &MachineParams::lassen());
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn fusion_evaluation_reports_savings() {
+        use crate::collectives::fuse::{build_world, fuse_world, FuseSpec};
+        use crate::collectives::schedule::WorldView;
+        use crate::collectives::OpKind;
+        let topo = Topology::regions(2, 8);
+        let view = WorldView::world(&topo);
+        let m = MachineParams::lassen();
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "loc-bruck", 4),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+        ];
+        let (fused, _) = fuse_world(&specs, &view, 8, &m).unwrap();
+        let worlds: Vec<Vec<Schedule>> =
+            specs.iter().map(|s| build_world(s, &view, 8, &m).unwrap()).collect();
+        let rep = evaluate_fusion(&fused, &worlds, &topo, &view.world_of, &m).unwrap();
+        // coalescing merges the aligned non-local exchanges: strictly
+        // fewer non-local messages and a predicted-time saving
+        assert!(rep.nonlocal_msgs_saved() > 0, "{}", rep.nonlocal_msgs_saved());
+        assert!(rep.fused.max_nonlocal_msgs() < rep.sequential.max_nonlocal_msgs());
+        assert!(rep.predicted_saving() > 0.0, "{}", rep.predicted_saving());
     }
 
     #[test]

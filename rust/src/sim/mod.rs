@@ -517,6 +517,201 @@ pub fn run_alltoall_repeated(
     })
 }
 
+/// Result of one fused-vs-sequential comparison run
+/// ([`run_fused`]): the same constituents executed once as a fused
+/// schedule and once back to back, with modeled times, IR predictions and
+/// traffic for both sides.
+#[derive(Debug, Clone)]
+pub struct FusedReport {
+    /// Constituent labels (`op/algo@n`).
+    pub specs: Vec<String>,
+    pub p: usize,
+    /// Modeled completion of the single fused execution.
+    pub fused_vtime: f64,
+    /// [`cost::predict`] over the fused schedules — equals
+    /// [`FusedReport::fused_vtime`] exactly (same invariant every
+    /// single-plan schedule holds).
+    pub fused_predicted: f64,
+    /// Modeled completion of the barrier-separated sequential executions.
+    pub seq_vtime: f64,
+    /// Sum of the constituents' predicted completions.
+    pub seq_predicted: f64,
+    /// Traffic of the fused execution.
+    pub fused_trace: TraceSummary,
+    /// Accumulated traffic of the sequential executions.
+    pub seq_trace: TraceSummary,
+    /// True if both sides produced the expected result of every
+    /// constituent on every rank.
+    pub verified: bool,
+    pub errors: Vec<String>,
+}
+
+/// Canonical input of one fused constituent (u64 payloads, like the
+/// repeated runners).
+fn fused_input(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u64> {
+    match spec.op {
+        OpKind::Allgather => collectives::canonical_contribution(rank, spec.n),
+        OpKind::Allreduce => reduce_contribution(rank, spec.n),
+        OpKind::Alltoall => a2a_send(rank, p, spec.n),
+    }
+}
+
+/// Expected result of one fused constituent on `rank`.
+fn fused_expected(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u64> {
+    match spec.op {
+        OpKind::Allgather => collectives::expected_result(p, spec.n),
+        OpKind::Allreduce => reduce_expected(p, spec.n),
+        OpKind::Alltoall => a2a_expected(rank, p, spec.n),
+    }
+}
+
+/// Execute `specs` once as a [`collectives::FusedPlan`] and once
+/// sequentially (barrier-separated, plan-once per constituent), both
+/// under the virtual-clock transport, and report modeled times,
+/// IR-predicted times and traffic for both sides.
+pub fn run_fused(
+    specs: &[collectives::FuseSpec],
+    topo: &Topology,
+    machine: &MachineParams,
+) -> FusedReport {
+    use crate::collectives::{AllreduceRegistry, AlltoallRegistry, CollectivePlan, Registry};
+    let p = topo.size();
+
+    // --- fused world: one plan, one execution -----------------------------
+    let fused_run = CommWorld::run(
+        topo,
+        Timing::Virtual(machine.clone()),
+        |c| -> crate::error::Result<((f64, f64), Option<Schedule>)> {
+            let mut plan = collectives::plan_fused::<u64>(c, specs)?;
+            let sched = plan.schedule().cloned();
+            let ins: Vec<Vec<u64>> = specs.iter().map(|s| fused_input(s, c.rank(), p)).collect();
+            let want: Vec<Vec<u64>> =
+                specs.iter().map(|s| fused_expected(s, c.rank(), p)).collect();
+            let mut outs: Vec<Vec<u64>> = want.iter().map(|w| vec![0u64; w.len()]).collect();
+            c.barrier()?;
+            let t0 = c.clock();
+            {
+                let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+                let mut out_refs: Vec<&mut [u64]> =
+                    outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                plan.execute(&in_refs, &mut out_refs)?;
+            }
+            let span = (t0, c.clock());
+            if outs != want {
+                return Err(Error::Precondition("fused execution produced wrong data".into()));
+            }
+            Ok((span, sched))
+        },
+    );
+
+    // --- sequential world: one plan per constituent, back to back ---------
+    let seq_run = CommWorld::run(
+        topo,
+        Timing::Virtual(machine.clone()),
+        |c| -> crate::error::Result<Vec<(f64, f64)>> {
+            let mut spans = Vec::with_capacity(specs.len());
+            for s in specs {
+                let mine = fused_input(s, c.rank(), p);
+                let want = fused_expected(s, c.rank(), p);
+                let mut out = vec![0u64; want.len()];
+                c.barrier()?;
+                let t0 = c.clock();
+                match s.op {
+                    OpKind::Allgather => {
+                        let mut plan =
+                            Registry::<u64>::standard().plan(&s.algo, c, Shape::elems(s.n))?;
+                        plan.execute(&mine, &mut out)?;
+                    }
+                    OpKind::Allreduce => {
+                        let mut plan = AllreduceRegistry::<u64>::standard()
+                            .plan(&s.algo, c, Shape::elems(s.n))?;
+                        plan.execute(&mine, &mut out)?;
+                    }
+                    OpKind::Alltoall => {
+                        let mut plan = AlltoallRegistry::<u64>::standard()
+                            .plan(&s.algo, c, Shape::elems(s.n))?;
+                        plan.execute(&mine, &mut out)?;
+                    }
+                }
+                if out != want {
+                    return Err(Error::Precondition(
+                        "sequential execution produced wrong data".into(),
+                    ));
+                }
+                spans.push((t0, c.clock()));
+            }
+            Ok(spans)
+        },
+    );
+
+    let mut errors = Vec::new();
+    for (rank, r) in fused_run.results.iter().enumerate() {
+        if let Err(e) = r {
+            errors.push(format!("fused rank {rank}: {e}"));
+        }
+    }
+    for (rank, r) in seq_run.results.iter().enumerate() {
+        if let Err(e) = r {
+            errors.push(format!("sequential rank {rank}: {e}"));
+        }
+    }
+    let verified = errors.is_empty();
+
+    let (fused_vtime, fused_predicted) = if verified {
+        let start = fused_run.results[0].as_ref().expect("verified").0 .0;
+        let end = fused_run
+            .results
+            .iter()
+            .map(|r| r.as_ref().expect("verified").0 .1)
+            .fold(0.0f64, f64::max);
+        let scheds: Vec<Option<Schedule>> = fused_run
+            .results
+            .iter()
+            .map(|r| r.as_ref().ok().and_then(|(_, s)| s.clone()))
+            .collect();
+        (end - start, predicted_from(scheds, topo, Some(machine)))
+    } else {
+        (0.0, 0.0)
+    };
+
+    let (seq_vtime, seq_predicted) = if verified {
+        let mut total = 0.0;
+        for k in 0..specs.len() {
+            let start = seq_run.results[0].as_ref().expect("verified")[k].0;
+            let end = seq_run
+                .results
+                .iter()
+                .map(|r| r.as_ref().expect("verified")[k].1)
+                .fold(0.0f64, f64::max);
+            total += end - start;
+        }
+        let view = collectives::schedule::WorldView::world(topo);
+        let mut predicted = 0.0;
+        let world: Vec<usize> = (0..p).collect();
+        for s in specs.iter().filter(|s| s.n > 0) {
+            if let Ok(w) = collectives::fuse::build_world(s, &view, 8, machine) {
+                predicted += cost::predict(&w, topo, &world, machine).unwrap_or(0.0);
+            }
+        }
+        (total, predicted)
+    } else {
+        (0.0, 0.0)
+    };
+
+    FusedReport {
+        specs: specs.iter().map(|s| s.label()).collect(),
+        p,
+        fused_vtime,
+        fused_predicted,
+        seq_vtime,
+        seq_predicted,
+        fused_trace: fused_run.trace,
+        seq_trace: seq_run.trace,
+        verified,
+        errors,
+    }
+}
+
 /// One row of a sweep: a (topology, algorithm) config and its report.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
@@ -709,6 +904,65 @@ mod tests {
         let bad = run_allreduce("recursive-doubling", &Topology::regions(3, 1), &m, 1);
         assert!(!bad.verified);
         assert!(!bad.errors.is_empty());
+    }
+
+    #[test]
+    fn fused_run_matches_prediction_and_beats_sequential() {
+        use crate::collectives::FuseSpec;
+        let topo = Topology::regions(2, 8);
+        let m = MachineParams::lassen();
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "loc-bruck", 4),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+        ];
+        let rep = run_fused(&specs, &topo, &m);
+        assert!(rep.verified, "{:?}", rep.errors);
+        // the IR invariant extends to fused schedules: prediction is exact
+        assert!(
+            (rep.fused_predicted - rep.fused_vtime).abs() < 1e-12,
+            "predicted {:.6e} vs vtime {:.6e}",
+            rep.fused_predicted,
+            rep.fused_vtime
+        );
+        assert!(
+            (rep.seq_predicted - rep.seq_vtime).abs() < 1e-12,
+            "seq predicted {:.6e} vs vtime {:.6e}",
+            rep.seq_predicted,
+            rep.seq_vtime
+        );
+        // coalescing strictly reduces non-local messages and modeled time
+        assert!(rep.fused_trace.max_nonlocal_msgs() < rep.seq_trace.max_nonlocal_msgs());
+        assert!(rep.fused_vtime < rep.seq_vtime);
+    }
+
+    #[test]
+    fn fused_microbatch_allgathers_coalesce_perfectly() {
+        use crate::collectives::FuseSpec;
+        let topo = Topology::regions(4, 4);
+        let m = MachineParams::lassen();
+        let specs: Vec<FuseSpec> =
+            (0..3).map(|_| FuseSpec::new(OpKind::Allgather, "loc-bruck", 2)).collect();
+        let rep = run_fused(&specs, &topo, &m);
+        assert!(rep.verified, "{:?}", rep.errors);
+        // K identical schedules align slot-for-slot, so every message
+        // merges: the fused run carries one constituent's message count.
+        let single = run_allgather(Algorithm::LocalityBruck, &topo, &m, 2);
+        assert_eq!(rep.fused_trace.max_total_msgs(), single.trace.max_total_msgs());
+        assert_eq!(rep.fused_trace.max_nonlocal_msgs(), single.trace.max_nonlocal_msgs());
+        assert!(rep.fused_vtime < rep.seq_vtime);
+    }
+
+    #[test]
+    fn fused_run_handles_zero_length_constituents() {
+        use crate::collectives::FuseSpec;
+        let topo = Topology::regions(2, 2);
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "bruck", 2),
+            FuseSpec::new(OpKind::Allreduce, "recursive-doubling", 0),
+        ];
+        let rep = run_fused(&specs, &topo, &MachineParams::lassen());
+        assert!(rep.verified, "{:?}", rep.errors);
+        assert!(rep.fused_vtime > 0.0);
     }
 
     #[test]

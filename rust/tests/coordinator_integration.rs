@@ -30,6 +30,7 @@ fn cfg(algo: Algorithm, regions: usize, requests: usize) -> ServeConfig {
         check: true,
         fused: false,
         consensus: true,
+        fuse_batch: 1,
     }
 }
 
@@ -123,6 +124,36 @@ fn fused_path_matches_reference_and_unfused() {
 }
 
 #[test]
+fn serve_with_request_microbatching() {
+    if !have_artifacts() {
+        return;
+    }
+    // fuse-batch 2: the chunk's two allgathers and the consensus
+    // allreduce execute as one coalesced schedule; results must match the
+    // unbatched pipeline. 5 requests also exercises final-chunk padding.
+    let mut batched = cfg(Algorithm::LocalityBruck, 2, 4);
+    batched.fuse_batch = 2;
+    let rep = serve(&batched).expect("serve");
+    assert!(rep.verified, "max err {}", rep.max_err);
+    assert_eq!(rep.metrics.timings.len(), 4);
+    let unbatched = serve(&cfg(Algorithm::LocalityBruck, 2, 4)).expect("serve");
+    let diff: f32 = rep
+        .output_sample
+        .iter()
+        .zip(&unbatched.output_sample)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(diff < 1e-4, "batched vs unbatched sample diff {diff}");
+
+    let mut odd = cfg(Algorithm::LocalityBruck, 2, 4);
+    odd.fuse_batch = 2;
+    odd.requests = 5; // warmup 1 + 5 = 6 requests → 3 full chunks
+    let rep = serve(&odd).expect("serve");
+    assert!(rep.verified, "max err {}", rep.max_err);
+    assert_eq!(rep.metrics.timings.len(), 5);
+}
+
+#[test]
 fn serve_missing_artifacts_is_clean_error() {
     let cfg = ServeConfig {
         artifact_dir: "/nonexistent/locag_artifacts".into(),
@@ -133,6 +164,7 @@ fn serve_missing_artifacts_is_clean_error() {
         check: false,
         fused: false,
         consensus: true,
+        fuse_batch: 1,
     };
     let err = serve(&cfg).unwrap_err();
     assert!(err.to_string().contains("manifest"));

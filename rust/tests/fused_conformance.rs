@@ -1,0 +1,266 @@
+//! Fusion conformance: executing collectives through a fused,
+//! message-coalesced schedule is **bit-identical** to executing them
+//! sequentially — for every registered (operation, algorithm) pair over
+//! the conformance grid, for heterogeneous combinations, and for `n = 0`
+//! constituents.
+//!
+//! Pairs that legitimately reject a shape (power-of-two preconditions)
+//! must reject fused planning too, at plan time, with the same
+//! precondition — rejection parity between the fused and sequential
+//! paths. The suite fails if any registered pair was never successfully
+//! executed fused (100% registry coverage, like the per-op conformance
+//! suite).
+
+use std::collections::BTreeSet;
+
+use locag::collectives::{
+    self, AllreduceRegistry, AlltoallRegistry, FuseSpec, OpKind, Registry, Shape,
+};
+use locag::comm::{Comm, CommWorld, Timing};
+use locag::topology::Topology;
+
+/// (regions, ranks-per-region): powers of two, non-powers, degenerate —
+/// the same grid as `collective_conformance`.
+const SHAPES: &[(usize, usize)] = &[
+    (1, 1),
+    (1, 4),
+    (2, 2),
+    (4, 4),
+    (3, 2),
+    (5, 2),
+    (2, 3),
+    (3, 3),
+    (8, 4),
+];
+
+const NS: &[usize] = &[0, 1, 3];
+
+/// Salted canonical inputs: two fused instances of the same pair carry
+/// different data, so block placement mistakes across the composite
+/// buffer space are visible.
+fn input_for(op: OpKind, rank: usize, p: usize, n: usize, salt: usize) -> Vec<u64> {
+    match op {
+        OpKind::Allgather => {
+            (0..n).map(|j| (rank * 1_000_003 + j + salt * 7919) as u64).collect()
+        }
+        OpKind::Allreduce => (0..n).map(|j| (rank * 131_071 + j + salt * 13) as u64).collect(),
+        OpKind::Alltoall => {
+            let b = n.max(1);
+            (0..p * n)
+                .map(|x| (rank * 1_000_003 + (x / b) * 1_009 + x % b + salt * 7919) as u64)
+                .collect()
+        }
+    }
+}
+
+fn out_len(op: OpKind, p: usize, n: usize) -> usize {
+    match op {
+        OpKind::Allgather | OpKind::Alltoall => n * p,
+        OpKind::Allreduce => n,
+    }
+}
+
+/// Execute one (op, algo) pair sequentially through its registry plan.
+fn run_sequential(
+    c: &Comm,
+    op: OpKind,
+    name: &str,
+    n: usize,
+    input: &[u64],
+    out: &mut [u64],
+) -> locag::error::Result<()> {
+    match op {
+        OpKind::Allgather => {
+            let mut plan = Registry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+            plan.execute(input, out)
+        }
+        OpKind::Allreduce => {
+            let mut plan = AllreduceRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+            plan.execute(input, out)
+        }
+        OpKind::Alltoall => {
+            let mut plan = AlltoallRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+            plan.execute(input, out)
+        }
+    }
+}
+
+/// Fused-vs-sequential execution of `specs` (salted per constituent) in
+/// one world. Returns the plan-time rejection message, if any — asserting
+/// in-world that fused and sequential agree bit-for-bit when both plan,
+/// and that they reject together when they don't.
+fn run_specs(topo: &Topology, specs: &[FuseSpec]) -> Vec<Option<String>> {
+    let p = topo.size();
+    let run = CommWorld::run(topo, Timing::Wallclock, |c| -> Option<String> {
+        let fused = collectives::plan_fused::<u64>(c, specs);
+        // Sequential side: plan every constituent through its registry.
+        let mut seq_outs: Vec<Vec<u64>> = Vec::new();
+        let mut seq_err: Option<String> = None;
+        for (i, s) in specs.iter().enumerate() {
+            let input = input_for(s.op, c.rank(), p, s.n, i);
+            let mut out = vec![0u64; out_len(s.op, p, s.n)];
+            match run_sequential(c, s.op, &s.algo, s.n, &input, &mut out) {
+                Ok(()) => seq_outs.push(out),
+                Err(e) => {
+                    seq_err = Some(e.to_string());
+                    break;
+                }
+            }
+        }
+        match (fused, seq_err) {
+            (Ok(mut plan), None) => {
+                let ins: Vec<Vec<u64>> = specs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| input_for(s.op, c.rank(), p, s.n, i))
+                    .collect();
+                let mut outs: Vec<Vec<u64>> =
+                    specs.iter().map(|s| vec![0u64; out_len(s.op, p, s.n)]).collect();
+                {
+                    let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+                    let mut out_refs: Vec<&mut [u64]> =
+                        outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                    plan.execute(&in_refs, &mut out_refs).unwrap();
+                }
+                assert_eq!(outs, seq_outs, "fused != sequential (rank {})", c.rank());
+                None
+            }
+            (Err(fe), Some(se)) => {
+                // Rejection parity: both reject, both for the documented
+                // power-of-two precondition.
+                let fe = fe.to_string();
+                assert!(fe.contains("power-of-two"), "fused rejection: {fe} (seq: {se})");
+                assert!(se.contains("power-of-two"), "sequential rejection: {se}");
+                Some(fe)
+            }
+            (Ok(_), Some(se)) => panic!("sequential rejected but fused planned: {se}"),
+            (Err(fe), None) => panic!("fused rejected but sequential planned: {fe}"),
+        }
+    });
+    run.results
+}
+
+#[test]
+fn fused_pair_matches_sequential_for_every_registered_algorithm() {
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    let pairs: Vec<(OpKind, &'static str)> = {
+        let mut v = Vec::new();
+        for name in Registry::<u64>::standard().names() {
+            v.push((OpKind::Allgather, name));
+        }
+        for name in AllreduceRegistry::<u64>::standard().names() {
+            v.push((OpKind::Allreduce, name));
+        }
+        for name in AlltoallRegistry::<u64>::standard().names() {
+            v.push((OpKind::Alltoall, name));
+        }
+        v
+    };
+    for &(regions, ppr) in SHAPES {
+        let topo = Topology::regions(regions, ppr);
+        for &n in NS {
+            for &(op, name) in &pairs {
+                // Two instances of the pair, fused, with distinct data.
+                let specs = vec![FuseSpec::new(op, name, n), FuseSpec::new(op, name, n)];
+                let results = run_specs(&topo, &specs);
+                for (rank, r) in results.iter().enumerate() {
+                    assert_eq!(r, &results[0], "rank {rank} diverged: {op}/{name}");
+                }
+                if results[0].is_none() {
+                    covered.insert(format!("{op}/{name}"));
+                }
+            }
+        }
+    }
+    let missing: Vec<String> = pairs
+        .iter()
+        .map(|(op, name)| format!("{op}/{name}"))
+        .filter(|k| !covered.contains(k))
+        .collect();
+    assert!(missing.is_empty(), "pairs never executed fused: {missing:?}");
+}
+
+#[test]
+fn heterogeneous_fusion_matches_sequential() {
+    // The serving-loop shape (allgather ⊕ allreduce) and a three-op mix.
+    for &(regions, ppr) in &[(2usize, 8usize), (4, 4), (8, 4)] {
+        let topo = Topology::regions(regions, ppr);
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "loc-bruck", 4),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+        ];
+        for r in run_specs(&topo, &specs) {
+            assert!(r.is_none(), "unexpected rejection at {regions}x{ppr}: {r:?}");
+        }
+    }
+    for &(regions, ppr) in &[(2usize, 2usize), (4, 4)] {
+        let topo = Topology::regions(regions, ppr);
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "bruck", 3),
+            FuseSpec::new(OpKind::Allreduce, "recursive-doubling", 2),
+            FuseSpec::new(OpKind::Alltoall, "pairwise", 1),
+        ];
+        for r in run_specs(&topo, &specs) {
+            assert!(r.is_none(), "unexpected rejection at {regions}x{ppr}: {r:?}");
+        }
+    }
+}
+
+#[test]
+fn zero_length_constituents_are_uniform_no_ops() {
+    // n = 0 constituents ride along with empty buffers and no messages.
+    let topo = Topology::regions(3, 3);
+    let specs = vec![
+        FuseSpec::new(OpKind::Allgather, "bruck", 2),
+        FuseSpec::new(OpKind::Allreduce, "recursive-doubling", 0),
+        FuseSpec::new(OpKind::Alltoall, "bruck", 0),
+    ];
+    for r in run_specs(&topo, &specs) {
+        assert!(r.is_none(), "{r:?}");
+    }
+
+    // All-zero fusion sends nothing at all.
+    let specs = vec![
+        FuseSpec::new(OpKind::Allgather, "loc-bruck", 0),
+        FuseSpec::new(OpKind::Allreduce, "loc-aware", 0),
+    ];
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan = collectives::plan_fused::<u64>(c, &specs).unwrap();
+        let ins: Vec<Vec<u64>> = vec![Vec::new(), Vec::new()];
+        let mut outs: Vec<Vec<u64>> = vec![Vec::new(), Vec::new()];
+        let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+        let mut out_refs: Vec<&mut [u64]> = outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        plan.execute(&in_refs, &mut out_refs).unwrap();
+        outs.iter().all(|o| o.is_empty())
+    });
+    assert!(run.results.iter().all(|&ok| ok));
+    let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+    assert_eq!(total, 0, "all-zero fusion must send no messages");
+}
+
+#[test]
+fn fused_plan_validates_buffer_counts_and_lengths() {
+    let topo = Topology::regions(2, 2);
+    let specs = vec![
+        FuseSpec::new(OpKind::Allgather, "bruck", 2),
+        FuseSpec::new(OpKind::Allreduce, "recursive-doubling", 1),
+    ];
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan = collectives::plan_fused::<u64>(c, &specs).unwrap();
+        let a = [1u64; 2];
+        let b = [1u64; 1];
+        let mut ga = [0u64; 8];
+        let mut gb = [0u64; 1];
+        // wrong arity
+        let mut bad = 0usize;
+        bad += plan.execute(&[&a], &mut [&mut ga, &mut gb]).is_err() as usize;
+        // wrong input length for constituent 0
+        bad += plan.execute(&[&b, &b], &mut [&mut ga, &mut gb]).is_err() as usize;
+        // wrong output length for constituent 1
+        bad += plan.execute(&[&a, &b], &mut [&mut ga, &mut [0u64; 2][..]]).is_err() as usize;
+        // and the correct call still succeeds afterwards
+        plan.execute(&[&a, &b], &mut [&mut ga, &mut gb]).unwrap();
+        bad
+    });
+    assert!(run.results.iter().all(|&b| b == 3));
+}

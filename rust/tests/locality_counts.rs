@@ -267,6 +267,104 @@ fn loc_alltoall_strictly_beats_bruck_on_tracer() {
 }
 
 #[test]
+fn fused_nonlocal_traffic_bounded_by_sum_of_constituents() {
+    // Fusion can only merge messages, never add them: for every rank the
+    // traced non-local message count of a fused schedule is at most the
+    // sum of its constituents' counts (executed sequentially).
+    use locag::collectives::{FuseSpec, OpKind};
+    let m = MachineParams::lassen();
+    let combos: Vec<(usize, usize, Vec<FuseSpec>)> = vec![
+        (
+            4,
+            4,
+            vec![
+                FuseSpec::new(OpKind::Allgather, "loc-bruck", 2),
+                FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+            ],
+        ),
+        (
+            2,
+            8,
+            vec![
+                FuseSpec::new(OpKind::Allgather, "loc-bruck", 4),
+                FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+            ],
+        ),
+        (
+            8,
+            4,
+            vec![
+                FuseSpec::new(OpKind::Allgather, "bruck", 2),
+                FuseSpec::new(OpKind::Allgather, "bruck", 2),
+            ],
+        ),
+        (
+            4,
+            4,
+            vec![
+                FuseSpec::new(OpKind::Allgather, "ring", 2),
+                FuseSpec::new(OpKind::Alltoall, "pairwise", 1),
+            ],
+        ),
+    ];
+    for (regions, ppr, specs) in combos {
+        let topo = Topology::regions(regions, ppr);
+        let rep = sim::run_fused(&specs, &topo, &m);
+        assert!(rep.verified, "{regions}x{ppr}: {:?}", rep.errors);
+        assert_eq!(rep.fused_trace.per_rank.len(), rep.seq_trace.per_rank.len());
+        for (rank, (f, s)) in
+            rep.fused_trace.per_rank.iter().zip(&rep.seq_trace.per_rank).enumerate()
+        {
+            assert!(
+                f.nonlocal_msgs <= s.nonlocal_msgs,
+                "{regions}x{ppr} rank {rank}: fused {} > sequential {}",
+                f.nonlocal_msgs,
+                s.nonlocal_msgs
+            );
+            assert!(
+                f.total_msgs() <= s.total_msgs(),
+                "{regions}x{ppr} rank {rank}: fused {} > sequential {} total",
+                f.total_msgs(),
+                s.total_msgs()
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_coalescing_strictly_reduces_nonlocal_messages() {
+    // The strict case: loc-bruck allgather ⊕ loc-aware allreduce align
+    // their non-local exchange slots with identical peers, so coalescing
+    // merges them — strictly fewer non-local messages than sequential.
+    use locag::collectives::{FuseSpec, OpKind};
+    let m = MachineParams::lassen();
+    for (regions, ppr) in [(2usize, 8usize), (4, 4)] {
+        let topo = Topology::regions(regions, ppr);
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "loc-bruck", 2),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+        ];
+        let rep = sim::run_fused(&specs, &topo, &m);
+        assert!(rep.verified, "{regions}x{ppr}: {:?}", rep.errors);
+        assert!(
+            rep.fused_trace.max_nonlocal_msgs() < rep.seq_trace.max_nonlocal_msgs(),
+            "{regions}x{ppr}: fused {} !< sequential {}",
+            rep.fused_trace.max_nonlocal_msgs(),
+            rep.seq_trace.max_nonlocal_msgs()
+        );
+        assert!(
+            rep.fused_trace.total_nonlocal_msgs() < rep.seq_trace.total_nonlocal_msgs(),
+            "{regions}x{ppr}: fused {} !< sequential {} (total)",
+            rep.fused_trace.total_nonlocal_msgs(),
+            rep.seq_trace.total_nonlocal_msgs()
+        );
+        // and the merged messages carry the combined payloads, so bytes
+        // never grow either
+        assert!(rep.fused_trace.total_nonlocal_bytes() <= rep.seq_trace.total_nonlocal_bytes());
+    }
+}
+
+#[test]
 fn improvement_grows_with_ppr_in_measured_runs() {
     // paper Figs. 9/10: "performance improvements are increased with the
     // number of processes per region" — aligned configs, fixed regions.
