@@ -1,14 +1,16 @@
-//! One plan framework, three operations.
+//! One plan framework, four operations.
 //!
 //! PR 1 introduced persistent plans for the allgather; the framework now
-//! covers allreduce and alltoall through the same machinery: per-op
-//! registries of named algorithms, `plan()` once per (communicator,
-//! shape), `execute()` many times into caller-owned buffers with zero
-//! setup, zero allocation and zero tag consumption.
+//! covers allreduce, alltoall and reduce-scatter through the same
+//! machinery: per-op registries of named algorithms, `plan()` once per
+//! (communicator, shape), `execute()` many times into caller-owned
+//! buffers with zero setup, zero allocation and zero tag consumption.
 //!
 //! Run with: `cargo run --release --example planned_ops`
 
-use locag::collectives::{self, AllreduceRegistry, AlltoallRegistry, OpKind, Registry, Shape};
+use locag::collectives::{
+    self, AllreduceRegistry, AlltoallRegistry, OpKind, ReduceScatterRegistry, Registry, Shape,
+};
 use locag::comm::{CommWorld, Timing};
 use locag::topology::Topology;
 
@@ -23,6 +25,10 @@ fn main() {
     println!("  allgather: {}", Registry::<u64>::standard().names().join(", "));
     println!("  allreduce: {}", AllreduceRegistry::<u64>::standard().names().join(", "));
     println!("  alltoall:  {}", AlltoallRegistry::<u64>::standard().names().join(", "));
+    println!(
+        "  reduce-scatter: {}",
+        ReduceScatterRegistry::<u64>::standard().names().join(", ")
+    );
     println!();
 
     // Every op: plan once (by name, through its registry), execute many
@@ -50,6 +56,11 @@ fn main() {
         let send: Vec<u64> = (0..n * p).map(|x| rank * 1_000 + x as u64).collect();
         let mut exchanged = vec![0u64; n * p];
 
+        // --- reduce-scatter --------------------------------------------
+        let mut rs = collectives::plan_reduce_scatter::<u64>("loc-aware", c, Shape::elems(n))
+            .expect("rs plan");
+        let mut scattered = vec![0u64; n];
+
         for round in 0..iters {
             let mine: Vec<u64> = (0..n as u64).map(|j| rank + j + round).collect();
             ag.execute(&mine, &mut gathered).expect("allgather");
@@ -63,12 +74,17 @@ fn main() {
             a2a.execute(&send, &mut exchanged).expect("alltoall");
             // output block 0 is rank 0's block destined for us
             assert_eq!(exchanged[0], (c.rank() * n) as u64);
+
+            rs.execute(&send, &mut scattered).expect("reduce-scatter");
+            // element 0: sum over ranks r of (r*1000 + rank*n)
+            let base: u64 = (0..p as u64).map(|r| r * 1_000).sum();
+            assert_eq!(scattered[0], base + (p * c.rank() * n) as u64);
         }
         true
     });
     assert!(ok.results.iter().all(|&b| b));
     println!(
-        "all three ops: plan-once / execute-{iters} verified on every rank \
+        "all four ops: plan-once / execute-{iters} verified on every rank \
          (sub-comms built: {}, all at plan time)",
         locag::comm::sub_comms_built()
     );

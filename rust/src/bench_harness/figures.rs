@@ -174,6 +174,9 @@ pub fn measured_op_figure(
         OpKind::Allgather => MEASURED_ALGOS.iter().map(|a| a.name()).collect(),
         OpKind::Allreduce => crate::collectives::AllreduceRegistry::<u64>::standard().names(),
         OpKind::Alltoall => crate::collectives::AlltoallRegistry::<u64>::standard().names(),
+        OpKind::ReduceScatter => {
+            crate::collectives::ReduceScatterRegistry::<u64>::standard().names()
+        }
     };
     let mut w = CsvWriter::create(
         out_csv,
@@ -217,6 +220,13 @@ pub fn measured_op_figure(
                         let nl = rep.trace.max_nonlocal_msgs();
                         (rep.median_vtime, rep.predicted, nl, rep.verified)
                     }
+                    OpKind::ReduceScatter => {
+                        let rep = sim::run_reduce_scatter_repeated(
+                            algo, &topo, machine, n_vals, WARMUP, ITERS,
+                        );
+                        let nl = rep.trace.max_nonlocal_msgs();
+                        (rep.median_vtime, rep.predicted, nl, rep.verified)
+                    }
                 };
                 w.row(&csv_row![
                     regions,
@@ -252,6 +262,12 @@ pub fn fig_allreduce(out_csv: &str, max_p: usize) -> Result<Figure> {
 /// The §6 alltoall sweep: dispatch, pairwise, Bruck, locality-aware.
 pub fn fig_alltoall(out_csv: &str, max_p: usize) -> Result<Figure> {
     measured_op_figure(OpKind::Alltoall, &MachineParams::lassen(), &[4, 16], max_p, out_csv)
+}
+
+/// The reduce-scatter sweep: ring, recursive halving, locality-aware and
+/// the model-tuned dispatcher (the allgather's inverse sibling).
+pub fn fig_reduce_scatter(out_csv: &str, max_p: usize) -> Result<Figure> {
+    measured_op_figure(OpKind::ReduceScatter, &MachineParams::lassen(), &[4, 16], max_p, out_csv)
 }
 
 /// Figure 9: Quartz (node regions).
@@ -323,7 +339,7 @@ mod tests {
 
     #[test]
     fn op_figures_small_sweeps_produce_series() {
-        for op in [OpKind::Allreduce, OpKind::Alltoall] {
+        for op in [OpKind::Allreduce, OpKind::Alltoall, OpKind::ReduceScatter] {
             let f = measured_op_figure(
                 op,
                 &MachineParams::lassen(),

@@ -3,6 +3,7 @@
 //! the paper's evaluation ([`figures`]).
 
 pub mod figures;
+pub mod perf_gate;
 
 use std::time::Instant;
 

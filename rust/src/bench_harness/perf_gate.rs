@@ -1,0 +1,372 @@
+//! The perf-regression gate over `locag bench --json` artifacts.
+//!
+//! `locag bench` emits a `locag-bench-v1` JSON document of
+//! [`BenchRow`]s — one per `(op, algorithm, topology, payload)` point,
+//! carrying the modeled completion (`vtime`), the IR-predicted completion
+//! (`predicted`) and the wall time of the in-process run. CI uploads the
+//! document as the `bench-json` artifact on every run; this module is the
+//! read side: [`parse`] round-trips the artifact through the in-tree JSON
+//! parser and [`compare`] diffs a fresh run against a baseline, flagging
+//! any row whose `vtime` or `predicted` grew by more than the threshold.
+//!
+//! Only the *deterministic* metrics gate: `vtime` and `predicted` are pure
+//! functions of (schedule, machine model), identical on every honest run
+//! of the same source — so a flagged regression is a real scheduling or
+//! cost-model change, never CI noise. `wall` is recorded for trend
+//! curiosity and deliberately ignored by the gate.
+//!
+//! The CI step is reproducible locally:
+//! `locag bench --json NEW.json --compare OLD.json` exits non-zero iff
+//! [`CompareReport::passed`] is false.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One measured point of a bench artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    /// Operation name (`allgather`, `reduce-scatter`, …).
+    pub op: String,
+    /// Registry name of the algorithm.
+    pub algo: String,
+    pub regions: usize,
+    /// Ranks per region.
+    pub ppr: usize,
+    /// World size.
+    pub p: usize,
+    /// Elements per rank.
+    pub n: usize,
+    /// Modeled completion time, seconds (deterministic; gated).
+    pub vtime: f64,
+    /// IR-predicted completion time, seconds (deterministic; gated).
+    pub predicted: f64,
+    /// Wall-clock seconds of the in-process run (noisy; not gated).
+    pub wall: f64,
+    pub verified: bool,
+}
+
+impl BenchRow {
+    /// The identity two artifacts are joined on.
+    pub fn key(&self) -> String {
+        format!("{}/{} {}x{} n={}", self.op, self.algo, self.regions, self.ppr, self.n)
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "    {{\"op\": \"{}\", \"algo\": \"{}\", \"regions\": {}, ",
+                "\"ppr\": {}, \"p\": {}, \"n\": {}, \"vtime\": {:e}, ",
+                "\"predicted\": {:e}, \"wall\": {:e}, \"verified\": {}}}"
+            ),
+            self.op,
+            self.algo,
+            self.regions,
+            self.ppr,
+            self.p,
+            self.n,
+            self.vtime,
+            self.predicted,
+            self.wall,
+            self.verified
+        )
+    }
+}
+
+/// A parsed `locag-bench-v1` artifact: the machine model the rows were
+/// measured against plus the rows themselves. The machine participates in
+/// [`compare`]'s validity check — vtimes from different cost models must
+/// never be diffed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchDoc {
+    pub machine: String,
+    pub rows: Vec<BenchRow>,
+}
+
+/// Render the full `locag-bench-v1` document.
+pub fn render(machine: &str, rows: &[BenchRow]) -> String {
+    let body: Vec<String> = rows.iter().map(BenchRow::to_json).collect();
+    format!(
+        "{{\n  \"schema\": \"locag-bench-v1\",\n  \"machine\": \"{machine}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    )
+}
+
+/// Parse a `locag-bench-v1` document.
+pub fn parse(doc: &str) -> Result<BenchDoc> {
+    let bad = |what: &str| Error::Precondition(format!("bench JSON: {what}"));
+    let j = Json::parse(doc).map_err(|e| bad(&e))?;
+    match j.get("schema").and_then(Json::as_str) {
+        Some("locag-bench-v1") => {}
+        other => return Err(bad(&format!("unknown schema {other:?}"))),
+    }
+    let machine = j
+        .get("machine")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("missing machine"))?
+        .to_string();
+    let rows = j.get("rows").and_then(Json::as_arr).ok_or_else(|| bad("missing rows"))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for row in rows {
+        let field_str = |k: &str| {
+            row.get(k).and_then(Json::as_str).map(str::to_string).ok_or_else(|| {
+                bad(&format!("row missing string field '{k}'"))
+            })
+        };
+        let field_usize = |k: &str| {
+            row.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| bad(&format!("row missing integer field '{k}'")))
+        };
+        let field_f64 = |k: &str| {
+            row.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad(&format!("row missing number field '{k}'")))
+        };
+        out.push(BenchRow {
+            op: field_str("op")?,
+            algo: field_str("algo")?,
+            regions: field_usize("regions")?,
+            ppr: field_usize("ppr")?,
+            p: field_usize("p")?,
+            n: field_usize("n")?,
+            vtime: field_f64("vtime")?,
+            predicted: field_f64("predicted")?,
+            wall: field_f64("wall")?,
+            verified: matches!(row.get("verified"), Some(Json::Bool(true))),
+        });
+    }
+    Ok(BenchDoc { machine, rows: out })
+}
+
+/// One gated metric that grew past the threshold.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    /// [`BenchRow::key`] of the offending row.
+    pub key: String,
+    /// Which metric regressed (`"vtime"` or `"predicted"`).
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+}
+
+impl Regression {
+    /// Fractional growth over the baseline.
+    pub fn growth(&self) -> f64 {
+        (self.current - self.baseline) / self.baseline
+    }
+}
+
+/// Outcome of one baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    /// The gate's threshold (fractional growth, e.g. `0.2` for 20%).
+    pub threshold: f64,
+    /// Rows present on both sides and diffed.
+    pub compared: usize,
+    /// Baseline rows with no current counterpart (removed points; warned,
+    /// not failed).
+    pub only_baseline: usize,
+    /// Current rows with no baseline counterpart (new points; warned, not
+    /// failed — a fresh algorithm must not fail the gate that predates it).
+    pub only_current: usize,
+    /// Every gated metric that grew past the threshold.
+    pub regressions: Vec<Regression>,
+}
+
+impl CompareReport {
+    /// True iff no gated metric regressed past the threshold.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+
+    /// Human-readable summary (regressions first, then the join stats).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        for r in &self.regressions {
+            out.push_str(&format!(
+                "REGRESSION {:<40} {:<9} {:.3e} -> {:.3e} (+{:.1}% > {:.0}%)\n",
+                r.key,
+                r.metric,
+                r.baseline,
+                r.current,
+                r.growth() * 100.0,
+                self.threshold * 100.0
+            ));
+        }
+        out.push_str(&format!(
+            "perf gate: {} row(s) compared, {} regression(s); {} baseline-only, {} new\n",
+            self.compared,
+            self.regressions.len(),
+            self.only_baseline,
+            self.only_current
+        ));
+        out
+    }
+}
+
+/// Diff `current` against `baseline`: a row regresses when a gated metric
+/// (`vtime`, `predicted`) grows by more than `threshold` (fractional, e.g.
+/// `0.2`) over the baseline row with the same [`BenchRow::key`]. Rows on
+/// only one side are counted but never fail the gate; non-positive
+/// baseline values are skipped (no meaningful ratio). Errors when the two
+/// docs were measured against different machine models — those vtimes are
+/// not comparable (regenerate the baseline with the matching `--machine`).
+pub fn compare_docs(
+    baseline: &BenchDoc,
+    current: &BenchDoc,
+    threshold: f64,
+) -> Result<CompareReport> {
+    if baseline.machine != current.machine {
+        return Err(Error::Precondition(format!(
+            "perf baselines are machine-specific: baseline was measured on '{}' but this run \
+             uses '{}' — regenerate the baseline with the matching --machine",
+            baseline.machine, current.machine
+        )));
+    }
+    Ok(compare(&baseline.rows, &current.rows, threshold))
+}
+
+/// Row-level comparison (see [`compare_docs`], which also checks machine
+/// compatibility).
+pub fn compare(baseline: &[BenchRow], current: &[BenchRow], threshold: f64) -> CompareReport {
+    let mut regressions = Vec::new();
+    let mut compared = 0usize;
+    let mut only_current = 0usize;
+    for cur in current {
+        let key = cur.key();
+        match baseline.iter().find(|b| b.key() == key) {
+            None => only_current += 1,
+            Some(base) => {
+                compared += 1;
+                let gated = [
+                    ("vtime", base.vtime, cur.vtime),
+                    ("predicted", base.predicted, cur.predicted),
+                ];
+                for (metric, old, new) in gated {
+                    if old > 0.0 && new > old * (1.0 + threshold) {
+                        regressions.push(Regression {
+                            key: key.clone(),
+                            metric,
+                            baseline: old,
+                            current: new,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let only_baseline =
+        baseline.iter().filter(|b| !current.iter().any(|c| c.key() == b.key())).count();
+    CompareReport { threshold, compared, only_baseline, only_current, regressions }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(op: &str, algo: &str, vtime: f64) -> BenchRow {
+        BenchRow {
+            op: op.to_string(),
+            algo: algo.to_string(),
+            regions: 4,
+            ppr: 4,
+            p: 16,
+            n: 2,
+            vtime,
+            predicted: vtime,
+            wall: 0.01,
+            verified: true,
+        }
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let rows = vec![row("allgather", "bruck", 1.5e-5), row("reduce-scatter", "ring", 3.25e-4)];
+        let doc = render("lassen", &rows);
+        let back = parse(&doc).unwrap();
+        assert_eq!(back.machine, "lassen");
+        assert_eq!(back.rows, rows);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        assert!(parse("{}").is_err());
+        assert!(parse("{\"schema\": \"other\", \"rows\": []}").is_err());
+        let no_machine = "{\"schema\": \"locag-bench-v1\", \"rows\": []}";
+        assert!(parse(no_machine).is_err());
+        let missing_field = "{\"schema\": \"locag-bench-v1\", \"machine\": \"lassen\", \
+                             \"rows\": [{\"op\": \"allgather\"}]}";
+        assert!(parse(missing_field).is_err());
+        assert!(parse("not json").is_err());
+    }
+
+    #[test]
+    fn cross_machine_baselines_are_rejected() {
+        // vtimes from different cost models must never be diffed: the
+        // doc-level gate refuses instead of reporting nonsense.
+        let rows = vec![row("allgather", "bruck", 1e-5)];
+        let lassen = BenchDoc { machine: "lassen".to_string(), rows: rows.clone() };
+        let quartz = BenchDoc { machine: "quartz".to_string(), rows: rows.clone() };
+        let err = compare_docs(&lassen, &quartz, 0.2).unwrap_err().to_string();
+        assert!(err.contains("machine-specific"), "{err}");
+        assert!(compare_docs(&lassen, &lassen.clone(), 0.2).unwrap().passed());
+    }
+
+    #[test]
+    fn identical_runs_pass_the_gate() {
+        let rows = vec![row("allgather", "bruck", 1e-5), row("allgather", "ring", 2e-5)];
+        let rep = compare(&rows, &rows, 0.2);
+        assert!(rep.passed());
+        assert_eq!(rep.compared, 2);
+        assert_eq!(rep.only_baseline + rep.only_current, 0);
+        assert!(rep.table().contains("0 regression(s)"));
+    }
+
+    #[test]
+    fn gate_fires_on_artificially_slowed_rows() {
+        // The acceptance scenario: the same schedule made 2x slower (as an
+        // artificially degraded build would be) must fail the 20% gate.
+        let baseline = vec![row("allgather", "bruck", 1e-5), row("allgather", "ring", 2e-5)];
+        let mut slowed = baseline.clone();
+        slowed[1].vtime *= 2.0;
+        slowed[1].predicted *= 2.0;
+        let rep = compare(&baseline, &slowed, 0.2);
+        assert!(!rep.passed());
+        assert_eq!(rep.regressions.len(), 2); // vtime + predicted
+        assert_eq!(rep.regressions[0].key, "allgather/ring 4x4 n=2");
+        assert!(rep.regressions[0].growth() > 0.99);
+        assert!(rep.table().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn within_threshold_growth_passes() {
+        let baseline = vec![row("allgather", "bruck", 1.0e-5)];
+        let mut current = baseline.clone();
+        current[0].vtime = 1.19e-5; // +19% < 20%
+        current[0].predicted = 1.19e-5;
+        assert!(compare(&baseline, &current, 0.2).passed());
+        current[0].vtime = 1.21e-5; // +21% > 20%
+        assert!(!compare(&baseline, &current, 0.2).passed());
+    }
+
+    #[test]
+    fn new_and_removed_rows_warn_but_never_fail() {
+        // A new algorithm (this PR adds reduce-scatter rows) must not fail
+        // the gate against a baseline that predates it.
+        let baseline = vec![row("allgather", "bruck", 1e-5), row("allgather", "old", 1e-5)];
+        let current = vec![row("allgather", "bruck", 1e-5), row("reduce-scatter", "ring", 9e9)];
+        let rep = compare(&baseline, &current, 0.2);
+        assert!(rep.passed());
+        assert_eq!(rep.compared, 1);
+        assert_eq!(rep.only_baseline, 1);
+        assert_eq!(rep.only_current, 1);
+    }
+
+    #[test]
+    fn wall_time_is_not_gated() {
+        let baseline = vec![row("allgather", "bruck", 1e-5)];
+        let mut current = baseline.clone();
+        current[0].wall *= 100.0; // wall noise must never fail the gate
+        assert!(compare(&baseline, &current, 0.2).passed());
+    }
+}

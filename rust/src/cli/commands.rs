@@ -25,14 +25,15 @@ fn algo_by_name(name: &str) -> Result<Algorithm> {
     Algorithm::parse_or_err(name)
 }
 
-/// `locag algos` — list the algorithm registries of all three operations.
+/// `locag algos` — list the algorithm registries of all four operations.
 pub fn algos(_args: &Args) -> Result<i32> {
-    use crate::collectives::{AllreduceRegistry, AlltoallRegistry, Registry};
+    use crate::collectives::{AllreduceRegistry, AlltoallRegistry, ReduceScatterRegistry, Registry};
     println!("registered collective algorithms (names are case-insensitive):");
     let sections: Vec<(OpKind, Vec<(&'static str, &'static str)>)> = vec![
         (OpKind::Allgather, Registry::<u32>::standard().catalog()),
         (OpKind::Allreduce, AllreduceRegistry::<u32>::standard().catalog()),
         (OpKind::Alltoall, AlltoallRegistry::<u32>::standard().catalog()),
+        (OpKind::ReduceScatter, ReduceScatterRegistry::<u32>::standard().catalog()),
     ];
     for (op, catalog) in sections {
         println!("\n{op}:");
@@ -58,7 +59,7 @@ pub fn run_op(args: &Args) -> Result<i32> {
     let topo = Topology::regions(regions, ppr);
     let default_algo = match op {
         OpKind::Allgather => "loc-bruck",
-        OpKind::Allreduce | OpKind::Alltoall => "loc-aware",
+        OpKind::Allreduce | OpKind::Alltoall | OpKind::ReduceScatter => "loc-aware",
     };
     let algo = args.get_str("algo", default_algo);
     let (algo_name, vtime, predicted, verified, trace, errors) = match op {
@@ -79,6 +80,10 @@ pub fn run_op(args: &Args) -> Result<i32> {
         }
         OpKind::Alltoall => {
             let rep = sim::run_alltoall(&algo, &topo, &m, n);
+            (rep.algorithm, rep.vtime, rep.predicted, rep.verified, rep.trace, rep.errors)
+        }
+        OpKind::ReduceScatter => {
+            let rep = sim::run_reduce_scatter(&algo, &topo, &m, n);
             (rep.algorithm, rep.vtime, rep.predicted, rep.verified, rep.trace, rep.errors)
         }
     };
@@ -142,26 +147,24 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
         );
     }
     println!(
-        "\n§6 extensions — the same plan-once registry covers allreduce and\n\
-         alltoall (`locag algos`, `locag run --op ...`); on the 16-rank example:"
+        "\n§6 extensions — the same plan-once registry covers allreduce,\n\
+         alltoall and reduce-scatter (`locag algos`, `locag run --op ...`);\n\
+         on the 16-rank example:"
     );
     let topo = Topology::regions(4, 4);
     for (op, baseline, aware) in [
-        (crate::collectives::OpKind::Allreduce, "recursive-doubling", "loc-aware"),
-        (crate::collectives::OpKind::Alltoall, "bruck", "loc-aware"),
+        (OpKind::Allreduce, "recursive-doubling", "loc-aware"),
+        (OpKind::Alltoall, "bruck", "loc-aware"),
+        (OpKind::ReduceScatter, "ring", "loc-aware"),
     ] {
-        let (b, a) = match op {
-            crate::collectives::OpKind::Allreduce => (
-                sim::run_allreduce(baseline, &topo, &m, 2),
-                sim::run_allreduce(aware, &topo, &m, 2),
-            ),
-            _ => (
-                sim::run_alltoall(baseline, &topo, &m, 2),
-                sim::run_alltoall(aware, &topo, &m, 2),
-            ),
+        let run_one = |name: &str| match op {
+            OpKind::Allreduce => sim::run_allreduce(name, &topo, &m, 2),
+            OpKind::ReduceScatter => sim::run_reduce_scatter(name, &topo, &m, 2),
+            _ => sim::run_alltoall(name, &topo, &m, 2),
         };
+        let (b, a) = (run_one(baseline), run_one(aware));
         println!(
-            "  {op:<10} {baseline:<20} max NL msgs {:>2}   {aware:<10} max NL msgs {:>2}",
+            "  {op:<14} {baseline:<20} max NL msgs {:>2}   {aware:<10} max NL msgs {:>2}",
             b.trace.max_nonlocal_msgs(),
             a.trace.max_nonlocal_msgs()
         );
@@ -254,9 +257,10 @@ pub fn figure(args: &Args) -> Result<i32> {
         "10" => figures::fig10(&out, max_p)?,
         "allreduce" => figures::fig_allreduce(&out, max_p)?,
         "alltoall" => figures::fig_alltoall(&out, max_p)?,
+        "reduce-scatter" | "reduce_scatter" => figures::fig_reduce_scatter(&out, max_p)?,
         other => {
             return Err(Error::Precondition(format!(
-                "unknown figure '{other}' (expected 3|7|8|9|10|allreduce|alltoall)"
+                "unknown figure '{other}' (expected 3|7|8|9|10|allreduce|alltoall|reduce_scatter)"
             )))
         }
     };
@@ -509,7 +513,7 @@ pub fn explain(args: &Args) -> Result<i32> {
     let op = OpKind::parse_or_err(&args.get_str("op", "allgather"))?;
     let default_algo = match op {
         OpKind::Allgather => "loc-bruck",
-        OpKind::Allreduce | OpKind::Alltoall => "loc-aware",
+        OpKind::Allreduce | OpKind::Alltoall | OpKind::ReduceScatter => "loc-aware",
     };
     let algo = args.get_str("algo", default_algo);
     let regions = args.get_usize("regions", 4)?;
@@ -524,10 +528,10 @@ pub fn explain(args: &Args) -> Result<i32> {
     }
     let view = WorldView::world(&topo);
     // Element sizes mirror the sweep engine's payloads (u32 allgather,
-    // u64 allreduce/alltoall).
+    // u64 allreduce/alltoall/reduce-scatter).
     let esz = match op {
         OpKind::Allgather => 4usize,
-        OpKind::Allreduce | OpKind::Alltoall => 8,
+        OpKind::Allreduce | OpKind::Alltoall | OpKind::ReduceScatter => 8,
     };
     let build_one = |name: &str, r: usize| -> Result<Schedule> {
         match op {
@@ -536,6 +540,7 @@ pub fn explain(args: &Args) -> Result<i32> {
             }
             OpKind::Allreduce => schedule::build_allreduce(name, &view, r, n, esz),
             OpKind::Alltoall => schedule::build_alltoall(name, &view, r, n, esz),
+            OpKind::ReduceScatter => schedule::build_reduce_scatter(name, &view, r, n, esz),
         }
     };
     let scheds: Vec<Schedule> = if algo.eq_ignore_ascii_case("model-tuned") {
@@ -543,6 +548,7 @@ pub fn explain(args: &Args) -> Result<i32> {
             OpKind::Allgather => model_tuned::pick_allgather(&view, &m, n, esz)?,
             OpKind::Allreduce => model_tuned::pick_allreduce(&view, &m, n, esz)?,
             OpKind::Alltoall => model_tuned::pick_alltoall(&view, &m, n, esz)?,
+            OpKind::ReduceScatter => model_tuned::pick_reduce_scatter(&view, &m, n, esz)?,
         };
         println!("model-tuned selection: {winner}");
         scheds
@@ -573,9 +579,15 @@ pub fn explain(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `locag bench` — micro-bench a set of (shape, algorithm) points and emit
-/// a `BENCH_*.json` perf-trajectory artifact for regression tracking.
+/// `locag bench` — micro-bench a set of (shape, algorithm) points across
+/// allgather and reduce-scatter, emit a `BENCH_*.json` perf-trajectory
+/// artifact, and (with `--compare OLD.json`) run the perf-regression gate
+/// against a baseline artifact: any algorithm whose deterministic
+/// `vtime`/`predicted` regressed by more than 20% fails the command —
+/// exactly what the CI gate step runs, reproducible locally.
 pub fn bench(args: &Args) -> Result<i32> {
+    use crate::bench_harness::perf_gate::{self, BenchRow};
+
     let path = args.get_str("json", "results/BENCH_collectives.json");
     if let Some(parent) = std::path::Path::new(&path).parent() {
         if !parent.as_os_str().is_empty() {
@@ -583,63 +595,98 @@ pub fn bench(args: &Args) -> Result<i32> {
         }
     }
     let m = machine_by_name(&args.get_str("machine", "lassen"))?;
-    let algos = [
+    let ag_algos = [
         Algorithm::SystemDefault,
         Algorithm::Bruck,
         Algorithm::Ring,
         Algorithm::LocalityBruck,
         Algorithm::ModelTuned,
     ];
+    let rs_algos = ["ring", "recursive-halving", "loc-aware", "model-tuned"];
     let shapes = [(2usize, 2usize), (4, 4), (8, 4), (4, 8)];
     let ns = [2usize, 256];
-    let mut rows = Vec::new();
+    let mut rows: Vec<BenchRow> = Vec::new();
     println!(
-        "{:<16} {:>5} {:>5} {:>5} {:>13} {:>13} {:>9}",
-        "algorithm", "p", "n", "ok", "vtime", "predicted", "wall"
+        "{:<14} {:<18} {:>5} {:>5} {:>5} {:>13} {:>13} {:>9}",
+        "op", "algorithm", "p", "n", "ok", "vtime", "predicted", "wall"
     );
+    let mut record = |row: BenchRow| {
+        println!(
+            "{:<14} {:<18} {:>5} {:>5} {:>5} {:>13} {:>13} {:>8.1}ms",
+            row.op,
+            row.algo,
+            row.p,
+            row.n,
+            row.verified,
+            seconds(row.vtime),
+            seconds(row.predicted),
+            row.wall * 1e3
+        );
+        rows.push(row);
+    };
     for (regions, ppr) in shapes {
         let topo = Topology::regions(regions, ppr);
         for n in ns {
-            for algo in algos {
+            for algo in ag_algos {
                 let rep = sim::run_allgather(algo, &topo, &m, n);
-                println!(
-                    "{:<16} {:>5} {:>5} {:>5} {:>13} {:>13} {:>8.1}ms",
-                    algo.name(),
-                    rep.p,
-                    rep.n,
-                    rep.verified,
-                    seconds(rep.vtime),
-                    seconds(rep.predicted),
-                    rep.wall * 1e3
-                );
-                rows.push(format!(
-                    concat!(
-                        "    {{\"op\": \"allgather\", \"algo\": \"{}\", \"regions\": {}, ",
-                        "\"ppr\": {}, \"p\": {}, \"n\": {}, \"vtime\": {:e}, ",
-                        "\"predicted\": {:e}, \"wall\": {:e}, \"verified\": {}}}"
-                    ),
-                    algo.name(),
+                record(BenchRow {
+                    op: "allgather".to_string(),
+                    algo: algo.name().to_string(),
                     regions,
                     ppr,
-                    rep.p,
-                    rep.n,
-                    rep.vtime,
-                    rep.predicted,
-                    rep.wall,
-                    rep.verified
-                ));
+                    p: rep.p,
+                    n: rep.n,
+                    vtime: rep.vtime,
+                    predicted: rep.predicted,
+                    wall: rep.wall,
+                    verified: rep.verified,
+                });
+            }
+            for algo in rs_algos {
+                let rep = sim::run_reduce_scatter(algo, &topo, &m, n);
+                record(BenchRow {
+                    op: "reduce-scatter".to_string(),
+                    algo: algo.to_string(),
+                    regions,
+                    ppr,
+                    p: rep.p,
+                    n: rep.n,
+                    vtime: rep.vtime,
+                    predicted: rep.predicted,
+                    wall: rep.wall,
+                    verified: rep.verified,
+                });
             }
         }
     }
-    let mut doc = String::new();
-    doc.push_str("{\n  \"schema\": \"locag-bench-v1\",\n");
-    doc.push_str(&format!("  \"machine\": \"{}\",\n", m.name));
-    doc.push_str(&format!("  \"rows\": [\n{}\n  ]\n}}\n", rows.join(",\n")));
+    let doc = perf_gate::render(m.name, &rows);
     std::fs::write(&path, &doc)?;
-    // self-check: the artifact must parse with the in-tree JSON parser
-    crate::util::json::Json::parse(&doc)
+    // self-check: the artifact must round-trip through the in-tree parser
+    let parsed = perf_gate::parse(&doc)
         .map_err(|e| Error::Precondition(format!("generated bench JSON invalid: {e}")))?;
+    if parsed.rows.len() != rows.len() {
+        return Err(Error::Precondition(format!(
+            "bench JSON round-trip lost rows: {} vs {}",
+            parsed.rows.len(),
+            rows.len()
+        )));
+    }
     println!("\nwrote {path} ({} rows)", rows.len());
+    if let Some(baseline_path) = args.options.get("compare") {
+        let old = std::fs::read_to_string(baseline_path)?;
+        let baseline = perf_gate::parse(&old)
+            .map_err(|e| Error::Precondition(format!("baseline {baseline_path}: {e}")))?;
+        let report = perf_gate::compare_docs(&baseline, &parsed, 0.20)?;
+        print!("{}", report.table());
+        if !report.passed() {
+            eprintln!(
+                "perf gate FAILED vs {baseline_path}: {} metric(s) regressed > 20%",
+                report.regressions.len()
+            );
+            return Ok(1);
+        }
+        println!("perf gate passed vs {baseline_path}");
+    }
     Ok(0)
 }
 

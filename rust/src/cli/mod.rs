@@ -3,11 +3,13 @@
 //! ```text
 //! locag quickstart                      # paper Example 2.1 walkthrough
 //! locag run --op alltoall --algo loc-aware --regions 16 --ppr 8
+//! locag run --op reduce-scatter --algo loc-aware       # §4 inverse sibling
 //! locag run --algo model-tuned          # cost-model-selected allgather
 //! locag explain --algo loc-bruck --regions 4 --ppr 4   # schedule + costs
 //! locag explain --fused --regions 2 --ppr 8            # fused serving plan
 //! locag fuse --batch 4 --regions 2 --ppr 8             # coalescing table
 //! locag bench --json results/BENCH_collectives.json    # perf trajectory
+//! locag bench --compare results/BENCH_baseline.json    # perf-regression gate
 //! locag allgather --algo loc-bruck --regions 16 --ppr 8 [--machine lassen]
 //! locag figure 9 [--out results/fig9.csv] [--max-p 1024]
 //! locag pingpong [--machine quartz]
@@ -68,10 +70,12 @@ USAGE: locag <command> [options]
 COMMANDS
   quickstart   Walk through paper Example 2.1 (16 ranks, 4 regions):
                per-algorithm traffic tables and modeled times.
-  algos        List the algorithm registries of all three operations
-               (allgather, allreduce, alltoall; name + one-line summary).
+  algos        List the algorithm registries of all four operations
+               (allgather, allreduce, alltoall, reduce-scatter;
+               name + one-line summary).
   run          Run any planned collective and report time/traffic.
-               --op OP           allgather | allreduce | alltoall
+               --op OP           allgather | allreduce | alltoall |
+                                 reduce-scatter
                --algo NAME       (defaults: loc-bruck / loc-aware)
                --regions N       (default 16)
                --ppr N           ranks per region (default 8)
@@ -94,12 +98,18 @@ COMMANDS
                constituents) and the fused-vs-sequential totals.
                --algo NAME --regions N --ppr N --values N --batch K
                --consensus-values N --machine NAME
-  bench        Micro-bench a fixed (shape, algorithm) grid and emit a
-               BENCH_*.json perf-trajectory artifact (p, n, algo, vtime,
-               predicted, wall) for cross-PR regression tracking.
+  bench        Micro-bench a fixed (shape, algorithm) grid — allgather and
+               reduce-scatter rows — and emit a BENCH_*.json
+               perf-trajectory artifact (p, n, algo, vtime, predicted,
+               wall) for cross-PR regression tracking.
                --json FILE (default results/BENCH_collectives.json)
+               --compare OLD.json   perf-regression gate: exit non-zero if
+                                    any algorithm's vtime/predicted grew
+                                    >20% vs the baseline artifact (what CI
+                                    runs; wall time is never gated)
                --machine NAME
-  figure       Regenerate a figure: 3 | 7 | 8 | 9 | 10 | allreduce | alltoall.
+  figure       Regenerate a figure: 3 | 7 | 8 | 9 | 10 | allreduce |
+               alltoall | reduce_scatter.
                Measured figures include the predicted-vs-measured overlay
                (one "(model)" series per algorithm, from the schedule IR).
                --out FILE        CSV path (default results/figN.csv)
@@ -119,11 +129,14 @@ COMMANDS
                the paper's message-count bounds. --max-p N (default 256)
 
 ALGORITHMS (case-insensitive; see `locag algos`)
-  allgather: system-default bruck ring recursive-doubling dissemination
-             hierarchical multilane loc-bruck loc-bruck-v loc-bruck-2level
-             model-tuned
-  allreduce: recursive-doubling loc-aware model-tuned
-  alltoall:  system-default pairwise bruck loc-aware model-tuned
+  allgather:      system-default bruck ring recursive-doubling dissemination
+                  hierarchical multilane loc-bruck loc-bruck-v
+                  loc-bruck-2level model-tuned
+  allreduce:      recursive-doubling loc-aware rabenseifner model-tuned
+                  (rabenseifner = reduce-scatter + allgather; any p, no
+                  power-of-two precondition)
+  alltoall:       system-default pairwise bruck loc-aware model-tuned
+  reduce-scatter: ring recursive-halving loc-aware model-tuned
 
   `model-tuned` plans every candidate's schedule, scores each against the
   machine's locality-split postal model (the IR-derived cost model), and

@@ -13,7 +13,15 @@
 //!   `⌈log_pℓ(r)⌉` exchange-and-reduce rounds among regions in which local
 //!   rank `ℓ` pairs with region `g ± ℓ·pℓ^i` (local rank 0 idles), each
 //!   closed by a local allgatherv + combine — `⌈log_pℓ(r)⌉` non-local
-//!   messages per rank.
+//!   messages per rank;
+//! * **`rabenseifner`**: the classic reduce-scatter + allgather
+//!   composition (Rabenseifner '04, the formulation Jocksch et al.
+//!   optimise): a recursive-halving reduce-scatter over element ranges
+//!   followed by a recursive-doubling allgather, each `log₂(p')` steps of
+//!   `≈ n/2, n/4, …` elements. **Any** communicator size: non-power-of-two
+//!   `p` folds the `p − p'` highest ranks into partners up front (one
+//!   full-vector send + reduce) and folds the result back out at the end,
+//!   so no plan-time power-of-two precondition remains.
 //!
 //! Both build [`Schedule`]s whose reductions are explicit
 //! [`Step::Reduce`](super::schedule::Step) steps, executed by the one
@@ -28,8 +36,8 @@ use super::plan::{
     trivial_reduce_plan, AllreduceAlgorithm, AllreducePlan, NamedAlgorithm, OpKind, Shape,
 };
 use super::schedule::{
-    emit_group_allgatherv, emit_group_rd_allreduce, locate, uniform_size, SchedPlan, Schedule,
-    ScheduleBuilder, Slice, WorldView,
+    ceil_log2_u64, emit_group_allgatherv, emit_group_rd_allreduce, locate, uniform_size,
+    SchedPlan, Schedule, ScheduleBuilder, Slice, WorldView,
 };
 use crate::comm::Comm;
 use crate::error::Result;
@@ -192,10 +200,153 @@ pub fn build_loc_schedule(
     Ok(sb.finish(OpKind::Allreduce, view.p, n, elem_bytes, "loc-aware"))
 }
 
+/// The Rabenseifner allreduce (registry entry): reduce-scatter +
+/// allgather, valid for any communicator size.
+pub struct RabenseifnerAllreduce;
+
+impl NamedAlgorithm for RabenseifnerAllreduce {
+    fn name(&self) -> &'static str {
+        "rabenseifner"
+    }
+
+    fn summary(&self) -> &'static str {
+        "reduce-scatter + allgather allreduce; any p via a fold-in step, no power-of-two precondition"
+    }
+}
+
+impl<T: Summable> AllreduceAlgorithm<T> for RabenseifnerAllreduce {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("rabenseifner", comm, shape) {
+            return Ok(p);
+        }
+        let sched = build_rabenseifner_schedule(
+            comm.size(),
+            comm.rank(),
+            shape.n,
+            std::mem::size_of::<T>(),
+        );
+        Ok(SchedPlan::<T>::boxed(comm, "rabenseifner", sched)?)
+    }
+}
+
+/// Element offset of chunk boundary `j` when an `n`-vector is split into
+/// `q` contiguous chunks (`⌊n·j/q⌋`; both peers of an exchange compute the
+/// identical boundaries, so uneven chunks — including empty ones when
+/// `n < q` — need no negotiation).
+fn chunk_off(n: usize, q: usize, j: usize) -> usize {
+    n * j / q
+}
+
+/// Build the Rabenseifner allreduce schedule for one rank (pure; SPMD).
+///
+/// Let `p'` be the largest power of two `≤ p`. The `p − p'` highest ranks
+/// fold their vectors into partner ranks `0..p−p'` and idle; the `p'`
+/// survivors run a recursive-halving reduce-scatter over element ranges
+/// (halving phase of Jocksch et al.'s formulation: step `i` exchanges
+/// `≈ n/2^i` elements with the partner `rank XOR p'/2^i`, reducing the
+/// kept half), then the mirror-image recursive-doubling allgather; the
+/// folded ranks finally receive the full result. No size precondition:
+/// any `p ≥ 1` builds.
+pub fn build_rabenseifner_schedule(
+    p: usize,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Schedule {
+    let mut sb = ScheduleBuilder::new("fold-in");
+    sb.copy(Slice::input(0, n), Slice::output(0, n));
+    let q = if p.is_power_of_two() { p } else { p.next_power_of_two() >> 1 };
+    let rem = p - q;
+    let logq = ceil_log2_u64(q);
+    let t_in = sb.tag();
+    let t_rs = sb.tag_block(logq);
+    let t_ag = sb.tag_block(logq);
+    let t_out = sb.tag();
+    if rank >= q {
+        // Folded rank: contribute the whole vector, then wait for the
+        // reduced result.
+        sb.send(rank - q, Slice::input(0, n), t_in, 0);
+        sb.round("fold-out");
+        sb.recv(rank - q, Slice::output(0, n), t_out, 0);
+        return sb.finish(OpKind::Allreduce, p, n, elem_bytes, "rabenseifner");
+    }
+    if rank < rem {
+        let folded = sb.scratch(n);
+        sb.recv(q + rank, Slice::at(folded, 0, n), t_in, 0);
+        sb.reduce(Slice::at(folded, 0, n), Slice::output(0, n));
+    }
+    if q > 1 {
+        // Phase 1: recursive-halving reduce-scatter over element ranges.
+        // Invariant: the aligned chunk window [lo, lo+w) is owned by the
+        // aligned rank group [lo, lo+w); each step halves both, keeping
+        // the half containing `rank`.
+        sb.round("reduce-scatter (recursive halving)");
+        let tmp = sb.scratch(n);
+        let (mut lo, mut w, mut ti) = (0usize, q, 0u64);
+        while w > 1 {
+            let half = w / 2;
+            let peer = rank ^ half;
+            let (keep_lo, send_lo) =
+                if rank & half == 0 { (lo, lo + half) } else { (lo + half, lo) };
+            let s0 = chunk_off(n, q, send_lo);
+            let s1 = chunk_off(n, q, send_lo + half);
+            let k0 = chunk_off(n, q, keep_lo);
+            let k1 = chunk_off(n, q, keep_lo + half);
+            sb.sendrecv(
+                peer,
+                Slice::output(s0, s1 - s0),
+                peer,
+                Slice::at(tmp, 0, k1 - k0),
+                t_rs + ti,
+                0,
+            );
+            sb.reduce(Slice::at(tmp, 0, k1 - k0), Slice::output(k0, k1 - k0));
+            lo = keep_lo;
+            w = half;
+            ti += 1;
+        }
+        debug_assert_eq!(lo, rank);
+        // Phase 2: recursive-doubling allgather, reversing the halving —
+        // each step trades the owned range with `rank XOR w` and the two
+        // windows merge.
+        sb.round("allgather (recursive doubling)");
+        let (mut lo, mut w, mut tj) = (rank, 1usize, 0u64);
+        while w < q {
+            let peer = rank ^ w;
+            let peer_lo = lo ^ w;
+            let m0 = chunk_off(n, q, lo);
+            let m1 = chunk_off(n, q, lo + w);
+            let o0 = chunk_off(n, q, peer_lo);
+            let o1 = chunk_off(n, q, peer_lo + w);
+            sb.sendrecv(
+                peer,
+                Slice::output(m0, m1 - m0),
+                peer,
+                Slice::output(o0, o1 - o0),
+                t_ag + tj,
+                0,
+            );
+            lo &= !w;
+            w <<= 1;
+            tj += 1;
+        }
+    }
+    if rank < rem {
+        sb.round("fold-out");
+        sb.send(q + rank, Slice::output(0, n), t_out, 0);
+    }
+    sb.finish(OpKind::Allreduce, p, n, elem_bytes, "rabenseifner")
+}
+
 /// One-shot standard recursive-doubling allreduce: plan + single execute
 /// (requires power-of-two size, surfaced before any communication).
 pub fn allreduce_recursive_doubling<T: Summable>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
     super::plan::one_shot_reduce(&RecursiveDoublingAllreduce, comm, local)
+}
+
+/// One-shot Rabenseifner allreduce: plan + single execute; any `p`.
+pub fn allreduce_rabenseifner<T: Summable>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_reduce(&RabenseifnerAllreduce, comm, local)
 }
 
 /// One-shot locality-aware allreduce: plan + single execute. Unaligned or
@@ -261,6 +412,56 @@ mod tests {
             "loc {} vs std {}",
             loc.trace.max_nonlocal_msgs(),
             std.trace.max_nonlocal_msgs()
+        );
+    }
+
+    #[test]
+    fn rabenseifner_sums_at_any_size() {
+        // Powers of two, odd sizes, and the fold-in remainder cases.
+        for (regions, ppr) in [(1usize, 1usize), (1, 2), (4, 4), (3, 1), (5, 2), (3, 3), (2, 3)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                allreduce_rabenseifner(c, &contribution(c.rank(), 5)).unwrap()
+            });
+            for r in &run.results {
+                assert_eq!(r, &expected_sum(p, 5), "regions={regions} ppr={ppr}");
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_handles_vectors_shorter_than_the_chunk_count() {
+        // n < p': some chunk ranges are empty; zero-length exchanges are
+        // still posted and the single real element still converges.
+        let topo = Topology::regions(4, 4);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allreduce_rabenseifner(c, &contribution(c.rank(), 1)).unwrap()
+        });
+        for r in &run.results {
+            assert_eq!(r, &expected_sum(16, 1));
+        }
+    }
+
+    #[test]
+    fn rabenseifner_moves_fewer_bytes_than_recursive_doubling() {
+        // The whole point of the composition: 2·n·(p'−1)/p' elements per
+        // rank instead of recursive doubling's n·log2(p).
+        let topo = Topology::regions(4, 4);
+        let m = crate::model::MachineParams::lassen();
+        let n = 64usize;
+        let rd = CommWorld::run(&topo, crate::comm::Timing::Virtual(m.clone()), |c| {
+            allreduce_recursive_doubling(c, &contribution(c.rank(), n)).unwrap();
+        });
+        let rab = CommWorld::run(&topo, crate::comm::Timing::Virtual(m), |c| {
+            allreduce_rabenseifner(c, &contribution(c.rank(), n)).unwrap();
+        });
+        let total = |t: &crate::trace::TraceSummary| t.total_bytes();
+        assert!(
+            total(&rab.trace) < total(&rd.trace),
+            "rabenseifner {} B !< recursive-doubling {} B",
+            total(&rab.trace),
+            total(&rd.trace)
         );
     }
 

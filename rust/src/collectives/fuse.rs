@@ -46,14 +46,16 @@
 //! [`crate::model::cost::evaluate_fusion`] reports the savings against
 //! sequential execution.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 
 use crate::error::{Error, Result};
 use crate::model::MachineParams;
 
 use super::model_tuned;
 use super::plan::OpKind;
-use super::schedule::{BufId, Round, Schedule, Slice, Step, WorldView};
+use super::schedule::{
+    replay_world, BufId, ReplayHandler, Round, Schedule, Slice, Step, WorldView,
+};
 
 /// One constituent of a fused plan: which operation, by which algorithm
 /// (a registry name; dispatchers like `model-tuned` are resolved at build
@@ -391,92 +393,52 @@ pub fn fuse_with_stats(parts: &[Schedule], coalesce: bool) -> Result<(Schedule, 
     Ok((sched, stats))
 }
 
+/// The framing-check replay handler: every message carries its wire byte
+/// count; a receive whose size disagrees with the matched send is a
+/// framing error. The other meaning of the shared mailbox-replay walker
+/// (`replay_world` in [`super::schedule`] — the cost model's postal
+/// handler is the first).
+struct FramingCheck<'a> {
+    scheds: &'a [Schedule],
+}
+
+impl ReplayHandler for FramingCheck<'_> {
+    type Msg = usize;
+
+    fn on_send(&mut self, rank: usize, _to: usize, src: &Slice, _tag: u64, pad: usize) -> usize {
+        self.scheds[rank].wire_bytes(src.len, pad)
+    }
+
+    fn on_recv(
+        &mut self,
+        rank: usize,
+        from: usize,
+        dst: &Slice,
+        tag: u64,
+        pad: usize,
+        got: usize,
+    ) -> Result<()> {
+        let want = self.scheds[rank].wire_bytes(dst.len, pad);
+        if got != want {
+            return Err(Error::Precondition(format!(
+                "fused schedules disagree on message framing: rank {rank} expects {want} wire \
+                 bytes from rank {from} (tag {tag}) but the sender posted {got}"
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Replay the mailbox matching of a whole world of schedules (FIFO per
 /// `(src, dst, tag)`, like the transport) and verify that every receive
 /// matches a send of exactly the same wire size, that no receive
 /// deadlocks, and that no sent message is left unconsumed. Pure — this is
 /// how [`fuse_world`] decides whether peer-grouped coalescing agreed on
-/// both endpoints of every wire message.
+/// both endpoints of every wire message. The walking itself is the shared
+/// `replay_world` pass also used by [`crate::model::cost::predict`].
 pub fn verify_world(scheds: &[Schedule]) -> Result<()> {
-    let p = scheds.len();
-    let steps: Vec<Vec<&Step>> = scheds.iter().map(|s| s.steps().collect()).collect();
-    let mut cursor = vec![0usize; p];
-    let mut half_done = vec![false; p];
-    let mut queues: HashMap<(usize, usize, u64), VecDeque<usize>> = HashMap::new();
-    let framing_err = |r: usize, from: usize, tag: u64, want: usize, got: usize| {
-        Error::Precondition(format!(
-            "fused schedules disagree on message framing: rank {r} expects {want} wire \
-             bytes from rank {from} (tag {tag}) but the sender posted {got}"
-        ))
-    };
-    loop {
-        let mut progress = false;
-        let mut done = 0usize;
-        for r in 0..p {
-            loop {
-                let Some(step) = steps[r].get(cursor[r]) else {
-                    break;
-                };
-                match step {
-                    Step::CopyLocal { .. } | Step::Reduce { .. } | Step::Rotate { .. } => {
-                        cursor[r] += 1;
-                        progress = true;
-                    }
-                    Step::Send { to, src, tag, pad } => {
-                        let bytes = scheds[r].wire_bytes(src.len, *pad);
-                        queues.entry((r, *to, *tag)).or_default().push_back(bytes);
-                        cursor[r] += 1;
-                        progress = true;
-                    }
-                    Step::Recv { from, dst, tag, pad } => {
-                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
-                            Some(got) => {
-                                let want = scheds[r].wire_bytes(dst.len, *pad);
-                                if got != want {
-                                    return Err(framing_err(r, *from, *tag, want, got));
-                                }
-                                cursor[r] += 1;
-                                progress = true;
-                            }
-                            None => break,
-                        }
-                    }
-                    Step::SendRecv { to, src, from, dst, tag, pad } => {
-                        if !half_done[r] {
-                            let bytes = scheds[r].wire_bytes(src.len, *pad);
-                            queues.entry((r, *to, *tag)).or_default().push_back(bytes);
-                            half_done[r] = true;
-                            progress = true;
-                        }
-                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
-                            Some(got) => {
-                                let want = scheds[r].wire_bytes(dst.len, *pad);
-                                if got != want {
-                                    return Err(framing_err(r, *from, *tag, want, got));
-                                }
-                                half_done[r] = false;
-                                cursor[r] += 1;
-                                progress = true;
-                            }
-                            None => break,
-                        }
-                    }
-                }
-            }
-            if cursor[r] == steps[r].len() {
-                done += 1;
-            }
-        }
-        if done == p {
-            break;
-        }
-        if !progress {
-            return Err(Error::Precondition(
-                "fused schedule set deadlocks: a receive has no matching send".into(),
-            ));
-        }
-    }
-    if queues.values().any(|q| !q.is_empty()) {
+    let leftover = replay_world(scheds, "fused schedule set", &mut FramingCheck { scheds })?;
+    if leftover {
         return Err(Error::Precondition(
             "fused schedule set leaks messages: a send has no matching receive".into(),
         ));
@@ -498,6 +460,9 @@ pub fn build_world(
             OpKind::Allgather => model_tuned::pick_allgather(view, machine, spec.n, elem_bytes)?,
             OpKind::Allreduce => model_tuned::pick_allreduce(view, machine, spec.n, elem_bytes)?,
             OpKind::Alltoall => model_tuned::pick_alltoall(view, machine, spec.n, elem_bytes)?,
+            OpKind::ReduceScatter => {
+                model_tuned::pick_reduce_scatter(view, machine, spec.n, elem_bytes)?
+            }
         };
         return Ok(scheds);
     }
@@ -512,6 +477,9 @@ pub fn build_world(
             }
             OpKind::Alltoall => {
                 super::schedule::build_alltoall(&spec.algo, view, r, spec.n, elem_bytes)
+            }
+            OpKind::ReduceScatter => {
+                super::schedule::build_reduce_scatter(&spec.algo, view, r, spec.n, elem_bytes)
             }
         })
         .collect()

@@ -48,8 +48,9 @@
 //! | [`fuse`] | — | schedule fusion: round-merged, message-coalesced multi-plan execution ([`FusedPlan`], [`plan_fused`]) | the paper's aggregation idea, lifted across collectives |
 //! | [`plan`] | — | op-generic plan framework: [`CollectivePlan`], per-op traits, [`OpRegistry`] | persistent API substrate |
 //! | [`primitives`] | — | gather / bcast / allgatherv (+ [`primitives::AllgathervPlan`]) | substrate |
-//! | [`allreduce`] | `recursive-doubling`, `loc-aware` | planned allreduce (sum) | §6 extension |
+//! | [`allreduce`] | `recursive-doubling`, `loc-aware`, `rabenseifner` | planned allreduce (sum), incl. the any-size reduce-scatter + allgather composition | §6 extension |
 //! | [`alltoall`] | `system-default`, `pairwise`, `bruck`, `loc-aware` | planned alltoall | §6 extension |
+//! | [`reduce_scatter`] | `ring`, `recursive-halving`, `loc-aware` | planned reduce-scatter (sum + scatter, the allgather's inverse) | §4 locality argument, inverted |
 //!
 //! Every algorithm *plans* by building a [`Schedule`] — pure data — and
 //! *executes* through the single interpreter in [`SchedPlan`]; the same
@@ -60,11 +61,13 @@
 //! ## The other operations
 //!
 //! The same plan-once/execute-many framework covers the §6 extensions:
-//! [`AllreduceRegistry`] plans [`AllreducePlan`]s (elementwise sum) and
-//! [`AlltoallRegistry`] plans [`AlltoallPlan`]s (personalized exchange).
-//! All three registries share the [`OpRegistry`] machinery and every plan
-//! implements the [`CollectivePlan`] base trait; `locag algos` lists all
-//! of them and `locag run --op <op>` executes any (op, algorithm) pair.
+//! [`AllreduceRegistry`] plans [`AllreducePlan`]s (elementwise sum),
+//! [`AlltoallRegistry`] plans [`AlltoallPlan`]s (personalized exchange)
+//! and [`ReduceScatterRegistry`] plans [`ReduceScatterPlan`]s (sum +
+//! scatter, `MPI_Reduce_scatter_block` semantics). All four registries
+//! share the [`OpRegistry`] machinery and every plan implements the
+//! [`CollectivePlan`] base trait; `locag algos` lists all of them and
+//! `locag run --op <op>` executes any (op, algorithm) pair.
 //!
 //! New algorithms (or backend-specific overrides) implement
 //! [`NamedAlgorithm`] plus the per-op factory trait
@@ -86,6 +89,7 @@ pub mod multilane;
 pub mod plan;
 pub mod primitives;
 pub mod recursive_doubling;
+pub mod reduce_scatter;
 pub mod ring;
 pub mod schedule;
 
@@ -93,7 +97,8 @@ pub use fuse::FuseSpec;
 pub use plan::{
     AllgatherPlan, AllreduceAlgorithm, AllreducePlan, AllreduceRegistry, AlltoallAlgorithm,
     AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, FusedPlan,
-    NamedAlgorithm, OpKind, OpRegistry, Registry, Shape, Summable,
+    NamedAlgorithm, OpKind, OpRegistry, ReduceScatterAlgorithm, ReduceScatterPlan,
+    ReduceScatterRegistry, Registry, Shape, Summable,
 };
 pub use schedule::{BufId, Round, SchedPlan, Schedule, Slice, Step};
 
@@ -251,6 +256,17 @@ pub fn plan_alltoall<T: Pod>(
     shape: Shape,
 ) -> Result<Box<dyn AlltoallPlan<T>>> {
     AlltoallRegistry::standard().plan(name, comm, shape)
+}
+
+/// Collectively build a persistent reduce-scatter plan by registry name
+/// (case-insensitive; see [`ReduceScatterRegistry::standard`] for the
+/// names).
+pub fn plan_reduce_scatter<T: Summable>(
+    name: &str,
+    comm: &Comm,
+    shape: Shape,
+) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+    ReduceScatterRegistry::standard().plan(name, comm, shape)
 }
 
 /// Collectively build a [`FusedPlan`] executing all `specs` — possibly of

@@ -28,11 +28,13 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use super::plan::{
-    trivial_a2a_plan, trivial_plan, trivial_reduce_plan, AllgatherPlan, AllreduceAlgorithm,
-    AllreducePlan, AlltoallAlgorithm, AlltoallPlan, CollectiveAlgorithm, NamedAlgorithm, Shape,
-    Summable,
+    trivial_a2a_plan, trivial_plan, trivial_reduce_plan, trivial_rs_plan, AllgatherPlan,
+    AllreduceAlgorithm, AllreducePlan, AlltoallAlgorithm, AlltoallPlan, CollectiveAlgorithm,
+    NamedAlgorithm, ReduceScatterAlgorithm, ReduceScatterPlan, Shape, Summable,
 };
-use super::schedule::{build_allreduce, build_alltoall, SchedPlan, Schedule, WorldView};
+use super::schedule::{
+    build_allreduce, build_alltoall, build_reduce_scatter, SchedPlan, Schedule, WorldView,
+};
 use super::{Algorithm, OpKind};
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -102,11 +104,16 @@ pub const ALLGATHER_CANDIDATES: [Algorithm; 9] = [
     Algorithm::LocalityBruckMultilevel,
 ];
 
-/// The candidate pool of the allreduce dispatcher.
-pub const ALLREDUCE_CANDIDATES: [&str; 2] = ["recursive-doubling", "loc-aware"];
+/// The candidate pool of the allreduce dispatcher. `rabenseifner` admits
+/// every communicator size, so the pool as a whole carries no
+/// power-of-two precondition.
+pub const ALLREDUCE_CANDIDATES: [&str; 3] = ["recursive-doubling", "loc-aware", "rabenseifner"];
 
 /// The candidate pool of the alltoall dispatcher.
 pub const ALLTOALL_CANDIDATES: [&str; 3] = ["pairwise", "bruck", "loc-aware"];
+
+/// The candidate pool of the reduce-scatter dispatcher.
+pub const REDUCE_SCATTER_CANDIDATES: [&str; 3] = ["ring", "recursive-halving", "loc-aware"];
 
 /// The machine the dispatcher scores against: the communicator's virtual
 /// machine when present, otherwise the Lassen preset.
@@ -188,6 +195,22 @@ pub fn pick_allreduce(
     )
 }
 
+/// Pick the cheapest reduce-scatter candidate (see [`pick_allgather`]).
+pub fn pick_reduce_scatter(
+    view: &WorldView,
+    machine: &MachineParams,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<(String, Vec<Schedule>)> {
+    pick(
+        &REDUCE_SCATTER_CANDIDATES,
+        |s| s.to_string(),
+        |s| (0..view.p).map(|r| build_reduce_scatter(s, view, r, n, elem_bytes)).collect(),
+        view,
+        machine,
+    )
+}
+
 /// Pick the cheapest alltoall candidate (see [`pick_allgather`]).
 pub fn pick_alltoall(
     view: &WorldView,
@@ -220,6 +243,7 @@ fn select_for_rank(
             OpKind::Allgather => pick_allgather(view, machine, n, elem_bytes)?,
             OpKind::Allreduce => pick_allreduce(view, machine, n, elem_bytes)?,
             OpKind::Alltoall => pick_alltoall(view, machine, n, elem_bytes)?,
+            OpKind::ReduceScatter => pick_reduce_scatter(view, machine, n, elem_bytes)?,
         };
         Ok(w)
     })?;
@@ -233,6 +257,7 @@ fn select_for_rank(
         )?,
         OpKind::Allreduce => build_allreduce(&winner, view, rank, n, elem_bytes)?,
         OpKind::Alltoall => build_alltoall(&winner, view, rank, n, elem_bytes)?,
+        OpKind::ReduceScatter => build_reduce_scatter(&winner, view, rank, n, elem_bytes)?,
     };
     sched.label = format!("model-tuned[{winner}]");
     Ok(sched)
@@ -334,6 +359,38 @@ impl<T: Pod> AlltoallAlgorithm<T> for ModelTunedAlltoall {
     }
 }
 
+/// The model-tuned reduce-scatter dispatcher (registry entry).
+pub struct ModelTunedReduceScatter;
+
+impl NamedAlgorithm for ModelTunedReduceScatter {
+    fn name(&self) -> &'static str {
+        "model-tuned"
+    }
+
+    fn summary(&self) -> &'static str {
+        "cost-model dispatch over the reduce-scatter candidates"
+    }
+}
+
+impl<T: Summable> ReduceScatterAlgorithm<T> for ModelTunedReduceScatter {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("model-tuned", comm, shape) {
+            return Ok(p);
+        }
+        let view = WorldView::from_comm(comm);
+        let machine = scoring_machine(comm);
+        let sched = select_for_rank(
+            OpKind::ReduceScatter,
+            &view,
+            &machine,
+            shape.n,
+            std::mem::size_of::<T>(),
+            comm.rank(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "model-tuned", sched)?)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -403,16 +460,46 @@ mod tests {
         assert!(ALLTOALL_CANDIDATES.contains(&a2a.as_str()), "{a2a}");
         let (ar, _) = pick_allreduce(&view, &m, 2, 8).unwrap();
         assert!(ALLREDUCE_CANDIDATES.contains(&ar.as_str()), "{ar}");
+        let (rs, scheds) = pick_reduce_scatter(&view, &m, 2, 8).unwrap();
+        assert!(REDUCE_SCATTER_CANDIDATES.contains(&rs.as_str()), "{rs}");
+        assert_eq!(scheds.len(), 16);
     }
 
     #[test]
-    fn allreduce_dispatcher_propagates_power_of_two_rejection() {
-        // p = 6: both allreduce candidates need power-of-two structure.
+    fn allreduce_dispatcher_admits_non_power_of_two_via_rabenseifner() {
+        // p = 6: recursive doubling and the loc-aware fallback both reject,
+        // but rabenseifner admits any size — the dispatcher no longer
+        // carries a power-of-two precondition.
         let topo = Topology::regions(3, 2);
         let view = WorldView::world(&topo);
-        let err = pick_allreduce(&view, &MachineParams::lassen(), 2, 8)
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("power-of-two"), "{err}");
+        let (winner, scheds) =
+            pick_allreduce(&view, &MachineParams::lassen(), 2, 8).unwrap();
+        assert_eq!(winner, "rabenseifner");
+        assert_eq!(scheds.len(), 6);
+    }
+
+    #[test]
+    fn reduce_scatter_dispatcher_picks_the_predicted_fastest() {
+        let m = MachineParams::lassen();
+        for (regions, ppr, n) in [(2usize, 2usize, 2usize), (4, 4, 2), (4, 4, 512), (3, 2, 2)] {
+            let topo = Topology::regions(regions, ppr);
+            let view = WorldView::world(&topo);
+            let (winner, scheds) = pick_reduce_scatter(&view, &m, n, 8).unwrap();
+            let t_win =
+                crate::model::cost::predict(&scheds, &topo, &view.world_of, &m).unwrap();
+            for cand in REDUCE_SCATTER_CANDIDATES {
+                let built: Result<Vec<Schedule>> = (0..view.p)
+                    .map(|r| build_reduce_scatter(cand, &view, r, n, 8))
+                    .collect();
+                let Ok(cs) = built else {
+                    continue; // legitimate shape rejection (recursive halving)
+                };
+                let t = crate::model::cost::predict(&cs, &topo, &view.world_of, &m).unwrap();
+                assert!(
+                    t_win <= t + 1e-15,
+                    "{regions}x{ppr} n={n}: picked {winner} ({t_win:.3e}) but {cand} is {t:.3e}"
+                );
+            }
+        }
     }
 }

@@ -58,6 +58,7 @@
 //! | allgather | this rank's `n` elements | `n·p`; block `r` is rank `r`'s data |
 //! | allreduce | this rank's `n` elements | `n`; elementwise sum over ranks |
 //! | alltoall | `n·p`; block `j` goes to rank `j` | `n·p`; block `r` came from rank `r` |
+//! | reduce_scatter | `n·p`; block `j` is this rank's contribution to rank `j` | `n`; elementwise sum over ranks of block `i` (this rank's block) |
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -66,7 +67,7 @@ use crate::model::MachineParams;
 use super::fuse::{fuse_world, FuseSpec};
 use super::schedule::{add_assign, execute_schedule, Schedule, WorldView};
 use super::{allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
-use super::{loc_bruck, model_tuned, multilane, recursive_doubling, ring};
+use super::{loc_bruck, model_tuned, multilane, recursive_doubling, reduce_scatter, ring};
 
 /// Element types that can be summed — the reduction of the allreduce
 /// operation (the paper's allreduce reference [4] reduces with `MPI_SUM`).
@@ -88,11 +89,15 @@ pub enum OpKind {
     /// Personalized exchange: block `j` of rank `i` moves to rank `j`
     /// (§6 extension; the op Bruck '97 was designed for).
     Alltoall,
+    /// Elementwise sum across ranks, block `i` scattered to rank `i` —
+    /// the allgather's inverse sibling (Jocksch et al.; NCCL PAT).
+    ReduceScatter,
 }
 
 impl OpKind {
     /// All operations, in presentation order.
-    pub const ALL: [OpKind; 3] = [OpKind::Allgather, OpKind::Allreduce, OpKind::Alltoall];
+    pub const ALL: [OpKind; 4] =
+        [OpKind::Allgather, OpKind::Allreduce, OpKind::Alltoall, OpKind::ReduceScatter];
 
     /// CLI / CSV name.
     pub fn name(&self) -> &'static str {
@@ -100,12 +105,15 @@ impl OpKind {
             OpKind::Allgather => "allgather",
             OpKind::Allreduce => "allreduce",
             OpKind::Alltoall => "alltoall",
+            OpKind::ReduceScatter => "reduce-scatter",
         }
     }
 
-    /// Parse a CLI name, case-insensitively.
+    /// Parse a CLI name, case-insensitively (`reduce_scatter` and
+    /// `reduce-scatter` both resolve).
     pub fn parse(s: &str) -> Option<OpKind> {
-        OpKind::ALL.iter().copied().find(|o| o.name().eq_ignore_ascii_case(s))
+        let s = s.replace('_', "-");
+        OpKind::ALL.iter().copied().find(|o| o.name().eq_ignore_ascii_case(&s))
     }
 
     /// Parse a CLI name; unknown names error with the valid list.
@@ -207,6 +215,19 @@ pub trait AlltoallPlan<T: Pod>: CollectivePlan {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
 }
 
+/// A prepared reduce-scatter: `input` holds `comm_size()` blocks of
+/// `shape().n` elements, block `j` being this rank's contribution to rank
+/// `j`; on success `output` (length `shape().n`) holds the elementwise
+/// sum over all ranks of this rank's block
+/// (`MPI_Reduce_scatter_block` + `MPI_SUM` semantics). `shape().n == 0`
+/// plans are no-ops (empty output, no messages). See the
+/// [module docs](self) for the full contract.
+pub trait ReduceScatterPlan<T: Summable>: CollectivePlan {
+    /// Run the communication + reduction. No allocation, no
+    /// sub-communicator construction, no tag consumption.
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+}
+
 /// An allgather algorithm that can produce persistent plans.
 pub trait CollectiveAlgorithm<T: Pod>: NamedAlgorithm {
     /// Collectively build a plan for `shape` over `comm`.
@@ -223,6 +244,12 @@ pub trait AllreduceAlgorithm<T: Summable>: NamedAlgorithm {
 pub trait AlltoallAlgorithm<T: Pod>: NamedAlgorithm {
     /// Collectively build a plan for `shape` over `comm`.
     fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>>;
+}
+
+/// A reduce-scatter (sum) algorithm that can produce persistent plans.
+pub trait ReduceScatterAlgorithm<T: Summable>: NamedAlgorithm {
+    /// Collectively build a plan for `shape` over `comm`.
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>>;
 }
 
 /// The state every concrete plan embeds: a retained communicator handle,
@@ -295,8 +322,20 @@ pub(crate) fn check_a2a_io<T: Pod>(n: usize, p: usize, input: &[T], output: &[T]
     Ok(())
 }
 
+/// Validate the reduce-scatter execute-time buffer contract
+/// (`input: n·p`, `output: n`).
+pub(crate) fn check_rs_io<T: Pod>(n: usize, p: usize, input: &[T], output: &[T]) -> Result<()> {
+    if input.len() != n * p {
+        return Err(Error::SizeMismatch { expected: n * p, got: input.len() });
+    }
+    if output.len() != n {
+        return Err(Error::SizeMismatch { expected: n, got: output.len() });
+    }
+    Ok(())
+}
+
 /// The uniform `n == 0` plan for every operation: no communication, empty
-/// output. One struct serves all three ops (all buffers are empty).
+/// output. One struct serves all four ops (all buffers are empty).
 pub(crate) struct EmptyPlan {
     pub name: &'static str,
     pub p: usize,
@@ -334,6 +373,12 @@ impl<T: Pod> AlltoallPlan<T> for EmptyPlan {
     }
 }
 
+impl<T: Summable> ReduceScatterPlan<T> for EmptyPlan {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_rs_io(0, self.p, input, output)
+    }
+}
+
 /// Factory helper: the shared zero-length short-circuit for allgather
 /// factories. Every algorithm's `plan` starts with this so the `n == 0`
 /// contract is uniform.
@@ -368,6 +413,19 @@ pub(crate) fn trivial_a2a_plan<T: Pod>(
     comm: &Comm,
     shape: Shape,
 ) -> Option<Box<dyn AlltoallPlan<T>>> {
+    if shape.n == 0 {
+        Some(Box::new(EmptyPlan { name, p: comm.size() }))
+    } else {
+        None
+    }
+}
+
+/// Zero-length short-circuit for reduce-scatter factories.
+pub(crate) fn trivial_rs_plan<T: Summable>(
+    name: &'static str,
+    comm: &Comm,
+    shape: Shape,
+) -> Option<Box<dyn ReduceScatterPlan<T>>> {
     if shape.n == 0 {
         Some(Box::new(EmptyPlan { name, p: comm.size() }))
     } else {
@@ -417,6 +475,26 @@ pub(crate) fn one_shot_a2a<T: Pod>(
     }
     let mut plan = algo.plan(comm, Shape::elems(send.len() / p))?;
     let mut out = vec![T::default(); send.len()];
+    plan.execute(send, &mut out)?;
+    Ok(out)
+}
+
+/// Shared body of every reduce-scatter one-shot wrapper: `send.len()`
+/// must be a multiple of the communicator size (block length inferred).
+pub(crate) fn one_shot_rs<T: Summable>(
+    algo: &dyn ReduceScatterAlgorithm<T>,
+    comm: &Comm,
+    send: &[T],
+) -> Result<Vec<T>> {
+    let p = comm.size();
+    if send.len() % p != 0 {
+        return Err(Error::SizeMismatch {
+            expected: (send.len() / p.max(1)) * p,
+            got: send.len(),
+        });
+    }
+    let mut plan = algo.plan(comm, Shape::elems(send.len() / p))?;
+    let mut out = vec![T::default(); send.len() / p];
     plan.execute(send, &mut out)?;
     Ok(out)
 }
@@ -497,6 +575,9 @@ pub type AllreduceRegistry<T> = OpRegistry<dyn AllreduceAlgorithm<T>>;
 /// The alltoall registry.
 pub type AlltoallRegistry<T> = OpRegistry<dyn AlltoallAlgorithm<T>>;
 
+/// The reduce-scatter registry.
+pub type ReduceScatterRegistry<T> = OpRegistry<dyn ReduceScatterAlgorithm<T>>;
+
 impl<T: Pod> Registry<T> {
     /// An empty allgather registry.
     pub fn empty() -> Registry<T> {
@@ -537,11 +618,13 @@ impl<T: Summable> AllreduceRegistry<T> {
     }
 
     /// The built-in allreduces: recursive doubling, the §6 locality-aware
-    /// regional variant and the model-tuned dispatcher.
+    /// regional variant, the any-size Rabenseifner composition and the
+    /// model-tuned dispatcher.
     pub fn standard() -> AllreduceRegistry<T> {
         let mut r = AllreduceRegistry::empty();
         r.register(Box::new(allreduce::RecursiveDoublingAllreduce));
         r.register(Box::new(allreduce::LocalityAwareAllreduce));
+        r.register(Box::new(allreduce::RabenseifnerAllreduce));
         r.register(Box::new(model_tuned::ModelTunedAllreduce));
         r
     }
@@ -583,6 +666,38 @@ impl<T: Pod> AlltoallRegistry<T> {
     }
 }
 
+impl<T: Summable> ReduceScatterRegistry<T> {
+    /// An empty reduce-scatter registry.
+    pub fn empty() -> ReduceScatterRegistry<T> {
+        OpRegistry::new(OpKind::ReduceScatter)
+    }
+
+    /// The built-in reduce-scatters: ring (bandwidth-optimal baseline),
+    /// recursive halving (Rabenseifner's first phase), the locality-aware
+    /// lane variant and the model-tuned dispatcher.
+    pub fn standard() -> ReduceScatterRegistry<T> {
+        let mut r = ReduceScatterRegistry::empty();
+        r.register(Box::new(reduce_scatter::RingReduceScatter));
+        r.register(Box::new(reduce_scatter::RecursiveHalvingReduceScatter));
+        r.register(Box::new(reduce_scatter::LocAwareReduceScatter));
+        r.register(Box::new(model_tuned::ModelTunedReduceScatter));
+        r
+    }
+
+    /// Plan by name. Unknown names report the full list of valid names.
+    pub fn plan(
+        &self,
+        name: &str,
+        comm: &Comm,
+        shape: Shape,
+    ) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        match self.get(name) {
+            Some(a) => a.plan(comm, shape),
+            None => Err(self.unknown(name)),
+        }
+    }
+}
+
 impl<T: Pod> Default for Registry<T> {
     fn default() -> Self {
         Registry::standard()
@@ -598,6 +713,12 @@ impl<T: Summable> Default for AllreduceRegistry<T> {
 impl<T: Pod> Default for AlltoallRegistry<T> {
     fn default() -> Self {
         AlltoallRegistry::standard()
+    }
+}
+
+impl<T: Summable> Default for ReduceScatterRegistry<T> {
+    fn default() -> Self {
+        ReduceScatterRegistry::standard()
     }
 }
 
@@ -660,6 +781,7 @@ impl<T: Summable> FusedPlan<T> {
                 OpKind::Allgather => (s.n, s.n * p),
                 OpKind::Allreduce => (s.n, s.n),
                 OpKind::Alltoall => (s.n * p, s.n * p),
+                OpKind::ReduceScatter => (s.n * p, s.n),
             };
             parts.push(FusedPart { in_off, in_len: il, out_off, out_len: ol });
             in_off += il;
@@ -762,7 +884,10 @@ mod tests {
     fn allreduce_and_alltoall_registries_have_catalogs() {
         let r = AllreduceRegistry::<u64>::standard();
         assert_eq!(r.op(), OpKind::Allreduce);
-        assert_eq!(r.names(), vec!["recursive-doubling", "loc-aware", "model-tuned"]);
+        assert_eq!(
+            r.names(),
+            vec!["recursive-doubling", "loc-aware", "rabenseifner", "model-tuned"]
+        );
         for (name, summary) in r.catalog() {
             assert!(!summary.is_empty(), "{name} has no summary");
         }
@@ -775,6 +900,12 @@ mod tests {
         for (name, summary) in r.catalog() {
             assert!(!summary.is_empty(), "{name} has no summary");
         }
+        let r = ReduceScatterRegistry::<u64>::standard();
+        assert_eq!(r.op(), OpKind::ReduceScatter);
+        assert_eq!(r.names(), vec!["ring", "recursive-halving", "loc-aware", "model-tuned"]);
+        for (name, summary) in r.catalog() {
+            assert!(!summary.is_empty(), "{name} has no summary");
+        }
     }
 
     #[test]
@@ -783,9 +914,11 @@ mod tests {
             assert_eq!(OpKind::parse(op.name()), Some(op));
             assert_eq!(OpKind::parse(&op.name().to_uppercase()), Some(op));
         }
+        assert_eq!(OpKind::parse("reduce_scatter"), Some(OpKind::ReduceScatter));
+        assert_eq!(OpKind::parse("Reduce_Scatter"), Some(OpKind::ReduceScatter));
         assert_eq!(OpKind::parse("nope"), None);
         let err = OpKind::parse_or_err("warp").unwrap_err().to_string();
-        assert!(err.contains("allgather") && err.contains("alltoall"), "{err}");
+        assert!(err.contains("allgather") && err.contains("reduce-scatter"), "{err}");
     }
 
     #[test]

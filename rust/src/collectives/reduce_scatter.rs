@@ -1,0 +1,465 @@
+//! Reduce-scatter — the allgather's inverse sibling — as schedule
+//! builders.
+//!
+//! `reduce_scatter` contract (`MPI_Reduce_scatter_block` with `MPI_SUM`):
+//! rank `i` holds `p` blocks of `n` elements, block `j` being its
+//! contribution to rank `j`; afterwards rank `i` holds the `n`-element
+//! elementwise sum over all ranks of block `i`. Jocksch et al. (*Optimised
+//! allgatherv, reduce_scatter and allreduce communication*) and NCCL's PAT
+//! treat it as the collective whose locality-aware scheduling mirrors the
+//! allgather's: the same per-message postal terms `α_c + β_c·s` (paper
+//! §4), traversed in the opposite direction with a reduction folded into
+//! every hop.
+//!
+//! Three builders, all registered in
+//! [`super::plan::ReduceScatterRegistry`] (plus the cost-model-driven
+//! [`super::model_tuned::ModelTunedReduceScatter`]):
+//!
+//! * **`ring`** — `p−1` neighbour exchange-and-reduce steps, each carrying
+//!   one `n`-element partial: the bandwidth-optimal baseline (every value
+//!   crosses each link once; `(p−1)·n` elements sent per rank);
+//! * **`recursive-halving`** — Rabenseifner's first phase (Jocksch et
+//!   al. §2, van de Geijn's halving/doubling): `log₂(p)` exchanges of
+//!   shrinking halves (`p/2·n`, `p/4·n`, …), minimal message count at the
+//!   same `(p−1)·n` total volume. Power-of-two `p` only, checked at plan
+//!   time;
+//! * **`loc-aware`** — the paper's §4 argument applied to reduce-scatter:
+//!   every rank first pre-reduces *within its region* (all-local traffic)
+//!   so that local rank `ℓ` holds the region's partial sums for **lane**
+//!   `ℓ` (the destination ranks with local index `ℓ` in every region);
+//!   then each lane — one member per region — runs an inter-region
+//!   reduce-scatter of aggregated per-region partials: `⌈log₂ r⌉`
+//!   non-local messages per rank when the region count `r` is a power of
+//!   two (recursive halving within the lane), `r−1` otherwise (lane
+//!   ring). Every non-local message carries an aggregated partial — one
+//!   message per region pair per step, never one per source rank.
+//!
+//! All three are pure schedule builders executed by the generic
+//! [`SchedPlan`] interpreter with the [`Summable`] reducer: reductions are
+//! explicit [`Step::Reduce`](super::schedule::Step) steps, schedules own
+//! their tag layouts and scratch, and `execute` is pure communication +
+//! summation with zero allocation and no tag consumption. Shape
+//! preconditions (power-of-two size, uniform regions) surface at `plan()`
+//! time; `n == 0` plans are uniform no-ops.
+
+use super::grouping::GroupBy;
+use super::plan::{
+    trivial_rs_plan, NamedAlgorithm, OpKind, ReduceScatterAlgorithm, ReduceScatterPlan, Shape,
+    Summable,
+};
+use super::schedule::{
+    ceil_log2_u64, locate, uniform_size, BufId, SchedPlan, Schedule, ScheduleBuilder, Slice,
+    WorldView,
+};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+
+/// Ring reduce-scatter (registry entry).
+pub struct RingReduceScatter;
+
+impl NamedAlgorithm for RingReduceScatter {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn summary(&self) -> &'static str {
+        "ring reduce-scatter: p-1 neighbour exchange-and-reduce steps, bandwidth-optimal"
+    }
+}
+
+impl<T: Summable> ReduceScatterAlgorithm<T> for RingReduceScatter {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("ring", comm, shape) {
+            return Ok(p);
+        }
+        let sched =
+            build_ring_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        Ok(SchedPlan::<T>::boxed(comm, "ring", sched)?)
+    }
+}
+
+/// Recursive-halving reduce-scatter (registry entry).
+pub struct RecursiveHalvingReduceScatter;
+
+impl NamedAlgorithm for RecursiveHalvingReduceScatter {
+    fn name(&self) -> &'static str {
+        "recursive-halving"
+    }
+
+    fn summary(&self) -> &'static str {
+        "recursive halving (Rabenseifner phase 1): log2(p) shrinking exchanges, power-of-two p"
+    }
+}
+
+impl<T: Summable> ReduceScatterAlgorithm<T> for RecursiveHalvingReduceScatter {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("recursive-halving", comm, shape) {
+            return Ok(p);
+        }
+        let sched =
+            build_rh_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "recursive-halving", sched)?)
+    }
+}
+
+/// Locality-aware reduce-scatter (registry entry).
+pub struct LocAwareReduceScatter;
+
+impl NamedAlgorithm for LocAwareReduceScatter {
+    fn name(&self) -> &'static str {
+        "loc-aware"
+    }
+
+    fn summary(&self) -> &'static str {
+        "regional reduce-scatter (§4): local pre-reduce into lanes, aggregated lane exchanges"
+    }
+}
+
+impl<T: Summable> ReduceScatterAlgorithm<T> for LocAwareReduceScatter {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("loc-aware", comm, shape) {
+            return Ok(p);
+        }
+        let view = WorldView::from_comm(comm);
+        let sched = build_loc_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// group emitters (shared by the top-level builders and the lane phase)
+// ---------------------------------------------------------------------------
+
+/// Emit a ring reduce-scatter among `members` over the member-major
+/// accumulator `acc` (`q·b` elements; block `k` is destined to member
+/// `k`). `q−1` neighbour exchange-and-reduce steps; member `k` ends with
+/// block `k` fully reduced **in place**. Ranks outside `members` allocate
+/// the tag block and emit nothing (the SPMD contract).
+pub(crate) fn emit_group_ring_rs(
+    sb: &mut ScheduleBuilder,
+    members: &[usize],
+    me: usize,
+    b: usize,
+    acc: BufId,
+) {
+    let q = members.len();
+    let tag0 = sb.tag_block(q.saturating_sub(1) as u64);
+    let Some(k) = members.iter().position(|&r| r == me) else {
+        return;
+    };
+    if q == 1 {
+        return;
+    }
+    let tmp = sb.scratch(b);
+    // Block `c` starts accumulating at member `c+1` and travels one
+    // neighbour per step, reaching its owner after q−1 hops: at step `s`
+    // member `k` forwards the partial of block `(k−1−s) mod q` and folds
+    // the incoming partial into block `(k−2−s) mod q`.
+    for s in 0..q - 1 {
+        let right = members[(k + 1) % q];
+        let left = members[(k + q - 1) % q];
+        let c_send = (k + q - 1 - s) % q;
+        let c_recv = (k + 2 * q - 2 - s) % q;
+        sb.sendrecv(
+            right,
+            Slice::at(acc, c_send * b, b),
+            left,
+            Slice::at(tmp, 0, b),
+            tag0 + s as u64,
+            0,
+        );
+        sb.reduce(Slice::at(tmp, 0, b), Slice::at(acc, c_recv * b, b));
+    }
+}
+
+/// Emit a recursive-halving reduce-scatter among `members` over the
+/// member-major accumulator `acc` (see [`emit_group_ring_rs`] for the
+/// layout): `log₂(q)` exchanges of shrinking block halves; member `k`
+/// ends with block `k` fully reduced in place. Errors at build time
+/// unless the group size is a power of two.
+pub(crate) fn emit_group_rh_rs(
+    sb: &mut ScheduleBuilder,
+    members: &[usize],
+    me: usize,
+    b: usize,
+    acc: BufId,
+) -> Result<()> {
+    let q = members.len();
+    if !q.is_power_of_two() {
+        return Err(Error::Precondition(format!(
+            "recursive-halving reduce-scatter requires power-of-two size, got {q}"
+        )));
+    }
+    let tag0 = sb.tag_block(ceil_log2_u64(q));
+    let Some(k) = members.iter().position(|&r| r == me) else {
+        return Ok(());
+    };
+    if q == 1 {
+        return Ok(());
+    }
+    let tmp = sb.scratch((q / 2) * b);
+    // Invariant: the aligned window [lo, lo+w) of blocks is owned by the
+    // aligned member group [lo, lo+w); each step halves both, keeping the
+    // half that contains `k`.
+    let (mut lo, mut w, mut ti) = (0usize, q, 0u64);
+    while w > 1 {
+        let half = w / 2;
+        let peer = members[k ^ half];
+        let (keep_lo, send_lo) = if k & half == 0 { (lo, lo + half) } else { (lo + half, lo) };
+        sb.sendrecv(
+            peer,
+            Slice::at(acc, send_lo * b, half * b),
+            peer,
+            Slice::at(tmp, 0, half * b),
+            tag0 + ti,
+            0,
+        );
+        sb.reduce(Slice::at(tmp, 0, half * b), Slice::at(acc, keep_lo * b, half * b));
+        lo = keep_lo;
+        w = half;
+        ti += 1;
+    }
+    debug_assert_eq!(lo, k);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// builders
+// ---------------------------------------------------------------------------
+
+/// Build the ring reduce-scatter schedule for one rank (pure; SPMD).
+pub fn build_ring_schedule(p: usize, rank: usize, n: usize, elem_bytes: usize) -> Schedule {
+    let mut sb = ScheduleBuilder::new("ring reduce-scatter");
+    let members: Vec<usize> = (0..p).collect();
+    let acc = sb.scratch(n * p);
+    sb.copy(Slice::input(0, n * p), Slice::at(acc, 0, n * p));
+    emit_group_ring_rs(&mut sb, &members, rank, n, acc);
+    sb.copy(Slice::at(acc, rank * n, n), Slice::output(0, n));
+    sb.finish(OpKind::ReduceScatter, p, n, elem_bytes, "ring")
+}
+
+/// Build the recursive-halving reduce-scatter schedule for one rank
+/// (pure; SPMD). Errors on non-power-of-two communicators.
+pub fn build_rh_schedule(p: usize, rank: usize, n: usize, elem_bytes: usize) -> Result<Schedule> {
+    let mut sb = ScheduleBuilder::new("recursive halving");
+    let members: Vec<usize> = (0..p).collect();
+    let acc = sb.scratch(n * p);
+    sb.copy(Slice::input(0, n * p), Slice::at(acc, 0, n * p));
+    emit_group_rh_rs(&mut sb, &members, rank, n, acc)?;
+    sb.copy(Slice::at(acc, rank * n, n), Slice::output(0, n));
+    Ok(sb.finish(OpKind::ReduceScatter, p, n, elem_bytes, "recursive-halving"))
+}
+
+/// Build the locality-aware reduce-scatter schedule for one rank (pure;
+/// SPMD).
+///
+/// Phase 1 (all local): every member of a region sends each local peer
+/// `ℓ` the gathered input blocks destined to lane `ℓ`, and each lane
+/// owner reduces the region's partial sums in place — after this, local
+/// rank `ℓ` holds its region's contribution to every rank with local
+/// index `ℓ`. Phase 2 (non-local): each lane — one member per region —
+/// reduce-scatters those aggregated partials among the regions, by
+/// recursive halving when the region count is a power of two and by a
+/// lane ring otherwise. Degenerate shapes (single region, one rank per
+/// region) fall back to the plain ring; non-uniform regions are rejected
+/// at plan time.
+pub fn build_loc_schedule(
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    let all: Vec<usize> = (0..view.p).collect();
+    let groups = view.split(&all, GroupBy::Region);
+    let ppr = uniform_size(&groups, "locality-aware reduce-scatter")?;
+    let r_n = groups.len();
+    if r_n == 1 || ppr == 1 {
+        let mut sched = build_ring_schedule(view.p, rank, n, elem_bytes);
+        sched.label = "loc-aware[ring]".to_string();
+        return Ok(sched);
+    }
+    let (g, l) = locate(&groups, rank)?;
+
+    let mut sb = ScheduleBuilder::new("local pre-reduce");
+    // Lane accumulator: block j is the partial destined to groups[j][l],
+    // the lane-ℓ member of region j.
+    let lane_acc = sb.scratch(r_n * n);
+    let tag1 = sb.tag();
+    for (j, group) in groups.iter().enumerate() {
+        sb.copy(Slice::input(group[l] * n, n), Slice::at(lane_acc, j * n, n));
+    }
+    // Send every local peer its lane's blocks, gathered into one staged
+    // local message; all sends post before the first blocking receive.
+    for (m, &peer) in groups[g].iter().enumerate() {
+        if m == l {
+            continue;
+        }
+        let stage = sb.scratch(r_n * n);
+        for (j, group) in groups.iter().enumerate() {
+            sb.copy(Slice::input(group[m] * n, n), Slice::at(stage, j * n, n));
+        }
+        sb.send(peer, Slice::at(stage, 0, r_n * n), tag1, 0);
+    }
+    let tmp = sb.scratch(r_n * n);
+    for (m, &peer) in groups[g].iter().enumerate() {
+        if m == l {
+            continue;
+        }
+        sb.recv(peer, Slice::at(tmp, 0, r_n * n), tag1, 0);
+        sb.reduce(Slice::at(tmp, 0, r_n * n), Slice::at(lane_acc, 0, r_n * n));
+    }
+
+    // Phase 2: aggregated inter-region exchange within the lane.
+    sb.round("lane exchange");
+    let lane: Vec<usize> = groups.iter().map(|group| group[l]).collect();
+    if r_n.is_power_of_two() {
+        emit_group_rh_rs(&mut sb, &lane, rank, n, lane_acc)?;
+    } else {
+        emit_group_ring_rs(&mut sb, &lane, rank, n, lane_acc);
+    }
+    sb.copy(Slice::at(lane_acc, g * n, n), Slice::output(0, n));
+    Ok(sb.finish(OpKind::ReduceScatter, view.p, n, elem_bytes, "loc-aware"))
+}
+
+// ---------------------------------------------------------------------------
+// one-shot wrappers
+// ---------------------------------------------------------------------------
+
+/// One-shot ring reduce-scatter: `send.len()` must be a multiple of the
+/// communicator size (block length inferred).
+pub fn ring<T: Summable>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_rs(&RingReduceScatter, comm, send)
+}
+
+/// One-shot recursive-halving reduce-scatter (power-of-two size).
+pub fn recursive_halving<T: Summable>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_rs(&RecursiveHalvingReduceScatter, comm, send)
+}
+
+/// One-shot locality-aware reduce-scatter.
+pub fn loc_aware<T: Summable>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_rs(&LocAwareReduceScatter, comm, send)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::plan::ReduceScatterRegistry;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    fn send_buf(rank: usize, p: usize, n: usize) -> Vec<u64> {
+        (0..p * n)
+            .map(|x| (rank * 1_000_003 + (x / n) * 1_009 + x % n) as u64)
+            .collect()
+    }
+
+    fn expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|j| (0..p).map(|r| (r * 1_000_003 + rank * 1_009 + j) as u64).sum())
+            .collect()
+    }
+
+    #[test]
+    fn ring_reduces_and_scatters() {
+        for (regions, ppr) in [(1usize, 1usize), (1, 4), (4, 4), (3, 2), (5, 2)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                ring(c, &send_buf(c.rank(), p, 3)).unwrap()
+            });
+            for (r, out) in run.results.iter().enumerate() {
+                assert_eq!(out, &expected(r, p, 3), "{regions}x{ppr} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn recursive_halving_matches_ring_on_powers_of_two() {
+        for (regions, ppr) in [(1usize, 1usize), (2, 2), (4, 4), (2, 8), (8, 4)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                recursive_halving(c, &send_buf(c.rank(), p, 2)).unwrap()
+            });
+            for (r, out) in run.results.iter().enumerate() {
+                assert_eq!(out, &expected(r, p, 2), "{regions}x{ppr} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn recursive_halving_rejects_non_power_of_two_at_plan_time() {
+        let topo = Topology::regions(3, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = ReduceScatterRegistry::<u64>::standard();
+            match r.plan("recursive-halving", c, Shape::elems(2)) {
+                Err(e) => e.to_string(),
+                Ok(_) => String::new(),
+            }
+        });
+        for msg in &run.results {
+            assert!(msg.contains("power-of-two"), "{msg}");
+        }
+        let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+        assert_eq!(total, 0, "plan-time rejection must send no messages");
+    }
+
+    #[test]
+    fn loc_aware_correct_on_aligned_and_ragged_region_counts() {
+        for (regions, ppr) in [(4usize, 4usize), (3, 3), (8, 4), (5, 2), (1, 4), (4, 1)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                loc_aware(c, &send_buf(c.rank(), p, 2)).unwrap()
+            });
+            for (r, out) in run.results.iter().enumerate() {
+                assert_eq!(out, &expected(r, p, 2), "{regions}x{ppr} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn loc_aware_sends_only_aggregated_nonlocal_messages() {
+        // 4x4: the lane recursive halving sends ⌈log2 4⌉ = 2 non-local
+        // messages per rank (of 2·n then 1·n blocks); phase 1 is all-local.
+        let topo = Topology::regions(4, 4);
+        let p = topo.size();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            loc_aware(c, &send_buf(c.rank(), p, 2)).unwrap()
+        });
+        for (r, out) in run.results.iter().enumerate() {
+            assert_eq!(out, &expected(r, p, 2), "rank {r}");
+        }
+        for t in &run.trace.per_rank {
+            assert_eq!(t.nonlocal_msgs, 2);
+        }
+    }
+
+    #[test]
+    fn plan_reuse_with_shifting_inputs() {
+        let topo = Topology::regions(4, 4);
+        let p = topo.size();
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let reg = ReduceScatterRegistry::<u64>::standard();
+            for name in reg.names() {
+                let mut plan = reg.plan(name, c, Shape::elems(2)).unwrap();
+                assert_eq!(plan.algorithm(), name);
+                assert_eq!(plan.comm_size(), p);
+                let mut out = vec![0u64; 2];
+                for round in 0..5u64 {
+                    let mine: Vec<u64> =
+                        send_buf(c.rank(), p, 2).iter().map(|v| v + round).collect();
+                    plan.execute(&mine, &mut out).unwrap();
+                    let expect: Vec<u64> = expected(c.rank(), p, 2)
+                        .iter()
+                        .map(|v| v + round * p as u64)
+                        .collect();
+                    assert_eq!(out, expect, "{name} round {round}");
+                }
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok));
+    }
+}

@@ -38,13 +38,16 @@
 //! dispatcher ([`super::model_tuned`]) and [`crate::model::cost`] evaluate
 //! whole-world schedules without executing them.
 
+use std::collections::{HashMap, VecDeque};
+
 use crate::comm::{copy_into, write_bytes, Comm, Pod};
 use crate::error::{Error, Result};
 use crate::topology::Topology;
 
 use super::grouping::{split_members, GroupBy};
 use super::plan::{
-    check_a2a_io, check_io, check_reduce_io, CollectivePlan, OpKind, PlanCore, Shape, Summable,
+    check_a2a_io, check_io, check_reduce_io, check_rs_io, CollectivePlan, OpKind, PlanCore, Shape,
+    Summable,
 };
 
 /// Identifies one of the buffers a schedule operates on.
@@ -207,6 +210,7 @@ impl Schedule {
             OpKind::Allgather => (self.n, self.n * self.p),
             OpKind::Allreduce => (self.n, self.n),
             OpKind::Alltoall => (self.n * self.p, self.n * self.p),
+            OpKind::ReduceScatter => (self.n * self.p, self.n),
         }
     }
 
@@ -520,7 +524,7 @@ pub fn uniform_size(groups: &[Vec<usize>], algo: &str) -> Result<usize> {
 
 /// Tag-block size of a Bruck-structured exchange over `q` members
 /// (`⌈log₂ q⌉`, and 0 for the degenerate single-member group).
-fn ceil_log2_u64(q: usize) -> u64 {
+pub(crate) fn ceil_log2_u64(q: usize) -> u64 {
     if q <= 1 {
         0
     } else {
@@ -924,6 +928,13 @@ impl<T: Pod> super::plan::AlltoallPlan<T> for SchedPlan<T> {
     }
 }
 
+impl<T: Summable> super::plan::ReduceScatterPlan<T> for SchedPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_rs_io(self.core.n, self.core.p, input, output)?;
+        self.run(input, output, Some(add_assign::<T>))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // by-name builders (shared by the registries, the model-tuned dispatcher,
 // the cost model and `locag explain`)
@@ -999,8 +1010,30 @@ pub fn build_allreduce(
         super::allreduce::build_rd_schedule(view.p, rank, n, elem_bytes)
     } else if name.eq_ignore_ascii_case("loc-aware") {
         super::allreduce::build_loc_schedule(view, rank, n, elem_bytes)
+    } else if name.eq_ignore_ascii_case("rabenseifner") {
+        Ok(super::allreduce::build_rabenseifner_schedule(view.p, rank, n, elem_bytes))
     } else {
         Err(Error::Precondition(format!("no allreduce schedule builder for '{name}'")))
+    }
+}
+
+/// Build the schedule of one reduce-scatter algorithm (by registry name)
+/// for `rank`. `model-tuned` is handled by the dispatcher.
+pub fn build_reduce_scatter(
+    name: &str,
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    if name.eq_ignore_ascii_case("ring") {
+        Ok(super::reduce_scatter::build_ring_schedule(view.p, rank, n, elem_bytes))
+    } else if name.eq_ignore_ascii_case("recursive-halving") {
+        super::reduce_scatter::build_rh_schedule(view.p, rank, n, elem_bytes)
+    } else if name.eq_ignore_ascii_case("loc-aware") {
+        super::reduce_scatter::build_loc_schedule(view, rank, n, elem_bytes)
+    } else {
+        Err(Error::Precondition(format!("no reduce-scatter schedule builder for '{name}'")))
     }
 }
 
@@ -1030,6 +1063,118 @@ pub fn build_alltoall(
     } else {
         Err(Error::Precondition(format!("no alltoall schedule builder for '{name}'")))
     }
+}
+
+// ---------------------------------------------------------------------------
+// whole-world mailbox replay (shared by the cost model and fuse's verifier)
+// ---------------------------------------------------------------------------
+
+/// What one whole-world replay pass does at each communication event.
+/// [`replay_world`] owns the walking — cursor per rank, send-half state of
+/// in-flight `SendRecv`s, FIFO queues per `(src, dst, tag)` exactly like
+/// the mailbox transport — and the handler owns the semantics: the cost
+/// model's handler charges postal clocks, fuse's verifier checks wire
+/// framing. One walker, two meanings; the two can never drift.
+pub(crate) trait ReplayHandler {
+    /// What a send enqueues and the matching receive consumes (a clock
+    /// stamp for the cost model, a wire byte count for the verifier).
+    type Msg: Copy;
+
+    /// A send (or the send half of a `SendRecv`) posted by `rank`.
+    fn on_send(&mut self, rank: usize, to: usize, src: &Slice, tag: u64, pad: usize) -> Self::Msg;
+
+    /// The matching receive completing on `rank`; an error aborts the
+    /// replay.
+    fn on_recv(
+        &mut self,
+        rank: usize,
+        from: usize,
+        dst: &Slice,
+        tag: u64,
+        pad: usize,
+        msg: Self::Msg,
+    ) -> Result<()>;
+}
+
+/// Replay a whole world of schedules (one per rank, indexed by rank)
+/// against `handler`, with FIFO matching per `(src, dst, tag)`. Local
+/// steps are free. Errors if the schedules deadlock (a receive whose
+/// matching send never happens) — `what` names the schedule set in the
+/// message. Returns whether any sent message was never received; the
+/// framing verifier treats that as a leak, the cost model ignores it.
+pub(crate) fn replay_world<H: ReplayHandler>(
+    scheds: &[Schedule],
+    what: &str,
+    handler: &mut H,
+) -> Result<bool> {
+    let p = scheds.len();
+    let steps: Vec<Vec<&Step>> = scheds.iter().map(|s| s.steps().collect()).collect();
+    let mut cursor = vec![0usize; p];
+    // true while a SendRecv's send half is done but its receive is pending
+    let mut half_done = vec![false; p];
+    let mut queues: HashMap<(usize, usize, u64), VecDeque<H::Msg>> = HashMap::new();
+    loop {
+        let mut progress = false;
+        let mut done = 0usize;
+        for r in 0..p {
+            loop {
+                let Some(step) = steps[r].get(cursor[r]) else {
+                    break;
+                };
+                match step {
+                    Step::CopyLocal { .. } | Step::Reduce { .. } | Step::Rotate { .. } => {
+                        cursor[r] += 1;
+                        progress = true;
+                    }
+                    Step::Send { to, src, tag, pad } => {
+                        let m = handler.on_send(r, *to, src, *tag, *pad);
+                        queues.entry((r, *to, *tag)).or_default().push_back(m);
+                        cursor[r] += 1;
+                        progress = true;
+                    }
+                    Step::Recv { from, dst, tag, pad } => {
+                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
+                            Some(m) => {
+                                handler.on_recv(r, *from, dst, *tag, *pad, m)?;
+                                cursor[r] += 1;
+                                progress = true;
+                            }
+                            None => break,
+                        }
+                    }
+                    Step::SendRecv { to, src, from, dst, tag, pad } => {
+                        if !half_done[r] {
+                            let m = handler.on_send(r, *to, src, *tag, *pad);
+                            queues.entry((r, *to, *tag)).or_default().push_back(m);
+                            half_done[r] = true;
+                            progress = true;
+                        }
+                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
+                            Some(m) => {
+                                handler.on_recv(r, *from, dst, *tag, *pad, m)?;
+                                half_done[r] = false;
+                                cursor[r] += 1;
+                                progress = true;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+            if cursor[r] == steps[r].len() {
+                done += 1;
+            }
+        }
+        if done == p {
+            break;
+        }
+        if !progress {
+            return Err(Error::Precondition(format!(
+                "{what} deadlocks: a receive has no matching send"
+            )));
+        }
+    }
+    Ok(queues.values().any(|q| !q.is_empty()))
 }
 
 #[cfg(test)]

@@ -16,20 +16,24 @@
 //!   (locality-aware Bruck), with eager/rendezvous protocol switching and
 //!   machine presets shaped after the paper's reference [6].
 //! * [`collectives`] — an **operation-generic persistent planned-collective
-//!   framework** (`MPI_*_init`-style) covering three operations: the
+//!   framework** (`MPI_*_init`-style) covering four operations: the
 //!   standard Bruck, ring, recursive-doubling, dissemination, hierarchical
 //!   (Träff '06), multi-lane (Träff & Hunold '20) and **locality-aware
 //!   Bruck** allgathers (incl. multilevel hierarchy and non-power region
-//!   counts) plus a system-MPI dispatch baseline; recursive-doubling and
-//!   locality-aware regional **allreduce**; and pairwise, Bruck and
-//!   locality-aware **alltoall** (§6 extensions). Every algorithm plans
-//!   once per (communicator, shape) and executes many times with zero
-//!   setup and zero allocation, dispatched through pluggable name →
-//!   algorithm registries ([`collectives::Registry`],
-//!   [`collectives::AllreduceRegistry`], [`collectives::AlltoallRegistry`])
-//!   sharing one [`collectives::CollectivePlan`] substrate — and
-//!   concurrent plans fuse into one round-merged, message-coalesced
-//!   schedule ([`collectives::fuse`], [`collectives::FusedPlan`]).
+//!   counts) plus a system-MPI dispatch baseline; recursive-doubling,
+//!   locality-aware regional and any-size Rabenseifner **allreduce**;
+//!   pairwise, Bruck and locality-aware **alltoall** (§6 extensions); and
+//!   ring, recursive-halving and locality-aware **reduce-scatter** (the
+//!   allgather's inverse sibling). Every algorithm plans once per
+//!   (communicator, shape) and executes many times with zero setup and
+//!   zero allocation, dispatched through pluggable name → algorithm
+//!   registries ([`collectives::Registry`],
+//!   [`collectives::AllreduceRegistry`],
+//!   [`collectives::AlltoallRegistry`],
+//!   [`collectives::ReduceScatterRegistry`]) sharing one
+//!   [`collectives::CollectivePlan`] substrate — and concurrent plans fuse
+//!   into one round-merged, message-coalesced schedule
+//!   ([`collectives::fuse`], [`collectives::FusedPlan`]).
 //! * [`sim`] — the sweep/measurement engine that runs any algorithm at a
 //!   given (p, ppn, data size) and reports virtual time, wall time and a
 //!   locality-classified message trace.
@@ -156,13 +160,13 @@ pub mod prelude {
     pub use crate::collectives::{
         Algorithm, AllgatherPlan, AllreducePlan, AllreduceRegistry, AlltoallPlan,
         AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, FuseSpec, FusedPlan,
-        NamedAlgorithm, OpKind, Registry, Shape,
+        NamedAlgorithm, OpKind, ReduceScatterPlan, ReduceScatterRegistry, Registry, Shape,
     };
     pub use crate::comm::{Comm, CommWorld, Timing};
     pub use crate::model::{MachineParams, Protocol};
     pub use crate::sim::{
-        run_allgather, run_allreduce, run_alltoall, run_fused, AllgatherReport, FusedReport,
-        OpReport,
+        run_allgather, run_allreduce, run_alltoall, run_fused, run_reduce_scatter,
+        AllgatherReport, FusedReport, OpReport,
     };
     pub use crate::topology::{Locality, Placement, Topology};
     pub use crate::trace::TraceSummary;

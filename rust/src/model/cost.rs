@@ -26,10 +26,8 @@
 //! consumer that closes the loop: it builds candidate schedules, scores
 //! them here, and plans the cheapest.
 
-use std::collections::{HashMap, VecDeque};
-
-use crate::collectives::schedule::{Schedule, Step};
-use crate::error::{Error, Result};
+use crate::collectives::schedule::{replay_world, ReplayHandler, Schedule, Slice};
+use crate::error::Result;
 use crate::model::MachineParams;
 use crate::topology::Topology;
 use crate::trace::RankTrace;
@@ -75,6 +73,47 @@ pub fn counts(sched: &Schedule, rank: usize, topo: &Topology, world_of: &[usize]
     t
 }
 
+/// The postal-clock replay handler: sends charge `α_c + β_c·bytes` on the
+/// sender and stamp the message with the post-charge clock; receives
+/// synchronize the receiver to the stamp. One of the two meanings of the
+/// shared mailbox-replay walker
+/// ([`crate::collectives::schedule`]'s `replay_world` — the other is
+/// fuse's framing verifier).
+struct PostalReplay<'a> {
+    scheds: &'a [Schedule],
+    topo: &'a Topology,
+    world_of: &'a [usize],
+    machine: &'a MachineParams,
+    clock: Vec<f64>,
+}
+
+impl ReplayHandler for PostalReplay<'_> {
+    type Msg = f64;
+
+    fn on_send(&mut self, rank: usize, to: usize, src: &Slice, _tag: u64, pad: usize) -> f64 {
+        let (a, b) = (self.world_of[rank], self.world_of[to]);
+        if a != b {
+            // self-sends are local memcpys: never charged
+            let bytes = self.scheds[rank].wire_bytes(src.len, pad);
+            self.clock[rank] += self.machine.cost(self.topo.classify(a, b), bytes);
+        }
+        self.clock[rank]
+    }
+
+    fn on_recv(
+        &mut self,
+        rank: usize,
+        _from: usize,
+        _dst: &Slice,
+        _tag: u64,
+        _pad: usize,
+        stamp: f64,
+    ) -> Result<()> {
+        self.clock[rank] = self.clock[rank].max(stamp);
+        Ok(())
+    }
+}
+
 /// Predicted completion time of a whole world of schedules (one per rank,
 /// indexed by rank) under the locality-split postal model.
 ///
@@ -84,96 +123,19 @@ pub fn counts(sched: &Schedule, rank: usize, topo: &Topology, world_of: &[usize]
 /// and receives block until the matching stamp is available, then take the
 /// max. Local steps (copy/reduce/rotate) are free, matching the
 /// transport. Errors if the schedules deadlock (a receive whose matching
-/// send never happens) — which a correct builder never produces.
+/// send never happens) — which a correct builder never produces. The
+/// walking itself (cursors, FIFO matching) is the shared
+/// `replay_world` pass, so this model and fuse's framing verifier can
+/// never drift in matching discipline.
 pub fn predict(
     scheds: &[Schedule],
     topo: &Topology,
     world_of: &[usize],
     machine: &MachineParams,
 ) -> Result<f64> {
-    let p = scheds.len();
-    let steps: Vec<Vec<&Step>> = scheds.iter().map(|s| s.steps().collect()).collect();
-    let mut cursor = vec![0usize; p];
-    // true while a SendRecv's send half is done but its receive is pending
-    let mut half_done = vec![false; p];
-    let mut clock = vec![0.0f64; p];
-    // (src, dst, tag) → FIFO of send stamps, mirroring mailbox matching.
-    let mut queues: HashMap<(usize, usize, u64), VecDeque<f64>> = HashMap::new();
-
-    let charge = |clock: &mut [f64], r: usize, to: usize, bytes: usize| -> f64 {
-        if world_of[r] == world_of[to] {
-            // self-sends are local memcpys: never charged
-            clock[r]
-        } else {
-            let c = machine.cost(topo.classify(world_of[r], world_of[to]), bytes);
-            clock[r] += c;
-            clock[r]
-        }
-    };
-
-    loop {
-        let mut progress = false;
-        let mut done = 0usize;
-        for r in 0..p {
-            loop {
-                let Some(step) = steps[r].get(cursor[r]) else {
-                    break;
-                };
-                match step {
-                    Step::CopyLocal { .. } | Step::Reduce { .. } | Step::Rotate { .. } => {
-                        cursor[r] += 1;
-                        progress = true;
-                    }
-                    Step::Send { to, src, tag, pad } => {
-                        let stamp = charge(&mut clock, r, *to, scheds[r].wire_bytes(src.len, *pad));
-                        queues.entry((r, *to, *tag)).or_default().push_back(stamp);
-                        cursor[r] += 1;
-                        progress = true;
-                    }
-                    Step::Recv { from, tag, .. } => {
-                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
-                            Some(stamp) => {
-                                clock[r] = clock[r].max(stamp);
-                                cursor[r] += 1;
-                                progress = true;
-                            }
-                            None => break,
-                        }
-                    }
-                    Step::SendRecv { to, src, from, tag, pad, .. } => {
-                        if !half_done[r] {
-                            let stamp =
-                                charge(&mut clock, r, *to, scheds[r].wire_bytes(src.len, *pad));
-                            queues.entry((r, *to, *tag)).or_default().push_back(stamp);
-                            half_done[r] = true;
-                            progress = true;
-                        }
-                        match queues.get_mut(&(*from, r, *tag)).and_then(|q| q.pop_front()) {
-                            Some(stamp) => {
-                                clock[r] = clock[r].max(stamp);
-                                half_done[r] = false;
-                                cursor[r] += 1;
-                                progress = true;
-                            }
-                            None => break,
-                        }
-                    }
-                }
-            }
-            if cursor[r] == steps[r].len() {
-                done += 1;
-            }
-        }
-        if done == p {
-            break;
-        }
-        if !progress {
-            return Err(Error::Precondition(
-                "schedule set deadlocks: a receive has no matching send".into(),
-            ));
-        }
-    }
-    Ok(clock.iter().copied().fold(0.0, f64::max))
+    let mut h = PostalReplay { scheds, topo, world_of, machine, clock: vec![0.0; scheds.len()] };
+    replay_world(scheds, "schedule set", &mut h)?;
+    Ok(h.clock.iter().copied().fold(0.0, f64::max))
 }
 
 /// [`counts`] for every rank plus [`predict`]: the full static evaluation

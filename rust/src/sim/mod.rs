@@ -3,12 +3,12 @@
 //! correctness and the locality-classified traffic trace.
 //!
 //! This is what the figure harness, the examples and the integration tests
-//! drive. One [`run_allgather`] / [`run_allreduce`] / [`run_alltoall`]
-//! call = one data point of a paper figure. The `run_*_repeated` variants
-//! are benchmark-shaped: every rank **plans once** and executes
-//! `warmup + iters` times, with a clock-syncing barrier between
-//! iterations — the paper's timed loop with communicators created once
-//! outside the timed region.
+//! drive. One [`run_allgather`] / [`run_allreduce`] / [`run_alltoall`] /
+//! [`run_reduce_scatter`] call = one data point of a paper figure. The
+//! `run_*_repeated` variants are benchmark-shaped: every rank **plans
+//! once** and executes `warmup + iters` times, with a clock-syncing
+//! barrier between iterations — the paper's timed loop with communicators
+//! created once outside the timed region.
 
 use std::time::Instant;
 
@@ -338,6 +338,15 @@ fn a2a_expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
         .collect()
 }
 
+/// The canonical reduce-scatter result on `rank`: the elementwise sum over
+/// all ranks of their block destined here (inputs are [`a2a_send`]-shaped —
+/// reduce-scatter consumes the same `n·p` block layout alltoall does).
+fn rs_expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|j| (0..p).map(|r| (r * 1_000_003 + rank * 1_009) as u64 + j as u64).sum())
+        .collect()
+}
+
 /// Shared per-rank body of every repeated op runner: plan once via
 /// `make_plan`-style closures, then barrier-separated executions recording
 /// `(start, end)` clock spans and checking against `expected`.
@@ -406,6 +415,18 @@ pub fn run_alltoall(
     n: usize,
 ) -> OpReport {
     let rep = run_alltoall_repeated(algo, topo, machine, n, 0, 1);
+    repeated_to_single(rep)
+}
+
+/// Run one reduce-scatter by registry name under the virtual-clock
+/// transport.
+pub fn run_reduce_scatter(
+    algo: &str,
+    topo: &Topology,
+    machine: &MachineParams,
+    n: usize,
+) -> OpReport {
+    let rep = run_reduce_scatter_repeated(algo, topo, machine, n, 0, 1);
     repeated_to_single(rep)
 }
 
@@ -517,6 +538,27 @@ pub fn run_alltoall_repeated(
     })
 }
 
+/// Plan once per rank, execute a reduce-scatter `warmup + iters` times
+/// under virtual timing (the reduce-scatter twin of
+/// [`run_allgather_repeated`]).
+pub fn run_reduce_scatter_repeated(
+    algo: &str,
+    topo: &Topology,
+    machine: &MachineParams,
+    n: usize,
+    warmup: usize,
+    iters: usize,
+) -> RepeatedOpReport {
+    let p = topo.size();
+    run_op_repeated(OpKind::ReduceScatter, algo, topo, machine, n, warmup, iters, |c, total| {
+        let mut plan = collectives::plan_reduce_scatter::<u64>(algo, c, Shape::elems(n))?;
+        let sched = plan.schedule().cloned();
+        let mine = a2a_send(c.rank(), p, n);
+        let expected = rs_expected(c.rank(), p, n);
+        repeated_spans(c, total, &expected, sched, |_, out| plan.execute(&mine, out))
+    })
+}
+
 /// Result of one fused-vs-sequential comparison run
 /// ([`run_fused`]): the same constituents executed once as a fused
 /// schedule and once back to back, with modeled times, IR predictions and
@@ -552,7 +594,7 @@ fn fused_input(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u64> 
     match spec.op {
         OpKind::Allgather => collectives::canonical_contribution(rank, spec.n),
         OpKind::Allreduce => reduce_contribution(rank, spec.n),
-        OpKind::Alltoall => a2a_send(rank, p, spec.n),
+        OpKind::Alltoall | OpKind::ReduceScatter => a2a_send(rank, p, spec.n),
     }
 }
 
@@ -562,6 +604,7 @@ fn fused_expected(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u6
         OpKind::Allgather => collectives::expected_result(p, spec.n),
         OpKind::Allreduce => reduce_expected(p, spec.n),
         OpKind::Alltoall => a2a_expected(rank, p, spec.n),
+        OpKind::ReduceScatter => rs_expected(rank, p, spec.n),
     }
 }
 
@@ -574,7 +617,9 @@ pub fn run_fused(
     topo: &Topology,
     machine: &MachineParams,
 ) -> FusedReport {
-    use crate::collectives::{AllreduceRegistry, AlltoallRegistry, CollectivePlan, Registry};
+    use crate::collectives::{
+        AllreduceRegistry, AlltoallRegistry, CollectivePlan, ReduceScatterRegistry, Registry,
+    };
     let p = topo.size();
 
     // --- fused world: one plan, one execution -----------------------------
@@ -629,6 +674,11 @@ pub fn run_fused(
                     }
                     OpKind::Alltoall => {
                         let mut plan = AlltoallRegistry::<u64>::standard()
+                            .plan(&s.algo, c, Shape::elems(s.n))?;
+                        plan.execute(&mine, &mut out)?;
+                    }
+                    OpKind::ReduceScatter => {
+                        let mut plan = ReduceScatterRegistry::<u64>::standard()
                             .plan(&s.algo, c, Shape::elems(s.n))?;
                         plan.execute(&mine, &mut out)?;
                     }
@@ -801,6 +851,19 @@ mod tests {
         assert!((ar.predicted - ar.vtime).abs() < 1e-12, "allreduce");
         let a2a = run_alltoall("loc-aware", &topo, &m, 2);
         assert!((a2a.predicted - a2a.vtime).abs() < 1e-12, "alltoall");
+        for algo in ["ring", "recursive-halving", "loc-aware", "model-tuned"] {
+            let rs = run_reduce_scatter(algo, &topo, &m, 2);
+            assert!(rs.verified, "reduce-scatter/{algo}: {:?}", rs.errors);
+            assert!(
+                (rs.predicted - rs.vtime).abs() < 1e-12,
+                "reduce-scatter/{algo}: predicted {:.6e} vs vtime {:.6e}",
+                rs.predicted,
+                rs.vtime
+            );
+        }
+        let rab = run_allreduce("rabenseifner", &topo, &m, 2);
+        assert!(rab.verified, "{:?}", rab.errors);
+        assert!((rab.predicted - rab.vtime).abs() < 1e-12, "rabenseifner");
     }
 
     #[test]
@@ -900,10 +963,18 @@ mod tests {
         // single-shot wrapper reports the identical modeled latency
         let single = run_alltoall("bruck", &topo, &m, 2);
         assert!((single.vtime - a2a.median_vtime).abs() < 1e-12);
+        let rs = run_reduce_scatter_repeated("loc-aware", &topo, &m, 2, 1, 3);
+        assert!(rs.verified, "{:?}", rs.errors);
+        assert_eq!(rs.per_iter_vtime.len(), 3);
+        let rs_single = run_reduce_scatter("loc-aware", &topo, &m, 2);
+        assert!((rs_single.vtime - rs.median_vtime).abs() < 1e-12);
         // plan-time failures are reported, not panicked
         let bad = run_allreduce("recursive-doubling", &Topology::regions(3, 1), &m, 1);
         assert!(!bad.verified);
         assert!(!bad.errors.is_empty());
+        let bad_rs = run_reduce_scatter("recursive-halving", &Topology::regions(3, 1), &m, 1);
+        assert!(!bad_rs.verified);
+        assert!(!bad_rs.errors.is_empty());
     }
 
     #[test]

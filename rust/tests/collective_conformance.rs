@@ -18,7 +18,7 @@ use std::collections::BTreeSet;
 
 use locag::collectives::{
     canonical_contribution, expected_result, AllreduceRegistry, AlltoallRegistry, OpKind,
-    Registry, Schedule, Shape,
+    ReduceScatterRegistry, Registry, Schedule, Shape,
 };
 use locag::comm::{CommWorld, Timing};
 use locag::model::cost;
@@ -60,6 +60,14 @@ fn a2a_send(rank: usize, p: usize, n: usize) -> Vec<u64> {
 fn a2a_expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
     (0..p * n)
         .map(|x| ((x / n.max(1)) * 1_000_003 + rank * 1_009 + x % n.max(1)) as u64)
+        .collect()
+}
+
+/// Reduce-scatter consumes the same `n·p` block layout as alltoall
+/// ([`a2a_send`]); rank `i` receives the sum over ranks of block `i`.
+fn rs_expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|j| (0..p).map(|r| (r * 1_000_003 + rank * 1_009 + j) as u64).sum())
         .collect()
 }
 
@@ -141,6 +149,28 @@ fn run_grid_point(regions: usize, ppr: usize, n: usize) -> Vec<Vec<Outcome>> {
             };
             outcomes.push((format!("alltoall/{name}"), err));
         }
+
+        let reg = ReduceScatterRegistry::<u64>::standard();
+        for name in reg.names() {
+            let err = match reg.plan(name, c, Shape::elems(n)) {
+                Err(e) => Some(e.to_string()),
+                Ok(mut plan) => {
+                    assert_eq!(plan.algorithm(), name);
+                    assert_eq!(plan.comm_size(), p);
+                    let mine = a2a_send(c.rank(), p, n);
+                    let mut out = vec![0u64; n];
+                    plan.execute(&mine, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        rs_expected(c.rank(), p, n),
+                        "reduce-scatter/{name} {regions}x{ppr} n={n} rank {}",
+                        c.rank()
+                    );
+                    None
+                }
+            };
+            outcomes.push((format!("reduce-scatter/{name}"), err));
+        }
         outcomes
     });
     run.results
@@ -157,6 +187,9 @@ fn all_registered_pairs() -> BTreeSet<String> {
     }
     for name in AlltoallRegistry::<u64>::standard().names() {
         want.insert(format!("alltoall/{name}"));
+    }
+    for name in ReduceScatterRegistry::<u64>::standard().names() {
+        want.insert(format!("reduce-scatter/{name}"));
     }
     want
 }
@@ -244,6 +277,15 @@ fn run_one_pair(
                 plan.execute(&mine, &mut out).unwrap();
                 Some(sched)
             }
+            OpKind::ReduceScatter => {
+                let reg = ReduceScatterRegistry::<u64>::standard();
+                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
+                let mine = a2a_send(c.rank(), p, n);
+                let mut out = vec![0u64; n];
+                plan.execute(&mine, &mut out).unwrap();
+                Some(sched)
+            }
         }
     });
     let scheds: Option<Vec<Schedule>> = run.results.into_iter().collect();
@@ -257,7 +299,8 @@ fn run_one_pair(
 /// the schedule.
 #[test]
 fn schedule_counts_match_traced_execution() {
-    let ops = [OpKind::Allgather, OpKind::Allreduce, OpKind::Alltoall];
+    let ops =
+        [OpKind::Allgather, OpKind::Allreduce, OpKind::Alltoall, OpKind::ReduceScatter];
     for &(regions, ppr) in SHAPES {
         let topo = Topology::regions(regions, ppr);
         let p = topo.size();
@@ -268,6 +311,7 @@ fn schedule_counts_match_traced_execution() {
                     OpKind::Allgather => Registry::<u64>::standard().names(),
                     OpKind::Allreduce => AllreduceRegistry::<u64>::standard().names(),
                     OpKind::Alltoall => AlltoallRegistry::<u64>::standard().names(),
+                    OpKind::ReduceScatter => ReduceScatterRegistry::<u64>::standard().names(),
                 };
                 for name in names {
                     let Some((scheds, traced)) = run_one_pair(&topo, op, name, n) else {
@@ -335,6 +379,125 @@ fn non_uniform_payload_shapes_are_rejected() {
     assert_eq!(total, 0);
 }
 
+/// The reduce-scatter grid, runnable by name in CI
+/// (`cargo test --test collective_conformance reduce_scatter`): every
+/// registered algorithm over every shape — including non-power-of-two `p`
+/// where the algorithm admits it — plus the `n = 0` no-op and 100%
+/// registry coverage.
+#[test]
+fn reduce_scatter_grid_conforms() {
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    for &(regions, ppr) in SHAPES {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        for &n in NS {
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| -> Vec<Outcome> {
+                let reg = ReduceScatterRegistry::<u64>::standard();
+                let mut outcomes = Vec::new();
+                for name in reg.names() {
+                    let err = match reg.plan(name, c, Shape::elems(n)) {
+                        Err(e) => Some(e.to_string()),
+                        Ok(mut plan) => {
+                            let mine = a2a_send(c.rank(), p, n);
+                            let mut out = vec![0u64; n];
+                            plan.execute(&mine, &mut out).unwrap();
+                            assert_eq!(
+                                out,
+                                rs_expected(c.rank(), p, n),
+                                "reduce-scatter/{name} {regions}x{ppr} n={n} rank {}",
+                                c.rank()
+                            );
+                            None
+                        }
+                    };
+                    outcomes.push((name.to_string(), err));
+                }
+                outcomes
+            });
+            for (rank, r) in run.results.iter().enumerate() {
+                assert_eq!(r, &run.results[0], "rank {rank} diverged at {regions}x{ppr} n={n}");
+            }
+            for (name, err) in &run.results[0] {
+                match err {
+                    None => {
+                        covered.insert(name.clone());
+                    }
+                    Some(msg) => {
+                        // only recursive halving may reject, only for the
+                        // documented precondition, never the n=0 no-op
+                        assert!(n > 0, "{name} rejected the n=0 no-op: {msg}");
+                        assert!(msg.contains("power-of-two"), "{name}: {msg}");
+                        assert!(!p.is_power_of_two(), "{name} @ p={p}: {msg}");
+                    }
+                }
+            }
+        }
+    }
+    let want: BTreeSet<String> = ReduceScatterRegistry::<u64>::standard()
+        .names()
+        .into_iter()
+        .map(str::to_string)
+        .collect();
+    let missing: Vec<&String> = want.difference(&covered).collect();
+    assert!(missing.is_empty(), "reduce-scatter algorithms never executed: {missing:?}");
+}
+
+/// Wrong-shape rejection for the new op, by name for CI: mis-sized
+/// buffers error at execute time and leak no messages.
+#[test]
+fn reduce_scatter_wrong_shape_rejects() {
+    let topo = Topology::regions(2, 2);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let p = c.size();
+        let reg = ReduceScatterRegistry::<u64>::standard();
+        let mut bad = 0usize;
+        let mut plan = reg.plan("ring", c, Shape::elems(3)).unwrap();
+        bad += plan.execute(&vec![1u64; 3 * p - 1], &mut vec![0u64; 3]).is_err() as usize;
+        bad += plan.execute(&vec![1u64; 3 * p], &mut vec![0u64; 4]).is_err() as usize;
+        bad += plan.execute(&vec![1u64; 3 * p], &mut vec![0u64; 2]).is_err() as usize;
+        // ragged one-shot (send not a multiple of p)
+        bad += locag::collectives::reduce_scatter::ring(c, &[1u64; 7]).is_err() as usize;
+        bad
+    });
+    assert!(run.results.iter().all(|&b| b == 4));
+    let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+    assert_eq!(total, 0, "rejected calls must not leak messages");
+}
+
+/// Rabenseifner allreduce passes the allreduce grid at non-power-of-two
+/// sizes with no plan-time precondition — by name for CI
+/// (`cargo test --test collective_conformance rabenseifner`). The
+/// model-tuned allreduce dispatcher therefore admits those sizes too.
+#[test]
+fn rabenseifner_allreduce_non_power_of_two_conforms() {
+    for &(regions, ppr) in &[(3usize, 2usize), (5, 2), (2, 3), (3, 3), (1, 1), (4, 4)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        for &n in NS {
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                for name in ["rabenseifner", "model-tuned"] {
+                    let mut plan = AllreduceRegistry::<u64>::standard()
+                        .plan(name, c, Shape::elems(n))
+                        .unwrap_or_else(|e| {
+                            panic!("{name} rejected {regions}x{ppr} n={n}: {e}")
+                        });
+                    let mine = ar_contribution(c.rank(), n);
+                    let mut out = vec![0u64; n];
+                    plan.execute(&mine, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        ar_expected(p, n),
+                        "{name} {regions}x{ppr} n={n} rank {}",
+                        c.rank()
+                    );
+                }
+                true
+            });
+            assert!(run.results.iter().all(|&ok| ok));
+        }
+    }
+}
+
 #[test]
 fn zero_length_plans_are_uniform_across_ops_and_algorithms() {
     // 3x3 (p = 9, non-power-of-two): even shape-rejecting algorithms must
@@ -360,6 +523,13 @@ fn zero_length_plans_are_uniform_across_ops_and_algorithms() {
             let mut out: Vec<u64> = Vec::new();
             plan.execute(&[], &mut out).unwrap();
             assert!(out.is_empty(), "alltoall/{name}");
+        }
+        for name in ReduceScatterRegistry::<u64>::standard().names() {
+            let mut plan =
+                ReduceScatterRegistry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+            let mut out: Vec<u64> = Vec::new();
+            plan.execute(&[], &mut out).unwrap();
+            assert!(out.is_empty(), "reduce-scatter/{name}");
         }
         true
     });

@@ -14,7 +14,8 @@
 use std::collections::BTreeSet;
 
 use locag::collectives::{
-    self, AllreduceRegistry, AlltoallRegistry, FuseSpec, OpKind, Registry, Shape,
+    self, AllreduceRegistry, AlltoallRegistry, FuseSpec, OpKind, ReduceScatterRegistry, Registry,
+    Shape,
 };
 use locag::comm::{Comm, CommWorld, Timing};
 use locag::topology::Topology;
@@ -44,7 +45,7 @@ fn input_for(op: OpKind, rank: usize, p: usize, n: usize, salt: usize) -> Vec<u6
             (0..n).map(|j| (rank * 1_000_003 + j + salt * 7919) as u64).collect()
         }
         OpKind::Allreduce => (0..n).map(|j| (rank * 131_071 + j + salt * 13) as u64).collect(),
-        OpKind::Alltoall => {
+        OpKind::Alltoall | OpKind::ReduceScatter => {
             let b = n.max(1);
             (0..p * n)
                 .map(|x| (rank * 1_000_003 + (x / b) * 1_009 + x % b + salt * 7919) as u64)
@@ -56,7 +57,7 @@ fn input_for(op: OpKind, rank: usize, p: usize, n: usize, salt: usize) -> Vec<u6
 fn out_len(op: OpKind, p: usize, n: usize) -> usize {
     match op {
         OpKind::Allgather | OpKind::Alltoall => n * p,
-        OpKind::Allreduce => n,
+        OpKind::Allreduce | OpKind::ReduceScatter => n,
     }
 }
 
@@ -80,6 +81,11 @@ fn run_sequential(
         }
         OpKind::Alltoall => {
             let mut plan = AlltoallRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+            plan.execute(input, out)
+        }
+        OpKind::ReduceScatter => {
+            let mut plan =
+                ReduceScatterRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?;
             plan.execute(input, out)
         }
     }
@@ -154,6 +160,9 @@ fn fused_pair_matches_sequential_for_every_registered_algorithm() {
         for name in AlltoallRegistry::<u64>::standard().names() {
             v.push((OpKind::Alltoall, name));
         }
+        for name in ReduceScatterRegistry::<u64>::standard().names() {
+            v.push((OpKind::ReduceScatter, name));
+        }
         v
     };
     for &(regions, ppr) in SHAPES {
@@ -199,6 +208,19 @@ fn heterogeneous_fusion_matches_sequential() {
             FuseSpec::new(OpKind::Allgather, "bruck", 3),
             FuseSpec::new(OpKind::Allreduce, "recursive-doubling", 2),
             FuseSpec::new(OpKind::Alltoall, "pairwise", 1),
+        ];
+        for r in run_specs(&topo, &specs) {
+            assert!(r.is_none(), "unexpected rejection at {regions}x{ppr}: {r:?}");
+        }
+    }
+    // The inverse-sibling pairing: an allgather fused with the
+    // reduce-scatter that mirrors it, plus the any-size Rabenseifner.
+    for &(regions, ppr) in &[(4usize, 4usize), (3, 3), (2, 8)] {
+        let topo = Topology::regions(regions, ppr);
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "loc-bruck", 2),
+            FuseSpec::new(OpKind::ReduceScatter, "loc-aware", 2),
+            FuseSpec::new(OpKind::Allreduce, "rabenseifner", 3),
         ];
         for r in run_specs(&topo, &specs) {
             assert!(r.is_none(), "unexpected rejection at {regions}x{ppr}: {r:?}");

@@ -267,6 +267,58 @@ fn loc_alltoall_strictly_beats_bruck_on_tracer() {
 }
 
 #[test]
+fn loc_reduce_scatter_nonlocal_messages_bounded_by_log_regions() {
+    // Documented bound: the lane exchange is the only non-local phase —
+    // ⌈log2(r)⌉ aggregated messages per rank for power-of-two region
+    // counts (lane recursive halving), r−1 otherwise (lane ring).
+    for (regions, ppr) in [(4usize, 4usize), (8, 4), (16, 4), (8, 8), (16, 2), (3, 4), (5, 2)] {
+        let topo = Topology::regions(regions, ppr);
+        let rep = sim::run_reduce_scatter("loc-aware", &topo, &MachineParams::lassen(), 2);
+        assert!(rep.verified, "{regions}x{ppr}: {:?}", rep.errors);
+        let bound = if regions.is_power_of_two() {
+            ilog2_ceil(regions) as u64
+        } else {
+            (regions - 1) as u64
+        };
+        assert!(
+            rep.trace.max_nonlocal_msgs() <= bound,
+            "{regions}x{ppr}: {} > {bound}",
+            rep.trace.max_nonlocal_msgs()
+        );
+    }
+}
+
+#[test]
+fn loc_reduce_scatter_strictly_beats_ring_on_4x4() {
+    // The paper's aggregated-transfer win, inverted: on the (4x4) world
+    // the boundary ranks of the ring forward every partial non-locally
+    // (p−1 = 15 messages), while the loc-aware lanes send exactly
+    // ⌈log2 4⌉ = 2 aggregated non-local messages — strictly fewer
+    // messages AND strictly fewer non-local bytes.
+    let topo = Topology::regions(4, 4);
+    let m = MachineParams::lassen();
+    let ring = sim::run_reduce_scatter("ring", &topo, &m, 2);
+    let loc = sim::run_reduce_scatter("loc-aware", &topo, &m, 2);
+    assert!(ring.verified && loc.verified);
+    assert_eq!(loc.trace.max_nonlocal_msgs(), 2);
+    assert_eq!(ring.trace.max_nonlocal_msgs(), 15);
+    assert!(
+        loc.trace.max_nonlocal_bytes() < ring.trace.max_nonlocal_bytes(),
+        "loc {} !< ring {}",
+        loc.trace.max_nonlocal_bytes(),
+        ring.trace.max_nonlocal_bytes()
+    );
+    assert!(
+        loc.trace.total_nonlocal_bytes() < ring.trace.total_nonlocal_bytes(),
+        "loc {} !< ring {} (total)",
+        loc.trace.total_nonlocal_bytes(),
+        ring.trace.total_nonlocal_bytes()
+    );
+    // and the modeled completion follows the traffic on the skewed machine
+    assert!(loc.vtime < ring.vtime, "loc {} !< ring {}", loc.vtime, ring.vtime);
+}
+
+#[test]
 fn fused_nonlocal_traffic_bounded_by_sum_of_constituents() {
     // Fusion can only merge messages, never add them: for every rank the
     // traced non-local message count of a fused schedule is at most the

@@ -278,6 +278,89 @@ fn allreduce_and_alltoall_hundred_executions_correct_and_leak_free() {
     }
 }
 
+/// The headline reuse property for reduce-scatter: 100 executions of one
+/// plan per registered algorithm, shifting inputs, exact results, no tag
+/// leaks — mirroring the other ops' reuse tests.
+#[test]
+fn reduce_scatter_hundred_executions_correct_and_leak_free() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let n = 3usize;
+    for algo in locag::collectives::ReduceScatterRegistry::<u64>::standard().names() {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan =
+                collectives::plan_reduce_scatter::<u64>(algo, c, Shape::elems(n)).unwrap();
+            let tag_after_plan = c.next_coll_tag();
+            let mut out = vec![0u64; n];
+            for round in 0..100u64 {
+                let mine: Vec<u64> = (0..p * n)
+                    .map(|x| (c.rank() * 1_000_003 + (x / n) * 1_009 + x % n) as u64 + round)
+                    .collect();
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..n)
+                    .map(|j| {
+                        (0..p)
+                            .map(|r| (r * 1_000_003 + c.rank() * 1_009 + j) as u64 + round)
+                            .sum()
+                    })
+                    .collect();
+                assert_eq!(out, expect, "reduce-scatter/{algo} round {round}");
+            }
+            let tag_after_100 = c.next_coll_tag();
+            assert_eq!(
+                tag_after_100,
+                tag_after_plan + 1,
+                "reduce-scatter/{algo} leaked collective tags across executions"
+            );
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "reduce-scatter/{algo}");
+    }
+}
+
+/// Allocation accounting for reduce-scatter: repeated planned executes
+/// allocate strictly less than repeated one-shot calls on the identical
+/// workload.
+#[test]
+fn planned_reduce_scatter_allocates_less_than_one_shot() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let n = 128usize;
+    let iters = 100u64;
+
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan =
+            collectives::plan_reduce_scatter::<u64>("loc-aware", c, Shape::elems(n)).unwrap();
+        let mut out = vec![0u64; n];
+        let send = vec![c.rank() as u64; n * p];
+        for _ in 0..iters {
+            plan.execute(&send, &mut out).unwrap();
+        }
+        out[0]
+    });
+    std::hint::black_box(&run.results);
+    let planned = ALLOCATED.load(Ordering::Relaxed) - before;
+
+    let before = ALLOCATED.load(Ordering::Relaxed);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let send = vec![c.rank() as u64; n * p];
+        let mut last = 0u64;
+        for _ in 0..iters {
+            last = collectives::reduce_scatter::loc_aware(c, &send).unwrap()[0];
+        }
+        last
+    });
+    std::hint::black_box(&run.results);
+    let one_shot = ALLOCATED.load(Ordering::Relaxed) - before;
+    assert!(
+        planned < one_shot,
+        "reduce-scatter: planned {planned} B must allocate less than one-shot {one_shot} B"
+    );
+}
+
 /// The PR-2 operations also construct zero sub-communicators per execute:
 /// groups and region communicators exist from plan time.
 #[test]
