@@ -42,6 +42,11 @@ pub struct BenchRow {
     pub predicted: f64,
     /// Wall-clock seconds of the in-process run (noisy; not gated).
     pub wall: f64,
+    /// Wall-clock seconds of the multi-process run, when the row was also
+    /// executed with `--backend proc` (noisy; not gated). Absent from
+    /// artifacts produced before the proc backend existed — [`parse`]
+    /// accepts both shapes, and [`compare`] never looks at it.
+    pub wall_proc: Option<f64>,
     pub verified: bool,
 }
 
@@ -52,11 +57,17 @@ impl BenchRow {
     }
 
     fn to_json(&self) -> String {
+        // `wall_proc` is emitted only when measured, so sim-only artifacts
+        // stay byte-compatible with pre-proc-backend baselines.
+        let wall_proc = match self.wall_proc {
+            Some(w) => format!("\"wall_proc\": {w:e}, "),
+            None => String::new(),
+        };
         format!(
             concat!(
                 "    {{\"op\": \"{}\", \"algo\": \"{}\", \"regions\": {}, ",
                 "\"ppr\": {}, \"p\": {}, \"n\": {}, \"vtime\": {:e}, ",
-                "\"predicted\": {:e}, \"wall\": {:e}, \"verified\": {}}}"
+                "\"predicted\": {:e}, \"wall\": {:e}, {}\"verified\": {}}}"
             ),
             self.op,
             self.algo,
@@ -67,6 +78,7 @@ impl BenchRow {
             self.vtime,
             self.predicted,
             self.wall,
+            wall_proc,
             self.verified
         )
     }
@@ -132,6 +144,7 @@ pub fn parse(doc: &str) -> Result<BenchDoc> {
             vtime: field_f64("vtime")?,
             predicted: field_f64("predicted")?,
             wall: field_f64("wall")?,
+            wall_proc: row.get("wall_proc").and_then(Json::as_f64),
             verified: matches!(row.get("verified"), Some(Json::Bool(true))),
         });
     }
@@ -275,6 +288,7 @@ mod tests {
             vtime,
             predicted: vtime,
             wall: 0.01,
+            wall_proc: None,
             verified: true,
         }
     }
@@ -367,6 +381,22 @@ mod tests {
         let baseline = vec![row("allgather", "bruck", 1e-5)];
         let mut current = baseline.clone();
         current[0].wall *= 100.0; // wall noise must never fail the gate
+        current[0].wall_proc = Some(9e9); // neither must proc wall time
         assert!(compare(&baseline, &current, 0.2).passed());
+    }
+
+    #[test]
+    fn wall_proc_column_is_optional_and_roundtrips() {
+        let mut rows = vec![row("allgather", "bruck", 1e-5)];
+        rows[0].wall_proc = Some(2.5e-3);
+        let doc = render("lassen", &rows);
+        assert!(doc.contains("\"wall_proc\""), "{doc}");
+        assert_eq!(parse(&doc).unwrap().rows, rows);
+        // Sim-only rows omit the column entirely, and artifacts written
+        // before the proc backend existed still parse (and compare: the
+        // machine+key join never touches wall columns).
+        let old = render("lassen", &[row("allgather", "bruck", 1e-5)]);
+        assert!(!old.contains("wall_proc"), "{old}");
+        assert_eq!(parse(&old).unwrap().rows[0].wall_proc, None);
     }
 }

@@ -10,6 +10,8 @@
 //! locag fuse --batch 4 --regions 2 --ppr 8             # coalescing table
 //! locag bench --json results/BENCH_collectives.json    # perf trajectory
 //! locag bench --compare results/BENCH_baseline.json    # perf-regression gate
+//! locag bench --backend proc            # + measured multi-process wall times
+//! locag fit --quick --out results/params_fitted.json   # measured α/β params
 //! locag allgather --algo loc-bruck --regions 16 --ppr 8 [--machine lassen]
 //! locag figure 9 [--out results/fig9.csv] [--max-p 1024]
 //! locag pingpong [--machine quartz]
@@ -45,7 +47,10 @@ pub fn run(argv: Vec<String>) -> Result<i32> {
         "bench" => commands::bench(&args),
         "figure" => commands::figure(&args),
         "pingpong" => commands::pingpong(&args),
+        "fit" => commands::fit(&args),
         "pattern" => commands::pattern(&args),
+        // Hidden: re-exec entry for proc-backend worker processes.
+        "__worker" => Ok(crate::transport::worker_main(&args)),
         "e2e" => commands::e2e(&args),
         "validate" => commands::validate(&args),
         "help" | "--help" | "-h" => {
@@ -80,7 +85,8 @@ COMMANDS
                --regions N       (default 16)
                --ppr N           ranks per region (default 8)
                --values N        values per rank (default 2)
-               --machine NAME    lassen | quartz (default lassen)
+               --machine NAME    lassen | quartz | a locag-params-v1 file
+                                 from `locag fit` (default lassen)
   allgather    Shorthand for `run --op allgather` (paper compatibility).
                Same options as run, u32 payloads.
   explain      Print an algorithm's communication schedule (the IR the
@@ -107,6 +113,11 @@ COMMANDS
                                     any algorithm's vtime/predicted grew
                                     >20% vs the baseline artifact (what CI
                                     runs; wall time is never gated)
+               --backend sim|proc   proc additionally executes every row
+                                    across real OS processes (shm rings +
+                                    Unix sockets) and records a wall_proc
+                                    column — carried in the artifact, never
+                                    gated (default sim)
                --machine NAME
   figure       Regenerate a figure: 3 | 7 | 8 | 9 | 10 | allreduce |
                alltoall | reduce_scatter.
@@ -116,6 +127,13 @@ COMMANDS
                --max-p N         world-size cap for the sweeps (default 1024)
   pingpong     Print the locality-class ping-pong series (Fig. 3 shape).
                --machine NAME
+  fit          Measure real per-class α/β by ping-ponging OS processes over
+               each proc-backend channel (shm ring = local class, Unix
+               socket = non-local) and least-squares fitting eager and
+               rendezvous segments; writes a locag-params-v1 JSON that
+               --machine accepts everywhere (incl. model-tuned dispatch).
+               --out FILE (default results/params_fitted.json)
+               --quick (reduced sweep, for smoke tests/CI)
   pattern      Print the step-by-step communication pattern (paper Figs.
                1 and 4 as text). --algo NAME --regions N --ppr N
   e2e          Tensor-parallel serving with a FUSED collective hot path:

@@ -30,6 +30,12 @@ pub enum Error {
     /// an algorithm that requires it).
     Precondition(String),
 
+    /// A multi-process transport failure (worker death, socket EOF, shm-ring
+    /// timeout). Carries the rank the failure is attributed to and the
+    /// schedule round that was in flight (0 when it happened during setup
+    /// or teardown rather than inside a round).
+    Transport { rank: usize, round: usize, what: String },
+
     /// PJRT runtime failures (artifact missing, compile error, shape error).
     Runtime(String),
 
@@ -57,6 +63,9 @@ impl fmt::Display for Error {
                 "datatype mismatch: payload of {bytes} bytes is not a whole number of \
                  {elem_size}-byte elements"
             ),
+            Error::Transport { rank, round, what } => {
+                write!(f, "transport failure at rank {rank} (round {round}): {what}")
+            }
             Error::InvalidTopology(s) => write!(f, "invalid topology: {s}"),
             Error::Precondition(s) => write!(f, "algorithm precondition violated: {s}"),
             Error::Runtime(s) => write!(f, "runtime error: {s}"),
@@ -96,6 +105,9 @@ mod tests {
         assert!(e.to_string().contains("expected 8"));
         let e = Error::Disconnected { rank: 3, during: "recv" };
         assert!(e.to_string().contains("recv"));
+        let e = Error::Transport { rank: 2, round: 5, what: "peer closed socket".into() };
+        let s = e.to_string();
+        assert!(s.contains("rank 2") && s.contains("round 5") && s.contains("socket"));
     }
 
     #[test]

@@ -37,6 +37,11 @@
 //! * [`sim`] — the sweep/measurement engine that runs any algorithm at a
 //!   given (p, ppn, data size) and reports virtual time, wall time and a
 //!   locality-classified message trace.
+//! * [`transport`] — a second, **multi-process** interpreter backend: the
+//!   same schedules execute across real OS processes over shared-memory
+//!   rings (local class) and Unix sockets (non-local class), bit-identical
+//!   to the in-process backend, plus `locag fit` α/β calibration from
+//!   ping-pong measurement.
 //! * [`trace`] — per-rank message/byte accounting split by locality class.
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text; see DESIGN.md).
@@ -153,6 +158,7 @@ pub mod sim;
 pub mod testkit;
 pub mod topology;
 pub mod trace;
+pub mod transport;
 pub mod util;
 
 /// Convenient re-exports of the types most programs need.

@@ -12,7 +12,15 @@
 //! absolute microseconds of the LLNL testbeds are not reproducible off-site;
 //! see DESIGN.md §Hardware-Adaptation.
 
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::{Error, Result};
 use crate::topology::Locality;
+use crate::util::json::Json;
+
+/// Schema tag of fitted-parameter files written by `locag fit`.
+pub const PARAMS_SCHEMA: &str = "locag-params-v1";
 
 /// Which message protocol a transfer uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -148,6 +156,108 @@ impl MachineParams {
         }
     }
 
+    /// Serialize to the `locag-params-v1` JSON format `locag fit` writes.
+    pub fn to_json(&self) -> String {
+        fn postal(out: &mut String, p: &Postal) {
+            let _ = write!(out, "{{\"alpha\": {:e}, \"beta\": {:e}}}", p.alpha, p.beta);
+        }
+        let mut out = String::new();
+        let _ = write!(out, "{{\n  \"schema\": \"{PARAMS_SCHEMA}\",\n");
+        let _ = write!(out, "  \"name\": \"{}\",\n  \"classes\": {{\n", self.name);
+        for (i, loc) in Locality::ALL.iter().enumerate() {
+            let c = self.class(*loc);
+            let _ = write!(out, "    \"{}\": {{\"eager\": ", loc.label());
+            postal(&mut out, &c.eager);
+            out.push_str(", \"rendezvous\": ");
+            postal(&mut out, &c.rendezvous);
+            let _ = write!(out, ", \"eager_cutoff\": {}}}", c.eager_cutoff);
+            out.push_str(if i + 1 < Locality::ALL.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Parse a `locag-params-v1` document.
+    pub fn from_json_str(doc: &str) -> Result<MachineParams> {
+        let bad = |what: &str| Error::Precondition(format!("params file: {what}"));
+        let j = Json::parse(doc).map_err(|e| bad(&format!("not valid JSON ({e})")))?;
+        match j.get("schema").and_then(Json::as_str) {
+            Some(PARAMS_SCHEMA) => {}
+            other => return Err(bad(&format!("schema {other:?}, expected {PARAMS_SCHEMA}"))),
+        }
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("fitted");
+        // Names are &'static str throughout the model layer; a loaded file
+        // can carry an arbitrary name, so intern unknown ones. Params files
+        // load O(1) times per process, so the leak is bounded.
+        let name: &'static str = match name {
+            "lassen" => "lassen",
+            "quartz" => "quartz",
+            "uniform" => "uniform",
+            "fitted" => "fitted",
+            other => Box::leak(other.to_string().into_boxed_str()),
+        };
+        let classes = j.get("classes").ok_or_else(|| bad("missing 'classes'"))?;
+        let postal = |v: &Json, what: &str| -> Result<Postal> {
+            let f = |k: &str| {
+                v.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad(&format!("missing {what}.{k}")))
+            };
+            Ok(Postal { alpha: f("alpha")?, beta: f("beta")? })
+        };
+        let class = |loc: Locality| -> Result<ClassParams> {
+            let label = loc.label();
+            let c = classes
+                .get(label)
+                .ok_or_else(|| bad(&format!("missing class '{label}'")))?;
+            Ok(ClassParams {
+                eager: postal(
+                    c.get("eager").ok_or_else(|| bad(&format!("missing {label}.eager")))?,
+                    label,
+                )?,
+                rendezvous: postal(
+                    c.get("rendezvous")
+                        .ok_or_else(|| bad(&format!("missing {label}.rendezvous")))?,
+                    label,
+                )?,
+                eager_cutoff: c
+                    .get("eager_cutoff")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(DEFAULT_EAGER_CUTOFF),
+            })
+        };
+        Ok(MachineParams {
+            name,
+            intra_socket: class(Locality::IntraSocket)?,
+            inter_socket: class(Locality::InterSocket)?,
+            inter_node: class(Locality::InterNode)?,
+        })
+    }
+
+    /// Load fitted parameters from a file written by `locag fit`.
+    pub fn load(path: &Path) -> Result<MachineParams> {
+        let doc = std::fs::read_to_string(path)?;
+        MachineParams::from_json_str(&doc)
+    }
+
+    /// Resolve a `--machine` argument: a preset name (case-insensitive) or
+    /// a path to a fitted-params file.
+    pub fn by_name_or_path(s: &str) -> Result<MachineParams> {
+        match s.to_ascii_lowercase().as_str() {
+            "lassen" => return Ok(MachineParams::lassen()),
+            "quartz" => return Ok(MachineParams::quartz()),
+            _ => {}
+        }
+        let path = Path::new(s);
+        if path.is_file() {
+            return MachineParams::load(path);
+        }
+        Err(Error::Precondition(format!(
+            "unknown machine '{s}' (valid: lassen, quartz, or a path to a \
+             locag-params-v1 file from `locag fit`)"
+        )))
+    }
+
     /// A uniform machine where every class costs the same — useful for
     /// testing that locality-aware algorithms degrade gracefully to the
     /// classic model (Eq. 2 collapses to Eq. 1).
@@ -208,6 +318,39 @@ mod tests {
             let b = m.cost(Locality::InterNode, s);
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    fn params_json_roundtrips() {
+        for m in [MachineParams::lassen(), MachineParams::quartz()] {
+            let doc = m.to_json();
+            let back = MachineParams::from_json_str(&doc).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_documents() {
+        assert!(MachineParams::from_json_str("not json").is_err());
+        assert!(MachineParams::from_json_str("{\"schema\": \"other\"}").is_err());
+        // Valid schema but missing classes.
+        let doc = format!("{{\"schema\": \"{PARAMS_SCHEMA}\", \"name\": \"x\"}}");
+        assert!(MachineParams::from_json_str(&doc).is_err());
+    }
+
+    #[test]
+    fn by_name_or_path_resolves_presets_and_files() {
+        assert_eq!(MachineParams::by_name_or_path("LASSEN").unwrap().name, "lassen");
+        assert_eq!(MachineParams::by_name_or_path("quartz").unwrap().name, "quartz");
+        assert!(MachineParams::by_name_or_path("no-such-machine").is_err());
+
+        let dir = std::env::temp_dir().join(format!("locag-params-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fitted.json");
+        std::fs::write(&path, MachineParams::lassen().to_json()).unwrap();
+        let m = MachineParams::by_name_or_path(path.to_str().unwrap()).unwrap();
+        assert_eq!(m.intra_socket, MachineParams::lassen().intra_socket);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,442 @@
+//! Byte channels between worker processes.
+//!
+//! Two channel kinds, chosen per peer pair by the topology's locality
+//! class (see the [module docs](super)):
+//!
+//! * [`ShmRing`] — a single-producer single-consumer ring buffer backed by
+//!   a file on `/dev/shm` (tmpfs), i.e. plain shared memory addressed with
+//!   `pread`/`pwrite`. One ring per *directed* intra-node pair.
+//! * Unix-domain stream sockets — one full-duplex stream per *unordered*
+//!   inter-node pair, plus one control stream from every worker to the
+//!   parent.
+//!
+//! Everything here is deadline-bounded: every blocking wait takes a
+//! [`Deadline`] and fails with a descriptive `String` instead of hanging.
+//! Callers wrap those strings into [`crate::error::Error::Transport`] with
+//! the rank/round context only they know.
+
+use std::fs::{File, OpenOptions};
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::fs::FileExt;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// A wall-clock deadline shared by every blocking operation of one worker
+/// (or of the parent's collection loop).
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `d` from now.
+    pub fn after(d: Duration) -> Deadline {
+        Deadline { at: Instant::now() + d }
+    }
+
+    /// Time left, or `None` once expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        let now = Instant::now();
+        if now >= self.at {
+            None
+        } else {
+            Some(self.at - now)
+        }
+    }
+
+    /// True once the deadline has passed.
+    pub fn expired(&self) -> bool {
+        self.remaining().is_none()
+    }
+}
+
+/// Channel-level result: the error is a bare description; rank/round
+/// context is attached by the interpreter.
+pub type ChanResult<T> = Result<T, String>;
+
+/// Sleep briefly between polls, or fail once the deadline has passed.
+fn pause(dl: &Deadline, what: &str) -> ChanResult<()> {
+    if dl.expired() {
+        return Err(format!("deadline exceeded while {what}"));
+    }
+    std::thread::sleep(Duration::from_micros(50));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// shared-memory ring
+// ---------------------------------------------------------------------------
+
+const HEAD_OFF: u64 = 0;
+const TAIL_OFF: u64 = 64;
+const DATA_OFF: u64 = 128;
+
+/// Minimum ring capacity; [`ring_capacity`] grows it for large messages.
+pub const MIN_RING_CAP: u64 = 1 << 20;
+
+/// Ring capacity for a channel whose largest single message is
+/// `max_msg_bytes` (payload + frame header). Both endpoints must compute
+/// the same value, so it is a pure function of the message bound.
+pub fn ring_capacity(max_msg_bytes: usize) -> u64 {
+    MIN_RING_CAP.max(4 * (max_msg_bytes as u64 + 16))
+}
+
+/// One direction of an intra-node byte stream over a tmpfs-backed file.
+///
+/// Layout: byte 0 holds the head counter (total bytes ever written, owned
+/// by the writer), byte 64 the tail counter (total bytes ever read, owned
+/// by the reader), and `cap` data bytes start at byte 128. Counters are
+/// absolute, so `head - tail` is the number of unread bytes and wrap-around
+/// is plain modular arithmetic. Exactly one process calls
+/// [`ShmRing::write_all`] on a given file and exactly one calls
+/// [`ShmRing::read_exact`]; `pos` caches that endpoint's own
+/// counter so only the *other* side's counter is ever re-read from the
+/// file.
+pub struct ShmRing {
+    file: File,
+    cap: u64,
+    pos: u64,
+}
+
+impl ShmRing {
+    /// Open (creating if needed) the ring file at `path` with `cap` data
+    /// bytes. Both endpoints call this with the same `cap`; `set_len` is
+    /// idempotent and tmpfs allocates pages lazily.
+    pub fn open(path: &Path, cap: u64) -> ChanResult<ShmRing> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(path)
+            .map_err(|e| format!("open shm ring {}: {e}", path.display()))?;
+        file.set_len(DATA_OFF + cap).map_err(|e| format!("size shm ring: {e}"))?;
+        Ok(ShmRing { file, cap, pos: 0 })
+    }
+
+    fn load_u64(&self, off: u64) -> ChanResult<u64> {
+        let mut b = [0u8; 8];
+        self.file.read_exact_at(&mut b, off).map_err(|e| format!("shm ring read: {e}"))?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn store_u64(&self, off: u64, v: u64) -> ChanResult<()> {
+        self.file
+            .write_all_at(&v.to_le_bytes(), off)
+            .map_err(|e| format!("shm ring write: {e}"))
+    }
+
+    fn store(&self, off: u64, buf: &[u8]) -> ChanResult<()> {
+        self.file.write_all_at(buf, off).map_err(|e| format!("shm ring write: {e}"))
+    }
+
+    fn load(&self, off: u64, buf: &mut [u8]) -> ChanResult<()> {
+        self.file.read_exact_at(buf, off).map_err(|e| format!("shm ring read: {e}"))
+    }
+
+    /// Writer side: append `buf`, waiting (bounded by `dl`) for the reader
+    /// to drain the ring when full.
+    pub fn write_all(&mut self, mut buf: &[u8], dl: &Deadline) -> ChanResult<()> {
+        while !buf.is_empty() {
+            let tail = self.load_u64(TAIL_OFF)?;
+            let free = self.cap - (self.pos - tail);
+            if free == 0 {
+                pause(dl, "waiting for shm-ring space (receiver stalled)")?;
+                continue;
+            }
+            let take = (buf.len() as u64).min(free) as usize;
+            let start = (self.pos % self.cap) as usize;
+            let first = take.min(self.cap as usize - start);
+            self.store(DATA_OFF + start as u64, &buf[..first])?;
+            if take > first {
+                self.store(DATA_OFF, &buf[first..take])?;
+            }
+            self.pos += take as u64;
+            self.store_u64(HEAD_OFF, self.pos)?;
+            buf = &buf[take..];
+        }
+        Ok(())
+    }
+
+    /// Reader side: fill `buf`, waiting (bounded by `dl`) for the writer
+    /// to produce enough bytes.
+    pub fn read_exact(&mut self, mut buf: &mut [u8], dl: &Deadline) -> ChanResult<()> {
+        while !buf.is_empty() {
+            let head = self.load_u64(HEAD_OFF)?;
+            let avail = head - self.pos;
+            if avail == 0 {
+                pause(dl, "waiting for shm-ring data")?;
+                continue;
+            }
+            let take = (buf.len() as u64).min(avail) as usize;
+            let start = (self.pos % self.cap) as usize;
+            let first = take.min(self.cap as usize - start);
+            self.load(DATA_OFF + start as u64, &mut buf[..first])?;
+            if take > first {
+                self.load(DATA_OFF, &mut buf[first..take])?;
+            }
+            self.pos += take as u64;
+            self.store_u64(TAIL_OFF, self.pos)?;
+            let rest = buf;
+            buf = &mut rest[take..];
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unix-domain sockets, deadline-bounded
+// ---------------------------------------------------------------------------
+
+fn with_timeout<T>(
+    set: impl Fn(Option<Duration>) -> std::io::Result<()>,
+    dl: &Deadline,
+    io: impl FnOnce() -> std::io::Result<T>,
+    what: &str,
+) -> ChanResult<T> {
+    let left = dl.remaining().ok_or_else(|| format!("deadline exceeded while {what}"))?;
+    set(Some(left)).map_err(|e| format!("set socket timeout: {e}"))?;
+    io().map_err(|e| match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            format!("deadline exceeded while {what}")
+        }
+        ErrorKind::UnexpectedEof | ErrorKind::BrokenPipe | ErrorKind::ConnectionReset => {
+            format!("peer closed socket while {what} (EOF)")
+        }
+        _ => format!("socket error while {what}: {e}"),
+    })
+}
+
+/// `write_all` on a Unix stream, bounded by `dl`.
+pub fn sock_write_all(s: &UnixStream, buf: &[u8], dl: &Deadline) -> ChanResult<()> {
+    let mut w = s;
+    with_timeout(|t| s.set_write_timeout(t), dl, move || w.write_all(buf), "sending")
+}
+
+/// `read_exact` on a Unix stream, bounded by `dl`.
+pub fn sock_read_exact(s: &UnixStream, buf: &mut [u8], dl: &Deadline) -> ChanResult<()> {
+    let mut r = s;
+    with_timeout(|t| s.set_read_timeout(t), dl, move || r.read_exact(buf), "receiving")
+}
+
+/// Accept one connection, bounded by `dl`. The listener must be in
+/// non-blocking mode; the accepted stream is switched back to blocking.
+pub fn accept_deadline(l: &UnixListener, dl: &Deadline) -> ChanResult<UnixStream> {
+    loop {
+        match l.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false).map_err(|e| format!("accept: {e}"))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                pause(dl, "waiting for a peer to connect")?;
+            }
+            Err(e) => return Err(format!("accept: {e}")),
+        }
+    }
+}
+
+/// Connect to `path`, retrying until the listener appears, bounded by `dl`.
+pub fn connect_deadline(path: &Path, dl: &Deadline) -> ChanResult<UnixStream> {
+    loop {
+        match UnixStream::connect(path) {
+            Ok(s) => return Ok(s),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::NotFound | ErrorKind::ConnectionRefused | ErrorKind::AddrNotAvailable
+                ) =>
+            {
+                pause(dl, &format!("connecting to {}", path.display()))?;
+            }
+            Err(e) => return Err(format!("connect {}: {e}", path.display())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// framed peer channel
+// ---------------------------------------------------------------------------
+
+/// A bidirectional framed byte channel to one peer rank. Frames are
+/// `[tag u64 LE][len u64 LE][len payload bytes]`; per-channel frame order
+/// is FIFO, which gives the per-(src, tag) FIFO matching the in-process
+/// mailboxes guarantee.
+pub enum PeerChan {
+    /// Intra-node: one ring per direction.
+    Shm { tx: ShmRing, rx: ShmRing },
+    /// Inter-node: one full-duplex stream.
+    Sock(UnixStream),
+}
+
+impl PeerChan {
+    /// Send one frame.
+    pub fn send_frame(&mut self, tag: u64, payload: &[u8], dl: &Deadline) -> ChanResult<()> {
+        let mut hdr = [0u8; 16];
+        hdr[..8].copy_from_slice(&tag.to_le_bytes());
+        hdr[8..].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        match self {
+            PeerChan::Shm { tx, .. } => {
+                tx.write_all(&hdr, dl)?;
+                tx.write_all(payload, dl)
+            }
+            PeerChan::Sock(s) => {
+                sock_write_all(s, &hdr, dl)?;
+                sock_write_all(s, payload, dl)
+            }
+        }
+    }
+
+    /// Receive the next frame in channel order.
+    pub fn recv_frame(&mut self, dl: &Deadline) -> ChanResult<(u64, Vec<u8>)> {
+        let mut hdr = [0u8; 16];
+        match self {
+            PeerChan::Shm { rx, .. } => rx.read_exact(&mut hdr, dl)?,
+            PeerChan::Sock(s) => sock_read_exact(s, &mut hdr, dl)?,
+        }
+        let tag = u64::from_le_bytes(hdr[..8].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[8..].try_into().unwrap()) as usize;
+        let mut payload = vec![0u8; len];
+        match self {
+            PeerChan::Shm { rx, .. } => rx.read_exact(&mut payload, dl)?,
+            PeerChan::Sock(s) => sock_read_exact(s, &mut payload, dl)?,
+        }
+        Ok((tag, payload))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// control frames (worker ⇄ parent)
+// ---------------------------------------------------------------------------
+
+/// Worker → parent: "I exist, my listener (if any) is bound".
+pub const CTL_HELLO: u8 = 1;
+/// Worker → parent: "all data channels are connected".
+pub const CTL_READY: u8 = 2;
+/// Worker → parent: success; payload = `[wall_nanos u64][output bytes]`.
+pub const CTL_OK: u8 = 3;
+/// Worker → parent: failure; payload = `[round u64][peer u64][utf-8 message]`.
+pub const CTL_ERR: u8 = 4;
+/// Parent → worker: every worker said hello, connect data channels now.
+pub const CTL_GO: u8 = 5;
+/// Parent → worker: every worker is ready, start executing now.
+pub const CTL_START: u8 = 6;
+
+/// Send one control frame: `[ty u8][rank u64 LE][len u64 LE][payload]`.
+pub fn ctl_send(s: &UnixStream, ty: u8, rank: u64, payload: &[u8], dl: &Deadline) -> ChanResult<()> {
+    let mut hdr = [0u8; 17];
+    hdr[0] = ty;
+    hdr[1..9].copy_from_slice(&rank.to_le_bytes());
+    hdr[9..].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    sock_write_all(s, &hdr, dl)?;
+    sock_write_all(s, payload, dl)
+}
+
+/// Receive one control frame.
+pub fn ctl_recv(s: &UnixStream, dl: &Deadline) -> ChanResult<(u8, u64, Vec<u8>)> {
+    let mut hdr = [0u8; 17];
+    sock_read_exact(s, &mut hdr, dl)?;
+    let ty = hdr[0];
+    let rank = u64::from_le_bytes(hdr[1..9].try_into().unwrap());
+    let len = u64::from_le_bytes(hdr[9..].try_into().unwrap()) as usize;
+    let mut payload = vec![0u8; len];
+    sock_read_exact(s, &mut payload, dl)?;
+    Ok((ty, rank, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_ring(name: &str, cap: u64) -> (std::path::PathBuf, ShmRing, ShmRing) {
+        let path = std::env::temp_dir().join(format!("locag-chan-test-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let tx = ShmRing::open(&path, cap).unwrap();
+        let rx = ShmRing::open(&path, cap).unwrap();
+        (path, tx, rx)
+    }
+
+    #[test]
+    fn shm_ring_roundtrip_with_wraparound() {
+        // Capacity far below the total traffic forces many wrap-arounds and
+        // exercises the writer-waits-for-reader path.
+        let (path, mut tx, mut rx) = tmp_ring("wrap", 256);
+        let dl = Deadline::after(Duration::from_secs(10));
+        let msgs: Vec<Vec<u8>> =
+            (0..40u8).map(|i| (0..97u8).map(|j| i.wrapping_mul(7) ^ j).collect()).collect();
+        let writer = std::thread::spawn({
+            let msgs = msgs.clone();
+            move || {
+                for m in &msgs {
+                    tx.write_all(m, &dl).unwrap();
+                }
+            }
+        });
+        for m in &msgs {
+            let mut got = vec![0u8; m.len()];
+            rx.read_exact(&mut got, &dl).unwrap();
+            assert_eq!(&got, m);
+        }
+        writer.join().unwrap();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn shm_ring_read_times_out_without_writer() {
+        let (path, _tx, mut rx) = tmp_ring("timeout", 256);
+        let dl = Deadline::after(Duration::from_millis(50));
+        let mut buf = [0u8; 4];
+        let err = rx.read_exact(&mut buf, &dl).unwrap_err();
+        assert!(err.contains("deadline exceeded"), "{err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn peer_chan_frames_over_shm() {
+        let (path_ab, tx_ab, rx_ab) = tmp_ring("frames-ab", 512);
+        let (path_ba, tx_ba, rx_ba) = tmp_ring("frames-ba", 512);
+        let dl = Deadline::after(Duration::from_secs(10));
+        let mut a = PeerChan::Shm { tx: tx_ab, rx: rx_ba };
+        let mut b = PeerChan::Shm { tx: tx_ba, rx: rx_ab };
+        a.send_frame(7, b"hello", &dl).unwrap();
+        a.send_frame(9, &[], &dl).unwrap();
+        let (t1, p1) = b.recv_frame(&dl).unwrap();
+        let (t2, p2) = b.recv_frame(&dl).unwrap();
+        assert_eq!((t1, p1.as_slice()), (7, b"hello".as_slice()));
+        assert_eq!((t2, p2.len()), (9, 0));
+        let big = vec![0xAB_u8; 300];
+        b.send_frame(1, &big, &dl).unwrap();
+        let (t3, p3) = a.recv_frame(&dl).unwrap();
+        assert_eq!(t3, 1);
+        assert_eq!(p3, big);
+        let _ = std::fs::remove_file(path_ab);
+        let _ = std::fs::remove_file(path_ba);
+    }
+
+    #[test]
+    fn ctl_frames_roundtrip_over_socketpair() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let dl = Deadline::after(Duration::from_secs(5));
+        ctl_send(&a, CTL_ERR, 3, b"boom", &dl).unwrap();
+        let (ty, rank, payload) = ctl_recv(&b, &dl).unwrap();
+        assert_eq!((ty, rank, payload.as_slice()), (CTL_ERR, 3, b"boom".as_slice()));
+    }
+
+    #[test]
+    fn sock_read_reports_eof() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(a);
+        let dl = Deadline::after(Duration::from_secs(1));
+        let mut buf = [0u8; 1];
+        let err = sock_read_exact(&b, &mut buf, &dl).unwrap_err();
+        assert!(err.contains("EOF") || err.contains("closed"), "{err}");
+    }
+
+    #[test]
+    fn ring_capacity_covers_large_messages() {
+        assert_eq!(ring_capacity(0), MIN_RING_CAP);
+        let big = 10 << 20;
+        assert!(ring_capacity(big) >= 4 * big as u64);
+    }
+}

@@ -1,0 +1,407 @@
+//! Measured α/β calibration (`locag fit`).
+//!
+//! Two worker processes ping-pong messages of increasing size over each
+//! physical channel kind the proc backend uses — a shared-memory ring
+//! (the *local* message class) and a Unix-domain socket (the *non-local*
+//! class) — and the parent least-squares fits `t(s) = α + β·s` per
+//! protocol segment (eager below [`DEFAULT_EAGER_CUTOFF`], rendezvous at
+//! or above it), mirroring the paper's Fig. 3 methodology of measuring
+//! each locality class separately instead of assuming constants.
+//!
+//! Everything runs on one host, so there is no real network: the
+//! inter-node class reuses the socket measurement (the most expensive
+//! channel available) and the fitted file says so in its provenance
+//! field. The point of `fit` is the *workflow* — measured parameters flow
+//! into [`MachineParams`] and from there into `model-tuned` dispatch —
+//! with honest relative asymmetry between shm and socket transports.
+
+use std::io::ErrorKind;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::chan::{
+    accept_deadline, connect_deadline, ctl_recv, ctl_send, ring_capacity, Deadline, PeerChan,
+    ShmRing, CTL_GO, CTL_HELLO, CTL_OK, CTL_READY, CTL_START,
+};
+use crate::cli::args::Args;
+use crate::error::{Error, Result};
+use crate::model::params::{ClassParams, MachineParams, Postal, DEFAULT_EAGER_CUTOFF};
+
+/// Frame tag that tells the echo side to stop.
+const DONE_TAG: u64 = u64::MAX;
+
+/// Message sizes for the full calibration sweep (bytes). Spans both
+/// protocol segments with several points each.
+pub const FIT_SIZES: [usize; 9] = [8, 64, 512, 2048, 4096, 8192, 16384, 65536, 262144];
+
+/// Reduced sweep for `--quick` smoke runs (still ≥2 points per segment).
+pub const FIT_SIZES_QUICK: [usize; 5] = [8, 512, 4096, 16384, 65536];
+
+// ---------------------------------------------------------------------------
+// least-squares fitting
+// ---------------------------------------------------------------------------
+
+/// Ordinary least squares for `t = α + β·s` over `(bytes, seconds)`
+/// samples. α is clamped to a positive floor (a fitted negative latency is
+/// measurement noise, and the cost model requires `cost(0) > 0`); β is
+/// clamped likewise so larger messages never model as free.
+fn fit_line(pts: &[(usize, f64)]) -> Postal {
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|(s, _)| *s as f64).sum();
+    let sy: f64 = pts.iter().map(|(_, t)| *t).sum();
+    let sxx: f64 = pts.iter().map(|(s, _)| (*s as f64) * (*s as f64)).sum();
+    let sxy: f64 = pts.iter().map(|(s, t)| (*s as f64) * t).sum();
+    let denom = n * sxx - sx * sx;
+    let (alpha, beta) = if pts.len() < 2 || denom.abs() < f64::EPSILON {
+        (if n > 0.0 { sy / n } else { 0.0 }, 0.0)
+    } else {
+        let beta = (n * sxy - sx * sy) / denom;
+        ((sy - beta * sx) / n, beta)
+    };
+    Postal { alpha: alpha.max(1e-9), beta: beta.max(1e-13) }
+}
+
+/// Fit one locality class from a ping-pong sweep: separate α/β per
+/// protocol segment, falling back to the whole sweep when a segment has
+/// too few points to determine a line.
+fn fit_class(pts: &[(usize, f64)]) -> ClassParams {
+    let eager_pts: Vec<(usize, f64)> =
+        pts.iter().copied().filter(|(s, _)| *s < DEFAULT_EAGER_CUTOFF).collect();
+    let rend_pts: Vec<(usize, f64)> =
+        pts.iter().copied().filter(|(s, _)| *s >= DEFAULT_EAGER_CUTOFF).collect();
+    let eager = if eager_pts.len() >= 2 { fit_line(&eager_pts) } else { fit_line(pts) };
+    let rendezvous = if rend_pts.len() >= 2 { fit_line(&rend_pts) } else { fit_line(pts) };
+    ClassParams { eager, rendezvous, eager_cutoff: DEFAULT_EAGER_CUTOFF }
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// Ping-pong worker entry, dispatched from `worker_main` on `--pingpong`.
+/// Side 0 drives and measures; side 1 echoes every frame until the DONE
+/// tag. Side 0's `CTL_OK` payload is `[size u64][half_rtt_nanos u64]` per
+/// measured size.
+pub fn pingpong_worker(args: &Args) -> i32 {
+    match pingpong_inner(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("locag fit worker: {e}");
+            1
+        }
+    }
+}
+
+fn pingpong_inner(args: &Args) -> std::result::Result<(), String> {
+    let kind = args.get_str("pingpong", "shm");
+    let side = args.get_usize("side", 0).map_err(|e| e.to_string())?;
+    let dir = PathBuf::from(args.get_str("dir", ""));
+    let reps = args.get_usize("reps", 50).map_err(|e| e.to_string())?.max(1);
+    let deadline_ms = args.get_usize("deadline-ms", 30_000).map_err(|e| e.to_string())?;
+    let dl = Deadline::after(Duration::from_millis(deadline_ms as u64));
+    let sizes: Vec<usize> = args
+        .get_str("sizes", "")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().map_err(|_| format!("bad size '{s}'")))
+        .collect::<std::result::Result<_, _>>()?;
+    let max_size = sizes.iter().copied().max().unwrap_or(8);
+
+    // The accepting side's listener must exist before HELLO so the
+    // connecting side cannot race it after GO.
+    let listener = if kind == "uds" && side == 1 {
+        let l = UnixListener::bind(dir.join("pp.sock")).map_err(|e| e.to_string())?;
+        l.set_nonblocking(true).map_err(|e| e.to_string())?;
+        Some(l)
+    } else {
+        None
+    };
+
+    let ctl = connect_deadline(&dir.join("ctl.sock"), &dl)?;
+    ctl_send(&ctl, CTL_HELLO, side as u64, &[], &dl)?;
+    expect_ctl(&ctl, CTL_GO, &dl)?;
+
+    let other = 1 - side;
+    let mut chan = match kind.as_str() {
+        "shm" => {
+            let cap = ring_capacity(max_size + 16);
+            let tx = ShmRing::open(&dir.join(format!("pp-{side}-{other}")), cap)?;
+            let rx = ShmRing::open(&dir.join(format!("pp-{other}-{side}")), cap)?;
+            PeerChan::Shm { tx, rx }
+        }
+        "uds" => {
+            if side == 0 {
+                PeerChan::Sock(connect_deadline(&dir.join("pp.sock"), &dl)?)
+            } else {
+                PeerChan::Sock(accept_deadline(listener.as_ref().unwrap(), &dl)?)
+            }
+        }
+        other => return Err(format!("unknown pingpong channel kind '{other}'")),
+    };
+
+    ctl_send(&ctl, CTL_READY, side as u64, &[], &dl)?;
+    expect_ctl(&ctl, CTL_START, &dl)?;
+
+    if side == 1 {
+        loop {
+            let (tag, payload) = chan.recv_frame(&dl)?;
+            if tag == DONE_TAG {
+                break;
+            }
+            chan.send_frame(tag, &payload, &dl)?;
+        }
+        ctl_send(&ctl, CTL_OK, side as u64, &[], &dl)?;
+        return Ok(());
+    }
+
+    let mut out = Vec::with_capacity(sizes.len() * 16);
+    for &s in &sizes {
+        let msg = vec![0u8; s];
+        for _ in 0..3 {
+            chan.send_frame(s as u64, &msg, &dl)?;
+            chan.recv_frame(&dl)?;
+        }
+        let mut best = u64::MAX;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            chan.send_frame(s as u64, &msg, &dl)?;
+            chan.recv_frame(&dl)?;
+            best = best.min(t0.elapsed().as_nanos() as u64);
+        }
+        out.extend_from_slice(&(s as u64).to_le_bytes());
+        out.extend_from_slice(&(best / 2).to_le_bytes());
+    }
+    chan.send_frame(DONE_TAG, &[], &dl)?;
+    ctl_send(&ctl, CTL_OK, side as u64, &out, &dl)?;
+    Ok(())
+}
+
+fn expect_ctl(ctl: &UnixStream, expect: u8, dl: &Deadline) -> std::result::Result<(), String> {
+    let (ty, _, _) = ctl_recv(ctl, dl)?;
+    if ty == expect {
+        Ok(())
+    } else {
+        Err(format!("expected control frame {expect}, got {ty}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parent side
+// ---------------------------------------------------------------------------
+
+struct Reap2(Vec<Child>);
+
+impl Drop for Reap2 {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn fit_err(what: impl Into<String>) -> Error {
+    Error::Transport { rank: 0, round: 0, what: what.into() }
+}
+
+/// One ping-pong sweep over `kind` ("shm" or "uds"): spawn a measuring
+/// and an echoing worker, return `(bytes, seconds)` one-way samples.
+fn run_pingpong(
+    kind: &str,
+    sizes: &[usize],
+    reps: usize,
+    deadline: Duration,
+) -> Result<Vec<(usize, f64)>> {
+    let dir = super::proc_exec::scratch_dir();
+    std::fs::create_dir_all(&dir)?;
+    let out = run_pingpong_in(&dir, kind, sizes, reps, deadline);
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+fn run_pingpong_in(
+    dir: &Path,
+    kind: &str,
+    sizes: &[usize],
+    reps: usize,
+    deadline: Duration,
+) -> Result<Vec<(usize, f64)>> {
+    let dl = Deadline::after(deadline + Duration::from_secs(2));
+    let listener = UnixListener::bind(dir.join("ctl.sock"))?;
+    listener.set_nonblocking(true)?;
+    let csv = sizes.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",");
+
+    let exe = std::env::current_exe()?;
+    let mut kids = Vec::new();
+    for side in 0..2usize {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("__worker")
+            .arg("--pingpong")
+            .arg(kind)
+            .arg("--side")
+            .arg(side.to_string())
+            .arg("--dir")
+            .arg(dir)
+            .arg("--sizes")
+            .arg(&csv)
+            .arg("--reps")
+            .arg(reps.to_string())
+            .arg("--deadline-ms")
+            .arg(deadline.as_millis().to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null());
+        kids.push(cmd.spawn()?);
+    }
+    let mut reaper = Reap2(kids);
+
+    let mut streams: [Option<UnixStream>; 2] = [None, None];
+    let mut connected = 0;
+    while connected < 2 {
+        for (side, child) in reaper.0.iter_mut().enumerate() {
+            if streams[side].is_none() {
+                if let Ok(Some(status)) = child.try_wait() {
+                    return Err(fit_err(format!(
+                        "ping-pong worker {side} exited during setup ({status})"
+                    )));
+                }
+            }
+        }
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)?;
+                let (ty, side, _) = ctl_recv(&s, &dl).map_err(fit_err)?;
+                let side = side as usize;
+                if ty != CTL_HELLO || side > 1 || streams[side].is_some() {
+                    return Err(fit_err("bad ping-pong handshake"));
+                }
+                streams[side] = Some(s);
+                connected += 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if dl.expired() {
+                    return Err(fit_err("deadline exceeded waiting for ping-pong workers"));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let streams: Vec<UnixStream> = streams.into_iter().map(Option::unwrap).collect();
+
+    for s in &streams {
+        ctl_send(s, CTL_GO, 0, &[], &dl).map_err(fit_err)?;
+    }
+    for s in &streams {
+        match ctl_recv(s, &dl).map_err(fit_err)? {
+            (CTL_READY, ..) => {}
+            (ty, ..) => return Err(fit_err(format!("unexpected control frame {ty}"))),
+        }
+    }
+    for s in &streams {
+        ctl_send(s, CTL_START, 0, &[], &dl).map_err(fit_err)?;
+    }
+
+    let mut samples = Vec::with_capacity(sizes.len());
+    for (side, s) in streams.iter().enumerate() {
+        match ctl_recv(s, &dl).map_err(fit_err)? {
+            (CTL_OK, _, payload) => {
+                if side == 0 {
+                    for pair in payload.chunks_exact(16) {
+                        let size = u64::from_le_bytes(pair[..8].try_into().unwrap()) as usize;
+                        let nanos = u64::from_le_bytes(pair[8..].try_into().unwrap());
+                        samples.push((size, nanos as f64 / 1e9));
+                    }
+                }
+            }
+            (ty, ..) => return Err(fit_err(format!("unexpected control frame {ty}"))),
+        }
+    }
+    if samples.len() != sizes.len() {
+        return Err(fit_err(format!(
+            "ping-pong returned {} samples for {} sizes",
+            samples.len(),
+            sizes.len()
+        )));
+    }
+    Ok(samples)
+}
+
+/// Calibration report: the fitted machine and the raw sweeps behind it.
+pub struct FitReport {
+    pub machine: MachineParams,
+    /// Shared-memory ring sweep: `(bytes, one-way seconds)`.
+    pub shm: Vec<(usize, f64)>,
+    /// Unix-domain socket sweep.
+    pub uds: Vec<(usize, f64)>,
+}
+
+/// Run the full calibration: ping-pong both channel kinds, fit per-class
+/// α/β, and return the machine. `quick` uses the reduced sweep.
+///
+/// Class mapping on a single host: intra-socket ← shm ring, inter-socket
+/// ← Unix socket, inter-node ← Unix socket as well (no real network is
+/// available; the JSON records this provenance).
+pub fn run_fit(quick: bool, deadline: Duration) -> Result<FitReport> {
+    let sizes: Vec<usize> =
+        if quick { FIT_SIZES_QUICK.to_vec() } else { FIT_SIZES.to_vec() };
+    let reps = if quick { 20 } else { 50 };
+    let shm = run_pingpong("shm", &sizes, reps, deadline)?;
+    let uds = run_pingpong("uds", &sizes, reps, deadline)?;
+    let machine = MachineParams {
+        name: "fitted",
+        intra_socket: fit_class(&shm),
+        inter_socket: fit_class(&uds),
+        inter_node: fit_class(&uds),
+    };
+    Ok(FitReport { machine, shm, uds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_line_recovers_affine_relation() {
+        let pts: Vec<(usize, f64)> =
+            [8usize, 64, 512, 4096].iter().map(|&s| (s, 2e-6 + 3e-9 * s as f64)).collect();
+        let p = fit_line(&pts);
+        assert!((p.alpha - 2e-6).abs() < 1e-9, "alpha {}", p.alpha);
+        assert!((p.beta - 3e-9).abs() < 1e-12, "beta {}", p.beta);
+    }
+
+    #[test]
+    fn fit_line_clamps_nonphysical_fits() {
+        // Decreasing time with size would fit β < 0: clamp to the floor.
+        let pts = vec![(8usize, 5e-6), (65536usize, 1e-6)];
+        let p = fit_line(&pts);
+        assert!(p.alpha >= 1e-9 && p.beta >= 1e-13);
+    }
+
+    #[test]
+    fn fit_class_splits_protocol_segments() {
+        // Eager segment is steep, rendezvous is flat: the two fitted betas
+        // must differ, and the cutoff must be the standard one.
+        let mut pts = Vec::new();
+        for s in [8usize, 512, 2048, 4096] {
+            pts.push((s, 1e-6 + 5e-9 * s as f64));
+        }
+        for s in [8192usize, 65536, 262144] {
+            pts.push((s, 4e-6 + 1e-10 * s as f64));
+        }
+        let c = fit_class(&pts);
+        assert_eq!(c.eager_cutoff, DEFAULT_EAGER_CUTOFF);
+        assert!(c.eager.beta > c.rendezvous.beta * 10.0);
+    }
+
+    #[test]
+    fn fit_class_falls_back_when_a_segment_is_thin() {
+        // Only one point above the cutoff: rendezvous reuses the full fit
+        // instead of producing a degenerate line.
+        let pts =
+            vec![(8usize, 1e-6), (64usize, 1.1e-6), (512usize, 1.5e-6), (16384usize, 3e-6)];
+        let c = fit_class(&pts);
+        assert!(c.rendezvous.alpha > 0.0 && c.rendezvous.beta > 0.0);
+    }
+}

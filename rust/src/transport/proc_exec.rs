@@ -1,0 +1,873 @@
+//! Parent orchestration + worker-side schedule interpretation.
+//!
+//! The parent ([`run_proc`]) spawns one worker process per rank and
+//! coordinates them over a Unix control socket with a fixed handshake:
+//! `HELLO` (worker up, its listener bound) → `GO` (connect data channels)
+//! → `READY` (channels up) → `START` (execute) → `OK`/`ERR`. Every phase
+//! is deadline-bounded, and worker death at any point surfaces as a typed
+//! [`Error::Transport`] instead of a hang.
+//!
+//! The worker side rebuilds its rank's [`Schedule`] from argv (builders
+//! are pure SPMD functions) and interprets it over [`PeerChan`]s with the
+//! exact semantics of the in-process executor: eager sends, blocking
+//! receives with FIFO matching per (source, tag), pad bytes zero-filled on
+//! send and stripped on receive, and the same local copy/reduce/rotate
+//! step definitions — which is what makes outputs bit-identical across
+//! backends.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
+use std::io::ErrorKind;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::chan::{
+    accept_deadline, connect_deadline, ctl_recv, ctl_send, ring_capacity, ChanResult, Deadline,
+    PeerChan, ShmRing, CTL_ERR, CTL_GO, CTL_HELLO, CTL_OK, CTL_READY, CTL_START,
+};
+use super::{canonical_input_bytes, ProcConfig, ProcJob, ProcReport};
+use crate::cli::args::Args;
+use crate::collectives::fuse::{self, FuseSpec};
+use crate::collectives::schedule::WorldView;
+use crate::collectives::{BufId, OpKind, Schedule, Slice, Step};
+use crate::error::{Error, Result};
+use crate::model::params::MachineParams;
+use crate::topology::{Locality, Topology};
+
+// ---------------------------------------------------------------------------
+// parent side
+// ---------------------------------------------------------------------------
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A per-run rendezvous directory, preferably on tmpfs so the "shared
+/// memory" rings really live in memory.
+pub(super) fn scratch_dir() -> PathBuf {
+    let base = if Path::new("/dev/shm").is_dir() {
+        PathBuf::from("/dev/shm")
+    } else {
+        std::env::temp_dir()
+    };
+    base.join(format!(
+        "locag-{}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Kills and reaps every remaining child on all exit paths.
+struct Reaper {
+    kids: Vec<Child>,
+}
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for c in &mut self.kids {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn transport_err(rank: usize, round: usize, what: impl Into<String>) -> Error {
+    Error::Transport { rank, round, what: what.into() }
+}
+
+/// Decode a worker's `CTL_ERR` payload: `[round u64][peer u64][message]`.
+fn decode_worker_err(sender: usize, payload: &[u8]) -> Error {
+    if payload.len() < 16 {
+        return transport_err(sender, 0, "worker sent a malformed error report");
+    }
+    let round = u64::from_le_bytes(payload[..8].try_into().unwrap()) as usize;
+    let peer = u64::from_le_bytes(payload[8..16].try_into().unwrap()) as usize;
+    let msg = String::from_utf8_lossy(&payload[16..]).into_owned();
+    let what =
+        if peer == sender { msg } else { format!("{msg} (reported by rank {sender})") };
+    transport_err(peer, round, what)
+}
+
+/// Send a parent→worker control frame; when the worker is already gone,
+/// prefer its queued `CTL_ERR` report (it may have failed setup and
+/// exited) over the broken-pipe symptom.
+fn send_or_err(s: &UnixStream, ty: u8, rank: usize, dl: &Deadline) -> Result<()> {
+    if let Err(e) = ctl_send(s, ty, 0, &[], dl) {
+        if let Ok((CTL_ERR, _, payload)) = ctl_recv(s, dl) {
+            return Err(decode_worker_err(rank, &payload));
+        }
+        return Err(transport_err(rank, 0, e));
+    }
+    Ok(())
+}
+
+fn job_args(job: &ProcJob) -> Vec<String> {
+    match job {
+        ProcJob::Single { op, algo, n, elem_bytes } => vec![
+            "--op".into(),
+            op.name().to_string(),
+            "--algo".into(),
+            algo.clone(),
+            "--n".into(),
+            n.to_string(),
+            "--elem-bytes".into(),
+            elem_bytes.to_string(),
+        ],
+        ProcJob::Fused { specs } => {
+            let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
+            vec!["--fused".into(), labels.join(";")]
+        }
+    }
+}
+
+/// Execute `job` once over `regions × ppr` worker processes and return the
+/// per-rank output bytes plus the max worker execute-phase wall time.
+///
+/// The current executable must dispatch a leading `__worker` argument to
+/// [`worker_main`] (the `locag` CLI does; so does the `proc_backend` test
+/// harness). `machine` is a preset name or a fitted-params file path, used
+/// for model-tuned and fused planning inside the workers.
+pub fn run_proc(
+    regions: usize,
+    ppr: usize,
+    job: &ProcJob,
+    machine: &str,
+    cfg: &ProcConfig,
+) -> Result<ProcReport> {
+    let dir = scratch_dir();
+    std::fs::create_dir_all(&dir)?;
+    let out = run_proc_in(&dir, regions, ppr, job, machine, cfg);
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+fn run_proc_in(
+    dir: &Path,
+    regions: usize,
+    ppr: usize,
+    job: &ProcJob,
+    machine: &str,
+    cfg: &ProcConfig,
+) -> Result<ProcReport> {
+    let p = regions * ppr;
+    if p == 0 {
+        return Err(Error::Precondition("proc backend needs at least one rank".into()));
+    }
+    if let Some(k) = cfg.kill_rank {
+        if k >= p {
+            return Err(Error::RankOutOfRange { rank: k, size: p });
+        }
+    }
+    // The parent outlives the workers' deadline slightly so their typed
+    // error reports win races against the parent's own timeout.
+    let dl = Deadline::after(cfg.deadline + Duration::from_secs(2));
+    let ctl_path = dir.join("ctl.sock");
+    let listener = UnixListener::bind(&ctl_path)?;
+    listener.set_nonblocking(true)?;
+
+    let exe = std::env::current_exe()?;
+    let mut kids = Vec::with_capacity(p);
+    for rank in 0..p {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("__worker")
+            .arg("--dir")
+            .arg(dir)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--regions")
+            .arg(regions.to_string())
+            .arg("--ppr")
+            .arg(ppr.to_string())
+            .arg("--machine")
+            .arg(machine)
+            .arg("--deadline-ms")
+            .arg(cfg.deadline.as_millis().to_string())
+            .args(job_args(job))
+            .stdin(Stdio::null())
+            .stdout(Stdio::null());
+        kids.push(cmd.spawn()?);
+    }
+    let mut reaper = Reaper { kids };
+
+    // Phase 1: accept one HELLO per rank, watching for early child deaths.
+    let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < p {
+        for (rank, child) in reaper.kids.iter_mut().enumerate() {
+            if streams[rank].is_none() {
+                if let Ok(Some(status)) = child.try_wait() {
+                    return Err(transport_err(
+                        rank,
+                        0,
+                        format!("worker process exited during setup ({status})"),
+                    ));
+                }
+            }
+        }
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false)?;
+                let (ty, rank, _) = ctl_recv(&s, &dl)
+                    .map_err(|e| transport_err(0, 0, format!("control handshake: {e}")))?;
+                let rank = rank as usize;
+                if ty != CTL_HELLO || rank >= p || streams[rank].is_some() {
+                    return Err(transport_err(rank.min(p - 1), 0, "bad control handshake"));
+                }
+                streams[rank] = Some(s);
+                connected += 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if dl.expired() {
+                    let missing =
+                        (0..p).find(|&r| streams[r].is_none()).unwrap_or(0);
+                    return Err(transport_err(
+                        missing,
+                        0,
+                        "deadline exceeded waiting for workers to start",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let streams: Vec<UnixStream> = streams.into_iter().map(Option::unwrap).collect();
+
+    // Phase 2: GO — all listeners are bound, data channels may connect.
+    for (rank, s) in streams.iter().enumerate() {
+        send_or_err(s, CTL_GO, rank, &dl)?;
+    }
+    if let Some(k) = cfg.kill_rank {
+        let _ = reaper.kids[k].kill();
+        let _ = reaper.kids[k].wait();
+    }
+
+    // Phase 3: one READY per rank (a worker that failed setup reports ERR
+    // here; a dead worker's stream reports EOF).
+    for (rank, s) in streams.iter().enumerate() {
+        match ctl_recv(s, &dl) {
+            Ok((CTL_READY, _, _)) => {}
+            Ok((CTL_ERR, _, payload)) => return Err(decode_worker_err(rank, &payload)),
+            Ok((ty, ..)) => {
+                return Err(transport_err(rank, 0, format!("unexpected control frame {ty}")))
+            }
+            Err(e) => return Err(transport_err(rank, 0, e)),
+        }
+    }
+
+    // Phase 4: START, then collect one result per rank.
+    for (rank, s) in streams.iter().enumerate() {
+        send_or_err(s, CTL_START, rank, &dl)?;
+    }
+    let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); p];
+    let mut wall = 0f64;
+    for (rank, s) in streams.iter().enumerate() {
+        match ctl_recv(s, &dl) {
+            Ok((CTL_OK, _, payload)) if payload.len() >= 8 => {
+                let nanos = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                wall = wall.max(nanos as f64 / 1e9);
+                outputs[rank] = payload[8..].to_vec();
+            }
+            Ok((CTL_ERR, _, payload)) => return Err(decode_worker_err(rank, &payload)),
+            Ok((ty, ..)) => {
+                return Err(transport_err(rank, 0, format!("unexpected control frame {ty}")))
+            }
+            Err(e) => return Err(transport_err(rank, 0, e)),
+        }
+    }
+
+    // Workers exit right after reporting; reap them gracefully (the Reaper
+    // would kill stragglers, but a clean wait avoids racing their exit).
+    let reap_dl = Deadline::after(Duration::from_secs(5));
+    for child in &mut reaper.kids {
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if reap_dl.expired() => break,
+                Ok(None) => std::thread::sleep(Duration::from_millis(1)),
+                Err(_) => break,
+            }
+        }
+    }
+    Ok(ProcReport { outputs, wall })
+}
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// A worker-side failure with the context the parent's typed error needs.
+struct WErr {
+    round: usize,
+    peer: usize,
+    what: String,
+}
+
+impl WErr {
+    fn setup(peer: usize, what: impl Into<String>) -> WErr {
+        WErr { round: 0, peer, what: what.into() }
+    }
+}
+
+/// Per-peer receive buffering: frames arrive in channel order; receives
+/// match by tag, queueing earlier frames of other tags — FIFO per
+/// (source, tag), exactly like the in-process mailboxes.
+enum Mailbox {
+    Chan { chan: PeerChan, pending: HashMap<u64, VecDeque<Vec<u8>>> },
+    /// Self-sends never leave the process.
+    Loopback { pending: HashMap<u64, VecDeque<Vec<u8>>> },
+}
+
+impl Mailbox {
+    fn send(&mut self, tag: u64, payload: Vec<u8>, dl: &Deadline) -> ChanResult<()> {
+        match self {
+            Mailbox::Chan { chan, .. } => chan.send_frame(tag, &payload, dl),
+            Mailbox::Loopback { pending } => {
+                pending.entry(tag).or_default().push_back(payload);
+                Ok(())
+            }
+        }
+    }
+
+    fn recv(&mut self, tag: u64, dl: &Deadline) -> ChanResult<Vec<u8>> {
+        match self {
+            Mailbox::Chan { chan, pending } => {
+                if let Some(m) = pending.get_mut(&tag).and_then(VecDeque::pop_front) {
+                    return Ok(m);
+                }
+                loop {
+                    let (t, m) = chan.recv_frame(dl)?;
+                    if t == tag {
+                        return Ok(m);
+                    }
+                    pending.entry(t).or_default().push_back(m);
+                }
+            }
+            Mailbox::Loopback { pending } => pending
+                .get_mut(&tag)
+                .and_then(VecDeque::pop_front)
+                .ok_or_else(|| "self-receive posted before the matching self-send".to_string()),
+        }
+    }
+}
+
+/// The set of peer ranks a schedule actually communicates with.
+fn peer_set(sched: &Schedule) -> BTreeSet<usize> {
+    let mut peers = BTreeSet::new();
+    for step in sched.steps() {
+        match step {
+            Step::Send { to, .. } => {
+                peers.insert(*to);
+            }
+            Step::Recv { from, .. } => {
+                peers.insert(*from);
+            }
+            Step::SendRecv { to, from, .. } => {
+                peers.insert(*to);
+                peers.insert(*from);
+            }
+            _ => {}
+        }
+    }
+    peers
+}
+
+/// Largest wire message (bytes, incl. pad) this schedule sends to `q`.
+fn max_wire_to(sched: &Schedule, q: usize) -> usize {
+    let mut max = 0;
+    for step in sched.steps() {
+        let (len, pad) = match step {
+            Step::Send { to, src, pad, .. } if *to == q => (src.len, *pad),
+            Step::SendRecv { to, src, pad, .. } if *to == q => (src.len, *pad),
+            _ => continue,
+        };
+        max = max.max(sched.wire_bytes(len, pad));
+    }
+    max
+}
+
+/// Largest wire message (bytes, incl. pad) this schedule receives from `q`.
+fn max_wire_from(sched: &Schedule, q: usize) -> usize {
+    let mut max = 0;
+    for step in sched.steps() {
+        let (len, pad) = match step {
+            Step::Recv { from, dst, pad, .. } if *from == q => (dst.len, *pad),
+            Step::SendRecv { from, dst, pad, .. } if *from == q => (dst.len, *pad),
+            _ => continue,
+        };
+        max = max.max(sched.wire_bytes(len, pad));
+    }
+    max
+}
+
+struct WorkerSetup {
+    dir: PathBuf,
+    rank: usize,
+    topo: Topology,
+    sched: Option<Schedule>,
+    input: Vec<u8>,
+    listener: Option<UnixListener>,
+}
+
+fn parse_fuse_label(s: &str) -> std::result::Result<FuseSpec, String> {
+    let (head, n) = s.rsplit_once('@').ok_or_else(|| format!("bad fuse spec '{s}'"))?;
+    let (op, algo) = head.split_once('/').ok_or_else(|| format!("bad fuse spec '{s}'"))?;
+    let op = OpKind::parse_or_err(op).map_err(|e| e.to_string())?;
+    let n: usize = n.parse().map_err(|_| format!("bad fuse spec '{s}'"))?;
+    Ok(FuseSpec::new(op, algo, n))
+}
+
+fn build_setup(args: &Args) -> std::result::Result<WorkerSetup, String> {
+    let dir = PathBuf::from(args.get_str("dir", ""));
+    let rank = args.get_usize("rank", 0).map_err(|e| e.to_string())?;
+    let regions = args.get_usize("regions", 1).map_err(|e| e.to_string())?;
+    let ppr = args.get_usize("ppr", 1).map_err(|e| e.to_string())?;
+    let topo = Topology::regions(regions, ppr);
+    let p = topo.size();
+    let view = WorldView::world(&topo);
+    let machine = MachineParams::by_name_or_path(&args.get_str("machine", "lassen"))
+        .map_err(|e| e.to_string())?;
+
+    let fused_arg = args.get_str("fused", "");
+    let (sched, input) = if !fused_arg.is_empty() {
+        let specs: Vec<FuseSpec> = fused_arg
+            .split(';')
+            .filter(|s| !s.is_empty())
+            .map(parse_fuse_label)
+            .collect::<std::result::Result<_, _>>()?;
+        let (mut scheds, _) =
+            fuse::fuse_world(&specs, &view, 8, &machine).map_err(|e| e.to_string())?;
+        let sched = scheds.swap_remove(rank);
+        let mut input = Vec::new();
+        for s in &specs {
+            input.extend_from_slice(&canonical_input_bytes(s.op, rank, p, s.n, 8));
+        }
+        (Some(sched), input)
+    } else {
+        let op = OpKind::parse_or_err(&args.get_str("op", "allgather"))
+            .map_err(|e| e.to_string())?;
+        let algo = args.get_str("algo", "bruck");
+        let n = args.get_usize("n", 1).map_err(|e| e.to_string())?;
+        let eb = args.get_usize("elem-bytes", 8).map_err(|e| e.to_string())?;
+        if n == 0 {
+            // Uniform zero-length contract: no traffic, empty output.
+            (None, Vec::new())
+        } else {
+            let sched = super::build_rank_schedule(op, &algo, &view, rank, n, eb, &machine)
+                .map_err(|e| e.to_string())?;
+            (Some(sched), canonical_input_bytes(op, rank, p, n, eb))
+        }
+    };
+
+    // Bind the listener for lower-rank inter-node peers *before* HELLO, so
+    // every listener exists by the time GO releases the connectors.
+    let needs_listener = sched
+        .as_ref()
+        .map(|s| {
+            peer_set(s).iter().any(|&q| {
+                q < rank && topo.classify(rank, q) == Locality::InterNode
+            })
+        })
+        .unwrap_or(false);
+    let listener = if needs_listener {
+        let l = UnixListener::bind(dir.join(format!("sock-{rank}")))
+            .map_err(|e| format!("bind data listener: {e}"))?;
+        l.set_nonblocking(true).map_err(|e| e.to_string())?;
+        Some(l)
+    } else {
+        None
+    };
+    Ok(WorkerSetup { dir, rank, topo, sched, input, listener })
+}
+
+/// Open every data channel this rank's schedule needs. Lower ranks connect
+/// to higher ranks' listeners for socket pairs; shm rings just open their
+/// files (both endpoints derive the same capacity from the matching
+/// send/recv message bounds).
+fn connect_peers(setup: &WorkerSetup, dl: &Deadline) -> std::result::Result<BTreeMap<usize, Mailbox>, WErr> {
+    let mut chans = BTreeMap::new();
+    let Some(sched) = &setup.sched else { return Ok(chans) };
+    let me = setup.rank;
+    let peers = peer_set(sched);
+    let mut expect_accept = 0usize;
+    for &q in &peers {
+        if q == me {
+            chans.insert(q, Mailbox::Loopback { pending: HashMap::new() });
+            continue;
+        }
+        if setup.topo.classify(me, q) != Locality::InterNode {
+            let tx = ShmRing::open(
+                &setup.dir.join(format!("shm-{me}-{q}")),
+                ring_capacity(max_wire_to(sched, q) + 16),
+            )
+            .map_err(|e| WErr::setup(q, e))?;
+            let rx = ShmRing::open(
+                &setup.dir.join(format!("shm-{q}-{me}")),
+                ring_capacity(max_wire_from(sched, q) + 16),
+            )
+            .map_err(|e| WErr::setup(q, e))?;
+            chans.insert(q, Mailbox::Chan { chan: PeerChan::Shm { tx, rx }, pending: HashMap::new() });
+        } else if q > me {
+            let s = connect_deadline(&setup.dir.join(format!("sock-{q}")), dl)
+                .map_err(|e| WErr::setup(q, e))?;
+            super::chan::sock_write_all(&s, &(me as u64).to_le_bytes(), dl)
+                .map_err(|e| WErr::setup(q, e))?;
+            chans.insert(q, Mailbox::Chan { chan: PeerChan::Sock(s), pending: HashMap::new() });
+        } else {
+            expect_accept += 1;
+        }
+    }
+    if expect_accept > 0 {
+        let listener = setup.listener.as_ref().ok_or_else(|| {
+            WErr::setup(me, "internal: accepting peers but no listener bound")
+        })?;
+        for _ in 0..expect_accept {
+            let s = accept_deadline(listener, dl).map_err(|e| WErr::setup(me, e))?;
+            let mut hello = [0u8; 8];
+            super::chan::sock_read_exact(&s, &mut hello, dl)
+                .map_err(|e| WErr::setup(me, e))?;
+            let q = u64::from_le_bytes(hello) as usize;
+            if !peers.contains(&q) || chans.contains_key(&q) {
+                return Err(WErr::setup(q, "unexpected data-channel hello"));
+            }
+            chans.insert(q, Mailbox::Chan { chan: PeerChan::Sock(s), pending: HashMap::new() });
+        }
+    }
+    Ok(chans)
+}
+
+// --- byte-level schedule interpreter ---------------------------------------
+
+fn slice_bytes(s: &Slice, eb: usize) -> std::ops::Range<usize> {
+    s.off * eb..(s.off + s.len) * eb
+}
+
+fn read_slice(
+    input: &[u8],
+    output: &[u8],
+    scratch: &[Vec<u8>],
+    s: &Slice,
+    eb: usize,
+) -> Vec<u8> {
+    let r = slice_bytes(s, eb);
+    match s.buf {
+        BufId::Input => input[r].to_vec(),
+        BufId::Output => output[r].to_vec(),
+        BufId::Scratch(i) => scratch[i][r].to_vec(),
+    }
+}
+
+fn write_slice(
+    output: &mut [u8],
+    scratch: &mut [Vec<u8>],
+    d: &Slice,
+    eb: usize,
+    bytes: &[u8],
+) -> std::result::Result<(), String> {
+    let r = slice_bytes(d, eb);
+    let dst = match d.buf {
+        BufId::Output => &mut output[r],
+        BufId::Scratch(i) => &mut scratch[i][r],
+        BufId::Input => return Err("schedule writes into the input buffer".into()),
+    };
+    if dst.len() != bytes.len() {
+        return Err(format!("local step size mismatch: {} vs {}", dst.len(), bytes.len()));
+    }
+    dst.copy_from_slice(bytes);
+    Ok(())
+}
+
+/// `dst[i] += src[i]` elementwise, matching the in-process `add_assign`
+/// reducer for the integer element types the canonical payloads use.
+fn reduce_bytes(eb: usize, src: &[u8], dst: &mut [u8]) -> std::result::Result<(), String> {
+    match eb {
+        8 => {
+            for (d, s) in dst.chunks_exact_mut(8).zip(src.chunks_exact(8)) {
+                let v = u64::from_ne_bytes(d[..].try_into().unwrap())
+                    .wrapping_add(u64::from_ne_bytes(s.try_into().unwrap()));
+                d.copy_from_slice(&v.to_ne_bytes());
+            }
+            Ok(())
+        }
+        4 => {
+            for (d, s) in dst.chunks_exact_mut(4).zip(src.chunks_exact(4)) {
+                let v = u32::from_ne_bytes(d[..].try_into().unwrap())
+                    .wrapping_add(u32::from_ne_bytes(s.try_into().unwrap()));
+                d.copy_from_slice(&v.to_ne_bytes());
+            }
+            Ok(())
+        }
+        other => Err(format!("unsupported element size {other} for Reduce on the proc backend")),
+    }
+}
+
+/// Byte-level `rotate_down_into`: block `j` of `src` lands in block
+/// `(j + shift) mod w` of `dst`.
+fn rotate_bytes(src: &[u8], block_bytes: usize, shift: usize, dst: &mut [u8]) {
+    debug_assert_eq!(src.len(), dst.len());
+    debug_assert!(block_bytes > 0 && src.len() % block_bytes == 0);
+    let w = src.len() / block_bytes;
+    for k in 0..w {
+        let j = (k + w - shift % w) % w;
+        dst[k * block_bytes..(k + 1) * block_bytes]
+            .copy_from_slice(&src[j * block_bytes..(j + 1) * block_bytes]);
+    }
+}
+
+fn execute_bytes(
+    sched: &Schedule,
+    me: usize,
+    input: &[u8],
+    chans: &mut BTreeMap<usize, Mailbox>,
+    dl: &Deadline,
+) -> std::result::Result<Vec<u8>, WErr> {
+    let eb = sched.elem_bytes;
+    let (in_elems, out_elems) = sched.io_lens();
+    if input.len() != in_elems * eb {
+        return Err(WErr::setup(me, "canonical input does not match the schedule's input length"));
+    }
+    let mut output = vec![0u8; out_elems * eb];
+    let mut scratch: Vec<Vec<u8>> = sched.scratch.iter().map(|&l| vec![0u8; l * eb]).collect();
+
+    let send = |chans: &mut BTreeMap<usize, Mailbox>,
+                output: &[u8],
+                scratch: &[Vec<u8>],
+                to: usize,
+                src: &Slice,
+                tag: u64,
+                pad: usize,
+                round: usize|
+     -> std::result::Result<(), WErr> {
+        let payload = read_slice(input, output, scratch, src, eb);
+        let mut wire = vec![0u8; pad + payload.len()];
+        wire[pad..].copy_from_slice(&payload);
+        chans
+            .get_mut(&to)
+            .ok_or_else(|| WErr { round, peer: to, what: "no channel to peer".into() })?
+            .send(tag, wire, dl)
+            .map_err(|what| WErr { round, peer: to, what })
+    };
+    let recv = |chans: &mut BTreeMap<usize, Mailbox>,
+                output: &mut [u8],
+                scratch: &mut [Vec<u8>],
+                from: usize,
+                dst: &Slice,
+                tag: u64,
+                pad: usize,
+                round: usize|
+     -> std::result::Result<(), WErr> {
+        let wire = chans
+            .get_mut(&from)
+            .ok_or_else(|| WErr { round, peer: from, what: "no channel to peer".into() })?
+            .recv(tag, dl)
+            .map_err(|what| WErr { round, peer: from, what })?;
+        if wire.len() != pad + dst.len * eb {
+            return Err(WErr {
+                round,
+                peer: from,
+                what: format!("wire message of {} bytes, expected {}", wire.len(), pad + dst.len * eb),
+            });
+        }
+        write_slice(output, scratch, dst, eb, &wire[pad..])
+            .map_err(|what| WErr { round, peer: from, what })
+    };
+
+    for (ri, round) in sched.rounds.iter().enumerate() {
+        let rno = ri + 1;
+        let werr = |peer: usize, what: String| WErr { round: rno, peer, what };
+        for step in &round.steps {
+            match step {
+                Step::Send { to, src, tag, pad } => {
+                    send(chans, &output, &scratch, *to, src, *tag, *pad, rno)?;
+                }
+                Step::Recv { from, dst, tag, pad } => {
+                    recv(chans, &mut output, &mut scratch, *from, dst, *tag, *pad, rno)?;
+                }
+                Step::SendRecv { to, src, from, dst, tag, pad } => {
+                    send(chans, &output, &scratch, *to, src, *tag, *pad, rno)?;
+                    recv(chans, &mut output, &mut scratch, *from, dst, *tag, *pad, rno)?;
+                }
+                Step::CopyLocal { src, dst } => {
+                    let bytes = read_slice(input, &output, &scratch, src, eb);
+                    write_slice(&mut output, &mut scratch, dst, eb, &bytes)
+                        .map_err(|w| werr(me, w))?;
+                }
+                Step::Reduce { src, dst } => {
+                    let bytes = read_slice(input, &output, &scratch, src, eb);
+                    let r = slice_bytes(dst, eb);
+                    let target = match dst.buf {
+                        BufId::Output => &mut output[r],
+                        BufId::Scratch(i) => &mut scratch[i][r],
+                        BufId::Input => {
+                            return Err(werr(me, "schedule reduces into the input buffer".into()))
+                        }
+                    };
+                    reduce_bytes(eb, &bytes, target).map_err(|w| werr(me, w))?;
+                }
+                Step::Rotate { src, dst, block, shift } => {
+                    let bytes = read_slice(input, &output, &scratch, src, eb);
+                    let mut rotated = vec![0u8; bytes.len()];
+                    rotate_bytes(&bytes, block * eb, *shift, &mut rotated);
+                    write_slice(&mut output, &mut scratch, dst, eb, &rotated)
+                        .map_err(|w| werr(me, w))?;
+                }
+            }
+        }
+    }
+    Ok(output)
+}
+
+// --- worker entry ----------------------------------------------------------
+
+fn send_err(ctl: &UnixStream, rank: usize, we: &WErr, dl: &Deadline) {
+    let mut payload = Vec::with_capacity(16 + we.what.len());
+    payload.extend_from_slice(&(we.round as u64).to_le_bytes());
+    payload.extend_from_slice(&(we.peer as u64).to_le_bytes());
+    payload.extend_from_slice(we.what.as_bytes());
+    let _ = ctl_send(ctl, CTL_ERR, rank as u64, &payload, dl);
+}
+
+fn wait_ctl(ctl: &UnixStream, expect: u8, dl: &Deadline) -> ChanResult<()> {
+    let (ty, _, _) = ctl_recv(ctl, dl)?;
+    if ty == expect {
+        Ok(())
+    } else {
+        Err(format!("expected control frame {expect}, got {ty}"))
+    }
+}
+
+/// Worker-process entry point, dispatched on the hidden `__worker` argv by
+/// the `locag` CLI and by the `proc_backend` test harness. Returns the
+/// process exit code. `args` holds everything after `__worker`.
+pub fn worker_main(args: &Args) -> i32 {
+    if !args.get_str("pingpong", "").is_empty() {
+        return super::fit::pingpong_worker(args);
+    }
+    let rank = args.get_usize("rank", 0).unwrap_or(0);
+    let deadline_ms = args.get_usize("deadline-ms", 30_000).unwrap_or(30_000);
+    let dl = Deadline::after(Duration::from_millis(deadline_ms as u64));
+    let dir = PathBuf::from(args.get_str("dir", ""));
+
+    let setup = build_setup(args);
+    let ctl = match connect_deadline(&dir.join("ctl.sock"), &dl) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("locag worker {rank}: cannot reach parent: {e}");
+            return 2;
+        }
+    };
+    if ctl_send(&ctl, CTL_HELLO, rank as u64, &[], &dl).is_err() {
+        return 2;
+    }
+    let setup = match setup {
+        Ok(s) => s,
+        Err(what) => {
+            send_err(&ctl, rank, &WErr::setup(rank, what), &dl);
+            return 1;
+        }
+    };
+    if wait_ctl(&ctl, CTL_GO, &dl).is_err() {
+        return 2;
+    }
+    let mut chans = match connect_peers(&setup, &dl) {
+        Ok(c) => c,
+        Err(we) => {
+            send_err(&ctl, rank, &we, &dl);
+            return 1;
+        }
+    };
+    if ctl_send(&ctl, CTL_READY, rank as u64, &[], &dl).is_err() {
+        return 2;
+    }
+    if wait_ctl(&ctl, CTL_START, &dl).is_err() {
+        return 2;
+    }
+    let t0 = Instant::now();
+    let result = match &setup.sched {
+        Some(sched) => execute_bytes(sched, rank, &setup.input, &mut chans, &dl),
+        None => Ok(Vec::new()),
+    };
+    match result {
+        Ok(out) => {
+            let wall_nanos = t0.elapsed().as_nanos() as u64;
+            let mut payload = Vec::with_capacity(8 + out.len());
+            payload.extend_from_slice(&wall_nanos.to_le_bytes());
+            payload.extend_from_slice(&out);
+            if ctl_send(&ctl, CTL_OK, rank as u64, &payload, &dl).is_err() {
+                return 2;
+            }
+            0
+        }
+        Err(we) => {
+            send_err(&ctl, rank, &we, &dl);
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::schedule::build_allgather;
+    use crate::collectives::Algorithm;
+
+    #[test]
+    fn rotate_bytes_matches_element_rotation() {
+        // 4 blocks of 2 u16-sized cells (block_bytes = 4), shift by 1:
+        // dst[(j + 1) % 4] = src[j].
+        let src: Vec<u8> = (0..16).collect();
+        let mut dst = vec![0u8; 16];
+        rotate_bytes(&src, 4, 1, &mut dst);
+        assert_eq!(&dst[4..8], &src[0..4]);
+        assert_eq!(&dst[0..4], &src[12..16]);
+    }
+
+    #[test]
+    fn reduce_bytes_sums_elementwise() {
+        let a = 7u64.to_ne_bytes();
+        let mut d = 5u64.to_ne_bytes().to_vec();
+        reduce_bytes(8, &a, &mut d).unwrap();
+        assert_eq!(d, 12u64.to_ne_bytes());
+        assert!(reduce_bytes(2, &[0, 0], &mut [0, 0]).is_err());
+    }
+
+    #[test]
+    fn peer_set_and_message_bounds_cover_the_bruck_schedule() {
+        let topo = Topology::regions(2, 2);
+        let view = WorldView::world(&topo);
+        let sched = build_allgather(Algorithm::Bruck, &view, 0, 3, 8).unwrap();
+        let peers = peer_set(&sched);
+        assert!(!peers.is_empty());
+        for &q in &peers {
+            assert!(q < 4);
+            // Every peer we send to has a positive message bound.
+            assert!(max_wire_to(&sched, q) > 0 || max_wire_from(&sched, q) > 0);
+        }
+    }
+
+    #[test]
+    fn fuse_labels_roundtrip() {
+        let spec = FuseSpec::new(OpKind::ReduceScatter, "loc-aware", 7);
+        let parsed = parse_fuse_label(&spec.label()).unwrap();
+        assert_eq!(parsed.op, OpKind::ReduceScatter);
+        assert_eq!(parsed.algo, "loc-aware");
+        assert_eq!(parsed.n, 7);
+        assert!(parse_fuse_label("nonsense").is_err());
+    }
+
+    #[test]
+    fn worker_err_decodes_with_peer_attribution() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&3u64.to_le_bytes());
+        payload.extend_from_slice(&2u64.to_le_bytes());
+        payload.extend_from_slice(b"deadline exceeded while receiving");
+        let e = decode_worker_err(1, &payload);
+        match e {
+            Error::Transport { rank, round, what } => {
+                assert_eq!((rank, round), (2, 3));
+                assert!(what.contains("reported by rank 1"), "{what}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Cross-backend conformance for the multi-process transport backend.
+//!
+//! `harness = false`: this binary doubles as the worker executable. The
+//! proc backend re-execs `current_exe()` with a hidden `__worker` argv to
+//! spawn one OS process per rank, so the test's `main` must dispatch that
+//! entry before running any scenario — exactly like `src/main.rs` does for
+//! the `locag` binary. (The library's `#[test]` unit tests never call
+//! `run_proc` for the same reason: under libtest, `current_exe()` is the
+//! libtest runner.)
+//!
+//! Scenarios, run sequentially:
+//!
+//! 1. an (op, algorithm) grid on small shapes where every rank's output
+//!    bytes from the proc backend (shm rings + Unix sockets) must be
+//!    **identical** to the in-process sim backend,
+//! 2. a fused multi-collective plan (including an n=0 constituent),
+//! 3. an n=0 single collective,
+//! 4. a worker killed mid-run surfaces as a typed `Error::Transport` with
+//!    the failing rank, within the configured deadline — never a hang.
+
+use std::time::{Duration, Instant};
+
+use locag::cli::Args;
+use locag::collectives::{FuseSpec, OpKind};
+use locag::error::Error;
+use locag::model::MachineParams;
+use locag::transport::{run_proc, run_sim_bytes, worker_main, ProcConfig, ProcJob};
+
+fn main() {
+    let mut args = Args::parse(std::env::args().skip(1).collect());
+    if args.positional.first().map(String::as_str) == Some("__worker") {
+        args.positional.remove(0);
+        std::process::exit(worker_main(&args));
+    }
+    conformance_grid();
+    fused_plan_conformance();
+    empty_payload_conformance();
+    killed_worker_surfaces_typed_error();
+    println!("proc_backend: all scenarios passed");
+}
+
+/// Run `job` on both backends and require byte-identical per-rank outputs.
+fn assert_conformance(regions: usize, ppr: usize, job: &ProcJob, what: &str) {
+    let sim = run_sim_bytes(regions, ppr, job, &MachineParams::lassen())
+        .unwrap_or_else(|e| panic!("{what}: sim backend failed: {e}"));
+    let proc_rep = run_proc(regions, ppr, job, "lassen", &ProcConfig::default())
+        .unwrap_or_else(|e| panic!("{what}: proc backend failed: {e}"));
+    assert_eq!(proc_rep.outputs.len(), sim.len(), "{what}: rank count differs");
+    for (rank, (got, want)) in proc_rep.outputs.iter().zip(&sim).enumerate() {
+        assert_eq!(got, want, "{what}: rank {rank} output bytes differ across backends");
+    }
+}
+
+fn single(op: OpKind, algo: &str, n: usize, elem_bytes: usize) -> ProcJob {
+    ProcJob::Single { op, algo: algo.to_string(), n, elem_bytes }
+}
+
+fn conformance_grid() {
+    // (2,2): mixed shm + socket traffic; (1,4): pure shm (one region);
+    // (2,3): non-power shape. Kept small — each point spawns `p` OS
+    // processes.
+    let ag_shapes = [(2usize, 2usize), (1, 4), (2, 3)];
+    let op_shapes = [(2usize, 2usize), (1, 4)];
+    let ns = [1usize, 3];
+    let ag_algos = ["bruck", "ring", "dissemination", "loc-bruck", "system-default", "model-tuned"];
+    let ar_algos = ["recursive-doubling", "loc-aware", "rabenseifner"];
+    let a2a_algos = ["pairwise", "bruck", "loc-aware"];
+    let rs_algos = ["ring", "loc-aware"];
+    let mut points = 0usize;
+    for (regions, ppr) in ag_shapes {
+        for n in ns {
+            for algo in ag_algos {
+                let what = format!("allgather/{algo} {regions}x{ppr} n={n}");
+                assert_conformance(regions, ppr, &single(OpKind::Allgather, algo, n, 8), &what);
+                points += 1;
+            }
+        }
+    }
+    for (regions, ppr) in op_shapes {
+        for n in ns {
+            for algo in ar_algos {
+                let what = format!("allreduce/{algo} {regions}x{ppr} n={n}");
+                assert_conformance(regions, ppr, &single(OpKind::Allreduce, algo, n, 8), &what);
+                points += 1;
+            }
+            for algo in a2a_algos {
+                let what = format!("alltoall/{algo} {regions}x{ppr} n={n}");
+                assert_conformance(regions, ppr, &single(OpKind::Alltoall, algo, n, 8), &what);
+                points += 1;
+            }
+            for algo in rs_algos {
+                let what = format!("reduce-scatter/{algo} {regions}x{ppr} n={n}");
+                assert_conformance(
+                    regions,
+                    ppr,
+                    &single(OpKind::ReduceScatter, algo, n, 8),
+                    &what,
+                );
+                points += 1;
+            }
+        }
+    }
+    // One 4-byte-element point: the wire format carries raw bytes, but the
+    // canonical generators and reduction must agree on u32 too.
+    assert_conformance(2, 2, &single(OpKind::Allgather, "bruck", 2, 4), "allgather/bruck u32");
+    assert_conformance(2, 2, &single(OpKind::Allreduce, "loc-aware", 2, 4), "allreduce u32");
+    points += 2;
+    println!("proc_backend: conformance grid passed ({points} points, all byte-identical)");
+}
+
+fn fused_plan_conformance() {
+    // The serving-loop shape: an allgather fused with the consensus
+    // allreduce, plus an n=0 constituent that must fuse away cleanly.
+    let specs = vec![
+        FuseSpec::new(OpKind::Allgather, "loc-bruck", 2),
+        FuseSpec::new(OpKind::Allreduce, "loc-aware", 1),
+        FuseSpec::new(OpKind::Alltoall, "pairwise", 0),
+    ];
+    assert_conformance(2, 2, &ProcJob::Fused { specs }, "fused loc-bruck+loc-aware+empty");
+    println!("proc_backend: fused plan conformance passed");
+}
+
+fn empty_payload_conformance() {
+    let job = single(OpKind::Allgather, "bruck", 0, 8);
+    assert_conformance(2, 2, &job, "allgather/bruck n=0");
+    let rep = run_proc(2, 2, &job, "lassen", &ProcConfig::default()).unwrap();
+    assert!(rep.outputs.iter().all(Vec::is_empty), "n=0 must produce empty outputs");
+    println!("proc_backend: n=0 conformance passed");
+}
+
+fn killed_worker_surfaces_typed_error() {
+    let cfg = ProcConfig { deadline: Duration::from_secs(5), kill_rank: Some(1) };
+    let started = Instant::now();
+    let res = run_proc(2, 2, &single(OpKind::Allgather, "bruck", 2, 8), "lassen", &cfg);
+    let elapsed = started.elapsed();
+    match res {
+        Ok(_) => panic!("run with a killed worker must not succeed"),
+        Err(Error::Transport { rank, round, ref what }) => {
+            assert_eq!(rank, 1, "the killed rank must be attributed: {what}");
+            assert_eq!(round, 0, "death before execution is round 0: {what}");
+        }
+        Err(other) => panic!("expected Error::Transport, got: {other}"),
+    }
+    // The whole point of the deadline: a dead peer is an error, not a hang.
+    assert!(
+        elapsed < Duration::from_secs(20),
+        "error took {elapsed:?}; deadline did not bound the wait"
+    );
+    println!("proc_backend: killed-worker error path passed ({elapsed:?})");
+}
