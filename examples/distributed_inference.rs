@@ -60,6 +60,7 @@ fn main() {
             fused: false,
             consensus: true,
             fuse_batch: 1,
+            ..ServeConfig::default()
         };
         let rep = serve(&cfg).expect("serve");
         assert!(

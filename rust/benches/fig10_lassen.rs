@@ -13,6 +13,7 @@ use locag::collectives::Algorithm;
 use locag::model::MachineParams;
 use locag::sim;
 use locag::topology::Topology;
+use locag::transport::Backend;
 
 fn main() {
     std::fs::create_dir_all("results").expect("mkdir results");
@@ -20,7 +21,7 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1024);
-    let fig = figures::fig10("results/fig10.csv", max_p).expect("fig10");
+    let fig = figures::fig10("results/fig10.csv", max_p, Backend::Sim).expect("fig10");
     println!("{}", fig.plot());
     println!("CSV: results/fig10.csv");
 

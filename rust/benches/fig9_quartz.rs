@@ -10,6 +10,7 @@
 //! Run: `cargo bench --bench fig9_quartz` (env `LOCAG_MAX_P` to extend)
 
 use locag::bench_harness::figures;
+use locag::transport::Backend;
 
 fn main() {
     std::fs::create_dir_all("results").expect("mkdir results");
@@ -17,7 +18,7 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1024);
-    let fig = figures::fig9("results/fig9.csv", max_p).expect("fig9");
+    let fig = figures::fig9("results/fig9.csv", max_p, Backend::Sim).expect("fig9");
     println!("{}", fig.plot());
     println!("CSV: results/fig9.csv");
 

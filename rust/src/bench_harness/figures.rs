@@ -21,6 +21,7 @@ use crate::model::closed_form::ModelConfig;
 use crate::model::MachineParams;
 use crate::sim;
 use crate::topology::{Locality, Topology};
+use crate::transport::{pool_median_wall, Backend, ProcConfig, ProcJob, ProcPool};
 use crate::util::csv::CsvWriter;
 use crate::util::fmt::{ascii_plot, Series};
 
@@ -134,6 +135,9 @@ pub const MEASURED_ALGOS: [Algorithm; 5] = [
 pub const WARMUP: usize = 2;
 /// Measured executions per figure configuration; the CSV reports the median.
 pub const ITERS: usize = 5;
+/// Largest world size the proc-backend sweeps spawn (one OS process per
+/// rank per data point; sim sweeps continue past this cap).
+pub const PROC_MAX_P: usize = 64;
 
 /// Shared engine for Figures 9 and 10: virtual-time execution of every
 /// algorithm over real mailbox message schedules.
@@ -152,9 +156,10 @@ pub fn measured_figure(
     machine: &MachineParams,
     ppns: &[usize],
     max_p: usize,
+    backend: Backend,
     out_csv: &str,
 ) -> Result<Figure> {
-    let fig = measured_op_figure(OpKind::Allgather, machine, ppns, max_p, out_csv)?;
+    let fig = measured_op_figure(OpKind::Allgather, machine, ppns, max_p, backend, out_csv)?;
     Ok(Figure { title: title.into(), series: fig.series })
 }
 
@@ -162,11 +167,20 @@ pub fn measured_figure(
 /// (the figure set for allgather, the full registry for allreduce and
 /// alltoall), plan-once/execute-`WARMUP + ITERS`, over doubling region
 /// counts. Figures 9/10 and the §6 extension sweeps all ride on it.
+///
+/// With [`Backend::Proc`] each `(regions, ppn)` point up to [`PROC_MAX_P`]
+/// also runs on a persistent multi-process pool — one [`ProcPool`] per
+/// shape, spawned and handshaken once, serving every algorithm's
+/// plan-once/execute-many rows — and the median timed execute lands in a
+/// `proc_seconds` CSV column (empty on sim rows) plus a `(proc)` plot
+/// series. The regions loop sits outside the algorithm loop for exactly
+/// this reason; sim series keep their (measured, model) pair order.
 pub fn measured_op_figure(
     op: OpKind,
     machine: &MachineParams,
     ppns: &[usize],
     max_p: usize,
+    backend: Backend,
     out_csv: &str,
 ) -> Result<Figure> {
     let n_vals = 2usize;
@@ -188,16 +202,25 @@ pub fn measured_op_figure(
             "predicted_seconds",
             "max_nonlocal_msgs",
             "verified",
+            "proc_seconds",
         ],
     )?;
     let mut series = Vec::new();
     for &ppn in ppns {
-        for algo in &algos {
-            let mut pts = Vec::new();
-            let mut pred_pts = Vec::new();
-            let mut regions = 2usize;
-            while regions * ppn <= max_p {
-                let topo = Topology::regions(regions, ppn);
+        let mut pts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); algos.len()];
+        let mut pred_pts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); algos.len()];
+        let mut proc_pts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); algos.len()];
+        let mut regions = 2usize;
+        while regions * ppn <= max_p {
+            let topo = Topology::regions(regions, ppn);
+            let mut pool: Option<ProcPool> = None;
+            if backend == Backend::Proc && regions * ppn <= PROC_MAX_P {
+                match ProcPool::spawn(regions, ppn, machine.name, &ProcConfig::default()) {
+                    Ok(p) => pool = Some(p),
+                    Err(e) => eprintln!("warning: proc pool {regions}x{ppn}: {e}"),
+                }
+            }
+            for (ai, algo) in algos.iter().enumerate() {
                 let (seconds, predicted, nl, verified) = match op {
                     OpKind::Allgather => {
                         let a = Algorithm::parse(algo).expect("registry name");
@@ -228,6 +251,27 @@ pub fn measured_op_figure(
                         (rep.median_vtime, rep.predicted, nl, rep.verified)
                     }
                 };
+                let mut proc_seconds = None;
+                let mut drop_pool = false;
+                if let Some(pl) = pool.as_mut() {
+                    let job =
+                        ProcJob::Single { op, algo: (*algo).to_string(), n: n_vals, elem_bytes: 8 };
+                    match pool_median_wall(pl, &job, WARMUP, ITERS) {
+                        Ok(wsec) => proc_seconds = Some(wsec),
+                        Err(e) => {
+                            eprintln!(
+                                "warning: proc backend skipped {op}/{algo} {regions}x{ppn}: {e}"
+                            );
+                            // A poisoned pool cannot serve later rows of
+                            // this shape; drop it (the next shape spawns
+                            // its own anyway).
+                            drop_pool = true;
+                        }
+                    }
+                }
+                if drop_pool {
+                    pool = None;
+                }
                 w.row(&csv_row![
                     regions,
                     ppn,
@@ -235,16 +279,33 @@ pub fn measured_op_figure(
                     format!("{seconds:.3e}"),
                     format!("{predicted:.3e}"),
                     nl,
-                    verified
+                    verified,
+                    proc_seconds.map(|s| format!("{s:.3e}")).unwrap_or_default()
                 ])?;
-                pts.push((regions as f64, seconds));
-                pred_pts.push((regions as f64, predicted));
-                regions *= 2;
+                pts[ai].push((regions as f64, seconds));
+                pred_pts[ai].push((regions as f64, predicted));
+                if let Some(s) = proc_seconds {
+                    proc_pts[ai].push((regions as f64, s));
+                }
             }
-            series.push((format!("{algo} ppn={ppn}"), pts));
+            if let Some(mut p) = pool.take() {
+                let _ = p.shutdown();
+            }
+            regions *= 2;
+        }
+        for (ai, algo) in algos.iter().enumerate() {
+            series.push((format!("{algo} ppn={ppn}"), std::mem::take(&mut pts[ai])));
             // The predicted-vs-measured overlay: the IR cost model's curve
             // next to the virtual-time measurement it predicts.
-            series.push((format!("{algo} ppn={ppn} (model)"), pred_pts));
+            series.push((format!("{algo} ppn={ppn} (model)"), std::mem::take(&mut pred_pts[ai])));
+        }
+        // Proc wall-clock series ride after the sim pairs so existing
+        // (measured, model) consumers keep their ordering.
+        for (ai, algo) in algos.iter().enumerate() {
+            if !proc_pts[ai].is_empty() {
+                let label = format!("{algo} ppn={ppn} (proc)");
+                series.push((label, std::mem::take(&mut proc_pts[ai])));
+            }
         }
     }
     w.flush()?;
@@ -255,40 +316,45 @@ pub fn measured_op_figure(
 }
 
 /// The §6 allreduce sweep: recursive doubling vs locality-aware regional.
-pub fn fig_allreduce(out_csv: &str, max_p: usize) -> Result<Figure> {
-    measured_op_figure(OpKind::Allreduce, &MachineParams::lassen(), &[4, 16], max_p, out_csv)
+pub fn fig_allreduce(out_csv: &str, max_p: usize, backend: Backend) -> Result<Figure> {
+    let m = MachineParams::lassen();
+    measured_op_figure(OpKind::Allreduce, &m, &[4, 16], max_p, backend, out_csv)
 }
 
 /// The §6 alltoall sweep: dispatch, pairwise, Bruck, locality-aware.
-pub fn fig_alltoall(out_csv: &str, max_p: usize) -> Result<Figure> {
-    measured_op_figure(OpKind::Alltoall, &MachineParams::lassen(), &[4, 16], max_p, out_csv)
+pub fn fig_alltoall(out_csv: &str, max_p: usize, backend: Backend) -> Result<Figure> {
+    let m = MachineParams::lassen();
+    measured_op_figure(OpKind::Alltoall, &m, &[4, 16], max_p, backend, out_csv)
 }
 
 /// The reduce-scatter sweep: ring, recursive halving, locality-aware and
 /// the model-tuned dispatcher (the allgather's inverse sibling).
-pub fn fig_reduce_scatter(out_csv: &str, max_p: usize) -> Result<Figure> {
-    measured_op_figure(OpKind::ReduceScatter, &MachineParams::lassen(), &[4, 16], max_p, out_csv)
+pub fn fig_reduce_scatter(out_csv: &str, max_p: usize, backend: Backend) -> Result<Figure> {
+    let m = MachineParams::lassen();
+    measured_op_figure(OpKind::ReduceScatter, &m, &[4, 16], max_p, backend, out_csv)
 }
 
 /// Figure 9: Quartz (node regions).
-pub fn fig9(out_csv: &str, max_p: usize) -> Result<Figure> {
+pub fn fig9(out_csv: &str, max_p: usize, backend: Backend) -> Result<Figure> {
     measured_figure(
         "Fig 9: measured (virtual-time) allgather cost on Quartz model",
         &MachineParams::quartz(),
         &[4, 16],
         max_p,
+        backend,
         out_csv,
     )
 }
 
 /// Figure 10: Lassen (socket regions; single socket per node used, so
 /// non-local = inter-node exactly as in the paper's setup).
-pub fn fig10(out_csv: &str, max_p: usize) -> Result<Figure> {
+pub fn fig10(out_csv: &str, max_p: usize, backend: Backend) -> Result<Figure> {
     measured_figure(
         "Fig 10: measured (virtual-time) allgather cost on Lassen model",
         &MachineParams::lassen(),
         &[4, 16],
         max_p,
+        backend,
         out_csv,
     )
 }
@@ -345,6 +411,7 @@ mod tests {
                 &MachineParams::lassen(),
                 &[4],
                 32,
+                Backend::Sim,
                 &tmp(op.name()),
             )
             .unwrap();
@@ -357,18 +424,14 @@ mod tests {
 
     #[test]
     fn measured_figure_small_sweep_verifies() {
-        let f = measured_figure(
-            "t",
-            &MachineParams::quartz(),
-            &[4],
-            64,
-            &tmp("f9s"),
-        )
-        .unwrap();
-        // one measured + one predicted-overlay series per algorithm
+        let f = measured_figure("t", &MachineParams::quartz(), &[4], 64, Backend::Sim, &tmp("f9s"))
+            .unwrap();
+        // one measured + one predicted-overlay series per algorithm; sim
+        // sweeps never grow a `(proc)` series
         assert_eq!(f.series.len(), 2 * MEASURED_ALGOS.len());
-        for (_, pts) in &f.series {
+        for (label, pts) in &f.series {
             assert!(!pts.is_empty());
+            assert!(!label.contains("(proc)"), "{label}");
         }
     }
 
@@ -376,7 +439,8 @@ mod tests {
     fn predicted_overlay_matches_measured_exactly() {
         // The overlay is the IR cost model's prediction; on the virtual
         // transport it equals the measurement.
-        let f = measured_figure("t", &MachineParams::lassen(), &[4], 32, &tmp("ovl")).unwrap();
+        let f = measured_figure("t", &MachineParams::lassen(), &[4], 32, Backend::Sim, &tmp("ovl"))
+            .unwrap();
         for pair in f.series.chunks(2) {
             let (measured, predicted) = (&pair[0], &pair[1]);
             assert!(predicted.0.ends_with("(model)"), "{}", predicted.0);

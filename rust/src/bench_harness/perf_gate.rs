@@ -12,8 +12,11 @@
 //! Only the *deterministic* metrics gate: `vtime` and `predicted` are pure
 //! functions of (schedule, machine model), identical on every honest run
 //! of the same source — so a flagged regression is a real scheduling or
-//! cost-model change, never CI noise. `wall` is recorded for trend
-//! curiosity and deliberately ignored by the gate.
+//! cost-model change, never CI noise. `wall` and `wall_proc` are recorded
+//! for trend curiosity and deliberately ignored by the gate; a baseline
+//! and a current run may disagree about which rows carry `wall_proc` at
+//! all (one ran `--backend proc`, the other didn't) and the comparison
+//! must neither error nor gate on the difference.
 //!
 //! The CI step is reproducible locally:
 //! `locag bench --json NEW.json --compare OLD.json` exits non-zero iff
@@ -221,9 +224,13 @@ impl CompareReport {
 /// (`vtime`, `predicted`) grows by more than `threshold` (fractional, e.g.
 /// `0.2`) over the baseline row with the same [`BenchRow::key`]. Rows on
 /// only one side are counted but never fail the gate; non-positive
-/// baseline values are skipped (no meaningful ratio). Errors when the two
-/// docs were measured against different machine models — those vtimes are
-/// not comparable (regenerate the baseline with the matching `--machine`).
+/// baseline values are skipped (no meaningful ratio). Wall columns are
+/// never consulted: rows whose `wall_proc` is present on one side and
+/// absent on the other (only one run used `--backend proc`) still join on
+/// their key and gate only on the deterministic metrics. Errors when the
+/// two docs were measured against different machine models — those vtimes
+/// are not comparable (regenerate the baseline with the matching
+/// `--machine`).
 pub fn compare_docs(
     baseline: &BenchDoc,
     current: &BenchDoc,
@@ -383,6 +390,43 @@ mod tests {
         current[0].wall *= 100.0; // wall noise must never fail the gate
         current[0].wall_proc = Some(9e9); // neither must proc wall time
         assert!(compare(&baseline, &current, 0.2).passed());
+    }
+
+    #[test]
+    fn mixed_wall_proc_presence_joins_cleanly_in_both_directions() {
+        // Direction 1: the baseline predates the proc backend (no
+        // wall_proc anywhere), the current run measured it. Direction 2:
+        // the baseline has proc walls, the current run skipped --backend
+        // proc. Both must join on the row key, gate only vtime/predicted,
+        // and never error — even when the same artifact mixes rows with
+        // and without the column.
+        let mut with_proc = vec![row("allgather", "bruck", 1e-5), row("allgather", "ring", 2e-5)];
+        with_proc[0].wall_proc = Some(3.5e-3); // mixed presence within one doc
+        let without_proc = vec![row("allgather", "bruck", 1e-5), row("allgather", "ring", 2e-5)];
+
+        let old_doc = BenchDoc { machine: "lassen".to_string(), rows: without_proc.clone() };
+        let new_doc = BenchDoc { machine: "lassen".to_string(), rows: with_proc.clone() };
+
+        let rep = compare_docs(&old_doc, &new_doc, 0.2).unwrap();
+        assert!(rep.passed());
+        assert_eq!(rep.compared, 2);
+        assert_eq!(rep.only_baseline + rep.only_current, 0);
+
+        let rep = compare_docs(&new_doc, &old_doc, 0.2).unwrap();
+        assert!(rep.passed());
+        assert_eq!(rep.compared, 2);
+
+        // A genuine vtime regression still fires regardless of which side
+        // carries the proc column.
+        let mut slowed = without_proc.clone();
+        slowed[0].vtime *= 2.0;
+        assert!(!compare(&with_proc, &slowed, 0.2).passed());
+
+        // And the serialized forms of both docs survive the round trip, so
+        // the CI artifact diff sees the same rows this test does.
+        let rt = parse(&render("lassen", &with_proc)).unwrap();
+        assert_eq!(rt.rows, with_proc);
+        assert!(compare_docs(&rt, &old_doc, 0.2).unwrap().passed());
     }
 
     #[test]

@@ -206,11 +206,16 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
          * sim (default): all ranks are threads in this process, timed by\n\
            the virtual postal clock. Deterministic, fast, exact message\n\
            accounting — what the figures, the perf gate and `validate` use.\n\
-         * proc (`--backend proc` on `locag bench`): one OS process per\n\
-           rank; region-local pairs exchange over shared-memory rings and\n\
-           cross-region pairs over Unix sockets — the paper's local vs\n\
-           non-local split made physical. Outputs are bit-identical to sim;\n\
-           use it for real wall-clock numbers.\n\
+         * proc (`--backend proc` on `locag bench` / `locag figure`,\n\
+           `--collective-backend proc` on `locag e2e`): one OS process per\n\
+           rank in a persistent pool. Workers spawn and complete the\n\
+           channel handshake ONCE; each schedule ships to them once; every\n\
+           later execute reuses the same shared-memory rings (region-local\n\
+           pairs) and Unix sockets (cross-region pairs) with only input\n\
+           and output deltas crossing the control path — the paper's local\n\
+           vs non-local split made physical, plan-once/execute-many.\n\
+           Outputs are bit-identical to sim; `wall_proc` is the median\n\
+           repeat-execute time, never a per-row spawn+handshake+run.\n\
          \n\
          To ground the cost model in measurement instead of the built-in\n\
          presets, run `locag fit [--quick] --out results/params_fitted.json`:\n\
@@ -249,8 +254,13 @@ pub fn allgather(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `locag figure <id>` — regenerate one paper figure.
+/// `locag figure <id>` — regenerate one paper figure. `--backend proc`
+/// adds measured multi-process wall times (one persistent pool per
+/// topology shape, plan-once/execute-many) to the measured sweeps as a
+/// `proc_seconds` CSV column and `(proc)` plot series.
 pub fn figure(args: &Args) -> Result<i32> {
+    use crate::transport::Backend;
+
     let id = args
         .positional
         .first()
@@ -264,15 +274,19 @@ pub fn figure(args: &Args) -> Result<i32> {
         }
     }
     let max_p = args.get_usize("max-p", 1024)?;
+    let backend = Backend::parse_or_err(&args.get_str("backend", "sim"))?;
+    if backend == Backend::Proc && matches!(id.as_str(), "3" | "7" | "8") {
+        eprintln!("warning: figure {id} is model-derived; --backend proc has no effect on it");
+    }
     let fig = match id.as_str() {
         "3" => figures::fig3(&out)?,
         "7" => figures::fig7(&out)?,
         "8" => figures::fig8(&out)?,
-        "9" => figures::fig9(&out, max_p)?,
-        "10" => figures::fig10(&out, max_p)?,
-        "allreduce" => figures::fig_allreduce(&out, max_p)?,
-        "alltoall" => figures::fig_alltoall(&out, max_p)?,
-        "reduce-scatter" | "reduce_scatter" => figures::fig_reduce_scatter(&out, max_p)?,
+        "9" => figures::fig9(&out, max_p, backend)?,
+        "10" => figures::fig10(&out, max_p, backend)?,
+        "allreduce" => figures::fig_allreduce(&out, max_p, backend)?,
+        "alltoall" => figures::fig_alltoall(&out, max_p, backend)?,
+        "reduce-scatter" | "reduce_scatter" => figures::fig_reduce_scatter(&out, max_p, backend)?,
         other => {
             return Err(Error::Precondition(format!(
                 "unknown figure '{other}' (expected 3|7|8|9|10|allreduce|alltoall|reduce_scatter)"
@@ -602,7 +616,7 @@ pub fn explain(args: &Args) -> Result<i32> {
 /// exactly what the CI gate step runs, reproducible locally.
 pub fn bench(args: &Args) -> Result<i32> {
     use crate::bench_harness::perf_gate::{self, BenchRow};
-    use crate::transport::{run_proc, Backend, ProcConfig, ProcJob};
+    use crate::transport::{pool_median_wall, Backend, ProcConfig, ProcJob, ProcPool};
 
     let path = args.get_str("json", "results/BENCH_collectives.json");
     if let Some(parent) = std::path::Path::new(&path).parent() {
@@ -613,6 +627,9 @@ pub fn bench(args: &Args) -> Result<i32> {
     let machine_name = args.get_str("machine", "lassen");
     let m = machine_by_name(&machine_name)?;
     let backend = Backend::parse_or_err(&args.get_str("backend", "sim"))?;
+    let proc_iters = args.get_usize("proc-iters", 5)?.max(1);
+    // Discarded executes per proc row before the timed iterations.
+    const PROC_WARMUP: usize = 2;
     let ag_algos = [
         Algorithm::SystemDefault,
         Algorithm::Bruck,
@@ -655,24 +672,44 @@ pub fn bench(args: &Args) -> Result<i32> {
         rows.push(row);
     };
     // With `--backend proc` each row ALSO executes across real OS
-    // processes (shm rings + sockets) and records the measured wall time;
-    // the deterministic gated metrics stay sim-derived either way. A row
-    // the proc backend cannot run only costs a warning, never the artifact.
-    let proc_wall = |regions: usize, ppr: usize, op: OpKind, algo: &str, n: usize| {
-        if backend != Backend::Proc {
-            return None;
-        }
-        let job = ProcJob::Single { op, algo: algo.to_string(), n, elem_bytes: 8 };
-        match run_proc(regions, ppr, &job, &machine_name, &ProcConfig::default()) {
-            Ok(rep) => Some(rep.wall),
-            Err(e) => {
-                eprintln!("warning: proc backend skipped {op}/{algo} {regions}x{ppr} n={n}: {e}");
-                None
-            }
-        }
-    };
+    // processes. ONE persistent pool per topology shape serves every proc
+    // row of that shape: workers spawn and complete the channel handshake
+    // once, each row ships its schedule once, then runs PROC_WARMUP
+    // discarded + `--proc-iters` timed executes over the same shm rings
+    // and sockets — `wall_proc` is the median timed execute (the
+    // plan-once/execute-many hot path), never a spawn+handshake+run. The
+    // deterministic gated metrics stay sim-derived either way; a row the
+    // pool cannot run only costs a warning, and a poisoned pool (worker
+    // death, deadline) is dropped so the next row respawns it.
     for (regions, ppr) in shapes {
         let topo = Topology::regions(regions, ppr);
+        let mut pool: Option<ProcPool> = None;
+        let mut proc_wall = |op: OpKind, algo: &str, n: usize| -> Option<f64> {
+            if backend != Backend::Proc {
+                return None;
+            }
+            if pool.is_none() {
+                match ProcPool::spawn(regions, ppr, &machine_name, &ProcConfig::default()) {
+                    Ok(p) => pool = Some(p),
+                    Err(e) => {
+                        eprintln!("warning: proc pool {regions}x{ppr} failed to spawn: {e}");
+                        return None;
+                    }
+                }
+            }
+            let job = ProcJob::Single { op, algo: algo.to_string(), n, elem_bytes: 8 };
+            let pl = pool.as_mut().expect("spawned above");
+            match pool_median_wall(pl, &job, PROC_WARMUP, proc_iters) {
+                Ok(w) => Some(w),
+                Err(e) => {
+                    eprintln!(
+                        "warning: proc backend skipped {op}/{algo} {regions}x{ppr} n={n}: {e}"
+                    );
+                    pool = None;
+                    None
+                }
+            }
+        };
         for n in ns {
             for algo in ag_algos {
                 let rep = sim::run_allgather(algo, &topo, &m, n);
@@ -686,7 +723,7 @@ pub fn bench(args: &Args) -> Result<i32> {
                     vtime: rep.vtime,
                     predicted: rep.predicted,
                     wall: rep.wall,
-                    wall_proc: proc_wall(regions, ppr, OpKind::Allgather, algo.name(), n),
+                    wall_proc: proc_wall(OpKind::Allgather, algo.name(), n),
                     verified: rep.verified,
                 });
             }
@@ -702,10 +739,13 @@ pub fn bench(args: &Args) -> Result<i32> {
                     vtime: rep.vtime,
                     predicted: rep.predicted,
                     wall: rep.wall,
-                    wall_proc: proc_wall(regions, ppr, OpKind::ReduceScatter, algo, n),
+                    wall_proc: proc_wall(OpKind::ReduceScatter, algo, n),
                     verified: rep.verified,
                 });
             }
+        }
+        if let Some(mut p) = pool.take() {
+            let _ = p.shutdown();
         }
     }
     let doc = perf_gate::render(m.name, &rows);
@@ -754,6 +794,11 @@ pub fn fit(args: &Args) -> Result<i32> {
         if quick { "quick" } else { "full" }
     );
     let report = crate::transport::fit::run_fit(quick, deadline)?;
+    // Typed calibration warnings (thin or degenerate protocol segments):
+    // the fit is still written, but the flagged lines are underdetermined.
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
     let classes = [
         ("intra-socket (shm)", &report.machine.intra_socket),
         ("inter-socket (uds)", &report.machine.inter_socket),
@@ -807,7 +852,11 @@ pub fn pingpong(args: &Args) -> Result<i32> {
 }
 
 /// `locag e2e` — the serving pipeline (needs `make artifacts`).
+/// `--collective-backend proc` runs the fused collective hot path on a
+/// persistent multi-process worker pool instead of thread mailboxes.
 pub fn e2e(args: &Args) -> Result<i32> {
+    use crate::transport::Backend;
+
     let cfg = ServeConfig {
         artifact_dir: args.get_str("artifacts", "artifacts").into(),
         algo: algo_by_name(&args.get_str("algo", "model-tuned"))?,
@@ -818,14 +867,16 @@ pub fn e2e(args: &Args) -> Result<i32> {
         fused: args.get_bool("fused"),
         consensus: !args.get_bool("no-consensus"),
         fuse_batch: args.get_usize("fuse-batch", 1)?.max(1),
+        collective_backend: Backend::parse_or_err(&args.get_str("collective-backend", "sim"))?,
     };
     println!(
-        "serving via PJRT: allgather={}, {} regions, {} requests, fuse-batch {}{}",
+        "serving via PJRT: allgather={}, {} regions, {} requests, fuse-batch {}{}{}",
         cfg.algo,
         cfg.regions,
         cfg.requests,
         cfg.fuse_batch,
-        if cfg.fused { ", fused final" } else { "" }
+        if cfg.fused { ", fused final" } else { "" },
+        if cfg.collective_backend == Backend::Proc { ", proc collectives" } else { "" }
     );
     let rep = serve(&cfg)?;
     println!(

@@ -13,7 +13,7 @@
 //! locag bench --backend proc            # + measured multi-process wall times
 //! locag fit --quick --out results/params_fitted.json   # measured α/β params
 //! locag allgather --algo loc-bruck --regions 16 --ppr 8 [--machine lassen]
-//! locag figure 9 [--out results/fig9.csv] [--max-p 1024]
+//! locag figure 9 [--out results/fig9.csv] [--max-p 1024] [--backend proc]
 //! locag pingpong [--machine quartz]
 //! locag e2e [--algo model-tuned] [--regions 2] [--requests 16] [--artifacts DIR]
 //! locag validate [--max-p 256]
@@ -113,11 +113,16 @@ COMMANDS
                                     any algorithm's vtime/predicted grew
                                     >20% vs the baseline artifact (what CI
                                     runs; wall time is never gated)
-               --backend sim|proc   proc additionally executes every row
-                                    across real OS processes (shm rings +
-                                    Unix sockets) and records a wall_proc
+               --backend sim|proc   proc additionally executes every row on
+                                    a persistent multi-process worker pool
+                                    (one pool per topology shape; workers
+                                    spawn + handshake once, each schedule
+                                    ships once) and records the median
+                                    repeat-execute wall time as a wall_proc
                                     column — carried in the artifact, never
                                     gated (default sim)
+               --proc-iters N       timed executes per proc row after 2
+                                    discarded warmups (default 5)
                --machine NAME
   figure       Regenerate a figure: 3 | 7 | 8 | 9 | 10 | allreduce |
                alltoall | reduce_scatter.
@@ -125,6 +130,11 @@ COMMANDS
                (one "(model)" series per algorithm, from the schedule IR).
                --out FILE        CSV path (default results/figN.csv)
                --max-p N         world-size cap for the sweeps (default 1024)
+               --backend sim|proc   proc adds measured multi-process wall
+                                    times to the measured sweeps (one
+                                    persistent pool per shape, worlds up to
+                                    64 ranks) as a proc_seconds CSV column
+                                    and "(proc)" plot series (default sim)
   pingpong     Print the locality-class ping-pong series (Fig. 3 shape).
                --machine NAME
   fit          Measure real per-class α/β by ping-ponging OS processes over
@@ -132,6 +142,9 @@ COMMANDS
                socket = non-local) and least-squares fitting eager and
                rendezvous segments; writes a locag-params-v1 JSON that
                --machine accepts everywhere (incl. model-tuned dispatch).
+               The full sweep reaches 4 MiB messages (iterations scale down
+               with size); underdetermined protocol segments are reported
+               as typed warnings instead of silently collapsing.
                --out FILE (default results/params_fitted.json)
                --quick (reduced sweep, for smoke tests/CI)
   pattern      Print the step-by-step communication pattern (paper Figs.
@@ -143,6 +156,8 @@ COMMANDS
                --algo NAME --regions N --requests N --artifacts DIR
                --fuse-batch K (request micro-batch; default 1)
                --fused (use the fused gathered-matmul artifact)
+               --collective-backend sim|proc (proc runs the fused hot path
+               on a persistent multi-process worker pool; default sim)
   validate     Cross-check every algorithm against the expected gather and
                the paper's message-count bounds. --max-p N (default 256)
 

@@ -125,6 +125,20 @@ impl OpKind {
             ))
         })
     }
+
+    /// Input/output element counts for one collective of `n` elements over
+    /// `p` ranks — the per-operation buffer contract `Schedule::io_lens`
+    /// enforces, exposed here so transport-level callers (the proc pool's
+    /// input-delta validation, fused-buffer layout) can size and check
+    /// buffers without building a schedule first.
+    pub fn io_elems(&self, n: usize, p: usize) -> (usize, usize) {
+        match self {
+            OpKind::Allgather => (n, n * p),
+            OpKind::Allreduce => (n, n),
+            OpKind::Alltoall => (n * p, n * p),
+            OpKind::ReduceScatter => (n * p, n),
+        }
+    }
 }
 
 impl std::fmt::Display for OpKind {
@@ -1002,6 +1016,18 @@ mod tests {
         assert_eq!(r.get("ring").unwrap().summary(), "fake ring");
         // names() still lists ring once
         assert_eq!(r.names().iter().filter(|n| **n == "ring").count(), 1);
+    }
+
+    #[test]
+    fn io_elems_matches_the_per_op_buffer_contract() {
+        assert_eq!(OpKind::Allgather.io_elems(3, 4), (3, 12));
+        assert_eq!(OpKind::Allreduce.io_elems(3, 4), (3, 3));
+        assert_eq!(OpKind::Alltoall.io_elems(3, 4), (12, 12));
+        assert_eq!(OpKind::ReduceScatter.io_elems(3, 4), (12, 3));
+        // n = 0 is the uniform empty contract on every op.
+        for op in OpKind::ALL {
+            assert_eq!(op.io_elems(0, 4), (0, 0));
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! after the final chunk so every request is still verified.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::collectives::{self, Algorithm, FuseSpec, OpKind, Shape};
@@ -21,6 +22,7 @@ use crate::error::{Error, Result};
 use crate::runtime::{Engine, Manifest};
 use crate::topology::Topology;
 use crate::trace::TraceSummary;
+use crate::transport::{Backend, DType, PoolGate, ProcConfig, ProcJob, ProcPool};
 
 /// Configuration of one serving run.
 #[derive(Debug, Clone)]
@@ -53,6 +55,14 @@ pub struct ServeConfig {
     /// consensus allreduce) as one fused, coalesced schedule. `1` fuses
     /// only the allgather with the consensus allreduce.
     pub fuse_batch: usize,
+    /// Backend the fused collective hot path executes on. [`Backend::Sim`]
+    /// runs the fused schedule over in-process thread mailboxes;
+    /// [`Backend::Proc`] spawns a persistent [`ProcPool`] (one OS process
+    /// per TP worker) before the serving threads start, ships the fused
+    /// schedule to it once, and every chunk's collective crosses real
+    /// process boundaries over shm rings and Unix sockets via a
+    /// [`PoolGate`] exchange.
+    pub collective_backend: Backend,
 }
 
 impl Default for ServeConfig {
@@ -69,6 +79,7 @@ impl Default for ServeConfig {
             fused: false,
             consensus: true,
             fuse_batch: 1,
+            collective_backend: Backend::Sim,
         }
     }
 }
@@ -109,13 +120,43 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let check = cfg.check;
     let dir = cfg.artifact_dir.clone();
 
-    let start = Instant::now();
     let fused = cfg.fused;
     let consensus = cfg.consensus;
     let fuse_batch = cfg.fuse_batch.max(1);
+
+    // With the proc collective backend the pool and its fused schedule are
+    // fixed BEFORE the worker threads exist: replicate the serving loop's
+    // constituent decision comm-free, spawn the pool (workers handshake
+    // once), ship the fused schedule to it once, and hand every worker
+    // thread a gate onto the shared pool. Each chunk then crosses real
+    // OS-process boundaries while planning costs nothing per request.
+    let (gate, gate_consensus) = if cfg.collective_backend == Backend::Proc {
+        let machine = crate::model::MachineParams::lassen();
+        let n_gather = dims.batch * dims.hidden_shard();
+        let (specs, wc) =
+            serving_pool_specs(&topo, cfg.algo, n_gather, fuse_batch, cfg.consensus, &machine)?;
+        let mut pool =
+            ProcPool::spawn(cfg.regions, tp / cfg.regions, machine.name, &ProcConfig::default())?;
+        let sid = pool.load(&ProcJob::Fused { specs, dtype: DType::F32 })?;
+        (Some(Arc::new(PoolGate::new(pool, sid))), wc)
+    } else {
+        (None, false)
+    };
+
+    let start = Instant::now();
     let run = CommWorld::run(&topo, Timing::Wallclock, move |c| -> Result<WorkerOut> {
         worker_loop(
-            c, &dir, algo, total_reqs, cfg.warmup, check, fused, consensus, fuse_batch,
+            c,
+            &dir,
+            algo,
+            total_reqs,
+            cfg.warmup,
+            check,
+            fused,
+            consensus,
+            fuse_batch,
+            gate.as_deref(),
+            gate_consensus,
         )
     });
     let window = start.elapsed().as_secs_f64();
@@ -212,6 +253,47 @@ fn plan_serving_fused(
     Ok((collectives::plan_fused::<f32>(c, &specs)?, false))
 }
 
+/// Comm-free replica of [`plan_serving_fused`]'s constituent decision for
+/// the proc backend: the pool's fused job must be fixed before any worker
+/// thread exists, so the same try-with-consensus / probe-the-builder
+/// downgrade logic runs against a [`WorldView`] of the topology instead
+/// of a live communicator. Returns the fused specs and whether the
+/// consensus allreduce is on board.
+///
+/// [`WorldView`]: collectives::schedule::WorldView
+fn serving_pool_specs(
+    topo: &Topology,
+    algo: Algorithm,
+    n_gather: usize,
+    k: usize,
+    consensus: bool,
+    machine: &crate::model::MachineParams,
+) -> Result<(Vec<FuseSpec>, bool)> {
+    use crate::collectives::{fuse, schedule};
+    let esz = std::mem::size_of::<f32>();
+    let view = schedule::WorldView::world(topo);
+    let mut specs: Vec<FuseSpec> =
+        (0..k).map(|_| FuseSpec::new(OpKind::Allgather, algo.name(), n_gather)).collect();
+    if consensus {
+        specs.push(FuseSpec::new(OpKind::Allreduce, "loc-aware", 2 * k));
+        match fuse::fuse_world(&specs, &view, esz, machine) {
+            Ok(_) => return Ok((specs, true)),
+            Err(e) => {
+                specs.pop();
+                // Same downgrade contract as plan_serving_fused: only the
+                // consensus constituent's own builder rejecting this
+                // topology / shape drops it from the plan.
+                let probe = schedule::build_allreduce("loc-aware", &view, 0, 2 * k, esz);
+                if probe.is_ok() {
+                    return Err(e);
+                }
+            }
+        }
+    }
+    fuse::fuse_world(&specs, &view, esz, machine)?;
+    Ok((specs, false))
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     c: &mut Comm,
@@ -223,6 +305,8 @@ fn worker_loop(
     fused: bool,
     consensus: bool,
     fuse_batch: usize,
+    gate: Option<&PoolGate>,
+    gate_consensus: bool,
 ) -> Result<WorkerOut> {
     // Each worker owns a private PJRT engine (the client is !Send).
     let engine = Engine::load(artifact_dir)?;
@@ -243,9 +327,17 @@ fn worker_loop(
     // the persistent-plan use case — all setup (schedule fusion, message
     // coalescing, tags, scratch) amortizes across all requests and the
     // hot path executes one coalesced schedule per chunk into reused
-    // caller-owned buffers.
+    // caller-owned buffers. On the proc backend the schedule already
+    // lives in the worker pool (loaded once before these threads
+    // started), so nothing is planned here at all.
     let k = fuse_batch.max(1);
-    let (mut fplan, with_consensus) = plan_serving_fused(c, algo, b * hs, k, consensus)?;
+    let (mut fplan, with_consensus) = match gate {
+        Some(_) => (None, gate_consensus),
+        None => {
+            let (plan, wc) = plan_serving_fused(c, algo, b * hs, k, consensus)?;
+            (Some(plan), wc)
+        }
+    };
 
     // The drain allreduce verifies the FINAL chunk's probes after the
     // loop (the fused consensus runs one chunk behind).
@@ -299,7 +391,39 @@ fn worker_loop(
         // messages. The first chunk sums zero probes (nothing to verify).
         let probes_in: Vec<f32> = probes_prev.clone().unwrap_or_else(|| vec![0f32; 2 * k]);
         let t1 = Instant::now();
-        {
+        if let Some(g) = gate {
+            // Proc backend: serialize the chunk's composite fused input
+            // (k allgather shards, then the 2k consensus probes — the
+            // pool job's constituent order), exchange it through the
+            // shared pool, and split the composite output back out.
+            let n_in = k * b * hs + if with_consensus { 2 * k } else { 0 };
+            let mut inbytes = Vec::with_capacity(n_in * 4);
+            for hp in &h_parts {
+                for v in hp {
+                    inbytes.extend_from_slice(&v.to_ne_bytes());
+                }
+            }
+            if with_consensus {
+                for v in &probes_in {
+                    inbytes.extend_from_slice(&v.to_ne_bytes());
+                }
+            }
+            let mut outbytes = Vec::new();
+            g.exchange(c.rank(), &inbytes, &mut outbytes)?;
+            let gather_bytes = b * hs * c.size() * 4;
+            for (j, gj) in gathered.iter_mut().enumerate() {
+                let blk = &outbytes[j * gather_bytes..(j + 1) * gather_bytes];
+                for (dst, chunk) in gj.iter_mut().zip(blk.chunks_exact(4)) {
+                    *dst = f32::from_ne_bytes(chunk.try_into().expect("4-byte chunk"));
+                }
+            }
+            if with_consensus {
+                let probes = &outbytes[k * gather_bytes..];
+                for (dst, chunk) in probe_sum.iter_mut().zip(probes.chunks_exact(4)) {
+                    *dst = f32::from_ne_bytes(chunk.try_into().expect("4-byte chunk"));
+                }
+            }
+        } else {
             let mut in_refs: Vec<&[f32]> = h_parts.iter().map(|v| v.as_slice()).collect();
             let mut out_refs: Vec<&mut [f32]> =
                 gathered.iter_mut().map(|v| v.as_mut_slice()).collect();
@@ -307,7 +431,7 @@ fn worker_loop(
                 in_refs.push(&probes_in);
                 out_refs.push(&mut probe_sum);
             }
-            fplan.execute(&in_refs, &mut out_refs)?;
+            fplan.as_mut().expect("sim path planned above").execute(&in_refs, &mut out_refs)?;
         }
         let t_allgather = t1.elapsed().as_secs_f64();
 

@@ -290,6 +290,17 @@ impl PeerChan {
 
     /// Receive the next frame in channel order.
     pub fn recv_frame(&mut self, dl: &Deadline) -> ChanResult<(u64, Vec<u8>)> {
+        let mut buf = Vec::new();
+        let (tag, len) = self.recv_frame_into(&mut buf, dl)?;
+        buf.truncate(len);
+        Ok((tag, buf))
+    }
+
+    /// Receive the next frame into a caller-owned buffer, growing it only
+    /// when the payload is larger than any seen before. The payload lands
+    /// in `buf[..len]`; repeat receives of same-sized messages allocate
+    /// nothing, which is what keeps the pool's execute loop memcpy-only.
+    pub fn recv_frame_into(&mut self, buf: &mut Vec<u8>, dl: &Deadline) -> ChanResult<(u64, usize)> {
         let mut hdr = [0u8; 16];
         match self {
             PeerChan::Shm { rx, .. } => rx.read_exact(&mut hdr, dl)?,
@@ -297,12 +308,14 @@ impl PeerChan {
         }
         let tag = u64::from_le_bytes(hdr[..8].try_into().unwrap());
         let len = u64::from_le_bytes(hdr[8..].try_into().unwrap()) as usize;
-        let mut payload = vec![0u8; len];
-        match self {
-            PeerChan::Shm { rx, .. } => rx.read_exact(&mut payload, dl)?,
-            PeerChan::Sock(s) => sock_read_exact(s, &mut payload, dl)?,
+        if buf.len() < len {
+            buf.resize(len, 0);
         }
-        Ok((tag, payload))
+        match self {
+            PeerChan::Shm { rx, .. } => rx.read_exact(&mut buf[..len], dl)?,
+            PeerChan::Sock(s) => sock_read_exact(s, &mut buf[..len], dl)?,
+        }
+        Ok((tag, len))
     }
 }
 
@@ -322,6 +335,20 @@ pub const CTL_ERR: u8 = 4;
 pub const CTL_GO: u8 = 5;
 /// Parent → worker: every worker is ready, start executing now.
 pub const CTL_START: u8 = 6;
+/// Parent → pool worker: build and cache a schedule; payload =
+/// `[schedule id u64][utf-8 job spec]`.
+pub const CTL_LOAD: u8 = 7;
+/// Pool worker → parent: schedule built and cached; payload =
+/// `[schedule id u64]`.
+pub const CTL_LOADED: u8 = 8;
+/// Parent → pool worker: execute a cached schedule; payload =
+/// `[schedule id u64][flags u64][input delta bytes when flags bit 1]`.
+/// Flags: bit 0 = ship the output back in `CTL_OK`, bit 1 = an input
+/// delta is attached and replaces the worker's current input.
+pub const CTL_EXEC: u8 = 9;
+/// Parent → pool worker: leave the command loop and exit cleanly (the
+/// worker acks with an empty `CTL_OK` first).
+pub const CTL_SHUTDOWN: u8 = 10;
 
 /// Send one control frame: `[ty u8][rank u64 LE][len u64 LE][payload]`.
 pub fn ctl_send(s: &UnixStream, ty: u8, rank: u64, payload: &[u8], dl: &Deadline) -> ChanResult<()> {
@@ -410,6 +437,29 @@ mod tests {
         let (t3, p3) = a.recv_frame(&dl).unwrap();
         assert_eq!(t3, 1);
         assert_eq!(p3, big);
+        let _ = std::fs::remove_file(path_ab);
+        let _ = std::fs::remove_file(path_ba);
+    }
+
+    #[test]
+    fn recv_frame_into_reuses_the_buffer() {
+        let (path_ab, tx_ab, rx_ab) = tmp_ring("into-ab", 512);
+        let (path_ba, tx_ba, rx_ba) = tmp_ring("into-ba", 512);
+        let dl = Deadline::after(Duration::from_secs(10));
+        let mut a = PeerChan::Shm { tx: tx_ab, rx: rx_ba };
+        let mut b = PeerChan::Shm { tx: tx_ba, rx: rx_ab };
+        a.send_frame(1, &[7u8; 100], &dl).unwrap();
+        a.send_frame(2, &[9u8; 40], &dl).unwrap();
+        let mut buf = Vec::new();
+        let (t1, l1) = b.recv_frame_into(&mut buf, &dl).unwrap();
+        assert_eq!((t1, l1), (1, 100));
+        assert!(buf[..100].iter().all(|&x| x == 7));
+        let cap = buf.capacity();
+        // The smaller second frame must not shrink or reallocate the buffer.
+        let (t2, l2) = b.recv_frame_into(&mut buf, &dl).unwrap();
+        assert_eq!((t2, l2), (2, 40));
+        assert!(buf[..40].iter().all(|&x| x == 9));
+        assert_eq!(buf.capacity(), cap);
         let _ = std::fs::remove_file(path_ab);
         let _ = std::fs::remove_file(path_ba);
     }

@@ -33,47 +33,133 @@ use crate::model::params::{ClassParams, MachineParams, Postal, DEFAULT_EAGER_CUT
 const DONE_TAG: u64 = u64::MAX;
 
 /// Message sizes for the full calibration sweep (bytes). Spans both
-/// protocol segments with several points each.
-pub const FIT_SIZES: [usize; 9] = [8, 64, 512, 2048, 4096, 8192, 16384, 65536, 262144];
+/// protocol segments with several points each, reaching into multi-MiB
+/// rendezvous territory so the large-message β is fitted at sizes the
+/// proc backend actually ships.
+pub const FIT_SIZES: [usize; 12] =
+    [8, 64, 512, 2048, 4096, 8192, 16384, 65536, 262144, 1_048_576, 2_097_152, 4_194_304];
 
 /// Reduced sweep for `--quick` smoke runs (still ≥2 points per segment).
-pub const FIT_SIZES_QUICK: [usize; 5] = [8, 512, 4096, 16384, 65536];
+pub const FIT_SIZES_QUICK: [usize; 7] = [8, 512, 4096, 16384, 65536, 262144, 1_048_576];
+
+/// Discarded warm-up round trips per (channel, size) before the timed
+/// iterations — absorbs page faults on fresh shm rings and socket
+/// buffer growth that would otherwise bias α upward.
+pub const FIT_WARMUP_ROUNDS: usize = 5;
+
+/// Timed iterations for one message size: the `base` rep count at and
+/// below 16 KiB, scaled down inversely with size so the multi-MiB tail
+/// doesn't dominate the sweep's wall time, floored at 3 so the
+/// min-of-reps filter still rejects outliers.
+pub fn reps_for_size(size: usize, base: usize) -> usize {
+    (base.saturating_mul(16_384) / size.max(1)).clamp(3, base.max(3))
+}
 
 // ---------------------------------------------------------------------------
 // least-squares fitting
 // ---------------------------------------------------------------------------
 
+/// A calibration defect worth telling the user about: the fitted
+/// machine is still usable, but the flagged segment's line is
+/// underdetermined and should not be silently trusted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FitWarning {
+    /// A protocol segment had fewer than 2 sweep points, so its line was
+    /// fitted from the whole sweep instead of the segment alone.
+    ThinSegment {
+        /// Locality class the segment belongs to ("intra-socket", …).
+        class: &'static str,
+        /// Protocol segment ("eager" or "rendezvous").
+        segment: &'static str,
+        /// Sweep points the segment actually had.
+        points: usize,
+    },
+    /// The points used for a segment had no size spread, so α collapsed
+    /// to the mean sample time and β to the clamp floor.
+    DegenerateFit {
+        /// Locality class the segment belongs to.
+        class: &'static str,
+        /// Protocol segment ("eager" or "rendezvous").
+        segment: &'static str,
+        /// Points that went into the degenerate fit.
+        points: usize,
+    },
+}
+
+impl std::fmt::Display for FitWarning {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitWarning::ThinSegment { class, segment, points } => write!(
+                f,
+                "{class}/{segment}: only {points} sweep point(s) fall in this segment; \
+                 fitted from the full sweep instead (extend the size sweep to cover it)"
+            ),
+            FitWarning::DegenerateFit { class, segment, points } => write!(
+                f,
+                "{class}/{segment}: {points} point(s) with no size spread cannot determine \
+                 a line; α collapsed to the mean and β to the floor"
+            ),
+        }
+    }
+}
+
 /// Ordinary least squares for `t = α + β·s` over `(bytes, seconds)`
 /// samples. α is clamped to a positive floor (a fitted negative latency is
 /// measurement noise, and the cost model requires `cost(0) > 0`); β is
-/// clamped likewise so larger messages never model as free.
-fn fit_line(pts: &[(usize, f64)]) -> Postal {
+/// clamped likewise so larger messages never model as free. The flag is
+/// true when the points could not determine a line (fewer than 2, or no
+/// size spread) and the fit collapsed to mean-α/zero-β.
+fn fit_line(pts: &[(usize, f64)]) -> (Postal, bool) {
     let n = pts.len() as f64;
     let sx: f64 = pts.iter().map(|(s, _)| *s as f64).sum();
     let sy: f64 = pts.iter().map(|(_, t)| *t).sum();
     let sxx: f64 = pts.iter().map(|(s, _)| (*s as f64) * (*s as f64)).sum();
     let sxy: f64 = pts.iter().map(|(s, t)| (*s as f64) * t).sum();
     let denom = n * sxx - sx * sx;
-    let (alpha, beta) = if pts.len() < 2 || denom.abs() < f64::EPSILON {
-        (if n > 0.0 { sy / n } else { 0.0 }, 0.0)
+    let (alpha, beta, degenerate) = if pts.len() < 2 || denom.abs() < f64::EPSILON {
+        (if n > 0.0 { sy / n } else { 0.0 }, 0.0, true)
     } else {
         let beta = (n * sxy - sx * sy) / denom;
-        ((sy - beta * sx) / n, beta)
+        ((sy - beta * sx) / n, beta, false)
     };
-    Postal { alpha: alpha.max(1e-9), beta: beta.max(1e-13) }
+    (Postal { alpha: alpha.max(1e-9), beta: beta.max(1e-13) }, degenerate)
+}
+
+/// Fit one protocol segment, falling back to the whole sweep when the
+/// segment has too few points — recording a typed warning whenever the
+/// line came out underdetermined instead of silently collapsing.
+fn fit_segment(
+    class: &'static str,
+    segment: &'static str,
+    seg_pts: &[(usize, f64)],
+    all_pts: &[(usize, f64)],
+    warnings: &mut Vec<FitWarning>,
+) -> Postal {
+    let pts = if seg_pts.len() < 2 {
+        warnings.push(FitWarning::ThinSegment { class, segment, points: seg_pts.len() });
+        all_pts
+    } else {
+        seg_pts
+    };
+    let (line, degenerate) = fit_line(pts);
+    if degenerate {
+        warnings.push(FitWarning::DegenerateFit { class, segment, points: pts.len() });
+    }
+    line
 }
 
 /// Fit one locality class from a ping-pong sweep: separate α/β per
-/// protocol segment, falling back to the whole sweep when a segment has
-/// too few points to determine a line.
-fn fit_class(pts: &[(usize, f64)]) -> ClassParams {
+/// protocol segment, plus typed warnings for any segment whose line was
+/// underdetermined.
+fn fit_class(class: &'static str, pts: &[(usize, f64)]) -> (ClassParams, Vec<FitWarning>) {
+    let mut warnings = Vec::new();
     let eager_pts: Vec<(usize, f64)> =
         pts.iter().copied().filter(|(s, _)| *s < DEFAULT_EAGER_CUTOFF).collect();
     let rend_pts: Vec<(usize, f64)> =
         pts.iter().copied().filter(|(s, _)| *s >= DEFAULT_EAGER_CUTOFF).collect();
-    let eager = if eager_pts.len() >= 2 { fit_line(&eager_pts) } else { fit_line(pts) };
-    let rendezvous = if rend_pts.len() >= 2 { fit_line(&rend_pts) } else { fit_line(pts) };
-    ClassParams { eager, rendezvous, eager_cutoff: DEFAULT_EAGER_CUTOFF }
+    let eager = fit_segment(class, "eager", &eager_pts, pts, &mut warnings);
+    let rendezvous = fit_segment(class, "rendezvous", &rend_pts, pts, &mut warnings);
+    (ClassParams { eager, rendezvous, eager_cutoff: DEFAULT_EAGER_CUTOFF }, warnings)
 }
 
 // ---------------------------------------------------------------------------
@@ -156,15 +242,22 @@ fn pingpong_inner(args: &Args) -> std::result::Result<(), String> {
         return Ok(());
     }
 
+    // Channel pre-touch: one max-size round trip faults in every ring
+    // page and grows socket buffers before anything is timed.
+    let touch = vec![0u8; max_size];
+    chan.send_frame(max_size as u64, &touch, &dl)?;
+    chan.recv_frame(&dl)?;
+    drop(touch);
+
     let mut out = Vec::with_capacity(sizes.len() * 16);
     for &s in &sizes {
         let msg = vec![0u8; s];
-        for _ in 0..3 {
+        for _ in 0..FIT_WARMUP_ROUNDS {
             chan.send_frame(s as u64, &msg, &dl)?;
             chan.recv_frame(&dl)?;
         }
         let mut best = u64::MAX;
-        for _ in 0..reps {
+        for _ in 0..reps_for_size(s, reps) {
             let t0 = Instant::now();
             chan.send_frame(s as u64, &msg, &dl)?;
             chan.recv_frame(&dl)?;
@@ -214,7 +307,7 @@ fn run_pingpong(
     reps: usize,
     deadline: Duration,
 ) -> Result<Vec<(usize, f64)>> {
-    let dir = super::proc_exec::scratch_dir();
+    let dir = super::pool::scratch_dir();
     std::fs::create_dir_all(&dir)?;
     let out = run_pingpong_in(&dir, kind, sizes, reps, deadline);
     let _ = std::fs::remove_dir_all(&dir);
@@ -335,6 +428,9 @@ pub struct FitReport {
     pub shm: Vec<(usize, f64)>,
     /// Unix-domain socket sweep.
     pub uds: Vec<(usize, f64)>,
+    /// Typed calibration warnings (thin or degenerate segments). The
+    /// fitted machine is still usable; callers should print these.
+    pub warnings: Vec<FitWarning>,
 }
 
 /// Run the full calibration: ping-pong both channel kinds, fit per-class
@@ -344,18 +440,20 @@ pub struct FitReport {
 /// ← Unix socket, inter-node ← Unix socket as well (no real network is
 /// available; the JSON records this provenance).
 pub fn run_fit(quick: bool, deadline: Duration) -> Result<FitReport> {
-    let sizes: Vec<usize> =
-        if quick { FIT_SIZES_QUICK.to_vec() } else { FIT_SIZES.to_vec() };
+    let sizes: Vec<usize> = if quick { FIT_SIZES_QUICK.to_vec() } else { FIT_SIZES.to_vec() };
     let reps = if quick { 20 } else { 50 };
     let shm = run_pingpong("shm", &sizes, reps, deadline)?;
     let uds = run_pingpong("uds", &sizes, reps, deadline)?;
-    let machine = MachineParams {
-        name: "fitted",
-        intra_socket: fit_class(&shm),
-        inter_socket: fit_class(&uds),
-        inter_node: fit_class(&uds),
-    };
-    Ok(FitReport { machine, shm, uds })
+    let mut warnings = Vec::new();
+    let (intra_socket, w) = fit_class("intra-socket", &shm);
+    warnings.extend(w);
+    let (inter_socket, w) = fit_class("inter-socket", &uds);
+    warnings.extend(w);
+    // inter-node reuses the socket fit verbatim, so repeating its
+    // warnings under a third class name would only add noise.
+    let machine =
+        MachineParams { name: "fitted", intra_socket, inter_socket, inter_node: inter_socket };
+    Ok(FitReport { machine, shm, uds, warnings })
 }
 
 #[cfg(test)]
@@ -366,7 +464,8 @@ mod tests {
     fn fit_line_recovers_affine_relation() {
         let pts: Vec<(usize, f64)> =
             [8usize, 64, 512, 4096].iter().map(|&s| (s, 2e-6 + 3e-9 * s as f64)).collect();
-        let p = fit_line(&pts);
+        let (p, degenerate) = fit_line(&pts);
+        assert!(!degenerate);
         assert!((p.alpha - 2e-6).abs() < 1e-9, "alpha {}", p.alpha);
         assert!((p.beta - 3e-9).abs() < 1e-12, "beta {}", p.beta);
     }
@@ -375,8 +474,19 @@ mod tests {
     fn fit_line_clamps_nonphysical_fits() {
         // Decreasing time with size would fit β < 0: clamp to the floor.
         let pts = vec![(8usize, 5e-6), (65536usize, 1e-6)];
-        let p = fit_line(&pts);
+        let (p, degenerate) = fit_line(&pts);
+        assert!(!degenerate);
         assert!(p.alpha >= 1e-9 && p.beta >= 1e-13);
+    }
+
+    #[test]
+    fn fit_line_flags_underdetermined_point_sets() {
+        // Fewer than 2 points, or no size spread: the fit collapses to a
+        // mean-α/zero-β line and must say so.
+        let (_, d) = fit_line(&[(4096usize, 2e-6)]);
+        assert!(d);
+        let (_, d) = fit_line(&[(4096usize, 2e-6), (4096usize, 2.2e-6)]);
+        assert!(d);
     }
 
     #[test]
@@ -390,18 +500,78 @@ mod tests {
         for s in [8192usize, 65536, 262144] {
             pts.push((s, 4e-6 + 1e-10 * s as f64));
         }
-        let c = fit_class(&pts);
+        let (c, warnings) = fit_class("intra-socket", &pts);
         assert_eq!(c.eager_cutoff, DEFAULT_EAGER_CUTOFF);
         assert!(c.eager.beta > c.rendezvous.beta * 10.0);
+        assert!(warnings.is_empty(), "clean sweep warned: {warnings:?}");
     }
 
     #[test]
-    fn fit_class_falls_back_when_a_segment_is_thin() {
+    fn fit_class_warns_when_a_segment_is_thin() {
         // Only one point above the cutoff: rendezvous reuses the full fit
-        // instead of producing a degenerate line.
-        let pts =
-            vec![(8usize, 1e-6), (64usize, 1.1e-6), (512usize, 1.5e-6), (16384usize, 3e-6)];
-        let c = fit_class(&pts);
+        // instead of producing a degenerate line, and the collapse is
+        // reported as a typed warning rather than silent.
+        let pts = vec![(8usize, 1e-6), (64usize, 1.1e-6), (512usize, 1.5e-6), (16384usize, 3e-6)];
+        let (c, warnings) = fit_class("inter-socket", &pts);
         assert!(c.rendezvous.alpha > 0.0 && c.rendezvous.beta > 0.0);
+        assert_eq!(
+            warnings,
+            vec![FitWarning::ThinSegment {
+                class: "inter-socket",
+                segment: "rendezvous",
+                points: 1
+            }]
+        );
+        let shown = warnings[0].to_string();
+        assert!(shown.contains("inter-socket") && shown.contains("rendezvous"), "{shown}");
+    }
+
+    #[test]
+    fn fit_class_warns_on_degenerate_segments() {
+        // All points share one size: neither segment can determine a
+        // line, and each collapse surfaces as a DegenerateFit.
+        let pts = vec![(4096usize, 2e-6), (4096usize, 2.1e-6)];
+        let (_, warnings) = fit_class("intra-socket", &pts);
+        assert!(warnings.contains(&FitWarning::DegenerateFit {
+            class: "intra-socket",
+            segment: "eager",
+            points: 2
+        }));
+        assert!(warnings.contains(&FitWarning::ThinSegment {
+            class: "intra-socket",
+            segment: "rendezvous",
+            points: 0
+        }));
+    }
+
+    #[test]
+    fn sweep_sizes_cover_the_multi_mib_tail() {
+        assert!(*FIT_SIZES.last().unwrap() >= 4 << 20);
+        assert!(FIT_SIZES.windows(2).all(|w| w[0] < w[1]));
+        // Both sweeps keep ≥2 points per protocol segment so no thin-
+        // segment fallback fires on a healthy run.
+        for sizes in [&FIT_SIZES[..], &FIT_SIZES_QUICK[..]] {
+            assert!(sizes.iter().filter(|&&s| s < DEFAULT_EAGER_CUTOFF).count() >= 2);
+            assert!(sizes.iter().filter(|&&s| s >= DEFAULT_EAGER_CUTOFF).count() >= 2);
+        }
+    }
+
+    #[test]
+    fn reps_scale_down_with_size_but_stay_bounded() {
+        // Small messages run the full base count; the count never grows
+        // with size and never drops below the floor of 3.
+        assert_eq!(reps_for_size(8, 50), 50);
+        assert_eq!(reps_for_size(16_384, 50), 50);
+        assert_eq!(reps_for_size(4 << 20, 50), 3);
+        let mut prev = usize::MAX;
+        for &s in &FIT_SIZES {
+            let r = reps_for_size(s, 50);
+            assert!((3..=50).contains(&r), "reps {r} for size {s}");
+            assert!(r <= prev, "reps not monotone at size {s}");
+            prev = r;
+        }
+        // Degenerate bases stay within the clamp's contract.
+        assert_eq!(reps_for_size(8, 0), 3);
+        assert_eq!(reps_for_size(1 << 30, 1), 3);
     }
 }

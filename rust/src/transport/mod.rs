@@ -28,23 +28,48 @@
 //! over shm and only region leaders' traffic crossing sockets — exactly
 //! the traffic split the locality-aware algorithms optimize.
 //!
-//! # Execution model
+//! # Execution model: persistent pools (plan once, execute many)
 //!
-//! [`run_proc`] spawns one worker process per rank (re-executing the
-//! current binary with a hidden `__worker` argv — the `locag` CLI and the
-//! `proc_backend` test harness both dispatch it). Schedule builders are
-//! pure functions of `(WorldView, rank, n, elem_bytes)`, so each worker
-//! rebuilds its own rank's schedule from the job description instead of
-//! deserializing IR, then interprets it step-for-step with the same
-//! semantics as the in-process executor (eager sends, FIFO matching per
-//! (source, tag), identical pad-byte framing). Outputs are therefore
-//! **bit-identical** across backends; `tests/proc_backend.rs` asserts it
-//! over the conformance grid.
+//! The backend honors the same persistent-plan contract as the in-process
+//! layer (`MPI_Allgather_init`-style). A [`ProcPool`] owns the expensive
+//! parts and pays them exactly once:
+//!
+//! 1. **spawn** — [`ProcPool::spawn`] forks one worker process per rank
+//!    (re-executing the current binary with a hidden `__worker` argv — the
+//!    `locag` CLI and the `proc_backend` test harness both dispatch it)
+//!    and completes the full channel handshake: every shm ring and Unix
+//!    socket of the rank mesh is connected before `spawn` returns.
+//! 2. **load** — [`ProcPool::load`] ships a job description once; each
+//!    worker rebuilds its own rank's [`Schedule`] from it (builders are
+//!    pure SPMD functions of `(WorldView, rank, n, elem_bytes)`, so no IR
+//!    crosses the wire) and preallocates input/output/scratch/wire
+//!    buffers. Any number of schedules can be resident per pool, keyed by
+//!    the returned schedule id.
+//! 3. **execute ×N** — [`ProcPool::execute`] (and friends) runs a loaded
+//!    schedule over the existing channels. Only input deltas and outputs
+//!    cross the control path; the interpreter runs allocation-free over
+//!    the persistent buffers. `ProcReport::wall` times this phase alone,
+//!    so repeat executes measure the algorithm, not process startup.
+//! 4. **shutdown** — [`ProcPool::shutdown`] (or drop) reaps the workers.
+//!
+//! [`run_proc`] wraps one spawn → load → execute → shutdown cycle for
+//! single-shot callers like the conformance tests.
+//!
+//! Workers interpret schedules step-for-step with the exact semantics of
+//! the in-process executor (eager sends, FIFO matching per (source, tag),
+//! identical pad-byte framing), which keeps outputs **bit-identical**
+//! across backends; `tests/proc_backend.rs` asserts it over the
+//! conformance grid and across repeated pool executes.
 //!
 //! Every blocking wait is bounded by [`ProcConfig::deadline`]; worker
-//! death, socket EOF and shm-ring stalls surface as
+//! death, socket EOF, shm-ring stalls, and stale schedule ids surface as
 //! [`Error::Transport`](crate::error::Error::Transport) with the failing
-//! rank and round instead of a hang.
+//! rank and round instead of a hang. Failures that happen *between*
+//! executes (a load rejected, an unknown schedule id) leave the pool
+//! fully usable; failures *during* an execute leave channels in an
+//! unknown state, so the pool fails fast afterwards and a fresh
+//! [`ProcPool::spawn`] is the recovery path — nothing (scratch dirs,
+//! children, sockets) is left behind to wedge it.
 //!
 //! # Calibration (`locag fit`)
 //!
@@ -56,9 +81,11 @@
 
 pub mod chan;
 pub mod fit;
+pub mod pool;
 pub mod proc_exec;
 
-pub use proc_exec::{run_proc, worker_main};
+pub use pool::{pool_median_wall, run_proc, PoolGate, PoolStats, ProcPool};
+pub use proc_exec::worker_main;
 
 use crate::collectives::fuse::FuseSpec;
 use crate::collectives::plan::Summable;
@@ -98,42 +125,136 @@ impl Backend {
     }
 }
 
-/// One collective job for the process backend, rebuilt identically by
-/// every worker from its argv.
-#[derive(Debug, Clone)]
-pub enum ProcJob {
-    /// A single (operation, algorithm) collective.
-    Single { op: OpKind, algo: String, n: usize, elem_bytes: usize },
-    /// A fused multi-collective plan (always 8-byte elements, like
-    /// [`crate::collectives::plan_fused`]'s `u64` use in the sim sweeps).
-    Fused { specs: Vec<FuseSpec> },
+/// Element type of a proc-backend job. Workers move raw bytes, so the
+/// dtype only matters where arithmetic happens (`Reduce` steps) and for
+/// sizing; both backends apply the same wrapping/IEEE semantics in the
+/// same schedule order, which keeps outputs bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit unsigned integers (wrapping sums).
+    U32,
+    /// 64-bit unsigned integers (wrapping sums).
+    U64,
+    /// 32-bit IEEE-754 floats.
+    F32,
 }
 
-impl ProcJob {
-    /// Element size on the wire.
-    pub fn elem_bytes(&self) -> usize {
+impl DType {
+    /// Size of one element in bytes.
+    pub fn bytes(&self) -> usize {
         match self {
-            ProcJob::Single { elem_bytes, .. } => *elem_bytes,
-            ProcJob::Fused { .. } => 8,
+            DType::U32 | DType::F32 => 4,
+            DType::U64 => 8,
+        }
+    }
+
+    /// Display name (also the wire spelling in pool job specs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::U32 => "u32",
+            DType::U64 => "u64",
+            DType::F32 => "f32",
+        }
+    }
+
+    /// Parse a dtype name.
+    pub fn parse_or_err(s: &str) -> Result<DType> {
+        match s.to_ascii_lowercase().as_str() {
+            "u32" => Ok(DType::U32),
+            "u64" => Ok(DType::U64),
+            "f32" => Ok(DType::F32),
+            _ => Err(Error::Precondition(format!("unknown dtype '{s}' (valid: u32, u64, f32)"))),
+        }
+    }
+
+    /// The integer dtype of a given element width — the implicit contract
+    /// of [`ProcJob::Single`], which predates explicit dtypes.
+    pub fn for_elem_bytes(elem_bytes: usize) -> Result<DType> {
+        match elem_bytes {
+            4 => Ok(DType::U32),
+            8 => Ok(DType::U64),
+            other => Err(Error::Precondition(format!(
+                "unsupported element size {other} for the proc backend"
+            ))),
         }
     }
 }
 
-/// Knobs of one process-backend run.
+/// One collective job for the process backend, rebuilt identically by
+/// every worker from the pool's job spec.
+#[derive(Debug, Clone)]
+pub enum ProcJob {
+    /// A single (operation, algorithm) collective.
+    Single { op: OpKind, algo: String, n: usize, elem_bytes: usize },
+    /// A fused multi-collective plan at an explicit element type.
+    Fused { specs: Vec<FuseSpec>, dtype: DType },
+}
+
+impl ProcJob {
+    /// A fused job at the sweep default dtype (`u64`, matching
+    /// [`crate::collectives::plan_fused`]'s use in the sim sweeps).
+    pub fn fused(specs: Vec<FuseSpec>) -> ProcJob {
+        ProcJob::Fused { specs, dtype: DType::U64 }
+    }
+
+    /// Element size on the wire.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            ProcJob::Single { elem_bytes, .. } => *elem_bytes,
+            ProcJob::Fused { dtype, .. } => dtype.bytes(),
+        }
+    }
+
+    /// Per-rank (input, output) buffer sizes in bytes for a `p`-rank
+    /// world — the contract the pool validates input deltas against
+    /// before anything crosses the control path.
+    pub fn io_bytes(&self, p: usize) -> (usize, usize) {
+        let eb = self.elem_bytes();
+        match self {
+            ProcJob::Single { op, n, .. } => {
+                let (i, o) = op.io_elems(*n, p);
+                (i * eb, o * eb)
+            }
+            ProcJob::Fused { specs, .. } => {
+                let (mut i, mut o) = (0usize, 0usize);
+                for s in specs {
+                    let (si, so) = s.op.io_elems(s.n, p);
+                    i += si;
+                    o += so;
+                }
+                (i * eb, o * eb)
+            }
+        }
+    }
+}
+
+/// Default per-direction shm ring capacity for pool workers. Rings are
+/// mapped at spawn time — before any schedule exists — so the pool picks
+/// a fixed capacity up front and `load` rejects a schedule whose largest
+/// single-message frame could not make progress through it.
+pub const DEFAULT_POOL_RING_BYTES: u64 = 8 << 20;
+
+/// Knobs of a process-backend pool.
 #[derive(Debug, Clone)]
 pub struct ProcConfig {
-    /// Bound on every blocking wait (worker and parent side). A run that
-    /// would hang instead fails with `Error::Transport` within roughly
-    /// this much time.
+    /// Bound on every blocking wait (worker and parent side). An operation
+    /// that would hang instead fails with `Error::Transport` within
+    /// roughly this much time.
     pub deadline: std::time::Duration,
-    /// Test hook: kill this worker right after launch coordination, to
-    /// exercise the death-detection paths.
+    /// Test hook: kill this worker right after spawn, to exercise the
+    /// death-detection paths.
     pub kill_rank: Option<usize>,
+    /// Per-direction shm ring capacity in bytes, fixed at spawn.
+    pub ring_bytes: u64,
 }
 
 impl Default for ProcConfig {
     fn default() -> ProcConfig {
-        ProcConfig { deadline: std::time::Duration::from_secs(30), kill_rank: None }
+        ProcConfig {
+            deadline: std::time::Duration::from_secs(30),
+            kill_rank: None,
+            ring_bytes: DEFAULT_POOL_RING_BYTES,
+        }
     }
 }
 
@@ -162,9 +283,26 @@ pub fn canonical_elems(op: OpKind, rank: usize, p: usize, n: usize) -> Vec<u64> 
     }
 }
 
-/// [`canonical_elems`] encoded as native bytes at `elem_bytes` per element
-/// (values are truncated into narrower element types, identically on every
-/// backend).
+/// [`canonical_elems`] encoded as native bytes at `dtype` (integer values
+/// are truncated or cast into the element type; both conversions are
+/// deterministic, so every backend derives identical bytes).
+pub fn canonical_input_bytes_dtype(
+    op: OpKind,
+    rank: usize,
+    p: usize,
+    n: usize,
+    dtype: DType,
+) -> Vec<u8> {
+    let elems = canonical_elems(op, rank, p, n);
+    match dtype {
+        DType::U32 => to_bytes(&elems.iter().map(|&v| v as u32).collect::<Vec<u32>>()),
+        DType::U64 => to_bytes(&elems),
+        DType::F32 => to_bytes(&elems.iter().map(|&v| v as f32).collect::<Vec<f32>>()),
+    }
+}
+
+/// [`canonical_input_bytes_dtype`] at the integer dtype implied by
+/// `elem_bytes` — the [`ProcJob::Single`] convention.
 pub fn canonical_input_bytes(
     op: OpKind,
     rank: usize,
@@ -172,12 +310,12 @@ pub fn canonical_input_bytes(
     n: usize,
     elem_bytes: usize,
 ) -> Vec<u8> {
-    let elems = canonical_elems(op, rank, p, n);
-    match elem_bytes {
-        4 => to_bytes(&elems.iter().map(|&v| v as u32).collect::<Vec<u32>>()),
-        8 => to_bytes(&elems),
+    let dtype = match elem_bytes {
+        4 => DType::U32,
+        8 => DType::U64,
         other => panic!("unsupported element size {other} for the proc backend"),
-    }
+    };
+    canonical_input_bytes_dtype(op, rank, p, n, dtype)
 }
 
 /// Build one rank's schedule for a (possibly model-tuned) algorithm name —
@@ -231,6 +369,7 @@ fn sim_single<T: Summable>(
     algo: &str,
     n: usize,
     machine: &MachineParams,
+    input_override: Option<&[u8]>,
 ) -> Result<Vec<u8>> {
     let rank = comm.rank();
     let p = comm.size();
@@ -240,8 +379,12 @@ fn sim_single<T: Summable>(
     let eb = std::mem::size_of::<T>();
     let view = WorldView::from_comm(comm);
     let sched = build_rank_schedule(op, algo, &view, rank, n, eb, machine)?;
-    let input_bytes = canonical_input_bytes(op, rank, p, n, eb);
-    let input: Vec<T> = from_bytes(&input_bytes).expect("canonical input is whole elements");
+    let input_bytes = match input_override {
+        Some(b) => b.to_vec(),
+        None => canonical_input_bytes(op, rank, p, n, eb),
+    };
+    let input: Vec<T> = from_bytes(&input_bytes)
+        .ok_or_else(|| Error::Precondition("input bytes are not whole elements".into()))?;
     let (_, out_elems) = sched.io_lens();
     let mut output = vec![T::default(); out_elems];
     let mut plan = SchedPlan::<T>::new(comm, "proc-ref", sched)?;
@@ -262,31 +405,48 @@ fn sim_single<T: Summable>(
     Ok(to_bytes(&output))
 }
 
-fn sim_fused(comm: &Comm, specs: &[FuseSpec], machine: &MachineParams) -> Result<Vec<u8>> {
+fn sim_fused<T: Summable>(
+    comm: &Comm,
+    specs: &[FuseSpec],
+    machine: &MachineParams,
+    conv: fn(u64) -> T,
+    input_override: Option<&[u8]>,
+) -> Result<Vec<u8>> {
     use crate::collectives::fuse;
     use crate::collectives::plan::PlanCore;
     use crate::collectives::schedule::add_assign;
 
     let rank = comm.rank();
     let p = comm.size();
+    let eb = std::mem::size_of::<T>();
     let view = WorldView::from_comm(comm);
-    let (mut scheds, _) = fuse::fuse_world(specs, &view, 8, machine)?;
+    let (mut scheds, _) = fuse::fuse_world(specs, &view, eb, machine)?;
     let sched = scheds.swap_remove(rank);
     sched.validate()?;
-    let mut input: Vec<u64> = Vec::new();
-    for s in specs {
-        let elems = canonical_elems(s.op, rank, p, s.n);
-        let take = match s.op {
-            OpKind::Allgather | OpKind::Allreduce => s.n,
-            OpKind::Alltoall | OpKind::ReduceScatter => s.n * p,
-        };
-        input.extend_from_slice(&elems[..take]);
-    }
+    let input: Vec<T> = match input_override {
+        Some(b) => from_bytes(b)
+            .ok_or_else(|| Error::Precondition("input bytes are not whole elements".into()))?,
+        None => {
+            let mut acc: Vec<T> = Vec::new();
+            for s in specs {
+                let elems = canonical_elems(s.op, rank, p, s.n);
+                let (take, _) = s.op.io_elems(s.n, p);
+                acc.extend(elems[..take].iter().map(|&v| conv(v)));
+            }
+            acc
+        }
+    };
     let (in_elems, out_elems) = sched.io_lens();
-    debug_assert_eq!(input.len(), in_elems);
-    let mut output = vec![0u64; out_elems];
+    if input.len() != in_elems {
+        return Err(Error::Precondition(format!(
+            "fused input has {} elements, schedule expects {in_elems}",
+            input.len()
+        )));
+    }
+    let mut output = vec![T::default(); out_elems];
     let core = PlanCore::new(comm, sched.n, sched.tags);
-    let mut scratch: Vec<Vec<u64>> = sched.scratch.iter().map(|&l| vec![0u64; l]).collect();
+    let mut scratch: Vec<Vec<T>> =
+        sched.scratch.iter().map(|&l| vec![T::default(); l]).collect();
     let mut wire = vec![0u8; sched.max_padded_wire()];
     execute_schedule(
         &core,
@@ -295,9 +455,46 @@ fn sim_fused(comm: &Comm, specs: &[FuseSpec], machine: &MachineParams) -> Result
         &mut output,
         &mut scratch,
         &mut wire,
-        Some(add_assign::<u64>),
+        Some(add_assign::<T>),
     )?;
     Ok(to_bytes(&output))
+}
+
+fn run_sim(
+    regions: usize,
+    ppr: usize,
+    job: &ProcJob,
+    machine: &MachineParams,
+    inputs: Option<&[Vec<u8>]>,
+) -> Result<Vec<Vec<u8>>> {
+    let topo = Topology::regions(regions, ppr);
+    if let Some(ins) = inputs {
+        if ins.len() != topo.size() {
+            return Err(Error::Precondition(format!(
+                "got {} input buffers for a {}-rank world",
+                ins.len(),
+                topo.size()
+            )));
+        }
+    }
+    let run = CommWorld::run(&topo, Timing::Virtual(machine.clone()), |comm| {
+        let inp = inputs.map(|v| v[comm.rank()].as_slice());
+        match job {
+            ProcJob::Single { op, algo, n, elem_bytes } => match elem_bytes {
+                4 => sim_single::<u32>(comm, *op, algo, *n, machine, inp),
+                8 => sim_single::<u64>(comm, *op, algo, *n, machine, inp),
+                other => Err(Error::Precondition(format!(
+                    "unsupported element size {other} for the proc backend"
+                ))),
+            },
+            ProcJob::Fused { specs, dtype } => match dtype {
+                DType::U32 => sim_fused::<u32>(comm, specs, machine, |v| v as u32, inp),
+                DType::U64 => sim_fused::<u64>(comm, specs, machine, |v| v, inp),
+                DType::F32 => sim_fused::<f32>(comm, specs, machine, |v| v as f32, inp),
+            },
+        }
+    });
+    run.results.into_iter().collect()
 }
 
 /// Run `job` on the in-process backend with the same canonical inputs the
@@ -309,18 +506,20 @@ pub fn run_sim_bytes(
     job: &ProcJob,
     machine: &MachineParams,
 ) -> Result<Vec<Vec<u8>>> {
-    let topo = Topology::regions(regions, ppr);
-    let run = CommWorld::run(&topo, Timing::Virtual(machine.clone()), |comm| match job {
-        ProcJob::Single { op, algo, n, elem_bytes } => match elem_bytes {
-            4 => sim_single::<u32>(comm, *op, algo, *n, machine),
-            8 => sim_single::<u64>(comm, *op, algo, *n, machine),
-            other => Err(Error::Precondition(format!(
-                "unsupported element size {other} for the proc backend"
-            ))),
-        },
-        ProcJob::Fused { specs } => sim_fused(comm, specs, machine),
-    });
-    run.results.into_iter().collect()
+    run_sim(regions, ppr, job, machine, None)
+}
+
+/// Like [`run_sim_bytes`] but with explicit per-rank input bytes instead
+/// of the canonical generators — the reference side for pool tests that
+/// mutate inputs between executes.
+pub fn run_sim_bytes_with_inputs(
+    regions: usize,
+    ppr: usize,
+    job: &ProcJob,
+    machine: &MachineParams,
+    inputs: &[Vec<u8>],
+) -> Result<Vec<Vec<u8>>> {
+    run_sim(regions, ppr, job, machine, Some(inputs))
 }
 
 #[cfg(test)]
@@ -344,6 +543,53 @@ mod tests {
         let bytes8 = canonical_input_bytes(OpKind::Allreduce, 2, 4, 3, 8);
         assert_eq!(bytes4.len(), 12);
         assert_eq!(bytes8.len(), 24);
+    }
+
+    #[test]
+    fn dtype_round_trips_and_sizes() {
+        assert_eq!(DType::parse_or_err("F32").unwrap(), DType::F32);
+        assert!(DType::parse_or_err("i8").is_err());
+        assert_eq!(DType::U32.bytes(), 4);
+        assert_eq!(DType::U64.bytes(), 8);
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::for_elem_bytes(4).unwrap(), DType::U32);
+        assert_eq!(DType::for_elem_bytes(8).unwrap(), DType::U64);
+        assert!(DType::for_elem_bytes(3).is_err());
+        assert_eq!(DType::F32.name(), "f32");
+    }
+
+    #[test]
+    fn job_io_bytes_follow_the_op_contract() {
+        let single = ProcJob::Single {
+            op: OpKind::ReduceScatter,
+            algo: "ring".into(),
+            n: 3,
+            elem_bytes: 8,
+        };
+        assert_eq!(single.io_bytes(4), (3 * 4 * 8, 3 * 8));
+        let fused = ProcJob::fused(vec![
+            FuseSpec::new(OpKind::Allgather, "bruck", 2),
+            FuseSpec::new(OpKind::Allreduce, "rabenseifner", 4),
+        ]);
+        assert_eq!(fused.elem_bytes(), 8);
+        assert_eq!(fused.io_bytes(4), ((2 + 4) * 8, (2 * 4 + 4) * 8));
+    }
+
+    #[test]
+    fn sim_inputs_override_is_reflected_in_outputs() {
+        let job =
+            ProcJob::Single { op: OpKind::Allgather, algo: "bruck".into(), n: 1, elem_bytes: 8 };
+        let inputs: Vec<Vec<u8>> = (0..4u64).map(|r| to_bytes(&[900 + r])).collect();
+        let outs =
+            run_sim_bytes_with_inputs(2, 2, &job, &MachineParams::lassen(), &inputs).unwrap();
+        let expected: Vec<u64> = (0..4).map(|r| 900 + r).collect();
+        for out in &outs {
+            let got: Vec<u64> = from_bytes(out).unwrap();
+            assert_eq!(got, expected);
+        }
+        // A wrong world size is a precondition error, not a hang.
+        let short = &inputs[..3];
+        assert!(run_sim_bytes_with_inputs(2, 2, &job, &MachineParams::lassen(), short).is_err());
     }
 
     #[test]

@@ -1,0 +1,743 @@
+//! Parent-side persistent worker pool: spawn and handshake once, then
+//! load schedules and serve executes over the same channels.
+//!
+//! [`ProcPool`] is the plan-once/execute-many face of the process
+//! backend. [`ProcPool::spawn`] forks one worker per rank and completes
+//! the channel handshake; [`ProcPool::load`] ships a job description a
+//! single time; [`ProcPool::execute`] (and friends) then runs the loaded
+//! schedule repeatedly with only input deltas and outputs crossing the
+//! control path. [`run_proc`] wraps one full cycle for single-shot
+//! callers.
+//!
+//! # Failure contract
+//!
+//! * Failures *between* executes — a rejected load, an unknown schedule
+//!   id — leave the pool fully usable.
+//! * Failures *during* an execute — worker death, deadline expiry, a
+//!   protocol violation — leave the data channels in an unknown state:
+//!   the pool marks itself poisoned, every later call fails fast with a
+//!   typed [`Error::Transport`], and a fresh [`ProcPool::spawn`] is the
+//!   recovery path. Dropping the poisoned pool reaps its workers and
+//!   removes its rendezvous directory, so nothing is left to wedge the
+//!   replacement.
+
+use std::collections::BTreeMap;
+use std::io::ErrorKind;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+use std::time::Duration;
+
+use super::chan::{
+    ctl_recv, ctl_send, Deadline, CTL_ERR, CTL_EXEC, CTL_GO, CTL_HELLO, CTL_LOAD, CTL_LOADED,
+    CTL_OK, CTL_READY, CTL_SHUTDOWN,
+};
+use super::proc_exec::{EXEC_FLAG_INPUT, EXEC_FLAG_OUTPUT};
+use super::{ProcConfig, ProcJob, ProcReport};
+use crate::error::{Error, Result};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A per-pool rendezvous directory, preferably on tmpfs so the "shared
+/// memory" rings really live in memory.
+pub(super) fn scratch_dir() -> PathBuf {
+    let base = if Path::new("/dev/shm").is_dir() {
+        PathBuf::from("/dev/shm")
+    } else {
+        std::env::temp_dir()
+    };
+    base.join(format!(
+        "locag-{}-{}",
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Kills and reaps every remaining child on all exit paths.
+pub(super) struct Reaper {
+    pub(super) kids: Vec<Child>,
+}
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for c in &mut self.kids {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+pub(super) fn transport_err(rank: usize, round: usize, what: impl Into<String>) -> Error {
+    Error::Transport { rank, round, what: what.into() }
+}
+
+/// Decode a worker's `CTL_ERR` payload: `[round u64][peer u64][message]`.
+fn decode_worker_err(sender: usize, payload: &[u8]) -> Error {
+    if payload.len() < 16 {
+        return transport_err(sender, 0, "worker sent a malformed error report");
+    }
+    let round = u64::from_le_bytes(payload[..8].try_into().unwrap()) as usize;
+    let peer = u64::from_le_bytes(payload[8..16].try_into().unwrap()) as usize;
+    let msg = String::from_utf8_lossy(&payload[16..]).into_owned();
+    let what = if peer == sender { msg } else { format!("{msg} (reported by rank {sender})") };
+    transport_err(peer, round, what)
+}
+
+/// Send a parent→worker control frame; when the worker is already gone,
+/// prefer its queued `CTL_ERR` report (it may have failed setup and
+/// exited) over the broken-pipe symptom.
+fn send_or_err(s: &UnixStream, ty: u8, rank: usize, dl: &Deadline) -> Result<()> {
+    if let Err(e) = ctl_send(s, ty, 0, &[], dl) {
+        if let Ok((CTL_ERR, _, payload)) = ctl_recv(s, dl) {
+            return Err(decode_worker_err(rank, &payload));
+        }
+        return Err(transport_err(rank, 0, e));
+    }
+    Ok(())
+}
+
+/// Wire spelling of a job, parsed back by the worker's `LOAD` handler.
+fn job_spec(job: &ProcJob) -> String {
+    match job {
+        ProcJob::Single { op, algo, n, elem_bytes } => {
+            format!("single {} {} {} {}", op.name(), algo, n, elem_bytes)
+        }
+        ProcJob::Fused { specs, dtype } => {
+            let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
+            format!("fused {} {}", dtype.name(), labels.join(";"))
+        }
+    }
+}
+
+/// Lifecycle counters proving the plan-once/execute-many contract: tests
+/// assert `workers_spawned` and `handshakes` stay at the world size while
+/// `executes` grows.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker processes forked over this pool's lifetime.
+    pub workers_spawned: usize,
+    /// Control handshakes completed (one per worker, at spawn).
+    pub handshakes: usize,
+    /// Schedules shipped via [`ProcPool::load`].
+    pub loads: usize,
+    /// Executes served.
+    pub executes: usize,
+}
+
+/// A persistent pool of worker processes serving repeated schedule
+/// executes — see the module docs for lifecycle and failure contract.
+pub struct ProcPool {
+    dir: PathBuf,
+    reaper: Reaper,
+    streams: Vec<UnixStream>,
+    p: usize,
+    deadline: Duration,
+    next_sid: u64,
+    /// Per-schedule (input, output) byte sizes for delta validation.
+    loaded: BTreeMap<u64, (usize, usize)>,
+    poisoned: Option<String>,
+    stats: PoolStats,
+}
+
+impl ProcPool {
+    /// Spawn `regions × ppr` workers and complete the channel handshake.
+    /// When this returns, every shm ring and socket of the rank mesh is
+    /// connected and the pool is ready to [`ProcPool::load`] schedules.
+    ///
+    /// The current executable must dispatch a leading `__worker` argument
+    /// to [`super::worker_main`] (the `locag` CLI does; so does the
+    /// `proc_backend` test harness). `machine` is a preset name or a
+    /// fitted-params file path, used for model-tuned and fused planning
+    /// inside the workers.
+    pub fn spawn(regions: usize, ppr: usize, machine: &str, cfg: &ProcConfig) -> Result<ProcPool> {
+        let p = regions * ppr;
+        if p == 0 {
+            return Err(Error::Precondition("proc backend needs at least one rank".into()));
+        }
+        if let Some(k) = cfg.kill_rank {
+            if k >= p {
+                return Err(Error::RankOutOfRange { rank: k, size: p });
+            }
+        }
+        let dir = scratch_dir();
+        std::fs::create_dir_all(&dir)?;
+        match Self::spawn_in(&dir, regions, ppr, machine, cfg) {
+            Ok((reaper, streams)) => Ok(ProcPool {
+                dir,
+                reaper,
+                streams,
+                p,
+                deadline: cfg.deadline,
+                next_sid: 1,
+                loaded: BTreeMap::new(),
+                poisoned: None,
+                stats: PoolStats { workers_spawned: p, handshakes: p, loads: 0, executes: 0 },
+            }),
+            Err(e) => {
+                let _ = std::fs::remove_dir_all(&dir);
+                Err(e)
+            }
+        }
+    }
+
+    fn spawn_in(
+        dir: &Path,
+        regions: usize,
+        ppr: usize,
+        machine: &str,
+        cfg: &ProcConfig,
+    ) -> Result<(Reaper, Vec<UnixStream>)> {
+        let p = regions * ppr;
+        // The parent outlives the workers' deadline slightly so their
+        // typed error reports win races against the parent's own timeout.
+        let dl = Deadline::after(cfg.deadline + Duration::from_secs(2));
+        let ctl_path = dir.join("ctl.sock");
+        let listener = UnixListener::bind(&ctl_path)?;
+        listener.set_nonblocking(true)?;
+
+        let exe = std::env::current_exe()?;
+        let mut kids = Vec::with_capacity(p);
+        for rank in 0..p {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("__worker")
+                .arg("--dir")
+                .arg(dir)
+                .arg("--rank")
+                .arg(rank.to_string())
+                .arg("--regions")
+                .arg(regions.to_string())
+                .arg("--ppr")
+                .arg(ppr.to_string())
+                .arg("--machine")
+                .arg(machine)
+                .arg("--deadline-ms")
+                .arg(cfg.deadline.as_millis().to_string())
+                .arg("--ring-bytes")
+                .arg(cfg.ring_bytes.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null());
+            kids.push(cmd.spawn()?);
+        }
+        let mut reaper = Reaper { kids };
+
+        // Phase 1: accept one HELLO per rank, watching for early deaths.
+        let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < p {
+            for (rank, child) in reaper.kids.iter_mut().enumerate() {
+                if streams[rank].is_none() {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        return Err(transport_err(
+                            rank,
+                            0,
+                            format!("worker process exited during setup ({status})"),
+                        ));
+                    }
+                }
+            }
+            match listener.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    let (ty, rank, _) = ctl_recv(&s, &dl)
+                        .map_err(|e| transport_err(0, 0, format!("control handshake: {e}")))?;
+                    let rank = rank as usize;
+                    if ty != CTL_HELLO || rank >= p || streams[rank].is_some() {
+                        return Err(transport_err(rank.min(p - 1), 0, "bad control handshake"));
+                    }
+                    streams[rank] = Some(s);
+                    connected += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if dl.expired() {
+                        let missing = (0..p).find(|&r| streams[r].is_none()).unwrap_or(0);
+                        return Err(transport_err(
+                            missing,
+                            0,
+                            "deadline exceeded waiting for workers to start",
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let streams: Vec<UnixStream> = streams.into_iter().map(Option::unwrap).collect();
+
+        // Phase 2: GO — all listeners are bound, the data mesh may connect.
+        for (rank, s) in streams.iter().enumerate() {
+            send_or_err(s, CTL_GO, rank, &dl)?;
+        }
+        if let Some(k) = cfg.kill_rank {
+            let _ = reaper.kids[k].kill();
+            let _ = reaper.kids[k].wait();
+        }
+
+        // Phase 3: one READY per rank (a worker that failed mesh setup
+        // reports ERR here; a dead worker's stream reports EOF).
+        for (rank, s) in streams.iter().enumerate() {
+            match ctl_recv(s, &dl) {
+                Ok((CTL_READY, _, _)) => {}
+                Ok((CTL_ERR, _, payload)) => return Err(decode_worker_err(rank, &payload)),
+                Ok((ty, ..)) => {
+                    return Err(transport_err(rank, 0, format!("unexpected control frame {ty}")))
+                }
+                Err(e) => return Err(transport_err(rank, 0, e)),
+            }
+        }
+        Ok((reaper, streams))
+    }
+
+    /// Ship `job` to every worker once and return its schedule id. Any
+    /// number of schedules can be resident; executes pick one by id.
+    /// Rejections (a bad spec, frames too large for the fixed rings)
+    /// surface as typed errors and leave the pool fully usable.
+    pub fn load(&mut self, job: &ProcJob) -> Result<u64> {
+        self.check_usable()?;
+        let sid = self.next_sid;
+        self.next_sid += 1;
+        let spec = job_spec(job);
+        let mut payload = Vec::with_capacity(8 + spec.len());
+        payload.extend_from_slice(&sid.to_le_bytes());
+        payload.extend_from_slice(spec.as_bytes());
+        let dl = Deadline::after(self.deadline + Duration::from_secs(2));
+        for (rank, s) in self.streams.iter().enumerate() {
+            if let Err(e) = ctl_send(s, CTL_LOAD, 0, &payload, &dl) {
+                return Err(self.poison(transport_err(rank, 0, e)));
+            }
+        }
+        let replies = match collect_replies(&self.streams, &dl) {
+            Ok(r) => r,
+            Err(e) => return Err(self.poison(e)),
+        };
+        for (rank, (ty, payload)) in replies.into_iter().enumerate() {
+            match ty {
+                CTL_LOADED if payload.len() >= 8 => {
+                    let echo = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                    if echo != sid {
+                        return Err(self.poison(transport_err(
+                            rank,
+                            0,
+                            format!("schedule id mismatch: sent {sid}, worker acked {echo}"),
+                        )));
+                    }
+                }
+                // Workers reject loads without touching the data
+                // channels, so the pool stays usable.
+                CTL_ERR => return Err(decode_worker_err(rank, &payload)),
+                _ => {
+                    return Err(self.poison(transport_err(
+                        rank,
+                        0,
+                        format!("unexpected control frame {ty}"),
+                    )))
+                }
+            }
+        }
+        self.loaded.insert(sid, job.io_bytes(self.p));
+        self.stats.loads += 1;
+        Ok(sid)
+    }
+
+    /// Execute a loaded schedule with its canonical inputs and ship the
+    /// outputs back.
+    pub fn execute(&mut self, sid: u64) -> Result<ProcReport> {
+        self.execute_opts(sid, None, true)
+    }
+
+    /// Execute with explicit per-rank input bytes — the input delta is
+    /// the only payload that crosses the control path.
+    pub fn execute_with_inputs(&mut self, sid: u64, inputs: &[Vec<u8>]) -> Result<ProcReport> {
+        self.execute_opts(sid, Some(inputs), true)
+    }
+
+    /// Execute without shipping outputs back — the timing-only path the
+    /// bench loops use. Returns max per-worker execute-phase seconds.
+    pub fn execute_timed(&mut self, sid: u64) -> Result<f64> {
+        Ok(self.execute_opts(sid, None, false)?.wall)
+    }
+
+    fn execute_opts(
+        &mut self,
+        sid: u64,
+        inputs: Option<&[Vec<u8>]>,
+        want_outputs: bool,
+    ) -> Result<ProcReport> {
+        self.check_usable()?;
+        let Some(&(in_bytes, _)) = self.loaded.get(&sid) else {
+            // Caught parent-side, before anything crosses the control
+            // path — a stale id never poisons the pool.
+            return Err(transport_err(
+                0,
+                0,
+                format!("stale schedule id {sid}: not loaded on this pool"),
+            ));
+        };
+        if let Some(ins) = inputs {
+            if ins.len() != self.p {
+                return Err(Error::Precondition(format!(
+                    "got {} input buffers for a {}-rank pool",
+                    ins.len(),
+                    self.p
+                )));
+            }
+            for (rank, b) in ins.iter().enumerate() {
+                if b.len() != in_bytes {
+                    return Err(Error::Precondition(format!(
+                        "rank {rank} input is {} bytes, schedule {sid} expects {in_bytes}",
+                        b.len()
+                    )));
+                }
+            }
+        }
+        let mut flags = 0u64;
+        if want_outputs {
+            flags |= EXEC_FLAG_OUTPUT;
+        }
+        if inputs.is_some() {
+            flags |= EXEC_FLAG_INPUT;
+        }
+        let dl = Deadline::after(self.deadline + Duration::from_secs(2));
+        for (rank, s) in self.streams.iter().enumerate() {
+            let input = inputs.map(|v| v[rank].as_slice()).unwrap_or(&[]);
+            let mut payload = Vec::with_capacity(16 + input.len());
+            payload.extend_from_slice(&sid.to_le_bytes());
+            payload.extend_from_slice(&flags.to_le_bytes());
+            payload.extend_from_slice(input);
+            if let Err(e) = ctl_send(s, CTL_EXEC, 0, &payload, &dl) {
+                return Err(self.poison(transport_err(rank, 0, e)));
+            }
+        }
+        let replies = match collect_replies(&self.streams, &dl) {
+            Ok(r) => r,
+            Err(e) => return Err(self.poison(e)),
+        };
+        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); self.p];
+        let mut wall = 0f64;
+        for (rank, (ty, payload)) in replies.into_iter().enumerate() {
+            match ty {
+                CTL_OK if payload.len() >= 16 => {
+                    let echo = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                    if echo != sid {
+                        return Err(self.poison(transport_err(
+                            rank,
+                            0,
+                            format!("schedule id mismatch: sent {sid}, worker answered {echo}"),
+                        )));
+                    }
+                    let nanos = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+                    wall = wall.max(nanos as f64 / 1e9);
+                    outputs[rank] = payload[16..].to_vec();
+                }
+                CTL_ERR => return Err(self.poison(decode_worker_err(rank, &payload))),
+                _ => {
+                    return Err(self.poison(transport_err(
+                        rank,
+                        0,
+                        format!("unexpected control frame {ty}"),
+                    )))
+                }
+            }
+        }
+        self.stats.executes += 1;
+        Ok(ProcReport { outputs, wall })
+    }
+
+    /// Graceful shutdown: `SHUTDOWN` is acked by every live worker, then
+    /// all are reaped. The pool is unusable afterwards; dropping it also
+    /// cleans up, so calling this is optional.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.check_usable()?;
+        let dl = Deadline::after(Duration::from_secs(5));
+        for (rank, s) in self.streams.iter().enumerate() {
+            if let Err(e) = ctl_send(s, CTL_SHUTDOWN, 0, &[], &dl) {
+                return Err(self.poison(transport_err(rank, 0, e)));
+            }
+        }
+        for (rank, s) in self.streams.iter().enumerate() {
+            match ctl_recv(s, &dl) {
+                Ok((CTL_OK, ..)) => {}
+                Ok((ty, ..)) => {
+                    return Err(self.poison(transport_err(
+                        rank,
+                        0,
+                        format!("unexpected control frame {ty}"),
+                    )))
+                }
+                Err(e) => return Err(self.poison(transport_err(rank, 0, e))),
+            }
+        }
+        // Workers exit right after acking; reap them gracefully (Drop
+        // would kill stragglers, but a clean wait avoids racing their
+        // exit).
+        let reap_dl = Deadline::after(Duration::from_secs(5));
+        for child in &mut self.reaper.kids {
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if reap_dl.expired() => break,
+                    Ok(None) => std::thread::sleep(Duration::from_millis(1)),
+                    Err(_) => break,
+                }
+            }
+        }
+        self.poisoned = Some("pool was shut down".into());
+        Ok(())
+    }
+
+    /// World size (`regions × ppr` at spawn).
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    /// Lifecycle counters (spawns, handshakes, loads, executes).
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Test hook: kill one worker process outright, as if it crashed
+    /// between executes.
+    pub fn kill_worker(&mut self, rank: usize) -> Result<()> {
+        if rank >= self.p {
+            return Err(Error::RankOutOfRange { rank, size: self.p });
+        }
+        let _ = self.reaper.kids[rank].kill();
+        let _ = self.reaper.kids[rank].wait();
+        Ok(())
+    }
+
+    /// Record a fatal error: the data channels are in an unknown state,
+    /// so every later call fails fast until a fresh pool is spawned.
+    fn poison(&mut self, e: Error) -> Error {
+        if self.poisoned.is_none() {
+            self.poisoned = Some(e.to_string());
+        }
+        e
+    }
+
+    fn check_usable(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(what) => Err(Error::Transport {
+                rank: 0,
+                round: 0,
+                what: format!("pool is poisoned ({what}); spawn a fresh ProcPool"),
+            }),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ProcPool {
+    fn drop(&mut self) {
+        // Close control sockets first so idle workers exit on EOF, then
+        // reap before the rendezvous directory goes away.
+        self.streams.clear();
+        for c in &mut self.reaper.kids {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        self.reaper.kids.clear();
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Collect one reply frame per rank, failing fast when any worker dies
+/// (EOF on its control socket) instead of waiting out the deadline.
+fn collect_replies(streams: &[UnixStream], dl: &Deadline) -> Result<Vec<(u8, Vec<u8>)>> {
+    let mut got: Vec<Option<(u8, Vec<u8>)>> = (0..streams.len()).map(|_| None).collect();
+    let mut done = 0usize;
+    while done < streams.len() {
+        let mut progressed = false;
+        for (rank, s) in streams.iter().enumerate() {
+            if got[rank].is_some() {
+                continue;
+            }
+            s.set_nonblocking(true).map_err(|e| transport_err(rank, 0, e.to_string()))?;
+            let mut probe = [0u8; 1];
+            let peeked = s.peek(&mut probe);
+            // Read timeouts only apply in blocking mode; restore it
+            // before any actual receive.
+            s.set_nonblocking(false).map_err(|e| transport_err(rank, 0, e.to_string()))?;
+            match peeked {
+                Ok(0) => {
+                    return Err(transport_err(
+                        rank,
+                        0,
+                        "worker process died between pool commands (EOF on control socket)",
+                    ));
+                }
+                Ok(_) => {
+                    let (ty, _, payload) =
+                        ctl_recv(s, dl).map_err(|e| transport_err(rank, 0, e))?;
+                    got[rank] = Some((ty, payload));
+                    done += 1;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) => return Err(transport_err(rank, 0, e.to_string())),
+            }
+        }
+        if done < streams.len() && !progressed {
+            if dl.expired() {
+                let missing = got.iter().position(Option::is_none).unwrap_or(0);
+                return Err(transport_err(
+                    missing,
+                    0,
+                    "deadline exceeded waiting for worker replies",
+                ));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    Ok(got.into_iter().map(Option::unwrap).collect())
+}
+
+/// Execute `job` once over `regions × ppr` worker processes: one
+/// spawn → load → execute → shutdown cycle on a fresh [`ProcPool`].
+/// Single-shot callers (the conformance tests, one-off CLI runs) use
+/// this; anything iterating should hold a pool and call
+/// [`ProcPool::execute`] repeatedly.
+pub fn run_proc(
+    regions: usize,
+    ppr: usize,
+    job: &ProcJob,
+    machine: &str,
+    cfg: &ProcConfig,
+) -> Result<ProcReport> {
+    let mut pool = ProcPool::spawn(regions, ppr, machine, cfg)?;
+    let sid = pool.load(job)?;
+    let report = pool.execute(sid)?;
+    let _ = pool.shutdown();
+    Ok(report)
+}
+
+/// Load `job` on `pool`, run `warmup` discarded executes, then `iters`
+/// timed ones, and return the median execute-phase wall seconds — the
+/// measurement loop `locag bench` and `locag figure` share.
+pub fn pool_median_wall(
+    pool: &mut ProcPool,
+    job: &ProcJob,
+    warmup: usize,
+    iters: usize,
+) -> Result<f64> {
+    let sid = pool.load(job)?;
+    for _ in 0..warmup {
+        pool.execute_timed(sid)?;
+    }
+    let mut walls = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        walls.push(pool.execute_timed(sid)?);
+    }
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    Ok(walls[walls.len() / 2])
+}
+
+/// Shares one pool across thread-per-rank code (the coordinator's serving
+/// loop): each thread deposits its rank's input, the barrier leader runs
+/// one pooled execute, and every thread picks up its rank's output. A
+/// pool failure surfaces on every rank and sticks for later exchanges.
+pub struct PoolGate {
+    barrier: Barrier,
+    inner: Mutex<GateInner>,
+}
+
+struct GateInner {
+    pool: ProcPool,
+    sid: u64,
+    inputs: Vec<Vec<u8>>,
+    outputs: Vec<Vec<u8>>,
+    error: Option<String>,
+}
+
+impl PoolGate {
+    /// Wrap a pool and a loaded schedule id; `exchange` expects exactly
+    /// `pool.size()` participating threads.
+    pub fn new(pool: ProcPool, sid: u64) -> PoolGate {
+        let p = pool.size();
+        PoolGate {
+            barrier: Barrier::new(p),
+            inner: Mutex::new(GateInner {
+                pool,
+                sid,
+                inputs: vec![Vec::new(); p],
+                outputs: vec![Vec::new(); p],
+                error: None,
+            }),
+        }
+    }
+
+    /// Run one collective: deposit `input` for `rank`, execute once all
+    /// ranks have arrived, and write this rank's output into `output`.
+    pub fn exchange(&self, rank: usize, input: &[u8], output: &mut Vec<u8>) -> Result<()> {
+        {
+            let mut g = self.inner.lock().expect("gate lock");
+            if let Some(e) = &g.error {
+                return Err(Error::Transport { rank, round: 0, what: e.clone() });
+            }
+            g.inputs[rank] = input.to_vec();
+        }
+        let leader = self.barrier.wait().is_leader();
+        if leader {
+            let mut g = self.inner.lock().expect("gate lock");
+            let inputs = std::mem::take(&mut g.inputs);
+            let sid = g.sid;
+            let res = g.pool.execute_with_inputs(sid, &inputs);
+            g.inputs = inputs;
+            match res {
+                Ok(rep) => g.outputs = rep.outputs,
+                Err(e) => g.error = Some(e.to_string()),
+            }
+        }
+        self.barrier.wait();
+        let g = self.inner.lock().expect("gate lock");
+        if let Some(e) = &g.error {
+            return Err(Error::Transport { rank, round: 0, what: e.clone() });
+        }
+        *output = g.outputs[rank].clone();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::fuse::FuseSpec;
+    use crate::collectives::OpKind;
+    use crate::transport::DType;
+
+    #[test]
+    fn job_specs_have_the_wire_spelling_workers_parse() {
+        let single = ProcJob::Single {
+            op: OpKind::Allgather,
+            algo: "loc-aware".into(),
+            n: 16,
+            elem_bytes: 4,
+        };
+        assert_eq!(job_spec(&single), "single allgather loc-aware 16 4");
+        let fused = ProcJob::Fused {
+            specs: vec![
+                FuseSpec::new(OpKind::Allgather, "bruck", 2),
+                FuseSpec::new(OpKind::ReduceScatter, "loc-aware", 3),
+            ],
+            dtype: DType::F32,
+        };
+        assert_eq!(job_spec(&fused), "fused f32 allgather/bruck@2;reduce-scatter/loc-aware@3");
+    }
+
+    #[test]
+    fn worker_err_decodes_with_peer_attribution() {
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&3u64.to_le_bytes());
+        payload.extend_from_slice(&2u64.to_le_bytes());
+        payload.extend_from_slice(b"deadline exceeded while receiving");
+        let e = decode_worker_err(1, &payload);
+        match e {
+            Error::Transport { rank, round, what } => {
+                assert_eq!((rank, round), (2, 3));
+                assert!(what.contains("reported by rank 1"), "{what}");
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+}

@@ -1,300 +1,58 @@
-//! Parent orchestration + worker-side schedule interpretation.
+//! Worker-side pool protocol + byte-level schedule interpretation.
 //!
-//! The parent ([`run_proc`]) spawns one worker process per rank and
-//! coordinates them over a Unix control socket with a fixed handshake:
-//! `HELLO` (worker up, its listener bound) → `GO` (connect data channels)
-//! → `READY` (channels up) → `START` (execute) → `OK`/`ERR`. Every phase
-//! is deadline-bounded, and worker death at any point surfaces as a typed
-//! [`Error::Transport`] instead of a hang.
+//! A pool worker (spawned by [`super::pool::ProcPool`], dispatched on the
+//! hidden `__worker` argv) performs the channel handshake exactly once —
+//! `HELLO` (up, listener bound) → `GO` (connect the full data mesh) →
+//! `READY` — then serves a command loop over its control socket:
 //!
-//! The worker side rebuilds its rank's [`Schedule`] from argv (builders
-//! are pure SPMD functions) and interprets it over [`PeerChan`]s with the
-//! exact semantics of the in-process executor: eager sends, blocking
-//! receives with FIFO matching per (source, tag), pad bytes zero-filled on
-//! send and stripped on receive, and the same local copy/reduce/rotate
-//! step definitions — which is what makes outputs bit-identical across
-//! backends.
+//! * `LOAD [sid][spec]` — rebuild this rank's [`Schedule`] from the job
+//!   spec (builders are pure SPMD functions, so no IR crosses the wire),
+//!   preallocate every buffer an execute needs, reply `LOADED [sid]`. A
+//!   rejected load reports `ERR` and leaves the worker serving.
+//! * `EXEC [sid][flags][input?]` — run the loaded schedule over the
+//!   persistent channels and buffers, reply `OK [sid][nanos][output?]`.
+//!   The interpret loop is allocation-free: wire frames stage through one
+//!   persistent buffer sized to the schedule's largest message, and local
+//!   steps stage through another, so repeat executes cost only the
+//!   memcpys the schedule itself demands.
+//! * `SHUTDOWN` — ack and exit cleanly.
+//!
+//! The interpreter keeps the exact semantics of the in-process executor:
+//! eager sends, blocking receives with FIFO matching per (source, tag),
+//! pad bytes zero-filled on send and stripped on receive, and the same
+//! local copy/reduce/rotate step definitions — which is what makes
+//! outputs bit-identical across backends.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
-use std::io::ErrorKind;
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::{Path, PathBuf};
-use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use super::chan::{
     accept_deadline, connect_deadline, ctl_recv, ctl_send, ring_capacity, ChanResult, Deadline,
-    PeerChan, ShmRing, CTL_ERR, CTL_GO, CTL_HELLO, CTL_OK, CTL_READY, CTL_START,
+    PeerChan, ShmRing, CTL_ERR, CTL_EXEC, CTL_GO, CTL_HELLO, CTL_LOAD, CTL_LOADED, CTL_OK,
+    CTL_READY, CTL_SHUTDOWN,
 };
-use super::{canonical_input_bytes, ProcConfig, ProcJob, ProcReport};
+use super::{
+    canonical_input_bytes, canonical_input_bytes_dtype, DType, DEFAULT_POOL_RING_BYTES,
+};
 use crate::cli::args::Args;
 use crate::collectives::fuse::{self, FuseSpec};
 use crate::collectives::schedule::WorldView;
 use crate::collectives::{BufId, OpKind, Schedule, Slice, Step};
-use crate::error::{Error, Result};
 use crate::model::params::MachineParams;
 use crate::topology::{Locality, Topology};
 
-// ---------------------------------------------------------------------------
-// parent side
-// ---------------------------------------------------------------------------
+/// `EXEC` flags bit 0: ship the output back in the `OK` reply.
+pub(super) const EXEC_FLAG_OUTPUT: u64 = 1;
+/// `EXEC` flags bit 1: an input delta follows the flags word.
+pub(super) const EXEC_FLAG_INPUT: u64 = 2;
 
-static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
-
-/// A per-run rendezvous directory, preferably on tmpfs so the "shared
-/// memory" rings really live in memory.
-pub(super) fn scratch_dir() -> PathBuf {
-    let base = if Path::new("/dev/shm").is_dir() {
-        PathBuf::from("/dev/shm")
-    } else {
-        std::env::temp_dir()
-    };
-    base.join(format!(
-        "locag-{}-{}",
-        std::process::id(),
-        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
-    ))
-}
-
-/// Kills and reaps every remaining child on all exit paths.
-struct Reaper {
-    kids: Vec<Child>,
-}
-
-impl Drop for Reaper {
-    fn drop(&mut self) {
-        for c in &mut self.kids {
-            let _ = c.kill();
-            let _ = c.wait();
-        }
-    }
-}
-
-fn transport_err(rank: usize, round: usize, what: impl Into<String>) -> Error {
-    Error::Transport { rank, round, what: what.into() }
-}
-
-/// Decode a worker's `CTL_ERR` payload: `[round u64][peer u64][message]`.
-fn decode_worker_err(sender: usize, payload: &[u8]) -> Error {
-    if payload.len() < 16 {
-        return transport_err(sender, 0, "worker sent a malformed error report");
-    }
-    let round = u64::from_le_bytes(payload[..8].try_into().unwrap()) as usize;
-    let peer = u64::from_le_bytes(payload[8..16].try_into().unwrap()) as usize;
-    let msg = String::from_utf8_lossy(&payload[16..]).into_owned();
-    let what =
-        if peer == sender { msg } else { format!("{msg} (reported by rank {sender})") };
-    transport_err(peer, round, what)
-}
-
-/// Send a parent→worker control frame; when the worker is already gone,
-/// prefer its queued `CTL_ERR` report (it may have failed setup and
-/// exited) over the broken-pipe symptom.
-fn send_or_err(s: &UnixStream, ty: u8, rank: usize, dl: &Deadline) -> Result<()> {
-    if let Err(e) = ctl_send(s, ty, 0, &[], dl) {
-        if let Ok((CTL_ERR, _, payload)) = ctl_recv(s, dl) {
-            return Err(decode_worker_err(rank, &payload));
-        }
-        return Err(transport_err(rank, 0, e));
-    }
-    Ok(())
-}
-
-fn job_args(job: &ProcJob) -> Vec<String> {
-    match job {
-        ProcJob::Single { op, algo, n, elem_bytes } => vec![
-            "--op".into(),
-            op.name().to_string(),
-            "--algo".into(),
-            algo.clone(),
-            "--n".into(),
-            n.to_string(),
-            "--elem-bytes".into(),
-            elem_bytes.to_string(),
-        ],
-        ProcJob::Fused { specs } => {
-            let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
-            vec!["--fused".into(), labels.join(";")]
-        }
-    }
-}
-
-/// Execute `job` once over `regions × ppr` worker processes and return the
-/// per-rank output bytes plus the max worker execute-phase wall time.
-///
-/// The current executable must dispatch a leading `__worker` argument to
-/// [`worker_main`] (the `locag` CLI does; so does the `proc_backend` test
-/// harness). `machine` is a preset name or a fitted-params file path, used
-/// for model-tuned and fused planning inside the workers.
-pub fn run_proc(
-    regions: usize,
-    ppr: usize,
-    job: &ProcJob,
-    machine: &str,
-    cfg: &ProcConfig,
-) -> Result<ProcReport> {
-    let dir = scratch_dir();
-    std::fs::create_dir_all(&dir)?;
-    let out = run_proc_in(&dir, regions, ppr, job, machine, cfg);
-    let _ = std::fs::remove_dir_all(&dir);
-    out
-}
-
-fn run_proc_in(
-    dir: &Path,
-    regions: usize,
-    ppr: usize,
-    job: &ProcJob,
-    machine: &str,
-    cfg: &ProcConfig,
-) -> Result<ProcReport> {
-    let p = regions * ppr;
-    if p == 0 {
-        return Err(Error::Precondition("proc backend needs at least one rank".into()));
-    }
-    if let Some(k) = cfg.kill_rank {
-        if k >= p {
-            return Err(Error::RankOutOfRange { rank: k, size: p });
-        }
-    }
-    // The parent outlives the workers' deadline slightly so their typed
-    // error reports win races against the parent's own timeout.
-    let dl = Deadline::after(cfg.deadline + Duration::from_secs(2));
-    let ctl_path = dir.join("ctl.sock");
-    let listener = UnixListener::bind(&ctl_path)?;
-    listener.set_nonblocking(true)?;
-
-    let exe = std::env::current_exe()?;
-    let mut kids = Vec::with_capacity(p);
-    for rank in 0..p {
-        let mut cmd = Command::new(&exe);
-        cmd.arg("__worker")
-            .arg("--dir")
-            .arg(dir)
-            .arg("--rank")
-            .arg(rank.to_string())
-            .arg("--regions")
-            .arg(regions.to_string())
-            .arg("--ppr")
-            .arg(ppr.to_string())
-            .arg("--machine")
-            .arg(machine)
-            .arg("--deadline-ms")
-            .arg(cfg.deadline.as_millis().to_string())
-            .args(job_args(job))
-            .stdin(Stdio::null())
-            .stdout(Stdio::null());
-        kids.push(cmd.spawn()?);
-    }
-    let mut reaper = Reaper { kids };
-
-    // Phase 1: accept one HELLO per rank, watching for early child deaths.
-    let mut streams: Vec<Option<UnixStream>> = (0..p).map(|_| None).collect();
-    let mut connected = 0usize;
-    while connected < p {
-        for (rank, child) in reaper.kids.iter_mut().enumerate() {
-            if streams[rank].is_none() {
-                if let Ok(Some(status)) = child.try_wait() {
-                    return Err(transport_err(
-                        rank,
-                        0,
-                        format!("worker process exited during setup ({status})"),
-                    ));
-                }
-            }
-        }
-        match listener.accept() {
-            Ok((s, _)) => {
-                s.set_nonblocking(false)?;
-                let (ty, rank, _) = ctl_recv(&s, &dl)
-                    .map_err(|e| transport_err(0, 0, format!("control handshake: {e}")))?;
-                let rank = rank as usize;
-                if ty != CTL_HELLO || rank >= p || streams[rank].is_some() {
-                    return Err(transport_err(rank.min(p - 1), 0, "bad control handshake"));
-                }
-                streams[rank] = Some(s);
-                connected += 1;
-            }
-            Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                if dl.expired() {
-                    let missing =
-                        (0..p).find(|&r| streams[r].is_none()).unwrap_or(0);
-                    return Err(transport_err(
-                        missing,
-                        0,
-                        "deadline exceeded waiting for workers to start",
-                    ));
-                }
-                std::thread::sleep(Duration::from_millis(1));
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-    let streams: Vec<UnixStream> = streams.into_iter().map(Option::unwrap).collect();
-
-    // Phase 2: GO — all listeners are bound, data channels may connect.
-    for (rank, s) in streams.iter().enumerate() {
-        send_or_err(s, CTL_GO, rank, &dl)?;
-    }
-    if let Some(k) = cfg.kill_rank {
-        let _ = reaper.kids[k].kill();
-        let _ = reaper.kids[k].wait();
-    }
-
-    // Phase 3: one READY per rank (a worker that failed setup reports ERR
-    // here; a dead worker's stream reports EOF).
-    for (rank, s) in streams.iter().enumerate() {
-        match ctl_recv(s, &dl) {
-            Ok((CTL_READY, _, _)) => {}
-            Ok((CTL_ERR, _, payload)) => return Err(decode_worker_err(rank, &payload)),
-            Ok((ty, ..)) => {
-                return Err(transport_err(rank, 0, format!("unexpected control frame {ty}")))
-            }
-            Err(e) => return Err(transport_err(rank, 0, e)),
-        }
-    }
-
-    // Phase 4: START, then collect one result per rank.
-    for (rank, s) in streams.iter().enumerate() {
-        send_or_err(s, CTL_START, rank, &dl)?;
-    }
-    let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); p];
-    let mut wall = 0f64;
-    for (rank, s) in streams.iter().enumerate() {
-        match ctl_recv(s, &dl) {
-            Ok((CTL_OK, _, payload)) if payload.len() >= 8 => {
-                let nanos = u64::from_le_bytes(payload[..8].try_into().unwrap());
-                wall = wall.max(nanos as f64 / 1e9);
-                outputs[rank] = payload[8..].to_vec();
-            }
-            Ok((CTL_ERR, _, payload)) => return Err(decode_worker_err(rank, &payload)),
-            Ok((ty, ..)) => {
-                return Err(transport_err(rank, 0, format!("unexpected control frame {ty}")))
-            }
-            Err(e) => return Err(transport_err(rank, 0, e)),
-        }
-    }
-
-    // Workers exit right after reporting; reap them gracefully (the Reaper
-    // would kill stragglers, but a clean wait avoids racing their exit).
-    let reap_dl = Deadline::after(Duration::from_secs(5));
-    for child in &mut reaper.kids {
-        loop {
-            match child.try_wait() {
-                Ok(Some(_)) => break,
-                Ok(None) if reap_dl.expired() => break,
-                Ok(None) => std::thread::sleep(Duration::from_millis(1)),
-                Err(_) => break,
-            }
-        }
-    }
-    Ok(ProcReport { outputs, wall })
-}
-
-// ---------------------------------------------------------------------------
-// worker side
-// ---------------------------------------------------------------------------
+/// How long an idle worker waits for the next command. Effectively
+/// forever — the parent closing the control socket (EOF) is what ends the
+/// loop; this bound only keeps a truly orphaned worker from outliving the
+/// host's patience.
+const IDLE_SECS: u64 = 24 * 3600;
 
 /// A worker-side failure with the context the parent's typed error needs.
 struct WErr {
@@ -319,34 +77,42 @@ enum Mailbox {
 }
 
 impl Mailbox {
-    fn send(&mut self, tag: u64, payload: Vec<u8>, dl: &Deadline) -> ChanResult<()> {
+    fn send_bytes(&mut self, tag: u64, payload: &[u8], dl: &Deadline) -> ChanResult<()> {
         match self {
-            Mailbox::Chan { chan, .. } => chan.send_frame(tag, &payload, dl),
+            Mailbox::Chan { chan, .. } => chan.send_frame(tag, payload, dl),
             Mailbox::Loopback { pending } => {
-                pending.entry(tag).or_default().push_back(payload);
+                // The queue needs ownership; loopback volumes are tiny.
+                pending.entry(tag).or_default().push_back(payload.to_vec());
                 Ok(())
             }
         }
     }
 
-    fn recv(&mut self, tag: u64, dl: &Deadline) -> ChanResult<Vec<u8>> {
-        match self {
-            Mailbox::Chan { chan, pending } => {
-                if let Some(m) = pending.get_mut(&tag).and_then(VecDeque::pop_front) {
-                    return Ok(m);
-                }
-                loop {
-                    let (t, m) = chan.recv_frame(dl)?;
-                    if t == tag {
-                        return Ok(m);
-                    }
-                    pending.entry(t).or_default().push_back(m);
-                }
+    /// Receive the frame matching `tag` into `buf[..len]`, queueing frames
+    /// of other tags. Same-sized repeats allocate nothing.
+    fn recv_into(&mut self, tag: u64, buf: &mut Vec<u8>, dl: &Deadline) -> ChanResult<usize> {
+        let pending = match self {
+            Mailbox::Chan { pending, .. } => pending,
+            Mailbox::Loopback { pending } => pending,
+        };
+        if let Some(m) = pending.get_mut(&tag).and_then(VecDeque::pop_front) {
+            if buf.len() < m.len() {
+                buf.resize(m.len(), 0);
             }
-            Mailbox::Loopback { pending } => pending
-                .get_mut(&tag)
-                .and_then(VecDeque::pop_front)
-                .ok_or_else(|| "self-receive posted before the matching self-send".to_string()),
+            buf[..m.len()].copy_from_slice(&m);
+            return Ok(m.len());
+        }
+        match self {
+            Mailbox::Chan { chan, pending } => loop {
+                let (t, len) = chan.recv_frame_into(buf, dl)?;
+                if t == tag {
+                    return Ok(len);
+                }
+                pending.entry(t).or_default().push_back(buf[..len].to_vec());
+            },
+            Mailbox::Loopback { .. } => {
+                Err("self-receive posted before the matching self-send".to_string())
+            }
         }
     }
 }
@@ -400,12 +166,47 @@ fn max_wire_from(sched: &Schedule, q: usize) -> usize {
     max
 }
 
-struct WorkerSetup {
+/// Largest wire frame (bytes, incl. pad) across every send/receive step.
+/// Unlike `Schedule::max_padded_wire`, unpadded messages count too — the
+/// worker stages every frame through one persistent buffer.
+fn max_wire_any(sched: &Schedule) -> usize {
+    let mut max = 0;
+    for step in sched.steps() {
+        match step {
+            Step::Send { src, pad, .. } => max = max.max(sched.wire_bytes(src.len, *pad)),
+            Step::Recv { dst, pad, .. } => max = max.max(sched.wire_bytes(dst.len, *pad)),
+            Step::SendRecv { src, dst, pad, .. } => {
+                max = max.max(sched.wire_bytes(src.len, *pad));
+                max = max.max(sched.wire_bytes(dst.len, *pad));
+            }
+            _ => {}
+        }
+    }
+    max
+}
+
+/// Largest local-step source (bytes) — sizes the staging buffer.
+fn max_stage(sched: &Schedule) -> usize {
+    let mut max = 0;
+    for step in sched.steps() {
+        let len = match step {
+            Step::CopyLocal { src, .. } | Step::Reduce { src, .. } | Step::Rotate { src, .. } => {
+                src.len
+            }
+            _ => continue,
+        };
+        max = max.max(len * sched.elem_bytes);
+    }
+    max
+}
+
+/// Static per-worker state, parsed from argv once at spawn.
+struct WorkerCfg {
     dir: PathBuf,
     rank: usize,
     topo: Topology,
-    sched: Option<Schedule>,
-    input: Vec<u8>,
+    machine: MachineParams,
+    ring_bytes: u64,
     listener: Option<UnixListener>,
 }
 
@@ -417,58 +218,25 @@ fn parse_fuse_label(s: &str) -> std::result::Result<FuseSpec, String> {
     Ok(FuseSpec::new(op, algo, n))
 }
 
-fn build_setup(args: &Args) -> std::result::Result<WorkerSetup, String> {
+fn build_worker_cfg(args: &Args) -> std::result::Result<WorkerCfg, String> {
     let dir = PathBuf::from(args.get_str("dir", ""));
     let rank = args.get_usize("rank", 0).map_err(|e| e.to_string())?;
     let regions = args.get_usize("regions", 1).map_err(|e| e.to_string())?;
     let ppr = args.get_usize("ppr", 1).map_err(|e| e.to_string())?;
     let topo = Topology::regions(regions, ppr);
-    let p = topo.size();
-    let view = WorldView::world(&topo);
+    if rank >= topo.size() {
+        return Err(format!("rank {rank} out of range for a {}-rank world", topo.size()));
+    }
     let machine = MachineParams::by_name_or_path(&args.get_str("machine", "lassen"))
         .map_err(|e| e.to_string())?;
-
-    let fused_arg = args.get_str("fused", "");
-    let (sched, input) = if !fused_arg.is_empty() {
-        let specs: Vec<FuseSpec> = fused_arg
-            .split(';')
-            .filter(|s| !s.is_empty())
-            .map(parse_fuse_label)
-            .collect::<std::result::Result<_, _>>()?;
-        let (mut scheds, _) =
-            fuse::fuse_world(&specs, &view, 8, &machine).map_err(|e| e.to_string())?;
-        let sched = scheds.swap_remove(rank);
-        let mut input = Vec::new();
-        for s in &specs {
-            input.extend_from_slice(&canonical_input_bytes(s.op, rank, p, s.n, 8));
-        }
-        (Some(sched), input)
-    } else {
-        let op = OpKind::parse_or_err(&args.get_str("op", "allgather"))
-            .map_err(|e| e.to_string())?;
-        let algo = args.get_str("algo", "bruck");
-        let n = args.get_usize("n", 1).map_err(|e| e.to_string())?;
-        let eb = args.get_usize("elem-bytes", 8).map_err(|e| e.to_string())?;
-        if n == 0 {
-            // Uniform zero-length contract: no traffic, empty output.
-            (None, Vec::new())
-        } else {
-            let sched = super::build_rank_schedule(op, &algo, &view, rank, n, eb, &machine)
-                .map_err(|e| e.to_string())?;
-            (Some(sched), canonical_input_bytes(op, rank, p, n, eb))
-        }
-    };
+    let ring_bytes = args
+        .get_usize("ring-bytes", DEFAULT_POOL_RING_BYTES as usize)
+        .map_err(|e| e.to_string())? as u64;
 
     // Bind the listener for lower-rank inter-node peers *before* HELLO, so
     // every listener exists by the time GO releases the connectors.
-    let needs_listener = sched
-        .as_ref()
-        .map(|s| {
-            peer_set(s).iter().any(|&q| {
-                q < rank && topo.classify(rank, q) == Locality::InterNode
-            })
-        })
-        .unwrap_or(false);
+    let needs_listener =
+        (0..rank).any(|q| topo.classify(rank, q) == Locality::InterNode);
     let listener = if needs_listener {
         let l = UnixListener::bind(dir.join(format!("sock-{rank}")))
             .map_err(|e| format!("bind data listener: {e}"))?;
@@ -477,38 +245,39 @@ fn build_setup(args: &Args) -> std::result::Result<WorkerSetup, String> {
     } else {
         None
     };
-    Ok(WorkerSetup { dir, rank, topo, sched, input, listener })
+    Ok(WorkerCfg { dir, rank, topo, machine, ring_bytes, listener })
 }
 
-/// Open every data channel this rank's schedule needs. Lower ranks connect
-/// to higher ranks' listeners for socket pairs; shm rings just open their
-/// files (both endpoints derive the same capacity from the matching
-/// send/recv message bounds).
-fn connect_peers(setup: &WorkerSetup, dl: &Deadline) -> std::result::Result<BTreeMap<usize, Mailbox>, WErr> {
+/// Open data channels to every other rank in the world. The mesh is
+/// schedule-independent, so it is built once at spawn and every loaded
+/// schedule runs over it. Shm rings use the pool's fixed capacity (both
+/// endpoints pass the same `--ring-bytes`); for socket pairs the lower
+/// rank connects to the higher rank's listener and identifies itself with
+/// an 8-byte rank hello.
+fn connect_mesh(
+    cfg: &WorkerCfg,
+    dl: &Deadline,
+) -> std::result::Result<BTreeMap<usize, Mailbox>, WErr> {
+    let me = cfg.rank;
+    let p = cfg.topo.size();
     let mut chans = BTreeMap::new();
-    let Some(sched) = &setup.sched else { return Ok(chans) };
-    let me = setup.rank;
-    let peers = peer_set(sched);
+    chans.insert(me, Mailbox::Loopback { pending: HashMap::new() });
     let mut expect_accept = 0usize;
-    for &q in &peers {
+    for q in 0..p {
         if q == me {
-            chans.insert(q, Mailbox::Loopback { pending: HashMap::new() });
             continue;
         }
-        if setup.topo.classify(me, q) != Locality::InterNode {
-            let tx = ShmRing::open(
-                &setup.dir.join(format!("shm-{me}-{q}")),
-                ring_capacity(max_wire_to(sched, q) + 16),
-            )
-            .map_err(|e| WErr::setup(q, e))?;
-            let rx = ShmRing::open(
-                &setup.dir.join(format!("shm-{q}-{me}")),
-                ring_capacity(max_wire_from(sched, q) + 16),
-            )
-            .map_err(|e| WErr::setup(q, e))?;
-            chans.insert(q, Mailbox::Chan { chan: PeerChan::Shm { tx, rx }, pending: HashMap::new() });
+        if cfg.topo.classify(me, q) != Locality::InterNode {
+            let tx = ShmRing::open(&cfg.dir.join(format!("shm-{me}-{q}")), cfg.ring_bytes)
+                .map_err(|e| WErr::setup(q, e))?;
+            let rx = ShmRing::open(&cfg.dir.join(format!("shm-{q}-{me}")), cfg.ring_bytes)
+                .map_err(|e| WErr::setup(q, e))?;
+            chans.insert(
+                q,
+                Mailbox::Chan { chan: PeerChan::Shm { tx, rx }, pending: HashMap::new() },
+            );
         } else if q > me {
-            let s = connect_deadline(&setup.dir.join(format!("sock-{q}")), dl)
+            let s = connect_deadline(&cfg.dir.join(format!("sock-{q}")), dl)
                 .map_err(|e| WErr::setup(q, e))?;
             super::chan::sock_write_all(&s, &(me as u64).to_le_bytes(), dl)
                 .map_err(|e| WErr::setup(q, e))?;
@@ -518,17 +287,17 @@ fn connect_peers(setup: &WorkerSetup, dl: &Deadline) -> std::result::Result<BTre
         }
     }
     if expect_accept > 0 {
-        let listener = setup.listener.as_ref().ok_or_else(|| {
-            WErr::setup(me, "internal: accepting peers but no listener bound")
-        })?;
+        let listener = cfg
+            .listener
+            .as_ref()
+            .ok_or_else(|| WErr::setup(me, "internal: accepting peers but no listener bound"))?;
         for _ in 0..expect_accept {
             let s = accept_deadline(listener, dl).map_err(|e| WErr::setup(me, e))?;
             let mut hello = [0u8; 8];
-            super::chan::sock_read_exact(&s, &mut hello, dl)
-                .map_err(|e| WErr::setup(me, e))?;
+            super::chan::sock_read_exact(&s, &mut hello, dl).map_err(|e| WErr::setup(me, e))?;
             let q = u64::from_le_bytes(hello) as usize;
-            if !peers.contains(&q) || chans.contains_key(&q) {
-                return Err(WErr::setup(q, "unexpected data-channel hello"));
+            if q >= p || chans.contains_key(&q) {
+                return Err(WErr::setup(q.min(p - 1), "unexpected data-channel hello"));
             }
             chans.insert(q, Mailbox::Chan { chan: PeerChan::Sock(s), pending: HashMap::new() });
         }
@@ -540,21 +309,6 @@ fn connect_peers(setup: &WorkerSetup, dl: &Deadline) -> std::result::Result<BTre
 
 fn slice_bytes(s: &Slice, eb: usize) -> std::ops::Range<usize> {
     s.off * eb..(s.off + s.len) * eb
-}
-
-fn read_slice(
-    input: &[u8],
-    output: &[u8],
-    scratch: &[Vec<u8>],
-    s: &Slice,
-    eb: usize,
-) -> Vec<u8> {
-    let r = slice_bytes(s, eb);
-    match s.buf {
-        BufId::Input => input[r].to_vec(),
-        BufId::Output => output[r].to_vec(),
-        BufId::Scratch(i) => scratch[i][r].to_vec(),
-    }
 }
 
 fn write_slice(
@@ -577,27 +331,32 @@ fn write_slice(
     Ok(())
 }
 
-/// `dst[i] += src[i]` elementwise, matching the in-process `add_assign`
-/// reducer for the integer element types the canonical payloads use.
-fn reduce_bytes(eb: usize, src: &[u8], dst: &mut [u8]) -> std::result::Result<(), String> {
-    match eb {
-        8 => {
+/// `dst[i] += src[i]` elementwise at `dtype`, matching the in-process
+/// `add_assign` reducer (wrapping integer adds, IEEE f32 adds) applied in
+/// the same schedule order — which keeps reductions bit-identical.
+fn reduce_bytes(dtype: DType, src: &[u8], dst: &mut [u8]) {
+    match dtype {
+        DType::U64 => {
             for (d, s) in dst.chunks_exact_mut(8).zip(src.chunks_exact(8)) {
                 let v = u64::from_ne_bytes(d[..].try_into().unwrap())
                     .wrapping_add(u64::from_ne_bytes(s.try_into().unwrap()));
                 d.copy_from_slice(&v.to_ne_bytes());
             }
-            Ok(())
         }
-        4 => {
+        DType::U32 => {
             for (d, s) in dst.chunks_exact_mut(4).zip(src.chunks_exact(4)) {
                 let v = u32::from_ne_bytes(d[..].try_into().unwrap())
                     .wrapping_add(u32::from_ne_bytes(s.try_into().unwrap()));
                 d.copy_from_slice(&v.to_ne_bytes());
             }
-            Ok(())
         }
-        other => Err(format!("unsupported element size {other} for Reduce on the proc backend")),
+        DType::F32 => {
+            for (d, s) in dst.chunks_exact_mut(4).zip(src.chunks_exact(4)) {
+                let v = f32::from_ne_bytes(d[..].try_into().unwrap())
+                    + f32::from_ne_bytes(s.try_into().unwrap());
+                d.copy_from_slice(&v.to_ne_bytes());
+            }
+        }
     }
 }
 
@@ -614,107 +373,299 @@ fn rotate_bytes(src: &[u8], block_bytes: usize, shift: usize, dst: &mut [u8]) {
     }
 }
 
-fn execute_bytes(
-    sched: &Schedule,
-    me: usize,
+/// Copy the source slice of a local step into the staging buffer and
+/// return its byte length. Staging decouples the read from the write, so
+/// overlapping src/dst ranges behave like the in-process executor's
+/// value-semantics copies — without a per-step allocation.
+fn stage_copy(
     input: &[u8],
+    output: &[u8],
+    scratch: &[Vec<u8>],
+    stage: &mut [u8],
+    s: &Slice,
+    eb: usize,
+) -> usize {
+    let r = slice_bytes(s, eb);
+    let len = r.len();
+    let src = match s.buf {
+        BufId::Input => &input[r],
+        BufId::Output => &output[r],
+        BufId::Scratch(i) => &scratch[i][r],
+    };
+    stage[..len].copy_from_slice(src);
+    len
+}
+
+#[allow(clippy::too_many_arguments)]
+fn send_step(
     chans: &mut BTreeMap<usize, Mailbox>,
+    input: &[u8],
+    output: &[u8],
+    scratch: &[Vec<u8>],
+    wire: &mut [u8],
+    eb: usize,
+    to: usize,
+    src: &Slice,
+    tag: u64,
+    pad: usize,
+    round: usize,
     dl: &Deadline,
-) -> std::result::Result<Vec<u8>, WErr> {
-    let eb = sched.elem_bytes;
-    let (in_elems, out_elems) = sched.io_lens();
-    if input.len() != in_elems * eb {
-        return Err(WErr::setup(me, "canonical input does not match the schedule's input length"));
+) -> std::result::Result<(), WErr> {
+    let r = slice_bytes(src, eb);
+    let total = pad + r.len();
+    wire[..pad].fill(0);
+    let payload = match src.buf {
+        BufId::Input => &input[r],
+        BufId::Output => &output[r],
+        BufId::Scratch(i) => &scratch[i][r],
+    };
+    wire[pad..total].copy_from_slice(payload);
+    chans
+        .get_mut(&to)
+        .ok_or_else(|| WErr { round, peer: to, what: "no channel to peer".into() })?
+        .send_bytes(tag, &wire[..total], dl)
+        .map_err(|what| WErr { round, peer: to, what })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recv_step(
+    chans: &mut BTreeMap<usize, Mailbox>,
+    output: &mut [u8],
+    scratch: &mut [Vec<u8>],
+    wire: &mut Vec<u8>,
+    eb: usize,
+    from: usize,
+    dst: &Slice,
+    tag: u64,
+    pad: usize,
+    round: usize,
+    dl: &Deadline,
+) -> std::result::Result<(), WErr> {
+    let got = chans
+        .get_mut(&from)
+        .ok_or_else(|| WErr { round, peer: from, what: "no channel to peer".into() })?
+        .recv_into(tag, wire, dl)
+        .map_err(|what| WErr { round, peer: from, what })?;
+    let want = pad + dst.len * eb;
+    if got != want {
+        return Err(WErr {
+            round,
+            peer: from,
+            what: format!("wire message of {got} bytes, expected {want}"),
+        });
     }
-    let mut output = vec![0u8; out_elems * eb];
-    let mut scratch: Vec<Vec<u8>> = sched.scratch.iter().map(|&l| vec![0u8; l * eb]).collect();
+    write_slice(output, scratch, dst, eb, &wire[pad..got])
+        .map_err(|what| WErr { round, peer: from, what })
+}
 
-    let send = |chans: &mut BTreeMap<usize, Mailbox>,
-                output: &[u8],
-                scratch: &[Vec<u8>],
-                to: usize,
-                src: &Slice,
-                tag: u64,
-                pad: usize,
-                round: usize|
-     -> std::result::Result<(), WErr> {
-        let payload = read_slice(input, output, scratch, src, eb);
-        let mut wire = vec![0u8; pad + payload.len()];
-        wire[pad..].copy_from_slice(&payload);
-        chans
-            .get_mut(&to)
-            .ok_or_else(|| WErr { round, peer: to, what: "no channel to peer".into() })?
-            .send(tag, wire, dl)
-            .map_err(|what| WErr { round, peer: to, what })
-    };
-    let recv = |chans: &mut BTreeMap<usize, Mailbox>,
-                output: &mut [u8],
-                scratch: &mut [Vec<u8>],
-                from: usize,
-                dst: &Slice,
-                tag: u64,
-                pad: usize,
-                round: usize|
-     -> std::result::Result<(), WErr> {
-        let wire = chans
-            .get_mut(&from)
-            .ok_or_else(|| WErr { round, peer: from, what: "no channel to peer".into() })?
-            .recv(tag, dl)
-            .map_err(|what| WErr { round, peer: from, what })?;
-        if wire.len() != pad + dst.len * eb {
-            return Err(WErr {
-                round,
-                peer: from,
-                what: format!("wire message of {} bytes, expected {}", wire.len(), pad + dst.len * eb),
-            });
+/// One loaded schedule plus every buffer its executes reuse. Built once
+/// per `LOAD`; [`PlanState::execute_bytes`] then runs allocation-free.
+struct PlanState {
+    sched: Option<Schedule>,
+    dtype: DType,
+    input: Vec<u8>,
+    output: Vec<u8>,
+    scratch: Vec<Vec<u8>>,
+    /// Staging for wire frames (largest send/recv message).
+    wire: Vec<u8>,
+    /// Staging for local-step sources (largest copy/reduce/rotate).
+    stage: Vec<u8>,
+}
+
+impl PlanState {
+    /// Build a plan from a pool job spec — `single {op} {algo} {n} {eb}`
+    /// or `fused {dtype} {label;label;...}` — seeding the input buffer
+    /// with the canonical payload and admission-checking the schedule's
+    /// largest shm frame against the pool's fixed ring capacity.
+    fn build(cfg: &WorkerCfg, spec: &str) -> std::result::Result<PlanState, String> {
+        let me = cfg.rank;
+        let p = cfg.topo.size();
+        let view = WorldView::world(&cfg.topo);
+        let toks: Vec<&str> = spec.split_whitespace().collect();
+        let (sched, input, dtype) = match toks.as_slice() {
+            ["single", op, algo, n, eb] => {
+                let op = OpKind::parse_or_err(op).map_err(|e| e.to_string())?;
+                let n: usize =
+                    n.parse().map_err(|_| format!("bad element count in job spec '{spec}'"))?;
+                let eb: usize =
+                    eb.parse().map_err(|_| format!("bad element size in job spec '{spec}'"))?;
+                let dtype = DType::for_elem_bytes(eb).map_err(|e| e.to_string())?;
+                if n == 0 {
+                    // Uniform zero-length contract: no traffic, empty output.
+                    (None, Vec::new(), dtype)
+                } else {
+                    let sched =
+                        super::build_rank_schedule(op, algo, &view, me, n, eb, &cfg.machine)
+                            .map_err(|e| e.to_string())?;
+                    (Some(sched), canonical_input_bytes(op, me, p, n, eb), dtype)
+                }
+            }
+            ["fused", dt, labels] => {
+                let dtype = DType::parse_or_err(dt).map_err(|e| e.to_string())?;
+                let specs: Vec<FuseSpec> = labels
+                    .split(';')
+                    .filter(|s| !s.is_empty())
+                    .map(parse_fuse_label)
+                    .collect::<std::result::Result<_, _>>()?;
+                let (mut scheds, _) =
+                    fuse::fuse_world(&specs, &view, dtype.bytes(), &cfg.machine)
+                        .map_err(|e| e.to_string())?;
+                let sched = scheds.swap_remove(me);
+                let mut input = Vec::new();
+                for s in &specs {
+                    input.extend_from_slice(&canonical_input_bytes_dtype(
+                        s.op, me, p, s.n, dtype,
+                    ));
+                }
+                (Some(sched), input, dtype)
+            }
+            _ => return Err(format!("bad job spec '{spec}'")),
+        };
+
+        let (output, scratch, wire, stage) = match &sched {
+            Some(s) => {
+                s.validate().map_err(|e| e.to_string())?;
+                let eb = s.elem_bytes;
+                let (in_elems, out_elems) = s.io_lens();
+                if input.len() != in_elems * eb {
+                    return Err(
+                        "canonical input does not match the schedule's input length".into()
+                    );
+                }
+                // Rings were sized at spawn, before this schedule existed;
+                // reject frames the fixed capacity cannot pass.
+                let mut max_frame = 0usize;
+                for q in peer_set(s) {
+                    if q != me && cfg.topo.classify(me, q) != Locality::InterNode {
+                        max_frame =
+                            max_frame.max(max_wire_to(s, q)).max(max_wire_from(s, q));
+                    }
+                }
+                if max_frame > 0 && ring_capacity(max_frame + 16) > cfg.ring_bytes {
+                    return Err(format!(
+                        "schedule frame of {max_frame} bytes needs shm rings of {} bytes but \
+                         the pool was spawned with ring_bytes = {}; respawn with a larger \
+                         ProcConfig::ring_bytes",
+                        ring_capacity(max_frame + 16),
+                        cfg.ring_bytes
+                    ));
+                }
+                let output = vec![0u8; out_elems * eb];
+                let scratch: Vec<Vec<u8>> =
+                    s.scratch.iter().map(|&l| vec![0u8; l * eb]).collect();
+                let wire = vec![0u8; max_wire_any(s)];
+                let stage = vec![0u8; max_stage(s)];
+                (output, scratch, wire, stage)
+            }
+            None => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+        };
+        Ok(PlanState { sched, dtype, input, output, scratch, wire, stage })
+    }
+
+    /// Interpret the schedule over the persistent channels and buffers.
+    /// Allocation-free: wire frames and local-step sources stage through
+    /// the preallocated buffers.
+    fn execute_bytes(
+        &mut self,
+        me: usize,
+        chans: &mut BTreeMap<usize, Mailbox>,
+        dl: &Deadline,
+    ) -> std::result::Result<(), WErr> {
+        let PlanState { sched, dtype, input, output, scratch, wire, stage } = self;
+        let Some(sched) = sched else { return Ok(()) };
+        let eb = sched.elem_bytes;
+        // Every execute starts from zeroed result buffers, like the
+        // in-process executor's fresh allocations (Reduce accumulates).
+        output.fill(0);
+        for s in scratch.iter_mut() {
+            s.fill(0);
         }
-        write_slice(output, scratch, dst, eb, &wire[pad..])
-            .map_err(|what| WErr { round, peer: from, what })
-    };
-
-    for (ri, round) in sched.rounds.iter().enumerate() {
-        let rno = ri + 1;
-        let werr = |peer: usize, what: String| WErr { round: rno, peer, what };
-        for step in &round.steps {
-            match step {
-                Step::Send { to, src, tag, pad } => {
-                    send(chans, &output, &scratch, *to, src, *tag, *pad, rno)?;
-                }
-                Step::Recv { from, dst, tag, pad } => {
-                    recv(chans, &mut output, &mut scratch, *from, dst, *tag, *pad, rno)?;
-                }
-                Step::SendRecv { to, src, from, dst, tag, pad } => {
-                    send(chans, &output, &scratch, *to, src, *tag, *pad, rno)?;
-                    recv(chans, &mut output, &mut scratch, *from, dst, *tag, *pad, rno)?;
-                }
-                Step::CopyLocal { src, dst } => {
-                    let bytes = read_slice(input, &output, &scratch, src, eb);
-                    write_slice(&mut output, &mut scratch, dst, eb, &bytes)
-                        .map_err(|w| werr(me, w))?;
-                }
-                Step::Reduce { src, dst } => {
-                    let bytes = read_slice(input, &output, &scratch, src, eb);
-                    let r = slice_bytes(dst, eb);
-                    let target = match dst.buf {
-                        BufId::Output => &mut output[r],
-                        BufId::Scratch(i) => &mut scratch[i][r],
-                        BufId::Input => {
-                            return Err(werr(me, "schedule reduces into the input buffer".into()))
+        for (ri, round) in sched.rounds.iter().enumerate() {
+            let rno = ri + 1;
+            for step in &round.steps {
+                match step {
+                    Step::Send { to, src, tag, pad } => {
+                        send_step(
+                            chans, input, output, scratch, wire, eb, *to, src, *tag, *pad,
+                            rno, dl,
+                        )?;
+                    }
+                    Step::Recv { from, dst, tag, pad } => {
+                        recv_step(
+                            chans, output, scratch, wire, eb, *from, dst, *tag, *pad, rno, dl,
+                        )?;
+                    }
+                    Step::SendRecv { to, src, from, dst, tag, pad } => {
+                        send_step(
+                            chans, input, output, scratch, wire, eb, *to, src, *tag, *pad,
+                            rno, dl,
+                        )?;
+                        recv_step(
+                            chans, output, scratch, wire, eb, *from, dst, *tag, *pad, rno, dl,
+                        )?;
+                    }
+                    Step::CopyLocal { src, dst } => {
+                        let len = stage_copy(input, output, scratch, stage, src, eb);
+                        write_slice(output, scratch, dst, eb, &stage[..len])
+                            .map_err(|w| WErr { round: rno, peer: me, what: w })?;
+                    }
+                    Step::Reduce { src, dst } => {
+                        let len = stage_copy(input, output, scratch, stage, src, eb);
+                        let r = slice_bytes(dst, eb);
+                        let target = match dst.buf {
+                            BufId::Output => &mut output[r],
+                            BufId::Scratch(i) => &mut scratch[i][r],
+                            BufId::Input => {
+                                return Err(WErr {
+                                    round: rno,
+                                    peer: me,
+                                    what: "schedule reduces into the input buffer".into(),
+                                })
+                            }
+                        };
+                        if target.len() != len {
+                            return Err(WErr {
+                                round: rno,
+                                peer: me,
+                                what: format!(
+                                    "local step size mismatch: {} vs {len}",
+                                    target.len()
+                                ),
+                            });
                         }
-                    };
-                    reduce_bytes(eb, &bytes, target).map_err(|w| werr(me, w))?;
-                }
-                Step::Rotate { src, dst, block, shift } => {
-                    let bytes = read_slice(input, &output, &scratch, src, eb);
-                    let mut rotated = vec![0u8; bytes.len()];
-                    rotate_bytes(&bytes, block * eb, *shift, &mut rotated);
-                    write_slice(&mut output, &mut scratch, dst, eb, &rotated)
-                        .map_err(|w| werr(me, w))?;
+                        reduce_bytes(*dtype, &stage[..len], target);
+                    }
+                    Step::Rotate { src, dst, block, shift } => {
+                        let len = stage_copy(input, output, scratch, stage, src, eb);
+                        let r = slice_bytes(dst, eb);
+                        let target = match dst.buf {
+                            BufId::Output => &mut output[r],
+                            BufId::Scratch(i) => &mut scratch[i][r],
+                            BufId::Input => {
+                                return Err(WErr {
+                                    round: rno,
+                                    peer: me,
+                                    what: "schedule rotates into the input buffer".into(),
+                                })
+                            }
+                        };
+                        if target.len() != len {
+                            return Err(WErr {
+                                round: rno,
+                                peer: me,
+                                what: format!(
+                                    "local step size mismatch: {} vs {len}",
+                                    target.len()
+                                ),
+                            });
+                        }
+                        rotate_bytes(&stage[..len], block * eb, *shift, target);
+                    }
                 }
             }
         }
+        Ok(())
     }
-    Ok(output)
 }
 
 // --- worker entry ----------------------------------------------------------
@@ -736,6 +687,123 @@ fn wait_ctl(ctl: &UnixStream, expect: u8, dl: &Deadline) -> ChanResult<()> {
     }
 }
 
+/// Serve `LOAD`/`EXEC`/`SHUTDOWN` commands until the parent shuts the pool
+/// down or disappears. Returns the process exit code.
+fn command_loop(
+    ctl: &UnixStream,
+    cfg: &WorkerCfg,
+    chans: &mut BTreeMap<usize, Mailbox>,
+    cmd_deadline: Duration,
+) -> i32 {
+    let rank = cfg.rank;
+    let mut plans: BTreeMap<u64, PlanState> = BTreeMap::new();
+    loop {
+        let idle = Deadline::after(Duration::from_secs(IDLE_SECS));
+        let (ty, _, payload) = match ctl_recv(ctl, &idle) {
+            Ok(f) => f,
+            // Parent gone (EOF) or the idle bound ran out: exit quietly.
+            Err(_) => return 0,
+        };
+        let dl = Deadline::after(cmd_deadline);
+        match ty {
+            CTL_LOAD => {
+                if payload.len() < 8 {
+                    send_err(ctl, rank, &WErr::setup(rank, "malformed LOAD frame"), &dl);
+                    continue;
+                }
+                let sid = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                let spec = String::from_utf8_lossy(&payload[8..]);
+                // A rejected load keeps the worker serving: nothing has
+                // touched the data channels yet.
+                match PlanState::build(cfg, &spec) {
+                    Ok(st) => {
+                        plans.insert(sid, st);
+                        if ctl_send(ctl, CTL_LOADED, rank as u64, &sid.to_le_bytes(), &dl)
+                            .is_err()
+                        {
+                            return 2;
+                        }
+                    }
+                    Err(what) => send_err(ctl, rank, &WErr::setup(rank, what), &dl),
+                }
+            }
+            CTL_EXEC => {
+                if payload.len() < 16 {
+                    send_err(ctl, rank, &WErr::setup(rank, "malformed EXEC frame"), &dl);
+                    continue;
+                }
+                let sid = u64::from_le_bytes(payload[..8].try_into().unwrap());
+                let flags = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+                let Some(st) = plans.get_mut(&sid) else {
+                    send_err(
+                        ctl,
+                        rank,
+                        &WErr::setup(rank, format!("stale schedule id {sid}: not loaded")),
+                        &dl,
+                    );
+                    continue;
+                };
+                if flags & EXEC_FLAG_INPUT != 0 {
+                    let delta = &payload[16..];
+                    if delta.len() != st.input.len() {
+                        send_err(
+                            ctl,
+                            rank,
+                            &WErr::setup(
+                                rank,
+                                format!(
+                                    "input delta of {} bytes, schedule expects {}",
+                                    delta.len(),
+                                    st.input.len()
+                                ),
+                            ),
+                            &dl,
+                        );
+                        continue;
+                    }
+                    st.input.copy_from_slice(delta);
+                }
+                let t0 = Instant::now();
+                match st.execute_bytes(rank, chans, &dl) {
+                    Ok(()) => {
+                        let nanos = t0.elapsed().as_nanos() as u64;
+                        let want_out = flags & EXEC_FLAG_OUTPUT != 0;
+                        let out_len = if want_out { st.output.len() } else { 0 };
+                        let mut reply = Vec::with_capacity(16 + out_len);
+                        reply.extend_from_slice(&sid.to_le_bytes());
+                        reply.extend_from_slice(&nanos.to_le_bytes());
+                        if want_out {
+                            reply.extend_from_slice(&st.output);
+                        }
+                        if ctl_send(ctl, CTL_OK, rank as u64, &reply, &dl).is_err() {
+                            return 2;
+                        }
+                    }
+                    // A failed execute leaves the data channels in an
+                    // unknown state; report and exit rather than serve
+                    // more commands over poisoned channels.
+                    Err(we) => {
+                        send_err(ctl, rank, &we, &dl);
+                        return 1;
+                    }
+                }
+            }
+            CTL_SHUTDOWN => {
+                let _ = ctl_send(ctl, CTL_OK, rank as u64, &[], &dl);
+                return 0;
+            }
+            other => {
+                send_err(
+                    ctl,
+                    rank,
+                    &WErr::setup(rank, format!("unexpected control frame {other}")),
+                    &dl,
+                );
+            }
+        }
+    }
+}
+
 /// Worker-process entry point, dispatched on the hidden `__worker` argv by
 /// the `locag` CLI and by the `proc_backend` test harness. Returns the
 /// process exit code. `args` holds everything after `__worker`.
@@ -745,10 +813,11 @@ pub fn worker_main(args: &Args) -> i32 {
     }
     let rank = args.get_usize("rank", 0).unwrap_or(0);
     let deadline_ms = args.get_usize("deadline-ms", 30_000).unwrap_or(30_000);
-    let dl = Deadline::after(Duration::from_millis(deadline_ms as u64));
+    let cmd_deadline = Duration::from_millis(deadline_ms as u64);
+    let dl = Deadline::after(cmd_deadline);
     let dir = PathBuf::from(args.get_str("dir", ""));
 
-    let setup = build_setup(args);
+    let cfg = build_worker_cfg(args);
     let ctl = match connect_deadline(&dir.join("ctl.sock"), &dl) {
         Ok(c) => c,
         Err(e) => {
@@ -759,8 +828,8 @@ pub fn worker_main(args: &Args) -> i32 {
     if ctl_send(&ctl, CTL_HELLO, rank as u64, &[], &dl).is_err() {
         return 2;
     }
-    let setup = match setup {
-        Ok(s) => s,
+    let cfg = match cfg {
+        Ok(c) => c,
         Err(what) => {
             send_err(&ctl, rank, &WErr::setup(rank, what), &dl);
             return 1;
@@ -769,7 +838,7 @@ pub fn worker_main(args: &Args) -> i32 {
     if wait_ctl(&ctl, CTL_GO, &dl).is_err() {
         return 2;
     }
-    let mut chans = match connect_peers(&setup, &dl) {
+    let mut chans = match connect_mesh(&cfg, &dl) {
         Ok(c) => c,
         Err(we) => {
             send_err(&ctl, rank, &we, &dl);
@@ -779,30 +848,7 @@ pub fn worker_main(args: &Args) -> i32 {
     if ctl_send(&ctl, CTL_READY, rank as u64, &[], &dl).is_err() {
         return 2;
     }
-    if wait_ctl(&ctl, CTL_START, &dl).is_err() {
-        return 2;
-    }
-    let t0 = Instant::now();
-    let result = match &setup.sched {
-        Some(sched) => execute_bytes(sched, rank, &setup.input, &mut chans, &dl),
-        None => Ok(Vec::new()),
-    };
-    match result {
-        Ok(out) => {
-            let wall_nanos = t0.elapsed().as_nanos() as u64;
-            let mut payload = Vec::with_capacity(8 + out.len());
-            payload.extend_from_slice(&wall_nanos.to_le_bytes());
-            payload.extend_from_slice(&out);
-            if ctl_send(&ctl, CTL_OK, rank as u64, &payload, &dl).is_err() {
-                return 2;
-            }
-            0
-        }
-        Err(we) => {
-            send_err(&ctl, rank, &we, &dl);
-            1
-        }
-    }
+    command_loop(&ctl, &cfg, &mut chans, cmd_deadline)
 }
 
 #[cfg(test)]
@@ -810,6 +856,17 @@ mod tests {
     use super::*;
     use crate::collectives::schedule::build_allgather;
     use crate::collectives::Algorithm;
+
+    fn test_cfg(regions: usize, ppr: usize, rank: usize, ring_bytes: u64) -> WorkerCfg {
+        WorkerCfg {
+            dir: PathBuf::new(),
+            rank,
+            topo: Topology::regions(regions, ppr),
+            machine: MachineParams::lassen(),
+            ring_bytes,
+            listener: None,
+        }
+    }
 
     #[test]
     fn rotate_bytes_matches_element_rotation() {
@@ -826,9 +883,12 @@ mod tests {
     fn reduce_bytes_sums_elementwise() {
         let a = 7u64.to_ne_bytes();
         let mut d = 5u64.to_ne_bytes().to_vec();
-        reduce_bytes(8, &a, &mut d).unwrap();
+        reduce_bytes(DType::U64, &a, &mut d);
         assert_eq!(d, 12u64.to_ne_bytes());
-        assert!(reduce_bytes(2, &[0, 0], &mut [0, 0]).is_err());
+        let f = 1.5f32.to_ne_bytes();
+        let mut g = 2.25f32.to_ne_bytes().to_vec();
+        reduce_bytes(DType::F32, &f, &mut g);
+        assert_eq!(g, 3.75f32.to_ne_bytes());
     }
 
     #[test]
@@ -843,6 +903,14 @@ mod tests {
             // Every peer we send to has a positive message bound.
             assert!(max_wire_to(&sched, q) > 0 || max_wire_from(&sched, q) > 0);
         }
+        // The any-step bound dominates the per-peer bounds and, unlike
+        // `max_padded_wire`, covers unpadded messages too.
+        let all = max_wire_any(&sched);
+        for &q in &peers {
+            assert!(all >= max_wire_to(&sched, q));
+            assert!(all >= max_wire_from(&sched, q));
+        }
+        assert!(all > 0);
     }
 
     #[test]
@@ -856,18 +924,38 @@ mod tests {
     }
 
     #[test]
-    fn worker_err_decodes_with_peer_attribution() {
-        let mut payload = Vec::new();
-        payload.extend_from_slice(&3u64.to_le_bytes());
-        payload.extend_from_slice(&2u64.to_le_bytes());
-        payload.extend_from_slice(b"deadline exceeded while receiving");
-        let e = decode_worker_err(1, &payload);
-        match e {
-            Error::Transport { rank, round, what } => {
-                assert_eq!((rank, round), (2, 3));
-                assert!(what.contains("reported by rank 1"), "{what}");
-            }
-            other => panic!("wrong error: {other}"),
-        }
+    fn plan_state_builds_from_spec_strings() {
+        let cfg = test_cfg(2, 2, 0, DEFAULT_POOL_RING_BYTES);
+        let st = PlanState::build(&cfg, "single allgather bruck 3 8").unwrap();
+        assert_eq!(st.dtype, DType::U64);
+        assert_eq!(st.input.len(), 3 * 8);
+        assert_eq!(st.output.len(), 3 * 4 * 8);
+        assert!(!st.wire.is_empty());
+
+        let st = PlanState::build(&cfg, "fused u64 allgather/bruck@2;allreduce/loc-aware@4")
+            .unwrap();
+        assert_eq!(st.input.len(), (2 + 4) * 8);
+        assert_eq!(st.output.len(), (2 * 4 + 4) * 8);
+
+        // Zero-length jobs have no schedule and empty buffers.
+        let st = PlanState::build(&cfg, "single alltoall pairwise 0 8").unwrap();
+        assert!(st.sched.is_none());
+        assert!(st.input.is_empty() && st.output.is_empty());
+
+        assert!(PlanState::build(&cfg, "single allgather bruck 3").is_err());
+        assert!(PlanState::build(&cfg, "fused i8 allgather/bruck@2").is_err());
+        assert!(PlanState::build(&cfg, "warble").is_err());
+    }
+
+    #[test]
+    fn load_rejects_frames_the_fixed_rings_cannot_pass() {
+        // A tiny ring cannot admit a schedule with ~MiB frames; the load
+        // must fail with advice rather than deadlock at execute time.
+        let cfg = test_cfg(1, 4, 0, super::super::chan::MIN_RING_CAP);
+        let err = PlanState::build(&cfg, "single allgather bruck 100000 8").unwrap_err();
+        assert!(err.contains("ring_bytes"), "{err}");
+        // The same schedule is admitted at the default capacity.
+        let big = test_cfg(1, 4, 0, DEFAULT_POOL_RING_BYTES);
+        assert!(PlanState::build(&big, "single allgather bruck 100000 8").is_ok());
     }
 }

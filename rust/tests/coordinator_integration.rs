@@ -31,6 +31,7 @@ fn cfg(algo: Algorithm, regions: usize, requests: usize) -> ServeConfig {
         fused: false,
         consensus: true,
         fuse_batch: 1,
+        ..ServeConfig::default()
     }
 }
 
@@ -165,6 +166,7 @@ fn serve_missing_artifacts_is_clean_error() {
         fused: false,
         consensus: true,
         fuse_batch: 1,
+        ..ServeConfig::default()
     };
     let err = serve(&cfg).unwrap_err();
     assert!(err.to_string().contains("manifest"));

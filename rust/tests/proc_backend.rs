@@ -15,16 +15,31 @@
 //!    **identical** to the in-process sim backend,
 //! 2. a fused multi-collective plan (including an n=0 constituent),
 //! 3. an n=0 single collective,
-//! 4. a worker killed mid-run surfaces as a typed `Error::Transport` with
-//!    the failing rank, within the configured deadline — never a hang.
+//! 4. the persistent-pool contract: one spawn + handshake serves 100
+//!    executes byte-identical to the sim backend, with the lifecycle
+//!    counters proving zero re-spawns and a single schedule ship,
+//! 5. input deltas between executes (only the delta crosses the control
+//!    path) match the sim backend run on the same overridden inputs,
+//! 6. a stale schedule id is a typed error that does NOT poison the pool,
+//! 7. a worker killed mid-run surfaces as a typed `Error::Transport` with
+//!    the failing rank, within the configured deadline — never a hang,
+//! 8. a worker killed BETWEEN executes fails the next execute with
+//!    `Error::Transport`, poisons the pool (fail-fast thereafter), and a
+//!    freshly spawned pool fully recovers,
+//! 9. a `PoolGate` serving thread-per-rank exchanges of a fused f32 plan
+//!    (the coordinator's hot path) matches the sim backend.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use locag::cli::Args;
 use locag::collectives::{FuseSpec, OpKind};
 use locag::error::Error;
 use locag::model::MachineParams;
-use locag::transport::{run_proc, run_sim_bytes, worker_main, ProcConfig, ProcJob};
+use locag::transport::{
+    run_proc, run_sim_bytes, run_sim_bytes_with_inputs, worker_main, DType, PoolGate, ProcConfig,
+    ProcJob, ProcPool,
+};
 
 fn main() {
     let mut args = Args::parse(std::env::args().skip(1).collect());
@@ -35,7 +50,12 @@ fn main() {
     conformance_grid();
     fused_plan_conformance();
     empty_payload_conformance();
+    persistent_pool_repeat_execute();
+    input_deltas_between_executes();
+    stale_schedule_id_is_typed_and_non_poisoning();
     killed_worker_surfaces_typed_error();
+    killed_worker_between_executes_then_fresh_pool_recovers();
+    pool_gate_serves_thread_per_rank_exchanges();
     println!("proc_backend: all scenarios passed");
 }
 
@@ -116,7 +136,7 @@ fn fused_plan_conformance() {
         FuseSpec::new(OpKind::Allreduce, "loc-aware", 1),
         FuseSpec::new(OpKind::Alltoall, "pairwise", 0),
     ];
-    assert_conformance(2, 2, &ProcJob::Fused { specs }, "fused loc-bruck+loc-aware+empty");
+    assert_conformance(2, 2, &ProcJob::fused(specs), "fused loc-bruck+loc-aware+empty");
     println!("proc_backend: fused plan conformance passed");
 }
 
@@ -128,8 +148,92 @@ fn empty_payload_conformance() {
     println!("proc_backend: n=0 conformance passed");
 }
 
+/// The tentpole contract: spawn + handshake ONCE, ship the schedule ONCE,
+/// then serve many executes over the same channels. 100 repeats must stay
+/// byte-identical to the sim backend, and the lifecycle counters must
+/// prove no re-spawn, no re-handshake, and no re-plan happened.
+fn persistent_pool_repeat_execute() {
+    const REPEATS: usize = 100;
+    let job = single(OpKind::Allgather, "loc-bruck", 3, 8);
+    let want = run_sim_bytes(2, 2, &job, &MachineParams::lassen()).expect("sim reference");
+    let mut pool = ProcPool::spawn(2, 2, "lassen", &ProcConfig::default()).expect("spawn");
+    let sid = pool.load(&job).expect("load");
+    for i in 0..REPEATS {
+        let rep = pool.execute(sid).unwrap_or_else(|e| panic!("execute #{i}: {e}"));
+        assert_eq!(rep.outputs, want, "execute #{i} diverged from the sim backend");
+    }
+    let stats = pool.stats();
+    assert_eq!(stats.workers_spawned, 4, "repeat executes must not re-spawn workers");
+    assert_eq!(stats.handshakes, 4, "repeat executes must not re-handshake");
+    assert_eq!(stats.loads, 1, "the schedule must ship exactly once");
+    assert_eq!(stats.executes, REPEATS);
+    pool.shutdown().expect("shutdown");
+    println!("proc_backend: persistent pool served {REPEATS} executes on one spawn/load");
+}
+
+/// Between executes only the input delta crosses the control path; the
+/// workers' resident schedule and buffers are reused. Mutated inputs must
+/// be reflected in the outputs, matching the sim backend run on the same
+/// overridden inputs. A wrong-size delta is a parent-side precondition
+/// error that leaves the pool fully usable.
+fn input_deltas_between_executes() {
+    let machine = MachineParams::lassen();
+    let (regions, ppr) = (2usize, 2usize);
+    let p = regions * ppr;
+    let n = 2usize;
+    let job = single(OpKind::Allreduce, "loc-aware", n, 8);
+    let mut pool = ProcPool::spawn(regions, ppr, "lassen", &ProcConfig::default()).expect("spawn");
+    let sid = pool.load(&job).expect("load");
+    // Canonical inputs first, then three rounds of distinct overrides.
+    let rep = pool.execute(sid).expect("canonical execute");
+    assert_eq!(rep.outputs, run_sim_bytes(regions, ppr, &job, &machine).unwrap());
+    for trial in 0..3u64 {
+        let inputs: Vec<Vec<u8>> = (0..p)
+            .map(|r| {
+                (0..n as u64)
+                    .flat_map(|j| ((r as u64) * 7919 + j + trial * 104_729).to_ne_bytes())
+                    .collect()
+            })
+            .collect();
+        let want = run_sim_bytes_with_inputs(regions, ppr, &job, &machine, &inputs)
+            .expect("sim with inputs");
+        let rep = pool.execute_with_inputs(sid, &inputs).expect("execute with inputs");
+        assert_eq!(rep.outputs, want, "trial {trial}: mutated inputs not reflected in outputs");
+    }
+    let undersized = vec![vec![0u8; 1]; p];
+    assert!(
+        pool.execute_with_inputs(sid, &undersized).is_err(),
+        "a wrong-size input delta must be rejected"
+    );
+    assert!(pool.execute(sid).is_ok(), "a rejected delta must not poison the pool");
+    pool.shutdown().expect("shutdown");
+    println!("proc_backend: input deltas between executes passed");
+}
+
+/// A schedule id that was never loaded is caught parent-side: a typed
+/// `Error::Transport` that does not poison the pool, so a valid load +
+/// execute right after must succeed.
+fn stale_schedule_id_is_typed_and_non_poisoning() {
+    let mut pool = ProcPool::spawn(1, 2, "lassen", &ProcConfig::default()).expect("spawn");
+    match pool.execute(42) {
+        Err(Error::Transport { ref what, .. }) => {
+            assert!(what.contains("stale schedule id"), "unexpected message: {what}");
+        }
+        Ok(_) => panic!("a never-loaded schedule id must not execute"),
+        Err(other) => panic!("expected Error::Transport, got: {other}"),
+    }
+    let sid = pool.load(&single(OpKind::Allgather, "ring", 1, 8)).expect("load after stale id");
+    assert!(pool.execute(sid).is_ok(), "a stale schedule id must not poison the pool");
+    pool.shutdown().expect("shutdown");
+    println!("proc_backend: stale schedule id path passed");
+}
+
 fn killed_worker_surfaces_typed_error() {
-    let cfg = ProcConfig { deadline: Duration::from_secs(5), kill_rank: Some(1) };
+    let cfg = ProcConfig {
+        deadline: Duration::from_secs(5),
+        kill_rank: Some(1),
+        ..ProcConfig::default()
+    };
     let started = Instant::now();
     let res = run_proc(2, 2, &single(OpKind::Allgather, "bruck", 2, 8), "lassen", &cfg);
     let elapsed = started.elapsed();
@@ -147,4 +251,88 @@ fn killed_worker_surfaces_typed_error() {
         "error took {elapsed:?}; deadline did not bound the wait"
     );
     println!("proc_backend: killed-worker error path passed ({elapsed:?})");
+}
+
+/// A worker that dies BETWEEN executes fails the next execute fast with a
+/// typed error, leaves the pool poisoned (every later call fails fast and
+/// points at respawning), and a fresh pool spawned afterwards fully
+/// recovers the same job.
+fn killed_worker_between_executes_then_fresh_pool_recovers() {
+    let cfg = ProcConfig { deadline: Duration::from_secs(5), ..ProcConfig::default() };
+    let job = single(OpKind::Allgather, "bruck", 2, 8);
+    let mut pool = ProcPool::spawn(2, 2, "lassen", &cfg).expect("spawn");
+    let sid = pool.load(&job).expect("load");
+    pool.execute(sid).expect("execute before the kill");
+    pool.kill_worker(1).expect("kill worker 1");
+    let started = Instant::now();
+    match pool.execute(sid) {
+        Ok(_) => panic!("execute after a worker death must not succeed"),
+        Err(Error::Transport { .. }) => {}
+        Err(other) => panic!("expected Error::Transport, got: {other}"),
+    }
+    let elapsed = started.elapsed();
+    assert!(elapsed < Duration::from_secs(20), "death detection took {elapsed:?}");
+    // The data channels are in an unknown state: the pool is poisoned and
+    // every later call fails fast with the respawn hint.
+    match pool.execute(sid) {
+        Err(Error::Transport { ref what, .. }) => {
+            assert!(what.contains("fresh ProcPool"), "missing respawn hint: {what}");
+        }
+        Ok(_) => panic!("poisoned pool must fail fast"),
+        Err(other) => panic!("poisoned pool must fail with Error::Transport, got: {other}"),
+    }
+    drop(pool);
+    let mut fresh = ProcPool::spawn(2, 2, "lassen", &cfg).expect("fresh spawn after poison");
+    let sid = fresh.load(&job).expect("fresh load");
+    let rep = fresh.execute(sid).expect("fresh execute");
+    assert_eq!(rep.outputs, run_sim_bytes(2, 2, &job, &MachineParams::lassen()).unwrap());
+    fresh.shutdown().expect("fresh shutdown");
+    println!("proc_backend: worker death between executes + recovery passed ({elapsed:?})");
+}
+
+/// The coordinator's hot path: thread-per-rank callers share one pool via
+/// a `PoolGate`, exchanging a fused f32 plan (allgather ⊕ consensus
+/// allreduce). Integer-valued floats keep f32 sums exact under any
+/// summation order, so the outputs must be byte-identical to the sim
+/// backend on the same inputs.
+fn pool_gate_serves_thread_per_rank_exchanges() {
+    let (regions, ppr) = (2usize, 2usize);
+    let p = regions * ppr;
+    let specs = vec![
+        FuseSpec::new(OpKind::Allgather, "loc-bruck", 2),
+        FuseSpec::new(OpKind::Allreduce, "loc-aware", 1),
+    ];
+    let job = ProcJob::Fused { specs, dtype: DType::F32 };
+    let machine = MachineParams::lassen();
+    let mut pool = ProcPool::spawn(regions, ppr, "lassen", &ProcConfig::default()).expect("spawn");
+    let sid = pool.load(&job).expect("load");
+    let gate = Arc::new(PoolGate::new(pool, sid));
+    for round in 0..3u32 {
+        // Per-rank composite input in spec order: 2 allgather elems, then
+        // the 1 consensus elem. All values are small integers.
+        let inputs: Vec<Vec<u8>> = (0..p)
+            .map(|r| {
+                let consensus = (r + 1) as f32 * (round + 1) as f32;
+                let vals = [(r * 100 + 1) as f32, (r * 100 + 2) as f32, consensus];
+                vals.iter().flat_map(|v| v.to_ne_bytes()).collect()
+            })
+            .collect();
+        let want = run_sim_bytes_with_inputs(regions, ppr, &job, &machine, &inputs)
+            .expect("sim with inputs");
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let gate = Arc::clone(&gate);
+                let input = inputs[r].clone();
+                std::thread::spawn(move || {
+                    let mut out = Vec::new();
+                    gate.exchange(r, &input, &mut out).map(|_| out)
+                })
+            })
+            .collect();
+        for (r, h) in handles.into_iter().enumerate() {
+            let out = h.join().expect("gate thread panicked").expect("gate exchange");
+            assert_eq!(out, want[r], "round {round}: rank {r} gate output differs from sim");
+        }
+    }
+    println!("proc_backend: PoolGate thread-per-rank exchanges passed");
 }
