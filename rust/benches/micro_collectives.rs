@@ -6,7 +6,7 @@
 //! Run: `cargo bench --bench micro_collectives`
 
 use locag::bench_harness::measure_budget;
-use locag::collectives::{self, Algorithm, Shape};
+use locag::collectives::{self, Algorithm, FuseSpec, OpKind, Shape};
 use locag::comm::{CommWorld, Timing};
 use locag::topology::Topology;
 
@@ -170,6 +170,68 @@ fn main() {
                             }
                             out.len()
                         }
+                    });
+                    std::hint::black_box(run.results[0]);
+                },
+            );
+            println!("{}", m.report_line());
+        }
+        println!();
+    }
+
+    // Staged vs zero-copy execution of one fused serving-shaped plan
+    // (K allgathers ⊕ reduce-scatter shard ⊕ consensus allreduce): the
+    // identical schedule, executed through the composite staging buffers
+    // vs through segmented views of the caller's buffers. The delta is
+    // purely the staging memcpys the view path eliminates.
+    for (regions, ppr, k, n) in [(2usize, 2usize, 4usize, 1024usize), (4, 4, 4, 1024)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let mut specs: Vec<FuseSpec> =
+            (0..k).map(|_| FuseSpec::new(OpKind::Allgather, "loc-bruck", n)).collect();
+        specs.push(FuseSpec::new(OpKind::ReduceScatter, "ring", 16));
+        specs.push(FuseSpec::new(OpKind::Allreduce, "loc-aware", 2 * k));
+        for staged in [true, false] {
+            let label = if staged { "fused-staged " } else { "fused-zerocopy" };
+            let m = measure_budget(
+                &format!("{label}/{regions}x{ppr}x{n}x{k}batch-{EXECS}ops"),
+                1,
+                0.3,
+                5,
+                || {
+                    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                        let mut plan = collectives::plan_fused::<u64>(c, &specs).unwrap();
+                        let ins: Vec<Vec<u64>> = specs
+                            .iter()
+                            .map(|s| {
+                                let il = match s.op {
+                                    OpKind::Allgather | OpKind::Allreduce => s.n,
+                                    OpKind::Alltoall | OpKind::ReduceScatter => s.n * p,
+                                };
+                                vec![c.rank() as u64 + 1; il]
+                            })
+                            .collect();
+                        let mut outs: Vec<Vec<u64>> = specs
+                            .iter()
+                            .map(|s| {
+                                let ol = match s.op {
+                                    OpKind::Allgather | OpKind::Alltoall => s.n * p,
+                                    OpKind::Allreduce | OpKind::ReduceScatter => s.n,
+                                };
+                                vec![0u64; ol]
+                            })
+                            .collect();
+                        for _ in 0..EXECS {
+                            let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+                            let mut out_refs: Vec<&mut [u64]> =
+                                outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+                            if staged {
+                                plan.execute(&in_refs, &mut out_refs).unwrap();
+                            } else {
+                                plan.execute_view(&in_refs, &mut out_refs).unwrap();
+                            }
+                        }
+                        outs[0][0]
                     });
                     std::hint::black_box(run.results[0]);
                 },

@@ -16,6 +16,7 @@
 //! locag figure 9 [--out results/fig9.csv] [--max-p 1024] [--backend proc]
 //! locag pingpong [--machine quartz]
 //! locag e2e [--algo model-tuned] [--regions 2] [--requests 16] [--artifacts DIR]
+//! locag e2e --measure-rps --fuse-batch 4   # staged vs zero-copy serving req/s
 //! locag validate [--max-p 256]
 //! ```
 
@@ -101,11 +102,14 @@ COMMANDS
                Extra options: --batch K --consensus-values N
   fuse         Print the full coalescing table of the serving-loop fusion:
                every merged wire message (rank, round, peer, payload,
-               constituents) and the fused-vs-sequential totals.
+               constituents), the fused-vs-sequential totals, and the
+               staging bytes per execute that zero-copy views eliminate.
                --algo NAME --regions N --ppr N --values N --batch K
                --consensus-values N --machine NAME
   bench        Micro-bench a fixed (shape, algorithm) grid — allgather and
-               reduce-scatter rows — and emit a BENCH_*.json
+               reduce-scatter rows, plus a serving_rps pair (modeled fused
+               serving schedule, gated; measured staged vs zero-copy
+               seconds/request, never gated) — and emit a BENCH_*.json
                perf-trajectory artifact (p, n, algo, vtime, predicted,
                wall) for cross-PR regression tracking.
                --json FILE (default results/BENCH_collectives.json)
@@ -150,14 +154,25 @@ COMMANDS
   pattern      Print the step-by-step communication pattern (paper Figs.
                1 and 4 as text). --algo NAME --regions N --ppr N
   e2e          Tensor-parallel serving with a FUSED collective hot path:
-               each chunk of --fuse-batch requests executes its allgathers
-               and the consensus allreduce as one coalesced schedule
-               (default algorithm: model-tuned).
+               each chunk of --fuse-batch requests executes its allgathers,
+               reduce-scatter shards and the consensus allreduce as one
+               coalesced schedule through zero-copy segmented buffer
+               views, with chunk c's final projections overlapped against
+               chunk c+1's in-flight collective (default: model-tuned).
                --algo NAME --regions N --requests N --artifacts DIR
                --fuse-batch K (request micro-batch; default 1)
+               --rs-shards N (fused reduce-scatter shards per chunk;
+               default 0)
                --fused (use the fused gathered-matmul artifact)
+               --staged (staging-copy execution — the conformance oracle)
+               --no-pipeline (serialize chunks; finals after each finish)
                --collective-backend sim|proc (proc runs the fused hot path
                on a persistent multi-process worker pool; default sim)
+               --measure-rps: synthetic serving-throughput mode (needs NO
+               artifacts): run a heavy request stream twice — staged +
+               serial vs zero-copy + pipelined — and report req/s for
+               both plus the speedup. Extra options: --ppr N --values N
+               (gather elems/request, default 4096) --rs-shards N
   validate     Cross-check every algorithm against the expected gather and
                the paper's message-count bounds. --max-p N (default 256)
 

@@ -52,7 +52,7 @@ use crate::error::{Error, Result};
 use crate::model::MachineParams;
 
 use super::model_tuned;
-use super::plan::OpKind;
+use super::plan::{ElemKind, OpKind};
 use super::schedule::{
     replay_world, BufId, ReplayHandler, Round, Schedule, Slice, Step, WorldView,
 };
@@ -111,6 +111,11 @@ pub struct FuseStats {
     pub sends_after: usize,
     /// Every coalesced message (groups of one are not listed).
     pub merged: Vec<MergedMsg>,
+    /// Bytes a *staged* fused execute memcpys through the composite
+    /// input/output staging buffers per execute on this rank — exactly
+    /// what the zero-copy view path
+    /// ([`super::plan::FusedPlan::execute_view`]) eliminates.
+    pub staging_bytes: usize,
 }
 
 /// Buffer/tag offsets of one constituent in the composite space.
@@ -375,6 +380,8 @@ pub fn fuse_with_stats(parts: &[Schedule], coalesce: bool) -> Result<(Schedule, 
         rounds.push(Round { label: labels.join(" ⊕ "), steps });
     }
 
+    stats.staging_bytes = (in_len + out_len) * elem_bytes;
+
     let label = format!(
         "fused[{}]",
         parts.iter().map(|s| s.label.as_str()).collect::<Vec<_>>().join(" ⊕ ")
@@ -537,6 +544,79 @@ pub fn fuse_world(
         }
         match verify_world(&fused) {
             Ok(()) => return Ok((fused, stats)),
+            Err(e) => fallback_err = Some(e),
+        }
+    }
+    Err(fallback_err.unwrap_or_else(|| {
+        Error::Precondition("fused schedules could not be made consistent".into())
+    }))
+}
+
+/// [`fuse_world`] for constituents of **different element types**: each
+/// spec carries its own [`ElemKind`]. Every constituent world is built at
+/// its native element size, then rescaled to byte granularity
+/// ([`Schedule::scale_to_bytes`] — wire framing, padding and cost are
+/// unchanged) so the `elem_bytes`-agreement precondition of [`fuse`]
+/// holds trivially and the composite schedule is byte-exact.
+///
+/// Besides the per-rank fused schedules and stats, returns each rank's
+/// **scratch-kind table**: the element kind of every composite scratch
+/// buffer, in order — the constituents' own scratches first (each tagged
+/// with its constituent's kind; reduce-scatter/allreduce builders only
+/// allocate scratch on member ranks, so the table genuinely differs per
+/// rank), then the coalescing scratches appended by [`fuse`] (tagged
+/// [`ElemKind::Raw`]: they are gather/scatter staging only, never
+/// `Reduce` targets). The mixed view executor uses this table to resolve
+/// reduction types ([`super::plan::FusedPlanMixed`]).
+pub fn fuse_world_mixed(
+    specs: &[(FuseSpec, ElemKind)],
+    view: &WorldView,
+    machine: &MachineParams,
+) -> Result<(Vec<Schedule>, Vec<FuseStats>, Vec<Vec<ElemKind>>)> {
+    for (s, k) in specs {
+        if *k == ElemKind::Raw {
+            return Err(Error::Precondition(format!(
+                "constituent {} has no element kind (raw segments cannot be planned)",
+                s.label()
+            )));
+        }
+    }
+    let live: Vec<(FuseSpec, ElemKind)> =
+        specs.iter().filter(|(s, _)| s.n > 0).cloned().collect();
+    if live.is_empty() {
+        let empty = empty_fused(view.p, 1);
+        return Ok((
+            vec![empty; view.p],
+            vec![FuseStats::default(); view.p],
+            vec![Vec::new(); view.p],
+        ));
+    }
+    let mut worlds = Vec::with_capacity(live.len());
+    for (spec, kind) in &live {
+        let world = build_world(spec, view, kind.bytes(), machine)?;
+        worlds.push(world.iter().map(Schedule::scale_to_bytes).collect::<Vec<_>>());
+    }
+    let mut fallback_err = None;
+    for coalesce in [true, false] {
+        let mut fused = Vec::with_capacity(view.p);
+        let mut stats = Vec::with_capacity(view.p);
+        let mut kinds = Vec::with_capacity(view.p);
+        for r in 0..view.p {
+            let parts: Vec<Schedule> = worlds.iter().map(|w| w[r].clone()).collect();
+            let mut ks: Vec<ElemKind> = Vec::new();
+            for ((_, kind), part) in live.iter().zip(&parts) {
+                ks.extend(std::iter::repeat(*kind).take(part.scratch.len()));
+            }
+            let (f, st) = fuse_with_stats(&parts, coalesce)?;
+            // Coalescing scratches are appended after the namespaced
+            // per-part scratches, in order.
+            ks.extend(std::iter::repeat(ElemKind::Raw).take(f.scratch.len() - ks.len()));
+            fused.push(f);
+            stats.push(st);
+            kinds.push(ks);
+        }
+        match verify_world(&fused) {
+            Ok(()) => return Ok((fused, stats, kinds)),
             Err(e) => fallback_err = Some(e),
         }
     }

@@ -95,12 +95,13 @@ pub mod schedule;
 
 pub use fuse::FuseSpec;
 pub use plan::{
-    AllgatherPlan, AllreduceAlgorithm, AllreducePlan, AllreduceRegistry, AlltoallAlgorithm,
-    AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, FusedPlan,
-    NamedAlgorithm, OpKind, OpRegistry, ReduceScatterAlgorithm, ReduceScatterPlan,
-    ReduceScatterRegistry, Registry, Shape, Summable,
+    reset_staging_bytes, staging_bytes_total, AllgatherPlan, AllreduceAlgorithm, AllreducePlan,
+    AllreduceRegistry, AlltoallAlgorithm, AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm,
+    CollectivePlan, ElemKind, FusedPlan, FusedPlanMixed, NamedAlgorithm, OpKind, OpRegistry,
+    ReduceScatterAlgorithm, ReduceScatterPlan, ReduceScatterRegistry, Registry, Shape, Summable,
+    ViewElem,
 };
-pub use schedule::{BufId, Round, SchedPlan, Schedule, Slice, Step};
+pub use schedule::{BufId, IoView, IoViewMut, Round, SchedPlan, Schedule, Slice, Step};
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -275,6 +276,14 @@ pub fn plan_reduce_scatter<T: Summable>(
 /// with identical specs; constituent shape preconditions surface here.
 pub fn plan_fused<T: Summable>(comm: &Comm, specs: &[FuseSpec]) -> Result<FusedPlan<T>> {
     FusedPlan::plan(comm, specs)
+}
+
+/// Collectively build a [`FusedPlanMixed`]: like [`plan_fused`], but each
+/// constituent carries its own element kind (e.g. an `f32` allgather
+/// fused with a `u64` allreduce). Executes over segmented buffer views
+/// only ([`FusedPlanMixed::execute_view`]).
+pub fn plan_fused_mixed(comm: &Comm, specs: &[(FuseSpec, ElemKind)]) -> Result<FusedPlanMixed> {
+    FusedPlanMixed::plan(comm, specs)
 }
 
 /// The expected allgather result for verification: every rank's canonical

@@ -64,20 +64,181 @@ use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
 use crate::model::MachineParams;
 
-use super::fuse::{fuse_world, FuseSpec};
-use super::schedule::{add_assign, execute_schedule, Schedule, WorldView};
+use super::fuse::{fuse_world, fuse_world_mixed, FuseSpec};
+use super::schedule::{
+    add_assign, execute_schedule, execute_schedule_view, IoView, IoViewMut, Schedule, ViewReduce,
+    WorldView,
+};
 use super::{allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
 use super::{loc_bruck, model_tuned, multilane, recursive_doubling, reduce_scatter, ring};
 
+/// Runtime element-type tag for byte-level (view-based) execution.
+///
+/// The segmented-view interpreter ([`execute_schedule_view`]) runs
+/// schedules over untyped byte buffers; `ElemKind` carries the one piece
+/// of type information that still matters at runtime — how to reduce two
+/// byte slices elementwise. It is the dynamic mirror of the static
+/// [`ViewElem`] trait, and the bridge to the proc backend's wire dtypes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElemKind {
+    /// 32-bit unsigned integers (wrapping sum).
+    U32,
+    /// 64-bit unsigned integers (wrapping sum).
+    U64,
+    /// 32-bit signed integers (wrapping sum).
+    I32,
+    /// 64-bit signed integers (wrapping sum).
+    I64,
+    /// IEEE-754 single precision (native-order float sum).
+    F32,
+    /// IEEE-754 double precision (native-order float sum).
+    F64,
+    /// Opaque bytes: movable (copy/gather/scatter) but not reducible.
+    /// Coalescing scratch buffers introduced by fusion are `Raw` — they
+    /// are only ever `CopyLocal` sources/targets, never `Reduce` targets.
+    Raw,
+}
+
+impl ElemKind {
+    /// Element width in bytes (`Raw` is byte-granular: 1).
+    pub fn bytes(&self) -> usize {
+        match self {
+            ElemKind::U32 | ElemKind::I32 | ElemKind::F32 => 4,
+            ElemKind::U64 | ElemKind::I64 | ElemKind::F64 => 8,
+            ElemKind::Raw => 1,
+        }
+    }
+
+    /// Display / spec-grammar name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElemKind::U32 => "u32",
+            ElemKind::U64 => "u64",
+            ElemKind::I32 => "i32",
+            ElemKind::I64 => "i64",
+            ElemKind::F32 => "f32",
+            ElemKind::F64 => "f64",
+            ElemKind::Raw => "raw",
+        }
+    }
+
+    /// Elementwise `dst += src` over raw bytes. Integer kinds use wrapping
+    /// addition and float kinds native-endian IEEE addition — exactly the
+    /// semantics of the typed interpreter's [`add_assign`] (release mode)
+    /// and of the proc backend's byte reducer, so every executor produces
+    /// bit-identical reductions.
+    pub fn reduce_assign(&self, dst: &mut [u8], src: &[u8]) -> Result<()> {
+        if dst.len() != src.len() {
+            return Err(Error::SizeMismatch { expected: dst.len(), got: src.len() });
+        }
+        let eb = self.bytes();
+        if *self == ElemKind::Raw {
+            return Err(Error::Precondition(
+                "cannot reduce raw (untyped) bytes — a Reduce step targeted a buffer \
+                 with no element kind"
+                    .into(),
+            ));
+        }
+        if dst.len() % eb != 0 {
+            return Err(Error::Precondition(format!(
+                "reduce length {} is not a multiple of {} ({} elements)",
+                dst.len(),
+                eb,
+                self.name()
+            )));
+        }
+        macro_rules! reduce_as {
+            ($ty:ty, $w:expr, $combine:expr) => {
+                for (d, s) in dst.chunks_exact_mut($w).zip(src.chunks_exact($w)) {
+                    let a = <$ty>::from_ne_bytes(d.try_into().expect("chunk width"));
+                    let b = <$ty>::from_ne_bytes(s.try_into().expect("chunk width"));
+                    d.copy_from_slice(&($combine(a, b)).to_ne_bytes());
+                }
+            };
+        }
+        match self {
+            ElemKind::U32 => reduce_as!(u32, 4, |a: u32, b: u32| a.wrapping_add(b)),
+            ElemKind::U64 => reduce_as!(u64, 8, |a: u64, b: u64| a.wrapping_add(b)),
+            ElemKind::I32 => reduce_as!(i32, 4, |a: i32, b: i32| a.wrapping_add(b)),
+            ElemKind::I64 => reduce_as!(i64, 8, |a: i64, b: i64| a.wrapping_add(b)),
+            ElemKind::F32 => reduce_as!(f32, 4, |a: f32, b: f32| a + b),
+            ElemKind::F64 => reduce_as!(f64, 8, |a: f64, b: f64| a + b),
+            ElemKind::Raw => unreachable!("handled above"),
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ElemKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// `Pod` types with a runtime [`ElemKind`] tag — the element types that
+/// segmented buffer views ([`IoView`]) can carry as *typed* segments.
+pub trait ViewElem: Pod {
+    /// The runtime tag matching `Self`.
+    const KIND: ElemKind;
+}
+
+impl ViewElem for u32 {
+    const KIND: ElemKind = ElemKind::U32;
+}
+impl ViewElem for u64 {
+    const KIND: ElemKind = ElemKind::U64;
+}
+impl ViewElem for i32 {
+    const KIND: ElemKind = ElemKind::I32;
+}
+impl ViewElem for i64 {
+    const KIND: ElemKind = ElemKind::I64;
+}
+impl ViewElem for f32 {
+    const KIND: ElemKind = ElemKind::F32;
+}
+impl ViewElem for f64 {
+    const KIND: ElemKind = ElemKind::F64;
+}
+
 /// Element types that can be summed — the reduction of the allreduce
 /// operation (the paper's allreduce reference [4] reduces with `MPI_SUM`).
-pub trait Summable: Pod + std::ops::Add<Output = Self> {}
+/// Every summable type carries an [`ElemKind`] so reducing plans can also
+/// execute over untyped segmented views.
+pub trait Summable: ViewElem + std::ops::Add<Output = Self> {}
 impl Summable for u32 {}
 impl Summable for u64 {}
 impl Summable for i32 {}
 impl Summable for i64 {}
 impl Summable for f32 {}
 impl Summable for f64 {}
+
+// ---------------------------------------------------------------------------
+// staging-copy accounting
+// ---------------------------------------------------------------------------
+
+/// Process-global count of bytes memcpy'd through composite staging
+/// buffers by *staged* fused executes ([`FusedPlan::execute`]). The
+/// zero-copy view path ([`FusedPlan::execute_view`]) never touches it, so
+/// `staging_bytes_total()` deltas prove (in tests) and report (in
+/// `locag fuse`) exactly what the view layer eliminates. Diagnostic only:
+/// relaxed ordering, summed across threads.
+static STAGING_BYTES: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total staging bytes copied by staged fused executes since process
+/// start (or since [`reset_staging_bytes`]).
+pub fn staging_bytes_total() -> u64 {
+    STAGING_BYTES.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Reset the staging-copy counter (test isolation).
+pub fn reset_staging_bytes() {
+    STAGING_BYTES.store(0, std::sync::atomic::Ordering::Relaxed)
+}
+
+fn note_staging(bytes: usize) {
+    STAGING_BYTES.fetch_add(bytes as u64, std::sync::atomic::Ordering::Relaxed);
+}
 
 /// The collective operations the planned framework covers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -206,6 +367,14 @@ pub trait AllgatherPlan<T: Pod>: CollectivePlan {
     /// Run the communication. No allocation, no sub-communicator
     /// construction, no tag consumption.
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+
+    /// Zero-copy variant: run over segmented buffer views (total byte
+    /// lengths must match the contract above). Plans that don't support
+    /// view execution report a precondition error.
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        let _ = (input, output);
+        Err(Error::Precondition("this plan does not support segmented-view execution".into()))
+    }
 }
 
 /// A prepared allreduce: elementwise-sum `input` (length `shape().n`)
@@ -216,6 +385,14 @@ pub trait AllreducePlan<T: Summable>: CollectivePlan {
     /// Run the communication + reduction. No allocation, no
     /// sub-communicator construction, no tag consumption.
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+
+    /// Zero-copy variant: run over segmented buffer views (total byte
+    /// lengths must match the contract above). Plans that don't support
+    /// view execution report a precondition error.
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        let _ = (input, output);
+        Err(Error::Precondition("this plan does not support segmented-view execution".into()))
+    }
 }
 
 /// A prepared alltoall: `input` holds `comm_size()` blocks of `shape().n`
@@ -227,6 +404,14 @@ pub trait AlltoallPlan<T: Pod>: CollectivePlan {
     /// Run the exchange. No allocation, no sub-communicator construction,
     /// no tag consumption.
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+
+    /// Zero-copy variant: run over segmented buffer views (total byte
+    /// lengths must match the contract above). Plans that don't support
+    /// view execution report a precondition error.
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        let _ = (input, output);
+        Err(Error::Precondition("this plan does not support segmented-view execution".into()))
+    }
 }
 
 /// A prepared reduce-scatter: `input` holds `comm_size()` blocks of
@@ -240,6 +425,14 @@ pub trait ReduceScatterPlan<T: Summable>: CollectivePlan {
     /// Run the communication + reduction. No allocation, no
     /// sub-communicator construction, no tag consumption.
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+
+    /// Zero-copy variant: run over segmented buffer views (total byte
+    /// lengths must match the contract above). Plans that don't support
+    /// view execution report a precondition error.
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        let _ = (input, output);
+        Err(Error::Precondition("this plan does not support segmented-view execution".into()))
+    }
 }
 
 /// An allgather algorithm that can produce persistent plans.
@@ -369,9 +562,24 @@ impl CollectivePlan for EmptyPlan {
     }
 }
 
+/// View-contract check for the `n == 0` plan: both views must be empty.
+fn check_empty_views(input: &IoView<'_>, output: &IoViewMut<'_>) -> Result<()> {
+    if input.total_bytes() != 0 {
+        return Err(Error::SizeMismatch { expected: 0, got: input.total_bytes() });
+    }
+    if output.total_bytes() != 0 {
+        return Err(Error::SizeMismatch { expected: 0, got: output.total_bytes() });
+    }
+    Ok(())
+}
+
 impl<T: Pod> AllgatherPlan<T> for EmptyPlan {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_io(0, self.p, input, output)
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        check_empty_views(input, output)
     }
 }
 
@@ -379,17 +587,29 @@ impl<T: Summable> AllreducePlan<T> for EmptyPlan {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_reduce_io(0, input, output)
     }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        check_empty_views(input, output)
+    }
 }
 
 impl<T: Pod> AlltoallPlan<T> for EmptyPlan {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_a2a_io(0, self.p, input, output)
     }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        check_empty_views(input, output)
+    }
 }
 
 impl<T: Summable> ReduceScatterPlan<T> for EmptyPlan {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_rs_io(0, self.p, input, output)
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        check_empty_views(input, output)
     }
 }
 
@@ -773,6 +993,11 @@ pub struct FusedPlan<T: Summable> {
     input: Vec<T>,
     output: Vec<T>,
     scratch: Vec<Vec<T>>,
+    /// Byte-granular scratch mirror for the zero-copy view executor;
+    /// allocated lazily on the first `execute_view` (scratch is
+    /// written-before-read by every schedule, so the two executors can
+    /// share nothing and still agree bit-for-bit).
+    view_scratch: Vec<Vec<u8>>,
     wire: Vec<u8>,
 }
 
@@ -812,6 +1037,7 @@ impl<T: Summable> FusedPlan<T> {
             input: vec![T::default(); in_off],
             output: vec![T::default(); out_off],
             scratch,
+            view_scratch: Vec::new(),
             wire,
         })
     }
@@ -821,11 +1047,9 @@ impl<T: Summable> FusedPlan<T> {
         self.parts.len()
     }
 
-    /// Execute every constituent as one fused schedule. `inputs[i]` /
-    /// `outputs[i]` follow constituent `i`'s per-op buffer contract
-    /// (see the [module docs](self)); both slices must be given for every
-    /// constituent, in spec order.
-    pub fn execute(&mut self, inputs: &[&[T]], outputs: &mut [&mut [T]]) -> Result<()> {
+    /// Shared arity + per-constituent length validation of both fused
+    /// entry points.
+    fn check_parts(&self, inputs: &[&[T]], outputs: &[&mut [T]]) -> Result<()> {
         if inputs.len() != self.parts.len() {
             return Err(Error::SizeMismatch { expected: self.parts.len(), got: inputs.len() });
         }
@@ -842,6 +1066,22 @@ impl<T: Summable> FusedPlan<T> {
                     got: outputs[i].len(),
                 });
             }
+        }
+        Ok(())
+    }
+
+    /// Execute every constituent as one fused schedule. `inputs[i]` /
+    /// `outputs[i]` follow constituent `i`'s per-op buffer contract
+    /// (see the [module docs](self)); both slices must be given for every
+    /// constituent, in spec order.
+    ///
+    /// This is the **staged** path: constituent buffers are memcpy'd
+    /// through the composite staging windows on the way in and out (the
+    /// copies are tallied in [`staging_bytes_total`]). It doubles as the
+    /// conformance oracle for the zero-copy [`FusedPlan::execute_view`].
+    pub fn execute(&mut self, inputs: &[&[T]], outputs: &mut [&mut [T]]) -> Result<()> {
+        self.check_parts(inputs, outputs)?;
+        for (i, part) in self.parts.iter().enumerate() {
             self.input[part.in_off..part.in_off + part.in_len].copy_from_slice(inputs[i]);
         }
         {
@@ -851,13 +1091,174 @@ impl<T: Summable> FusedPlan<T> {
         for (i, part) in self.parts.iter().enumerate() {
             outputs[i].copy_from_slice(&self.output[part.out_off..part.out_off + part.out_len]);
         }
+        note_staging((self.input.len() + self.output.len()) * std::mem::size_of::<T>());
         Ok(())
+    }
+
+    /// Zero-copy execute: identical contract and results as
+    /// [`FusedPlan::execute`], but each constituent's caller-owned buffer
+    /// becomes one segment of a composite [`IoView`] and the schedule runs
+    /// in place over those segments — no staging memcpys at all.
+    pub fn execute_view(&mut self, inputs: &[&[T]], outputs: &mut [&mut [T]]) -> Result<()> {
+        self.check_parts(inputs, outputs)?;
+        let mut iv = IoView::new();
+        for seg in inputs {
+            iv.push::<T>(seg);
+        }
+        let mut ov = IoViewMut::new();
+        for seg in outputs.iter_mut() {
+            ov.push::<T>(seg);
+        }
+        if self.view_scratch.len() != self.sched.scratch.len() {
+            let eb = std::mem::size_of::<T>();
+            self.view_scratch = self.sched.scratch.iter().map(|&l| vec![0u8; l * eb]).collect();
+        }
+        let FusedPlan { core, sched, view_scratch, wire, .. } = self;
+        execute_schedule_view(
+            core,
+            sched,
+            &iv,
+            &mut ov,
+            view_scratch,
+            wire,
+            &ViewReduce::Uniform(T::KIND),
+        )
     }
 }
 
 impl<T: Summable> CollectivePlan for FusedPlan<T> {
     fn algorithm(&self) -> &'static str {
         "fused"
+    }
+
+    fn shape(&self) -> Shape {
+        Shape { n: self.core.n }
+    }
+
+    fn comm_size(&self) -> usize {
+        self.core.p
+    }
+
+    fn schedule(&self) -> Option<&Schedule> {
+        Some(&self.sched)
+    }
+}
+
+/// IO geometry + element kind of one constituent inside a
+/// [`FusedPlanMixed`], in **bytes** (the mixed schedule is byte-scaled).
+struct MixedPart {
+    in_bytes: usize,
+    out_bytes: usize,
+    kind: ElemKind,
+}
+
+/// A fused plan whose constituents have **different element types** —
+/// e.g. an `f32` activation allgather fused with a `u64` counter
+/// allreduce. Views are typed per-segment, so no common `T` exists;
+/// the plan is execute-by-view only (there is no composite typed staging
+/// buffer a staged path could even use).
+///
+/// Internally every constituent schedule is scaled to byte granularity
+/// ([`Schedule::scale_to_bytes`](super::schedule::Schedule::scale_to_bytes))
+/// before fusion, which preserves wire framing, padding and therefore the
+/// cost model exactly; reductions recover their element type from the
+/// per-segment [`ElemKind`]s (outputs) and the fused schedule's per-rank
+/// scratch-kind table (scratch).
+pub struct FusedPlanMixed {
+    core: PlanCore,
+    sched: Schedule,
+    parts: Vec<MixedPart>,
+    scratch: Vec<Vec<u8>>,
+    scratch_kinds: Vec<ElemKind>,
+    wire: Vec<u8>,
+}
+
+impl FusedPlanMixed {
+    /// Collectively build a mixed-type fused plan: each spec carries its
+    /// own element kind. All ranks must call with identical `specs`.
+    pub fn plan(comm: &Comm, specs: &[(FuseSpec, ElemKind)]) -> Result<FusedPlanMixed> {
+        let view = WorldView::from_comm(comm);
+        let machine = comm.machine().cloned().unwrap_or_else(MachineParams::lassen);
+        let (mut fused, _stats, mut kinds) = fuse_world_mixed(specs, &view, &machine)?;
+        let sched = fused.swap_remove(comm.rank());
+        sched.validate()?;
+        let scratch_kinds = kinds.swap_remove(comm.rank());
+        debug_assert_eq!(scratch_kinds.len(), sched.scratch.len());
+        let p = comm.size();
+        let mut parts = Vec::with_capacity(specs.len());
+        for (s, k) in specs {
+            let (il, ol) = s.op.io_elems(s.n, p);
+            parts.push(MixedPart {
+                in_bytes: il * k.bytes(),
+                out_bytes: ol * k.bytes(),
+                kind: *k,
+            });
+        }
+        let core = PlanCore::new(comm, sched.n, sched.tags);
+        let scratch = sched.scratch.iter().map(|&len| vec![0u8; len]).collect();
+        let wire = vec![0u8; sched.max_padded_wire()];
+        Ok(FusedPlanMixed { core, sched, parts, scratch, scratch_kinds, wire })
+    }
+
+    /// Number of constituent collectives (including `n == 0` no-ops).
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Execute every constituent in place: view segment `i` must be
+    /// constituent `i`'s buffer, with matching byte length **and**
+    /// element kind (a typed push via [`IoView::push`] gets both right).
+    pub fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        if input.num_segments() != self.parts.len() {
+            return Err(Error::SizeMismatch {
+                expected: self.parts.len(),
+                got: input.num_segments(),
+            });
+        }
+        if output.num_segments() != self.parts.len() {
+            return Err(Error::SizeMismatch {
+                expected: self.parts.len(),
+                got: output.num_segments(),
+            });
+        }
+        for (i, part) in self.parts.iter().enumerate() {
+            if input.segment_bytes(i) != part.in_bytes {
+                return Err(Error::SizeMismatch {
+                    expected: part.in_bytes,
+                    got: input.segment_bytes(i),
+                });
+            }
+            if output.segment_bytes(i) != part.out_bytes {
+                return Err(Error::SizeMismatch {
+                    expected: part.out_bytes,
+                    got: output.segment_bytes(i),
+                });
+            }
+            if input.segment_kind(i) != part.kind || output.segment_kind(i) != part.kind {
+                return Err(Error::Precondition(format!(
+                    "constituent {i} expects {} segments (got input {}, output {})",
+                    part.kind,
+                    input.segment_kind(i),
+                    output.segment_kind(i)
+                )));
+            }
+        }
+        let FusedPlanMixed { core, sched, scratch, scratch_kinds, wire, .. } = self;
+        execute_schedule_view(
+            core,
+            sched,
+            input,
+            output,
+            scratch,
+            wire,
+            &ViewReduce::PerScratch(scratch_kinds),
+        )
+    }
+}
+
+impl CollectivePlan for FusedPlanMixed {
+    fn algorithm(&self) -> &'static str {
+        "fused-mixed"
     }
 
     fn shape(&self) -> Shape {

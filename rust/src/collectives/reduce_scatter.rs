@@ -41,6 +41,16 @@
 //! summation with zero allocation and no tag consumption. Shape
 //! preconditions (power-of-two size, uniform regions) surface at `plan()`
 //! time; `n == 0` plans are uniform no-ops.
+//!
+//! **Serving shapes.** The Layer-3 serving loop
+//! ([`crate::coordinator::server`]) fuses reduce-scatter constituents of
+//! `n = RS_SHARD_ELEMS` into each chunk's collective (`--rs-shards` on
+//! `locag e2e`): the `n·p → n` shard shape rides the same coalesced wire
+//! messages as the activation allgathers, executed through zero-copy
+//! segmented views. `loc-aware` is picked when it plans on the serving
+//! topology (uniform regions), with a deterministic fallback to `ring`
+//! otherwise — the same probe-and-downgrade contract the consensus
+//! allreduce uses.
 
 use super::grouping::GroupBy;
 use super::plan::{

@@ -40,14 +40,14 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use crate::comm::{copy_into, write_bytes, Comm, Pod};
+use crate::comm::{as_bytes, as_bytes_mut, copy_into, write_bytes, Comm, Pod};
 use crate::error::{Error, Result};
 use crate::topology::Topology;
 
 use super::grouping::{split_members, GroupBy};
 use super::plan::{
-    check_a2a_io, check_io, check_reduce_io, check_rs_io, CollectivePlan, OpKind, PlanCore, Shape,
-    Summable,
+    check_a2a_io, check_io, check_reduce_io, check_rs_io, CollectivePlan, ElemKind, OpKind,
+    PlanCore, Shape, Summable, ViewElem,
 };
 
 /// Identifies one of the buffers a schedule operates on.
@@ -211,6 +211,72 @@ impl Schedule {
             OpKind::Allreduce => (self.n, self.n),
             OpKind::Alltoall => (self.n * self.p, self.n * self.p),
             OpKind::ReduceScatter => (self.n * self.p, self.n),
+        }
+    }
+
+    /// Rescale this schedule to byte granularity (`elem_bytes == 1`):
+    /// every slice offset/length, scratch length, rotate block size and
+    /// io length is multiplied by the old `elem_bytes`. Wire sizes
+    /// (`len·elem_bytes + pad`), padding, message count and tags are all
+    /// unchanged — the rescaled schedule moves exactly the same bytes and
+    /// costs exactly the same under the postal model. This is what lets
+    /// constituents of *different* element types fuse into one
+    /// byte-granular composite schedule (see
+    /// [`super::fuse::fuse_world_mixed`]).
+    pub fn scale_to_bytes(&self) -> Schedule {
+        let eb = self.elem_bytes;
+        if eb == 1 {
+            return self.clone();
+        }
+        let sc = |s: &Slice| Slice { buf: s.buf, off: s.off * eb, len: s.len * eb };
+        let rounds = self
+            .rounds
+            .iter()
+            .map(|r| Round {
+                label: r.label.clone(),
+                steps: r
+                    .steps
+                    .iter()
+                    .map(|st| match st {
+                        Step::Send { to, src, tag, pad } => {
+                            Step::Send { to: *to, src: sc(src), tag: *tag, pad: *pad }
+                        }
+                        Step::Recv { from, dst, tag, pad } => {
+                            Step::Recv { from: *from, dst: sc(dst), tag: *tag, pad: *pad }
+                        }
+                        Step::SendRecv { to, src, from, dst, tag, pad } => Step::SendRecv {
+                            to: *to,
+                            src: sc(src),
+                            from: *from,
+                            dst: sc(dst),
+                            tag: *tag,
+                            pad: *pad,
+                        },
+                        Step::CopyLocal { src, dst } => {
+                            Step::CopyLocal { src: sc(src), dst: sc(dst) }
+                        }
+                        Step::Reduce { src, dst } => Step::Reduce { src: sc(src), dst: sc(dst) },
+                        Step::Rotate { src, dst, block, shift } => Step::Rotate {
+                            src: sc(src),
+                            dst: sc(dst),
+                            block: block * eb,
+                            shift: *shift,
+                        },
+                    })
+                    .collect(),
+            })
+            .collect();
+        let (il, ol) = self.io_lens();
+        Schedule {
+            op: self.op,
+            p: self.p,
+            n: self.n * eb,
+            elem_bytes: 1,
+            label: self.label.clone(),
+            rounds,
+            scratch: self.scratch.iter().map(|&l| l * eb).collect(),
+            tags: self.tags,
+            io: Some((il * eb, ol * eb)),
         }
     }
 
@@ -839,6 +905,423 @@ pub(crate) fn execute_schedule<T: Pod>(
 }
 
 // ---------------------------------------------------------------------------
+// segmented buffer views + the zero-copy view executor
+// ---------------------------------------------------------------------------
+
+/// A read-only **segmented buffer view**: an ordered list of caller-owned
+/// byte segments presented to the interpreter as one composite address
+/// space, so a fused K-constituent execute reads each request's buffer in
+/// place — no staging memcpys.
+///
+/// ## Segments ↔ the IR's element-exact slices
+///
+/// A [`Slice`] addresses `off..off+len` *elements* of a logical buffer;
+/// the view executor multiplies by [`Schedule::elem_bytes`] and resolves
+/// the resulting byte range against the view's segments (segment `i`
+/// covers bytes `start_i..start_i+len_i` of the composite space, where
+/// `start_i` is the sum of the preceding segment lengths). **A slice
+/// never spans a segment boundary**: fusion windows each constituent's
+/// input/output into a disjoint `[in_off, in_off+in_len)` range and remaps
+/// every constituent slice inside its own window (the part maps of
+/// [`super::fuse::fuse`]), so as long as view segment `i` is exactly
+/// constituent `i`'s buffer, every remapped slice falls inside exactly one
+/// segment. Resolution therefore returns a plain contiguous `&[u8]`; a
+/// range that does cross a boundary is a caller error (wrong segment
+/// list) and is reported, not silently split.
+///
+/// Each segment carries an [`ElemKind`] so reductions recover element
+/// types per segment — that is what lets one fused plan mix `f32` and
+/// `u64` constituents ([`super::plan::FusedPlanMixed`]).
+#[derive(Default)]
+pub struct IoView<'a> {
+    segs: Vec<(&'a [u8], ElemKind)>,
+    /// Cumulative byte start of each segment.
+    starts: Vec<usize>,
+    total: usize,
+}
+
+impl<'a> IoView<'a> {
+    /// An empty view (push segments in constituent order).
+    pub fn new() -> IoView<'a> {
+        IoView::default()
+    }
+
+    /// Single-segment view over one typed buffer.
+    pub fn of<T: ViewElem>(seg: &'a [T]) -> IoView<'a> {
+        let mut v = IoView::new();
+        v.push::<T>(seg);
+        v
+    }
+
+    /// Append a typed segment (its [`ElemKind`] comes from `T`).
+    pub fn push<T: ViewElem>(&mut self, seg: &'a [T]) {
+        self.push_bytes(as_bytes(seg), T::KIND);
+    }
+
+    /// Append an untyped segment with an explicit element kind.
+    pub fn push_bytes(&mut self, seg: &'a [u8], kind: ElemKind) {
+        self.starts.push(self.total);
+        self.total += seg.len();
+        self.segs.push((seg, kind));
+    }
+
+    /// Total composite length in bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.total
+    }
+
+    /// Number of segments.
+    pub fn num_segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Byte length of segment `i`.
+    pub fn segment_bytes(&self, i: usize) -> usize {
+        self.segs[i].0.len()
+    }
+
+    /// Element kind of segment `i`.
+    pub fn segment_kind(&self, i: usize) -> ElemKind {
+        self.segs[i].1
+    }
+
+    /// Resolve composite byte range `off..off+len` to the one segment
+    /// containing it.
+    fn resolve(&self, off: usize, len: usize) -> Result<&[u8]> {
+        let i = locate_segment(&self.starts, |i| self.segs[i].0.len(), self.total, off, len)?;
+        if len == 0 {
+            return Ok(&[]);
+        }
+        let local = off - self.starts[i];
+        Ok(&self.segs[i].0[local..local + len])
+    }
+}
+
+/// The writable counterpart of [`IoView`]: composite output address space
+/// over caller-owned mutable segments. See [`IoView`] for the segment ↔
+/// slice mapping and the non-spanning invariant.
+#[derive(Default)]
+pub struct IoViewMut<'a> {
+    segs: Vec<(&'a mut [u8], ElemKind)>,
+    starts: Vec<usize>,
+    total: usize,
+}
+
+impl<'a> IoViewMut<'a> {
+    /// An empty view (push segments in constituent order).
+    pub fn new() -> IoViewMut<'a> {
+        IoViewMut::default()
+    }
+
+    /// Single-segment view over one typed buffer.
+    pub fn of<T: ViewElem>(seg: &'a mut [T]) -> IoViewMut<'a> {
+        let mut v = IoViewMut::new();
+        v.push::<T>(seg);
+        v
+    }
+
+    /// Append a typed segment (its [`ElemKind`] comes from `T`).
+    pub fn push<T: ViewElem>(&mut self, seg: &'a mut [T]) {
+        self.push_bytes(as_bytes_mut(seg), T::KIND);
+    }
+
+    /// Append an untyped segment with an explicit element kind.
+    pub fn push_bytes(&mut self, seg: &'a mut [u8], kind: ElemKind) {
+        self.starts.push(self.total);
+        self.total += seg.len();
+        self.segs.push((seg, kind));
+    }
+
+    /// Total composite length in bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.total
+    }
+
+    /// Number of segments.
+    pub fn num_segments(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// Byte length of segment `i`.
+    pub fn segment_bytes(&self, i: usize) -> usize {
+        self.segs[i].0.len()
+    }
+
+    /// Element kind of segment `i`.
+    pub fn segment_kind(&self, i: usize) -> ElemKind {
+        self.segs[i].1
+    }
+
+    /// Read-only resolution (the output buffer as a `CopyLocal`/`Send`
+    /// source).
+    fn resolve(&self, off: usize, len: usize) -> Result<&[u8]> {
+        let i = locate_segment(&self.starts, |i| self.segs[i].0.len(), self.total, off, len)?;
+        if len == 0 {
+            return Ok(&[]);
+        }
+        let local = off - self.starts[i];
+        Ok(&self.segs[i].0[local..local + len])
+    }
+
+    /// Writable resolution of composite byte range `off..off+len`.
+    fn resolve_mut(&mut self, off: usize, len: usize) -> Result<&mut [u8]> {
+        let i = locate_segment(&self.starts, |i| self.segs[i].0.len(), self.total, off, len)?;
+        if len == 0 {
+            return Ok(&mut []);
+        }
+        let local = off - self.starts[i];
+        Ok(&mut self.segs[i].0[local..local + len])
+    }
+
+    /// The element kind governing composite byte offset `off` (reductions
+    /// into the output recover their type from the target segment).
+    fn kind_at(&self, off: usize) -> Result<ElemKind> {
+        let i = locate_segment(&self.starts, |i| self.segs[i].0.len(), self.total, off, 1)?;
+        Ok(self.segs[i].1)
+    }
+}
+
+/// Find the segment fully containing composite byte range `off..off+len`.
+/// Errors if the range is out of bounds or crosses a segment boundary
+/// (the non-spanning invariant — see [`IoView`]).
+fn locate_segment(
+    starts: &[usize],
+    seg_len: impl Fn(usize) -> usize,
+    total: usize,
+    off: usize,
+    len: usize,
+) -> Result<usize> {
+    if len == 0 {
+        return if off <= total {
+            Ok(0)
+        } else {
+            Err(Error::Precondition(format!(
+                "view byte offset {off} out of bounds (total {total})"
+            )))
+        };
+    }
+    // Segment counts are tiny (K constituents); a linear scan beats a
+    // binary search at these sizes and keeps the hot path branch-simple.
+    for i in (0..starts.len()).rev() {
+        if off >= starts[i] {
+            return if off + len <= starts[i] + seg_len(i) {
+                Ok(i)
+            } else {
+                Err(Error::Precondition(format!(
+                    "view byte range {off}..{} crosses a segment boundary (segment {i} is \
+                     {}..{}); each IR slice must fall inside one segment",
+                    off + len,
+                    starts[i],
+                    starts[i] + seg_len(i)
+                )))
+            };
+        }
+    }
+    Err(Error::Precondition(format!("view byte range {off}..{} in empty view", off + len)))
+}
+
+/// How the view executor resolves the element type of a `Reduce` target.
+pub(crate) enum ViewReduce<'a> {
+    /// The operation does not reduce; any `Reduce` step is an error.
+    NotReducing,
+    /// Every buffer holds one element type (single-type plans).
+    Uniform(ElemKind),
+    /// Mixed-type fused plans: output targets take the kind of the view
+    /// segment they land in; scratch target `i` takes `kinds[i]` (the
+    /// fused schedule's per-rank scratch-kind table).
+    PerScratch(&'a [ElemKind]),
+}
+
+/// Resolve a local two-buffer step into byte `(read, write)` slices and
+/// apply `f` — the view twin of [`with_pair`]. Offsets/lengths are in
+/// schedule elements; `eb` converts to bytes.
+fn view_pair(
+    input: &IoView<'_>,
+    output: &mut IoViewMut<'_>,
+    scratch: &mut [Vec<u8>],
+    eb: usize,
+    src: &Slice,
+    dst: &Slice,
+    f: impl FnOnce(&[u8], &mut [u8]),
+) -> Result<()> {
+    let (so, sl) = (src.off * eb, src.len * eb);
+    let (do_, dl) = (dst.off * eb, dst.len * eb);
+    match (src.buf, dst.buf) {
+        (BufId::Input, BufId::Output) => f(input.resolve(so, sl)?, output.resolve_mut(do_, dl)?),
+        (BufId::Input, BufId::Scratch(j)) => {
+            f(input.resolve(so, sl)?, &mut scratch[j][do_..do_ + dl])
+        }
+        (BufId::Output, BufId::Scratch(j)) => {
+            f(output.resolve(so, sl)?, &mut scratch[j][do_..do_ + dl])
+        }
+        (BufId::Scratch(i), BufId::Output) => {
+            f(&scratch[i][so..so + sl], output.resolve_mut(do_, dl)?)
+        }
+        (BufId::Scratch(i), BufId::Scratch(j)) if i < j => {
+            let (lo, hi) = scratch.split_at_mut(j);
+            f(&lo[i][so..so + sl], &mut hi[0][do_..do_ + dl]);
+        }
+        (BufId::Scratch(i), BufId::Scratch(j)) if i > j => {
+            let (lo, hi) = scratch.split_at_mut(i);
+            f(&hi[0][so..so + sl], &mut lo[j][do_..do_ + dl]);
+        }
+        _ => {
+            return Err(Error::Precondition(
+                "local schedule step must use distinct buffers with a writable destination".into(),
+            ))
+        }
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn send_slice_view(
+    core: &PlanCore,
+    input: &IoView<'_>,
+    output: &IoViewMut<'_>,
+    scratch: &[Vec<u8>],
+    wire: &mut [u8],
+    eb: usize,
+    to: usize,
+    src: &Slice,
+    tag: u64,
+    pad: usize,
+) -> Result<()> {
+    let (off, len) = (src.off * eb, src.len * eb);
+    let buf: &[u8] = match src.buf {
+        BufId::Input => input.resolve(off, len)?,
+        BufId::Output => output.resolve(off, len)?,
+        BufId::Scratch(i) => &scratch[i][off..off + len],
+    };
+    let t = core.tag(tag);
+    if pad == 0 {
+        // A byte send of `len·elem_bytes` bytes is wire-identical to the
+        // typed executor's send of `len` elements: same payload, same tag,
+        // same size — so typed receivers match it and vtime is unchanged.
+        let _req = core.comm.isend(buf, to, t)?;
+    } else {
+        let total = pad + len;
+        let w = &mut wire[..total];
+        w[..pad].fill(0);
+        w[pad..].copy_from_slice(buf);
+        let _req = core.comm.isend(&w[..total], to, t)?;
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recv_slice_view(
+    core: &PlanCore,
+    output: &mut IoViewMut<'_>,
+    scratch: &mut [Vec<u8>],
+    wire: &mut [u8],
+    eb: usize,
+    from: usize,
+    dst: &Slice,
+    tag: u64,
+    pad: usize,
+) -> Result<()> {
+    let t = core.tag(tag);
+    let (off, len) = (dst.off * eb, dst.len * eb);
+    let buf: &mut [u8] = match dst.buf {
+        BufId::Output => output.resolve_mut(off, len)?,
+        BufId::Scratch(i) => &mut scratch[i][off..off + len],
+        BufId::Input => {
+            return Err(Error::Precondition("schedule receives into the input buffer".into()))
+        }
+    };
+    if pad == 0 {
+        core.comm.recv_into(from, t, buf)
+    } else {
+        let total = pad + len;
+        core.comm.recv_into(from, t, &mut wire[..total])?;
+        buf.copy_from_slice(&wire[pad..total]);
+        Ok(())
+    }
+}
+
+/// The byte-level twin of [`execute_schedule`]: interpret `sched` in
+/// place over segmented buffer views. Slice offsets/lengths (elements)
+/// are converted to bytes with `sched.elem_bytes` and resolved against
+/// the views; sends/receives move exactly the bytes the typed executor
+/// would, so the two executors are wire-identical (same messages, sizes,
+/// tags — and therefore identical virtual time) and bit-identical in
+/// their results. Reductions recover element types through `reduce`.
+pub(crate) fn execute_schedule_view(
+    core: &PlanCore,
+    sched: &Schedule,
+    input: &IoView<'_>,
+    output: &mut IoViewMut<'_>,
+    scratch: &mut [Vec<u8>],
+    wire: &mut [u8],
+    reduce: &ViewReduce<'_>,
+) -> Result<()> {
+    let eb = sched.elem_bytes;
+    let (in_len, out_len) = sched.io_lens();
+    if input.total_bytes() != in_len * eb {
+        return Err(Error::SizeMismatch { expected: in_len * eb, got: input.total_bytes() });
+    }
+    if output.total_bytes() != out_len * eb {
+        return Err(Error::SizeMismatch { expected: out_len * eb, got: output.total_bytes() });
+    }
+    debug_assert_eq!(scratch.len(), sched.scratch.len());
+    for round in &sched.rounds {
+        for step in &round.steps {
+            match step {
+                Step::Send { to, src, tag, pad } => {
+                    send_slice_view(core, input, output, scratch, wire, eb, *to, src, *tag, *pad)?;
+                }
+                Step::Recv { from, dst, tag, pad } => {
+                    recv_slice_view(core, output, scratch, wire, eb, *from, dst, *tag, *pad)?;
+                }
+                Step::SendRecv { to, src, from, dst, tag, pad } => {
+                    send_slice_view(core, input, output, scratch, wire, eb, *to, src, *tag, *pad)?;
+                    recv_slice_view(core, output, scratch, wire, eb, *from, dst, *tag, *pad)?;
+                }
+                Step::CopyLocal { src, dst } => {
+                    view_pair(input, output, scratch, eb, src, dst, |s, d| d.copy_from_slice(s))?;
+                }
+                Step::Reduce { src, dst } => {
+                    let kind = match reduce {
+                        ViewReduce::NotReducing => {
+                            return Err(Error::Precondition(
+                                "schedule contains Reduce but the operation is not a reduction"
+                                    .into(),
+                            ))
+                        }
+                        ViewReduce::Uniform(k) => *k,
+                        ViewReduce::PerScratch(kinds) => match dst.buf {
+                            BufId::Scratch(i) => *kinds.get(i).ok_or_else(|| {
+                                Error::Precondition(format!(
+                                    "no element kind for reduce target scratch {i}"
+                                ))
+                            })?,
+                            BufId::Output => output.kind_at(dst.off * eb)?,
+                            BufId::Input => {
+                                return Err(Error::Precondition(
+                                    "schedule reduces into the input buffer".into(),
+                                ))
+                            }
+                        },
+                    };
+                    let mut res = Ok(());
+                    view_pair(input, output, scratch, eb, src, dst, |s, d| {
+                        res = kind.reduce_assign(d, s)
+                    })?;
+                    res?;
+                }
+                Step::Rotate { src, dst, block, shift } => {
+                    view_pair(input, output, scratch, eb, src, dst, |s, d| {
+                        super::bruck::rotate_down_into(s, block * eb, *shift, d)
+                    })?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // the generic plan
 // ---------------------------------------------------------------------------
 
@@ -851,6 +1334,11 @@ pub struct SchedPlan<T: Pod> {
     name: &'static str,
     sched: Schedule,
     scratch: Vec<Vec<T>>,
+    /// Byte-granular scratch mirror for zero-copy view execution;
+    /// allocated lazily on the first `execute_view` (every schedule
+    /// writes scratch before reading it, so the typed and byte executors
+    /// share no state and still agree bit-for-bit).
+    view_scratch: Vec<Vec<u8>>,
     /// Reusable buffer for padded (header-carrying) wire messages.
     wire: Vec<u8>,
 }
@@ -866,7 +1354,7 @@ impl<T: Pod> SchedPlan<T> {
         let core = PlanCore::new(comm, sched.n, sched.tags);
         let scratch = sched.scratch.iter().map(|&len| vec![T::default(); len]).collect();
         let wire = vec![0u8; sched.max_padded_wire()];
-        Ok(SchedPlan { core, name, sched, scratch, wire })
+        Ok(SchedPlan { core, name, sched, scratch, view_scratch: Vec::new(), wire })
     }
 
     /// Boxing helper for factory `plan()` implementations.
@@ -886,6 +1374,20 @@ impl<T: Pod> SchedPlan<T> {
     ) -> Result<()> {
         let SchedPlan { core, sched, scratch, wire, .. } = self;
         execute_schedule(core, sched, input, output, scratch, wire, reduce)
+    }
+
+    fn run_view(
+        &mut self,
+        input: &IoView<'_>,
+        output: &mut IoViewMut<'_>,
+        reduce: &ViewReduce<'_>,
+    ) -> Result<()> {
+        if self.view_scratch.len() != self.sched.scratch.len() {
+            let eb = self.sched.elem_bytes;
+            self.view_scratch = self.sched.scratch.iter().map(|&l| vec![0u8; l * eb]).collect();
+        }
+        let SchedPlan { core, sched, view_scratch, wire, .. } = self;
+        execute_schedule_view(core, sched, input, output, view_scratch, wire, reduce)
     }
 }
 
@@ -912,12 +1414,20 @@ impl<T: Pod> super::plan::AllgatherPlan<T> for SchedPlan<T> {
         check_io(self.core.n, self.core.p, input, output)?;
         self.run(input, output, None)
     }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        self.run_view(input, output, &ViewReduce::NotReducing)
+    }
 }
 
 impl<T: Summable> super::plan::AllreducePlan<T> for SchedPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_reduce_io(self.core.n, input, output)?;
         self.run(input, output, Some(add_assign::<T>))
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        self.run_view(input, output, &ViewReduce::Uniform(T::KIND))
     }
 }
 
@@ -926,12 +1436,20 @@ impl<T: Pod> super::plan::AlltoallPlan<T> for SchedPlan<T> {
         check_a2a_io(self.core.n, self.core.p, input, output)?;
         self.run(input, output, None)
     }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        self.run_view(input, output, &ViewReduce::NotReducing)
+    }
 }
 
 impl<T: Summable> super::plan::ReduceScatterPlan<T> for SchedPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_rs_io(self.core.n, self.core.p, input, output)?;
         self.run(input, output, Some(add_assign::<T>))
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        self.run_view(input, output, &ViewReduce::Uniform(T::KIND))
     }
 }
 

@@ -73,6 +73,26 @@ pub fn write_bytes<T: Pod>(xs: &[T], dst: &mut [u8]) -> bool {
     true
 }
 
+/// Reinterpret a `Pod` slice as its underlying bytes — the zero-copy
+/// sibling of [`to_bytes`]/[`write_bytes`]. No copy happens: the returned
+/// slice aliases `xs`, which is what lets segmented buffer views
+/// ([`crate::collectives::schedule::IoView`]) hand caller-owned typed
+/// buffers straight to the byte-level schedule interpreter.
+pub fn as_bytes<T: Pod>(xs: &[T]) -> &[u8] {
+    // SAFETY: `T: Pod` has no padding and no uninitialized bytes; `u8` has
+    // alignment 1, so any `T` pointer is a valid `u8` pointer.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+}
+
+/// Mutable byte reinterpretation of a `Pod` slice (zero-copy sibling of
+/// [`copy_into`]). Writing any bit pattern through the result is sound
+/// because every bit pattern is a valid `T` (the `Pod` contract).
+pub fn as_bytes_mut<T: Pod>(xs: &mut [T]) -> &mut [u8] {
+    let n = std::mem::size_of_val(xs);
+    // SAFETY: as for `as_bytes`; exclusivity is inherited from `&mut xs`.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, n) }
+}
+
 /// Copy bytes into an existing element slice (zero-allocation receive path).
 ///
 /// Returns `false` (and copies nothing) on length mismatch.
@@ -131,6 +151,18 @@ mod tests {
         assert_eq!(from_bytes::<u32>(&buf).unwrap(), xs);
         let mut wrong = vec![0u8; 11];
         assert!(!write_bytes(&xs, &mut wrong));
+    }
+
+    #[test]
+    fn byte_views_alias_without_copy() {
+        let xs: Vec<u32> = vec![7, 8, 9];
+        assert_eq!(as_bytes(&xs), to_bytes(&xs).as_slice());
+        let mut ys = [0u32; 2];
+        as_bytes_mut(&mut ys).copy_from_slice(&to_bytes(&[5u32, 6]));
+        assert_eq!(ys, [5, 6]);
+        // empty slices are fine
+        let empty: &[u64] = &[];
+        assert!(as_bytes(empty).is_empty());
     }
 
     #[test]

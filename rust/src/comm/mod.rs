@@ -27,7 +27,7 @@
 pub mod datatype;
 pub mod mailbox;
 
-pub use datatype::{copy_into, from_bytes, to_bytes, write_bytes, Pod};
+pub use datatype::{as_bytes, as_bytes_mut, copy_into, from_bytes, to_bytes, write_bytes, Pod};
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};

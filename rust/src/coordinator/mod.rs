@@ -26,4 +26,4 @@ pub mod server;
 
 pub use metrics::ServeMetrics;
 pub use params::ModelParams;
-pub use server::{serve, ServeConfig, ServeReport};
+pub use server::{serve, serve_rps, RpsConfig, RpsReport, ServeConfig, ServeReport, RS_SHARD_ELEMS};

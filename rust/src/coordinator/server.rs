@@ -1,25 +1,50 @@
 //! The serving loop: batched tensor-parallel inference over the mini-MPI
-//! with PJRT compute and a **fused** collective hot path.
+//! with PJRT compute and a **fused, zero-copy** collective hot path.
 //!
 //! Every chunk of `fuse_batch` requests executes ONE fused schedule
-//! ([`crate::collectives::FusedPlan`]): the chunk's allgathers are
-//! round-merged and message-coalesced with each other and with the
-//! consensus allreduce, so the coordinator pays one wire message where
-//! sequential execution pays one per collective. The consensus probes are
-//! pipelined one chunk behind (a probe depends on the projected output,
-//! which depends on the same request's allgather), with a drain allreduce
-//! after the final chunk so every request is still verified.
+//! ([`crate::collectives::FusedPlan`]): the chunk's allgathers (plus any
+//! synthetic reduce-scatter shards and the consensus allreduce) are
+//! round-merged and message-coalesced, so the coordinator pays one wire
+//! message where sequential execution pays one per collective. The hot
+//! path is zero-copy: the worker's buffers become segments of a composite
+//! [`IoView`]/[`IoViewMut`] and the schedule executes in place over them,
+//! with no staging copies per chunk (`ServeConfig::staged` keeps the
+//! copying path as a baseline and conformance oracle).
+//!
+//! With `ServeConfig::pipeline` chunks are software-pipelined: chunk `c`'s
+//! fused collective is begun, chunk `c-1`'s final projections run while it
+//! is in flight, and only then are chunk `c`'s results collected. On the
+//! proc backend the pool processes genuinely overlap the collective with
+//! the parent's compute ([`PoolGate::begin_exchange`] /
+//! [`PoolGate::finish_exchange`]); on the sim backend the execute is
+//! synchronous, so the pipeline is structural only and the win comes from
+//! the zero-copy views. Consensus probes then ride TWO chunks behind
+//! (chunk `c`'s probes are produced while chunk `c+1` is already on the
+//! wire, so the earliest collective that can carry them is chunk `c+2`'s);
+//! the drain after the loop sums whatever is still pending, so every
+//! request is verified either way.
+//!
+//! [`serve_rps`] is the artifact-free twin of [`serve`]: the same chunk
+//! structure and fused hot path under a synthetic heavy load, measuring
+//! end-to-end requests/sec of the staged serial baseline against the
+//! zero-copy pipelined path on the same shape and backend.
+//!
+//! [`IoView`]: crate::collectives::IoView
+//! [`IoViewMut`]: crate::collectives::IoViewMut
+//! [`PoolGate::begin_exchange`]: crate::transport::PoolGate::begin_exchange
+//! [`PoolGate::finish_exchange`]: crate::transport::PoolGate::finish_exchange
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::collectives::{self, Algorithm, FuseSpec, OpKind, Shape};
-use crate::comm::{Comm, CommWorld, Timing};
+use crate::comm::{as_bytes, copy_into, Comm, CommWorld, Timing};
 use crate::coordinator::metrics::{RequestTiming, ServeMetrics};
 use crate::coordinator::params::{max_abs_diff, ModelParams};
 use crate::error::{Error, Result};
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{Engine, Executable, Manifest};
 use crate::topology::Topology;
 use crate::trace::TraceSummary;
 use crate::transport::{Backend, DType, PoolGate, ProcConfig, ProcJob, ProcPool};
@@ -44,17 +69,34 @@ pub struct ServeConfig {
     /// `h_full` assembly pass (perf pass, L2/L1 fusion).
     pub fused: bool,
     /// Cross-worker output consensus: a planned allreduce (two f32 probes
-    /// per request, riding the fused schedule one chunk behind) sums an
-    /// output fingerprint across workers; any worker whose projection
-    /// diverged breaks the `p·x` identity and fails verification. Skipped
-    /// when the topology admits no allreduce plan (unsupported shape /
-    /// topology preconditions); genuine plan failures propagate.
+    /// per request, riding the fused schedule behind the requests that
+    /// produced them) sums an output fingerprint across workers; any
+    /// worker whose projection diverged breaks the `p·x` identity and
+    /// fails verification. Skipped when the topology admits no allreduce
+    /// plan (unsupported shape / topology preconditions); genuine plan
+    /// failures propagate.
     pub consensus: bool,
     /// Request micro-batch size `K`: the serving loop processes requests
     /// in chunks of `K`, executing the chunk's `K` allgathers (plus the
     /// consensus allreduce) as one fused, coalesced schedule. `1` fuses
     /// only the allgather with the consensus allreduce.
     pub fuse_batch: usize,
+    /// Execute the fused schedule through the staging-copy path (compose
+    /// the chunk's buffers into one contiguous input, execute, split the
+    /// output back out) instead of the zero-copy segmented views. The
+    /// baseline and conformance oracle for the view path; no effect on
+    /// the proc backend, whose gate exchange is composite bytes either
+    /// way.
+    pub staged: bool,
+    /// Software-pipeline the chunks: overlap chunk `c-1`'s final
+    /// projections with chunk `c`'s in-flight fused collective (true
+    /// compute/communication overlap on the proc backend). `false` runs
+    /// the phases of each chunk back to back.
+    pub pipeline: bool,
+    /// Synthetic reduce-scatter shards riding each chunk's fused schedule
+    /// ([`RS_SHARD_ELEMS`] elements each, exact-sum verified). Exercises
+    /// reduce ops inside the fused serving schedule; `0` disables.
+    pub rs_shards: usize,
     /// Backend the fused collective hot path executes on. [`Backend::Sim`]
     /// runs the fused schedule over in-process thread mailboxes;
     /// [`Backend::Proc`] spawns a persistent [`ProcPool`] (one OS process
@@ -79,6 +121,9 @@ impl Default for ServeConfig {
             fused: false,
             consensus: true,
             fuse_batch: 1,
+            staged: false,
+            pipeline: true,
+            rs_shards: 0,
             collective_backend: Backend::Sim,
         }
     }
@@ -115,13 +160,6 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         )));
     }
     let topo = Topology::regions(cfg.regions, tp / cfg.regions);
-    let total_reqs = cfg.warmup + cfg.requests;
-    let algo = cfg.algo;
-    let check = cfg.check;
-    let dir = cfg.artifact_dir.clone();
-
-    let fused = cfg.fused;
-    let consensus = cfg.consensus;
     let fuse_batch = cfg.fuse_batch.max(1);
 
     // With the proc collective backend the pool and its fused schedule are
@@ -133,8 +171,15 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
     let (gate, gate_consensus) = if cfg.collective_backend == Backend::Proc {
         let machine = crate::model::MachineParams::lassen();
         let n_gather = dims.batch * dims.hidden_shard();
-        let (specs, wc) =
-            serving_pool_specs(&topo, cfg.algo, n_gather, fuse_batch, cfg.consensus, &machine)?;
+        let (specs, wc) = serving_pool_specs(
+            &topo,
+            cfg.algo,
+            n_gather,
+            fuse_batch,
+            cfg.rs_shards,
+            cfg.consensus,
+            &machine,
+        )?;
         let mut pool =
             ProcPool::spawn(cfg.regions, tp / cfg.regions, machine.name, &ProcConfig::default())?;
         let sid = pool.load(&ProcJob::Fused { specs, dtype: DType::F32 })?;
@@ -143,21 +188,10 @@ pub fn serve(cfg: &ServeConfig) -> Result<ServeReport> {
         (None, false)
     };
 
+    let cfgw = cfg.clone();
     let start = Instant::now();
     let run = CommWorld::run(&topo, Timing::Wallclock, move |c| -> Result<WorkerOut> {
-        worker_loop(
-            c,
-            &dir,
-            algo,
-            total_reqs,
-            cfg.warmup,
-            check,
-            fused,
-            consensus,
-            fuse_batch,
-            gate.as_deref(),
-            gate_consensus,
-        )
+        worker_loop(c, &cfgw, gate.as_deref(), gate_consensus)
     });
     let window = start.elapsed().as_secs_f64();
 
@@ -206,10 +240,53 @@ fn check_probes(sum: &[f32], mine: &[f32], pf: f32, ok: &mut bool) {
     }
 }
 
+/// Element count of each synthetic reduce-scatter shard riding the fused
+/// serving schedule ([`ServeConfig::rs_shards`] of them per chunk). Small
+/// on purpose: the shards put reduce ops on the fused serving hot path,
+/// they are not a bandwidth payload.
+pub const RS_SHARD_ELEMS: usize = 16;
+
+/// Deterministic reduce-scatter input for one `(rank, chunk, shard)`:
+/// `RS_SHARD_ELEMS·p` small integers, exact in f32, so the scattered sums
+/// verify exactly.
+fn rs_input(rank: usize, chunk: usize, shard: usize, p: usize) -> Vec<f32> {
+    (0..RS_SHARD_ELEMS * p)
+        .map(|i| ((rank * 31 + chunk * 7 + shard * 13 + i) % 64) as f32)
+        .collect()
+}
+
+/// The shard [`rs_input`] scatters to `rank`: element `i` is the exact
+/// sum over all ranks of their input at offset `rank·RS_SHARD_ELEMS + i`.
+fn rs_expected(rank: usize, chunk: usize, shard: usize, p: usize) -> Vec<f32> {
+    (0..RS_SHARD_ELEMS)
+        .map(|i| {
+            let off = rank * RS_SHARD_ELEMS + i;
+            (0..p).map(|r| ((r * 31 + chunk * 7 + shard * 13 + off) % 64) as f32).sum()
+        })
+        .collect()
+}
+
+/// Reduce-scatter algorithm for the synthetic serving shards: the
+/// locality-aware builder when it admits this topology, ring otherwise.
+/// Probing the builder (instead of trying and catching at fuse time)
+/// keeps the decision deterministic and identical between the live
+/// per-worker planner and the comm-free pool-spec path.
+fn serving_rs_algo(view: &collectives::schedule::WorldView) -> &'static str {
+    let esz = std::mem::size_of::<f32>();
+    let probe =
+        collectives::schedule::build_reduce_scatter("loc-aware", view, 0, RS_SHARD_ELEMS, esz);
+    if probe.is_ok() {
+        "loc-aware"
+    } else {
+        "ring"
+    }
+}
+
 /// Plan the chunk's fused schedule: `k` allgathers (one per request of the
-/// chunk) plus, when consensus is requested and the topology admits it,
-/// one `2k`-probe consensus allreduce. Returns the plan and whether the
-/// consensus constituent is on board.
+/// chunk), `rs_shards` synthetic reduce-scatters, plus — when consensus is
+/// requested and the topology admits it — one `2k`-probe consensus
+/// allreduce. Returns the plan and whether the consensus constituent is
+/// on board.
 ///
 /// Only failures of the consensus constituent *itself* (its schedule
 /// builder rejecting the shape / topology) downgrade to a consensus-free
@@ -220,10 +297,16 @@ fn plan_serving_fused(
     algo: Algorithm,
     n_gather: usize,
     k: usize,
+    rs_shards: usize,
     consensus: bool,
 ) -> Result<(collectives::FusedPlan<f32>, bool)> {
+    let view = collectives::schedule::WorldView::from_comm(c);
+    let rs_algo = serving_rs_algo(&view);
     let mut specs: Vec<FuseSpec> =
         (0..k).map(|_| FuseSpec::new(OpKind::Allgather, algo.name(), n_gather)).collect();
+    specs.extend(
+        (0..rs_shards).map(|_| FuseSpec::new(OpKind::ReduceScatter, rs_algo, RS_SHARD_ELEMS)),
+    );
     if consensus {
         specs.push(FuseSpec::new(OpKind::Allreduce, "loc-aware", 2 * k));
         match collectives::plan_fused::<f32>(c, &specs) {
@@ -236,7 +319,6 @@ fn plan_serving_fused(
                 // groups). Every other failure — an allgather problem, a
                 // fusion-consistency failure — propagates. (The old loop
                 // swallowed all of these with `.ok()`.)
-                let view = collectives::schedule::WorldView::from_comm(c);
                 let probe = collectives::schedule::build_allreduce(
                     "loc-aware",
                     &view,
@@ -261,19 +343,25 @@ fn plan_serving_fused(
 /// consensus allreduce is on board.
 ///
 /// [`WorldView`]: collectives::schedule::WorldView
+#[allow(clippy::too_many_arguments)]
 fn serving_pool_specs(
     topo: &Topology,
     algo: Algorithm,
     n_gather: usize,
     k: usize,
+    rs_shards: usize,
     consensus: bool,
     machine: &crate::model::MachineParams,
 ) -> Result<(Vec<FuseSpec>, bool)> {
     use crate::collectives::{fuse, schedule};
     let esz = std::mem::size_of::<f32>();
     let view = schedule::WorldView::world(topo);
+    let rs_algo = serving_rs_algo(&view);
     let mut specs: Vec<FuseSpec> =
         (0..k).map(|_| FuseSpec::new(OpKind::Allgather, algo.name(), n_gather)).collect();
+    specs.extend(
+        (0..rs_shards).map(|_| FuseSpec::new(OpKind::ReduceScatter, rs_algo, RS_SHARD_ELEMS)),
+    );
     if consensus {
         specs.push(FuseSpec::new(OpKind::Allreduce, "loc-aware", 2 * k));
         match fuse::fuse_world(&specs, &view, esz, machine) {
@@ -294,78 +382,319 @@ fn serving_pool_specs(
     Ok((specs, false))
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    c: &mut Comm,
-    artifact_dir: &std::path::Path,
-    algo: Algorithm,
+/// One chunk's fused collective, split into `begin`/`finish` so the
+/// caller can overlap compute with the in-flight exchange. Owns the
+/// persistent composite byte buffers the proc path reuses across chunks
+/// (the per-chunk input delta is built with bulk byte reinterprets — no
+/// per-element encode/decode on the hot path).
+struct ChunkCollective<'a> {
+    k: usize,
+    rs_shards: usize,
+    /// Per-request allgather input elements (`b·hs` when serving a model).
+    shard_elems: usize,
+    p: usize,
+    with_consensus: bool,
+    staged: bool,
+    gate: Option<&'a PoolGate>,
+    fplan: Option<collectives::FusedPlan<f32>>,
+    inbytes: Vec<u8>,
+    outbytes: Vec<u8>,
+}
+
+impl ChunkCollective<'_> {
+    /// Start the chunk's fused collective. Proc backend: serialize the
+    /// composite input (constituent order: `k` allgather shards, the
+    /// reduce-scatter shards, then the consensus probes) and ship it; the
+    /// collective is in flight when this returns. Sim backend: execute
+    /// synchronously — in place over segmented views of the caller's
+    /// buffers, or through the staging-copy path when `staged`.
+    #[allow(clippy::too_many_arguments)]
+    fn begin(
+        &mut self,
+        rank: usize,
+        h_parts: &[Vec<f32>],
+        rs_in: &[Vec<f32>],
+        probes_in: &[f32],
+        gathered: &mut [Vec<f32>],
+        rs_out: &mut [Vec<f32>],
+        probe_sum: &mut [f32],
+    ) -> Result<()> {
+        if let Some(g) = self.gate {
+            self.inbytes.clear();
+            for hp in h_parts {
+                self.inbytes.extend_from_slice(as_bytes(hp));
+            }
+            for ri in rs_in {
+                self.inbytes.extend_from_slice(as_bytes(ri));
+            }
+            if self.with_consensus {
+                self.inbytes.extend_from_slice(as_bytes(probes_in));
+            }
+            return g.begin_exchange(rank, &self.inbytes);
+        }
+        let fplan = self.fplan.as_mut().expect("sim path planned at startup");
+        let mut in_refs: Vec<&[f32]> = Vec::with_capacity(self.k + self.rs_shards + 1);
+        in_refs.extend(h_parts.iter().map(|v| v.as_slice()));
+        in_refs.extend(rs_in.iter().map(|v| v.as_slice()));
+        let mut out_refs: Vec<&mut [f32]> = Vec::with_capacity(self.k + self.rs_shards + 1);
+        out_refs.extend(gathered.iter_mut().map(|v| v.as_mut_slice()));
+        out_refs.extend(rs_out.iter_mut().map(|v| v.as_mut_slice()));
+        if self.with_consensus {
+            in_refs.push(probes_in);
+            out_refs.push(probe_sum);
+        }
+        if self.staged {
+            fplan.execute(&in_refs, &mut out_refs)
+        } else {
+            fplan.execute_view(&in_refs, &mut out_refs)
+        }
+    }
+
+    /// Collect the chunk's results. Proc backend: wait for the pool and
+    /// split the composite output back out with bulk byte reinterprets.
+    /// Sim backend: no-op (`begin` already executed into the buffers).
+    fn finish(
+        &mut self,
+        rank: usize,
+        gathered: &mut [Vec<f32>],
+        rs_out: &mut [Vec<f32>],
+        probe_sum: &mut [f32],
+    ) -> Result<()> {
+        let Some(g) = self.gate else { return Ok(()) };
+        g.finish_exchange(rank, &mut self.outbytes)?;
+        let gather_bytes = self.shard_elems * self.p * 4;
+        let rs_bytes = RS_SHARD_ELEMS * 4;
+        let want = self.k * gather_bytes
+            + self.rs_shards * rs_bytes
+            + if self.with_consensus { 2 * self.k * 4 } else { 0 };
+        if self.outbytes.len() != want {
+            return Err(Error::Coordinator(format!(
+                "fused output is {} bytes, expected {want}",
+                self.outbytes.len()
+            )));
+        }
+        let mut off = 0usize;
+        for gj in gathered.iter_mut() {
+            if !copy_into(&self.outbytes[off..off + gather_bytes], gj.as_mut_slice()) {
+                return Err(Error::Coordinator("gathered block size mismatch".into()));
+            }
+            off += gather_bytes;
+        }
+        for rj in rs_out.iter_mut() {
+            if !copy_into(&self.outbytes[off..off + rs_bytes], rj.as_mut_slice()) {
+                return Err(Error::Coordinator("reduce-scatter shard size mismatch".into()));
+            }
+            off += rs_bytes;
+        }
+        if self.with_consensus && !copy_into(&self.outbytes[off..], probe_sum) {
+            return Err(Error::Coordinator("consensus probe window size mismatch".into()));
+        }
+        Ok(())
+    }
+}
+
+/// A completed chunk whose final projections are deferred until its
+/// successor's collective is in flight.
+struct PendingFinals {
+    chunk: usize,
+    t_partials: Vec<f64>,
+    t_collective: f64,
+}
+
+/// Read-only context of the final-projection phase.
+struct FinalsEnv<'a> {
+    rank: usize,
+    k: usize,
+    b: usize,
+    hs: usize,
+    h: usize,
+    p: usize,
     total_reqs: usize,
     warmup: usize,
     check: bool,
-    fused: bool,
-    consensus: bool,
-    fuse_batch: usize,
+    with_consensus: bool,
+    final_: &'a Executable,
+    fused_final: Option<&'a Executable>,
+    params: &'a ModelParams,
+}
+
+/// Final projections of one completed chunk: consume its gathered bank,
+/// record per-request timings and reference checks, and enqueue its
+/// consensus probes for the next collective that can carry them. A
+/// request's recorded `total` is the sum of its three phases (its share
+/// of the fused collective is `t_collective / k`), which stays meaningful
+/// when the phases of adjacent chunks overlap in wall time.
+fn run_finals(
+    st: PendingFinals,
+    gathered: &[Vec<f32>],
+    env: &FinalsEnv<'_>,
+    pending_probes: &mut VecDeque<Vec<f32>>,
+    out: &mut WorkerOut,
+) -> Result<()> {
+    let mut probes_now = vec![0f32; 2 * env.k];
+    for (j, gj) in gathered.iter().enumerate() {
+        let req = st.chunk * env.k + j;
+        let t0 = Instant::now();
+        let y = if let Some(ff) = env.fused_final {
+            ff.run_f32(&[gj, &env.params.w2])?
+        } else {
+            let (b, hs, h) = (env.b, env.hs, env.h);
+            let mut h_full = vec![0f32; b * h];
+            for i in 0..env.p {
+                let blk = &gj[i * b * hs..(i + 1) * b * hs];
+                for row in 0..b {
+                    let dst = row * h + i * hs;
+                    h_full[dst..dst + hs].copy_from_slice(&blk[row * hs..(row + 1) * hs]);
+                }
+            }
+            env.final_.run_f32(&[&h_full, &env.params.w2])?
+        };
+        let t_final = t0.elapsed().as_secs_f64();
+        probes_now[2 * j] = y[0];
+        probes_now[2 * j + 1] = y[y.len() - 1];
+
+        if env.rank == 0 && req < env.total_reqs {
+            if env.check {
+                let xr = env.params.example_batch(req as f32 + 1.0);
+                let want = env.params.reference_forward(&xr);
+                let err = max_abs_diff(&y, &want);
+                out.max_err = out.max_err.max(err);
+                if err > 1e-3 {
+                    out.verified = false;
+                }
+            }
+            if req + 1 == env.total_reqs {
+                out.sample = y.iter().take(8).copied().collect();
+            }
+            if req >= env.warmup {
+                let share = st.t_collective / env.k as f64;
+                out.timings.push(RequestTiming {
+                    partial: st.t_partials[j],
+                    allgather: share,
+                    final_: t_final,
+                    total: st.t_partials[j] + share + t_final,
+                });
+            }
+        }
+    }
+    if env.with_consensus {
+        pending_probes.push_back(probes_now);
+    }
+    Ok(())
+}
+
+fn worker_loop(
+    c: &mut Comm,
+    cfg: &ServeConfig,
     gate: Option<&PoolGate>,
     gate_consensus: bool,
 ) -> Result<WorkerOut> {
     // Each worker owns a private PJRT engine (the client is !Send).
-    let engine = Engine::load(artifact_dir)?;
+    let engine = Engine::load(&cfg.artifact_dir)?;
     let dims = engine.manifest.model;
     let (b, hs, h) = (dims.batch, dims.hidden_shard(), dims.d_hidden);
     let params = ModelParams::generate(dims, 0.0);
     let w1s = params.w1_shard(c.rank());
     let partial = engine.executable("partial_fwd")?;
     let final_ = engine.executable("final_fwd")?;
-    let fused_final = if fused {
+    let fused_final = if cfg.fused {
         Some(engine.executable("fused_final")?)
     } else {
         None
     };
 
+    let total_reqs = cfg.warmup + cfg.requests;
+    let k = cfg.fuse_batch.max(1);
+    let rs_shards = cfg.rs_shards;
+    let p = c.size();
+    let pf = p as f32;
+
     // The fused plan is built ONCE per worker: every request moves the
     // same (batch, hidden_shard) activation shape, so the serving loop is
     // the persistent-plan use case — all setup (schedule fusion, message
     // coalescing, tags, scratch) amortizes across all requests and the
-    // hot path executes one coalesced schedule per chunk into reused
+    // hot path executes one coalesced schedule per chunk over reused
     // caller-owned buffers. On the proc backend the schedule already
     // lives in the worker pool (loaded once before these threads
     // started), so nothing is planned here at all.
-    let k = fuse_batch.max(1);
-    let (mut fplan, with_consensus) = match gate {
+    let (fplan, with_consensus) = match gate {
         Some(_) => (None, gate_consensus),
         None => {
-            let (plan, wc) = plan_serving_fused(c, algo, b * hs, k, consensus)?;
+            let (plan, wc) = plan_serving_fused(c, cfg.algo, b * hs, k, rs_shards, cfg.consensus)?;
             (Some(plan), wc)
         }
     };
 
-    // The drain allreduce verifies the FINAL chunk's probes after the
-    // loop (the fused consensus runs one chunk behind).
+    // The drain allreduce verifies probes the fused consensus could no
+    // longer carry after the final chunk.
     let mut drain_plan = if with_consensus {
         Some(collectives::plan_allreduce::<f32>("loc-aware", c, Shape::elems(2 * k))?)
     } else {
         None
     };
 
-    let mut gathered: Vec<Vec<f32>> = (0..k).map(|_| vec![0f32; b * hs * c.size()]).collect();
-    let mut probe_sum = vec![0f32; 2 * k];
-    // This worker's own probes of the previous chunk (what the in-flight
-    // consensus sum is verified against).
-    let mut probes_prev: Option<Vec<f32>> = None;
+    let mut coll = ChunkCollective {
+        k,
+        rs_shards,
+        shard_elems: b * hs,
+        p,
+        with_consensus,
+        staged: cfg.staged,
+        gate,
+        fplan,
+        inbytes: Vec::new(),
+        outbytes: Vec::new(),
+    };
 
-    let mut timings = Vec::with_capacity(total_reqs.saturating_sub(warmup));
-    let mut verified = true;
-    let mut consensus_ok = true;
-    let mut max_err = 0f32;
-    let mut sample = Vec::new();
-    let pf = c.size() as f32;
+    // Double-buffered result banks: with pipelining, chunk c's collective
+    // fills bank c % 2 while chunk c-1's deferred finals still read bank
+    // (c-1) % 2.
+    let mut gathered: [Vec<Vec<f32>>; 2] = [
+        (0..k).map(|_| vec![0f32; b * hs * p]).collect(),
+        (0..k).map(|_| vec![0f32; b * hs * p]).collect(),
+    ];
+    let mut rs_out: [Vec<Vec<f32>>; 2] = [
+        (0..rs_shards).map(|_| vec![0f32; RS_SHARD_ELEMS]).collect(),
+        (0..rs_shards).map(|_| vec![0f32; RS_SHARD_ELEMS]).collect(),
+    ];
+    let mut probe_sum = vec![0f32; 2 * k];
+    // Probes are produced by finals and consumed by the next collective
+    // that can carry them: one chunk behind serially, two when pipelined
+    // (finals of chunk c run after chunk c+1's collective began).
+    let mut pending_probes: VecDeque<Vec<f32>> = VecDeque::new();
+    let zero_probes = vec![0f32; 2 * k];
+
+    let env = FinalsEnv {
+        rank: c.rank(),
+        k,
+        b,
+        hs,
+        h,
+        p,
+        total_reqs,
+        warmup: cfg.warmup,
+        check: cfg.check,
+        with_consensus,
+        final_,
+        fused_final,
+        params: &params,
+    };
+    let mut out = WorkerOut {
+        timings: Vec::with_capacity(total_reqs.saturating_sub(cfg.warmup)),
+        verified: true,
+        consensus_ok: true,
+        max_err: 0f32,
+        sample: Vec::new(),
+    };
+    let mut deferred: Option<PendingFinals> = None;
 
     // Chunked request loop. The final chunk is padded with zero batches so
     // every fused execution is a full collective; padded requests are
     // computed but never recorded or checked.
     let chunks = total_reqs.div_ceil(k);
     for chunk in 0..chunks {
-        let t_chunk = Instant::now();
+        let bank = chunk % 2;
+        // Phase 1: request ingress + PJRT partial forward per request.
         let mut h_parts: Vec<Vec<f32>> = Vec::with_capacity(k);
         let mut t_partials = vec![0f64; k];
         for (j, t_partial) in t_partials.iter_mut().enumerate() {
@@ -378,135 +707,429 @@ fn worker_loop(
                 None
             };
             let x = collectives::primitives::bcast(c, x, 0)?;
-
-            // Phase 1: PJRT partial forward (Pallas kernel inside).
             let t0 = Instant::now();
             let h_part = partial.run_f32(&[&x, &w1s])?;
             *t_partial = t0.elapsed().as_secs_f64();
             h_parts.push(h_part);
         }
+        let rs_in: Vec<Vec<f32>> =
+            (0..rs_shards).map(|s| rs_input(c.rank(), chunk, s, p)).collect();
 
-        // Phase 2: ONE fused execution — the chunk's k allgathers plus the
-        // previous chunk's consensus sum, coalesced into shared wire
-        // messages. The first chunk sums zero probes (nothing to verify).
-        let probes_in: Vec<f32> = probes_prev.clone().unwrap_or_else(|| vec![0f32; 2 * k]);
+        // Phase 2: begin the chunk's fused collective (the chunk's k
+        // allgathers, the reduce-scatter shards, and the oldest pending
+        // consensus probes, coalesced into shared wire messages).
+        let probes_in = pending_probes.pop_front();
         let t1 = Instant::now();
-        if let Some(g) = gate {
-            // Proc backend: serialize the chunk's composite fused input
-            // (k allgather shards, then the 2k consensus probes — the
-            // pool job's constituent order), exchange it through the
-            // shared pool, and split the composite output back out.
-            let n_in = k * b * hs + if with_consensus { 2 * k } else { 0 };
-            let mut inbytes = Vec::with_capacity(n_in * 4);
-            for hp in &h_parts {
-                for v in hp {
-                    inbytes.extend_from_slice(&v.to_ne_bytes());
-                }
+        coll.begin(
+            c.rank(),
+            &h_parts,
+            &rs_in,
+            probes_in.as_deref().unwrap_or(&zero_probes),
+            &mut gathered[bank],
+            &mut rs_out[bank],
+            &mut probe_sum,
+        )?;
+        let mut t_coll = t1.elapsed().as_secs_f64();
+
+        // Pipeline overlap: the previous chunk's final projections run
+        // while this chunk's collective is on the wire.
+        if let Some(st) = deferred.take() {
+            let prev_bank = st.chunk % 2;
+            run_finals(st, &gathered[prev_bank], &env, &mut pending_probes, &mut out)?;
+        }
+
+        let t2 = Instant::now();
+        coll.finish(c.rank(), &mut gathered[bank], &mut rs_out[bank], &mut probe_sum)?;
+        t_coll += t2.elapsed().as_secs_f64();
+
+        // Verify whatever this collective carried.
+        if let Some(prev) = probes_in {
+            check_probes(&probe_sum, &prev, pf, &mut out.consensus_ok);
+        }
+        for (s, rj) in rs_out[bank].iter().enumerate() {
+            if rj != &rs_expected(c.rank(), chunk, s, p) {
+                out.verified = false;
             }
-            if with_consensus {
-                for v in &probes_in {
-                    inbytes.extend_from_slice(&v.to_ne_bytes());
-                }
-            }
-            let mut outbytes = Vec::new();
-            g.exchange(c.rank(), &inbytes, &mut outbytes)?;
-            let gather_bytes = b * hs * c.size() * 4;
-            for (j, gj) in gathered.iter_mut().enumerate() {
-                let blk = &outbytes[j * gather_bytes..(j + 1) * gather_bytes];
-                for (dst, chunk) in gj.iter_mut().zip(blk.chunks_exact(4)) {
-                    *dst = f32::from_ne_bytes(chunk.try_into().expect("4-byte chunk"));
-                }
-            }
-            if with_consensus {
-                let probes = &outbytes[k * gather_bytes..];
-                for (dst, chunk) in probe_sum.iter_mut().zip(probes.chunks_exact(4)) {
-                    *dst = f32::from_ne_bytes(chunk.try_into().expect("4-byte chunk"));
-                }
-            }
+        }
+
+        // Phase 3: final projections — deferred one chunk when pipelined.
+        let st = PendingFinals { chunk, t_partials, t_collective: t_coll };
+        if cfg.pipeline {
+            deferred = Some(st);
         } else {
-            let mut in_refs: Vec<&[f32]> = h_parts.iter().map(|v| v.as_slice()).collect();
-            let mut out_refs: Vec<&mut [f32]> =
-                gathered.iter_mut().map(|v| v.as_mut_slice()).collect();
-            if with_consensus {
-                in_refs.push(&probes_in);
-                out_refs.push(&mut probe_sum);
-            }
-            fplan.as_mut().expect("sim path planned above").execute(&in_refs, &mut out_refs)?;
+            run_finals(st, &gathered[bank], &env, &mut pending_probes, &mut out)?;
         }
-        let t_allgather = t1.elapsed().as_secs_f64();
+    }
+    if let Some(st) = deferred.take() {
+        let prev_bank = st.chunk % 2;
+        run_finals(st, &gathered[prev_bank], &env, &mut pending_probes, &mut out)?;
+    }
 
-        // Verify the in-flight consensus sum against last chunk's probes.
-        if with_consensus {
-            if let Some(prev) = probes_prev.take() {
-                check_probes(&probe_sum, &prev, pf, &mut consensus_ok);
-            }
-        }
-
-        // Phase 3: final projections, one per request of the chunk.
-        let mut probes_now = vec![0f32; 2 * k];
-        let mut t_finals = vec![0f64; k];
-        for j in 0..k {
-            let req = chunk * k + j;
-            let t2 = Instant::now();
-            let y = if let Some(ff) = &fused_final {
-                ff.run_f32(&[&gathered[j], &params.w2])?
-            } else {
-                let mut h_full = vec![0f32; b * h];
-                for i in 0..c.size() {
-                    let blk = &gathered[j][i * b * hs..(i + 1) * b * hs];
-                    for row in 0..b {
-                        let dst = row * h + i * hs;
-                        h_full[dst..dst + hs].copy_from_slice(&blk[row * hs..(row + 1) * hs]);
-                    }
-                }
-                final_.run_f32(&[&h_full, &params.w2])?
-            };
-            t_finals[j] = t2.elapsed().as_secs_f64();
-            probes_now[2 * j] = y[0];
-            probes_now[2 * j + 1] = y[y.len() - 1];
-
-            if c.rank() == 0 && req < total_reqs {
-                if check {
-                    let xr = params.example_batch(req as f32 + 1.0);
-                    let want = params.reference_forward(&xr);
-                    let err = max_abs_diff(&y, &want);
-                    max_err = max_err.max(err);
-                    if err > 1e-3 {
-                        verified = false;
-                    }
-                }
-                if req + 1 == total_reqs {
-                    sample = y.iter().take(8).copied().collect();
-                }
-            }
-        }
-        if with_consensus {
-            probes_prev = Some(probes_now);
-        }
-
-        if c.rank() == 0 {
-            let chunk_total = t_chunk.elapsed().as_secs_f64();
-            for j in 0..k {
-                let req = chunk * k + j;
-                if req >= warmup && req < total_reqs {
-                    timings.push(RequestTiming {
-                        partial: t_partials[j],
-                        allgather: t_allgather / k as f64,
-                        final_: t_finals[j],
-                        total: chunk_total / k as f64,
-                    });
-                }
-            }
+    // Drain: probes produced after the last collective that could carry
+    // them (one chunk's worth serially, two when pipelined).
+    if let Some(dp) = drain_plan.as_mut() {
+        while let Some(prev) = pending_probes.pop_front() {
+            dp.execute(&prev, &mut probe_sum)?;
+            check_probes(&probe_sum, &prev, pf, &mut out.consensus_ok);
         }
     }
 
-    // Drain: the final chunk's probes have not been summed yet.
-    if let (Some(dp), Some(prev)) = (drain_plan.as_mut(), probes_prev.take()) {
-        dp.execute(&prev, &mut probe_sum)?;
-        check_probes(&probe_sum, &prev, pf, &mut consensus_ok);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic serving throughput (`locag e2e --measure-rps`)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the synthetic serving-throughput mode: the same chunk
+/// structure and fused collective hot path as [`serve`], under a
+/// deterministic generated load instead of PJRT compute — so it needs no
+/// compiled artifacts and measures the transport/staging path itself.
+#[derive(Debug, Clone)]
+pub struct RpsConfig {
+    /// Locality regions of the worker topology.
+    pub regions: usize,
+    /// Workers per region (`p = regions · ppr`).
+    pub ppr: usize,
+    /// Measured requests.
+    pub requests: usize,
+    /// Unmeasured warmup requests (rounded down to whole chunks).
+    pub warmup: usize,
+    /// Requests per fused chunk.
+    pub fuse_batch: usize,
+    /// Synthetic reduce-scatter shards per chunk (see
+    /// [`ServeConfig::rs_shards`]).
+    pub rs_shards: usize,
+    /// Per-request allgather input elements per worker.
+    pub n_gather: usize,
+    /// Allgather algorithm on the activation path.
+    pub algo: Algorithm,
+    /// Carry the consensus allreduce (see [`ServeConfig::consensus`]).
+    pub consensus: bool,
+    /// Backend the fused hot path executes on.
+    pub backend: Backend,
+}
+
+impl Default for RpsConfig {
+    fn default() -> Self {
+        RpsConfig {
+            regions: 2,
+            ppr: 2,
+            requests: 64,
+            warmup: 8,
+            fuse_batch: 4,
+            rs_shards: 2,
+            n_gather: 4096,
+            algo: Algorithm::ModelTuned,
+            consensus: true,
+            backend: Backend::Sim,
+        }
+    }
+}
+
+/// Outcome of [`serve_rps`]: measured end-to-end requests/sec of the
+/// staged serial baseline vs the zero-copy pipelined hot path, same
+/// shape, load and backend.
+#[derive(Debug)]
+pub struct RpsReport {
+    /// World size.
+    pub p: usize,
+    /// Fused chunks per pass.
+    pub chunks: usize,
+    /// Measured requests per pass.
+    pub requests: usize,
+    /// Requests/sec, staging copies + back-to-back chunk phases.
+    pub rps_staged: f64,
+    /// Requests/sec, segmented views + software-pipelined chunks.
+    pub rps_zero_copy: f64,
+    /// `rps_zero_copy / rps_staged`.
+    pub speedup: f64,
+    /// True if both passes verified every gathered block, reduce-scatter
+    /// shard and consensus probe.
+    pub verified: bool,
+}
+
+/// Measure serving throughput before/after the zero-copy + pipelining
+/// work: one pass with staging copies and strictly serial chunk phases,
+/// one pass with segmented views and cross-chunk software pipelining.
+/// Every byte both passes move is still verified (generated inputs have
+/// closed-form gathered/scattered values).
+pub fn serve_rps(cfg: &RpsConfig) -> Result<RpsReport> {
+    if cfg.regions == 0 || cfg.ppr == 0 {
+        return Err(Error::Coordinator("rps mode needs a non-empty topology".into()));
+    }
+    let (rps_staged, ok_staged) = rps_pass(cfg, true, false)?;
+    let (rps_zero_copy, ok_zc) = rps_pass(cfg, false, true)?;
+    let k = cfg.fuse_batch.max(1);
+    Ok(RpsReport {
+        p: cfg.regions * cfg.ppr,
+        chunks: (cfg.warmup + cfg.requests).div_ceil(k),
+        requests: cfg.requests,
+        rps_staged,
+        rps_zero_copy,
+        speedup: rps_zero_copy / rps_staged.max(f64::MIN_POSITIVE),
+        verified: ok_staged && ok_zc,
+    })
+}
+
+/// One measured pass of the synthetic serving loop.
+fn rps_pass(cfg: &RpsConfig, staged: bool, pipeline: bool) -> Result<(f64, bool)> {
+    let topo = Topology::regions(cfg.regions, cfg.ppr);
+    let k = cfg.fuse_batch.max(1);
+    let (gate, gate_consensus) = if cfg.backend == Backend::Proc {
+        let machine = crate::model::MachineParams::lassen();
+        let (specs, wc) = serving_pool_specs(
+            &topo,
+            cfg.algo,
+            cfg.n_gather,
+            k,
+            cfg.rs_shards,
+            cfg.consensus,
+            &machine,
+        )?;
+        let mut pool =
+            ProcPool::spawn(cfg.regions, cfg.ppr, machine.name, &ProcConfig::default())?;
+        let sid = pool.load(&ProcJob::Fused { specs, dtype: DType::F32 })?;
+        (Some(Arc::new(PoolGate::new(pool, sid))), wc)
+    } else {
+        (None, false)
+    };
+    let cfgw = cfg.clone();
+    let run = CommWorld::run(&topo, Timing::Wallclock, move |c| -> Result<(f64, bool)> {
+        rps_worker_loop(c, &cfgw, staged, pipeline, gate.as_deref(), gate_consensus)
+    });
+    let mut out = None;
+    for (rank, res) in run.results.into_iter().enumerate() {
+        match res {
+            Ok(o) => {
+                if rank == 0 {
+                    out = Some(o);
+                }
+            }
+            Err(e) => return Err(Error::Coordinator(format!("rps worker {rank}: {e}"))),
+        }
+    }
+    Ok(out.expect("worker 0 always present"))
+}
+
+/// Deterministic synthetic activation shard of `req` on `rank`.
+fn rps_shard(rank: usize, req: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((rank * 131 + req * 17 + i) % 97) as f32).collect()
+}
+
+/// Synthetic final projection of one chunk: a full verification pass over
+/// each request's gathered buffer (every rank's block must equal its
+/// generator) standing in for the projection compute the real serving
+/// loop overlaps, plus the consensus probes derived from it. The probes
+/// are functions of the gathered (rank-identical) data, so the `p·x`
+/// consensus identity holds exactly as in [`worker_loop`].
+fn rps_finals(
+    chunk: usize,
+    n: usize,
+    p: usize,
+    gathered: &[Vec<f32>],
+    with_consensus: bool,
+    pending_probes: &mut VecDeque<Vec<f32>>,
+    ok: &mut bool,
+) {
+    let k = gathered.len();
+    let mut probes = vec![0f32; 2 * k];
+    for (j, gj) in gathered.iter().enumerate() {
+        let req = chunk * k + j;
+        let mut sum = 0f64;
+        for r in 0..p {
+            let blk = &gj[r * n..(r + 1) * n];
+            for (i, v) in blk.iter().enumerate() {
+                if *v != ((r * 131 + req * 17 + i) % 97) as f32 {
+                    *ok = false;
+                }
+                sum += *v as f64;
+            }
+        }
+        probes[2 * j] = gj[0];
+        // Integer-valued and < 1024, so exact in f32 and its p-fold
+        // allreduce sum is exact too.
+        probes[2 * j + 1] = (sum % 1024.0) as f32;
+    }
+    if with_consensus {
+        pending_probes.push_back(probes);
+    }
+}
+
+/// Synthetic twin of [`worker_loop`]: identical chunk structure, fused
+/// hot path, probe FIFO and drain, with generated inputs in place of
+/// PJRT. Returns worker-local (requests/sec, verified).
+fn rps_worker_loop(
+    c: &mut Comm,
+    cfg: &RpsConfig,
+    staged: bool,
+    pipeline: bool,
+    gate: Option<&PoolGate>,
+    gate_consensus: bool,
+) -> Result<(f64, bool)> {
+    let p = c.size();
+    let pf = p as f32;
+    let k = cfg.fuse_batch.max(1);
+    let n = cfg.n_gather;
+    let rs_shards = cfg.rs_shards;
+    let total_reqs = cfg.warmup + cfg.requests;
+
+    let (fplan, with_consensus) = match gate {
+        Some(_) => (None, gate_consensus),
+        None => {
+            let (plan, wc) = plan_serving_fused(c, cfg.algo, n, k, rs_shards, cfg.consensus)?;
+            (Some(plan), wc)
+        }
+    };
+    let mut drain_plan = if with_consensus {
+        Some(collectives::plan_allreduce::<f32>("loc-aware", c, Shape::elems(2 * k))?)
+    } else {
+        None
+    };
+    let mut coll = ChunkCollective {
+        k,
+        rs_shards,
+        shard_elems: n,
+        p,
+        with_consensus,
+        staged,
+        gate,
+        fplan,
+        inbytes: Vec::new(),
+        outbytes: Vec::new(),
+    };
+
+    let mut gathered: [Vec<Vec<f32>>; 2] = [
+        (0..k).map(|_| vec![0f32; n * p]).collect(),
+        (0..k).map(|_| vec![0f32; n * p]).collect(),
+    ];
+    let mut rs_out: [Vec<Vec<f32>>; 2] = [
+        (0..rs_shards).map(|_| vec![0f32; RS_SHARD_ELEMS]).collect(),
+        (0..rs_shards).map(|_| vec![0f32; RS_SHARD_ELEMS]).collect(),
+    ];
+    let mut probe_sum = vec![0f32; 2 * k];
+    let mut pending_probes: VecDeque<Vec<f32>> = VecDeque::new();
+    let zero_probes = vec![0f32; 2 * k];
+    let mut ok = true;
+    let mut deferred: Option<(usize, usize)> = None;
+
+    let chunks = total_reqs.div_ceil(k);
+    let warm_chunks = (cfg.warmup / k).min(chunks);
+    let mut t_measure = Instant::now();
+
+    for chunk in 0..chunks {
+        if chunk == warm_chunks {
+            t_measure = Instant::now();
+        }
+        let bank = chunk % 2;
+        let h_parts: Vec<Vec<f32>> =
+            (0..k).map(|j| rps_shard(c.rank(), chunk * k + j, n)).collect();
+        let rs_in: Vec<Vec<f32>> =
+            (0..rs_shards).map(|s| rs_input(c.rank(), chunk, s, p)).collect();
+
+        let probes_in = pending_probes.pop_front();
+        coll.begin(
+            c.rank(),
+            &h_parts,
+            &rs_in,
+            probes_in.as_deref().unwrap_or(&zero_probes),
+            &mut gathered[bank],
+            &mut rs_out[bank],
+            &mut probe_sum,
+        )?;
+        if let Some((pchunk, pbank)) = deferred.take() {
+            rps_finals(
+                pchunk,
+                n,
+                p,
+                &gathered[pbank],
+                with_consensus,
+                &mut pending_probes,
+                &mut ok,
+            );
+        }
+        coll.finish(c.rank(), &mut gathered[bank], &mut rs_out[bank], &mut probe_sum)?;
+        if let Some(prev) = probes_in {
+            check_probes(&probe_sum, &prev, pf, &mut ok);
+        }
+        for (s, rj) in rs_out[bank].iter().enumerate() {
+            if rj != &rs_expected(c.rank(), chunk, s, p) {
+                ok = false;
+            }
+        }
+        if pipeline {
+            deferred = Some((chunk, bank));
+        } else {
+            rps_finals(chunk, n, p, &gathered[bank], with_consensus, &mut pending_probes, &mut ok);
+        }
+    }
+    if let Some((pchunk, pbank)) = deferred.take() {
+        rps_finals(pchunk, n, p, &gathered[pbank], with_consensus, &mut pending_probes, &mut ok);
+    }
+    if let Some(dp) = drain_plan.as_mut() {
+        while let Some(prev) = pending_probes.pop_front() {
+            dp.execute(&prev, &mut probe_sum)?;
+            check_probes(&probe_sum, &prev, pf, &mut ok);
+        }
     }
 
-    Ok(WorkerOut { timings, verified, consensus_ok, max_err, sample })
+    let elapsed = t_measure.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+    let measured = total_reqs - warm_chunks * k;
+    Ok((measured as f64 / elapsed, ok))
 }
 
 // Integration coverage (requires artifacts): rust/tests/coordinator_integration.rs
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rs_expected_is_the_column_sum_of_every_ranks_input() {
+        let (p, chunk, shard) = (4, 3, 1);
+        let inputs: Vec<Vec<f32>> = (0..p).map(|r| rs_input(r, chunk, shard, p)).collect();
+        for me in 0..p {
+            let want: Vec<f32> = (0..RS_SHARD_ELEMS)
+                .map(|i| inputs.iter().map(|v| v[me * RS_SHARD_ELEMS + i]).sum())
+                .collect();
+            assert_eq!(rs_expected(me, chunk, shard, p), want);
+        }
+    }
+
+    #[test]
+    fn serving_pool_specs_order_gathers_then_scatters_then_consensus() {
+        let topo = Topology::regions(2, 2);
+        let machine = crate::model::MachineParams::lassen();
+        let (k, rs) = (2, 3);
+        let (specs, wc) =
+            serving_pool_specs(&topo, Algorithm::ModelTuned, 64, k, rs, true, &machine)
+                .expect("2x2 serving specs fuse");
+        assert!(wc, "2x2 admits the loc-aware consensus allreduce");
+        assert_eq!(specs.len(), k + rs + 1);
+        assert!(specs[..k].iter().all(|s| s.op == OpKind::Allgather));
+        assert!(specs[k..k + rs]
+            .iter()
+            .all(|s| s.op == OpKind::ReduceScatter && s.n == RS_SHARD_ELEMS));
+        assert_eq!(specs[k + rs].op, OpKind::Allreduce);
+        assert_eq!(specs[k + rs].n, 2 * k);
+    }
+
+    #[test]
+    fn rps_sim_pass_verifies_both_paths() {
+        let cfg = RpsConfig {
+            regions: 2,
+            ppr: 1,
+            requests: 6,
+            warmup: 2,
+            fuse_batch: 2,
+            rs_shards: 1,
+            n_gather: 64,
+            ..RpsConfig::default()
+        };
+        let rep = serve_rps(&cfg).expect("sim rps run");
+        assert!(rep.verified, "synthetic serving data must verify on both passes");
+        assert_eq!(rep.p, 2);
+        assert_eq!(rep.requests, 6);
+        assert!(rep.rps_staged > 0.0 && rep.rps_zero_copy > 0.0);
+    }
+}

@@ -578,7 +578,9 @@ pub struct FusedReport {
     pub seq_vtime: f64,
     /// Sum of the constituents' predicted completions.
     pub seq_predicted: f64,
-    /// Traffic of the fused execution.
+    /// Per-execution traffic of the fused schedule (the fused world runs
+    /// twice — staged oracle + measured view — and the counters divide
+    /// exactly, like the repeated runners').
     pub fused_trace: TraceSummary,
     /// Accumulated traffic of the sequential executions.
     pub seq_trace: TraceSummary,
@@ -608,10 +610,20 @@ fn fused_expected(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u6
     }
 }
 
-/// Execute `specs` once as a [`collectives::FusedPlan`] and once
-/// sequentially (barrier-separated, plan-once per constituent), both
-/// under the virtual-clock transport, and report modeled times,
-/// IR-predicted times and traffic for both sides.
+/// Execute `specs` as a [`collectives::FusedPlan`] and once sequentially
+/// (barrier-separated, plan-once per constituent), both under the
+/// virtual-clock transport, and report modeled times, IR-predicted times
+/// and traffic for both sides.
+///
+/// The fused world executes **twice**, barrier-separated like a warmup
+/// iteration: once through the staged-copy path
+/// ([`collectives::FusedPlan::execute`]) as the conformance oracle, then
+/// once through the zero-copy segmented-view path
+/// ([`collectives::FusedPlan::execute_view`]) — the measured execution.
+/// Any byte of divergence between the two fails verification, so every
+/// `run_fused` call site doubles as a staged-vs-view conformance check.
+/// [`FusedReport::fused_trace`] stays per-execution (the doubled counters
+/// divide exactly — both executions send the identical schedule).
 pub fn run_fused(
     specs: &[collectives::FuseSpec],
     topo: &Topology,
@@ -632,18 +644,33 @@ pub fn run_fused(
             let ins: Vec<Vec<u64>> = specs.iter().map(|s| fused_input(s, c.rank(), p)).collect();
             let want: Vec<Vec<u64>> =
                 specs.iter().map(|s| fused_expected(s, c.rank(), p)).collect();
+            let mut staged: Vec<Vec<u64>> = want.iter().map(|w| vec![0u64; w.len()]).collect();
             let mut outs: Vec<Vec<u64>> = want.iter().map(|w| vec![0u64; w.len()]).collect();
+            // Staged oracle execution (unmeasured, like a warmup iteration).
+            c.barrier()?;
+            {
+                let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+                let mut out_refs: Vec<&mut [u64]> =
+                    staged.iter_mut().map(|v| v.as_mut_slice()).collect();
+                plan.execute(&in_refs, &mut out_refs)?;
+            }
+            // Measured execution: the zero-copy segmented-view hot path.
             c.barrier()?;
             let t0 = c.clock();
             {
                 let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
                 let mut out_refs: Vec<&mut [u64]> =
                     outs.iter_mut().map(|v| v.as_mut_slice()).collect();
-                plan.execute(&in_refs, &mut out_refs)?;
+                plan.execute_view(&in_refs, &mut out_refs)?;
             }
             let span = (t0, c.clock());
-            if outs != want {
+            if staged != want {
                 return Err(Error::Precondition("fused execution produced wrong data".into()));
+            }
+            if outs != staged {
+                return Err(Error::Precondition(
+                    "zero-copy view execution diverged from the staged oracle".into(),
+                ));
             }
             Ok((span, sched))
         },
@@ -755,7 +782,7 @@ pub fn run_fused(
         fused_predicted,
         seq_vtime,
         seq_predicted,
-        fused_trace: fused_run.trace,
+        fused_trace: if verified { fused_run.trace.per_op(2) } else { fused_run.trace },
         seq_trace: seq_run.trace,
         verified,
         errors,

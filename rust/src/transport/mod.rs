@@ -90,7 +90,7 @@ pub use proc_exec::worker_main;
 use crate::collectives::fuse::FuseSpec;
 use crate::collectives::plan::Summable;
 use crate::collectives::schedule::{execute_schedule, SchedPlan, WorldView};
-use crate::collectives::{model_tuned, Algorithm, OpKind, Schedule};
+use crate::collectives::{model_tuned, Algorithm, ElemKind, OpKind, Schedule};
 use crate::comm::datatype::{from_bytes, to_bytes};
 use crate::comm::{Comm, CommWorld, Timing};
 use crate::error::{Error, Result};
@@ -167,6 +167,29 @@ impl DType {
         }
     }
 
+    /// The [`ElemKind`] this dtype maps to in the segmented-view
+    /// execution layer.
+    pub fn kind(&self) -> ElemKind {
+        match self {
+            DType::U32 => ElemKind::U32,
+            DType::U64 => ElemKind::U64,
+            DType::F32 => ElemKind::F32,
+        }
+    }
+
+    /// The proc-backend dtype for a view-layer element kind. Errors for
+    /// kinds the worker interpreter has no reduce arithmetic for.
+    pub fn from_kind(kind: ElemKind) -> Result<DType> {
+        match kind {
+            ElemKind::U32 => Ok(DType::U32),
+            ElemKind::U64 => Ok(DType::U64),
+            ElemKind::F32 => Ok(DType::F32),
+            other => Err(Error::Precondition(format!(
+                "element kind {other} is not supported by the proc backend"
+            ))),
+        }
+    }
+
     /// The integer dtype of a given element width — the implicit contract
     /// of [`ProcJob::Single`], which predates explicit dtypes.
     pub fn for_elem_bytes(elem_bytes: usize) -> Result<DType> {
@@ -188,6 +211,10 @@ pub enum ProcJob {
     Single { op: OpKind, algo: String, n: usize, elem_bytes: usize },
     /// A fused multi-collective plan at an explicit element type.
     Fused { specs: Vec<FuseSpec>, dtype: DType },
+    /// A fused plan whose constituents carry **different** element types
+    /// (e.g. an `f32` allgather fused with a `u64` allreduce). Workers run
+    /// it byte-scaled through the segmented-view interpreter.
+    FusedMixed { specs: Vec<(FuseSpec, DType)> },
 }
 
 impl ProcJob {
@@ -197,11 +224,14 @@ impl ProcJob {
         ProcJob::Fused { specs, dtype: DType::U64 }
     }
 
-    /// Element size on the wire.
+    /// Element size on the wire. Mixed jobs run byte-scaled schedules —
+    /// there is no single element size, so the wire granularity is one
+    /// byte.
     pub fn elem_bytes(&self) -> usize {
         match self {
             ProcJob::Single { elem_bytes, .. } => *elem_bytes,
             ProcJob::Fused { dtype, .. } => dtype.bytes(),
+            ProcJob::FusedMixed { .. } => 1,
         }
     }
 
@@ -223,6 +253,15 @@ impl ProcJob {
                     o += so;
                 }
                 (i * eb, o * eb)
+            }
+            ProcJob::FusedMixed { specs } => {
+                let (mut i, mut o) = (0usize, 0usize);
+                for (s, dt) in specs {
+                    let (si, so) = s.op.io_elems(s.n, p);
+                    i += si * dt.bytes();
+                    o += so * dt.bytes();
+                }
+                (i, o)
             }
         }
     }
@@ -316,6 +355,24 @@ pub fn canonical_input_bytes(
         other => panic!("unsupported element size {other} for the proc backend"),
     };
     canonical_input_bytes_dtype(op, rank, p, n, dtype)
+}
+
+/// Canonical per-rank input bytes for a mixed fused job: each
+/// constituent's [`canonical_input_bytes_dtype`] truncated to its input
+/// window and concatenated in spec order — exactly the segment layout a
+/// mixed [`crate::collectives::schedule::IoView`] exposes.
+pub fn canonical_fused_mixed_input_bytes(
+    specs: &[(FuseSpec, DType)],
+    rank: usize,
+    p: usize,
+) -> Vec<u8> {
+    let mut acc = Vec::new();
+    for (s, dt) in specs {
+        let (take, _) = s.op.io_elems(s.n, p);
+        let bytes = canonical_input_bytes_dtype(s.op, rank, p, s.n, *dt);
+        acc.extend_from_slice(&bytes[..take * dt.bytes()]);
+    }
+    acc
 }
 
 /// Build one rank's schedule for a (possibly model-tuned) algorithm name —
@@ -460,6 +517,80 @@ fn sim_fused<T: Summable>(
     Ok(to_bytes(&output))
 }
 
+fn sim_fused_mixed(
+    comm: &Comm,
+    specs: &[(FuseSpec, DType)],
+    machine: &MachineParams,
+    input_override: Option<&[u8]>,
+) -> Result<Vec<u8>> {
+    use crate::collectives::fuse;
+    use crate::collectives::plan::PlanCore;
+    use crate::collectives::schedule::{execute_schedule_view, IoView, IoViewMut, ViewReduce};
+
+    let rank = comm.rank();
+    let p = comm.size();
+    let view = WorldView::from_comm(comm);
+    let kspecs: Vec<(FuseSpec, ElemKind)> =
+        specs.iter().map(|(s, dt)| (s.clone(), dt.kind())).collect();
+    let (mut scheds, _, mut kind_tables) = fuse::fuse_world_mixed(&kspecs, &view, machine)?;
+    let sched = scheds.swap_remove(rank);
+    let kinds = kind_tables.swap_remove(rank);
+    sched.validate()?;
+    let input_bytes = match input_override {
+        Some(b) => b.to_vec(),
+        None => canonical_fused_mixed_input_bytes(specs, rank, p),
+    };
+    // Segment the composite input/output per constituent, in spec order
+    // (zero-length segments for n == 0 constituents are fine: they add no
+    // bytes, matching the fused schedule's filtered io contract).
+    let mut iv = IoView::new();
+    let mut off = 0usize;
+    for (s, dt) in specs {
+        let (si, _) = s.op.io_elems(s.n, p);
+        let bytes = si * dt.bytes();
+        if off + bytes > input_bytes.len() {
+            return Err(Error::Precondition(format!(
+                "mixed fused input has {} bytes, constituents expect at least {}",
+                input_bytes.len(),
+                off + bytes
+            )));
+        }
+        iv.push_bytes(&input_bytes[off..off + bytes], dt.kind());
+        off += bytes;
+    }
+    if off != input_bytes.len() {
+        return Err(Error::Precondition(format!(
+            "mixed fused input has {} bytes, constituents expect {off}",
+            input_bytes.len()
+        )));
+    }
+    let mut outs: Vec<Vec<u8>> = specs
+        .iter()
+        .map(|(s, dt)| {
+            let (_, so) = s.op.io_elems(s.n, p);
+            vec![0u8; so * dt.bytes()]
+        })
+        .collect();
+    let mut ov = IoViewMut::new();
+    for ((_, dt), buf) in specs.iter().zip(outs.iter_mut()) {
+        ov.push_bytes(buf, dt.kind());
+    }
+    let core = PlanCore::new(comm, sched.n, sched.tags);
+    let mut scratch: Vec<Vec<u8>> = sched.scratch.iter().map(|&l| vec![0u8; l]).collect();
+    let mut wire = vec![0u8; sched.max_padded_wire()];
+    execute_schedule_view(
+        &core,
+        &sched,
+        &iv,
+        &mut ov,
+        &mut scratch,
+        &mut wire,
+        &ViewReduce::PerScratch(&kinds),
+    )?;
+    drop(ov);
+    Ok(outs.concat())
+}
+
 fn run_sim(
     regions: usize,
     ppr: usize,
@@ -492,6 +623,7 @@ fn run_sim(
                 DType::U64 => sim_fused::<u64>(comm, specs, machine, |v| v, inp),
                 DType::F32 => sim_fused::<f32>(comm, specs, machine, |v| v as f32, inp),
             },
+            ProcJob::FusedMixed { specs } => sim_fused_mixed(comm, specs, machine, inp),
         }
     });
     run.results.into_iter().collect()
@@ -573,6 +705,47 @@ mod tests {
         ]);
         assert_eq!(fused.elem_bytes(), 8);
         assert_eq!(fused.io_bytes(4), ((2 + 4) * 8, (2 * 4 + 4) * 8));
+    }
+
+    #[test]
+    fn mixed_job_io_bytes_sum_per_dtype() {
+        let job = ProcJob::FusedMixed {
+            specs: vec![
+                (FuseSpec::new(OpKind::Allgather, "bruck", 2), DType::F32),
+                (FuseSpec::new(OpKind::Allreduce, "loc-aware", 4), DType::U64),
+            ],
+        };
+        assert_eq!(job.elem_bytes(), 1);
+        assert_eq!(job.io_bytes(4), (2 * 4 + 4 * 8, 2 * 4 * 4 + 4 * 8));
+    }
+
+    #[test]
+    fn sim_reference_runs_mixed_fused_jobs() {
+        let p = 4;
+        let specs = vec![
+            (FuseSpec::new(OpKind::Allgather, "bruck", 2), DType::F32),
+            (FuseSpec::new(OpKind::Allreduce, "loc-aware", 4), DType::U64),
+        ];
+        let job = ProcJob::FusedMixed { specs };
+        let outs = run_sim_bytes(2, 2, &job, &MachineParams::lassen()).unwrap();
+        let mut gath: Vec<f32> = Vec::new();
+        for r in 0..p {
+            gath.extend(canonical_elems(OpKind::Allgather, r, p, 2).iter().map(|&v| v as f32));
+        }
+        let mut red = vec![0u64; 4];
+        for r in 0..p {
+            for (j, v) in canonical_elems(OpKind::Allreduce, r, p, 4).iter().enumerate() {
+                red[j] = red[j].wrapping_add(*v);
+            }
+        }
+        let split = 2 * p * 4; // allgather output window in bytes
+        for out in &outs {
+            assert_eq!(out.len(), split + 4 * 8);
+            let got_g: Vec<f32> = from_bytes(&out[..split]).unwrap();
+            let got_r: Vec<u64> = from_bytes(&out[split..]).unwrap();
+            assert_eq!(got_g, gath);
+            assert_eq!(got_r, red);
+        }
     }
 
     #[test]

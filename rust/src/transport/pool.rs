@@ -108,6 +108,11 @@ fn job_spec(job: &ProcJob) -> String {
             let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
             format!("fused {} {}", dtype.name(), labels.join(";"))
         }
+        ProcJob::FusedMixed { specs } => {
+            let labels: Vec<String> =
+                specs.iter().map(|(s, dt)| format!("{}:{}", dt.name(), s.label())).collect();
+            format!("fusedmix {}", labels.join(";"))
+        }
     }
 }
 
@@ -137,6 +142,8 @@ pub struct ProcPool {
     next_sid: u64,
     /// Per-schedule (input, output) byte sizes for delta validation.
     loaded: BTreeMap<u64, (usize, usize)>,
+    /// Schedule id of a begun-but-not-finished execute, if any.
+    in_flight: Option<u64>,
     poisoned: Option<String>,
     stats: PoolStats,
 }
@@ -172,6 +179,7 @@ impl ProcPool {
                 deadline: cfg.deadline,
                 next_sid: 1,
                 loaded: BTreeMap::new(),
+                in_flight: None,
                 poisoned: None,
                 stats: PoolStats { workers_spawned: p, handshakes: p, loads: 0, executes: 0 },
             }),
@@ -364,7 +372,29 @@ impl ProcPool {
         inputs: Option<&[Vec<u8>]>,
         want_outputs: bool,
     ) -> Result<ProcReport> {
+        self.execute_begin(sid, inputs, want_outputs)?;
+        self.execute_finish(sid)
+    }
+
+    /// First half of an execute: validate the inputs and ship the `EXEC`
+    /// command (with input deltas) to every worker **without waiting for
+    /// replies**. The workers run the collective while the caller does
+    /// local work; [`ProcPool::execute_finish`] collects the results.
+    /// Exactly one execute can be in flight per pool.
+    pub fn execute_begin(
+        &mut self,
+        sid: u64,
+        inputs: Option<&[Vec<u8>]>,
+        want_outputs: bool,
+    ) -> Result<()> {
         self.check_usable()?;
+        if let Some(pending) = self.in_flight {
+            return Err(transport_err(
+                0,
+                0,
+                format!("an execute of schedule {pending} is already in flight on this pool"),
+            ));
+        }
         let Some(&(in_bytes, _)) = self.loaded.get(&sid) else {
             // Caught parent-side, before anything crosses the control
             // path — a stale id never poisons the pool.
@@ -409,6 +439,25 @@ impl ProcPool {
                 return Err(self.poison(transport_err(rank, 0, e)));
             }
         }
+        self.in_flight = Some(sid);
+        Ok(())
+    }
+
+    /// Second half of an execute: collect one reply per worker for the
+    /// in-flight schedule `sid` and return the report. The outputs are
+    /// present only when the matching [`ProcPool::execute_begin`] asked
+    /// for them.
+    pub fn execute_finish(&mut self, sid: u64) -> Result<ProcReport> {
+        self.check_usable()?;
+        if self.in_flight != Some(sid) {
+            return Err(transport_err(
+                0,
+                0,
+                format!("no execute of schedule {sid} is in flight on this pool"),
+            ));
+        }
+        self.in_flight = None;
+        let dl = Deadline::after(self.deadline + Duration::from_secs(2));
         let replies = match collect_replies(&self.streams, &dl) {
             Ok(r) => r,
             Err(e) => return Err(self.poison(e)),
@@ -449,6 +498,13 @@ impl ProcPool {
     /// cleans up, so calling this is optional.
     pub fn shutdown(&mut self) -> Result<()> {
         self.check_usable()?;
+        if let Some(pending) = self.in_flight {
+            return Err(transport_err(
+                0,
+                0,
+                format!("cannot shut down with an execute of schedule {pending} in flight"),
+            ));
+        }
         let dl = Deadline::after(Duration::from_secs(5));
         for (rank, s) in self.streams.iter().enumerate() {
             if let Err(e) = ctl_send(s, CTL_SHUTDOWN, 0, &[], &dl) {
@@ -670,23 +726,48 @@ impl PoolGate {
     /// Run one collective: deposit `input` for `rank`, execute once all
     /// ranks have arrived, and write this rank's output into `output`.
     pub fn exchange(&self, rank: usize, input: &[u8], output: &mut Vec<u8>) -> Result<()> {
+        self.begin_exchange(rank, input)?;
+        self.finish_exchange(rank, output)
+    }
+
+    /// First half of [`PoolGate::exchange`]: deposit this rank's input
+    /// (reusing the gate's per-rank buffer) and, once every rank has
+    /// arrived, ship the execute to the workers without waiting for
+    /// replies. Callers overlap local work between this and
+    /// [`PoolGate::finish_exchange`]; a leader-side failure is sticky and
+    /// surfaces to every rank at the finish.
+    pub fn begin_exchange(&self, rank: usize, input: &[u8]) -> Result<()> {
         {
             let mut g = self.inner.lock().expect("gate lock");
             if let Some(e) = &g.error {
                 return Err(Error::Transport { rank, round: 0, what: e.clone() });
             }
-            g.inputs[rank] = input.to_vec();
+            let dst = &mut g.inputs[rank];
+            dst.clear();
+            dst.extend_from_slice(input);
         }
-        let leader = self.barrier.wait().is_leader();
-        if leader {
+        if self.barrier.wait().is_leader() {
             let mut g = self.inner.lock().expect("gate lock");
-            let inputs = std::mem::take(&mut g.inputs);
-            let sid = g.sid;
-            let res = g.pool.execute_with_inputs(sid, &inputs);
-            g.inputs = inputs;
-            match res {
-                Ok(rep) => g.outputs = rep.outputs,
-                Err(e) => g.error = Some(e.to_string()),
+            let GateInner { pool, sid, inputs, error, .. } = &mut *g;
+            if let Err(e) = pool.execute_begin(*sid, Some(inputs.as_slice()), true) {
+                *error = Some(e.to_string());
+            }
+        }
+        Ok(())
+    }
+
+    /// Second half of [`PoolGate::exchange`]: collect the workers'
+    /// replies and write this rank's output into `output` (reusing its
+    /// capacity).
+    pub fn finish_exchange(&self, rank: usize, output: &mut Vec<u8>) -> Result<()> {
+        if self.barrier.wait().is_leader() {
+            let mut g = self.inner.lock().expect("gate lock");
+            if g.error.is_none() {
+                let GateInner { pool, sid, outputs, error, .. } = &mut *g;
+                match pool.execute_finish(*sid) {
+                    Ok(rep) => *outputs = rep.outputs,
+                    Err(e) => *error = Some(e.to_string()),
+                }
             }
         }
         self.barrier.wait();
@@ -694,7 +775,8 @@ impl PoolGate {
         if let Some(e) = &g.error {
             return Err(Error::Transport { rank, round: 0, what: e.clone() });
         }
-        *output = g.outputs[rank].clone();
+        output.clear();
+        output.extend_from_slice(&g.outputs[rank]);
         Ok(())
     }
 }
@@ -723,6 +805,13 @@ mod tests {
             dtype: DType::F32,
         };
         assert_eq!(job_spec(&fused), "fused f32 allgather/bruck@2;reduce-scatter/loc-aware@3");
+        let mixed = ProcJob::FusedMixed {
+            specs: vec![
+                (FuseSpec::new(OpKind::Allgather, "bruck", 2), DType::F32),
+                (FuseSpec::new(OpKind::Allreduce, "loc-aware", 4), DType::U64),
+            ],
+        };
+        assert_eq!(job_spec(&mixed), "fusedmix f32:allgather/bruck@2;u64:allreduce/loc-aware@4");
     }
 
     #[test]

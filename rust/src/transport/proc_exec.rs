@@ -34,12 +34,13 @@ use super::chan::{
     CTL_READY, CTL_SHUTDOWN,
 };
 use super::{
-    canonical_input_bytes, canonical_input_bytes_dtype, DType, DEFAULT_POOL_RING_BYTES,
+    canonical_fused_mixed_input_bytes, canonical_input_bytes, canonical_input_bytes_dtype, DType,
+    DEFAULT_POOL_RING_BYTES,
 };
 use crate::cli::args::Args;
 use crate::collectives::fuse::{self, FuseSpec};
 use crate::collectives::schedule::WorldView;
-use crate::collectives::{BufId, OpKind, Schedule, Slice, Step};
+use crate::collectives::{BufId, ElemKind, OpKind, Schedule, Slice, Step};
 use crate::model::params::MachineParams;
 use crate::topology::{Locality, Topology};
 
@@ -216,6 +217,13 @@ fn parse_fuse_label(s: &str) -> std::result::Result<FuseSpec, String> {
     let op = OpKind::parse_or_err(op).map_err(|e| e.to_string())?;
     let n: usize = n.parse().map_err(|_| format!("bad fuse spec '{s}'"))?;
     Ok(FuseSpec::new(op, algo, n))
+}
+
+/// Parse one `dtype:op/algo@n` constituent of a `fusedmix` job spec.
+fn parse_mixed_label(s: &str) -> std::result::Result<(FuseSpec, DType), String> {
+    let (dt, rest) = s.split_once(':').ok_or_else(|| format!("bad fusedmix spec '{s}'"))?;
+    let dt = DType::parse_or_err(dt).map_err(|e| e.to_string())?;
+    Ok((parse_fuse_label(rest)?, dt))
 }
 
 fn build_worker_cfg(args: &Args) -> std::result::Result<WorkerCfg, String> {
@@ -458,11 +466,53 @@ fn recv_step(
         .map_err(|what| WErr { round, peer: from, what })
 }
 
+/// How `Reduce` steps resolve their arithmetic type.
+#[derive(Debug, Clone, PartialEq)]
+enum ReduceDtype {
+    /// Single-type plans: every buffer holds one dtype.
+    Uniform(DType),
+    /// Mixed fused plans (byte-scaled schedules): an output target takes
+    /// the dtype of the constituent window `(start, end, dtype)` its byte
+    /// range lands in; scratch `i` takes `scratch[i]` (`None` marks the
+    /// coalescing staging scratches, which are never `Reduce` targets).
+    Mixed { out_windows: Vec<(usize, usize, DType)>, scratch: Vec<Option<DType>> },
+}
+
+impl ReduceDtype {
+    /// Arithmetic dtype for a `Reduce` step writing `dst`.
+    fn for_target(&self, dst: &Slice, eb: usize) -> std::result::Result<DType, String> {
+        match self {
+            ReduceDtype::Uniform(dt) => Ok(*dt),
+            ReduceDtype::Mixed { out_windows, scratch } => match dst.buf {
+                BufId::Scratch(i) => scratch
+                    .get(i)
+                    .copied()
+                    .flatten()
+                    .ok_or_else(|| format!("reduce into untyped scratch buffer {i}")),
+                BufId::Output => {
+                    let r = slice_bytes(dst, eb);
+                    out_windows
+                        .iter()
+                        .find(|(s, e, _)| *s <= r.start && r.end <= *e)
+                        .map(|(_, _, dt)| *dt)
+                        .ok_or_else(|| {
+                            format!(
+                                "reduce target {}..{} spans constituent output windows",
+                                r.start, r.end
+                            )
+                        })
+                }
+                BufId::Input => Err("schedule reduces into the input buffer".into()),
+            },
+        }
+    }
+}
+
 /// One loaded schedule plus every buffer its executes reuse. Built once
 /// per `LOAD`; [`PlanState::execute_bytes`] then runs allocation-free.
 struct PlanState {
     sched: Option<Schedule>,
-    dtype: DType,
+    rdtype: ReduceDtype,
     input: Vec<u8>,
     output: Vec<u8>,
     scratch: Vec<Vec<u8>>,
@@ -473,8 +523,9 @@ struct PlanState {
 }
 
 impl PlanState {
-    /// Build a plan from a pool job spec — `single {op} {algo} {n} {eb}`
-    /// or `fused {dtype} {label;label;...}` — seeding the input buffer
+    /// Build a plan from a pool job spec — `single {op} {algo} {n} {eb}`,
+    /// `fused {dtype} {label;label;...}` or
+    /// `fusedmix {dtype:label;dtype:label;...}` — seeding the input buffer
     /// with the canonical payload and admission-checking the schedule's
     /// largest shm frame against the pool's fixed ring capacity.
     fn build(cfg: &WorkerCfg, spec: &str) -> std::result::Result<PlanState, String> {
@@ -482,7 +533,7 @@ impl PlanState {
         let p = cfg.topo.size();
         let view = WorldView::world(&cfg.topo);
         let toks: Vec<&str> = spec.split_whitespace().collect();
-        let (sched, input, dtype) = match toks.as_slice() {
+        let (sched, input, rdtype) = match toks.as_slice() {
             ["single", op, algo, n, eb] => {
                 let op = OpKind::parse_or_err(op).map_err(|e| e.to_string())?;
                 let n: usize =
@@ -492,12 +543,16 @@ impl PlanState {
                 let dtype = DType::for_elem_bytes(eb).map_err(|e| e.to_string())?;
                 if n == 0 {
                     // Uniform zero-length contract: no traffic, empty output.
-                    (None, Vec::new(), dtype)
+                    (None, Vec::new(), ReduceDtype::Uniform(dtype))
                 } else {
                     let sched =
                         super::build_rank_schedule(op, algo, &view, me, n, eb, &cfg.machine)
                             .map_err(|e| e.to_string())?;
-                    (Some(sched), canonical_input_bytes(op, me, p, n, eb), dtype)
+                    (
+                        Some(sched),
+                        canonical_input_bytes(op, me, p, n, eb),
+                        ReduceDtype::Uniform(dtype),
+                    )
                 }
             }
             ["fused", dt, labels] => {
@@ -517,7 +572,39 @@ impl PlanState {
                         s.op, me, p, s.n, dtype,
                     ));
                 }
-                (Some(sched), input, dtype)
+                (Some(sched), input, ReduceDtype::Uniform(dtype))
+            }
+            ["fusedmix", labels] => {
+                let specs: Vec<(FuseSpec, DType)> = labels
+                    .split(';')
+                    .filter(|s| !s.is_empty())
+                    .map(parse_mixed_label)
+                    .collect::<std::result::Result<_, _>>()?;
+                let kspecs: Vec<(FuseSpec, ElemKind)> =
+                    specs.iter().map(|(s, dt)| (s.clone(), dt.kind())).collect();
+                let (mut scheds, _, mut kind_tables) =
+                    fuse::fuse_world_mixed(&kspecs, &view, &cfg.machine)
+                        .map_err(|e| e.to_string())?;
+                let sched = scheds.swap_remove(me);
+                let kinds = kind_tables.swap_remove(me);
+                let input = canonical_fused_mixed_input_bytes(&specs, me, p);
+                // Constituent output windows as composite byte ranges, in
+                // spec order (mixed schedules are byte-scaled, so slice
+                // offsets are byte offsets). Zero-length windows are
+                // dropped: they would sit ambiguously on a boundary.
+                let mut out_windows = Vec::new();
+                let mut off = 0usize;
+                for (s, dt) in &specs {
+                    let (_, so) = s.op.io_elems(s.n, p);
+                    let bytes = so * dt.bytes();
+                    if bytes > 0 {
+                        out_windows.push((off, off + bytes, *dt));
+                    }
+                    off += bytes;
+                }
+                let scratch: Vec<Option<DType>> =
+                    kinds.iter().map(|k| DType::from_kind(*k).ok()).collect();
+                (Some(sched), input, ReduceDtype::Mixed { out_windows, scratch })
             }
             _ => return Err(format!("bad job spec '{spec}'")),
         };
@@ -559,7 +646,7 @@ impl PlanState {
             }
             None => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
         };
-        Ok(PlanState { sched, dtype, input, output, scratch, wire, stage })
+        Ok(PlanState { sched, rdtype, input, output, scratch, wire, stage })
     }
 
     /// Interpret the schedule over the persistent channels and buffers.
@@ -571,7 +658,7 @@ impl PlanState {
         chans: &mut BTreeMap<usize, Mailbox>,
         dl: &Deadline,
     ) -> std::result::Result<(), WErr> {
-        let PlanState { sched, dtype, input, output, scratch, wire, stage } = self;
+        let PlanState { sched, rdtype, input, output, scratch, wire, stage } = self;
         let Some(sched) = sched else { return Ok(()) };
         let eb = sched.elem_bytes;
         // Every execute starts from zeroed result buffers, like the
@@ -611,6 +698,9 @@ impl PlanState {
                     }
                     Step::Reduce { src, dst } => {
                         let len = stage_copy(input, output, scratch, stage, src, eb);
+                        let dt = rdtype
+                            .for_target(dst, eb)
+                            .map_err(|w| WErr { round: rno, peer: me, what: w })?;
                         let r = slice_bytes(dst, eb);
                         let target = match dst.buf {
                             BufId::Output => &mut output[r],
@@ -633,7 +723,7 @@ impl PlanState {
                                 ),
                             });
                         }
-                        reduce_bytes(*dtype, &stage[..len], target);
+                        reduce_bytes(dt, &stage[..len], target);
                     }
                     Step::Rotate { src, dst, block, shift } => {
                         let len = stage_copy(input, output, scratch, stage, src, eb);
@@ -927,7 +1017,7 @@ mod tests {
     fn plan_state_builds_from_spec_strings() {
         let cfg = test_cfg(2, 2, 0, DEFAULT_POOL_RING_BYTES);
         let st = PlanState::build(&cfg, "single allgather bruck 3 8").unwrap();
-        assert_eq!(st.dtype, DType::U64);
+        assert_eq!(st.rdtype, ReduceDtype::Uniform(DType::U64));
         assert_eq!(st.input.len(), 3 * 8);
         assert_eq!(st.output.len(), 3 * 4 * 8);
         assert!(!st.wire.is_empty());
@@ -945,6 +1035,41 @@ mod tests {
         assert!(PlanState::build(&cfg, "single allgather bruck 3").is_err());
         assert!(PlanState::build(&cfg, "fused i8 allgather/bruck@2").is_err());
         assert!(PlanState::build(&cfg, "warble").is_err());
+    }
+
+    #[test]
+    fn plan_state_builds_mixed_specs() {
+        let cfg = test_cfg(2, 2, 0, DEFAULT_POOL_RING_BYTES);
+        let st =
+            PlanState::build(&cfg, "fusedmix f32:allgather/bruck@2;u64:allreduce/loc-aware@4")
+                .unwrap();
+        // f32 allgather: 2 elems in, 8 out; u64 allreduce: 4 in, 4 out.
+        assert_eq!(st.input.len(), 2 * 4 + 4 * 8);
+        assert_eq!(st.output.len(), 2 * 4 * 4 + 4 * 8);
+        match &st.rdtype {
+            ReduceDtype::Mixed { out_windows, scratch } => {
+                assert_eq!(out_windows.as_slice(), &[(0, 32, DType::F32), (32, 64, DType::U64)]);
+                // One kind entry per composite scratch buffer.
+                assert_eq!(scratch.len(), st.scratch.len());
+            }
+            other => panic!("expected a mixed reduce dtype, got {other:?}"),
+        }
+        assert!(PlanState::build(&cfg, "fusedmix i8:allgather/bruck@2").is_err());
+        assert!(PlanState::build(&cfg, "fusedmix allgather/bruck@2").is_err());
+    }
+
+    #[test]
+    fn mixed_reduce_dtype_resolves_windows_and_scratch() {
+        let rd = ReduceDtype::Mixed {
+            out_windows: vec![(0, 32, DType::F32), (32, 64, DType::U64)],
+            scratch: vec![Some(DType::F32), None],
+        };
+        // Byte-scaled schedules: eb == 1, slice offsets are byte offsets.
+        assert_eq!(rd.for_target(&Slice::output(4, 8), 1).unwrap(), DType::F32);
+        assert_eq!(rd.for_target(&Slice::output(32, 16), 1).unwrap(), DType::U64);
+        assert!(rd.for_target(&Slice::output(28, 8), 1).is_err());
+        assert_eq!(rd.for_target(&Slice::at(BufId::Scratch(0), 0, 4), 1).unwrap(), DType::F32);
+        assert!(rd.for_target(&Slice::at(BufId::Scratch(1), 0, 4), 1).is_err());
     }
 
     #[test]

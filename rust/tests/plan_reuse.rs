@@ -10,6 +10,9 @@
 //!   identical modeled delta (the schedule is deterministic).
 //! * Repeated planned executes allocate strictly less than repeated
 //!   one-shot calls — measured with a counting global allocator.
+//! * The fused zero-copy view path performs **zero** staging copies,
+//!   while the staged path tallies exactly its (input + output) bytes
+//!   per execute — measured with the process-global staging counter.
 //!
 //! The tests in this file share process-wide counters (allocator bytes,
 //! sub-communicator count), so every test takes `SERIAL` to keep the
@@ -478,4 +481,71 @@ fn zero_length_plans_are_uniform_no_ops() {
     assert!(run.results.iter().all(|&ok| ok));
     let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
     assert_eq!(total, 0, "zero-length plans must send no messages");
+}
+
+/// Zero-copy accounting for the serving hot path: fused view executes
+/// perform **zero** staging copies, while staged executes tally exactly
+/// (input + output) · elem-size bytes per rank per execute on the
+/// process-global staging counter — and both paths produce identical
+/// bytes on the serving-shaped spec list (allgather ⊕ reduce-scatter ⊕
+/// consensus allreduce).
+#[test]
+fn fused_view_executes_do_zero_staging_copies() {
+    let _g = serial();
+    use locag::collectives::{staging_bytes_total, FuseSpec, OpKind};
+    let topo = Topology::regions(2, 2);
+    let p = topo.size();
+    let specs = vec![
+        FuseSpec::new(OpKind::Allgather, "loc-bruck", 4),
+        FuseSpec::new(OpKind::ReduceScatter, "ring", 2),
+        FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+    ];
+    let in_elems = 4 + 2 * p + 2;
+    let out_elems = 4 * p + 2 + 2;
+    let view_iters = 10usize;
+    let staged_iters = 3usize;
+    let inputs = |rank: usize| -> Vec<Vec<u64>> {
+        vec![
+            shifted_contribution(rank, 4, 1),
+            (0..2 * p).map(|x| (rank * 1_009 + x) as u64).collect(),
+            shifted_contribution(rank, 2, 2),
+        ]
+    };
+
+    // View path: N executes, zero staging bytes.
+    let before = staging_bytes_total();
+    let view_run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan = collectives::plan_fused::<u64>(c, &specs).unwrap();
+        let ins = inputs(c.rank());
+        let mut outs = vec![vec![0u64; 4 * p], vec![0u64; 2], vec![0u64; 2]];
+        for _ in 0..view_iters {
+            let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+            let mut out_refs: Vec<&mut [u64]> = outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            plan.execute_view(&in_refs, &mut out_refs).unwrap();
+        }
+        outs
+    });
+    assert_eq!(
+        staging_bytes_total() - before,
+        0,
+        "the zero-copy view path must perform no staging copies"
+    );
+
+    // Staged path: every execute copies the full composite in and out.
+    let before = staging_bytes_total();
+    let staged_run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let mut plan = collectives::plan_fused::<u64>(c, &specs).unwrap();
+        let ins = inputs(c.rank());
+        let mut outs = vec![vec![0u64; 4 * p], vec![0u64; 2], vec![0u64; 2]];
+        for _ in 0..staged_iters {
+            let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+            let mut out_refs: Vec<&mut [u64]> = outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            plan.execute(&in_refs, &mut out_refs).unwrap();
+        }
+        outs
+    });
+    let staged_bytes = staging_bytes_total() - before;
+    let expect = (p * staged_iters * (in_elems + out_elems) * std::mem::size_of::<u64>()) as u64;
+    assert_eq!(staged_bytes, expect, "staged path must tally exactly its copied bytes");
+    assert_eq!(staged_run.results, view_run.results, "staged and view outputs must agree");
 }

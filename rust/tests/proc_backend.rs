@@ -27,7 +27,12 @@
 //!    `Error::Transport`, poisons the pool (fail-fast thereafter), and a
 //!    freshly spawned pool fully recovers,
 //! 9. a `PoolGate` serving thread-per-rank exchanges of a fused f32 plan
-//!    (the coordinator's hot path) matches the sim backend.
+//!    (the coordinator's hot path) matches the sim backend,
+//! 10. a mixed-element-type fused job (`f32` allgather ⊕ `u64` allreduce
+//!     ⊕ `f32` reduce-scatter), run byte-scaled through the workers'
+//!     segmented-view interpreter, matches the sim backend,
+//! 11. the full serving-chunk shape (K allgathers ⊕ reduce-scatter
+//!     shards ⊕ consensus allreduce, f32) matches the sim backend.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -56,6 +61,8 @@ fn main() {
     killed_worker_surfaces_typed_error();
     killed_worker_between_executes_then_fresh_pool_recovers();
     pool_gate_serves_thread_per_rank_exchanges();
+    fused_mixed_cross_backend_conformance();
+    serving_chunk_shape_conformance();
     println!("proc_backend: all scenarios passed");
 }
 
@@ -335,4 +342,39 @@ fn pool_gate_serves_thread_per_rank_exchanges() {
         }
     }
     println!("proc_backend: PoolGate thread-per-rank exchanges passed");
+}
+
+/// Mixed element types across OS processes: every worker executes the
+/// byte-scaled fused schedule through the segmented-view interpreter, so
+/// the `f32` constituents reduce as floats and the `u64` ones as
+/// integers — byte-identical to the in-process backend. The canonical
+/// generators keep float payloads integer-valued, so sums are exact.
+fn fused_mixed_cross_backend_conformance() {
+    for (regions, ppr) in [(2usize, 2usize), (1, 4)] {
+        let job = ProcJob::FusedMixed {
+            specs: vec![
+                (FuseSpec::new(OpKind::Allgather, "loc-bruck", 2), DType::F32),
+                (FuseSpec::new(OpKind::Allreduce, "loc-aware", 1), DType::U64),
+                (FuseSpec::new(OpKind::ReduceScatter, "ring", 1), DType::F32),
+            ],
+        };
+        let what = format!("fused-mixed f32+u64 {regions}x{ppr}");
+        assert_conformance(regions, ppr, &job, &what);
+    }
+    println!("proc_backend: mixed-type fused conformance passed");
+}
+
+/// The serving loop's per-chunk collective, exactly as `serve` plans it:
+/// K request allgathers ⊕ reduce-scatter shards ⊕ the consensus
+/// allreduce, all f32, as one fused schedule — byte-identical across
+/// backends.
+fn serving_chunk_shape_conformance() {
+    let k = 4usize;
+    let mut specs: Vec<FuseSpec> =
+        (0..k).map(|_| FuseSpec::new(OpKind::Allgather, "loc-bruck", 3)).collect();
+    specs.push(FuseSpec::new(OpKind::ReduceScatter, "ring", 2));
+    specs.push(FuseSpec::new(OpKind::Allreduce, "loc-aware", 2 * k));
+    let job = ProcJob::Fused { specs, dtype: DType::F32 };
+    assert_conformance(2, 2, &job, "serving chunk shape (4xAG + RS + AR, f32)");
+    println!("proc_backend: serving-chunk fused conformance passed");
 }

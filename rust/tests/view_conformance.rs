@@ -1,0 +1,402 @@
+//! Zero-copy view conformance: executing a plan through segmented buffer
+//! views ([`IoView`]/[`IoViewMut`]) is **byte-identical** to the staged
+//! execute — for every registered (operation, algorithm) pair over the
+//! conformance grid, for fused plans with heterogeneous constituents, and
+//! for mixed-element-type fused plans (which have no staged path; their
+//! oracle is the constituents' sequential staged executes).
+//!
+//! Inputs and outputs are deliberately split into **two segments at a
+//! mid-buffer element boundary** — not at a constituent boundary — so the
+//! executor's gather/scatter across segment seams is exercised on every
+//! grid point, including the `n = 0` rows (empty segments).
+//!
+//! Staging-copy *accounting* (the process-global counter) is asserted in
+//! `plan_reuse.rs`, which owns the serial-test mutex; this suite only
+//! asserts byte-level conformance so its tests can run in parallel.
+//!
+//! [`IoView`]: locag::collectives::IoView
+//! [`IoViewMut`]: locag::collectives::IoViewMut
+
+use std::collections::BTreeSet;
+
+use locag::collectives::{
+    self, AllreduceRegistry, AlltoallRegistry, ElemKind, FuseSpec, IoView, IoViewMut, OpKind,
+    ReduceScatterRegistry, Registry, Shape,
+};
+use locag::comm::{Comm, CommWorld, Timing};
+use locag::topology::Topology;
+
+/// (regions, ranks-per-region): the same grid as the conformance suites.
+const SHAPES: &[(usize, usize)] = &[
+    (1, 1),
+    (1, 4),
+    (2, 2),
+    (4, 4),
+    (3, 2),
+    (5, 2),
+    (2, 3),
+    (3, 3),
+    (8, 4),
+];
+
+const NS: &[usize] = &[0, 1, 3];
+
+/// Salted canonical inputs (same family as `fused_conformance`).
+fn input_for(op: OpKind, rank: usize, p: usize, n: usize, salt: usize) -> Vec<u64> {
+    match op {
+        OpKind::Allgather => {
+            (0..n).map(|j| (rank * 1_000_003 + j + salt * 7919) as u64).collect()
+        }
+        OpKind::Allreduce => (0..n).map(|j| (rank * 131_071 + j + salt * 13) as u64).collect(),
+        OpKind::Alltoall | OpKind::ReduceScatter => {
+            let b = n.max(1);
+            (0..p * n)
+                .map(|x| (rank * 1_000_003 + (x / b) * 1_009 + x % b + salt * 7919) as u64)
+                .collect()
+        }
+    }
+}
+
+fn out_len(op: OpKind, p: usize, n: usize) -> usize {
+    match op {
+        OpKind::Allgather | OpKind::Alltoall => n * p,
+        OpKind::Allreduce | OpKind::ReduceScatter => n,
+    }
+}
+
+/// Plan one (op, algo) pair once, execute it staged and then through
+/// two-segment views, and return both outputs for comparison.
+fn run_both(
+    c: &Comm,
+    op: OpKind,
+    name: &str,
+    n: usize,
+) -> locag::error::Result<(Vec<u64>, Vec<u64>)> {
+    let p = c.size();
+    let input = input_for(op, c.rank(), p, n, 0);
+    let mut staged = vec![0u64; out_len(op, p, n)];
+    let mut viewed = vec![0u64; out_len(op, p, n)];
+    let isplit = input.len() / 2;
+    let osplit = staged.len() / 2;
+    macro_rules! both {
+        ($plan:expr) => {{
+            let mut plan = $plan;
+            plan.execute(&input, &mut staged)?;
+            let mut iv = IoView::new();
+            iv.push::<u64>(&input[..isplit]);
+            iv.push::<u64>(&input[isplit..]);
+            let (lo, hi) = viewed.split_at_mut(osplit);
+            let mut ov = IoViewMut::new();
+            ov.push::<u64>(lo);
+            ov.push::<u64>(hi);
+            plan.execute_view(&iv, &mut ov)?;
+        }};
+    }
+    match op {
+        OpKind::Allgather => both!(Registry::<u64>::standard().plan(name, c, Shape::elems(n))?),
+        OpKind::Allreduce => {
+            both!(AllreduceRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?)
+        }
+        OpKind::Alltoall => {
+            both!(AlltoallRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?)
+        }
+        OpKind::ReduceScatter => {
+            both!(ReduceScatterRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?)
+        }
+    }
+    Ok((staged, viewed))
+}
+
+/// Every registered (op, algorithm) pair executes byte-identically
+/// through segmented views, over the full conformance grid, with 100%
+/// registry coverage.
+#[test]
+fn view_matches_staged_for_every_registered_algorithm() {
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    let pairs: Vec<(OpKind, &'static str)> = {
+        let mut v = Vec::new();
+        for name in Registry::<u64>::standard().names() {
+            v.push((OpKind::Allgather, name));
+        }
+        for name in AllreduceRegistry::<u64>::standard().names() {
+            v.push((OpKind::Allreduce, name));
+        }
+        for name in AlltoallRegistry::<u64>::standard().names() {
+            v.push((OpKind::Alltoall, name));
+        }
+        for name in ReduceScatterRegistry::<u64>::standard().names() {
+            v.push((OpKind::ReduceScatter, name));
+        }
+        v
+    };
+    for &(regions, ppr) in SHAPES {
+        let topo = Topology::regions(regions, ppr);
+        for &n in NS {
+            for &(op, name) in &pairs {
+                let run = CommWorld::run(&topo, Timing::Wallclock, |c| -> Option<String> {
+                    match run_both(c, op, name, n) {
+                        Ok((staged, viewed)) => {
+                            assert_eq!(
+                                staged,
+                                viewed,
+                                "view != staged: {op}/{name} {regions}x{ppr} n={n} rank {}",
+                                c.rank()
+                            );
+                            None
+                        }
+                        Err(e) => Some(e.to_string()),
+                    }
+                });
+                for (rank, r) in run.results.iter().enumerate() {
+                    assert_eq!(r, &run.results[0], "rank {rank} diverged: {op}/{name}");
+                }
+                match &run.results[0] {
+                    None => {
+                        covered.insert(format!("{op}/{name}"));
+                    }
+                    Some(msg) => {
+                        // Shape rejections are fine (power-of-two
+                        // preconditions); anything else is a view-path bug.
+                        assert!(
+                            msg.contains("power-of-two"),
+                            "{op}/{name} {regions}x{ppr} n={n}: {msg}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let missing: Vec<String> = pairs
+        .iter()
+        .map(|(op, name)| format!("{op}/{name}"))
+        .filter(|k| !covered.contains(k))
+        .collect();
+    assert!(missing.is_empty(), "pairs never executed through views: {missing:?}");
+}
+
+/// A fused plan's `execute_view` matches its staged `execute` on a
+/// heterogeneous spec list (serving shape: allgathers ⊕ reduce-scatter ⊕
+/// consensus allreduce ⊕ alltoall, plus a zero-length constituent), and
+/// stays stable across repeated view executes (scratch reuse).
+#[test]
+fn fused_view_matches_staged_across_constituent_seams() {
+    for &(regions, ppr) in &[(2usize, 2usize), (4, 4), (4, 2), (2, 8)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let specs = vec![
+            FuseSpec::new(OpKind::Allgather, "loc-bruck", 3),
+            FuseSpec::new(OpKind::ReduceScatter, "ring", 2),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+            FuseSpec::new(OpKind::Alltoall, "pairwise", 1),
+            FuseSpec::new(OpKind::Allgather, "bruck", 0),
+        ];
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = collectives::plan_fused::<u64>(c, &specs).unwrap();
+            let ins: Vec<Vec<u64>> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, s)| input_for(s.op, c.rank(), p, s.n, i))
+                .collect();
+            let mut staged: Vec<Vec<u64>> =
+                specs.iter().map(|s| vec![0u64; out_len(s.op, p, s.n)]).collect();
+            let mut viewed = staged.clone();
+            {
+                let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+                let mut out_refs: Vec<&mut [u64]> =
+                    staged.iter_mut().map(|v| v.as_mut_slice()).collect();
+                plan.execute(&in_refs, &mut out_refs).unwrap();
+            }
+            for _ in 0..3 {
+                let in_refs: Vec<&[u64]> = ins.iter().map(|v| v.as_slice()).collect();
+                let mut out_refs: Vec<&mut [u64]> =
+                    viewed.iter_mut().map(|v| v.as_mut_slice()).collect();
+                plan.execute_view(&in_refs, &mut out_refs).unwrap();
+                assert_eq!(viewed, staged, "rank {} at {regions}x{ppr}", c.rank());
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok));
+    }
+}
+
+/// Mixed-element-type fusion (`f32` allgather ⊕ `u64` allreduce ⊕ `f32`
+/// reduce-scatter, plus a zero-length `f32` constituent): the view-only
+/// executor matches the constituents' sequential staged executes.
+/// Float payloads are integer-valued so sums are exact and the
+/// comparison is byte-strict.
+#[test]
+fn mixed_type_fusion_matches_sequential_staged_oracle() {
+    for &(regions, ppr) in &[(2usize, 2usize), (4, 4), (2, 8)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let specs = vec![
+            (FuseSpec::new(OpKind::Allgather, "loc-bruck", 3), ElemKind::F32),
+            (FuseSpec::new(OpKind::Allreduce, "loc-aware", 2), ElemKind::U64),
+            (FuseSpec::new(OpKind::ReduceScatter, "ring", 2), ElemKind::F32),
+            (FuseSpec::new(OpKind::Allgather, "bruck", 0), ElemKind::F32),
+        ];
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = c.rank();
+            let ag_in: Vec<f32> = (0..3).map(|j| (r * 100 + j) as f32).collect();
+            let ar_in: Vec<u64> = (0..2).map(|j| (r * 1_000_003 + j) as u64).collect();
+            let rs_in: Vec<f32> = (0..2 * p).map(|x| ((r * 31 + x) % 97) as f32).collect();
+            let empty_in: Vec<f32> = Vec::new();
+
+            // Sequential staged oracle, one registry plan per constituent.
+            let mut ag_want = vec![0f32; 3 * p];
+            Registry::<f32>::standard()
+                .plan("loc-bruck", c, Shape::elems(3))
+                .unwrap()
+                .execute(&ag_in, &mut ag_want)
+                .unwrap();
+            let mut ar_want = vec![0u64; 2];
+            AllreduceRegistry::<u64>::standard()
+                .plan("loc-aware", c, Shape::elems(2))
+                .unwrap()
+                .execute(&ar_in, &mut ar_want)
+                .unwrap();
+            let mut rs_want = vec![0f32; 2];
+            ReduceScatterRegistry::<f32>::standard()
+                .plan("ring", c, Shape::elems(2))
+                .unwrap()
+                .execute(&rs_in, &mut rs_want)
+                .unwrap();
+
+            // Mixed fused execution over typed view segments, spec order.
+            let mut plan = collectives::plan_fused_mixed(c, &specs).unwrap();
+            let mut ag_out = vec![0f32; 3 * p];
+            let mut ar_out = vec![0u64; 2];
+            let mut rs_out = vec![0f32; 2];
+            let mut empty_out: Vec<f32> = Vec::new();
+            for _ in 0..2 {
+                let mut iv = IoView::new();
+                iv.push::<f32>(&ag_in);
+                iv.push::<u64>(&ar_in);
+                iv.push::<f32>(&rs_in);
+                iv.push::<f32>(&empty_in);
+                let mut ov = IoViewMut::new();
+                ov.push::<f32>(&mut ag_out);
+                ov.push::<u64>(&mut ar_out);
+                ov.push::<f32>(&mut rs_out);
+                ov.push::<f32>(&mut empty_out);
+                plan.execute_view(&iv, &mut ov).unwrap();
+                assert_eq!(ag_out, ag_want, "rank {r}: f32 allgather at {regions}x{ppr}");
+                assert_eq!(ar_out, ar_want, "rank {r}: u64 allreduce at {regions}x{ppr}");
+                assert_eq!(rs_out, rs_want, "rank {r}: f32 reduce-scatter at {regions}x{ppr}");
+            }
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "{regions}x{ppr}");
+    }
+}
+
+/// Mixed fusion on non-power-of-two shapes, using the any-`p` algorithms
+/// (ring allgather, Rabenseifner allreduce, pairwise alltoall).
+#[test]
+fn mixed_type_fusion_handles_non_power_of_two_shapes() {
+    for &(regions, ppr) in &[(2usize, 3usize), (3, 3)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let specs = vec![
+            (FuseSpec::new(OpKind::Allgather, "ring", 2), ElemKind::F32),
+            (FuseSpec::new(OpKind::Allreduce, "rabenseifner", 3), ElemKind::U64),
+            (FuseSpec::new(OpKind::Alltoall, "pairwise", 1), ElemKind::U64),
+        ];
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = c.rank();
+            let ag_in: Vec<f32> = (0..2).map(|j| (r * 50 + j + 1) as f32).collect();
+            let ar_in: Vec<u64> = (0..3).map(|j| (r * 8191 + j) as u64).collect();
+            let a2a_in: Vec<u64> = (0..p).map(|x| (r * 1_000_003 + x) as u64).collect();
+
+            let mut ag_want = vec![0f32; 2 * p];
+            Registry::<f32>::standard()
+                .plan("ring", c, Shape::elems(2))
+                .unwrap()
+                .execute(&ag_in, &mut ag_want)
+                .unwrap();
+            let mut ar_want = vec![0u64; 3];
+            AllreduceRegistry::<u64>::standard()
+                .plan("rabenseifner", c, Shape::elems(3))
+                .unwrap()
+                .execute(&ar_in, &mut ar_want)
+                .unwrap();
+            let mut a2a_want = vec![0u64; p];
+            AlltoallRegistry::<u64>::standard()
+                .plan("pairwise", c, Shape::elems(1))
+                .unwrap()
+                .execute(&a2a_in, &mut a2a_want)
+                .unwrap();
+
+            let mut plan = collectives::plan_fused_mixed(c, &specs).unwrap();
+            let mut ag_out = vec![0f32; 2 * p];
+            let mut ar_out = vec![0u64; 3];
+            let mut a2a_out = vec![0u64; p];
+            let mut iv = IoView::new();
+            iv.push::<f32>(&ag_in);
+            iv.push::<u64>(&ar_in);
+            iv.push::<u64>(&a2a_in);
+            let mut ov = IoViewMut::new();
+            ov.push::<f32>(&mut ag_out);
+            ov.push::<u64>(&mut ar_out);
+            ov.push::<u64>(&mut a2a_out);
+            plan.execute_view(&iv, &mut ov).unwrap();
+            assert_eq!(ag_out, ag_want, "rank {r}: f32 allgather at {regions}x{ppr}");
+            assert_eq!(ar_out, ar_want, "rank {r}: u64 allreduce at {regions}x{ppr}");
+            assert_eq!(a2a_out, a2a_want, "rank {r}: u64 alltoall at {regions}x{ppr}");
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "{regions}x{ppr}");
+    }
+}
+
+/// Segment-count and element-kind mismatches are rejected up front by the
+/// mixed executor (no partial execution, no panic).
+#[test]
+fn mixed_type_fusion_validates_views() {
+    let topo = Topology::regions(2, 2);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let p = c.size();
+        let specs = vec![
+            (FuseSpec::new(OpKind::Allgather, "loc-bruck", 2), ElemKind::F32),
+            (FuseSpec::new(OpKind::Allreduce, "loc-aware", 1), ElemKind::U64),
+        ];
+        let mut plan = collectives::plan_fused_mixed(c, &specs).unwrap();
+        let ag_in = vec![1f32; 2];
+        let ar_in = vec![1u64; 1];
+        let mut ag_out = vec![0f32; 2 * p];
+        let mut ar_out = vec![0u64; 1];
+
+        // Too few input segments.
+        let mut iv = IoView::new();
+        iv.push::<f32>(&ag_in);
+        let mut ov = IoViewMut::new();
+        ov.push::<f32>(&mut ag_out);
+        ov.push::<u64>(&mut ar_out);
+        assert!(plan.execute_view(&iv, &mut ov).is_err(), "missing input segment accepted");
+
+        // Wrong element kind on the allreduce segment (same byte width,
+        // so only the kind check can catch it).
+        let wrong = vec![1i64; 1];
+        let mut iv = IoView::new();
+        iv.push::<f32>(&ag_in);
+        iv.push::<i64>(&wrong);
+        let mut ov = IoViewMut::new();
+        ov.push::<f32>(&mut ag_out);
+        ov.push::<u64>(&mut ar_out);
+        assert!(plan.execute_view(&iv, &mut ov).is_err(), "wrong element kind accepted");
+
+        // The valid call still succeeds afterwards (no poisoned state)
+        // and both ranks of a pair see identical gathers.
+        let mut iv = IoView::new();
+        iv.push::<f32>(&ag_in);
+        iv.push::<u64>(&ar_in);
+        let mut ov = IoViewMut::new();
+        ov.push::<f32>(&mut ag_out);
+        ov.push::<u64>(&mut ar_out);
+        plan.execute_view(&iv, &mut ov).unwrap();
+        assert_eq!(ag_out, vec![1f32; 2 * p]);
+        assert_eq!(ar_out, vec![p as u64]);
+        true
+    });
+    assert!(run.results.iter().all(|&ok| ok));
+}
