@@ -112,6 +112,7 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
     );
     for algo in [
         Algorithm::Bruck,
+        Algorithm::Pat,
         Algorithm::Ring,
         Algorithm::Hierarchical,
         Algorithm::Multilane,
@@ -150,8 +151,10 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
     let topo = Topology::regions(4, 4);
     for (op, baseline, aware) in [
         (OpKind::Allreduce, "recursive-doubling", "loc-aware"),
+        (OpKind::Allreduce, "rabenseifner", "loc-rabenseifner"),
         (OpKind::Alltoall, "bruck", "loc-aware"),
         (OpKind::ReduceScatter, "ring", "loc-aware"),
+        (OpKind::ReduceScatter, "pat", "loc-aware"),
     ] {
         let run_one = |name: &str| match op {
             OpKind::Allreduce => sim::run_allreduce(name, &topo, &m, 2),
@@ -168,8 +171,10 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
     println!(
         "\nEvery algorithm is a communication-schedule (IR) builder executed\n\
          by one generic interpreter. Inspect any schedule and its modeled\n\
-         cost with `locag explain --algo loc-bruck --regions 4 --ppr 4`,\n\
-         and let the cost model pick the algorithm with\n\
+         cost with `locag explain --algo loc-bruck --regions 4 --ppr 4`\n\
+         (it also prices every candidate in the op's model-tuned pool —\n\
+         the crossover table; `--sweep` prints the winner per message\n\
+         size), and let the cost model pick the algorithm with\n\
          `locag run --algo model-tuned` (scores every candidate schedule\n\
          against the machine's postal parameters, plans the cheapest):"
     );
@@ -552,9 +557,12 @@ pub fn fuse_cmd(args: &Args) -> Result<i32> {
 
 /// `locag explain` — print an algorithm's communication schedule and its
 /// IR-derived cost breakdown: the schedule table of one rank, per-class
-/// traffic, and the predicted completion time next to every candidate's.
-/// With `--fused`, explain the serving-loop fusion instead
-/// ([`explain_fused`]).
+/// traffic, the predicted completion time, and the candidate crossover
+/// table (every candidate of the op's model-tuned pool priced at this
+/// shape, winner marked). With `--sweep [MAX_N]`, print the model-tuned
+/// winner per message size over a log-spaced n sweep instead — the
+/// PAT / ring / loc-aware crossover without plotting. With `--fused`,
+/// explain the serving-loop fusion instead ([`explain_fused`]).
 pub fn explain(args: &Args) -> Result<i32> {
     use crate::collectives::schedule::{Schedule, WorldView};
     use crate::collectives::{model_tuned, schedule, OpKind};
@@ -597,6 +605,51 @@ pub fn explain(args: &Args) -> Result<i32> {
             OpKind::ReduceScatter => schedule::build_reduce_scatter(name, &view, r, n, esz),
         }
     };
+    let world: Vec<usize> = (0..p).collect();
+    // The op's model-tuned candidate pool, by registry name. Shared by the
+    // crossover table and the `--sweep` mode.
+    let candidates: Vec<String> = match op {
+        OpKind::Allgather => {
+            model_tuned::ALLGATHER_CANDIDATES.iter().map(|a| a.name().to_string()).collect()
+        }
+        OpKind::Allreduce => {
+            model_tuned::ALLREDUCE_CANDIDATES.iter().map(|s| s.to_string()).collect()
+        }
+        OpKind::Alltoall => {
+            model_tuned::ALLTOALL_CANDIDATES.iter().map(|s| s.to_string()).collect()
+        }
+        OpKind::ReduceScatter => {
+            model_tuned::REDUCE_SCATTER_CANDIDATES.iter().map(|s| s.to_string()).collect()
+        }
+    };
+
+    if let Some(sweep) = args.options.get("sweep") {
+        // `--sweep` alone sweeps to 64 Ki elements; `--sweep N` stops at N.
+        let max_n = sweep.parse::<usize>().unwrap_or(1 << 16).max(1);
+        println!(
+            "model-tuned winner per message size: {op} on {p} ranks \
+             ({regions} regions x {ppr}) [{}]",
+            m.name
+        );
+        println!("{:>9} {:>11}  {:<26} {:>13}", "n", "bytes/rank", "winner", "predicted");
+        let mut n_s = 1usize;
+        loop {
+            let (winner, scheds) = match op {
+                OpKind::Allgather => model_tuned::pick_allgather(&view, &m, n_s, esz)?,
+                OpKind::Allreduce => model_tuned::pick_allreduce(&view, &m, n_s, esz)?,
+                OpKind::Alltoall => model_tuned::pick_alltoall(&view, &m, n_s, esz)?,
+                OpKind::ReduceScatter => model_tuned::pick_reduce_scatter(&view, &m, n_s, esz)?,
+            };
+            let t = cost::predict(&scheds, &topo, &world, &m)?;
+            println!("{:>9} {:>11}  {:<26} {:>13}", n_s, n_s * esz, winner, seconds(t));
+            if n_s >= max_n {
+                break;
+            }
+            n_s = (n_s * 4).min(max_n);
+        }
+        return Ok(0);
+    }
+
     let scheds: Vec<Schedule> = if algo.eq_ignore_ascii_case("model-tuned") {
         let (winner, scheds) = match op {
             OpKind::Allgather => model_tuned::pick_allgather(&view, &m, n, esz)?,
@@ -616,7 +669,6 @@ pub fn explain(args: &Args) -> Result<i32> {
         sched.label, m.name
     );
     print_schedule(sched, rank, &topo);
-    let world: Vec<usize> = (0..p).collect();
     let rep = cost::evaluate(&scheds, &topo, &world, &m)?;
     let mine = &rep.per_rank[rank];
     println!("\ncost breakdown (IR-derived, machine '{}'):", m.name);
@@ -630,11 +682,46 @@ pub fn explain(args: &Args) -> Result<i32> {
         rep.max_nonlocal_bytes()
     );
     println!("  predicted completion: {}", seconds(rep.predicted));
+
+    // Crossover table: price every candidate in the op's model-tuned pool
+    // at this exact (p, ppr, n) point. The winner marked here is what
+    // `--algo model-tuned` plans (same candidate order, same tie-break);
+    // candidates whose plan-time preconditions reject the shape say so.
+    println!("\ncandidate crossover at this shape (model-tuned pool):");
+    let mut priced: Vec<(String, std::result::Result<f64, String>)> = Vec::new();
+    let mut best: Option<(f64, usize)> = None;
+    for name in &candidates {
+        let res = (0..p)
+            .map(|r| build_one(name, r))
+            .collect::<Result<Vec<Schedule>>>()
+            .and_then(|s| cost::predict(&s, &topo, &world, &m));
+        match res {
+            Ok(t) => {
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, priced.len()));
+                }
+                priced.push((name.clone(), Ok(t)));
+            }
+            Err(e) => priced.push((name.clone(), Err(e.to_string()))),
+        }
+    }
+    for (i, (name, res)) in priced.iter().enumerate() {
+        match res {
+            Ok(t) => println!(
+                "  {:<26} {:>13}{}",
+                name,
+                seconds(*t),
+                if best.map_or(false, |(_, bi)| bi == i) { "   <-- winner" } else { "" }
+            ),
+            Err(msg) => println!("  {:<26} {:>13}   rejected: {msg}", name, "-"),
+        }
+    }
     Ok(0)
 }
 
 /// `locag bench` — micro-bench a set of (shape, algorithm) points across
-/// allgather and reduce-scatter, emit a `BENCH_*.json` perf-trajectory
+/// all four ops (allgather, reduce-scatter, allreduce, alltoall), emit a
+/// `BENCH_*.json` perf-trajectory
 /// artifact, and (with `--compare OLD.json`) run the perf-regression gate
 /// against a baseline artifact: any algorithm whose deterministic
 /// `vtime`/`predicted` regressed by more than 20% fails the command —
@@ -658,11 +745,15 @@ pub fn bench(args: &Args) -> Result<i32> {
     let ag_algos = [
         Algorithm::SystemDefault,
         Algorithm::Bruck,
+        Algorithm::Pat,
         Algorithm::Ring,
         Algorithm::LocalityBruck,
         Algorithm::ModelTuned,
     ];
-    let rs_algos = ["ring", "recursive-halving", "loc-aware", "model-tuned"];
+    let rs_algos = ["ring", "recursive-halving", "pat", "loc-aware", "model-tuned"];
+    let ar_algos =
+        ["recursive-doubling", "loc-aware", "rabenseifner", "loc-rabenseifner", "model-tuned"];
+    let a2a_algos = ["pairwise", "bruck", "loc-aware", "model-tuned"];
     let shapes = [(2usize, 2usize), (4, 4), (8, 4), (4, 8)];
     let ns = [2usize, 256];
     let mut rows: Vec<BenchRow> = Vec::new();
@@ -765,6 +856,38 @@ pub fn bench(args: &Args) -> Result<i32> {
                     predicted: rep.predicted,
                     wall: rep.wall,
                     wall_proc: proc_wall(OpKind::ReduceScatter, algo, n),
+                    verified: rep.verified,
+                });
+            }
+            for algo in ar_algos {
+                let rep = sim::run_allreduce(algo, &topo, &m, n);
+                record(BenchRow {
+                    op: "allreduce".to_string(),
+                    algo: algo.to_string(),
+                    regions,
+                    ppr,
+                    p: rep.p,
+                    n: rep.n,
+                    vtime: rep.vtime,
+                    predicted: rep.predicted,
+                    wall: rep.wall,
+                    wall_proc: proc_wall(OpKind::Allreduce, algo, n),
+                    verified: rep.verified,
+                });
+            }
+            for algo in a2a_algos {
+                let rep = sim::run_alltoall(algo, &topo, &m, n);
+                record(BenchRow {
+                    op: "alltoall".to_string(),
+                    algo: algo.to_string(),
+                    regions,
+                    ppr,
+                    p: rep.p,
+                    n: rep.n,
+                    vtime: rep.vtime,
+                    predicted: rep.predicted,
+                    wall: rep.wall,
+                    wall_proc: proc_wall(OpKind::Alltoall, algo, n),
                     verified: rep.verified,
                 });
             }

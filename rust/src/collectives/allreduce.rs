@@ -21,7 +21,18 @@
 //!   `≈ n/2, n/4, …` elements. **Any** communicator size: non-power-of-two
 //!   `p` folds the `p − p'` highest ranks into partners up front (one
 //!   full-vector send + reduce) and folds the result back out at the end,
-//!   so no plan-time power-of-two precondition remains.
+//!   so no plan-time power-of-two precondition remains;
+//! * **`loc-rabenseifner`**: the fully hierarchical composition (Bienz et
+//!   al., *Node-Aware Improvements to Allreduce* — both phases
+//!   locality-aware). Phase 1 (all-local): a direct reduce-scatter within
+//!   each region leaves local rank `ℓ` with the region's partial of chunk
+//!   `ℓ` of the vector. Phase 2 (the only non-local traffic): lane `ℓ` —
+//!   one member per region — runs a Rabenseifner allreduce of its
+//!   `≈ n/ppr` chunk among the `r` regions, so every non-local message is
+//!   an aggregated per-region partial of a `1/ppr`-sized subvector.
+//!   Phase 3 (all-local): an allgatherv of the fully reduced chunks
+//!   within each region. Any region count (the lane Rabenseifner folds);
+//!   `ppr == 1` falls back to plain `rabenseifner`.
 //!
 //! Both build [`Schedule`]s whose reductions are explicit
 //! [`Step::Reduce`](super::schedule::Step) steps, executed by the one
@@ -255,74 +266,98 @@ pub fn build_rabenseifner_schedule(
 ) -> Schedule {
     let mut sb = ScheduleBuilder::new("fold-in");
     sb.copy(Slice::input(0, n), Slice::output(0, n));
-    let q = if p.is_power_of_two() { p } else { p.next_power_of_two() >> 1 };
-    let rem = p - q;
+    let members: Vec<usize> = (0..p).collect();
+    emit_rabenseifner(&mut sb, &members, rank, 0, n);
+    sb.finish(OpKind::Allreduce, p, n, elem_bytes, "rabenseifner")
+}
+
+/// Emit a Rabenseifner allreduce among `members` over the element range
+/// `Output[off, off+len)`, which every member must already hold its
+/// partial of. Any group size: let `q` be the largest power of two
+/// `≤ |members|`; the `|members| − q` highest members fold their ranges
+/// into partners up front and receive the result at the end, the `q`
+/// survivors run the recursive-halving reduce-scatter + recursive-
+/// doubling allgather over sub-ranges. Ranks outside `members` allocate
+/// the tag block and emit nothing (the SPMD contract). A single-member
+/// group is a no-op.
+pub(crate) fn emit_rabenseifner(
+    sb: &mut ScheduleBuilder,
+    members: &[usize],
+    me: usize,
+    off: usize,
+    len: usize,
+) {
+    let m = members.len();
+    let q = if m.is_power_of_two() { m } else { m.next_power_of_two() >> 1 };
+    let rem = m - q;
     let logq = ceil_log2_u64(q);
     let t_in = sb.tag();
     let t_rs = sb.tag_block(logq);
     let t_ag = sb.tag_block(logq);
     let t_out = sb.tag();
-    if rank >= q {
-        // Folded rank: contribute the whole vector, then wait for the
+    let Some(k) = members.iter().position(|&r| r == me) else {
+        return;
+    };
+    if k >= q {
+        // Folded member: contribute the whole range, then wait for the
         // reduced result.
-        sb.send(rank - q, Slice::input(0, n), t_in, 0);
+        sb.send(members[k - q], Slice::output(off, len), t_in, 0);
         sb.round("fold-out");
-        sb.recv(rank - q, Slice::output(0, n), t_out, 0);
-        return sb.finish(OpKind::Allreduce, p, n, elem_bytes, "rabenseifner");
+        sb.recv(members[k - q], Slice::output(off, len), t_out, 0);
+        return;
     }
-    if rank < rem {
-        let folded = sb.scratch(n);
-        sb.recv(q + rank, Slice::at(folded, 0, n), t_in, 0);
-        sb.reduce(Slice::at(folded, 0, n), Slice::output(0, n));
+    if k < rem {
+        let folded = sb.scratch(len);
+        sb.recv(members[q + k], Slice::at(folded, 0, len), t_in, 0);
+        sb.reduce(Slice::at(folded, 0, len), Slice::output(off, len));
     }
     if q > 1 {
         // Phase 1: recursive-halving reduce-scatter over element ranges.
         // Invariant: the aligned chunk window [lo, lo+w) is owned by the
-        // aligned rank group [lo, lo+w); each step halves both, keeping
-        // the half containing `rank`.
+        // aligned member group [lo, lo+w); each step halves both, keeping
+        // the half containing `k`.
         sb.round("reduce-scatter (recursive halving)");
-        let tmp = sb.scratch(n);
+        let tmp = sb.scratch(len);
         let (mut lo, mut w, mut ti) = (0usize, q, 0u64);
         while w > 1 {
             let half = w / 2;
-            let peer = rank ^ half;
-            let (keep_lo, send_lo) =
-                if rank & half == 0 { (lo, lo + half) } else { (lo + half, lo) };
-            let s0 = chunk_off(n, q, send_lo);
-            let s1 = chunk_off(n, q, send_lo + half);
-            let k0 = chunk_off(n, q, keep_lo);
-            let k1 = chunk_off(n, q, keep_lo + half);
+            let peer = members[k ^ half];
+            let (keep_lo, send_lo) = if k & half == 0 { (lo, lo + half) } else { (lo + half, lo) };
+            let s0 = chunk_off(len, q, send_lo);
+            let s1 = chunk_off(len, q, send_lo + half);
+            let k0 = chunk_off(len, q, keep_lo);
+            let k1 = chunk_off(len, q, keep_lo + half);
             sb.sendrecv(
                 peer,
-                Slice::output(s0, s1 - s0),
+                Slice::output(off + s0, s1 - s0),
                 peer,
                 Slice::at(tmp, 0, k1 - k0),
                 t_rs + ti,
                 0,
             );
-            sb.reduce(Slice::at(tmp, 0, k1 - k0), Slice::output(k0, k1 - k0));
+            sb.reduce(Slice::at(tmp, 0, k1 - k0), Slice::output(off + k0, k1 - k0));
             lo = keep_lo;
             w = half;
             ti += 1;
         }
-        debug_assert_eq!(lo, rank);
+        debug_assert_eq!(lo, k);
         // Phase 2: recursive-doubling allgather, reversing the halving —
-        // each step trades the owned range with `rank XOR w` and the two
-        // windows merge.
+        // each step trades the owned range with member `k XOR w` and the
+        // two windows merge.
         sb.round("allgather (recursive doubling)");
-        let (mut lo, mut w, mut tj) = (rank, 1usize, 0u64);
+        let (mut lo, mut w, mut tj) = (k, 1usize, 0u64);
         while w < q {
-            let peer = rank ^ w;
+            let peer = members[k ^ w];
             let peer_lo = lo ^ w;
-            let m0 = chunk_off(n, q, lo);
-            let m1 = chunk_off(n, q, lo + w);
-            let o0 = chunk_off(n, q, peer_lo);
-            let o1 = chunk_off(n, q, peer_lo + w);
+            let m0 = chunk_off(len, q, lo);
+            let m1 = chunk_off(len, q, lo + w);
+            let o0 = chunk_off(len, q, peer_lo);
+            let o1 = chunk_off(len, q, peer_lo + w);
             sb.sendrecv(
                 peer,
-                Slice::output(m0, m1 - m0),
+                Slice::output(off + m0, m1 - m0),
                 peer,
-                Slice::output(o0, o1 - o0),
+                Slice::output(off + o0, o1 - o0),
                 t_ag + tj,
                 0,
             );
@@ -331,11 +366,118 @@ pub fn build_rabenseifner_schedule(
             tj += 1;
         }
     }
-    if rank < rem {
+    if k < rem {
         sb.round("fold-out");
-        sb.send(q + rank, Slice::output(0, n), t_out, 0);
+        sb.send(members[q + k], Slice::output(off, len), t_out, 0);
     }
-    sb.finish(OpKind::Allreduce, p, n, elem_bytes, "rabenseifner")
+}
+
+/// The fully hierarchical Rabenseifner allreduce (registry entry): both
+/// phases locality-aware.
+pub struct LocRabenseifnerAllreduce;
+
+impl NamedAlgorithm for LocRabenseifnerAllreduce {
+    fn name(&self) -> &'static str {
+        "loc-rabenseifner"
+    }
+
+    fn summary(&self) -> &'static str {
+        "hierarchical Rabenseifner: local reduce-scatter, per-lane inter-region allreduce of one chunk, local allgather"
+    }
+}
+
+impl<T: Summable> AllreduceAlgorithm<T> for LocRabenseifnerAllreduce {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("loc-rabenseifner", comm, shape) {
+            return Ok(p);
+        }
+        let view = WorldView::from_comm(comm);
+        let sched =
+            build_loc_rabenseifner_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-rabenseifner", sched)?)
+    }
+}
+
+/// Build the fully hierarchical Rabenseifner allreduce schedule for one
+/// rank (pure; SPMD).
+///
+/// The vector is chunked over the `ppr` local ranks of each region
+/// (boundaries via [`chunk_off`], so uneven and empty chunks need no
+/// negotiation):
+///
+/// 1. **local reduce-scatter** — every member sends each local peer `m`
+///    its input's chunk `m`; local rank `ℓ` reduces the region's partial
+///    of chunk `ℓ` in place. All-local, `ppr − 1` messages of `≈ n/ppr`;
+/// 2. **lane allreduce** — lane `ℓ` (the ranks with local index `ℓ`, one
+///    per region) runs [`emit_rabenseifner`] on chunk `ℓ` among the `r`
+///    regions: the schedule's only non-local messages, every one an
+///    aggregated per-region partial of the `1/ppr`-sized chunk;
+/// 3. **local allgather** — an allgatherv of the fully reduced chunks
+///    within each region restores the complete vector everywhere.
+///
+/// Any region count (the lane emitter folds non-powers of two);
+/// `ppr == 1` (nothing local to split over) falls back to the plain
+/// Rabenseifner schedule; non-uniform regions are rejected at plan time.
+pub fn build_loc_rabenseifner_schedule(
+    view: &WorldView,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    let all: Vec<usize> = (0..view.p).collect();
+    let groups = view.split(&all, GroupBy::Region);
+    let ppr = uniform_size(&groups, "hierarchical Rabenseifner allreduce")?;
+    if ppr == 1 {
+        let mut sched = build_rabenseifner_schedule(view.p, rank, n, elem_bytes);
+        sched.label = "loc-rabenseifner[rabenseifner]".to_string();
+        return Ok(sched);
+    }
+    let (g, l) = locate(&groups, rank)?;
+
+    let mut sb = ScheduleBuilder::new("local reduce-scatter");
+    // Phase 1: chunk the vector over the region's members; local rank ℓ
+    // reduces the region's partial of chunk ℓ in place. The input buffer
+    // is stable, so peers' chunks are sent straight from it — no staging.
+    sb.copy(Slice::input(0, n), Slice::output(0, n));
+    let my0 = chunk_off(n, ppr, l);
+    let my1 = chunk_off(n, ppr, l + 1);
+    let t_local = sb.tag();
+    for (m, &peer) in groups[g].iter().enumerate() {
+        if m == l {
+            continue;
+        }
+        let c0 = chunk_off(n, ppr, m);
+        let c1 = chunk_off(n, ppr, m + 1);
+        sb.send(peer, Slice::input(c0, c1 - c0), t_local, 0);
+    }
+    let tmp = sb.scratch(my1 - my0);
+    for (m, &peer) in groups[g].iter().enumerate() {
+        if m == l {
+            continue;
+        }
+        sb.recv(peer, Slice::at(tmp, 0, my1 - my0), t_local, 0);
+        sb.reduce(Slice::at(tmp, 0, my1 - my0), Slice::output(my0, my1 - my0));
+    }
+
+    // Phase 2: allreduce of chunk ℓ among the lane — one member per
+    // region; the only non-local traffic of the schedule.
+    sb.round("lane allreduce");
+    let lane: Vec<usize> = groups.iter().map(|group| group[l]).collect();
+    emit_rabenseifner(&mut sb, &lane, rank, my0, my1 - my0);
+
+    // Phase 3: gather the fully reduced chunks within the region.
+    sb.round("local allgather");
+    let counts: Vec<usize> =
+        (0..ppr).map(|m| chunk_off(n, ppr, m + 1) - chunk_off(n, ppr, m)).collect();
+    emit_group_allgatherv(
+        &mut sb,
+        &groups[g],
+        rank,
+        &counts,
+        Slice::output(my0, my1 - my0),
+        Slice::output(0, n),
+    );
+    Ok(sb.finish(OpKind::Allreduce, view.p, n, elem_bytes, "loc-rabenseifner"))
 }
 
 /// One-shot standard recursive-doubling allreduce: plan + single execute
@@ -353,6 +495,13 @@ pub fn allreduce_rabenseifner<T: Summable>(comm: &Comm, local: &[T]) -> Result<V
 /// locality-free shapes fall back to recursive doubling.
 pub fn allreduce_locality_aware<T: Summable>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
     super::plan::one_shot_reduce(&LocalityAwareAllreduce, comm, local)
+}
+
+/// One-shot fully hierarchical Rabenseifner allreduce: plan + single
+/// execute; any `p` with uniform regions (`ppr == 1` falls back to the
+/// plain Rabenseifner).
+pub fn allreduce_loc_rabenseifner<T: Summable>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_reduce(&LocRabenseifnerAllreduce, comm, local)
 }
 
 #[cfg(test)]
@@ -440,6 +589,62 @@ mod tests {
         });
         for r in &run.results {
             assert_eq!(r, &expected_sum(16, 1));
+        }
+    }
+
+    #[test]
+    fn loc_rabenseifner_sums_on_aligned_ragged_and_degenerate_shapes() {
+        // Power-of-two and non-power-of-two region counts, single-region,
+        // ppr = 1 (plain-Rabenseifner fallback), and n < ppr (empty
+        // chunks).
+        for (regions, ppr, n) in [
+            (4usize, 4usize, 5usize),
+            (2, 2, 2),
+            (3, 3, 4),
+            (2, 3, 7),
+            (5, 2, 3),
+            (1, 4, 3),
+            (4, 1, 3),
+            (4, 4, 1),
+        ] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                allreduce_loc_rabenseifner(c, &contribution(c.rank(), n)).unwrap()
+            });
+            for r in &run.results {
+                assert_eq!(r, &expected_sum(p, n), "regions={regions} ppr={ppr} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn loc_rabenseifner_moves_fewer_nonlocal_bytes_than_plain() {
+        // (4,4): plain Rabenseifner's two largest exchanges (n/2 and n/4
+        // each way) cross regions; the hierarchical variant's non-local
+        // traffic is the lane allreduce of one n/4 chunk — strictly fewer
+        // non-local bytes on every rank.
+        let topo = Topology::regions(4, 4);
+        let n = 64usize;
+        let plain = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allreduce_rabenseifner(c, &contribution(c.rank(), n)).unwrap();
+        });
+        let loc = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            allreduce_loc_rabenseifner(c, &contribution(c.rank(), n)).unwrap();
+        });
+        assert!(
+            loc.trace.total_nonlocal_bytes() < plain.trace.total_nonlocal_bytes(),
+            "loc {} B !< plain {} B",
+            loc.trace.total_nonlocal_bytes(),
+            plain.trace.total_nonlocal_bytes()
+        );
+        for (l, p) in loc.trace.per_rank.iter().zip(plain.trace.per_rank.iter()) {
+            assert!(
+                l.nonlocal_bytes < p.nonlocal_bytes,
+                "per-rank: loc {} B !< plain {} B",
+                l.nonlocal_bytes,
+                p.nonlocal_bytes
+            );
         }
     }
 

@@ -36,6 +36,7 @@
 //! | module | registry name | algorithm | paper role |
 //! |---|---|---|---|
 //! | [`bruck`] | `bruck` | Bruck allgather (Alg. 1) | standard small-message baseline |
+//! | [`pat`] | `pat` (allgather + reduce-scatter) | parallel aggregated trees (NCCL PAT): log-depth binomial trees, any `p` | related-work baseline |
 //! | [`ring`] | `ring` | ring allgather | large-message baseline (§2) |
 //! | [`recursive_doubling`] | `recursive-doubling` | recursive doubling | background §2 |
 //! | [`dissemination`] | `dissemination` | dissemination allgather | background §2 |
@@ -48,9 +49,9 @@
 //! | [`fuse`] | — | schedule fusion: round-merged, message-coalesced multi-plan execution ([`FusedPlan`], [`plan_fused`]) | the paper's aggregation idea, lifted across collectives |
 //! | [`plan`] | — | op-generic plan framework: [`CollectivePlan`], per-op traits, [`OpRegistry`] | persistent API substrate |
 //! | [`primitives`] | — | gather / bcast / allgatherv (+ [`primitives::AllgathervPlan`]) | substrate |
-//! | [`allreduce`] | `recursive-doubling`, `loc-aware`, `rabenseifner` | planned allreduce (sum), incl. the any-size reduce-scatter + allgather composition | §6 extension |
+//! | [`allreduce`] | `recursive-doubling`, `loc-aware`, `rabenseifner`, `loc-rabenseifner` | planned allreduce (sum), incl. the fully hierarchical composition with both phases locality-aware | §6 extension |
 //! | [`alltoall`] | `system-default`, `pairwise`, `bruck`, `loc-aware` | planned alltoall | §6 extension |
-//! | [`reduce_scatter`] | `ring`, `recursive-halving`, `loc-aware` | planned reduce-scatter (sum + scatter, the allgather's inverse) | §4 locality argument, inverted |
+//! | [`reduce_scatter`] | `ring`, `recursive-halving`, `pat`, `loc-aware` | planned reduce-scatter (sum + scatter, the allgather's inverse) | §4 locality argument, inverted |
 //!
 //! Every algorithm *plans* by building a [`Schedule`] — pure data — and
 //! *executes* through the single interpreter in [`SchedPlan`]; the same
@@ -86,6 +87,7 @@ pub mod hierarchical;
 pub mod loc_bruck;
 pub mod model_tuned;
 pub mod multilane;
+pub mod pat;
 pub mod plan;
 pub mod primitives;
 pub mod recursive_doubling;
@@ -116,6 +118,9 @@ use crate::error::{Error, Result};
 pub enum Algorithm {
     /// Standard Bruck (paper Algorithm 1).
     Bruck,
+    /// Parallel aggregated trees (NCCL PAT): log-depth binomial trees
+    /// over the ring distance, any rank count (see [`pat`]).
+    Pat,
     /// Ring allgather.
     Ring,
     /// Recursive doubling (power-of-two sizes).
@@ -143,9 +148,10 @@ pub enum Algorithm {
 
 impl Algorithm {
     /// All algorithms, in the order the figures report them.
-    pub const ALL: [Algorithm; 11] = [
+    pub const ALL: [Algorithm; 12] = [
         Algorithm::SystemDefault,
         Algorithm::Bruck,
+        Algorithm::Pat,
         Algorithm::Ring,
         Algorithm::RecursiveDoubling,
         Algorithm::Dissemination,
@@ -161,6 +167,7 @@ impl Algorithm {
     pub fn name(&self) -> &'static str {
         match self {
             Algorithm::Bruck => "bruck",
+            Algorithm::Pat => "pat",
             Algorithm::Ring => "ring",
             Algorithm::RecursiveDoubling => "recursive-doubling",
             Algorithm::Dissemination => "dissemination",
@@ -229,7 +236,7 @@ pub fn plan_allgather<T: Pod>(
 /// One-shot allgather: plan, allocate the output, execute once.
 ///
 /// Thin convenience wrapper over the registry — `examples/`, the sweep
-/// engine and the CLI go through it. It rebuilds the (cheap, ten-entry)
+/// engine and the CLI go through it. It rebuilds the (cheap, twelve-entry)
 /// standard registry per call; hot loops should plan once via
 /// [`plan_allgather`] and call [`AllgatherPlan::execute`] per iteration
 /// instead, which is the entire point of the persistent API.
@@ -349,6 +356,7 @@ mod tests {
         assert!(Algorithm::LocalityBruck.is_locality_aware());
         assert!(Algorithm::Hierarchical.is_locality_aware());
         assert!(!Algorithm::Bruck.is_locality_aware());
+        assert!(!Algorithm::Pat.is_locality_aware());
         assert!(!Algorithm::Ring.is_locality_aware());
     }
 

@@ -91,9 +91,13 @@ fn cached_winner(key: String, score: impl FnOnce() -> Result<String>) -> Result<
 
 /// The candidate pool of the allgather dispatcher: every concrete
 /// algorithm (dispatchers excluded), in scoring order (ties keep the
-/// earlier entry).
-pub const ALLGATHER_CANDIDATES: [Algorithm; 9] = [
+/// earlier entry). Slice constants, not arity-pinned arrays: growing a
+/// pool must never require touching a length literal, and
+/// `every_candidate_name_resolves_in_its_registry` pins each entry to a
+/// registry name.
+pub const ALLGATHER_CANDIDATES: &[Algorithm] = &[
     Algorithm::Bruck,
+    Algorithm::Pat,
     Algorithm::Ring,
     Algorithm::RecursiveDoubling,
     Algorithm::Dissemination,
@@ -104,16 +108,18 @@ pub const ALLGATHER_CANDIDATES: [Algorithm; 9] = [
     Algorithm::LocalityBruckMultilevel,
 ];
 
-/// The candidate pool of the allreduce dispatcher. `rabenseifner` admits
-/// every communicator size, so the pool as a whole carries no
-/// power-of-two precondition.
-pub const ALLREDUCE_CANDIDATES: [&str; 3] = ["recursive-doubling", "loc-aware", "rabenseifner"];
+/// The candidate pool of the allreduce dispatcher. `rabenseifner` and
+/// `loc-rabenseifner` admit every communicator size, so the pool as a
+/// whole carries no power-of-two precondition.
+pub const ALLREDUCE_CANDIDATES: &[&str] =
+    &["recursive-doubling", "loc-aware", "rabenseifner", "loc-rabenseifner"];
 
 /// The candidate pool of the alltoall dispatcher.
-pub const ALLTOALL_CANDIDATES: [&str; 3] = ["pairwise", "bruck", "loc-aware"];
+pub const ALLTOALL_CANDIDATES: &[&str] = &["pairwise", "bruck", "loc-aware"];
 
-/// The candidate pool of the reduce-scatter dispatcher.
-pub const REDUCE_SCATTER_CANDIDATES: [&str; 3] = ["ring", "recursive-halving", "loc-aware"];
+/// The candidate pool of the reduce-scatter dispatcher. `pat` is the
+/// log-depth option at sizes recursive halving rejects.
+pub const REDUCE_SCATTER_CANDIDATES: &[&str] = &["ring", "recursive-halving", "pat", "loc-aware"];
 
 /// The machine the dispatcher scores against: the communicator's virtual
 /// machine when present, otherwise the Lassen preset.
@@ -167,7 +173,7 @@ pub fn pick_allgather(
     elem_bytes: usize,
 ) -> Result<(String, Vec<Schedule>)> {
     pick(
-        &ALLGATHER_CANDIDATES,
+        ALLGATHER_CANDIDATES,
         |a| a.name().to_string(),
         |a| {
             (0..view.p)
@@ -187,7 +193,7 @@ pub fn pick_allreduce(
     elem_bytes: usize,
 ) -> Result<(String, Vec<Schedule>)> {
     pick(
-        &ALLREDUCE_CANDIDATES,
+        ALLREDUCE_CANDIDATES,
         |s| s.to_string(),
         |s| (0..view.p).map(|r| build_allreduce(s, view, r, n, elem_bytes)).collect(),
         view,
@@ -203,7 +209,7 @@ pub fn pick_reduce_scatter(
     elem_bytes: usize,
 ) -> Result<(String, Vec<Schedule>)> {
     pick(
-        &REDUCE_SCATTER_CANDIDATES,
+        REDUCE_SCATTER_CANDIDATES,
         |s| s.to_string(),
         |s| (0..view.p).map(|r| build_reduce_scatter(s, view, r, n, elem_bytes)).collect(),
         view,
@@ -219,7 +225,7 @@ pub fn pick_alltoall(
     elem_bytes: usize,
 ) -> Result<(String, Vec<Schedule>)> {
     pick(
-        &ALLTOALL_CANDIDATES,
+        ALLTOALL_CANDIDATES,
         |s| s.to_string(),
         |s| (0..view.p).map(|r| build_alltoall(s, view, r, n, elem_bytes)).collect(),
         view,
@@ -437,7 +443,7 @@ mod tests {
             let (winner, scheds) = pick_allgather(&view, &m, n, 4).unwrap();
             let t_win =
                 crate::model::cost::predict(&scheds, &topo, &view.world_of, &m).unwrap();
-            for cand in ALLGATHER_CANDIDATES {
+            for &cand in ALLGATHER_CANDIDATES {
                 let Ok(cs) = crate::model::cost::allgather_schedules(cand, &topo, n, 4) else {
                     continue;
                 };
@@ -468,14 +474,64 @@ mod tests {
     #[test]
     fn allreduce_dispatcher_admits_non_power_of_two_via_rabenseifner() {
         // p = 6: recursive doubling and the loc-aware fallback both reject,
-        // but rabenseifner admits any size — the dispatcher no longer
-        // carries a power-of-two precondition.
+        // but the Rabenseifner compositions admit any size — the
+        // dispatcher no longer carries a power-of-two precondition.
         let topo = Topology::regions(3, 2);
         let view = WorldView::world(&topo);
         let (winner, scheds) =
             pick_allreduce(&view, &MachineParams::lassen(), 2, 8).unwrap();
-        assert_eq!(winner, "rabenseifner");
+        assert!(
+            winner == "rabenseifner" || winner == "loc-rabenseifner",
+            "expected a Rabenseifner composition, got {winner}"
+        );
         assert_eq!(scheds.len(), 6);
+    }
+
+    #[test]
+    fn every_candidate_name_resolves_in_its_registry() {
+        use crate::collectives::plan::{
+            AllreduceRegistry, AlltoallRegistry, ReduceScatterRegistry, Registry,
+        };
+        let reg = Registry::<u64>::standard();
+        for &cand in ALLGATHER_CANDIDATES {
+            assert!(reg.get(cand.name()).is_some(), "allgather candidate {cand} not registered");
+        }
+        let reg = AllreduceRegistry::<u64>::standard();
+        for &cand in ALLREDUCE_CANDIDATES {
+            assert!(reg.get(cand).is_some(), "allreduce candidate {cand} not registered");
+        }
+        let reg = AlltoallRegistry::<u64>::standard();
+        for &cand in ALLTOALL_CANDIDATES {
+            assert!(reg.get(cand).is_some(), "alltoall candidate {cand} not registered");
+        }
+        let reg = ReduceScatterRegistry::<u64>::standard();
+        for &cand in REDUCE_SCATTER_CANDIDATES {
+            assert!(reg.get(cand).is_some(), "reduce-scatter candidate {cand} not registered");
+        }
+    }
+
+    #[test]
+    fn pat_wins_the_latency_bound_non_power_of_two_reduce_scatter() {
+        // Flat non-power-of-two shapes at tiny n: recursive halving
+        // rejects, loc-aware degenerates to the ring (ppr = 1), and the
+        // ring pays p−1 latencies against PAT's ⌈log₂ p⌉ — the visible
+        // model-tuned crossover the PAT builders exist for.
+        let m = MachineParams::lassen();
+        for (regions, ppr) in [(6usize, 1usize), (5, 1), (7, 1)] {
+            let topo = Topology::regions(regions, ppr);
+            let view = WorldView::world(&topo);
+            let (winner, _) = pick_reduce_scatter(&view, &m, 1, 8).unwrap();
+            assert_eq!(winner, "pat", "{regions}x{ppr}");
+        }
+        // ... while on a power-of-two locality shape PAT must lose: its
+        // wrap-around ring-offset peers cross regions where recursive
+        // halving's XOR peers (and loc-aware's lanes) stay local.
+        let topo = Topology::regions(4, 4);
+        let view = WorldView::world(&topo);
+        for n in [2usize, 1 << 15] {
+            let (winner, _) = pick_reduce_scatter(&view, &m, n, 8).unwrap();
+            assert_ne!(winner, "pat", "4x4 n={n}");
+        }
     }
 
     #[test]
@@ -487,7 +543,7 @@ mod tests {
             let (winner, scheds) = pick_reduce_scatter(&view, &m, n, 8).unwrap();
             let t_win =
                 crate::model::cost::predict(&scheds, &topo, &view.world_of, &m).unwrap();
-            for cand in REDUCE_SCATTER_CANDIDATES {
+            for &cand in REDUCE_SCATTER_CANDIDATES {
                 let built: Result<Vec<Schedule>> = (0..view.p)
                     .map(|r| build_reduce_scatter(cand, &view, r, n, 8))
                     .collect();

@@ -1,0 +1,285 @@
+//! PAT — Parallel Aggregated Trees — allgather and reduce-scatter as
+//! schedule builders (Jeaugey, NVIDIA; NCCL's `PAT` algorithm, see
+//! PAPERS.md).
+//!
+//! PAT runs one binomial tree **per destination block** over the ring
+//! distance: the block travelling from rank `s` to rank `d` hops along
+//! the binary decomposition of `(d − s) mod p`, so every block arrives in
+//! at most `⌈log₂ p⌉` hops — for **any** `p`, not just powers of two.
+//! The trees are then *aggregated*: at each step every rank talks to a
+//! single peer at ring offset `2^k`, and all blocks whose decomposition
+//! contains bit `k` at that point ride one contiguous message. The result
+//! is a `⌈log₂ p⌉`-message schedule that fills the gap between the ring
+//! (`p−1` latency-bound messages) and recursive halving/doubling
+//! (log-depth but power-of-two-only).
+//!
+//! * **reduce-scatter** — steps run `k = ⌈log₂ p⌉−1 … 0` (most
+//!   significant bit first). Rank `r` keeps an accumulator whose block
+//!   `o` is the partial sum destined to rank `(r − o) mod p`. Before
+//!   step `k` the live window is blocks `[0, min(2^{k+1}, p))`; the step
+//!   sends blocks `[2^k, min(2^{k+1}, p))` — every partial whose
+//!   remaining distance has bit `k` set — to rank `r − 2^k (mod p)` and
+//!   folds the symmetric partials received from `r + 2^k (mod p)` into
+//!   blocks `[0, min(2^{k+1}, p) − 2^k)`. Each source's contribution to
+//!   each destination is counted exactly once because the hop set is the
+//!   unique binary decomposition of the ring distance. Per rank:
+//!   `⌈log₂ p⌉` messages, `(p−1)·n` elements — the same volume as the
+//!   ring in logarithmically fewer (aggregated) messages.
+//! * **allgather** — the mirrored trees, run least significant bit
+//!   first: rank `r` appends blocks `[2^k, 2^k + min(2^k, p − 2^k))` in
+//!   Bruck's rotated layout at step `k`. Aggregating the per-destination
+//!   trees of the allgather direction reproduces exactly the Bruck
+//!   exchange pattern (same peers, sizes, and final rotation), so the
+//!   two schedules are cost-isomorphic; the builder is kept as an
+//!   explicit PAT construction and as the inverse twin of the
+//!   reduce-scatter above.
+//!
+//! Both builders are pure `(p, rank, n) → Schedule` functions executed by
+//! the generic [`SchedPlan`] interpreter, so they run unmodified on the
+//! in-process backend, the proc backend, and inside fused plans, and the
+//! cost model prices them mechanically (prediction == traced vtime).
+//! There are no shape preconditions: any `p ≥ 1`, `n == 0` plans are the
+//! uniform no-op.
+
+use super::plan::{
+    trivial_plan, trivial_rs_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind,
+    ReduceScatterAlgorithm, ReduceScatterPlan, Shape, Summable,
+};
+use super::schedule::{ceil_log2_u64, SchedPlan, Schedule, ScheduleBuilder, Slice};
+use crate::comm::{Comm, Pod};
+use crate::error::Result;
+
+/// PAT allgather (registry entry).
+pub struct PatAllgather;
+
+impl NamedAlgorithm for PatAllgather {
+    fn name(&self) -> &'static str {
+        "pat"
+    }
+
+    fn summary(&self) -> &'static str {
+        "parallel aggregated trees (NCCL PAT): log-depth binomial-tree allgather, any p"
+    }
+}
+
+impl<T: Pod> CollectiveAlgorithm<T> for PatAllgather {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("pat", comm, shape) {
+            return Ok(p);
+        }
+        let sched = build_pat_allgather_schedule(
+            comm.size(),
+            comm.rank(),
+            shape.n,
+            std::mem::size_of::<T>(),
+        );
+        Ok(SchedPlan::<T>::boxed(comm, "pat", sched)?)
+    }
+}
+
+/// PAT reduce-scatter (registry entry).
+pub struct PatReduceScatter;
+
+impl NamedAlgorithm for PatReduceScatter {
+    fn name(&self) -> &'static str {
+        "pat"
+    }
+
+    fn summary(&self) -> &'static str {
+        "parallel aggregated trees (NCCL PAT): log-depth reduce-scatter, any p"
+    }
+}
+
+impl<T: Summable> ReduceScatterAlgorithm<T> for PatReduceScatter {
+    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("pat", comm, shape) {
+            return Ok(p);
+        }
+        let sched =
+            build_pat_rs_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        Ok(SchedPlan::<T>::boxed(comm, "pat", sched)?)
+    }
+}
+
+/// Build the PAT allgather schedule for one rank (pure; SPMD).
+///
+/// Bruck's rotated layout carried by ascending tree levels: before step
+/// `k` the accumulator holds blocks `[0, 2^k)` (block `j` = contribution
+/// of rank `(rank + j) mod p`); step `k` sends the first
+/// `min(2^k, p − 2^k)` blocks to `rank − 2^k (mod p)` and appends the
+/// same count from `rank + 2^k (mod p)`. One final rotation restores
+/// global rank order.
+pub fn build_pat_allgather_schedule(
+    p: usize,
+    rank: usize,
+    n: usize,
+    elem_bytes: usize,
+) -> Schedule {
+    let mut sb = ScheduleBuilder::new("pat gather");
+    let steps = ceil_log2_u64(p) as usize;
+    let tag0 = sb.tag_block(steps as u64);
+    if p == 1 {
+        sb.copy(Slice::input(0, n), Slice::output(0, n));
+        return sb.finish(OpKind::Allgather, p, n, elem_bytes, "pat");
+    }
+    let acc = sb.scratch(n * p);
+    sb.copy(Slice::input(0, n), Slice::at(acc, 0, n));
+    for k in 0..steps {
+        let jump = 1usize << k;
+        let cnt = jump.min(p - jump);
+        sb.round(format!("pat level {k} (offset {jump})"));
+        sb.sendrecv(
+            (rank + p - jump) % p,
+            Slice::at(acc, 0, cnt * n),
+            (rank + jump) % p,
+            Slice::at(acc, jump * n, cnt * n),
+            tag0 + k as u64,
+            0,
+        );
+    }
+    sb.round("final rotation");
+    if n > 0 {
+        sb.rotate(Slice::at(acc, 0, n * p), Slice::output(0, n * p), n, rank);
+    }
+    sb.finish(OpKind::Allgather, p, n, elem_bytes, "pat")
+}
+
+/// Build the PAT reduce-scatter schedule for one rank (pure; SPMD).
+///
+/// Accumulator block `o` holds the partial destined to rank
+/// `(rank − o) mod p`; tree levels run most significant bit first, each
+/// folding the received partials into the shrinking live window. See the
+/// module docs for the per-step window invariant.
+pub fn build_pat_rs_schedule(p: usize, rank: usize, n: usize, elem_bytes: usize) -> Schedule {
+    let mut sb = ScheduleBuilder::new("pat scatter partials");
+    let steps = ceil_log2_u64(p) as usize;
+    let tag0 = sb.tag_block(steps as u64);
+    let acc = sb.scratch(n * p);
+    // Block o of my input is my contribution to rank o, so the partial
+    // destined to (rank − o) mod p starts as input block (rank − o) mod p.
+    for o in 0..p {
+        sb.copy(Slice::input(((rank + p - o) % p) * n, n), Slice::at(acc, o * n, n));
+    }
+    if p > 1 {
+        let max_cnt = (0..steps)
+            .map(|k| {
+                let jump = 1usize << k;
+                (2 * jump).min(p) - jump
+            })
+            .max()
+            .unwrap_or(0);
+        let tmp = sb.scratch(max_cnt * n);
+        for (ti, k) in (0..steps).rev().enumerate() {
+            let jump = 1usize << k;
+            let cnt = (2 * jump).min(p) - jump;
+            sb.round(format!("pat level {k} (offset {jump})"));
+            sb.sendrecv(
+                (rank + p - jump) % p,
+                Slice::at(acc, jump * n, cnt * n),
+                (rank + jump) % p,
+                Slice::at(tmp, 0, cnt * n),
+                tag0 + ti as u64,
+                0,
+            );
+            sb.reduce(Slice::at(tmp, 0, cnt * n), Slice::at(acc, 0, cnt * n));
+        }
+    }
+    sb.copy(Slice::at(acc, 0, n), Slice::output(0, n));
+    sb.finish(OpKind::ReduceScatter, p, n, elem_bytes, "pat")
+}
+
+/// One-shot PAT allgather: plan + single execute.
+pub fn allgather<T: Pod>(comm: &Comm, local: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot(&PatAllgather, comm, local)
+}
+
+/// One-shot PAT reduce-scatter: `send.len()` must be a multiple of the
+/// communicator size (block length inferred).
+pub fn reduce_scatter<T: Summable>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
+    super::plan::one_shot_rs(&PatReduceScatter, comm, send)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::schedule::Step;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    fn send_buf(rank: usize, p: usize, n: usize) -> Vec<u64> {
+        (0..p * n)
+            .map(|x| (rank * 1_000_003 + (x / n) * 1_009 + x % n) as u64)
+            .collect()
+    }
+
+    fn rs_expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|j| (0..p).map(|r| (r * 1_000_003 + rank * 1_009 + j) as u64).sum())
+            .collect()
+    }
+
+    #[test]
+    fn pat_allgather_correct_on_power_and_non_power_sizes() {
+        for (regions, ppr) in [(1usize, 1usize), (1, 4), (4, 4), (3, 2), (5, 2), (7, 1), (2, 3)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                let mine: Vec<u64> = (0..2).map(|j| (c.rank() * 100 + j) as u64).collect();
+                allgather(c, &mine).unwrap()
+            });
+            let expect: Vec<u64> =
+                (0..p).flat_map(|r| [(r * 100) as u64, (r * 100 + 1) as u64]).collect();
+            for (r, out) in run.results.iter().enumerate() {
+                assert_eq!(out, &expect, "{regions}x{ppr} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pat_reduce_scatter_correct_on_power_and_non_power_sizes() {
+        for (regions, ppr) in [(1usize, 1usize), (1, 4), (4, 4), (3, 2), (5, 2), (7, 1), (3, 3)] {
+            let topo = Topology::regions(regions, ppr);
+            let p = topo.size();
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                reduce_scatter(c, &send_buf(c.rank(), p, 3)).unwrap()
+            });
+            for (r, out) in run.results.iter().enumerate() {
+                assert_eq!(out, &rs_expected(r, p, 3), "{regions}x{ppr} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pat_schedules_have_ceil_log2_p_messages() {
+        for p in [2usize, 3, 4, 5, 6, 7, 8, 12, 16] {
+            let want = ceil_log2_u64(p) as usize;
+            for sched in
+                [build_pat_allgather_schedule(p, 1, 2, 8), build_pat_rs_schedule(p, 1, 2, 8)]
+            {
+                sched.validate().unwrap();
+                let exchanges =
+                    sched.steps().filter(|s| matches!(s, Step::SendRecv { .. })).count();
+                assert_eq!(exchanges, want, "p={p} label={}", sched.label);
+                assert_eq!(sched.tags, want as u64, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn pat_reduce_scatter_moves_ring_volume_in_log_messages() {
+        // Total sent volume is (p−1)·n elements per rank — the ring's
+        // volume — carried by ⌈log₂ p⌉ aggregated messages.
+        for p in [4usize, 5, 6, 8, 11] {
+            let n = 3usize;
+            let sched = build_pat_rs_schedule(p, 0, n, 8);
+            let sent: usize = sched
+                .steps()
+                .filter_map(|s| match s {
+                    Step::SendRecv { src, .. } => Some(src.len),
+                    _ => None,
+                })
+                .sum();
+            assert_eq!(sent, (p - 1) * n, "p={p}");
+        }
+    }
+}

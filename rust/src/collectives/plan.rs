@@ -70,7 +70,7 @@ use super::schedule::{
     WorldView,
 };
 use super::{allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
-use super::{loc_bruck, model_tuned, multilane, recursive_doubling, reduce_scatter, ring};
+use super::{loc_bruck, model_tuned, multilane, pat, recursive_doubling, reduce_scatter, ring};
 
 /// Runtime element-type tag for byte-level (view-based) execution.
 ///
@@ -819,11 +819,12 @@ impl<T: Pod> Registry<T> {
     }
 
     /// The built-in allgathers, in the order the figures report them
-    /// (the ten classic algorithms plus the model-tuned dispatcher).
+    /// (the eleven classic algorithms plus the model-tuned dispatcher).
     pub fn standard() -> Registry<T> {
         let mut r = Registry::empty();
         r.register(Box::new(dispatch::SystemDefault));
         r.register(Box::new(bruck::Bruck));
+        r.register(Box::new(pat::PatAllgather));
         r.register(Box::new(ring::Ring));
         r.register(Box::new(recursive_doubling::RecursiveDoubling));
         r.register(Box::new(dissemination::Dissemination));
@@ -852,13 +853,15 @@ impl<T: Summable> AllreduceRegistry<T> {
     }
 
     /// The built-in allreduces: recursive doubling, the §6 locality-aware
-    /// regional variant, the any-size Rabenseifner composition and the
+    /// regional variant, the any-size Rabenseifner composition, the fully
+    /// hierarchical Rabenseifner (both phases locality-aware) and the
     /// model-tuned dispatcher.
     pub fn standard() -> AllreduceRegistry<T> {
         let mut r = AllreduceRegistry::empty();
         r.register(Box::new(allreduce::RecursiveDoublingAllreduce));
         r.register(Box::new(allreduce::LocalityAwareAllreduce));
         r.register(Box::new(allreduce::RabenseifnerAllreduce));
+        r.register(Box::new(allreduce::LocRabenseifnerAllreduce));
         r.register(Box::new(model_tuned::ModelTunedAllreduce));
         r
     }
@@ -907,12 +910,14 @@ impl<T: Summable> ReduceScatterRegistry<T> {
     }
 
     /// The built-in reduce-scatters: ring (bandwidth-optimal baseline),
-    /// recursive halving (Rabenseifner's first phase), the locality-aware
-    /// lane variant and the model-tuned dispatcher.
+    /// recursive halving (Rabenseifner's first phase), the PAT aggregated
+    /// trees (log-depth at any size), the locality-aware lane variant and
+    /// the model-tuned dispatcher.
     pub fn standard() -> ReduceScatterRegistry<T> {
         let mut r = ReduceScatterRegistry::empty();
         r.register(Box::new(reduce_scatter::RingReduceScatter));
         r.register(Box::new(reduce_scatter::RecursiveHalvingReduceScatter));
+        r.register(Box::new(pat::PatReduceScatter));
         r.register(Box::new(reduce_scatter::LocAwareReduceScatter));
         r.register(Box::new(model_tuned::ModelTunedReduceScatter));
         r

@@ -1472,6 +1472,7 @@ pub fn build_allgather(
     use super::Algorithm as A;
     match algo {
         A::Bruck => Ok(super::bruck::build_schedule(view.p, rank, n, elem_bytes)),
+        A::Pat => Ok(super::pat::build_pat_allgather_schedule(view.p, rank, n, elem_bytes)),
         A::Ring => Ok(super::ring::build_schedule(view.p, rank, n, elem_bytes)),
         A::RecursiveDoubling => {
             super::recursive_doubling::build_schedule(view.p, rank, n, elem_bytes)
@@ -1530,6 +1531,8 @@ pub fn build_allreduce(
         super::allreduce::build_loc_schedule(view, rank, n, elem_bytes)
     } else if name.eq_ignore_ascii_case("rabenseifner") {
         Ok(super::allreduce::build_rabenseifner_schedule(view.p, rank, n, elem_bytes))
+    } else if name.eq_ignore_ascii_case("loc-rabenseifner") {
+        super::allreduce::build_loc_rabenseifner_schedule(view, rank, n, elem_bytes)
     } else {
         Err(Error::Precondition(format!("no allreduce schedule builder for '{name}'")))
     }
@@ -1548,6 +1551,8 @@ pub fn build_reduce_scatter(
         Ok(super::reduce_scatter::build_ring_schedule(view.p, rank, n, elem_bytes))
     } else if name.eq_ignore_ascii_case("recursive-halving") {
         super::reduce_scatter::build_rh_schedule(view.p, rank, n, elem_bytes)
+    } else if name.eq_ignore_ascii_case("pat") {
+        Ok(super::pat::build_pat_rs_schedule(view.p, rank, n, elem_bytes))
     } else if name.eq_ignore_ascii_case("loc-aware") {
         super::reduce_scatter::build_loc_schedule(view, rank, n, elem_bytes)
     } else {

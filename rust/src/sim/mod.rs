@@ -856,6 +856,7 @@ mod tests {
         let topo = Topology::regions(4, 4);
         for algo in [
             Algorithm::Bruck,
+            Algorithm::Pat,
             Algorithm::Ring,
             Algorithm::RecursiveDoubling,
             Algorithm::Dissemination,
@@ -878,7 +879,7 @@ mod tests {
         assert!((ar.predicted - ar.vtime).abs() < 1e-12, "allreduce");
         let a2a = run_alltoall("loc-aware", &topo, &m, 2);
         assert!((a2a.predicted - a2a.vtime).abs() < 1e-12, "alltoall");
-        for algo in ["ring", "recursive-halving", "loc-aware", "model-tuned"] {
+        for algo in ["ring", "recursive-halving", "pat", "loc-aware", "model-tuned"] {
             let rs = run_reduce_scatter(algo, &topo, &m, 2);
             assert!(rs.verified, "reduce-scatter/{algo}: {:?}", rs.errors);
             assert!(
@@ -888,9 +889,11 @@ mod tests {
                 rs.vtime
             );
         }
-        let rab = run_allreduce("rabenseifner", &topo, &m, 2);
-        assert!(rab.verified, "{:?}", rab.errors);
-        assert!((rab.predicted - rab.vtime).abs() < 1e-12, "rabenseifner");
+        for algo in ["rabenseifner", "loc-rabenseifner"] {
+            let rab = run_allreduce(algo, &topo, &m, 2);
+            assert!(rab.verified, "{algo}: {:?}", rab.errors);
+            assert!((rab.predicted - rab.vtime).abs() < 1e-12, "{algo}");
+        }
     }
 
     #[test]

@@ -498,6 +498,85 @@ fn rabenseifner_allreduce_non_power_of_two_conforms() {
     }
 }
 
+/// PAT conforms on both its ops over the full grid — by name for CI
+/// (`cargo test --test collective_conformance pat`). PAT has no shape
+/// precondition: every p (power-of-two or not, down to p = 1) and every
+/// payload size including n = 0 must plan and execute.
+#[test]
+fn pat_allgather_and_reduce_scatter_grid_conforms() {
+    for &(regions, ppr) in SHAPES {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        for &n in NS {
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                let mut plan = Registry::<u64>::standard()
+                    .plan("pat", c, Shape::elems(n))
+                    .unwrap_or_else(|e| {
+                        panic!("pat allgather rejected {regions}x{ppr} n={n}: {e}")
+                    });
+                let mine = canonical_contribution(c.rank(), n);
+                let mut out = vec![0u64; n * p];
+                plan.execute(&mine, &mut out).unwrap();
+                assert_eq!(
+                    out,
+                    expected_result(p, n),
+                    "pat allgather {regions}x{ppr} n={n} rank {}",
+                    c.rank()
+                );
+                let mut rs = ReduceScatterRegistry::<u64>::standard()
+                    .plan("pat", c, Shape::elems(n))
+                    .unwrap_or_else(|e| {
+                        panic!("pat reduce-scatter rejected {regions}x{ppr} n={n}: {e}")
+                    });
+                let mine = a2a_send(c.rank(), p, n);
+                let mut out = vec![0u64; n];
+                rs.execute(&mine, &mut out).unwrap();
+                assert_eq!(
+                    out,
+                    rs_expected(c.rank(), p, n),
+                    "pat reduce-scatter {regions}x{ppr} n={n} rank {}",
+                    c.rank()
+                );
+                true
+            });
+            assert!(run.results.iter().all(|&ok| ok));
+        }
+    }
+}
+
+/// The fully hierarchical Rabenseifner conforms across aligned, ragged
+/// (n not a multiple of ppr), and degenerate shapes — by name for CI
+/// (`cargo test --test collective_conformance loc_rabenseifner`). Like
+/// plain Rabenseifner it folds to the nearest power of two, so it has no
+/// shape precondition either.
+#[test]
+fn loc_rabenseifner_allreduce_grid_conforms() {
+    for &(regions, ppr) in SHAPES {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        for &n in NS {
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+                let mut plan = AllreduceRegistry::<u64>::standard()
+                    .plan("loc-rabenseifner", c, Shape::elems(n))
+                    .unwrap_or_else(|e| {
+                        panic!("loc-rabenseifner rejected {regions}x{ppr} n={n}: {e}")
+                    });
+                let mine = ar_contribution(c.rank(), n);
+                let mut out = vec![0u64; n];
+                plan.execute(&mine, &mut out).unwrap();
+                assert_eq!(
+                    out,
+                    ar_expected(p, n),
+                    "loc-rabenseifner {regions}x{ppr} n={n} rank {}",
+                    c.rank()
+                );
+                true
+            });
+            assert!(run.results.iter().all(|&ok| ok));
+        }
+    }
+}
+
 #[test]
 fn zero_length_plans_are_uniform_across_ops_and_algorithms() {
     // 3x3 (p = 9, non-power-of-two): even shape-rejecting algorithms must

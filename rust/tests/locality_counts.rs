@@ -417,6 +417,70 @@ fn fused_coalescing_strictly_reduces_nonlocal_messages() {
 }
 
 #[test]
+fn pat_nonlocal_messages_bounded_by_log2_regions() {
+    // PAT's aggregated trees run ⌈log₂ p⌉ sendrecv rounds, so no rank
+    // ever sends more than ⌈log₂ r⌉ non-local messages on a flat shape
+    // (one rank per region, every peer remote) — where a ring sends r−1.
+    // The bound is tight there: every round's message crosses regions.
+    let m = MachineParams::lassen();
+    for regions in [4usize, 5, 6, 8, 16] {
+        let bound = ilog2_ceil(regions) as u64;
+        let ag = run(Algorithm::Pat, regions, 1, 2);
+        assert!(ag.verified, "allgather {regions}x1: {:?}", ag.errors);
+        for (rank, t) in ag.trace.per_rank.iter().enumerate() {
+            assert!(
+                t.nonlocal_msgs <= bound,
+                "pat allgather rank {rank} @ {regions}x1: {} > {bound}",
+                t.nonlocal_msgs
+            );
+        }
+        assert_eq!(ag.trace.max_nonlocal_msgs(), bound, "allgather @ {regions}x1");
+        let topo = Topology::regions(regions, 1);
+        let rs = sim::run_reduce_scatter("pat", &topo, &m, 2);
+        assert!(rs.verified, "reduce-scatter {regions}x1: {:?}", rs.errors);
+        for (rank, t) in rs.trace.per_rank.iter().enumerate() {
+            assert!(
+                t.nonlocal_msgs <= bound,
+                "pat reduce-scatter rank {rank} @ {regions}x1: {} > {bound}",
+                t.nonlocal_msgs
+            );
+        }
+        assert_eq!(rs.trace.max_nonlocal_msgs(), bound, "reduce-scatter @ {regions}x1");
+    }
+}
+
+#[test]
+fn loc_rabenseifner_moves_fewer_nonlocal_bytes_than_rabenseifner() {
+    // Bienz et al.: an allreduce with BOTH Rabenseifner phases
+    // locality-aware beats the single-level ladder. On (4x4) the plain
+    // version's two largest halving/doubling exchanges cross regions
+    // (n/2 + n/4 each way per rank); the hierarchical version only
+    // leaves the region for the per-lane allreduce of one n/ppr chunk.
+    let topo = Topology::regions(4, 4);
+    let m = MachineParams::lassen();
+    let n = 64usize;
+    let plain = sim::run_allreduce("rabenseifner", &topo, &m, n);
+    let loc = sim::run_allreduce("loc-rabenseifner", &topo, &m, n);
+    assert!(plain.verified, "{:?}", plain.errors);
+    assert!(loc.verified, "{:?}", loc.errors);
+    assert!(
+        loc.trace.total_nonlocal_bytes() < plain.trace.total_nonlocal_bytes(),
+        "loc {} !< plain {} (total non-local bytes)",
+        loc.trace.total_nonlocal_bytes(),
+        plain.trace.total_nonlocal_bytes()
+    );
+    // strict on every rank, not just in aggregate
+    for (rank, (l, p)) in loc.trace.per_rank.iter().zip(&plain.trace.per_rank).enumerate() {
+        assert!(
+            l.nonlocal_bytes < p.nonlocal_bytes,
+            "rank {rank}: loc {} !< plain {}",
+            l.nonlocal_bytes,
+            p.nonlocal_bytes
+        );
+    }
+}
+
+#[test]
 fn improvement_grows_with_ppr_in_measured_runs() {
     // paper Figs. 9/10: "performance improvements are increased with the
     // number of processes per region" — aligned configs, fixed regions.

@@ -13,6 +13,11 @@
 //! 1. an (op, algorithm) grid on small shapes where every rank's output
 //!    bytes from the proc backend (shm rings + Unix sockets) must be
 //!    **identical** to the in-process sim backend,
+//! 1b. the PAT aggregated-tree schedules (allgather + reduce-scatter) and
+//!     the hierarchical `loc-rabenseifner` allreduce across OS processes,
+//!     on mixed-channel and non-power-of-two shapes at a payload the grid
+//!     doesn't cover — the new builders are pure `Schedule` data, so the
+//!     workers' byte interpreter must reproduce sim exactly,
 //! 2. a fused multi-collective plan (including an n=0 constituent),
 //! 3. an n=0 single collective,
 //! 4. the persistent-pool contract: one spawn + handshake serves 100
@@ -53,6 +58,7 @@ fn main() {
         std::process::exit(worker_main(&args));
     }
     conformance_grid();
+    pat_cross_backend_conformance();
     fused_plan_conformance();
     empty_payload_conformance();
     persistent_pool_repeat_execute();
@@ -89,10 +95,11 @@ fn conformance_grid() {
     let ag_shapes = [(2usize, 2usize), (1, 4), (2, 3)];
     let op_shapes = [(2usize, 2usize), (1, 4)];
     let ns = [1usize, 3];
-    let ag_algos = ["bruck", "ring", "dissemination", "loc-bruck", "system-default", "model-tuned"];
-    let ar_algos = ["recursive-doubling", "loc-aware", "rabenseifner"];
+    let ag_algos =
+        ["bruck", "pat", "ring", "dissemination", "loc-bruck", "system-default", "model-tuned"];
+    let ar_algos = ["recursive-doubling", "loc-aware", "rabenseifner", "loc-rabenseifner"];
     let a2a_algos = ["pairwise", "bruck", "loc-aware"];
-    let rs_algos = ["ring", "loc-aware"];
+    let rs_algos = ["ring", "pat", "loc-aware"];
     let mut points = 0usize;
     for (regions, ppr) in ag_shapes {
         for n in ns {
@@ -133,6 +140,24 @@ fn conformance_grid() {
     assert_conformance(2, 2, &single(OpKind::Allreduce, "loc-aware", 2, 4), "allreduce u32");
     points += 2;
     println!("proc_backend: conformance grid passed ({points} points, all byte-identical)");
+}
+
+/// Scenario 1b: the PR's new builders across real OS processes. PAT's
+/// wrap-around ring-distance peers exercise both channel classes on
+/// (2,2) (shm within a region, sockets across) and the non-power-of-two
+/// path on (2,3); `loc-rabenseifner` adds the ragged-chunk hierarchy
+/// (n = 5 not a multiple of ppr). Byte-identical to sim on every rank.
+fn pat_cross_backend_conformance() {
+    for (regions, ppr) in [(2usize, 2usize), (2, 3)] {
+        let what = format!("pat allgather {regions}x{ppr} n=5");
+        assert_conformance(regions, ppr, &single(OpKind::Allgather, "pat", 5, 8), &what);
+        let what = format!("pat reduce-scatter {regions}x{ppr} n=5");
+        assert_conformance(regions, ppr, &single(OpKind::ReduceScatter, "pat", 5, 8), &what);
+        let what = format!("loc-rabenseifner {regions}x{ppr} n=5");
+        let job = single(OpKind::Allreduce, "loc-rabenseifner", 5, 8);
+        assert_conformance(regions, ppr, &job, &what);
+    }
+    println!("proc_backend: PAT + loc-rabenseifner cross-backend conformance passed");
 }
 
 fn fused_plan_conformance() {
