@@ -68,7 +68,8 @@ fn main() {
     let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
         let registry = Registry::<u64>::standard();
         // names are case-insensitive
-        let mut plan = registry.plan("LOC-BRUCK", c, Shape::elems(4)).expect("plan by name");
+        let mut plan =
+            registry.plan_uniform("LOC-BRUCK", c, Shape::elems(4)).expect("plan by name");
         let mut out = vec![0u64; 4 * p];
         plan.execute(&[9, 9, 9, c.rank() as u64], &mut out).expect("execute");
         out[4 * c.rank() + 3]

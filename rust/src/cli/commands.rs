@@ -21,15 +21,20 @@ fn algo_by_name(name: &str) -> Result<Algorithm> {
     Algorithm::parse_or_err(name)
 }
 
-/// `locag algos` — list the algorithm registries of all four operations.
+/// `locag algos` — list the algorithm registries of all six operations.
 pub fn algos(_args: &Args) -> Result<i32> {
-    use crate::collectives::{AllreduceRegistry, AlltoallRegistry, ReduceScatterRegistry, Registry};
+    use crate::collectives::{
+        AllgathervRegistry, AllreduceRegistry, AlltoallRegistry, ReduceScatterRegistry,
+        ReduceScattervRegistry, Registry,
+    };
     println!("registered collective algorithms (names are case-insensitive):");
     let sections: Vec<(OpKind, Vec<(&'static str, &'static str)>)> = vec![
         (OpKind::Allgather, Registry::<u32>::standard().catalog()),
         (OpKind::Allreduce, AllreduceRegistry::<u32>::standard().catalog()),
         (OpKind::Alltoall, AlltoallRegistry::<u32>::standard().catalog()),
         (OpKind::ReduceScatter, ReduceScatterRegistry::<u32>::standard().catalog()),
+        (OpKind::Allgatherv, AllgathervRegistry::<u32>::standard().catalog()),
+        (OpKind::ReduceScatterV, ReduceScattervRegistry::<u32>::standard().catalog()),
     ];
     for (op, catalog) in sections {
         println!("\n{op}:");
@@ -40,9 +45,28 @@ pub fn algos(_args: &Args) -> Result<i32> {
     println!(
         "\nEach algorithm supports one-shot use and persistent plans (plan once\n\
          via the per-op registry, execute many times with zero setup or\n\
-         allocation). Run any pair with `locag run --op OP --algo NAME`."
+         allocation). Run any pair with `locag run --op OP --algo NAME`; the\n\
+         ragged ops take per-rank sizes via `--counts 4,0,7,2`."
     );
     Ok(0)
+}
+
+/// Parse `--counts c0,c1,...` — per-rank element counts for the ragged
+/// ops. Defaults to `n` on every rank; the list must name exactly `p`
+/// ranks.
+fn counts_arg(args: &Args, n: usize, p: usize) -> Result<crate::collectives::Counts> {
+    use crate::collectives::Counts;
+    let counts = match args.options.get("counts") {
+        Some(s) => Counts::parse(s)?,
+        None => Counts::uniform(n, p),
+    };
+    if counts.len() != p {
+        return Err(Error::Precondition(format!(
+            "--counts lists {} ranks but the topology has {p}",
+            counts.len()
+        )));
+    }
+    Ok(counts)
 }
 
 /// `locag run` — one configured run of any operation.
@@ -56,8 +80,15 @@ pub fn run_op(args: &Args) -> Result<i32> {
     let default_algo = match op {
         OpKind::Allgather => "loc-bruck",
         OpKind::Allreduce | OpKind::Alltoall | OpKind::ReduceScatter => "loc-aware",
+        OpKind::Allgatherv | OpKind::ReduceScatterV => "loc-aware",
     };
     let algo = args.get_str("algo", default_algo);
+    // The ragged ops take per-rank counts; `--counts` is rejected up front
+    // when its length disagrees with the topology.
+    let counts = match op {
+        OpKind::Allgatherv | OpKind::ReduceScatterV => Some(counts_arg(args, n, topo.size())?),
+        _ => None,
+    };
     let (algo_name, vtime, predicted, verified, trace, errors) = match op {
         OpKind::Allgather => {
             let rep = sim::run_allgather(algo_by_name(&algo)?, &topo, &m, n);
@@ -82,9 +113,22 @@ pub fn run_op(args: &Args) -> Result<i32> {
             let rep = sim::run_reduce_scatter(&algo, &topo, &m, n);
             (rep.algorithm, rep.vtime, rep.predicted, rep.verified, rep.trace, rep.errors)
         }
+        OpKind::Allgatherv => {
+            let rep = sim::run_allgatherv(&algo, &topo, &m, counts.as_ref().expect("set above"));
+            (rep.algorithm, rep.vtime, rep.predicted, rep.verified, rep.trace, rep.errors)
+        }
+        OpKind::ReduceScatterV => {
+            let rep =
+                sim::run_reduce_scatter_v(&algo, &topo, &m, counts.as_ref().expect("set above"));
+            (rep.algorithm, rep.vtime, rep.predicted, rep.verified, rep.trace, rep.errors)
+        }
+    };
+    let sizing = match &counts {
+        Some(c) => format!("counts [{c}]"),
+        None => format!("{n} values/rank"),
     };
     println!(
-        "{op} / {algo_name} on {} ranks ({regions} regions x {ppr}), {n} values/rank [{}]",
+        "{op} / {algo_name} on {} ranks ({regions} regions x {ppr}), {sizing} [{}]",
         topo.size(),
         m.name
     );
@@ -168,6 +212,30 @@ pub fn quickstart(_args: &Args) -> Result<i32> {
             a.trace.max_nonlocal_msgs()
         );
     }
+    println!(
+        "\nRagged sizes — every rank may contribute a DIFFERENT count\n\
+         (allgatherv / reduce-scatter-v, `locag run --op allgatherv\n\
+         --counts 4,0,7,2`). Locality still fixes the exchange structure;\n\
+         the counts only size the payloads, so zero-count ranks participate\n\
+         in every round and the non-local message bounds survive intact.\n\
+         Skewed counts (rank r contributes r mod 5) on the 16-rank example:"
+    );
+    let counts = crate::collectives::Counts::new((0..topo.size()).map(|r| r % 5).collect());
+    for algo in ["ring", "bruck", "loc-aware"] {
+        let rep = sim::run_allgatherv(algo, &topo, &m, &counts);
+        println!(
+            "  allgatherv/{:<10} max NL msgs {:>2} modeled {}",
+            algo,
+            rep.trace.max_nonlocal_msgs(),
+            seconds(rep.vtime)
+        );
+    }
+    let rsv = sim::run_reduce_scatter_v("loc-aware", &topo, &m, &counts);
+    println!(
+        "  reduce-scatter-v/loc-aware max NL msgs {:>2} modeled {}",
+        rsv.trace.max_nonlocal_msgs(),
+        seconds(rsv.vtime)
+    );
     println!(
         "\nEvery algorithm is a communication-schedule (IR) builder executed\n\
          by one generic interpreter. Inspect any schedule and its modeled\n\
@@ -565,7 +633,7 @@ pub fn fuse_cmd(args: &Args) -> Result<i32> {
 /// explain the serving-loop fusion instead ([`explain_fused`]).
 pub fn explain(args: &Args) -> Result<i32> {
     use crate::collectives::schedule::{Schedule, WorldView};
-    use crate::collectives::{model_tuned, schedule, OpKind};
+    use crate::collectives::{allgatherv, model_tuned, reduce_scatter_v, schedule, OpKind};
     use crate::model::cost;
 
     if args.get_bool("fused") {
@@ -576,6 +644,7 @@ pub fn explain(args: &Args) -> Result<i32> {
     let default_algo = match op {
         OpKind::Allgather => "loc-bruck",
         OpKind::Allreduce | OpKind::Alltoall | OpKind::ReduceScatter => "loc-aware",
+        OpKind::Allgatherv | OpKind::ReduceScatterV => "loc-aware",
     };
     let algo = args.get_str("algo", default_algo);
     let regions = args.get_usize("regions", 4)?;
@@ -590,11 +659,15 @@ pub fn explain(args: &Args) -> Result<i32> {
     }
     let view = WorldView::world(&topo);
     // Element sizes mirror the sweep engine's payloads (u32 allgather,
-    // u64 allreduce/alltoall/reduce-scatter).
+    // u64 everywhere else).
     let esz = match op {
         OpKind::Allgather => 4usize,
-        OpKind::Allreduce | OpKind::Alltoall | OpKind::ReduceScatter => 8,
+        _ => 8,
     };
+    // Per-rank counts for the ragged ops (`--counts`; uniform `n` when
+    // absent). Harmlessly uniform for the classic ops.
+    let vcounts = counts_arg(args, n, p)?;
+    let is_ragged = matches!(op, OpKind::Allgatherv | OpKind::ReduceScatterV);
     let build_one = |name: &str, r: usize| -> Result<Schedule> {
         match op {
             OpKind::Allgather => {
@@ -603,6 +676,12 @@ pub fn explain(args: &Args) -> Result<i32> {
             OpKind::Allreduce => schedule::build_allreduce(name, &view, r, n, esz),
             OpKind::Alltoall => schedule::build_alltoall(name, &view, r, n, esz),
             OpKind::ReduceScatter => schedule::build_reduce_scatter(name, &view, r, n, esz),
+            OpKind::Allgatherv => {
+                allgatherv::build_allgatherv(name, &view, r, vcounts.as_slice(), esz)
+            }
+            OpKind::ReduceScatterV => {
+                reduce_scatter_v::build_reduce_scatter_v(name, &view, r, vcounts.as_slice(), esz)
+            }
         }
     };
     let world: Vec<usize> = (0..p).collect();
@@ -621,6 +700,12 @@ pub fn explain(args: &Args) -> Result<i32> {
         OpKind::ReduceScatter => {
             model_tuned::REDUCE_SCATTER_CANDIDATES.iter().map(|s| s.to_string()).collect()
         }
+        OpKind::Allgatherv => {
+            model_tuned::ALLGATHERV_CANDIDATES.iter().map(|s| s.to_string()).collect()
+        }
+        OpKind::ReduceScatterV => {
+            model_tuned::REDUCE_SCATTER_V_CANDIDATES.iter().map(|s| s.to_string()).collect()
+        }
     };
 
     if let Some(sweep) = args.options.get("sweep") {
@@ -634,11 +719,18 @@ pub fn explain(args: &Args) -> Result<i32> {
         println!("{:>9} {:>11}  {:<26} {:>13}", "n", "bytes/rank", "winner", "predicted");
         let mut n_s = 1usize;
         loop {
+            // The sweep varies a uniform per-rank size even for the ragged
+            // ops — it charts crossover vs message size, not skew.
+            let uni = vec![n_s; p];
             let (winner, scheds) = match op {
                 OpKind::Allgather => model_tuned::pick_allgather(&view, &m, n_s, esz)?,
                 OpKind::Allreduce => model_tuned::pick_allreduce(&view, &m, n_s, esz)?,
                 OpKind::Alltoall => model_tuned::pick_alltoall(&view, &m, n_s, esz)?,
                 OpKind::ReduceScatter => model_tuned::pick_reduce_scatter(&view, &m, n_s, esz)?,
+                OpKind::Allgatherv => model_tuned::pick_allgatherv(&view, &m, &uni, esz)?,
+                OpKind::ReduceScatterV => {
+                    model_tuned::pick_reduce_scatter_v(&view, &m, &uni, esz)?
+                }
             };
             let t = cost::predict(&scheds, &topo, &world, &m)?;
             println!("{:>9} {:>11}  {:<26} {:>13}", n_s, n_s * esz, winner, seconds(t));
@@ -656,6 +748,12 @@ pub fn explain(args: &Args) -> Result<i32> {
             OpKind::Allreduce => model_tuned::pick_allreduce(&view, &m, n, esz)?,
             OpKind::Alltoall => model_tuned::pick_alltoall(&view, &m, n, esz)?,
             OpKind::ReduceScatter => model_tuned::pick_reduce_scatter(&view, &m, n, esz)?,
+            OpKind::Allgatherv => {
+                model_tuned::pick_allgatherv(&view, &m, vcounts.as_slice(), esz)?
+            }
+            OpKind::ReduceScatterV => {
+                model_tuned::pick_reduce_scatter_v(&view, &m, vcounts.as_slice(), esz)?
+            }
         };
         println!("model-tuned selection: {winner}");
         scheds
@@ -664,8 +762,10 @@ pub fn explain(args: &Args) -> Result<i32> {
     };
 
     let sched = &scheds[rank];
+    let sizing =
+        if is_ragged { format!("counts [{vcounts}]") } else { format!("{n} values/rank") };
     println!(
-        "{op} / {} on {p} ranks ({regions} regions x {ppr}), {n} values/rank [{}]",
+        "{op} / {} on {p} ranks ({regions} regions x {ppr}), {sizing} [{}]",
         sched.label, m.name
     );
     print_schedule(sched, rank, &topo);
@@ -891,6 +991,82 @@ pub fn bench(args: &Args) -> Result<i32> {
                     verified: rep.verified,
                 });
             }
+        }
+        if let Some(mut p) = pool.take() {
+            let _ = p.shutdown();
+        }
+    }
+    // Ragged rows: one skewed allgatherv / reduce-scatter-v point per
+    // registered variant (rank r contributes (3r) mod 7 elements — zero on
+    // some ranks). New rows are warn-only in the perf gate until a
+    // baseline carrying them lands; with `--backend proc` the same pool
+    // machinery times the ragged job (ProcJob::SingleV) too.
+    {
+        use crate::collectives::Counts;
+        let (regions, ppr) = (4usize, 4usize);
+        let topo = Topology::regions(regions, ppr);
+        let counts = Counts::new((0..topo.size()).map(|r| (r * 3) % 7).collect());
+        let mut pool: Option<ProcPool> = None;
+        let mut proc_wall = |op: OpKind, algo: &str| -> Option<f64> {
+            if backend != Backend::Proc {
+                return None;
+            }
+            if pool.is_none() {
+                match ProcPool::spawn(regions, ppr, &machine_name, &ProcConfig::default()) {
+                    Ok(p) => pool = Some(p),
+                    Err(e) => {
+                        eprintln!("warning: proc pool {regions}x{ppr} failed to spawn: {e}");
+                        return None;
+                    }
+                }
+            }
+            let job = ProcJob::SingleV {
+                op,
+                algo: algo.to_string(),
+                counts: counts.as_slice().to_vec(),
+                elem_bytes: 8,
+            };
+            let pl = pool.as_mut().expect("spawned above");
+            match pool_median_wall(pl, &job, PROC_WARMUP, proc_iters) {
+                Ok(w) => Some(w),
+                Err(e) => {
+                    eprintln!("warning: proc backend skipped ragged {op}/{algo}: {e}");
+                    pool = None;
+                    None
+                }
+            }
+        };
+        for algo in ["ring", "bruck", "loc-aware", "model-tuned"] {
+            let rep = sim::run_allgatherv(algo, &topo, &m, &counts);
+            record(BenchRow {
+                op: "allgatherv".to_string(),
+                algo: algo.to_string(),
+                regions,
+                ppr,
+                p: rep.p,
+                n: rep.n,
+                vtime: rep.vtime,
+                predicted: rep.predicted,
+                wall: rep.wall,
+                wall_proc: proc_wall(OpKind::Allgatherv, algo),
+                verified: rep.verified,
+            });
+        }
+        for algo in ["ring", "loc-aware", "model-tuned"] {
+            let rep = sim::run_reduce_scatter_v(algo, &topo, &m, &counts);
+            record(BenchRow {
+                op: "reduce-scatter-v".to_string(),
+                algo: algo.to_string(),
+                regions,
+                ppr,
+                p: rep.p,
+                n: rep.n,
+                vtime: rep.vtime,
+                predicted: rep.predicted,
+                wall: rep.wall,
+                wall_proc: proc_wall(OpKind::ReduceScatterV, algo),
+                verified: rep.verified,
+            });
         }
         if let Some(mut p) = pool.take() {
             let _ = p.shutdown();

@@ -4,6 +4,7 @@
 //! locag quickstart                      # paper Example 2.1 walkthrough
 //! locag run --op alltoall --algo loc-aware --regions 16 --ppr 8
 //! locag run --op reduce-scatter --algo loc-aware       # §4 inverse sibling
+//! locag run --op allgatherv --counts 4,0,7,2 --regions 2 --ppr 2  # ragged
 //! locag run --algo model-tuned          # cost-model-selected allgather
 //! locag explain --algo loc-bruck --regions 4 --ppr 4   # schedule + costs
 //! locag explain --fused --regions 2 --ppr 8            # fused serving plan
@@ -76,16 +77,21 @@ USAGE: locag <command> [options]
 COMMANDS
   quickstart   Walk through paper Example 2.1 (16 ranks, 4 regions):
                per-algorithm traffic tables and modeled times.
-  algos        List the algorithm registries of all four operations
-               (allgather, allreduce, alltoall, reduce-scatter;
-               name + one-line summary).
+  algos        List the algorithm registries of all six operations
+               (allgather, allreduce, alltoall, reduce-scatter,
+               allgatherv, reduce-scatter-v; name + one-line summary).
   run          Run any planned collective and report time/traffic.
                --op OP           allgather | allreduce | alltoall |
-                                 reduce-scatter
+                                 reduce-scatter | allgatherv |
+                                 reduce-scatter-v
                --algo NAME       (defaults: loc-bruck / loc-aware)
                --regions N       (default 16)
                --ppr N           ranks per region (default 8)
                --values N        values per rank (default 2)
+               --counts C0,C1,.. per-rank counts for the ragged ops
+                                 (allgatherv / reduce-scatter-v; must list
+                                 exactly regions*ppr counts, zeros allowed;
+                                 default: --values on every rank)
                --machine NAME    lassen | quartz | a locag-params-v1 file
                                  from `locag fit` (default lassen)
   allgather    Shorthand for `run --op allgather` (paper compatibility).
@@ -94,6 +100,7 @@ COMMANDS
                executor runs) and its cost breakdown: per-class traffic
                and the model-predicted completion time.
                --op OP --algo NAME --regions N --ppr N --values N
+               --counts C0,C1,.. (ragged per-rank counts, like `run`)
                --rank N (whose schedule to print; default 0) --machine NAME
                --fused: explain the serving-loop fusion instead (K
                allgathers ⊕ consensus allreduce as ONE round-merged,
@@ -185,6 +192,8 @@ ALGORITHMS (case-insensitive; see `locag algos`)
                   power-of-two precondition)
   alltoall:       system-default pairwise bruck loc-aware model-tuned
   reduce-scatter: ring recursive-halving loc-aware model-tuned
+  allgatherv:     ring bruck loc-aware model-tuned (ragged counts)
+  reduce-scatter-v: ring loc-aware model-tuned (ragged counts)
 
   `model-tuned` plans every candidate's schedule, scores each against the
   machine's locality-split postal model (the IR-derived cost model), and

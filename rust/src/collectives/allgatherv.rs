@@ -1,0 +1,544 @@
+//! Allgatherv — the ragged allgather — as schedule builders.
+//!
+//! `allgatherv` contract (`MPI_Allgatherv` semantics): rank `r`
+//! contributes `counts[r]` elements; afterwards every rank holds the
+//! concatenation of all contributions in rank order, block `r` at the
+//! counts' prefix offset. Jocksch et al. (*Optimised allgatherv,
+//! reduce_scatter and allreduce communication*) treat the ragged gather as
+//! the collective the paper's locality-aware aggregation generalises to:
+//! the same per-message postal terms `α_c + β_c·s` (paper §4) over exact
+//! ragged slices, with zero-count ranks still participating in every
+//! exchange (a zero-length message costs its latency term — dropping it
+//! would desynchronise the SPMD schedules).
+//!
+//! Three builders, all registered in
+//! [`super::plan::AllgathervRegistry`] (plus the cost-model-driven
+//! [`super::model_tuned::ModelTunedAllgatherv`]):
+//!
+//! * **`ring`** — `p−1` neighbour exchange steps over the output buffer at
+//!   ragged offsets: step `s` forwards block `(rank+s) mod p` left and
+//!   receives block `(rank+s+1) mod p` from the right. Bandwidth-optimal
+//!   (`total − counts[rank]` elements received, each exactly once);
+//! * **`bruck`** — the sst-macro `bruck_allgatherv` shape: `⌈log₂ p⌉`
+//!   doubling exchanges with **per-partner receive counts** (rotated
+//!   prefix sums of the counts vector); non-power-of-two `p` is absorbed
+//!   by the final partial round sending `p − 2^⌊log₂ p⌋` blocks — the
+//!   extra-round trick ([`super::schedule::emit_group_allgatherv`]);
+//! * **`loc-aware`** — paper Algorithm 2 over ragged region sums: a local
+//!   allgatherv per region, then the same `⌈log_pℓ(r)⌉` width-doubling
+//!   non-local steps as the uniform [`super::loc_bruck`] builder, each
+//!   non-local message carrying the *sum of the held regions' counts*
+//!   instead of `w·pℓ·n`. Non-local message counts are exactly the uniform
+//!   bound — raggedness changes payload lengths, never the exchange
+//!   structure (asserted in `rust/tests/locality_counts.rs`).
+//!
+//! All three are pure schedule builders over exact ragged slices: every
+//! schedule carries an explicit [`Schedule::io`] override
+//! (`(counts[rank], Σ counts)`), executes through the generic
+//! [`SchedPlan`] interpreter, and is costed by [`crate::model::cost`] with
+//! no ragged special-casing — prediction replays the same slices execution
+//! moves.
+
+use super::grouping::GroupBy;
+use super::plan::{
+    check_counts_len, trivial_agv_plan, AllgathervAlgorithm, AllgathervPlan, Counts,
+    NamedAlgorithm, OpKind, PlanSpec,
+};
+use super::schedule::{
+    emit_group_allgatherv, locate, uniform_size, SchedPlan, Schedule, ScheduleBuilder, Slice,
+    WorldView,
+};
+use crate::comm::{Comm, Pod};
+use crate::error::{Error, Result};
+
+/// Ring allgatherv (registry entry).
+pub struct RingAllgatherv;
+
+impl NamedAlgorithm for RingAllgatherv {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn summary(&self) -> &'static str {
+        "ring allgatherv: p-1 neighbour exchanges of ragged blocks, bandwidth-optimal"
+    }
+}
+
+impl<T: Pod> AllgathervAlgorithm<T> for RingAllgatherv {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgathervPlan<T>>> {
+        if let Some(p) = trivial_agv_plan("ring", comm, spec) {
+            return Ok(p);
+        }
+        check_counts_len(&spec.counts, comm.size())?;
+        let sched = build_ring_schedule(
+            comm.size(),
+            comm.rank(),
+            spec.counts.as_slice(),
+            std::mem::size_of::<T>(),
+        );
+        Ok(SchedPlan::<T>::boxed(comm, "ring", sched)?)
+    }
+}
+
+/// Bruck allgatherv with per-partner receive counts (registry entry).
+pub struct BruckAllgatherv;
+
+impl NamedAlgorithm for BruckAllgatherv {
+    fn name(&self) -> &'static str {
+        "bruck"
+    }
+
+    fn summary(&self) -> &'static str {
+        "Bruck allgatherv: log2(p) doubling exchanges with per-partner recv counts"
+    }
+}
+
+impl<T: Pod> AllgathervAlgorithm<T> for BruckAllgatherv {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgathervPlan<T>>> {
+        if let Some(p) = trivial_agv_plan("bruck", comm, spec) {
+            return Ok(p);
+        }
+        check_counts_len(&spec.counts, comm.size())?;
+        let sched = build_bruck_schedule(
+            comm.size(),
+            comm.rank(),
+            spec.counts.as_slice(),
+            std::mem::size_of::<T>(),
+        );
+        Ok(SchedPlan::<T>::boxed(comm, "bruck", sched)?)
+    }
+}
+
+/// Locality-aware allgatherv (registry entry).
+pub struct LocAwareAllgatherv;
+
+impl NamedAlgorithm for LocAwareAllgatherv {
+    fn name(&self) -> &'static str {
+        "loc-aware"
+    }
+
+    fn summary(&self) -> &'static str {
+        "regional allgatherv (Alg. 2 over ragged region sums): log_ppr(r) non-local steps"
+    }
+}
+
+impl<T: Pod> AllgathervAlgorithm<T> for LocAwareAllgatherv {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgathervPlan<T>>> {
+        if let Some(p) = trivial_agv_plan("loc-aware", comm, spec) {
+            return Ok(p);
+        }
+        check_counts_len(&spec.counts, comm.size())?;
+        let view = WorldView::from_comm(comm);
+        let sched = build_loc_schedule(
+            &view,
+            comm.rank(),
+            spec.counts.as_slice(),
+            std::mem::size_of::<T>(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
+    }
+}
+
+/// Exclusive prefix sums with the total appended (`len + 1` entries).
+fn prefix_offsets(counts: &[usize]) -> Vec<usize> {
+    let mut offs = Vec::with_capacity(counts.len() + 1);
+    let mut acc = 0usize;
+    offs.push(0);
+    for &c in counts {
+        acc += c;
+        offs.push(acc);
+    }
+    offs
+}
+
+// ---------------------------------------------------------------------------
+// builders
+// ---------------------------------------------------------------------------
+
+/// Build the ring allgatherv schedule for one rank (pure; SPMD). Blocks
+/// travel through the output buffer at the counts' prefix offsets;
+/// zero-count blocks are still forwarded (zero-length messages keep the
+/// ring in lockstep and are charged their latency term).
+pub fn build_ring_schedule(
+    p: usize,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Schedule {
+    debug_assert_eq!(counts.len(), p);
+    let offs = prefix_offsets(counts);
+    let total = offs[p];
+    let mut sb = ScheduleBuilder::new("ring allgatherv");
+    let tag0 = sb.tag_block(p.saturating_sub(1) as u64);
+    if counts[rank] > 0 {
+        sb.copy(Slice::input(0, counts[rank]), Slice::output(offs[rank], counts[rank]));
+    }
+    let right = (rank + 1) % p;
+    let left = (rank + p - 1) % p;
+    for s in 0..p.saturating_sub(1) {
+        let have = (rank + s) % p;
+        let get = (rank + s + 1) % p;
+        sb.sendrecv(
+            left,
+            Slice::output(offs[have], counts[have]),
+            right,
+            Slice::output(offs[get], counts[get]),
+            tag0 + s as u64,
+            0,
+        );
+    }
+    let mut sched = sb.finish(OpKind::Allgatherv, p, max_count(counts), elem_bytes, "ring");
+    sched.io = Some((counts[rank], total));
+    sched
+}
+
+/// Build the Bruck allgatherv schedule for one rank (pure; SPMD): the
+/// whole communicator as one group of
+/// [`super::schedule::emit_group_allgatherv`] — `⌈log₂ p⌉` doubling
+/// exchanges whose send/receive lengths are rotated prefix sums of the
+/// counts, the final partial round covering non-power-of-two `p`.
+pub fn build_bruck_schedule(
+    p: usize,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Schedule {
+    debug_assert_eq!(counts.len(), p);
+    let total: usize = counts.iter().sum();
+    let members: Vec<usize> = (0..p).collect();
+    let mut sb = ScheduleBuilder::new("bruck allgatherv");
+    emit_group_allgatherv(
+        &mut sb,
+        &members,
+        rank,
+        counts,
+        Slice::input(0, counts[rank]),
+        Slice::output(0, total),
+    );
+    let mut sched = sb.finish(OpKind::Allgatherv, p, max_count(counts), elem_bytes, "bruck");
+    sched.io = Some((counts[rank], total));
+    sched
+}
+
+/// Build the locality-aware allgatherv schedule for one rank (pure; SPMD).
+///
+/// The uniform Algorithm 2 control flow with ragged region sums: phase 1
+/// is a per-region local allgatherv into a region-major working buffer;
+/// each of the `⌈log_pℓ(r)⌉` non-local steps exchanges the *held window*
+/// of regions — payload the sum of the window's counts — between ranks of
+/// equal local index, followed by a local allgatherv of the received
+/// windows and an absolute-indexed scatter. Exchange partners, step count
+/// and per-rank activity are **identical** to the uniform builder
+/// ([`super::loc_bruck`]); only payload lengths follow the counts, so the
+/// paper's non-local message bound survives arbitrary skew. One rank per
+/// region degrades to the plain group allgatherv; non-uniform regions are
+/// rejected at plan time.
+pub fn build_loc_schedule(
+    view: &WorldView,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    debug_assert_eq!(counts.len(), view.p);
+    let all: Vec<usize> = (0..view.p).collect();
+    let groups = view.split(&all, GroupBy::Region);
+    let ppr = uniform_size(&groups, "locality-aware allgatherv")?;
+    let r_n = groups.len();
+    let offs = prefix_offsets(counts);
+    let total = offs[view.p];
+
+    let mut sb = ScheduleBuilder::new("local allgatherv");
+    if ppr == 1 {
+        // One rank per region: the non-local phase would make no progress
+        // (only local rank 0 exists and it idles) — degrade to the group
+        // allgatherv over the whole communicator.
+        emit_group_allgatherv(
+            &mut sb,
+            &all,
+            rank,
+            counts,
+            Slice::input(0, counts[rank]),
+            Slice::output(0, total),
+        );
+        let mut sched =
+            sb.finish(OpKind::Allgatherv, view.p, max_count(counts), elem_bytes, "loc-aware");
+        sched.io = Some((counts[rank], total));
+        return Ok(sched);
+    }
+    let (g, l) = locate(&groups, rank)?;
+
+    // Ragged region geometry: region gi's members contribute r_sum[gi]
+    // elements in local-rank order, and the region-major working buffer
+    // keeps region gi at the fixed absolute offset r_off[gi] — assembly by
+    // absolute region index makes wrap-around duplicates benign, exactly
+    // as in the uniform builder.
+    let region_counts: Vec<Vec<usize>> =
+        groups.iter().map(|m| m.iter().map(|&r| counts[r]).collect()).collect();
+    let r_sum: Vec<usize> = region_counts.iter().map(|c| c.iter().sum()).collect();
+    let r_off = prefix_offsets(&r_sum);
+    let win = |start: usize, width: usize| -> usize {
+        (0..width).map(|k| r_sum[(start + k) % r_n]).sum()
+    };
+    let buf = sb.scratch(total);
+
+    // Phase 1: local allgatherv straight into this rank's region slot.
+    emit_group_allgatherv(
+        &mut sb,
+        &groups[g],
+        rank,
+        &region_counts[g],
+        Slice::input(0, counts[rank]),
+        Slice::at(buf, r_off[g], r_sum[g]),
+    );
+
+    // Non-local phase. Invariant: every rank of group gi holds exactly the
+    // regions [gi, gi+width) mod r_n.
+    let mut width = 1usize;
+    let mut step_no = 1usize;
+    while width < r_n {
+        sb.round(format!("non-local step {step_no}"));
+        let tag = sb.tag();
+        let active_j = |j: usize| j > 0 && j * width < r_n;
+        let active = active_j(l);
+        // Local rank j's contribution to the post-step gather is the
+        // window starting at region (g + j·width): rank 0 re-contributes
+        // the held window, inactive ranks contribute nothing.
+        let gather_counts: Vec<usize> = (0..ppr)
+            .map(|j| {
+                if j == 0 || active_j(j) {
+                    win((g + j * width) % r_n, width)
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let send_len = win(g, width);
+        let need_send = active || l == 0;
+        let send_buf = if need_send { Some(sb.scratch(send_len)) } else { None };
+        let recv_len = if active { win((g + l * width) % r_n, width) } else { 0 };
+        let recv_buf = if active { Some(sb.scratch(recv_len)) } else { None };
+        if let Some(sbuf) = send_buf {
+            // collect the held ring [g, g+width) into a contiguous payload
+            let mut off = 0usize;
+            for k in 0..width {
+                let ri = (g + k) % r_n;
+                if r_sum[ri] > 0 {
+                    sb.copy(Slice::at(buf, r_off[ri], r_sum[ri]), Slice::at(sbuf, off, r_sum[ri]));
+                }
+                off += r_sum[ri];
+            }
+        }
+        if let (true, Some(rbuf)) = (active, recv_buf) {
+            let dist = (l * width) % r_n;
+            let to = groups[(g + r_n - dist) % r_n][l];
+            let from = groups[(g + dist) % r_n][l];
+            sb.sendrecv(
+                to,
+                Slice::at(send_buf.expect("active ranks have a send buffer"), 0, send_len),
+                from,
+                Slice::at(rbuf, 0, recv_len),
+                tag,
+                0,
+            );
+        }
+        // Local allgatherv of the received windows.
+        let gather_total: usize = gather_counts.iter().sum();
+        let gathered = sb.scratch(gather_total);
+        let my_contrib = if l == 0 {
+            Slice::at(send_buf.expect("local rank 0 always stages its held window"), 0, send_len)
+        } else if active {
+            Slice::at(recv_buf.expect("active"), 0, recv_len)
+        } else {
+            Slice::input(0, 0)
+        };
+        emit_group_allgatherv(
+            &mut sb,
+            &groups[g],
+            rank,
+            &gather_counts,
+            my_contrib,
+            Slice::at(gathered, 0, gather_total),
+        );
+        // Scatter the gathered windows by absolute region index.
+        let mut off = 0usize;
+        for (j, &c) in gather_counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let start = (g + j * width) % r_n;
+            let mut woff = off;
+            for k in 0..width {
+                let ri = (start + k) % r_n;
+                if r_sum[ri] > 0 {
+                    sb.copy(
+                        Slice::at(gathered, woff, r_sum[ri]),
+                        Slice::at(buf, r_off[ri], r_sum[ri]),
+                    );
+                }
+                woff += r_sum[ri];
+            }
+            off += c;
+        }
+        width = width.saturating_mul(ppr);
+        step_no += 1;
+    }
+
+    // Permute the region-major buffer into rank order at the counts'
+    // global prefix offsets.
+    sb.round("reorder");
+    for (gi, members) in groups.iter().enumerate() {
+        let mut moff = r_off[gi];
+        for &r in members {
+            if counts[r] > 0 {
+                sb.copy(Slice::at(buf, moff, counts[r]), Slice::output(offs[r], counts[r]));
+            }
+            moff += counts[r];
+        }
+    }
+    let mut sched =
+        sb.finish(OpKind::Allgatherv, view.p, max_count(counts), elem_bytes, "loc-aware");
+    sched.io = Some((counts[rank], total));
+    Ok(sched)
+}
+
+fn max_count(counts: &[usize]) -> usize {
+    counts.iter().copied().max().unwrap_or(0)
+}
+
+/// Build the schedule of one allgatherv algorithm (by registry name) for
+/// `rank`. `model-tuned` is handled by the dispatcher
+/// ([`super::model_tuned::pick_allgatherv`]).
+pub fn build_allgatherv(
+    name: &str,
+    view: &WorldView,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    if counts.len() != view.p {
+        return Err(Error::Precondition(format!(
+            "counts length {} does not match communicator size {}",
+            counts.len(),
+            view.p
+        )));
+    }
+    if name.eq_ignore_ascii_case("ring") {
+        Ok(build_ring_schedule(view.p, rank, counts, elem_bytes))
+    } else if name.eq_ignore_ascii_case("bruck") {
+        Ok(build_bruck_schedule(view.p, rank, counts, elem_bytes))
+    } else if name.eq_ignore_ascii_case("loc-aware") {
+        build_loc_schedule(view, rank, counts, elem_bytes)
+    } else {
+        Err(Error::Precondition(format!("no allgatherv schedule builder for '{name}'")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one-shot wrappers
+// ---------------------------------------------------------------------------
+
+/// One-shot ring allgatherv: `local.len()` must equal `counts[rank]`.
+pub fn ring<T: Pod>(comm: &Comm, local: &[T], counts: &Counts) -> Result<Vec<T>> {
+    super::plan::one_shot_agv(&RingAllgatherv, comm, local, counts)
+}
+
+/// One-shot Bruck allgatherv.
+pub fn bruck<T: Pod>(comm: &Comm, local: &[T], counts: &Counts) -> Result<Vec<T>> {
+    super::plan::one_shot_agv(&BruckAllgatherv, comm, local, counts)
+}
+
+/// One-shot locality-aware allgatherv.
+pub fn loc_aware<T: Pod>(comm: &Comm, local: &[T], counts: &Counts) -> Result<Vec<T>> {
+    super::plan::one_shot_agv(&LocAwareAllgatherv, comm, local, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    fn contribution(rank: usize, c: usize) -> Vec<u64> {
+        (0..c).map(|j| (rank * 1_000_003 + j) as u64).collect()
+    }
+
+    fn expected(counts: &[usize]) -> Vec<u64> {
+        let mut e = Vec::new();
+        for (r, &c) in counts.iter().enumerate() {
+            e.extend(contribution(r, c));
+        }
+        e
+    }
+
+    fn check_all(topo: &Topology, counts: Vec<usize>) {
+        let cts = Counts::new(counts.clone());
+        let expect = expected(&counts);
+        for algo in ["ring", "bruck", "loc-aware"] {
+            let run = CommWorld::run(topo, Timing::Wallclock, |c| {
+                let reg = crate::collectives::plan::AllgathervRegistry::<u64>::standard();
+                let mut plan = reg.plan(algo, c, &PlanSpec::ragged(cts.clone())).unwrap();
+                let mut out = vec![0u64; cts.total()];
+                plan.execute(&contribution(c.rank(), cts.get(c.rank())), &mut out).unwrap();
+                out
+            });
+            for (rank, r) in run.results.iter().enumerate() {
+                assert_eq!(r, &expect, "{algo} rank {rank} counts {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_counts_across_shapes() {
+        check_all(&Topology::regions(2, 2), vec![4, 0, 7, 2]);
+        check_all(&Topology::regions(4, 4), (0..16).map(|r| r % 5).collect());
+        check_all(&Topology::regions(2, 8), (0..16).map(|r| (r * 3) % 7).collect());
+        check_all(&Topology::regions(3, 2), vec![1, 0, 3, 0, 2, 5]);
+    }
+
+    #[test]
+    fn single_rank_holds_everything() {
+        let mut counts = vec![0usize; 8];
+        counts[3] = 9;
+        check_all(&Topology::regions(4, 2), counts);
+        let mut counts = vec![0usize; 6];
+        counts[0] = 4;
+        check_all(&Topology::regions(3, 2), counts);
+    }
+
+    #[test]
+    fn non_power_of_two_world() {
+        check_all(&Topology::regions(5, 1), vec![2, 0, 1, 4, 3]);
+        check_all(&Topology::regions(7, 1), (0..7).map(|r| r % 3).collect());
+        check_all(&Topology::regions(3, 3), (0..9).map(|r| (r * 7) % 4).collect());
+    }
+
+    #[test]
+    fn uniform_counts_degenerate_to_allgather() {
+        check_all(&Topology::regions(4, 4), vec![2; 16]);
+        check_all(&Topology::regions(1, 8), vec![3; 8]);
+        check_all(&Topology::regions(8, 1), vec![1; 8]);
+    }
+
+    #[test]
+    fn loc_aware_keeps_uniform_nonlocal_bound_under_skew() {
+        // (4×4): uniform Algorithm 2 sends ⌈log_4(4)⌉ = 1 non-local
+        // message per rank; skewed counts must not change that.
+        let topo = Topology::regions(4, 4);
+        let counts: Vec<usize> = (0..16).map(|r| r % 5).collect();
+        let cts = Counts::new(counts);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            loc_aware(c, &contribution(c.rank(), cts.get(c.rank())), &cts).unwrap();
+        });
+        assert_eq!(run.trace.max_nonlocal_msgs(), 1);
+    }
+
+    #[test]
+    fn one_shot_rejects_wrong_local_length() {
+        let topo = Topology::regions(2, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let cts = Counts::new(vec![1, 2, 3, 4]);
+            ring(c, &[0u64; 9], &cts).is_err()
+        });
+        assert!(run.results.iter().all(|&b| b));
+    }
+}

@@ -44,7 +44,7 @@
 
 use super::grouping::GroupBy;
 use super::plan::{
-    trivial_reduce_plan, AllreduceAlgorithm, AllreducePlan, NamedAlgorithm, OpKind, Shape,
+    trivial_reduce_plan, AllreduceAlgorithm, AllreducePlan, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{
     ceil_log2_u64, emit_group_allgatherv, emit_group_rd_allreduce, locate, uniform_size,
@@ -71,12 +71,12 @@ impl NamedAlgorithm for RecursiveDoublingAllreduce {
 }
 
 impl<T: Summable> AllreduceAlgorithm<T> for RecursiveDoublingAllreduce {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
-        if let Some(p) = trivial_reduce_plan("recursive-doubling", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("recursive-doubling", comm, spec) {
             return Ok(p);
         }
-        let sched =
-            build_rd_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let n = spec.uniform_n("recursive-doubling")?;
+        let sched = build_rd_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "recursive-doubling", sched)?)
     }
 }
@@ -128,12 +128,13 @@ impl NamedAlgorithm for LocalityAwareAllreduce {
 }
 
 impl<T: Summable> AllreduceAlgorithm<T> for LocalityAwareAllreduce {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
-        if let Some(p) = trivial_reduce_plan("loc-aware", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("loc-aware", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("loc-aware")?;
         let view = WorldView::from_comm(comm);
-        let sched = build_loc_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let sched = build_loc_schedule(&view, comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
     }
 }
@@ -226,16 +227,13 @@ impl NamedAlgorithm for RabenseifnerAllreduce {
 }
 
 impl<T: Summable> AllreduceAlgorithm<T> for RabenseifnerAllreduce {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
-        if let Some(p) = trivial_reduce_plan("rabenseifner", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("rabenseifner", comm, spec) {
             return Ok(p);
         }
-        let sched = build_rabenseifner_schedule(
-            comm.size(),
-            comm.rank(),
-            shape.n,
-            std::mem::size_of::<T>(),
-        );
+        let n = spec.uniform_n("rabenseifner")?;
+        let sched =
+            build_rabenseifner_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "rabenseifner", sched)?)
     }
 }
@@ -387,13 +385,14 @@ impl NamedAlgorithm for LocRabenseifnerAllreduce {
 }
 
 impl<T: Summable> AllreduceAlgorithm<T> for LocRabenseifnerAllreduce {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
-        if let Some(p) = trivial_reduce_plan("loc-rabenseifner", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("loc-rabenseifner", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("loc-rabenseifner")?;
         let view = WorldView::from_comm(comm);
         let sched =
-            build_loc_rabenseifner_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+            build_loc_rabenseifner_schedule(&view, comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "loc-rabenseifner", sched)?)
     }
 }
@@ -507,7 +506,7 @@ pub fn allreduce_loc_rabenseifner<T: Summable>(comm: &Comm, local: &[T]) -> Resu
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::plan::AllreduceRegistry;
+    use crate::collectives::plan::{AllreduceRegistry, Shape};
     use crate::comm::{CommWorld, Timing};
     use crate::topology::Topology;
 
@@ -687,7 +686,7 @@ mod tests {
         let topo = Topology::regions(3, 1);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = AllreduceRegistry::<u64>::standard();
-            let err = r.plan("recursive-doubling", c, Shape::elems(2)).unwrap_err();
+            let err = r.plan_uniform("recursive-doubling", c, Shape::elems(2)).unwrap_err();
             err.to_string()
         });
         for msg in &run.results {
@@ -698,7 +697,7 @@ mod tests {
         // ... but the zero-length plan bypasses the precondition uniformly.
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = AllreduceRegistry::<u64>::standard();
-            let mut plan = r.plan("recursive-doubling", c, Shape::elems(0)).unwrap();
+            let mut plan = r.plan_uniform("recursive-doubling", c, Shape::elems(0)).unwrap();
             let mut out: Vec<u64> = Vec::new();
             plan.execute(&[], &mut out).unwrap();
             out.is_empty()
@@ -743,7 +742,7 @@ mod tests {
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = AllreduceRegistry::<u64>::standard();
             for name in r.names() {
-                let mut plan = r.plan(name, c, Shape::elems(3)).unwrap();
+                let mut plan = r.plan_uniform(name, c, Shape::elems(3)).unwrap();
                 assert_eq!(plan.algorithm(), name);
                 assert_eq!(plan.comm_size(), p);
                 let mut out = vec![0u64; 3];

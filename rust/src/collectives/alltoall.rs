@@ -35,7 +35,7 @@
 
 use super::grouping::GroupBy;
 use super::plan::{
-    trivial_a2a_plan, AlltoallAlgorithm, AlltoallPlan, NamedAlgorithm, OpKind, Shape,
+    trivial_a2a_plan, AlltoallAlgorithm, AlltoallPlan, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{
     locate, uniform_size, SchedPlan, Schedule, ScheduleBuilder, Slice, WorldView,
@@ -57,12 +57,13 @@ impl NamedAlgorithm for PairwiseAlltoall {
 }
 
 impl<T: Pod> AlltoallAlgorithm<T> for PairwiseAlltoall {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
-        if let Some(p) = trivial_a2a_plan("pairwise", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("pairwise", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("pairwise")?;
         let sched =
-            build_pairwise_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+            build_pairwise_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "pairwise", sched)?)
     }
 }
@@ -111,12 +112,12 @@ impl NamedAlgorithm for BruckAlltoall {
 }
 
 impl<T: Pod> AlltoallAlgorithm<T> for BruckAlltoall {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
-        if let Some(p) = trivial_a2a_plan("bruck", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("bruck", comm, spec) {
             return Ok(p);
         }
-        let sched =
-            build_bruck_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        let n = spec.uniform_n("bruck")?;
+        let sched = build_bruck_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "bruck", sched)?)
     }
 }
@@ -195,12 +196,13 @@ impl NamedAlgorithm for LocAwareAlltoall {
 }
 
 impl<T: Pod> AlltoallAlgorithm<T> for LocAwareAlltoall {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
-        if let Some(p) = trivial_a2a_plan("loc-aware", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("loc-aware", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("loc-aware")?;
         let view = WorldView::from_comm(comm);
-        let sched = build_loc_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let sched = build_loc_schedule(&view, comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
     }
 }
@@ -344,7 +346,7 @@ pub fn loc_aware<T: Pod>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::plan::AlltoallRegistry;
+    use crate::collectives::plan::{AlltoallRegistry, Shape};
     use crate::comm::{CommWorld, Timing};
     use crate::topology::Topology;
 
@@ -453,7 +455,7 @@ mod tests {
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = AlltoallRegistry::<u64>::standard();
             for name in r.names() {
-                let mut plan = r.plan(name, c, Shape::elems(n)).unwrap();
+                let mut plan = r.plan_uniform(name, c, Shape::elems(n)).unwrap();
                 assert_eq!(plan.algorithm(), name);
                 assert_eq!(plan.comm_size(), p);
                 let mut out = vec![0u64; n * p];

@@ -22,7 +22,7 @@
 //! [`super::schedule::emit_group_bruck`]).
 
 use super::plan::{
-    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{emit_group_bruck, SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
@@ -42,11 +42,12 @@ impl NamedAlgorithm for Bruck {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for Bruck {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("bruck", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("bruck", comm, spec) {
             return Ok(p);
         }
-        let sched = build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        let n = spec.uniform_n("bruck")?;
+        let sched = build_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "bruck", sched)?)
     }
 }
@@ -96,7 +97,7 @@ pub fn rotate_down<T: Pod>(data: &[T], n: usize, id: usize) -> Vec<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::plan::Registry;
+    use crate::collectives::plan::{Registry, Shape};
 
     #[test]
     fn rotate_down_identity_for_rank0() {
@@ -145,7 +146,8 @@ mod tests {
         use crate::topology::Topology;
         let topo = Topology::regions(2, 3);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let mut plan = Registry::<u64>::standard().plan("bruck", c, Shape::elems(2)).unwrap();
+            let mut plan =
+                Registry::<u64>::standard().plan_uniform("bruck", c, Shape::elems(2)).unwrap();
             let mut out = vec![0u64; 12];
             for round in 0..3u64 {
                 let mine = [c.rank() as u64 + 100 * round, c.rank() as u64 + 100 * round + 50];

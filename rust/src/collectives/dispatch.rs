@@ -29,7 +29,7 @@
 
 use super::plan::{
     trivial_a2a_plan, trivial_plan, AllgatherPlan, AlltoallAlgorithm, AlltoallPlan,
-    CollectiveAlgorithm, NamedAlgorithm, Shape,
+    CollectiveAlgorithm, NamedAlgorithm, PlanSpec,
 };
 use super::schedule::{build_allgather, build_alltoall, SchedPlan, WorldView};
 use crate::comm::{Comm, Pod};
@@ -73,16 +73,17 @@ impl NamedAlgorithm for SystemDefault {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for SystemDefault {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("system-default", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("system-default", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("system-default")?;
         let view = WorldView::from_comm(comm);
         let sched = build_allgather(
             super::Algorithm::SystemDefault,
             &view,
             comm.rank(),
-            shape.n,
+            n,
             std::mem::size_of::<T>(),
         )?;
         Ok(SchedPlan::<T>::boxed(comm, "system-default", sched)?)
@@ -114,16 +115,17 @@ impl NamedAlgorithm for SystemDefaultAlltoall {
 }
 
 impl<T: Pod> AlltoallAlgorithm<T> for SystemDefaultAlltoall {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
-        if let Some(p) = trivial_a2a_plan("system-default", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("system-default", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("system-default")?;
         let view = WorldView::from_comm(comm);
         let sched = build_alltoall(
             "system-default",
             &view,
             comm.rank(),
-            shape.n,
+            n,
             std::mem::size_of::<T>(),
         )?;
         Ok(SchedPlan::<T>::boxed(comm, "system-default", sched)?)
@@ -214,7 +216,7 @@ mod tests {
 
     #[test]
     fn alltoall_dispatch_selects_and_runs() {
-        use crate::collectives::plan::AlltoallRegistry;
+        use crate::collectives::plan::{AlltoallRegistry, Shape};
         use crate::comm::{CommWorld, Timing};
         use crate::topology::Topology;
         let topo = Topology::regions(2, 2);
@@ -224,7 +226,7 @@ mod tests {
         for n in [1usize, 64] {
             let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
                 let r = AlltoallRegistry::<u64>::standard();
-                let mut plan = r.plan("system-default", c, Shape::elems(n)).unwrap();
+                let mut plan = r.plan_uniform("system-default", c, Shape::elems(n)).unwrap();
                 assert_eq!(plan.algorithm(), "system-default");
                 let send: Vec<u64> = (0..n * p).map(|x| (c.rank() * 10_000 + x) as u64).collect();
                 let mut out = vec![0u64; n * p];
@@ -245,7 +247,7 @@ mod tests {
             let plan = <SystemDefault as CollectiveAlgorithm<u32>>::plan(
                 &SystemDefault,
                 c,
-                Shape::elems(2),
+                &PlanSpec::uniform(2, c.size()),
             )
             .unwrap();
             plan.algorithm() == "system-default"

@@ -17,7 +17,7 @@
 //! overhead is preserved as data, not re-derived at run time.
 
 use super::plan::{
-    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
@@ -37,11 +37,12 @@ impl NamedAlgorithm for Dissemination {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for Dissemination {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("dissemination", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("dissemination", comm, spec) {
             return Ok(p);
         }
-        let sched = build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        let n = spec.uniform_n("dissemination")?;
+        let sched = build_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "dissemination", sched)?)
     }
 }

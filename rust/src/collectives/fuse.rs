@@ -52,7 +52,7 @@ use crate::error::{Error, Result};
 use crate::model::MachineParams;
 
 use super::model_tuned;
-use super::plan::{ElemKind, OpKind};
+use super::plan::{Counts, ElemKind, OpKind};
 use super::schedule::{
     replay_world, BufId, ReplayHandler, Round, Schedule, Slice, Step, WorldView,
 };
@@ -67,18 +67,56 @@ pub struct FuseSpec {
     /// Registry name of the algorithm (case-insensitive).
     pub algo: String,
     /// Per-rank element count (the constituent's [`super::plan::Shape`]).
+    /// Ragged constituents set it to `counts.total()` so zero-work specs
+    /// are filtered uniformly.
     pub n: usize,
+    /// Per-rank counts of a **ragged** constituent (`allgatherv` /
+    /// `reduce_scatter_v`); `None` for the uniform operations.
+    pub counts: Option<Counts>,
 }
 
 impl FuseSpec {
-    /// A constituent spec.
+    /// A uniform constituent spec.
     pub fn new(op: OpKind, algo: &str, n: usize) -> FuseSpec {
-        FuseSpec { op, algo: algo.to_string(), n }
+        FuseSpec { op, algo: algo.to_string(), n, counts: None }
     }
 
-    /// Display label, `op/algo@n`.
+    /// A ragged constituent spec (`allgatherv` / `reduce_scatter_v`):
+    /// every rank passes the same `counts`, exactly as with the
+    /// stand-alone ragged registries.
+    pub fn ragged(op: OpKind, algo: &str, counts: Counts) -> FuseSpec {
+        let n = counts.total();
+        FuseSpec { op, algo: algo.to_string(), n, counts: Some(counts) }
+    }
+
+    /// Display label: `op/algo@n`, or `op/algo@[counts]` when ragged.
     pub fn label(&self) -> String {
-        format!("{}/{}@{}", self.op, self.algo, self.n)
+        match &self.counts {
+            Some(c) => format!("{}/{}@[{c}]", self.op, self.algo),
+            None => format!("{}/{}@{}", self.op, self.algo, self.n),
+        }
+    }
+
+    /// This rank's `(input, output)` element counts: the uniform per-op
+    /// contract ([`OpKind::io_elems`]) unless the spec is ragged, in
+    /// which case the counts are byte-exact per rank.
+    pub fn io_elems(&self, rank: usize, p: usize) -> (usize, usize) {
+        match (self.op, &self.counts) {
+            (OpKind::Allgatherv, Some(c)) => (c.get(rank), c.total()),
+            (OpKind::ReduceScatterV, Some(c)) => (c.total(), c.get(rank)),
+            _ => self.op.io_elems(self.n, p),
+        }
+    }
+
+    /// The ragged counts, required for the v-operations.
+    fn ragged_counts(&self) -> Result<&[usize]> {
+        match &self.counts {
+            Some(c) => Ok(c.as_slice()),
+            None => Err(Error::Precondition(format!(
+                "constituent {} needs per-rank counts (build it with FuseSpec::ragged)",
+                self.label()
+            ))),
+        }
     }
 }
 
@@ -470,6 +508,15 @@ pub fn build_world(
             OpKind::ReduceScatter => {
                 model_tuned::pick_reduce_scatter(view, machine, spec.n, elem_bytes)?
             }
+            OpKind::Allgatherv => {
+                model_tuned::pick_allgatherv(view, machine, spec.ragged_counts()?, elem_bytes)?
+            }
+            OpKind::ReduceScatterV => model_tuned::pick_reduce_scatter_v(
+                view,
+                machine,
+                spec.ragged_counts()?,
+                elem_bytes,
+            )?,
         };
         return Ok(scheds);
     }
@@ -488,6 +535,20 @@ pub fn build_world(
             OpKind::ReduceScatter => {
                 super::schedule::build_reduce_scatter(&spec.algo, view, r, spec.n, elem_bytes)
             }
+            OpKind::Allgatherv => super::allgatherv::build_allgatherv(
+                &spec.algo,
+                view,
+                r,
+                spec.ragged_counts()?,
+                elem_bytes,
+            ),
+            OpKind::ReduceScatterV => super::reduce_scatter_v::build_reduce_scatter_v(
+                &spec.algo,
+                view,
+                r,
+                spec.ragged_counts()?,
+                elem_bytes,
+            ),
         })
         .collect()
 }
@@ -718,6 +779,40 @@ mod tests {
         assert_eq!(stats.len(), 4);
         assert_eq!(fused[0].num_steps(), 0);
         assert_eq!(fused[0].io_lens(), (0, 0));
+    }
+
+    #[test]
+    fn fuse_world_accepts_ragged_constituents() {
+        let topo = crate::topology::Topology::regions(2, 2);
+        let view = WorldView::world(&topo);
+        let counts = Counts::new(vec![3, 0, 2, 1]);
+        let specs = vec![
+            FuseSpec::ragged(OpKind::Allgatherv, "bruck", counts.clone()),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+        ];
+        let m = MachineParams::lassen();
+        let (fused, _) = fuse_world(&specs, &view, 8, &m).unwrap();
+        verify_world(&fused).unwrap();
+        // Composite io is per rank: this rank's ragged slot + the uniform
+        // allreduce's n on both sides.
+        assert_eq!(fused[0].io_lens(), (counts.get(0) + 2, counts.total() + 2));
+        assert_eq!(fused[1].io_lens(), (counts.get(1) + 2, counts.total() + 2));
+    }
+
+    #[test]
+    fn ragged_spec_io_and_label() {
+        let spec = FuseSpec::ragged(OpKind::Allgatherv, "ring", Counts::new(vec![4, 0, 7, 2]));
+        assert_eq!(spec.n, 13);
+        assert_eq!(spec.io_elems(0, 4), (4, 13));
+        assert_eq!(spec.io_elems(1, 4), (0, 13));
+        assert_eq!(spec.label(), "allgatherv/ring@[4,0,7,2]");
+        let rsv = FuseSpec::ragged(OpKind::ReduceScatterV, "ring", Counts::new(vec![4, 0, 7, 2]));
+        assert_eq!(rsv.io_elems(2, 4), (13, 7));
+        // A v-op spec without counts is rejected at build time.
+        let bare = FuseSpec::new(OpKind::Allgatherv, "ring", 3);
+        let view = WorldView::world(&crate::topology::Topology::regions(2, 2));
+        let err = build_world(&bare, &view, 8, &MachineParams::lassen()).unwrap_err();
+        assert!(err.to_string().contains("counts"), "{err}");
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use super::grouping::GroupBy;
 use super::plan::{
-    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::primitives::bcast_tree;
 use super::schedule::{
@@ -38,12 +38,13 @@ impl NamedAlgorithm for Hierarchical {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for Hierarchical {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("hierarchical", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("hierarchical", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("hierarchical")?;
         let view = WorldView::from_comm(comm);
-        let sched = build_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let sched = build_schedule(&view, comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "hierarchical", sched)?)
     }
 }
@@ -171,11 +172,12 @@ mod tests {
 
     #[test]
     fn plan_reuse_stays_correct() {
-        use crate::collectives::plan::Registry;
+        use crate::collectives::plan::{Registry, Shape};
         let topo = Topology::regions(2, 4);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let mut plan =
-                Registry::<u64>::standard().plan("hierarchical", c, Shape::elems(2)).unwrap();
+            let mut plan = Registry::<u64>::standard()
+                .plan_uniform("hierarchical", c, Shape::elems(2))
+                .unwrap();
             let mut out = vec![0u64; 16];
             for round in 0..4u64 {
                 let mine = [c.rank() as u64 + round, c.rank() as u64 + round + 30];

@@ -42,7 +42,7 @@
 
 use super::grouping::GroupBy;
 use super::plan::{
-    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{
     emit_group_allgatherv, emit_group_bruck, locate, uniform_size, SchedPlan, Schedule,
@@ -87,15 +87,16 @@ impl NamedAlgorithm for LocalityBruck {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruck {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("loc-bruck", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("loc-bruck", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("loc-bruck")?;
         let view = WorldView::from_comm(comm);
         let sched = build_schedule(
             &view,
             comm.rank(),
-            shape.n,
+            n,
             std::mem::size_of::<T>(),
             GroupBy::Region,
             Rank0::Contributes,
@@ -119,15 +120,16 @@ impl NamedAlgorithm for LocalityBruckV {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckV {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("loc-bruck-v", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("loc-bruck-v", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("loc-bruck-v")?;
         let view = WorldView::from_comm(comm);
         let sched = build_schedule(
             &view,
             comm.rank(),
-            shape.n,
+            n,
             std::mem::size_of::<T>(),
             GroupBy::Region,
             Rank0::GathervSkips,
@@ -152,13 +154,13 @@ impl NamedAlgorithm for LocalityBruckMultilevel {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for LocalityBruckMultilevel {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("loc-bruck-2level", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("loc-bruck-2level", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("loc-bruck-2level")?;
         let view = WorldView::from_comm(comm);
-        let sched =
-            build_schedule_multilevel(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let sched = build_schedule_multilevel(&view, comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "loc-bruck-2level", sched)?)
     }
 }
@@ -620,11 +622,12 @@ mod tests {
 
     #[test]
     fn plan_reuse_on_shifting_inputs() {
-        use crate::collectives::plan::Registry;
+        use crate::collectives::plan::{Registry, Shape};
         let topo = Topology::regions(4, 4);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let mut plan =
-                Registry::<u64>::standard().plan("loc-bruck", c, Shape::elems(2)).unwrap();
+            let mut plan = Registry::<u64>::standard()
+                .plan_uniform("loc-bruck", c, Shape::elems(2))
+                .unwrap();
             let mut out = vec![0u64; 32];
             for round in 0..6u64 {
                 let mine = [c.rank() as u64 + 777 * round, c.rank() as u64 + 777 * round + 13];

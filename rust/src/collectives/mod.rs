@@ -52,6 +52,8 @@
 //! | [`allreduce`] | `recursive-doubling`, `loc-aware`, `rabenseifner`, `loc-rabenseifner` | planned allreduce (sum), incl. the fully hierarchical composition with both phases locality-aware | §6 extension |
 //! | [`alltoall`] | `system-default`, `pairwise`, `bruck`, `loc-aware` | planned alltoall | §6 extension |
 //! | [`reduce_scatter`] | `ring`, `recursive-halving`, `pat`, `loc-aware` | planned reduce-scatter (sum + scatter, the allgather's inverse) | §4 locality argument, inverted |
+//! | [`allgatherv`](mod@allgatherv) | `ring`, `bruck`, `loc-aware` | **ragged** allgather: per-rank counts, exact ragged slices | Jocksch et al. allgatherv, locality-aware |
+//! | [`reduce_scatter_v`](mod@reduce_scatter_v) | `ring`, `loc-aware` | **ragged** reduce-scatter (`MPI_Reduce_scatter` semantics) | §4 locality argument, ragged |
 //!
 //! Every algorithm *plans* by building a [`Schedule`] — pure data — and
 //! *executes* through the single interpreter in [`SchedPlan`]; the same
@@ -70,12 +72,25 @@
 //! [`CollectivePlan`] base trait; `locag algos` lists all of them and
 //! `locag run --op <op>` executes any (op, algorithm) pair.
 //!
+//! The **ragged** variants generalise the per-rank contribution from a
+//! uniform `n` to a counts vector ([`Counts`], `--counts 4,0,7,2` on the
+//! CLI): [`AllgathervRegistry`] plans [`AllgathervPlan`]s and
+//! [`ReduceScattervRegistry`] plans [`ReduceScattervPlan`]s from a ragged
+//! [`PlanSpec`]. Ragged schedules move exact ragged slices — zero-count
+//! ranks still participate in every exchange, which is precisely the
+//! paper's local/non-local aggregation argument: locality determines the
+//! exchange structure, the counts only size the payloads. Front doors:
+//! [`plan_allgatherv`] / [`plan_reduce_scatter_v`] (persistent) and
+//! [`allgatherv`](fn@allgatherv) / [`reduce_scatter_v`](fn@reduce_scatter_v)
+//! (one-shot).
+//!
 //! New algorithms (or backend-specific overrides) implement
 //! [`NamedAlgorithm`] plus the per-op factory trait
 //! ([`CollectiveAlgorithm`], [`AllreduceAlgorithm`] or
 //! [`AlltoallAlgorithm`]) and register themselves — no dispatch `match`
 //! to touch.
 
+pub mod allgatherv;
 pub mod allreduce;
 pub mod alltoall;
 pub mod bruck;
@@ -92,16 +107,18 @@ pub mod plan;
 pub mod primitives;
 pub mod recursive_doubling;
 pub mod reduce_scatter;
+pub mod reduce_scatter_v;
 pub mod ring;
 pub mod schedule;
 
 pub use fuse::FuseSpec;
 pub use plan::{
-    reset_staging_bytes, staging_bytes_total, AllgatherPlan, AllreduceAlgorithm, AllreducePlan,
-    AllreduceRegistry, AlltoallAlgorithm, AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm,
-    CollectivePlan, ElemKind, FusedPlan, FusedPlanMixed, NamedAlgorithm, OpKind, OpRegistry,
-    ReduceScatterAlgorithm, ReduceScatterPlan, ReduceScatterRegistry, Registry, Shape, Summable,
-    ViewElem,
+    reset_staging_bytes, staging_bytes_total, AllgatherPlan, AllgathervAlgorithm, AllgathervPlan,
+    AllgathervRegistry, AllreduceAlgorithm, AllreducePlan, AllreduceRegistry, AlltoallAlgorithm,
+    AlltoallPlan, AlltoallRegistry, CollectiveAlgorithm, CollectivePlan, Counts, ElemKind,
+    FusedPlan, FusedPlanMixed, NamedAlgorithm, OpKind, OpRegistry, PlanSpec,
+    ReduceScatterAlgorithm, ReduceScatterPlan, ReduceScatterRegistry, ReduceScattervAlgorithm,
+    ReduceScattervPlan, ReduceScattervRegistry, Registry, Shape, Summable, ViewElem,
 };
 pub use schedule::{BufId, IoView, IoViewMut, Round, SchedPlan, Schedule, Slice, Step};
 
@@ -230,7 +247,7 @@ pub fn plan_allgather<T: Pod>(
     comm: &Comm,
     shape: Shape,
 ) -> Result<Box<dyn AllgatherPlan<T>>> {
-    Registry::standard().plan(algo.name(), comm, shape)
+    Registry::standard().plan_uniform(algo.name(), comm, shape)
 }
 
 /// One-shot allgather: plan, allocate the output, execute once.
@@ -253,7 +270,7 @@ pub fn plan_allreduce<T: Summable>(
     comm: &Comm,
     shape: Shape,
 ) -> Result<Box<dyn AllreducePlan<T>>> {
-    AllreduceRegistry::standard().plan(name, comm, shape)
+    AllreduceRegistry::standard().plan_uniform(name, comm, shape)
 }
 
 /// Collectively build a persistent alltoall plan by registry name
@@ -263,7 +280,7 @@ pub fn plan_alltoall<T: Pod>(
     comm: &Comm,
     shape: Shape,
 ) -> Result<Box<dyn AlltoallPlan<T>>> {
-    AlltoallRegistry::standard().plan(name, comm, shape)
+    AlltoallRegistry::standard().plan_uniform(name, comm, shape)
 }
 
 /// Collectively build a persistent reduce-scatter plan by registry name
@@ -274,7 +291,68 @@ pub fn plan_reduce_scatter<T: Summable>(
     comm: &Comm,
     shape: Shape,
 ) -> Result<Box<dyn ReduceScatterPlan<T>>> {
-    ReduceScatterRegistry::standard().plan(name, comm, shape)
+    ReduceScatterRegistry::standard().plan_uniform(name, comm, shape)
+}
+
+/// Collectively build a persistent allgatherv plan by registry name
+/// (case-insensitive; see [`AllgathervRegistry::standard`] for the
+/// names). Rank `r` contributes `counts[r]` elements; the plan gathers
+/// `counts.total()` elements in rank order at the counts' prefix
+/// offsets. All ranks must pass identical `counts`.
+pub fn plan_allgatherv<T: Pod>(
+    name: &str,
+    comm: &Comm,
+    counts: &Counts,
+) -> Result<Box<dyn AllgathervPlan<T>>> {
+    AllgathervRegistry::standard().plan(name, comm, &PlanSpec::ragged(counts.clone()))
+}
+
+/// Collectively build a persistent reduce-scatter-v plan by registry name
+/// (case-insensitive; see [`ReduceScattervRegistry::standard`] for the
+/// names). Every rank contributes `counts.total()` elements partitioned
+/// by `counts`; rank `r` receives the elementwise sum of block `r`
+/// (`MPI_Reduce_scatter` semantics). All ranks must pass identical
+/// `counts`.
+pub fn plan_reduce_scatter_v<T: Summable>(
+    name: &str,
+    comm: &Comm,
+    counts: &Counts,
+) -> Result<Box<dyn ReduceScattervPlan<T>>> {
+    ReduceScattervRegistry::standard().plan(name, comm, &PlanSpec::ragged(counts.clone()))
+}
+
+/// One-shot allgatherv: plan, allocate the output, execute once.
+/// `local.len()` must equal `counts[comm.rank()]`; returns the
+/// `counts.total()`-element concatenation in rank order. Hot loops should
+/// plan once via [`plan_allgatherv`] instead.
+pub fn allgatherv<T: Pod>(
+    name: &str,
+    comm: &Comm,
+    local: &[T],
+    counts: &Counts,
+) -> Result<Vec<T>> {
+    let registry = AllgathervRegistry::<T>::standard();
+    match registry.get(name) {
+        Some(a) => plan::one_shot_agv(a, comm, local, counts),
+        None => Err(registry.unknown(name)),
+    }
+}
+
+/// One-shot reduce-scatter-v: plan, allocate the output, execute once.
+/// `send.len()` must equal `counts.total()`; returns this rank's
+/// `counts[comm.rank()]`-element summed block. Hot loops should plan once
+/// via [`plan_reduce_scatter_v`] instead.
+pub fn reduce_scatter_v<T: Summable>(
+    name: &str,
+    comm: &Comm,
+    send: &[T],
+    counts: &Counts,
+) -> Result<Vec<T>> {
+    let registry = ReduceScattervRegistry::<T>::standard();
+    match registry.get(name) {
+        Some(a) => plan::one_shot_rsv(a, comm, send, counts),
+        None => Err(registry.unknown(name)),
+    }
 }
 
 /// Collectively build a [`FusedPlan`] executing all `specs` — possibly of

@@ -28,9 +28,11 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use super::plan::{
-    trivial_a2a_plan, trivial_plan, trivial_reduce_plan, trivial_rs_plan, AllgatherPlan,
+    check_counts_len, trivial_a2a_plan, trivial_agv_plan, trivial_plan, trivial_reduce_plan,
+    trivial_rs_plan, trivial_rsv_plan, AllgatherPlan, AllgathervAlgorithm, AllgathervPlan,
     AllreduceAlgorithm, AllreducePlan, AlltoallAlgorithm, AlltoallPlan, CollectiveAlgorithm,
-    NamedAlgorithm, ReduceScatterAlgorithm, ReduceScatterPlan, Shape, Summable,
+    NamedAlgorithm, PlanSpec, ReduceScatterAlgorithm, ReduceScatterPlan, ReduceScattervAlgorithm,
+    ReduceScattervPlan, Summable,
 };
 use super::schedule::{
     build_allreduce, build_alltoall, build_reduce_scatter, SchedPlan, Schedule, WorldView,
@@ -120,6 +122,13 @@ pub const ALLTOALL_CANDIDATES: &[&str] = &["pairwise", "bruck", "loc-aware"];
 /// The candidate pool of the reduce-scatter dispatcher. `pat` is the
 /// log-depth option at sizes recursive halving rejects.
 pub const REDUCE_SCATTER_CANDIDATES: &[&str] = &["ring", "recursive-halving", "pat", "loc-aware"];
+
+/// The candidate pool of the allgatherv dispatcher: every ragged builder
+/// admits any counts vector, so no entry carries a shape precondition.
+pub const ALLGATHERV_CANDIDATES: &[&str] = &["ring", "bruck", "loc-aware"];
+
+/// The candidate pool of the reduce-scatter-v dispatcher.
+pub const REDUCE_SCATTER_V_CANDIDATES: &[&str] = &["ring", "loc-aware"];
 
 /// The machine the dispatcher scores against: the communicator's virtual
 /// machine when present, otherwise the Lassen preset.
@@ -217,6 +226,50 @@ pub fn pick_reduce_scatter(
     )
 }
 
+/// Pick the cheapest allgatherv candidate for these per-rank counts
+/// (see [`pick_allgather`]).
+pub fn pick_allgatherv(
+    view: &WorldView,
+    machine: &MachineParams,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Result<(String, Vec<Schedule>)> {
+    pick(
+        ALLGATHERV_CANDIDATES,
+        |s| s.to_string(),
+        |s| {
+            (0..view.p)
+                .map(|r| super::allgatherv::build_allgatherv(s, view, r, counts, elem_bytes))
+                .collect()
+        },
+        view,
+        machine,
+    )
+}
+
+/// Pick the cheapest reduce-scatter-v candidate for these per-rank counts
+/// (see [`pick_allgather`]).
+pub fn pick_reduce_scatter_v(
+    view: &WorldView,
+    machine: &MachineParams,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Result<(String, Vec<Schedule>)> {
+    pick(
+        REDUCE_SCATTER_V_CANDIDATES,
+        |s| s.to_string(),
+        |s| {
+            (0..view.p)
+                .map(|r| {
+                    super::reduce_scatter_v::build_reduce_scatter_v(s, view, r, counts, elem_bytes)
+                })
+                .collect()
+        },
+        view,
+        machine,
+    )
+}
+
 /// Pick the cheapest alltoall candidate (see [`pick_allgather`]).
 pub fn pick_alltoall(
     view: &WorldView,
@@ -250,6 +303,9 @@ fn select_for_rank(
             OpKind::Allreduce => pick_allreduce(view, machine, n, elem_bytes)?,
             OpKind::Alltoall => pick_alltoall(view, machine, n, elem_bytes)?,
             OpKind::ReduceScatter => pick_reduce_scatter(view, machine, n, elem_bytes)?,
+            OpKind::Allgatherv | OpKind::ReduceScatterV => {
+                unreachable!("ragged ops dispatch through select_for_rank_v")
+            }
         };
         Ok(w)
     })?;
@@ -264,6 +320,46 @@ fn select_for_rank(
         OpKind::Allreduce => build_allreduce(&winner, view, rank, n, elem_bytes)?,
         OpKind::Alltoall => build_alltoall(&winner, view, rank, n, elem_bytes)?,
         OpKind::ReduceScatter => build_reduce_scatter(&winner, view, rank, n, elem_bytes)?,
+        OpKind::Allgatherv | OpKind::ReduceScatterV => {
+            unreachable!("ragged ops dispatch through select_for_rank_v")
+        }
+    };
+    sched.label = format!("model-tuned[{winner}]");
+    Ok(sched)
+}
+
+/// Ragged counterpart of [`select_for_rank`]: the memo key carries the
+/// full counts vector (selection legitimately flips with skew, not just
+/// total size), and the winner's schedule is rebuilt for one rank from the
+/// by-name ragged builders.
+fn select_for_rank_v(
+    op: OpKind,
+    view: &WorldView,
+    machine: &MachineParams,
+    counts: &[usize],
+    elem_bytes: usize,
+    rank: usize,
+) -> Result<Schedule> {
+    let key = format!(
+        "{op:?}|{}|{counts:?}|{elem_bytes}|{:?}|{machine:?}|{:?}",
+        view.p, view.world_of, view.topo
+    );
+    let winner = cached_winner(key, || {
+        let (w, _) = match op {
+            OpKind::Allgatherv => pick_allgatherv(view, machine, counts, elem_bytes)?,
+            OpKind::ReduceScatterV => pick_reduce_scatter_v(view, machine, counts, elem_bytes)?,
+            _ => unreachable!("uniform ops dispatch through select_for_rank"),
+        };
+        Ok(w)
+    })?;
+    let mut sched = match op {
+        OpKind::Allgatherv => {
+            super::allgatherv::build_allgatherv(&winner, view, rank, counts, elem_bytes)?
+        }
+        OpKind::ReduceScatterV => super::reduce_scatter_v::build_reduce_scatter_v(
+            &winner, view, rank, counts, elem_bytes,
+        )?,
+        _ => unreachable!("uniform ops dispatch through select_for_rank"),
     };
     sched.label = format!("model-tuned[{winner}]");
     Ok(sched)
@@ -283,17 +379,18 @@ impl NamedAlgorithm for ModelTuned {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for ModelTuned {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("model-tuned", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("model-tuned", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("model-tuned")?;
         let view = WorldView::from_comm(comm);
         let machine = scoring_machine(comm);
         let sched = select_for_rank(
             OpKind::Allgather,
             &view,
             &machine,
-            shape.n,
+            n,
             std::mem::size_of::<T>(),
             comm.rank(),
         )?;
@@ -315,17 +412,18 @@ impl NamedAlgorithm for ModelTunedAllreduce {
 }
 
 impl<T: Summable> AllreduceAlgorithm<T> for ModelTunedAllreduce {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
-        if let Some(p) = trivial_reduce_plan("model-tuned", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllreducePlan<T>>> {
+        if let Some(p) = trivial_reduce_plan("model-tuned", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("model-tuned")?;
         let view = WorldView::from_comm(comm);
         let machine = scoring_machine(comm);
         let sched = select_for_rank(
             OpKind::Allreduce,
             &view,
             &machine,
-            shape.n,
+            n,
             std::mem::size_of::<T>(),
             comm.rank(),
         )?;
@@ -347,17 +445,18 @@ impl NamedAlgorithm for ModelTunedAlltoall {
 }
 
 impl<T: Pod> AlltoallAlgorithm<T> for ModelTunedAlltoall {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
-        if let Some(p) = trivial_a2a_plan("model-tuned", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AlltoallPlan<T>>> {
+        if let Some(p) = trivial_a2a_plan("model-tuned", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("model-tuned")?;
         let view = WorldView::from_comm(comm);
         let machine = scoring_machine(comm);
         let sched = select_for_rank(
             OpKind::Alltoall,
             &view,
             &machine,
-            shape.n,
+            n,
             std::mem::size_of::<T>(),
             comm.rank(),
         )?;
@@ -379,17 +478,84 @@ impl NamedAlgorithm for ModelTunedReduceScatter {
 }
 
 impl<T: Summable> ReduceScatterAlgorithm<T> for ModelTunedReduceScatter {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
-        if let Some(p) = trivial_rs_plan("model-tuned", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("model-tuned", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("model-tuned")?;
         let view = WorldView::from_comm(comm);
         let machine = scoring_machine(comm);
         let sched = select_for_rank(
             OpKind::ReduceScatter,
             &view,
             &machine,
-            shape.n,
+            n,
+            std::mem::size_of::<T>(),
+            comm.rank(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "model-tuned", sched)?)
+    }
+}
+
+/// The model-tuned allgatherv dispatcher (registry entry).
+pub struct ModelTunedAllgatherv;
+
+impl NamedAlgorithm for ModelTunedAllgatherv {
+    fn name(&self) -> &'static str {
+        "model-tuned"
+    }
+
+    fn summary(&self) -> &'static str {
+        "cost-model dispatch over the allgatherv candidates"
+    }
+}
+
+impl<T: Pod> AllgathervAlgorithm<T> for ModelTunedAllgatherv {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgathervPlan<T>>> {
+        if let Some(p) = trivial_agv_plan("model-tuned", comm, spec) {
+            return Ok(p);
+        }
+        check_counts_len(&spec.counts, comm.size())?;
+        let view = WorldView::from_comm(comm);
+        let machine = scoring_machine(comm);
+        let sched = select_for_rank_v(
+            OpKind::Allgatherv,
+            &view,
+            &machine,
+            spec.counts.as_slice(),
+            std::mem::size_of::<T>(),
+            comm.rank(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "model-tuned", sched)?)
+    }
+}
+
+/// The model-tuned reduce-scatter-v dispatcher (registry entry).
+pub struct ModelTunedReduceScatterv;
+
+impl NamedAlgorithm for ModelTunedReduceScatterv {
+    fn name(&self) -> &'static str {
+        "model-tuned"
+    }
+
+    fn summary(&self) -> &'static str {
+        "cost-model dispatch over the reduce-scatter-v candidates"
+    }
+}
+
+impl<T: Summable> ReduceScattervAlgorithm<T> for ModelTunedReduceScatterv {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScattervPlan<T>>> {
+        if let Some(p) = trivial_rsv_plan("model-tuned", comm, spec) {
+            return Ok(p);
+        }
+        check_counts_len(&spec.counts, comm.size())?;
+        let view = WorldView::from_comm(comm);
+        let machine = scoring_machine(comm);
+        let sched = select_for_rank_v(
+            OpKind::ReduceScatterV,
+            &view,
+            &machine,
+            spec.counts.as_slice(),
             std::mem::size_of::<T>(),
             comm.rank(),
         )?;
@@ -490,7 +656,8 @@ mod tests {
     #[test]
     fn every_candidate_name_resolves_in_its_registry() {
         use crate::collectives::plan::{
-            AllreduceRegistry, AlltoallRegistry, ReduceScatterRegistry, Registry,
+            AllgathervRegistry, AllreduceRegistry, AlltoallRegistry, ReduceScatterRegistry,
+            ReduceScattervRegistry, Registry,
         };
         let reg = Registry::<u64>::standard();
         for &cand in ALLGATHER_CANDIDATES {
@@ -507,6 +674,54 @@ mod tests {
         let reg = ReduceScatterRegistry::<u64>::standard();
         for &cand in REDUCE_SCATTER_CANDIDATES {
             assert!(reg.get(cand).is_some(), "reduce-scatter candidate {cand} not registered");
+        }
+        let reg = AllgathervRegistry::<u64>::standard();
+        for &cand in ALLGATHERV_CANDIDATES {
+            assert!(reg.get(cand).is_some(), "allgatherv candidate {cand} not registered");
+        }
+        let reg = ReduceScattervRegistry::<u64>::standard();
+        for &cand in REDUCE_SCATTER_V_CANDIDATES {
+            assert!(reg.get(cand).is_some(), "reduce-scatter-v candidate {cand} not registered");
+        }
+    }
+
+    #[test]
+    fn ragged_dispatchers_pick_valid_candidates_deterministically() {
+        let topo = Topology::regions(4, 4);
+        let view = WorldView::world(&topo);
+        let m = MachineParams::lassen();
+        let counts: Vec<usize> = (0..16).map(|r| r % 5).collect();
+        let (agv, scheds) = pick_allgatherv(&view, &m, &counts, 8).unwrap();
+        assert!(ALLGATHERV_CANDIDATES.contains(&agv.as_str()), "{agv}");
+        assert_eq!(scheds.len(), 16);
+        let (again, _) = pick_allgatherv(&view, &m, &counts, 8).unwrap();
+        assert_eq!(agv, again);
+        let (rsv, scheds) = pick_reduce_scatter_v(&view, &m, &counts, 8).unwrap();
+        assert!(REDUCE_SCATTER_V_CANDIDATES.contains(&rsv.as_str()), "{rsv}");
+        assert_eq!(scheds.len(), 16);
+    }
+
+    #[test]
+    fn ragged_dispatchers_pick_the_predicted_fastest() {
+        let m = MachineParams::lassen();
+        for (regions, ppr) in [(2usize, 2usize), (4, 4), (2, 8)] {
+            let topo = Topology::regions(regions, ppr);
+            let view = WorldView::world(&topo);
+            let p = regions * ppr;
+            let counts: Vec<usize> = (0..p).map(|r| (r * 3) % 7).collect();
+            let (winner, scheds) = pick_allgatherv(&view, &m, &counts, 8).unwrap();
+            let t_win = crate::model::cost::predict(&scheds, &topo, &view.world_of, &m).unwrap();
+            for &cand in ALLGATHERV_CANDIDATES {
+                let cs: Vec<Schedule> = (0..p)
+                    .map(|r| super::super::allgatherv::build_allgatherv(cand, &view, r, &counts, 8))
+                    .collect::<Result<_>>()
+                    .unwrap();
+                let t = crate::model::cost::predict(&cs, &topo, &view.world_of, &m).unwrap();
+                assert!(
+                    t_win <= t + 1e-15,
+                    "{regions}x{ppr}: picked {winner} ({t_win:.3e}) but {cand} is {t:.3e}"
+                );
+            }
         }
     }
 

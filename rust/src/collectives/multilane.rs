@@ -15,7 +15,7 @@
 
 use super::grouping::GroupBy;
 use super::plan::{
-    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{
     emit_group_bruck, locate, uniform_size, SchedPlan, Schedule, ScheduleBuilder, Slice, WorldView,
@@ -37,12 +37,13 @@ impl NamedAlgorithm for Multilane {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for Multilane {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("multilane", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("multilane", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("multilane")?;
         let view = WorldView::from_comm(comm);
-        let sched = build_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let sched = build_schedule(&view, comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "multilane", sched)?)
     }
 }
@@ -196,11 +197,12 @@ mod tests {
 
     #[test]
     fn plan_reuse_stays_correct() {
-        use crate::collectives::plan::Registry;
+        use crate::collectives::plan::{Registry, Shape};
         let topo = Topology::regions(4, 2);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
-            let mut plan =
-                Registry::<u64>::standard().plan("multilane", c, Shape::elems(1)).unwrap();
+            let mut plan = Registry::<u64>::standard()
+                .plan_uniform("multilane", c, Shape::elems(1))
+                .unwrap();
             let mut out = vec![0u64; 8];
             for round in 0..5u64 {
                 plan.execute(&[c.rank() as u64 + 10 * round], &mut out).unwrap();

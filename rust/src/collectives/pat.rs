@@ -43,7 +43,7 @@
 
 use super::plan::{
     trivial_plan, trivial_rs_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind,
-    ReduceScatterAlgorithm, ReduceScatterPlan, Shape, Summable,
+    PlanSpec, ReduceScatterAlgorithm, ReduceScatterPlan, Summable,
 };
 use super::schedule::{ceil_log2_u64, SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
@@ -63,16 +63,13 @@ impl NamedAlgorithm for PatAllgather {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for PatAllgather {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("pat", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("pat", comm, spec) {
             return Ok(p);
         }
-        let sched = build_pat_allgather_schedule(
-            comm.size(),
-            comm.rank(),
-            shape.n,
-            std::mem::size_of::<T>(),
-        );
+        let n = spec.uniform_n("pat")?;
+        let sched =
+            build_pat_allgather_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "pat", sched)?)
     }
 }
@@ -91,12 +88,13 @@ impl NamedAlgorithm for PatReduceScatter {
 }
 
 impl<T: Summable> ReduceScatterAlgorithm<T> for PatReduceScatter {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
-        if let Some(p) = trivial_rs_plan("pat", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("pat", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("pat")?;
         let sched =
-            build_pat_rs_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+            build_pat_rs_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "pat", sched)?)
     }
 }

@@ -59,6 +59,32 @@
 //! | allreduce | this rank's `n` elements | `n`; elementwise sum over ranks |
 //! | alltoall | `n·p`; block `j` goes to rank `j` | `n·p`; block `r` came from rank `r` |
 //! | reduce_scatter | `n·p`; block `j` is this rank's contribution to rank `j` | `n`; elementwise sum over ranks of block `i` (this rank's block) |
+//! | allgatherv | this rank's `counts[me]` elements | `counts.total()`; block `r` is rank `r`'s `counts[r]` elements |
+//! | reduce_scatter_v | `counts.total()`; block `j` (`counts[j]` elements) is this rank's contribution to rank `j` | `counts[me]`; elementwise sum over ranks of block `me` |
+//!
+//! ## Counts-aware plan specs (the allgatherv / reduce_scatter_v redesign)
+//!
+//! Plan-time geometry is a [`PlanSpec`] — a [`Shape`] plus per-rank
+//! [`Counts`]. The uniform operations require uniform counts (`plan`
+//! reports a typed [`Error::Precondition`] otherwise); the ragged
+//! operations (allgatherv, reduce-scatter-v) consume the counts directly,
+//! so raggedness is a **plan-time** property: schedules are built over
+//! exact ragged slices and the generic executor never changes.
+//!
+//! Migrating from the bare-`Shape` plan API:
+//!
+//! * `registry.plan(name, comm, shape)` became either
+//!   `registry.plan_uniform(name, comm, shape)` — the source-compatible
+//!   convenience that builds `PlanSpec::uniform(shape.n, comm.size())` —
+//!   or `registry.plan(name, comm, &spec)` with an explicit spec.
+//! * `*Algorithm::plan(&self, comm, shape)` implementations now take
+//!   `spec: &PlanSpec`; uniform algorithms start with
+//!   `let n = spec.uniform_n(name)?`, which rejects ragged counts with a
+//!   pointer at the allgatherv / reduce-scatter-v registries.
+//! * Ragged counts map onto the paper's local/non-local aggregation
+//!   exactly like the uniform case: a region's aggregated contribution is
+//!   the **sum** of its members' counts, so the loc-aware builders keep
+//!   their ⌈log⌉-style non-local message bounds with unequal payloads.
 
 use crate::comm::{Comm, Pod};
 use crate::error::{Error, Result};
@@ -69,8 +95,9 @@ use super::schedule::{
     add_assign, execute_schedule, execute_schedule_view, IoView, IoViewMut, Schedule, ViewReduce,
     WorldView,
 };
-use super::{allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
-use super::{loc_bruck, model_tuned, multilane, pat, recursive_doubling, reduce_scatter, ring};
+use super::{allgatherv, allreduce, alltoall, bruck, dispatch, dissemination, hierarchical};
+use super::{loc_bruck, model_tuned, multilane, pat, recursive_doubling, reduce_scatter};
+use super::{reduce_scatter_v, ring};
 
 /// Runtime element-type tag for byte-level (view-based) execution.
 ///
@@ -253,12 +280,26 @@ pub enum OpKind {
     /// Elementwise sum across ranks, block `i` scattered to rank `i` —
     /// the allgather's inverse sibling (Jocksch et al.; NCCL PAT).
     ReduceScatter,
+    /// Ragged allgather: rank `r` contributes `counts[r]` elements
+    /// (`MPI_Allgatherv` semantics; Jocksch et al.'s optimised
+    /// allgatherv).
+    Allgatherv,
+    /// Ragged reduce-scatter: rank `r` receives the elementwise sum of
+    /// every rank's `counts[r]`-element block `r`
+    /// (`MPI_Reduce_scatter` with per-rank counts).
+    ReduceScatterV,
 }
 
 impl OpKind {
     /// All operations, in presentation order.
-    pub const ALL: [OpKind; 4] =
-        [OpKind::Allgather, OpKind::Allreduce, OpKind::Alltoall, OpKind::ReduceScatter];
+    pub const ALL: [OpKind; 6] = [
+        OpKind::Allgather,
+        OpKind::Allreduce,
+        OpKind::Alltoall,
+        OpKind::ReduceScatter,
+        OpKind::Allgatherv,
+        OpKind::ReduceScatterV,
+    ];
 
     /// CLI / CSV name.
     pub fn name(&self) -> &'static str {
@@ -267,6 +308,8 @@ impl OpKind {
             OpKind::Allreduce => "allreduce",
             OpKind::Alltoall => "alltoall",
             OpKind::ReduceScatter => "reduce-scatter",
+            OpKind::Allgatherv => "allgatherv",
+            OpKind::ReduceScatterV => "reduce-scatter-v",
         }
     }
 
@@ -292,12 +335,17 @@ impl OpKind {
     /// enforces, exposed here so transport-level callers (the proc pool's
     /// input-delta validation, fused-buffer layout) can size and check
     /// buffers without building a schedule first.
+    ///
+    /// For the ragged operations this is the **uniform interpretation**
+    /// (`counts = Counts::uniform(n, p)`); ragged schedules always carry
+    /// an explicit io override, and ragged call sites size buffers from
+    /// [`Counts`] directly.
     pub fn io_elems(&self, n: usize, p: usize) -> (usize, usize) {
         match self {
-            OpKind::Allgather => (n, n * p),
+            OpKind::Allgather | OpKind::Allgatherv => (n, n * p),
             OpKind::Allreduce => (n, n),
             OpKind::Alltoall => (n * p, n * p),
-            OpKind::ReduceScatter => (n * p, n),
+            OpKind::ReduceScatter | OpKind::ReduceScatterV => (n * p, n),
         }
     }
 }
@@ -322,6 +370,167 @@ impl Shape {
     /// Shape for `n` elements per rank.
     pub fn elems(n: usize) -> Shape {
         Shape { n }
+    }
+}
+
+/// Per-rank element counts of one ragged collective — the plan-time
+/// carrier of `MPI_Allgatherv`-style raggedness. `counts[r]` is the number
+/// of elements rank `r` contributes (allgatherv) or receives
+/// (reduce-scatter-v); prefix offsets give every rank the exact slice
+/// layout of the concatenated result, so schedules are built over exact
+/// ragged slices and nothing changes at execute time.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Counts(Vec<usize>);
+
+impl Counts {
+    /// Counts from an explicit per-rank vector.
+    pub fn new(per_rank: Vec<usize>) -> Counts {
+        Counts(per_rank)
+    }
+
+    /// The degenerate uniform case: `n` elements on each of `p` ranks.
+    pub fn uniform(n: usize, p: usize) -> Counts {
+        Counts(vec![n; p])
+    }
+
+    /// Number of ranks the counts describe.
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True when no ranks are described.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Rank `r`'s element count (0 if out of range — registries validate
+    /// `len() == comm.size()` before any builder sees the counts).
+    pub fn get(&self, rank: usize) -> usize {
+        self.0.get(rank).copied().unwrap_or(0)
+    }
+
+    /// The raw per-rank slice.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Total element count over all ranks — the concatenated result
+    /// length (allgatherv output, reduce-scatter-v input).
+    pub fn total(&self) -> usize {
+        self.0.iter().sum()
+    }
+
+    /// Exclusive prefix sums, `len() + 1` entries: `offsets()[r]` is where
+    /// rank `r`'s block starts in the concatenated layout, and the last
+    /// entry equals [`Counts::total`].
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.0.len() + 1);
+        let mut acc = 0usize;
+        offs.push(0);
+        for &c in &self.0 {
+            acc += c;
+            offs.push(acc);
+        }
+        offs
+    }
+
+    /// Where rank `r`'s block starts in the concatenated layout.
+    pub fn offset_of(&self, rank: usize) -> usize {
+        self.0.iter().take(rank).sum()
+    }
+
+    /// The largest per-rank count (0 when empty).
+    pub fn max(&self) -> usize {
+        self.0.iter().copied().max().unwrap_or(0)
+    }
+
+    /// `Some(n)` iff every rank's count is the same `n` (None when empty
+    /// or ragged) — the gate uniform algorithms use to accept a spec.
+    pub fn uniform_n(&self) -> Option<usize> {
+        let first = *self.0.first()?;
+        if self.0.iter().all(|&c| c == first) {
+            Some(first)
+        } else {
+            None
+        }
+    }
+
+    /// Parse the CLI spelling `"4,0,7,2"` (whitespace around commas
+    /// tolerated). Junk reports a typed [`Error::Precondition`].
+    pub fn parse(s: &str) -> Result<Counts> {
+        let mut per_rank = Vec::new();
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            let c: usize = tok.parse().map_err(|_| {
+                Error::Precondition(format!(
+                    "invalid counts '{s}': '{tok}' is not a non-negative integer"
+                ))
+            })?;
+            per_rank.push(c);
+        }
+        Ok(Counts(per_rank))
+    }
+}
+
+impl std::fmt::Display for Counts {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for c in &self.0 {
+            if !first {
+                f.write_str(",")?;
+            }
+            write!(f, "{c}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+/// Plan-time geometry of one collective: the per-rank [`Shape`] plus the
+/// per-rank [`Counts`]. Every `*Algorithm::plan` and `OpRegistry::plan`
+/// takes a `&PlanSpec`; uniform call sites go through the
+/// `plan_uniform` conveniences, which build `PlanSpec::uniform` so they
+/// stay source-compatible with the old bare-`Shape` API (see the
+/// [module docs](self) for the migration map).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanSpec {
+    /// The uniform per-rank element count (for ragged specs: a sizing
+    /// hint — the largest per-rank count; the counts are authoritative).
+    pub shape: Shape,
+    /// Per-rank element counts; uniform specs carry
+    /// `Counts::uniform(shape.n, p)`.
+    pub counts: Counts,
+}
+
+impl PlanSpec {
+    /// The uniform spec: `n` elements on each of `p` ranks.
+    pub fn uniform(n: usize, p: usize) -> PlanSpec {
+        PlanSpec { shape: Shape::elems(n), counts: Counts::uniform(n, p) }
+    }
+
+    /// A ragged spec from explicit per-rank counts (`shape.n` becomes the
+    /// largest per-rank count, as a sizing hint).
+    pub fn ragged(counts: Counts) -> PlanSpec {
+        PlanSpec { shape: Shape::elems(counts.max()), counts }
+    }
+
+    /// Total element count over all ranks.
+    pub fn total(&self) -> usize {
+        self.counts.total()
+    }
+
+    /// The uniform per-rank count, or a typed precondition error when the
+    /// counts are ragged — every uniform algorithm's first line, so a
+    /// ragged spec handed to a uniform op fails at plan time with a
+    /// pointer at the ragged registries.
+    pub fn uniform_n(&self, algo: &str) -> Result<usize> {
+        self.counts.uniform_n().ok_or_else(|| {
+            Error::Precondition(format!(
+                "{algo} plans a uniform collective but got ragged counts [{}] — \
+                 use the allgatherv / reduce-scatter-v registries for per-rank counts",
+                self.counts
+            ))
+        })
     }
 }
 
@@ -435,28 +644,81 @@ pub trait ReduceScatterPlan<T: Summable>: CollectivePlan {
     }
 }
 
+/// A prepared allgatherv: gather `input` (length `counts[me]`) from every
+/// rank into `output` (length `counts.total()`), blocks laid out at the
+/// counts' prefix offsets in rank order. All-zero counts plan as no-ops.
+/// See the [module docs](self) for the full contract.
+pub trait AllgathervPlan<T: Pod>: CollectivePlan {
+    /// Run the communication. No allocation, no sub-communicator
+    /// construction, no tag consumption.
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+
+    /// Zero-copy variant: run over segmented buffer views (total byte
+    /// lengths must match the contract above). Plans that don't support
+    /// view execution report a precondition error.
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        let _ = (input, output);
+        Err(Error::Precondition("this plan does not support segmented-view execution".into()))
+    }
+}
+
+/// A prepared reduce-scatter-v: `input` holds `counts.total()` elements —
+/// block `j` (`counts[j]` elements, at the counts' prefix offset) being
+/// this rank's contribution to rank `j`; on success `output` (length
+/// `counts[me]`) holds the elementwise sum over all ranks of this rank's
+/// block (`MPI_Reduce_scatter` + `MPI_SUM` semantics with per-rank
+/// counts). All-zero counts plan as no-ops. See the [module docs](self)
+/// for the full contract.
+pub trait ReduceScattervPlan<T: Summable>: CollectivePlan {
+    /// Run the communication + reduction. No allocation, no
+    /// sub-communicator construction, no tag consumption.
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()>;
+
+    /// Zero-copy variant: run over segmented buffer views (total byte
+    /// lengths must match the contract above). Plans that don't support
+    /// view execution report a precondition error.
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        let _ = (input, output);
+        Err(Error::Precondition("this plan does not support segmented-view execution".into()))
+    }
+}
+
 /// An allgather algorithm that can produce persistent plans.
 pub trait CollectiveAlgorithm<T: Pod>: NamedAlgorithm {
-    /// Collectively build a plan for `shape` over `comm`.
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>>;
+    /// Collectively build a plan for `spec` over `comm`.
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>>;
 }
 
 /// An allreduce (sum) algorithm that can produce persistent plans.
 pub trait AllreduceAlgorithm<T: Summable>: NamedAlgorithm {
-    /// Collectively build a plan for `shape` over `comm`.
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>>;
+    /// Collectively build a plan for `spec` over `comm`.
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllreducePlan<T>>>;
 }
 
 /// An alltoall algorithm that can produce persistent plans.
 pub trait AlltoallAlgorithm<T: Pod>: NamedAlgorithm {
-    /// Collectively build a plan for `shape` over `comm`.
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>>;
+    /// Collectively build a plan for `spec` over `comm`.
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AlltoallPlan<T>>>;
 }
 
 /// A reduce-scatter (sum) algorithm that can produce persistent plans.
 pub trait ReduceScatterAlgorithm<T: Summable>: NamedAlgorithm {
-    /// Collectively build a plan for `shape` over `comm`.
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>>;
+    /// Collectively build a plan for `spec` over `comm`.
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScatterPlan<T>>>;
+}
+
+/// An allgatherv algorithm that can produce persistent plans. The spec's
+/// counts are authoritative (`spec.counts`); registries validate
+/// `counts.len() == comm.size()` before any factory runs.
+pub trait AllgathervAlgorithm<T: Pod>: NamedAlgorithm {
+    /// Collectively build a plan for `spec` over `comm`.
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgathervPlan<T>>>;
+}
+
+/// A reduce-scatter-v (sum) algorithm that can produce persistent plans.
+pub trait ReduceScattervAlgorithm<T: Summable>: NamedAlgorithm {
+    /// Collectively build a plan for `spec` over `comm`.
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScattervPlan<T>>>;
 }
 
 /// The state every concrete plan embeds: a retained communicator handle,
@@ -613,15 +875,47 @@ impl<T: Summable> ReduceScatterPlan<T> for EmptyPlan {
     }
 }
 
+/// Exact-length check shared by the ragged plans' empty short-circuit.
+fn check_empty_slices<T>(input: &[T], output: &[T]) -> Result<()> {
+    if !input.is_empty() {
+        return Err(Error::SizeMismatch { expected: 0, got: input.len() });
+    }
+    if !output.is_empty() {
+        return Err(Error::SizeMismatch { expected: 0, got: output.len() });
+    }
+    Ok(())
+}
+
+impl<T: Pod> AllgathervPlan<T> for EmptyPlan {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_empty_slices(input, output)
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        check_empty_views(input, output)
+    }
+}
+
+impl<T: Summable> ReduceScattervPlan<T> for EmptyPlan {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_empty_slices(input, output)
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        check_empty_views(input, output)
+    }
+}
+
 /// Factory helper: the shared zero-length short-circuit for allgather
-/// factories. Every algorithm's `plan` starts with this so the `n == 0`
-/// contract is uniform.
+/// factories. Every algorithm's `plan` starts with this so the
+/// zero-length contract (`counts.total() == 0` — for uniform specs,
+/// `n == 0`) is uniform and bypasses even shape preconditions.
 pub(crate) fn trivial_plan<T: Pod>(
     name: &'static str,
     comm: &Comm,
-    shape: Shape,
+    spec: &PlanSpec,
 ) -> Option<Box<dyn AllgatherPlan<T>>> {
-    if shape.n == 0 {
+    if spec.total() == 0 {
         Some(Box::new(EmptyPlan { name, p: comm.size() }))
     } else {
         None
@@ -632,9 +926,9 @@ pub(crate) fn trivial_plan<T: Pod>(
 pub(crate) fn trivial_reduce_plan<T: Summable>(
     name: &'static str,
     comm: &Comm,
-    shape: Shape,
+    spec: &PlanSpec,
 ) -> Option<Box<dyn AllreducePlan<T>>> {
-    if shape.n == 0 {
+    if spec.total() == 0 {
         Some(Box::new(EmptyPlan { name, p: comm.size() }))
     } else {
         None
@@ -645,9 +939,9 @@ pub(crate) fn trivial_reduce_plan<T: Summable>(
 pub(crate) fn trivial_a2a_plan<T: Pod>(
     name: &'static str,
     comm: &Comm,
-    shape: Shape,
+    spec: &PlanSpec,
 ) -> Option<Box<dyn AlltoallPlan<T>>> {
-    if shape.n == 0 {
+    if spec.total() == 0 {
         Some(Box::new(EmptyPlan { name, p: comm.size() }))
     } else {
         None
@@ -658,9 +952,35 @@ pub(crate) fn trivial_a2a_plan<T: Pod>(
 pub(crate) fn trivial_rs_plan<T: Summable>(
     name: &'static str,
     comm: &Comm,
-    shape: Shape,
+    spec: &PlanSpec,
 ) -> Option<Box<dyn ReduceScatterPlan<T>>> {
-    if shape.n == 0 {
+    if spec.total() == 0 {
+        Some(Box::new(EmptyPlan { name, p: comm.size() }))
+    } else {
+        None
+    }
+}
+
+/// Zero-length short-circuit for allgatherv factories (all counts zero).
+pub(crate) fn trivial_agv_plan<T: Pod>(
+    name: &'static str,
+    comm: &Comm,
+    spec: &PlanSpec,
+) -> Option<Box<dyn AllgathervPlan<T>>> {
+    if spec.total() == 0 {
+        Some(Box::new(EmptyPlan { name, p: comm.size() }))
+    } else {
+        None
+    }
+}
+
+/// Zero-length short-circuit for reduce-scatter-v factories.
+pub(crate) fn trivial_rsv_plan<T: Summable>(
+    name: &'static str,
+    comm: &Comm,
+    spec: &PlanSpec,
+) -> Option<Box<dyn ReduceScattervPlan<T>>> {
+    if spec.total() == 0 {
         Some(Box::new(EmptyPlan { name, p: comm.size() }))
     } else {
         None
@@ -675,7 +995,7 @@ pub(crate) fn one_shot<T: Pod>(
     comm: &Comm,
     local: &[T],
 ) -> Result<Vec<T>> {
-    let mut plan = algo.plan(comm, Shape::elems(local.len()))?;
+    let mut plan = algo.plan(comm, &PlanSpec::uniform(local.len(), comm.size()))?;
     let mut out = vec![T::default(); local.len() * plan.comm_size()];
     plan.execute(local, &mut out)?;
     Ok(out)
@@ -687,7 +1007,7 @@ pub(crate) fn one_shot_reduce<T: Summable>(
     comm: &Comm,
     local: &[T],
 ) -> Result<Vec<T>> {
-    let mut plan = algo.plan(comm, Shape::elems(local.len()))?;
+    let mut plan = algo.plan(comm, &PlanSpec::uniform(local.len(), comm.size()))?;
     let mut out = vec![T::default(); local.len()];
     plan.execute(local, &mut out)?;
     Ok(out)
@@ -707,7 +1027,7 @@ pub(crate) fn one_shot_a2a<T: Pod>(
             got: send.len(),
         });
     }
-    let mut plan = algo.plan(comm, Shape::elems(send.len() / p))?;
+    let mut plan = algo.plan(comm, &PlanSpec::uniform(send.len() / p, p))?;
     let mut out = vec![T::default(); send.len()];
     plan.execute(send, &mut out)?;
     Ok(out)
@@ -727,10 +1047,58 @@ pub(crate) fn one_shot_rs<T: Summable>(
             got: send.len(),
         });
     }
-    let mut plan = algo.plan(comm, Shape::elems(send.len() / p))?;
+    let mut plan = algo.plan(comm, &PlanSpec::uniform(send.len() / p, p))?;
     let mut out = vec![T::default(); send.len() / p];
     plan.execute(send, &mut out)?;
     Ok(out)
+}
+
+/// Shared body of the allgatherv one-shot wrapper: `local.len()` must
+/// equal this rank's count; the output is the counts' total.
+pub(crate) fn one_shot_agv<T: Pod>(
+    algo: &dyn AllgathervAlgorithm<T>,
+    comm: &Comm,
+    local: &[T],
+    counts: &Counts,
+) -> Result<Vec<T>> {
+    check_counts_len(counts, comm.size())?;
+    if local.len() != counts.get(comm.rank()) {
+        return Err(Error::SizeMismatch { expected: counts.get(comm.rank()), got: local.len() });
+    }
+    let mut plan = algo.plan(comm, &PlanSpec::ragged(counts.clone()))?;
+    let mut out = vec![T::default(); counts.total()];
+    plan.execute(local, &mut out)?;
+    Ok(out)
+}
+
+/// Shared body of the reduce-scatter-v one-shot wrapper: `send.len()`
+/// must equal the counts' total; the output is this rank's count.
+pub(crate) fn one_shot_rsv<T: Summable>(
+    algo: &dyn ReduceScattervAlgorithm<T>,
+    comm: &Comm,
+    send: &[T],
+    counts: &Counts,
+) -> Result<Vec<T>> {
+    check_counts_len(counts, comm.size())?;
+    if send.len() != counts.total() {
+        return Err(Error::SizeMismatch { expected: counts.total(), got: send.len() });
+    }
+    let mut plan = algo.plan(comm, &PlanSpec::ragged(counts.clone()))?;
+    let mut out = vec![T::default(); counts.get(comm.rank())];
+    plan.execute(send, &mut out)?;
+    Ok(out)
+}
+
+/// The counts-arity precondition every ragged entry point enforces:
+/// one count per rank, rejected at plan time with a typed error.
+pub(crate) fn check_counts_len(counts: &Counts, p: usize) -> Result<()> {
+    if counts.len() != p {
+        return Err(Error::Precondition(format!(
+            "counts length {} does not match communicator size {p}",
+            counts.len()
+        )));
+    }
+    Ok(())
 }
 
 /// Name → algorithm-factory registry for one operation.
@@ -790,7 +1158,7 @@ impl<A: ?Sized + NamedAlgorithm> OpRegistry<A> {
     }
 
     /// The unknown-name error, listing every valid name for this op.
-    fn unknown(&self, name: &str) -> Error {
+    pub(crate) fn unknown(&self, name: &str) -> Error {
         Error::Precondition(format!(
             "unknown {} algorithm '{name}' (valid: {})",
             self.op,
@@ -811,6 +1179,12 @@ pub type AlltoallRegistry<T> = OpRegistry<dyn AlltoallAlgorithm<T>>;
 
 /// The reduce-scatter registry.
 pub type ReduceScatterRegistry<T> = OpRegistry<dyn ReduceScatterAlgorithm<T>>;
+
+/// The allgatherv (ragged allgather) registry.
+pub type AllgathervRegistry<T> = OpRegistry<dyn AllgathervAlgorithm<T>>;
+
+/// The reduce-scatter-v (ragged reduce-scatter) registry.
+pub type ReduceScattervRegistry<T> = OpRegistry<dyn ReduceScattervAlgorithm<T>>;
 
 impl<T: Pod> Registry<T> {
     /// An empty allgather registry.
@@ -837,12 +1211,31 @@ impl<T: Pod> Registry<T> {
         r
     }
 
-    /// Plan by name. Unknown names report the full list of valid names.
-    pub fn plan(&self, name: &str, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
+    /// Plan by name. Unknown names report the full list of valid names;
+    /// counts whose length differs from the communicator size are a typed
+    /// precondition error before any factory runs.
+    pub fn plan(
+        &self,
+        name: &str,
+        comm: &Comm,
+        spec: &PlanSpec,
+    ) -> Result<Box<dyn AllgatherPlan<T>>> {
+        check_counts_len(&spec.counts, comm.size())?;
         match self.get(name) {
-            Some(a) => a.plan(comm, shape),
+            Some(a) => a.plan(comm, spec),
             None => Err(self.unknown(name)),
         }
+    }
+
+    /// Uniform-counts convenience: plan `shape.n` elements per rank (the
+    /// source-compatible face of the old bare-`Shape` API).
+    pub fn plan_uniform(
+        &self,
+        name: &str,
+        comm: &Comm,
+        shape: Shape,
+    ) -> Result<Box<dyn AllgatherPlan<T>>> {
+        self.plan(name, comm, &PlanSpec::uniform(shape.n, comm.size()))
     }
 }
 
@@ -867,11 +1260,27 @@ impl<T: Summable> AllreduceRegistry<T> {
     }
 
     /// Plan by name. Unknown names report the full list of valid names.
-    pub fn plan(&self, name: &str, comm: &Comm, shape: Shape) -> Result<Box<dyn AllreducePlan<T>>> {
+    pub fn plan(
+        &self,
+        name: &str,
+        comm: &Comm,
+        spec: &PlanSpec,
+    ) -> Result<Box<dyn AllreducePlan<T>>> {
+        check_counts_len(&spec.counts, comm.size())?;
         match self.get(name) {
-            Some(a) => a.plan(comm, shape),
+            Some(a) => a.plan(comm, spec),
             None => Err(self.unknown(name)),
         }
+    }
+
+    /// Uniform-counts convenience (see [`Registry::plan_uniform`]).
+    pub fn plan_uniform(
+        &self,
+        name: &str,
+        comm: &Comm,
+        shape: Shape,
+    ) -> Result<Box<dyn AllreducePlan<T>>> {
+        self.plan(name, comm, &PlanSpec::uniform(shape.n, comm.size()))
     }
 }
 
@@ -895,11 +1304,27 @@ impl<T: Pod> AlltoallRegistry<T> {
     }
 
     /// Plan by name. Unknown names report the full list of valid names.
-    pub fn plan(&self, name: &str, comm: &Comm, shape: Shape) -> Result<Box<dyn AlltoallPlan<T>>> {
+    pub fn plan(
+        &self,
+        name: &str,
+        comm: &Comm,
+        spec: &PlanSpec,
+    ) -> Result<Box<dyn AlltoallPlan<T>>> {
+        check_counts_len(&spec.counts, comm.size())?;
         match self.get(name) {
-            Some(a) => a.plan(comm, shape),
+            Some(a) => a.plan(comm, spec),
             None => Err(self.unknown(name)),
         }
+    }
+
+    /// Uniform-counts convenience (see [`Registry::plan_uniform`]).
+    pub fn plan_uniform(
+        &self,
+        name: &str,
+        comm: &Comm,
+        shape: Shape,
+    ) -> Result<Box<dyn AlltoallPlan<T>>> {
+        self.plan(name, comm, &PlanSpec::uniform(shape.n, comm.size()))
     }
 }
 
@@ -928,12 +1353,113 @@ impl<T: Summable> ReduceScatterRegistry<T> {
         &self,
         name: &str,
         comm: &Comm,
-        shape: Shape,
+        spec: &PlanSpec,
     ) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        check_counts_len(&spec.counts, comm.size())?;
         match self.get(name) {
-            Some(a) => a.plan(comm, shape),
+            Some(a) => a.plan(comm, spec),
             None => Err(self.unknown(name)),
         }
+    }
+
+    /// Uniform-counts convenience (see [`Registry::plan_uniform`]).
+    pub fn plan_uniform(
+        &self,
+        name: &str,
+        comm: &Comm,
+        shape: Shape,
+    ) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        self.plan(name, comm, &PlanSpec::uniform(shape.n, comm.size()))
+    }
+}
+
+impl<T: Pod> AllgathervRegistry<T> {
+    /// An empty allgatherv registry.
+    pub fn empty() -> AllgathervRegistry<T> {
+        OpRegistry::new(OpKind::Allgatherv)
+    }
+
+    /// The built-in allgathervs: ring (neighbour exchange over ragged
+    /// blocks), Bruck with per-partner recv counts (the sst-macro
+    /// `bruck_allgatherv` shape, extra-round trick for non-power-of-two
+    /// p), the locality-aware regional aggregation and the model-tuned
+    /// dispatcher.
+    pub fn standard() -> AllgathervRegistry<T> {
+        let mut r = AllgathervRegistry::empty();
+        r.register(Box::new(allgatherv::RingAllgatherv));
+        r.register(Box::new(allgatherv::BruckAllgatherv));
+        r.register(Box::new(allgatherv::LocAwareAllgatherv));
+        r.register(Box::new(model_tuned::ModelTunedAllgatherv));
+        r
+    }
+
+    /// Plan by name; the spec's counts are authoritative (one count per
+    /// rank, validated here).
+    pub fn plan(
+        &self,
+        name: &str,
+        comm: &Comm,
+        spec: &PlanSpec,
+    ) -> Result<Box<dyn AllgathervPlan<T>>> {
+        check_counts_len(&spec.counts, comm.size())?;
+        match self.get(name) {
+            Some(a) => a.plan(comm, spec),
+            None => Err(self.unknown(name)),
+        }
+    }
+
+    /// Uniform-counts convenience: `shape.n` elements on every rank (the
+    /// degenerate `MPI_Allgather` case of allgatherv).
+    pub fn plan_uniform(
+        &self,
+        name: &str,
+        comm: &Comm,
+        shape: Shape,
+    ) -> Result<Box<dyn AllgathervPlan<T>>> {
+        self.plan(name, comm, &PlanSpec::uniform(shape.n, comm.size()))
+    }
+}
+
+impl<T: Summable> ReduceScattervRegistry<T> {
+    /// An empty reduce-scatter-v registry.
+    pub fn empty() -> ReduceScattervRegistry<T> {
+        OpRegistry::new(OpKind::ReduceScatterV)
+    }
+
+    /// The built-in reduce-scatter-vs: ring (exchange-and-reduce over
+    /// ragged blocks), the locality-aware lane variant and the
+    /// model-tuned dispatcher.
+    pub fn standard() -> ReduceScattervRegistry<T> {
+        let mut r = ReduceScattervRegistry::empty();
+        r.register(Box::new(reduce_scatter_v::RingReduceScatterv));
+        r.register(Box::new(reduce_scatter_v::LocAwareReduceScatterv));
+        r.register(Box::new(model_tuned::ModelTunedReduceScatterv));
+        r
+    }
+
+    /// Plan by name; the spec's counts are authoritative (one count per
+    /// rank, validated here).
+    pub fn plan(
+        &self,
+        name: &str,
+        comm: &Comm,
+        spec: &PlanSpec,
+    ) -> Result<Box<dyn ReduceScattervPlan<T>>> {
+        check_counts_len(&spec.counts, comm.size())?;
+        match self.get(name) {
+            Some(a) => a.plan(comm, spec),
+            None => Err(self.unknown(name)),
+        }
+    }
+
+    /// Uniform-counts convenience: `shape.n` elements for every rank.
+    pub fn plan_uniform(
+        &self,
+        name: &str,
+        comm: &Comm,
+        shape: Shape,
+    ) -> Result<Box<dyn ReduceScattervPlan<T>>> {
+        self.plan(name, comm, &PlanSpec::uniform(shape.n, comm.size()))
     }
 }
 
@@ -958,6 +1484,18 @@ impl<T: Pod> Default for AlltoallRegistry<T> {
 impl<T: Summable> Default for ReduceScatterRegistry<T> {
     fn default() -> Self {
         ReduceScatterRegistry::standard()
+    }
+}
+
+impl<T: Pod> Default for AllgathervRegistry<T> {
+    fn default() -> Self {
+        AllgathervRegistry::standard()
+    }
+}
+
+impl<T: Summable> Default for ReduceScattervRegistry<T> {
+    fn default() -> Self {
+        ReduceScattervRegistry::standard()
     }
 }
 
@@ -1021,12 +1559,7 @@ impl<T: Summable> FusedPlan<T> {
         let mut parts = Vec::with_capacity(specs.len());
         let (mut in_off, mut out_off) = (0usize, 0usize);
         for s in specs {
-            let (il, ol) = match s.op {
-                OpKind::Allgather => (s.n, s.n * p),
-                OpKind::Allreduce => (s.n, s.n),
-                OpKind::Alltoall => (s.n * p, s.n * p),
-                OpKind::ReduceScatter => (s.n * p, s.n),
-            };
+            let (il, ol) = s.io_elems(comm.rank(), p);
             parts.push(FusedPart { in_off, in_len: il, out_off, out_len: ol });
             in_off += il;
             out_off += ol;
@@ -1192,7 +1725,7 @@ impl FusedPlanMixed {
         let p = comm.size();
         let mut parts = Vec::with_capacity(specs.len());
         for (s, k) in specs {
-            let (il, ol) = s.op.io_elems(s.n, p);
+            let (il, ol) = s.io_elems(comm.rank(), p);
             parts.push(MixedPart {
                 in_bytes: il * k.bytes(),
                 out_bytes: ol * k.bytes(),
@@ -1306,7 +1839,13 @@ mod tests {
         assert_eq!(r.op(), OpKind::Allreduce);
         assert_eq!(
             r.names(),
-            vec!["recursive-doubling", "loc-aware", "rabenseifner", "model-tuned"]
+            vec![
+                "recursive-doubling",
+                "loc-aware",
+                "rabenseifner",
+                "loc-rabenseifner",
+                "model-tuned"
+            ]
         );
         for (name, summary) in r.catalog() {
             assert!(!summary.is_empty(), "{name} has no summary");
@@ -1322,10 +1861,75 @@ mod tests {
         }
         let r = ReduceScatterRegistry::<u64>::standard();
         assert_eq!(r.op(), OpKind::ReduceScatter);
-        assert_eq!(r.names(), vec!["ring", "recursive-halving", "loc-aware", "model-tuned"]);
+        assert_eq!(
+            r.names(),
+            vec!["ring", "recursive-halving", "pat", "loc-aware", "model-tuned"]
+        );
         for (name, summary) in r.catalog() {
             assert!(!summary.is_empty(), "{name} has no summary");
         }
+    }
+
+    #[test]
+    fn ragged_registries_have_catalogs() {
+        let r = AllgathervRegistry::<u64>::standard();
+        assert_eq!(r.op(), OpKind::Allgatherv);
+        assert_eq!(r.names(), vec!["ring", "bruck", "loc-aware", "model-tuned"]);
+        for (name, summary) in r.catalog() {
+            assert!(!summary.is_empty(), "{name} has no summary");
+        }
+        let r = ReduceScattervRegistry::<u64>::standard();
+        assert_eq!(r.op(), OpKind::ReduceScatterV);
+        assert_eq!(r.names(), vec!["ring", "loc-aware", "model-tuned"]);
+        for (name, summary) in r.catalog() {
+            assert!(!summary.is_empty(), "{name} has no summary");
+        }
+    }
+
+    #[test]
+    fn counts_helpers_cover_the_ragged_layout() {
+        let c = Counts::new(vec![4, 0, 7, 2]);
+        assert_eq!(c.len(), 4);
+        assert!(!c.is_empty());
+        assert_eq!(c.total(), 13);
+        assert_eq!(c.offsets(), vec![0, 4, 4, 11, 13]);
+        assert_eq!(c.offset_of(2), 4);
+        assert_eq!(c.get(1), 0);
+        assert_eq!(c.get(99), 0);
+        assert_eq!(c.max(), 7);
+        assert_eq!(c.uniform_n(), None);
+        assert_eq!(c.to_string(), "4,0,7,2");
+        assert_eq!(Counts::parse("4, 0,7 ,2").unwrap(), c);
+        assert!(Counts::parse("4,x,2").is_err());
+        assert!(Counts::parse("").is_err());
+        let u = Counts::uniform(3, 4);
+        assert_eq!(u.uniform_n(), Some(3));
+        assert_eq!(u.total(), 12);
+        assert_eq!(PlanSpec::uniform(3, 4).counts, u);
+        let ragged = PlanSpec::ragged(c.clone());
+        assert_eq!(ragged.shape.n, 7);
+        assert_eq!(ragged.total(), 13);
+        assert!(ragged.uniform_n("bruck").is_err());
+        assert_eq!(PlanSpec::uniform(3, 4).uniform_n("bruck").unwrap(), 3);
+    }
+
+    #[test]
+    fn ragged_counts_reject_on_uniform_ops_and_wrong_length() {
+        let topo = Topology::regions(2, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let r = Registry::<u64>::standard();
+            // ragged counts on a uniform op: typed precondition
+            let ragged = PlanSpec::ragged(Counts::new(vec![1, 2, 3, 4]));
+            let e1 = matches!(r.plan("bruck", c, &ragged), Err(Error::Precondition(_)));
+            // counts length != p: typed precondition, even for ragged ops
+            let short = PlanSpec::ragged(Counts::new(vec![1, 2]));
+            let agv = AllgathervRegistry::<u64>::standard();
+            let e2 = matches!(agv.plan("ring", c, &short), Err(Error::Precondition(_)));
+            let rsv = ReduceScattervRegistry::<u64>::standard();
+            let e3 = matches!(rsv.plan("ring", c, &short), Err(Error::Precondition(_)));
+            e1 && e2 && e3
+        });
+        assert!(run.results.iter().all(|&b| b));
     }
 
     #[test]
@@ -1336,6 +1940,8 @@ mod tests {
         }
         assert_eq!(OpKind::parse("reduce_scatter"), Some(OpKind::ReduceScatter));
         assert_eq!(OpKind::parse("Reduce_Scatter"), Some(OpKind::ReduceScatter));
+        assert_eq!(OpKind::parse("reduce_scatter_v"), Some(OpKind::ReduceScatterV));
+        assert_eq!(OpKind::parse("Allgatherv"), Some(OpKind::Allgatherv));
         assert_eq!(OpKind::parse("nope"), None);
         let err = OpKind::parse_or_err("warp").unwrap_err().to_string();
         assert!(err.contains("allgather") && err.contains("reduce-scatter"), "{err}");
@@ -1356,12 +1962,12 @@ mod tests {
         let topo = Topology::regions(1, 2);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = Registry::<u32>::standard();
-            let ag = match r.plan("warp-drive", c, Shape::elems(1)) {
+            let ag = match r.plan_uniform("warp-drive", c, Shape::elems(1)) {
                 Err(e) => e.to_string(),
                 Ok(_) => String::new(),
             };
             let r = AllreduceRegistry::<u32>::standard();
-            let ar = match r.plan("warp-drive", c, Shape::elems(1)) {
+            let ar = match r.plan_uniform("warp-drive", c, Shape::elems(1)) {
                 Err(e) => e.to_string(),
                 Ok(_) => String::new(),
             };
@@ -1388,7 +1994,7 @@ mod tests {
             let mine = canonical_contribution(c.rank(), n);
             let mut out = vec![0u64; n * p];
             for name in r.names() {
-                let mut plan = r.plan(name, c, Shape::elems(n)).unwrap();
+                let mut plan = r.plan_uniform(name, c, Shape::elems(n)).unwrap();
                 assert_eq!(plan.algorithm(), name);
                 assert_eq!(plan.shape(), Shape::elems(n));
                 assert_eq!(plan.comm_size(), p);
@@ -1413,7 +2019,7 @@ mod tests {
             }
         }
         impl CollectiveAlgorithm<u32> for Fake {
-            fn plan(&self, comm: &Comm, _shape: Shape) -> Result<Box<dyn AllgatherPlan<u32>>> {
+            fn plan(&self, comm: &Comm, _spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<u32>>> {
                 Ok(Box::new(EmptyPlan { name: "ring", p: comm.size() }))
             }
         }
@@ -1430,6 +2036,9 @@ mod tests {
         assert_eq!(OpKind::Allreduce.io_elems(3, 4), (3, 3));
         assert_eq!(OpKind::Alltoall.io_elems(3, 4), (12, 12));
         assert_eq!(OpKind::ReduceScatter.io_elems(3, 4), (12, 3));
+        // the ragged ops' uniform interpretation mirrors their flat twins
+        assert_eq!(OpKind::Allgatherv.io_elems(3, 4), (3, 12));
+        assert_eq!(OpKind::ReduceScatterV.io_elems(3, 4), (12, 3));
         // n = 0 is the uniform empty contract on every op.
         for op in OpKind::ALL {
             assert_eq!(op.io_elems(0, 4), (0, 0));
@@ -1441,7 +2050,7 @@ mod tests {
         let topo = Topology::regions(2, 2);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = Registry::<u32>::standard();
-            let mut plan = r.plan("bruck", c, Shape::elems(3)).unwrap();
+            let mut plan = r.plan_uniform("bruck", c, Shape::elems(3)).unwrap();
             let bad_in = plan.execute(&[1u32; 2], &mut [0u32; 12]).is_err();
             let bad_out = plan.execute(&[1u32; 3], &mut [0u32; 11]).is_err();
             bad_in && bad_out

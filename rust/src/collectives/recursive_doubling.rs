@@ -10,7 +10,7 @@
 //! (the XOR windows are disjoint, and sends are buffered eagerly).
 
 use super::plan::{
-    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
@@ -30,12 +30,12 @@ impl NamedAlgorithm for RecursiveDoubling {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for RecursiveDoubling {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("recursive-doubling", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("recursive-doubling", comm, spec) {
             return Ok(p);
         }
-        let sched =
-            build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let n = spec.uniform_n("recursive-doubling")?;
+        let sched = build_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "recursive-doubling", sched)?)
     }
 }

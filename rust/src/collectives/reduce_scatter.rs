@@ -54,7 +54,7 @@
 
 use super::grouping::GroupBy;
 use super::plan::{
-    trivial_rs_plan, NamedAlgorithm, OpKind, ReduceScatterAlgorithm, ReduceScatterPlan, Shape,
+    trivial_rs_plan, NamedAlgorithm, OpKind, PlanSpec, ReduceScatterAlgorithm, ReduceScatterPlan,
     Summable,
 };
 use super::schedule::{
@@ -78,12 +78,12 @@ impl NamedAlgorithm for RingReduceScatter {
 }
 
 impl<T: Summable> ReduceScatterAlgorithm<T> for RingReduceScatter {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
-        if let Some(p) = trivial_rs_plan("ring", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("ring", comm, spec) {
             return Ok(p);
         }
-        let sched =
-            build_ring_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        let n = spec.uniform_n("ring")?;
+        let sched = build_ring_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "ring", sched)?)
     }
 }
@@ -102,12 +102,12 @@ impl NamedAlgorithm for RecursiveHalvingReduceScatter {
 }
 
 impl<T: Summable> ReduceScatterAlgorithm<T> for RecursiveHalvingReduceScatter {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
-        if let Some(p) = trivial_rs_plan("recursive-halving", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("recursive-halving", comm, spec) {
             return Ok(p);
         }
-        let sched =
-            build_rh_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let n = spec.uniform_n("recursive-halving")?;
+        let sched = build_rh_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "recursive-halving", sched)?)
     }
 }
@@ -126,12 +126,13 @@ impl NamedAlgorithm for LocAwareReduceScatter {
 }
 
 impl<T: Summable> ReduceScatterAlgorithm<T> for LocAwareReduceScatter {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn ReduceScatterPlan<T>>> {
-        if let Some(p) = trivial_rs_plan("loc-aware", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScatterPlan<T>>> {
+        if let Some(p) = trivial_rs_plan("loc-aware", comm, spec) {
             return Ok(p);
         }
+        let n = spec.uniform_n("loc-aware")?;
         let view = WorldView::from_comm(comm);
-        let sched = build_loc_schedule(&view, comm.rank(), shape.n, std::mem::size_of::<T>())?;
+        let sched = build_loc_schedule(&view, comm.rank(), n, std::mem::size_of::<T>())?;
         Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
     }
 }
@@ -354,7 +355,7 @@ pub fn loc_aware<T: Summable>(comm: &Comm, send: &[T]) -> Result<Vec<T>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::plan::ReduceScatterRegistry;
+    use crate::collectives::plan::{ReduceScatterRegistry, Shape};
     use crate::comm::{CommWorld, Timing};
     use crate::topology::Topology;
 
@@ -403,7 +404,7 @@ mod tests {
         let topo = Topology::regions(3, 2);
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let r = ReduceScatterRegistry::<u64>::standard();
-            match r.plan("recursive-halving", c, Shape::elems(2)) {
+            match r.plan_uniform("recursive-halving", c, Shape::elems(2)) {
                 Err(e) => e.to_string(),
                 Ok(_) => String::new(),
             }
@@ -453,7 +454,7 @@ mod tests {
         let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
             let reg = ReduceScatterRegistry::<u64>::standard();
             for name in reg.names() {
-                let mut plan = reg.plan(name, c, Shape::elems(2)).unwrap();
+                let mut plan = reg.plan_uniform(name, c, Shape::elems(2)).unwrap();
                 assert_eq!(plan.algorithm(), name);
                 assert_eq!(plan.comm_size(), p);
                 let mut out = vec![0u64; 2];

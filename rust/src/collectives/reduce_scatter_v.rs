@@ -1,0 +1,446 @@
+//! Reduce-scatter-v — the ragged reduce-scatter — as schedule builders.
+//!
+//! `reduce_scatter_v` contract (`MPI_Reduce_scatter` with `MPI_SUM` and
+//! per-rank counts): every rank holds `Σ counts` elements partitioned by
+//! `counts` — block `j` (at the counts' prefix offset) being its
+//! contribution to rank `j` — and afterwards rank `i` holds the
+//! `counts[i]`-element elementwise sum over all ranks of block `i`.
+//! Jocksch et al. (*Optimised allgatherv, reduce_scatter and allreduce
+//! communication*) treat the ragged reduce-scatter as the allgatherv's
+//! inverse: the same per-message postal terms `α_c + β_c·s` (paper §4)
+//! traversed in the opposite direction with a reduction folded into every
+//! hop, and the same rule that zero-count ranks still participate in
+//! every exchange (a zero-length message costs its latency term —
+//! dropping it would desynchronise the SPMD schedules).
+//!
+//! Two builders, both registered in
+//! [`super::plan::ReduceScattervRegistry`] (plus the cost-model-driven
+//! [`super::model_tuned::ModelTunedReduceScatterv`]):
+//!
+//! * **`ring`** — `p−1` neighbour exchange-and-reduce steps over the
+//!   ragged accumulator: step `s` forwards the partial of one ragged
+//!   block and folds the incoming partial in place, so every value still
+//!   crosses each link exactly once (`Σ counts − counts[rank]` elements
+//!   sent per rank);
+//! * **`loc-aware`** — the paper's §4 argument over ragged lanes: every
+//!   rank pre-reduces *within its region* (all-local traffic) so local
+//!   rank `ℓ` holds the region's partials for **lane** `ℓ` (the
+//!   destination ranks with local index `ℓ` in every region), then each
+//!   lane runs an inter-region ragged ring reduce-scatter of aggregated
+//!   per-region partials — `r−1` non-local messages per rank, each an
+//!   aggregated partial, independent of the counts' skew. The lane
+//!   exchange is *always* the ragged ring (never per-shape recursive
+//!   halving): the exchange structure must be a plan-time function of the
+//!   topology alone so every rank reserves the same tag block.
+//!
+//! Both are pure schedule builders over exact ragged slices: every
+//! schedule carries an explicit [`Schedule::io`] override
+//! (`(Σ counts, counts[rank])`), executes through the generic
+//! [`SchedPlan`] interpreter with the [`Summable`] reducer, and is costed
+//! by [`crate::model::cost`] with no ragged special-casing.
+
+use super::grouping::GroupBy;
+use super::plan::{
+    check_counts_len, trivial_rsv_plan, Counts, NamedAlgorithm, OpKind, PlanSpec,
+    ReduceScattervAlgorithm, ReduceScattervPlan, Summable,
+};
+use super::schedule::{
+    locate, uniform_size, BufId, SchedPlan, Schedule, ScheduleBuilder, Slice, WorldView,
+};
+use crate::comm::Comm;
+use crate::error::{Error, Result};
+
+/// Ring reduce-scatter-v (registry entry).
+pub struct RingReduceScatterv;
+
+impl NamedAlgorithm for RingReduceScatterv {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn summary(&self) -> &'static str {
+        "ring reduce-scatter-v: p-1 exchange-and-reduce steps over ragged blocks"
+    }
+}
+
+impl<T: Summable> ReduceScattervAlgorithm<T> for RingReduceScatterv {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScattervPlan<T>>> {
+        if let Some(p) = trivial_rsv_plan("ring", comm, spec) {
+            return Ok(p);
+        }
+        check_counts_len(&spec.counts, comm.size())?;
+        let sched = build_ring_schedule(
+            comm.size(),
+            comm.rank(),
+            spec.counts.as_slice(),
+            std::mem::size_of::<T>(),
+        );
+        Ok(SchedPlan::<T>::boxed(comm, "ring", sched)?)
+    }
+}
+
+/// Locality-aware reduce-scatter-v (registry entry).
+pub struct LocAwareReduceScatterv;
+
+impl NamedAlgorithm for LocAwareReduceScatterv {
+    fn name(&self) -> &'static str {
+        "loc-aware"
+    }
+
+    fn summary(&self) -> &'static str {
+        "regional reduce-scatter-v (§4): local pre-reduce into ragged lanes, lane ring"
+    }
+}
+
+impl<T: Summable> ReduceScattervAlgorithm<T> for LocAwareReduceScatterv {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn ReduceScattervPlan<T>>> {
+        if let Some(p) = trivial_rsv_plan("loc-aware", comm, spec) {
+            return Ok(p);
+        }
+        check_counts_len(&spec.counts, comm.size())?;
+        let view = WorldView::from_comm(comm);
+        let sched = build_loc_schedule(
+            &view,
+            comm.rank(),
+            spec.counts.as_slice(),
+            std::mem::size_of::<T>(),
+        )?;
+        Ok(SchedPlan::<T>::boxed(comm, "loc-aware", sched)?)
+    }
+}
+
+/// Exclusive prefix sums with the total appended (`len + 1` entries).
+fn prefix_offsets(counts: &[usize]) -> Vec<usize> {
+    let mut offs = Vec::with_capacity(counts.len() + 1);
+    let mut acc = 0usize;
+    offs.push(0);
+    for &c in counts {
+        acc += c;
+        offs.push(acc);
+    }
+    offs
+}
+
+fn max_count(counts: &[usize]) -> usize {
+    counts.iter().copied().max().unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// group emitter (shared by the top-level builder and the lane phase)
+// ---------------------------------------------------------------------------
+
+/// Emit a ragged ring reduce-scatter among `members` over the
+/// member-major accumulator `acc` (`Σ counts` elements; block `k`, of
+/// `counts[k]` elements at the counts' prefix offset, is destined to
+/// member `k`). `q−1` neighbour exchange-and-reduce steps; member `k`
+/// ends with block `k` fully reduced **in place**. Zero-count blocks are
+/// still forwarded as zero-length messages (the SPMD schedules stay in
+/// lockstep); ranks outside `members` allocate the tag block and emit
+/// nothing.
+pub(crate) fn emit_group_ring_rs_v(
+    sb: &mut ScheduleBuilder,
+    members: &[usize],
+    me: usize,
+    counts: &[usize],
+    acc: BufId,
+) {
+    let q = members.len();
+    debug_assert_eq!(counts.len(), q);
+    let tag0 = sb.tag_block(q.saturating_sub(1) as u64);
+    let Some(k) = members.iter().position(|&r| r == me) else {
+        return;
+    };
+    if q == 1 {
+        return;
+    }
+    let offs = prefix_offsets(counts);
+    let tmp = sb.scratch(max_count(counts));
+    // Same traversal as the uniform ring: block `c` starts accumulating
+    // at member `c+1` and travels one neighbour per step, reaching its
+    // owner after q−1 hops — only the payload lengths follow the counts.
+    for s in 0..q - 1 {
+        let right = members[(k + 1) % q];
+        let left = members[(k + q - 1) % q];
+        let c_send = (k + q - 1 - s) % q;
+        let c_recv = (k + 2 * q - 2 - s) % q;
+        sb.sendrecv(
+            right,
+            Slice::at(acc, offs[c_send], counts[c_send]),
+            left,
+            Slice::at(tmp, 0, counts[c_recv]),
+            tag0 + s as u64,
+            0,
+        );
+        if counts[c_recv] > 0 {
+            sb.reduce(
+                Slice::at(tmp, 0, counts[c_recv]),
+                Slice::at(acc, offs[c_recv], counts[c_recv]),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// builders
+// ---------------------------------------------------------------------------
+
+/// Build the ring reduce-scatter-v schedule for one rank (pure; SPMD).
+pub fn build_ring_schedule(
+    p: usize,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Schedule {
+    debug_assert_eq!(counts.len(), p);
+    let offs = prefix_offsets(counts);
+    let total = offs[p];
+    let members: Vec<usize> = (0..p).collect();
+    let mut sb = ScheduleBuilder::new("ring reduce-scatter-v");
+    let acc = sb.scratch(total);
+    if total > 0 {
+        sb.copy(Slice::input(0, total), Slice::at(acc, 0, total));
+    }
+    emit_group_ring_rs_v(&mut sb, &members, rank, counts, acc);
+    if counts[rank] > 0 {
+        sb.copy(Slice::at(acc, offs[rank], counts[rank]), Slice::output(0, counts[rank]));
+    }
+    let mut sched = sb.finish(OpKind::ReduceScatterV, p, max_count(counts), elem_bytes, "ring");
+    sched.io = Some((total, counts[rank]));
+    sched
+}
+
+/// Build the locality-aware reduce-scatter-v schedule for one rank (pure;
+/// SPMD).
+///
+/// Phase 1 (all local): every member of a region sends each local peer
+/// `ℓ` its gathered ragged input blocks destined to lane `ℓ`, and each
+/// lane owner reduces the region's partials in place — after this, local
+/// rank `ℓ` holds its region's contribution to every rank with local
+/// index `ℓ`, laid out region-major at the lane counts' prefix offsets.
+/// Phase 2 (non-local): each lane — one member per region — runs the
+/// ragged ring reduce-scatter of those aggregated partials among the
+/// regions. Degenerate shapes (single region, one rank per region) fall
+/// back to the plain ragged ring; non-uniform regions are rejected at
+/// plan time.
+pub fn build_loc_schedule(
+    view: &WorldView,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    debug_assert_eq!(counts.len(), view.p);
+    let all: Vec<usize> = (0..view.p).collect();
+    let groups = view.split(&all, GroupBy::Region);
+    let ppr = uniform_size(&groups, "locality-aware reduce-scatter-v")?;
+    let r_n = groups.len();
+    if r_n == 1 || ppr == 1 {
+        let mut sched = build_ring_schedule(view.p, rank, counts, elem_bytes);
+        sched.label = "loc-aware[ring]".to_string();
+        return Ok(sched);
+    }
+    let (g, l) = locate(&groups, rank)?;
+    let offs = prefix_offsets(counts);
+    let total = offs[view.p];
+
+    let mut sb = ScheduleBuilder::new("local pre-reduce");
+    // Lane accumulator: block j is the ragged partial destined to
+    // groups[j][l], the lane-ℓ member of region j.
+    let lane_counts: Vec<usize> = groups.iter().map(|group| counts[group[l]]).collect();
+    let lane_offs = prefix_offsets(&lane_counts);
+    let lane_total = lane_offs[r_n];
+    let lane_acc = sb.scratch(lane_total);
+    let tag1 = sb.tag();
+    for (j, group) in groups.iter().enumerate() {
+        let c = counts[group[l]];
+        if c > 0 {
+            sb.copy(Slice::input(offs[group[l]], c), Slice::at(lane_acc, lane_offs[j], c));
+        }
+    }
+    // Send every local peer its lane's ragged blocks, gathered into one
+    // staged local message; all sends post before the first blocking
+    // receive. Peer m's lane total may differ from ours — each side
+    // computes the other's layout from the shared counts.
+    for (m, &peer) in groups[g].iter().enumerate() {
+        if m == l {
+            continue;
+        }
+        let peer_total: usize = groups.iter().map(|group| counts[group[m]]).sum();
+        let stage = sb.scratch(peer_total);
+        let mut soff = 0usize;
+        for group in groups.iter() {
+            let c = counts[group[m]];
+            if c > 0 {
+                sb.copy(Slice::input(offs[group[m]], c), Slice::at(stage, soff, c));
+            }
+            soff += c;
+        }
+        sb.send(peer, Slice::at(stage, 0, peer_total), tag1, 0);
+    }
+    let tmp = sb.scratch(lane_total);
+    for (m, &peer) in groups[g].iter().enumerate() {
+        if m == l {
+            continue;
+        }
+        sb.recv(peer, Slice::at(tmp, 0, lane_total), tag1, 0);
+        if lane_total > 0 {
+            sb.reduce(Slice::at(tmp, 0, lane_total), Slice::at(lane_acc, 0, lane_total));
+        }
+    }
+
+    // Phase 2: aggregated inter-region exchange within the lane — always
+    // the ragged ring (see the module docs: the exchange structure is a
+    // plan-time function of the topology alone).
+    sb.round("lane exchange");
+    let lane: Vec<usize> = groups.iter().map(|group| group[l]).collect();
+    emit_group_ring_rs_v(&mut sb, &lane, rank, &lane_counts, lane_acc);
+    if counts[rank] > 0 {
+        sb.copy(Slice::at(lane_acc, lane_offs[g], counts[rank]), Slice::output(0, counts[rank]));
+    }
+    let mut sched =
+        sb.finish(OpKind::ReduceScatterV, view.p, max_count(counts), elem_bytes, "loc-aware");
+    sched.io = Some((total, counts[rank]));
+    Ok(sched)
+}
+
+/// Build the schedule of one reduce-scatter-v algorithm (by registry
+/// name) for `rank`. `model-tuned` is handled by the dispatcher
+/// ([`super::model_tuned::pick_reduce_scatter_v`]).
+pub fn build_reduce_scatter_v(
+    name: &str,
+    view: &WorldView,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Result<Schedule> {
+    if counts.len() != view.p {
+        return Err(Error::Precondition(format!(
+            "counts length {} does not match communicator size {}",
+            counts.len(),
+            view.p
+        )));
+    }
+    if name.eq_ignore_ascii_case("ring") {
+        Ok(build_ring_schedule(view.p, rank, counts, elem_bytes))
+    } else if name.eq_ignore_ascii_case("loc-aware") {
+        build_loc_schedule(view, rank, counts, elem_bytes)
+    } else {
+        Err(Error::Precondition(format!("no reduce-scatter-v schedule builder for '{name}'")))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one-shot wrappers
+// ---------------------------------------------------------------------------
+
+/// One-shot ring reduce-scatter-v: `send.len()` must equal
+/// `counts.total()`.
+pub fn ring<T: Summable>(comm: &Comm, send: &[T], counts: &Counts) -> Result<Vec<T>> {
+    super::plan::one_shot_rsv(&RingReduceScatterv, comm, send, counts)
+}
+
+/// One-shot locality-aware reduce-scatter-v.
+pub fn loc_aware<T: Summable>(comm: &Comm, send: &[T], counts: &Counts) -> Result<Vec<T>> {
+    super::plan::one_shot_rsv(&LocAwareReduceScatterv, comm, send, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::plan::ReduceScattervRegistry;
+    use crate::comm::{CommWorld, Timing};
+    use crate::topology::Topology;
+
+    /// Canonical ragged send buffer: block `b` of rank `r` is
+    /// `r·1_000_003 + b·1_009 + j` for `j < counts[b]`, concatenated.
+    fn send_buf(rank: usize, counts: &[usize]) -> Vec<u64> {
+        let mut v = Vec::new();
+        for (b, &c) in counts.iter().enumerate() {
+            v.extend((0..c).map(|j| (rank * 1_000_003 + b * 1_009 + j) as u64));
+        }
+        v
+    }
+
+    fn expected(rank: usize, p: usize, counts: &[usize]) -> Vec<u64> {
+        (0..counts[rank])
+            .map(|j| (0..p).map(|r| (r * 1_000_003 + rank * 1_009 + j) as u64).sum())
+            .collect()
+    }
+
+    fn check_all(topo: &Topology, counts: Vec<usize>) {
+        let p = topo.size();
+        let cts = Counts::new(counts.clone());
+        for algo in ["ring", "loc-aware"] {
+            let run = CommWorld::run(topo, Timing::Wallclock, |c| {
+                let reg = ReduceScattervRegistry::<u64>::standard();
+                let mut plan = reg.plan(algo, c, &PlanSpec::ragged(cts.clone())).unwrap();
+                let mut out = vec![0u64; cts.get(c.rank())];
+                plan.execute(&send_buf(c.rank(), cts.as_slice()), &mut out).unwrap();
+                out
+            });
+            for (rank, r) in run.results.iter().enumerate() {
+                assert_eq!(r, &expected(rank, p, &counts), "{algo} rank {rank} counts {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_counts_across_shapes() {
+        check_all(&Topology::regions(2, 2), vec![4, 0, 7, 2]);
+        check_all(&Topology::regions(4, 4), (0..16).map(|r| r % 5).collect());
+        check_all(&Topology::regions(2, 8), (0..16).map(|r| (r * 3) % 7).collect());
+        check_all(&Topology::regions(3, 2), vec![1, 0, 3, 0, 2, 5]);
+    }
+
+    #[test]
+    fn single_rank_receives_everything() {
+        let mut counts = vec![0usize; 8];
+        counts[3] = 9;
+        check_all(&Topology::regions(4, 2), counts);
+        let mut counts = vec![0usize; 6];
+        counts[5] = 4;
+        check_all(&Topology::regions(3, 2), counts);
+    }
+
+    #[test]
+    fn non_power_of_two_world() {
+        check_all(&Topology::regions(5, 1), vec![2, 0, 1, 4, 3]);
+        check_all(&Topology::regions(7, 1), (0..7).map(|r| r % 3).collect());
+        check_all(&Topology::regions(3, 3), (0..9).map(|r| (r * 7) % 4).collect());
+    }
+
+    #[test]
+    fn uniform_counts_degenerate_to_reduce_scatter() {
+        check_all(&Topology::regions(4, 4), vec![2; 16]);
+        check_all(&Topology::regions(1, 8), vec![3; 8]);
+        check_all(&Topology::regions(8, 1), vec![1; 8]);
+    }
+
+    #[test]
+    fn loc_aware_lane_ring_bounds_nonlocal_messages() {
+        // (4×4) skewed: phase 1 is all-local, the lane ring sends
+        // r−1 = 3 aggregated non-local messages per rank regardless of
+        // the counts; the plain ring sends p−1 = 15 from region-edge
+        // ranks.
+        let topo = Topology::regions(4, 4);
+        let counts: Vec<usize> = (0..16).map(|r| r % 5).collect();
+        let cts = Counts::new(counts.clone());
+        let loc = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            loc_aware(c, &send_buf(c.rank(), &counts), &cts).unwrap();
+        });
+        assert_eq!(loc.trace.max_nonlocal_msgs(), 3);
+        let plain = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            ring(c, &send_buf(c.rank(), &counts), &cts).unwrap();
+        });
+        assert_eq!(plain.trace.max_nonlocal_msgs(), 15);
+    }
+
+    #[test]
+    fn one_shot_rejects_wrong_send_length() {
+        let topo = Topology::regions(2, 2);
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let cts = Counts::new(vec![1, 2, 3, 4]);
+            ring(c, &[0u64; 3], &cts).is_err()
+        });
+        assert!(run.results.iter().all(|&b| b));
+    }
+}

@@ -11,7 +11,7 @@
 //! through the caller's output buffer.
 
 use super::plan::{
-    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, Shape,
+    trivial_plan, AllgatherPlan, CollectiveAlgorithm, NamedAlgorithm, OpKind, PlanSpec,
 };
 use super::schedule::{SchedPlan, Schedule, ScheduleBuilder, Slice};
 use crate::comm::{Comm, Pod};
@@ -31,11 +31,12 @@ impl NamedAlgorithm for Ring {
 }
 
 impl<T: Pod> CollectiveAlgorithm<T> for Ring {
-    fn plan(&self, comm: &Comm, shape: Shape) -> Result<Box<dyn AllgatherPlan<T>>> {
-        if let Some(p) = trivial_plan("ring", comm, shape) {
+    fn plan(&self, comm: &Comm, spec: &PlanSpec) -> Result<Box<dyn AllgatherPlan<T>>> {
+        if let Some(p) = trivial_plan("ring", comm, spec) {
             return Ok(p);
         }
-        let sched = build_schedule(comm.size(), comm.rank(), shape.n, std::mem::size_of::<T>());
+        let n = spec.uniform_n("ring")?;
+        let sched = build_schedule(comm.size(), comm.rank(), n, std::mem::size_of::<T>());
         Ok(SchedPlan::<T>::boxed(comm, "ring", sched)?)
     }
 }

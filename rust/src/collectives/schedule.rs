@@ -207,10 +207,10 @@ impl Schedule {
             return io;
         }
         match self.op {
-            OpKind::Allgather => (self.n, self.n * self.p),
+            OpKind::Allgather | OpKind::Allgatherv => (self.n, self.n * self.p),
             OpKind::Allreduce => (self.n, self.n),
             OpKind::Alltoall => (self.n * self.p, self.n * self.p),
-            OpKind::ReduceScatter => (self.n * self.p, self.n),
+            OpKind::ReduceScatter | OpKind::ReduceScatterV => (self.n * self.p, self.n),
         }
     }
 
@@ -1445,6 +1445,42 @@ impl<T: Pod> super::plan::AlltoallPlan<T> for SchedPlan<T> {
 impl<T: Summable> super::plan::ReduceScatterPlan<T> for SchedPlan<T> {
     fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
         check_rs_io(self.core.n, self.core.p, input, output)?;
+        self.run(input, output, Some(add_assign::<T>))
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        self.run_view(input, output, &ViewReduce::Uniform(T::KIND))
+    }
+}
+
+/// Validate execute-time buffers against the schedule's exact io lengths —
+/// the ragged plans' contract (ragged builders set an explicit
+/// [`Schedule::io`] override, so `io_lens` is byte-exact per rank).
+fn check_sched_io<T>(sched: &Schedule, input: &[T], output: &[T]) -> Result<()> {
+    let (in_len, out_len) = sched.io_lens();
+    if input.len() != in_len {
+        return Err(Error::SizeMismatch { expected: in_len, got: input.len() });
+    }
+    if output.len() != out_len {
+        return Err(Error::SizeMismatch { expected: out_len, got: output.len() });
+    }
+    Ok(())
+}
+
+impl<T: Pod> super::plan::AllgathervPlan<T> for SchedPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_sched_io(&self.sched, input, output)?;
+        self.run(input, output, None)
+    }
+
+    fn execute_view(&mut self, input: &IoView<'_>, output: &mut IoViewMut<'_>) -> Result<()> {
+        self.run_view(input, output, &ViewReduce::NotReducing)
+    }
+}
+
+impl<T: Summable> super::plan::ReduceScattervPlan<T> for SchedPlan<T> {
+    fn execute(&mut self, input: &[T], output: &mut [T]) -> Result<()> {
+        check_sched_io(&self.sched, input, output)?;
         self.run(input, output, Some(add_assign::<T>))
     }
 

@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use crate::collectives::{self, Algorithm, OpKind, Schedule, Shape};
+use crate::collectives::{self, Algorithm, Counts, OpKind, Schedule, Shape};
 use crate::comm::{Comm, CommWorld, Timing};
 use crate::error::Error;
 use crate::model::{cost, MachineParams};
@@ -347,6 +347,32 @@ fn rs_expected(rank: usize, p: usize, n: usize) -> Vec<u64> {
         .collect()
 }
 
+/// The canonical allgatherv result: every rank's
+/// [`collectives::canonical_contribution`] (sized by its count)
+/// concatenated in rank order.
+fn agv_expected(counts: &Counts) -> Vec<u64> {
+    (0..counts.len())
+        .flat_map(|r| collectives::canonical_contribution(r, counts.get(r)))
+        .collect()
+}
+
+/// The canonical reduce-scatter-v send buffer on `rank`: block `b` holds
+/// `counts[b]` elements unique per `(rank, b, j)` — the ragged analogue of
+/// [`a2a_send`].
+fn rsv_send(rank: usize, counts: &Counts) -> Vec<u64> {
+    (0..counts.len())
+        .flat_map(|b| (0..counts.get(b)).map(move |j| (rank * 1_000_003 + b * 1_009 + j) as u64))
+        .collect()
+}
+
+/// The canonical reduce-scatter-v result on `rank`: the elementwise sum of
+/// every rank's block destined here (`counts[rank]` elements).
+fn rsv_expected(rank: usize, p: usize, counts: &Counts) -> Vec<u64> {
+    (0..counts.get(rank))
+        .map(|j| (0..p).map(|r| (r * 1_000_003 + rank * 1_009 + j) as u64).sum())
+        .collect()
+}
+
 /// Shared per-rank body of every repeated op runner: plan once via
 /// `make_plan`-style closures, then barrier-separated executions recording
 /// `(start, end)` clock spans and checking against `expected`.
@@ -427,6 +453,32 @@ pub fn run_reduce_scatter(
     n: usize,
 ) -> OpReport {
     let rep = run_reduce_scatter_repeated(algo, topo, machine, n, 0, 1);
+    repeated_to_single(rep)
+}
+
+/// Run one ragged allgather (allgatherv) by registry name under the
+/// virtual-clock transport. The report's `n` is the total gathered element
+/// count (`counts.total()`).
+pub fn run_allgatherv(
+    algo: &str,
+    topo: &Topology,
+    machine: &MachineParams,
+    counts: &Counts,
+) -> OpReport {
+    let rep = run_allgatherv_repeated(algo, topo, machine, counts, 0, 1);
+    repeated_to_single(rep)
+}
+
+/// Run one ragged reduce-scatter (reduce_scatter_v) by registry name under
+/// the virtual-clock transport. The report's `n` is the total reduced
+/// element count (`counts.total()`).
+pub fn run_reduce_scatter_v(
+    algo: &str,
+    topo: &Topology,
+    machine: &MachineParams,
+    counts: &Counts,
+) -> OpReport {
+    let rep = run_reduce_scatter_v_repeated(algo, topo, machine, counts, 0, 1);
     repeated_to_single(rep)
 }
 
@@ -559,6 +611,68 @@ pub fn run_reduce_scatter_repeated(
     })
 }
 
+/// Plan once per rank, execute an allgatherv `warmup + iters` times under
+/// virtual timing (the ragged twin of [`run_allgather_repeated`]; every
+/// rank contributes `counts[rank]` elements).
+pub fn run_allgatherv_repeated(
+    algo: &str,
+    topo: &Topology,
+    machine: &MachineParams,
+    counts: &Counts,
+    warmup: usize,
+    iters: usize,
+) -> RepeatedOpReport {
+    let expected = agv_expected(counts);
+    let total_elems = counts.total();
+    run_op_repeated(
+        OpKind::Allgatherv,
+        algo,
+        topo,
+        machine,
+        total_elems,
+        warmup,
+        iters,
+        |c, total| {
+            let mut plan = collectives::plan_allgatherv::<u64>(algo, c, counts)?;
+            let sched = plan.schedule().cloned();
+            let mine = collectives::canonical_contribution(c.rank(), counts.get(c.rank()));
+            repeated_spans(c, total, &expected, sched, |_, out| plan.execute(&mine, out))
+        },
+    )
+}
+
+/// Plan once per rank, execute a reduce-scatter-v `warmup + iters` times
+/// under virtual timing (the ragged twin of
+/// [`run_reduce_scatter_repeated`]; rank `r` receives `counts[r]` reduced
+/// elements).
+pub fn run_reduce_scatter_v_repeated(
+    algo: &str,
+    topo: &Topology,
+    machine: &MachineParams,
+    counts: &Counts,
+    warmup: usize,
+    iters: usize,
+) -> RepeatedOpReport {
+    let p = topo.size();
+    let total_elems = counts.total();
+    run_op_repeated(
+        OpKind::ReduceScatterV,
+        algo,
+        topo,
+        machine,
+        total_elems,
+        warmup,
+        iters,
+        |c, total| {
+            let mut plan = collectives::plan_reduce_scatter_v::<u64>(algo, c, counts)?;
+            let sched = plan.schedule().cloned();
+            let mine = rsv_send(c.rank(), counts);
+            let expected = rsv_expected(c.rank(), p, counts);
+            repeated_spans(c, total, &expected, sched, |_, out| plan.execute(&mine, out))
+        },
+    )
+}
+
 /// Result of one fused-vs-sequential comparison run
 /// ([`run_fused`]): the same constituents executed once as a fused
 /// schedule and once back to back, with modeled times, IR predictions and
@@ -590,6 +704,13 @@ pub struct FusedReport {
     pub errors: Vec<String>,
 }
 
+/// Per-rank counts of a fused constituent: the spec's own ragged counts,
+/// or a uniform `n`-per-rank vector for the classic ops (so the ragged ops
+/// stay well-defined even on a uniform spec).
+fn spec_counts(spec: &collectives::FuseSpec, p: usize) -> Counts {
+    spec.counts.clone().unwrap_or_else(|| Counts::uniform(spec.n, p))
+}
+
 /// Canonical input of one fused constituent (u64 payloads, like the
 /// repeated runners).
 fn fused_input(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u64> {
@@ -597,6 +718,10 @@ fn fused_input(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u64> 
         OpKind::Allgather => collectives::canonical_contribution(rank, spec.n),
         OpKind::Allreduce => reduce_contribution(rank, spec.n),
         OpKind::Alltoall | OpKind::ReduceScatter => a2a_send(rank, p, spec.n),
+        OpKind::Allgatherv => {
+            collectives::canonical_contribution(rank, spec_counts(spec, p).get(rank))
+        }
+        OpKind::ReduceScatterV => rsv_send(rank, &spec_counts(spec, p)),
     }
 }
 
@@ -607,6 +732,8 @@ fn fused_expected(spec: &collectives::FuseSpec, rank: usize, p: usize) -> Vec<u6
         OpKind::Allreduce => reduce_expected(p, spec.n),
         OpKind::Alltoall => a2a_expected(rank, p, spec.n),
         OpKind::ReduceScatter => rs_expected(rank, p, spec.n),
+        OpKind::Allgatherv => agv_expected(&spec_counts(spec, p)),
+        OpKind::ReduceScatterV => rsv_expected(rank, p, &spec_counts(spec, p)),
     }
 }
 
@@ -630,7 +757,8 @@ pub fn run_fused(
     machine: &MachineParams,
 ) -> FusedReport {
     use crate::collectives::{
-        AllreduceRegistry, AlltoallRegistry, CollectivePlan, ReduceScatterRegistry, Registry,
+        AllgathervRegistry, AllreduceRegistry, AlltoallRegistry, CollectivePlan, PlanSpec,
+        ReduceScatterRegistry, ReduceScattervRegistry, Registry,
     };
     let p = topo.size();
 
@@ -690,23 +818,33 @@ pub fn run_fused(
                 let t0 = c.clock();
                 match s.op {
                     OpKind::Allgather => {
-                        let mut plan =
-                            Registry::<u64>::standard().plan(&s.algo, c, Shape::elems(s.n))?;
+                        let mut plan = Registry::<u64>::standard()
+                            .plan_uniform(&s.algo, c, Shape::elems(s.n))?;
                         plan.execute(&mine, &mut out)?;
                     }
                     OpKind::Allreduce => {
                         let mut plan = AllreduceRegistry::<u64>::standard()
-                            .plan(&s.algo, c, Shape::elems(s.n))?;
+                            .plan_uniform(&s.algo, c, Shape::elems(s.n))?;
                         plan.execute(&mine, &mut out)?;
                     }
                     OpKind::Alltoall => {
                         let mut plan = AlltoallRegistry::<u64>::standard()
-                            .plan(&s.algo, c, Shape::elems(s.n))?;
+                            .plan_uniform(&s.algo, c, Shape::elems(s.n))?;
                         plan.execute(&mine, &mut out)?;
                     }
                     OpKind::ReduceScatter => {
                         let mut plan = ReduceScatterRegistry::<u64>::standard()
-                            .plan(&s.algo, c, Shape::elems(s.n))?;
+                            .plan_uniform(&s.algo, c, Shape::elems(s.n))?;
+                        plan.execute(&mine, &mut out)?;
+                    }
+                    OpKind::Allgatherv => {
+                        let mut plan = AllgathervRegistry::<u64>::standard()
+                            .plan(&s.algo, c, &PlanSpec::ragged(spec_counts(s, p)))?;
+                        plan.execute(&mine, &mut out)?;
+                    }
+                    OpKind::ReduceScatterV => {
+                        let mut plan = ReduceScattervRegistry::<u64>::standard()
+                            .plan(&s.algo, c, &PlanSpec::ragged(spec_counts(s, p)))?;
                         plan.execute(&mine, &mut out)?;
                     }
                 }
@@ -1005,6 +1143,85 @@ mod tests {
         let bad_rs = run_reduce_scatter("recursive-halving", &Topology::regions(3, 1), &m, 1);
         assert!(!bad_rs.verified);
         assert!(!bad_rs.errors.is_empty());
+    }
+
+    #[test]
+    fn ragged_ops_verify_and_predict_exactly() {
+        // The IR cost model is schedule-generic, so the prediction==vtime
+        // invariant extends to ragged schedules — including zero-count
+        // ranks, which still participate in every round.
+        let m = MachineParams::lassen();
+        let topo = Topology::regions(4, 4);
+        let counts = Counts::new((0..topo.size()).map(|r| r % 5).collect());
+        for algo in ["ring", "bruck", "loc-aware", "model-tuned"] {
+            let r = run_allgatherv(algo, &topo, &m, &counts);
+            assert!(r.verified, "allgatherv/{algo}: {:?}", r.errors);
+            assert!(
+                (r.predicted - r.vtime).abs() < 1e-12,
+                "allgatherv/{algo}: predicted {:.6e} vs vtime {:.6e}",
+                r.predicted,
+                r.vtime
+            );
+        }
+        for algo in ["ring", "loc-aware", "model-tuned"] {
+            let r = run_reduce_scatter_v(algo, &topo, &m, &counts);
+            assert!(r.verified, "reduce-scatter-v/{algo}: {:?}", r.errors);
+            assert!(
+                (r.predicted - r.vtime).abs() < 1e-12,
+                "reduce-scatter-v/{algo}: predicted {:.6e} vs vtime {:.6e}",
+                r.predicted,
+                r.vtime
+            );
+        }
+    }
+
+    #[test]
+    fn ragged_repeated_runs_match_single_shot() {
+        let m = MachineParams::lassen();
+        let topo = Topology::regions(2, 8);
+        let counts = Counts::new((0..topo.size()).map(|r| (r * 3) % 7).collect());
+        let single = run_allgatherv("loc-aware", &topo, &m, &counts);
+        let rep = run_allgatherv_repeated("loc-aware", &topo, &m, &counts, 1, 3);
+        assert!(single.verified && rep.verified, "{:?}", rep.errors);
+        assert_eq!(rep.per_iter_vtime.len(), 3);
+        for &dt in &rep.per_iter_vtime {
+            assert!((dt - single.vtime).abs() < 1e-12, "{dt} vs single {}", single.vtime);
+        }
+        let rs_single = run_reduce_scatter_v("ring", &topo, &m, &counts);
+        let rs_rep = run_reduce_scatter_v_repeated("ring", &topo, &m, &counts, 1, 3);
+        assert!(rs_single.verified && rs_rep.verified, "{:?}", rs_rep.errors);
+        assert!((rs_single.vtime - rs_rep.median_vtime).abs() < 1e-12);
+        // unknown algorithms are reported, not panicked
+        let bad = run_allgatherv("no-such-algo", &topo, &m, &counts);
+        assert!(!bad.verified);
+        assert!(!bad.errors.is_empty());
+    }
+
+    #[test]
+    fn fused_run_accepts_ragged_constituents() {
+        use crate::collectives::FuseSpec;
+        let topo = Topology::regions(2, 2);
+        let m = MachineParams::lassen();
+        let counts = Counts::new(vec![3, 0, 2, 1]);
+        let specs = vec![
+            FuseSpec::ragged(OpKind::Allgatherv, "bruck", counts.clone()),
+            FuseSpec::new(OpKind::Allreduce, "loc-aware", 2),
+            FuseSpec::ragged(OpKind::ReduceScatterV, "ring", counts),
+        ];
+        let rep = run_fused(&specs, &topo, &m);
+        assert!(rep.verified, "{:?}", rep.errors);
+        assert!(
+            (rep.fused_predicted - rep.fused_vtime).abs() < 1e-12,
+            "predicted {:.6e} vs vtime {:.6e}",
+            rep.fused_predicted,
+            rep.fused_vtime
+        );
+        assert!(
+            (rep.seq_predicted - rep.seq_vtime).abs() < 1e-12,
+            "seq predicted {:.6e} vs vtime {:.6e}",
+            rep.seq_predicted,
+            rep.seq_vtime
+        );
     }
 
     #[test]

@@ -55,6 +55,14 @@
 //! [`run_proc`] wraps one spawn → load → execute → shutdown cycle for
 //! single-shot callers like the conformance tests.
 //!
+//! Ragged collectives ship as [`ProcJob::SingleV`]: the job spec carries
+//! the full per-rank `counts` vector (zeros allowed), every worker
+//! rebuilds its own counts-aware schedule from it, and buffer sizes
+//! follow the ragged contract — `counts[rank]` elements in and the total
+//! out for allgatherv, the transpose for reduce-scatter-v — so the
+//! pool validates input deltas per rank ([`ProcJob::io_bytes_rank`])
+//! instead of against one uniform size.
+//!
 //! Workers interpret schedules step-for-step with the exact semantics of
 //! the in-process executor (eager sends, FIFO matching per (source, tag),
 //! identical pad-byte framing), which keeps outputs **bit-identical**
@@ -209,6 +217,11 @@ impl DType {
 pub enum ProcJob {
     /// A single (operation, algorithm) collective.
     Single { op: OpKind, algo: String, n: usize, elem_bytes: usize },
+    /// A single ragged collective (`allgatherv` / `reduce-scatter-v`) at
+    /// explicit per-rank `counts` (zeros allowed). Unlike every other job
+    /// kind, the per-rank input/output sizes differ — see
+    /// [`ProcJob::io_bytes_rank`].
+    SingleV { op: OpKind, algo: String, counts: Vec<usize>, elem_bytes: usize },
     /// A fused multi-collective plan at an explicit element type.
     Fused { specs: Vec<FuseSpec>, dtype: DType },
     /// A fused plan whose constituents carry **different** element types
@@ -229,26 +242,44 @@ impl ProcJob {
     /// byte.
     pub fn elem_bytes(&self) -> usize {
         match self {
-            ProcJob::Single { elem_bytes, .. } => *elem_bytes,
+            ProcJob::Single { elem_bytes, .. } | ProcJob::SingleV { elem_bytes, .. } => {
+                *elem_bytes
+            }
             ProcJob::Fused { dtype, .. } => dtype.bytes(),
             ProcJob::FusedMixed { .. } => 1,
         }
     }
 
-    /// Per-rank (input, output) buffer sizes in bytes for a `p`-rank
-    /// world — the contract the pool validates input deltas against
-    /// before anything crosses the control path.
+    /// Rank 0's (input, output) buffer sizes in bytes for a `p`-rank
+    /// world. Every rank agrees for the uniform job kinds; for ragged
+    /// jobs (`SingleV`, fused ragged constituents) use
+    /// [`ProcJob::io_bytes_rank`], which this delegates to.
     pub fn io_bytes(&self, p: usize) -> (usize, usize) {
+        self.io_bytes_rank(0, p)
+    }
+
+    /// One rank's (input, output) buffer sizes in bytes — the contract
+    /// the pool validates input deltas against before anything crosses
+    /// the control path. Ragged jobs size each rank by its own count.
+    pub fn io_bytes_rank(&self, rank: usize, p: usize) -> (usize, usize) {
         let eb = self.elem_bytes();
         match self {
             ProcJob::Single { op, n, .. } => {
                 let (i, o) = op.io_elems(*n, p);
                 (i * eb, o * eb)
             }
+            ProcJob::SingleV { op, counts, .. } => {
+                let total: usize = counts.iter().sum();
+                let mine = counts.get(rank).copied().unwrap_or(0);
+                match op {
+                    OpKind::ReduceScatterV => (total * eb, mine * eb),
+                    _ => (mine * eb, total * eb),
+                }
+            }
             ProcJob::Fused { specs, .. } => {
                 let (mut i, mut o) = (0usize, 0usize);
                 for s in specs {
-                    let (si, so) = s.op.io_elems(s.n, p);
+                    let (si, so) = s.io_elems(rank, p);
                     i += si;
                     o += so;
                 }
@@ -257,7 +288,7 @@ impl ProcJob {
             ProcJob::FusedMixed { specs } => {
                 let (mut i, mut o) = (0usize, 0usize);
                 for (s, dt) in specs {
-                    let (si, so) = s.op.io_elems(s.n, p);
+                    let (si, so) = s.io_elems(rank, p);
                     i += si * dt.bytes();
                     o += so * dt.bytes();
                 }
@@ -319,12 +350,44 @@ pub fn canonical_elems(op: OpKind, rank: usize, p: usize, n: usize) -> Vec<u64> 
             .map(|x| (rank * 1_000_003 + (x / n.max(1)) * 1_009) as u64 + (x % n.max(1)) as u64)
             .collect(),
         OpKind::ReduceScatter => (0..n * p).map(|j| (rank * 131_071 + j) as u64).collect(),
+        // Uniform spelling of the ragged ops: `n` elements on every rank.
+        OpKind::Allgatherv | OpKind::ReduceScatterV => {
+            canonical_elems_v(op, rank, &vec![n; p])
+        }
     }
 }
 
-/// [`canonical_elems`] encoded as native bytes at `dtype` (integer values
-/// are truncated or cast into the element type; both conversions are
+/// Canonical per-rank input elements for the ragged ops at explicit
+/// per-rank `counts` — the same generators the sim-side runners and the
+/// ragged conformance suites use. Allgatherv inputs are this rank's
+/// `counts[rank]`-element contribution; reduce-scatter-v inputs carry one
+/// `counts[b]`-element block per destination `b`.
+pub fn canonical_elems_v(op: OpKind, rank: usize, counts: &[usize]) -> Vec<u64> {
+    match op {
+        OpKind::Allgatherv => (0..counts.get(rank).copied().unwrap_or(0))
+            .map(|j| (rank * 1_000_003 + j) as u64)
+            .collect(),
+        OpKind::ReduceScatterV => counts
+            .iter()
+            .enumerate()
+            .flat_map(|(b, &c)| (0..c).map(move |j| (rank * 1_000_003 + b * 1_009 + j) as u64))
+            .collect(),
+        other => panic!("{other} is not a ragged operation"),
+    }
+}
+
+/// `elems` encoded as native bytes at `dtype` (integer values are
+/// truncated or cast into the element type; both conversions are
 /// deterministic, so every backend derives identical bytes).
+fn encode_dtype(elems: &[u64], dtype: DType) -> Vec<u8> {
+    match dtype {
+        DType::U32 => to_bytes(&elems.iter().map(|&v| v as u32).collect::<Vec<u32>>()),
+        DType::U64 => to_bytes(elems),
+        DType::F32 => to_bytes(&elems.iter().map(|&v| v as f32).collect::<Vec<f32>>()),
+    }
+}
+
+/// [`canonical_elems`] encoded as native bytes at `dtype`.
 pub fn canonical_input_bytes_dtype(
     op: OpKind,
     rank: usize,
@@ -332,11 +395,31 @@ pub fn canonical_input_bytes_dtype(
     n: usize,
     dtype: DType,
 ) -> Vec<u8> {
-    let elems = canonical_elems(op, rank, p, n);
-    match dtype {
-        DType::U32 => to_bytes(&elems.iter().map(|&v| v as u32).collect::<Vec<u32>>()),
-        DType::U64 => to_bytes(&elems),
-        DType::F32 => to_bytes(&elems.iter().map(|&v| v as f32).collect::<Vec<f32>>()),
+    encode_dtype(&canonical_elems(op, rank, p, n), dtype)
+}
+
+/// [`canonical_elems_v`] encoded at the integer dtype implied by
+/// `elem_bytes` — the [`ProcJob::SingleV`] convention.
+pub fn canonical_input_bytes_v(
+    op: OpKind,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+) -> Vec<u8> {
+    let dtype = match elem_bytes {
+        4 => DType::U32,
+        8 => DType::U64,
+        other => panic!("unsupported element size {other} for the proc backend"),
+    };
+    encode_dtype(&canonical_elems_v(op, rank, counts), dtype)
+}
+
+/// Canonical elements for one fused constituent: ragged specs use their
+/// per-rank counts, uniform specs the flat generators.
+fn canonical_fuse_elems(s: &FuseSpec, rank: usize, p: usize) -> Vec<u64> {
+    match &s.counts {
+        Some(c) => canonical_elems_v(s.op, rank, c.as_slice()),
+        None => canonical_elems(s.op, rank, p, s.n),
     }
 }
 
@@ -368,8 +451,8 @@ pub fn canonical_fused_mixed_input_bytes(
 ) -> Vec<u8> {
     let mut acc = Vec::new();
     for (s, dt) in specs {
-        let (take, _) = s.op.io_elems(s.n, p);
-        let bytes = canonical_input_bytes_dtype(s.op, rank, p, s.n, *dt);
+        let (take, _) = s.io_elems(rank, p);
+        let bytes = encode_dtype(&canonical_fuse_elems(s, rank, p), *dt);
         acc.extend_from_slice(&bytes[..take * dt.bytes()]);
     }
     acc
@@ -387,6 +470,10 @@ pub fn build_rank_schedule(
     elem_bytes: usize,
     machine: &MachineParams,
 ) -> Result<Schedule> {
+    // The ragged ops' uniform spelling: `n` elements on every rank.
+    if matches!(op, OpKind::Allgatherv | OpKind::ReduceScatterV) {
+        return build_rank_schedule_v(op, algo, view, rank, &vec![n; view.p], elem_bytes, machine);
+    }
     if algo.eq_ignore_ascii_case("model-tuned") {
         let (_, mut scheds) = match op {
             OpKind::Allgather => model_tuned::pick_allgather(view, machine, n, elem_bytes)?,
@@ -395,6 +482,7 @@ pub fn build_rank_schedule(
             OpKind::ReduceScatter => {
                 model_tuned::pick_reduce_scatter(view, machine, n, elem_bytes)?
             }
+            OpKind::Allgatherv | OpKind::ReduceScatterV => unreachable!("handled above"),
         };
         return Ok(scheds.swap_remove(rank));
     }
@@ -417,6 +505,43 @@ pub fn build_rank_schedule(
         OpKind::ReduceScatter => {
             crate::collectives::schedule::build_reduce_scatter(algo, view, rank, n, elem_bytes)
         }
+        OpKind::Allgatherv | OpKind::ReduceScatterV => unreachable!("handled above"),
+    }
+}
+
+/// [`build_rank_schedule`]'s ragged sibling: build one rank's schedule
+/// for the counts-aware operations at explicit per-rank `counts`.
+pub fn build_rank_schedule_v(
+    op: OpKind,
+    algo: &str,
+    view: &WorldView,
+    rank: usize,
+    counts: &[usize],
+    elem_bytes: usize,
+    machine: &MachineParams,
+) -> Result<Schedule> {
+    if algo.eq_ignore_ascii_case("model-tuned") {
+        let (_, mut scheds) = match op {
+            OpKind::Allgatherv => {
+                model_tuned::pick_allgatherv(view, machine, counts, elem_bytes)?
+            }
+            OpKind::ReduceScatterV => {
+                model_tuned::pick_reduce_scatter_v(view, machine, counts, elem_bytes)?
+            }
+            other => {
+                return Err(Error::Precondition(format!("{other} is not a ragged operation")))
+            }
+        };
+        return Ok(scheds.swap_remove(rank));
+    }
+    match op {
+        OpKind::Allgatherv => {
+            crate::collectives::allgatherv::build_allgatherv(algo, view, rank, counts, elem_bytes)
+        }
+        OpKind::ReduceScatterV => crate::collectives::reduce_scatter_v::build_reduce_scatter_v(
+            algo, view, rank, counts, elem_bytes,
+        ),
+        other => Err(Error::Precondition(format!("{other} is not a ragged operation"))),
     }
 }
 
@@ -458,6 +583,56 @@ fn sim_single<T: Summable>(
         OpKind::ReduceScatter => {
             crate::collectives::plan::ReduceScatterPlan::execute(&mut plan, &input, &mut output)?
         }
+        OpKind::Allgatherv => {
+            crate::collectives::plan::AllgathervPlan::execute(&mut plan, &input, &mut output)?
+        }
+        OpKind::ReduceScatterV => {
+            crate::collectives::plan::ReduceScattervPlan::execute(&mut plan, &input, &mut output)?
+        }
+    }
+    Ok(to_bytes(&output))
+}
+
+fn sim_single_v<T: Summable>(
+    comm: &Comm,
+    op: OpKind,
+    algo: &str,
+    counts: &[usize],
+    machine: &MachineParams,
+    input_override: Option<&[u8]>,
+) -> Result<Vec<u8>> {
+    let rank = comm.rank();
+    let p = comm.size();
+    if counts.len() != p {
+        return Err(Error::Precondition(format!(
+            "counts list {} ranks for a {p}-rank world",
+            counts.len()
+        )));
+    }
+    if counts.iter().all(|&c| c == 0) {
+        // Ragged zero-length contract: no traffic, empty output.
+        return Ok(Vec::new());
+    }
+    let eb = std::mem::size_of::<T>();
+    let view = WorldView::from_comm(comm);
+    let sched = build_rank_schedule_v(op, algo, &view, rank, counts, eb, machine)?;
+    let input_bytes = match input_override {
+        Some(b) => b.to_vec(),
+        None => canonical_input_bytes_v(op, rank, counts, eb),
+    };
+    let input: Vec<T> = from_bytes(&input_bytes)
+        .ok_or_else(|| Error::Precondition("input bytes are not whole elements".into()))?;
+    let (_, out_elems) = sched.io_lens();
+    let mut output = vec![T::default(); out_elems];
+    let mut plan = SchedPlan::<T>::new(comm, "proc-ref", sched)?;
+    match op {
+        OpKind::Allgatherv => {
+            crate::collectives::plan::AllgathervPlan::execute(&mut plan, &input, &mut output)?
+        }
+        OpKind::ReduceScatterV => {
+            crate::collectives::plan::ReduceScattervPlan::execute(&mut plan, &input, &mut output)?
+        }
+        other => return Err(Error::Precondition(format!("{other} is not a ragged operation"))),
     }
     Ok(to_bytes(&output))
 }
@@ -486,8 +661,8 @@ fn sim_fused<T: Summable>(
         None => {
             let mut acc: Vec<T> = Vec::new();
             for s in specs {
-                let elems = canonical_elems(s.op, rank, p, s.n);
-                let (take, _) = s.op.io_elems(s.n, p);
+                let elems = canonical_fuse_elems(s, rank, p);
+                let (take, _) = s.io_elems(rank, p);
                 acc.extend(elems[..take].iter().map(|&v| conv(v)));
             }
             acc
@@ -546,7 +721,7 @@ fn sim_fused_mixed(
     let mut iv = IoView::new();
     let mut off = 0usize;
     for (s, dt) in specs {
-        let (si, _) = s.op.io_elems(s.n, p);
+        let (si, _) = s.io_elems(rank, p);
         let bytes = si * dt.bytes();
         if off + bytes > input_bytes.len() {
             return Err(Error::Precondition(format!(
@@ -567,7 +742,7 @@ fn sim_fused_mixed(
     let mut outs: Vec<Vec<u8>> = specs
         .iter()
         .map(|(s, dt)| {
-            let (_, so) = s.op.io_elems(s.n, p);
+            let (_, so) = s.io_elems(rank, p);
             vec![0u8; so * dt.bytes()]
         })
         .collect();
@@ -614,6 +789,13 @@ fn run_sim(
             ProcJob::Single { op, algo, n, elem_bytes } => match elem_bytes {
                 4 => sim_single::<u32>(comm, *op, algo, *n, machine, inp),
                 8 => sim_single::<u64>(comm, *op, algo, *n, machine, inp),
+                other => Err(Error::Precondition(format!(
+                    "unsupported element size {other} for the proc backend"
+                ))),
+            },
+            ProcJob::SingleV { op, algo, counts, elem_bytes } => match elem_bytes {
+                4 => sim_single_v::<u32>(comm, *op, algo, counts, machine, inp),
+                8 => sim_single_v::<u64>(comm, *op, algo, counts, machine, inp),
                 other => Err(Error::Precondition(format!(
                     "unsupported element size {other} for the proc backend"
                 ))),
@@ -705,6 +887,84 @@ mod tests {
         ]);
         assert_eq!(fused.elem_bytes(), 8);
         assert_eq!(fused.io_bytes(4), ((2 + 4) * 8, (2 * 4 + 4) * 8));
+    }
+
+    #[test]
+    fn ragged_job_io_bytes_follow_the_counts() {
+        let job = ProcJob::SingleV {
+            op: OpKind::Allgatherv,
+            algo: "ring".into(),
+            counts: vec![3, 0, 2, 1],
+            elem_bytes: 8,
+        };
+        assert_eq!(job.io_bytes_rank(0, 4), (3 * 8, 6 * 8));
+        assert_eq!(job.io_bytes_rank(1, 4), (0, 6 * 8));
+        assert_eq!(job.io_bytes(4), job.io_bytes_rank(0, 4));
+        let rsv = ProcJob::SingleV {
+            op: OpKind::ReduceScatterV,
+            algo: "ring".into(),
+            counts: vec![3, 0, 2, 1],
+            elem_bytes: 4,
+        };
+        assert_eq!(rsv.io_bytes_rank(2, 4), (6 * 4, 2 * 4));
+        assert_eq!(rsv.io_bytes_rank(1, 4), (6 * 4, 0));
+    }
+
+    #[test]
+    fn sim_reference_runs_ragged_jobs() {
+        let counts = vec![3usize, 0, 2, 1];
+        let job = ProcJob::SingleV {
+            op: OpKind::Allgatherv,
+            algo: "loc-aware".into(),
+            counts: counts.clone(),
+            elem_bytes: 8,
+        };
+        let outs = run_sim_bytes(2, 2, &job, &MachineParams::lassen()).unwrap();
+        let mut gathered: Vec<u64> = Vec::new();
+        for r in 0..4 {
+            gathered.extend(canonical_elems_v(OpKind::Allgatherv, r, &counts));
+        }
+        assert_eq!(gathered.len(), 6);
+        for out in &outs {
+            let got: Vec<u64> = from_bytes(out).unwrap();
+            assert_eq!(got, gathered);
+        }
+        let job = ProcJob::SingleV {
+            op: OpKind::ReduceScatterV,
+            algo: "ring".into(),
+            counts: counts.clone(),
+            elem_bytes: 8,
+        };
+        let outs = run_sim_bytes(2, 2, &job, &MachineParams::lassen()).unwrap();
+        for (rank, out) in outs.iter().enumerate() {
+            let got: Vec<u64> = from_bytes(out).unwrap();
+            let expected: Vec<u64> = (0..counts[rank])
+                .map(|j| (0..4).map(|r| (r * 1_000_003 + rank * 1_009 + j) as u64).sum())
+                .collect();
+            assert_eq!(got, expected, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn build_rank_schedule_v_resolves_model_tuned_and_rejects_flat_ops() {
+        let topo = Topology::regions(2, 4);
+        let view = WorldView::world(&topo);
+        let m = MachineParams::lassen();
+        let counts: Vec<usize> = (0..8).map(|r| r % 3).collect();
+        let s = build_rank_schedule_v(OpKind::Allgatherv, "model-tuned", &view, 0, &counts, 8, &m)
+            .unwrap();
+        assert_eq!(s.p, 8);
+        assert!(s.validate().is_ok());
+        let s =
+            build_rank_schedule_v(OpKind::ReduceScatterV, "loc-aware", &view, 3, &counts, 8, &m)
+                .unwrap();
+        assert!(s.validate().is_ok());
+        assert!(
+            build_rank_schedule_v(OpKind::Allgather, "ring", &view, 0, &counts, 8, &m).is_err()
+        );
+        // The uniform entry point spells a ragged op as equal counts.
+        let u = build_rank_schedule(OpKind::Allgatherv, "ring", &view, 0, 2, 8, &m).unwrap();
+        assert_eq!(u.io_lens(), (2, 16));
     }
 
     #[test]

@@ -104,6 +104,10 @@ fn job_spec(job: &ProcJob) -> String {
         ProcJob::Single { op, algo, n, elem_bytes } => {
             format!("single {} {} {} {}", op.name(), algo, n, elem_bytes)
         }
+        ProcJob::SingleV { op, algo, counts, elem_bytes } => {
+            let counts: Vec<String> = counts.iter().map(usize::to_string).collect();
+            format!("singlev {} {} {} {}", op.name(), algo, counts.join(","), elem_bytes)
+        }
         ProcJob::Fused { specs, dtype } => {
             let labels: Vec<String> = specs.iter().map(|s| s.label()).collect();
             format!("fused {} {}", dtype.name(), labels.join(";"))
@@ -140,8 +144,9 @@ pub struct ProcPool {
     p: usize,
     deadline: Duration,
     next_sid: u64,
-    /// Per-schedule (input, output) byte sizes for delta validation.
-    loaded: BTreeMap<u64, (usize, usize)>,
+    /// Per-schedule, per-rank input byte sizes for delta validation
+    /// (ragged jobs size each rank by its own count).
+    loaded: BTreeMap<u64, Vec<usize>>,
     /// Schedule id of a begun-but-not-finished execute, if any.
     in_flight: Option<u64>,
     poisoned: Option<String>,
@@ -343,7 +348,7 @@ impl ProcPool {
                 }
             }
         }
-        self.loaded.insert(sid, job.io_bytes(self.p));
+        self.loaded.insert(sid, (0..self.p).map(|r| job.io_bytes_rank(r, self.p).0).collect());
         self.stats.loads += 1;
         Ok(sid)
     }
@@ -395,7 +400,7 @@ impl ProcPool {
                 format!("an execute of schedule {pending} is already in flight on this pool"),
             ));
         }
-        let Some(&(in_bytes, _)) = self.loaded.get(&sid) else {
+        let Some(in_bytes) = self.loaded.get(&sid) else {
             // Caught parent-side, before anything crosses the control
             // path — a stale id never poisons the pool.
             return Err(transport_err(
@@ -413,10 +418,11 @@ impl ProcPool {
                 )));
             }
             for (rank, b) in ins.iter().enumerate() {
-                if b.len() != in_bytes {
+                if b.len() != in_bytes[rank] {
                     return Err(Error::Precondition(format!(
-                        "rank {rank} input is {} bytes, schedule {sid} expects {in_bytes}",
-                        b.len()
+                        "rank {rank} input is {} bytes, schedule {sid} expects {}",
+                        b.len(),
+                        in_bytes[rank]
                     )));
                 }
             }
@@ -797,6 +803,13 @@ mod tests {
             elem_bytes: 4,
         };
         assert_eq!(job_spec(&single), "single allgather loc-aware 16 4");
+        let ragged = ProcJob::SingleV {
+            op: OpKind::Allgatherv,
+            algo: "loc-aware".into(),
+            counts: vec![4, 0, 7, 2],
+            elem_bytes: 8,
+        };
+        assert_eq!(job_spec(&ragged), "singlev allgatherv loc-aware 4,0,7,2 8");
         let fused = ProcJob::Fused {
             specs: vec![
                 FuseSpec::new(OpKind::Allgather, "bruck", 2),

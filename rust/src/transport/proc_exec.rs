@@ -34,13 +34,13 @@ use super::chan::{
     CTL_READY, CTL_SHUTDOWN,
 };
 use super::{
-    canonical_fused_mixed_input_bytes, canonical_input_bytes, canonical_input_bytes_dtype, DType,
+    canonical_fused_mixed_input_bytes, canonical_input_bytes, canonical_input_bytes_v, DType,
     DEFAULT_POOL_RING_BYTES,
 };
 use crate::cli::args::Args;
 use crate::collectives::fuse::{self, FuseSpec};
 use crate::collectives::schedule::WorldView;
-use crate::collectives::{BufId, ElemKind, OpKind, Schedule, Slice, Step};
+use crate::collectives::{BufId, Counts, ElemKind, OpKind, Schedule, Slice, Step};
 use crate::model::params::MachineParams;
 use crate::topology::{Locality, Topology};
 
@@ -215,6 +215,11 @@ fn parse_fuse_label(s: &str) -> std::result::Result<FuseSpec, String> {
     let (head, n) = s.rsplit_once('@').ok_or_else(|| format!("bad fuse spec '{s}'"))?;
     let (op, algo) = head.split_once('/').ok_or_else(|| format!("bad fuse spec '{s}'"))?;
     let op = OpKind::parse_or_err(op).map_err(|e| e.to_string())?;
+    // Ragged constituents spell their per-rank counts as `@[c0,c1,...]`.
+    if let Some(list) = n.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+        let counts = Counts::parse(list).map_err(|e| e.to_string())?;
+        return Ok(FuseSpec::ragged(op, algo, counts));
+    }
     let n: usize = n.parse().map_err(|_| format!("bad fuse spec '{s}'"))?;
     Ok(FuseSpec::new(op, algo, n))
 }
@@ -524,6 +529,7 @@ struct PlanState {
 
 impl PlanState {
     /// Build a plan from a pool job spec — `single {op} {algo} {n} {eb}`,
+    /// `singlev {op} {algo} {c0,c1,...} {eb}` (ragged per-rank counts),
     /// `fused {dtype} {label;label;...}` or
     /// `fusedmix {dtype:label;dtype:label;...}` — seeding the input buffer
     /// with the canonical payload and admission-checking the schedule's
@@ -555,6 +561,39 @@ impl PlanState {
                     )
                 }
             }
+            ["singlev", op, algo, counts, eb] => {
+                let op = OpKind::parse_or_err(op).map_err(|e| e.to_string())?;
+                let counts = Counts::parse(counts).map_err(|e| e.to_string())?;
+                if counts.len() != p {
+                    return Err(format!(
+                        "job spec lists {} counts for a {p}-rank world",
+                        counts.len()
+                    ));
+                }
+                let eb: usize =
+                    eb.parse().map_err(|_| format!("bad element size in job spec '{spec}'"))?;
+                let dtype = DType::for_elem_bytes(eb).map_err(|e| e.to_string())?;
+                if counts.total() == 0 {
+                    // Ragged zero-length contract: no traffic, empty output.
+                    (None, Vec::new(), ReduceDtype::Uniform(dtype))
+                } else {
+                    let sched = super::build_rank_schedule_v(
+                        op,
+                        algo,
+                        &view,
+                        me,
+                        counts.as_slice(),
+                        eb,
+                        &cfg.machine,
+                    )
+                    .map_err(|e| e.to_string())?;
+                    (
+                        Some(sched),
+                        canonical_input_bytes_v(op, me, counts.as_slice(), eb),
+                        ReduceDtype::Uniform(dtype),
+                    )
+                }
+            }
             ["fused", dt, labels] => {
                 let dtype = DType::parse_or_err(dt).map_err(|e| e.to_string())?;
                 let specs: Vec<FuseSpec> = labels
@@ -568,8 +607,9 @@ impl PlanState {
                 let sched = scheds.swap_remove(me);
                 let mut input = Vec::new();
                 for s in &specs {
-                    input.extend_from_slice(&canonical_input_bytes_dtype(
-                        s.op, me, p, s.n, dtype,
+                    input.extend_from_slice(&super::encode_dtype(
+                        &super::canonical_fuse_elems(s, me, p),
+                        dtype,
                     ));
                 }
                 (Some(sched), input, ReduceDtype::Uniform(dtype))
@@ -595,7 +635,7 @@ impl PlanState {
                 let mut out_windows = Vec::new();
                 let mut off = 0usize;
                 for (s, dt) in &specs {
-                    let (_, so) = s.op.io_elems(s.n, p);
+                    let (_, so) = s.io_elems(me, p);
                     let bytes = so * dt.bytes();
                     if bytes > 0 {
                         out_windows.push((off, off + bytes, *dt));
@@ -1035,6 +1075,42 @@ mod tests {
         assert!(PlanState::build(&cfg, "single allgather bruck 3").is_err());
         assert!(PlanState::build(&cfg, "fused i8 allgather/bruck@2").is_err());
         assert!(PlanState::build(&cfg, "warble").is_err());
+    }
+
+    #[test]
+    fn ragged_fuse_labels_roundtrip() {
+        let spec =
+            FuseSpec::ragged(OpKind::Allgatherv, "bruck", Counts::new(vec![4, 0, 7, 2]));
+        let parsed = parse_fuse_label(&spec.label()).unwrap();
+        assert_eq!(parsed.op, OpKind::Allgatherv);
+        assert_eq!(parsed.algo, "bruck");
+        assert_eq!(parsed.counts, Some(Counts::new(vec![4, 0, 7, 2])));
+        assert!(parse_fuse_label("allgatherv/bruck@[4,0,x]").is_err());
+        assert!(parse_fuse_label("allgatherv/bruck@[4,0,7,2").is_err());
+    }
+
+    #[test]
+    fn plan_state_builds_ragged_specs() {
+        let cfg = test_cfg(2, 2, 0, DEFAULT_POOL_RING_BYTES);
+        let st = PlanState::build(&cfg, "singlev allgatherv ring 3,0,2,1 8").unwrap();
+        assert_eq!(st.rdtype, ReduceDtype::Uniform(DType::U64));
+        assert_eq!(st.input.len(), 3 * 8);
+        assert_eq!(st.output.len(), 6 * 8);
+
+        let st =
+            PlanState::build(&cfg, "singlev reduce-scatter-v loc-aware 3,0,2,1 8").unwrap();
+        assert_eq!(st.input.len(), 6 * 8);
+        assert_eq!(st.output.len(), 3 * 8);
+
+        // All-zero counts have no schedule and empty buffers.
+        let st = PlanState::build(&cfg, "singlev allgatherv ring 0,0,0,0 8").unwrap();
+        assert!(st.sched.is_none());
+        assert!(st.input.is_empty() && st.output.is_empty());
+
+        // Rejections: count-list length, bad token, a flat operation.
+        assert!(PlanState::build(&cfg, "singlev allgatherv ring 3,0,2 8").is_err());
+        assert!(PlanState::build(&cfg, "singlev allgatherv ring 3,x,2,1 8").is_err());
+        assert!(PlanState::build(&cfg, "singlev allgather ring 3,0,2,1 8").is_err());
     }
 
     #[test]

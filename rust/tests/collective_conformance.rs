@@ -17,11 +17,12 @@
 use std::collections::BTreeSet;
 
 use locag::collectives::{
-    canonical_contribution, expected_result, AllreduceRegistry, AlltoallRegistry, OpKind,
-    ReduceScatterRegistry, Registry, Schedule, Shape,
+    canonical_contribution, expected_result, AllgathervRegistry, AllreduceRegistry,
+    AlltoallRegistry, Counts, OpKind, PlanSpec, ReduceScatterRegistry, ReduceScattervRegistry,
+    Registry, Schedule, Shape,
 };
 use locag::comm::{CommWorld, Timing};
-use locag::model::cost;
+use locag::model::{cost, MachineParams};
 use locag::topology::Topology;
 use locag::trace::RankTrace;
 
@@ -85,7 +86,7 @@ fn run_grid_point(regions: usize, ppr: usize, n: usize) -> Vec<Vec<Outcome>> {
 
         let reg = Registry::<u64>::standard();
         for name in reg.names() {
-            let err = match reg.plan(name, c, Shape::elems(n)) {
+            let err = match reg.plan_uniform(name, c, Shape::elems(n)) {
                 Err(e) => Some(e.to_string()),
                 Ok(mut plan) => {
                     assert_eq!(plan.algorithm(), name);
@@ -108,7 +109,7 @@ fn run_grid_point(regions: usize, ppr: usize, n: usize) -> Vec<Vec<Outcome>> {
 
         let reg = AllreduceRegistry::<u64>::standard();
         for name in reg.names() {
-            let err = match reg.plan(name, c, Shape::elems(n)) {
+            let err = match reg.plan_uniform(name, c, Shape::elems(n)) {
                 Err(e) => Some(e.to_string()),
                 Ok(mut plan) => {
                     assert_eq!(plan.algorithm(), name);
@@ -130,7 +131,7 @@ fn run_grid_point(regions: usize, ppr: usize, n: usize) -> Vec<Vec<Outcome>> {
 
         let reg = AlltoallRegistry::<u64>::standard();
         for name in reg.names() {
-            let err = match reg.plan(name, c, Shape::elems(n)) {
+            let err = match reg.plan_uniform(name, c, Shape::elems(n)) {
                 Err(e) => Some(e.to_string()),
                 Ok(mut plan) => {
                     assert_eq!(plan.algorithm(), name);
@@ -152,7 +153,7 @@ fn run_grid_point(regions: usize, ppr: usize, n: usize) -> Vec<Vec<Outcome>> {
 
         let reg = ReduceScatterRegistry::<u64>::standard();
         for name in reg.names() {
-            let err = match reg.plan(name, c, Shape::elems(n)) {
+            let err = match reg.plan_uniform(name, c, Shape::elems(n)) {
                 Err(e) => Some(e.to_string()),
                 Ok(mut plan) => {
                     assert_eq!(plan.algorithm(), name);
@@ -252,7 +253,7 @@ fn run_one_pair(
         match op {
             OpKind::Allgather => {
                 let reg = Registry::<u64>::standard();
-                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let mut plan = reg.plan_uniform(name, c, Shape::elems(n)).ok()?;
                 let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
                 let mine = canonical_contribution(c.rank(), n);
                 let mut out = vec![0u64; n * p];
@@ -261,7 +262,7 @@ fn run_one_pair(
             }
             OpKind::Allreduce => {
                 let reg = AllreduceRegistry::<u64>::standard();
-                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let mut plan = reg.plan_uniform(name, c, Shape::elems(n)).ok()?;
                 let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
                 let mine = ar_contribution(c.rank(), n);
                 let mut out = vec![0u64; n];
@@ -270,7 +271,7 @@ fn run_one_pair(
             }
             OpKind::Alltoall => {
                 let reg = AlltoallRegistry::<u64>::standard();
-                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let mut plan = reg.plan_uniform(name, c, Shape::elems(n)).ok()?;
                 let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
                 let mine = a2a_send(c.rank(), p, n);
                 let mut out = vec![0u64; n * p];
@@ -279,7 +280,7 @@ fn run_one_pair(
             }
             OpKind::ReduceScatter => {
                 let reg = ReduceScatterRegistry::<u64>::standard();
-                let mut plan = reg.plan(name, c, Shape::elems(n)).ok()?;
+                let mut plan = reg.plan_uniform(name, c, Shape::elems(n)).ok()?;
                 let sched = plan.schedule().expect("n > 0 plans carry a schedule").clone();
                 let mine = a2a_send(c.rank(), p, n);
                 let mut out = vec![0u64; n];
@@ -337,10 +338,10 @@ fn rejections_send_no_messages() {
     let topo = Topology::regions(3, 2); // p = 6, non-power-of-two
     let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
         let ag = Registry::<u64>::standard()
-            .plan("recursive-doubling", c, Shape::elems(2))
+            .plan_uniform("recursive-doubling", c, Shape::elems(2))
             .is_err();
         let ar = AllreduceRegistry::<u64>::standard()
-            .plan("recursive-doubling", c, Shape::elems(2))
+            .plan_uniform("recursive-doubling", c, Shape::elems(2))
             .is_err();
         ag && ar
     });
@@ -356,16 +357,17 @@ fn non_uniform_payload_shapes_are_rejected() {
         let p = c.size();
         let mut bad = 0usize;
         // Wrong-length buffers at execute time, per op.
-        let mut plan = Registry::<u64>::standard().plan("bruck", c, Shape::elems(3)).unwrap();
+        let mut plan =
+            Registry::<u64>::standard().plan_uniform("bruck", c, Shape::elems(3)).unwrap();
         bad += plan.execute(&[1u64; 2], &mut vec![0u64; 3 * p]).is_err() as usize;
         bad += plan.execute(&[1u64; 3], &mut vec![0u64; 3 * p - 1]).is_err() as usize;
         let mut plan = AllreduceRegistry::<u64>::standard()
-            .plan("recursive-doubling", c, Shape::elems(3))
+            .plan_uniform("recursive-doubling", c, Shape::elems(3))
             .unwrap();
         bad += plan.execute(&[1u64; 4], &mut vec![0u64; 3]).is_err() as usize;
         bad += plan.execute(&[1u64; 3], &mut vec![0u64; 2]).is_err() as usize;
         let mut plan = AlltoallRegistry::<u64>::standard()
-            .plan("pairwise", c, Shape::elems(3))
+            .plan_uniform("pairwise", c, Shape::elems(3))
             .unwrap();
         bad += plan.execute(&vec![1u64; 3 * p - 1], &mut vec![0u64; 3 * p]).is_err() as usize;
         bad += plan.execute(&vec![1u64; 3 * p], &mut vec![0u64; 3 * p + 1]).is_err() as usize;
@@ -395,7 +397,7 @@ fn reduce_scatter_grid_conforms() {
                 let reg = ReduceScatterRegistry::<u64>::standard();
                 let mut outcomes = Vec::new();
                 for name in reg.names() {
-                    let err = match reg.plan(name, c, Shape::elems(n)) {
+                    let err = match reg.plan_uniform(name, c, Shape::elems(n)) {
                         Err(e) => Some(e.to_string()),
                         Ok(mut plan) => {
                             let mine = a2a_send(c.rank(), p, n);
@@ -451,7 +453,7 @@ fn reduce_scatter_wrong_shape_rejects() {
         let p = c.size();
         let reg = ReduceScatterRegistry::<u64>::standard();
         let mut bad = 0usize;
-        let mut plan = reg.plan("ring", c, Shape::elems(3)).unwrap();
+        let mut plan = reg.plan_uniform("ring", c, Shape::elems(3)).unwrap();
         bad += plan.execute(&vec![1u64; 3 * p - 1], &mut vec![0u64; 3]).is_err() as usize;
         bad += plan.execute(&vec![1u64; 3 * p], &mut vec![0u64; 4]).is_err() as usize;
         bad += plan.execute(&vec![1u64; 3 * p], &mut vec![0u64; 2]).is_err() as usize;
@@ -477,7 +479,7 @@ fn rabenseifner_allreduce_non_power_of_two_conforms() {
             let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
                 for name in ["rabenseifner", "model-tuned"] {
                     let mut plan = AllreduceRegistry::<u64>::standard()
-                        .plan(name, c, Shape::elems(n))
+                        .plan_uniform(name, c, Shape::elems(n))
                         .unwrap_or_else(|e| {
                             panic!("{name} rejected {regions}x{ppr} n={n}: {e}")
                         });
@@ -510,7 +512,7 @@ fn pat_allgather_and_reduce_scatter_grid_conforms() {
         for &n in NS {
             let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
                 let mut plan = Registry::<u64>::standard()
-                    .plan("pat", c, Shape::elems(n))
+                    .plan_uniform("pat", c, Shape::elems(n))
                     .unwrap_or_else(|e| {
                         panic!("pat allgather rejected {regions}x{ppr} n={n}: {e}")
                     });
@@ -524,7 +526,7 @@ fn pat_allgather_and_reduce_scatter_grid_conforms() {
                     c.rank()
                 );
                 let mut rs = ReduceScatterRegistry::<u64>::standard()
-                    .plan("pat", c, Shape::elems(n))
+                    .plan_uniform("pat", c, Shape::elems(n))
                     .unwrap_or_else(|e| {
                         panic!("pat reduce-scatter rejected {regions}x{ppr} n={n}: {e}")
                     });
@@ -557,7 +559,7 @@ fn loc_rabenseifner_allreduce_grid_conforms() {
         for &n in NS {
             let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
                 let mut plan = AllreduceRegistry::<u64>::standard()
-                    .plan("loc-rabenseifner", c, Shape::elems(n))
+                    .plan_uniform("loc-rabenseifner", c, Shape::elems(n))
                     .unwrap_or_else(|e| {
                         panic!("loc-rabenseifner rejected {regions}x{ppr} n={n}: {e}")
                     });
@@ -584,28 +586,31 @@ fn zero_length_plans_are_uniform_across_ops_and_algorithms() {
     let topo = Topology::regions(3, 3);
     let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
         for name in Registry::<u64>::standard().names() {
-            let mut plan = Registry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+            let mut plan =
+                Registry::<u64>::standard().plan_uniform(name, c, Shape::elems(0)).unwrap();
             let mut out: Vec<u64> = Vec::new();
             plan.execute(&[], &mut out).unwrap();
             assert!(out.is_empty(), "allgather/{name}");
         }
         for name in AllreduceRegistry::<u64>::standard().names() {
-            let mut plan =
-                AllreduceRegistry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+            let mut plan = AllreduceRegistry::<u64>::standard()
+                .plan_uniform(name, c, Shape::elems(0))
+                .unwrap();
             let mut out: Vec<u64> = Vec::new();
             plan.execute(&[], &mut out).unwrap();
             assert!(out.is_empty(), "allreduce/{name}");
         }
         for name in AlltoallRegistry::<u64>::standard().names() {
             let mut plan =
-                AlltoallRegistry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+                AlltoallRegistry::<u64>::standard().plan_uniform(name, c, Shape::elems(0)).unwrap();
             let mut out: Vec<u64> = Vec::new();
             plan.execute(&[], &mut out).unwrap();
             assert!(out.is_empty(), "alltoall/{name}");
         }
         for name in ReduceScatterRegistry::<u64>::standard().names() {
-            let mut plan =
-                ReduceScatterRegistry::<u64>::standard().plan(name, c, Shape::elems(0)).unwrap();
+            let mut plan = ReduceScatterRegistry::<u64>::standard()
+                .plan_uniform(name, c, Shape::elems(0))
+                .unwrap();
             let mut out: Vec<u64> = Vec::new();
             plan.execute(&[], &mut out).unwrap();
             assert!(out.is_empty(), "reduce-scatter/{name}");
@@ -615,4 +620,314 @@ fn zero_length_plans_are_uniform_across_ops_and_algorithms() {
     assert!(run.results.iter().all(|&ok| ok));
     let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
     assert_eq!(total, 0, "zero-length plans must send no messages");
+}
+
+// ---------------------------------------------------------------------------
+// Ragged conformance: allgatherv / reduce-scatter-v
+// ---------------------------------------------------------------------------
+
+/// Ragged per-rank count patterns for a `p`-rank world: all-zero (the
+/// ragged no-op contract), a single holder, skewed counts with zero-count
+/// ranks mixed in, and uniform counts through the ragged path.
+fn ragged_patterns(p: usize) -> Vec<Counts> {
+    vec![
+        Counts::uniform(0, p),
+        Counts::new((0..p).map(|r| if r == p / 2 { 5 } else { 0 }).collect()),
+        Counts::new((0..p).map(|r| r % 3).collect()),
+        Counts::uniform(2, p),
+    ]
+}
+
+/// Allgatherv input for `rank`: its `counts[rank]` canonical elements.
+fn agv_contribution(rank: usize, counts: &Counts) -> Vec<u64> {
+    canonical_contribution(rank, counts.get(rank))
+}
+
+/// Naive allgatherv reference: every contribution at its prefix offset.
+fn agv_expected(counts: &Counts) -> Vec<u64> {
+    (0..counts.len()).flat_map(|r| agv_contribution(r, counts)).collect()
+}
+
+/// Reduce-scatter-v input for `rank`: block `b` holds the `counts[b]`
+/// elements destined for rank `b` (the ragged [`a2a_send`] layout).
+fn rsv_send(rank: usize, counts: &Counts) -> Vec<u64> {
+    (0..counts.len())
+        .flat_map(|b| (0..counts.get(b)).map(move |j| (rank * 1_000_003 + b * 1_009 + j) as u64))
+        .collect()
+}
+
+/// Naive reduce-scatter-v reference: this rank's block summed over ranks.
+fn rsv_expected(rank: usize, p: usize, counts: &Counts) -> Vec<u64> {
+    (0..counts.get(rank))
+        .map(|j| (0..p).map(|r| (r * 1_000_003 + rank * 1_009 + j) as u64).sum())
+        .collect()
+}
+
+/// Every registered ragged pair over every shape and count pattern — by
+/// name for CI (`cargo test --test collective_conformance ragged`):
+/// byte-identical to the naive ragged references, including zero-count
+/// ranks, a single holder, non-power-of-two `p` and the all-zero no-op,
+/// with 100% registry coverage.
+#[test]
+fn ragged_grid_conforms() {
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    for &(regions, ppr) in SHAPES {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        for counts in ragged_patterns(p) {
+            let run = CommWorld::run(&topo, Timing::Wallclock, |c| -> Vec<String> {
+                let mut ran = Vec::new();
+                let spec = PlanSpec::ragged(counts.clone());
+                let reg = AllgathervRegistry::<u64>::standard();
+                for name in reg.names() {
+                    let mut plan = reg.plan(name, c, &spec).unwrap_or_else(|e| {
+                        panic!("allgatherv/{name} rejected {regions}x{ppr} [{counts}]: {e}")
+                    });
+                    assert_eq!(plan.algorithm(), name);
+                    assert_eq!(plan.comm_size(), p);
+                    let mine = agv_contribution(c.rank(), &counts);
+                    let mut out = vec![0u64; counts.total()];
+                    plan.execute(&mine, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        agv_expected(&counts),
+                        "allgatherv/{name} {regions}x{ppr} [{counts}] rank {}",
+                        c.rank()
+                    );
+                    ran.push(format!("allgatherv/{name}"));
+                }
+                let reg = ReduceScattervRegistry::<u64>::standard();
+                for name in reg.names() {
+                    let mut plan = reg.plan(name, c, &spec).unwrap_or_else(|e| {
+                        panic!("reduce-scatter-v/{name} rejected {regions}x{ppr} [{counts}]: {e}")
+                    });
+                    assert_eq!(plan.algorithm(), name);
+                    assert_eq!(plan.comm_size(), p);
+                    let mine = rsv_send(c.rank(), &counts);
+                    let mut out = vec![0u64; counts.get(c.rank())];
+                    plan.execute(&mine, &mut out).unwrap();
+                    assert_eq!(
+                        out,
+                        rsv_expected(c.rank(), p, &counts),
+                        "reduce-scatter-v/{name} {regions}x{ppr} [{counts}] rank {}",
+                        c.rank()
+                    );
+                    ran.push(format!("reduce-scatter-v/{name}"));
+                }
+                ran
+            });
+            for (rank, r) in run.results.iter().enumerate() {
+                assert_eq!(
+                    r,
+                    &run.results[0],
+                    "rank {rank} diverged at {regions}x{ppr} [{counts}]"
+                );
+            }
+            covered.extend(run.results[0].iter().cloned());
+            if counts.total() == 0 {
+                let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+                assert_eq!(total, 0, "all-zero counts must send no messages");
+            }
+        }
+    }
+    let mut want = BTreeSet::new();
+    for name in AllgathervRegistry::<u64>::standard().names() {
+        want.insert(format!("allgatherv/{name}"));
+    }
+    for name in ReduceScattervRegistry::<u64>::standard().names() {
+        want.insert(format!("reduce-scatter-v/{name}"));
+    }
+    let missing: Vec<&String> = want.difference(&covered).collect();
+    assert!(missing.is_empty(), "ragged pairs never successfully executed: {missing:?}");
+}
+
+/// Execute one ragged (op, algorithm) pair once in a fresh world; returns
+/// the per-rank schedules next to the world's measured trace.
+fn run_one_ragged(
+    topo: &Topology,
+    op: OpKind,
+    name: &str,
+    counts: &Counts,
+) -> (Vec<Schedule>, Vec<RankTrace>) {
+    let p = topo.size();
+    let run = CommWorld::run(topo, Timing::Wallclock, |c| -> Schedule {
+        let spec = PlanSpec::ragged(counts.clone());
+        match op {
+            OpKind::Allgatherv => {
+                let reg = AllgathervRegistry::<u64>::standard();
+                let mut plan = reg.plan(name, c, &spec).unwrap();
+                let sched =
+                    plan.schedule().expect("non-zero ragged plans carry a schedule").clone();
+                let mine = agv_contribution(c.rank(), counts);
+                let mut out = vec![0u64; counts.total()];
+                plan.execute(&mine, &mut out).unwrap();
+                assert_eq!(out, agv_expected(counts), "allgatherv/{name} rank {}", c.rank());
+                sched
+            }
+            OpKind::ReduceScatterV => {
+                let reg = ReduceScattervRegistry::<u64>::standard();
+                let mut plan = reg.plan(name, c, &spec).unwrap();
+                let sched =
+                    plan.schedule().expect("non-zero ragged plans carry a schedule").clone();
+                let mine = rsv_send(c.rank(), counts);
+                let mut out = vec![0u64; counts.get(c.rank())];
+                plan.execute(&mine, &mut out).unwrap();
+                assert_eq!(
+                    out,
+                    rsv_expected(c.rank(), p, counts),
+                    "reduce-scatter-v/{name} rank {}",
+                    c.rank()
+                );
+                sched
+            }
+            other => panic!("{other} is not a ragged operation"),
+        }
+    });
+    (run.results, run.trace.per_rank)
+}
+
+/// Ragged twin of [`schedule_counts_match_traced_execution`]: for every
+/// registered ragged pair the IR-derived message/byte counts equal the
+/// tracer's measured counts per rank and locality class, on skewed counts
+/// with zero-count ranks.
+#[test]
+fn ragged_schedule_counts_match_traced_execution() {
+    for &(regions, ppr) in &[(2usize, 2usize), (4, 4), (3, 2), (2, 3), (8, 4)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let world: Vec<usize> = (0..p).collect();
+        let counts = Counts::new((0..p).map(|r| r % 3).collect());
+        for op in [OpKind::Allgatherv, OpKind::ReduceScatterV] {
+            let names = match op {
+                OpKind::Allgatherv => AllgathervRegistry::<u64>::standard().names(),
+                _ => ReduceScattervRegistry::<u64>::standard().names(),
+            };
+            for name in names {
+                let (scheds, traced) = run_one_ragged(&topo, op, name, &counts);
+                for rank in 0..p {
+                    let derived = cost::counts(&scheds[rank], rank, &topo, &world);
+                    assert_eq!(
+                        derived, traced[rank],
+                        "{op}/{name} @ {regions}x{ppr} [{counts}] rank {rank}: \
+                         IR-derived counts diverge from traced execution"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The ragged cost-model invariant: the postal-model prediction from the
+/// schedule IR equals the virtual-clock completion time of the actual
+/// execution, for every registered ragged pair.
+#[test]
+fn ragged_prediction_matches_virtual_time() {
+    let machine = MachineParams::lassen();
+    for &(regions, ppr) in &[(4usize, 4usize), (2, 3)] {
+        let topo = Topology::regions(regions, ppr);
+        let p = topo.size();
+        let world: Vec<usize> = (0..p).collect();
+        let counts = Counts::new((0..p).map(|r| (r * 7) % 5).collect());
+        for op in [OpKind::Allgatherv, OpKind::ReduceScatterV] {
+            let names = match op {
+                OpKind::Allgatherv => AllgathervRegistry::<u64>::standard().names(),
+                _ => ReduceScattervRegistry::<u64>::standard().names(),
+            };
+            for name in names {
+                let run = CommWorld::run(&topo, Timing::Virtual(machine.clone()), |c| {
+                    let spec = PlanSpec::ragged(counts.clone());
+                    let sched = match op {
+                        OpKind::Allgatherv => {
+                            let reg = AllgathervRegistry::<u64>::standard();
+                            let mut plan = reg.plan(name, c, &spec).unwrap();
+                            let sched = plan.schedule().unwrap().clone();
+                            let mine = agv_contribution(c.rank(), &counts);
+                            let mut out = vec![0u64; counts.total()];
+                            plan.execute(&mine, &mut out).unwrap();
+                            sched
+                        }
+                        _ => {
+                            let reg = ReduceScattervRegistry::<u64>::standard();
+                            let mut plan = reg.plan(name, c, &spec).unwrap();
+                            let sched = plan.schedule().unwrap().clone();
+                            let mine = rsv_send(c.rank(), &counts);
+                            let mut out = vec![0u64; counts.get(c.rank())];
+                            plan.execute(&mine, &mut out).unwrap();
+                            sched
+                        }
+                    };
+                    (sched, c.clock())
+                });
+                let scheds: Vec<Schedule> = run.results.iter().map(|(s, _)| s.clone()).collect();
+                let predicted = cost::predict(&scheds, &topo, &world, &machine).unwrap();
+                let vtime = run.results.iter().map(|&(_, t)| t).fold(0.0, f64::max);
+                assert!(
+                    (predicted - vtime).abs() < 1e-12,
+                    "{op}/{name} @ {regions}x{ppr} [{counts}]: predicted {predicted} vs \
+                     virtual time {vtime}"
+                );
+            }
+        }
+    }
+}
+
+/// Ragged plans are persistent: plan once, execute repeatedly with
+/// identical results and no drift (the plan-reuse contract of the uniform
+/// ops carried over to the counts-aware API).
+#[test]
+fn ragged_plans_are_reusable() {
+    let topo = Topology::regions(2, 3);
+    let p = topo.size();
+    let counts = Counts::new(vec![3, 0, 2, 1, 0, 4]);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let spec = PlanSpec::ragged(counts.clone());
+        let mut ag = AllgathervRegistry::<u64>::standard().plan("loc-aware", c, &spec).unwrap();
+        let mut rs = ReduceScattervRegistry::<u64>::standard().plan("ring", c, &spec).unwrap();
+        for _ in 0..3 {
+            c.barrier().unwrap();
+            let mine = agv_contribution(c.rank(), &counts);
+            let mut out = vec![0u64; counts.total()];
+            ag.execute(&mine, &mut out).unwrap();
+            assert_eq!(out, agv_expected(&counts), "allgatherv reuse rank {}", c.rank());
+            let mine = rsv_send(c.rank(), &counts);
+            let mut out = vec![0u64; counts.get(c.rank())];
+            rs.execute(&mine, &mut out).unwrap();
+            assert_eq!(out, rsv_expected(c.rank(), p, &counts), "rsv reuse rank {}", c.rank());
+        }
+        true
+    });
+    assert!(run.results.iter().all(|&ok| ok));
+}
+
+/// Ragged wrong shapes reject cleanly: a counts list whose length is not
+/// the communicator size rejects at plan time, mis-sized buffers reject
+/// at execute time, and none of the rejected calls leak a message.
+#[test]
+fn ragged_wrong_shapes_are_rejected() {
+    let topo = Topology::regions(2, 2);
+    let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+        let p = c.size();
+        let mut bad = 0usize;
+        let agv = AllgathervRegistry::<u64>::standard();
+        let rsv = ReduceScattervRegistry::<u64>::standard();
+        let short = PlanSpec::ragged(Counts::new(vec![1; p - 1]));
+        bad += agv.plan("ring", c, &short).is_err() as usize;
+        bad += rsv.plan("loc-aware", c, &short).is_err() as usize;
+        let counts = Counts::new(vec![3, 0, 2, 1]);
+        let spec = PlanSpec::ragged(counts.clone());
+        let mut ag = agv.plan("bruck", c, &spec).unwrap();
+        let mine = vec![1u64; counts.get(c.rank()) + 1];
+        bad += ag.execute(&mine, &mut vec![0u64; counts.total()]).is_err() as usize;
+        let mine = vec![1u64; counts.get(c.rank())];
+        bad += ag.execute(&mine, &mut vec![0u64; counts.total() - 1]).is_err() as usize;
+        let mut rs = rsv.plan("ring", c, &spec).unwrap();
+        let mine = vec![1u64; counts.total() - 1];
+        bad += rs.execute(&mine, &mut vec![0u64; counts.get(c.rank())]).is_err() as usize;
+        let mine = vec![1u64; counts.total()];
+        bad += rs.execute(&mine, &mut vec![0u64; counts.get(c.rank()) + 1]).is_err() as usize;
+        bad
+    });
+    assert!(run.results.iter().all(|&b| b == 6));
+    let total: u64 = run.trace.per_rank.iter().map(|t| t.total_msgs()).sum();
+    assert_eq!(total, 0, "rejected ragged calls must not leak messages");
 }

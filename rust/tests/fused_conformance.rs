@@ -72,20 +72,22 @@ fn run_sequential(
 ) -> locag::error::Result<()> {
     match op {
         OpKind::Allgather => {
-            let mut plan = Registry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+            let mut plan = Registry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?;
             plan.execute(input, out)
         }
         OpKind::Allreduce => {
-            let mut plan = AllreduceRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+            let mut plan =
+                AllreduceRegistry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?;
             plan.execute(input, out)
         }
         OpKind::Alltoall => {
-            let mut plan = AlltoallRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+            let mut plan =
+                AlltoallRegistry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?;
             plan.execute(input, out)
         }
         OpKind::ReduceScatter => {
             let mut plan =
-                ReduceScatterRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?;
+                ReduceScatterRegistry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?;
             plan.execute(input, out)
         }
     }

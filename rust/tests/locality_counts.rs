@@ -1,7 +1,7 @@
 //! Integration: the paper's message/byte accounting claims, asserted from
 //! real execution traces (§2–§4).
 
-use locag::collectives::Algorithm;
+use locag::collectives::{Algorithm, Counts};
 use locag::model::MachineParams;
 use locag::sim;
 use locag::topology::{Placement, RegionKind, Topology};
@@ -493,4 +493,101 @@ fn improvement_grows_with_ppr_in_measured_runs() {
         prev = ratio;
     }
     assert!(prev > 1.0);
+}
+
+/// Skewed per-rank counts with zero-count ranks mixed in: `(r·3) mod 7`.
+fn skewed_counts(p: usize) -> Counts {
+    Counts::new((0..p).map(|r| (r * 3) % 7).collect())
+}
+
+#[test]
+fn loc_allgatherv_keeps_uniform_nonlocal_bound_under_skew() {
+    // Ragged doc claim (collectives::allgatherv): raggedness changes
+    // payload lengths, never the exchange structure — loc-aware
+    // allgatherv sends at most ⌈log_pℓ(r)⌉ non-local messages per rank
+    // on arbitrarily skewed counts, zero-count ranks included.
+    let m = MachineParams::lassen();
+    for (regions, ppr) in [(4usize, 4usize), (2, 8)] {
+        let topo = Topology::regions(regions, ppr);
+        let counts = skewed_counts(regions * ppr);
+        let rep = sim::run_allgatherv("loc-aware", &topo, &m, &counts);
+        assert!(rep.verified, "{regions}x{ppr}: {:?}", rep.errors);
+        let bound = ilog_ceil(ppr.max(2), regions) as u64;
+        for (rank, t) in rep.trace.per_rank.iter().enumerate() {
+            assert!(
+                t.nonlocal_msgs <= bound,
+                "rank {rank} @ {regions}x{ppr}: {} > {bound}",
+                t.nonlocal_msgs
+            );
+        }
+    }
+}
+
+#[test]
+fn loc_allgatherv_strictly_beats_ring_on_skewed_counts() {
+    // The ring pays p−1 non-local messages from region-edge ranks (every
+    // step forwards a block across the boundary link) and its worst rank
+    // moves nearly the whole gathered payload non-locally; the loc-aware
+    // builder's worst rank sends one aggregated region sum per non-local
+    // step — strictly fewer messages, strictly fewer worst-rank bytes,
+    // and a strictly smaller modeled completion on the skewed machine.
+    let m = MachineParams::lassen();
+    for (regions, ppr) in [(4usize, 4usize), (2, 8)] {
+        let topo = Topology::regions(regions, ppr);
+        let counts = skewed_counts(regions * ppr);
+        let ring = sim::run_allgatherv("ring", &topo, &m, &counts);
+        let loc = sim::run_allgatherv("loc-aware", &topo, &m, &counts);
+        assert!(ring.verified && loc.verified, "{regions}x{ppr}");
+        assert!(
+            loc.trace.max_nonlocal_msgs() < ring.trace.max_nonlocal_msgs(),
+            "{regions}x{ppr}: loc {} !< ring {}",
+            loc.trace.max_nonlocal_msgs(),
+            ring.trace.max_nonlocal_msgs()
+        );
+        assert!(
+            loc.trace.max_nonlocal_bytes() < ring.trace.max_nonlocal_bytes(),
+            "{regions}x{ppr}: loc {} !< ring {} (max non-local bytes)",
+            loc.trace.max_nonlocal_bytes(),
+            ring.trace.max_nonlocal_bytes()
+        );
+        assert!(
+            loc.vtime < ring.vtime,
+            "{regions}x{ppr}: loc {} !< ring {}",
+            loc.vtime,
+            ring.vtime
+        );
+    }
+}
+
+#[test]
+fn loc_reduce_scatter_v_nonlocal_messages_bounded_by_regions_minus_1() {
+    // Documented bound (collectives::reduce_scatter_v): phase 1 is
+    // all-local pre-reduction, so the lane ring's r−1 aggregated
+    // non-local messages per rank survive arbitrary skew — where the
+    // plain ragged ring pays p−1 from region-edge ranks.
+    let m = MachineParams::lassen();
+    for (regions, ppr) in [(4usize, 4usize), (2, 8)] {
+        let p = regions * ppr;
+        let topo = Topology::regions(regions, ppr);
+        let counts = skewed_counts(p);
+        let loc = sim::run_reduce_scatter_v("loc-aware", &topo, &m, &counts);
+        assert!(loc.verified, "{regions}x{ppr}: {:?}", loc.errors);
+        let bound = (regions - 1) as u64;
+        for (rank, t) in loc.trace.per_rank.iter().enumerate() {
+            assert!(
+                t.nonlocal_msgs <= bound,
+                "rank {rank} @ {regions}x{ppr}: {} > {bound}",
+                t.nonlocal_msgs
+            );
+        }
+        let ring = sim::run_reduce_scatter_v("ring", &topo, &m, &counts);
+        assert!(ring.verified, "{regions}x{ppr}: {:?}", ring.errors);
+        assert_eq!(ring.trace.max_nonlocal_msgs(), (p - 1) as u64, "{regions}x{ppr}");
+        assert!(
+            loc.trace.max_nonlocal_msgs() < ring.trace.max_nonlocal_msgs(),
+            "{regions}x{ppr}: loc {} !< ring {}",
+            loc.trace.max_nonlocal_msgs(),
+            ring.trace.max_nonlocal_msgs()
+        );
+    }
 }

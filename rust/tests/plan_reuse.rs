@@ -22,7 +22,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use locag::collectives::{self, Algorithm, Shape};
+use locag::collectives::{self, Algorithm, Counts, Shape};
 use locag::comm::{self, CommWorld, Timing};
 use locag::model::MachineParams;
 use locag::topology::Topology;
@@ -319,6 +319,74 @@ fn reduce_scatter_hundred_executions_correct_and_leak_free() {
             true
         });
         assert!(run.results.iter().all(|&ok| ok), "reduce-scatter/{algo}");
+    }
+}
+
+/// The headline reuse property for the ragged ops: 100 executions of one
+/// allgatherv / reduce-scatter-v plan per registered algorithm on skewed
+/// counts with zero-count ranks, shifting inputs, exact results, no tag
+/// leaks — mirroring the uniform ops' reuse tests.
+#[test]
+fn ragged_hundred_executions_correct_and_leak_free() {
+    let _g = serial();
+    let topo = Topology::regions(4, 4);
+    let p = topo.size();
+    let counts = Counts::new((0..p).map(|r| (r * 3) % 5).collect());
+    for algo in locag::collectives::AllgathervRegistry::<u64>::standard().names() {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = collectives::plan_allgatherv::<u64>(algo, c, &counts).unwrap();
+            let tag_after_plan = c.next_coll_tag();
+            let mut out = vec![0u64; counts.total()];
+            for round in 0..100u64 {
+                let mine = shifted_contribution(c.rank(), counts.get(c.rank()), round);
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..p)
+                    .flat_map(|r| shifted_contribution(r, counts.get(r), round))
+                    .collect();
+                assert_eq!(out, expect, "allgatherv/{algo} round {round}");
+            }
+            let tag_after_100 = c.next_coll_tag();
+            assert_eq!(
+                tag_after_100,
+                tag_after_plan + 1,
+                "allgatherv/{algo} leaked collective tags across executions"
+            );
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "allgatherv/{algo}");
+    }
+    for algo in locag::collectives::ReduceScattervRegistry::<u64>::standard().names() {
+        let run = CommWorld::run(&topo, Timing::Wallclock, |c| {
+            let mut plan = collectives::plan_reduce_scatter_v::<u64>(algo, c, &counts).unwrap();
+            let tag_after_plan = c.next_coll_tag();
+            let me = c.rank();
+            let mut out = vec![0u64; counts.get(me)];
+            for round in 0..100u64 {
+                let mine: Vec<u64> = (0..p)
+                    .flat_map(|b| {
+                        (0..counts.get(b))
+                            .map(move |j| (me * 1_000_003 + b * 1_009 + j) as u64 + round)
+                    })
+                    .collect();
+                plan.execute(&mine, &mut out).unwrap();
+                let expect: Vec<u64> = (0..counts.get(me))
+                    .map(|j| {
+                        (0..p)
+                            .map(|r| (r * 1_000_003 + me * 1_009 + j) as u64 + round)
+                            .sum()
+                    })
+                    .collect();
+                assert_eq!(out, expect, "reduce-scatter-v/{algo} round {round}");
+            }
+            let tag_after_100 = c.next_coll_tag();
+            assert_eq!(
+                tag_after_100,
+                tag_after_plan + 1,
+                "reduce-scatter-v/{algo} leaked collective tags across executions"
+            );
+            true
+        });
+        assert!(run.results.iter().all(|&ok| ok), "reduce-scatter-v/{algo}");
     }
 }
 

@@ -18,6 +18,11 @@
 //!     on mixed-channel and non-power-of-two shapes at a payload the grid
 //!     doesn't cover — the new builders are pure `Schedule` data, so the
 //!     workers' byte interpreter must reproduce sim exactly,
+//! 1c. the ragged collectives (`allgatherv` / `reduce-scatter-v`) as
+//!     [`ProcJob::SingleV`]: the job spec ships the full per-rank counts
+//!     vector (zeros included), every worker rebuilds its counts-aware
+//!     schedule, and per-rank ragged buffer sizes cross both channel
+//!     classes byte-identical to sim — including the all-zero no-op,
 //! 2. a fused multi-collective plan (including an n=0 constituent),
 //! 3. an n=0 single collective,
 //! 4. the persistent-pool contract: one spawn + handshake serves 100
@@ -59,6 +64,7 @@ fn main() {
     }
     conformance_grid();
     pat_cross_backend_conformance();
+    ragged_cross_backend_conformance();
     fused_plan_conformance();
     empty_payload_conformance();
     persistent_pool_repeat_execute();
@@ -158,6 +164,60 @@ fn pat_cross_backend_conformance() {
         assert_conformance(regions, ppr, &job, &what);
     }
     println!("proc_backend: PAT + loc-rabenseifner cross-backend conformance passed");
+}
+
+/// Scenario 1c: ragged collectives across real OS processes. The
+/// `singlev` job spec carries the full per-rank counts vector (zeros
+/// allowed); every worker rebuilds its own counts-aware schedule from it,
+/// so rank `r` contributes `counts[r]` elements (allgatherv) or receives
+/// them (reduce-scatter-v) — byte-identical to the sim backend on every
+/// rank, for every registered algorithm including the model-tuned
+/// dispatcher.
+fn ragged_cross_backend_conformance() {
+    for (regions, ppr, counts) in
+        [(2usize, 2usize, vec![3usize, 0, 2, 1]), (2, 3, vec![0, 4, 1, 0, 2, 5])]
+    {
+        for algo in ["ring", "bruck", "loc-aware", "model-tuned"] {
+            let job = ProcJob::SingleV {
+                op: OpKind::Allgatherv,
+                algo: algo.to_string(),
+                counts: counts.clone(),
+                elem_bytes: 8,
+            };
+            let what = format!("allgatherv/{algo} {regions}x{ppr} {counts:?}");
+            assert_conformance(regions, ppr, &job, &what);
+        }
+        for algo in ["ring", "loc-aware", "model-tuned"] {
+            let job = ProcJob::SingleV {
+                op: OpKind::ReduceScatterV,
+                algo: algo.to_string(),
+                counts: counts.clone(),
+                elem_bytes: 8,
+            };
+            let what = format!("reduce-scatter-v/{algo} {regions}x{ppr} {counts:?}");
+            assert_conformance(regions, ppr, &job, &what);
+        }
+    }
+    // One 4-byte-element ragged point: the u32 generators must agree too.
+    let job = ProcJob::SingleV {
+        op: OpKind::ReduceScatterV,
+        algo: "ring".to_string(),
+        counts: vec![3, 0, 2, 1],
+        elem_bytes: 4,
+    };
+    assert_conformance(2, 2, &job, "reduce-scatter-v/ring u32 [3,0,2,1]");
+    // The ragged zero-length contract: all-zero counts ship no schedule,
+    // move no bytes, and produce empty outputs on every rank.
+    let job = ProcJob::SingleV {
+        op: OpKind::Allgatherv,
+        algo: "loc-aware".to_string(),
+        counts: vec![0; 4],
+        elem_bytes: 8,
+    };
+    assert_conformance(2, 2, &job, "allgatherv/loc-aware all-zero counts");
+    let rep = run_proc(2, 2, &job, "lassen", &ProcConfig::default()).unwrap();
+    assert!(rep.outputs.iter().all(Vec::is_empty), "all-zero counts must yield empty outputs");
+    println!("proc_backend: ragged cross-backend conformance passed");
 }
 
 fn fused_plan_conformance() {

@@ -93,15 +93,17 @@ fn run_both(
         }};
     }
     match op {
-        OpKind::Allgather => both!(Registry::<u64>::standard().plan(name, c, Shape::elems(n))?),
+        OpKind::Allgather => {
+            both!(Registry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?)
+        }
         OpKind::Allreduce => {
-            both!(AllreduceRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?)
+            both!(AllreduceRegistry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?)
         }
         OpKind::Alltoall => {
-            both!(AlltoallRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?)
+            both!(AlltoallRegistry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?)
         }
         OpKind::ReduceScatter => {
-            both!(ReduceScatterRegistry::<u64>::standard().plan(name, c, Shape::elems(n))?)
+            both!(ReduceScatterRegistry::<u64>::standard().plan_uniform(name, c, Shape::elems(n))?)
         }
     }
     Ok((staged, viewed))
@@ -245,19 +247,19 @@ fn mixed_type_fusion_matches_sequential_staged_oracle() {
             // Sequential staged oracle, one registry plan per constituent.
             let mut ag_want = vec![0f32; 3 * p];
             Registry::<f32>::standard()
-                .plan("loc-bruck", c, Shape::elems(3))
+                .plan_uniform("loc-bruck", c, Shape::elems(3))
                 .unwrap()
                 .execute(&ag_in, &mut ag_want)
                 .unwrap();
             let mut ar_want = vec![0u64; 2];
             AllreduceRegistry::<u64>::standard()
-                .plan("loc-aware", c, Shape::elems(2))
+                .plan_uniform("loc-aware", c, Shape::elems(2))
                 .unwrap()
                 .execute(&ar_in, &mut ar_want)
                 .unwrap();
             let mut rs_want = vec![0f32; 2];
             ReduceScatterRegistry::<f32>::standard()
-                .plan("ring", c, Shape::elems(2))
+                .plan_uniform("ring", c, Shape::elems(2))
                 .unwrap()
                 .execute(&rs_in, &mut rs_want)
                 .unwrap();
@@ -310,19 +312,19 @@ fn mixed_type_fusion_handles_non_power_of_two_shapes() {
 
             let mut ag_want = vec![0f32; 2 * p];
             Registry::<f32>::standard()
-                .plan("ring", c, Shape::elems(2))
+                .plan_uniform("ring", c, Shape::elems(2))
                 .unwrap()
                 .execute(&ag_in, &mut ag_want)
                 .unwrap();
             let mut ar_want = vec![0u64; 3];
             AllreduceRegistry::<u64>::standard()
-                .plan("rabenseifner", c, Shape::elems(3))
+                .plan_uniform("rabenseifner", c, Shape::elems(3))
                 .unwrap()
                 .execute(&ar_in, &mut ar_want)
                 .unwrap();
             let mut a2a_want = vec![0u64; p];
             AlltoallRegistry::<u64>::standard()
-                .plan("pairwise", c, Shape::elems(1))
+                .plan_uniform("pairwise", c, Shape::elems(1))
                 .unwrap()
                 .execute(&a2a_in, &mut a2a_want)
                 .unwrap();
